@@ -1,0 +1,72 @@
+//! Pareto explorer: walk the latency/quality trade-off interactively
+//! from the command line.
+//!
+//!     cargo run --release --example pareto_explorer -- --trace 1 --gpus 32
+//!
+//! Prints the full Pareto front with thresholds, allocations and
+//! parallelism strategies, then shows which plan each quality
+//! requirement in {70, 75, ..., 95} selects — the decision a service
+//! operator makes with Cascadia.
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario};
+use cascadia::models::{cascade_by_name, deepseek_cascade};
+use cascadia::report::Table;
+use cascadia::sched::outer::{select_plan, tchebycheff_winners, OuterOptions};
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let trace = args.usize_or("trace", 1)?;
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let cascade = cascade_by_name(&args.str_or("cascade", "deepseek"))
+        .unwrap_or_else(deepseek_cascade);
+
+    let scenario = Scenario::new(cascade, gpus, trace, default_rate(trace), n, 3);
+    let opts = OuterOptions::default();
+    let (sweep, secs) = scenario.schedule(&opts)?;
+
+    println!(
+        "explored {} candidates in {secs:.1}s; utopia: L*={:.2}s Q*={:.1}\n",
+        sweep.explored.len(),
+        sweep.utopia.0,
+        sweep.utopia.1
+    );
+
+    let mut front = Table::new(
+        "Pareto front (latency ↑, quality ↑)",
+        &["L(s)", "Q", "thresholds", "allocation f_i", "strategies"],
+    );
+    for p in &sweep.pareto {
+        front.row(vec![
+            format!("{:.2}", p.latency),
+            format!("{:.1}", p.quality),
+            format!("{:?}", p.plan.thresholds.0),
+            format!("{:?}", p.plan.tiers.iter().map(|t| t.gpus).collect::<Vec<_>>()),
+            p.plan
+                .tiers
+                .iter()
+                .map(|t| t.strategy.as_ref().map(|s| s.label()).unwrap_or_else(|| "-".into()))
+                .collect::<Vec<_>>()
+                .join(" | "),
+        ]);
+    }
+    print!("{}", front.render());
+
+    let winners = tchebycheff_winners(&sweep, &opts);
+    println!("\nTchebycheff winners across λ sweep: {} distinct points", winners.len());
+
+    let mut picks = Table::new(
+        "operator view: plan per quality requirement",
+        &["quality req", "selected plan"],
+    );
+    for q in [70.0, 75.0, 80.0, 85.0, 90.0, 95.0] {
+        let pick = select_plan(&sweep, q)
+            .map(|p| p.summary())
+            .unwrap_or_else(|| "(unattainable)".into());
+        picks.row(vec![format!("{q:.0}"), pick]);
+    }
+    print!("{}", picks.render());
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: schedule and simulate a cascade in ~20 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds the DeepSeek cascade on the paper's 32-GPU testbed, runs the
+//! bi-level scheduler for a quality requirement of 85, and simulates
+//! the resulting plan on a held-out trace.
+
+use anyhow::Result;
+use cascadia::harness::Scenario;
+use cascadia::models::deepseek_cascade;
+use cascadia::sched::outer::OuterOptions;
+
+fn main() -> Result<()> {
+    // A scenario = cascade + cluster + workload trace (+ judger).
+    let scenario = Scenario::new(
+        deepseek_cascade(),
+        32,   // GPUs
+        2,    // trace index (mixed chat/math)
+        8.0,  // requests/s
+        1500, // requests
+        42,   // seed
+    );
+
+    // Bi-level scheduling: inner MILP picks allocations + parallelism,
+    // outer Tchebycheff sweeps routing thresholds.
+    let plan = scenario.cascadia_plan(85.0, &OuterOptions::default())?;
+    println!("plan: {}", plan.summary());
+
+    // Evaluate on a held-out trace with the discrete-event simulator.
+    let sim = scenario.evaluate(&plan)?;
+    println!(
+        "p95 latency {:.2}s | throughput {:.2} req/s | quality {:.1}",
+        sim.p95(),
+        sim.throughput_rps,
+        sim.quality
+    );
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Re-scheduling demo (§4.4): the workload shifts mid-stream, the
+//! monitor detects it, and Cascadia produces an updated plan.
+//!
+//!     cargo run --release --example rescheduling
+//!
+//! Phase 1 serves the easy trace 3; phase 2 switches to the hard trace
+//! 1 at a higher rate. The monitor's sliding window flags the shift;
+//! we re-run the bi-level scheduler and show how thresholds,
+//! allocations and strategies moved — then verify the new plan beats
+//! the stale one on the new workload.
+
+use anyhow::Result;
+use cascadia::cluster::ClusterSpec;
+use cascadia::coordinator::monitor::{Monitor, MonitorConfig};
+use cascadia::coordinator::simulate_cascade;
+use cascadia::judge::Judger;
+use cascadia::models::deepseek_cascade;
+use cascadia::sched::outer::{optimize, select_plan, OuterOptions};
+use cascadia::util::cli::Args;
+use cascadia::workload::{estimate_stats, generate, paper_trace};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1200)?;
+    let quality = args.f64_or("quality", 80.0)?;
+
+    let cascade = deepseek_cascade();
+    let cluster = ClusterSpec::paper_testbed();
+    let judger = Judger::new(5);
+    let opts = OuterOptions::default();
+
+    // Phase 1: easy trace.
+    let phase1 = generate(&paper_trace(3, 10.0), n, 1);
+    let sweep1 = optimize(&cascade, &cluster, &judger, &phase1, 32, &opts)?;
+    let plan1 = select_plan(&sweep1, quality).expect("phase-1 plan");
+    println!("phase 1 plan   : {}", plan1.summary());
+
+    // Monitor watches the live stream, baselined on phase 1.
+    let mut monitor = Monitor::new(MonitorConfig::default(), estimate_stats(&phase1));
+
+    // Phase 2: the workload shifts (hard trace, higher rate).
+    let phase2 = generate(&paper_trace(1, 7.0), n, 2);
+    let mut detected_at = None;
+    for (i, req) in phase2.iter().enumerate() {
+        if let Some(stats) = monitor.observe(*req) {
+            detected_at = Some((i, stats));
+            break;
+        }
+    }
+    let (seen, new_stats) = detected_at.expect("shift should be detected");
+    println!(
+        "shift detected after {seen} requests: rate {:.1}->{:.1}, complexity {:.2}->{:.2}",
+        monitor.baseline().rate,
+        new_stats.rate,
+        monitor.baseline().complexity_mean,
+        new_stats.complexity_mean
+    );
+
+    // Re-schedule on the recent window.
+    let sweep2 = optimize(&cascade, &cluster, &judger, &phase2, 32, &opts)?;
+    let plan2 = select_plan(&sweep2, quality).expect("phase-2 plan");
+    monitor.rebased(new_stats);
+    println!("re-scheduled   : {}", plan2.summary());
+
+    // Stale plan vs fresh plan on the new workload.
+    let stale = simulate_cascade(&plan1, &cascade, &cluster, &judger, &phase2);
+    let fresh = simulate_cascade(&plan2, &cascade, &cluster, &judger, &phase2)?;
+    match stale {
+        Ok(stale) => {
+            println!(
+                "stale plan on new workload : p95 {:.2}s quality {:.1}",
+                stale.p95(),
+                stale.quality
+            );
+            println!(
+                "fresh plan on new workload : p95 {:.2}s quality {:.1}",
+                fresh.p95(),
+                fresh.quality
+            );
+            let speedup = stale.p95() / fresh.p95().max(1e-9);
+            println!("re-scheduling gain: {speedup:.2}x on p95");
+        }
+        Err(e) => {
+            // The stale plan may be outright infeasible for the new mix
+            // (e.g. it never deployed the large tier).
+            println!("stale plan cannot even serve the new workload: {e}");
+            println!(
+                "fresh plan on new workload : p95 {:.2}s quality {:.1}",
+                fresh.p95(),
+                fresh.quality
+            );
+        }
+    }
+    println!("re-schedules triggered: {}", monitor.reschedules);
+    Ok(())
+}

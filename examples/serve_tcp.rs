@@ -1,0 +1,71 @@
+//! Network serving demo: expose the real tiny-tier cascade over TCP
+//! with the line-delimited JSON protocol, fire a few client requests
+//! at it, and print the replies.
+//!
+//!     make artifacts && cargo run --release --example serve_tcp
+//!
+//! (Runs client and server in one process for the demo; the server
+//! side is `coordinator::net::TcpFrontend` and works standalone.)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use cascadia::coordinator::net::TcpFrontend;
+use cascadia::runtime::{pjrt_factory, Manifest, TaskJudger};
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.str_or("addr", "127.0.0.1:8741");
+
+    let dir = std::env::var("CASCADIA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let manifest = Manifest::load(&dir)
+        .context("artifacts missing — run `make artifacts` first")?;
+    let task = manifest.task.clone();
+    let judger = TaskJudger::new(task.clone(), 6);
+    let factory = pjrt_factory(dir);
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let server_addr = addr.clone();
+    let server = std::thread::spawn(move || {
+        let fe = TcpFrontend::new(vec![80.0, 80.0], 8);
+        fe.serve(&server_addr, &factory, &judger, sd)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    println!("cascade listening on {addr}");
+
+    // Client: one easy (m=1) and one hard (m=3) request.
+    let mut stream = TcpStream::connect(&addr)?;
+    let marker = task.marker_base as i32;
+    let requests = [
+        format!(r#"{{"id": 1, "prompt": [{}, 7, 7, 7], "max_new": 6}}"#, marker + 1),
+        format!(
+            r#"{{"id": 2, "prompt": [{}, 3, 5, 2, 10, 1, 13], "max_new": 6}}"#,
+            marker + 3
+        ),
+    ];
+    for r in &requests {
+        writeln!(stream, "{r}")?;
+    }
+    let reader = BufReader::new(stream.try_clone()?);
+    for (i, line) in reader.lines().enumerate() {
+        println!("reply: {}", line?);
+        if i + 1 == requests.len() {
+            break;
+        }
+    }
+
+    shutdown.store(true, Ordering::SeqCst);
+    drop(stream);
+    let _ = server.join();
+    println!("done");
+    Ok(())
+}

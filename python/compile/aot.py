@@ -1,0 +1,182 @@
+"""AOT export: train the tiers, lower prefill/decode to HLO text, dump
+parameter blobs + a manifest the Rust runtime consumes.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per tier t in {small, medium, large}):
+  artifacts/{t}_prefill.hlo.txt   fn(tokens i32[P], true_len i32[], *params)
+                                  -> (logits f32[V], k f32[L,Hkv,S,hd], v ...)
+  artifacts/{t}_decode.hlo.txt    fn(token i32[], pos i32[], rope_pos i32[],
+                                     mask f32[S], k, v, *params)
+                                  -> (logits, k', v')
+  artifacts/{t}_params.bin        f32 little-endian, param_names() order
+  artifacts/manifest.json         configs, param table, eval accuracies
+
+Python runs ONCE here (`make artifacts`); the Rust binary is then
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+# Training recipe per tier: a difficulty *curriculum* (which task
+# difficulties the tier sees) plus a step budget. The curriculum is the
+# capability knob that gives the cascade a controlled, monotone quality
+# gradient — small masters m=1 only, medium m<=2, large m<=4 — mirroring
+# the paper's premise that request complexity maps to model capability.
+TRAIN_RECIPE = {
+    "small": {"steps": 260, "difficulties": (1,)},
+    "medium": {"steps": 400, "difficulties": (1, 2)},
+    "large": {"steps": 560, "difficulties": (1, 2, 3, 4)},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig) -> str:
+    names = M.param_names(cfg)
+
+    def fn(tokens, true_len, *flat_params):
+        params = dict(zip(names, flat_params))
+        logits, k, v = M.prefill(params, cfg, tokens, true_len,
+                                 use_pallas=True)
+        return (logits, k, v)
+
+    shapes = M.param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+    tok_spec = jax.ShapeDtypeStruct((cfg.prefill_len,), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(fn).lower(tok_spec, len_spec, *specs)
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: M.ModelConfig) -> str:
+    names = M.param_names(cfg)
+
+    def fn(token, pos, rope_pos, mask, k_cache, v_cache, *flat_params):
+        params = dict(zip(names, flat_params))
+        logits, k, v = M.decode_step(params, cfg, token, pos, rope_pos,
+                                     mask, k_cache, v_cache, use_pallas=True)
+        return (logits, k, v)
+
+    shapes = M.param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+    cache_shape = (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.max_seq,), jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        *specs)
+    return to_hlo_text(lowered)
+
+
+def export_params(params: M.Params, cfg: M.ModelConfig, path: str) -> int:
+    """Write the f32-LE blob in param_names order; returns total floats."""
+    total = 0
+    with open(path, "wb") as f:
+        for name in M.param_names(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            total += arr.size
+    return total
+
+
+def build_tier(tier: str, out_dir: str, *, train_steps: int,
+               difficulties=(1, 2, 3, 4), seed: int = 0) -> dict:
+    cfg = M.TIERS[tier]
+    t0 = time.time()
+    print(f"[{tier}] training {train_steps} steps on difficulties "
+          f"{difficulties} ({cfg.n_params:,} params)...", flush=True)
+    params = T.train_tier(cfg, steps=train_steps, seed=seed,
+                          difficulties=difficulties)
+    acc = T.eval_accuracy(params, cfg)
+    print(f"[{tier}] accuracy per difficulty: "
+          f"{ {k: round(v, 3) for k, v in acc.items()} }", flush=True)
+
+    n_floats = export_params(params, cfg, os.path.join(out_dir,
+                                                       f"{tier}_params.bin"))
+    for kind, lower in (("prefill", lower_prefill), ("decode", lower_decode)):
+        text = lower(cfg)
+        path = os.path.join(out_dir, f"{tier}_{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[{tier}] wrote {kind} HLO ({len(text):,} chars)", flush=True)
+
+    shapes = M.param_shapes(cfg)
+    return {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+            "head_dim": cfg.head_dim, "max_seq": cfg.max_seq,
+            "prefill_len": cfg.prefill_len, "n_params": cfg.n_params,
+        },
+        "params": [{"name": n, "shape": list(shapes[n])}
+                   for n in M.param_names(cfg)],
+        "n_floats": n_floats,
+        "train_steps": train_steps,
+        "train_difficulties": list(difficulties),
+        "eval_accuracy": {str(k): v for k, v in acc.items()},
+        "build_seconds": round(time.time() - t0, 1),
+        "files": {
+            "prefill": f"{tier}_prefill.hlo.txt",
+            "decode": f"{tier}_decode.hlo.txt",
+            "params": f"{tier}_params.bin",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiers", default="small,medium,large")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="override per-tier training budget (0 = untrained)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"task": {
+        "data_vocab": T.DATA_VOCAB, "marker_base": T.MARKER_BASE,
+        "max_difficulty": T.MAX_DIFFICULTY,
+    }, "tiers": {}}
+    for tier in args.tiers.split(","):
+        recipe = TRAIN_RECIPE[tier]
+        steps = (args.train_steps if args.train_steps is not None
+                 else recipe["steps"])
+        manifest["tiers"][tier] = build_tier(
+            tier, args.out_dir, train_steps=steps,
+            difficulties=tuple(recipe["difficulties"]), seed=args.seed)
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

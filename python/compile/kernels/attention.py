@@ -1,0 +1,198 @@
+"""Flash-attention Pallas kernels (L1, the serving hot-spot).
+
+Two kernels:
+
+* :func:`flash_attention` — prefill attention. Online-softmax schedule:
+  the grid tiles (query-head, q-block); each program streams K/V through
+  VMEM in ``block_k`` chunks, carrying the running max / denominator /
+  accumulator. This is the TPU re-think of the paper's GPU hot path: the
+  HBM<->VMEM schedule a CUDA flash kernel expresses with threadblocks and
+  shared memory is expressed here with the BlockSpec grid + an inner
+  ``fori_loop`` (see DESIGN.md section "Hardware adaptation").
+
+* :func:`decode_attention` — single-token decode attention over a padded
+  KV cache with an explicit validity mask (the Rust coordinator computes
+  the mask: causal bound + prompt-padding holes).
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the execution path and the
+numerics oracle; real-TPU performance is *estimated* analytically in
+DESIGN.md section 9.
+
+GQA is supported: ``Hq`` query heads share ``Hkv`` KV heads via the
+BlockSpec index map (query head h reads KV head ``h // (Hq // Hkv)``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sk: int,
+                  causal: bool, block_q: int):
+    """One (head, q-block) program of the online-softmax schedule."""
+    # q_ref: (1, block_q, D); k_ref/v_ref: (1, Sk_padded, D); o_ref like q_ref.
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]  # (bq, D)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    q = q * scale
+    sk_padded = k_ref.shape[1]
+    num_kb = sk_padded // block_k
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        # (bq, bk) tile on the MXU.
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        valid = k_pos < sk  # mask zero-padded keys
+        if causal:
+            valid = jnp.logical_and(valid, k_pos <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+        # Online softmax update (VPU work between the two MXU matmuls).
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    # Rows that saw no valid key (fully masked, only possible for padded
+    # q rows) would divide by zero; guard them.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, :, :] = acc / l[:, None]
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 16,
+                    block_k: int = 16, interpret: bool = True):
+    """Flash attention over (Hq, Sq, D) queries and (Hkv, Sk, D) KV.
+
+    Arbitrary Sq/Sk are supported by zero-padding to the block size; the
+    kernel masks out-of-range keys and the wrapper slices padded query
+    rows off the output.
+    """
+    hq, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    group = hq // hkv
+
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_k)
+    vp = _pad_to(v, 1, block_k)
+    sq_p, sk_p = qp.shape[1], kp.shape[1]
+
+    grid = (hq, sq_p // block_q)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, sk=sk,
+                          causal=causal, block_q=block_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda h, i, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((1, sk_p, d), lambda h, i, g=group: (h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, sq_p, d), jnp.float32),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int):
+    """One query-head program: masked online softmax over the KV cache."""
+    # q_ref: (1, D); k_ref/v_ref: (1, S, D); mask_ref: (S,); o_ref: (1, D).
+    q = q_ref[0, :]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    q = q * scale
+    s_total = k_ref.shape[1]
+    num_kb = s_total // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        mask = pl.load(mask_ref, (pl.dslice(j * block_k, block_k),))
+        s = jnp.dot(k_blk, q, preferred_element_type=jnp.float32)  # (bk,)
+        s = jnp.where(mask > 0, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_cur = l_prev * alpha + p.sum()
+        acc = acc * alpha + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.asarray(NEG_INF, dtype=jnp.float32)
+    l0 = jnp.asarray(0.0, dtype=jnp.float32)
+    acc0 = jnp.zeros((d,), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, :] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, mask, *, block_k: int = 16,
+                     interpret: bool = True):
+    """Single-token decode attention.
+
+    Args:
+      q: (Hq, D) query at the current position.
+      k, v: (Hkv, S, D) KV cache padded to the max sequence length.
+      mask: (S,) f32; positions with mask <= 0 are excluded (the caller
+        encodes both the causal bound and prompt-padding holes here).
+
+    Returns:
+      (Hq, D) attention output.
+    """
+    hq, d = q.shape
+    hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+
+    kp = _pad_to(k, 1, block_k)
+    vp = _pad_to(v, 1, block_k)
+    maskp = _pad_to(mask, 0, block_k)  # zero padding == invalid, as required
+    s_p = kp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k),
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda h: (h, 0)),
+            pl.BlockSpec((1, s_p, d), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((1, s_p, d), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((s_p,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, d), jnp.float32),
+        interpret=interpret,
+    )(q, kp, vp, maskp)
+    return out

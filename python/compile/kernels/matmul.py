@@ -1,0 +1,67 @@
+"""Blocked matmul Pallas kernel used by the transformer MLP projections.
+
+Grid tiles (M, N); each program streams K through VMEM in ``block_k``
+chunks and accumulates in f32 — the classic MXU-oriented schedule.
+Arbitrary shapes are handled by zero-padding (zeros contribute nothing
+to the accumulation, so no masking is needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, block_k: int):
+    # a_ref: (bm, K); b_ref: (K, bn); o_ref: (bm, bn).
+    k_total = a_ref.shape[1]
+    num_kb = k_total // block_k
+    bm, bn = o_ref.shape
+
+    def body(j, acc):
+        a_blk = pl.load(a_ref, (slice(None), pl.dslice(j * block_k, block_k)))
+        b_blk = pl.load(b_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        return acc + jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+
+    acc0 = jnp.zeros((bm, bn), dtype=jnp.float32)
+    o_ref[:, :] = jax.lax.fori_loop(0, num_kb, body, acc0)
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def blocked_matmul(a, b, *, block_m: int = 16, block_n: int = 16,
+                   block_k: int = 16, interpret: bool = True):
+    """(M, K) @ (K, N) -> (M, N) via the blocked Pallas kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
+    bp = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, block_k=block_k),
+        grid=(mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

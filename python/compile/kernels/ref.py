@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its reference here to ~1e-5 (f32) across the shape
+sweep in ``python/tests/test_kernels.py``. They are also used on the
+training path (build-time only), where autodiff through ``pallas_call``
+is not required.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Multi-head attention with grouped-query (GQA) head mapping.
+
+    Args:
+      q: (Hq, Sq, D) queries.
+      k: (Hkv, Sk, D) keys; Hq must be a multiple of Hkv.
+      v: (Hkv, Sk, D) values.
+      causal: apply a causal mask (query i attends to keys <= i; assumes
+        Sq == Sk when True).
+
+    Returns:
+      (Hq, Sq, D) attention output, f32.
+    """
+    hq, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=0)  # (Hq, Sk, D)
+    v = jnp.repeat(v, group, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def decode_attention_ref(q, k, v, mask):
+    """Single-token decode attention with an explicit validity mask.
+
+    Args:
+      q: (Hq, D) query for the current position.
+      k: (Hkv, S, D) key cache (padded to max sequence length).
+      v: (Hkv, S, D) value cache.
+      mask: (S,) f32 validity mask; positions with mask <= 0 are excluded.
+
+    Returns:
+      (Hq, D) attention output.
+    """
+    hq, d = q.shape
+    hkv, s, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum("hd,hsd->hs", q, k) * scale
+    logits = jnp.where(mask[None, :] > 0, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", probs, v)
+
+
+def matmul_ref(a, b):
+    """Reference for the blocked matmul kernel: plain (M,K)@(K,N)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,285 @@
+"""L2: decoder-only transformer model tiers (JAX, build-time only).
+
+A small Llama-style architecture (RMSNorm, RoPE, GQA attention, SwiGLU
+MLP) instantiated at three sizes — the *tiers* of the end-to-end cascade
+that the Rust coordinator actually serves on CPU PJRT. The attention and
+MLP hot-spots call the L1 Pallas kernels (``use_pallas=True``, the export
+path); the training path uses the pure-jnp references so autodiff works.
+
+Export surface (consumed by ``aot.py``):
+
+* ``prefill(params, tokens, true_len)`` — process a padded prompt, return
+  the next-token logits at ``true_len - 1`` plus the KV cache padded to
+  ``max_seq``.
+* ``decode_step(params, token, pos, mask, k_cache, v_cache)`` — one
+  autoregressive step; functional KV-cache update (PJRT execution is
+  stateless, the Rust runtime threads the cache through calls).
+
+Shapes are static: prompts are padded to ``cfg.prefill_len`` and the KV
+cache to ``cfg.max_seq``; the validity ``mask`` (computed by the Rust
+coordinator) makes decode attention skip the padding hole between
+``true_len`` and ``prefill_len``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, flash_attention
+from .kernels.matmul import blocked_matmul
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture constants for one cascade tier."""
+
+    name: str
+    vocab: int = 64
+    d_model: int = 64
+    n_layers: int = 2
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 128
+    head_dim: int = 16
+    max_seq: int = 160
+    prefill_len: int = 64
+    rope_theta: float = 10000.0
+
+    @property
+    def n_params(self) -> int:
+        d, v, f, L = self.d_model, self.vocab, self.d_ff, self.n_layers
+        hq, hkv, hd = self.n_q_heads, self.n_kv_heads, self.head_dim
+        per_layer = (d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+                     + 3 * d * f + 2 * d)
+        return v * d + L * per_layer + d + d * v
+
+
+# The three cascade tiers served end-to-end. Sizes are deliberately tiny
+# (CPU interpret-mode Pallas) but architecturally faithful; capability
+# grows with depth/width so the cascade quality gradient is real.
+TIERS: Dict[str, ModelConfig] = {
+    "small": ModelConfig(name="small", d_model=64, n_layers=2, n_q_heads=4,
+                         n_kv_heads=2, d_ff=128),
+    "medium": ModelConfig(name="medium", d_model=128, n_layers=3,
+                          n_q_heads=8, n_kv_heads=4, d_ff=256),
+    "large": ModelConfig(name="large", d_model=192, n_layers=4,
+                         n_q_heads=12, n_kv_heads=4, d_ff=384),
+}
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter order shared with the Rust runtime."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.attn_norm", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv",
+                  f"l{i}.wo", f"l{i}.mlp_norm", f"l{i}.w_gate",
+                  f"l{i}.w_up", f"l{i}.w_down"]
+    names += ["out_norm", "lm_head"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_q_heads, cfg.n_kv_heads
+    shapes: Dict[str, Tuple[int, ...]] = {"embed": (cfg.vocab, d)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.attn_norm"] = (d,)
+        shapes[f"l{i}.wq"] = (d, hq * hd)
+        shapes[f"l{i}.wk"] = (d, hkv * hd)
+        shapes[f"l{i}.wv"] = (d, hkv * hd)
+        shapes[f"l{i}.wo"] = (hq * hd, d)
+        shapes[f"l{i}.mlp_norm"] = (d,)
+        shapes[f"l{i}.w_gate"] = (d, cfg.d_ff)
+        shapes[f"l{i}.w_up"] = (d, cfg.d_ff)
+        shapes[f"l{i}.w_down"] = (cfg.d_ff, d)
+    shapes["out_norm"] = (d,)
+    shapes["lm_head"] = (d, cfg.vocab)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal initialization (1/sqrt(fan_in); norms at 1)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params: Params = {}
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, dtype=jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, dtype=jnp.float32)
+                            / jnp.sqrt(jnp.asarray(fan_in, jnp.float32)))
+    return params
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, hd); positions: (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, *, causal: bool, use_pallas: bool):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+def _matmul(a, b, *, use_pallas: bool):
+    if use_pallas:
+        return blocked_matmul(a, b)
+    return ref.matmul_ref(a, b)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens,
+            *, use_pallas: bool = False):
+    """Full-sequence forward pass. tokens: (S,) int32 -> logits (S, V).
+
+    Also returns the post-RoPE per-layer K/V for cache construction:
+    lists of (Hkv, S, hd).
+    """
+    s = tokens.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"][tokens]  # (S, d)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{i}.attn_norm"])
+        q = _matmul(h, params[f"l{i}.wq"], use_pallas=use_pallas)
+        k = _matmul(h, params[f"l{i}.wk"], use_pallas=use_pallas)
+        v = _matmul(h, params[f"l{i}.wv"], use_pallas=use_pallas)
+        q = q.reshape(s, cfg.n_q_heads, cfg.head_dim)
+        k = k.reshape(s, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(s, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # kernels take (H, S, hd)
+        qh = jnp.transpose(q, (1, 0, 2))
+        kh = jnp.transpose(k, (1, 0, 2))
+        vh = jnp.transpose(v, (1, 0, 2))
+        ks.append(kh)
+        vs.append(vh)
+        attn = _attention(qh, kh, vh, causal=True, use_pallas=use_pallas)
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(s, -1)
+        x = x + _matmul(attn, params[f"l{i}.wo"], use_pallas=use_pallas)
+        h = rms_norm(x, params[f"l{i}.mlp_norm"])
+        gate = _matmul(h, params[f"l{i}.w_gate"], use_pallas=use_pallas)
+        up = _matmul(h, params[f"l{i}.w_up"], use_pallas=use_pallas)
+        x = x + _matmul(jax.nn.silu(gate) * up, params[f"l{i}.w_down"],
+                        use_pallas=use_pallas)
+    x = rms_norm(x, params["out_norm"])
+    logits = _matmul(x, params["lm_head"], use_pallas=use_pallas)
+    return logits, ks, vs
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, true_len,
+            *, use_pallas: bool = True):
+    """Prefill a padded prompt.
+
+    Args:
+      tokens: (prefill_len,) int32; positions >= true_len are padding.
+      true_len: scalar int32, actual prompt length (>= 1).
+
+    Returns:
+      logits: (vocab,) next-token logits at position true_len - 1.
+      k_cache, v_cache: (L, Hkv, max_seq, hd) with [0:prefill_len) filled.
+        (Causality makes pad positions inert for positions < true_len; the
+        decode mask hides them afterwards.)
+    """
+    logits_all, ks, vs = forward(params, cfg, tokens, use_pallas=use_pallas)
+    idx = jnp.clip(true_len - 1, 0, cfg.prefill_len - 1)
+    logits = jax.lax.dynamic_index_in_dim(logits_all, idx, axis=0,
+                                          keepdims=False)
+    pad = cfg.max_seq - cfg.prefill_len
+    k_cache = jnp.stack([jnp.pad(k, ((0, 0), (0, pad), (0, 0))) for k in ks])
+    v_cache = jnp.stack([jnp.pad(v, ((0, 0), (0, pad), (0, 0))) for v in vs])
+    return logits, k_cache, v_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, pos, rope_pos,
+                mask, k_cache, v_cache, *, use_pallas: bool = True):
+    """One autoregressive decode step with a functional KV-cache update.
+
+    Args:
+      token: scalar int32, the last generated token.
+      pos: scalar int32, the cache *slot* to write (prefill_len + i for
+        the i-th decoded token).
+      rope_pos: scalar int32, the *logical* position for RoPE
+        (true_len + i). Separating slot from logical position makes the
+        padded-prefill layout exactly equivalent to a contiguous
+        sequence: attention is permutation-invariant over the valid set,
+        and RoPE sees the gap-free positions.
+      mask: (max_seq,) f32 validity mask, computed by the coordinator:
+        1 for slots < true_len and for decoded slots <= pos (including
+        pos itself), 0 for the padding hole and the future.
+      k_cache, v_cache: (L, Hkv, max_seq, hd).
+
+    Returns:
+      logits: (vocab,), and the updated caches.
+    """
+    x = params["embed"][token]  # (d,)
+    pos_arr = jnp.reshape(rope_pos, (1,)).astype(jnp.int32)
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{i}.attn_norm"])
+        hq, hkv, hd = cfg.n_q_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ params[f"l{i}.wq"]).reshape(1, hq, hd)
+        k = (h @ params[f"l{i}.wk"]).reshape(1, hkv, hd)
+        v = (h @ params[f"l{i}.wv"]).reshape(1, hkv, hd)
+        q = rope(q, pos_arr, cfg.rope_theta)[0]  # (Hq, hd)
+        k = rope(k, pos_arr, cfg.rope_theta)[0]  # (Hkv, hd)
+        v = v[0]
+        # Write this token's K/V into the cache at `pos`.
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[i], k.reshape(hkv, 1, hd), (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[i], v.reshape(hkv, 1, hd), (0, pos, 0))
+        new_ks.append(kc)
+        new_vs.append(vc)
+        if use_pallas:
+            attn = decode_attention(q, kc, vc, mask)
+        else:
+            attn = ref.decode_attention_ref(q, kc, vc, mask)
+        x = x + attn.reshape(-1) @ params[f"l{i}.wo"]
+        h = rms_norm(x, params[f"l{i}.mlp_norm"])
+        gate = h @ params[f"l{i}.w_gate"]
+        up = h @ params[f"l{i}.w_up"]
+        x = x + (jax.nn.silu(gate) * up) @ params[f"l{i}.w_down"]
+    x = rms_norm(x, params["out_norm"])
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens, targets, weights):
+    """Batched next-token cross-entropy (training path, ref kernels).
+
+    tokens/targets/weights: (B, S); weights zero out positions that carry
+    no supervision (e.g. the difficulty-marker prefix).
+    """
+
+    def one(seq):
+        logits, _, _ = forward(params, cfg, seq, use_pallas=False)
+        return logits
+
+    logits = jax.vmap(one)(tokens)  # (B, S, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)

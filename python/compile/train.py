@@ -1,0 +1,127 @@
+"""Build-time trainer for the cascade tiers on the graded synthetic task.
+
+The task gives the end-to-end cascade a *real* quality gradient: each
+sequence starts with a difficulty marker m in {1..4}; after m seed tokens
+every next token is determined by ``t[i] = (t[i-1] + ... + t[i-m]) % V``.
+Harder (larger-m) sequences need more capacity/attention span, so the
+small tier masters m=1..2 while the large tier handles m=1..4 — mirroring
+the paper's premise that simple requests can be answered by small models.
+
+Runs once at `make artifacts`; Adam is hand-rolled (no optax in the
+image). Training uses the pure-jnp reference kernels (autodiff); the
+exported inference graphs use the Pallas kernels — equality of the two
+paths is asserted by ``python/tests/test_model.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+DATA_VOCAB = 16          # tokens 0..15 carry data (mod-16 arithmetic)
+MARKER_BASE = 59         # marker for difficulty m is MARKER_BASE + m (60..63)
+MAX_DIFFICULTY = 4
+
+
+def make_sequence(rng: np.random.Generator, m: int, length: int) -> np.ndarray:
+    """One task sequence: [marker(m), seed_1..seed_m, determined...]."""
+    seq = np.zeros(length, dtype=np.int32)
+    seq[0] = MARKER_BASE + m
+    seq[1:1 + m] = rng.integers(0, DATA_VOCAB, size=m)
+    for i in range(1 + m, length):
+        seq[i] = int(np.sum(seq[i - m:i]) % DATA_VOCAB)
+    return seq
+
+
+def make_batch(rng: np.random.Generator, batch: int, length: int,
+               difficulties=(1, 2, 3, 4)) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(tokens, targets, weights) for LM training; supervision starts
+    after the seed region (position >= m + 1)."""
+    toks = np.zeros((batch, length), dtype=np.int32)
+    tgts = np.zeros((batch, length), dtype=np.int32)
+    wts = np.zeros((batch, length), dtype=np.float32)
+    for b in range(batch):
+        m = int(rng.choice(difficulties))
+        seq = make_sequence(rng, m, length + 1)
+        toks[b] = seq[:-1]
+        tgts[b] = seq[1:]
+        wts[b, m:] = 1.0  # predicting t[i+1] is well-defined for i >= m
+    return toks, tgts, wts
+
+
+def adam_init(params: M.Params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), dtype=jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        new_m[k] = b1 * state["m"][k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k])
+        mhat = new_m[k] / (1 - b1 ** t.astype(jnp.float32))
+        vhat = new_v[k] / (1 - b2 ** t.astype(jnp.float32))
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def train_tier(cfg: M.ModelConfig, *, steps: int, batch: int = 16,
+               seq_len: int = 32, seed: int = 0, lr: float = 2e-3,
+               difficulties=(1, 2, 3, 4), log_every: int = 50) -> M.Params:
+    """Train one tier on a restricted difficulty mixture.
+
+    The per-tier `difficulties` curriculum is the capability knob: a tier
+    only masters the difficulties it trains on, giving the cascade a
+    controlled, monotone quality gradient (small: m=1; medium: m<=2;
+    large: m<=4).
+    """
+    rng = np.random.default_rng(seed)
+    params = M.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, toks, tgts, wts):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, toks, tgts, wts)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    for i in range(steps):
+        toks, tgts, wts = make_batch(rng, batch, seq_len,
+                                     difficulties=difficulties)
+        params, opt, loss = step(params, opt, jnp.asarray(toks),
+                                 jnp.asarray(tgts), jnp.asarray(wts))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  [{cfg.name}] step {i + 1}/{steps} loss {float(loss):.4f}",
+                  flush=True)
+    return params
+
+
+def eval_accuracy(params: M.Params, cfg: M.ModelConfig, *, n_seqs: int = 32,
+                  seq_len: int = 32, seed: int = 123) -> Dict[int, float]:
+    """Teacher-forced next-token accuracy per difficulty level."""
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def logits_of(seq):
+        out, _, _ = M.forward(params, cfg, seq, use_pallas=False)
+        return out
+
+    acc: Dict[int, float] = {}
+    for m in range(1, MAX_DIFFICULTY + 1):
+        correct = total = 0
+        for _ in range(n_seqs):
+            seq = make_sequence(rng, m, seq_len + 1)
+            logits = np.asarray(logits_of(jnp.asarray(seq[:-1])))
+            pred = logits.argmax(axis=-1)
+            sl = slice(m, seq_len)  # supervised region
+            correct += int((pred[sl] == seq[1:][sl]).sum())
+            total += seq_len - m
+        acc[m] = correct / max(total, 1)
+    return acc

@@ -1,0 +1,78 @@
+"""AOT export checks: HLO text is producible and parseable, the
+manifest matches the parameter blobs, and — when `make artifacts` has
+run — the shipped artifacts exhibit the monotone tier-quality gradient
+the cascade relies on.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowering_produces_hlo_text():
+    cfg = M.TIERS["small"]
+    text = aot.lower_prefill(cfg)
+    assert "ENTRY" in text and "f32" in text
+    assert len(text) > 10_000
+    text = aot.lower_decode(cfg)
+    assert "ENTRY" in text
+    # Decode updates a (L, Hkv, S, hd) cache.
+    shape = f"f32[{cfg.n_layers},{cfg.n_kv_heads},{cfg.max_seq},{cfg.head_dim}]"
+    assert shape in text
+
+
+def test_param_export_roundtrip(tmp_path):
+    cfg = M.TIERS["small"]
+    params = M.init_params(cfg, seed=3)
+    path = tmp_path / "p.bin"
+    n = aot.export_params(params, cfg, str(path))
+    assert n == cfg.n_params
+    blob = np.fromfile(path, dtype="<f4")
+    assert blob.size == n
+    # First entry is the embedding, in order.
+    emb = np.asarray(params["embed"]).reshape(-1)
+    np.testing.assert_array_equal(blob[: emb.size], emb)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_is_consistent():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert set(manifest["tiers"]) == {"small", "medium", "large"}
+    for tier, entry in manifest["tiers"].items():
+        cfg = M.TIERS[tier]
+        assert entry["config"]["n_params"] == cfg.n_params
+        blob = os.path.join(ARTIFACTS, entry["files"]["params"])
+        assert os.path.getsize(blob) == entry["n_floats"] * 4
+        n = sum(int(np.prod(p["shape"])) for p in entry["params"])
+        assert n == entry["n_floats"]
+        for key in ("prefill", "decode"):
+            assert os.path.exists(os.path.join(ARTIFACTS, entry["files"][key]))
+
+
+@needs_artifacts
+def test_tier_quality_gradient_is_monotone():
+    """The cascade premise: each tier masters strictly more difficulty
+    levels than the previous one."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    acc = {t: manifest["tiers"][t]["eval_accuracy"] for t in manifest["tiers"]}
+    # Every tier nails difficulty 1.
+    for t in acc:
+        assert acc[t]["1"] > 0.9, (t, acc[t])
+    # medium > small on difficulty 2; large > medium on difficulty 3.
+    assert acc["medium"]["2"] > 0.8 > acc["small"]["2"]
+    assert acc["large"]["3"] > 0.8 > acc["medium"]["3"]
+    assert acc["large"]["4"] > 0.8

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/GQA ratios; every property asserts allclose
+against `ref.py`. This is the core correctness signal for the kernels
+that the exported HLO artifacts embed.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention, flash_attention
+from compile.kernels.matmul import blocked_matmul
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype("float32"))
+
+
+# Hypothesis strategy: (Hq, Hkv, Sq, Sk, D) with Hq % Hkv == 0.
+@st.composite
+def attn_shapes(draw):
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    group = draw(st.sampled_from([1, 2, 3]))
+    hq = hkv * group
+    sq = draw(st.integers(1, 70))
+    d = draw(st.sampled_from([8, 16, 32]))
+    return hq, hkv, sq, d
+
+
+@settings(max_examples=25, deadline=None)
+@given(attn_shapes(), st.integers(0, 2**31 - 1))
+def test_flash_attention_causal_matches_ref(shape, seed):
+    hq, hkv, sq, d = shape
+    rng = np.random.default_rng(seed)
+    q = rand(rng, hq, sq, d)
+    k = rand(rng, hkv, sq, d)
+    v = rand(rng, hkv, sq, d)
+    out = flash_attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(attn_shapes(), st.integers(0, 2**31 - 1))
+def test_flash_attention_non_causal(shape, seed):
+    hq, hkv, sq, d = shape
+    rng = np.random.default_rng(seed)
+    q = rand(rng, hq, sq, d)
+    k = rand(rng, hkv, sq, d)
+    v = rand(rng, hkv, sq, d)
+    out = flash_attention(q, k, v, causal=False)
+    exp = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+def test_flash_attention_block_size_invariance(block):
+    rng = np.random.default_rng(0)
+    q = rand(rng, 4, 33, 16)
+    k = rand(rng, 2, 33, 16)
+    v = rand(rng, 2, 33, 16)
+    out = flash_attention(q, k, v, causal=True, block_q=block, block_k=block)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_flash_attention_seq_one():
+    rng = np.random.default_rng(1)
+    q = rand(rng, 2, 1, 16)
+    k = rand(rng, 2, 1, 16)
+    v = rand(rng, 2, 1, 16)
+    out = flash_attention(q, k, v, causal=True)
+    # Single position attends only to itself -> output == v.
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([1, 2, 3]),
+    st.integers(1, 80),
+    st.sampled_from([8, 16]),
+    st.integers(0, 2**31 - 1),
+    st.floats(0.05, 0.95),
+)
+def test_decode_attention_matches_ref(hkv, group, s, d, seed, keep_frac):
+    hq = hkv * group
+    rng = np.random.default_rng(seed)
+    q = rand(rng, hq, d)
+    k = rand(rng, hkv, s, d)
+    v = rand(rng, hkv, s, d)
+    mask = (rng.random(s) < keep_frac).astype("float32")
+    if mask.sum() == 0:
+        mask[rng.integers(0, s)] = 1.0  # at least one valid position
+    mask = jnp.asarray(mask)
+    out = decode_attention(q, k, v, mask)
+    exp = ref.decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_decode_attention_single_valid_position_returns_that_value():
+    rng = np.random.default_rng(2)
+    q = rand(rng, 2, 8)
+    k = rand(rng, 2, 20, 8)
+    v = rand(rng, 2, 20, 8)
+    mask = np.zeros(20, dtype="float32")
+    mask[7] = 1.0
+    out = decode_attention(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 7, :]), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 70),
+    st.integers(1, 70),
+    st.integers(1, 70),
+    st.integers(0, 2**31 - 1),
+)
+def test_blocked_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    b = rand(rng, k, n)
+    out = blocked_matmul(a, b)
+    exp = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-3, atol=1e-3)
+
+
+def test_blocked_matmul_identity():
+    rng = np.random.default_rng(3)
+    a = rand(rng, 24, 24)
+    eye = jnp.eye(24, dtype=jnp.float32)
+    out = blocked_matmul(a, eye)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a), **TOL)
+
+
+def test_flash_attention_rejects_bad_gqa():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 3, 8, 16)  # 3 q heads cannot share 2 kv heads
+    k = rand(rng, 2, 8, 16)
+    v = rand(rng, 2, 8, 16)
+    with pytest.raises(AssertionError):
+        flash_attention(q, k, v)

@@ -1,0 +1,134 @@
+"""L2 correctness: the transformer tiers.
+
+Key invariants:
+* Pallas-kernel path == reference-kernel path (same logits).
+* Padded prefill + decode steps == contiguous full forward.
+* The synthetic task generator obeys its own rule and the trained
+  manifest quality gradient is monotone (checked in test_aot).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import train as T
+
+CFG = M.TIERS["small"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=42)
+
+
+def test_param_shapes_cover_all_names():
+    shapes = M.param_shapes(CFG)
+    names = M.param_names(CFG)
+    assert set(shapes) == set(names)
+    n = sum(int(np.prod(shapes[k])) for k in names)
+    assert n == CFG.n_params
+
+
+def test_pallas_and_ref_paths_agree(params):
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=24).astype("int32"))
+    ref_logits, _, _ = M.forward(params, CFG, toks, use_pallas=False)
+    pl_logits, _, _ = M.forward(params, CFG, toks, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(ref_logits), np.asarray(pl_logits), rtol=5e-4, atol=5e-4
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1))
+def test_prefill_matches_full_forward(true_len, seed):
+    params = M.init_params(CFG, seed=7)
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, CFG.vocab, size=true_len).astype("int32")
+    padded = np.zeros(CFG.prefill_len, dtype="int32")
+    padded[:true_len] = seq
+    logits, _, _ = M.prefill(params, CFG, jnp.asarray(padded),
+                             jnp.asarray(true_len), use_pallas=True)
+    full, _, _ = M.forward(params, CFG, jnp.asarray(seq), use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full[-1]), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_multi_step_decode_matches_contiguous(params):
+    """Three decode steps after a padded prefill must equal the
+    contiguous forward pass over the growing sequence."""
+    rng = np.random.default_rng(3)
+    true_len = 17
+    seq = rng.integers(0, CFG.vocab, size=true_len).astype("int32")
+    padded = np.zeros(CFG.prefill_len, dtype="int32")
+    padded[:true_len] = seq
+    logits, kc, vc = M.prefill(params, CFG, jnp.asarray(padded),
+                               jnp.asarray(true_len), use_pallas=True)
+    mask = np.zeros(CFG.max_seq, dtype="float32")
+    mask[:true_len] = 1.0
+    cur = list(seq)
+    for i in range(3):
+        tok = int(np.argmax(np.asarray(logits)))
+        slot = CFG.prefill_len + i
+        mask[slot] = 1.0
+        logits, kc, vc = M.decode_step(
+            params, CFG, jnp.asarray(tok), jnp.asarray(slot),
+            jnp.asarray(true_len + i), jnp.asarray(mask), kc, vc,
+            use_pallas=True)
+        cur.append(tok)
+        full, _, _ = M.forward(params, CFG, jnp.asarray(np.array(cur, dtype="int32")),
+                               use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[-1]), rtol=1e-3, atol=1e-3,
+            err_msg=f"decode step {i}")
+
+
+def test_padding_does_not_leak(params):
+    """Changing pad tokens (beyond true_len) must not change logits."""
+    rng = np.random.default_rng(4)
+    true_len = 12
+    seq = rng.integers(0, CFG.vocab, size=true_len).astype("int32")
+    a = np.zeros(CFG.prefill_len, dtype="int32")
+    a[:true_len] = seq
+    b = a.copy()
+    b[true_len:] = rng.integers(0, CFG.vocab, size=CFG.prefill_len - true_len)
+    la, _, _ = M.prefill(params, CFG, jnp.asarray(a), jnp.asarray(true_len))
+    lb, _, _ = M.prefill(params, CFG, jnp.asarray(b), jnp.asarray(true_len))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-5, atol=1e-5)
+
+
+def test_task_sequences_follow_rule():
+    rng = np.random.default_rng(5)
+    for m in range(1, T.MAX_DIFFICULTY + 1):
+        seq = T.make_sequence(rng, m, 30)
+        assert seq[0] == T.MARKER_BASE + m
+        for i in range(1 + m, 30):
+            assert seq[i] == np.sum(seq[i - m:i]) % T.DATA_VOCAB, (m, i)
+
+
+def test_batch_weights_skip_seed_region():
+    rng = np.random.default_rng(6)
+    toks, tgts, wts = T.make_batch(rng, 8, 20)
+    for b in range(8):
+        m = int(toks[b, 0]) - T.MARKER_BASE
+        assert (wts[b, :m] == 0).all()
+        assert (wts[b, m:] == 1).all()
+        # Targets are the shifted sequence.
+        assert (tgts[b, :-1] == toks[b, 1:]).all()
+
+
+def test_short_training_reduces_loss():
+    cfg = M.TIERS["small"]
+    rng = np.random.default_rng(7)
+    toks, tgts, wts = T.make_batch(rng, 8, 24, difficulties=(1,))
+    p0 = M.init_params(cfg, seed=1)
+    loss0 = float(M.loss_fn(p0, cfg, jnp.asarray(toks), jnp.asarray(tgts),
+                            jnp.asarray(wts)))
+    p1 = T.train_tier(cfg, steps=40, batch=8, seq_len=24, seed=1,
+                      difficulties=(1,), log_every=0)
+    loss1 = float(M.loss_fn(p1, cfg, jnp.asarray(toks), jnp.asarray(tgts),
+                            jnp.asarray(wts)))
+    assert loss1 < loss0 * 0.8, (loss0, loss1)

@@ -1,0 +1,62 @@
+//! MILP substrate benchmarks: simplex LP solves and branch-and-bound
+//! on the §3.2 assignment family at realistic sizes.
+
+use cascadia::milp::simplex::Sense;
+use cascadia::milp::{MilpProblem, Rel};
+use cascadia::util::bench::Bencher;
+use cascadia::util::rng::Rng;
+
+/// Build a §3.2-shaped instance: `tiers` tiers x `n_gpus` allocations,
+/// synthetic latency tables.
+fn assignment_instance(tiers: usize, n_gpus: usize, seed: u64) -> MilpProblem {
+    let mut rng = Rng::new(seed);
+    let n_bin = tiers * n_gpus;
+    let l_var = n_bin;
+    let mut obj = vec![0.0; n_bin + 1];
+    obj[l_var] = 1.0;
+    let mut p = MilpProblem::new(n_bin + 1, obj, Sense::Minimize);
+    // One allocation per tier.
+    for t in 0..tiers {
+        let mut row = vec![0.0; n_bin + 1];
+        for f in 0..n_gpus {
+            row[t * n_gpus + f] = 1.0;
+        }
+        p.constrain(row, Rel::Eq, 1.0);
+    }
+    // Budget.
+    let mut row = vec![0.0; n_bin + 1];
+    for t in 0..tiers {
+        for f in 0..n_gpus {
+            row[t * n_gpus + f] = (f + 1) as f64;
+        }
+    }
+    p.constrain(row, Rel::Eq, n_gpus as f64);
+    // L >= selected latency (decreasing in f with noise).
+    for t in 0..tiers {
+        let mut row = vec![0.0; n_bin + 1];
+        for f in 0..n_gpus {
+            let lat = 100.0 / (f + 1) as f64 * rng.range_f64(0.8, 1.2)
+                * (t + 1) as f64;
+            row[t * n_gpus + f] = lat;
+        }
+        row[l_var] = -1.0;
+        p.constrain(row, Rel::Le, 0.0);
+    }
+    for v in 0..n_bin {
+        p.set_binary(v);
+    }
+    p
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    for &(tiers, gpus) in &[(3usize, 32usize), (3, 64), (3, 128), (5, 32)] {
+        let p = assignment_instance(tiers, gpus, 42);
+        let label = format!("B&B assignment {tiers} tiers x {gpus} GPUs");
+        let meas = b.bench(&label, || p.solve().unwrap().nodes);
+        let nodes = p.solve().unwrap().nodes;
+        println!("  -> {nodes} nodes, {:?}/solve", meas.mean);
+    }
+    b.write_csv("results/bench_milp.csv").unwrap();
+    println!("wrote results/bench_milp.csv");
+}

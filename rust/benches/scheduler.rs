@@ -1,0 +1,62 @@
+//! Scheduler benchmarks (Figure 12 companion): inner MILP/DP solve,
+//! l_i(f) table construction, strategy enumeration, and the full
+//! bi-level sweep at 32/64/128 GPUs.
+
+use cascadia::cluster::ClusterSpec;
+use cascadia::judge::Judger;
+use cascadia::models::deepseek_cascade;
+use cascadia::parallel::enumerate_strategies;
+use cascadia::perf::Workload;
+use cascadia::sched::inner::{InnerOptions, InnerSolver};
+use cascadia::sched::outer::{optimize, OuterOptions};
+use cascadia::util::bench::Bencher;
+use cascadia::workload::{generate, paper_trace};
+
+fn main() {
+    let mut b = Bencher::default();
+    let cascade = deepseek_cascade();
+    let cluster = ClusterSpec::paper_testbed();
+    let w = Workload { rate: 20.0, avg_input: 512.0, avg_output: 256.0 };
+    let tier_w = vec![w, w.scaled(0.5), w.scaled(0.15)];
+
+    b.bench("enumerate_strategies(7B, 32 GPUs)", || {
+        enumerate_strategies(&cascade[0], &cluster, 32).len()
+    });
+
+    // Cold tables (no memo hits).
+    b.bench("l_i(f) tables, 3 tiers x 32 GPUs (cold)", || {
+        let solver =
+            InnerSolver::new(cascade.clone(), cluster.clone(), InnerOptions::default());
+        solver.tables(&tier_w, 32)
+    });
+
+    for &(label, use_milp) in &[("MILP", true), ("DP", false)] {
+        let solver = InnerSolver::new(
+            cascade.clone(),
+            cluster.clone(),
+            InnerOptions { use_milp, ..Default::default() },
+        );
+        solver.tables(&tier_w, 32); // warm the memo
+        b.bench(&format!("inner solve 32 GPUs ({label}, warm tables)"), || {
+            solver.solve(&tier_w, 32).unwrap()
+        });
+    }
+
+    // Full sweep at increasing cluster sizes (Figure 12's subject).
+    for &gpus in &[32usize, 64, 128] {
+        let judger = Judger::new(1);
+        let reqs = generate(&paper_trace(1, 2.0 * gpus as f64), 600, 3);
+        let c = ClusterSpec::with_gpus(gpus);
+        let opts = OuterOptions::default();
+        let mut quick = Bencher::quick();
+        quick.bench(&format!("full bi-level sweep, {gpus} GPUs"), || {
+            optimize(&cascade, &c, &judger, &reqs, gpus, &opts).unwrap().pareto.len()
+        });
+        for m in quick.results() {
+            b.push_external(m.clone());
+        }
+    }
+
+    b.write_csv("results/bench_scheduler.csv").unwrap();
+    println!("wrote results/bench_scheduler.csv");
+}

@@ -1,0 +1,45 @@
+//! Simulator benchmarks: DES event throughput and analytic-estimate
+//! cost — the quantities that bound scheduler runtime (EXPERIMENTS.md
+//! §Perf tracks these before/after optimization).
+
+use cascadia::cluster::ClusterSpec;
+use cascadia::models::llama_cascade;
+use cascadia::perf::{ReplicaModel, Workload};
+use cascadia::sim::analytic::estimate_p95;
+use cascadia::sim::des::{simulate, SimRequest};
+use cascadia::util::bench::Bencher;
+use cascadia::util::rng::Rng;
+
+fn poisson_trace(rate: f64, n: usize, seed: u64) -> Vec<SimRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate);
+            SimRequest { arrival: t, input_tokens: 512, output_tokens: 128 }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let m = &llama_cascade()[0];
+    let cluster = ClusterSpec::paper_testbed();
+    let pool: Vec<ReplicaModel> =
+        (0..4).map(|_| ReplicaModel::new(m, &cluster, 2, 1, 640.0)).collect();
+    let w = Workload { rate: 40.0, avg_input: 512.0, avg_output: 128.0 };
+
+    b.bench("ReplicaModel::new", || ReplicaModel::new(m, &cluster, 2, 1, 640.0));
+    b.bench("analytic estimate_p95 (4 replicas)", || estimate_p95(&pool, &w));
+
+    for &n in &[1_000usize, 10_000] {
+        let trace = poisson_trace(40.0, n, 7);
+        let label = format!("DES {n} requests (4 replicas)");
+        let meas = b.bench(&label, || simulate(&pool, &trace).latencies.len());
+        let req_per_sec = n as f64 / meas.mean.as_secs_f64();
+        println!("  -> {req_per_sec:.0} simulated requests/s");
+    }
+
+    b.write_csv("results/bench_simulator.csv").unwrap();
+    println!("wrote results/bench_simulator.csv");
+}

@@ -1,0 +1,82 @@
+//! Figure 10: per-tier processing latency across the paper's test
+//! cases — showing that Cascadia's co-optimization keeps the tiers'
+//! loads balanced (no tier's latency dominates).
+//!
+//! Usage: fig10_balance [--gpus 32] [--n 1200] [--out results/fig10.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario, PAPER_CASES};
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+use cascadia::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let out = args.str_or("out", "results/fig10.csv");
+
+    let cascade = deepseek_cascade();
+    let opts = OuterOptions::default();
+
+    let mut table = Table::new(
+        "Figure 10 — per-tier mean processing latency (s) by test case",
+        &["case", "tier", "model", "mean(s)", "p95(s)", "visits", "balance(max/min)"],
+    );
+
+    for (q, trace) in PAPER_CASES {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 23);
+        let plan = match scenario.cascadia_plan(q, &opts) {
+            Ok(p) => p,
+            Err(e) => {
+                table.row(vec![
+                    format!("({q:.0},{trace})"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("({e})"),
+                ]);
+                continue;
+            }
+        };
+        let sim = scenario.evaluate(&plan)?;
+        let mut tier_means = Vec::new();
+        for (t, outcome) in sim.tier_outcomes.iter().enumerate() {
+            let Some(o) = outcome else { continue };
+            let mean = o.mean();
+            tier_means.push(mean);
+            table.row(vec![
+                format!("({q:.0},{trace})"),
+                format!("c{}", t + 1),
+                cascade[t].name.to_string(),
+                format!("{mean:.2}"),
+                format!("{:.2}", stats::percentile(&o.latencies, 0.95)),
+                format!("{}", o.latencies.len()),
+                String::new(),
+            ]);
+        }
+        if tier_means.len() > 1 {
+            let max = tier_means.iter().cloned().fold(0.0f64, f64::max);
+            let min = tier_means.iter().cloned().fold(f64::INFINITY, f64::min);
+            table.row(vec![
+                format!("({q:.0},{trace})"),
+                "-".into(),
+                "BALANCE".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:.2}x", max / min.max(1e-9)),
+            ]);
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

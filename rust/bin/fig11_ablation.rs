@@ -1,0 +1,105 @@
+//! Figure 11: ablation study — disable (i) parallelism-strategy
+//! optimization (uniform TP-in-server/DP-across) or (ii) resource
+//! allocation optimization (uniform split), measure the latency hit.
+//!
+//! The paper reports up to 1.6x (1.4x avg) for (i) and up to 2.1x
+//! (1.7x avg) for (ii).
+//!
+//! Usage: fig11_ablation [--gpus 32] [--n 1200] [--out results/fig11.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario, PAPER_CASES};
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let out = args.str_or("out", "results/fig11.csv");
+
+    let cascade = deepseek_cascade();
+
+    let variants: [(&str, fn(&mut OuterOptions)); 3] = [
+        ("cascadia", |_| {}),
+        ("uniform-parallelism", |o| o.inner.uniform_parallelism = true),
+        ("uniform-allocation", |o| o.inner.uniform_allocation = true),
+    ];
+
+    let mut table = Table::new(
+        "Figure 11 — ablations (p95 latency on held-out trace)",
+        &["case", "variant", "p95(s)", "slowdown", "quality"],
+    );
+
+    let mut slowdowns: Vec<(String, f64)> = Vec::new();
+
+    for (q, trace) in PAPER_CASES {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 29);
+        let mut base_p95: Option<f64> = None;
+        for (name, tweak) in variants {
+            let mut opts = OuterOptions::default();
+            tweak(&mut opts);
+            let row = match scenario
+                .cascadia_plan(q, &opts)
+                .and_then(|p| scenario.evaluate(&p))
+            {
+                Ok(sim) => {
+                    let p95 = sim.p95();
+                    let slowdown = match base_p95 {
+                        None => {
+                            base_p95 = Some(p95);
+                            1.0
+                        }
+                        Some(b) => p95 / b.max(1e-9),
+                    };
+                    if name != "cascadia" {
+                        slowdowns.push((name.to_string(), slowdown));
+                    }
+                    vec![
+                        format!("({q:.0},{trace})"),
+                        name.to_string(),
+                        format!("{p95:.2}"),
+                        format!("{slowdown:.2}x"),
+                        format!("{:.1}", sim.quality),
+                    ]
+                }
+                Err(e) => vec![
+                    format!("({q:.0},{trace})"),
+                    name.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    format!("({e})"),
+                ],
+            };
+            table.row(row);
+        }
+    }
+
+    // Aggregates per variant.
+    for variant in ["uniform-parallelism", "uniform-allocation"] {
+        let v: Vec<f64> = slowdowns
+            .iter()
+            .filter(|(n, _)| n == variant)
+            .map(|(_, s)| *s)
+            .collect();
+        if !v.is_empty() {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            let max = v.iter().cloned().fold(0.0f64, f64::max);
+            table.row(vec![
+                "ALL".into(),
+                variant.to_string(),
+                "-".into(),
+                format!("avg {avg:.2}x / max {max:.2}x"),
+                "-".into(),
+            ]);
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

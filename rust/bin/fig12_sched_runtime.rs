@@ -1,0 +1,70 @@
+//! Figure 12: scheduling-algorithm runtime vs cluster size (32 / 64 /
+//! 128 GPUs). The paper reports ~1 min at 32 GPUs and ~2/4 min at
+//! 64/128 on a 12-core box; this harness reports our wall-clock on the
+//! current machine plus the MILP/enumeration breakdown.
+//!
+//! Usage: fig12_sched_runtime [--sizes 32,64,128] [--n 800]
+//!                            [--out results/fig12.csv]
+
+use std::time::Instant;
+
+use anyhow::Result;
+use cascadia::harness::Scenario;
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::inner::{InnerOptions, InnerSolver};
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+use cascadia::workload::estimate_stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sizes: Vec<usize> = args
+        .str_or("sizes", "32,64,128")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let n = args.usize_or("n", 800)?;
+    let out = args.str_or("out", "results/fig12.csv");
+
+    let cascade = deepseek_cascade();
+    let mut table = Table::new(
+        "Figure 12 — scheduler runtime by cluster size",
+        &["gpus", "full-sweep(s)", "one-inner-solve(s)", "explored", "pareto"],
+    );
+
+    for &gpus in &sizes {
+        // Rate scales with cluster size to keep utilization comparable.
+        let rate = 6.0 * gpus as f64 / 32.0;
+        let scenario = Scenario::new(cascade.clone(), gpus, 1, rate, n, 31);
+        let opts = OuterOptions::default();
+
+        let (sweep, secs) = scenario.schedule(&opts)?;
+
+        // One cold inner solve (tables + MILP) for the breakdown.
+        let stats = estimate_stats(&scenario.plan_reqs);
+        let w = stats.workload();
+        let tier_w = vec![w, w.scaled(0.5), w.scaled(0.2)];
+        let solver = InnerSolver::new(
+            cascade.clone(),
+            scenario.cluster.clone(),
+            InnerOptions::default(),
+        );
+        let t0 = Instant::now();
+        let _ = solver.solve(&tier_w, gpus)?;
+        let inner_secs = t0.elapsed().as_secs_f64();
+
+        table.row(vec![
+            gpus.to_string(),
+            format!("{secs:.2}"),
+            format!("{inner_secs:.2}"),
+            sweep.explored.len().to_string(),
+            sweep.pareto.len().to_string(),
+        ]);
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Figures 6/13: the explored scheduling points and Pareto-optimal
+//! front per trace, from systematically varying thresholds (h1, h2)
+//! and the Tchebycheff weights (λ1, λ2).
+//!
+//! Emits all explored (latency, quality) points plus the front and the
+//! per-λ Tchebycheff winners; results/fig13_traceN.csv can be plotted
+//! directly.
+//!
+//! Usage: fig13_pareto [--gpus 32] [--n 1200] [--out-dir results]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario};
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::{tchebycheff_winners, OuterOptions};
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let out_dir = args.str_or("out-dir", "results");
+
+    let cascade = deepseek_cascade();
+    let opts = OuterOptions::default();
+
+    for trace in [1usize, 2, 3] {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 37);
+        let (sweep, secs) = scenario.schedule(&opts)?;
+        let winners = tchebycheff_winners(&sweep, &opts);
+
+        let mut table = Table::new(
+            &format!(
+                "Figure 13 — trace {trace}: explored={} pareto={} winners={} ({secs:.1}s, utopia L={:.2}s Q={:.1})",
+                sweep.explored.len(),
+                sweep.pareto.len(),
+                winners.len(),
+                sweep.utopia.0,
+                sweep.utopia.1
+            ),
+            &["kind", "latency(s)", "quality", "h1", "h2"],
+        );
+        for (kind, points) in [
+            ("explored", &sweep.explored),
+            ("pareto", &sweep.pareto),
+            ("tcheby", &winners),
+        ] {
+            for p in points {
+                let h = &p.plan.thresholds.0;
+                table.row(vec![
+                    kind.to_string(),
+                    format!("{:.3}", p.latency),
+                    format!("{:.2}", p.quality),
+                    format!("{:.0}", h.first().copied().unwrap_or(0.0)),
+                    format!("{:.0}", h.get(1).copied().unwrap_or(0.0)),
+                ]);
+            }
+        }
+        // Print only the front + winners to stdout (explored is large).
+        let mut short = Table::new(
+            &format!("trace {trace} Pareto front"),
+            &["latency(s)", "quality", "thresholds"],
+        );
+        for p in &sweep.pareto {
+            short.row(vec![
+                format!("{:.3}", p.latency),
+                format!("{:.2}", p.quality),
+                format!("{:?}", p.plan.thresholds.0),
+            ]);
+        }
+        print!("{}", short.render());
+        let path = format!("{out_dir}/fig13_trace{trace}.csv");
+        table.write_csv(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

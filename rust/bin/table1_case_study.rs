@@ -1,0 +1,69 @@
+//! Table 1: thresholds (h1, h2), processing ratios (p1, p2, p3) and
+//! allocated resources (f1, f2, f3) per test case.
+//!
+//! The expected *shape* vs the paper: lower quality requirements give
+//! lower thresholds, smaller large-tier ratios/allocations, and the
+//! easy trace 3 drops the largest tier entirely.
+//!
+//! Usage: table1_case_study [--gpus 32] [--n 1200] [--out results/table1.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario, PAPER_CASES};
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let out = args.str_or("out", "results/table1.csv");
+
+    let cascade = deepseek_cascade();
+    let opts = OuterOptions::default();
+
+    let mut table = Table::new(
+        "Table 1 — thresholds, processing ratios, allocations",
+        &["case", "h1", "h2", "p1", "p2", "p3", "f1", "f2", "f3", "L(s)", "Q"],
+    );
+
+    for (q, trace) in PAPER_CASES {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 41);
+        match scenario.cascadia_plan(q, &opts) {
+            Ok(plan) => {
+                let h = &plan.thresholds.0;
+                let p: Vec<f64> =
+                    plan.tiers.iter().map(|t| t.processing_ratio * 100.0).collect();
+                let f: Vec<usize> = plan.tiers.iter().map(|t| t.gpus).collect();
+                table.row(vec![
+                    format!("({q:.0},{trace})"),
+                    format!("{:.0}", h[0]),
+                    format!("{:.0}", h.get(1).copied().unwrap_or(0.0)),
+                    format!("{:.0}%", p[0]),
+                    format!("{:.0}%", p[1]),
+                    format!("{:.0}%", p.get(2).copied().unwrap_or(0.0)),
+                    f[0].to_string(),
+                    f[1].to_string(),
+                    f.get(2).copied().unwrap_or(0).to_string(),
+                    format!("{:.2}", plan.predicted_latency),
+                    format!("{:.1}", plan.predicted_quality),
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    format!("({q:.0},{trace})"),
+                    "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                    "-".into(), "-".into(), "-".into(), "-".into(),
+                    format!("({e})"),
+                ]);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Table 2: chosen parallelism strategies (s1, s2, s3) per test case,
+//! in the paper's notation — e.g. `s2: (DP=2, TP=4)` or mixed sets
+//! like `s3: (TP=4, PP=3), (TP=8)`.
+//!
+//! Usage: table2_parallelism [--gpus 32] [--n 1200] [--out results/table2.csv]
+
+use anyhow::Result;
+use cascadia::harness::{default_rate, Scenario, PAPER_CASES};
+use cascadia::models::deepseek_cascade;
+use cascadia::report::Table;
+use cascadia::sched::outer::OuterOptions;
+use cascadia::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 32)?;
+    let n = args.usize_or("n", 1200)?;
+    let out = args.str_or("out", "results/table2.csv");
+
+    let cascade = deepseek_cascade();
+    let opts = OuterOptions::default();
+
+    let mut table = Table::new(
+        "Table 2 — parallelism strategies per test case",
+        &["case", "s1", "s2", "s3"],
+    );
+
+    for (q, trace) in PAPER_CASES {
+        let scenario =
+            Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 43);
+        match scenario.cascadia_plan(q, &opts) {
+            Ok(plan) => {
+                let s: Vec<String> = plan
+                    .tiers
+                    .iter()
+                    .map(|t| {
+                        t.strategy
+                            .as_ref()
+                            .map(|s| s.label())
+                            .unwrap_or_else(|| "-".to_string())
+                    })
+                    .collect();
+                table.row(vec![
+                    format!("({q:.0},{trace})"),
+                    s[0].clone(),
+                    s[1].clone(),
+                    s.get(2).cloned().unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    format!("({q:.0},{trace})"),
+                    format!("({e})"),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    table.write_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

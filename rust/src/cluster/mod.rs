@@ -1,0 +1,141 @@
+//! Hardware description of the (simulated) GPU cluster.
+//!
+//! The paper's testbed — 4 servers × 8 H100-80GB, NVLink 400 GB/s
+//! intra-server, InfiniBand 200 Gb/s-class inter-server — is modelled
+//! parametrically: the scheduler and simulator consume only the numbers
+//! here, so alternative clusters (64/128 GPUs for Figure 12) are just
+//! different `ClusterSpec` values.
+
+/// One GPU's capability envelope.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM capacity in bytes.
+    pub mem_bytes: f64,
+    /// Dense bf16 peak, FLOP/s.
+    pub peak_flops: f64,
+    /// Achievable fraction of peak in serving kernels (MFU ceiling).
+    pub mfu: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Achievable fraction of HBM bandwidth in decode kernels.
+    pub mbu: f64,
+}
+
+impl GpuSpec {
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "H100-80GB",
+            mem_bytes: 80e9,
+            peak_flops: 989e12, // dense bf16, no sparsity
+            mfu: 0.55,
+            hbm_bw: 3.35e12,
+            mbu: 0.70,
+        }
+    }
+
+    /// Effective compute throughput (FLOP/s) after the MFU ceiling.
+    pub fn eff_flops(&self) -> f64 {
+        self.peak_flops * self.mfu
+    }
+
+    /// Effective memory bandwidth (bytes/s) after the MBU ceiling.
+    pub fn eff_hbm_bw(&self) -> f64 {
+        self.hbm_bw * self.mbu
+    }
+}
+
+/// Interconnect description (alpha-beta model per link class).
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Bandwidth, bytes/s.
+    pub beta_bw: f64,
+}
+
+/// The cluster: homogeneous servers of homogeneous GPUs.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    pub n_servers: usize,
+    pub gpus_per_server: usize,
+    /// Intra-server link (NVLink).
+    pub intra: LinkSpec,
+    /// Inter-server link (InfiniBand).
+    pub inter: LinkSpec,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: 4 × 8 H100, NVLink 400 GB/s, IB 200 Gb/s.
+    pub fn paper_testbed() -> ClusterSpec {
+        ClusterSpec {
+            gpu: GpuSpec::h100(),
+            n_servers: 4,
+            gpus_per_server: 8,
+            intra: LinkSpec { alpha: 3e-6, beta_bw: 400e9 },
+            inter: LinkSpec { alpha: 10e-6, beta_bw: 25e9 }, // 200 Gb/s
+        }
+    }
+
+    /// Scaled clusters for the Figure 12 runtime study.
+    pub fn with_gpus(total: usize) -> ClusterSpec {
+        let mut c = ClusterSpec::paper_testbed();
+        assert!(total % c.gpus_per_server == 0,
+                "total GPUs must be a multiple of {}", c.gpus_per_server);
+        c.n_servers = total / c.gpus_per_server;
+        c
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_servers * self.gpus_per_server
+    }
+
+    /// The link a group of `n` GPUs communicates over: NVLink while the
+    /// group fits in one server, InfiniBand once it spans servers.
+    pub fn link_for_group(&self, n: usize) -> &LinkSpec {
+        if n <= self.gpus_per_server {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_has_32_gpus() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.gpu.mem_bytes, 80e9);
+    }
+
+    #[test]
+    fn scaled_clusters() {
+        assert_eq!(ClusterSpec::with_gpus(64).n_servers, 8);
+        assert_eq!(ClusterSpec::with_gpus(128).total_gpus(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_multiple_scaling_panics() {
+        ClusterSpec::with_gpus(33);
+    }
+
+    #[test]
+    fn link_selection_crosses_server_boundary() {
+        let c = ClusterSpec::paper_testbed();
+        assert!((c.link_for_group(8).beta_bw - 400e9).abs() < 1.0);
+        assert!((c.link_for_group(9).beta_bw - 25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn effective_rates_below_peak() {
+        let g = GpuSpec::h100();
+        assert!(g.eff_flops() < g.peak_flops);
+        assert!(g.eff_hbm_bw() < g.hbm_bw);
+    }
+}

@@ -1,0 +1,198 @@
+//! JSON config system for experiments and the launcher.
+//!
+//! A config file fully describes a run: cascade, cluster size, trace,
+//! scheduler knobs, and quality requirement. Every field has a default
+//! so partial configs (or none at all) work; see
+//! `examples/configs/*.json` for complete samples.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::models::{cascade_by_name, ModelSpec};
+use crate::sched::inner::InnerOptions;
+use crate::sched::outer::OuterOptions;
+use crate::util::json::Json;
+use crate::workload::{paper_trace, TraceSpec};
+
+/// A full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Cascade name: "deepseek" or "llama".
+    pub cascade_name: String,
+    /// Total GPUs (must be a multiple of 8 for the paper testbed shape).
+    pub n_gpus: usize,
+    /// Trace index 1..=3.
+    pub trace_index: usize,
+    /// Mean arrival rate, requests/s.
+    pub rate: f64,
+    /// Requests to generate.
+    pub n_requests: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Target mean judged quality.
+    pub quality_requirement: f64,
+    /// Scheduler options.
+    pub use_milp: bool,
+    pub uniform_parallelism: bool,
+    pub uniform_allocation: bool,
+    /// Threshold grid step (score points).
+    pub threshold_step: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            cascade_name: "deepseek".into(),
+            n_gpus: 32,
+            trace_index: 2,
+            rate: 4.0,
+            n_requests: 2000,
+            seed: 0,
+            quality_requirement: 80.0,
+            use_milp: true,
+            uniform_parallelism: false,
+            uniform_allocation: false,
+            threshold_step: 10.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing keys fall back to defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).context("parsing config JSON")?;
+        let mut c = ExperimentConfig::default();
+        if let Some(v) = j.get("cascade") {
+            c.cascade_name = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("n_gpus") {
+            c.n_gpus = v.as_usize()?;
+        }
+        if let Some(v) = j.get("trace") {
+            c.trace_index = v.as_usize()?;
+        }
+        if let Some(v) = j.get("rate") {
+            c.rate = v.as_f64()?;
+        }
+        if let Some(v) = j.get("n_requests") {
+            c.n_requests = v.as_usize()?;
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = j.get("quality_requirement") {
+            c.quality_requirement = v.as_f64()?;
+        }
+        if let Some(v) = j.get("use_milp") {
+            c.use_milp = v.as_bool()?;
+        }
+        if let Some(v) = j.get("uniform_parallelism") {
+            c.uniform_parallelism = v.as_bool()?;
+        }
+        if let Some(v) = j.get("uniform_allocation") {
+            c.uniform_allocation = v.as_bool()?;
+        }
+        if let Some(v) = j.get("threshold_step") {
+            c.threshold_step = v.as_f64()?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if cascade_by_name(&self.cascade_name).is_none() {
+            bail!("unknown cascade '{}' (expected deepseek|llama)", self.cascade_name);
+        }
+        if !(1..=3).contains(&self.trace_index) {
+            bail!("trace index {} out of range 1..=3", self.trace_index);
+        }
+        if self.n_gpus == 0 || self.rate <= 0.0 || self.n_requests == 0 {
+            bail!("n_gpus, rate, n_requests must be positive");
+        }
+        if !(0.0..=100.0).contains(&self.quality_requirement) {
+            bail!("quality requirement must be in 0..=100");
+        }
+        if self.threshold_step <= 0.0 || self.threshold_step > 50.0 {
+            bail!("threshold_step must be in (0, 50]");
+        }
+        Ok(())
+    }
+
+    pub fn cascade(&self) -> Vec<ModelSpec> {
+        cascade_by_name(&self.cascade_name).expect("validated")
+    }
+
+    pub fn cluster(&self) -> ClusterSpec {
+        ClusterSpec::with_gpus(self.n_gpus)
+    }
+
+    pub fn trace_spec(&self) -> TraceSpec {
+        paper_trace(self.trace_index, self.rate)
+    }
+
+    pub fn outer_options(&self) -> OuterOptions {
+        let mut grid = Vec::new();
+        let mut h = 0.0;
+        while h <= 100.0 {
+            grid.push(h);
+            h += self.threshold_step;
+        }
+        OuterOptions {
+            threshold_grid: grid,
+            inner: InnerOptions {
+                use_milp: self.use_milp,
+                uniform_parallelism: self.uniform_parallelism,
+                uniform_allocation: self.uniform_allocation,
+            },
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_partial_config() {
+        let c = ExperimentConfig::from_json_text(
+            r#"{"cascade": "llama", "n_gpus": 64, "quality_requirement": 75}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cascade_name, "llama");
+        assert_eq!(c.n_gpus, 64);
+        assert_eq!(c.quality_requirement, 75.0);
+        // Default survives.
+        assert_eq!(c.trace_index, 2);
+        assert_eq!(c.cascade().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_json_text(r#"{"cascade": "gpt"}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"trace": 9}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"rate": -1}"#).is_err());
+        assert!(ExperimentConfig::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn outer_options_grid_respects_step() {
+        let mut c = ExperimentConfig::default();
+        c.threshold_step = 25.0;
+        let opts = c.outer_options();
+        assert_eq!(opts.threshold_grid, vec![0.0, 25.0, 50.0, 75.0, 100.0]);
+    }
+}

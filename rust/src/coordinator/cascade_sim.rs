@@ -1,0 +1,258 @@
+//! Whole-cascade simulation: chains the per-tier discrete-event
+//! simulator so tier t+1's arrivals are the completion times of tier
+//! t's escalated requests, and a request's end-to-end latency is the
+//! sum of its per-tier residencies — exactly the serving semantics of
+//! Figure 5.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::judge::Judger;
+use crate::models::ModelSpec;
+use crate::perf::ReplicaModel;
+use crate::router::route;
+use crate::sched::plan::CascadePlan;
+use crate::sim::des::{simulate, SimRequest};
+use crate::sim::SimOutcome;
+use crate::util::stats;
+use crate::workload::Request;
+
+/// End-to-end cascade simulation result.
+#[derive(Debug, Clone)]
+pub struct CascadeSimResult {
+    /// End-to-end latency per request (trace order).
+    pub e2e_latencies: Vec<f64>,
+    /// Per-tier simulator outcomes (None for undeployed tiers).
+    pub tier_outcomes: Vec<Option<SimOutcome>>,
+    /// Judged quality of the final answers.
+    pub quality: f64,
+    /// Requests per second over the whole run.
+    pub throughput_rps: f64,
+    pub makespan: f64,
+    /// Accepting tier per request.
+    pub accepting_tier: Vec<u8>,
+}
+
+impl CascadeSimResult {
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.e2e_latencies, 0.95)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.e2e_latencies)
+    }
+
+    pub fn slo_attainment(&self, slo: f64) -> f64 {
+        stats::fraction_within(&self.e2e_latencies, slo)
+    }
+
+    /// Smallest SLO scale (multiple of `unit`) at which attainment
+    /// reaches `target` — the paper's headline metric (95% attainment).
+    pub fn min_slo_scale(&self, unit: f64, target: f64) -> f64 {
+        // Direct computation from the latency distribution: the
+        // `target` quantile divided by the unit.
+        let q = stats::percentile(&self.e2e_latencies, target);
+        q / unit
+    }
+}
+
+/// Build the replica pool for a tier plan.
+pub fn replicas_for(
+    plan: &CascadePlan,
+    tier: usize,
+    cascade: &[ModelSpec],
+    cluster: &ClusterSpec,
+) -> Vec<ReplicaModel> {
+    let tp = &plan.tiers[tier];
+    let Some(strategy) = &tp.strategy else {
+        return Vec::new();
+    };
+    let w = &tp.workload;
+    let avg_ctx = (w.avg_input + w.avg_output / 2.0).max(64.0);
+    strategy
+        .groups
+        .iter()
+        .flat_map(|g| {
+            (0..g.count)
+                .map(|_| ReplicaModel::new(&cascade[tier], cluster, g.tp, g.pp, avg_ctx))
+        })
+        .collect()
+}
+
+/// Simulate `requests` through the deployed cascade `plan`.
+///
+/// Routing decisions reuse the same judger as the scheduler, so the
+/// simulated processing ratios equal the planned ones (up to trace
+/// noise when the evaluation trace differs from the planning trace).
+pub fn simulate_cascade(
+    plan: &CascadePlan,
+    cascade: &[ModelSpec],
+    cluster: &ClusterSpec,
+    judger: &Judger,
+    requests: &[Request],
+) -> Result<CascadeSimResult> {
+    if requests.is_empty() {
+        bail!("empty trace");
+    }
+    let c = cascade.len();
+    let span = (requests.last().unwrap().arrival - requests[0].arrival).max(1e-9);
+    let routing = route(cascade, judger, requests, &plan.thresholds, span);
+
+    // Per-request bookkeeping: the time the request becomes available
+    // to the next tier (initially its arrival).
+    let mut ready: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
+    let mut e2e_done: Vec<f64> = vec![f64::NAN; requests.len()];
+    let mut tier_outcomes: Vec<Option<SimOutcome>> = vec![None; c];
+    let mut makespan: f64 = 0.0;
+
+    for tier in 0..c {
+        // A request is *served* by this tier iff the tier is deployed
+        // and the request has not been accepted earlier. Undeployed
+        // tiers are pure pass-throughs (the standalone baseline forces
+        // escalation past them via h=101 thresholds, and Table 1's
+        // tier-subset plans never route traffic to them) — but a
+        // request ACCEPTED at an undeployed tier is a plan bug.
+        if plan.tiers[tier].gpus == 0 {
+            if let Some(i) = (0..requests.len())
+                .find(|&i| routing.accepting_tier[i] as usize == tier)
+            {
+                bail!(
+                    "request {} accepted at undeployed tier {} ({})",
+                    i,
+                    tier,
+                    cascade[tier].name
+                );
+            }
+            continue;
+        }
+        let mut idx: Vec<usize> = (0..requests.len())
+            .filter(|&i| routing.accepting_tier[i] as usize >= tier)
+            .collect();
+        if idx.is_empty() {
+            continue;
+        }
+        // DES requires arrival-sorted traces.
+        idx.sort_by(|&a, &b| ready[a].partial_cmp(&ready[b]).unwrap());
+        let trace: Vec<SimRequest> = idx
+            .iter()
+            .map(|&i| SimRequest {
+                arrival: ready[i],
+                input_tokens: requests[i].input_tokens,
+                output_tokens: requests[i].output_tokens,
+            })
+            .collect();
+        let replicas = replicas_for(plan, tier, cascade, cluster);
+        if replicas.is_empty() {
+            bail!("tier {tier} has no replicas");
+        }
+        let outcome = simulate(&replicas, &trace);
+        for (k, &i) in idx.iter().enumerate() {
+            let done = outcome.completions[k];
+            ready[i] = done;
+            if routing.accepting_tier[i] as usize == tier {
+                e2e_done[i] = done;
+            }
+            makespan = makespan.max(done);
+        }
+        tier_outcomes[tier] = Some(outcome);
+    }
+
+    let e2e_latencies: Vec<f64> = (0..requests.len())
+        .map(|i| e2e_done[i] - requests[i].arrival)
+        .collect();
+    if e2e_latencies.iter().any(|l| !l.is_finite() || *l < 0.0) {
+        bail!("cascade simulation produced invalid latencies");
+    }
+
+    Ok(CascadeSimResult {
+        throughput_rps: requests.len() as f64 / makespan.max(1e-9),
+        e2e_latencies,
+        tier_outcomes,
+        quality: routing.quality,
+        makespan,
+        accepting_tier: routing.accepting_tier,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+    use crate::router::Thresholds;
+    use crate::sched::outer::{optimize, select_plan, OuterOptions};
+    use crate::workload::{generate, paper_trace};
+
+    fn make_plan(rate: f64, quality_req: f64) -> (CascadePlan, Vec<Request>, Judger) {
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let judger = Judger::new(1);
+        let reqs = generate(&paper_trace(2, rate), 600, 5);
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 40.0, 70.0, 95.0],
+            ..Default::default()
+        };
+        let sweep = optimize(&cascade, &cluster, &judger, &reqs, 32, &opts).unwrap();
+        let plan = select_plan(&sweep, quality_req).expect("plan");
+        (plan, reqs, judger)
+    }
+
+    #[test]
+    fn end_to_end_latencies_are_sane() {
+        let (plan, reqs, judger) = make_plan(3.0, 70.0);
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let out = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs).unwrap();
+        assert_eq!(out.e2e_latencies.len(), reqs.len());
+        assert!(out.p95() > 0.0 && out.p95() < 1e4);
+        assert!(out.quality >= 65.0, "quality {}", out.quality);
+        assert!(out.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn escalated_requests_take_longer() {
+        let (plan, reqs, judger) = make_plan(3.0, 70.0);
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let out = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs).unwrap();
+        // Mean latency of requests accepted at tier 0 vs deeper tiers.
+        let mut sums = [0.0f64; 3];
+        let mut counts = [0usize; 3];
+        for (i, &t) in out.accepting_tier.iter().enumerate() {
+            sums[t as usize] += out.e2e_latencies[i];
+            counts[t as usize] += 1;
+        }
+        if counts[0] > 10 && (counts[1] + counts[2]) > 10 {
+            let shallow = sums[0] / counts[0] as f64;
+            let deep = (sums[1] + sums[2]) / (counts[1] + counts[2]) as f64;
+            assert!(deep > shallow, "deep {deep} <= shallow {shallow}");
+        }
+    }
+
+    #[test]
+    fn undeployed_tier_with_traffic_fails_loudly() {
+        let (mut plan, reqs, judger) = make_plan(3.0, 70.0);
+        // Force traffic to the last tier while removing its deployment.
+        plan.thresholds = Thresholds(vec![101.0, 101.0]);
+        let last = plan.tiers.len() - 1;
+        plan.tiers[last].gpus = 0;
+        plan.tiers[last].strategy = None;
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let err = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn slo_scale_metric_behaves() {
+        let (plan, reqs, judger) = make_plan(3.0, 70.0);
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let out = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs).unwrap();
+        let unit = out.mean().max(1e-9);
+        let scale = out.min_slo_scale(unit, 0.95);
+        // Attainment at that scale must be >= 95%.
+        assert!(out.slo_attainment(unit * scale) >= 0.95 - 1e-9);
+        // And p95/mean should be a modest multiple.
+        assert!(scale > 0.5 && scale < 100.0, "scale {scale}");
+    }
+}

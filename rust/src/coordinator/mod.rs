@@ -1,0 +1,25 @@
+//! The serving coordinator — Cascadia's L3 runtime.
+//!
+//! Two execution paths share the same plan/routing logic:
+//!
+//! * [`cascade_sim`] — whole-cascade evaluation on the discrete-event
+//!   simulator: tier t+1's arrival process is exactly the completion
+//!   process of tier t's escalated requests. Generates every end-to-end
+//!   figure (7, 8, 9, 10, 11).
+//! * [`server`] — the real serving engine used by the e2e example:
+//!   worker threads per tier replica, a continuous [`batcher`], the
+//!   threshold router, and real model execution through
+//!   [`crate::runtime`] (PJRT). Python is never on this path.
+//! * [`monitor`] — the re-scheduling mechanism (§4.4): subsample
+//!   incoming workload statistics, detect shifts, trigger a new
+//!   bi-level schedule.
+
+pub mod batcher;
+pub mod cascade_sim;
+pub mod monitor;
+pub mod net;
+pub mod server;
+
+pub use cascade_sim::{simulate_cascade, CascadeSimResult};
+pub use monitor::{Monitor, MonitorConfig};
+pub use server::{CascadeServer, ServerConfig, ServerStats, TierBackend};

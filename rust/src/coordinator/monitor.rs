@@ -1,0 +1,156 @@
+//! Workload monitor and re-scheduling trigger (§4.4 "Re-scheduling to
+//! adapt to workload changes").
+//!
+//! The coordinator subsamples incoming requests (e.g. 100 requests
+//! every 10 minutes), estimates their [`TraceStats`], and when the
+//! relative shift against the stats the current plan was built for
+//! exceeds a threshold, signals that the bi-level scheduler should run
+//! again with the recent window.
+
+use crate::workload::{estimate_stats, Request, TraceStats};
+
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Number of recent requests kept in the sliding window.
+    pub window: usize,
+    /// Minimum window fill before shift detection activates.
+    pub min_samples: usize,
+    /// Relative shift (max over rate/lengths/complexity) that triggers
+    /// re-scheduling.
+    pub shift_threshold: f64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig { window: 100, min_samples: 60, shift_threshold: 0.3 }
+    }
+}
+
+/// Sliding-window workload monitor.
+#[derive(Debug)]
+pub struct Monitor {
+    pub config: MonitorConfig,
+    baseline: TraceStats,
+    window: Vec<Request>,
+    /// Number of re-schedules triggered (diagnostics).
+    pub reschedules: usize,
+}
+
+impl Monitor {
+    /// `baseline` is the stats the current plan was computed for.
+    pub fn new(config: MonitorConfig, baseline: TraceStats) -> Monitor {
+        Monitor { config, baseline, window: Vec::new(), reschedules: 0 }
+    }
+
+    /// Record an observed request. Returns `Some(new_stats)` when a
+    /// significant shift is detected — the caller should re-run the
+    /// scheduler with those stats and then call [`Monitor::rebased`].
+    pub fn observe(&mut self, req: Request) -> Option<TraceStats> {
+        self.window.push(req);
+        if self.window.len() > self.config.window {
+            let excess = self.window.len() - self.config.window;
+            self.window.drain(0..excess);
+        }
+        if self.window.len() < self.config.min_samples {
+            return None;
+        }
+        let current = estimate_stats(&self.window);
+        if current.shift_from(&self.baseline) > self.config.shift_threshold {
+            Some(current)
+        } else {
+            None
+        }
+    }
+
+    /// Acknowledge a re-schedule: the new plan was built for `stats`.
+    pub fn rebased(&mut self, stats: TraceStats) {
+        self.baseline = stats;
+        self.window.clear();
+        self.reschedules += 1;
+    }
+
+    pub fn baseline(&self) -> &TraceStats {
+        &self.baseline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, paper_trace};
+
+    fn baseline() -> TraceStats {
+        let reqs = generate(&paper_trace(2, 4.0), 500, 1);
+        estimate_stats(&reqs)
+    }
+
+    #[test]
+    fn stable_workload_never_triggers() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        for req in generate(&paper_trace(2, 4.0), 400, 2) {
+            assert!(m.observe(req).is_none(), "false positive reschedule");
+        }
+    }
+
+    #[test]
+    fn rate_surge_triggers() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        // Same mix, 3x the rate.
+        let mut triggered = false;
+        for req in generate(&paper_trace(2, 12.0), 400, 3) {
+            if m.observe(req).is_some() {
+                triggered = true;
+                break;
+            }
+        }
+        assert!(triggered, "rate surge not detected");
+    }
+
+    #[test]
+    fn complexity_shift_triggers() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        // Switch to the much harder trace 1 at the same rate.
+        let mut triggered = false;
+        for req in generate(&paper_trace(1, 4.0), 400, 4) {
+            if m.observe(req).is_some() {
+                triggered = true;
+                break;
+            }
+        }
+        assert!(triggered, "complexity shift not detected");
+    }
+
+    #[test]
+    fn rebased_resets_detection() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        let mut new_stats = None;
+        for req in generate(&paper_trace(1, 12.0), 400, 5) {
+            if let Some(s) = m.observe(req) {
+                new_stats = Some(s);
+                break;
+            }
+        }
+        let s = new_stats.expect("shift detected");
+        m.rebased(s);
+        assert_eq!(m.reschedules, 1);
+        // Continuing with the same (new) workload should not re-trigger.
+        for req in generate(&paper_trace(1, 12.0), 200, 6) {
+            assert!(m.observe(req).is_none());
+        }
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let base = baseline();
+        let cfg = MonitorConfig { window: 50, ..Default::default() };
+        let mut m = Monitor::new(cfg, base);
+        for req in generate(&paper_trace(2, 4.0), 300, 7) {
+            let _ = m.observe(req);
+        }
+        assert!(m.window.len() <= 50);
+    }
+}

@@ -1,0 +1,225 @@
+//! Minimal network front-end for the live cascade: a line-delimited
+//! JSON protocol over TCP (std-only; tokio is not in the vendored crate
+//! set, so this uses a small blocking accept loop + the serving
+//! engine's own worker threads).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": [60, 3, 5], "max_new": 8}
+//!   <- {"id": 1, "output": [8, 13, ...], "score": 100.0,
+//!       "tier": 0, "latency_ms": 41.2}
+//!
+//! Used by `cascadia serve` (see `examples/serve_tcp.rs`) and the
+//! integration test; demonstrates the coordinator as an actual network
+//! service rather than a library loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::server::{BackendFactory, ResponseJudger, TierBackend};
+use crate::util::json::Json;
+
+/// A single-connection-at-a-time TCP server over one backend chain.
+///
+/// Each request runs through the cascade *synchronously* per
+/// connection (the heavy concurrency story lives in
+/// [`crate::coordinator::server::CascadeServer`]; this front-end is
+/// about the wire protocol and lifecycle).
+pub struct TcpFrontend {
+    pub thresholds: Vec<f64>,
+    pub max_new_default: usize,
+}
+
+impl TcpFrontend {
+    pub fn new(thresholds: Vec<f64>, max_new_default: usize) -> TcpFrontend {
+        TcpFrontend { thresholds, max_new_default }
+    }
+
+    /// Serve on `addr` until `shutdown` is set. Backends are created
+    /// once per tier on this thread.
+    pub fn serve(
+        &self,
+        addr: &str,
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+        shutdown: Arc<AtomicBool>,
+    ) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let n_tiers = self.thresholds.len() + 1;
+        let mut backends: Vec<Box<dyn TierBackend>> = Vec::new();
+        for t in 0..n_tiers {
+            backends.push(factory(t)?);
+        }
+        while !shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if let Err(e) = self.handle(stream, &mut backends, judger, &shutdown) {
+                        eprintln!("connection error: {e}");
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(
+        &self,
+        stream: TcpStream,
+        backends: &mut [Box<dyn TierBackend>],
+        judger: &dyn ResponseJudger,
+        shutdown: &AtomicBool,
+    ) -> Result<()> {
+        stream.set_nonblocking(false)?;
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match self.one_request(&line, backends, judger) {
+                Ok(r) => r,
+                Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]),
+            };
+            writeln!(writer, "{reply}")?;
+        }
+        Ok(())
+    }
+
+    fn one_request(
+        &self,
+        line: &str,
+        backends: &mut [Box<dyn TierBackend>],
+        judger: &dyn ResponseJudger,
+    ) -> Result<Json> {
+        let req = Json::parse(line).context("request is not valid JSON")?;
+        let id = req.get("id").and_then(|v| v.as_i64().ok()).unwrap_or(0);
+        let prompt: Vec<i32> = req
+            .req("prompt")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as i32))
+            .collect::<Result<_>>()?;
+        if prompt.is_empty() {
+            anyhow::bail!("empty prompt");
+        }
+        let max_new = req
+            .get("max_new")
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(self.max_new_default);
+
+        let t0 = Instant::now();
+        let mut accepted = (0usize, Vec::new(), 0.0f64);
+        for (tier, backend) in backends.iter_mut().enumerate() {
+            let output = backend.generate(&prompt, max_new)?;
+            let score = judger.score(&prompt, &output);
+            let accept =
+                tier == self.thresholds.len() || score >= self.thresholds[tier];
+            accepted = (tier, output, score);
+            if accept {
+                break;
+            }
+        }
+        let (tier, output, score) = accepted;
+        Ok(Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            (
+                "output",
+                Json::arr(output.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("score", Json::num(score)),
+            ("tier", Json::num(tier as f64)),
+            (
+                "latency_ms",
+                Json::num(t0.elapsed().as_secs_f64() * 1e3),
+            ),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    struct EchoBackend(usize);
+
+    impl TierBackend for EchoBackend {
+        fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+            // Tier t answers "correctly" iff prompt[0] <= t.
+            let ok = prompt.first().copied().unwrap_or(0) <= self.0 as i32;
+            Ok(vec![if ok { 1 } else { 0 }; max_new.min(3)])
+        }
+    }
+
+    struct BitJudger;
+
+    impl ResponseJudger for BitJudger {
+        fn score(&self, _p: &[i32], o: &[i32]) -> f64 {
+            if o.first() == Some(&1) {
+                95.0
+            } else {
+                5.0
+            }
+        }
+    }
+
+    fn spawn_server(addr: &'static str) -> Arc<AtomicBool> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = shutdown.clone();
+        std::thread::spawn(move || {
+            let fe = TcpFrontend::new(vec![50.0], 4);
+            let factory = |t: usize| -> Result<Box<dyn TierBackend>> {
+                Ok(Box::new(EchoBackend(t)))
+            };
+            fe.serve(addr, &factory, &BitJudger, sd).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        shutdown
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_escalation() {
+        let addr = "127.0.0.1:39471";
+        let shutdown = spawn_server(addr);
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Easy request (difficulty 0) -> tier 0.
+        writeln!(stream, r#"{{"id": 1, "prompt": [0, 7], "max_new": 3}}"#).unwrap();
+        // Hard request (difficulty 1) -> escalates to tier 1.
+        writeln!(stream, r#"{{"id": 2, "prompt": [1, 7]}}"#).unwrap();
+        // Malformed -> error object, connection stays alive.
+        writeln!(stream, "not json").unwrap();
+        writeln!(stream, r#"{{"id": 3, "prompt": [0]}}"#).unwrap();
+
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut read_json = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap()
+        };
+        let r1 = read_json();
+        assert_eq!(r1.req("tier").unwrap().as_i64().unwrap(), 0);
+        assert!(r1.req("score").unwrap().as_f64().unwrap() >= 50.0);
+        let r2 = read_json();
+        assert_eq!(r2.req("tier").unwrap().as_i64().unwrap(), 1);
+        let r3 = read_json();
+        assert!(r3.get("error").is_some());
+        let r4 = read_json();
+        assert_eq!(r4.req("id").unwrap().as_i64().unwrap(), 3);
+
+        shutdown.store(true, Ordering::SeqCst);
+    }
+}

@@ -1,0 +1,534 @@
+//! The live serving engine: threshold-routed cascade serving over real
+//! model execution.
+//!
+//! Topology: each deployed tier runs `replicas` worker threads; each
+//! worker owns its own backend instance (PJRT executables are not
+//! `Send`, so backends are constructed *inside* the worker via the
+//! factory). A tier-level [`Batcher`] feeds workers FIFO under the
+//! KV-capacity bound; a coordinator thread scores finished responses
+//! with the live judger and either completes the request or escalates
+//! it to the next tier — the same routing workflow the scheduler
+//! optimized (§3.3), now on the real request path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::util::stats;
+
+/// Generates tokens for one tier. One instance per worker thread.
+pub trait TierBackend {
+    /// Greedy-decode up to `max_new` tokens after `prompt`.
+    fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>>;
+}
+
+/// Scores a (prompt, output) pair in [0, 100]. Shared across threads.
+pub trait ResponseJudger: Send + Sync {
+    fn score(&self, prompt: &[i32], output: &[i32]) -> f64;
+}
+
+/// Factory building a tier's backend inside its worker thread.
+pub type BackendFactory<'a> =
+    dyn Fn(usize) -> Result<Box<dyn TierBackend>> + Send + Sync + 'a;
+
+/// Server configuration: one entry per tier, in cascade order.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Worker replicas per tier (from the plan's strategy replica count).
+    pub replicas: Vec<usize>,
+    /// Max batch admitted per tier iteration.
+    pub max_batch: Vec<usize>,
+    /// Acceptance thresholds h_1..h_{C-1} (score >= h accepts).
+    pub thresholds: Vec<f64>,
+    /// Max tokens to generate per request.
+    pub max_new_tokens: usize,
+}
+
+/// One in-flight request.
+#[derive(Debug, Clone)]
+struct LiveRequest {
+    id: usize,
+    prompt: Vec<i32>,
+    submitted: Instant,
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub output: Vec<i32>,
+    pub score: f64,
+    pub accepting_tier: usize,
+    pub e2e_latency: Duration,
+    /// Time spent queued (all tiers) vs executing.
+    pub queue_latency: Duration,
+}
+
+/// Aggregate statistics of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub completions: Vec<Completion>,
+    pub wall_clock: Duration,
+    pub per_tier_processed: Vec<usize>,
+}
+
+impl ServerStats {
+    pub fn p95_latency(&self) -> f64 {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.e2e_latency.as_secs_f64()).collect();
+        stats::percentile(&v, 0.95)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.e2e_latency.as_secs_f64()).collect();
+        stats::mean(&v)
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completions.len() as f64 / self.wall_clock.as_secs_f64().max(1e-9)
+    }
+
+    pub fn mean_quality(&self) -> f64 {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.score).collect();
+        stats::mean(&v)
+    }
+
+    pub fn processing_ratios(&self) -> Vec<f64> {
+        let n = self.completions.len().max(1) as f64;
+        self.per_tier_processed.iter().map(|&c| c as f64 / n).collect()
+    }
+}
+
+/// Work distribution state for one tier.
+struct TierState {
+    batcher: Mutex<Batcher<LiveRequest>>,
+    wake: Condvar,
+    /// Set when no more work will ever arrive for this tier.
+    closed: AtomicBool,
+}
+
+impl TierState {
+    fn new(max_batch: usize) -> TierState {
+        TierState {
+            batcher: Mutex::new(Batcher::new(max_batch)),
+            wake: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, req: LiveRequest, t0: Instant) {
+        let mut b = self.batcher.lock().unwrap();
+        b.push(req, t0.elapsed().as_secs_f64());
+        drop(b);
+        self.wake.notify_one();
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+}
+
+/// The cascade serving engine.
+pub struct CascadeServer {
+    pub config: ServerConfig,
+}
+
+enum RouterMsg {
+    Done { tier: usize, req: LiveRequest, output: Vec<i32>, exec_seconds: f64 },
+    /// A request that was admitted by a worker that then died; the
+    /// router re-queues it on the same tier (surviving replicas pick
+    /// it up).
+    Failed { tier: usize, req: LiveRequest },
+    WorkerDead { tier: usize, err: String },
+}
+
+impl CascadeServer {
+    pub fn new(config: ServerConfig) -> CascadeServer {
+        assert_eq!(config.replicas.len(), config.max_batch.len());
+        assert_eq!(config.thresholds.len() + 1, config.replicas.len());
+        CascadeServer { config }
+    }
+
+    /// Serve a trace of (arrival_offset_seconds, prompt) pairs; blocks
+    /// until all requests complete and returns the statistics.
+    ///
+    /// `factory(tier)` is called once per worker thread, inside that
+    /// thread, to build its backend. `judger` scores responses on the
+    /// request path.
+    pub fn serve(
+        &self,
+        trace: &[(f64, Vec<i32>)],
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+    ) -> Result<ServerStats> {
+        let c = self.config.replicas.len();
+        let t0 = Instant::now();
+        let tiers: Vec<TierState> = self
+            .config
+            .max_batch
+            .iter()
+            .map(|&mb| TierState::new(mb.max(1)))
+            .collect();
+        let (tx, rx) = channel::<RouterMsg>();
+        let queue_time: Mutex<HashMap<usize, f64>> = Mutex::new(HashMap::new());
+
+        let stats = std::thread::scope(|scope| -> Result<ServerStats> {
+            // --- Workers ---
+            for tier in 0..c {
+                for _replica in 0..self.config.replicas[tier].max(1) {
+                    let tier_state = &tiers[tier];
+                    let tx = tx.clone();
+                    let max_new = self.config.max_new_tokens;
+                    scope.spawn(move || {
+                        let mut backend = match factory(tier) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                let _ = tx.send(RouterMsg::WorkerDead {
+                                    tier,
+                                    err: e.to_string(),
+                                });
+                                return;
+                            }
+                        };
+                        loop {
+                            // Wait for work or shutdown.
+                            let batch = {
+                                let mut b = tier_state.batcher.lock().unwrap();
+                                loop {
+                                    let admitted = b.admit();
+                                    if !admitted.is_empty() {
+                                        break admitted;
+                                    }
+                                    if tier_state.closed.load(Ordering::SeqCst) {
+                                        return;
+                                    }
+                                    b = tier_state.wake.wait(b).unwrap();
+                                }
+                            };
+                            let n = batch.len();
+                            let mut iter = batch.into_iter();
+                            while let Some(pending) = iter.next() {
+                                let started = Instant::now();
+                                let result = backend.generate(&pending.item.prompt, max_new);
+                                match result {
+                                    Ok(output) => {
+                                        let _ = tx.send(RouterMsg::Done {
+                                            tier,
+                                            req: pending.item,
+                                            output,
+                                            exec_seconds: started.elapsed().as_secs_f64(),
+                                        });
+                                    }
+                                    Err(e) => {
+                                        // Replica death: hand every
+                                        // admitted-but-unserved request
+                                        // back to the router, release
+                                        // batch capacity, and exit.
+                                        let _ = tx.send(RouterMsg::Failed {
+                                            tier,
+                                            req: pending.item,
+                                        });
+                                        for rest in iter.by_ref() {
+                                            let _ = tx.send(RouterMsg::Failed {
+                                                tier,
+                                                req: rest.item,
+                                            });
+                                        }
+                                        let _ = tx.send(RouterMsg::WorkerDead {
+                                            tier,
+                                            err: e.to_string(),
+                                        });
+                                        tier_state.batcher.lock().unwrap().complete(n);
+                                        tier_state.wake.notify_all();
+                                        return;
+                                    }
+                                }
+                            }
+                            tier_state.batcher.lock().unwrap().complete(n);
+                            tier_state.wake.notify_all();
+                        }
+                    });
+                }
+            }
+            drop(tx);
+
+            // --- Submitter (paced by arrival offsets) ---
+            let submit_tier = &tiers[0];
+            scope.spawn(move || {
+                for (i, (offset, prompt)) in trace.iter().enumerate() {
+                    let target = Duration::from_secs_f64(*offset);
+                    let elapsed = t0.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                    submit_tier.push(
+                        LiveRequest { id: i, prompt: prompt.clone(), submitted: Instant::now() },
+                        t0,
+                    );
+                }
+            });
+
+            // --- Router / coordinator ---
+            let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
+            let mut per_tier = vec![0usize; c];
+            let mut done = 0usize;
+            let mut worker_errors: Vec<String> = Vec::new();
+            let mut dead = vec![0usize; c];
+            while done < trace.len() {
+                let msg = match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break, // all workers gone
+                };
+                match msg {
+                    RouterMsg::WorkerDead { tier, err } => {
+                        // A replica died: record and keep serving with the
+                        // remaining replicas of that tier (failure
+                        // injection tests exercise this path).
+                        worker_errors.push(format!("tier {tier}: {err}"));
+                        dead[tier] += 1;
+                        if dead[tier] >= self.config.replicas[tier].max(1) {
+                            // Unblock every surviving worker before
+                            // returning, or thread::scope never joins.
+                            for t in &tiers {
+                                t.close();
+                            }
+                            anyhow::bail!(
+                                "all replicas of tier {tier} died: {worker_errors:?}"
+                            );
+                        }
+                        continue;
+                    }
+                    RouterMsg::Failed { tier, req } => {
+                        // Re-route to the same tier; a surviving replica
+                        // will serve it.
+                        tiers[tier].push(req, t0);
+                        continue;
+                    }
+                    RouterMsg::Done { tier, req, output, exec_seconds } => {
+                        per_tier[tier] += 1;
+                        let score = judger.score(&req.prompt, &output);
+                        let accept = tier == c - 1 || score >= self.config.thresholds[tier];
+                        if accept {
+                            let e2e = req.submitted.elapsed();
+                            let execd = {
+                                let mut qt = queue_time.lock().unwrap();
+                                qt.remove(&req.id).unwrap_or(0.0) + exec_seconds
+                            };
+                            completions.push(Completion {
+                                id: req.id,
+                                output,
+                                score,
+                                accepting_tier: tier,
+                                e2e_latency: e2e,
+                                queue_latency: Duration::from_secs_f64(
+                                    (e2e.as_secs_f64() - execd).max(0.0),
+                                ),
+                            });
+                            done += 1;
+                        } else {
+                            queue_time.lock().unwrap().entry(req.id).or_insert(0.0);
+                            *queue_time.lock().unwrap().get_mut(&req.id).unwrap() +=
+                                exec_seconds;
+                            tiers[tier + 1].push(req, t0);
+                        }
+                    }
+                }
+            }
+            for t in &tiers {
+                t.close();
+            }
+            if done < trace.len() {
+                anyhow::bail!(
+                    "served {done}/{} requests; worker errors: {:?}",
+                    trace.len(),
+                    worker_errors
+                );
+            }
+            Ok(ServerStats {
+                completions,
+                wall_clock: t0.elapsed(),
+                per_tier_processed: per_tier,
+            })
+        })?;
+
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulated backend: deterministic "generation" with configurable
+    /// per-tier delay; output quality encoded in first token.
+    struct FakeBackend {
+        tier: usize,
+        delay: Duration,
+    }
+
+    impl TierBackend for FakeBackend {
+        fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+            std::thread::sleep(self.delay);
+            // Tier t "answers correctly" iff prompt difficulty <= t.
+            let difficulty = prompt.first().copied().unwrap_or(0);
+            let ok = difficulty <= self.tier as i32;
+            Ok(vec![if ok { 1 } else { 0 }; max_new.min(4)])
+        }
+    }
+
+    struct FakeJudger;
+
+    impl ResponseJudger for FakeJudger {
+        fn score(&self, _prompt: &[i32], output: &[i32]) -> f64 {
+            if output.first() == Some(&1) {
+                90.0
+            } else {
+                10.0
+            }
+        }
+    }
+
+    fn config() -> ServerConfig {
+        ServerConfig {
+            replicas: vec![2, 1],
+            max_batch: vec![4, 2],
+            thresholds: vec![50.0],
+            max_new_tokens: 4,
+        }
+    }
+
+    fn factory(tier: usize) -> Result<Box<dyn TierBackend>> {
+        Ok(Box::new(FakeBackend { tier, delay: Duration::from_millis(2) }))
+    }
+
+    #[test]
+    fn serves_all_and_routes_by_difficulty() {
+        let server = CascadeServer::new(config());
+        // Difficulty 0 -> accepted at tier 0; difficulty 1 -> escalated.
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..20).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 20);
+        assert_eq!(stats.per_tier_processed[0], 20);
+        assert_eq!(stats.per_tier_processed[1], 10);
+        for c in &stats.completions {
+            let expect_tier = (trace[c.id].1[0]) as usize;
+            assert_eq!(c.accepting_tier, expect_tier, "req {}", c.id);
+            assert!(c.score >= 50.0 || c.accepting_tier == 1);
+        }
+        assert!(stats.throughput_rps() > 10.0);
+    }
+
+    #[test]
+    fn escalated_requests_have_higher_latency() {
+        let server = CascadeServer::new(config());
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..30).map(|i| (0.0, vec![(i % 2) as i32])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        let mean_of = |tier: usize| {
+            let v: Vec<f64> = stats
+                .completions
+                .iter()
+                .filter(|c| c.accepting_tier == tier)
+                .map(|c| c.e2e_latency.as_secs_f64())
+                .collect();
+            stats_mean(&v)
+        };
+        assert!(mean_of(1) > mean_of(0));
+    }
+
+    fn stats_mean(v: &[f64]) -> f64 {
+        crate::util::stats::mean(v)
+    }
+
+    #[test]
+    fn replica_death_degrades_but_survives() {
+        // Tier 0 has 2 replicas; one dies on first request. The other
+        // must still finish everything.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+        struct DyingBackend {
+            dies: bool,
+            inner: FakeBackend,
+        }
+        impl TierBackend for DyingBackend {
+            fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+                if self.dies {
+                    anyhow::bail!("simulated replica crash");
+                }
+                self.inner.generate(prompt, max_new)
+            }
+        }
+
+        let factory = |tier: usize| -> Result<Box<dyn TierBackend>> {
+            let idx = SPAWNED.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(DyingBackend {
+                // Exactly one tier-0 replica dies.
+                dies: tier == 0 && idx == 0,
+                inner: FakeBackend { tier, delay: Duration::from_millis(1) },
+            }))
+        };
+
+        let server = CascadeServer::new(ServerConfig {
+            replicas: vec![2, 1],
+            max_batch: vec![2, 2],
+            thresholds: vec![50.0],
+            max_new_tokens: 2,
+        });
+        let trace: Vec<(f64, Vec<i32>)> = (0..10).map(|_| (0.0, vec![0])).collect();
+        // The dying replica hands its admitted requests back to the
+        // router, which re-routes them to the surviving replica — every
+        // request must complete.
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 10);
+    }
+
+    #[test]
+    fn all_replicas_dead_fails_loudly() {
+        struct AlwaysDies;
+        impl TierBackend for AlwaysDies {
+            fn generate(&mut self, _p: &[i32], _m: usize) -> Result<Vec<i32>> {
+                anyhow::bail!("boom")
+            }
+        }
+        let server = CascadeServer::new(ServerConfig {
+            replicas: vec![1, 1],
+            max_batch: vec![2, 2],
+            thresholds: vec![50.0],
+            max_new_tokens: 2,
+        });
+        let factory = |_t: usize| -> Result<Box<dyn TierBackend>> { Ok(Box::new(AlwaysDies)) };
+        let trace: Vec<(f64, Vec<i32>)> = (0..4).map(|_| (0.0, vec![0])).collect();
+        let err = server.serve(&trace, &factory, &FakeJudger).unwrap_err();
+        assert!(err.to_string().contains("all replicas"), "{err}");
+    }
+
+    #[test]
+    fn queue_latency_reported() {
+        let server = CascadeServer::new(ServerConfig {
+            replicas: vec![1, 1],
+            max_batch: vec![1, 1],
+            thresholds: vec![50.0],
+            max_new_tokens: 2,
+        });
+        // Burst of easy requests through a single slow replica: most of
+        // their latency must be queueing.
+        let slow_factory = |tier: usize| -> Result<Box<dyn TierBackend>> {
+            Ok(Box::new(FakeBackend { tier, delay: Duration::from_millis(10) }))
+        };
+        let trace: Vec<(f64, Vec<i32>)> = (0..6).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &slow_factory, &FakeJudger).unwrap();
+        let max_queue = stats
+            .completions
+            .iter()
+            .map(|c| c.queue_latency.as_secs_f64())
+            .fold(0.0, f64::max);
+        assert!(max_queue > 0.02, "queueing should dominate: {max_queue}");
+    }
+}

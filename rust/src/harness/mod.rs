@@ -1,0 +1,184 @@
+//! Shared evaluation harness for the paper-figure binaries
+//! (`rust/bin/fig*.rs`, `table*.rs`): plan construction for all three
+//! systems, cascade simulation, and the standard experiment cases.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::baselines;
+use crate::cluster::ClusterSpec;
+use crate::coordinator::cascade_sim::{simulate_cascade, CascadeSimResult};
+use crate::judge::Judger;
+use crate::models::ModelSpec;
+use crate::sched::outer::{optimize, select_plan, OuterOptions, SweepResult};
+use crate::sched::plan::CascadePlan;
+use crate::workload::{generate, paper_trace, Request, TraceSpec};
+
+/// The (quality requirement, trace index) cases of the paper's case
+/// studies (Tables 1-2, Figures 10-11).
+pub const PAPER_CASES: [(f64, usize); 6] =
+    [(90.0, 1), (85.0, 1), (80.0, 1), (80.0, 2), (80.0, 3), (70.0, 3)];
+
+/// Default arrival rates per trace chosen so the 32-GPU cluster is
+/// meaningfully loaded: standalone DeepSeek-671B runs at ~90% of its
+/// modeled capacity (and 70B near ~90%), so its queueing
+/// tail explodes, while the cascade — which serves most requests at
+/// cheap tiers — keeps headroom. This is the operating regime of the
+/// paper's Figures 7-8.
+pub fn default_rate(trace_index: usize) -> f64 {
+    match trace_index {
+        1 => 64.0,
+        2 => 80.0,
+        _ => 126.0,
+    }
+}
+
+/// A fully-specified evaluation scenario.
+pub struct Scenario {
+    pub cascade: Vec<ModelSpec>,
+    pub cluster: ClusterSpec,
+    pub judger: Judger,
+    /// Planning trace (scheduler input).
+    pub plan_reqs: Vec<Request>,
+    /// Evaluation trace (fresh seed, same distribution).
+    pub eval_reqs: Vec<Request>,
+    pub spec: TraceSpec,
+}
+
+impl Scenario {
+    pub fn new(
+        cascade: Vec<ModelSpec>,
+        n_gpus: usize,
+        trace_index: usize,
+        rate: f64,
+        n_requests: usize,
+        seed: u64,
+    ) -> Scenario {
+        let spec = paper_trace(trace_index, rate);
+        Scenario {
+            cascade,
+            cluster: ClusterSpec::with_gpus(n_gpus),
+            judger: Judger::new(seed),
+            plan_reqs: generate(&spec, n_requests, seed.wrapping_add(1)),
+            eval_reqs: generate(&spec, n_requests, seed.wrapping_add(2)),
+            spec,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.cluster.total_gpus()
+    }
+
+    /// Run the full bi-level scheduler; returns the sweep and elapsed
+    /// seconds.
+    pub fn schedule(&self, opts: &OuterOptions) -> Result<(SweepResult, f64)> {
+        let t0 = Instant::now();
+        let sweep = optimize(
+            &self.cascade,
+            &self.cluster,
+            &self.judger,
+            &self.plan_reqs,
+            self.n_gpus(),
+            opts,
+        )?;
+        Ok((sweep, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Cascadia's plan for a quality requirement.
+    pub fn cascadia_plan(&self, quality_req: f64, opts: &OuterOptions) -> Result<CascadePlan> {
+        let (sweep, _) = self.schedule(opts)?;
+        select_plan(&sweep, quality_req)
+            .with_context(|| format!("no Cascadia plan meets quality {quality_req}"))
+    }
+
+    /// Stand-alone baseline: the paper compares against 671B for
+    /// quality >= 85 and the mid model below that (§4.1).
+    pub fn standalone_plan(&self, quality_req: f64) -> Result<CascadePlan> {
+        let idx = if quality_req >= 85.0 || self.cascade.len() == 2 {
+            self.cascade.len() - 1
+        } else {
+            self.cascade.len() - 2
+        };
+        baselines::standalone_plan(
+            idx,
+            &self.cascade,
+            &self.cluster,
+            &self.judger,
+            &self.plan_reqs,
+            self.n_gpus(),
+        )
+    }
+
+    pub fn cascade_serve_plan(&self, quality_req: f64) -> Result<CascadePlan> {
+        baselines::cascade_serve_plan(
+            &self.cascade,
+            &self.cluster,
+            &self.judger,
+            &self.plan_reqs,
+            self.n_gpus(),
+            quality_req,
+        )
+    }
+
+    /// Simulate a plan on the held-out evaluation trace.
+    pub fn evaluate(&self, plan: &CascadePlan) -> Result<CascadeSimResult> {
+        simulate_cascade(plan, &self.cascade, &self.cluster, &self.judger, &self.eval_reqs)
+    }
+}
+
+/// The paper's SLO unit: the system's average single-request processing
+/// latency (we use the cascade's lightly-loaded mean so all systems
+/// share one unit per scenario).
+pub fn slo_unit(scenario: &Scenario, plan: &CascadePlan) -> Result<f64> {
+    // Simulate a sparse trace (1/20 of the requests, stretched 20x) to
+    // approximate zero-queueing single-request latency.
+    let sparse: Vec<Request> = scenario
+        .eval_reqs
+        .iter()
+        .step_by(20)
+        .enumerate()
+        .map(|(i, r)| Request { arrival: i as f64 * 20.0 / scenario.spec.rate.max(0.1), ..*r })
+        .collect();
+    let out = simulate_cascade(plan, &scenario.cascade, &scenario.cluster,
+                               &scenario.judger, &sparse)?;
+    Ok(out.mean())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+
+    #[test]
+    fn scenario_builds_and_evaluates() {
+        let s = Scenario::new(deepseek_cascade(), 32, 2, 4.0, 300, 7);
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 50.0, 90.0],
+            ..Default::default()
+        };
+        let plan = s.cascadia_plan(75.0, &opts).unwrap();
+        let out = s.evaluate(&plan).unwrap();
+        assert_eq!(out.e2e_latencies.len(), 300);
+        assert!(out.quality >= 70.0);
+        let unit = slo_unit(&s, &plan).unwrap();
+        assert!(unit > 0.0 && unit < 100.0);
+    }
+
+    #[test]
+    fn three_systems_produce_plans() {
+        let s = Scenario::new(deepseek_cascade(), 32, 2, 4.0, 300, 7);
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 50.0, 90.0],
+            ..Default::default()
+        };
+        let a = s.cascadia_plan(80.0, &opts).unwrap();
+        let b = s.standalone_plan(80.0).unwrap();
+        let c = s.cascade_serve_plan(80.0).unwrap();
+        for p in [&a, &b, &c] {
+            assert_eq!(p.total_gpus(), 32);
+        }
+        // Stand-alone for q=80 should be the mid model.
+        assert_eq!(b.deployed().count(), 1);
+    }
+}

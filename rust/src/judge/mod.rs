@@ -1,0 +1,216 @@
+//! Response quality judger.
+//!
+//! The paper uses GPT-4o (LLM-as-a-Judge) to score each tier's response
+//! 0-100; thresholds on that score drive cascade routing. Here the
+//! judger is a calibrated synthetic model (DESIGN.md "Substitutions")
+//! with the *bimodal* structure real LLM-judge scores exhibit: a model
+//! either answers a request well (score ~ N(94, 5)) or fails it
+//! (score ~ N(35, 12)), and the success probability is
+//!
+//!   p_success = sigmoid(STEEPNESS * (capability - complexity))
+//!
+//! Capability is derived from the model's `quality_mean` anchor
+//! (Figure 1). Bimodality is what makes cascades efficient: a threshold
+//! between the two modes catches failures almost surely while passing
+//! successes, so high end-to-end quality is reachable with *light*
+//! escalation — the paper's Table 1 regime. The e2e example replaces
+//! this judger with a real one (task-rule correctness of the tiny
+//! tiers' actual output tokens).
+
+use crate::models::ModelSpec;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// How sharply success probability degrades past a model's capability.
+pub const STEEPNESS: f64 = 2.0;
+/// Mean/std of the success score mode.
+pub const SUCCESS_MEAN: f64 = 94.0;
+pub const SUCCESS_STD: f64 = 5.0;
+/// Mean/std of the failure score mode.
+pub const FAIL_MEAN: f64 = 35.0;
+pub const FAIL_STD: f64 = 12.0;
+
+/// Reference complexity at which a model's mean score equals its
+/// Figure-1 `quality_mean` anchor (roughly the evaluation workload's
+/// mean complexity).
+pub const X_REF: f64 = 0.45;
+
+/// Success probability that reproduces the anchor mean at `X_REF`.
+fn anchor_success_prob(quality_mean: f64) -> f64 {
+    ((quality_mean - FAIL_MEAN) / (SUCCESS_MEAN - FAIL_MEAN)).clamp(0.02, 0.98)
+}
+
+/// Map a model's Figure-1 quality anchor (0-100) to capability in the
+/// complexity space, such that
+/// `E[score | x = X_REF] == quality_mean`.
+pub fn capability(model: &ModelSpec) -> f64 {
+    let p = anchor_success_prob(model.quality_mean);
+    X_REF + (p / (1.0 - p)).ln() / STEEPNESS
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Probability that `model` answers a request of complexity `x` well.
+pub fn success_prob(model: &ModelSpec, x: f64) -> f64 {
+    sigmoid(STEEPNESS * (capability(model) - x))
+}
+
+/// Noise-free expected score of `model` on a request of complexity `x`.
+pub fn expected_score(model: &ModelSpec, x: f64) -> f64 {
+    let p = success_prob(model, x);
+    SUCCESS_MEAN * p + FAIL_MEAN * (1.0 - p)
+}
+
+/// The judger: scores responses; deterministic given its seed and the
+/// (request, tier) pair, so routing decisions are reproducible across
+/// simulation and serving runs.
+#[derive(Debug, Clone)]
+pub struct Judger {
+    seed: u64,
+}
+
+impl Judger {
+    pub fn new(seed: u64) -> Judger {
+        Judger { seed }
+    }
+
+    /// Score of `model`'s response to `req`, in [0, 100].
+    pub fn score(&self, model: &ModelSpec, req: &Request, tier_idx: usize) -> f64 {
+        // Per-(request, tier) deterministic stream.
+        let mut rng = Rng::new(
+            self.seed
+                ^ (req.id as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (tier_idx as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let p = success_prob(model, req.complexity);
+        let score = if rng.chance(p) {
+            rng.normal_ms(SUCCESS_MEAN, SUCCESS_STD)
+        } else {
+            rng.normal_ms(FAIL_MEAN, FAIL_STD)
+        };
+        score.clamp(0.0, 100.0)
+    }
+
+    /// Monte-Carlo accept probability of threshold `h` for `model` over
+    /// a set of requests (used by tests and diagnostics; the scheduler
+    /// routes the actual trace instead).
+    pub fn accept_prob(&self, model: &ModelSpec, reqs: &[Request], tier_idx: usize, h: f64) -> f64 {
+        if reqs.is_empty() {
+            return 1.0;
+        }
+        let n = reqs
+            .iter()
+            .filter(|r| self.score(model, r, tier_idx) >= h)
+            .count();
+        n as f64 / reqs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+    use crate::workload::{generate, paper_trace, Request};
+
+    fn reqs() -> Vec<Request> {
+        generate(&paper_trace(2, 4.0), 2000, 11)
+    }
+
+    #[test]
+    fn bigger_models_score_higher() {
+        let cascade = deepseek_cascade();
+        let reqs = reqs();
+        let j = Judger::new(0);
+        let mean = |m: &ModelSpec, t: usize| {
+            reqs.iter().map(|r| j.score(m, r, t)).sum::<f64>() / reqs.len() as f64
+        };
+        let m0 = mean(&cascade[0], 0);
+        let m1 = mean(&cascade[1], 1);
+        let m2 = mean(&cascade[2], 2);
+        assert!(m0 < m1 && m1 < m2, "{m0} {m1} {m2}");
+    }
+
+    #[test]
+    fn harder_requests_score_lower() {
+        let m = &deepseek_cascade()[0];
+        let easy = expected_score(m, 0.1);
+        let hard = expected_score(m, 0.9);
+        assert!(easy > hard + 15.0, "easy {easy} hard {hard}");
+    }
+
+    #[test]
+    fn scores_bounded_and_bimodal() {
+        let j = Judger::new(3);
+        let cascade = deepseek_cascade();
+        let mut mid = 0usize;
+        let mut total = 0usize;
+        for r in reqs().iter().take(500) {
+            for (t, m) in cascade.iter().enumerate() {
+                let s = j.score(m, r, t);
+                assert!((0.0..=100.0).contains(&s));
+                total += 1;
+                if (62.0..80.0).contains(&s) {
+                    mid += 1;
+                }
+            }
+        }
+        // The valley between the modes is sparsely populated.
+        assert!(
+            (mid as f64) < 0.08 * total as f64,
+            "too many mid scores: {mid}/{total}"
+        );
+    }
+
+    #[test]
+    fn scoring_is_deterministic() {
+        let j = Judger::new(5);
+        let m = &deepseek_cascade()[1];
+        let reqs = reqs();
+        let a: Vec<f64> = reqs.iter().take(50).map(|r| j.score(m, r, 1)).collect();
+        let b: Vec<f64> = reqs.iter().take(50).map(|r| j.score(m, r, 1)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn accept_prob_monotone_in_threshold() {
+        let j = Judger::new(7);
+        let m = &deepseek_cascade()[0];
+        let reqs = reqs();
+        let mut prev = 1.0;
+        for h in [0.0, 25.0, 50.0, 75.0, 100.1] {
+            let p = j.accept_prob(m, &reqs, 0, h);
+            assert!(p <= prev + 1e-12, "h {h}: {p} > {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn a_threshold_separates_the_modes() {
+        // h = 65 should accept nearly all successes and reject nearly
+        // all failures: accept_prob ~ mean success_prob.
+        let j = Judger::new(9);
+        let m = &deepseek_cascade()[1];
+        let reqs = reqs();
+        let accept = j.accept_prob(m, &reqs, 1, 65.0);
+        let p_succ = reqs.iter().map(|r| success_prob(m, r.complexity)).sum::<f64>()
+            / reqs.len() as f64;
+        assert!((accept - p_succ).abs() < 0.06, "accept {accept} vs p {p_succ}");
+    }
+
+    #[test]
+    fn figure1_anchors_recovered() {
+        let j = Judger::new(9);
+        let reqs = reqs();
+        for (t, m) in deepseek_cascade().iter().enumerate() {
+            let mean = reqs.iter().map(|r| j.score(m, r, t)).sum::<f64>() / reqs.len() as f64;
+            assert!(
+                (mean - m.quality_mean).abs() < 15.0,
+                "{}: mean {mean} anchor {}",
+                m.name,
+                m.quality_mean
+            );
+        }
+    }
+}

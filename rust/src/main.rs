@@ -1,0 +1,227 @@
+//! Cascadia launcher.
+//!
+//! Subcommands:
+//!   schedule   run the bi-level scheduler on a config, print the plan
+//!   sweep      print the full Pareto front for a config
+//!   simulate   schedule + simulate on a held-out trace, print metrics
+//!   baselines  compare the three systems on one scenario
+//!   trace      generate a workload trace CSV
+//!
+//! `--config path.json` loads an ExperimentConfig; all fields also have
+//! CLI overrides (--cascade, --gpus, --trace, --rate, --quality, ...).
+//! Live serving of the real tiny-tier cascade lives in
+//! `examples/e2e_serving.rs` (requires `make artifacts`).
+
+use anyhow::{bail, Context, Result};
+use cascadia::config::ExperimentConfig;
+use cascadia::harness::Scenario;
+use cascadia::report::{fmt_secs, Table};
+use cascadia::sched::outer::select_plan;
+use cascadia::util::cli::Args;
+use cascadia::workload::generate;
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get("cascade") {
+        cfg.cascade_name = v.to_string();
+    }
+    if let Some(v) = args.get("gpus") {
+        cfg.n_gpus = v.parse().context("--gpus")?;
+    }
+    if let Some(v) = args.get("trace") {
+        cfg.trace_index = v.parse().context("--trace")?;
+    }
+    if let Some(v) = args.get("rate") {
+        cfg.rate = v.parse().context("--rate")?;
+    }
+    if let Some(v) = args.get("quality") {
+        cfg.quality_requirement = v.parse().context("--quality")?;
+    }
+    if let Some(v) = args.get("n") {
+        cfg.n_requests = v.parse().context("--n")?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn scenario_of(cfg: &ExperimentConfig) -> Scenario {
+    Scenario::new(
+        cfg.cascade(),
+        cfg.n_gpus,
+        cfg.trace_index,
+        cfg.rate,
+        cfg.n_requests,
+        cfg.seed,
+    )
+}
+
+fn cmd_schedule(cfg: &ExperimentConfig) -> Result<()> {
+    let scenario = scenario_of(cfg);
+    let opts = cfg.outer_options();
+    let (sweep, secs) = scenario.schedule(&opts)?;
+    let plan = select_plan(&sweep, cfg.quality_requirement)
+        .with_context(|| format!("no plan meets quality {}", cfg.quality_requirement))?;
+    println!(
+        "scheduled in {secs:.2}s ({} candidates, {} Pareto-optimal)",
+        sweep.explored.len(),
+        sweep.pareto.len()
+    );
+    println!("{}", plan.summary());
+    println!("{}", plan.to_json());
+    Ok(())
+}
+
+fn cmd_sweep(cfg: &ExperimentConfig) -> Result<()> {
+    let scenario = scenario_of(cfg);
+    let opts = cfg.outer_options();
+    let (sweep, secs) = scenario.schedule(&opts)?;
+    let mut t = Table::new(
+        &format!(
+            "Pareto front ({secs:.2}s, utopia L={:.2}s Q={:.1})",
+            sweep.utopia.0, sweep.utopia.1
+        ),
+        &["latency(s)", "quality", "thresholds", "allocation"],
+    );
+    for p in &sweep.pareto {
+        t.row(vec![
+            format!("{:.3}", p.latency),
+            format!("{:.2}", p.quality),
+            format!("{:?}", p.plan.thresholds.0),
+            format!("{:?}", p.plan.tiers.iter().map(|x| x.gpus).collect::<Vec<_>>()),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_simulate(cfg: &ExperimentConfig) -> Result<()> {
+    let scenario = scenario_of(cfg);
+    let opts = cfg.outer_options();
+    let plan = scenario.cascadia_plan(cfg.quality_requirement, &opts)?;
+    println!("plan: {}", plan.summary());
+    let sim = scenario.evaluate(&plan)?;
+    let mut t = Table::new("simulation (held-out trace)", &["metric", "value"]);
+    t.row(vec!["requests".into(), sim.e2e_latencies.len().to_string()]);
+    t.row(vec!["mean latency".into(), fmt_secs(sim.mean())]);
+    t.row(vec!["p95 latency".into(), fmt_secs(sim.p95())]);
+    t.row(vec!["throughput".into(), format!("{:.2} req/s", sim.throughput_rps)]);
+    t.row(vec!["quality".into(), format!("{:.1}", sim.quality)]);
+    for (i, r) in plan.tiers.iter().enumerate() {
+        t.row(vec![
+            format!("tier {} ({})", i + 1, r.model_name),
+            format!(
+                "f={} {}  p={:.0}%",
+                r.gpus,
+                r.strategy.as_ref().map(|s| s.label()).unwrap_or_else(|| "-".into()),
+                r.processing_ratio * 100.0
+            ),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(cfg: &ExperimentConfig, out: &str) -> Result<()> {
+    let reqs = generate(&cfg.trace_spec(), cfg.n_requests, cfg.seed);
+    let mut t = Table::new("", &["id", "arrival", "input_tokens", "output_tokens", "complexity"]);
+    for r in &reqs {
+        t.row(vec![
+            r.id.to_string(),
+            format!("{:.3}", r.arrival),
+            r.input_tokens.to_string(),
+            r.output_tokens.to_string(),
+            format!("{:.3}", r.complexity),
+        ]);
+    }
+    t.write_csv(out)?;
+    println!("wrote {} requests to {out}", reqs.len());
+    Ok(())
+}
+
+fn cmd_baselines(cfg: &ExperimentConfig) -> Result<()> {
+    let scenario = scenario_of(cfg);
+    let opts = cfg.outer_options();
+    let mut t = Table::new(
+        "three systems on one scenario",
+        &["system", "p95(s)", "throughput", "quality"],
+    );
+    let plans: Vec<(&str, anyhow::Result<_>)> = vec![
+        ("cascadia", scenario.cascadia_plan(cfg.quality_requirement, &opts)),
+        ("standalone", scenario.standalone_plan(cfg.quality_requirement)),
+        ("cascadeserve", scenario.cascade_serve_plan(cfg.quality_requirement)),
+    ];
+    for (name, plan) in plans {
+        match plan.and_then(|p| scenario.evaluate(&p)) {
+            Ok(sim) => t.row(vec![
+                name.into(),
+                format!("{:.2}", sim.p95()),
+                format!("{:.2}", sim.throughput_rps),
+                format!("{:.1}", sim.quality),
+            ]),
+            Err(e) => t.row(vec![name.into(), "-".into(), "-".into(), format!("({e})")]),
+        };
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Serve the real tiny-tier cascade over TCP (requires artifacts).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let addr = args.str_or("addr", "127.0.0.1:8741");
+    let h1 = args.f64_or("h1", 80.0)?;
+    let h2 = args.f64_or("h2", 80.0)?;
+    let dir = std::env::var("CASCADIA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let manifest = cascadia::runtime::Manifest::load(&dir)
+        .context("artifacts missing — run `make artifacts` first")?;
+    let judger = cascadia::runtime::TaskJudger::new(manifest.task.clone(), 8);
+    let factory = cascadia::runtime::pjrt_factory(dir);
+    println!(
+        "serving {} tiers on {addr} (thresholds {h1},{h2}); protocol: one JSON per line",
+        manifest.tiers.len()
+    );
+    let fe = cascadia::coordinator::net::TcpFrontend::new(vec![h1, h2], 8);
+    fe.serve(&addr, &factory, &judger, Arc::new(AtomicBool::new(false)))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "schedule" => cmd_schedule(&load_config(&args)?),
+        "sweep" => cmd_sweep(&load_config(&args)?),
+        "simulate" => cmd_simulate(&load_config(&args)?),
+        "baselines" => cmd_baselines(&load_config(&args)?),
+        "trace" => cmd_trace(&load_config(&args)?, &args.str_or("out", "results/trace.csv")),
+        "serve" => cmd_serve(&args),
+        "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cascadia <schedule|sweep|simulate|baselines|trace> \\\n\
+         \x20   [--config cfg.json] [--cascade deepseek|llama] [--gpus N] \\\n\
+         \x20   [--trace 1..3] [--rate R] [--quality Q] [--n N] [--seed S]\n\n\
+         Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
+    );
+}

@@ -1,0 +1,84 @@
+//! Evaluation metrics: SLO attainment curves and the paper's headline
+//! "minimum SLO scale at 95% attainment" (§4.1), plus summary rows
+//! shared by the figure harnesses.
+
+use crate::util::stats;
+
+/// An SLO attainment curve: attainment at each SLO scale multiple.
+#[derive(Debug, Clone)]
+pub struct SloCurve {
+    /// The unit SLO in seconds (empirical single-request latency).
+    pub unit: f64,
+    pub scales: Vec<f64>,
+    pub attainment: Vec<f64>,
+}
+
+impl SloCurve {
+    /// Build from raw latencies; `unit` is the SLO base (the paper uses
+    /// the system's average single-request processing latency).
+    pub fn from_latencies(latencies: &[f64], unit: f64, scales: &[f64]) -> SloCurve {
+        let attainment = scales
+            .iter()
+            .map(|s| stats::fraction_within(latencies, unit * s))
+            .collect();
+        SloCurve { unit, scales: scales.to_vec(), attainment }
+    }
+
+    /// Smallest listed scale reaching `target` attainment (None if the
+    /// curve never gets there).
+    pub fn min_scale_reaching(&self, target: f64) -> Option<f64> {
+        self.scales
+            .iter()
+            .zip(&self.attainment)
+            .find(|(_, &a)| a >= target)
+            .map(|(&s, _)| s)
+    }
+
+    /// Exact scale where attainment hits `target` (by quantile), not
+    /// limited to the listed grid.
+    pub fn exact_scale(latencies: &[f64], unit: f64, target: f64) -> f64 {
+        stats::percentile(latencies, target) / unit
+    }
+}
+
+/// The standard SLO-scale grid used across figures.
+pub fn default_scales() -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut s = 0.25;
+    while s <= 64.0 {
+        v.push(s);
+        s *= 1.25;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_is_monotone() {
+        let lats = vec![1.0, 2.0, 3.0, 4.0, 10.0];
+        let curve = SloCurve::from_latencies(&lats, 1.0, &default_scales());
+        for w in curve.attainment.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn min_scale_reaching_target() {
+        let lats = vec![1.0, 1.0, 1.0, 1.0, 8.0];
+        let curve = SloCurve::from_latencies(&lats, 1.0, &[1.0, 2.0, 4.0, 8.0, 16.0]);
+        // 80% within scale 1; 95% needs the 8.0 outlier -> scale 8.
+        assert_eq!(curve.min_scale_reaching(0.8), Some(1.0));
+        assert_eq!(curve.min_scale_reaching(0.95), Some(8.0));
+        assert_eq!(curve.min_scale_reaching(1.01), None);
+    }
+
+    #[test]
+    fn exact_scale_matches_quantile() {
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = SloCurve::exact_scale(&lats, 2.0, 0.95);
+        assert!((s - 95.05 / 2.0).abs() < 0.5, "{s}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Mixed-integer linear programming, from scratch.
+//!
+//! The inner level of Cascadia's bi-level scheduler (§3.2) is a MILP:
+//! binary assignment variables `x_{i,f}` select one GPU allocation per
+//! model type, a budget equality ties them to the cluster size, and a
+//! continuous `L` upper-bounds every selected latency. No LP/MILP
+//! library exists in the offline crate set, so this module implements
+//! the substrate:
+//!
+//! * [`simplex`] — two-phase dense-tableau simplex with Bland's rule,
+//!   supporting ≤ / ≥ / = rows and minimize/maximize;
+//! * [`solver`] — branch-and-bound over binary variables with
+//!   best-first node selection and LP-bound pruning.
+//!
+//! The specific §3.2 structure also admits an exact dynamic-programming
+//! solution ([`crate::sched::inner`] uses it as a cross-check); property
+//! tests assert the two agree, which doubles as a correctness proof of
+//! this solver on that family.
+
+pub mod simplex;
+pub mod solver;
+
+pub use simplex::{LpError, LpProblem, LpSolution, Rel};
+pub use solver::{MilpProblem, MilpSolution};

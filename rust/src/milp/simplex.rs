@@ -1,0 +1,414 @@
+//! Two-phase dense-tableau simplex.
+//!
+//! Solves `min/max c·x` subject to `A x {<=,>=,=} b`, `x >= 0`, via the
+//! textbook two-phase method: phase 1 minimizes the sum of artificial
+//! variables to find a feasible basis, phase 2 optimizes the real
+//! objective. Entering variable uses Dantzig's rule with a Bland's-rule
+//! fallback after a stall budget, which guarantees termination.
+//!
+//! Scale target: the scheduler's LPs are a few hundred variables/rows;
+//! a dense tableau is simple and fast at that size.
+
+use thiserror::Error;
+
+/// Constraint relation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rel {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// Optimization sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Minimize,
+    Maximize,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum LpError {
+    #[error("LP is infeasible (phase-1 objective {0} > 0)")]
+    Infeasible(f64),
+    #[error("LP is unbounded")]
+    Unbounded,
+    #[error("simplex iteration limit hit")]
+    IterationLimit,
+}
+
+/// An LP in natural form: variables are implicitly `>= 0`.
+#[derive(Debug, Clone)]
+pub struct LpProblem {
+    pub n: usize,
+    pub objective: Vec<f64>,
+    pub sense: Sense,
+    rows: Vec<(Vec<f64>, Rel, f64)>,
+}
+
+/// Solution: primal values and objective value (in the user's sense).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub value: f64,
+}
+
+const EPS: f64 = 1e-9;
+const MAX_ITERS: usize = 20_000;
+
+impl LpProblem {
+    pub fn new(n: usize, objective: Vec<f64>, sense: Sense) -> LpProblem {
+        assert_eq!(objective.len(), n);
+        LpProblem { n, objective, sense, rows: Vec::new() }
+    }
+
+    /// Add a constraint `coeffs . x (rel) rhs`.
+    pub fn constrain(&mut self, coeffs: Vec<f64>, rel: Rel, rhs: f64) {
+        assert_eq!(coeffs.len(), self.n);
+        self.rows.push((coeffs, rel, rhs));
+    }
+
+    /// Convenience: bound a single variable (`x_i <= hi`, `x_i >= lo`).
+    pub fn bound(&mut self, i: usize, lo: Option<f64>, hi: Option<f64>) {
+        if let Some(lo) = lo {
+            if lo > 0.0 {
+                let mut c = vec![0.0; self.n];
+                c[i] = 1.0;
+                self.constrain(c, Rel::Ge, lo);
+            }
+        }
+        if let Some(hi) = hi {
+            let mut c = vec![0.0; self.n];
+            c[i] = 1.0;
+            self.constrain(c, Rel::Le, hi);
+        }
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        // Internally minimize; flip sign for Maximize.
+        let obj: Vec<f64> = match self.sense {
+            Sense::Minimize => self.objective.clone(),
+            Sense::Maximize => self.objective.iter().map(|c| -c).collect(),
+        };
+
+        let m = self.rows.len();
+        // Normalize rows to rhs >= 0.
+        let mut rows: Vec<(Vec<f64>, Rel, f64)> = self.rows.clone();
+        for (coeffs, rel, rhs) in rows.iter_mut() {
+            if *rhs < 0.0 {
+                for c in coeffs.iter_mut() {
+                    *c = -*c;
+                }
+                *rhs = -*rhs;
+                *rel = match *rel {
+                    Rel::Le => Rel::Ge,
+                    Rel::Ge => Rel::Le,
+                    Rel::Eq => Rel::Eq,
+                };
+            }
+        }
+
+        // Column layout: [structural | slacks/surplus | artificials | rhs]
+        let n_slack = rows
+            .iter()
+            .filter(|(_, rel, _)| !matches!(rel, Rel::Eq))
+            .count();
+        let n_art = rows
+            .iter()
+            .filter(|(_, rel, _)| matches!(rel, Rel::Ge | Rel::Eq))
+            .count();
+        let total = self.n + n_slack + n_art;
+        let rhs_col = total;
+
+        let mut t = vec![vec![0.0f64; total + 1]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut slack_idx = self.n;
+        let mut art_idx = self.n + n_slack;
+        let mut art_cols = Vec::new();
+
+        for (r, (coeffs, rel, rhs)) in rows.iter().enumerate() {
+            t[r][..self.n].copy_from_slice(coeffs);
+            t[r][rhs_col] = *rhs;
+            match rel {
+                Rel::Le => {
+                    t[r][slack_idx] = 1.0;
+                    basis[r] = slack_idx;
+                    slack_idx += 1;
+                }
+                Rel::Ge => {
+                    t[r][slack_idx] = -1.0;
+                    slack_idx += 1;
+                    t[r][art_idx] = 1.0;
+                    basis[r] = art_idx;
+                    art_cols.push(art_idx);
+                    art_idx += 1;
+                }
+                Rel::Eq => {
+                    t[r][art_idx] = 1.0;
+                    basis[r] = art_idx;
+                    art_cols.push(art_idx);
+                    art_idx += 1;
+                }
+            }
+        }
+
+        // ---- Phase 1 ----
+        if n_art > 0 {
+            let mut phase1 = vec![0.0; total];
+            for &c in &art_cols {
+                phase1[c] = 1.0;
+            }
+            let v = run_simplex(&mut t, &mut basis, &phase1, rhs_col)?;
+            if v > 1e-6 {
+                return Err(LpError::Infeasible(v));
+            }
+            // Drive any remaining artificial out of the basis.
+            for r in 0..m {
+                if art_cols.contains(&basis[r]) {
+                    // Pivot on any non-artificial column with nonzero coeff.
+                    if let Some(c) = (0..self.n + n_slack)
+                        .find(|&c| t[r][c].abs() > EPS)
+                    {
+                        pivot(&mut t, &mut basis, r, c, rhs_col);
+                    }
+                    // If none exists the row is all-zero (redundant); the
+                    // artificial stays basic at value 0, which is harmless.
+                }
+            }
+            // Freeze artificial columns at zero for phase 2.
+            for r in 0..m {
+                for &c in &art_cols {
+                    if basis[r] != c {
+                        t[r][c] = 0.0;
+                    }
+                }
+            }
+        }
+
+        // ---- Phase 2 ----
+        let mut full_obj = vec![0.0; total];
+        full_obj[..self.n].copy_from_slice(&obj);
+        // Artificials must not re-enter: give them a prohibitive cost.
+        for &c in &art_cols {
+            full_obj[c] = 1e12;
+        }
+        let v = run_simplex(&mut t, &mut basis, &full_obj, rhs_col)?;
+
+        let mut x = vec![0.0; self.n];
+        for (r, &b) in basis.iter().enumerate() {
+            if b < self.n {
+                x[b] = t[r][rhs_col];
+            }
+        }
+        let value = match self.sense {
+            Sense::Minimize => v,
+            Sense::Maximize => -v,
+        };
+        Ok(LpSolution { x, value })
+    }
+}
+
+/// Optimize `obj` over the current tableau; returns the objective value.
+///
+/// Reduced costs are kept in an incrementally-updated objective row
+/// (recomputing c_j - c_B·B⁻¹A_j from scratch each iteration is O(m·n)
+/// and dominated solver time before the perf pass — EXPERIMENTS.md
+/// §Perf).
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &[f64],
+    rhs_col: usize,
+) -> Result<f64, LpError> {
+    let m = t.len();
+    let total = obj.len();
+    let mut stall = 0usize;
+
+    // Initial reduced-cost row (and negative objective value in the
+    // rhs slot): z_j = c_j - c_B . B^-1 A_j.
+    let mut zrow = vec![0.0f64; rhs_col + 1];
+    for j in 0..=rhs_col {
+        let mut z = 0.0;
+        for r in 0..m {
+            z += obj[basis[r]] * t[r][j];
+        }
+        let c = if j < total { obj[j] } else { 0.0 };
+        zrow[j] = c - z;
+    }
+
+    for _iter in 0..MAX_ITERS {
+        // Entering column: Dantzig (most negative), Bland after stalls.
+        let entering = if stall < 64 {
+            let mut best = None;
+            let mut best_val = -1e-9;
+            for (j, &rc) in zrow[..total].iter().enumerate() {
+                if rc < best_val {
+                    best_val = rc;
+                    best = Some(j);
+                }
+            }
+            best
+        } else {
+            zrow[..total].iter().position(|&rc| rc < -1e-9)
+        };
+        let Some(e) = entering else {
+            // Optimal: zrow's rhs slot carries -objective.
+            return Ok(-zrow[rhs_col]);
+        };
+
+        // Ratio test (Bland tie-break on basis index for determinism).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for r in 0..m {
+            if t[r][e] > EPS {
+                let ratio = t[r][rhs_col] / t[r][e];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.is_some_and(|l| basis[r] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return Err(LpError::Unbounded);
+        };
+        if best_ratio < EPS {
+            stall += 1;
+        } else {
+            stall = 0;
+        }
+        pivot(t, basis, l, e, rhs_col);
+        // Update the reduced-cost row with the (normalized) pivot row.
+        let f = zrow[e];
+        if f.abs() > 0.0 {
+            for j in 0..=rhs_col {
+                zrow[j] -= f * t[l][j];
+            }
+        }
+        // Numerical hygiene: the entering column is now basic.
+        zrow[e] = 0.0;
+    }
+    Err(LpError::IterationLimit)
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, rhs_col: usize) {
+    let m = t.len();
+    let p = t[row][col];
+    debug_assert!(p.abs() > EPS);
+    for j in 0..=rhs_col {
+        t[row][j] /= p;
+    }
+    for r in 0..m {
+        if r != row && t[r][col].abs() > EPS {
+            let f = t[r][col];
+            for j in 0..=rhs_col {
+                t[r][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn textbook_maximization() {
+        // max 3x + 5y, x <= 4, 2y <= 12, 3x + 2y <= 18 -> (2, 6), 36.
+        let mut lp = LpProblem::new(2, vec![3.0, 5.0], Sense::Maximize);
+        lp.constrain(vec![1.0, 0.0], Rel::Le, 4.0);
+        lp.constrain(vec![0.0, 2.0], Rel::Le, 12.0);
+        lp.constrain(vec![3.0, 2.0], Rel::Le, 18.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.value, 36.0);
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+    }
+
+    #[test]
+    fn minimization_with_ge() {
+        // min 2x + 3y, x + y >= 4, x >= 1 -> (4, 0) value 8.
+        let mut lp = LpProblem::new(2, vec![2.0, 3.0], Sense::Minimize);
+        lp.constrain(vec![1.0, 1.0], Rel::Ge, 4.0);
+        lp.constrain(vec![1.0, 0.0], Rel::Ge, 1.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.value, 8.0);
+        assert_close(s.x[0], 4.0);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y s.t. x + 2y = 6, x - y = 0 -> x = y = 2, value 4.
+        let mut lp = LpProblem::new(2, vec![1.0, 1.0], Sense::Minimize);
+        lp.constrain(vec![1.0, 2.0], Rel::Eq, 6.0);
+        lp.constrain(vec![1.0, -1.0], Rel::Eq, 0.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 2.0);
+        assert_close(s.value, 4.0);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x >= 5 and x <= 2.
+        let mut lp = LpProblem::new(1, vec![1.0], Sense::Minimize);
+        lp.constrain(vec![1.0], Rel::Ge, 5.0);
+        lp.constrain(vec![1.0], Rel::Le, 2.0);
+        assert!(matches!(lp.solve(), Err(LpError::Infeasible(_))));
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // max x with only x >= 1.
+        let mut lp = LpProblem::new(1, vec![1.0], Sense::Maximize);
+        lp.constrain(vec![1.0], Rel::Ge, 1.0);
+        assert_eq!(lp.solve(), Err(LpError::Unbounded));
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y <= -2 (i.e. y >= x + 2), min y with x >= 0 -> y = 2.
+        let mut lp = LpProblem::new(2, vec![0.0, 1.0], Sense::Minimize);
+        lp.constrain(vec![1.0, -1.0], Rel::Le, -2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.value, 2.0);
+    }
+
+    #[test]
+    fn bound_helper() {
+        // max x + y with x <= 3, y <= 1.5 via bound().
+        let mut lp = LpProblem::new(2, vec![1.0, 1.0], Sense::Maximize);
+        lp.bound(0, None, Some(3.0));
+        lp.bound(1, None, Some(1.5));
+        let s = lp.solve().unwrap();
+        assert_close(s.value, 4.5);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Classic degenerate example; must not cycle.
+        let mut lp = LpProblem::new(4, vec![-0.75, 150.0, -0.02, 6.0], Sense::Minimize);
+        lp.constrain(vec![0.25, -60.0, -0.04, 9.0], Rel::Le, 0.0);
+        lp.constrain(vec![0.5, -90.0, -0.02, 3.0], Rel::Le, 0.0);
+        lp.constrain(vec![0.0, 0.0, 1.0, 0.0], Rel::Le, 1.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.value, -0.05);
+    }
+
+    #[test]
+    fn redundant_equalities_ok() {
+        // x + y = 2 stated twice.
+        let mut lp = LpProblem::new(2, vec![1.0, 2.0], Sense::Minimize);
+        lp.constrain(vec![1.0, 1.0], Rel::Eq, 2.0);
+        lp.constrain(vec![1.0, 1.0], Rel::Eq, 2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.value, 2.0); // all weight on x
+    }
+}

@@ -1,0 +1,331 @@
+//! Branch-and-bound MILP solver over the simplex LP relaxation.
+//!
+//! Variables are continuous or binary. Nodes are explored best-first
+//! (lowest LP bound for minimization), branching on the most fractional
+//! binary; integer-feasible LP solutions update the incumbent, and
+//! nodes whose bound cannot beat it are pruned.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use thiserror::Error;
+
+use super::simplex::{LpError, LpProblem, Rel, Sense};
+
+#[derive(Debug, Error, PartialEq)]
+pub enum MilpError {
+    #[error("MILP is infeasible")]
+    Infeasible,
+    #[error("LP relaxation unbounded")]
+    Unbounded,
+    #[error("node limit reached without proving optimality")]
+    NodeLimit,
+}
+
+/// A MILP: minimize/maximize `objective . x` with linear constraints,
+/// `x >= 0`, and a subset of variables restricted to {0, 1}.
+#[derive(Debug, Clone)]
+pub struct MilpProblem {
+    pub n: usize,
+    pub objective: Vec<f64>,
+    pub sense: Sense,
+    constraints: Vec<(Vec<f64>, Rel, f64)>,
+    binary: Vec<bool>,
+    /// Safety valve for pathological instances.
+    pub max_nodes: usize,
+    /// Optional known upper bound on the optimum (minimize sense, in
+    /// the user's sense for maximize). Branch-and-bound prunes against
+    /// it from node one — a warm start from a cheap heuristic/DP cuts
+    /// the tree dramatically (EXPERIMENTS.md §Perf).
+    pub initial_upper_bound: Option<f64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MilpSolution {
+    pub x: Vec<f64>,
+    pub value: f64,
+    /// Branch-and-bound nodes explored (diagnostics / Figure 12).
+    pub nodes: usize,
+}
+
+const INT_EPS: f64 = 1e-6;
+
+struct Node {
+    /// LP bound (in minimize-internal sense).
+    bound: f64,
+    /// (var, forced value) decisions along this branch.
+    fixes: Vec<(usize, f64)>,
+    /// The relaxation solution at this node.
+    relax: super::simplex::LpSolution,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: reverse so the *lowest* bound pops first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+impl MilpProblem {
+    pub fn new(n: usize, objective: Vec<f64>, sense: Sense) -> MilpProblem {
+        assert_eq!(objective.len(), n);
+        MilpProblem {
+            n,
+            objective,
+            sense,
+            constraints: Vec::new(),
+            binary: vec![false; n],
+            max_nodes: 200_000,
+            initial_upper_bound: None,
+        }
+    }
+
+    pub fn constrain(&mut self, coeffs: Vec<f64>, rel: Rel, rhs: f64) {
+        assert_eq!(coeffs.len(), self.n);
+        self.constraints.push((coeffs, rel, rhs));
+    }
+
+    pub fn set_binary(&mut self, i: usize) {
+        self.binary[i] = true;
+    }
+
+    /// Solve by best-first branch-and-bound.
+    pub fn solve(&self) -> Result<MilpSolution, MilpError> {
+        // Work internally in minimize sense.
+        let internal_obj: Vec<f64> = match self.sense {
+            Sense::Minimize => self.objective.clone(),
+            Sense::Maximize => self.objective.iter().map(|c| -c).collect(),
+        };
+
+        let solve_relaxation = |fixes: &[(usize, f64)]| -> Result<_, LpError> {
+            let mut lp = LpProblem::new(self.n, internal_obj.clone(), Sense::Minimize);
+            for (coeffs, rel, rhs) in &self.constraints {
+                lp.constrain(coeffs.clone(), *rel, *rhs);
+            }
+            // Binary relaxation: 0 <= x <= 1.
+            for i in 0..self.n {
+                if self.binary[i] {
+                    lp.bound(i, None, Some(1.0));
+                }
+            }
+            for &(i, v) in fixes {
+                let mut c = vec![0.0; self.n];
+                c[i] = 1.0;
+                lp.constrain(c, Rel::Eq, v);
+            }
+            lp.solve()
+        };
+
+        let mut heap: BinaryHeap<Node> = BinaryHeap::new();
+        match solve_relaxation(&[]) {
+            Ok(sol) => heap.push(Node { bound: sol.value, fixes: Vec::new(), relax: sol }),
+            Err(LpError::Infeasible(_)) => return Err(MilpError::Infeasible),
+            Err(LpError::Unbounded) => return Err(MilpError::Unbounded),
+            Err(LpError::IterationLimit) => return Err(MilpError::NodeLimit),
+        }
+
+        let mut incumbent: Option<MilpSolution> = None;
+        // Warm-start bound (slightly relaxed so the true optimum is
+        // never pruned by floating-point slack).
+        let mut best_val = match (self.initial_upper_bound, self.sense) {
+            (Some(ub), Sense::Minimize) => ub + 1e-6 * ub.abs().max(1.0),
+            (Some(ub), Sense::Maximize) => -ub + 1e-6 * ub.abs().max(1.0),
+            (None, _) => f64::INFINITY,
+        };
+        let mut nodes = 0usize;
+
+        while let Some(node) = heap.pop() {
+            let relax = &node.relax;
+            nodes += 1;
+            if nodes > self.max_nodes {
+                return Err(MilpError::NodeLimit);
+            }
+            if node.bound >= best_val - 1e-9 {
+                continue; // pruned
+            }
+
+            // Most fractional binary variable.
+            let frac = (0..self.n)
+                .filter(|&i| self.binary[i])
+                .map(|i| (i, (relax.x[i] - relax.x[i].round()).abs()))
+                .filter(|(_, f)| *f > INT_EPS)
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+            match frac {
+                None => {
+                    // Integer feasible.
+                    if relax.value < best_val {
+                        best_val = relax.value;
+                        incumbent = Some(MilpSolution {
+                            x: relax.x.clone(),
+                            value: relax.value,
+                            nodes,
+                        });
+                    }
+                }
+                Some((i, _)) => {
+                    for v in [0.0, 1.0] {
+                        let mut fixes = node.fixes.clone();
+                        fixes.push((i, v));
+                        match solve_relaxation(&fixes) {
+                            Ok(sol) => {
+                                if sol.value < best_val - 1e-9 {
+                                    heap.push(Node { bound: sol.value, fixes, relax: sol });
+                                }
+                            }
+                            Err(LpError::Infeasible(_)) => {}
+                            Err(LpError::Unbounded) => return Err(MilpError::Unbounded),
+                            Err(LpError::IterationLimit) => {}
+                        }
+                    }
+                }
+            }
+        }
+
+        match incumbent {
+            Some(mut s) => {
+                // Round binaries exactly and report in the user's sense.
+                for i in 0..self.n {
+                    if self.binary[i] {
+                        s.x[i] = s.x[i].round();
+                    }
+                }
+                s.nodes = nodes;
+                if self.sense == Sense::Maximize {
+                    s.value = -s.value;
+                }
+                Ok(s)
+            }
+            None => Err(MilpError::Infeasible),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-5, "{a} != {b}");
+    }
+
+    #[test]
+    fn pure_lp_passthrough() {
+        let mut p = MilpProblem::new(2, vec![3.0, 5.0], Sense::Maximize);
+        p.constrain(vec![1.0, 0.0], Rel::Le, 4.0);
+        p.constrain(vec![0.0, 2.0], Rel::Le, 12.0);
+        p.constrain(vec![3.0, 2.0], Rel::Le, 18.0);
+        let s = p.solve().unwrap();
+        assert_close(s.value, 36.0);
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 10a + 13b + 7c, 3a + 4b + 2c <= 6, binary -> a + c = 17? \
+        // options: a+b (7 wt) no; a+c wt 5 val 17; b+c wt 6 val 20. -> 20.
+        let mut p = MilpProblem::new(3, vec![10.0, 13.0, 7.0], Sense::Maximize);
+        p.constrain(vec![3.0, 4.0, 2.0], Rel::Le, 6.0);
+        for i in 0..3 {
+            p.set_binary(i);
+        }
+        let s = p.solve().unwrap();
+        assert_close(s.value, 20.0);
+        assert_close(s.x[1], 1.0);
+        assert_close(s.x[2], 1.0);
+    }
+
+    #[test]
+    fn assignment_with_equality_budget() {
+        // Mini §3.2 shape: 2 "models", allocations f in {1,2,3} with
+        // latencies; pick one per model, total = 4, min max-latency via
+        // auxiliary L variable (var 6).
+        // model 0 latencies: f1=9, f2=5, f3=2; model 1: f1=8, f2=4, f3=3.
+        let n = 7;
+        let mut obj = vec![0.0; n];
+        obj[6] = 1.0;
+        let mut p = MilpProblem::new(n, obj, Sense::Minimize);
+        // One allocation per model.
+        p.constrain(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0], Rel::Eq, 1.0);
+        p.constrain(vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0], Rel::Eq, 1.0);
+        // GPU budget: 1*x01 + 2*x02 + 3*x03 + ... = 4.
+        p.constrain(vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 0.0], Rel::Eq, 4.0);
+        // L >= selected latency.
+        p.constrain(vec![9.0, 5.0, 2.0, 0.0, 0.0, 0.0, -1.0], Rel::Le, 0.0);
+        p.constrain(vec![0.0, 0.0, 0.0, 8.0, 4.0, 3.0, -1.0], Rel::Le, 0.0);
+        for i in 0..6 {
+            p.set_binary(i);
+        }
+        let s = p.solve().unwrap();
+        // Options: (f=1,f=3): max(9,3)=9; (f=2,f=2): max(5,4)=5;
+        // (f=3,f=1): max(2,8)=8. Best = 5.
+        assert_close(s.value, 5.0);
+        assert_close(s.x[1], 1.0);
+        assert_close(s.x[4], 1.0);
+    }
+
+    #[test]
+    fn infeasible_budget() {
+        let mut p = MilpProblem::new(2, vec![1.0, 1.0], Sense::Minimize);
+        p.constrain(vec![1.0, 0.0], Rel::Eq, 1.0);
+        p.constrain(vec![0.0, 1.0], Rel::Eq, 1.0);
+        p.constrain(vec![1.0, 1.0], Rel::Le, 1.0);
+        p.set_binary(0);
+        p.set_binary(1);
+        assert_eq!(p.solve(), Err(MilpError::Infeasible));
+    }
+
+    #[test]
+    fn fractional_lp_vs_integer_gap() {
+        // max x1 + x2, 2x1 + 2x2 <= 3, binary: LP gives 1.5, MILP 1.0.
+        let mut p = MilpProblem::new(2, vec![1.0, 1.0], Sense::Maximize);
+        p.constrain(vec![2.0, 2.0], Rel::Le, 3.0);
+        p.set_binary(0);
+        p.set_binary(1);
+        let s = p.solve().unwrap();
+        assert_close(s.value, 1.0);
+    }
+
+    #[test]
+    fn bigger_random_knapsack_agrees_with_dp() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for trial in 0..10 {
+            let n = 12;
+            let values: Vec<f64> = (0..n).map(|_| rng.range_i64(1, 30) as f64).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_i64(1, 12) as f64).collect();
+            let cap = 30.0;
+            let mut p = MilpProblem::new(n, values.clone(), Sense::Maximize);
+            p.constrain(weights.clone(), Rel::Le, cap);
+            for i in 0..n {
+                p.set_binary(i);
+            }
+            let milp = p.solve().unwrap();
+            // Exact DP over integer weights.
+            let capi = cap as usize;
+            let mut dp = vec![0.0f64; capi + 1];
+            for i in 0..n {
+                let w = weights[i] as usize;
+                for c in (w..=capi).rev() {
+                    dp[c] = dp[c].max(dp[c - w] + values[i]);
+                }
+            }
+            assert!(
+                (milp.value - dp[capi]).abs() < 1e-6,
+                "trial {trial}: milp {} dp {}",
+                milp.value,
+                dp[capi]
+            );
+        }
+    }
+}

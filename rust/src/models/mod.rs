@@ -1,0 +1,266 @@
+//! LLM architecture registry.
+//!
+//! The scheduler's cost model ([`crate::perf`]) only needs public
+//! architecture constants — parameter counts, layer/head geometry,
+//! weight precision — so the paper's model cascades are represented
+//! faithfully even though the actual checkpoints cannot run here (the
+//! e2e serving path uses the tiny tiers from `artifacts/` instead; see
+//! DESIGN.md "Substitutions").
+
+/// Weight precision of a served model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// bf16/fp16 — 2 bytes per parameter.
+    Bf16,
+    /// AWQ INT4 — 0.5 bytes per parameter (DeepSeek-671B in the paper).
+    Int4,
+}
+
+impl Precision {
+    pub fn bytes_per_param(self) -> f64 {
+        match self {
+            Precision::Bf16 => 2.0,
+            Precision::Int4 => 0.5,
+        }
+    }
+}
+
+/// Architecture constants of one model type in a cascade.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Total parameters (all experts for MoE).
+    pub n_params: f64,
+    /// Parameters activated per token (== n_params for dense models).
+    pub n_active_params: f64,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub precision: Precision,
+    /// MoE: total routed experts per layer (0 = dense).
+    pub n_experts: usize,
+    /// MoE: experts activated per token (routed + shared).
+    pub experts_per_token: usize,
+    /// Achievable fraction of the hardware roofline for this model's
+    /// serving kernels (MoE grouped-GEMM + all-to-all + INT4 dequant
+    /// run far below dense-GEMM efficiency).
+    pub mfu_factor: f64,
+    /// Mean judger score (0-100) this model achieves on the evaluation
+    /// workload — the calibration anchor for the synthetic judger
+    /// (Figure 1 of the paper; see `judge/`).
+    pub quality_mean: f64,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    /// Bytes of weights when fully materialized.
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.precision.bytes_per_param()
+    }
+
+    /// KV-cache bytes per token (bf16 K and V across all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim()) as f64 * 2.0
+    }
+
+    /// FLOPs per token (forward): ~2 * active parameters; the attention
+    /// score/value terms are absorbed by the 2*N rule at the sequence
+    /// lengths used here.
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.n_active_params
+    }
+
+    /// Minimum GPUs needed just to hold the weights (plus a KV/activation
+    /// reserve fraction) at a given per-GPU memory.
+    pub fn min_gpus(&self, gpu_mem_bytes: f64, reserve_frac: f64) -> usize {
+        let usable = gpu_mem_bytes * (1.0 - reserve_frac);
+        (self.weight_bytes() / usable).ceil().max(1.0) as usize
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Expected fraction of weights a decode iteration at batch `b`
+    /// must read. Dense models read everything once regardless of
+    /// batch; an MoE batch collectively touches
+    /// 1 - (1 - k/E)^b of the experts, which is why expert models lose
+    /// most of the batching amortization that makes dense decode cheap.
+    pub fn weight_read_fraction(&self, b: usize) -> f64 {
+        if !self.is_moe() || b == 0 {
+            return 1.0;
+        }
+        let per_token = self.experts_per_token as f64 / self.n_experts as f64;
+        let coverage = 1.0 - (1.0 - per_token).powi(b as i32);
+        // ~8% of parameters (attention, shared expert, router) are
+        // dense and always read.
+        0.08 + 0.92 * coverage
+    }
+}
+
+/// DeepSeek cascade used in the paper's main evaluation:
+/// DeepSeek-7B -> DeepSeek-70B (distill) -> DeepSeek-671B (AWQ INT4).
+pub fn deepseek_cascade() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "DeepSeek-7B",
+            n_params: 7.6e9,
+            n_active_params: 7.6e9,
+            n_layers: 28,
+            hidden: 3584,
+            n_heads: 28,
+            n_kv_heads: 4,
+            d_ff: 18944,
+            vocab: 152064,
+            precision: Precision::Bf16,
+            n_experts: 0,
+            experts_per_token: 0,
+            mfu_factor: 1.0,
+            quality_mean: 62.0,
+        },
+        ModelSpec {
+            name: "DeepSeek-70B",
+            n_params: 70.6e9,
+            n_active_params: 70.6e9,
+            n_layers: 80,
+            hidden: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28672,
+            vocab: 128256,
+            precision: Precision::Bf16,
+            n_experts: 0,
+            experts_per_token: 0,
+            mfu_factor: 1.0,
+            quality_mean: 83.0,
+        },
+        ModelSpec {
+            // MoE: 671B total, ~37B activated per token; INT4 weights.
+            name: "DeepSeek-671B-AWQ",
+            n_params: 671.0e9,
+            n_active_params: 37.0e9,
+            n_layers: 61,
+            hidden: 7168,
+            n_heads: 128,
+            // MLA compresses the KV cache ~16x vs vanilla MHA; model it
+            // as an effective GQA-8 (within 2x of DeepSeek's published
+            // per-token KV footprint).
+            n_kv_heads: 8,
+            d_ff: 18432,
+            vocab: 129280,
+            precision: Precision::Int4,
+            // 256 routed experts, 8 routed + 1 shared active per token;
+            // grouped-GEMM + all-to-all + INT4 dequant efficiency.
+            n_experts: 256,
+            experts_per_token: 9,
+            mfu_factor: 0.35,
+            quality_mean: 93.0,
+        },
+    ]
+}
+
+/// Llama cascade for the paper's Figure 9: Llama3-8B -> Llama3-70B.
+pub fn llama_cascade() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "Llama3-8B",
+            n_params: 8.0e9,
+            n_active_params: 8.0e9,
+            n_layers: 32,
+            hidden: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 14336,
+            vocab: 128256,
+            precision: Precision::Bf16,
+            n_experts: 0,
+            experts_per_token: 0,
+            mfu_factor: 1.0,
+            quality_mean: 66.0,
+        },
+        ModelSpec {
+            name: "Llama3-70B",
+            n_params: 70.6e9,
+            n_active_params: 70.6e9,
+            n_layers: 80,
+            hidden: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28672,
+            vocab: 128256,
+            precision: Precision::Bf16,
+            n_experts: 0,
+            experts_per_token: 0,
+            mfu_factor: 1.0,
+            quality_mean: 86.0,
+        },
+    ]
+}
+
+/// Look up a cascade by name (used by configs and CLI).
+pub fn cascade_by_name(name: &str) -> Option<Vec<ModelSpec>> {
+    match name {
+        "deepseek" => Some(deepseek_cascade()),
+        "llama" => Some(llama_cascade()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cascade_is_ordered_by_capability() {
+        for cascade in [deepseek_cascade(), llama_cascade()] {
+            for w in cascade.windows(2) {
+                assert!(w[0].quality_mean < w[1].quality_mean);
+                assert!(w[0].n_params < w[1].n_params);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_floors_are_sane() {
+        let c = deepseek_cascade();
+        let h100 = 80e9;
+        // 7B bf16 (~15 GB) fits on one H100.
+        assert_eq!(c[0].min_gpus(h100, 0.3), 1);
+        // 70B bf16 (~141 GB) needs at least 3 with a 30% reserve.
+        assert!(c[1].min_gpus(h100, 0.3) >= 3);
+        // 671B at INT4 (~336 GB) needs at least 6.
+        assert!(c[2].min_gpus(h100, 0.3) >= 6);
+        // And strictly more at bf16 than int4.
+        let mut bf16 = c[2].clone();
+        bf16.precision = Precision::Bf16;
+        assert!(bf16.min_gpus(h100, 0.3) > c[2].min_gpus(h100, 0.3));
+    }
+
+    #[test]
+    fn kv_bytes_match_hand_calc() {
+        let m = &llama_cascade()[0]; // 8B: 32 layers, 8 kv heads, dim 128
+        let expected = (2 * 32 * 8 * 128) as f64 * 2.0;
+        assert_eq!(m.kv_bytes_per_token(), expected);
+    }
+
+    #[test]
+    fn moe_flops_use_active_params() {
+        let ds = deepseek_cascade();
+        let big = &ds[2];
+        assert!(big.flops_per_token() < 2.0 * big.n_params);
+        assert_eq!(big.flops_per_token(), 2.0 * 37.0e9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(cascade_by_name("deepseek").unwrap().len(), 3);
+        assert_eq!(cascade_by_name("llama").unwrap().len(), 2);
+        assert!(cascade_by_name("gpt").is_none());
+    }
+}

@@ -1,0 +1,266 @@
+//! Parallelism strategies: data parallelism (replication), tensor
+//! parallelism and pipeline parallelism, in the paper's generalized
+//! form where one model type's allocation is a *set of replicas, each
+//! with its own (TP, PP)* — Table 2 shows mixed sets like
+//! `s3: (TP=4, PP=3), (TP=8)`.
+//!
+//! [`enumerate_strategies`] generates every feasible strategy for a
+//! model under a GPU budget, observing the constraints of §3.2:
+//! Σ_replicas tp·pp ≤ f, per-GPU memory floors, TP confined to one
+//! server (NVLink domain), and at most two distinct replica designs per
+//! model type (the paper's case studies never use more).
+
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+
+/// Fraction of GPU memory reserved for activations/fragmentation.
+pub const ACT_RESERVE: f64 = 0.10;
+/// Minimum fraction of post-weight memory that must remain for KV cache
+/// for a design to be considered servable.
+pub const MIN_KV_FRAC: f64 = 0.05;
+
+/// One replica design: `count` replicas, each tp-way sharded and
+/// pp-stage pipelined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReplicaGroup {
+    pub tp: usize,
+    pub pp: usize,
+    pub count: usize,
+}
+
+impl ReplicaGroup {
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp * self.count
+    }
+}
+
+/// A parallelism strategy for one model type: a multiset of replica
+/// designs (canonically sorted, largest design first).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub groups: Vec<ReplicaGroup>,
+}
+
+impl Strategy {
+    pub fn new(mut groups: Vec<ReplicaGroup>) -> Strategy {
+        groups.retain(|g| g.count > 0);
+        groups.sort_by(|a, b| {
+            (b.tp * b.pp, b.tp).cmp(&(a.tp * a.pp, a.tp))
+        });
+        Strategy { groups }
+    }
+
+    /// Single homogeneous design shorthand.
+    pub fn uniform(tp: usize, pp: usize, count: usize) -> Strategy {
+        Strategy::new(vec![ReplicaGroup { tp, pp, count }])
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.groups.iter().map(|g| g.gpus()).sum()
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Render in the paper's Table 2 notation, e.g.
+    /// `(DP=2, TP=4)` or `(TP=4, PP=3), (TP=8)`.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        for g in &self.groups {
+            let mut inner = Vec::new();
+            if g.count > 1 {
+                inner.push(format!("DP={}", g.count));
+            }
+            if g.tp > 1 {
+                inner.push(format!("TP={}", g.tp));
+            }
+            if g.pp > 1 {
+                inner.push(format!("PP={}", g.pp));
+            }
+            if inner.is_empty() {
+                inner.push("DP=1".to_string());
+            }
+            parts.push(format!("({})", inner.join(", ")));
+        }
+        parts.join(", ")
+    }
+}
+
+/// Is a single replica design (tp, pp) feasible for this model on this
+/// cluster? Checks the NVLink domain for TP, layer count for PP, and
+/// the per-GPU memory floor (weights + activation reserve + a minimum
+/// KV slice).
+pub fn design_feasible(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    tp: usize,
+    pp: usize,
+) -> bool {
+    if tp > cluster.gpus_per_server || !tp.is_power_of_two() {
+        return false;
+    }
+    if pp == 0 || pp > model.n_layers {
+        return false;
+    }
+    let usable = cluster.gpu.mem_bytes * (1.0 - ACT_RESERVE);
+    let weight_per_gpu = model.weight_bytes() / (tp * pp) as f64;
+    // Leave at least MIN_KV_FRAC of usable memory for KV cache.
+    weight_per_gpu <= usable * (1.0 - MIN_KV_FRAC)
+}
+
+/// Feasible single-replica designs for `model` within `max_gpus`.
+pub fn feasible_designs(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    max_gpus: usize,
+) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let tps = [1usize, 2, 4, 8];
+    for &tp in tps.iter().filter(|&&t| t <= cluster.gpus_per_server) {
+        for pp in 1..=8usize {
+            if tp * pp > max_gpus {
+                continue;
+            }
+            if design_feasible(model, cluster, tp, pp) {
+                out.push((tp, pp));
+            }
+        }
+    }
+    out
+}
+
+/// Enumerate all canonical strategies for `model` using at most
+/// `budget` GPUs (and at least one replica), with at most two distinct
+/// replica designs.
+///
+/// Strategies that leave GPUs idle are included only when nothing
+/// larger fits (the inner optimizer's latency objective already prefers
+/// to use the full allocation, and the MILP controls the budget).
+pub fn enumerate_strategies(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    budget: usize,
+) -> Vec<Strategy> {
+    let designs = feasible_designs(model, cluster, budget);
+    let mut out = Vec::new();
+    // Single-design strategies.
+    for &(tp, pp) in &designs {
+        let cost = tp * pp;
+        for count in 1..=(budget / cost) {
+            out.push(Strategy::uniform(tp, pp, count));
+        }
+    }
+    // Two-design mixes (distinct designs, both present).
+    for i in 0..designs.len() {
+        for j in (i + 1)..designs.len() {
+            let (tp1, pp1) = designs[i];
+            let (tp2, pp2) = designs[j];
+            let (c1, c2) = (tp1 * pp1, tp2 * pp2);
+            for n1 in 1..=(budget / c1) {
+                let rem = budget - n1 * c1;
+                for n2 in 1..=(rem / c2).min(budget) {
+                    out.push(Strategy::new(vec![
+                        ReplicaGroup { tp: tp1, pp: pp1, count: n1 },
+                        ReplicaGroup { tp: tp2, pp: pp2, count: n2 },
+                    ]));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{deepseek_cascade, llama_cascade};
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::paper_testbed()
+    }
+
+    #[test]
+    fn canonical_ordering_and_label() {
+        let s = Strategy::new(vec![
+            ReplicaGroup { tp: 8, pp: 1, count: 1 },
+            ReplicaGroup { tp: 4, pp: 3, count: 1 },
+        ]);
+        // TP=4,PP=3 (12 GPUs) sorts before TP=8 (8 GPUs).
+        assert_eq!(s.label(), "(TP=4, PP=3), (TP=8)");
+        assert_eq!(s.gpus(), 20);
+        assert_eq!(s.n_replicas(), 2);
+    }
+
+    #[test]
+    fn dp_only_label() {
+        assert_eq!(Strategy::uniform(1, 1, 4).label(), "(DP=4)");
+        assert_eq!(Strategy::uniform(2, 1, 6).label(), "(DP=6, TP=2)");
+    }
+
+    #[test]
+    fn small_model_fits_everywhere() {
+        let m = &deepseek_cascade()[0]; // 7B bf16, ~15 GB
+        assert!(design_feasible(m, &cluster(), 1, 1));
+    }
+
+    #[test]
+    fn large_model_needs_sharding() {
+        let m = &deepseek_cascade()[1]; // 70B bf16, ~141 GB
+        assert!(!design_feasible(m, &cluster(), 1, 1));
+        assert!(!design_feasible(m, &cluster(), 2, 1));
+        assert!(design_feasible(m, &cluster(), 4, 1));
+        assert!(design_feasible(m, &cluster(), 2, 2));
+    }
+
+    #[test]
+    fn tp_confined_to_server() {
+        let m = &deepseek_cascade()[0];
+        assert!(!design_feasible(m, &cluster(), 16, 1));
+    }
+
+    #[test]
+    fn enumeration_respects_budget() {
+        let m = &llama_cascade()[0];
+        for budget in [1usize, 4, 8, 16] {
+            let strategies = enumerate_strategies(m, &cluster(), budget);
+            assert!(!strategies.is_empty());
+            for s in &strategies {
+                assert!(s.gpus() <= budget, "{} > {budget}", s.gpus());
+                assert!(s.n_replicas() >= 1);
+                assert!(s.groups.len() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_excludes_infeasible_designs() {
+        let m = &deepseek_cascade()[2]; // 671B INT4, ~336 GB
+        let strategies = enumerate_strategies(m, &cluster(), 8);
+        // Needs >= 5 GPUs of 72 GB usable each; tp*pp >= 5.
+        for s in &strategies {
+            for g in &s.groups {
+                assert!(g.tp * g.pp >= 5, "infeasible design {:?}", g);
+            }
+        }
+        assert!(!strategies.is_empty()); // TP=8 works
+    }
+
+    #[test]
+    fn enumeration_has_no_duplicates() {
+        let m = &llama_cascade()[0];
+        let strategies = enumerate_strategies(m, &cluster(), 12);
+        let mut seen = std::collections::HashSet::new();
+        for s in &strategies {
+            assert!(seen.insert(s.clone()), "duplicate {:?}", s);
+        }
+    }
+
+    #[test]
+    fn strategy_counts_stay_tractable() {
+        let m = &deepseek_cascade()[0];
+        let n = enumerate_strategies(m, &cluster(), 32).len();
+        assert!(n > 50, "expected a rich space, got {n}");
+        assert!(n < 20_000, "enumeration exploded: {n}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Threshold-based cascade routing (§3.3, Figure 5).
+//!
+//! Every request is first served by the smallest tier; the judger
+//! scores the response, and a score below threshold `h_i` forwards the
+//! request to tier i+1. The last tier always accepts. Routing a
+//! concrete trace yields the per-tier *processing ratios* `p_i`, the
+//! per-tier workloads `w_i` consumed by the inner MILP, and the overall
+//! quality metric `Q(θ)` — i.e. everything the outer optimization
+//! iterates on.
+
+use crate::judge::Judger;
+use crate::models::ModelSpec;
+use crate::perf::Workload;
+use crate::workload::Request;
+
+/// Routing thresholds `h_1..h_{C-1}` (score in [0, 100]; a request is
+/// accepted at tier i when its score >= h_i).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Thresholds(pub Vec<f64>);
+
+impl Thresholds {
+    pub fn uniform(c_minus_1: usize, h: f64) -> Thresholds {
+        Thresholds(vec![h; c_minus_1])
+    }
+}
+
+/// Result of routing one trace through the cascade.
+#[derive(Debug, Clone)]
+pub struct RoutingOutcome {
+    /// Accepting tier index per request (aligned with the trace).
+    pub accepting_tier: Vec<u8>,
+    /// Fraction of requests processed by each tier (p_i; p_0 == 1).
+    pub processing_ratios: Vec<f64>,
+    /// Workload each tier sees (visits, not accepts).
+    pub tier_workloads: Vec<Workload>,
+    /// Mean judged score of the accepted responses — Q(θ).
+    pub quality: f64,
+    /// Judged score each request finally received.
+    pub final_scores: Vec<f64>,
+}
+
+/// Route `requests` through `cascade` with `thresholds`.
+///
+/// `span_seconds` is the observation window used to turn visit counts
+/// into rates; pass the trace's true span.
+pub fn route(
+    cascade: &[ModelSpec],
+    judger: &Judger,
+    requests: &[Request],
+    thresholds: &Thresholds,
+    span_seconds: f64,
+) -> RoutingOutcome {
+    let c = cascade.len();
+    assert_eq!(
+        thresholds.0.len(),
+        c - 1,
+        "need {} thresholds for a {}-tier cascade",
+        c - 1,
+        c
+    );
+    assert!(span_seconds > 0.0);
+
+    let mut accepting = vec![0u8; requests.len()];
+    let mut final_scores = vec![0.0f64; requests.len()];
+    let mut visits = vec![0usize; c];
+    let mut in_tokens = vec![0f64; c];
+    let mut out_tokens = vec![0f64; c];
+
+    for (idx, req) in requests.iter().enumerate() {
+        for tier in 0..c {
+            visits[tier] += 1;
+            in_tokens[tier] += req.input_tokens as f64;
+            out_tokens[tier] += req.output_tokens as f64;
+            let score = judger.score(&cascade[tier], req, tier);
+            let accepted = tier == c - 1 || score >= thresholds.0[tier];
+            if accepted {
+                accepting[idx] = tier as u8;
+                final_scores[idx] = score;
+                break;
+            }
+        }
+    }
+
+    let n = requests.len() as f64;
+    let processing_ratios: Vec<f64> = visits.iter().map(|&v| v as f64 / n.max(1.0)).collect();
+    let tier_workloads: Vec<Workload> = (0..c)
+        .map(|t| Workload {
+            rate: visits[t] as f64 / span_seconds,
+            avg_input: if visits[t] > 0 { in_tokens[t] / visits[t] as f64 } else { 0.0 },
+            avg_output: if visits[t] > 0 { out_tokens[t] / visits[t] as f64 } else { 0.0 },
+        })
+        .collect();
+    let quality = if requests.is_empty() {
+        0.0
+    } else {
+        final_scores.iter().sum::<f64>() / n
+    };
+
+    RoutingOutcome {
+        accepting_tier: accepting,
+        processing_ratios,
+        tier_workloads,
+        quality,
+        final_scores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+    use crate::workload::{generate, paper_trace};
+
+    fn setup() -> (Vec<ModelSpec>, Judger, Vec<Request>, f64) {
+        let cascade = deepseek_cascade();
+        let judger = Judger::new(1);
+        let reqs = generate(&paper_trace(2, 4.0), 1500, 3);
+        let span = reqs.last().unwrap().arrival;
+        (cascade, judger, reqs, span)
+    }
+
+    #[test]
+    fn zero_thresholds_accept_everything_at_tier_one() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(&cascade, &judger, &reqs, &Thresholds::uniform(2, 0.0), span);
+        assert!(out.accepting_tier.iter().all(|&t| t == 0));
+        assert_eq!(out.processing_ratios, vec![1.0, 0.0, 0.0]);
+        assert_eq!(out.tier_workloads[1].rate, 0.0);
+    }
+
+    #[test]
+    fn max_thresholds_send_everything_to_the_top() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(&cascade, &judger, &reqs, &Thresholds::uniform(2, 101.0), span);
+        assert!(out.accepting_tier.iter().all(|&t| t == 2));
+        assert_eq!(out.processing_ratios, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn ratios_are_monotone_decreasing_along_cascade() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(
+            &cascade,
+            &judger,
+            &reqs,
+            &Thresholds(vec![70.0, 60.0]),
+            span,
+        );
+        assert_eq!(out.processing_ratios[0], 1.0);
+        assert!(out.processing_ratios[0] >= out.processing_ratios[1]);
+        assert!(out.processing_ratios[1] >= out.processing_ratios[2]);
+        assert!(out.processing_ratios[1] > 0.0);
+    }
+
+    #[test]
+    fn higher_thresholds_escalate_more_and_raise_quality() {
+        let (cascade, judger, reqs, span) = setup();
+        let low = route(&cascade, &judger, &reqs, &Thresholds(vec![30.0, 30.0]), span);
+        let high = route(&cascade, &judger, &reqs, &Thresholds(vec![85.0, 85.0]), span);
+        assert!(high.processing_ratios[2] > low.processing_ratios[2]);
+        assert!(high.quality > low.quality, "{} vs {}", high.quality, low.quality);
+    }
+
+    #[test]
+    fn rates_decompose_consistently() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(&cascade, &judger, &reqs, &Thresholds(vec![60.0, 40.0]), span);
+        let total_rate = reqs.len() as f64 / span;
+        assert!((out.tier_workloads[0].rate - total_rate).abs() / total_rate < 1e-9);
+        for t in 0..3 {
+            let expect = total_rate * out.processing_ratios[t];
+            assert!((out.tier_workloads[t].rate - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn accepting_tier_consistent_with_ratios() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(&cascade, &judger, &reqs, &Thresholds(vec![60.0, 40.0]), span);
+        let frac_at_2 = out
+            .accepting_tier
+            .iter()
+            .filter(|&&t| t == 2)
+            .count() as f64
+            / reqs.len() as f64;
+        assert!((frac_at_2 - out.processing_ratios[2]).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "thresholds")]
+    fn wrong_threshold_count_panics() {
+        let (cascade, judger, reqs, span) = setup();
+        route(&cascade, &judger, &reqs, &Thresholds(vec![50.0]), span);
+    }
+}

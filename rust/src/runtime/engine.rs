@@ -1,0 +1,186 @@
+//! Execution engine: compiled prefill/decode executables per tier plus
+//! the parameter literals, with typed entry points used by the serving
+//! hot path.
+//!
+//! The KV cache is threaded *functionally* through calls as XLA
+//! literals (PJRT execution is stateless); the coordinator owns one
+//! cache pair per in-flight request.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::TierManifest;
+
+/// One compiled HLO module on the PJRT CPU client.
+pub struct ModelExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of leading non-parameter inputs (diagnostics only).
+    pub name: String,
+}
+
+impl ModelExecutable {
+    /// Load HLO text from `path` and compile it.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(ModelExecutable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Execute with literal inputs; returns the untupled outputs.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .context("executable produced no outputs")?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output of {}: {e}", self.name))?;
+        // aot.py lowers with return_tuple=True, so the root is a tuple.
+        Ok(lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {}: {e}", self.name))?)
+    }
+}
+
+/// Result of a prefill call.
+pub struct PrefillResult {
+    /// Next-token logits at position `true_len - 1`, length `vocab`.
+    pub logits: Vec<f32>,
+    /// KV cache literals, shape (L, Hkv, max_seq, head_dim) each.
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+/// A fully loaded tier: compiled prefill + decode and parameter
+/// literals (built once, reused on every call).
+pub struct TierRuntime {
+    pub manifest: TierManifest,
+    prefill: ModelExecutable,
+    decode: ModelExecutable,
+    params: Vec<xla::Literal>,
+}
+
+impl TierRuntime {
+    /// Load a tier's artifacts (HLO text + parameter blob) and compile.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, tier: &TierManifest) -> Result<Self> {
+        let prefill = ModelExecutable::load(client, &dir.join(&tier.prefill_file))?;
+        let decode = ModelExecutable::load(client, &dir.join(&tier.decode_file))?;
+        let params = load_params(&dir.join(&tier.params_file), tier)?;
+        Ok(TierRuntime { manifest: tier.clone(), prefill, decode, params })
+    }
+
+    /// Run prefill on a prompt (padded internally to `prefill_len`).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillResult> {
+        let cfg = &self.manifest.config;
+        if prompt.is_empty() || prompt.len() > cfg.prefill_len {
+            bail!(
+                "prompt length {} out of range 1..={}",
+                prompt.len(),
+                cfg.prefill_len
+            );
+        }
+        let mut tokens = prompt.to_vec();
+        tokens.resize(cfg.prefill_len, 0);
+        let tokens_lit = xla::Literal::vec1(&tokens);
+        let len_lit = xla::Literal::scalar(prompt.len() as i32);
+        let mut args: Vec<&xla::Literal> = vec![&tokens_lit, &len_lit];
+        args.extend(self.params.iter());
+        let mut outs = self.prefill.run(&args)?;
+        if outs.len() != 3 {
+            bail!("prefill returned {} outputs, expected 3", outs.len());
+        }
+        let v_cache = outs.pop().unwrap();
+        let k_cache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits fetch: {e}"))?;
+        Ok(PrefillResult { logits, k_cache, v_cache })
+    }
+
+    /// Run one decode step.
+    ///
+    /// * `token` — previously generated token to feed in.
+    /// * `pos` — cache slot to write (`prefill_len + i`).
+    /// * `rope_pos` — logical position (`true_len + i`).
+    /// * `mask` — validity mask over `max_seq` slots (must already
+    ///   include slot `pos`).
+    ///
+    /// Returns next logits and the updated cache literals.
+    pub fn decode(
+        &self,
+        token: i32,
+        pos: usize,
+        rope_pos: usize,
+        mask: &[f32],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+    ) -> Result<(Vec<f32>, xla::Literal, xla::Literal)> {
+        let cfg = &self.manifest.config;
+        if mask.len() != cfg.max_seq {
+            bail!("mask length {} != max_seq {}", mask.len(), cfg.max_seq);
+        }
+        if pos >= cfg.max_seq {
+            bail!("cache slot {pos} out of range (max_seq {})", cfg.max_seq);
+        }
+        let token_lit = xla::Literal::scalar(token);
+        let pos_lit = xla::Literal::scalar(pos as i32);
+        let rope_lit = xla::Literal::scalar(rope_pos as i32);
+        let mask_lit = xla::Literal::vec1(mask);
+        let mut args: Vec<&xla::Literal> =
+            vec![&token_lit, &pos_lit, &rope_lit, &mask_lit, k_cache, v_cache];
+        args.extend(self.params.iter());
+        let mut outs = self.decode.run(&args)?;
+        if outs.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", outs.len());
+        }
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits fetch: {e}"))?;
+        Ok((logits, k_new, v_new))
+    }
+}
+
+/// Read the f32-LE parameter blob and split it into shaped literals per
+/// the manifest's parameter table.
+fn load_params(path: &Path, tier: &TierManifest) -> Result<Vec<xla::Literal>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let expected = tier.n_floats * 4;
+    if bytes.len() != expected {
+        bail!(
+            "param blob {} is {} bytes, manifest says {}",
+            path.display(),
+            bytes.len(),
+            expected
+        );
+    }
+    let mut out = Vec::with_capacity(tier.params.len());
+    let mut off = 0usize;
+    for entry in &tier.params {
+        let nbytes = entry.numel() * 4;
+        let slice = &bytes[off..off + nbytes];
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &entry.shape,
+            slice,
+        )
+        .map_err(|e| anyhow::anyhow!("literal for {}: {e}", entry.name))?;
+        out.push(lit);
+        off += nbytes;
+    }
+    if off != bytes.len() {
+        bail!("param blob has {} trailing bytes", bytes.len() - off);
+    }
+    Ok(out)
+}

@@ -1,0 +1,200 @@
+//! Parsing of `artifacts/manifest.json`, the contract between the
+//! Python AOT exporter and the Rust runtime: tier architecture
+//! constants, the parameter table (names/shapes in blob order), task
+//! metadata for the synthetic-task judger, and artifact file names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture constants of one served tier (mirrors `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub n_params: usize,
+}
+
+/// One entry of the parameter blob: name + shape, in blob order.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Everything the runtime needs to serve one tier.
+#[derive(Debug, Clone)]
+pub struct TierManifest {
+    pub config: TierConfig,
+    pub params: Vec<ParamEntry>,
+    pub n_floats: usize,
+    /// Teacher-forced next-token accuracy per task difficulty (1..=4),
+    /// measured at export time; used to sanity-check the cascade's
+    /// quality gradient.
+    pub eval_accuracy: BTreeMap<u32, f64>,
+    pub prefill_file: String,
+    pub decode_file: String,
+    pub params_file: String,
+}
+
+/// Synthetic-task metadata (see `python/compile/train.py`).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub data_vocab: usize,
+    pub marker_base: usize,
+    pub max_difficulty: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub task: TaskSpec,
+    pub tiers: BTreeMap<String, TierManifest>,
+}
+
+fn tier_config(j: &Json) -> Result<TierConfig> {
+    Ok(TierConfig {
+        name: j.req("name")?.as_str()?.to_string(),
+        vocab: j.req("vocab")?.as_usize()?,
+        d_model: j.req("d_model")?.as_usize()?,
+        n_layers: j.req("n_layers")?.as_usize()?,
+        n_q_heads: j.req("n_q_heads")?.as_usize()?,
+        n_kv_heads: j.req("n_kv_heads")?.as_usize()?,
+        d_ff: j.req("d_ff")?.as_usize()?,
+        head_dim: j.req("head_dim")?.as_usize()?,
+        max_seq: j.req("max_seq")?.as_usize()?,
+        prefill_len: j.req("prefill_len")?.as_usize()?,
+        n_params: j.req("n_params")?.as_usize()?,
+    })
+}
+
+fn tier_manifest(j: &Json) -> Result<TierManifest> {
+    let params = j
+        .req("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamEntry {
+                name: p.req("name")?.as_str()?.to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut eval_accuracy = BTreeMap::new();
+    if let Some(acc) = j.get("eval_accuracy") {
+        for (k, v) in acc.as_obj()? {
+            eval_accuracy.insert(k.parse::<u32>()?, v.as_f64()?);
+        }
+    }
+    let files = j.req("files")?;
+    Ok(TierManifest {
+        config: tier_config(j.req("config")?)?,
+        params,
+        n_floats: j.req("n_floats")?.as_usize()?,
+        eval_accuracy,
+        prefill_file: files.req("prefill")?.as_str()?.to_string(),
+        decode_file: files.req("decode")?.as_str()?.to_string(),
+        params_file: files.req("params")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let task = j.req("task")?;
+        let task = TaskSpec {
+            data_vocab: task.req("data_vocab")?.as_usize()?,
+            marker_base: task.req("marker_base")?.as_usize()?,
+            max_difficulty: task.req("max_difficulty")?.as_usize()?,
+        };
+        let mut tiers = BTreeMap::new();
+        for (name, tj) in j.req("tiers")?.as_obj()? {
+            tiers.insert(
+                name.clone(),
+                tier_manifest(tj).with_context(|| format!("tier '{name}'"))?,
+            );
+        }
+        Ok(Manifest { dir, task, tiers })
+    }
+
+    /// Tier manifests ordered smallest-to-largest by parameter count —
+    /// the cascade order.
+    pub fn cascade_order(&self) -> Vec<&TierManifest> {
+        let mut v: Vec<&TierManifest> = self.tiers.values().collect();
+        v.sort_by_key(|t| t.config.n_params);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "task": {"data_vocab": 60, "marker_base": 59, "max_difficulty": 4},
+          "tiers": {
+            "small": {
+              "config": {"name": "small", "vocab": 64, "d_model": 64,
+                         "n_layers": 2, "n_q_heads": 4, "n_kv_heads": 2,
+                         "d_ff": 128, "head_dim": 16, "max_seq": 160,
+                         "prefill_len": 64, "n_params": 82240},
+              "params": [{"name": "embed", "shape": [64, 64]}],
+              "n_floats": 4096,
+              "eval_accuracy": {"1": 0.9, "2": 0.5},
+              "files": {"prefill": "small_prefill.hlo.txt",
+                        "decode": "small_decode.hlo.txt",
+                        "params": "small_params.bin"}
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = crate::util::testfs::TempDir::new("manifest").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), sample()).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.task.data_vocab, 60);
+        let t = &m.tiers["small"];
+        assert_eq!(t.config.d_model, 64);
+        assert_eq!(t.params[0].numel(), 4096);
+        assert_eq!(t.eval_accuracy[&1], 0.9);
+        assert_eq!(m.cascade_order()[0].config.name, "small");
+    }
+
+    #[test]
+    fn missing_file_is_actionable() {
+        let dir = crate::util::testfs::TempDir::new("manifest").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! This is the only place the `xla` crate is touched. The flow is
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`; artifacts are produced once by
+//! `python/compile/aot.py` (`make artifacts`) and Python never runs on
+//! the request path.
+
+pub mod backend;
+mod engine;
+mod manifest;
+
+pub use backend::{pjrt_factory, PjrtTierBackend, TaskJudger};
+pub use engine::{ModelExecutable, PrefillResult, TierRuntime};
+pub use manifest::{Manifest, ParamEntry, TaskSpec, TierConfig, TierManifest};

@@ -1,0 +1,593 @@
+//! Inner optimization (§3.2): MILP-based GPU allocation + parallelism
+//! strategy search.
+//!
+//! Given the per-tier workloads `w_i` implied by a routing strategy,
+//! this level:
+//!
+//! 1. precomputes `l_i(f) = S(w_i, f)` for every tier i and GPU count
+//!    f ∈ {1..N} — where `S` enumerates all feasible parallelism
+//!    strategies ([`crate::parallel`]) and scores them with the
+//!    analytic simulator ([`crate::sim::analytic`]), keeping the best;
+//! 2. solves the assignment MILP: binaries `x_{i,f}` (exactly one f per
+//!    tier), budget `Σ f·x_{i,f} = N`, objective `min L` with
+//!    `L ≥ Σ_f l_i(f)·x_{i,f}`; infeasible (memory-floor) pairs are
+//!    excluded, matching the paper's explicit `x_{i,f} = 0` fixing.
+//!
+//! Tiers with zero routed traffic are not deployed (f = 0) — the
+//! tier-subset behaviour of Table 1's (80,3)/(70,3) rows. An exact
+//! dynamic program over the same `l_i(f)` tables cross-checks the MILP
+//! (property-tested equal); `InnerOptions::use_milp` selects which one
+//! answers.
+//!
+//! Results are memoized on a quantized workload key so the outer
+//! Tchebycheff sweep (hundreds of routing candidates) stays fast.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::milp::simplex::Sense;
+use crate::milp::{MilpProblem, Rel};
+use crate::models::ModelSpec;
+use crate::parallel::{enumerate_strategies, Strategy};
+use crate::perf::{ReplicaModel, Workload};
+use crate::sim::analytic::OVERLOAD_LATENCY;
+
+/// Options for the inner solver.
+#[derive(Debug, Clone)]
+pub struct InnerOptions {
+    /// Solve the assignment with the MILP (paper §3.2); otherwise use
+    /// the exact DP (same optimum; used for cross-checks and speed).
+    pub use_milp: bool,
+    /// Ablation (Figure 11 i): force the uniform strategy — TP within a
+    /// server, DP across servers — instead of searching.
+    pub uniform_parallelism: bool,
+    /// Ablation (Figure 11 ii): force equal GPU split across deployed
+    /// tiers instead of optimizing the allocation.
+    pub uniform_allocation: bool,
+}
+
+impl Default for InnerOptions {
+    fn default() -> Self {
+        InnerOptions {
+            use_milp: true,
+            uniform_parallelism: false,
+            uniform_allocation: false,
+        }
+    }
+}
+
+/// Inner-level result.
+#[derive(Debug, Clone)]
+pub struct InnerSolution {
+    /// GPUs per tier (f_i; 0 = not deployed).
+    pub gpus: Vec<usize>,
+    /// Chosen strategy per tier (None iff f_i = 0).
+    pub strategies: Vec<Option<Strategy>>,
+    /// Predicted p95 per tier (0 for undeployed tiers).
+    pub tier_p95: Vec<f64>,
+    /// max_i tier_p95 — the MILP objective L.
+    pub max_latency: f64,
+    /// Branch-and-bound nodes (0 when the DP answered).
+    pub milp_nodes: usize,
+}
+
+/// Best parallelism strategy and its p95 for (model, budget, workload).
+pub fn best_strategy_for(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    budget: usize,
+    w: &Workload,
+    uniform: bool,
+) -> Option<(Strategy, f64)> {
+    if budget == 0 {
+        return None;
+    }
+    let avg_ctx = w.avg_input + w.avg_output / 2.0;
+    // One ReplicaModel per distinct (tp, pp) design — the enumeration
+    // visits thousands of strategies built from tens of designs
+    // (EXPERIMENTS.md §Perf).
+    let mut design_cache: HashMap<(usize, usize), ReplicaModel> = HashMap::new();
+    let mut score = |s: &Strategy| -> f64 {
+        for g in &s.groups {
+            design_cache
+                .entry((g.tp, g.pp))
+                .or_insert_with(|| ReplicaModel::new(model, cluster, g.tp, g.pp, avg_ctx));
+        }
+        let groups: Vec<(&ReplicaModel, usize)> = s
+            .groups
+            .iter()
+            .map(|g| (&design_cache[&(g.tp, g.pp)], g.count))
+            .collect();
+        crate::sim::analytic::estimate_p95_groups(&groups, w)
+    };
+
+    if uniform {
+        // TP within a server, DP across: replica = TP over
+        // min(budget, gpus_per_server) (largest feasible power of two),
+        // replicated over the remaining GPUs.
+        let mut tp = cluster.gpus_per_server.min(budget);
+        while tp > 1 && (!tp.is_power_of_two()
+            || !crate::parallel::design_feasible(model, cluster, tp, 1))
+        {
+            tp -= 1;
+        }
+        if !crate::parallel::design_feasible(model, cluster, tp, 1) {
+            return None;
+        }
+        let count = (budget / tp).max(1);
+        let s = Strategy::uniform(tp, 1, count);
+        if s.gpus() > budget {
+            return None;
+        }
+        let p = score(&s);
+        return Some((s, p));
+    }
+
+    let mut best: Option<(Strategy, f64)> = None;
+    for s in enumerate_strategies(model, cluster, budget) {
+        let p = score(&s);
+        match &best {
+            Some((_, bp)) if *bp <= p => {}
+            _ => best = Some((s, p)),
+        }
+    }
+    best
+}
+
+/// Latency table: l[tier][f] for f in 0..=n_gpus (index 0 unused for
+/// deployed tiers), plus the strategy that achieved each entry.
+#[derive(Debug, Clone)]
+pub struct LatencyTable {
+    pub l: Vec<Vec<f64>>,
+    pub strategies: Vec<Vec<Option<Strategy>>>,
+}
+
+/// The inner solver with its memo cache. One instance is reused across
+/// an entire outer-level sweep.
+pub struct InnerSolver {
+    pub cascade: Vec<ModelSpec>,
+    pub cluster: ClusterSpec,
+    pub opts: InnerOptions,
+    /// (tier, quantized workload, n_gpus) -> full l_i(f) curve.
+    #[allow(clippy::type_complexity)]
+    curve_cache: Mutex<HashMap<(usize, u64, usize), (Vec<f64>, Vec<Option<Strategy>>)>>,
+}
+
+/// Quantize a workload for memoization: 2% rate buckets, 5% length
+/// buckets (log-scaled). The simulator's own tolerance dwarfs this.
+fn quantize(w: &Workload) -> u64 {
+    let q = |x: f64, step: f64| -> u64 {
+        if x <= 0.0 {
+            0
+        } else {
+            ((x.ln() / step).round() as i64).unsigned_abs()
+        }
+    };
+    q(w.rate, 0.02) ^ (q(w.avg_input, 0.05) << 21) ^ (q(w.avg_output, 0.05) << 42)
+}
+
+impl InnerSolver {
+    pub fn new(cascade: Vec<ModelSpec>, cluster: ClusterSpec, opts: InnerOptions) -> InnerSolver {
+        InnerSolver { cascade, cluster, opts, curve_cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// The full `l_i(f)` curve for one tier: enumerate strategies ONCE
+    /// at the full budget, score each, then take the running min over
+    /// `f >= gpus(s)` — a strategy's latency does not depend on the
+    /// budget it sits inside, so per-f re-enumeration is pure waste
+    /// (32x saving; EXPERIMENTS.md §Perf).
+    fn curve(&self, tier: usize, w: &Workload, n_gpus: usize) -> (Vec<f64>, Vec<Option<Strategy>>) {
+        let key = (tier, quantize(w), n_gpus);
+        if let Some(hit) = self.curve_cache.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
+        let model = &self.cascade[tier];
+        let mut l = vec![OVERLOAD_LATENCY; n_gpus + 1];
+        let mut strategies: Vec<Option<Strategy>> = vec![None; n_gpus + 1];
+
+        if self.opts.uniform_parallelism {
+            // The ablation's uniform strategy depends on f directly.
+            for f in 1..=n_gpus {
+                if let Some((s, p)) =
+                    best_strategy_for(model, &self.cluster, f, w, true)
+                {
+                    l[f] = p;
+                    strategies[f] = Some(s);
+                }
+            }
+        } else {
+            let avg_ctx = w.avg_input + w.avg_output / 2.0;
+            let mut design_cache: HashMap<(usize, usize), ReplicaModel> = HashMap::new();
+            for s in enumerate_strategies(model, &self.cluster, n_gpus) {
+                for g in &s.groups {
+                    design_cache.entry((g.tp, g.pp)).or_insert_with(|| {
+                        ReplicaModel::new(model, &self.cluster, g.tp, g.pp, avg_ctx)
+                    });
+                }
+                let groups: Vec<(&ReplicaModel, usize)> = s
+                    .groups
+                    .iter()
+                    .map(|g| (&design_cache[&(g.tp, g.pp)], g.count))
+                    .collect();
+                let p = crate::sim::analytic::estimate_p95_groups(&groups, w);
+                let f = s.gpus();
+                if f <= n_gpus && p < l[f] {
+                    l[f] = p;
+                    strategies[f] = Some(s);
+                }
+            }
+            // Running min: a budget f may be served best by a strategy
+            // using fewer GPUs.
+            for f in 2..=n_gpus {
+                if l[f - 1] < l[f] {
+                    l[f] = l[f - 1];
+                    strategies[f] = strategies[f - 1].clone();
+                }
+            }
+        }
+        let out = (l, strategies);
+        self.curve_cache.lock().unwrap().insert(key, out.clone());
+        out
+    }
+
+    /// Precompute l_i(f) for all tiers and budgets.
+    pub fn tables(&self, tier_workloads: &[Workload], n_gpus: usize) -> LatencyTable {
+        let c = self.cascade.len();
+        let mut l = vec![vec![OVERLOAD_LATENCY; n_gpus + 1]; c];
+        let mut strategies = vec![vec![None; n_gpus + 1]; c];
+        for (i, w) in tier_workloads.iter().enumerate() {
+            if w.rate <= 0.0 {
+                continue; // undeployed tier: no table needed
+            }
+            let (li, si) = self.curve(i, w, n_gpus);
+            l[i] = li;
+            strategies[i] = si;
+        }
+        LatencyTable { l, strategies }
+    }
+
+    /// Solve the inner problem for the given per-tier workloads.
+    pub fn solve(&self, tier_workloads: &[Workload], n_gpus: usize) -> Result<InnerSolution> {
+        let c = self.cascade.len();
+        assert_eq!(tier_workloads.len(), c);
+        let active: Vec<usize> =
+            (0..c).filter(|&i| tier_workloads[i].rate > 0.0).collect();
+        if active.is_empty() {
+            bail!("no tier has traffic");
+        }
+
+        let table = self.tables(tier_workloads, n_gpus);
+
+        // Warm start: the exact DP optimum (provably equal to the MILP
+        // optimum on this family) primes branch-and-bound pruning; the
+        // MILP still runs and certifies optimality, ~1000x faster
+        // (EXPERIMENTS.md §Perf).
+        let dp_bound: Option<f64> = if self.opts.use_milp && !self.opts.uniform_allocation {
+            solve_dp(&table, &active, n_gpus, c).ok().map(|alloc| {
+                active
+                    .iter()
+                    .map(|&i| table.l[i][alloc[i]])
+                    .fold(0.0f64, f64::max)
+            })
+        } else {
+            None
+        };
+
+        let alloc: Vec<usize> = if self.opts.uniform_allocation {
+            // Ablation: equal split over active tiers (remainder to the
+            // largest tier, mimicking "uniform resource allocation").
+            let share = n_gpus / active.len();
+            let mut a = vec![0usize; c];
+            for &i in &active {
+                a[i] = share;
+            }
+            let used: usize = a.iter().sum();
+            if let Some(&last) = active.last() {
+                a[last] += n_gpus - used;
+            }
+            a
+        } else if self.opts.use_milp {
+            self.solve_milp(&table, &active, n_gpus, dp_bound)?
+        } else {
+            solve_dp(&table, &active, n_gpus, self.cascade.len())?
+        };
+
+        let mut strategies = vec![None; c];
+        let mut tier_p95 = vec![0.0; c];
+        let mut max_latency: f64 = 0.0;
+        for &i in &active {
+            let f = alloc[i];
+            if f == 0 || table.l[i][f] >= OVERLOAD_LATENCY {
+                bail!(
+                    "tier {} ({}) has traffic but no feasible allocation (f={})",
+                    i,
+                    self.cascade[i].name,
+                    f
+                );
+            }
+            strategies[i] = table.strategies[i][f].clone();
+            tier_p95[i] = table.l[i][f];
+            max_latency = max_latency.max(tier_p95[i]);
+        }
+
+        Ok(InnerSolution {
+            gpus: alloc,
+            strategies,
+            tier_p95,
+            max_latency,
+            milp_nodes: 0,
+        })
+    }
+
+    /// §3.2 MILP: variables x_{i,f} (binary, for active tiers and
+    /// feasible f) and L (continuous, last variable).
+    fn solve_milp(
+        &self,
+        table: &LatencyTable,
+        active: &[usize],
+        n_gpus: usize,
+        warm_bound: Option<f64>,
+    ) -> Result<Vec<usize>> {
+        // Variable layout: for each active tier, one binary per feasible
+        // f; then L.
+        let mut var_of: Vec<Vec<(usize, usize)>> = Vec::new(); // per active tier: (var, f)
+        let mut n_vars = 0usize;
+        for &i in active {
+            let mut vars = Vec::new();
+            for f in 1..=n_gpus {
+                if table.l[i][f] < OVERLOAD_LATENCY {
+                    vars.push((n_vars, f));
+                    n_vars += 1;
+                }
+            }
+            if vars.is_empty() {
+                bail!("tier {i} has no feasible GPU allocation");
+            }
+            var_of.push(vars);
+        }
+        let l_var = n_vars;
+        n_vars += 1;
+
+        let mut obj = vec![0.0; n_vars];
+        obj[l_var] = 1.0;
+        let mut p = MilpProblem::new(n_vars, obj, Sense::Minimize);
+        p.initial_upper_bound = warm_bound;
+
+        // (i) exactly one f per tier.
+        for vars in &var_of {
+            let mut row = vec![0.0; n_vars];
+            for &(v, _) in vars {
+                row[v] = 1.0;
+            }
+            p.constrain(row, Rel::Eq, 1.0);
+        }
+        // (ii) GPU budget: sum f x_{i,f} = N.
+        let mut row = vec![0.0; n_vars];
+        for vars in &var_of {
+            for &(v, f) in vars {
+                row[v] = f as f64;
+            }
+        }
+        p.constrain(row, Rel::Eq, n_gpus as f64);
+        // (iii) L >= sum_f l_i(f) x_{i,f}.
+        for (ai, &i) in active.iter().enumerate() {
+            let mut row = vec![0.0; n_vars];
+            for &(v, f) in &var_of[ai] {
+                row[v] = table.l[i][f];
+            }
+            row[l_var] = -1.0;
+            p.constrain(row, Rel::Le, 0.0);
+        }
+        for vars in &var_of {
+            for &(v, _) in vars {
+                p.set_binary(v);
+            }
+        }
+
+        let sol = p
+            .solve()
+            .map_err(|e| anyhow::anyhow!("inner MILP failed: {e}"))?;
+        let mut alloc = vec![0usize; self.cascade.len()];
+        for (ai, &i) in active.iter().enumerate() {
+            for &(v, f) in &var_of[ai] {
+                if sol.x[v] > 0.5 {
+                    alloc[i] = f;
+                }
+            }
+        }
+        Ok(alloc)
+    }
+}
+
+/// Exact DP over the same tables: dp[t][g] = min over f of
+/// max(l_t(f), dp[t-1][g-f]), budget consumed exactly.
+pub fn solve_dp(
+    table: &LatencyTable,
+    active: &[usize],
+    n_gpus: usize,
+    n_tiers: usize,
+) -> Result<Vec<usize>> {
+    let t = active.len();
+    const INF: f64 = f64::INFINITY;
+    // dp[g] after processing k tiers; choice[k][g] = f chosen.
+    let mut dp = vec![INF; n_gpus + 1];
+    dp[0] = 0.0;
+    let mut choice = vec![vec![0usize; n_gpus + 1]; t];
+    for (k, &i) in active.iter().enumerate() {
+        let mut next = vec![INF; n_gpus + 1];
+        for g in 0..=n_gpus {
+            if dp[g].is_infinite() {
+                continue;
+            }
+            for f in 1..=(n_gpus - g) {
+                let li = table.l[i][f];
+                if li >= OVERLOAD_LATENCY {
+                    continue;
+                }
+                let v = dp[g].max(li);
+                if v < next[g + f] {
+                    next[g + f] = v;
+                    choice[k][g + f] = f;
+                }
+            }
+        }
+        dp = next;
+    }
+    if dp[n_gpus].is_infinite() {
+        bail!("DP: no feasible allocation for budget {n_gpus}");
+    }
+    // Backtrack.
+    let mut alloc = vec![0usize; n_tiers];
+    let mut g = n_gpus;
+    for k in (0..t).rev() {
+        let f = choice[k][g];
+        alloc[active[k]] = f;
+        g -= f;
+    }
+    Ok(alloc)
+}
+
+/// Convenience one-shot API.
+pub fn solve_inner(
+    cascade: &[ModelSpec],
+    cluster: &ClusterSpec,
+    tier_workloads: &[Workload],
+    n_gpus: usize,
+    opts: &InnerOptions,
+) -> Result<InnerSolution> {
+    InnerSolver::new(cascade.to_vec(), cluster.clone(), opts.clone())
+        .solve(tier_workloads, n_gpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::paper_testbed()
+    }
+
+    fn workloads(rates: [f64; 3]) -> Vec<Workload> {
+        rates
+            .iter()
+            .map(|&r| Workload { rate: r, avg_input: 512.0, avg_output: 256.0 })
+            .collect()
+    }
+
+    #[test]
+    fn allocation_sums_to_budget() {
+        let sol = solve_inner(
+            &deepseek_cascade(),
+            &cluster(),
+            &workloads([6.0, 2.0, 0.5]),
+            32,
+            &InnerOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(sol.gpus.iter().sum::<usize>(), 32);
+        for (f, s) in sol.gpus.iter().zip(&sol.strategies) {
+            assert_eq!(*f > 0, s.is_some());
+            if let Some(s) = s {
+                assert!(s.gpus() <= *f);
+            }
+        }
+        assert!(sol.max_latency < 100.0, "latency {}", sol.max_latency);
+    }
+
+    #[test]
+    fn zero_rate_tier_is_undeployed() {
+        let sol = solve_inner(
+            &deepseek_cascade(),
+            &cluster(),
+            &workloads([6.0, 2.0, 0.0]),
+            32,
+            &InnerOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(sol.gpus[2], 0);
+        assert!(sol.strategies[2].is_none());
+        assert_eq!(sol.gpus.iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn milp_matches_dp() {
+        let cascade = deepseek_cascade();
+        let c = cluster();
+        for rates in [[6.0, 2.0, 0.5], [3.0, 3.0, 1.0], [10.0, 1.0, 0.2]] {
+            let milp = solve_inner(&cascade, &c, &workloads(rates), 32,
+                &InnerOptions { use_milp: true, ..Default::default() }).unwrap();
+            let dp = solve_inner(&cascade, &c, &workloads(rates), 32,
+                &InnerOptions { use_milp: false, ..Default::default() }).unwrap();
+            assert!(
+                (milp.max_latency - dp.max_latency).abs() < 1e-6,
+                "rates {rates:?}: milp {} dp {}",
+                milp.max_latency,
+                dp.max_latency
+            );
+        }
+    }
+
+    #[test]
+    fn more_loaded_tier_gets_more_gpus() {
+        // Same model in all tiers isolates the load effect.
+        let m = deepseek_cascade()[1].clone();
+        let cascade = vec![m.clone(), m.clone(), m];
+        let sol = solve_inner(
+            &cascade,
+            &cluster(),
+            &workloads([4.0, 2.0, 0.5]),
+            32,
+            &InnerOptions::default(),
+        )
+        .unwrap();
+        assert!(sol.gpus[0] >= sol.gpus[1], "{:?}", sol.gpus);
+        assert!(sol.gpus[1] >= sol.gpus[2], "{:?}", sol.gpus);
+    }
+
+    #[test]
+    fn uniform_allocation_is_worse_or_equal() {
+        let cascade = deepseek_cascade();
+        let opt = solve_inner(&cascade, &cluster(), &workloads([6.0, 2.0, 0.5]), 32,
+            &InnerOptions::default()).unwrap();
+        let uni = solve_inner(&cascade, &cluster(), &workloads([6.0, 2.0, 0.5]), 32,
+            &InnerOptions { uniform_allocation: true, ..Default::default() }).unwrap();
+        assert!(opt.max_latency <= uni.max_latency + 1e-9);
+    }
+
+    #[test]
+    fn uniform_parallelism_is_worse_or_equal() {
+        let cascade = deepseek_cascade();
+        let opt = solve_inner(&cascade, &cluster(), &workloads([6.0, 2.0, 0.5]), 32,
+            &InnerOptions::default()).unwrap();
+        let uni = solve_inner(&cascade, &cluster(), &workloads([6.0, 2.0, 0.5]), 32,
+            &InnerOptions { uniform_parallelism: true, ..Default::default() }).unwrap();
+        assert!(opt.max_latency <= uni.max_latency + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        // 2 GPUs cannot hold the 671B tier if it has traffic.
+        let err = solve_inner(
+            &deepseek_cascade(),
+            &cluster(),
+            &workloads([1.0, 0.0, 0.5]),
+            2,
+            &InnerOptions::default(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn memoization_returns_identical_results() {
+        let solver = InnerSolver::new(deepseek_cascade(), cluster(), InnerOptions::default());
+        let w = workloads([6.0, 2.0, 0.5]);
+        let a = solver.solve(&w, 32).unwrap();
+        let b = solver.solve(&w, 32).unwrap();
+        assert_eq!(a.gpus, b.gpus);
+        assert_eq!(a.max_latency, b.max_latency);
+    }
+}

@@ -1,0 +1,21 @@
+//! The bi-level scheduling algorithm — Cascadia's core contribution
+//! (§3).
+//!
+//! * [`inner`] — given a routing strategy (per-tier workloads), find
+//!   the GPU allocation and parallelism strategy per tier minimizing
+//!   the maximum per-tier p95 latency, via MILP over precomputed
+//!   `l_i(f)` tables (with an exact DP cross-check).
+//! * [`outer`] — weighted Tchebycheff sweep over routing thresholds:
+//!   evaluate candidate thresholds, call the inner level for each,
+//!   scalarize (latency, quality) against the utopia point, and emit
+//!   the Pareto front; [`outer::select_plan`] then picks the plan for a
+//!   quality requirement.
+//! * [`plan`] — the `CascadePlan` artifact handed to the coordinator.
+
+pub mod inner;
+pub mod outer;
+pub mod plan;
+
+pub use inner::{solve_inner, InnerOptions, InnerSolution};
+pub use outer::{optimize, select_plan, OuterOptions, ParetoPoint};
+pub use plan::{CascadePlan, TierPlan};

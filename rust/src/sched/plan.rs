@@ -1,0 +1,172 @@
+//! The cascade plan: the scheduler's output artifact, consumed by the
+//! serving coordinator and printed by the case-study benches
+//! (Tables 1-2).
+
+use crate::parallel::Strategy;
+use crate::perf::Workload;
+use crate::router::Thresholds;
+use crate::util::json::Json;
+
+/// Deployment decision for one model tier.
+#[derive(Debug, Clone)]
+pub struct TierPlan {
+    pub model_name: String,
+    /// GPUs allocated (f_i); 0 means the tier is not deployed.
+    pub gpus: usize,
+    /// Parallelism strategy; `None` iff gpus == 0.
+    pub strategy: Option<Strategy>,
+    /// Workload this tier is expected to see.
+    pub workload: Workload,
+    /// Fraction of all requests this tier processes (p_i).
+    pub processing_ratio: f64,
+    /// Predicted p95 latency of this tier (seconds).
+    pub predicted_p95: f64,
+}
+
+/// The full cascade plan (§3.1's "cascade plan").
+#[derive(Debug, Clone)]
+pub struct CascadePlan {
+    pub thresholds: Thresholds,
+    pub tiers: Vec<TierPlan>,
+    /// max_i predicted p95 — the inner objective L(θ).
+    pub predicted_latency: f64,
+    /// Judged quality Q(θ).
+    pub predicted_quality: f64,
+}
+
+impl CascadePlan {
+    /// Total GPUs used.
+    pub fn total_gpus(&self) -> usize {
+        self.tiers.iter().map(|t| t.gpus).sum()
+    }
+
+    /// Tiers that are actually deployed.
+    pub fn deployed(&self) -> impl Iterator<Item = &TierPlan> {
+        self.tiers.iter().filter(|t| t.gpus > 0)
+    }
+
+    /// Render as JSON for configs/results.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "thresholds",
+                Json::arr(self.thresholds.0.iter().map(|&h| Json::num(h)).collect()),
+            ),
+            ("predicted_latency", Json::num(self.predicted_latency)),
+            ("predicted_quality", Json::num(self.predicted_quality)),
+            (
+                "tiers",
+                Json::arr(
+                    self.tiers
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("model", Json::str(t.model_name.clone())),
+                                ("gpus", Json::num(t.gpus as f64)),
+                                (
+                                    "strategy",
+                                    t.strategy
+                                        .as_ref()
+                                        .map(|s| Json::str(s.label()))
+                                        .unwrap_or(Json::Null),
+                                ),
+                                ("processing_ratio", Json::num(t.processing_ratio)),
+                                ("rate", Json::num(t.workload.rate)),
+                                ("avg_input", Json::num(t.workload.avg_input)),
+                                ("avg_output", Json::num(t.workload.avg_output)),
+                                ("predicted_p95", Json::num(t.predicted_p95)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line summary for logs, in the paper's notation.
+    pub fn summary(&self) -> String {
+        let h = self
+            .thresholds
+            .0
+            .iter()
+            .map(|h| format!("{h:.0}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let tiers = self
+            .tiers
+            .iter()
+            .map(|t| {
+                let s = t
+                    .strategy
+                    .as_ref()
+                    .map(|s| s.label())
+                    .unwrap_or_else(|| "-".to_string());
+                format!("{}: f={} {} p={:.0}%", t.model_name, t.gpus, s, t.processing_ratio * 100.0)
+            })
+            .collect::<Vec<_>>()
+            .join(" | ");
+        format!(
+            "H=({h}) L={:.2}s Q={:.1} :: {tiers}",
+            self.predicted_latency, self.predicted_quality
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::Strategy;
+
+    fn sample() -> CascadePlan {
+        CascadePlan {
+            thresholds: Thresholds(vec![70.0, 50.0]),
+            tiers: vec![
+                TierPlan {
+                    model_name: "small".into(),
+                    gpus: 4,
+                    strategy: Some(Strategy::uniform(1, 1, 4)),
+                    workload: Workload { rate: 4.0, avg_input: 500.0, avg_output: 250.0 },
+                    processing_ratio: 1.0,
+                    predicted_p95: 2.0,
+                },
+                TierPlan {
+                    model_name: "large".into(),
+                    gpus: 0,
+                    strategy: None,
+                    workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
+                    processing_ratio: 0.0,
+                    predicted_p95: 0.0,
+                },
+            ],
+            predicted_latency: 2.0,
+            predicted_quality: 75.0,
+        }
+    }
+
+    #[test]
+    fn totals_and_deployed() {
+        let p = sample();
+        assert_eq!(p.total_gpus(), 4);
+        assert_eq!(p.deployed().count(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let p = sample();
+        let j = p.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.req("predicted_quality").unwrap().as_f64().unwrap(), 75.0);
+        let tiers = parsed.req("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].req("strategy").unwrap().as_str().unwrap(), "(DP=4)");
+        assert_eq!(tiers[1].req("strategy").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = sample().summary();
+        assert!(s.contains("H=(70,50)"), "{s}");
+        assert!(s.contains("f=4"), "{s}");
+        assert!(s.contains("Q=75.0"), "{s}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Closed-form p95 latency estimate for a replica pool.
+//!
+//! Model: the pool is a set of heterogeneous servers under
+//! probabilistic routing proportional to capacity (so every replica
+//! runs at the same utilization rho). Each replica's base service time
+//! is the no-queueing request latency (prefill + decode iterations at
+//! the replica's steady batch size); queueing inflates the tail by the
+//! M/G/1-PS-like factor 1/(1-rho). p95 of a roughly lognormal latency
+//! distribution sits ~1.6 sigma above the mean; we fold that and the
+//! inflation into:
+//!
+//!   p95 ≈ base_p95 * (1 + K_QUEUE * rho / (1 - rho))
+//!
+//! with `base_p95 = base_mean * P95_OVER_MEAN`. The constants were
+//! calibrated once against the discrete-event simulator (see
+//! `analytic_matches_des_ordering` in `rust/tests/scheduler_integration.rs`) and
+//! are deliberately simple: the scheduler only needs correct *ordering*
+//! of candidate strategies; final plans are re-scored by the DES.
+
+use crate::perf::{ReplicaModel, Workload};
+
+/// Tail inflation applied on top of the mean under queueing.
+pub const K_QUEUE: f64 = 0.8;
+/// p95/mean ratio of the per-request latency distribution at low load.
+pub const P95_OVER_MEAN: f64 = 1.2;
+/// Latency assigned to infeasible/overloaded configurations (seconds).
+pub const OVERLOAD_LATENCY: f64 = 1e6;
+
+/// Estimated p95 latency (seconds) of `replicas` serving `w`.
+///
+/// Returns [`OVERLOAD_LATENCY`] when the pool cannot sustain the
+/// arrival rate (rho >= 1) or has no usable replica.
+pub fn estimate_p95(replicas: &[ReplicaModel], w: &Workload) -> f64 {
+    let groups: Vec<(&ReplicaModel, usize)> = replicas.iter().map(|r| (r, 1)).collect();
+    estimate_p95_groups(&groups, w)
+}
+
+/// Like [`estimate_p95`] but over (design, replica-count) groups, so
+/// identical replicas are modeled once — the strategy-enumeration hot
+/// path (EXPERIMENTS.md §Perf).
+pub fn estimate_p95_groups(groups: &[(&ReplicaModel, usize)], w: &Workload) -> f64 {
+    if groups.is_empty() {
+        return OVERLOAD_LATENCY;
+    }
+    let capacities: Vec<f64> = groups
+        .iter()
+        .map(|(r, n)| r.capacity(w) * *n as f64)
+        .collect();
+    let total_capacity: f64 = capacities.iter().sum();
+    if total_capacity <= 0.0 {
+        return OVERLOAD_LATENCY;
+    }
+    let rho = w.rate / total_capacity;
+    if rho >= 0.995 {
+        return OVERLOAD_LATENCY;
+    }
+
+    // Capacity-proportional routing: replica r sees rate rho * cap_r and
+    // contributes its base latency weighted by its share of traffic.
+    let mut base_mean = 0.0;
+    for ((r, n), cap_group) in groups.iter().zip(&capacities) {
+        if *cap_group <= 0.0 {
+            continue;
+        }
+        // Per-replica share within the pool.
+        let share = cap_group / total_capacity / *n as f64;
+        // Steady batch at this replica under its share of the load:
+        // b ≈ rate_r * avg_output * iter_time solved self-consistently;
+        // a fixed-point iteration converges in a few steps.
+        // Steady batch via Little's law: requests resident in decode =
+        // arrival rate x decode residence time (avg_output iterations);
+        // the fixed point converges in a few rounds.
+        let rate_r = w.rate * share;
+        let mut b = 1usize;
+        for _ in 0..8 {
+            let iter = r.decode_iteration(b);
+            let in_flight = rate_r * w.avg_output * iter;
+            b = (in_flight.ceil() as usize).clamp(1, r.max_batch.max(1));
+        }
+        let base = r.prefill_latency(w.avg_input) + w.avg_output * r.decode_iteration(b);
+        // Weight by the whole group's traffic share (share is per replica).
+        base_mean += share * *n as f64 * base;
+    }
+
+    base_mean * P95_OVER_MEAN * (1.0 + K_QUEUE * rho / (1.0 - rho))
+}
+
+/// Total sustainable request rate of a pool on workload `w`.
+pub fn pool_capacity(replicas: &[ReplicaModel], w: &Workload) -> f64 {
+    replicas.iter().map(|r| r.capacity(w)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::models::llama_cascade;
+
+    fn pool(tp: usize, n: usize) -> Vec<ReplicaModel> {
+        let m = &llama_cascade()[0];
+        let c = ClusterSpec::paper_testbed();
+        (0..n).map(|_| ReplicaModel::new(m, &c, tp, 1, 768.0)).collect()
+    }
+
+    fn w(rate: f64) -> Workload {
+        Workload { rate, avg_input: 512.0, avg_output: 256.0 }
+    }
+
+    #[test]
+    fn empty_pool_is_overloaded() {
+        assert_eq!(estimate_p95(&[], &w(1.0)), OVERLOAD_LATENCY);
+    }
+
+    #[test]
+    fn latency_increases_with_load() {
+        let pool = pool(2, 2);
+        let lo = estimate_p95(&pool, &w(0.5));
+        let cap = pool_capacity(&pool, &w(0.5));
+        let hi = estimate_p95(&pool, &w(cap * 0.9));
+        assert!(hi > lo, "hi {hi} <= lo {lo}");
+    }
+
+    #[test]
+    fn overload_detected() {
+        let pool = pool(2, 1);
+        let cap = pool_capacity(&pool, &w(1.0));
+        assert_eq!(estimate_p95(&pool, &w(cap * 1.1)), OVERLOAD_LATENCY);
+    }
+
+    #[test]
+    fn more_replicas_cut_latency_at_fixed_rate() {
+        let rate = {
+            let p = pool(2, 2);
+            pool_capacity(&p, &w(1.0)) * 0.8
+        };
+        let two = estimate_p95(&pool(2, 2), &w(rate));
+        let four = estimate_p95(&pool(2, 4), &w(rate));
+        assert!(four < two);
+    }
+
+    #[test]
+    fn estimate_is_finite_and_positive_under_light_load() {
+        let p = pool(4, 2);
+        let est = estimate_p95(&p, &w(0.1));
+        assert!(est > 0.0 && est < 100.0, "{est}");
+    }
+}

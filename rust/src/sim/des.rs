@@ -1,0 +1,368 @@
+//! Discrete-event simulation of a replica pool with continuous
+//! batching.
+//!
+//! Fidelity targets the behaviors the paper's evaluation depends on:
+//!
+//! * **iteration-level (continuous) batching** — requests join/leave
+//!   the running batch between decode iterations (Orca/vLLM semantics);
+//! * **prefill accounting** — admitting a request costs its prefill
+//!   latency in the iteration where it is admitted (chunked-prefill
+//!   approximation à la Sarathi);
+//! * **least-outstanding-work dispatch** across a model type's
+//!   replicas, matching the coordinator's real dispatcher;
+//! * **KV-capacity limits** per replica (`ReplicaModel::max_batch`).
+//!
+//! Time is f64 seconds on a binary-heap event queue. The simulator is
+//! deterministic given the request trace.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+use crate::perf::ReplicaModel;
+use crate::util::stats;
+
+/// One request as the simulator sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct SimRequest {
+    /// Arrival time, seconds from simulation start.
+    pub arrival: f64,
+    /// Prompt tokens.
+    pub input_tokens: u32,
+    /// Tokens to generate.
+    pub output_tokens: u32,
+}
+
+/// Aggregate outcome of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Per-request end-to-end latencies (completion - arrival), in
+    /// completion order.
+    pub latencies: Vec<f64>,
+    /// Completed requests / makespan.
+    pub throughput_rps: f64,
+    /// Generated tokens / makespan.
+    pub tokens_per_sec: f64,
+    /// Total wall-clock of the run.
+    pub makespan: f64,
+    /// Mean busy fraction across replicas.
+    pub utilization: f64,
+    /// Absolute completion time per request, aligned with the input
+    /// trace order (used to chain cascade tiers).
+    pub completions: Vec<f64>,
+}
+
+impl SimOutcome {
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.latencies, 0.95)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.latencies, 0.50)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    /// Fraction of requests within `slo` seconds.
+    pub fn slo_attainment(&self, slo: f64) -> f64 {
+        stats::fraction_within(&self.latencies, slo)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival(usize),
+    IterDone(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed compare; ties broken by sequence for
+        // determinism.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ActiveReq {
+    id: usize,
+    remaining: u32,
+}
+
+struct Replica<'a> {
+    model: &'a ReplicaModel,
+    queue: VecDeque<usize>,
+    active: Vec<ActiveReq>,
+    busy_until: f64,
+    busy_time: f64,
+    /// Outstanding work estimate (tokens), for dispatch.
+    backlog_tokens: f64,
+}
+
+impl<'a> Replica<'a> {
+    fn idle(&self, now: f64) -> bool {
+        self.busy_until <= now
+    }
+}
+
+/// Run the simulation of `replicas` (one model type's pool) over a
+/// request trace sorted by arrival time.
+pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
+    assert!(!replicas.is_empty(), "simulate() with no replicas");
+    let usable: Vec<&ReplicaModel> =
+        replicas.iter().filter(|r| r.max_batch > 0).collect();
+    assert!(!usable.is_empty(), "no replica has KV capacity");
+
+    let mut pool: Vec<Replica> = usable
+        .iter()
+        .map(|m| Replica {
+            model: m,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            busy_until: 0.0,
+            busy_time: 0.0,
+            backlog_tokens: 0.0,
+        })
+        .collect();
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind| {
+        *seq += 1;
+        heap.push(Event { time, seq: *seq, kind });
+    };
+    for (id, r) in trace.iter().enumerate() {
+        push(&mut heap, &mut seq, r.arrival, EventKind::Arrival(id));
+    }
+
+    let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
+    let mut completed = 0usize;
+    let mut now = 0.0f64;
+    let mut total_tokens = 0u64;
+
+    while let Some(ev) = heap.pop() {
+        now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(id) => {
+                // Least-outstanding-work dispatch, normalized by a
+                // replica's decode speed so faster replicas attract
+                // proportionally more work.
+                let req = &trace[id];
+                let mut best = 0usize;
+                let mut best_score = f64::INFINITY;
+                for (i, rep) in pool.iter().enumerate() {
+                    let speed = rep.model.decode_throughput(rep.model.max_batch).max(1e-9);
+                    let score = rep.backlog_tokens / speed;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                let rep = &mut pool[best];
+                rep.queue.push_back(id);
+                rep.backlog_tokens += req.output_tokens as f64
+                    + req.input_tokens as f64 * 0.2; // prefill work weight
+                if rep.idle(now) {
+                    start_iteration(rep, best, now, trace, &mut heap, &mut seq);
+                }
+            }
+            EventKind::IterDone(ri) => {
+                let rep = &mut pool[ri];
+                // Every active request produced one token.
+                let mut still_active = Vec::with_capacity(rep.active.len());
+                for mut a in rep.active.drain(..) {
+                    a.remaining -= 1;
+                    total_tokens += 1;
+                    rep.backlog_tokens = (rep.backlog_tokens - 1.0).max(0.0);
+                    if a.remaining == 0 {
+                        latencies_by_id[a.id] = now - trace[a.id].arrival;
+                        completions[a.id] = now;
+                        completion_order.push(a.id);
+                        completed += 1;
+                    } else {
+                        still_active.push(a);
+                    }
+                }
+                rep.active = still_active;
+                if !rep.active.is_empty() || !rep.queue.is_empty() {
+                    start_iteration(rep, ri, now, trace, &mut heap, &mut seq);
+                }
+            }
+        }
+    }
+
+    assert_eq!(completed, trace.len(), "simulation lost requests");
+    let makespan = now.max(1e-9);
+    let utilization = stats::mean(
+        &pool.iter().map(|r| r.busy_time / makespan).collect::<Vec<_>>(),
+    );
+    SimOutcome {
+        latencies: completion_order
+            .iter()
+            .map(|&id| latencies_by_id[id])
+            .collect(),
+        throughput_rps: completed as f64 / makespan,
+        tokens_per_sec: total_tokens as f64 / makespan,
+        makespan,
+        utilization,
+        completions,
+    }
+}
+
+fn start_iteration(
+    rep: &mut Replica,
+    idx: usize,
+    now: f64,
+    trace: &[SimRequest],
+    heap: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+) {
+    // Admit waiting requests up to capacity; each admission charges its
+    // prefill into this iteration (chunked-prefill approximation).
+    let mut prefill_cost = 0.0;
+    while rep.active.len() < rep.model.max_batch {
+        let Some(id) = rep.queue.pop_front() else { break };
+        prefill_cost += rep.model.prefill_latency(trace[id].input_tokens as f64);
+        rep.active.push(ActiveReq { id, remaining: trace[id].output_tokens.max(1) });
+    }
+    debug_assert!(!rep.active.is_empty());
+    // decode_iteration() already carries the pipeline-depth latency;
+    // dividing by the capacity factor makes the DES's sustained
+    // token rate equal ReplicaModel::decode_throughput (pipelined
+    // microbatches recover stage concurrency).
+    let iter = rep.model.decode_iteration(rep.active.len())
+        / rep.model.pp_capacity_factor;
+    let dt = iter + prefill_cost;
+    rep.busy_until = now + dt;
+    rep.busy_time += dt;
+    *seq += 1;
+    heap.push(Event { time: rep.busy_until, seq: *seq, kind: EventKind::IterDone(idx) });
+    let _ = idx;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::models::llama_cascade;
+    use crate::perf::Workload;
+    use crate::util::rng::Rng;
+
+    fn replica(tp: usize) -> ReplicaModel {
+        let m = &llama_cascade()[0];
+        let c = ClusterSpec::paper_testbed();
+        ReplicaModel::new(m, &c, tp, 1, 768.0)
+    }
+
+    fn poisson_trace(rate: f64, n: usize, seed: u64) -> Vec<SimRequest> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += rng.exp(rate);
+                SimRequest { arrival: t, input_tokens: 512, output_tokens: 128 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(1.0, 200, 1);
+        let out = simulate(&pool, &trace);
+        assert_eq!(out.latencies.len(), 200);
+        assert!(out.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        let pool = vec![replica(2)];
+        let cap = pool[0].capacity(&Workload { rate: 1.0, avg_input: 512.0, avg_output: 128.0 });
+        let light = simulate(&pool, &poisson_trace(cap * 0.3, 400, 2));
+        let heavy = simulate(&pool, &poisson_trace(cap * 0.9, 400, 2));
+        assert!(
+            heavy.p95() > light.p95(),
+            "heavy {} <= light {}",
+            heavy.p95(),
+            light.p95()
+        );
+    }
+
+    #[test]
+    fn two_replicas_beat_one() {
+        let one = vec![replica(2)];
+        let cap = one[0].capacity(&Workload { rate: 1.0, avg_input: 512.0, avg_output: 128.0 });
+        let trace = poisson_trace(cap * 0.8, 500, 3);
+        let a = simulate(&one, &trace);
+        let b = simulate(&vec![replica(2), replica(2)], &trace);
+        assert!(b.p95() < a.p95());
+        assert!(b.utilization < a.utilization);
+    }
+
+    #[test]
+    fn deterministic() {
+        let pool = vec![replica(2), replica(4)];
+        let trace = poisson_trace(2.0, 300, 4);
+        let a = simulate(&pool, &trace);
+        let b = simulate(&pool, &trace);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn slo_attainment_monotone_in_scale() {
+        let pool = vec![replica(2)];
+        let out = simulate(&pool, &poisson_trace(2.0, 300, 5));
+        let base = out.mean();
+        let mut prev = 0.0;
+        for scale in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            let att = out.slo_attainment(base * scale);
+            assert!(att >= prev);
+            prev = att;
+        }
+    }
+
+    #[test]
+    fn heterogeneous_pool_faster_replica_does_more_work() {
+        // tp4 is faster than tp1; with least-work dispatch it should
+        // finish more requests. We proxy via utilization balance: both
+        // should be busy, neither starved.
+        let pool = vec![replica(1), replica(4)];
+        let trace = poisson_trace(4.0, 600, 6);
+        let out = simulate(&pool, &trace);
+        assert!(out.utilization > 0.05);
+        assert_eq!(out.latencies.len(), 600);
+    }
+
+    #[test]
+    #[should_panic(expected = "no replicas")]
+    fn empty_pool_panics() {
+        simulate(&[], &[]);
+    }
+}

@@ -1,0 +1,20 @@
+//! The inference latency simulator `S(w, f)` of §3.2.
+//!
+//! Two fidelities, used at different points of the bi-level scheduler:
+//!
+//! * [`analytic`] — closed-form queueing estimate of p95 latency for a
+//!   replica pool under a workload. O(1); used inside the strategy
+//!   enumeration loop where millions of candidate evaluations happen.
+//! * [`des`] — discrete-event simulation of continuous batching
+//!   (iteration-level admission, Sarathi-style prefill accounting,
+//!   least-work dispatch across replicas). Used to score final
+//!   candidate plans and to generate every end-to-end figure.
+//!
+//! The paper uses the ETH EASL "Scratchpad" simulator for the same
+//! role; this module is the from-scratch substrate replacing it.
+
+pub mod analytic;
+pub mod des;
+
+pub use analytic::estimate_p95;
+pub use des::{simulate, SimOutcome, SimRequest};

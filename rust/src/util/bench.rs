@@ -1,0 +1,162 @@
+//! Timing harness for the `[[bench]]` targets (criterion is not in the
+//! vendored crate set; benches are built with `harness = false`).
+//!
+//! Each measurement warms up, then runs timed iterations until both a
+//! minimum iteration count and a minimum wall-clock budget are met, and
+//! reports mean / p50 / p95 per-iteration times plus derived
+//! throughput. Used by `rust/benches/*` and the perf pass
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure budgets.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE iteration of the workload and
+    /// returns a value that is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            p50: Duration::from_secs_f64(stats::percentile_sorted(&samples, 0.50)),
+            p95: Duration::from_secs_f64(stats::percentile_sorted(&samples, 0.95)),
+            min: Duration::from_secs_f64(samples[0]),
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            m.name, m.iters, m.mean, m.p50, m.p95
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Adopt a measurement taken by another Bencher (e.g. a `quick()`
+    /// sub-run), so one CSV collects everything.
+    pub fn push_external(&mut self, m: Measurement) {
+        self.results.push(m);
+    }
+
+    /// Write results as CSV (appends rows: name,iters,mean_s,p50_s,p95_s).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("name,iters,mean_s,p50_s,p95_s,min_s\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                m.name,
+                m.iters,
+                m.mean.as_secs_f64(),
+                m.p50.as_secs_f64(),
+                m.p95.as_secs_f64(),
+                m.min.as_secs_f64()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        let m = b.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.p95 >= m.p50);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut b = Bencher::quick();
+        b.warmup = Duration::from_millis(1);
+        b.budget = Duration::from_millis(5);
+        b.bench("x", || 1 + 1);
+        let dir = crate::util::testfs::TempDir::new("bench").unwrap();
+        let path = dir.path().join("out.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,iters"));
+        assert!(text.contains("x,"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments; used by the main launcher and every figure
+//! binary.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: flags/options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an iterator of argument strings.
+    ///
+    /// A token starting with `--` is an option; if it contains `=`, the
+    /// value is inline, otherwise the *next* token is its value unless
+    /// that token itself starts with `--` (then it is a bare flag).
+    pub fn parse<I: IntoIterator<Item = S>, S: Into<String>>(items: I) -> Self {
+        let tokens: Vec<String> = items.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.opts.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(s) => Ok(s),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(["trace1", "--n", "32", "--mode=fast", "--verbose"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 32);
+        assert_eq!(a.str_or("mode", ""), "fast");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["trace1".to_string()]);
+        // NOTE: `--flag value` binds value to the flag (greedy); put
+        // positionals first or use `--flag` last.
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("anything"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.required("missing").is_err());
+    }
+}

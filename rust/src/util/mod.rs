@@ -1,0 +1,12 @@
+//! Shared substrates built from scratch for the offline environment:
+//! JSON parsing/serialization, a seedable PRNG with the distributions
+//! the workload generator needs, descriptive statistics, and a tiny
+//! CLI argument parser.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod bench;
+pub mod prop;
+pub mod stats;
+pub mod testfs;

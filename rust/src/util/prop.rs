@@ -1,0 +1,166 @@
+//! Minimal property-based testing harness (proptest is not in the
+//! vendored crate set).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with
+//! sized generators). [`check`] runs it over many seeds; on failure it
+//! re-runs the property at the failing seed with progressively smaller
+//! size bounds — a cheap form of shrinking — and reports the smallest
+//! seed/size that still fails so the case is reproducible.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `CASCADIA_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("CASCADIA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Current size bound; generators should scale with it.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    /// usize in [lo, hi] inclusive, additionally capped by `size`.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo.max(self.size));
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with length in [min_len, max_len∧size].
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize,
+                  mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.sized(min_len, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` for [`default_cases`] random cases. The property returns
+/// `Err(message)` (or panics) to signal failure.
+#[track_caller]
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    check_n(name, default_cases(), prop)
+}
+
+/// Run `prop` for `cases` random cases.
+#[track_caller]
+pub fn check_n<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let base_seed = 0xCA5CAD1Au64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 4 + (case as usize * 96 / cases.max(1) as usize);
+        if let Some(msg) = run_once(&prop, seed, size) {
+            // Shrink: retry the failing seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut fail_size = size;
+            let mut fail_msg = msg;
+            let mut s = size / 2;
+            while s >= 1 {
+                match run_once(&prop, seed, s) {
+                    Some(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                        s /= 2;
+                    }
+                    None => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 size {fail_size}): {fail_msg}\n\
+                 reproduce: run_once at that seed/size"
+            );
+        }
+    }
+}
+
+fn run_once<F>(prop: &F, seed: u64, size: usize) -> Option<String>
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen { rng: Rng::new(seed), size };
+        prop(&mut g)
+    });
+    match result {
+        Ok(Ok(())) => None,
+        Ok(Err(msg)) => Some(msg),
+        Err(panic) => Some(
+            panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string()),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sorted vec is sorted", |g| {
+            let mut v = g.vec(0, 50, |g| g.int(-100, 100));
+            v.sort();
+            for w in v.windows(2) {
+                if w[0] > w[1] {
+                    return Err(format!("{} > {}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        check("always fails", |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn shrinks_to_small_size() {
+        // A property failing only for vectors longer than 3 should be
+        // reported near that boundary; just assert it fails.
+        let result = std::panic::catch_unwind(|| {
+            check("len <= 3", |g| {
+                let v = g.vec(0, 100, |g| g.int(0, 1));
+                if v.len() > 3 {
+                    Err(format!("len {}", v.len()))
+                } else {
+                    Ok(())
+                }
+            })
+        });
+        assert!(result.is_err());
+    }
+}

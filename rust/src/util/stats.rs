@@ -1,0 +1,124 @@
+//! Descriptive statistics used by the metrics and simulator layers.
+
+/// Percentile by linear interpolation on a *sorted* slice, q in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let idx = q * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = idx - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Percentile on unsorted data (copies and sorts).
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    let var = values.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (values.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Fraction of values <= threshold (SLO attainment for latencies).
+pub fn fraction_within(values: &[f64], threshold: f64) -> f64 {
+    if values.is_empty() {
+        return 1.0;
+    }
+    values.iter().filter(|&&x| x <= threshold).count() as f64 / values.len() as f64
+}
+
+/// Online mean/min/max/count accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((percentile(&v, 0.95) - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_singleton() {
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
+    }
+
+    #[test]
+    fn fraction_within_basic() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(fraction_within(&v, 2.5), 0.5);
+        assert_eq!(fraction_within(&v, 0.0), 0.0);
+        assert_eq!(fraction_within(&v, 10.0), 1.0);
+    }
+
+    #[test]
+    fn summary_tracks_extrema() {
+        let mut s = Summary::default();
+        for x in [3.0, -1.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, -1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_matches_hand_calc() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&v) - 2.138089935).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,295 @@
+//! Workload traces: synthetic MT-Bench-style request streams.
+//!
+//! The paper subsamples MT-Bench into traces with "different workload
+//! characteristics and different complexities" (§4.1). We generate
+//! equivalent streams directly from the statistics that matter to the
+//! scheduler: prompt/output length distributions (lognormal), request
+//! *complexity* (Beta-distributed latent in [0,1] consumed by the
+//! judger), and the arrival process (Poisson or bursty gamma renewal).
+//! Everything is seeded and reproducible.
+
+use crate::perf::Workload;
+use crate::util::rng::Rng;
+
+/// One request class inside a trace (e.g. "coding", "conversation").
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    pub name: &'static str,
+    /// Mixture weight (unnormalized).
+    pub weight: f64,
+    /// Lognormal (mu, sigma) of prompt tokens.
+    pub input_lognorm: (f64, f64),
+    /// Lognormal (mu, sigma) of output tokens.
+    pub output_lognorm: (f64, f64),
+    /// Beta(a, b) of latent complexity in [0, 1].
+    pub complexity_beta: (f64, f64),
+}
+
+/// A full trace specification.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub name: &'static str,
+    pub classes: Vec<ClassSpec>,
+    /// Mean arrival rate, requests/s.
+    pub rate: f64,
+    /// Squared coefficient of variation of inter-arrivals; 1 = Poisson,
+    /// >1 = bursty (gamma renewal process).
+    pub burstiness: f64,
+}
+
+/// One concrete request.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: u32,
+    pub arrival: f64,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    /// Latent difficulty in [0, 1]; consumed by the judger.
+    pub complexity: f64,
+}
+
+/// Aggregate statistics of a request stream — what the scheduler's
+/// workload monitor extracts (and re-extracts at re-scheduling time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceStats {
+    pub rate: f64,
+    pub avg_input: f64,
+    pub avg_output: f64,
+    pub complexity_mean: f64,
+}
+
+impl TraceStats {
+    pub fn workload(&self) -> Workload {
+        Workload {
+            rate: self.rate,
+            avg_input: self.avg_input,
+            avg_output: self.avg_output,
+        }
+    }
+
+    /// Relative shift between two measured workloads; the coordinator
+    /// re-schedules when this exceeds its threshold. The rate term is
+    /// down-weighted 2x: arrival-rate estimates from a small window are
+    /// far noisier than length/complexity means (especially for bursty
+    /// gamma arrivals), and a real rate surge is large anyway.
+    pub fn shift_from(&self, other: &TraceStats) -> f64 {
+        let rel = |a: f64, b: f64| ((a - b) / b.max(1e-9)).abs();
+        (rel(self.rate, other.rate) * 0.5)
+            .max(rel(self.avg_input, other.avg_input))
+            .max(rel(self.avg_output, other.avg_output))
+            .max(rel(self.complexity_mean, other.complexity_mean))
+    }
+}
+
+/// Estimate stats from a request sample (the re-scheduling subsampler).
+pub fn estimate_stats(requests: &[Request]) -> TraceStats {
+    assert!(!requests.is_empty());
+    let n = requests.len() as f64;
+    let span = requests.last().unwrap().arrival - requests[0].arrival;
+    TraceStats {
+        rate: if span > 0.0 { (n - 1.0) / span } else { n },
+        avg_input: requests.iter().map(|r| r.input_tokens as f64).sum::<f64>() / n,
+        avg_output: requests.iter().map(|r| r.output_tokens as f64).sum::<f64>() / n,
+        complexity_mean: requests.iter().map(|r| r.complexity).sum::<f64>() / n,
+    }
+}
+
+fn sample_beta(rng: &mut Rng, a: f64, b: f64) -> f64 {
+    let x = rng.gamma(a, 1.0);
+    let y = rng.gamma(b, 1.0);
+    x / (x + y)
+}
+
+/// Generate `n` requests from a trace spec.
+pub fn generate(spec: &TraceSpec, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let weights: Vec<f64> = spec.classes.iter().map(|c| c.weight).collect();
+    // Gamma renewal process with mean 1/rate and SCV = burstiness:
+    // shape k = 1/SCV, scale = SCV/rate.
+    let shape = 1.0 / spec.burstiness.max(1e-3);
+    let scale = spec.burstiness / spec.rate;
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n {
+        t += rng.gamma(shape, scale);
+        let class = &spec.classes[rng.weighted(&weights)];
+        let (imu, isig) = class.input_lognorm;
+        let (omu, osig) = class.output_lognorm;
+        let (ba, bb) = class.complexity_beta;
+        out.push(Request {
+            id: id as u32,
+            arrival: t,
+            input_tokens: (rng.lognormal(imu, isig).round() as u32).clamp(8, 8192),
+            output_tokens: (rng.lognormal(omu, osig).round() as u32).clamp(4, 4096),
+            complexity: sample_beta(&mut rng, ba, bb),
+        });
+    }
+    out
+}
+
+/// lognormal (mu, sigma) with a target mean and multiplicative spread.
+fn ln_params(mean: f64, sigma: f64) -> (f64, f64) {
+    (mean.ln() - sigma * sigma / 2.0, sigma)
+}
+
+/// The three evaluation traces (§4.1): distinct length mixes and
+/// complexity profiles, hardest to easiest.
+pub fn paper_traces(rate: f64) -> Vec<TraceSpec> {
+    vec![
+        // Trace 1 — reasoning/coding heavy: long prompts, high complexity.
+        TraceSpec {
+            name: "trace1",
+            rate,
+            burstiness: 1.0,
+            classes: vec![
+                ClassSpec {
+                    name: "coding",
+                    weight: 0.6,
+                    input_lognorm: ln_params(900.0, 0.6),
+                    output_lognorm: ln_params(320.0, 0.5),
+                    complexity_beta: (3.5, 2.5),
+                },
+                ClassSpec {
+                    name: "reasoning",
+                    weight: 0.4,
+                    input_lognorm: ln_params(450.0, 0.5),
+                    output_lognorm: ln_params(512.0, 0.5),
+                    complexity_beta: (3.0, 2.5),
+                },
+            ],
+        },
+        // Trace 2 — mixed chat/math: medium lengths, mid complexity.
+        TraceSpec {
+            name: "trace2",
+            rate,
+            burstiness: 1.4,
+            classes: vec![
+                ClassSpec {
+                    name: "math",
+                    weight: 0.5,
+                    input_lognorm: ln_params(350.0, 0.5),
+                    output_lognorm: ln_params(384.0, 0.5),
+                    complexity_beta: (2.6, 2.6),
+                },
+                ClassSpec {
+                    name: "chat",
+                    weight: 0.5,
+                    input_lognorm: ln_params(250.0, 0.6),
+                    output_lognorm: ln_params(420.0, 0.5),
+                    complexity_beta: (2.0, 3.2),
+                },
+            ],
+        },
+        // Trace 3 — light conversation/extraction: short, easy.
+        TraceSpec {
+            name: "trace3",
+            rate,
+            burstiness: 1.0,
+            classes: vec![
+                ClassSpec {
+                    name: "qa",
+                    weight: 0.7,
+                    input_lognorm: ln_params(200.0, 0.5),
+                    output_lognorm: ln_params(256.0, 0.5),
+                    complexity_beta: (1.4, 5.5),
+                },
+                ClassSpec {
+                    name: "extraction",
+                    weight: 0.3,
+                    input_lognorm: ln_params(600.0, 0.4),
+                    output_lognorm: ln_params(128.0, 0.4),
+                    complexity_beta: (1.8, 4.5),
+                },
+            ],
+        },
+    ]
+}
+
+/// Look up one of the paper traces by 1-based index.
+pub fn paper_trace(index: usize, rate: f64) -> TraceSpec {
+    paper_traces(rate)
+        .into_iter()
+        .nth(index - 1)
+        .unwrap_or_else(|| panic!("trace index {index} out of range 1..=3"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = paper_trace(1, 4.0);
+        let a = generate(&spec, 100, 7);
+        let b = generate(&spec, 100, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.complexity, y.complexity);
+        }
+    }
+
+    #[test]
+    fn stats_match_spec_roughly() {
+        let spec = paper_trace(1, 5.0);
+        let reqs = generate(&spec, 4000, 1);
+        let stats = estimate_stats(&reqs);
+        assert!((stats.rate - 5.0).abs() / 5.0 < 0.1, "rate {}", stats.rate);
+        // Mixture mean input: 0.6*900 + 0.4*450 = 720.
+        assert!((stats.avg_input - 720.0).abs() / 720.0 < 0.15,
+                "avg_input {}", stats.avg_input);
+        assert!(stats.complexity_mean > 0.5, "trace1 should be complex");
+    }
+
+    #[test]
+    fn traces_are_ordered_by_complexity() {
+        let mut means = Vec::new();
+        for i in 1..=3 {
+            let reqs = generate(&paper_trace(i, 4.0), 3000, 2);
+            means.push(estimate_stats(&reqs).complexity_mean);
+        }
+        assert!(means[0] > means[1], "{means:?}");
+        assert!(means[1] > means[2], "{means:?}");
+    }
+
+    #[test]
+    fn complexity_is_in_unit_interval() {
+        for i in 1..=3 {
+            for r in generate(&paper_trace(i, 2.0), 500, 3) {
+                assert!((0.0..=1.0).contains(&r.complexity));
+                assert!(r.input_tokens >= 8);
+                assert!(r.output_tokens >= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_trace_has_higher_interarrival_variance() {
+        let mut poisson = paper_trace(1, 4.0);
+        poisson.burstiness = 1.0;
+        let mut bursty = poisson.clone();
+        bursty.burstiness = 4.0;
+        let iat = |reqs: &[Request]| {
+            let mut v = Vec::new();
+            for w in reqs.windows(2) {
+                v.push(w[1].arrival - w[0].arrival);
+            }
+            let m = crate::util::stats::mean(&v);
+            crate::util::stats::stddev(&v) / m
+        };
+        let cv_p = iat(&generate(&poisson, 3000, 5));
+        let cv_b = iat(&generate(&bursty, 3000, 5));
+        assert!(cv_b > cv_p * 1.3, "cv_b {cv_b} vs cv_p {cv_p}");
+    }
+
+    #[test]
+    fn shift_detection() {
+        let a = TraceStats { rate: 4.0, avg_input: 500.0, avg_output: 200.0, complexity_mean: 0.5 };
+        let same = a;
+        assert!(a.shift_from(&same) < 1e-12);
+        let faster = TraceStats { rate: 6.0, ..a };
+        // rate term is down-weighted 2x: |6-4|/4 * 0.5 = 0.25.
+        assert!((faster.shift_from(&a) - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,279 @@
+//! Property-based tests over the scheduler/router/simulator invariants
+//! (DESIGN.md §Testing), using the in-repo `util::prop` harness.
+
+use cascadia::cluster::ClusterSpec;
+use cascadia::judge::Judger;
+use cascadia::models::{deepseek_cascade, llama_cascade};
+use cascadia::perf::Workload;
+use cascadia::router::{route, Thresholds};
+use cascadia::sched::inner::{solve_dp, InnerOptions, InnerSolver};
+use cascadia::sched::outer::{optimize, pareto_front, tchebycheff, OuterOptions, ParetoPoint};
+use cascadia::sim::des::{simulate, SimRequest};
+use cascadia::perf::ReplicaModel;
+use cascadia::util::prop::{check_n, Gen};
+use cascadia::workload::{generate, paper_trace};
+
+fn rand_workloads(g: &mut Gen, tiers: usize) -> Vec<Workload> {
+    (0..tiers)
+        .map(|_| Workload {
+            rate: if g.bool() { g.f64(0.1, 20.0) } else { 0.0 },
+            avg_input: g.f64(64.0, 2048.0),
+            avg_output: g.f64(32.0, 1024.0),
+        })
+        .collect()
+}
+
+/// Inner solver: the allocation always (a) uses the exact GPU budget,
+/// (b) deploys exactly the tiers with traffic, (c) strategies fit their
+/// allocations.
+#[test]
+fn prop_inner_allocation_feasible() {
+    let cascade = deepseek_cascade();
+    let cluster = ClusterSpec::paper_testbed();
+    check_n("inner allocation feasible", 30, |g| {
+        let mut tw = rand_workloads(g, 3);
+        tw[0].rate = g.f64(0.5, 30.0); // tier 1 always has traffic
+        let n_gpus = *g.choose(&[16usize, 24, 32]);
+        let solver =
+            InnerSolver::new(cascade.clone(), cluster.clone(), InnerOptions::default());
+        match solver.solve(&tw, n_gpus) {
+            Err(_) => Ok(()), // infeasible combos are allowed to error
+            Ok(sol) => {
+                if sol.gpus.iter().sum::<usize>() != n_gpus {
+                    return Err(format!("budget violated: {:?} != {n_gpus}", sol.gpus));
+                }
+                for i in 0..3 {
+                    let has_traffic = tw[i].rate > 0.0;
+                    if has_traffic != (sol.gpus[i] > 0) {
+                        return Err(format!(
+                            "tier {i} traffic={has_traffic} but f={}",
+                            sol.gpus[i]
+                        ));
+                    }
+                    if let Some(s) = &sol.strategies[i] {
+                        if s.gpus() > sol.gpus[i] {
+                            return Err(format!(
+                                "strategy {} exceeds allocation {}",
+                                s.gpus(),
+                                sol.gpus[i]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    });
+}
+
+/// MILP optimum equals the exact DP optimum on the same tables.
+#[test]
+fn prop_milp_equals_dp() {
+    let cascade = deepseek_cascade();
+    let cluster = ClusterSpec::paper_testbed();
+    check_n("milp == dp", 20, |g| {
+        let mut tw = rand_workloads(g, 3);
+        tw[0].rate = g.f64(0.5, 25.0);
+        let n_gpus = *g.choose(&[16usize, 32]);
+        let solver =
+            InnerSolver::new(cascade.clone(), cluster.clone(), InnerOptions::default());
+        let table = solver.tables(&tw, n_gpus);
+        let active: Vec<usize> = (0..3).filter(|&i| tw[i].rate > 0.0).collect();
+        let milp = solver.solve(&tw, n_gpus);
+        let dp = solve_dp(&table, &active, n_gpus, 3);
+        match (milp, dp) {
+            (Err(_), Err(_)) => Ok(()),
+            (Ok(m), Ok(d)) => {
+                // Compare objective values, not allocations (ties).
+                let obj = |alloc: &[usize]| -> f64 {
+                    active
+                        .iter()
+                        .map(|&i| table.l[i][alloc[i]])
+                        .fold(0.0, f64::max)
+                };
+                let mv = m.max_latency;
+                let dv = obj(&d);
+                if (mv - dv).abs() > 1e-6 * dv.max(1.0) {
+                    return Err(format!("milp {mv} != dp {dv}"));
+                }
+                Ok(())
+            }
+            (m, d) => Err(format!(
+                "feasibility disagreement: milp ok={} dp ok={}",
+                m.is_ok(),
+                d.is_ok()
+            )),
+        }
+    });
+}
+
+/// Router conservation: every request is accepted at exactly one tier,
+/// visits all tiers before it, and ratios are the visit shares.
+#[test]
+fn prop_router_conservation() {
+    let cascade = deepseek_cascade();
+    let judger = Judger::new(77);
+    check_n("router conservation", 40, |g| {
+        let n = g.sized(10, 400);
+        let trace_idx = *g.choose(&[1usize, 2, 3]);
+        let reqs = generate(&paper_trace(trace_idx, 5.0), n, g.int(0, 1 << 30) as u64);
+        let h1 = g.f64(0.0, 100.0);
+        let h2 = g.f64(0.0, h1);
+        let span = reqs.last().unwrap().arrival.max(1e-9);
+        let out = route(&cascade, &judger, &reqs, &Thresholds(vec![h1, h2]), span);
+        if out.accepting_tier.len() != n {
+            return Err("missing assignments".into());
+        }
+        // Ratios must be consistent with accepting tiers.
+        for t in 0..3 {
+            let visits = out
+                .accepting_tier
+                .iter()
+                .filter(|&&a| a as usize >= t)
+                .count() as f64
+                / n as f64;
+            if (visits - out.processing_ratios[t]).abs() > 1e-9 {
+                return Err(format!("ratio mismatch at tier {t}"));
+            }
+        }
+        // Monotone non-increasing ratios, p1 == 1.
+        if out.processing_ratios[0] != 1.0 {
+            return Err("p1 != 1".into());
+        }
+        if out.processing_ratios[1] > 1.0 || out.processing_ratios[2] > out.processing_ratios[1] {
+            return Err("ratios not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+/// The Pareto front is mutually non-dominated and every Tchebycheff
+/// winner (for any positive weights) lies on it.
+#[test]
+fn prop_pareto_front_sound() {
+    check_n("pareto front sound", 30, |g| {
+        // Synthetic point clouds (plans are irrelevant to the math, use
+        // a fixed tiny plan).
+        let n = g.sized(2, 60);
+        let base_plan = {
+            let cascade = llama_cascade();
+            let cluster = ClusterSpec::paper_testbed();
+            let judger = Judger::new(1);
+            let reqs = generate(&paper_trace(3, 5.0), 50, 3);
+            let opts = OuterOptions {
+                threshold_grid: vec![50.0],
+                ..Default::default()
+            };
+            optimize(&cascade, &cluster, &judger, &reqs, 16, &opts)
+                .unwrap()
+                .explored
+                .remove(0)
+                .plan
+        };
+        let points: Vec<ParetoPoint> = (0..n)
+            .map(|_| ParetoPoint {
+                latency: g.f64(0.1, 100.0),
+                quality: g.f64(0.0, 100.0),
+                plan: base_plan.clone(),
+            })
+            .collect();
+        let front = pareto_front(&points);
+        if front.is_empty() {
+            return Err("empty front".into());
+        }
+        for a in &front {
+            for b in &front {
+                if a.latency < b.latency - 1e-12 && a.quality >= b.quality + 1e-12 {
+                    return Err("front point dominated".into());
+                }
+            }
+        }
+        // Tchebycheff winner for random weights must be non-dominated.
+        let utopia = (
+            points.iter().map(|p| p.latency).fold(f64::INFINITY, f64::min),
+            points.iter().map(|p| p.quality).fold(0.0, f64::max),
+        );
+        let l = (g.f64(0.01, 10.0), g.f64(0.01, 10.0));
+        let winner = points
+            .iter()
+            .min_by(|a, b| {
+                tchebycheff(a.latency, a.quality, utopia, l)
+                    .partial_cmp(&tchebycheff(b.latency, b.quality, utopia, l))
+                    .unwrap()
+            })
+            .unwrap();
+        let strictly_dominated = points.iter().any(|q| {
+            q.latency < winner.latency - 1e-12 && q.quality > winner.quality + 1e-12
+        });
+        if strictly_dominated {
+            return Err("tchebycheff winner strictly dominated".into());
+        }
+        Ok(())
+    });
+}
+
+/// Simulator sanity over random traces: all requests complete, latency
+/// >= the no-queue service floor, completions are time-ordered.
+#[test]
+fn prop_simulator_conservation() {
+    let m = &llama_cascade()[0];
+    let cluster = ClusterSpec::paper_testbed();
+    check_n("simulator conservation", 30, |g| {
+        let replicas: Vec<ReplicaModel> = (0..g.sized(1, 3))
+            .map(|_| {
+                let tp = *g.choose(&[1usize, 2, 4]);
+                ReplicaModel::new(m, &cluster, tp, 1, 768.0)
+            })
+            .collect();
+        let n = g.sized(5, 300);
+        let rate = g.f64(0.5, 30.0);
+        let mut t = 0.0;
+        let trace: Vec<SimRequest> = (0..n)
+            .map(|_| {
+                t += g.f64(0.0, 2.0 / rate);
+                SimRequest {
+                    arrival: t,
+                    input_tokens: g.int(8, 2048) as u32,
+                    output_tokens: g.int(4, 512) as u32,
+                }
+            })
+            .collect();
+        let out = simulate(&replicas, &trace);
+        if out.latencies.len() != n {
+            return Err(format!("{} of {n} completed", out.latencies.len()));
+        }
+        for (i, r) in trace.iter().enumerate() {
+            let done = out.completions[i];
+            if !done.is_finite() || done < r.arrival {
+                return Err(format!("request {i} completed before arrival"));
+            }
+        }
+        if out.latencies.iter().any(|l| *l <= 0.0) {
+            return Err("non-positive latency".into());
+        }
+        Ok(())
+    });
+}
+
+/// Higher thresholds can only raise (weakly) the cascade's judged
+/// quality and the share of requests reaching deeper tiers.
+#[test]
+fn prop_thresholds_monotone_effects() {
+    let cascade = deepseek_cascade();
+    let judger = Judger::new(13);
+    check_n("threshold monotonicity", 25, |g| {
+        let reqs = generate(&paper_trace(2, 5.0), 300, g.int(0, 1 << 30) as u64);
+        let span = reqs.last().unwrap().arrival.max(1e-9);
+        let lo = g.f64(0.0, 60.0);
+        let hi = lo + g.f64(5.0, 40.0);
+        let low = route(&cascade, &judger, &reqs, &Thresholds(vec![lo, lo]), span);
+        let high = route(&cascade, &judger, &reqs, &Thresholds(vec![hi, hi]), span);
+        if high.processing_ratios[2] + 1e-9 < low.processing_ratios[2] {
+            return Err(format!(
+                "raising thresholds reduced escalation: {} -> {}",
+                low.processing_ratios[2], high.processing_ratios[2]
+            ));
+        }
+        Ok(())
+    });
+}

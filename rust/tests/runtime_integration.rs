@@ -1,0 +1,118 @@
+//! Integration tests: the PJRT runtime on real AOT artifacts.
+//!
+//! These need `make artifacts` to have run. They look for the artifacts
+//! directory in `CASCADIA_ARTIFACTS` (falling back to `artifacts/` in
+//! the repo root) and skip silently when it is absent, so plain
+//! `cargo test` works before the Python step.
+
+use std::path::PathBuf;
+
+use cascadia::runtime::{Manifest, TierRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("CASCADIA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+/// Greedy-decode a few tokens and check basic shape/consistency
+/// invariants of the prefill/decode contract.
+#[test]
+fn prefill_then_decode_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let (name, tier) = manifest.tiers.iter().next().unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = TierRuntime::load(&client, &dir, tier).unwrap();
+    let cfg = &rt.manifest.config;
+    assert_eq!(name, &cfg.name);
+
+    // Prompt: difficulty-1 marker + two seed tokens.
+    let marker = (manifest.task.marker_base + 1) as i32;
+    let prompt = vec![marker, 5, 17];
+    let true_len = prompt.len();
+
+    let pre = rt.prefill(&prompt).unwrap();
+    assert_eq!(pre.logits.len(), cfg.vocab);
+    assert!(pre.logits.iter().all(|x| x.is_finite()));
+
+    // Greedy decode 4 tokens, threading the KV cache functionally.
+    let mut mask = vec![0f32; cfg.max_seq];
+    for m in mask.iter_mut().take(true_len) {
+        *m = 1.0;
+    }
+    let mut k = pre.k_cache;
+    let mut v = pre.v_cache;
+    let mut logits = pre.logits;
+    for i in 0..4 {
+        let token = argmax(&logits) as i32;
+        let slot = cfg.prefill_len + i;
+        mask[slot] = 1.0;
+        let (l, k2, v2) = rt
+            .decode(token, slot, true_len + i, &mask, &k, &v)
+            .unwrap();
+        assert_eq!(l.len(), cfg.vocab);
+        assert!(l.iter().all(|x| x.is_finite()));
+        logits = l;
+        k = k2;
+        v = v2;
+    }
+}
+
+/// The same prompt must produce identical logits across calls —
+/// the runtime is deterministic and stateless between requests.
+#[test]
+fn prefill_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let tier = manifest.cascade_order()[0];
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = TierRuntime::load(&client, &dir, tier).unwrap();
+    let prompt = vec![60, 1, 2, 3];
+    let a = rt.prefill(&prompt).unwrap();
+    let b = rt.prefill(&prompt).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+/// Out-of-range prompts are rejected cleanly, not UB or a PJRT crash.
+#[test]
+fn prompt_length_validation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let tier = manifest.cascade_order()[0];
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = TierRuntime::load(&client, &dir, tier).unwrap();
+    assert!(rt.prefill(&[]).is_err());
+    let too_long = vec![0i32; rt.manifest.config.prefill_len + 1];
+    assert!(rt.prefill(&too_long).is_err());
+}
+
+/// A malformed HLO file surfaces as a clean error.
+#[test]
+fn malformed_hlo_is_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let tier = manifest.cascade_order()[0];
+    let tmp = cascadia::util::testfs::TempDir::new("hlo").unwrap();
+    // Copy manifest layout but corrupt the prefill HLO.
+    std::fs::write(tmp.path().join(&tier.prefill_file), "not hlo at all").unwrap();
+    std::fs::copy(dir.join(&tier.decode_file), tmp.path().join(&tier.decode_file)).unwrap();
+    std::fs::copy(dir.join(&tier.params_file), tmp.path().join(&tier.params_file)).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let err = TierRuntime::load(&client, tmp.path(), tier);
+    assert!(err.is_err());
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}

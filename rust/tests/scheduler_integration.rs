@@ -1,0 +1,141 @@
+//! Integration tests: the full bi-level scheduler + cascade simulation
+//! across scenarios, plus the analytic-vs-DES calibration check.
+
+use cascadia::cluster::ClusterSpec;
+use cascadia::harness::{default_rate, Scenario};
+use cascadia::models::{deepseek_cascade, llama_cascade};
+use cascadia::perf::{ReplicaModel, Workload};
+use cascadia::sched::outer::OuterOptions;
+use cascadia::sim::analytic::{estimate_p95, pool_capacity};
+use cascadia::sim::des::{simulate, SimRequest};
+use cascadia::util::rng::Rng;
+
+fn small_opts() -> OuterOptions {
+    OuterOptions {
+        threshold_grid: vec![0.0, 30.0, 60.0, 90.0],
+        ..Default::default()
+    }
+}
+
+/// Cascadia end-to-end on both cascades: plans exist, quality targets
+/// are met on held-out traces, and the cascade beats the standalone
+/// large model on p95 when the latter saturates.
+#[test]
+fn cascadia_beats_saturated_standalone() {
+    let scenario = Scenario::new(deepseek_cascade(), 32, 1, default_rate(1), 900, 99);
+    let plan = scenario.cascadia_plan(85.0, &small_opts()).unwrap();
+    let cascadia = scenario.evaluate(&plan).unwrap();
+    assert!(cascadia.quality >= 84.0, "quality {}", cascadia.quality);
+
+    let standalone = scenario.standalone_plan(85.0).unwrap();
+    let sa = scenario.evaluate(&standalone).unwrap();
+    assert!(
+        cascadia.p95() < sa.p95(),
+        "cascade p95 {} not better than standalone {}",
+        cascadia.p95(),
+        sa.p95()
+    );
+}
+
+#[test]
+fn llama_cascade_schedules() {
+    let scenario = Scenario::new(llama_cascade(), 32, 2, default_rate(2), 700, 101);
+    let plan = scenario.cascadia_plan(75.0, &small_opts()).unwrap();
+    assert_eq!(plan.total_gpus(), 32);
+    let out = scenario.evaluate(&plan).unwrap();
+    assert!(out.quality >= 74.0);
+    assert!(out.p95().is_finite());
+}
+
+/// Smaller clusters (one server) still schedule — the memory floors
+/// force tier-subset deployments.
+#[test]
+fn single_server_cluster() {
+    let scenario = Scenario::new(llama_cascade(), 8, 3, 20.0, 500, 17);
+    let plan = scenario.cascadia_plan(70.0, &small_opts()).unwrap();
+    assert_eq!(plan.total_gpus(), 8);
+    let out = scenario.evaluate(&plan).unwrap();
+    assert!(out.quality >= 69.0);
+}
+
+/// Calibration: the analytic p95 estimate must track the DES across
+/// load levels — same ordering and within a small factor at moderate
+/// load (it feeds candidate *ranking*, the DES scores final plans).
+#[test]
+fn analytic_matches_des_ordering() {
+    let m = &llama_cascade()[0];
+    let cluster = ClusterSpec::paper_testbed();
+    let pool: Vec<ReplicaModel> =
+        (0..2).map(|_| ReplicaModel::new(m, &cluster, 2, 1, 768.0)).collect();
+    let w0 = Workload { rate: 1.0, avg_input: 512.0, avg_output: 256.0 };
+    let cap = pool_capacity(&pool, &w0);
+
+    let mut prev_est = 0.0;
+    let mut prev_sim = 0.0;
+    for load in [0.3, 0.6, 0.85] {
+        let w = Workload { rate: cap * load, ..w0 };
+        let est = estimate_p95(&pool, &w);
+        // DES with a Poisson trace at the same rate.
+        let mut rng = Rng::new(5);
+        let mut t = 0.0;
+        let trace: Vec<SimRequest> = (0..1500)
+            .map(|_| {
+                t += rng.exp(w.rate);
+                SimRequest { arrival: t, input_tokens: 512, output_tokens: 256 }
+            })
+            .collect();
+        let sim = simulate(&pool, &trace).p95();
+        assert!(est > prev_est, "analytic not increasing with load");
+        assert!(sim > prev_sim * 0.8, "sim wildly non-monotone");
+        let ratio = est / sim;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "analytic {est} vs DES {sim} at load {load} (ratio {ratio})"
+        );
+        prev_est = est;
+        prev_sim = sim;
+    }
+}
+
+/// The ablations can only hurt: full Cascadia <= uniform-parallelism
+/// and <= uniform-allocation on predicted latency for the same quality.
+#[test]
+fn ablations_never_help() {
+    let scenario = Scenario::new(deepseek_cascade(), 32, 2, default_rate(2), 700, 23);
+    let full = scenario.cascadia_plan(80.0, &small_opts()).unwrap();
+    for tweak in [
+        |o: &mut OuterOptions| o.inner.uniform_parallelism = true,
+        |o: &mut OuterOptions| o.inner.uniform_allocation = true,
+    ] {
+        let mut opts = small_opts();
+        tweak(&mut opts);
+        if let Ok(ablated) = scenario.cascadia_plan(80.0, &opts) {
+            assert!(
+                full.predicted_latency <= ablated.predicted_latency + 1e-9,
+                "ablation improved latency: {} < {}",
+                ablated.predicted_latency,
+                full.predicted_latency
+            );
+        }
+    }
+}
+
+/// Re-scheduling responds to a workload shift with a different plan.
+#[test]
+fn rescheduling_changes_plan() {
+    let cascade = deepseek_cascade();
+    let easy = Scenario::new(cascade.clone(), 32, 3, default_rate(3), 700, 31);
+    let hard = Scenario::new(cascade, 32, 1, default_rate(1), 700, 31);
+    let p_easy = easy.cascadia_plan(80.0, &small_opts()).unwrap();
+    let p_hard = hard.cascadia_plan(80.0, &small_opts()).unwrap();
+    // The hard trace must escalate a larger share of requests past the
+    // small tier (the resource split follows the load, but absolute
+    // GPU counts also depend on rates, so the ratio is the robust
+    // signal).
+    assert!(
+        p_hard.tiers[1].processing_ratio > p_easy.tiers[1].processing_ratio,
+        "hard p2 {} vs easy p2 {}",
+        p_hard.tiers[1].processing_ratio,
+        p_easy.tiers[1].processing_ratio
+    );
+}
