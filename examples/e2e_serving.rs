@@ -17,6 +17,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 use cascadia::coordinator::server::{CascadeServer, ServerConfig};
 use cascadia::report::{fmt_secs, Table};
+use cascadia::router::{PolicySpec, RoutingPolicy};
 use cascadia::runtime::{pjrt_factory, Manifest, TaskJudger};
 use cascadia::util::cli::Args;
 use cascadia::util::rng::Rng;
@@ -80,22 +81,22 @@ fn main() -> Result<()> {
         Some(tier) => ServerConfig {
             replicas: (0..3).map(|i| if i == tier { 2 } else { 0 }).collect(),
             max_batch: vec![4, 4, 4],
-            thresholds: match tier {
+            policy: PolicySpec::threshold(match tier {
                 0 => vec![0.0, 0.0],
                 1 => vec![101.0, 0.0],
                 _ => vec![101.0, 101.0],
-            },
+            })?,
             max_new_tokens: max_new,
         },
         None => ServerConfig {
             replicas: vec![2, 1, 1],
             max_batch: vec![4, 3, 2],
-            thresholds: vec![h1, h2],
+            policy: PolicySpec::threshold(vec![h1, h2])?,
             max_new_tokens: max_new,
         },
     };
-    // Tiers with 0 replicas still spawn one worker; route thresholds
-    // keep them idle. Simplify: give every tier >= 1 worker.
+    // Tiers with 0 replicas still spawn one worker; routing keeps them
+    // idle. Simplify: give every tier >= 1 worker.
     let config = ServerConfig {
         replicas: config.replicas.iter().map(|&r| r.max(1)).collect(),
         ..config
@@ -103,11 +104,12 @@ fn main() -> Result<()> {
 
     let judger = TaskJudger::new(task.clone(), max_new.min(8));
     let factory = pjrt_factory(dir.clone());
-    let server = CascadeServer::new(config.clone());
+    let server = CascadeServer::new(config.clone())?;
 
     println!(
-        "serving {n} requests at {rate:.1} req/s (thresholds {:?}, replicas {:?})...",
-        config.thresholds, config.replicas
+        "serving {n} requests at {rate:.1} req/s (policy {}, replicas {:?})...",
+        config.policy.label(),
+        config.replicas
     );
     let stats = server.serve(&trace, &factory, &judger)?;
 

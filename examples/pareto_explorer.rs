@@ -12,6 +12,7 @@ use anyhow::Result;
 use cascadia::harness::{default_rate, Scenario};
 use cascadia::models::{cascade_by_name, deepseek_cascade};
 use cascadia::report::Table;
+use cascadia::router::RoutingPolicy;
 use cascadia::sched::outer::{select_plan, tchebycheff_winners, OuterOptions};
 use cascadia::util::cli::Args;
 
@@ -36,13 +37,13 @@ fn main() -> Result<()> {
 
     let mut front = Table::new(
         "Pareto front (latency ↑, quality ↑)",
-        &["L(s)", "Q", "thresholds", "allocation f_i", "strategies"],
+        &["L(s)", "Q", "policy", "allocation f_i", "strategies"],
     );
     for p in &sweep.pareto {
         front.row(vec![
             format!("{:.2}", p.latency),
             format!("{:.1}", p.quality),
-            format!("{:?}", p.plan.thresholds.0),
+            p.plan.policy.label(),
             format!("{:?}", p.plan.tiers.iter().map(|t| t.gpus).collect::<Vec<_>>()),
             p.plan
                 .tiers

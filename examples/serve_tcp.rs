@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use cascadia::coordinator::net::TcpFrontend;
+use cascadia::router::PolicySpec;
 use cascadia::runtime::{pjrt_factory, Manifest, TaskJudger};
 use cascadia::util::cli::Args;
 
@@ -35,8 +36,14 @@ fn main() -> Result<()> {
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = shutdown.clone();
     let server_addr = addr.clone();
+    let n_tiers = manifest.tiers.len();
     let server = std::thread::spawn(move || {
-        let fe = TcpFrontend::new(vec![80.0, 80.0], 8);
+        let fe = TcpFrontend::new(
+            PolicySpec::uniform_threshold(n_tiers - 1, 80.0).expect("valid policy"),
+            n_tiers,
+            8,
+        )
+        .expect("policy fits the artifact tiers");
         fe.serve(&server_addr, &factory, &judger, sd)
     });
     std::thread::sleep(std::time::Duration::from_millis(500));

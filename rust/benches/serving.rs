@@ -11,7 +11,7 @@ use cascadia::coordinator::server::{
 };
 use cascadia::judge::Judger;
 use cascadia::models::deepseek_cascade;
-use cascadia::router::{route, Thresholds};
+use cascadia::router::{route, route_with, MarginPolicy, Thresholds};
 use cascadia::util::bench::Bencher;
 use cascadia::workload::{generate, paper_trace};
 
@@ -47,6 +47,13 @@ fn main() {
         route(&cascade, &judger, &reqs, &th, span).quality
     });
 
+    // Policy dispatch overhead: the same trace through the trait object
+    // path with a skip-capable policy.
+    let margin = MarginPolicy::new(vec![70.0, 50.0], 15.0).unwrap();
+    b.bench("route 2000 requests (margin policy, dyn dispatch)", || {
+        route_with(&cascade, &judger, &reqs, &margin, span).unwrap().quality
+    });
+
     b.bench("batcher push+admit+complete x1000", || {
         let mut batcher: Batcher<u32> = Batcher::new(16);
         let mut done = 0usize;
@@ -63,12 +70,11 @@ fn main() {
 
     // Whole-coordinator overhead with an instant backend: latency here
     // is pure queueing/dispatch/judging machinery.
-    let server = CascadeServer::new(ServerConfig {
-        replicas: vec![2, 1, 1],
-        max_batch: vec![8, 8, 8],
-        thresholds: vec![50.0, 50.0],
-        max_new_tokens: 4,
-    });
+    let server = CascadeServer::new(
+        ServerConfig::with_thresholds(vec![2, 1, 1], vec![8, 8, 8], vec![50.0, 50.0], 4)
+            .unwrap(),
+    )
+    .unwrap();
     let trace: Vec<(f64, Vec<i32>)> = (0..200).map(|_| (0.0, vec![60, 1, 2])).collect();
     let meas = b.bench("serve 200 requests (instant backend)", || {
         let factory =

@@ -12,6 +12,7 @@ use anyhow::Result;
 use cascadia::harness::{default_rate, Scenario};
 use cascadia::models::deepseek_cascade;
 use cascadia::report::Table;
+use cascadia::router::RoutingPolicy;
 use cascadia::sched::outer::{tchebycheff_winners, OuterOptions};
 use cascadia::util::cli::Args;
 
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
             ("tcheby", &winners),
         ] {
             for p in points {
-                let h = &p.plan.thresholds.0;
+                let h = p.plan.policy.thresholds();
                 table.row(vec![
                     kind.to_string(),
                     format!("{:.3}", p.latency),
@@ -60,13 +61,13 @@ fn main() -> Result<()> {
         // Print only the front + winners to stdout (explored is large).
         let mut short = Table::new(
             &format!("trace {trace} Pareto front"),
-            &["latency(s)", "quality", "thresholds"],
+            &["latency(s)", "quality", "policy"],
         );
         for p in &sweep.pareto {
             short.row(vec![
                 format!("{:.3}", p.latency),
                 format!("{:.2}", p.quality),
-                format!("{:?}", p.plan.thresholds.0),
+                p.plan.policy.label(),
             ]);
         }
         print!("{}", short.render());

@@ -33,7 +33,7 @@ fn main() -> Result<()> {
             Scenario::new(cascade.clone(), gpus, trace, default_rate(trace), n, 41);
         match scenario.cascadia_plan(q, &opts) {
             Ok(plan) => {
-                let h = &plan.thresholds.0;
+                let h = plan.policy.thresholds();
                 let p: Vec<f64> =
                     plan.tiers.iter().map(|t| t.processing_ratio * 100.0).collect();
                 let f: Vec<usize> = plan.tiers.iter().map(|t| t.gpus).collect();

@@ -20,7 +20,7 @@ use crate::judge::Judger;
 use crate::models::ModelSpec;
 use crate::parallel::{design_feasible, Strategy};
 use crate::perf::Workload;
-use crate::router::{route, Thresholds};
+use crate::router::{monotone_chains, route_with, PolicySpec, ThresholdPolicy};
 use crate::sched::inner::best_strategy_for;
 use crate::sched::plan::{CascadePlan, TierPlan};
 use crate::workload::Request;
@@ -87,7 +87,7 @@ pub fn standalone_plan(
         *t = 101.0;
     }
     Ok(CascadePlan {
-        thresholds: Thresholds(th),
+        policy: PolicySpec::threshold(th)?,
         tiers,
         predicted_latency: p95,
         predicted_quality: quality,
@@ -121,19 +121,9 @@ pub fn cascade_serve_plan(
     let mut best: Option<(f64, CascadePlan)> = None;
 
     // Monotone threshold chains, like Cascadia's sweep.
-    let mut stack: Vec<Vec<f64>> = vec![vec![]];
-    while let Some(prefix) = stack.pop() {
-        if prefix.len() < c - 1 {
-            let cap = prefix.last().copied().unwrap_or(f64::INFINITY);
-            for &h in grid.iter().filter(|&&h| h <= cap) {
-                let mut next = prefix.clone();
-                next.push(h);
-                stack.push(next);
-            }
-            continue;
-        }
-        let th = Thresholds(prefix.clone());
-        let routing = route(cascade, judger, requests, &th, span);
+    for chain in monotone_chains(&grid, c - 1) {
+        let policy = ThresholdPolicy::new(chain)?;
+        let routing = route_with(cascade, judger, requests, &policy, span)?;
         if routing.quality < quality_requirement {
             continue;
         }
@@ -254,7 +244,7 @@ pub fn cascade_serve_plan(
             continue;
         }
         let plan = CascadePlan {
-            thresholds: th,
+            policy: PolicySpec::Threshold(policy),
             tiers,
             predicted_latency: max_p95,
             predicted_quality: routing.quality,
@@ -309,7 +299,7 @@ mod tests {
         assert_eq!(plan.deployed().count(), 1);
         assert!(plan.predicted_quality > 80.0); // 671B is strong
         // Routing sends everything to tier 2.
-        assert_eq!(plan.thresholds.0, vec![101.0, 101.0]);
+        assert_eq!(plan.policy.thresholds(), &[101.0, 101.0]);
     }
 
     #[test]

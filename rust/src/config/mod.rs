@@ -11,6 +11,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::models::{cascade_by_name, ModelSpec};
+use crate::router::PolicyKind;
 use crate::sched::inner::InnerOptions;
 use crate::sched::outer::OuterOptions;
 use crate::util::json::Json;
@@ -39,6 +40,8 @@ pub struct ExperimentConfig {
     pub uniform_allocation: bool,
     /// Threshold grid step (score points).
     pub threshold_step: f64,
+    /// Routing-policy family the outer sweep searches.
+    pub policy_kind: PolicyKind,
 }
 
 impl Default for ExperimentConfig {
@@ -55,6 +58,7 @@ impl Default for ExperimentConfig {
             uniform_parallelism: false,
             uniform_allocation: false,
             threshold_step: 10.0,
+            policy_kind: PolicyKind::Threshold,
         }
     }
 }
@@ -103,6 +107,9 @@ impl ExperimentConfig {
         if let Some(v) = j.get("threshold_step") {
             c.threshold_step = v.as_f64()?;
         }
+        if let Some(v) = j.get("policy") {
+            c.policy_kind = PolicyKind::parse(v.as_str()?)?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -147,6 +154,7 @@ impl ExperimentConfig {
         }
         OuterOptions {
             threshold_grid: grid,
+            policy_kind: self.policy_kind,
             inner: InnerOptions {
                 use_milp: self.use_milp,
                 uniform_parallelism: self.uniform_parallelism,
@@ -178,6 +186,18 @@ mod tests {
         // Default survives.
         assert_eq!(c.trace_index, 2);
         assert_eq!(c.cascade().len(), 2);
+    }
+
+    #[test]
+    fn parses_policy_kind() {
+        let c = ExperimentConfig::from_json_text(r#"{"policy": "length"}"#).unwrap();
+        assert_eq!(c.policy_kind, PolicyKind::Length);
+        assert_eq!(c.outer_options().policy_kind, PolicyKind::Length);
+        assert_eq!(
+            ExperimentConfig::default().policy_kind,
+            PolicyKind::Threshold
+        );
+        assert!(ExperimentConfig::from_json_text(r#"{"policy": "bogus"}"#).is_err());
     }
 
     #[test]

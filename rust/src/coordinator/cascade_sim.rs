@@ -10,7 +10,7 @@ use crate::cluster::ClusterSpec;
 use crate::judge::Judger;
 use crate::models::ModelSpec;
 use crate::perf::ReplicaModel;
-use crate::router::route;
+use crate::router::route_with;
 use crate::sched::plan::CascadePlan;
 use crate::sim::des::{simulate, SimRequest};
 use crate::sim::SimOutcome;
@@ -96,7 +96,7 @@ pub fn simulate_cascade(
     }
     let c = cascade.len();
     let span = (requests.last().unwrap().arrival - requests[0].arrival).max(1e-9);
-    let routing = route(cascade, judger, requests, &plan.thresholds, span);
+    let routing = route_with(cascade, judger, requests, &plan.policy, span)?;
 
     // Per-request bookkeeping: the time the request becomes available
     // to the next tier (initially its arrival).
@@ -125,8 +125,10 @@ pub fn simulate_cascade(
             }
             continue;
         }
+        // Requests that actually visit this tier (skip-capable policies
+        // do not visit every tier up to the accepting one).
         let mut idx: Vec<usize> = (0..requests.len())
-            .filter(|&i| routing.accepting_tier[i] as usize >= tier)
+            .filter(|&i| routing.visited_tiers[i].contains(&(tier as u8)))
             .collect();
         if idx.is_empty() {
             continue;
@@ -178,7 +180,7 @@ pub fn simulate_cascade(
 mod tests {
     use super::*;
     use crate::models::deepseek_cascade;
-    use crate::router::Thresholds;
+    use crate::router::PolicySpec;
     use crate::sched::outer::{optimize, select_plan, OuterOptions};
     use crate::workload::{generate, paper_trace};
 
@@ -232,7 +234,7 @@ mod tests {
     fn undeployed_tier_with_traffic_fails_loudly() {
         let (mut plan, reqs, judger) = make_plan(3.0, 70.0);
         // Force traffic to the last tier while removing its deployment.
-        plan.thresholds = Thresholds(vec![101.0, 101.0]);
+        plan.policy = PolicySpec::threshold(vec![101.0, 101.0]).unwrap();
         let last = plan.tiers.len() - 1;
         plan.tiers[last].gpus = 0;
         plan.tiers[last].strategy = None;
@@ -240,6 +242,31 @@ mod tests {
         let cluster = ClusterSpec::paper_testbed();
         let err = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn skip_policies_simulate_on_visited_tiers_only() {
+        let (mut plan, reqs, judger) = make_plan(3.0, 70.0);
+        // Margin policy with a tight band: deep tier-0 failures skip
+        // the middle tier entirely; the simulator must still produce
+        // finite latencies for every request.
+        plan.policy = PolicySpec::margin(vec![80.0, 80.0], 5.0).unwrap();
+        if plan.tiers.iter().any(|t| t.gpus == 0) {
+            // The swapped-in policy routes traffic everywhere; it needs
+            // a fully-deployed plan to be simulable.
+            return;
+        }
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let out = simulate_cascade(&plan, &cascade, &cluster, &judger, &reqs).unwrap();
+        assert_eq!(out.e2e_latencies.len(), reqs.len());
+        assert!(out.e2e_latencies.iter().all(|l| l.is_finite() && *l >= 0.0));
+        // The skip route means tier 1 serves fewer requests than the
+        // count of requests accepted at tier >= 1.
+        let deep_accepts = out.accepting_tier.iter().filter(|&&t| t >= 1).count();
+        if let Some(t1) = &out.tier_outcomes[1] {
+            assert!(t1.completions.len() <= deep_accepts);
+        }
     }
 
     #[test]

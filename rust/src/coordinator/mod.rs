@@ -8,8 +8,11 @@
 //!   figure (7, 8, 9, 10, 11).
 //! * [`server`] — the real serving engine used by the e2e example:
 //!   worker threads per tier replica, a continuous [`batcher`], the
-//!   threshold router, and real model execution through
-//!   [`crate::runtime`] (PJRT). Python is never on this path.
+//!   pluggable routing policy ([`crate::router::RoutingPolicy`]), and
+//!   real model execution through [`crate::runtime`] (PJRT). Python is
+//!   never on this path. Both paths are constructed from the same
+//!   [`crate::sched::plan::CascadePlan`] artifact
+//!   (`ServerConfig::from_plan` / `TcpFrontend::from_plan`).
 //! * [`monitor`] — the re-scheduling mechanism (§4.4): subsample
 //!   incoming workload statistics, detect shifts, trigger a new
 //!   bi-level schedule.
@@ -22,4 +25,5 @@ pub mod server;
 
 pub use cascade_sim::{simulate_cascade, CascadeSimResult};
 pub use monitor::{Monitor, MonitorConfig};
+pub use net::TcpFrontend;
 pub use server::{CascadeServer, ServerConfig, ServerStats, TierBackend};

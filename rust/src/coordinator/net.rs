@@ -10,7 +10,10 @@
 //!
 //! Used by `cascadia serve` (see `examples/serve_tcp.rs`) and the
 //! integration test; demonstrates the coordinator as an actual network
-//! service rather than a library loop.
+//! service rather than a library loop. Routing goes through the same
+//! [`RoutingPolicy`] abstraction as the offline scheduler and the
+//! batched engine; [`TcpFrontend::from_plan`] wires a scheduler plan
+//! straight into the wire service.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -21,6 +24,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::server::{BackendFactory, ResponseJudger, TierBackend};
+use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
+use crate::sched::plan::CascadePlan;
 use crate::util::json::Json;
 
 /// A single-connection-at-a-time TCP server over one backend chain.
@@ -30,13 +35,21 @@ use crate::util::json::Json;
 /// [`crate::coordinator::server::CascadeServer`]; this front-end is
 /// about the wire protocol and lifecycle).
 pub struct TcpFrontend {
-    pub thresholds: Vec<f64>,
+    pub policy: PolicySpec,
+    pub n_tiers: usize,
     pub max_new_default: usize,
 }
 
 impl TcpFrontend {
-    pub fn new(thresholds: Vec<f64>, max_new_default: usize) -> TcpFrontend {
-        TcpFrontend { thresholds, max_new_default }
+    pub fn new(policy: PolicySpec, n_tiers: usize, max_new_default: usize) -> Result<TcpFrontend> {
+        policy.validate(n_tiers)?;
+        Ok(TcpFrontend { policy, n_tiers, max_new_default })
+    }
+
+    /// Wire a scheduler-produced plan into the front-end: the plan's
+    /// policy routes and its tier count sizes the backend chain.
+    pub fn from_plan(plan: &CascadePlan, max_new_default: usize) -> Result<TcpFrontend> {
+        TcpFrontend::new(plan.policy.clone(), plan.tiers.len(), max_new_default)
     }
 
     /// Serve on `addr` until `shutdown` is set. Backends are created
@@ -50,9 +63,8 @@ impl TcpFrontend {
     ) -> Result<()> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true)?;
-        let n_tiers = self.thresholds.len() + 1;
         let mut backends: Vec<Box<dyn TierBackend>> = Vec::new();
-        for t in 0..n_tiers {
+        for t in 0..self.n_tiers {
             backends.push(factory(t)?);
         }
         while !shutdown.load(Ordering::SeqCst) {
@@ -120,19 +132,24 @@ impl TcpFrontend {
             .and_then(|v| v.as_usize().ok())
             .unwrap_or(self.max_new_default);
 
+        let c = self.n_tiers;
+        let features = RequestFeatures::live(prompt.len());
         let t0 = Instant::now();
-        let mut accepted = (0usize, Vec::new(), 0.0f64);
-        for (tier, backend) in backends.iter_mut().enumerate() {
-            let output = backend.generate(&prompt, max_new)?;
+        let mut tier = self.policy.entry_tier(&features, c).min(c - 1);
+        let (tier, output, score) = loop {
+            let output = backends[tier].generate(&prompt, max_new)?;
             let score = judger.score(&prompt, &output);
-            let accept =
-                tier == self.thresholds.len() || score >= self.thresholds[tier];
-            accepted = (tier, output, score);
-            if accept {
-                break;
+            let decision = if tier == c - 1 {
+                Decision::Accept
+            } else {
+                self.policy.decide(tier, score, &features, c)
+            };
+            match decision {
+                Decision::Accept => break (tier, output, score),
+                Decision::Escalate => tier += 1,
+                Decision::SkipTo(t) => tier = t.clamp(tier + 1, c - 1),
             }
-        }
-        let (tier, output, score) = accepted;
+        };
         Ok(Json::obj(vec![
             ("id", Json::num(id as f64)),
             (
@@ -176,11 +193,11 @@ mod tests {
         }
     }
 
-    fn spawn_server(addr: &'static str) -> Arc<AtomicBool> {
+    fn spawn_server(addr: &'static str, policy: PolicySpec, n_tiers: usize) -> Arc<AtomicBool> {
         let shutdown = Arc::new(AtomicBool::new(false));
         let sd = shutdown.clone();
         std::thread::spawn(move || {
-            let fe = TcpFrontend::new(vec![50.0], 4);
+            let fe = TcpFrontend::new(policy, n_tiers, 4).unwrap();
             let factory = |t: usize| -> Result<Box<dyn TierBackend>> {
                 Ok(Box::new(EchoBackend(t)))
             };
@@ -193,7 +210,8 @@ mod tests {
     #[test]
     fn tcp_roundtrip_and_escalation() {
         let addr = "127.0.0.1:39471";
-        let shutdown = spawn_server(addr);
+        let shutdown =
+            spawn_server(addr, PolicySpec::threshold(vec![50.0]).unwrap(), 2);
 
         let mut stream = TcpStream::connect(addr).unwrap();
         // Easy request (difficulty 0) -> tier 0.
@@ -221,5 +239,41 @@ mod tests {
         assert_eq!(r4.req("id").unwrap().as_i64().unwrap(), 3);
 
         shutdown.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn tcp_length_policy_routes_long_prompts_deep() {
+        let addr = "127.0.0.1:39473";
+        // Prompts of >= 4 tokens enter at tier 1 directly.
+        let shutdown = spawn_server(
+            addr,
+            PolicySpec::length(vec![50.0], 4.0, 1).unwrap(),
+            2,
+        );
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Short easy prompt -> tier 0.
+        writeln!(stream, r#"{{"id": 1, "prompt": [0, 7]}}"#).unwrap();
+        // Long prompt -> enters (and accepts) at tier 1 without
+        // touching tier 0, even though tier 0 could have answered it.
+        writeln!(stream, r#"{{"id": 2, "prompt": [0, 7, 7, 7, 7]}}"#).unwrap();
+
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut read_json = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap()
+        };
+        let r1 = read_json();
+        assert_eq!(r1.req("tier").unwrap().as_i64().unwrap(), 0);
+        let r2 = read_json();
+        assert_eq!(r2.req("tier").unwrap().as_i64().unwrap(), 1);
+
+        shutdown.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn frontend_rejects_mismatched_policy() {
+        assert!(TcpFrontend::new(PolicySpec::threshold(vec![50.0]).unwrap(), 3, 4).is_err());
     }
 }

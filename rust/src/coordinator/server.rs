@@ -1,4 +1,4 @@
-//! The live serving engine: threshold-routed cascade serving over real
+//! The live serving engine: policy-routed cascade serving over real
 //! model execution.
 //!
 //! Topology: each deployed tier runs `replicas` worker threads; each
@@ -6,9 +6,12 @@
 //! `Send`, so backends are constructed *inside* the worker via the
 //! factory). A tier-level [`Batcher`] feeds workers FIFO under the
 //! KV-capacity bound; a coordinator thread scores finished responses
-//! with the live judger and either completes the request or escalates
-//! it to the next tier — the same routing workflow the scheduler
-//! optimized (§3.3), now on the real request path.
+//! with the live judger and asks the configured
+//! [`crate::router::RoutingPolicy`] whether to complete the request,
+//! escalate it, or skip ahead — the same routing workflow the
+//! scheduler optimized (§3.3), now on the real request path.
+//! [`ServerConfig::from_plan`] derives the whole configuration from a
+//! scheduler-produced [`CascadePlan`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -19,6 +22,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
+use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
+use crate::sched::plan::CascadePlan;
 use crate::util::stats;
 
 /// Generates tokens for one tier. One instance per worker thread.
@@ -43,10 +48,53 @@ pub struct ServerConfig {
     pub replicas: Vec<usize>,
     /// Max batch admitted per tier iteration.
     pub max_batch: Vec<usize>,
-    /// Acceptance thresholds h_1..h_{C-1} (score >= h accepts).
-    pub thresholds: Vec<f64>,
+    /// Routing policy deciding acceptance/escalation per scored
+    /// response.
+    pub policy: PolicySpec,
     /// Max tokens to generate per request.
     pub max_new_tokens: usize,
+}
+
+impl ServerConfig {
+    /// Convenience constructor for the classic fixed-threshold server.
+    pub fn with_thresholds(
+        replicas: Vec<usize>,
+        max_batch: Vec<usize>,
+        thresholds: Vec<f64>,
+        max_new_tokens: usize,
+    ) -> Result<ServerConfig> {
+        Ok(ServerConfig {
+            replicas,
+            max_batch,
+            policy: PolicySpec::threshold(thresholds)?,
+            max_new_tokens,
+        })
+    }
+
+    /// Derive a serving configuration from a scheduler-produced plan:
+    /// the plan's policy routes, its strategies set the replica counts,
+    /// and admission scales with the allocation. Undeployed tiers keep
+    /// one idle worker so skip/escalation targets always exist (the
+    /// policy routes no steady-state traffic to them).
+    pub fn from_plan(plan: &CascadePlan, max_new_tokens: usize) -> Result<ServerConfig> {
+        plan.policy.validate(plan.tiers.len())?;
+        let replicas: Vec<usize> = plan
+            .tiers
+            .iter()
+            .map(|t| t.strategy.as_ref().map(|s| s.n_replicas()).unwrap_or(0).max(1))
+            .collect();
+        let max_batch: Vec<usize> = plan
+            .tiers
+            .iter()
+            .map(|t| (t.gpus.max(1) * 2).clamp(1, 16))
+            .collect();
+        Ok(ServerConfig {
+            replicas,
+            max_batch,
+            policy: plan.policy.clone(),
+            max_new_tokens,
+        })
+    }
 }
 
 /// One in-flight request.
@@ -148,10 +196,21 @@ enum RouterMsg {
 }
 
 impl CascadeServer {
-    pub fn new(config: ServerConfig) -> CascadeServer {
-        assert_eq!(config.replicas.len(), config.max_batch.len());
-        assert_eq!(config.thresholds.len() + 1, config.replicas.len());
-        CascadeServer { config }
+    pub fn new(config: ServerConfig) -> Result<CascadeServer> {
+        if config.replicas.len() != config.max_batch.len() {
+            anyhow::bail!(
+                "replicas ({}) and max_batch ({}) must cover the same tiers",
+                config.replicas.len(),
+                config.max_batch.len()
+            );
+        }
+        config.policy.validate(config.replicas.len())?;
+        Ok(CascadeServer { config })
+    }
+
+    /// Build the server straight from a scheduler plan.
+    pub fn from_plan(plan: &CascadePlan, max_new_tokens: usize) -> Result<CascadeServer> {
+        CascadeServer::new(ServerConfig::from_plan(plan, max_new_tokens)?)
     }
 
     /// Serve a trace of (arrival_offset_seconds, prompt) pairs; blocks
@@ -257,8 +316,11 @@ impl CascadeServer {
             }
             drop(tx);
 
-            // --- Submitter (paced by arrival offsets) ---
-            let submit_tier = &tiers[0];
+            // --- Submitter (paced by arrival offsets); the policy may
+            // route a request past the small tiers before any model
+            // runs (length-predictive entry). ---
+            let submit_tiers = &tiers;
+            let policy = &self.config.policy;
             scope.spawn(move || {
                 for (i, (offset, prompt)) in trace.iter().enumerate() {
                     let target = Duration::from_secs_f64(*offset);
@@ -266,7 +328,9 @@ impl CascadeServer {
                     if target > elapsed {
                         std::thread::sleep(target - elapsed);
                     }
-                    submit_tier.push(
+                    let features = RequestFeatures::live(prompt.len());
+                    let entry = policy.entry_tier(&features, c).min(c - 1);
+                    submit_tiers[entry].push(
                         LiveRequest { id: i, prompt: prompt.clone(), submitted: Instant::now() },
                         t0,
                     );
@@ -312,8 +376,21 @@ impl CascadeServer {
                     RouterMsg::Done { tier, req, output, exec_seconds } => {
                         per_tier[tier] += 1;
                         let score = judger.score(&req.prompt, &output);
-                        let accept = tier == c - 1 || score >= self.config.thresholds[tier];
-                        if accept {
+                        let features = RequestFeatures::live(req.prompt.len());
+                        let decision = if tier == c - 1 {
+                            Decision::Accept
+                        } else {
+                            self.config.policy.decide(tier, score, &features, c)
+                        };
+                        // A skip must move strictly forward; clamp a
+                        // misbehaving target rather than wedging the
+                        // request mid-flight.
+                        let next_tier = match decision {
+                            Decision::Accept => None,
+                            Decision::Escalate => Some(tier + 1),
+                            Decision::SkipTo(t) => Some(t.clamp(tier + 1, c - 1)),
+                        };
+                        if next_tier.is_none() {
                             let e2e = req.submitted.elapsed();
                             let execd = {
                                 let mut qt = queue_time.lock().unwrap();
@@ -331,10 +408,11 @@ impl CascadeServer {
                             });
                             done += 1;
                         } else {
+                            let next = next_tier.unwrap();
                             queue_time.lock().unwrap().entry(req.id).or_insert(0.0);
                             *queue_time.lock().unwrap().get_mut(&req.id).unwrap() +=
                                 exec_seconds;
-                            tiers[tier + 1].push(req, t0);
+                            tiers[next].push(req, t0);
                         }
                     }
                 }
@@ -394,12 +472,7 @@ mod tests {
     }
 
     fn config() -> ServerConfig {
-        ServerConfig {
-            replicas: vec![2, 1],
-            max_batch: vec![4, 2],
-            thresholds: vec![50.0],
-            max_new_tokens: 4,
-        }
+        ServerConfig::with_thresholds(vec![2, 1], vec![4, 2], vec![50.0], 4).unwrap()
     }
 
     fn factory(tier: usize) -> Result<Box<dyn TierBackend>> {
@@ -408,7 +481,7 @@ mod tests {
 
     #[test]
     fn serves_all_and_routes_by_difficulty() {
-        let server = CascadeServer::new(config());
+        let server = CascadeServer::new(config()).unwrap();
         // Difficulty 0 -> accepted at tier 0; difficulty 1 -> escalated.
         let trace: Vec<(f64, Vec<i32>)> =
             (0..20).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
@@ -426,7 +499,7 @@ mod tests {
 
     #[test]
     fn escalated_requests_have_higher_latency() {
-        let server = CascadeServer::new(config());
+        let server = CascadeServer::new(config()).unwrap();
         let trace: Vec<(f64, Vec<i32>)> =
             (0..30).map(|i| (0.0, vec![(i % 2) as i32])).collect();
         let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
@@ -475,12 +548,10 @@ mod tests {
             }))
         };
 
-        let server = CascadeServer::new(ServerConfig {
-            replicas: vec![2, 1],
-            max_batch: vec![2, 2],
-            thresholds: vec![50.0],
-            max_new_tokens: 2,
-        });
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![2, 1], vec![2, 2], vec![50.0], 2).unwrap(),
+        )
+        .unwrap();
         let trace: Vec<(f64, Vec<i32>)> = (0..10).map(|_| (0.0, vec![0])).collect();
         // The dying replica hands its admitted requests back to the
         // router, which re-routes them to the surviving replica — every
@@ -497,12 +568,10 @@ mod tests {
                 anyhow::bail!("boom")
             }
         }
-        let server = CascadeServer::new(ServerConfig {
-            replicas: vec![1, 1],
-            max_batch: vec![2, 2],
-            thresholds: vec![50.0],
-            max_new_tokens: 2,
-        });
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![2, 2], vec![50.0], 2).unwrap(),
+        )
+        .unwrap();
         let factory = |_t: usize| -> Result<Box<dyn TierBackend>> { Ok(Box::new(AlwaysDies)) };
         let trace: Vec<(f64, Vec<i32>)> = (0..4).map(|_| (0.0, vec![0])).collect();
         let err = server.serve(&trace, &factory, &FakeJudger).unwrap_err();
@@ -511,12 +580,10 @@ mod tests {
 
     #[test]
     fn queue_latency_reported() {
-        let server = CascadeServer::new(ServerConfig {
-            replicas: vec![1, 1],
-            max_batch: vec![1, 1],
-            thresholds: vec![50.0],
-            max_new_tokens: 2,
-        });
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 2).unwrap(),
+        )
+        .unwrap();
         // Burst of easy requests through a single slow replica: most of
         // their latency must be queueing.
         let slow_factory = |tier: usize| -> Result<Box<dyn TierBackend>> {
@@ -530,5 +597,103 @@ mod tests {
             .map(|c| c.queue_latency.as_secs_f64())
             .fold(0.0, f64::max);
         assert!(max_queue > 0.02, "queueing should dominate: {max_queue}");
+    }
+
+    #[test]
+    fn length_policy_enters_at_predicted_tier_live() {
+        // Prompts with >= 5 tokens are predicted hard and enter at tier
+        // 1; everything is easy (difficulty 0) so requests accept at
+        // their entry tier.
+        let server = CascadeServer::new(ServerConfig {
+            replicas: vec![1, 1],
+            max_batch: vec![4, 4],
+            policy: PolicySpec::length(vec![0.0], 5.0, 1).unwrap(),
+            max_new_tokens: 4,
+        })
+        .unwrap();
+        let mut trace: Vec<(f64, Vec<i32>)> = Vec::new();
+        for _ in 0..6 {
+            trace.push((0.0, vec![0, 1])); // short -> tier 0
+        }
+        for _ in 0..4 {
+            trace.push((0.0, vec![0, 1, 2, 3, 4, 5])); // long -> tier 1
+        }
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 10);
+        assert_eq!(stats.per_tier_processed, vec![6, 4]);
+        for c in &stats.completions {
+            let expect = if trace[c.id].1.len() >= 5 { 1 } else { 0 };
+            assert_eq!(c.accepting_tier, expect, "req {}", c.id);
+        }
+    }
+
+    #[test]
+    fn margin_policy_skips_middle_tier_live() {
+        // Difficulty-2 prompts fail tiers 0 and 1 (score 10); with a
+        // tight margin the deep failure at tier 0 skips tier 1 and goes
+        // straight to tier 2.
+        let server = CascadeServer::new(ServerConfig {
+            replicas: vec![1, 1, 1],
+            max_batch: vec![2, 2, 2],
+            policy: PolicySpec::margin(vec![80.0, 80.0], 5.0).unwrap(),
+            max_new_tokens: 4,
+        })
+        .unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..8).map(|_| (0.0, vec![2, 9])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 8);
+        assert_eq!(stats.per_tier_processed[0], 8);
+        assert_eq!(stats.per_tier_processed[1], 0, "middle tier should be skipped");
+        assert_eq!(stats.per_tier_processed[2], 8);
+        assert!(stats.completions.iter().all(|c| c.accepting_tier == 2));
+    }
+
+    #[test]
+    fn from_plan_derives_replicas_and_policy() {
+        use crate::parallel::Strategy;
+        use crate::perf::Workload;
+        use crate::sched::plan::TierPlan;
+
+        let plan = CascadePlan {
+            policy: PolicySpec::threshold(vec![50.0]).unwrap(),
+            tiers: vec![
+                TierPlan {
+                    model_name: "small".into(),
+                    gpus: 4,
+                    strategy: Some(Strategy::uniform(2, 1, 2)),
+                    workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
+                    processing_ratio: 1.0,
+                    predicted_p95: 1.0,
+                },
+                TierPlan {
+                    model_name: "large".into(),
+                    gpus: 0,
+                    strategy: None,
+                    workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
+                    processing_ratio: 0.0,
+                    predicted_p95: 0.0,
+                },
+            ],
+            predicted_latency: 1.0,
+            predicted_quality: 80.0,
+        };
+        let cfg = ServerConfig::from_plan(&plan, 6).unwrap();
+        assert_eq!(cfg.replicas, vec![2, 1]); // undeployed tier keeps 1 worker
+        assert_eq!(cfg.policy.thresholds(), &[50.0]);
+        assert_eq!(cfg.max_new_tokens, 6);
+        assert_eq!(cfg.replicas.len(), cfg.max_batch.len());
+        // The derived config constructs a valid server.
+        CascadeServer::new(cfg).unwrap();
+    }
+
+    #[test]
+    fn mismatched_policy_arity_rejected_at_construction() {
+        let err = CascadeServer::new(ServerConfig {
+            replicas: vec![1, 1, 1],
+            max_batch: vec![2, 2, 2],
+            policy: PolicySpec::threshold(vec![50.0]).unwrap(),
+            max_new_tokens: 2,
+        });
+        assert!(err.is_err());
     }
 }

@@ -166,6 +166,37 @@ mod tests {
     }
 
     #[test]
+    fn alternate_policy_families_schedule_and_evaluate() {
+        use crate::router::PolicyKind;
+        let s = Scenario::new(deepseek_cascade(), 32, 2, 4.0, 300, 7);
+        for kind in [PolicyKind::Length, PolicyKind::Margin] {
+            let opts = OuterOptions {
+                threshold_grid: vec![0.0, 50.0, 90.0],
+                policy_kind: kind,
+                ..Default::default()
+            };
+            let (sweep, _) = s.schedule(&opts).unwrap();
+            // At least one plan of the swept family must make it through
+            // the whole pipeline: schedule -> plan -> held-out DES.
+            let mut evaluated = false;
+            for p in sweep
+                .pareto
+                .iter()
+                .chain(&sweep.explored)
+                .filter(|p| p.plan.policy.kind() == kind)
+            {
+                if let Ok(out) = s.evaluate(&p.plan) {
+                    assert_eq!(out.e2e_latencies.len(), 300);
+                    assert!(out.p95().is_finite());
+                    evaluated = true;
+                    break;
+                }
+            }
+            assert!(evaluated, "{kind:?}: no swept plan evaluated end-to-end");
+        }
+    }
+
+    #[test]
     fn three_systems_produce_plans() {
         let s = Scenario::new(deepseek_cascade(), 32, 2, 4.0, 300, 7);
         let opts = OuterOptions {

@@ -5,25 +5,29 @@
 //! Large Language Models"* (CS.DC 2025) as a three-layer Rust + JAX +
 //! Pallas stack.
 //!
-//! Cascadia routes every request to the smallest model of a cascade
-//! first; a judger scores the response and threshold-based routing
-//! escalates unsatisfied requests to larger tiers. The headline
-//! contribution is a **bi-level scheduler**:
+//! Cascadia routes every request through a model cascade under a
+//! pluggable [`router::RoutingPolicy`] — per-tier score thresholds,
+//! length-predictive entry, or margin/hysteresis escalation — scored
+//! by a judger at every tier. The headline contribution is a
+//! **bi-level scheduler**:
 //!
 //! * the **inner level** ([`sched::inner`]) solves a mixed-integer
 //!   linear program ([`milp`]) to pick GPU allocations and parallelism
 //!   strategies ([`parallel`]) per model tier, driven by the latency
 //!   simulator ([`sim`]) over the analytic cost model ([`perf`]);
 //! * the **outer level** ([`sched::outer`]) runs a weighted Tchebycheff
-//!   sweep over routing thresholds to trace the latency/quality Pareto
-//!   front and pick the plan meeting the user's quality requirement.
+//!   sweep over the routing policy's parameter space to trace the
+//!   latency/quality Pareto front and pick the plan meeting the user's
+//!   quality requirement.
 //!
-//! The serving engine ([`coordinator`]) executes the chosen plan:
-//! threshold routing ([`router`]), continuous batching, escalation, and
-//! re-scheduling on workload shift. Real model execution goes through
-//! [`runtime`], which loads the AOT-compiled HLO-text artifacts
-//! produced by `python/compile/aot.py` — Python never runs on the
-//! request path.
+//! The serving engine ([`coordinator`]) executes the chosen
+//! [`sched::plan::CascadePlan`] — the single schedule→serve artifact,
+//! JSON round-trippable into `ServerConfig::from_plan` /
+//! `TcpFrontend::from_plan`: policy routing ([`router`]), continuous
+//! batching, escalation, and re-scheduling on workload shift. Real
+//! model execution goes through [`runtime`], which loads the
+//! AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`
+//! — Python never runs on the request path.
 //!
 //! See `DESIGN.md` for the system inventory and the paper-experiment
 //! index, and `examples/` for runnable entry points.

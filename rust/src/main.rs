@@ -16,7 +16,9 @@ use anyhow::{bail, Context, Result};
 use cascadia::config::ExperimentConfig;
 use cascadia::harness::Scenario;
 use cascadia::report::{fmt_secs, Table};
+use cascadia::router::{PolicyKind, PolicySpec, RoutingPolicy};
 use cascadia::sched::outer::select_plan;
+use cascadia::sched::plan::CascadePlan;
 use cascadia::util::cli::Args;
 use cascadia::workload::generate;
 
@@ -46,6 +48,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("seed") {
         cfg.seed = v.parse().context("--seed")?;
     }
+    if let Some(v) = args.get("policy") {
+        cfg.policy_kind = PolicyKind::parse(v)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -61,18 +66,20 @@ fn scenario_of(cfg: &ExperimentConfig) -> Scenario {
     )
 }
 
+/// Diagnostics go to stderr so `cascadia schedule ... > plan.json`
+/// captures a pure plan artifact that `cascadia serve --plan` loads.
 fn cmd_schedule(cfg: &ExperimentConfig) -> Result<()> {
     let scenario = scenario_of(cfg);
     let opts = cfg.outer_options();
     let (sweep, secs) = scenario.schedule(&opts)?;
     let plan = select_plan(&sweep, cfg.quality_requirement)
         .with_context(|| format!("no plan meets quality {}", cfg.quality_requirement))?;
-    println!(
+    eprintln!(
         "scheduled in {secs:.2}s ({} candidates, {} Pareto-optimal)",
         sweep.explored.len(),
         sweep.pareto.len()
     );
-    println!("{}", plan.summary());
+    eprintln!("{}", plan.summary());
     println!("{}", plan.to_json());
     Ok(())
 }
@@ -86,13 +93,13 @@ fn cmd_sweep(cfg: &ExperimentConfig) -> Result<()> {
             "Pareto front ({secs:.2}s, utopia L={:.2}s Q={:.1})",
             sweep.utopia.0, sweep.utopia.1
         ),
-        &["latency(s)", "quality", "thresholds", "allocation"],
+        &["latency(s)", "quality", "policy", "allocation"],
     );
     for p in &sweep.pareto {
         t.row(vec![
             format!("{:.3}", p.latency),
             format!("{:.2}", p.quality),
-            format!("{:?}", p.plan.thresholds.0),
+            p.plan.policy.label(),
             format!("{:?}", p.plan.tiers.iter().map(|x| x.gpus).collect::<Vec<_>>()),
         ]);
     }
@@ -171,14 +178,42 @@ fn cmd_baselines(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Parse a routing policy from CLI flags, sized to the artifact set's
+/// tier count: `--policy threshold|length|margin`, `--h 80,70` (a
+/// single value is replicated across all tier boundaries), plus
+/// `--cutoff/--entry` for length and `--margin` for margin.
+fn policy_from_args(args: &Args, n_tiers: usize) -> Result<PolicySpec> {
+    let kind = PolicyKind::parse(&args.str_or("policy", "threshold"))?;
+    let raw = args.str_or("h", "80");
+    let mut thresholds: Vec<f64> = raw
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().with_context(|| format!("--h entry '{s}'")))
+        .collect::<Result<_>>()?;
+    if thresholds.len() == 1 && n_tiers > 2 {
+        thresholds = vec![thresholds[0]; n_tiers - 1];
+    }
+    match kind {
+        PolicyKind::Threshold => PolicySpec::threshold(thresholds),
+        PolicyKind::Length => PolicySpec::length(
+            thresholds,
+            args.f64_or("cutoff", 900.0)?,
+            args.usize_or("entry", 1)?,
+        ),
+        PolicyKind::Margin => PolicySpec::margin(thresholds, args.f64_or("margin", 15.0)?),
+    }
+}
+
 /// Serve the real tiny-tier cascade over TCP (requires artifacts).
+/// `--plan plan.json` (a `cascadia schedule` capture) configures
+/// routing entirely from the scheduler's artifact; otherwise the
+/// policy comes from `--policy`/`--h` flags sized to the manifest's
+/// tier count.
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
 
     let addr = args.str_or("addr", "127.0.0.1:8741");
-    let h1 = args.f64_or("h1", 80.0)?;
-    let h2 = args.f64_or("h2", 80.0)?;
+    let max_new = args.usize_or("max-new", 8)?;
     let dir = std::env::var("CASCADIA_ARTIFACTS")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| {
@@ -186,13 +221,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
     let manifest = cascadia::runtime::Manifest::load(&dir)
         .context("artifacts missing — run `make artifacts` first")?;
-    let judger = cascadia::runtime::TaskJudger::new(manifest.task.clone(), 8);
+    let n_tiers = manifest.tiers.len();
+    let fe = match args.get("plan") {
+        Some(path) => {
+            let plan = CascadePlan::load(path)?;
+            if plan.tiers.len() != n_tiers {
+                bail!(
+                    "plan has {} tiers but the artifact set has {n_tiers}",
+                    plan.tiers.len()
+                );
+            }
+            cascadia::coordinator::net::TcpFrontend::from_plan(&plan, max_new)?
+        }
+        None => cascadia::coordinator::net::TcpFrontend::new(
+            policy_from_args(args, n_tiers)?,
+            n_tiers,
+            max_new,
+        )?,
+    };
+    let judger = cascadia::runtime::TaskJudger::new(manifest.task.clone(), max_new.min(8));
     let factory = cascadia::runtime::pjrt_factory(dir);
     println!(
-        "serving {} tiers on {addr} (thresholds {h1},{h2}); protocol: one JSON per line",
-        manifest.tiers.len()
+        "serving {n_tiers} tiers on {addr} (policy {}); protocol: one JSON per line",
+        fe.policy.label()
     );
-    let fe = cascadia::coordinator::net::TcpFrontend::new(vec![h1, h2], 8);
     fe.serve(&addr, &factory, &judger, Arc::new(AtomicBool::new(false)))
 }
 
@@ -219,9 +271,15 @@ fn main() -> Result<()> {
 
 fn print_help() {
     println!(
-        "cascadia <schedule|sweep|simulate|baselines|trace> \\\n\
+        "cascadia <schedule|sweep|simulate|baselines|trace|serve> \\\n\
          \x20   [--config cfg.json] [--cascade deepseek|llama] [--gpus N] \\\n\
-         \x20   [--trace 1..3] [--rate R] [--quality Q] [--n N] [--seed S]\n\n\
+         \x20   [--trace 1..3] [--rate R] [--quality Q] [--n N] [--seed S] \\\n\
+         \x20   [--policy threshold|length|margin]\n\n\
+         Schedule-to-serve flow:\n\
+         \x20   cascadia schedule --config cfg.json > plan.json\n\
+         \x20   cascadia serve --plan plan.json\n\
+         serve flags (without --plan): --h 80,70 --policy threshold \\\n\
+         \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );
 }

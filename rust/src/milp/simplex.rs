@@ -9,8 +9,6 @@
 //! Scale target: the scheduler's LPs are a few hundred variables/rows;
 //! a dense tableau is simple and fast at that size.
 
-use thiserror::Error;
-
 /// Constraint relation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rel {
@@ -26,15 +24,26 @@ pub enum Sense {
     Maximize,
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum LpError {
-    #[error("LP is infeasible (phase-1 objective {0} > 0)")]
     Infeasible(f64),
-    #[error("LP is unbounded")]
     Unbounded,
-    #[error("simplex iteration limit hit")]
     IterationLimit,
 }
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Infeasible(v) => {
+                write!(f, "LP is infeasible (phase-1 objective {v} > 0)")
+            }
+            LpError::Unbounded => write!(f, "LP is unbounded"),
+            LpError::IterationLimit => write!(f, "simplex iteration limit hit"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
 
 /// An LP in natural form: variables are implicitly `>= 0`.
 #[derive(Debug, Clone)]

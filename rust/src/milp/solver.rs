@@ -8,19 +8,28 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use thiserror::Error;
-
 use super::simplex::{LpError, LpProblem, Rel, Sense};
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum MilpError {
-    #[error("MILP is infeasible")]
     Infeasible,
-    #[error("LP relaxation unbounded")]
     Unbounded,
-    #[error("node limit reached without proving optimality")]
     NodeLimit,
 }
+
+impl std::fmt::Display for MilpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MilpError::Infeasible => write!(f, "MILP is infeasible"),
+            MilpError::Unbounded => write!(f, "LP relaxation unbounded"),
+            MilpError::NodeLimit => {
+                write!(f, "node limit reached without proving optimality")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MilpError {}
 
 /// A MILP: minimize/maximize `objective . x` with linear constraints,
 /// `x >= 0`, and a subset of variables restricted to {0, 1}.

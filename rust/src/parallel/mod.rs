@@ -10,8 +10,11 @@
 //! server (NVLink domain), and at most two distinct replica designs per
 //! model type (the paper's case studies never use more).
 
+use anyhow::Result;
+
 use crate::cluster::ClusterSpec;
 use crate::models::ModelSpec;
+use crate::util::json::Json;
 
 /// Fraction of GPU memory reserved for activations/fragmentation.
 pub const ACT_RESERVE: f64 = 0.10;
@@ -84,6 +87,49 @@ impl Strategy {
             parts.push(format!("({})", inner.join(", ")));
         }
         parts.join(", ")
+    }
+
+    /// Serialize for the plan artifact: the human-readable label plus
+    /// the exact replica groups, so the plan round-trips losslessly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label())),
+            (
+                "groups",
+                Json::arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("tp", Json::num(g.tp as f64)),
+                                ("pp", Json::num(g.pp as f64)),
+                                ("count", Json::num(g.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a strategy from its plan-JSON form.
+    pub fn from_json(j: &Json) -> Result<Strategy> {
+        let groups = j
+            .req("groups")?
+            .as_arr()?
+            .iter()
+            .map(|g| {
+                Ok(ReplicaGroup {
+                    tp: g.req("tp")?.as_usize()?,
+                    pp: g.req("pp")?.as_usize()?,
+                    count: g.req("count")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if groups.is_empty() || groups.iter().any(|g| g.tp == 0 || g.pp == 0 || g.count == 0) {
+            anyhow::bail!("strategy must have at least one non-empty replica group");
+        }
+        Ok(Strategy::new(groups))
     }
 }
 
@@ -196,6 +242,19 @@ mod tests {
     fn dp_only_label() {
         assert_eq!(Strategy::uniform(1, 1, 4).label(), "(DP=4)");
         assert_eq!(Strategy::uniform(2, 1, 6).label(), "(DP=6, TP=2)");
+    }
+
+    #[test]
+    fn strategy_json_roundtrip() {
+        let s = Strategy::new(vec![
+            ReplicaGroup { tp: 4, pp: 3, count: 1 },
+            ReplicaGroup { tp: 8, pp: 1, count: 2 },
+        ]);
+        let text = s.to_json().to_string();
+        let back = Strategy::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.label(), s.label());
+        assert!(Strategy::from_json(&Json::parse(r#"{"groups": []}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -1,20 +1,35 @@
-//! Threshold-based cascade routing (§3.3, Figure 5).
+//! Policy-driven cascade routing (§3.3, Figure 5).
 //!
-//! Every request is first served by the smallest tier; the judger
-//! scores the response, and a score below threshold `h_i` forwards the
-//! request to tier i+1. The last tier always accepts. Routing a
-//! concrete trace yields the per-tier *processing ratios* `p_i`, the
-//! per-tier workloads `w_i` consumed by the inner MILP, and the overall
-//! quality metric `Q(θ)` — i.e. everything the outer optimization
-//! iterates on.
+//! Every request enters the cascade at the tier its [`RoutingPolicy`]
+//! picks (the smallest tier unless the policy predicts difficulty from
+//! request features); the judger scores each response and the policy
+//! accepts it, escalates one tier, or skips ahead. The last tier
+//! always accepts. Routing a concrete trace yields the per-tier
+//! *processing ratios* `p_i`, the per-tier workloads `w_i` consumed by
+//! the inner MILP, and the overall quality metric `Q(θ)` — i.e.
+//! everything the outer optimization iterates on.
+//!
+//! [`route_with`] is the generic entry point; [`route`] is the legacy
+//! fixed-threshold wrapper kept for the original call sites and its
+//! panic-on-bad-arity contract.
+
+pub mod policy;
+
+pub use policy::{
+    monotone_chains, Decision, LengthPolicy, MarginPolicy, PolicyKind, PolicySpec,
+    RequestFeatures, RoutingPolicy, ThresholdPolicy, THRESHOLD_MAX,
+};
+
+use anyhow::{bail, Result};
 
 use crate::judge::Judger;
 use crate::models::ModelSpec;
 use crate::perf::Workload;
 use crate::workload::Request;
 
-/// Routing thresholds `h_1..h_{C-1}` (score in [0, 100]; a request is
-/// accepted at tier i when its score >= h_i).
+/// Legacy routing thresholds `h_1..h_{C-1}` (score in [0, 100]; a
+/// request is accepted at tier i when its score >= h_i). Kept as the
+/// raw, unvalidated form; [`ThresholdPolicy`] is the validated port.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Thresholds(pub Vec<f64>);
 
@@ -29,7 +44,12 @@ impl Thresholds {
 pub struct RoutingOutcome {
     /// Accepting tier index per request (aligned with the trace).
     pub accepting_tier: Vec<u8>,
-    /// Fraction of requests processed by each tier (p_i; p_0 == 1).
+    /// Tiers each request actually visited, in visit order (policies
+    /// with entry prediction or skip decisions do not visit every tier
+    /// up to the accepting one).
+    pub visited_tiers: Vec<Vec<u8>>,
+    /// Fraction of requests processed by each tier (p_i; p_0 == 1 for
+    /// policies that always enter at the bottom).
     pub processing_ratios: Vec<f64>,
     /// Workload each tier sees (visits, not accepts).
     pub tier_workloads: Vec<Workload>,
@@ -39,46 +59,69 @@ pub struct RoutingOutcome {
     pub final_scores: Vec<f64>,
 }
 
-/// Route `requests` through `cascade` with `thresholds`.
+/// Route `requests` through `cascade` under `policy`.
 ///
 /// `span_seconds` is the observation window used to turn visit counts
-/// into rates; pass the trace's true span.
-pub fn route(
+/// into rates; pass the trace's true span. Fails if the policy's
+/// parameters don't fit the cascade or the policy emits an invalid
+/// skip target.
+pub fn route_with(
     cascade: &[ModelSpec],
     judger: &Judger,
     requests: &[Request],
-    thresholds: &Thresholds,
+    policy: &dyn RoutingPolicy,
     span_seconds: f64,
-) -> RoutingOutcome {
+) -> Result<RoutingOutcome> {
     let c = cascade.len();
-    assert_eq!(
-        thresholds.0.len(),
-        c - 1,
-        "need {} thresholds for a {}-tier cascade",
-        c - 1,
-        c
-    );
-    assert!(span_seconds > 0.0);
+    if c == 0 {
+        bail!("empty cascade");
+    }
+    policy.validate(c)?;
+    if !(span_seconds > 0.0) {
+        bail!("span_seconds must be positive, got {span_seconds}");
+    }
 
     let mut accepting = vec![0u8; requests.len()];
     let mut final_scores = vec![0.0f64; requests.len()];
+    let mut visited_tiers: Vec<Vec<u8>> = Vec::with_capacity(requests.len());
     let mut visits = vec![0usize; c];
     let mut in_tokens = vec![0f64; c];
     let mut out_tokens = vec![0f64; c];
 
     for (idx, req) in requests.iter().enumerate() {
-        for tier in 0..c {
+        let features = RequestFeatures::of(req);
+        let mut tier = policy.entry_tier(&features, c).min(c - 1);
+        let mut visited: Vec<u8> = Vec::with_capacity(2);
+        loop {
             visits[tier] += 1;
             in_tokens[tier] += req.input_tokens as f64;
             out_tokens[tier] += req.output_tokens as f64;
+            visited.push(tier as u8);
             let score = judger.score(&cascade[tier], req, tier);
-            let accepted = tier == c - 1 || score >= thresholds.0[tier];
-            if accepted {
-                accepting[idx] = tier as u8;
-                final_scores[idx] = score;
-                break;
+            let decision = if tier == c - 1 {
+                Decision::Accept
+            } else {
+                policy.decide(tier, score, &features, c)
+            };
+            match decision {
+                Decision::Accept => {
+                    accepting[idx] = tier as u8;
+                    final_scores[idx] = score;
+                    break;
+                }
+                Decision::Escalate => tier += 1,
+                Decision::SkipTo(t) => {
+                    if t <= tier || t >= c {
+                        bail!(
+                            "policy skipped from tier {tier} to invalid tier {t} \
+                             (must move strictly forward within {c} tiers)"
+                        );
+                    }
+                    tier = t;
+                }
             }
         }
+        visited_tiers.push(visited);
     }
 
     let n = requests.len() as f64;
@@ -96,13 +139,32 @@ pub fn route(
         final_scores.iter().sum::<f64>() / n
     };
 
-    RoutingOutcome {
+    Ok(RoutingOutcome {
         accepting_tier: accepting,
+        visited_tiers,
         processing_ratios,
         tier_workloads,
         quality,
         final_scores,
-    }
+    })
+}
+
+/// Route `requests` through `cascade` with fixed `thresholds` — the
+/// legacy entry point, equivalent to [`route_with`] under a
+/// [`ThresholdPolicy`]. Panics on invalid thresholds (original
+/// contract); new code should construct a policy and call
+/// [`route_with`].
+pub fn route(
+    cascade: &[ModelSpec],
+    judger: &Judger,
+    requests: &[Request],
+    thresholds: &Thresholds,
+    span_seconds: f64,
+) -> RoutingOutcome {
+    let policy = ThresholdPolicy::new(thresholds.0.clone())
+        .unwrap_or_else(|e| panic!("invalid thresholds: {e}"));
+    route_with(cascade, judger, requests, &policy, span_seconds)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
@@ -191,5 +253,70 @@ mod tests {
     fn wrong_threshold_count_panics() {
         let (cascade, judger, reqs, span) = setup();
         route(&cascade, &judger, &reqs, &Thresholds(vec![50.0]), span);
+    }
+
+    #[test]
+    fn threshold_visits_are_contiguous_from_zero() {
+        let (cascade, judger, reqs, span) = setup();
+        let out = route(&cascade, &judger, &reqs, &Thresholds(vec![60.0, 40.0]), span);
+        for (i, visited) in out.visited_tiers.iter().enumerate() {
+            let expect: Vec<u8> = (0..=out.accepting_tier[i]).collect();
+            assert_eq!(visited, &expect, "request {i}");
+        }
+    }
+
+    #[test]
+    fn length_policy_long_requests_skip_tier_zero() {
+        let (cascade, judger, reqs, span) = setup();
+        let policy = LengthPolicy::new(vec![80.0, 80.0], 600.0, 1).unwrap();
+        let out = route_with(&cascade, &judger, &reqs, &policy, span).unwrap();
+        let mut saw_long = false;
+        for (i, req) in reqs.iter().enumerate() {
+            if req.input_tokens as f64 >= 600.0 {
+                saw_long = true;
+                assert!(
+                    !out.visited_tiers[i].contains(&0),
+                    "long request {i} visited tier 0"
+                );
+                assert!(out.accepting_tier[i] >= 1);
+            } else {
+                assert_eq!(out.visited_tiers[i][0], 0);
+            }
+        }
+        assert!(saw_long, "trace has no long requests; cutoff too high");
+        // Tier 0 no longer sees everything.
+        assert!(out.processing_ratios[0] < 1.0);
+    }
+
+    #[test]
+    fn margin_policy_skips_intermediate_tier_on_deep_failure() {
+        let (cascade, judger, reqs, span) = setup();
+        let policy = MarginPolicy::new(vec![80.0, 80.0], 10.0).unwrap();
+        let out = route_with(&cascade, &judger, &reqs, &policy, span).unwrap();
+        // Deep failures at tier 0 (score < 70 there) jump straight to
+        // tier 2 — some requests must accept at tier 2 without ever
+        // visiting tier 1.
+        let skipped = (0..reqs.len())
+            .filter(|&i| {
+                out.accepting_tier[i] == 2 && !out.visited_tiers[i].contains(&1)
+            })
+            .count();
+        assert!(skipped > 0, "no deep failure ever skipped the middle tier");
+        // Consequently tier 1 sees strictly less traffic than under the
+        // plain threshold rule with the same bars.
+        let plain = route(&cascade, &judger, &reqs, &Thresholds(vec![80.0, 80.0]), span);
+        assert!(out.processing_ratios[1] < plain.processing_ratios[1]);
+    }
+
+    #[test]
+    fn policy_spec_delegates_like_concrete_policy() {
+        let (cascade, judger, reqs, span) = setup();
+        let concrete = MarginPolicy::new(vec![70.0, 50.0], 20.0).unwrap();
+        let spec = PolicySpec::margin(vec![70.0, 50.0], 20.0).unwrap();
+        let a = route_with(&cascade, &judger, &reqs, &concrete, span).unwrap();
+        let b = route_with(&cascade, &judger, &reqs, &spec, span).unwrap();
+        assert_eq!(a.accepting_tier, b.accepting_tier);
+        assert_eq!(a.final_scores, b.final_scores);
+        assert_eq!(a.processing_ratios, b.processing_ratios);
     }
 }

@@ -1,0 +1,619 @@
+//! The routing-policy abstraction: cascade routing as a *family* of
+//! strategies rather than one hardwired threshold rule.
+//!
+//! The paper's outer loop co-optimizes a routing strategy with the
+//! deployment plan (§3.3); related systems show the strategy space is
+//! wider than fixed thresholds — CascadeServe tunes thresholds per load
+//! regime, CascadeInfer routes by predicted request length before any
+//! model runs. [`RoutingPolicy`] captures the common contract:
+//!
+//! * [`RoutingPolicy::entry_tier`] — which tier serves the request
+//!   first, decided from pre-execution [`RequestFeatures`] only;
+//! * [`RoutingPolicy::decide`] — given a judged score at a tier,
+//!   [`Decision::Accept`] the response, [`Decision::Escalate`] one
+//!   tier up, or [`Decision::SkipTo`] a deeper tier directly.
+//!
+//! Three built-in implementations:
+//!
+//! * [`ThresholdPolicy`] — the paper's per-tier score thresholds
+//!   (behavior-preserving port of the legacy `Thresholds`);
+//! * [`LengthPolicy`] — length-predictive entry: requests whose prompt
+//!   exceeds a cutoff bypass the small tier entirely;
+//! * [`MarginPolicy`] — margin/hysteresis escalation: a near-miss
+//!   escalates one tier, a deep failure skips straight to the top.
+//!
+//! [`PolicySpec`] is the serializable, cloneable form carried inside a
+//! `CascadePlan` and a `ServerConfig`, so `cascadia schedule` output
+//! feeds `cascadia serve` directly. It itself implements
+//! [`RoutingPolicy`] by delegation.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::workload::Request;
+
+/// Thresholds are judged scores in [0, 100]; 101 is the documented
+/// "always escalate" sentinel used by the utopia point and the
+/// standalone baseline.
+pub const THRESHOLD_MAX: f64 = 101.0;
+
+/// Pre-execution request features available to a policy. On the live
+/// path only the prompt length is observable; `complexity` is the
+/// synthetic traces' latent difficulty and is NaN when unknown, so
+/// policies must not rely on it for live-serving parity.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestFeatures {
+    pub input_tokens: u32,
+    /// Expected/observed output length; 0 when unknown (live path).
+    pub output_tokens: u32,
+    /// Latent difficulty in [0, 1]; NaN on the live path.
+    pub complexity: f64,
+}
+
+impl RequestFeatures {
+    /// Features of an offline trace request.
+    pub fn of(req: &Request) -> RequestFeatures {
+        RequestFeatures {
+            input_tokens: req.input_tokens,
+            output_tokens: req.output_tokens,
+            complexity: req.complexity,
+        }
+    }
+
+    /// Features of a live request: only the prompt length is known.
+    pub fn live(prompt_tokens: usize) -> RequestFeatures {
+        RequestFeatures {
+            input_tokens: prompt_tokens.min(u32::MAX as usize) as u32,
+            output_tokens: 0,
+            complexity: f64::NAN,
+        }
+    }
+}
+
+/// A policy's verdict on a scored response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// The response is good enough; the request completes here.
+    Accept,
+    /// Forward to the next tier.
+    Escalate,
+    /// Jump to a deeper tier (must be strictly beyond the current one).
+    SkipTo(usize),
+}
+
+/// A cascade routing strategy. Implementations must be deterministic
+/// in their inputs so offline routing, the simulators, and the live
+/// server agree on every decision.
+pub trait RoutingPolicy: Send + Sync {
+    /// Tier at which a request enters the cascade (before any model
+    /// runs). Defaults to the smallest tier.
+    fn entry_tier(&self, _features: &RequestFeatures, _n_tiers: usize) -> usize {
+        0
+    }
+
+    /// Decide what happens to a response scored `score` at `tier`.
+    /// Never called for the last tier — it always accepts.
+    fn decide(&self, tier: usize, score: f64, features: &RequestFeatures, n_tiers: usize)
+        -> Decision;
+
+    /// Check the policy's parameters against a cascade size.
+    fn validate(&self, n_tiers: usize) -> Result<()>;
+
+    /// Human-readable parameter summary (used in plan summaries/logs).
+    fn label(&self) -> String;
+}
+
+/// Validate a per-tier threshold vector: finite, within
+/// [0, [`THRESHOLD_MAX`]], one entry per non-final tier.
+fn validate_thresholds(thresholds: &[f64], n_tiers: usize) -> Result<()> {
+    if n_tiers == 0 {
+        bail!("cascade must have at least one tier");
+    }
+    if thresholds.len() + 1 != n_tiers {
+        bail!(
+            "need {} thresholds for a {}-tier cascade, got {}",
+            n_tiers - 1,
+            n_tiers,
+            thresholds.len()
+        );
+    }
+    check_threshold_values(thresholds)
+}
+
+fn check_threshold_values(thresholds: &[f64]) -> Result<()> {
+    for (i, &h) in thresholds.iter().enumerate() {
+        if !h.is_finite() || !(0.0..=THRESHOLD_MAX).contains(&h) {
+            bail!("threshold h{} = {h} outside [0, {THRESHOLD_MAX}]", i + 1);
+        }
+    }
+    Ok(())
+}
+
+fn fmt_thresholds(thresholds: &[f64]) -> String {
+    let h = thresholds
+        .iter()
+        .map(|h| format!("{h:.0}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("H=({h})")
+}
+
+/// The paper's routing rule (§3.3, Figure 5): a request is accepted at
+/// tier i when its judged score reaches `h_i`; the last tier always
+/// accepts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThresholdPolicy {
+    thresholds: Vec<f64>,
+}
+
+impl ThresholdPolicy {
+    /// Construct with validated parameters (finite, within
+    /// [0, [`THRESHOLD_MAX`]]). Arity is checked against the cascade at
+    /// routing/serving time via [`RoutingPolicy::validate`].
+    pub fn new(thresholds: Vec<f64>) -> Result<ThresholdPolicy> {
+        check_threshold_values(&thresholds)?;
+        Ok(ThresholdPolicy { thresholds })
+    }
+
+    /// The same threshold at every tier boundary.
+    pub fn uniform(c_minus_1: usize, h: f64) -> Result<ThresholdPolicy> {
+        ThresholdPolicy::new(vec![h; c_minus_1])
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.thresholds
+    }
+}
+
+impl RoutingPolicy for ThresholdPolicy {
+    fn decide(
+        &self,
+        tier: usize,
+        score: f64,
+        _features: &RequestFeatures,
+        n_tiers: usize,
+    ) -> Decision {
+        if tier + 1 >= n_tiers || score >= self.thresholds[tier] {
+            Decision::Accept
+        } else {
+            Decision::Escalate
+        }
+    }
+
+    fn validate(&self, n_tiers: usize) -> Result<()> {
+        validate_thresholds(&self.thresholds, n_tiers)
+    }
+
+    fn label(&self) -> String {
+        fmt_thresholds(&self.thresholds)
+    }
+}
+
+/// Length-predictive routing (CascadeInfer-style): requests whose
+/// prompt length reaches `length_cutoff` are predicted hard and enter
+/// the cascade at `entry_tier`, bypassing the smaller tiers; everything
+/// else follows the threshold rule from tier 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthPolicy {
+    thresholds: Vec<f64>,
+    length_cutoff: f64,
+    entry_tier: usize,
+}
+
+impl LengthPolicy {
+    pub fn new(thresholds: Vec<f64>, length_cutoff: f64, entry_tier: usize) -> Result<LengthPolicy> {
+        check_threshold_values(&thresholds)?;
+        if !length_cutoff.is_finite() || length_cutoff <= 0.0 {
+            bail!("length_cutoff must be a positive finite token count, got {length_cutoff}");
+        }
+        if entry_tier == 0 {
+            bail!("entry_tier 0 makes the length predictor a no-op; use ThresholdPolicy");
+        }
+        Ok(LengthPolicy { thresholds, length_cutoff, entry_tier })
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.thresholds
+    }
+
+    pub fn length_cutoff(&self) -> f64 {
+        self.length_cutoff
+    }
+
+    pub fn target_tier(&self) -> usize {
+        self.entry_tier
+    }
+}
+
+impl RoutingPolicy for LengthPolicy {
+    fn entry_tier(&self, features: &RequestFeatures, n_tiers: usize) -> usize {
+        if features.input_tokens as f64 >= self.length_cutoff {
+            self.entry_tier.min(n_tiers - 1)
+        } else {
+            0
+        }
+    }
+
+    fn decide(
+        &self,
+        tier: usize,
+        score: f64,
+        _features: &RequestFeatures,
+        n_tiers: usize,
+    ) -> Decision {
+        if tier + 1 >= n_tiers || score >= self.thresholds[tier] {
+            Decision::Accept
+        } else {
+            Decision::Escalate
+        }
+    }
+
+    fn validate(&self, n_tiers: usize) -> Result<()> {
+        validate_thresholds(&self.thresholds, n_tiers)?;
+        if self.entry_tier >= n_tiers {
+            bail!(
+                "entry_tier {} out of range for a {}-tier cascade",
+                self.entry_tier,
+                n_tiers
+            );
+        }
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "len>={:.0}->T{} {}",
+            self.length_cutoff,
+            self.entry_tier + 1,
+            fmt_thresholds(&self.thresholds)
+        )
+    }
+}
+
+/// Margin/hysteresis escalation: scores at or above `h_i` accept; a
+/// near-miss inside the margin band `[h_i - margin, h_i)` escalates
+/// one tier (the next model is probably enough); a deep failure below
+/// the band skips the intermediate tiers and goes straight to the
+/// strongest model, saving the wasted middle-tier visit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarginPolicy {
+    thresholds: Vec<f64>,
+    margin: f64,
+}
+
+impl MarginPolicy {
+    pub fn new(thresholds: Vec<f64>, margin: f64) -> Result<MarginPolicy> {
+        check_threshold_values(&thresholds)?;
+        if !margin.is_finite() || margin < 0.0 {
+            bail!("margin must be a finite non-negative score delta, got {margin}");
+        }
+        Ok(MarginPolicy { thresholds, margin })
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.thresholds
+    }
+
+    pub fn margin(&self) -> f64 {
+        self.margin
+    }
+}
+
+impl RoutingPolicy for MarginPolicy {
+    fn decide(
+        &self,
+        tier: usize,
+        score: f64,
+        _features: &RequestFeatures,
+        n_tiers: usize,
+    ) -> Decision {
+        if tier + 1 >= n_tiers {
+            return Decision::Accept;
+        }
+        let h = self.thresholds[tier];
+        if score >= h {
+            Decision::Accept
+        } else if score < h - self.margin {
+            // Deep failure: the next tier up is unlikely to clear the
+            // bar either; go straight to the top.
+            Decision::SkipTo(n_tiers - 1)
+        } else {
+            Decision::Escalate
+        }
+    }
+
+    fn validate(&self, n_tiers: usize) -> Result<()> {
+        validate_thresholds(&self.thresholds, n_tiers)
+    }
+
+    fn label(&self) -> String {
+        format!("{} margin={:.0}", fmt_thresholds(&self.thresholds), self.margin)
+    }
+}
+
+/// The policy families the scheduler can sweep and the plan/server can
+/// carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Threshold,
+    Length,
+    Margin,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "threshold" => Ok(PolicyKind::Threshold),
+            "length" => Ok(PolicyKind::Length),
+            "margin" => Ok(PolicyKind::Margin),
+            other => bail!("unknown policy kind '{other}' (expected threshold|length|margin)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::Length => "length",
+            PolicyKind::Margin => "margin",
+        }
+    }
+}
+
+/// Serializable routing policy: the concrete parameters of one of the
+/// built-in families. This is what `CascadePlan` stores, `to_json`
+/// round-trips, and `ServerConfig`/`TcpFrontend` execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    Threshold(ThresholdPolicy),
+    Length(LengthPolicy),
+    Margin(MarginPolicy),
+}
+
+impl PolicySpec {
+    pub fn threshold(thresholds: Vec<f64>) -> Result<PolicySpec> {
+        Ok(PolicySpec::Threshold(ThresholdPolicy::new(thresholds)?))
+    }
+
+    pub fn uniform_threshold(c_minus_1: usize, h: f64) -> Result<PolicySpec> {
+        Ok(PolicySpec::Threshold(ThresholdPolicy::uniform(c_minus_1, h)?))
+    }
+
+    pub fn length(thresholds: Vec<f64>, cutoff: f64, entry_tier: usize) -> Result<PolicySpec> {
+        Ok(PolicySpec::Length(LengthPolicy::new(thresholds, cutoff, entry_tier)?))
+    }
+
+    pub fn margin(thresholds: Vec<f64>, margin: f64) -> Result<PolicySpec> {
+        Ok(PolicySpec::Margin(MarginPolicy::new(thresholds, margin)?))
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        match self {
+            PolicySpec::Threshold(_) => PolicyKind::Threshold,
+            PolicySpec::Length(_) => PolicyKind::Length,
+            PolicySpec::Margin(_) => PolicyKind::Margin,
+        }
+    }
+
+    /// Per-tier acceptance thresholds — every built-in family carries
+    /// them, so tables/figures can report h_i uniformly.
+    pub fn thresholds(&self) -> &[f64] {
+        match self {
+            PolicySpec::Threshold(p) => p.thresholds(),
+            PolicySpec::Length(p) => p.thresholds(),
+            PolicySpec::Margin(p) => p.thresholds(),
+        }
+    }
+
+    /// Serialize to the plan-JSON policy object.
+    pub fn to_json(&self) -> Json {
+        let thresholds = Json::arr(self.thresholds().iter().map(|&h| Json::num(h)).collect());
+        match self {
+            PolicySpec::Threshold(_) => Json::obj(vec![
+                ("kind", Json::str("threshold")),
+                ("thresholds", thresholds),
+            ]),
+            PolicySpec::Length(p) => Json::obj(vec![
+                ("kind", Json::str("length")),
+                ("thresholds", thresholds),
+                ("length_cutoff", Json::num(p.length_cutoff())),
+                ("entry_tier", Json::num(p.target_tier() as f64)),
+            ]),
+            PolicySpec::Margin(p) => Json::obj(vec![
+                ("kind", Json::str("margin")),
+                ("thresholds", thresholds),
+                ("margin", Json::num(p.margin())),
+            ]),
+        }
+    }
+
+    /// Parse the plan-JSON policy object back.
+    pub fn from_json(j: &Json) -> Result<PolicySpec> {
+        let kind = PolicyKind::parse(j.req("kind")?.as_str()?)?;
+        let thresholds: Vec<f64> = j
+            .req("thresholds")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Result<_>>()
+            .context("policy thresholds")?;
+        match kind {
+            PolicyKind::Threshold => PolicySpec::threshold(thresholds),
+            PolicyKind::Length => PolicySpec::length(
+                thresholds,
+                j.req("length_cutoff")?.as_f64()?,
+                j.req("entry_tier")?.as_usize()?,
+            ),
+            PolicyKind::Margin => PolicySpec::margin(thresholds, j.req("margin")?.as_f64()?),
+        }
+    }
+}
+
+impl RoutingPolicy for PolicySpec {
+    fn entry_tier(&self, features: &RequestFeatures, n_tiers: usize) -> usize {
+        match self {
+            PolicySpec::Threshold(p) => p.entry_tier(features, n_tiers),
+            PolicySpec::Length(p) => p.entry_tier(features, n_tiers),
+            PolicySpec::Margin(p) => p.entry_tier(features, n_tiers),
+        }
+    }
+
+    fn decide(&self, tier: usize, score: f64, features: &RequestFeatures, n_tiers: usize)
+        -> Decision {
+        match self {
+            PolicySpec::Threshold(p) => p.decide(tier, score, features, n_tiers),
+            PolicySpec::Length(p) => p.decide(tier, score, features, n_tiers),
+            PolicySpec::Margin(p) => p.decide(tier, score, features, n_tiers),
+        }
+    }
+
+    fn validate(&self, n_tiers: usize) -> Result<()> {
+        match self {
+            PolicySpec::Threshold(p) => p.validate(n_tiers),
+            PolicySpec::Length(p) => p.validate(n_tiers),
+            PolicySpec::Margin(p) => p.validate(n_tiers),
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            PolicySpec::Threshold(p) => p.label(),
+            PolicySpec::Length(p) => p.label(),
+            PolicySpec::Margin(p) => p.label(),
+        }
+    }
+}
+
+/// All monotone non-increasing chains of length `len` over `grid` —
+/// the shared parameter enumeration of every threshold-bearing family
+/// (escalating to a bigger model with a *stricter* bar than the
+/// previous tier wastes evaluations; the paper's Table 1 thresholds
+/// are all monotone).
+pub fn monotone_chains(grid: &[f64], len: usize) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let mut stack: Vec<Vec<f64>> = vec![vec![]];
+    while let Some(prefix) = stack.pop() {
+        if prefix.len() == len {
+            out.push(prefix);
+            continue;
+        }
+        let cap = prefix.last().copied().unwrap_or(f64::INFINITY);
+        for &h in grid.iter().filter(|&&h| h <= cap) {
+            let mut next = prefix.clone();
+            next.push(h);
+            stack.push(next);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(input: u32) -> RequestFeatures {
+        RequestFeatures { input_tokens: input, output_tokens: 0, complexity: f64::NAN }
+    }
+
+    #[test]
+    fn threshold_policy_matches_legacy_rule() {
+        let p = ThresholdPolicy::new(vec![70.0, 50.0]).unwrap();
+        p.validate(3).unwrap();
+        assert_eq!(p.decide(0, 70.0, &f(10), 3), Decision::Accept);
+        assert_eq!(p.decide(0, 69.9, &f(10), 3), Decision::Escalate);
+        assert_eq!(p.decide(1, 49.0, &f(10), 3), Decision::Escalate);
+        // Last tier always accepts.
+        assert_eq!(p.decide(2, 0.0, &f(10), 3), Decision::Accept);
+        assert_eq!(p.entry_tier(&f(10_000), 3), 0);
+    }
+
+    #[test]
+    fn construction_rejects_bad_parameters() {
+        assert!(ThresholdPolicy::new(vec![f64::NAN]).is_err());
+        assert!(ThresholdPolicy::new(vec![-1.0]).is_err());
+        assert!(ThresholdPolicy::new(vec![102.0]).is_err());
+        assert!(ThresholdPolicy::new(vec![101.0]).is_ok()); // sentinel allowed
+        assert!(LengthPolicy::new(vec![80.0], 0.0, 1).is_err());
+        assert!(LengthPolicy::new(vec![80.0], f64::INFINITY, 1).is_err());
+        assert!(LengthPolicy::new(vec![80.0], 900.0, 0).is_err());
+        assert!(MarginPolicy::new(vec![80.0], -5.0).is_err());
+        assert!(MarginPolicy::new(vec![80.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn arity_validated_against_cascade() {
+        let p = ThresholdPolicy::new(vec![70.0]).unwrap();
+        assert!(p.validate(2).is_ok());
+        let err = p.validate(3).unwrap_err().to_string();
+        assert!(err.contains("thresholds"), "{err}");
+        let l = LengthPolicy::new(vec![70.0, 50.0], 900.0, 5).unwrap();
+        assert!(l.validate(3).is_err()); // entry tier out of range
+    }
+
+    #[test]
+    fn length_policy_bypasses_small_tier_for_long_prompts() {
+        let p = LengthPolicy::new(vec![80.0, 80.0], 900.0, 1).unwrap();
+        assert_eq!(p.entry_tier(&f(100), 3), 0);
+        assert_eq!(p.entry_tier(&f(900), 3), 1);
+        assert_eq!(p.entry_tier(&f(4000), 3), 1);
+        // Entry tier is clamped to the cascade.
+        let top = LengthPolicy::new(vec![80.0], 900.0, 9).unwrap();
+        assert_eq!(top.entry_tier(&f(4000), 2), 1);
+    }
+
+    #[test]
+    fn margin_policy_escalates_near_misses_and_skips_deep_failures() {
+        let p = MarginPolicy::new(vec![80.0, 60.0], 15.0).unwrap();
+        assert_eq!(p.decide(0, 85.0, &f(10), 3), Decision::Accept);
+        assert_eq!(p.decide(0, 70.0, &f(10), 3), Decision::Escalate); // near miss
+        assert_eq!(p.decide(0, 30.0, &f(10), 3), Decision::SkipTo(2)); // deep failure
+        // From the second-to-last tier a skip targets the same place
+        // escalation would.
+        assert_eq!(p.decide(1, 10.0, &f(10), 3), Decision::SkipTo(2));
+    }
+
+    #[test]
+    fn spec_json_roundtrip_all_kinds() {
+        let specs = [
+            PolicySpec::threshold(vec![70.0, 50.0]).unwrap(),
+            PolicySpec::length(vec![80.0, 60.0], 900.0, 1).unwrap(),
+            PolicySpec::margin(vec![80.0, 60.0], 15.0).unwrap(),
+        ];
+        for spec in specs {
+            let text = spec.to_json().to_string();
+            let back = PolicySpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec, "{text}");
+            assert_eq!(back.kind(), spec.kind());
+        }
+    }
+
+    #[test]
+    fn spec_json_rejects_garbage() {
+        let j = Json::parse(r#"{"kind": "alchemy", "thresholds": [50]}"#).unwrap();
+        assert!(PolicySpec::from_json(&j).is_err());
+        let j = Json::parse(r#"{"kind": "length", "thresholds": [50]}"#).unwrap();
+        assert!(PolicySpec::from_json(&j).is_err()); // missing cutoff/entry
+        let j = Json::parse(r#"{"kind": "threshold", "thresholds": [500]}"#).unwrap();
+        assert!(PolicySpec::from_json(&j).is_err()); // out of range
+    }
+
+    #[test]
+    fn monotone_chain_enumeration() {
+        let chains = monotone_chains(&[0.0, 50.0, 100.0], 2);
+        // 3 + 2 + 1 monotone pairs.
+        assert_eq!(chains.len(), 6);
+        for c in &chains {
+            assert!(c[0] >= c[1], "{c:?}");
+        }
+        assert_eq!(monotone_chains(&[0.0, 50.0], 1).len(), 2);
+        assert_eq!(monotone_chains(&[0.0], 0), vec![Vec::<f64>::new()]);
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert_eq!(PolicySpec::threshold(vec![70.0, 50.0]).unwrap().label(), "H=(70,50)");
+        let l = PolicySpec::length(vec![70.0], 900.0, 1).unwrap().label();
+        assert!(l.contains("len>=900") && l.contains("T2"), "{l}");
+        let m = PolicySpec::margin(vec![70.0], 15.0).unwrap().label();
+        assert!(m.contains("margin=15"), "{m}");
+    }
+}

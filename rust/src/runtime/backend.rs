@@ -7,30 +7,33 @@
 //! CPU execution, with generation quality actually judged from the
 //! model's own output tokens.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use super::engine::TierRuntime;
-use super::manifest::{Manifest, TaskSpec};
+use super::manifest::TaskSpec;
 use crate::coordinator::server::{ResponseJudger, TierBackend};
 
 /// Greedy-decoding backend over one tier's compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct PjrtTierBackend {
     rt: TierRuntime,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtTierBackend {
     pub fn new(rt: TierRuntime) -> PjrtTierBackend {
         PjrtTierBackend { rt }
     }
 
     /// Load tier `tier_idx` (cascade order) from an artifacts dir.
-    pub fn load(dir: &Path, tier_idx: usize) -> Result<PjrtTierBackend> {
-        let manifest = Manifest::load(dir)?;
+    pub fn load(dir: &std::path::Path, tier_idx: usize) -> Result<PjrtTierBackend> {
+        let manifest = super::manifest::Manifest::load(dir)?;
         let order = manifest.cascade_order();
         let Some(tier) = order.get(tier_idx) else {
-            bail!("tier index {tier_idx} out of range ({} tiers)", order.len());
+            anyhow::bail!("tier index {tier_idx} out of range ({} tiers)", order.len());
         };
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
@@ -39,6 +42,7 @@ impl PjrtTierBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl TierBackend for PjrtTierBackend {
     fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
         let cfg = self.rt.manifest.config.clone();
@@ -71,6 +75,7 @@ impl TierBackend for PjrtTierBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, x) in xs.iter().enumerate() {
@@ -84,12 +89,30 @@ fn argmax(xs: &[f32]) -> usize {
 /// Build a backend factory closure for [`crate::coordinator::server`]:
 /// each worker thread constructs its own PJRT client + executables
 /// (PJRT handles are not `Send`).
+#[cfg(feature = "pjrt")]
 pub fn pjrt_factory(
     dir: PathBuf,
 ) -> impl Fn(usize) -> Result<Box<dyn TierBackend>> + Send + Sync {
     move |tier_idx| {
         let b = PjrtTierBackend::load(&dir, tier_idx)?;
         Ok(Box::new(b) as Box<dyn TierBackend>)
+    }
+}
+
+/// Feature-off stub: keeps every caller compiling on builds without
+/// the vendored xla toolchain; backend construction fails with a clear
+/// message instead.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_factory(
+    dir: PathBuf,
+) -> impl Fn(usize) -> Result<Box<dyn TierBackend>> + Send + Sync {
+    move |_tier_idx| {
+        anyhow::bail!(
+            "cascadia was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the vendored xla crate) to serve \
+             artifacts from {}",
+            dir.display()
+        )
     }
 }
 

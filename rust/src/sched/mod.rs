@@ -5,17 +5,20 @@
 //!   the GPU allocation and parallelism strategy per tier minimizing
 //!   the maximum per-tier p95 latency, via MILP over precomputed
 //!   `l_i(f)` tables (with an exact DP cross-check).
-//! * [`outer`] — weighted Tchebycheff sweep over routing thresholds:
-//!   evaluate candidate thresholds, call the inner level for each,
+//! * [`outer`] — weighted Tchebycheff sweep over a routing policy's
+//!   parameter space ([`crate::router::RoutingPolicy`] families):
+//!   enumerate candidate policies, call the inner level for each,
 //!   scalarize (latency, quality) against the utopia point, and emit
 //!   the Pareto front; [`outer::select_plan`] then picks the plan for a
 //!   quality requirement.
-//! * [`plan`] — the `CascadePlan` artifact handed to the coordinator.
+//! * [`plan`] — the `CascadePlan` artifact handed to the coordinator;
+//!   it carries the chosen policy and round-trips through JSON so
+//!   `cascadia schedule` output feeds `cascadia serve` directly.
 
 pub mod inner;
 pub mod outer;
 pub mod plan;
 
 pub use inner::{solve_inner, InnerOptions, InnerSolution};
-pub use outer::{optimize, select_plan, OuterOptions, ParetoPoint};
+pub use outer::{optimize, policy_candidates, select_plan, OuterOptions, ParetoPoint, SweepResult};
 pub use plan::{CascadePlan, TierPlan};

@@ -1,21 +1,29 @@
-//! Outer optimization (§3.3): weighted Tchebycheff sweep over routing
-//! thresholds.
+//! Outer optimization (§3.3): weighted Tchebycheff sweep over a
+//! routing policy's parameter space.
 //!
-//! For each candidate threshold vector H the trace is routed
-//! ([`crate::router`]), the inner MILP produces the deployment plan and
-//! its latency L(θ), and the judger supplies Q(θ). The utopia point is
-//! z1* = L(all requests at the smallest tier) and z2* = Q(all requests
-//! at the largest tier); sweeping (λ1, λ2) over a log scale and
-//! minimizing T(θ) = max{λ1(L−z1*), λ2(z2*−Q)} yields a well-spread
-//! set of Pareto-optimal cascade plans, from which [`select_plan`]
-//! picks the cheapest plan meeting a quality requirement.
+//! For each candidate policy θ the trace is routed
+//! ([`crate::router::route_with`]), the inner MILP produces the
+//! deployment plan and its latency L(θ), and the judger supplies Q(θ).
+//! The utopia point is z1* = L(all requests at the smallest tier) and
+//! z2* = Q(all requests at the largest tier); sweeping (λ1, λ2) over a
+//! log scale and minimizing T(θ) = max{λ1(L−z1*), λ2(z2*−Q)} yields a
+//! well-spread set of Pareto-optimal cascade plans, from which
+//! [`select_plan`] picks the cheapest plan meeting a quality
+//! requirement.
+//!
+//! The sweep is generic over the policy family: [`OuterOptions`] names
+//! a [`PolicyKind`] and the grids for each of its parameters
+//! (thresholds for every family, plus length cutoffs / entry tiers for
+//! the length-predictive policy and margins for the margin policy), so
+//! new routing strategies are searchable without touching this module's
+//! callers.
 
 use anyhow::{bail, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::judge::Judger;
 use crate::models::ModelSpec;
-use crate::router::{route, Thresholds};
+use crate::router::{monotone_chains, route_with, PolicyKind, PolicySpec};
 use crate::sched::inner::{InnerOptions, InnerSolver};
 use crate::sched::plan::{CascadePlan, TierPlan};
 use crate::workload::Request;
@@ -25,6 +33,14 @@ use crate::workload::Request;
 pub struct OuterOptions {
     /// Candidate threshold values per judger-score axis.
     pub threshold_grid: Vec<f64>,
+    /// Which routing-policy family to sweep.
+    pub policy_kind: PolicyKind,
+    /// Prompt-length cutoffs tried by [`PolicyKind::Length`].
+    pub length_cutoffs: Vec<f64>,
+    /// Entry tiers tried by [`PolicyKind::Length`] for long requests.
+    pub entry_tiers: Vec<usize>,
+    /// Margins tried by [`PolicyKind::Margin`].
+    pub margins: Vec<f64>,
     /// (λ1, λ2) weight pairs; default is a log sweep of λ1/λ2 from 0.1
     /// to 10 (§3.3).
     pub lambda_pairs: Vec<(f64, f64)>,
@@ -42,7 +58,15 @@ impl Default for OuterOptions {
                 (r / (1.0 + r), 1.0 / (1.0 + r))
             })
             .collect();
-        OuterOptions { threshold_grid, lambda_pairs, inner: InnerOptions::default() }
+        OuterOptions {
+            threshold_grid,
+            policy_kind: PolicyKind::Threshold,
+            length_cutoffs: vec![600.0, 1200.0],
+            entry_tiers: vec![1],
+            margins: vec![10.0, 25.0],
+            lambda_pairs,
+            inner: InnerOptions::default(),
+        }
     }
 }
 
@@ -65,16 +89,53 @@ pub struct SweepResult {
     pub utopia: (f64, f64),
 }
 
+/// Enumerate the candidate policies of the configured family over its
+/// parameter grids.
+pub fn policy_candidates(opts: &OuterOptions, n_tiers: usize) -> Result<Vec<PolicySpec>> {
+    let chains = monotone_chains(&opts.threshold_grid, n_tiers.saturating_sub(1));
+    let mut out = Vec::new();
+    match opts.policy_kind {
+        PolicyKind::Threshold => {
+            for h in chains {
+                out.push(PolicySpec::threshold(h)?);
+            }
+        }
+        PolicyKind::Length => {
+            for h in &chains {
+                for &cutoff in &opts.length_cutoffs {
+                    for &entry in opts.entry_tiers.iter().filter(|&&e| e > 0 && e < n_tiers) {
+                        out.push(PolicySpec::length(h.clone(), cutoff, entry)?);
+                    }
+                }
+            }
+        }
+        PolicyKind::Margin => {
+            for h in &chains {
+                for &margin in &opts.margins {
+                    out.push(PolicySpec::margin(h.clone(), margin)?);
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        bail!(
+            "no candidate policies for kind {:?} (check threshold_grid / family grids)",
+            opts.policy_kind
+        );
+    }
+    Ok(out)
+}
+
 fn evaluate_candidate(
     cascade: &[ModelSpec],
     solver: &InnerSolver,
     judger: &Judger,
     requests: &[Request],
-    thresholds: &Thresholds,
+    policy: &PolicySpec,
     n_gpus: usize,
     span: f64,
 ) -> Option<ParetoPoint> {
-    let routing = route(cascade, judger, requests, thresholds, span);
+    let routing = route_with(cascade, judger, requests, policy, span).ok()?;
     let sol = solver.solve(&routing.tier_workloads, n_gpus).ok()?;
     let tiers: Vec<TierPlan> = (0..cascade.len())
         .map(|i| TierPlan {
@@ -87,7 +148,7 @@ fn evaluate_candidate(
         })
         .collect();
     let plan = CascadePlan {
-        thresholds: thresholds.clone(),
+        policy: policy.clone(),
         tiers,
         predicted_latency: sol.max_latency,
         predicted_quality: routing.quality,
@@ -115,8 +176,9 @@ pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
     front
 }
 
-/// Run the full outer sweep: evaluate the threshold grid, compute the
-/// utopia point, and return explored points + Pareto front.
+/// Run the full outer sweep: evaluate the policy family's parameter
+/// grid, compute the utopia point, and return explored points + Pareto
+/// front.
 pub fn optimize(
     cascade: &[ModelSpec],
     cluster: &ClusterSpec,
@@ -134,22 +196,19 @@ pub fn optimize(
     let solver = InnerSolver::new(cascade.to_vec(), cluster.clone(), opts.inner.clone());
 
     // Utopia point: z1* from the all-to-smallest routing, z2* from
-    // all-to-largest.
+    // all-to-largest — threshold extremes regardless of the swept
+    // family, so every sweep shares the same anchors.
     let all_small = evaluate_candidate(
         cascade, &solver, judger, requests,
-        &Thresholds::uniform(c - 1, 0.0), n_gpus, span,
+        &PolicySpec::uniform_threshold(c - 1, 0.0)?, n_gpus, span,
     );
     let all_large = evaluate_candidate(
         cascade, &solver, judger, requests,
-        &Thresholds::uniform(c - 1, 101.0), n_gpus, span,
+        &PolicySpec::uniform_threshold(c - 1, 101.0)?, n_gpus, span,
     );
     let z1 = all_small.as_ref().map(|p| p.latency).unwrap_or(0.0);
     let z2 = all_large.as_ref().map(|p| p.quality).unwrap_or(100.0);
 
-    // Grid sweep over thresholds (monotone chains only: h1 >= h2 >= ...
-    // — escalating to a bigger model with a *stricter* bar than the
-    // previous tier wastes evaluations; the paper's Table 1 thresholds
-    // are all monotone).
     let mut explored = Vec::new();
     if let Some(p) = all_small {
         explored.push(p);
@@ -157,23 +216,11 @@ pub fn optimize(
     if let Some(p) = all_large {
         explored.push(p);
     }
-    let grid = &opts.threshold_grid;
-    let mut stack: Vec<Vec<f64>> = vec![vec![]];
-    while let Some(prefix) = stack.pop() {
-        if prefix.len() == c - 1 {
-            let th = Thresholds(prefix.clone());
-            if let Some(p) = evaluate_candidate(
-                cascade, &solver, judger, requests, &th, n_gpus, span,
-            ) {
-                explored.push(p);
-            }
-            continue;
-        }
-        let cap = prefix.last().copied().unwrap_or(f64::INFINITY);
-        for &h in grid.iter().filter(|&&h| h <= cap) {
-            let mut next = prefix.clone();
-            next.push(h);
-            stack.push(next);
+    for policy in policy_candidates(opts, c)? {
+        if let Some(p) = evaluate_candidate(
+            cascade, &solver, judger, requests, &policy, n_gpus, span,
+        ) {
+            explored.push(p);
         }
     }
 
@@ -226,7 +273,7 @@ mod tests {
     use crate::models::deepseek_cascade;
     use crate::workload::{generate, paper_trace};
 
-    fn sweep(rate: f64, n: usize) -> (SweepResult, OuterOptions) {
+    fn sweep_with(kind: PolicyKind, rate: f64, n: usize) -> (SweepResult, OuterOptions) {
         let cascade = deepseek_cascade();
         let cluster = ClusterSpec::paper_testbed();
         let judger = Judger::new(1);
@@ -234,10 +281,15 @@ mod tests {
         // Small grid for test speed.
         let opts = OuterOptions {
             threshold_grid: vec![0.0, 30.0, 60.0, 90.0],
+            policy_kind: kind,
             ..Default::default()
         };
         let s = optimize(&cascade, &cluster, &judger, &reqs, 32, &opts).unwrap();
         (s, opts)
+    }
+
+    fn sweep(rate: f64, n: usize) -> (SweepResult, OuterOptions) {
+        sweep_with(PolicyKind::Threshold, rate, n)
     }
 
     #[test]
@@ -317,6 +369,40 @@ mod tests {
     fn impossible_quality_returns_none() {
         let (s, _) = sweep(4.0, 400);
         assert!(select_plan(&s, 100.1).is_none());
+    }
+
+    #[test]
+    fn candidate_enumeration_covers_all_families() {
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 50.0, 100.0],
+            ..Default::default()
+        };
+        let th = policy_candidates(&opts, 3).unwrap();
+        assert_eq!(th.len(), 6); // monotone pairs over a 3-value grid
+        let len_opts = OuterOptions { policy_kind: PolicyKind::Length, ..opts.clone() };
+        let le = policy_candidates(&len_opts, 3).unwrap();
+        // chains x cutoffs x entry tiers
+        assert_eq!(le.len(), 6 * len_opts.length_cutoffs.len() * len_opts.entry_tiers.len());
+        let mar_opts = OuterOptions { policy_kind: PolicyKind::Margin, ..opts.clone() };
+        let ma = policy_candidates(&mar_opts, 3).unwrap();
+        assert_eq!(ma.len(), 6 * mar_opts.margins.len());
+        assert!(th.iter().all(|p| p.kind() == PolicyKind::Threshold));
+        assert!(le.iter().all(|p| p.kind() == PolicyKind::Length));
+        assert!(ma.iter().all(|p| p.kind() == PolicyKind::Margin));
+    }
+
+    #[test]
+    fn alternate_families_sweep_end_to_end() {
+        for kind in [PolicyKind::Length, PolicyKind::Margin] {
+            let (s, _) = sweep_with(kind, 4.0, 300);
+            assert!(!s.pareto.is_empty(), "{kind:?} produced an empty front");
+            // Swept candidates carry the requested family (the two
+            // threshold utopia anchors are also in `explored`).
+            assert!(
+                s.explored.iter().any(|p| p.plan.policy.kind() == kind),
+                "{kind:?} sweep explored no {kind:?} policies"
+            );
+        }
     }
 
     #[test]

@@ -1,10 +1,21 @@
 //! The cascade plan: the scheduler's output artifact, consumed by the
 //! serving coordinator and printed by the case-study benches
 //! (Tables 1-2).
+//!
+//! A plan is the *single* deployment artifact of the system: it carries
+//! the routing policy ([`crate::router::PolicySpec`]) alongside the
+//! per-tier GPU allocation, parallelism strategy and workload, and it
+//! round-trips through JSON so `cascadia schedule` output can be fed
+//! directly to `cascadia serve` (see `ServerConfig::from_plan` /
+//! `TcpFrontend::from_plan`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
 
 use crate::parallel::Strategy;
 use crate::perf::Workload;
-use crate::router::Thresholds;
+use crate::router::{PolicySpec, RoutingPolicy};
 use crate::util::json::Json;
 
 /// Deployment decision for one model tier.
@@ -26,7 +37,8 @@ pub struct TierPlan {
 /// The full cascade plan (§3.1's "cascade plan").
 #[derive(Debug, Clone)]
 pub struct CascadePlan {
-    pub thresholds: Thresholds,
+    /// The routing strategy this deployment was co-optimized with.
+    pub policy: PolicySpec,
     pub tiers: Vec<TierPlan>,
     /// max_i predicted p95 — the inner objective L(θ).
     pub predicted_latency: f64,
@@ -45,13 +57,11 @@ impl CascadePlan {
         self.tiers.iter().filter(|t| t.gpus > 0)
     }
 
-    /// Render as JSON for configs/results.
+    /// Render as JSON for configs/results; parse back with
+    /// [`CascadePlan::from_json`].
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            (
-                "thresholds",
-                Json::arr(self.thresholds.0.iter().map(|&h| Json::num(h)).collect()),
-            ),
+            ("policy", self.policy.to_json()),
             ("predicted_latency", Json::num(self.predicted_latency)),
             ("predicted_quality", Json::num(self.predicted_quality)),
             (
@@ -67,7 +77,7 @@ impl CascadePlan {
                                     "strategy",
                                     t.strategy
                                         .as_ref()
-                                        .map(|s| Json::str(s.label()))
+                                        .map(|s| s.to_json())
                                         .unwrap_or(Json::Null),
                                 ),
                                 ("processing_ratio", Json::num(t.processing_ratio)),
@@ -83,15 +93,63 @@ impl CascadePlan {
         ])
     }
 
+    /// Parse a plan back from its [`CascadePlan::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<CascadePlan> {
+        let policy = PolicySpec::from_json(j.req("policy")?).context("plan policy")?;
+        let tiers = j
+            .req("tiers")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let strategy = match t.req("strategy")? {
+                    Json::Null => None,
+                    s => Some(Strategy::from_json(s)?),
+                };
+                let gpus = t.req("gpus")?.as_usize()?;
+                if (gpus == 0 && strategy.is_some()) || (gpus > 0 && strategy.is_none()) {
+                    anyhow::bail!("tier {i}: gpus={gpus} inconsistent with strategy presence");
+                }
+                Ok(TierPlan {
+                    model_name: t.req("model")?.as_str()?.to_string(),
+                    gpus,
+                    strategy,
+                    workload: Workload {
+                        rate: t.req("rate")?.as_f64()?,
+                        avg_input: t.req("avg_input")?.as_f64()?,
+                        avg_output: t.req("avg_output")?.as_f64()?,
+                    },
+                    processing_ratio: t.req("processing_ratio")?.as_f64()?,
+                    predicted_p95: t.req("predicted_p95")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if tiers.is_empty() {
+            anyhow::bail!("plan has no tiers");
+        }
+        policy.validate(tiers.len())?;
+        Ok(CascadePlan {
+            policy,
+            tiers,
+            predicted_latency: j.req("predicted_latency")?.as_f64()?,
+            predicted_quality: j.req("predicted_quality")?.as_f64()?,
+        })
+    }
+
+    /// Parse from JSON text (e.g. a `cascadia schedule` capture).
+    pub fn from_json_text(text: &str) -> Result<CascadePlan> {
+        CascadePlan::from_json(&Json::parse(text).context("parsing plan JSON")?)
+    }
+
+    /// Load from a plan file written by `cascadia schedule`.
+    pub fn load(path: impl AsRef<Path>) -> Result<CascadePlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading plan {}", path.as_ref().display()))?;
+        CascadePlan::from_json_text(&text)
+    }
+
     /// One-line summary for logs, in the paper's notation.
     pub fn summary(&self) -> String {
-        let h = self
-            .thresholds
-            .0
-            .iter()
-            .map(|h| format!("{h:.0}"))
-            .collect::<Vec<_>>()
-            .join(",");
         let tiers = self
             .tiers
             .iter()
@@ -106,8 +164,10 @@ impl CascadePlan {
             .collect::<Vec<_>>()
             .join(" | ");
         format!(
-            "H=({h}) L={:.2}s Q={:.1} :: {tiers}",
-            self.predicted_latency, self.predicted_quality
+            "{} L={:.2}s Q={:.1} :: {tiers}",
+            self.policy.label(),
+            self.predicted_latency,
+            self.predicted_quality
         )
     }
 }
@@ -119,7 +179,7 @@ mod tests {
 
     fn sample() -> CascadePlan {
         CascadePlan {
-            thresholds: Thresholds(vec![70.0, 50.0]),
+            policy: PolicySpec::threshold(vec![70.0, 50.0]).unwrap(),
             tiers: vec![
                 TierPlan {
                     model_name: "small".into(),
@@ -130,15 +190,23 @@ mod tests {
                     predicted_p95: 2.0,
                 },
                 TierPlan {
-                    model_name: "large".into(),
+                    model_name: "mid".into(),
                     gpus: 0,
                     strategy: None,
                     workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
                 },
+                TierPlan {
+                    model_name: "large".into(),
+                    gpus: 8,
+                    strategy: Some(Strategy::uniform(4, 2, 1)),
+                    workload: Workload { rate: 1.0, avg_input: 700.0, avg_output: 300.0 },
+                    processing_ratio: 0.2,
+                    predicted_p95: 3.0,
+                },
             ],
-            predicted_latency: 2.0,
+            predicted_latency: 3.0,
             predicted_quality: 75.0,
         }
     }
@@ -146,8 +214,8 @@ mod tests {
     #[test]
     fn totals_and_deployed() {
         let p = sample();
-        assert_eq!(p.total_gpus(), 4);
-        assert_eq!(p.deployed().count(), 1);
+        assert_eq!(p.total_gpus(), 12);
+        assert_eq!(p.deployed().count(), 2);
     }
 
     #[test]
@@ -157,9 +225,41 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.req("predicted_quality").unwrap().as_f64().unwrap(), 75.0);
         let tiers = parsed.req("tiers").unwrap().as_arr().unwrap();
-        assert_eq!(tiers.len(), 2);
-        assert_eq!(tiers[0].req("strategy").unwrap().as_str().unwrap(), "(DP=4)");
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(
+            tiers[0].req("strategy").unwrap().req("label").unwrap().as_str().unwrap(),
+            "(DP=4)"
+        );
         assert_eq!(tiers[1].req("strategy").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn full_plan_roundtrip() {
+        let p = sample();
+        let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(back.policy, p.policy);
+        assert_eq!(back.total_gpus(), p.total_gpus());
+        assert_eq!(back.tiers.len(), p.tiers.len());
+        for (a, b) in back.tiers.iter().zip(&p.tiers) {
+            assert_eq!(a.model_name, b.model_name);
+            assert_eq!(a.gpus, b.gpus);
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.workload.rate, b.workload.rate);
+            assert_eq!(a.processing_ratio, b.processing_ratio);
+            assert_eq!(a.predicted_p95, b.predicted_p95);
+        }
+        assert_eq!(back.predicted_latency, p.predicted_latency);
+        assert_eq!(back.predicted_quality, p.predicted_quality);
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_plans() {
+        // Policy arity must match the tier count.
+        let mut p = sample();
+        p.policy = PolicySpec::threshold(vec![70.0]).unwrap();
+        assert!(CascadePlan::from_json_text(&p.to_json().to_string()).is_err());
+        assert!(CascadePlan::from_json_text("{}").is_err());
+        assert!(CascadePlan::from_json_text("not json").is_err());
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! -> continuous batcher -> compiled JAX+Pallas HLO on PJRT CPU -> real
 //! task-rule judger -> escalation.
 
+#![cfg(feature = "pjrt")]
+
 use std::path::PathBuf;
 
 use cascadia::coordinator::server::{CascadeServer, ServerConfig};
@@ -46,12 +48,11 @@ fn live_cascade_routes_by_real_difficulty() {
     let manifest = Manifest::load(&dir).unwrap();
     let task = manifest.task.clone();
 
-    let server = CascadeServer::new(ServerConfig {
-        replicas: vec![1, 1, 1],
-        max_batch: vec![4, 4, 4],
-        thresholds: vec![80.0, 80.0],
-        max_new_tokens: 6,
-    });
+    let server = CascadeServer::new(
+        ServerConfig::with_thresholds(vec![1, 1, 1], vec![4, 4, 4], vec![80.0, 80.0], 6)
+            .unwrap(),
+    )
+    .unwrap();
     let judger = TaskJudger::new(task.clone(), 6);
     let factory = pjrt_factory(dir);
 
@@ -114,12 +115,11 @@ fn live_standalone_small_tier_quality_gap() {
     let factory = pjrt_factory(dir);
 
     // All traffic pinned to tier 0 (thresholds 0 accept everything).
-    let server = CascadeServer::new(ServerConfig {
-        replicas: vec![1, 1, 1],
-        max_batch: vec![4, 1, 1],
-        thresholds: vec![0.0, 0.0],
-        max_new_tokens: 6,
-    });
+    let server = CascadeServer::new(
+        ServerConfig::with_thresholds(vec![1, 1, 1], vec![4, 1, 1], vec![0.0, 0.0], 6)
+            .unwrap(),
+    )
+    .unwrap();
     let mut rng = Rng::new(13);
     let trace: Vec<(f64, Vec<i32>)> = (0..8)
         .map(|i| {

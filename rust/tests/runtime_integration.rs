@@ -5,6 +5,8 @@
 //! the repo root) and skip silently when it is absent, so plain
 //! `cargo test` works before the Python step.
 
+#![cfg(feature = "pjrt")]
+
 use std::path::PathBuf;
 
 use cascadia::runtime::{Manifest, TierRuntime};
