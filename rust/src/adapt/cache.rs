@@ -1,0 +1,199 @@
+//! CascadeServe-style precomputed-plan cache ("gears"): cascade plans
+//! keyed by quantized workload-regime buckets, so a regime the system
+//! has served before swaps back in O(1) with no scheduler run.
+//!
+//! The key quantizes [`TraceStats`] — log-scale buckets for the
+//! arrival rate (regimes are ratio-, not difference-shaped) and linear
+//! buckets for the length and complexity means. Capacity is bounded
+//! with FIFO eviction: under regime churn old gears age out.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::sched::plan::CascadePlan;
+use crate::workload::TraceStats;
+
+/// Bucketing resolution and capacity of the plan cache.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Rate buckets are log-scale: one bucket spans a factor of
+    /// `rate_factor` in requests/s.
+    pub rate_factor: f64,
+    /// Linear bucket width for the mean input/output lengths (tokens).
+    pub len_bucket: f64,
+    /// Linear bucket width for the mean complexity (in [0, 1]).
+    pub complexity_bucket: f64,
+    /// Max cached plans (FIFO eviction).
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            rate_factor: 1.5,
+            len_bucket: 200.0,
+            complexity_bucket: 0.1,
+            capacity: 32,
+        }
+    }
+}
+
+/// A quantized workload regime — the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegimeKey {
+    rate: i32,
+    input: i32,
+    output: i32,
+    complexity: i32,
+}
+
+impl RegimeKey {
+    pub fn of(stats: &TraceStats, cfg: &CacheConfig) -> RegimeKey {
+        let log_bucket = |x: f64, factor: f64| {
+            if x <= 0.0 {
+                -1000
+            } else {
+                (x.ln() / factor.ln()).floor() as i32
+            }
+        };
+        let lin_bucket = |x: f64, width: f64| (x.max(0.0) / width.max(1e-9)).floor() as i32;
+        RegimeKey {
+            rate: log_bucket(stats.rate, cfg.rate_factor),
+            input: lin_bucket(stats.avg_input, cfg.len_bucket),
+            output: lin_bucket(stats.avg_output, cfg.len_bucket),
+            complexity: lin_bucket(stats.complexity_mean, cfg.complexity_bucket),
+        }
+    }
+}
+
+/// The bounded regime→plan cache. (Hit accounting lives in the
+/// controller's `AdaptCounters::plan_cache_hits` — a hit only counts
+/// once the cached plan is actually applied.)
+#[derive(Debug)]
+pub struct PlanCache {
+    config: CacheConfig,
+    entries: HashMap<RegimeKey, CascadePlan>,
+    order: VecDeque<RegimeKey>,
+}
+
+impl PlanCache {
+    pub fn new(config: CacheConfig) -> PlanCache {
+        PlanCache { config, entries: HashMap::new(), order: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The plan previously scheduled for this stats regime, if any.
+    pub fn get(&self, stats: &TraceStats) -> Option<&CascadePlan> {
+        self.entries.get(&RegimeKey::of(stats, &self.config))
+    }
+
+    /// Remember the plan scheduled for this regime (replaces any plan
+    /// already cached for the same bucket; evicts FIFO at capacity).
+    pub fn insert(&mut self, stats: &TraceStats, plan: CascadePlan) {
+        let key = RegimeKey::of(stats, &self.config);
+        if self.entries.insert(key, plan).is_none() {
+            self.order.push_back(key);
+            while self.entries.len() > self.config.capacity.max(1) {
+                if let Some(old) = self.order.pop_front() {
+                    self.entries.remove(&old);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::Strategy;
+    use crate::perf::Workload;
+    use crate::router::PolicySpec;
+    use crate::sched::plan::TierPlan;
+
+    fn plan(q: f64) -> CascadePlan {
+        CascadePlan {
+            policy: PolicySpec::threshold(vec![50.0]).unwrap(),
+            tiers: vec![
+                TierPlan {
+                    model_name: "small".into(),
+                    gpus: 4,
+                    strategy: Some(Strategy::uniform(1, 1, 4)),
+                    workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
+                    processing_ratio: 1.0,
+                    predicted_p95: 1.0,
+                },
+                TierPlan {
+                    model_name: "large".into(),
+                    gpus: 8,
+                    strategy: Some(Strategy::uniform(4, 1, 2)),
+                    workload: Workload { rate: 1.0, avg_input: 300.0, avg_output: 100.0 },
+                    processing_ratio: 0.25,
+                    predicted_p95: 2.0,
+                },
+            ],
+            predicted_latency: 2.0,
+            predicted_quality: q,
+        }
+    }
+
+    fn stats(rate: f64, input: f64, complexity: f64) -> TraceStats {
+        TraceStats { rate, avg_input: input, avg_output: 200.0, complexity_mean: complexity }
+    }
+
+    #[test]
+    fn nearby_stats_share_a_bucket_and_hit() {
+        let mut c = PlanCache::new(CacheConfig::default());
+        let s = stats(4.0, 300.0, 0.42);
+        assert!(c.get(&s).is_none());
+        c.insert(&s, plan(80.0));
+        // Small jitter (same bucket) hits; a regime change misses.
+        let jitter = stats(4.2, 310.0, 0.44);
+        assert!(c.get(&jitter).is_some(), "same regime must hit");
+        let surge = stats(12.0, 300.0, 0.42);
+        assert!(c.get(&surge).is_none(), "3x rate is a different regime");
+        let harder = stats(4.0, 300.0, 0.72);
+        assert!(c.get(&harder).is_none(), "complexity shift is a different regime");
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let cfg = CacheConfig { capacity: 2, ..Default::default() };
+        let mut c = PlanCache::new(cfg);
+        let s1 = stats(1.0, 100.0, 0.1);
+        let s2 = stats(10.0, 500.0, 0.5);
+        let s3 = stats(40.0, 1500.0, 0.9);
+        c.insert(&s1, plan(70.0));
+        c.insert(&s2, plan(80.0));
+        c.insert(&s3, plan(90.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&s1).is_none(), "oldest entry must be evicted");
+        assert!(c.get(&s2).is_some());
+        assert!(c.get(&s3).is_some());
+    }
+
+    #[test]
+    fn reinsert_same_bucket_replaces_without_growth() {
+        let mut c = PlanCache::new(CacheConfig::default());
+        let s = stats(4.0, 300.0, 0.4);
+        c.insert(&s, plan(70.0));
+        c.insert(&s, plan(90.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&s).unwrap().predicted_quality, 90.0);
+    }
+
+    #[test]
+    fn zero_rate_is_a_valid_bucket() {
+        let cfg = CacheConfig::default();
+        let k = RegimeKey::of(&stats(0.0, 0.0, 0.0), &cfg);
+        let k2 = RegimeKey::of(&stats(0.0, 0.0, 0.0), &cfg);
+        assert_eq!(k, k2);
+    }
+}

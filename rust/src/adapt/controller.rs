@@ -1,0 +1,412 @@
+//! The adaptation controller: owns the monitor → re-schedule →
+//! hot-swap loop for one running server.
+//!
+//! The controller is fed from the server's admission tap
+//! ([`AdmissionObserver`]); every observed request goes into the
+//! sliding-window [`Monitor`]. When the monitor flags a workload
+//! shift, the controller resolves it:
+//!
+//! * **cache hit** — a plan was already scheduled for this quantized
+//!   regime ([`PlanCache`]): hot-swap it immediately, O(1);
+//! * **cache miss** — run the full bi-level scheduler
+//!   ([`crate::sched::outer::reschedule`]) on the monitor's recent
+//!   window, by default in a detached background thread so the serve
+//!   path never blocks on a MILP solve, then cache + hot-swap the
+//!   result.
+//!
+//! Either way the swap goes through [`ServeControl::apply_plan`] and
+//! the monitor is rebased onto the new regime. A failed re-schedule
+//! (e.g. the quality bar is unreachable on the new mix) aborts the
+//! trigger: the current plan keeps serving and detection re-arms on
+//! fresh samples.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::monitor::{Monitor, MonitorConfig};
+use crate::coordinator::server::{AdmissionObserver, ServeControl};
+use crate::judge::Judger;
+use crate::metrics::AdaptCounters;
+use crate::models::ModelSpec;
+use crate::sched::outer::{self, OuterOptions};
+use crate::sched::plan::CascadePlan;
+use crate::workload::{Request, TraceStats};
+
+use super::cache::{CacheConfig, PlanCache, RegimeKey};
+
+/// Everything a background re-schedule needs to re-run the bi-level
+/// scheduler: the scenario inputs of `sched::outer::optimize` plus the
+/// quality requirement plans must keep meeting.
+#[derive(Debug, Clone)]
+pub struct Rescheduler {
+    pub cascade: Vec<ModelSpec>,
+    pub cluster: ClusterSpec,
+    pub judger: Judger,
+    pub opts: OuterOptions,
+    pub n_gpus: usize,
+    pub quality_requirement: f64,
+}
+
+impl Rescheduler {
+    /// Run the §4.4 re-scheduling path on a monitor window.
+    pub fn plan_for(&self, window: &[Request]) -> Result<CascadePlan> {
+        outer::reschedule(
+            &self.cascade,
+            &self.cluster,
+            &self.judger,
+            window,
+            self.n_gpus,
+            &self.opts,
+            self.quality_requirement,
+        )
+    }
+}
+
+/// Controller knobs.
+#[derive(Debug, Clone)]
+pub struct AdaptConfig {
+    pub monitor: MonitorConfig,
+    pub cache: CacheConfig,
+    /// `max_new_tokens` for configurations derived from swapped plans.
+    pub max_new_tokens: usize,
+    /// Run re-schedules synchronously on the observing thread instead
+    /// of a background thread — deterministic, for tests.
+    pub synchronous: bool,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            monitor: MonitorConfig::default(),
+            cache: CacheConfig::default(),
+            max_new_tokens: 8,
+            synchronous: false,
+        }
+    }
+}
+
+/// The monitor → re-schedule → hot-swap controller. Shared as an
+/// `Arc` between the admission tap and its background re-schedule
+/// threads.
+pub struct AdaptController {
+    config: AdaptConfig,
+    rescheduler: Rescheduler,
+    control: Arc<ServeControl>,
+    monitor: Mutex<Monitor>,
+    cache: Mutex<PlanCache>,
+    counters: Mutex<AdaptCounters>,
+    last_plan: Mutex<Option<CascadePlan>>,
+    /// Cooldowns for regimes whose re-schedule failed (e.g. the
+    /// quality bar is unreachable on that mix): the next few triggers
+    /// in the same bucket are skipped before retrying. Without this,
+    /// a persistent shift re-runs the full bi-level sweep every
+    /// `min_samples` requests — one guaranteed-to-fail MILP sweep per
+    /// second at moderate rates; with a permanent blacklist, a bucket
+    /// that first failed on a mixed phase-boundary window could never
+    /// schedule again even once the regime settles.
+    failed_regimes: Mutex<std::collections::HashMap<RegimeKey, u32>>,
+    /// Background re-schedules currently running.
+    in_flight: AtomicUsize,
+    /// Hook run after every successful swap (e.g. the replay harness
+    /// retunes its simulated backends to the new parallelism).
+    on_swap: Option<Box<dyn Fn(&CascadePlan) + Send + Sync>>,
+}
+
+impl AdaptController {
+    /// `baseline` is the stats the initially-served plan was scheduled
+    /// for; `control` must belong to the server this controller adapts.
+    pub fn new(
+        config: AdaptConfig,
+        rescheduler: Rescheduler,
+        baseline: TraceStats,
+        control: Arc<ServeControl>,
+    ) -> AdaptController {
+        let monitor = Monitor::new(config.monitor.clone(), baseline);
+        let cache = PlanCache::new(config.cache.clone());
+        AdaptController {
+            config,
+            rescheduler,
+            control,
+            monitor: Mutex::new(monitor),
+            cache: Mutex::new(cache),
+            counters: Mutex::new(AdaptCounters::default()),
+            last_plan: Mutex::new(None),
+            failed_regimes: Mutex::new(std::collections::HashMap::new()),
+            in_flight: AtomicUsize::new(0),
+            on_swap: None,
+        }
+    }
+
+    /// Install a post-swap hook (builder-style, before `Arc`-wrapping).
+    pub fn with_on_swap(
+        mut self,
+        hook: impl Fn(&CascadePlan) + Send + Sync + 'static,
+    ) -> AdaptController {
+        self.on_swap = Some(Box::new(hook));
+        self
+    }
+
+    /// Feed one admitted request into the monitor; kicks off the
+    /// re-schedule pipeline when a shift is detected.
+    pub fn observe(self: &Arc<Self>, req: Request) {
+        let drift = self.monitor.lock().unwrap().observe(req);
+        let Some(stats) = drift else { return };
+        self.counters.lock().unwrap().drifts_detected += 1;
+
+        // Gear cache first: a known regime swaps in without touching
+        // the scheduler.
+        let cached = self.cache.lock().unwrap().get(&stats).cloned();
+        if let Some(plan) = cached {
+            self.apply(stats, plan, true);
+            return;
+        }
+
+        // A regime that just failed to re-schedule will fail again —
+        // skip its cooldown's worth of triggers (the current plan keeps
+        // serving) before retrying with a fresh window.
+        let key = RegimeKey::of(&stats, &self.config.cache);
+        {
+            let mut failed = self.failed_regimes.lock().unwrap();
+            if let Some(remaining) = failed.get_mut(&key) {
+                *remaining -= 1;
+                if *remaining == 0 {
+                    failed.remove(&key);
+                }
+                drop(failed);
+                self.monitor.lock().unwrap().abort_reschedule();
+                return;
+            }
+        }
+
+        let window: Vec<Request> = self.monitor.lock().unwrap().window_requests().to_vec();
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if self.config.synchronous {
+            self.run_reschedule(stats, window);
+        } else {
+            let me = Arc::clone(self);
+            std::thread::spawn(move || me.run_reschedule(stats, window));
+        }
+    }
+
+    fn run_reschedule(&self, stats: TraceStats, window: Vec<Request>) {
+        match self.rescheduler.plan_for(&window) {
+            Ok(plan) => {
+                self.cache.lock().unwrap().insert(&stats, plan.clone());
+                self.apply(stats, plan, false);
+            }
+            Err(_) => {
+                // Keep serving the current plan; put the regime on a
+                // cooldown (skip the next few triggers in this bucket)
+                // so the same unschedulable mix doesn't re-run the
+                // sweep every min_samples requests.
+                let mut failed = self.failed_regimes.lock().unwrap();
+                if failed.len() >= 64 {
+                    failed.clear();
+                }
+                failed.insert(RegimeKey::of(&stats, &self.config.cache), 3);
+                drop(failed);
+                self.monitor.lock().unwrap().abort_reschedule();
+            }
+        }
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn apply(&self, stats: TraceStats, plan: CascadePlan, from_cache: bool) {
+        match self.control.apply_plan(&plan, self.config.max_new_tokens) {
+            Ok(()) => {
+                let reschedules = {
+                    let mut m = self.monitor.lock().unwrap();
+                    m.rebased(stats);
+                    m.reschedules
+                };
+                {
+                    let mut c = self.counters.lock().unwrap();
+                    c.reschedules = reschedules;
+                    c.hot_swaps += 1;
+                    if from_cache {
+                        c.plan_cache_hits += 1;
+                    }
+                }
+                *self.last_plan.lock().unwrap() = Some(plan.clone());
+                if let Some(hook) = &self.on_swap {
+                    hook(&plan);
+                }
+            }
+            Err(_) => self.monitor.lock().unwrap().abort_reschedule(),
+        }
+    }
+
+    /// Loop counters so far. `hot_swaps` counts plans the controller
+    /// queued; the server-side count of swaps actually applied is
+    /// `ServeControl::hot_swaps`.
+    pub fn counters(&self) -> AdaptCounters {
+        *self.counters.lock().unwrap()
+    }
+
+    /// The most recently swapped-in plan, if any.
+    pub fn last_plan(&self) -> Option<CascadePlan> {
+        self.last_plan.lock().unwrap().clone()
+    }
+
+    /// Block until no background re-schedule is running (or `timeout`
+    /// elapses). Returns true when idle.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.in_flight.load(Ordering::SeqCst) > 0 {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+}
+
+/// Bridges the server's index-based admission tap to the controller
+/// using the trace's request metadata: the live path only knows the
+/// trace index, the monitor wants the `workload::Request`.
+pub struct TraceObserver {
+    controller: Arc<AdaptController>,
+    requests: Vec<Request>,
+}
+
+impl TraceObserver {
+    pub fn new(controller: Arc<AdaptController>, requests: Vec<Request>) -> TraceObserver {
+        TraceObserver { controller, requests }
+    }
+}
+
+impl AdmissionObserver for TraceObserver {
+    fn on_admit(&self, req_index: usize) {
+        if let Some(r) = self.requests.get(req_index) {
+            self.controller.observe(*r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::deepseek_cascade;
+    use crate::workload::{estimate_stats, generate, paper_trace};
+
+    fn rescheduler() -> Rescheduler {
+        Rescheduler {
+            cascade: deepseek_cascade(),
+            cluster: ClusterSpec::paper_testbed(),
+            judger: Judger::new(5),
+            opts: OuterOptions {
+                threshold_grid: vec![0.0, 50.0, 90.0],
+                ..Default::default()
+            },
+            n_gpus: 32,
+            quality_requirement: 75.0,
+        }
+    }
+
+    fn controller(quality: f64) -> (Arc<AdaptController>, Arc<ServeControl>) {
+        let control = ServeControl::new(3);
+        let baseline = estimate_stats(&generate(&paper_trace(3, 10.0), 400, 1));
+        let mut r = rescheduler();
+        r.quality_requirement = quality;
+        let cfg = AdaptConfig { synchronous: true, ..Default::default() };
+        let c = Arc::new(AdaptController::new(cfg, r, baseline, Arc::clone(&control)));
+        (c, control)
+    }
+
+    #[test]
+    fn drift_triggers_reschedule_and_swap() {
+        let (c, control) = controller(75.0);
+        // Shifted workload: hard trace at a different rate.
+        for req in generate(&paper_trace(1, 7.0), 300, 2) {
+            c.observe(req);
+            if c.counters().reschedules > 0 {
+                break;
+            }
+        }
+        let counters = c.counters();
+        assert!(counters.drifts_detected >= 1, "{counters}");
+        assert_eq!(counters.reschedules, 1, "{counters}");
+        assert_eq!(counters.plan_cache_hits, 0, "first regime visit cannot hit");
+        assert!(c.last_plan().is_some());
+        // The plan sits in the server's swap mailbox (the serve loop
+        // would consume it); the control saw no applied swap yet.
+        assert_eq!(control.hot_swaps(), 0);
+    }
+
+    #[test]
+    fn repeat_regime_hits_the_cache() {
+        let (c, _control) = controller(75.0);
+        let hard = || generate(&paper_trace(1, 7.0), 400, 3);
+        let easy = || generate(&paper_trace(3, 10.0), 400, 4);
+        for req in hard() {
+            c.observe(req);
+            if c.counters().reschedules >= 1 {
+                break;
+            }
+        }
+        assert_eq!(c.counters().reschedules, 1);
+        // Back to the baseline-like regime...
+        for req in easy() {
+            c.observe(req);
+            if c.counters().reschedules >= 2 {
+                break;
+            }
+        }
+        assert_eq!(c.counters().reschedules, 2);
+        // ...and back to the hard regime: this one is cached.
+        for req in hard() {
+            c.observe(req);
+            if c.counters().reschedules >= 3 {
+                break;
+            }
+        }
+        let counters = c.counters();
+        assert_eq!(counters.reschedules, 3, "{counters}");
+        assert!(counters.plan_cache_hits >= 1, "repeat regime must hit the cache: {counters}");
+    }
+
+    #[test]
+    fn unreachable_quality_aborts_and_keeps_serving() {
+        // A quality bar no plan can meet: the re-schedule fails, the
+        // trigger aborts, and the controller never swaps.
+        let (c, control) = controller(100.1);
+        for req in generate(&paper_trace(1, 7.0), 400, 5) {
+            c.observe(req);
+        }
+        let counters = c.counters();
+        assert!(counters.drifts_detected >= 1);
+        assert_eq!(counters.reschedules, 0, "{counters}");
+        assert_eq!(counters.hot_swaps, 0);
+        assert!(c.last_plan().is_none());
+        assert_eq!(control.hot_swaps(), 0);
+    }
+
+    #[test]
+    fn on_swap_hook_sees_the_new_plan() {
+        let control = ServeControl::new(3);
+        let baseline = estimate_stats(&generate(&paper_trace(3, 10.0), 400, 1));
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = Arc::clone(&seen);
+        let cfg = AdaptConfig { synchronous: true, ..Default::default() };
+        let c = Arc::new(
+            AdaptController::new(cfg, rescheduler(), baseline, control).with_on_swap(
+                move |plan| {
+                    assert_eq!(plan.tiers.len(), 3);
+                    seen2.fetch_add(1, Ordering::SeqCst);
+                },
+            ),
+        );
+        for req in generate(&paper_trace(1, 7.0), 300, 6) {
+            c.observe(req);
+            if seen.load(Ordering::SeqCst) > 0 {
+                break;
+            }
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Online adaptation (§4.4): the closed schedule→serve loop at runtime.
+//!
+//! The static pipeline froze the served
+//! [`crate::sched::plan::CascadePlan`] at startup; this subsystem owns
+//! what happens *after* startup:
+//!
+//! 1. every admitted request is fed into the coordinator's workload
+//!    [`crate::coordinator::Monitor`] (through the server's
+//!    [`crate::coordinator::server::AdmissionObserver`] tap);
+//! 2. on a detected shift the [`controller::AdaptController`] first
+//!    consults a CascadeServe-style precomputed-plan cache
+//!    ([`cache::PlanCache`], keyed by quantized workload-stats
+//!    buckets) so a regime seen before swaps in O(1); on a miss it
+//!    re-runs the full bi-level scheduler
+//!    ([`crate::sched::outer::reschedule`]) on the monitor's recent
+//!    window in a background thread;
+//! 3. the resulting plan is hot-swapped into the running
+//!    [`crate::coordinator::CascadeServer`] via
+//!    [`crate::coordinator::server::ServeControl`] — routing policy,
+//!    admission bounds and worker pools change without dropping
+//!    in-flight requests.
+//!
+//! [`replay`] is the measurement harness: it drives a drifting
+//! ([`crate::workload::PhasedTrace`]) trace through the full
+//! monitor→re-schedule→hot-swap loop and reports per-phase SLO
+//! attainment/quality for the adaptive run against a frozen-plan run
+//! (`cascadia replay --config examples/configs/drift_replay.json`).
+
+pub mod cache;
+pub mod controller;
+pub mod replay;
+
+pub use cache::{CacheConfig, PlanCache, RegimeKey};
+pub use controller::{AdaptConfig, AdaptController, Rescheduler, TraceObserver};
+pub use replay::{run_replay, PhaseConfig, ReplayConfig, ReplayReport, RunReport};

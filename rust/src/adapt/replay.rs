@@ -1,0 +1,522 @@
+//! Trace replay: measure the adaptation win.
+//!
+//! [`run_replay`] drives one drifting ([`PhasedTrace`]) trace through
+//! the live serving engine twice — once with the plan **frozen** at
+//! its startup schedule, once **adaptive** with the full monitor →
+//! re-schedule → hot-swap loop — and reports per-phase SLO attainment
+//! and judged quality for both, plus the adaptation counters. The
+//! trace is replayed time-compressed (`time_scale`), with simulated
+//! tier backends whose per-request service time is derived from the
+//! same [`crate::perf::ReplicaModel`] cost model the scheduler
+//! optimizes against, so a plan's provisioning means the same thing to
+//! the scheduler and to the replayed server. Judging reuses the
+//! offline [`Judger`] on the original request metadata, so routing
+//! decisions match what the plan was optimized for.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::monitor::MonitorConfig;
+use crate::coordinator::server::{
+    CascadeServer, ResponseJudger, ServeControl, ServerStats, TierBackend,
+};
+use crate::judge::Judger;
+use crate::metrics::{AdaptCounters, LatencySummary};
+use crate::models::{cascade_by_name, ModelSpec};
+use crate::perf::ReplicaModel;
+use crate::sched::outer::{optimize, select_plan, OuterOptions};
+use crate::sched::plan::CascadePlan;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::workload::{
+    estimate_stats, generate, generate_phased, paper_trace, PhasedTrace, PhasedTraceSpec,
+};
+
+use super::controller::{AdaptConfig, AdaptController, Rescheduler, TraceObserver};
+
+/// One workload phase of a replay (a regime of the drifting trace).
+#[derive(Debug, Clone)]
+pub struct PhaseConfig {
+    /// Paper trace index 1..=3.
+    pub trace_index: usize,
+    /// Mean arrival rate, requests/s (uncompressed).
+    pub rate: f64,
+    pub n_requests: usize,
+}
+
+/// Full replay configuration (`examples/configs/drift_replay.json`).
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub cascade_name: String,
+    pub n_gpus: usize,
+    pub seed: u64,
+    pub quality_requirement: f64,
+    /// Threshold grid step for the (re-)scheduler sweep.
+    pub threshold_step: f64,
+    /// Wall-clock compression: arrivals and service times are divided
+    /// by this factor, latencies multiplied back for reporting.
+    pub time_scale: f64,
+    /// SLO bound on uncompressed end-to-end latency, seconds.
+    pub slo_seconds: f64,
+    pub max_new_tokens: usize,
+    pub monitor: MonitorConfig,
+    pub phases: Vec<PhaseConfig>,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            cascade_name: "deepseek".into(),
+            n_gpus: 32,
+            seed: 7,
+            quality_requirement: 80.0,
+            threshold_step: 25.0,
+            time_scale: 20.0,
+            slo_seconds: 20.0,
+            max_new_tokens: 8,
+            monitor: MonitorConfig::default(),
+            phases: vec![
+                PhaseConfig { trace_index: 3, rate: 60.0, n_requests: 500 },
+                PhaseConfig { trace_index: 1, rate: 10.0, n_requests: 600 },
+            ],
+        }
+    }
+}
+
+impl ReplayConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<ReplayConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading replay config {}", path.as_ref().display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ReplayConfig> {
+        let j = Json::parse(text).context("parsing replay config JSON")?;
+        let mut c = ReplayConfig::default();
+        if let Some(v) = j.get("cascade") {
+            c.cascade_name = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("n_gpus") {
+            c.n_gpus = v.as_usize()?;
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = j.get("quality_requirement") {
+            c.quality_requirement = v.as_f64()?;
+        }
+        if let Some(v) = j.get("threshold_step") {
+            c.threshold_step = v.as_f64()?;
+        }
+        if let Some(v) = j.get("time_scale") {
+            c.time_scale = v.as_f64()?;
+        }
+        if let Some(v) = j.get("slo_seconds") {
+            c.slo_seconds = v.as_f64()?;
+        }
+        if let Some(v) = j.get("max_new_tokens") {
+            c.max_new_tokens = v.as_usize()?;
+        }
+        if let Some(m) = j.get("monitor") {
+            if let Some(v) = m.get("window") {
+                c.monitor.window = v.as_usize()?;
+            }
+            if let Some(v) = m.get("min_samples") {
+                c.monitor.min_samples = v.as_usize()?;
+            }
+            if let Some(v) = m.get("shift_threshold") {
+                c.monitor.shift_threshold = v.as_f64()?;
+            }
+        }
+        if let Some(v) = j.get("phases") {
+            c.phases = v
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(PhaseConfig {
+                        trace_index: p.req("trace")?.as_usize()?,
+                        rate: p.req("rate")?.as_f64()?,
+                        n_requests: p.req("n_requests")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if cascade_by_name(&self.cascade_name).is_none() {
+            bail!("unknown cascade '{}' (expected deepseek|llama)", self.cascade_name);
+        }
+        if self.phases.len() < 2 {
+            bail!("a drift replay needs at least 2 phases, got {}", self.phases.len());
+        }
+        for (i, p) in self.phases.iter().enumerate() {
+            if !(1..=3).contains(&p.trace_index) {
+                bail!("phase {i}: trace index {} out of range 1..=3", p.trace_index);
+            }
+            if p.rate <= 0.0 || p.n_requests == 0 {
+                bail!("phase {i}: rate and n_requests must be positive");
+            }
+        }
+        if self.n_gpus == 0 || self.max_new_tokens == 0 {
+            bail!("n_gpus and max_new_tokens must be positive");
+        }
+        if !(0.0..=100.0).contains(&self.quality_requirement) {
+            bail!("quality requirement must be in 0..=100");
+        }
+        if self.threshold_step <= 0.0 || self.threshold_step > 50.0 {
+            bail!("threshold_step must be in (0, 50]");
+        }
+        if self.time_scale < 1.0 {
+            bail!("time_scale must be >= 1");
+        }
+        if self.slo_seconds <= 0.0 {
+            bail!("slo_seconds must be positive");
+        }
+        if self.monitor.window == 0 || self.monitor.min_samples == 0 {
+            bail!("monitor window/min_samples must be positive");
+        }
+        Ok(())
+    }
+
+    fn outer_options(&self) -> OuterOptions {
+        let mut grid = Vec::new();
+        let mut h = 0.0;
+        while h <= 100.0 {
+            grid.push(h);
+            h += self.threshold_step;
+        }
+        OuterOptions { threshold_grid: grid, ..Default::default() }
+    }
+
+    fn phased_spec(&self) -> PhasedTraceSpec {
+        PhasedTraceSpec {
+            phases: self
+                .phases
+                .iter()
+                .map(|p| (paper_trace(p.trace_index, p.rate), p.n_requests))
+                .collect(),
+        }
+    }
+}
+
+/// Per-phase outcome of one replay run.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub label: String,
+    pub requests: usize,
+    /// Fraction of the phase's requests within `slo_seconds`
+    /// (uncompressed end-to-end latency).
+    pub slo_attainment: f64,
+    pub mean_quality: f64,
+    /// Uncompressed latency summary.
+    pub latency: LatencySummary,
+}
+
+/// Outcome of one full replay run (frozen or adaptive).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub phases: Vec<PhaseReport>,
+    pub overall_attainment: f64,
+    pub mean_quality: f64,
+    pub served: usize,
+    /// Requests submitted but never completed. Always 0 when the run
+    /// returned `Ok` — the server errors out rather than dropping — so
+    /// this is the report's explicit statement of the zero-drop
+    /// hot-swap contract, not a counter that can silently go nonzero.
+    pub dropped: usize,
+    pub counters: AdaptCounters,
+}
+
+/// The frozen-vs-adaptive comparison.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub initial_plan: String,
+    /// Summary of the last plan the controller swapped in (None if no
+    /// re-schedule fired).
+    pub final_plan: Option<String>,
+    pub slo_seconds: f64,
+    pub frozen: RunReport,
+    pub adaptive: RunReport,
+}
+
+impl ReplayReport {
+    /// Did adapting beat serving the startup plan unchanged?
+    pub fn adaptation_win(&self) -> bool {
+        self.adaptive.overall_attainment > self.frozen.overall_attainment
+    }
+}
+
+/// Simulated tier backend: per-request service time from the shared
+/// speed table (seconds per request under the *current* plan's
+/// parallelism, compressed by `time_scale`). Output encodes the
+/// serving tier so the replay judger can score against the right
+/// model.
+struct SimBackend {
+    tier: usize,
+    speeds: Arc<Mutex<Vec<f64>>>,
+    time_scale: f64,
+}
+
+impl TierBackend for SimBackend {
+    fn generate(&mut self, _prompt: &[i32], _max_new: usize) -> Result<Vec<i32>> {
+        let secs = self.speeds.lock().unwrap()[self.tier] / self.time_scale;
+        std::thread::sleep(Duration::from_secs_f64(secs.clamp(1e-5, 5.0)));
+        Ok(vec![self.tier as i32])
+    }
+}
+
+/// Scores a replayed response with the offline judger: the prompt's
+/// first token carries the trace index of the original request, the
+/// output's first token the serving tier.
+struct ReplayJudger {
+    requests: Vec<crate::workload::Request>,
+    models: Vec<ModelSpec>,
+    judger: Judger,
+}
+
+impl ResponseJudger for ReplayJudger {
+    fn score(&self, prompt: &[i32], output: &[i32]) -> f64 {
+        let id = prompt.first().copied().unwrap_or(0).max(0) as usize;
+        let tier =
+            (output.first().copied().unwrap_or(0).max(0) as usize).min(self.models.len() - 1);
+        match self.requests.get(id) {
+            Some(req) => self.judger.score(&self.models[tier], req, tier),
+            None => 0.0,
+        }
+    }
+}
+
+/// Per-tier mean service seconds (uncompressed) implied by a plan's
+/// parallelism under the scheduler's own cost model: one worker thread
+/// stands for one replica running at its continuous-batching capacity.
+/// Undeployed tiers keep a slow nominal backend (the plan routes no
+/// steady-state traffic there).
+fn tier_speeds(plan: &CascadePlan, cascade: &[ModelSpec], cluster: &ClusterSpec) -> Vec<f64> {
+    plan.tiers
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let Some(strategy) = &t.strategy else {
+                return 5.0;
+            };
+            let Some(group) = strategy.groups.first() else {
+                return 5.0;
+            };
+            let avg_ctx = (t.workload.avg_input + t.workload.avg_output).max(64.0);
+            let rm = ReplicaModel::from_group(&cascade[i], cluster, group, avg_ctx);
+            let capacity = rm.capacity(&t.workload).max(1e-3);
+            (1.0 / capacity).clamp(1e-4, 30.0)
+        })
+        .collect()
+}
+
+/// Aggregate one run's server stats into the per-phase report.
+fn score_run(
+    stats: &ServerStats,
+    phased: &PhasedTrace,
+    cfg: &ReplayConfig,
+    counters: AdaptCounters,
+) -> RunReport {
+    let n_phases = phased.n_phases();
+    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); n_phases];
+    let mut quality: Vec<Vec<f64>> = vec![Vec::new(); n_phases];
+    for c in &stats.completions {
+        let p = phased.phase_of(c.id);
+        lat[p].push(c.e2e_latency.as_secs_f64() * cfg.time_scale);
+        quality[p].push(c.score);
+    }
+    let phases: Vec<PhaseReport> = (0..n_phases)
+        .map(|p| {
+            let pc = &cfg.phases[p];
+            PhaseReport {
+                label: format!("phase{} (trace{}@{:.0}rps)", p + 1, pc.trace_index, pc.rate),
+                requests: phased.phase_range(p).len(),
+                slo_attainment: stats::fraction_within(&lat[p], cfg.slo_seconds),
+                mean_quality: stats::mean(&quality[p]),
+                latency: LatencySummary::of(&lat[p]),
+            }
+        })
+        .collect();
+    let all_lat: Vec<f64> = lat.iter().flatten().copied().collect();
+    let all_q: Vec<f64> = quality.iter().flatten().copied().collect();
+    RunReport {
+        phases,
+        overall_attainment: stats::fraction_within(&all_lat, cfg.slo_seconds),
+        mean_quality: stats::mean(&all_q),
+        served: stats.completions.len(),
+        dropped: phased.requests.len() - stats.completions.len(),
+        counters,
+    }
+}
+
+/// Run the frozen-vs-adaptive drift replay. See the module docs.
+pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
+    cfg.validate()?;
+    let cascade = cascade_by_name(&cfg.cascade_name).expect("validated");
+    let cluster = ClusterSpec::with_gpus(cfg.n_gpus);
+    let judger = Judger::new(cfg.seed);
+    let opts = cfg.outer_options();
+
+    // The drifting trace and the phase-1 planning sample.
+    let phased = generate_phased(&cfg.phased_spec(), cfg.seed.wrapping_add(1));
+    let p1 = &cfg.phases[0];
+    let plan_reqs = generate(
+        &paper_trace(p1.trace_index, p1.rate),
+        p1.n_requests.max(200),
+        cfg.seed.wrapping_add(2),
+    );
+    let sweep = optimize(&cascade, &cluster, &judger, &plan_reqs, cfg.n_gpus, &opts)
+        .context("scheduling the initial (phase-1) plan")?;
+    let plan = select_plan(&sweep, cfg.quality_requirement).with_context(|| {
+        format!("no initial plan meets quality {}", cfg.quality_requirement)
+    })?;
+    let baseline = estimate_stats(&plan_reqs);
+
+    // Live trace: compressed arrivals; the prompt's first token tags
+    // the original request, its length carries the prompt length (so
+    // length-predictive policies behave).
+    let trace: Vec<(f64, Vec<i32>)> = phased
+        .requests
+        .iter()
+        .map(|r| {
+            let len = (r.input_tokens as usize).clamp(2, 4096);
+            let mut prompt = vec![0i32; len];
+            prompt[0] = r.id as i32;
+            (r.arrival / cfg.time_scale, prompt)
+        })
+        .collect();
+
+    let speeds = Arc::new(Mutex::new(tier_speeds(&plan, &cascade, &cluster)));
+    let speeds_f = Arc::clone(&speeds);
+    let time_scale = cfg.time_scale;
+    let factory = move |tier: usize| -> Result<Box<dyn TierBackend>> {
+        Ok(Box::new(SimBackend { tier, speeds: Arc::clone(&speeds_f), time_scale }))
+    };
+    let live_judger = ReplayJudger {
+        requests: phased.requests.clone(),
+        models: cascade.clone(),
+        judger: judger.clone(),
+    };
+    let server = CascadeServer::from_plan(&plan, cfg.max_new_tokens)?;
+
+    // --- Frozen run: the startup plan serves the whole drift. ---
+    let stats_frozen = server
+        .serve(&trace, &factory, &live_judger)
+        .context("frozen replay run")?;
+    let frozen = score_run(&stats_frozen, &phased, cfg, AdaptCounters::default());
+
+    // --- Adaptive run: monitor → re-schedule → hot-swap live. (The
+    // frozen run cannot have touched `speeds` — it has no controller
+    // and therefore no on_swap hook.) ---
+    let control = ServeControl::for_plan(&plan);
+    let rescheduler = Rescheduler {
+        cascade: cascade.clone(),
+        cluster: cluster.clone(),
+        judger: judger.clone(),
+        opts: opts.clone(),
+        n_gpus: cfg.n_gpus,
+        quality_requirement: cfg.quality_requirement,
+    };
+    let adapt_cfg = AdaptConfig {
+        monitor: cfg.monitor.clone(),
+        max_new_tokens: cfg.max_new_tokens,
+        ..Default::default()
+    };
+    let speeds_swap = Arc::clone(&speeds);
+    let cascade_swap = cascade.clone();
+    let cluster_swap = cluster.clone();
+    let controller = Arc::new(
+        AdaptController::new(adapt_cfg, rescheduler, baseline, Arc::clone(&control))
+            .with_on_swap(move |new_plan| {
+                *speeds_swap.lock().unwrap() =
+                    tier_speeds(new_plan, &cascade_swap, &cluster_swap);
+            }),
+    );
+    let observer = TraceObserver::new(Arc::clone(&controller), phased.requests.clone());
+    let stats_adaptive = server
+        .serve_adaptive(&trace, &factory, &live_judger, &control, Some(&observer))
+        .context("adaptive replay run")?;
+    // Let any still-running background re-schedule settle so counters
+    // and the final-plan summary are complete.
+    controller.wait_idle(Duration::from_secs(60));
+    let mut counters = controller.counters();
+    counters.hot_swaps = control.hot_swaps();
+    let adaptive = score_run(&stats_adaptive, &phased, cfg, counters);
+
+    Ok(ReplayReport {
+        initial_plan: plan.summary(),
+        final_plan: controller.last_plan().map(|p| p.summary()),
+        slo_seconds: cfg.slo_seconds,
+        frozen,
+        adaptive,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_validate_and_parse() {
+        ReplayConfig::default().validate().unwrap();
+        let c = ReplayConfig::from_json_text(
+            r#"{
+                "cascade": "deepseek",
+                "time_scale": 40,
+                "monitor": {"window": 80, "min_samples": 50, "shift_threshold": 0.25},
+                "phases": [
+                    {"trace": 3, "rate": 30, "n_requests": 200},
+                    {"trace": 1, "rate": 6, "n_requests": 200}
+                ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.phases.len(), 2);
+        assert_eq!(c.monitor.window, 80);
+        assert_eq!(c.time_scale, 40.0);
+        assert_eq!(c.phases[1].trace_index, 1);
+    }
+
+    #[test]
+    fn config_rejects_bad_values() {
+        assert!(ReplayConfig::from_json_text(r#"{"cascade": "gpt"}"#).is_err());
+        assert!(ReplayConfig::from_json_text(r#"{"time_scale": 0.5}"#).is_err());
+        assert!(ReplayConfig::from_json_text(
+            r#"{"phases": [{"trace": 1, "rate": 4, "n_requests": 100}]}"#
+        )
+        .is_err());
+        assert!(ReplayConfig::from_json_text(
+            r#"{"phases": [
+                {"trace": 9, "rate": 4, "n_requests": 100},
+                {"trace": 1, "rate": 4, "n_requests": 100}
+            ]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tier_speeds_are_positive_and_finite() {
+        let cascade = crate::models::deepseek_cascade();
+        let cluster = ClusterSpec::with_gpus(32);
+        let judger = Judger::new(1);
+        let reqs = generate(&paper_trace(2, 8.0), 300, 2);
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 50.0, 90.0],
+            ..Default::default()
+        };
+        let sweep = optimize(&cascade, &cluster, &judger, &reqs, 32, &opts).unwrap();
+        let plan = select_plan(&sweep, 75.0).unwrap();
+        let speeds = tier_speeds(&plan, &cascade, &cluster);
+        assert_eq!(speeds.len(), cascade.len());
+        for s in &speeds {
+            assert!(*s > 0.0 && s.is_finite());
+        }
+    }
+}

@@ -43,8 +43,17 @@ impl<T> Batcher<T> {
     /// Admit as many items as capacity allows; returns them in FIFO
     /// order and marks them in-flight.
     pub fn admit(&mut self) -> Vec<Pending<T>> {
+        self.admit_up_to(usize::MAX)
+    }
+
+    /// Admit at most `cap` items (never beyond the KV-capacity bound).
+    /// The serving engine uses this to spread admission across a
+    /// tier's replicas — one replica must not drain the whole queue
+    /// into a serial batch while its siblings idle, or the pool size
+    /// (the hot-swap capacity lever) stops mattering.
+    pub fn admit_up_to(&mut self, cap: usize) -> Vec<Pending<T>> {
         let mut out = Vec::new();
-        while self.in_flight < self.max_batch {
+        while self.in_flight < self.max_batch && out.len() < cap {
             let Some(p) = self.queue.pop_front() else { break };
             self.in_flight += 1;
             out.push(p);
@@ -101,6 +110,24 @@ mod tests {
         assert_eq!(b.in_flight(), 3);
         b.complete(3);
         assert_eq!(b.admit().len(), 3);
+    }
+
+    #[test]
+    fn admit_up_to_caps_per_call_but_not_capacity() {
+        let mut b = Batcher::new(4);
+        for i in 0..6 {
+            b.push(i, 0.0);
+        }
+        // Two callers splitting a 4-slot tier: each gets its share.
+        let a = b.admit_up_to(2);
+        assert_eq!(a.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1]);
+        let c = b.admit_up_to(2);
+        assert_eq!(c.iter().map(|p| p.item).collect::<Vec<_>>(), vec![2, 3]);
+        // Capacity bound still holds.
+        assert!(b.admit_up_to(2).is_empty());
+        assert_eq!(b.in_flight(), 4);
+        b.complete(4);
+        assert_eq!(b.admit_up_to(10).len(), 2);
     }
 
     #[test]

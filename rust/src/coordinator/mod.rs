@@ -15,7 +15,10 @@
 //!   (`ServerConfig::from_plan` / `TcpFrontend::from_plan`).
 //! * [`monitor`] — the re-scheduling mechanism (§4.4): subsample
 //!   incoming workload statistics, detect shifts, trigger a new
-//!   bi-level schedule.
+//!   bi-level schedule. The [`crate::adapt`] subsystem wires it into a
+//!   running server: its controller feeds the monitor from the
+//!   server's admission tap and hot-swaps re-scheduled plans through
+//!   [`server::ServeControl`].
 
 pub mod batcher;
 pub mod cascade_sim;
@@ -26,4 +29,6 @@ pub mod server;
 pub use cascade_sim::{simulate_cascade, CascadeSimResult};
 pub use monitor::{Monitor, MonitorConfig};
 pub use net::TcpFrontend;
-pub use server::{CascadeServer, ServerConfig, ServerStats, TierBackend};
+pub use server::{
+    AdmissionObserver, CascadeServer, ServeControl, ServerConfig, ServerStats, TierBackend,
+};

@@ -32,6 +32,12 @@ pub struct Monitor {
     pub config: MonitorConfig,
     baseline: TraceStats,
     window: Vec<Request>,
+    /// A detected shift the caller has not yet resolved (via
+    /// [`Monitor::rebased`] or [`Monitor::abort_reschedule`]). While
+    /// set, [`Monitor::observe`] keeps sampling but never re-triggers:
+    /// without this guard a stale window re-fires on every observation
+    /// while the (possibly slow, background) re-schedule is in flight.
+    pending: bool,
     /// Number of re-schedules triggered (diagnostics).
     pub reschedules: usize,
 }
@@ -39,23 +45,26 @@ pub struct Monitor {
 impl Monitor {
     /// `baseline` is the stats the current plan was computed for.
     pub fn new(config: MonitorConfig, baseline: TraceStats) -> Monitor {
-        Monitor { config, baseline, window: Vec::new(), reschedules: 0 }
+        Monitor { config, baseline, window: Vec::new(), pending: false, reschedules: 0 }
     }
 
     /// Record an observed request. Returns `Some(new_stats)` when a
     /// significant shift is detected — the caller should re-run the
-    /// scheduler with those stats and then call [`Monitor::rebased`].
+    /// scheduler with those stats and then call [`Monitor::rebased`]
+    /// (or [`Monitor::abort_reschedule`] if the re-schedule failed).
+    /// At most one trigger is outstanding at a time.
     pub fn observe(&mut self, req: Request) -> Option<TraceStats> {
         self.window.push(req);
         if self.window.len() > self.config.window {
             let excess = self.window.len() - self.config.window;
             self.window.drain(0..excess);
         }
-        if self.window.len() < self.config.min_samples {
+        if self.pending || self.window.len() < self.config.min_samples {
             return None;
         }
         let current = estimate_stats(&self.window);
         if current.shift_from(&self.baseline) > self.config.shift_threshold {
+            self.pending = true;
             Some(current)
         } else {
             None
@@ -63,10 +72,34 @@ impl Monitor {
     }
 
     /// Acknowledge a re-schedule: the new plan was built for `stats`.
+    /// The window is reset so the stale pre-swap sample cannot
+    /// immediately re-trigger against the new baseline; detection
+    /// resumes once `min_samples` fresh requests arrive.
     pub fn rebased(&mut self, stats: TraceStats) {
         self.baseline = stats;
         self.window.clear();
+        self.pending = false;
         self.reschedules += 1;
+    }
+
+    /// Give up on an outstanding trigger (the re-schedule failed or the
+    /// new plan could not be applied). The window restarts from empty —
+    /// re-arming only after fresh samples — instead of re-firing on
+    /// every subsequent request.
+    pub fn abort_reschedule(&mut self) {
+        self.window.clear();
+        self.pending = false;
+    }
+
+    /// Whether a trigger is outstanding (re-schedule in flight).
+    pub fn is_pending(&self) -> bool {
+        self.pending
+    }
+
+    /// The recent request sample — what the re-scheduler should re-run
+    /// the bi-level optimization on.
+    pub fn window_requests(&self) -> &[Request] {
+        &self.window
     }
 
     pub fn baseline(&self) -> &TraceStats {
@@ -152,5 +185,123 @@ mod tests {
             let _ = m.observe(req);
         }
         assert!(m.window.len() <= 50);
+    }
+
+    #[test]
+    fn underfilled_window_never_triggers() {
+        // Wildly shifted traffic, but fewer than min_samples
+        // observations: detection must stay silent.
+        let base = baseline();
+        let cfg = MonitorConfig { window: 100, min_samples: 60, shift_threshold: 0.3 };
+        let mut m = Monitor::new(cfg, base);
+        for req in generate(&paper_trace(1, 40.0), 59, 8) {
+            assert!(m.observe(req).is_none(), "triggered below min_samples");
+        }
+    }
+
+    #[test]
+    fn zero_rate_baseline_is_finite_and_triggers() {
+        // A degenerate baseline (e.g. a plan scheduled before any
+        // traffic) must not panic or produce non-finite shifts — any
+        // real traffic is a drift.
+        let zero = TraceStats { rate: 0.0, avg_input: 0.0, avg_output: 0.0, complexity_mean: 0.0 };
+        let mut m = Monitor::new(MonitorConfig::default(), zero);
+        let mut triggered = None;
+        for req in generate(&paper_trace(2, 4.0), 200, 9) {
+            if let Some(s) = m.observe(req) {
+                triggered = Some(s);
+                break;
+            }
+        }
+        let s = triggered.expect("traffic on a zero baseline must trigger");
+        assert!(s.rate.is_finite());
+        assert!(s.shift_from(m.baseline()).is_finite());
+    }
+
+    #[test]
+    fn steady_state_after_rebase_stays_silent() {
+        // No-drift steady state: a monitor rebased onto the live
+        // workload's own stats never re-triggers on that workload.
+        let reqs = generate(&paper_trace(2, 4.0), 600, 10);
+        let mut m = Monitor::new(MonitorConfig::default(), estimate_stats(&reqs[..300]));
+        for req in &reqs[..300] {
+            let _ = m.observe(*req);
+        }
+        m.rebased(estimate_stats(&reqs[..300]));
+        for req in &reqs[300..] {
+            assert!(m.observe(*req).is_none(), "steady state re-triggered");
+        }
+    }
+
+    #[test]
+    fn pending_trigger_suppresses_refire_until_resolved() {
+        // Regression: while a re-schedule is in flight the stale window
+        // must not re-trigger on every subsequent request.
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        let reqs = generate(&paper_trace(1, 12.0), 400, 11);
+        let mut it = reqs.iter();
+        let mut first = None;
+        for req in it.by_ref() {
+            if let Some(s) = m.observe(*req) {
+                first = Some(s);
+                break;
+            }
+        }
+        let stats = first.expect("shift detected");
+        assert!(m.is_pending());
+        // The re-schedule is still running: no re-fires.
+        for req in it.by_ref().take(100) {
+            assert!(m.observe(*req).is_none(), "re-fired while pending");
+        }
+        m.rebased(stats);
+        assert!(!m.is_pending());
+        assert_eq!(m.reschedules, 1);
+    }
+
+    #[test]
+    fn rebase_resets_window_below_capacity() {
+        // Regression: `rebased` must drop the stale window entirely, so
+        // detection re-arms only after min_samples *fresh* requests —
+        // a stale window would re-trigger immediately after the swap.
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        let reqs = generate(&paper_trace(1, 12.0), 400, 12);
+        let mut stats = None;
+        for req in &reqs {
+            if let Some(s) = m.observe(*req) {
+                stats = Some(s);
+                break;
+            }
+        }
+        m.rebased(stats.expect("shift detected"));
+        assert!(m.window_requests().is_empty(), "window must reset on rebase");
+    }
+
+    #[test]
+    fn abort_clears_pending_and_rearms() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        let reqs = generate(&paper_trace(1, 12.0), 800, 13);
+        let mut it = reqs.iter();
+        for req in it.by_ref() {
+            if m.observe(*req).is_some() {
+                break;
+            }
+        }
+        assert!(m.is_pending());
+        m.abort_reschedule();
+        assert!(!m.is_pending());
+        assert_eq!(m.reschedules, 0, "aborted re-schedule must not count");
+        // The shift persists, so after a fresh window fills it triggers
+        // again.
+        let mut retriggered = false;
+        for req in it {
+            if m.observe(*req).is_some() {
+                retriggered = true;
+                break;
+            }
+        }
+        assert!(retriggered, "shift not re-detected after abort");
     }
 }

@@ -18,7 +18,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -35,7 +35,10 @@ use crate::util::json::Json;
 /// [`crate::coordinator::server::CascadeServer`]; this front-end is
 /// about the wire protocol and lifecycle).
 pub struct TcpFrontend {
-    pub policy: PolicySpec,
+    /// Swappable routing policy: [`TcpFrontend::apply_plan`] replaces
+    /// it while the accept loop is live, so a re-schedule reaches the
+    /// wire path without a restart.
+    policy: RwLock<PolicySpec>,
     pub n_tiers: usize,
     pub max_new_default: usize,
 }
@@ -43,13 +46,45 @@ pub struct TcpFrontend {
 impl TcpFrontend {
     pub fn new(policy: PolicySpec, n_tiers: usize, max_new_default: usize) -> Result<TcpFrontend> {
         policy.validate(n_tiers)?;
-        Ok(TcpFrontend { policy, n_tiers, max_new_default })
+        Ok(TcpFrontend { policy: RwLock::new(policy), n_tiers, max_new_default })
     }
 
     /// Wire a scheduler-produced plan into the front-end: the plan's
     /// policy routes and its tier count sizes the backend chain.
     pub fn from_plan(plan: &CascadePlan, max_new_default: usize) -> Result<TcpFrontend> {
         TcpFrontend::new(plan.policy.clone(), plan.tiers.len(), max_new_default)
+    }
+
+    /// Snapshot of the current routing policy.
+    pub fn policy(&self) -> PolicySpec {
+        self.policy.read().unwrap().clone()
+    }
+
+    /// Label of the current routing policy (for logs).
+    pub fn policy_label(&self) -> String {
+        self.policy.read().unwrap().label()
+    }
+
+    /// Hot-swap the routing policy; requests already read from the
+    /// socket finish under the policy they started with, subsequent
+    /// requests route under the new one.
+    pub fn set_policy(&self, policy: PolicySpec) -> Result<()> {
+        policy.validate(self.n_tiers)?;
+        *self.policy.write().unwrap() = policy;
+        Ok(())
+    }
+
+    /// Hot-swap a re-scheduled plan's policy into the live front-end.
+    /// The plan must cover the same backend chain (tier count).
+    pub fn apply_plan(&self, plan: &CascadePlan) -> Result<()> {
+        if plan.tiers.len() != self.n_tiers {
+            anyhow::bail!(
+                "plan has {} tiers but the front-end serves {}",
+                plan.tiers.len(),
+                self.n_tiers
+            );
+        }
+        self.set_policy(plan.policy.clone())
     }
 
     /// Serve on `addr` until `shutdown` is set. Backends are created
@@ -135,14 +170,17 @@ impl TcpFrontend {
         let c = self.n_tiers;
         let features = RequestFeatures::live(prompt.len());
         let t0 = Instant::now();
-        let mut tier = self.policy.entry_tier(&features, c).min(c - 1);
+        // One consistent policy snapshot per request: a concurrent
+        // hot-swap never changes the rules mid-cascade.
+        let policy = self.policy.read().unwrap().clone();
+        let mut tier = policy.entry_tier(&features, c).min(c - 1);
         let (tier, output, score) = loop {
             let output = backends[tier].generate(&prompt, max_new)?;
             let score = judger.score(&prompt, &output);
             let decision = if tier == c - 1 {
                 Decision::Accept
             } else {
-                self.policy.decide(tier, score, &features, c)
+                policy.decide(tier, score, &features, c)
             };
             match decision {
                 Decision::Accept => break (tier, output, score),
@@ -275,5 +313,45 @@ mod tests {
     #[test]
     fn frontend_rejects_mismatched_policy() {
         assert!(TcpFrontend::new(PolicySpec::threshold(vec![50.0]).unwrap(), 3, 4).is_err());
+        // And a live swap is validated against the backend chain too.
+        let fe = TcpFrontend::new(PolicySpec::threshold(vec![50.0]).unwrap(), 2, 4).unwrap();
+        assert!(fe.set_policy(PolicySpec::threshold(vec![50.0, 60.0]).unwrap()).is_err());
+        assert_eq!(fe.policy_label(), "H=(50)");
+    }
+
+    #[test]
+    fn policy_hot_swap_changes_routing_live() {
+        let addr = "127.0.0.1:39475";
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let fe = Arc::new(
+            TcpFrontend::new(PolicySpec::threshold(vec![50.0]).unwrap(), 2, 4).unwrap(),
+        );
+        let fe_srv = Arc::clone(&fe);
+        let sd = shutdown.clone();
+        std::thread::spawn(move || {
+            let factory = |t: usize| -> Result<Box<dyn TierBackend>> {
+                Ok(Box::new(EchoBackend(t)))
+            };
+            fe_srv.serve(addr, &factory, &BitJudger, sd).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(150));
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut read_json = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap()
+        };
+        // A hard request (difficulty 1) escalates under H=50.
+        writeln!(stream, r#"{{"id": 1, "prompt": [1, 7]}}"#).unwrap();
+        assert_eq!(read_json().req("tier").unwrap().as_i64().unwrap(), 1);
+        // Hot-swap to accept-everything: the same request now completes
+        // at tier 0 — on the same connection, no restart.
+        fe.set_policy(PolicySpec::threshold(vec![0.0]).unwrap()).unwrap();
+        writeln!(stream, r#"{{"id": 2, "prompt": [1, 7]}}"#).unwrap();
+        assert_eq!(read_json().req("tier").unwrap().as_i64().unwrap(), 0);
+
+        shutdown.store(true, Ordering::SeqCst);
     }
 }

@@ -14,9 +14,9 @@
 //! scheduler-produced [`CascadePlan`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -40,6 +40,141 @@ pub trait ResponseJudger: Send + Sync {
 /// Factory building a tier's backend inside its worker thread.
 pub type BackendFactory<'a> =
     dyn Fn(usize) -> Result<Box<dyn TierBackend>> + Send + Sync + 'a;
+
+/// Observes every admitted request — the adaptation subsystem's tap
+/// into the live request stream (implementations feed the workload
+/// monitor; see [`crate::adapt`]).
+pub trait AdmissionObserver: Send + Sync {
+    /// Called by the submitter as trace entry `req_index` is admitted,
+    /// before entry routing. A swap the observer queues here is
+    /// applied by the router between routing steps — promptly, but
+    /// not necessarily before this request itself routes.
+    fn on_admit(&self, req_index: usize);
+}
+
+/// Handle through which a running [`CascadeServer::serve_adaptive`]
+/// loop accepts live plan hot-swaps.
+///
+/// [`ServeControl::apply_plan`] queues a new configuration (latest
+/// submission wins); the serve loop applies it between routing steps:
+/// the routing policy is swapped atomically, per-tier admission bounds
+/// are rescaled, and worker pools are resized — all without dropping
+/// in-flight requests. Scale-up spawns workers immediately; scale-down
+/// retires surplus workers only at batch boundaries, so a worker never
+/// abandons admitted work.
+pub struct ServeControl {
+    n_tiers: usize,
+    /// The plan the server was launched from, when known: hot-swaps
+    /// must preserve the cascade identity
+    /// ([`CascadePlan::hot_swappable_with`]) — a plan scheduled for a
+    /// different model cascade must not be swapped in just because the
+    /// tier counts happen to match.
+    reference: Option<CascadePlan>,
+    pending: Mutex<Option<ServerConfig>>,
+    hot_swaps: AtomicUsize,
+}
+
+impl ServeControl {
+    /// Control knowing only the tier count (no cascade-identity check
+    /// on swapped plans; prefer [`ServeControl::for_plan`]).
+    pub fn new(n_tiers: usize) -> Arc<ServeControl> {
+        Arc::new(ServeControl {
+            n_tiers,
+            reference: None,
+            pending: Mutex::new(None),
+            hot_swaps: AtomicUsize::new(0),
+        })
+    }
+
+    /// Control for a server built from `plan`: swapped plans are
+    /// validated against the launch plan's cascade identity (tier
+    /// count and model per tier), not just its tier count.
+    pub fn for_plan(plan: &CascadePlan) -> Arc<ServeControl> {
+        Arc::new(ServeControl {
+            n_tiers: plan.tiers.len(),
+            reference: Some(plan.clone()),
+            pending: Mutex::new(None),
+            hot_swaps: AtomicUsize::new(0),
+        })
+    }
+
+    /// Queue a scheduler plan for hot-swap into the running server.
+    /// Fails fast if the plan does not cover the running cascade.
+    pub fn apply_plan(&self, plan: &CascadePlan, max_new_tokens: usize) -> Result<()> {
+        if let Some(reference) = &self.reference {
+            if !reference.hot_swappable_with(plan) {
+                anyhow::bail!(
+                    "plan is not hot-swappable onto the running cascade: \
+                     serving [{}], plan covers [{}]",
+                    reference
+                        .tiers
+                        .iter()
+                        .map(|t| t.model_name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", "),
+                    plan.tiers
+                        .iter()
+                        .map(|t| t.model_name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        self.apply_config(ServerConfig::from_plan(plan, max_new_tokens)?)
+    }
+
+    /// Queue a raw server configuration for hot-swap. The config must
+    /// cover exactly the running cascade's tiers.
+    pub fn apply_config(&self, config: ServerConfig) -> Result<()> {
+        if config.replicas.len() != self.n_tiers || config.max_batch.len() != self.n_tiers {
+            anyhow::bail!(
+                "hot-swap config covers {} tiers but the server runs {}",
+                config.replicas.len(),
+                self.n_tiers
+            );
+        }
+        config.policy.validate(self.n_tiers)?;
+        *self.pending.lock().unwrap() = Some(config);
+        Ok(())
+    }
+
+    /// Number of swaps a serve loop has actually applied.
+    pub fn hot_swaps(&self) -> usize {
+        self.hot_swaps.load(Ordering::SeqCst)
+    }
+
+    fn take_pending(&self) -> Option<ServerConfig> {
+        self.pending.lock().unwrap().take()
+    }
+}
+
+/// Render a caught worker panic payload for the error path.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// A surplus worker (after a scale-down) retires iff it can decrement
+/// the live count without dropping the pool below its target.
+fn try_retire(alive: &AtomicUsize, target: &AtomicUsize) -> bool {
+    loop {
+        let a = alive.load(Ordering::SeqCst);
+        if a <= target.load(Ordering::SeqCst) {
+            return false;
+        }
+        if alive
+            .compare_exchange(a, a - 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
 
 /// Server configuration: one entry per tier, in cascade order.
 #[derive(Debug, Clone)]
@@ -136,6 +271,15 @@ impl ServerStats {
         stats::mean(&v)
     }
 
+    /// Full p50/p95/p99 + mean tail summary of end-to-end latencies
+    /// (the server's summary used to be mean/p95-only). One sort per
+    /// call — read the percentiles off the returned summary rather
+    /// than calling per-percentile.
+    pub fn latency_summary(&self) -> crate::metrics::LatencySummary {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.e2e_latency.as_secs_f64()).collect();
+        crate::metrics::LatencySummary::of(&v)
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         self.completions.len() as f64 / self.wall_clock.as_secs_f64().max(1e-9)
     }
@@ -225,6 +369,41 @@ impl CascadeServer {
         factory: &BackendFactory<'_>,
         judger: &dyn ResponseJudger,
     ) -> Result<ServerStats> {
+        self.run(trace, factory, judger, None, None)
+    }
+
+    /// Like [`CascadeServer::serve`], but the run accepts live plan
+    /// hot-swaps through `control` (routing policy, admission bounds,
+    /// and worker-pool sizes change mid-run without dropping in-flight
+    /// requests) and reports every admitted request to `observer` —
+    /// the tap the adaptation subsystem ([`crate::adapt`]) feeds its
+    /// workload monitor from.
+    pub fn serve_adaptive(
+        &self,
+        trace: &[(f64, Vec<i32>)],
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+        control: &ServeControl,
+        observer: Option<&dyn AdmissionObserver>,
+    ) -> Result<ServerStats> {
+        if control.n_tiers != self.config.replicas.len() {
+            anyhow::bail!(
+                "control is sized for {} tiers but the server runs {}",
+                control.n_tiers,
+                self.config.replicas.len()
+            );
+        }
+        self.run(trace, factory, judger, Some(control), observer)
+    }
+
+    fn run(
+        &self,
+        trace: &[(f64, Vec<i32>)],
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+        control: Option<&ServeControl>,
+        observer: Option<&dyn AdmissionObserver>,
+    ) -> Result<ServerStats> {
         let c = self.config.replicas.len();
         let t0 = Instant::now();
         let tiers: Vec<TierState> = self
@@ -233,103 +412,171 @@ impl CascadeServer {
             .iter()
             .map(|&mb| TierState::new(mb.max(1)))
             .collect();
+        // Swappable routing/pool state: the policy the submitter and
+        // router consult, and the per-tier live/target worker counts
+        // the pools converge to after a hot-swap.
+        let policy: RwLock<PolicySpec> = RwLock::new(self.config.policy.clone());
+        let max_new_live = AtomicUsize::new(self.config.max_new_tokens);
+        let alive: Vec<AtomicUsize> = (0..c).map(|_| AtomicUsize::new(0)).collect();
+        let target: Vec<AtomicUsize> = self
+            .config
+            .replicas
+            .iter()
+            .map(|&r| AtomicUsize::new(r.max(1)))
+            .collect();
         let (tx, rx) = channel::<RouterMsg>();
         let queue_time: Mutex<HashMap<usize, f64>> = Mutex::new(HashMap::new());
 
         let stats = std::thread::scope(|scope| -> Result<ServerStats> {
-            // --- Workers ---
-            for tier in 0..c {
-                for _replica in 0..self.config.replicas[tier].max(1) {
-                    let tier_state = &tiers[tier];
-                    let tx = tx.clone();
-                    let max_new = self.config.max_new_tokens;
-                    scope.spawn(move || {
-                        let mut backend = match factory(tier) {
-                            Ok(b) => b,
-                            Err(e) => {
-                                let _ = tx.send(RouterMsg::WorkerDead {
-                                    tier,
-                                    err: e.to_string(),
-                                });
-                                return;
+            // --- Workers (spawnable mid-run for hot-swap scale-up) ---
+            let alive = &alive;
+            let target = &target;
+            let tiers_ref = &tiers;
+            let max_new = &max_new_live;
+            let spawn_worker = |tier: usize| {
+                let tier_state = &tiers_ref[tier];
+                let tx = tx.clone();
+                alive[tier].fetch_add(1, Ordering::SeqCst);
+                scope.spawn(move || {
+                    // Panics in the backend are contained and converted
+                    // to the replica-death path: an unwinding worker
+                    // would bypass the alive/WorkerDead accounting and
+                    // leave the router waiting forever.
+                    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        factory(tier)
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!("backend factory panicked: {}", panic_msg(&*p)))
+                    });
+                    let mut backend = match built {
+                        Ok(b) => b,
+                        Err(e) => {
+                            alive[tier].fetch_sub(1, Ordering::SeqCst);
+                            let _ = tx.send(RouterMsg::WorkerDead {
+                                tier,
+                                err: e.to_string(),
+                            });
+                            return;
+                        }
+                    };
+                    loop {
+                        // Retire at batch boundaries if the pool shrank
+                        // (a worker never abandons admitted work).
+                        if try_retire(&alive[tier], &target[tier]) {
+                            return;
+                        }
+                        // Wait for work or shutdown. Each worker
+                        // admits only its share of the tier's batch
+                        // budget, so the queue drains across the whole
+                        // pool instead of serializing behind one
+                        // replica — pool size is the capacity lever
+                        // hot-swaps pull.
+                        let batch = {
+                            let mut b = tier_state.batcher.lock().unwrap();
+                            loop {
+                                // Share by the *live* worker count: after
+                                // replica deaths the survivors must cover
+                                // the whole batch budget, not a 1/target
+                                // sliver of it.
+                                let pool = alive[tier].load(Ordering::SeqCst).max(1);
+                                let share = (b.max_batch / pool).max(1);
+                                let admitted = b.admit_up_to(share);
+                                if !admitted.is_empty() {
+                                    break admitted;
+                                }
+                                if tier_state.closed.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                if try_retire(&alive[tier], &target[tier]) {
+                                    return;
+                                }
+                                b = tier_state.wake.wait(b).unwrap();
                             }
                         };
-                        loop {
-                            // Wait for work or shutdown.
-                            let batch = {
-                                let mut b = tier_state.batcher.lock().unwrap();
-                                loop {
-                                    let admitted = b.admit();
-                                    if !admitted.is_empty() {
-                                        break admitted;
-                                    }
-                                    if tier_state.closed.load(Ordering::SeqCst) {
-                                        return;
-                                    }
-                                    b = tier_state.wake.wait(b).unwrap();
+                        let n = batch.len();
+                        let mut iter = batch.into_iter();
+                        while let Some(pending) = iter.next() {
+                            let started = Instant::now();
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    backend.generate(
+                                        &pending.item.prompt,
+                                        max_new.load(Ordering::SeqCst),
+                                    )
+                                }))
+                                .unwrap_or_else(|p| {
+                                    Err(anyhow::anyhow!(
+                                        "backend panicked: {}",
+                                        panic_msg(&*p)
+                                    ))
+                                });
+                            match result {
+                                Ok(output) => {
+                                    let _ = tx.send(RouterMsg::Done {
+                                        tier,
+                                        req: pending.item,
+                                        output,
+                                        exec_seconds: started.elapsed().as_secs_f64(),
+                                    });
                                 }
-                            };
-                            let n = batch.len();
-                            let mut iter = batch.into_iter();
-                            while let Some(pending) = iter.next() {
-                                let started = Instant::now();
-                                let result = backend.generate(&pending.item.prompt, max_new);
-                                match result {
-                                    Ok(output) => {
-                                        let _ = tx.send(RouterMsg::Done {
-                                            tier,
-                                            req: pending.item,
-                                            output,
-                                            exec_seconds: started.elapsed().as_secs_f64(),
-                                        });
-                                    }
-                                    Err(e) => {
-                                        // Replica death: hand every
-                                        // admitted-but-unserved request
-                                        // back to the router, release
-                                        // batch capacity, and exit.
+                                Err(e) => {
+                                    // Replica death: hand every
+                                    // admitted-but-unserved request
+                                    // back to the router, release
+                                    // batch capacity, and exit.
+                                    let _ = tx.send(RouterMsg::Failed {
+                                        tier,
+                                        req: pending.item,
+                                    });
+                                    for rest in iter.by_ref() {
                                         let _ = tx.send(RouterMsg::Failed {
                                             tier,
-                                            req: pending.item,
+                                            req: rest.item,
                                         });
-                                        for rest in iter.by_ref() {
-                                            let _ = tx.send(RouterMsg::Failed {
-                                                tier,
-                                                req: rest.item,
-                                            });
-                                        }
-                                        let _ = tx.send(RouterMsg::WorkerDead {
-                                            tier,
-                                            err: e.to_string(),
-                                        });
-                                        tier_state.batcher.lock().unwrap().complete(n);
-                                        tier_state.wake.notify_all();
-                                        return;
                                     }
+                                    alive[tier].fetch_sub(1, Ordering::SeqCst);
+                                    let _ = tx.send(RouterMsg::WorkerDead {
+                                        tier,
+                                        err: e.to_string(),
+                                    });
+                                    tier_state.batcher.lock().unwrap().complete(n);
+                                    tier_state.wake.notify_all();
+                                    return;
                                 }
                             }
-                            tier_state.batcher.lock().unwrap().complete(n);
-                            tier_state.wake.notify_all();
                         }
-                    });
+                        tier_state.batcher.lock().unwrap().complete(n);
+                        tier_state.wake.notify_all();
+                    }
+                });
+            };
+            for tier in 0..c {
+                for _replica in 0..self.config.replicas[tier].max(1) {
+                    spawn_worker(tier);
                 }
             }
-            drop(tx);
 
             // --- Submitter (paced by arrival offsets); the policy may
             // route a request past the small tiers before any model
             // runs (length-predictive entry). ---
             let submit_tiers = &tiers;
-            let policy = &self.config.policy;
+            let policy_ref = &policy;
             scope.spawn(move || {
                 for (i, (offset, prompt)) in trace.iter().enumerate() {
-                    let target = Duration::from_secs_f64(*offset);
+                    let due = Duration::from_secs_f64(*offset);
                     let elapsed = t0.elapsed();
-                    if target > elapsed {
-                        std::thread::sleep(target - elapsed);
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    // The adaptation tap sees the request before entry
+                    // routing; a swap queued here is picked up by the
+                    // router within a few messages.
+                    if let Some(obs) = observer {
+                        obs.on_admit(i);
                     }
                     let features = RequestFeatures::live(prompt.len());
-                    let entry = policy.entry_tier(&features, c).min(c - 1);
+                    let entry =
+                        policy_ref.read().unwrap().entry_tier(&features, c).min(c - 1);
                     submit_tiers[entry].push(
                         LiveRequest { id: i, prompt: prompt.clone(), submitted: Instant::now() },
                         t0,
@@ -342,11 +589,49 @@ impl CascadeServer {
             let mut per_tier = vec![0usize; c];
             let mut done = 0usize;
             let mut worker_errors: Vec<String> = Vec::new();
-            let mut dead = vec![0usize; c];
             while done < trace.len() {
-                let msg = match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => break, // all workers gone
+                // Apply a queued hot-swap between routing steps: swap
+                // the policy atomically, rescale admission, resize the
+                // worker pools. In-flight requests are untouched — they
+                // finish under whichever policy is current when their
+                // tier's response is scored.
+                if let Some(ctrl) = control {
+                    if let Some(next) = ctrl.take_pending() {
+                        *policy.write().unwrap() = next.policy.clone();
+                        max_new_live.store(next.max_new_tokens, Ordering::SeqCst);
+                        for (t, &mb) in next.max_batch.iter().enumerate() {
+                            tiers[t].batcher.lock().unwrap().max_batch = mb.max(1);
+                            tiers[t].wake.notify_all();
+                        }
+                        for t in 0..c {
+                            let want = next.replicas[t].max(1);
+                            target[t].store(want, Ordering::SeqCst);
+                            while alive[t].load(Ordering::SeqCst) < want {
+                                spawn_worker(t);
+                            }
+                            // Surplus workers wake up and retire.
+                            tiers[t].wake.notify_all();
+                        }
+                        ctrl.hot_swaps.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                // Adaptive runs poll with a short timeout so a queued
+                // swap is applied even while the channel is idle; plain
+                // serves block (no mailbox can ever fill). Either way
+                // the channel cannot disconnect mid-run — the spawning
+                // handle outlives the loop — so worker loss is handled
+                // via WorkerDead accounting, not sender counting.
+                let msg = if control.is_some() {
+                    match rx.recv_timeout(Duration::from_millis(2)) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    }
                 };
                 match msg {
                     RouterMsg::WorkerDead { tier, err } => {
@@ -354,8 +639,7 @@ impl CascadeServer {
                         // remaining replicas of that tier (failure
                         // injection tests exercise this path).
                         worker_errors.push(format!("tier {tier}: {err}"));
-                        dead[tier] += 1;
-                        if dead[tier] >= self.config.replicas[tier].max(1) {
+                        if alive[tier].load(Ordering::SeqCst) == 0 {
                             // Unblock every surviving worker before
                             // returning, or thread::scope never joins.
                             for t in &tiers {
@@ -380,7 +664,7 @@ impl CascadeServer {
                         let decision = if tier == c - 1 {
                             Decision::Accept
                         } else {
-                            self.config.policy.decide(tier, score, &features, c)
+                            policy.read().unwrap().decide(tier, score, &features, c)
                         };
                         // A skip must move strictly forward; clamp a
                         // misbehaving target rather than wedging the
@@ -579,6 +863,33 @@ mod tests {
     }
 
     #[test]
+    fn panicking_backend_fails_loudly_instead_of_hanging() {
+        // A panic (not an Err) in the backend must be contained and
+        // fed through the replica-death accounting — unwinding past it
+        // would leave the router waiting forever.
+        struct PanickingBackend;
+        impl TierBackend for PanickingBackend {
+            fn generate(&mut self, _p: &[i32], _m: usize) -> Result<Vec<i32>> {
+                panic!("kaboom");
+            }
+        }
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![2, 2], vec![50.0], 2).unwrap(),
+        )
+        .unwrap();
+        let factory = |t: usize| -> Result<Box<dyn TierBackend>> {
+            if t == 0 {
+                Ok(Box::new(PanickingBackend))
+            } else {
+                Ok(Box::new(FakeBackend { tier: t, delay: Duration::from_millis(1) }))
+            }
+        };
+        let trace: Vec<(f64, Vec<i32>)> = (0..4).map(|_| (0.0, vec![0])).collect();
+        let err = server.serve(&trace, &factory, &FakeJudger).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    #[test]
     fn queue_latency_reported() {
         let server = CascadeServer::new(
             ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 2).unwrap(),
@@ -684,6 +995,138 @@ mod tests {
         assert_eq!(cfg.replicas.len(), cfg.max_batch.len());
         // The derived config constructs a valid server.
         CascadeServer::new(cfg).unwrap();
+    }
+
+    /// Observer that queues a hot-swap exactly when trace entry `at` is
+    /// admitted — a deterministic trigger point for the swap tests.
+    struct SwapAt {
+        control: Arc<ServeControl>,
+        at: usize,
+        next: ServerConfig,
+        fired: AtomicBool,
+    }
+
+    impl AdmissionObserver for SwapAt {
+        fn on_admit(&self, i: usize) {
+            if i == self.at && !self.fired.swap(true, Ordering::SeqCst) {
+                self.control.apply_config(self.next.clone()).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn hot_swap_loses_no_requests_and_scales_up() {
+        // Start at 1 replica/tier with singleton batches; swap to a
+        // bigger pool and an accept-everything policy mid-run. Every
+        // request must complete exactly once across the swap.
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 4).unwrap(),
+        )
+        .unwrap();
+        let control = ServeControl::new(2);
+        let next =
+            ServerConfig::with_thresholds(vec![3, 2], vec![4, 4], vec![0.0], 4).unwrap();
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 10,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..40).map(|i| (0.0, vec![(i % 2) as i32, 5])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 40, "every request must survive the swap");
+        assert_eq!(control.hot_swaps(), 1);
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>(), "no drops, no duplicates");
+    }
+
+    #[test]
+    fn hot_swap_scales_down_without_deadlock() {
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![3, 2], vec![4, 4], vec![50.0], 4).unwrap(),
+        )
+        .unwrap();
+        let control = ServeControl::new(2);
+        let next =
+            ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 4).unwrap();
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 8,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..30).map(|i| (0.0, vec![(i % 2) as i32])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 30);
+        assert_eq!(control.hot_swaps(), 1);
+    }
+
+    #[test]
+    fn control_rejects_mismatched_tier_count() {
+        let control = ServeControl::new(3);
+        let two_tier =
+            ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 2).unwrap();
+        assert!(control.apply_config(two_tier.clone()).is_err());
+        // And serve_adaptive refuses a control sized for another cascade.
+        let server = CascadeServer::new(two_tier).unwrap();
+        assert!(server
+            .serve_adaptive(&[], &factory, &FakeJudger, &control, None)
+            .is_err());
+    }
+
+    #[test]
+    fn control_for_plan_rejects_different_cascade() {
+        use crate::parallel::Strategy;
+        use crate::perf::Workload;
+        use crate::sched::plan::TierPlan;
+
+        let plan_with = |names: [&str; 2]| CascadePlan {
+            policy: PolicySpec::threshold(vec![50.0]).unwrap(),
+            tiers: names
+                .iter()
+                .map(|n| TierPlan {
+                    model_name: n.to_string(),
+                    gpus: 2,
+                    strategy: Some(Strategy::uniform(1, 1, 2)),
+                    workload: Workload { rate: 2.0, avg_input: 100.0, avg_output: 50.0 },
+                    processing_ratio: 0.5,
+                    predicted_p95: 1.0,
+                })
+                .collect(),
+            predicted_latency: 1.0,
+            predicted_quality: 80.0,
+        };
+        let launched = plan_with(["small", "large"]);
+        let control = ServeControl::for_plan(&launched);
+        // Same cascade, retuned: accepted.
+        let mut retuned = plan_with(["small", "large"]);
+        retuned.policy = PolicySpec::threshold(vec![70.0]).unwrap();
+        control.apply_plan(&retuned, 4).unwrap();
+        // Same tier count, different models: rejected — the weights on
+        // the GPUs don't change on a hot-swap.
+        let other = plan_with(["small", "other-large"]);
+        let err = control.apply_plan(&other, 4).unwrap_err();
+        assert!(err.to_string().contains("not hot-swappable"), "{err}");
+        // A tier-count-only control would have accepted it.
+        assert!(ServeControl::new(2).apply_plan(&other, 4).is_ok());
+    }
+
+    #[test]
+    fn latency_summary_covers_percentiles() {
+        let server = CascadeServer::new(config()).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..20).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        let s = stats.latency_summary();
+        assert!(s.p50 > 0.0 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!((s.p95 - stats.p95_latency()).abs() < 1e-9);
+        assert!((s.mean - stats.mean_latency()).abs() < 1e-9);
     }
 
     #[test]

@@ -24,14 +24,20 @@
 //! [`sched::plan::CascadePlan`] — the single schedule→serve artifact,
 //! JSON round-trippable into `ServerConfig::from_plan` /
 //! `TcpFrontend::from_plan`: policy routing ([`router`]), continuous
-//! batching, escalation, and re-scheduling on workload shift. Real
-//! model execution goes through [`runtime`], which loads the
-//! AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`
-//! — Python never runs on the request path.
+//! batching, and escalation. The online adaptation subsystem
+//! ([`adapt`]) closes the §4.4 loop at runtime: every admitted request
+//! feeds the workload monitor, a detected shift re-runs the bi-level
+//! scheduler (with a precomputed-plan cache for repeat regimes), and
+//! the new plan is hot-swapped into the running server without
+//! dropping in-flight requests. Real model execution goes through
+//! [`runtime`], which loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` — Python never runs on the
+//! request path.
 //!
 //! See `DESIGN.md` for the system inventory and the paper-experiment
 //! index, and `examples/` for runnable entry points.
 
+pub mod adapt;
 pub mod baselines;
 pub mod cluster;
 pub mod harness;

@@ -6,6 +6,8 @@
 //!   simulate   schedule + simulate on a held-out trace, print metrics
 //!   baselines  compare the three systems on one scenario
 //!   trace      generate a workload trace CSV
+//!   replay     drift replay: frozen vs adaptive (monitor -> re-schedule
+//!              -> hot-swap) serving of a phase-shift trace
 //!
 //! `--config path.json` loads an ExperimentConfig; all fields also have
 //! CLI overrides (--cascade, --gpus, --trace, --rate, --quality, ...).
@@ -151,6 +153,77 @@ fn cmd_trace(cfg: &ExperimentConfig, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// Drift replay (§4.4): serve a phase-shift trace twice — frozen at
+/// the startup plan and with the full adaptation loop — and report
+/// per-phase SLO attainment/quality plus the loop counters.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args.get("config").context(
+        "replay requires --config (see examples/configs/drift_replay.json)",
+    )?;
+    let cfg = cascadia::adapt::ReplayConfig::load(path)?;
+    let report = cascadia::adapt::run_replay(&cfg)?;
+
+    println!("initial plan : {}", report.initial_plan);
+    match &report.final_plan {
+        Some(p) => println!("final plan   : {p}"),
+        None => println!("final plan   : (no re-schedule fired)"),
+    }
+    let mut t = Table::new(
+        &format!("drift replay (SLO = {:.0}s e2e)", report.slo_seconds),
+        &[
+            "phase",
+            "requests",
+            "frozen SLO",
+            "adaptive SLO",
+            "frozen Q",
+            "adaptive Q",
+            "adaptive p95(s)",
+        ],
+    );
+    for (f, a) in report.frozen.phases.iter().zip(&report.adaptive.phases) {
+        t.row(vec![
+            f.label.clone(),
+            f.requests.to_string(),
+            format!("{:.1}%", f.slo_attainment * 100.0),
+            format!("{:.1}%", a.slo_attainment * 100.0),
+            format!("{:.1}", f.mean_quality),
+            format!("{:.1}", a.mean_quality),
+            format!("{:.2}", a.latency.p95),
+        ]);
+    }
+    t.row(vec![
+        "overall".into(),
+        report.adaptive.served.to_string(),
+        format!("{:.1}%", report.frozen.overall_attainment * 100.0),
+        format!("{:.1}%", report.adaptive.overall_attainment * 100.0),
+        format!("{:.1}", report.frozen.mean_quality),
+        format!("{:.1}", report.adaptive.mean_quality),
+        String::new(),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "adaptation: {} | dropped: frozen {} adaptive {}",
+        report.adaptive.counters, report.frozen.dropped, report.adaptive.dropped
+    );
+    if report.adaptive.dropped > 0 || report.frozen.dropped > 0 {
+        bail!("requests were dropped — the hot-swap contract is broken");
+    }
+    if report.adaptive.counters.reschedules == 0 {
+        bail!("no re-schedule fired — drift was not detected");
+    }
+    if report.adaptive.counters.hot_swaps == 0 {
+        bail!(
+            "a plan was re-scheduled but never hot-swapped into the serving loop \
+             (re-schedule finished after serving ended?)"
+        );
+    }
+    println!(
+        "adaptation win: {}",
+        if report.adaptation_win() { "yes (adaptive beats frozen on SLO attainment)" } else { "no" }
+    );
+    Ok(())
+}
+
 fn cmd_baselines(cfg: &ExperimentConfig) -> Result<()> {
     let scenario = scenario_of(cfg);
     let opts = cfg.outer_options();
@@ -243,7 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let factory = cascadia::runtime::pjrt_factory(dir);
     println!(
         "serving {n_tiers} tiers on {addr} (policy {}); protocol: one JSON per line",
-        fe.policy.label()
+        fe.policy_label()
     );
     fe.serve(&addr, &factory, &judger, Arc::new(AtomicBool::new(false)))
 }
@@ -257,6 +330,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&load_config(&args)?),
         "baselines" => cmd_baselines(&load_config(&args)?),
         "trace" => cmd_trace(&load_config(&args)?, &args.str_or("out", "results/trace.csv")),
+        "replay" => cmd_replay(&args),
         "serve" => cmd_serve(&args),
         "help" => {
             print_help();
@@ -271,7 +345,7 @@ fn main() -> Result<()> {
 
 fn print_help() {
     println!(
-        "cascadia <schedule|sweep|simulate|baselines|trace|serve> \\\n\
+        "cascadia <schedule|sweep|simulate|baselines|trace|replay|serve> \\\n\
          \x20   [--config cfg.json] [--cascade deepseek|llama] [--gpus N] \\\n\
          \x20   [--trace 1..3] [--rate R] [--quality Q] [--n N] [--seed S] \\\n\
          \x20   [--policy threshold|length|margin]\n\n\
@@ -280,6 +354,8 @@ fn print_help() {
          \x20   cascadia serve --plan plan.json\n\
          serve flags (without --plan): --h 80,70 --policy threshold \\\n\
          \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
+         Online adaptation (drift replay, §4.4):\n\
+         \x20   cascadia replay --config examples/configs/drift_replay.json\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );
 }

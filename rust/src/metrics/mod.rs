@@ -1,8 +1,64 @@
 //! Evaluation metrics: SLO attainment curves and the paper's headline
-//! "minimum SLO scale at 95% attainment" (§4.1), plus summary rows
-//! shared by the figure harnesses.
+//! "minimum SLO scale at 95% attainment" (§4.1), latency percentile
+//! summaries shared by the server/replay reports, and the counters of
+//! the online adaptation loop (§4.4).
 
 use crate::util::stats;
+
+/// p50/p95/p99 + mean of a latency sample (seconds). The server's
+/// summary used to be mean-only; every consumer now reports the tail.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a latency sample; all-zero for an empty sample.
+    pub fn of(latencies: &[f64]) -> LatencySummary {
+        if latencies.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut v = latencies.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            mean: stats::mean(&v),
+            p50: stats::percentile_sorted(&v, 0.50),
+            p95: stats::percentile_sorted(&v, 0.95),
+            p99: stats::percentile_sorted(&v, 0.99),
+        }
+    }
+}
+
+/// Counters of the monitor → re-schedule → hot-swap loop, surfaced by
+/// the adaptation controller and the replay harness.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdaptCounters {
+    /// Workload shifts the monitor flagged.
+    pub drifts_detected: usize,
+    /// Re-schedules acknowledged (`Monitor::reschedules`).
+    pub reschedules: usize,
+    /// Drifts resolved from the precomputed-plan cache (no scheduler
+    /// run).
+    pub plan_cache_hits: usize,
+    /// Plans queued for hot-swap. The serve loop applies the latest
+    /// queued plan, so the count of swaps *actually applied* is the
+    /// server-side `ServeControl::hot_swaps` (the replay report uses
+    /// that one).
+    pub hot_swaps: usize,
+}
+
+impl std::fmt::Display for AdaptCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "drifts={} reschedules={} cache_hits={} hot_swaps={}",
+            self.drifts_detected, self.reschedules, self.plan_cache_hits, self.hot_swaps
+        )
+    }
+}
 
 /// An SLO attainment curve: attainment at each SLO scale multiple.
 #[derive(Debug, Clone)]
@@ -80,5 +136,26 @@ mod tests {
         let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = SloCurve::exact_scale(&lats, 2.0, 0.95);
         assert!((s - 95.05 / 2.0).abs() < 0.5, "{s}");
+    }
+
+    #[test]
+    fn latency_summary_percentiles_are_ordered() {
+        let lats: Vec<f64> = (1..=200).map(|i| i as f64 / 10.0).collect();
+        let s = LatencySummary::of(&lats);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!((s.mean - 10.05).abs() < 1e-9);
+        assert!((s.p50 - 10.05).abs() < 0.1);
+        assert!((s.p99 - 19.8).abs() < 0.1, "{}", s.p99);
+    }
+
+    #[test]
+    fn latency_summary_of_empty_is_zero() {
+        assert_eq!(LatencySummary::of(&[]), LatencySummary::default());
+    }
+
+    #[test]
+    fn adapt_counters_display_is_compact() {
+        let c = AdaptCounters { drifts_detected: 2, reschedules: 1, plan_cache_hits: 1, hot_swaps: 2 };
+        assert_eq!(c.to_string(), "drifts=2 reschedules=1 cache_hits=1 hot_swaps=2");
     }
 }

@@ -18,7 +18,7 @@
 //! new routing strategies are searchable without touching this module's
 //! callers.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::judge::Judger;
@@ -257,6 +257,27 @@ pub fn tchebycheff_winners(sweep: &SweepResult, opts: &OuterOptions) -> Vec<Pare
     out
 }
 
+/// The §4.4 re-scheduling path: re-run the full bi-level sweep on a
+/// monitor window (the recent live sample) and pick the cheapest plan
+/// meeting the quality requirement. This is what the adaptation
+/// controller runs in its background re-schedule thread; it is just
+/// `optimize` + `select_plan` with window-shaped error reporting.
+pub fn reschedule(
+    cascade: &[ModelSpec],
+    cluster: &ClusterSpec,
+    judger: &Judger,
+    window: &[Request],
+    n_gpus: usize,
+    opts: &OuterOptions,
+    quality_requirement: f64,
+) -> Result<CascadePlan> {
+    let sweep = optimize(cascade, cluster, judger, window, n_gpus, opts)
+        .with_context(|| format!("re-scheduling on a {}-request window", window.len()))?;
+    select_plan(&sweep, quality_requirement).with_context(|| {
+        format!("no re-scheduled plan meets quality {quality_requirement} on the recent window")
+    })
+}
+
 /// Pick the lowest-latency plan meeting `quality_requirement`.
 pub fn select_plan(sweep: &SweepResult, quality_requirement: f64) -> Option<CascadePlan> {
     sweep
@@ -363,6 +384,24 @@ mod tests {
                 assert!(plan.predicted_latency <= p.latency + 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn reschedule_on_window_meets_quality() {
+        let cascade = deepseek_cascade();
+        let cluster = ClusterSpec::paper_testbed();
+        let judger = Judger::new(1);
+        // A monitor-window-sized sample of the hard trace.
+        let window = generate(&paper_trace(1, 8.0), 100, 21);
+        let opts = OuterOptions {
+            threshold_grid: vec![0.0, 30.0, 60.0, 90.0],
+            ..Default::default()
+        };
+        let plan = reschedule(&cascade, &cluster, &judger, &window, 32, &opts, 75.0).unwrap();
+        assert!(plan.predicted_quality >= 75.0);
+        assert_eq!(plan.tiers.len(), cascade.len());
+        // An unreachable bar errors instead of silently degrading.
+        assert!(reschedule(&cascade, &cluster, &judger, &window, 32, &opts, 100.1).is_err());
     }
 
     #[test]

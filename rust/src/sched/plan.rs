@@ -148,6 +148,20 @@ impl CascadePlan {
         CascadePlan::from_json_text(&text)
     }
 
+    /// Whether `other` can replace this plan on a running server
+    /// without redeploying model weights: the cascade identity (tier
+    /// count and model per tier) must match — only the allocation,
+    /// parallelism, and routing policy may differ. This is the
+    /// hot-swap compatibility contract of `ServeControl::apply_plan`.
+    pub fn hot_swappable_with(&self, other: &CascadePlan) -> bool {
+        self.tiers.len() == other.tiers.len()
+            && self
+                .tiers
+                .iter()
+                .zip(&other.tiers)
+                .all(|(a, b)| a.model_name == b.model_name)
+    }
+
     /// One-line summary for logs, in the paper's notation.
     pub fn summary(&self) -> String {
         let tiers = self
@@ -260,6 +274,24 @@ mod tests {
         assert!(CascadePlan::from_json_text(&p.to_json().to_string()).is_err());
         assert!(CascadePlan::from_json_text("{}").is_err());
         assert!(CascadePlan::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn hot_swappable_requires_same_cascade() {
+        let a = sample();
+        // Same models, different allocation/policy: swappable.
+        let mut b = sample();
+        b.policy = PolicySpec::threshold(vec![90.0, 60.0]).unwrap();
+        b.tiers[0].gpus = 2;
+        assert!(a.hot_swappable_with(&b));
+        // Different model identity: not swappable.
+        let mut c = sample();
+        c.tiers[1].model_name = "other".into();
+        assert!(!a.hot_swappable_with(&c));
+        // Different tier count: not swappable.
+        let mut d = sample();
+        d.tiers.pop();
+        assert!(!a.hot_swappable_with(&d));
     }
 
     #[test]

@@ -213,6 +213,68 @@ pub fn paper_trace(index: usize, rate: f64) -> TraceSpec {
         .unwrap_or_else(|| panic!("trace index {index} out of range 1..=3"))
 }
 
+/// A non-stationary trace: the generating distribution switches at
+/// phase boundaries (regime changes in rate, length mix, and
+/// complexity — the workload shifts §4.4's re-scheduling loop reacts
+/// to). Each phase contributes a fixed number of requests.
+#[derive(Debug, Clone)]
+pub struct PhasedTraceSpec {
+    pub phases: Vec<(TraceSpec, usize)>,
+}
+
+/// A generated drifting trace: requests in global arrival order plus
+/// the index at which each phase begins.
+#[derive(Debug, Clone)]
+pub struct PhasedTrace {
+    pub requests: Vec<Request>,
+    /// `phase_starts[p]` is the index of phase `p`'s first request
+    /// (`phase_starts[0] == 0`).
+    pub phase_starts: Vec<usize>,
+}
+
+impl PhasedTrace {
+    pub fn n_phases(&self) -> usize {
+        self.phase_starts.len()
+    }
+
+    /// Which phase request index `id` belongs to.
+    pub fn phase_of(&self, id: usize) -> usize {
+        match self.phase_starts.binary_search(&id) {
+            Ok(p) => p,
+            Err(ins) => ins.saturating_sub(1),
+        }
+    }
+
+    /// The request-index range of phase `p`.
+    pub fn phase_range(&self, p: usize) -> std::ops::Range<usize> {
+        let start = self.phase_starts[p];
+        let end = self
+            .phase_starts
+            .get(p + 1)
+            .copied()
+            .unwrap_or(self.requests.len());
+        start..end
+    }
+}
+
+/// Generate a drifting trace: phases are generated independently (each
+/// with a phase-derived seed) and concatenated on a continuous arrival
+/// clock, so the stream looks like one workload whose regime shifts.
+pub fn generate_phased(spec: &PhasedTraceSpec, seed: u64) -> PhasedTrace {
+    let mut requests = Vec::new();
+    let mut phase_starts = Vec::new();
+    let mut t_offset = 0.0;
+    for (p, (phase_spec, n)) in spec.phases.iter().enumerate() {
+        phase_starts.push(requests.len());
+        for r in generate(phase_spec, *n, seed.wrapping_add(1 + p as u64)) {
+            let arrival = t_offset + r.arrival;
+            requests.push(Request { id: requests.len() as u32, arrival, ..r });
+        }
+        t_offset = requests.last().map(|r| r.arrival).unwrap_or(t_offset);
+    }
+    PhasedTrace { requests, phase_starts }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +343,50 @@ mod tests {
         let cv_p = iat(&generate(&poisson, 3000, 5));
         let cv_b = iat(&generate(&bursty, 3000, 5));
         assert!(cv_b > cv_p * 1.3, "cv_b {cv_b} vs cv_p {cv_p}");
+    }
+
+    #[test]
+    fn phased_trace_has_monotone_arrivals_and_sequential_ids() {
+        let spec = PhasedTraceSpec {
+            phases: vec![
+                (paper_trace(3, 10.0), 200),
+                (paper_trace(1, 5.0), 150),
+            ],
+        };
+        let t = generate_phased(&spec, 9);
+        assert_eq!(t.requests.len(), 350);
+        assert_eq!(t.phase_starts, vec![0, 200]);
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id as usize, i);
+        }
+        for w in t.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "arrivals must be monotone");
+        }
+        assert_eq!(t.phase_of(0), 0);
+        assert_eq!(t.phase_of(199), 0);
+        assert_eq!(t.phase_of(200), 1);
+        assert_eq!(t.phase_of(349), 1);
+        assert_eq!(t.phase_range(0), 0..200);
+        assert_eq!(t.phase_range(1), 200..350);
+    }
+
+    #[test]
+    fn phased_trace_phases_have_distinct_stats() {
+        // Easy/short trace 3 at 12 rps, then hard/long trace 1 at 4 rps:
+        // the per-phase stats must reflect the regime change.
+        let spec = PhasedTraceSpec {
+            phases: vec![
+                (paper_trace(3, 12.0), 400),
+                (paper_trace(1, 4.0), 400),
+            ],
+        };
+        let t = generate_phased(&spec, 3);
+        let s0 = estimate_stats(&t.requests[t.phase_range(0)]);
+        let s1 = estimate_stats(&t.requests[t.phase_range(1)]);
+        assert!(s0.rate > 2.0 * s1.rate, "rate shift lost: {} vs {}", s0.rate, s1.rate);
+        assert!(s1.avg_input > s0.avg_input, "length shift lost");
+        assert!(s1.complexity_mean > s0.complexity_mean, "complexity shift lost");
+        assert!(s1.shift_from(&s0) > 0.3, "shift metric should flag the regime change");
     }
 
     #[test]

@@ -1,0 +1,75 @@
+//! Integration tests of the online adaptation subsystem: the example
+//! drift-replay config parses and drives the full monitor →
+//! re-schedule → hot-swap loop end-to-end with zero dropped requests.
+
+use cascadia::adapt::{run_replay, ReplayConfig};
+
+fn example_config_path() -> String {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/configs/drift_replay.json"
+    )
+    .to_string()
+}
+
+#[test]
+fn example_drift_replay_config_parses() {
+    let cfg = ReplayConfig::load(example_config_path()).expect("example config must load");
+    cfg.validate().unwrap();
+    assert_eq!(cfg.cascade_name, "deepseek");
+    assert_eq!(cfg.phases.len(), 2);
+    // The example drifts from the easy/short trace to the hard/long
+    // one — the regime change the monitor must catch.
+    assert_eq!(cfg.phases[0].trace_index, 3);
+    assert_eq!(cfg.phases[1].trace_index, 1);
+    assert!(cfg.phases[0].rate > cfg.phases[1].rate);
+    assert!(cfg.time_scale >= 1.0);
+}
+
+#[test]
+fn replay_smoke_runs_the_full_loop_without_drops() {
+    // The example config, shrunk for test runtime: fewer requests and
+    // heavier time compression, same drift shape.
+    let mut cfg = ReplayConfig::load(example_config_path()).unwrap();
+    cfg.phases[0].n_requests = 160;
+    cfg.phases[1].n_requests = 220;
+    cfg.time_scale = 60.0;
+    cfg.validate().unwrap();
+
+    let report = run_replay(&cfg).expect("replay must run end-to-end");
+    let total = cfg.phases.iter().map(|p| p.n_requests).sum::<usize>();
+
+    // The hot-swap contract: nothing dropped in either run.
+    assert_eq!(report.frozen.dropped, 0, "frozen run dropped requests");
+    assert_eq!(report.adaptive.dropped, 0, "adaptive run dropped requests");
+    assert_eq!(report.frozen.served, total);
+    assert_eq!(report.adaptive.served, total);
+
+    // The drift must be detected and re-scheduled on.
+    assert!(
+        report.adaptive.counters.drifts_detected >= 1,
+        "phase shift not detected: {}",
+        report.adaptive.counters
+    );
+    assert!(
+        report.adaptive.counters.reschedules >= 1,
+        "no re-schedule fired: {}",
+        report.adaptive.counters
+    );
+    assert!(report.final_plan.is_some(), "a re-scheduled plan must exist");
+    // `hot_swaps` holds the server-applied count; it can never exceed
+    // the number of plans the controller queued. (Whether the swap
+    // lands before serving ends is timing-dependent at this heavy
+    // compression, so >= 1 is asserted by `cascadia replay` on the
+    // full-scale config, not here.)
+    assert!(report.adaptive.counters.hot_swaps <= report.adaptive.counters.reschedules);
+
+    // Per-phase reporting covers every phase for both runs.
+    assert_eq!(report.frozen.phases.len(), 2);
+    assert_eq!(report.adaptive.phases.len(), 2);
+    for p in report.frozen.phases.iter().chain(&report.adaptive.phases) {
+        assert!(p.requests > 0);
+        assert!((0.0..=1.0).contains(&p.slo_attainment));
+        assert!(p.latency.p50 <= p.latency.p99);
+    }
+}

@@ -137,8 +137,8 @@ fn plan_json_roundtrips_into_serve_configs_for_all_families() {
 
         let fe = TcpFrontend::from_plan(&back, 8).unwrap();
         assert_eq!(fe.n_tiers, plan.tiers.len());
-        assert_eq!(fe.policy, plan.policy);
-        assert_eq!(fe.policy.label(), plan.policy.label());
+        assert_eq!(fe.policy(), plan.policy);
+        assert_eq!(fe.policy_label(), plan.policy.label());
     }
 }
 
