@@ -15,7 +15,7 @@
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
-use cascadia::coordinator::server::{CascadeServer, ServerConfig};
+use cascadia::coordinator::server::{CascadeServer, ExecMode, ServerConfig};
 use cascadia::report::{fmt_secs, Table};
 use cascadia::router::{PolicySpec, RoutingPolicy};
 use cascadia::runtime::{pjrt_factory, Manifest, TaskJudger};
@@ -87,12 +87,14 @@ fn main() -> Result<()> {
                 _ => vec![101.0, 101.0],
             })?,
             max_new_tokens: max_new,
+            exec: ExecMode::BatchLockstep,
         },
         None => ServerConfig {
             replicas: vec![2, 1, 1],
             max_batch: vec![4, 3, 2],
             policy: PolicySpec::threshold(vec![h1, h2])?,
             max_new_tokens: max_new,
+            exec: ExecMode::BatchLockstep,
         },
     };
     // Tiers with 0 replicas still spawn one worker; routing keeps them

@@ -9,6 +9,7 @@ use cascadia::coordinator::batcher::Batcher;
 use cascadia::coordinator::server::{
     CascadeServer, ResponseJudger, ServerConfig, TierBackend,
 };
+use cascadia::engine::{EngineConfig, EngineCore};
 use cascadia::judge::Judger;
 use cascadia::models::deepseek_cascade;
 use cascadia::router::{route, route_with, MarginPolicy, Thresholds};
@@ -59,11 +60,28 @@ fn main() {
         let mut done = 0usize;
         for i in 0..1000u32 {
             batcher.push(i, 0.0);
-            let n = batcher.admit().len();
+            let n = batcher.admit(0.0).len();
             if n > 0 {
                 batcher.complete(n);
                 done += n;
             }
+        }
+        done
+    });
+
+    // Continuous-engine overhead: pure scheduling/page accounting per
+    // iteration with an instant whole-request backend.
+    b.bench("engine submit+step 256 requests (instant backend)", || {
+        let mut engine: EngineCore<u32> = EngineCore::new(
+            Box::new(InstantBackend),
+            EngineConfig { pool_pages: 4096, page_tokens: 16, max_running: 32 },
+        );
+        for i in 0..256u32 {
+            engine.submit(i, vec![1, 2, 3], 4);
+        }
+        let mut done = 0usize;
+        while !engine.is_idle() {
+            done += engine.step().unwrap().completed.len();
         }
         done
     });

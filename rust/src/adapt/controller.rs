@@ -76,6 +76,15 @@ pub struct AdaptConfig {
     /// Run re-schedules synchronously on the observing thread instead
     /// of a background thread — deterministic, for tests.
     pub synchronous: bool,
+    /// Build swapped configurations for the continuous-batching engine
+    /// (`ServerConfig::from_plan_with_engine`): each hot-swap rescales
+    /// the per-tier KV pools to the new plan's parallelism. Should
+    /// match the exec mode the adapted server was launched with; a
+    /// mismatch is benign but suboptimal — the serve loop never
+    /// changes mode mid-run, so a lockstep config swapped onto a
+    /// continuous server leaves the KV pools at their last sizing
+    /// instead of retuning them to the new plan.
+    pub continuous_engine: bool,
 }
 
 impl Default for AdaptConfig {
@@ -85,6 +94,7 @@ impl Default for AdaptConfig {
             cache: CacheConfig::default(),
             max_new_tokens: 8,
             synchronous: false,
+            continuous_engine: false,
         }
     }
 }
@@ -216,7 +226,23 @@ impl AdaptController {
     }
 
     fn apply(&self, stats: TraceStats, plan: CascadePlan, from_cache: bool) {
-        match self.control.apply_plan(&plan, self.config.max_new_tokens) {
+        // The swapped configuration carries engine pool sizing when the
+        // server runs continuous — the hot-swap rescales the per-tier
+        // KV pools along with the policy and worker pools.
+        let built = if self.config.continuous_engine {
+            crate::coordinator::server::ServerConfig::from_plan_with_engine(
+                &plan,
+                &self.rescheduler.cascade,
+                &self.rescheduler.cluster,
+                self.config.max_new_tokens,
+            )
+        } else {
+            crate::coordinator::server::ServerConfig::from_plan(
+                &plan,
+                self.config.max_new_tokens,
+            )
+        };
+        match built.and_then(|cfg| self.control.apply_plan_config(&plan, cfg)) {
             Ok(()) => {
                 let reschedules = {
                     let mut m = self.monitor.lock().unwrap();

@@ -22,7 +22,8 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::monitor::MonitorConfig;
 use crate::coordinator::server::{
-    CascadeServer, ResponseJudger, ServeControl, ServerStats, TierBackend,
+    CascadeServer, ResponseJudger, ServeControl, ServerConfig, ServerStats, TierBackend,
+    TierEngineStats, TierQueueStats,
 };
 use crate::judge::Judger;
 use crate::metrics::{AdaptCounters, LatencySummary};
@@ -63,6 +64,11 @@ pub struct ReplayConfig {
     /// SLO bound on uncompressed end-to-end latency, seconds.
     pub slo_seconds: f64,
     pub max_new_tokens: usize,
+    /// Serve through the continuous-batching engine (paged KV pools
+    /// sized from the plan's parallelism; the replay reports per-tier
+    /// page occupancy and preemption counts). Set false to replay on
+    /// the legacy whole-batch lockstep loop.
+    pub continuous: bool,
     pub monitor: MonitorConfig,
     pub phases: Vec<PhaseConfig>,
 }
@@ -78,6 +84,7 @@ impl Default for ReplayConfig {
             time_scale: 20.0,
             slo_seconds: 20.0,
             max_new_tokens: 8,
+            continuous: true,
             monitor: MonitorConfig::default(),
             phases: vec![
                 PhaseConfig { trace_index: 3, rate: 60.0, n_requests: 500 },
@@ -120,6 +127,9 @@ impl ReplayConfig {
         }
         if let Some(v) = j.get("max_new_tokens") {
             c.max_new_tokens = v.as_usize()?;
+        }
+        if let Some(v) = j.get("continuous") {
+            c.continuous = v.as_bool()?;
         }
         if let Some(m) = j.get("monitor") {
             if let Some(v) = m.get("window") {
@@ -232,6 +242,12 @@ pub struct RunReport {
     /// hot-swap contract, not a counter that can silently go nonzero.
     pub dropped: usize,
     pub counters: AdaptCounters,
+    /// Per-tier queue telemetry (peak depth, mean admission wait —
+    /// uncompressed seconds).
+    pub queue: Vec<TierQueueStats>,
+    /// Per-tier continuous-engine telemetry (page occupancy,
+    /// preemptions; zeros when `continuous` is off).
+    pub engine: Vec<TierEngineStats>,
 }
 
 /// The frozen-vs-adaptive comparison.
@@ -353,6 +369,12 @@ fn score_run(
         served: stats.completions.len(),
         dropped: phased.requests.len() - stats.completions.len(),
         counters,
+        queue: stats
+            .queue
+            .iter()
+            .map(|q| TierQueueStats { mean_wait_s: q.mean_wait_s * cfg.time_scale, ..*q })
+            .collect(),
+        engine: stats.engine.clone(),
     }
 }
 
@@ -404,7 +426,16 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
         models: cascade.clone(),
         judger: judger.clone(),
     };
-    let server = CascadeServer::from_plan(&plan, cfg.max_new_tokens)?;
+    let server = if cfg.continuous {
+        CascadeServer::new(ServerConfig::from_plan_with_engine(
+            &plan,
+            &cascade,
+            &cluster,
+            cfg.max_new_tokens,
+        )?)?
+    } else {
+        CascadeServer::from_plan(&plan, cfg.max_new_tokens)?
+    };
 
     // --- Frozen run: the startup plan serves the whole drift. ---
     let stats_frozen = server
@@ -427,6 +458,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     let adapt_cfg = AdaptConfig {
         monitor: cfg.monitor.clone(),
         max_new_tokens: cfg.max_new_tokens,
+        continuous_engine: cfg.continuous,
         ..Default::default()
     };
     let speeds_swap = Arc::clone(&speeds);

@@ -5,7 +5,9 @@
 //! replica admits waiting requests up to its KV-capacity bound. The
 //! batcher is shared by the discrete-event simulator (implicitly, same
 //! policy) and the live serving engine; it preserves FIFO order within
-//! a tier and never exceeds `max_batch`.
+//! a tier and never exceeds `max_batch`. It also tracks the queue
+//! telemetry the server reports per tier: peak depth and mean
+//! admission wait.
 
 use std::collections::VecDeque;
 
@@ -27,12 +29,23 @@ pub struct Batcher<T> {
     in_flight: usize,
     /// Peak queue depth seen (diagnostics).
     pub peak_depth: usize,
+    /// Items admitted over the batcher's lifetime.
+    admitted: usize,
+    /// Total seconds admitted items spent queued.
+    wait_sum: f64,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize) -> Batcher<T> {
         assert!(max_batch > 0, "max_batch must be positive");
-        Batcher { queue: VecDeque::new(), max_batch, in_flight: 0, peak_depth: 0 }
+        Batcher {
+            queue: VecDeque::new(),
+            max_batch,
+            in_flight: 0,
+            peak_depth: 0,
+            admitted: 0,
+            wait_sum: 0.0,
+        }
     }
 
     pub fn push(&mut self, item: T, now: f64) {
@@ -41,30 +54,41 @@ impl<T> Batcher<T> {
     }
 
     /// Admit as many items as capacity allows; returns them in FIFO
-    /// order and marks them in-flight.
-    pub fn admit(&mut self) -> Vec<Pending<T>> {
-        self.admit_up_to(usize::MAX)
+    /// order and marks them in-flight. `now` (caller's clock, same as
+    /// `push`) feeds the queue-wait telemetry.
+    pub fn admit(&mut self, now: f64) -> Vec<Pending<T>> {
+        self.admit_up_to(usize::MAX, now)
     }
 
-    /// Admit at most `cap` items (never beyond the KV-capacity bound).
-    /// The serving engine uses this to spread admission across a
-    /// tier's replicas — one replica must not drain the whole queue
-    /// into a serial batch while its siblings idle, or the pool size
-    /// (the hot-swap capacity lever) stops mattering.
-    pub fn admit_up_to(&mut self, cap: usize) -> Vec<Pending<T>> {
+    /// Admit at most `cap` items (never beyond the KV-capacity bound);
+    /// `cap == 0` is an explicit no-op. The serving engine uses the cap
+    /// to spread admission across a tier's replicas — one replica must
+    /// not drain the whole queue into a serial batch while its siblings
+    /// idle, or the pool size (the hot-swap capacity lever) stops
+    /// mattering.
+    pub fn admit_up_to(&mut self, cap: usize, now: f64) -> Vec<Pending<T>> {
+        if cap == 0 {
+            return Vec::new();
+        }
         let mut out = Vec::new();
         while self.in_flight < self.max_batch && out.len() < cap {
             let Some(p) = self.queue.pop_front() else { break };
             self.in_flight += 1;
+            self.admitted += 1;
+            self.wait_sum += (now - p.enqueued_at).max(0.0);
             out.push(p);
         }
         out
     }
 
-    /// Mark `n` in-flight items complete, freeing capacity.
-    pub fn complete(&mut self, n: usize) {
-        assert!(n <= self.in_flight, "completing more than in flight");
-        self.in_flight -= n;
+    /// Mark up to `n` in-flight items complete, freeing capacity.
+    /// Saturates at the in-flight count (a release server must not
+    /// abort on a miscounting worker) and returns how many were
+    /// actually completed.
+    pub fn complete(&mut self, n: usize) -> usize {
+        let done = n.min(self.in_flight);
+        self.in_flight -= done;
+        done
     }
 
     pub fn queued(&self) -> usize {
@@ -78,6 +102,21 @@ impl<T> Batcher<T> {
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.in_flight == 0
     }
+
+    /// Items admitted over the batcher's lifetime.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Mean seconds admitted items spent queued (0 when nothing was
+    /// admitted yet).
+    pub fn mean_wait(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.wait_sum / self.admitted as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,12 +129,12 @@ mod tests {
         for i in 0..5 {
             b.push(i, i as f64);
         }
-        let first = b.admit();
+        let first = b.admit(5.0);
         assert_eq!(first.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1]);
         // Nothing more fits until completion.
-        assert!(b.admit().is_empty());
-        b.complete(1);
-        let next = b.admit();
+        assert!(b.admit(5.0).is_empty());
+        assert_eq!(b.complete(1), 1);
+        let next = b.admit(5.0);
         assert_eq!(next[0].item, 2);
     }
 
@@ -105,11 +144,11 @@ mod tests {
         for i in 0..10 {
             b.push(i, 0.0);
         }
-        let a = b.admit();
+        let a = b.admit(0.0);
         assert_eq!(a.len(), 3);
         assert_eq!(b.in_flight(), 3);
         b.complete(3);
-        assert_eq!(b.admit().len(), 3);
+        assert_eq!(b.admit(0.0).len(), 3);
     }
 
     #[test]
@@ -119,15 +158,25 @@ mod tests {
             b.push(i, 0.0);
         }
         // Two callers splitting a 4-slot tier: each gets its share.
-        let a = b.admit_up_to(2);
+        let a = b.admit_up_to(2, 0.0);
         assert_eq!(a.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1]);
-        let c = b.admit_up_to(2);
+        let c = b.admit_up_to(2, 0.0);
         assert_eq!(c.iter().map(|p| p.item).collect::<Vec<_>>(), vec![2, 3]);
         // Capacity bound still holds.
-        assert!(b.admit_up_to(2).is_empty());
+        assert!(b.admit_up_to(2, 0.0).is_empty());
         assert_eq!(b.in_flight(), 4);
         b.complete(4);
-        assert_eq!(b.admit_up_to(10).len(), 2);
+        assert_eq!(b.admit_up_to(10, 0.0).len(), 2);
+    }
+
+    #[test]
+    fn zero_cap_is_a_noop() {
+        let mut b = Batcher::new(4);
+        b.push(1, 0.0);
+        assert!(b.admit_up_to(0, 1.0).is_empty());
+        assert_eq!(b.queued(), 1);
+        assert_eq!(b.in_flight(), 0);
+        assert_eq!(b.admitted(), 0, "a zero-cap call must not touch telemetry");
     }
 
     #[test]
@@ -137,15 +186,40 @@ mod tests {
             b.push(i, 0.0);
         }
         assert_eq!(b.peak_depth, 4);
-        b.admit();
+        b.admit(0.0);
         assert_eq!(b.queued(), 3);
     }
 
     #[test]
-    #[should_panic(expected = "completing more than in flight")]
-    fn over_completion_panics() {
-        let mut b: Batcher<u32> = Batcher::new(1);
+    fn over_completion_saturates_instead_of_panicking() {
+        let mut b: Batcher<u32> = Batcher::new(2);
+        assert_eq!(b.complete(1), 0, "nothing in flight: nothing completed");
+        b.push(1, 0.0);
+        b.admit(0.0);
+        assert_eq!(b.complete(5), 1, "completion saturates at the in-flight count");
+        assert_eq!(b.in_flight(), 0);
+        assert_eq!(b.complete(1), 0);
+    }
+
+    #[test]
+    fn queue_wait_telemetry() {
+        let mut b = Batcher::new(2);
+        b.push(1, 10.0);
+        b.push(2, 10.0);
+        b.push(3, 11.0);
+        let a = b.admit(12.0); // items 1, 2 waited 2s each
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.admitted(), 2);
+        assert!((b.mean_wait() - 2.0).abs() < 1e-12);
+        b.complete(2);
+        b.admit(14.0); // item 3 waited 3s
+        assert_eq!(b.admitted(), 3);
+        assert!((b.mean_wait() - 7.0 / 3.0).abs() < 1e-12);
+        // A clock running behind enqueue stamps never goes negative.
+        b.push(4, 100.0);
         b.complete(1);
+        b.admit(0.0);
+        assert!(b.mean_wait() >= 0.0);
     }
 
     #[test]
@@ -154,7 +228,7 @@ mod tests {
         assert!(b.is_idle());
         b.push(1, 0.0);
         assert!(!b.is_idle());
-        b.admit();
+        b.admit(0.0);
         assert!(!b.is_idle());
         b.complete(1);
         assert!(b.is_idle());

@@ -12,16 +12,28 @@
 //! scheduler optimized (§3.3), now on the real request path.
 //! [`ServerConfig::from_plan`] derives the whole configuration from a
 //! scheduler-produced [`CascadePlan`].
+//!
+//! Worker inner loops run in one of two disciplines ([`ExecMode`]):
+//! whole-batch lockstep (the measurable baseline), or the
+//! continuous-batching execution engine ([`crate::engine`]) — requests
+//! admitted and retired at decode-iteration granularity against paged
+//! KV pools sized from the plan's own cost model
+//! ([`ServerConfig::from_plan_with_engine`]), with per-tier queue and
+//! page-occupancy telemetry on [`ServerStats`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::cluster::ClusterSpec;
 use crate::coordinator::batcher::Batcher;
+use crate::engine::{EngineConfig, EngineCore, StepBackend};
+use crate::models::ModelSpec;
+use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
 use crate::util::stats;
@@ -30,6 +42,15 @@ use crate::util::stats;
 pub trait TierBackend {
     /// Greedy-decode up to `max_new` tokens after `prompt`.
     fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>>;
+
+    /// Iteration-granular stepping interface, when the backend has one
+    /// (see [`crate::engine::StepBackend`]). The continuous-batching
+    /// engine probes this: a `Some` backend is stepped token-by-token;
+    /// a `None` backend keeps working unchanged — its whole-request
+    /// `generate` is adapted at the engine's prefill boundary.
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        None
+    }
 }
 
 /// Scores a (prompt, output) pair in [0, 100]. Shared across threads.
@@ -60,8 +81,11 @@ pub trait AdmissionObserver: Send + Sync {
 /// the routing policy is swapped atomically, per-tier admission bounds
 /// are rescaled, and worker pools are resized — all without dropping
 /// in-flight requests. Scale-up spawns workers immediately; scale-down
-/// retires surplus workers only at batch boundaries, so a worker never
-/// abandons admitted work.
+/// retires surplus workers at their next safe boundary (a lockstep
+/// worker's batch end; a continuous worker's first idle iteration
+/// boundary), so a worker never abandons admitted work. Continuous
+/// servers additionally rescale their per-tier KV pools from the
+/// swapped config's engine sizing.
 pub struct ServeControl {
     n_tiers: usize,
     /// The plan the server was launched from, when known: hot-swaps
@@ -101,6 +125,13 @@ impl ServeControl {
     /// Queue a scheduler plan for hot-swap into the running server.
     /// Fails fast if the plan does not cover the running cascade.
     pub fn apply_plan(&self, plan: &CascadePlan, max_new_tokens: usize) -> Result<()> {
+        self.apply_plan_config(plan, ServerConfig::from_plan(plan, max_new_tokens)?)
+    }
+
+    /// Queue a pre-built configuration derived from `plan` (e.g.
+    /// [`ServerConfig::from_plan_with_engine`]) with the same
+    /// cascade-identity check as [`ServeControl::apply_plan`].
+    pub fn apply_plan_config(&self, plan: &CascadePlan, config: ServerConfig) -> Result<()> {
         if let Some(reference) = &self.reference {
             if !reference.hot_swappable_with(plan) {
                 anyhow::bail!(
@@ -120,7 +151,7 @@ impl ServeControl {
                 );
             }
         }
-        self.apply_config(ServerConfig::from_plan(plan, max_new_tokens)?)
+        self.apply_config(config)
     }
 
     /// Queue a raw server configuration for hot-swap. The config must
@@ -132,6 +163,15 @@ impl ServeControl {
                 config.replicas.len(),
                 self.n_tiers
             );
+        }
+        if let ExecMode::Continuous(engines) = &config.exec {
+            if engines.len() != self.n_tiers {
+                anyhow::bail!(
+                    "hot-swap engine configs cover {} tiers but the server runs {}",
+                    engines.len(),
+                    self.n_tiers
+                );
+            }
         }
         config.policy.validate(self.n_tiers)?;
         *self.pending.lock().unwrap() = Some(config);
@@ -176,6 +216,138 @@ fn try_retire(alive: &AtomicUsize, target: &AtomicUsize) -> bool {
     }
 }
 
+/// Per-tier continuous-engine telemetry, aggregated across that tier's
+/// workers as they iterate.
+#[derive(Default)]
+struct EngineTierCounters {
+    peak_pool_pages: AtomicUsize,
+    peak_pages: AtomicUsize,
+    preemptions: AtomicUsize,
+    iterations: AtomicUsize,
+    forced_expansions: AtomicUsize,
+}
+
+/// The continuous-batching inner loop of one tier worker: admit from
+/// the tier batcher at every decode-iteration boundary, step the
+/// engine one iteration, and retire finished requests to the router —
+/// short requests overtake long batchmates instead of waiting out a
+/// whole-batch lockstep.
+///
+/// Hot-swap semantics: the live pool size is re-read every iteration
+/// (scale-down takes effect as sequences retire), and a surplus worker
+/// (after a replica scale-down) stops admitting and retires at the
+/// first iteration boundary where its running set has drained — not at
+/// a whole-batch boundary, and never abandoning admitted work.
+#[allow(clippy::too_many_arguments)]
+fn continuous_worker_loop(
+    tier: usize,
+    backend: Box<dyn TierBackend>,
+    cfg: EngineConfig,
+    pool_pages: &AtomicUsize,
+    counters: &EngineTierCounters,
+    tier_state: &TierState,
+    alive: &AtomicUsize,
+    target: &AtomicUsize,
+    tx: Sender<RouterMsg>,
+    max_new: &AtomicUsize,
+    t0: Instant,
+) {
+    let mut engine: EngineCore<LiveRequest> = EngineCore::new(backend, cfg);
+    loop {
+        // Pick up a hot-swapped pool size at the iteration boundary.
+        let budget = pool_pages.load(Ordering::SeqCst).max(1);
+        engine.set_pool_pages(budget);
+        counters.peak_pool_pages.fetch_max(budget, Ordering::SeqCst);
+        // Admission (or, when idle, wait for work / shutdown / retire).
+        {
+            let mut b = tier_state.batcher.lock().unwrap();
+            loop {
+                let surplus = alive.load(Ordering::SeqCst) > target.load(Ordering::SeqCst);
+                if !surplus {
+                    let pool = alive.load(Ordering::SeqCst).max(1);
+                    let share = (b.max_batch / pool).max(1);
+                    let room = share.saturating_sub(engine.n_seqs());
+                    for p in b.admit_up_to(room, t0.elapsed().as_secs_f64()) {
+                        let prompt = p.item.prompt.clone();
+                        let mn = max_new.load(Ordering::SeqCst).max(1);
+                        engine.submit(p.item, prompt, mn);
+                    }
+                }
+                if !engine.is_idle() {
+                    break;
+                }
+                if tier_state.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Idle = an iteration boundary with nothing running:
+                // the continuous engine's retirement point.
+                if try_retire(alive, target) {
+                    return;
+                }
+                b = tier_state.wake.wait(b).unwrap();
+            }
+        }
+        // One decode iteration. Panics in the backend are contained
+        // exactly like the lockstep path's.
+        let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.step()))
+            .unwrap_or_else(|p| {
+                Err(anyhow::anyhow!("backend panicked: {}", panic_msg(&*p)))
+            });
+        match step {
+            Ok(out) => {
+                counters.iterations.fetch_add(1, Ordering::SeqCst);
+                counters.peak_pages.fetch_max(out.pages_in_use, Ordering::SeqCst);
+                counters.preemptions.fetch_add(out.preempted, Ordering::SeqCst);
+                counters
+                    .forced_expansions
+                    .fetch_add(out.forced_expansions, Ordering::SeqCst);
+                if !out.completed.is_empty() {
+                    let n = out.completed.len();
+                    for fin in out.completed {
+                        let _ = tx.send(RouterMsg::Done {
+                            tier,
+                            req: fin.payload,
+                            output: fin.output,
+                            exec_seconds: fin.exec_seconds,
+                        });
+                    }
+                    tier_state.batcher.lock().unwrap().complete(n);
+                    tier_state.wake.notify_all();
+                }
+            }
+            Err(e) => {
+                // Replica death: hand every in-engine request back to
+                // the router (none completed this step — exactly-once
+                // is preserved), release batch capacity, and exit.
+                let leftovers = engine.drain();
+                let n = leftovers.len();
+                for req in leftovers {
+                    let _ = tx.send(RouterMsg::Failed { tier, req });
+                }
+                alive.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx.send(RouterMsg::WorkerDead { tier, err: e.to_string() });
+                tier_state.batcher.lock().unwrap().complete(n);
+                tier_state.wake.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// How a tier worker's inner loop executes its admitted work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Whole-batch lockstep: a worker admits a batch, runs every
+    /// request to completion, and only then admits more — the
+    /// pre-engine discipline, kept as the measurable baseline.
+    BatchLockstep,
+    /// Iteration-granular continuous batching through
+    /// [`crate::engine::EngineCore`], one entry per tier sizing each
+    /// replica's paged KV pool. Requests join and leave the running
+    /// batch at decode-iteration boundaries.
+    Continuous(Vec<EngineConfig>),
+}
+
 /// Server configuration: one entry per tier, in cascade order.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -188,6 +360,9 @@ pub struct ServerConfig {
     pub policy: PolicySpec,
     /// Max tokens to generate per request.
     pub max_new_tokens: usize,
+    /// Worker inner-loop discipline. The mode is fixed for a run; a
+    /// hot-swapped config only retunes the continuous pools.
+    pub exec: ExecMode,
 }
 
 impl ServerConfig {
@@ -203,7 +378,15 @@ impl ServerConfig {
             max_batch,
             policy: PolicySpec::threshold(thresholds)?,
             max_new_tokens,
+            exec: ExecMode::BatchLockstep,
         })
+    }
+
+    /// Switch this configuration to the continuous-batching engine
+    /// with per-tier pool sizing.
+    pub fn continuous(mut self, engines: Vec<EngineConfig>) -> ServerConfig {
+        self.exec = ExecMode::Continuous(engines);
+        self
     }
 
     /// Derive a serving configuration from a scheduler-produced plan:
@@ -228,7 +411,46 @@ impl ServerConfig {
             max_batch,
             policy: plan.policy.clone(),
             max_new_tokens,
+            exec: ExecMode::BatchLockstep,
         })
+    }
+
+    /// Like [`ServerConfig::from_plan`], but workers run the
+    /// continuous-batching engine with per-replica KV pools sized from
+    /// the plan's own parallelism under the scheduler's cost model
+    /// ([`ReplicaModel::kv_pages_total`]) — the plan's memory terms and
+    /// the runtime's page accounting agree by construction. Undeployed
+    /// tiers get a nominal pool.
+    pub fn from_plan_with_engine(
+        plan: &CascadePlan,
+        cascade: &[ModelSpec],
+        cluster: &ClusterSpec,
+        max_new_tokens: usize,
+    ) -> Result<ServerConfig> {
+        if cascade.len() != plan.tiers.len() {
+            anyhow::bail!(
+                "cascade has {} models but the plan covers {} tiers",
+                cascade.len(),
+                plan.tiers.len()
+            );
+        }
+        let cfg = Self::from_plan(plan, max_new_tokens)?;
+        let engines: Vec<EngineConfig> = plan
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let avg_ctx = (t.workload.avg_input + t.workload.avg_output).max(64.0);
+                match t.strategy.as_ref().and_then(|s| s.groups.first()) {
+                    Some(g) => {
+                        let rm = ReplicaModel::from_group(&cascade[i], cluster, g, avg_ctx);
+                        EngineConfig::for_replica(&rm, DEFAULT_PAGE_TOKENS)
+                    }
+                    None => EngineConfig::nominal(DEFAULT_PAGE_TOKENS),
+                }
+            })
+            .collect();
+        Ok(cfg.continuous(engines))
     }
 }
 
@@ -252,12 +474,51 @@ pub struct Completion {
     pub queue_latency: Duration,
 }
 
+/// Queue telemetry of one tier's batcher over a run (the counters the
+/// batcher always tracked but never reported).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierQueueStats {
+    /// Peak queue depth seen.
+    pub peak_depth: usize,
+    /// Items admitted over the run.
+    pub admitted: usize,
+    /// Mean seconds admitted items spent queued.
+    pub mean_wait_s: f64,
+}
+
+/// Continuous-engine telemetry of one tier, aggregated across its
+/// workers (all-zero under [`ExecMode::BatchLockstep`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierEngineStats {
+    /// Configured KV pages per replica pool (post-swap value).
+    pub pool_pages: usize,
+    /// Largest configured pool budget in force at any iteration of the
+    /// run. Occupancy invariants compare against THIS, not
+    /// `pool_pages`: a pool-shrinking hot-swap legitimately leaves
+    /// `peak_pages` above the final budget while sequences admitted
+    /// under the old budget drain.
+    pub peak_pool_pages: usize,
+    /// Peak pages any one replica had allocated in an iteration.
+    pub peak_pages: usize,
+    /// Sequences preempted-and-requeued on pool exhaustion.
+    pub preemptions: usize,
+    /// Decode iterations executed (all replicas).
+    pub iterations: usize,
+    /// Forced pool expansions (pool smaller than one sequence) — 0 in
+    /// any sanely sized deployment.
+    pub forced_expansions: usize,
+}
+
 /// Aggregate statistics of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub completions: Vec<Completion>,
     pub wall_clock: Duration,
     pub per_tier_processed: Vec<usize>,
+    /// Per-tier queue telemetry.
+    pub queue: Vec<TierQueueStats>,
+    /// Per-tier continuous-engine telemetry (zeros under lockstep).
+    pub engine: Vec<TierEngineStats>,
 }
 
 impl ServerStats {
@@ -348,6 +609,20 @@ impl CascadeServer {
                 config.max_batch.len()
             );
         }
+        if let ExecMode::Continuous(engines) = &config.exec {
+            if engines.len() != config.replicas.len() {
+                anyhow::bail!(
+                    "engine configs cover {} tiers but the server runs {}",
+                    engines.len(),
+                    config.replicas.len()
+                );
+            }
+            for (t, e) in engines.iter().enumerate() {
+                if e.pool_pages == 0 || e.page_tokens == 0 || e.max_running == 0 {
+                    anyhow::bail!("tier {t}: engine pool/page/batch sizes must be positive");
+                }
+            }
+        }
         config.policy.validate(config.replicas.len())?;
         Ok(CascadeServer { config })
     }
@@ -412,6 +687,18 @@ impl CascadeServer {
             .iter()
             .map(|&mb| TierState::new(mb.max(1)))
             .collect();
+        // Continuous-engine state: per-tier live pool sizes (the
+        // hot-swap lever — workers re-read them at every iteration
+        // boundary) and the telemetry the run reports.
+        let engine_mode: Option<&[EngineConfig]> = match &self.config.exec {
+            ExecMode::Continuous(v) => Some(v.as_slice()),
+            ExecMode::BatchLockstep => None,
+        };
+        let pool_pages_live: Vec<AtomicUsize> = (0..c)
+            .map(|t| AtomicUsize::new(engine_mode.map(|v| v[t].pool_pages).unwrap_or(0)))
+            .collect();
+        let engine_counters: Vec<EngineTierCounters> =
+            (0..c).map(|_| EngineTierCounters::default()).collect();
         // Swappable routing/pool state: the policy the submitter and
         // router consult, and the per-tier live/target worker counts
         // the pools converge to after a hot-swap.
@@ -433,6 +720,8 @@ impl CascadeServer {
             let target = &target;
             let tiers_ref = &tiers;
             let max_new = &max_new_live;
+            let pool_live_ref = &pool_pages_live;
+            let engine_ctr_ref = &engine_counters;
             let spawn_worker = |tier: usize| {
                 let tier_state = &tiers_ref[tier];
                 let tx = tx.clone();
@@ -459,6 +748,24 @@ impl CascadeServer {
                             return;
                         }
                     };
+                    // Continuous mode hands the worker's inner loop to
+                    // the paged iteration engine.
+                    if let Some(engines) = engine_mode {
+                        continuous_worker_loop(
+                            tier,
+                            backend,
+                            engines[tier],
+                            &pool_live_ref[tier],
+                            &engine_ctr_ref[tier],
+                            tier_state,
+                            &alive[tier],
+                            &target[tier],
+                            tx,
+                            max_new,
+                            t0,
+                        );
+                        return;
+                    }
                     loop {
                         // Retire at batch boundaries if the pool shrank
                         // (a worker never abandons admitted work).
@@ -480,7 +787,8 @@ impl CascadeServer {
                                 // sliver of it.
                                 let pool = alive[tier].load(Ordering::SeqCst).max(1);
                                 let share = (b.max_batch / pool).max(1);
-                                let admitted = b.admit_up_to(share);
+                                let admitted =
+                                    b.admit_up_to(share, t0.elapsed().as_secs_f64());
                                 if !admitted.is_empty() {
                                     break admitted;
                                 }
@@ -603,6 +911,22 @@ impl CascadeServer {
                             tiers[t].batcher.lock().unwrap().max_batch = mb.max(1);
                             tiers[t].wake.notify_all();
                         }
+                        // Rescale the continuous KV pools: workers pick
+                        // the new size up at their next iteration
+                        // boundary (scale-down takes effect as
+                        // sequences retire — nothing in flight is
+                        // dropped). The exec *mode* never changes
+                        // mid-run; a lockstep config swapped onto a
+                        // continuous server leaves the pools as they
+                        // are.
+                        if engine_mode.is_some() {
+                            if let ExecMode::Continuous(next_engines) = &next.exec {
+                                for (t, e) in next_engines.iter().enumerate().take(c) {
+                                    pool_pages_live[t]
+                                        .store(e.pool_pages.max(1), Ordering::SeqCst);
+                                }
+                            }
+                        }
                         for t in 0..c {
                             let want = next.replicas[t].max(1);
                             target[t].store(want, Ordering::SeqCst);
@@ -711,10 +1035,38 @@ impl CascadeServer {
                     worker_errors
                 );
             }
+            let queue: Vec<TierQueueStats> = tiers
+                .iter()
+                .map(|t| {
+                    let b = t.batcher.lock().unwrap();
+                    TierQueueStats {
+                        peak_depth: b.peak_depth,
+                        admitted: b.admitted(),
+                        mean_wait_s: b.mean_wait(),
+                    }
+                })
+                .collect();
+            let engine: Vec<TierEngineStats> = (0..c)
+                .map(|t| TierEngineStats {
+                    pool_pages: pool_pages_live[t].load(Ordering::SeqCst),
+                    peak_pool_pages: engine_counters[t]
+                        .peak_pool_pages
+                        .load(Ordering::SeqCst)
+                        .max(pool_pages_live[t].load(Ordering::SeqCst)),
+                    peak_pages: engine_counters[t].peak_pages.load(Ordering::SeqCst),
+                    preemptions: engine_counters[t].preemptions.load(Ordering::SeqCst),
+                    iterations: engine_counters[t].iterations.load(Ordering::SeqCst),
+                    forced_expansions: engine_counters[t]
+                        .forced_expansions
+                        .load(Ordering::SeqCst),
+                })
+                .collect();
             Ok(ServerStats {
                 completions,
                 wall_clock: t0.elapsed(),
                 per_tier_processed: per_tier,
+                queue,
+                engine,
             })
         })?;
 
@@ -920,6 +1272,7 @@ mod tests {
             max_batch: vec![4, 4],
             policy: PolicySpec::length(vec![0.0], 5.0, 1).unwrap(),
             max_new_tokens: 4,
+            exec: ExecMode::BatchLockstep,
         })
         .unwrap();
         let mut trace: Vec<(f64, Vec<i32>)> = Vec::new();
@@ -948,6 +1301,7 @@ mod tests {
             max_batch: vec![2, 2, 2],
             policy: PolicySpec::margin(vec![80.0, 80.0], 5.0).unwrap(),
             max_new_tokens: 4,
+            exec: ExecMode::BatchLockstep,
         })
         .unwrap();
         let trace: Vec<(f64, Vec<i32>)> = (0..8).map(|_| (0.0, vec![2, 9])).collect();
@@ -1136,7 +1490,222 @@ mod tests {
             max_batch: vec![2, 2, 2],
             policy: PolicySpec::threshold(vec![50.0]).unwrap(),
             max_new_tokens: 2,
+            exec: ExecMode::BatchLockstep,
         });
         assert!(err.is_err());
+    }
+
+    // ---- Continuous-batching engine on the live path ----
+
+    fn engine_cfgs(n: usize) -> Vec<EngineConfig> {
+        vec![EngineConfig { pool_pages: 256, page_tokens: 16, max_running: 8 }; n]
+    }
+
+    fn continuous_config() -> ServerConfig {
+        config().continuous(engine_cfgs(2))
+    }
+
+    #[test]
+    fn continuous_mode_serves_all_and_routes_identically() {
+        let server = CascadeServer::new(continuous_config()).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..20).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 20);
+        assert_eq!(stats.per_tier_processed[0], 20);
+        assert_eq!(stats.per_tier_processed[1], 10);
+        for c in &stats.completions {
+            let expect_tier = (trace[c.id].1[0]) as usize;
+            assert_eq!(c.accepting_tier, expect_tier, "req {}", c.id);
+        }
+        // Engine telemetry is live: iterations ran, pages were used,
+        // and occupancy stayed within the pool budget.
+        for (t, e) in stats.engine.iter().enumerate() {
+            assert!(e.iterations > 0, "tier {t} must iterate");
+            assert!(e.peak_pages > 0, "tier {t} must allocate pages");
+            assert!(e.peak_pages <= e.peak_pool_pages, "tier {t} exceeded its pool");
+            assert_eq!(e.forced_expansions, 0);
+        }
+    }
+
+    #[test]
+    fn lockstep_engine_stats_are_zero_but_queue_stats_report() {
+        let server = CascadeServer::new(config()).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..12).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.engine.len(), 2);
+        assert!(stats.engine.iter().all(|e| *e == TierEngineStats::default()));
+        assert_eq!(stats.queue.len(), 2);
+        assert_eq!(stats.queue[0].admitted, 12, "tier 0 admits every request");
+        assert!(stats.queue[0].peak_depth > 0);
+        assert!(stats.queue[0].mean_wait_s >= 0.0);
+    }
+
+    #[test]
+    fn continuous_mode_contains_backend_failures() {
+        use std::sync::atomic::AtomicUsize;
+        static SPAWNED_C: AtomicUsize = AtomicUsize::new(0);
+
+        struct DyingBackend {
+            dies: bool,
+            inner: FakeBackend,
+        }
+        impl TierBackend for DyingBackend {
+            fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+                if self.dies {
+                    anyhow::bail!("simulated replica crash");
+                }
+                self.inner.generate(prompt, max_new)
+            }
+        }
+
+        let factory = |tier: usize| -> Result<Box<dyn TierBackend>> {
+            let idx = SPAWNED_C.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(DyingBackend {
+                dies: tier == 0 && idx == 0,
+                inner: FakeBackend { tier, delay: Duration::from_millis(1) },
+            }))
+        };
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![2, 1], vec![2, 2], vec![50.0], 2)
+                .unwrap()
+                .continuous(engine_cfgs(2)),
+        )
+        .unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..10).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 10, "failed work re-routes, exactly once");
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn continuous_hot_swap_scales_down_at_iteration_boundaries() {
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![3, 2], vec![4, 4], vec![50.0], 4)
+                .unwrap()
+                .continuous(engine_cfgs(2)),
+        )
+        .unwrap();
+        let control = ServeControl::new(2);
+        // Scale down workers AND halve the pools.
+        let next = ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 4)
+            .unwrap()
+            .continuous(vec![
+                EngineConfig { pool_pages: 128, page_tokens: 16, max_running: 8 };
+                2
+            ]);
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 8,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..30).map(|i| (0.0, vec![(i % 2) as i32])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 30, "no drops across the swap");
+        assert_eq!(control.hot_swaps(), 1);
+        // The swapped pool size is what the run reports, while the
+        // occupancy invariant is judged against the largest budget in
+        // force during the run (the pre-swap 256).
+        assert!(stats.engine.iter().all(|e| e.pool_pages == 128));
+        assert!(stats.engine.iter().all(|e| e.peak_pool_pages == 256));
+        assert!(stats.engine.iter().all(|e| e.peak_pages <= e.peak_pool_pages));
+    }
+
+    #[test]
+    fn continuous_tight_pool_preempts_but_completes_everything() {
+        // 4-page pools, 17-token prompts (2 pages at admission), 20
+        // generated tokens: two co-running sequences collide when the
+        // older one grows its 3rd page (ctx 33), so the engine must
+        // preempt-and-requeue — and still complete every request
+        // exactly once within the page budget.
+        struct LongBackend;
+        impl TierBackend for LongBackend {
+            fn generate(&mut self, _p: &[i32], max_new: usize) -> Result<Vec<i32>> {
+                Ok(vec![1; max_new])
+            }
+        }
+        let long_factory =
+            |_t: usize| -> Result<Box<dyn TierBackend>> { Ok(Box::new(LongBackend)) };
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![4, 4], vec![50.0], 20)
+                .unwrap()
+                .continuous(vec![
+                    EngineConfig { pool_pages: 4, page_tokens: 16, max_running: 4 };
+                    2
+                ]),
+        )
+        .unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..6).map(|_| (0.0, vec![1; 17])).collect();
+        let stats = server.serve(&trace, &long_factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 6);
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>(), "exactly-once under preemption");
+        let e = &stats.engine[0];
+        assert!(e.preemptions > 0, "the tight pool must preempt: {e:?}");
+        assert!(e.peak_pages <= e.peak_pool_pages, "budget must hold even under preemption");
+        assert_eq!(e.forced_expansions, 0);
+    }
+
+    #[test]
+    fn from_plan_with_engine_sizes_pools_from_the_cost_model() {
+        use crate::cluster::ClusterSpec;
+        use crate::models::llama_cascade;
+        use crate::parallel::Strategy;
+        use crate::perf::Workload;
+        use crate::sched::plan::TierPlan;
+
+        let cascade = llama_cascade();
+        let plan = CascadePlan {
+            policy: PolicySpec::threshold(vec![50.0]).unwrap(),
+            tiers: vec![
+                TierPlan {
+                    model_name: cascade[0].name.to_string(),
+                    gpus: 2,
+                    strategy: Some(Strategy::uniform(1, 1, 2)),
+                    workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
+                    processing_ratio: 1.0,
+                    predicted_p95: 1.0,
+                },
+                TierPlan {
+                    model_name: cascade[1].name.to_string(),
+                    gpus: 0,
+                    strategy: None,
+                    workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
+                    processing_ratio: 0.0,
+                    predicted_p95: 0.0,
+                },
+            ],
+            predicted_latency: 1.0,
+            predicted_quality: 80.0,
+        };
+        let cfg = ServerConfig::from_plan_with_engine(
+            &plan,
+            &cascade,
+            &ClusterSpec::paper_testbed(),
+            6,
+        )
+        .unwrap();
+        let ExecMode::Continuous(engines) = &cfg.exec else {
+            panic!("engine mode expected");
+        };
+        assert_eq!(engines.len(), 2);
+        assert!(engines[0].pool_pages > 1000, "a deployed 8B tier has a deep pool");
+        assert!(engines[1].pool_pages > 0, "undeployed tiers get a nominal pool");
+        CascadeServer::new(cfg).unwrap();
+        // Arity mismatch is rejected.
+        assert!(ServerConfig::from_plan_with_engine(
+            &plan,
+            &cascade[..1],
+            &ClusterSpec::paper_testbed(),
+            6
+        )
+        .is_err());
     }
 }

@@ -1,0 +1,540 @@
+//! The continuous-batching execution core: one engine per worker
+//! thread, driving its tier backend at decode-iteration granularity.
+//!
+//! [`EngineCore`] replaces the serving engine's whole-batch inner loop
+//! (see [`crate::coordinator::server`]): requests are submitted at any
+//! time, every [`EngineCore::step`] call runs ONE iteration planned by
+//! the [`IterationScheduler`] against the paged [`KvPool`], and
+//! finished sequences come back with their full output. Short requests
+//! no longer wait for long batchmates, and the KV budget is enforced
+//! token-by-token instead of as a static request count.
+//!
+//! Backends plug in behind the existing
+//! [`TierBackend`](crate::coordinator::server::TierBackend) trait. A
+//! backend that can step token-by-token exposes a [`StepBackend`]
+//! through `TierBackend::step_backend` (the calibrated simulated
+//! backends do — their decode cost is
+//! [`crate::perf::ReplicaModel::decode_iteration`] at the live batch
+//! size). A whole-request backend is adapted transparently: its
+//! `generate` runs at prefill and the engine releases the cached
+//! tokens one iteration at a time, so KV-page accounting, admission
+//! order, and preemption behave identically either way.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::server::TierBackend;
+use crate::perf::ReplicaModel;
+
+use super::kv::{KvPool, SeqId};
+use super::scheduler::IterationScheduler;
+
+/// Iteration-granular generation interface. One instance per worker,
+/// obtained through `TierBackend::step_backend`.
+pub trait StepBackend {
+    /// Process `prompt` for a new sequence and return its first
+    /// generated token. A preempted sequence is prefilled again on
+    /// re-admission (recompute semantics).
+    fn prefill(&mut self, seq: SeqId, prompt: &[i32]) -> Result<i32>;
+
+    /// Advance every listed sequence one decode token; returns exactly
+    /// one token per sequence, in order. `seqs.len()` is the live
+    /// batch size — cost models key off it.
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>>;
+
+    /// Drop all state for `seq` (completed or preempted).
+    fn release(&mut self, seq: SeqId);
+}
+
+/// Sizing of one worker's engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// KV pages in this replica's pool.
+    pub pool_pages: usize,
+    /// Tokens per KV page.
+    pub page_tokens: usize,
+    /// Request-count bound on the running batch (on top of the page
+    /// bound).
+    pub max_running: usize,
+}
+
+impl EngineConfig {
+    /// Pool sizing for one replica of the given design: the page count
+    /// its KV memory budget holds
+    /// ([`ReplicaModel::kv_pages_total`]) and its request-count batch
+    /// bound ([`ReplicaModel::max_batch`]).
+    pub fn for_replica(rm: &ReplicaModel, page_tokens: usize) -> EngineConfig {
+        EngineConfig {
+            pool_pages: rm.kv_pages_total(page_tokens).max(1),
+            page_tokens: page_tokens.max(1),
+            max_running: rm.max_batch.max(1),
+        }
+    }
+
+    /// Nominal sizing for a tier with no scheduled deployment (the
+    /// policy routes no steady-state traffic there, but skip targets
+    /// must exist): room for a handful of full-length sequences.
+    pub fn nominal(page_tokens: usize) -> EngineConfig {
+        let pt = page_tokens.max(1);
+        EngineConfig {
+            // 16 sequences of 8192 tokens.
+            pool_pages: (16usize * 8192).div_ceil(pt),
+            page_tokens: pt,
+            max_running: 16,
+        }
+    }
+}
+
+/// A completed request leaving the engine.
+#[derive(Debug)]
+pub struct Finished<T> {
+    pub payload: T,
+    pub output: Vec<i32>,
+    /// Seconds from first admission into the running batch to
+    /// completion (co-running residence, not exclusive compute).
+    pub exec_seconds: f64,
+}
+
+/// What one [`EngineCore::step`] did.
+#[derive(Debug)]
+pub struct StepOutcome<T> {
+    pub completed: Vec<Finished<T>>,
+    /// KV pages allocated at the iteration's high-water point.
+    pub pages_in_use: usize,
+    /// Sequences that advanced one token this iteration.
+    pub batch: usize,
+    /// Sequences preempted this iteration.
+    pub preempted: usize,
+    /// Forced pool expansions this iteration (0 unless the pool is
+    /// smaller than a single sequence).
+    pub forced_expansions: usize,
+}
+
+#[derive(Debug)]
+struct SeqData<T> {
+    payload: T,
+    prompt: Vec<i32>,
+    max_new: usize,
+    output: Vec<i32>,
+    /// Remaining whole-request tokens when the backend is adapted
+    /// (None for native step backends).
+    cached: Option<VecDeque<i32>>,
+    admitted_at: Option<Instant>,
+}
+
+/// The per-worker continuous-batching engine. `T` is the caller's
+/// per-request payload, returned untouched on completion.
+pub struct EngineCore<T> {
+    backend: Box<dyn TierBackend>,
+    sched: IterationScheduler,
+    data: HashMap<SeqId, SeqData<T>>,
+    next_id: SeqId,
+    iterations: u64,
+}
+
+impl<T> EngineCore<T> {
+    pub fn new(backend: Box<dyn TierBackend>, cfg: EngineConfig) -> EngineCore<T> {
+        let pool = KvPool::new(cfg.pool_pages.max(1), cfg.page_tokens.max(1));
+        EngineCore {
+            backend,
+            sched: IterationScheduler::new(pool, cfg.max_running.max(1)),
+            data: HashMap::new(),
+            next_id: 0,
+            iterations: 0,
+        }
+    }
+
+    /// Queue a request; it joins the running batch at a later
+    /// iteration boundary, when its prompt's pages fit.
+    pub fn submit(&mut self, payload: T, prompt: Vec<i32>, max_new: usize) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let max_new = max_new.max(1);
+        self.sched.enqueue(id, prompt.len().max(1), max_new);
+        self.data.insert(
+            id,
+            SeqData {
+                payload,
+                prompt,
+                max_new,
+                output: Vec::new(),
+                cached: None,
+                admitted_at: None,
+            },
+        );
+    }
+
+    /// Waiting + running sequences inside the engine.
+    pub fn n_seqs(&self) -> usize {
+        self.sched.n_seqs()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.sched.n_running()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    /// Retarget the KV pool (the hot-swap lever): scale-up is
+    /// immediate, scale-down takes effect as sequences retire.
+    pub fn set_pool_pages(&mut self, pages: usize) {
+        if pages.max(1) != self.sched.pool().capacity() {
+            self.sched.resize_pool(pages);
+        }
+    }
+
+    pub fn pool_pages(&self) -> usize {
+        self.sched.pool().capacity()
+    }
+
+    pub fn peak_pages(&self) -> usize {
+        self.sched.pool().peak_in_use()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.sched.preemptions()
+    }
+
+    /// Record a token (or early end-of-cache) for `id`; true when the
+    /// sequence is finished.
+    fn note_token(&mut self, id: SeqId, tok: Option<i32>) -> bool {
+        match tok {
+            Some(t) => {
+                let cache_dry = {
+                    let d = self.data.get_mut(&id).expect("token for unknown sequence");
+                    d.output.push(t);
+                    d.cached.as_ref().map(|c| c.is_empty()).unwrap_or(false)
+                };
+                let budget_done = self.sched.advance(id);
+                budget_done || cache_dry
+            }
+            // The whole-request cache ran dry before this iteration:
+            // the backend generated fewer than max_new tokens.
+            None => true,
+        }
+    }
+
+    /// Run ONE decode iteration: plan (retire/admit/preempt against the
+    /// pool), prefill the newly admitted, advance the running batch one
+    /// token, and collect finished sequences.
+    ///
+    /// An `Err` means the backend failed; the engine keeps every
+    /// submitted request (none were completed this step) so the caller
+    /// can [`EngineCore::drain`] them for re-dispatch — exactly-once
+    /// completion is preserved.
+    pub fn step(&mut self) -> Result<StepOutcome<T>> {
+        let plan = self.sched.next_iteration();
+        let pages_in_use = self.sched.pool().in_use();
+
+        // Preempted sequences lose engine and backend state; they
+        // recompute from their prompt on re-admission.
+        for &id in &plan.preempted {
+            if let Some(d) = self.data.get_mut(&id) {
+                d.output.clear();
+                d.cached = None;
+            }
+            if let Some(s) = self.backend.step_backend() {
+                s.release(id);
+            }
+        }
+
+        let mut done_ids: Vec<SeqId> = Vec::new();
+
+        // Prefill pass: each admission produces its first token.
+        for &id in &plan.admitted {
+            let (prompt, max_new) = {
+                let d = self.data.get_mut(&id).expect("admitted unknown sequence");
+                if d.admitted_at.is_none() {
+                    d.admitted_at = Some(Instant::now());
+                }
+                (std::mem::take(&mut d.prompt), d.max_new)
+            };
+            // (probe-then-rebind: an `if let Some(s) = ...step_backend()`
+            // would hold the borrow through an `else` that needs
+            // `generate` on edition 2021)
+            let native = self.backend.step_backend().is_some();
+            let tok = if native {
+                let s = self.backend.step_backend().expect("probed native above");
+                Some(s.prefill(id, &prompt)?)
+            } else {
+                let full = self.backend.generate(&prompt, max_new)?;
+                let mut dq: VecDeque<i32> = full.into_iter().collect();
+                let first = dq.pop_front();
+                self.data.get_mut(&id).expect("admitted unknown sequence").cached = Some(dq);
+                first
+            };
+            // The prompt is reused on preemption-recompute; put it back.
+            self.data.get_mut(&id).expect("admitted unknown sequence").prompt = prompt;
+            if self.note_token(id, tok) {
+                done_ids.push(id);
+            }
+        }
+
+        // Decode pass: every carried-over sequence advances one token.
+        if !plan.decode.is_empty() {
+            let toks: Vec<Option<i32>> = if let Some(s) = self.backend.step_backend() {
+                let v = s.decode(&plan.decode)?;
+                if v.len() != plan.decode.len() {
+                    anyhow::bail!(
+                        "step backend returned {} tokens for a batch of {}",
+                        v.len(),
+                        plan.decode.len()
+                    );
+                }
+                v.into_iter().map(Some).collect()
+            } else {
+                plan.decode
+                    .iter()
+                    .map(|id| {
+                        self.data
+                            .get_mut(id)
+                            .expect("decoding unknown sequence")
+                            .cached
+                            .as_mut()
+                            .and_then(|c| c.pop_front())
+                    })
+                    .collect()
+            };
+            for (&id, tok) in plan.decode.iter().zip(toks) {
+                if self.note_token(id, tok) {
+                    done_ids.push(id);
+                }
+            }
+        }
+
+        // Retire finished sequences: free their pages, drop backend
+        // state, hand back payload + full output.
+        let mut completed = Vec::with_capacity(done_ids.len());
+        for id in done_ids {
+            self.sched.retire(id);
+            if let Some(s) = self.backend.step_backend() {
+                s.release(id);
+            }
+            let d = self.data.remove(&id).expect("retiring unknown sequence");
+            completed.push(Finished {
+                payload: d.payload,
+                output: d.output,
+                exec_seconds: d
+                    .admitted_at
+                    .map(|t| t.elapsed().as_secs_f64())
+                    .unwrap_or(0.0),
+            });
+        }
+
+        self.iterations += 1;
+        Ok(StepOutcome {
+            completed,
+            pages_in_use,
+            batch: plan.batch(),
+            preempted: plan.preempted.len(),
+            forced_expansions: plan.forced_expansions,
+        })
+    }
+
+    /// Remove and return every in-engine request (FIFO-ish: waiting
+    /// then running), freeing all pages — the worker-death path.
+    pub fn drain(&mut self) -> Vec<T> {
+        let ids = self.sched.drain_ids();
+        ids.into_iter()
+            .filter_map(|id| self.data.remove(&id).map(|d| d.payload))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use super::*;
+
+    /// Whole-request backend (exercises the adapter path): outputs
+    /// `len` copies of `mark`.
+    struct WholeBackend {
+        mark: i32,
+        len: usize,
+    }
+
+    impl TierBackend for WholeBackend {
+        fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+            Ok(vec![self.mark; self.len.min(max_new)])
+        }
+    }
+
+    /// Native step backend: records its prefill/release call counts
+    /// through shared handles so tests can assert the call pattern
+    /// after the engine consumes the backend.
+    #[derive(Default)]
+    struct NativeStep {
+        prefills: Arc<AtomicUsize>,
+        releases: Arc<AtomicUsize>,
+        fail_decode: bool,
+    }
+
+    impl StepBackend for NativeStep {
+        fn prefill(&mut self, seq: SeqId, _prompt: &[i32]) -> Result<i32> {
+            self.prefills.fetch_add(1, Ordering::SeqCst);
+            Ok(100 + seq as i32)
+        }
+        fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+            if self.fail_decode {
+                anyhow::bail!("simulated step failure");
+            }
+            Ok(seqs.iter().map(|&s| 100 + s as i32).collect())
+        }
+        fn release(&mut self, seq: SeqId) {
+            let _ = seq;
+            self.releases.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    impl TierBackend for NativeStep {
+        fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+            Ok(vec![0; max_new])
+        }
+        fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+            Some(self)
+        }
+    }
+
+    fn cfg(pages: usize) -> EngineConfig {
+        EngineConfig { pool_pages: pages, page_tokens: 16, max_running: 8 }
+    }
+
+    fn run_all<T>(engine: &mut EngineCore<T>, max_steps: usize) -> Vec<Finished<T>> {
+        let mut out = Vec::new();
+        let mut steps = 0;
+        while !engine.is_idle() {
+            steps += 1;
+            assert!(steps <= max_steps, "engine failed to finish");
+            out.extend(engine.step().unwrap().completed);
+        }
+        out
+    }
+
+    #[test]
+    fn adapter_reproduces_whole_request_outputs() {
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(WholeBackend { mark: 7, len: 3 }), cfg(64));
+        e.submit(0, vec![1, 2, 3], 8);
+        e.submit(1, vec![4], 8);
+        let fins = run_all(&mut e, 32);
+        assert_eq!(fins.len(), 2);
+        for f in &fins {
+            assert_eq!(f.output, vec![7, 7, 7], "adapter must reproduce generate()'s output");
+        }
+    }
+
+    #[test]
+    fn adapter_handles_empty_generation() {
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(WholeBackend { mark: 0, len: 0 }), cfg(64));
+        e.submit(9, vec![1], 4);
+        let fins = run_all(&mut e, 8);
+        assert_eq!(fins.len(), 1);
+        assert!(fins[0].output.is_empty());
+    }
+
+    #[test]
+    fn native_backend_steps_token_by_token() {
+        let mut e: EngineCore<usize> = EngineCore::new(Box::new(NativeStep::default()), cfg(64));
+        for i in 0..3usize {
+            e.submit(i, vec![1, 2], 4);
+        }
+        let fins = run_all(&mut e, 16);
+        assert_eq!(fins.len(), 3);
+        for f in &fins {
+            assert_eq!(f.output.len(), 4, "native sequences run to max_new");
+        }
+        assert_eq!(e.iterations(), 4, "4 iterations: 1 prefill tick + 3 decode ticks");
+    }
+
+    #[test]
+    fn decode_failure_keeps_requests_for_drain() {
+        let backend = NativeStep { fail_decode: true, ..Default::default() };
+        let mut e: EngineCore<usize> = EngineCore::new(Box::new(backend), cfg(64));
+        e.submit(0, vec![1], 4);
+        e.submit(1, vec![1], 4);
+        // First step admits + prefills (no decode batch yet: both are
+        // newly admitted).
+        let out = e.step().unwrap();
+        assert!(out.completed.is_empty());
+        // Second step decodes and fails.
+        let err = e.step();
+        assert!(err.is_err());
+        let drained = e.drain();
+        assert_eq!(drained.len(), 2, "every request survives a backend failure");
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn preemption_recomputes_and_completes_exactly_once() {
+        // Pool of 4 pages x 16 tokens: two 17-token prompts admit (2
+        // pages each) and collide when the first grows its 3rd page.
+        let backend = NativeStep::default();
+        let prefills = Arc::clone(&backend.prefills);
+        let releases = Arc::clone(&backend.releases);
+        let mut e: EngineCore<u64> = EngineCore::new(Box::new(backend), cfg(4));
+        e.submit(10, vec![0; 17], 20);
+        e.submit(11, vec![0; 17], 20);
+        let mut fins = Vec::new();
+        let mut preempted = 0usize;
+        let mut steps = 0;
+        while !e.is_idle() {
+            steps += 1;
+            assert!(steps < 300, "must not deadlock");
+            let out = e.step().unwrap();
+            preempted += out.preempted;
+            assert!(out.pages_in_use <= e.pool_pages(), "occupancy within budget");
+            fins.extend(out.completed);
+        }
+        assert!(preempted >= 1, "the tight pool must preempt");
+        let mut ids: Vec<u64> = fins.iter().map(|f| f.payload).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![10, 11], "exactly-once completion across preemption");
+        for f in &fins {
+            assert_eq!(f.output.len(), 20, "preempted output is recomputed in full");
+        }
+        // The backend saw one prefill per (re-)admission and one
+        // release per preemption plus one per completion.
+        assert_eq!(prefills.load(Ordering::SeqCst), 2 + preempted);
+        assert_eq!(releases.load(Ordering::SeqCst), 2 + preempted);
+    }
+
+    #[test]
+    fn pool_rescale_is_live() {
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(NativeStep::default()), cfg(64));
+        assert_eq!(e.pool_pages(), 64);
+        e.set_pool_pages(8);
+        assert_eq!(e.pool_pages(), 8);
+        e.submit(0, vec![1], 2);
+        let _ = e.step().unwrap();
+        e.set_pool_pages(128);
+        assert_eq!(e.pool_pages(), 128);
+        let fins = run_all(&mut e, 8);
+        assert_eq!(fins.len(), 1);
+    }
+
+    #[test]
+    fn engine_config_from_replica_model_is_sane() {
+        use crate::cluster::ClusterSpec;
+        use crate::models::llama_cascade;
+        let m = &llama_cascade()[0];
+        let rm = ReplicaModel::new(m, &ClusterSpec::paper_testbed(), 1, 1, 768.0);
+        let c = EngineConfig::for_replica(&rm, 16);
+        assert!(c.pool_pages > rm.max_batch, "pages are finer-grained than request slots");
+        assert_eq!(c.max_running, rm.max_batch);
+        // The nominal fallback holds full-length sequences.
+        let n = EngineConfig::nominal(16);
+        assert!(n.pool_pages * n.page_tokens >= 8192);
+    }
+}

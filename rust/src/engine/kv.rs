@@ -1,0 +1,301 @@
+//! Paged KV-cache pool: fixed-size token pages with per-sequence page
+//! tables.
+//!
+//! The pool is the memory model of the continuous-batching engine: a
+//! replica's KV budget (derived from the [`crate::perf::ReplicaModel`]
+//! memory terms, see [`crate::perf::ReplicaModel::kv_pages_total`]) is
+//! carved into pages of `page_tokens` tokens, and every in-flight
+//! sequence holds an explicit page list. Admission and per-iteration
+//! growth go through all-or-nothing [`KvPool::grow_to`] calls, so the
+//! scheduler always sees exact occupancy and can preempt instead of
+//! overcommitting.
+//!
+//! Pages are identified by index so the page *tables* are real (the
+//! shape a paged-attention kernel would consume), and shrinking the
+//! pool defragments live tables down into the surviving id range with
+//! explicit move accounting.
+
+use std::collections::HashMap;
+
+/// Engine-wide sequence identifier.
+pub type SeqId = u64;
+
+/// Allocation failure: the pool is `short` pages of satisfying the
+/// request. Nothing was allocated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagesShort(pub usize);
+
+/// A pool of fixed-size KV pages with per-sequence page tables.
+#[derive(Debug)]
+pub struct KvPool {
+    page_tokens: usize,
+    capacity: usize,
+    /// Unallocated page ids below `capacity` (LIFO free list).
+    free: Vec<usize>,
+    /// Per-sequence page tables, in allocation order.
+    tables: HashMap<SeqId, Vec<usize>>,
+    in_use: usize,
+    peak_in_use: usize,
+    allocs: u64,
+    frees: u64,
+    defrag_moves: u64,
+}
+
+impl KvPool {
+    /// A pool of `capacity` pages of `page_tokens` tokens each (both
+    /// clamped to at least 1).
+    pub fn new(capacity: usize, page_tokens: usize) -> KvPool {
+        let capacity = capacity.max(1);
+        KvPool {
+            page_tokens: page_tokens.max(1),
+            capacity,
+            free: (0..capacity).rev().collect(),
+            tables: HashMap::new(),
+            in_use: 0,
+            peak_in_use: 0,
+            allocs: 0,
+            frees: 0,
+            defrag_moves: 0,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Target capacity in pages. After a shrink below current usage the
+    /// pool is temporarily over-committed: `in_use` may exceed this
+    /// until sequences retire, and no allocation succeeds meanwhile.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// High-water mark of pages simultaneously allocated.
+    pub fn peak_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Pages a context of `tokens` tokens occupies (at least 1).
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.page_tokens)
+    }
+
+    pub fn holds(&self, seq: SeqId) -> bool {
+        self.tables.contains_key(&seq)
+    }
+
+    /// The sequence's page table (empty slice when unknown).
+    pub fn pages_of(&self, seq: SeqId) -> &[usize] {
+        self.tables.get(&seq).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Ensure `seq` holds enough pages for `tokens` tokens of context,
+    /// allocating the shortfall. All-or-nothing: on `Err` nothing
+    /// changed and the error carries the missing page count.
+    pub fn grow_to(&mut self, seq: SeqId, tokens: usize) -> Result<(), PagesShort> {
+        let need = self.pages_for(tokens);
+        let have = self.tables.get(&seq).map(|t| t.len()).unwrap_or(0);
+        if need <= have {
+            return Ok(());
+        }
+        let shortfall = need - have;
+        if shortfall > self.free.len() {
+            return Err(PagesShort(shortfall - self.free.len()));
+        }
+        let table = self.tables.entry(seq).or_default();
+        for _ in 0..shortfall {
+            table.push(self.free.pop().expect("free list checked above"));
+        }
+        self.in_use += shortfall;
+        self.allocs += shortfall as u64;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Ok(())
+    }
+
+    /// Release every page `seq` holds; returns the page count freed.
+    /// Unknown sequences are a no-op (0).
+    pub fn release(&mut self, seq: SeqId) -> usize {
+        let Some(table) = self.tables.remove(&seq) else {
+            return 0;
+        };
+        let n = table.len();
+        for page in table {
+            // Pages beyond a shrunk capacity leave the pool entirely.
+            if page < self.capacity {
+                self.free.push(page);
+            }
+        }
+        self.in_use -= n;
+        self.frees += n as u64;
+        n
+    }
+
+    /// Retarget the pool to `capacity` pages.
+    ///
+    /// Growth adds fresh page ids. Shrinking drops free ids beyond the
+    /// bound and defragments live page tables down into the surviving
+    /// id range where free ids allow (each relocation counts as one
+    /// `defrag_moves` — the copy a real allocator would perform). If
+    /// usage exceeds the new capacity the pool runs over-committed:
+    /// stranded high ids stay valid for their owners, and allocations
+    /// fail until usage drops back under the target.
+    pub fn resize(&mut self, capacity: usize) {
+        let capacity = capacity.max(1);
+        if capacity > self.capacity {
+            // Ids stranded above the old bound by an earlier shrink may
+            // still be held; only genuinely unowned ids become free.
+            let held: std::collections::HashSet<usize> =
+                self.tables.values().flatten().copied().collect();
+            for id in self.capacity..capacity {
+                if !held.contains(&id) {
+                    self.free.push(id);
+                }
+            }
+            self.capacity = capacity;
+            return;
+        }
+        if capacity == self.capacity {
+            return;
+        }
+        self.capacity = capacity;
+        self.free.retain(|&id| id < capacity);
+        // Defragment: relocate live pages with ids beyond the bound
+        // onto surviving free ids.
+        for table in self.tables.values_mut() {
+            for slot in table.iter_mut() {
+                if *slot >= capacity {
+                    if let Some(dst) = self.free.pop() {
+                        *slot = dst;
+                        self.defrag_moves += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pages relocated by shrink-time defragmentation so far.
+    pub fn defrag_moves(&self) -> u64 {
+        self.defrag_moves
+    }
+
+    /// Lifetime (allocated, freed) page counts.
+    pub fn alloc_counts(&self) -> (u64, u64) {
+        (self.allocs, self.frees)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let p = KvPool::new(8, 16);
+        assert_eq!(p.pages_for(1), 1);
+        assert_eq!(p.pages_for(16), 1);
+        assert_eq!(p.pages_for(17), 2);
+        assert_eq!(p.pages_for(0), 1, "empty context still needs a page");
+    }
+
+    #[test]
+    fn grow_is_incremental_and_all_or_nothing() {
+        let mut p = KvPool::new(4, 16);
+        p.grow_to(1, 20).unwrap(); // 2 pages
+        assert_eq!(p.in_use(), 2);
+        assert_eq!(p.pages_of(1).len(), 2);
+        // Growing within the held pages is free.
+        p.grow_to(1, 30).unwrap();
+        assert_eq!(p.in_use(), 2);
+        // A second sequence takes the rest.
+        p.grow_to(2, 32).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        // Next growth fails atomically with the exact shortfall.
+        assert_eq!(p.grow_to(1, 33), Err(PagesShort(1)));
+        assert_eq!(p.pages_of(1).len(), 2, "failed grow must not allocate");
+        assert_eq!(p.in_use(), 4);
+    }
+
+    #[test]
+    fn release_recycles_pages() {
+        let mut p = KvPool::new(4, 16);
+        p.grow_to(7, 64).unwrap(); // all 4 pages
+        assert_eq!(p.peak_in_use(), 4);
+        assert_eq!(p.release(7), 4);
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.free_pages(), 4);
+        assert_eq!(p.release(7), 0, "double release is a no-op");
+        p.grow_to(8, 64).unwrap();
+        assert_eq!(p.in_use(), 4);
+        assert_eq!(p.peak_in_use(), 4);
+    }
+
+    #[test]
+    fn page_tables_are_disjoint() {
+        let mut p = KvPool::new(6, 8);
+        p.grow_to(1, 24).unwrap();
+        p.grow_to(2, 24).unwrap();
+        let mut all: Vec<usize> = p.pages_of(1).to_vec();
+        all.extend_from_slice(p.pages_of(2));
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "no page may be shared");
+        assert!(all.iter().all(|&id| id < 6));
+    }
+
+    #[test]
+    fn resize_up_adds_fresh_pages() {
+        let mut p = KvPool::new(2, 16);
+        p.grow_to(1, 32).unwrap();
+        assert_eq!(p.grow_to(1, 33), Err(PagesShort(1)));
+        p.resize(4);
+        assert_eq!(p.capacity(), 4);
+        p.grow_to(1, 33).unwrap();
+        assert_eq!(p.in_use(), 3);
+    }
+
+    #[test]
+    fn resize_down_defrags_live_tables() {
+        let mut p = KvPool::new(8, 16);
+        p.grow_to(1, 16 * 2).unwrap();
+        p.grow_to(2, 16 * 4).unwrap();
+        p.release(1); // frees low ids, seq 2 likely holds some high ids
+        p.resize(4);
+        assert_eq!(p.capacity(), 4);
+        assert!(p.pages_of(2).iter().all(|&id| id < 4), "tables must be defragged into range");
+        assert_eq!(p.in_use(), 4);
+        // Fully occupied at the new bound: nothing more fits.
+        assert!(p.grow_to(3, 1).is_err());
+    }
+
+    #[test]
+    fn overcommitted_pool_blocks_allocs_until_drain() {
+        let mut p = KvPool::new(8, 16);
+        p.grow_to(1, 16 * 6).unwrap();
+        p.resize(2); // usage (6) > capacity (2): over-committed
+        assert!(p.in_use() > p.capacity());
+        assert!(p.grow_to(2, 1).is_err());
+        p.release(1);
+        assert_eq!(p.in_use(), 0);
+        p.grow_to(2, 1).unwrap();
+        assert!(p.in_use() <= p.capacity());
+    }
+
+    #[test]
+    fn accounting_counters_track_traffic() {
+        let mut p = KvPool::new(4, 16);
+        p.grow_to(1, 32).unwrap();
+        p.release(1);
+        let (a, f) = p.alloc_counts();
+        assert_eq!((a, f), (2, 2));
+        assert_eq!(p.defrag_moves(), 0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Continuous-batching execution engine with paged KV-cache
+//! management.
+//!
+//! The deployment level models prefill as compute-bound and decode as
+//! memory-bound (§3), but a whole-batch serving loop wastes both: short
+//! requests wait on long batchmates and the KV budget is enforced only
+//! as a static request count. This subsystem makes the scheduler's
+//! memory model real at runtime:
+//!
+//! * [`KvPool`] (`kv`) — fixed-size token pages with per-sequence page
+//!   tables, alloc/free/defrag accounting, live resize;
+//! * [`IterationScheduler`] (`scheduler`) — each tick retires finished
+//!   sequences, admits queued requests FIFO while pages remain, and
+//!   preempts-and-requeues (newest-first, recompute) on pool
+//!   exhaustion;
+//! * [`EngineCore`] (`core`) — the per-worker loop behind the existing
+//!   `TierBackend` trait: native [`StepBackend`]s step token-by-token
+//!   (calibrated simulated backends charge
+//!   [`crate::perf::ReplicaModel::decode_iteration`] at the live batch
+//!   size), whole-request backends are adapted transparently;
+//! * `bench` — the calibrated lockstep-vs-continuous serving benchmark
+//!   behind `cascadia bench` (writes `BENCH_serving.json`).
+//!
+//! The same scheduler drives the paged mode of the discrete-event
+//! simulator ([`crate::sim::des`]), so schedule-time estimates and the
+//! runtime share one admission/preemption policy, and
+//! [`crate::coordinator::server::ExecMode::Continuous`] threads the
+//! engine through the live serving path with hot-swappable pool sizing
+//! (see [`crate::adapt`]).
+
+pub mod bench;
+pub mod core;
+pub mod kv;
+pub mod scheduler;
+
+pub use bench::{run_serving_bench, BenchConfig, BenchReport};
+pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
+pub use kv::{KvPool, PagesShort, SeqId};
+pub use scheduler::{IterationPlan, IterationScheduler};

@@ -1,0 +1,463 @@
+//! Iteration-level scheduler: which sequences run in the next decode
+//! iteration, against the paged KV pool.
+//!
+//! Each call to [`IterationScheduler::next_iteration`] is one engine
+//! tick:
+//!
+//! 1. **grow** — every running sequence is about to produce one more
+//!    token, so its context grows by one; pages for the growth are
+//!    reserved oldest-first. On pool exhaustion the *newest* running
+//!    sequence is preempted (vLLM's recompute policy: its pages are
+//!    freed, its progress resets, and it re-queues at the *front* of
+//!    the wait queue so FIFO order is preserved);
+//! 2. **admit** — waiting sequences are admitted strictly FIFO while
+//!    the pool has pages for their prompt-plus-first-token context and
+//!    the running set is under `max_running`.
+//!
+//! The scheduler never deadlocks: when a sequence cannot fit even with
+//! every other sequence preempted (the pool is smaller than one
+//! request), the pool is force-expanded to hold it and the expansion is
+//! counted — a misconfigured pool degrades with accounting instead of
+//! wedging the engine. Completion bookkeeping ([`advance`]/[`retire`])
+//! lives here too so the paged discrete-event simulator can drive the
+//! *same* scheduler the live engine runs (see [`crate::sim::des`]).
+//!
+//! [`advance`]: IterationScheduler::advance
+//! [`retire`]: IterationScheduler::retire
+
+use std::collections::{HashMap, VecDeque};
+
+use super::kv::{KvPool, SeqId};
+
+/// Token bookkeeping of one tracked sequence.
+#[derive(Debug, Clone, Copy)]
+struct Seq {
+    prompt_tokens: usize,
+    max_new: usize,
+    /// Tokens generated since (re-)admission; preemption resets this
+    /// (recompute semantics).
+    generated: usize,
+}
+
+/// One planned engine iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterationPlan {
+    /// Sequences admitted this tick — they need a prefill pass and
+    /// produce their first token.
+    pub admitted: Vec<SeqId>,
+    /// Sequences carried over from earlier ticks — they advance one
+    /// decode token.
+    pub decode: Vec<SeqId>,
+    /// Sequences preempted this tick. Their KV pages are already freed
+    /// and their progress reset; callers must drop any per-sequence
+    /// backend state (they re-prefill on re-admission).
+    pub preempted: Vec<SeqId>,
+    /// Forced pool expansions this tick (0 unless the pool was smaller
+    /// than a single sequence).
+    pub forced_expansions: usize,
+}
+
+impl IterationPlan {
+    /// Total sequences advancing one token this tick.
+    pub fn batch(&self) -> usize {
+        self.admitted.len() + self.decode.len()
+    }
+}
+
+/// FIFO iteration scheduler over a paged KV pool.
+#[derive(Debug)]
+pub struct IterationScheduler {
+    pool: KvPool,
+    waiting: VecDeque<SeqId>,
+    /// Admission order, oldest first.
+    running: Vec<SeqId>,
+    seqs: HashMap<SeqId, Seq>,
+    max_running: usize,
+    preemptions: u64,
+    forced_expansions: u64,
+}
+
+impl IterationScheduler {
+    /// `max_running` bounds the running set by request count on top of
+    /// the pool's page bound (use `usize::MAX` for pages-only).
+    pub fn new(pool: KvPool, max_running: usize) -> IterationScheduler {
+        IterationScheduler {
+            pool,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            seqs: HashMap::new(),
+            max_running: max_running.max(1),
+            preemptions: 0,
+            forced_expansions: 0,
+        }
+    }
+
+    /// Track a new sequence at the back of the wait queue.
+    pub fn enqueue(&mut self, id: SeqId, prompt_tokens: usize, max_new: usize) {
+        debug_assert!(!self.seqs.contains_key(&id), "duplicate sequence id");
+        self.seqs.insert(
+            id,
+            Seq { prompt_tokens: prompt_tokens.max(1), max_new: max_new.max(1), generated: 0 },
+        );
+        self.waiting.push_back(id);
+    }
+
+    /// Waiting + running sequences.
+    pub fn n_seqs(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.n_seqs() == 0
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Retarget the pool (hot-swap lever). Scale-down takes effect as
+    /// sequences retire — see [`KvPool::resize`].
+    pub fn resize_pool(&mut self, pages: usize) {
+        self.pool.resize(pages);
+    }
+
+    pub fn max_running(&self) -> usize {
+        self.max_running
+    }
+
+    pub fn set_max_running(&mut self, max_running: usize) {
+        self.max_running = max_running.max(1);
+    }
+
+    /// Sequences preempted over the scheduler's lifetime.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Forced pool expansions over the scheduler's lifetime.
+    pub fn forced_expansions(&self) -> u64 {
+        self.forced_expansions
+    }
+
+    /// Tokens of context `id` currently holds KV for.
+    fn ctx_tokens(&self, id: SeqId) -> usize {
+        let s = &self.seqs[&id];
+        s.prompt_tokens + s.generated
+    }
+
+    /// Preempt `id`: free its pages, reset its progress, and requeue it
+    /// at the front of the wait queue.
+    fn preempt(&mut self, id: SeqId, plan: &mut IterationPlan) {
+        self.pool.release(id);
+        if let Some(s) = self.seqs.get_mut(&id) {
+            s.generated = 0;
+        }
+        self.waiting.push_front(id);
+        plan.preempted.push(id);
+        self.preemptions += 1;
+    }
+
+    /// Grow the pool just enough to cover a `short`-page shortfall even
+    /// while over-committed (the no-deadlock escape hatch).
+    fn force_expand(&mut self, short: usize, plan: &mut IterationPlan) {
+        let want = (self.pool.in_use() + self.pool.free_pages() + short)
+            .max(self.pool.capacity() + 1);
+        self.pool.resize(want);
+        self.forced_expansions += 1;
+        plan.forced_expansions += 1;
+    }
+
+    /// Plan the next iteration. See the module docs for the policy.
+    pub fn next_iteration(&mut self) -> IterationPlan {
+        let mut plan = IterationPlan::default();
+
+        // 1. Reserve one token of growth per running sequence, oldest
+        // first; preempt from the newest end on exhaustion.
+        let mut i = 0;
+        while i < self.running.len() {
+            let id = self.running[i];
+            let need = self.ctx_tokens(id) + 1;
+            let mut preempted_self = false;
+            while let Err(short) = self.pool.grow_to(id, need) {
+                if self.running.len() == 1 {
+                    // Alone and still short: the pool cannot hold even
+                    // this one sequence.
+                    self.force_expand(short.0, &mut plan);
+                } else {
+                    let victim = self.running.pop().expect("len > 1");
+                    self.preempt(victim, &mut plan);
+                    if victim == id {
+                        preempted_self = true;
+                        break;
+                    }
+                }
+            }
+            if !preempted_self {
+                i += 1;
+            }
+        }
+
+        // Survivors decode one token this tick.
+        plan.decode = self.running.clone();
+
+        // 2. Admit strictly FIFO while prompt+first-token contexts fit.
+        while self.running.len() < self.max_running {
+            let Some(&head) = self.waiting.front() else { break };
+            let need = self.seqs[&head].prompt_tokens + 1;
+            match self.pool.grow_to(head, need) {
+                Ok(()) => {
+                    self.waiting.pop_front();
+                    self.running.push(head);
+                    plan.admitted.push(head);
+                }
+                Err(short) => {
+                    if self.running.is_empty() {
+                        // Nothing running and the head alone does not
+                        // fit: expand or the engine deadlocks.
+                        self.force_expand(short.0, &mut plan);
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        plan
+    }
+
+    /// Record one generated token for `id`; returns true when the
+    /// sequence reached its token budget (caller should retire it).
+    pub fn advance(&mut self, id: SeqId) -> bool {
+        let s = self.seqs.get_mut(&id).expect("advance of unknown sequence");
+        s.generated += 1;
+        s.generated >= s.max_new
+    }
+
+    /// Drop a finished (or cancelled) sequence and free its pages.
+    pub fn retire(&mut self, id: SeqId) {
+        self.pool.release(id);
+        if let Some(pos) = self.running.iter().position(|&r| r == id) {
+            self.running.remove(pos);
+        } else if let Some(pos) = self.waiting.iter().position(|&r| r == id) {
+            let _ = self.waiting.remove(pos);
+        }
+        self.seqs.remove(&id);
+    }
+
+    /// Remove and return every tracked sequence (waiting first, then
+    /// running, both FIFO), freeing all pages — the worker-death path.
+    pub fn drain_ids(&mut self) -> Vec<SeqId> {
+        let mut out: Vec<SeqId> = self.waiting.drain(..).collect();
+        out.extend(self.running.drain(..));
+        for &id in &out {
+            self.pool.release(id);
+        }
+        self.seqs.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(pages: usize, page_tokens: usize, max_running: usize) -> IterationScheduler {
+        IterationScheduler::new(KvPool::new(pages, page_tokens), max_running)
+    }
+
+    /// Drive the scheduler to completion, retiring sequences as they
+    /// finish; returns (completion order, iterations used).
+    fn run_to_completion(s: &mut IterationScheduler, max_iters: usize) -> (Vec<SeqId>, usize) {
+        let mut order = Vec::new();
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters <= max_iters, "scheduler failed to make progress");
+            let plan = s.next_iteration();
+            assert!(plan.batch() > 0, "a tick with sequences must advance something");
+            let advanced: Vec<SeqId> =
+                plan.admitted.iter().chain(&plan.decode).copied().collect();
+            for id in advanced {
+                if s.advance(id) {
+                    s.retire(id);
+                    order.push(id);
+                }
+            }
+        }
+        (order, iters)
+    }
+
+    #[test]
+    fn admission_is_fifo() {
+        let mut s = sched(64, 16, 4);
+        for id in 0..6u64 {
+            s.enqueue(id, 16, 4);
+        }
+        let plan = s.next_iteration();
+        assert_eq!(plan.admitted, vec![0, 1, 2, 3], "max_running caps the batch");
+        assert!(plan.decode.is_empty());
+        let plan2 = s.next_iteration();
+        assert_eq!(plan2.decode, vec![0, 1, 2, 3]);
+        assert!(plan2.admitted.is_empty(), "running set is full");
+    }
+
+    #[test]
+    fn completion_frees_room_for_the_queue() {
+        let mut s = sched(64, 16, 2);
+        for id in 0..4u64 {
+            s.enqueue(id, 8, 2);
+        }
+        let (order, _) = run_to_completion(&mut s, 64);
+        assert_eq!(order, vec![0, 1, 2, 3], "FIFO completion under a count bound");
+        assert_eq!(s.pool().in_use(), 0, "all pages returned");
+        assert_eq!(s.preemptions(), 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_preempts_newest_and_requeues_front() {
+        // 4 pages of 16 tokens; each seq needs 2 pages at admission
+        // (prompt 17 -> 2 pages) and grows into a 3rd page later
+        // (17 + 16 = 33 tokens -> 3 pages at generated = 16).
+        let mut s = sched(4, 16, 8);
+        s.enqueue(0, 17, 20);
+        s.enqueue(1, 17, 20);
+        let first = s.next_iteration();
+        assert_eq!(first.admitted, vec![0, 1]);
+        // Tick until growth forces a preemption: seq 1 (newest) must be
+        // the victim, exactly once, and re-admit after 0 retires.
+        let mut preempted_events: Vec<SeqId> = Vec::new();
+        let mut done: Vec<SeqId> = Vec::new();
+        let mut iters = 0;
+        // Consume the first tick's tokens.
+        for id in first.admitted {
+            assert!(!s.advance(id));
+        }
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 200, "no deadlock allowed");
+            let plan = s.next_iteration();
+            preempted_events.extend(&plan.preempted);
+            assert!(plan.batch() > 0);
+            for id in plan.admitted.iter().chain(&plan.decode).copied().collect::<Vec<_>>() {
+                if s.advance(id) {
+                    s.retire(id);
+                    done.push(id);
+                }
+            }
+        }
+        assert_eq!(done, vec![0, 1], "both sequences complete, oldest first");
+        assert!(!preempted_events.is_empty(), "the tight pool must preempt");
+        assert!(
+            preempted_events.iter().all(|&id| id == 1),
+            "only the newest sequence may be preempted: {preempted_events:?}"
+        );
+        assert_eq!(s.forced_expansions(), 0, "a sane pool never force-expands");
+        assert!(s.pool().peak_in_use() <= 4, "occupancy may never exceed the pool");
+    }
+
+    #[test]
+    fn many_sequences_tiny_pool_never_deadlocks() {
+        let mut s = sched(6, 8, 64);
+        for id in 0..12u64 {
+            s.enqueue(id, 12, 24); // worst case 12+24 = 36 tokens = 5 pages
+        }
+        let (order, _) = run_to_completion(&mut s, 5_000);
+        assert_eq!(order.len(), 12);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 12, "exactly-once completion");
+        assert_eq!(s.forced_expansions(), 0);
+        assert!(s.pool().peak_in_use() <= 6);
+    }
+
+    #[test]
+    fn oversized_sequence_forces_expansion_instead_of_deadlock() {
+        // Pool of 2 pages cannot hold a 100-token prompt (7 pages).
+        let mut s = sched(2, 16, 4);
+        s.enqueue(0, 100, 4);
+        let (order, _) = run_to_completion(&mut s, 32);
+        assert_eq!(order, vec![0]);
+        assert!(s.forced_expansions() >= 1, "expansion must be accounted");
+    }
+
+    #[test]
+    fn preempted_sequence_restarts_from_scratch() {
+        let mut s = sched(4, 16, 8);
+        s.enqueue(0, 17, 40);
+        s.enqueue(1, 17, 40);
+        let mut total_advances_for_1 = 0usize;
+        let mut saw_preempt = false;
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 500);
+            let plan = s.next_iteration();
+            if plan.preempted.contains(&1) {
+                saw_preempt = true;
+            }
+            for id in plan.admitted.iter().chain(&plan.decode).copied().collect::<Vec<_>>() {
+                if id == 1 {
+                    total_advances_for_1 += 1;
+                }
+                if s.advance(id) {
+                    s.retire(id);
+                }
+            }
+        }
+        assert!(saw_preempt);
+        assert!(
+            total_advances_for_1 > 40,
+            "recompute must replay preempted progress ({total_advances_for_1} advances)"
+        );
+    }
+
+    #[test]
+    fn resize_down_blocks_admission_until_drain() {
+        let mut s = sched(8, 16, 8);
+        s.enqueue(0, 30, 4); // 2 pages minimum
+        let plan = s.next_iteration();
+        assert_eq!(plan.admitted, vec![0]);
+        s.resize_pool(1); // below the running seq's footprint
+        s.enqueue(1, 30, 4);
+        // Seq 1 cannot be admitted while 0 holds the over-committed
+        // pool, but 0 still runs (forced expansion only grows to cover
+        // growth of the lone running seq).
+        let plan2 = s.next_iteration();
+        assert_eq!(plan2.decode, vec![0]);
+        assert!(plan2.admitted.is_empty());
+        (0..4).for_each(|_| {
+            if s.advance(0) {
+                s.retire(0);
+            }
+        });
+        assert!(!s.running.contains(&0));
+        // With 0 gone the pool drains; seq 1 admits (forced expansion
+        // may fire because 1 page < one sequence).
+        let plan3 = s.next_iteration();
+        assert_eq!(plan3.admitted, vec![1]);
+    }
+
+    #[test]
+    fn drain_returns_everything_and_frees_pages() {
+        let mut s = sched(16, 16, 2);
+        for id in 0..5u64 {
+            s.enqueue(id, 16, 4);
+        }
+        let _ = s.next_iteration(); // admit 0, 1
+        let ids = s.drain_ids();
+        assert_eq!(ids.len(), 5);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        assert_eq!(s.pool().in_use(), 0);
+        assert!(s.is_idle());
+    }
+}

@@ -24,7 +24,11 @@
 //! [`sched::plan::CascadePlan`] — the single schedule→serve artifact,
 //! JSON round-trippable into `ServerConfig::from_plan` /
 //! `TcpFrontend::from_plan`: policy routing ([`router`]), continuous
-//! batching, and escalation. The online adaptation subsystem
+//! batching, and escalation. Worker inner loops can run in whole-batch
+//! lockstep or through the continuous-batching execution engine
+//! ([`engine`]): iteration-granular admission/retirement against a
+//! paged KV-cache pool sized from the same [`perf`] memory terms the
+//! scheduler optimizes. The online adaptation subsystem
 //! ([`adapt`]) closes the §4.4 loop at runtime: every admitted request
 //! feeds the workload monitor, a detected shift re-runs the bi-level
 //! scheduler (with a precomputed-plan cache for repeat regimes), and
@@ -43,6 +47,7 @@ pub mod cluster;
 pub mod harness;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod judge;
 pub mod metrics;
 pub mod milp;

@@ -8,6 +8,8 @@
 //!   trace      generate a workload trace CSV
 //!   replay     drift replay: frozen vs adaptive (monitor -> re-schedule
 //!              -> hot-swap) serving of a phase-shift trace
+//!   bench      calibrated serving benchmark: batch-lockstep vs the
+//!              continuous-batching engine; writes BENCH_serving.json
 //!
 //! `--config path.json` loads an ExperimentConfig; all fields also have
 //! CLI overrides (--cascade, --gpus, --trace, --rate, --quality, ...).
@@ -201,6 +203,38 @@ fn cmd_replay(args: &Args) -> Result<()> {
         String::new(),
     ]);
     print!("{}", t.render());
+    // Per-tier queue + engine telemetry of the adaptive run: what the
+    // batcher always tracked but never reported, and the paged
+    // engine's occupancy/preemption counters.
+    let mut tele = Table::new(
+        "tier telemetry (adaptive run)",
+        &["tier", "queue peak", "mean wait(s)", "pages peak/pool", "preempt", "iters"],
+    );
+    for (t, q) in report.adaptive.queue.iter().enumerate() {
+        let e = report.adaptive.engine.get(t).copied().unwrap_or_default();
+        tele.row(vec![
+            format!("{t}"),
+            q.peak_depth.to_string(),
+            format!("{:.2}", q.mean_wait_s),
+            if e.pool_pages > 0 {
+                format!("{}/{}", e.peak_pages, e.pool_pages)
+            } else {
+                "-".into()
+            },
+            e.preemptions.to_string(),
+            e.iterations.to_string(),
+        ]);
+    }
+    print!("{}", tele.render());
+    for (t, e) in report.adaptive.engine.iter().enumerate() {
+        // Compare against the largest budget in force during the run:
+        // a pool-shrinking hot-swap legitimately leaves peak occupancy
+        // above the FINAL budget while old admissions drain.
+        if e.peak_pool_pages > 0 && e.peak_pages > e.peak_pool_pages {
+            bail!("tier {t}: page occupancy {} exceeded the pool budget {}",
+                  e.peak_pages, e.peak_pool_pages);
+        }
+    }
     println!(
         "adaptation: {} | dropped: frozen {} adaptive {}",
         report.adaptive.counters, report.frozen.dropped, report.adaptive.dropped
@@ -321,6 +355,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
     fe.serve(&addr, &factory, &judger, Arc::new(AtomicBool::new(false)))
 }
 
+/// The calibrated serving benchmark: batch-lockstep vs the
+/// continuous-batching engine on a bursty phase-shift trace; writes
+/// `BENCH_serving.json` (the perf trajectory artifact CI tracks).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use cascadia::engine::{run_serving_bench, BenchConfig};
+
+    let mut cfg = if args.flag("smoke") { BenchConfig::smoke() } else { BenchConfig::full() };
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    eprintln!(
+        "serving bench ({} mode): {} requests, time x{:.0}, {} tokens/step",
+        if args.flag("smoke") { "smoke" } else { "full" },
+        cfg.calm_requests + cfg.burst_requests,
+        cfg.time_scale,
+        cfg.token_scale,
+    );
+    let report = run_serving_bench(&cfg)?;
+
+    let mut t = Table::new(
+        &format!(
+            "lockstep vs continuous engine (calm {:.2} rps → burst {:.2} rps, SCV {:.0})",
+            report.calm_rate, report.burst_rate, report.burstiness
+        ),
+        &["mode", "p50(s)", "p95(s)", "p99(s)", "throughput", "makespan(s)"],
+    );
+    for m in [&report.lockstep, &report.continuous] {
+        t.row(vec![
+            m.label.clone(),
+            format!("{:.2}", m.latency.p50),
+            format!("{:.2}", m.latency.p95),
+            format!("{:.2}", m.latency.p99),
+            format!("{:.3} rps", m.throughput_rps),
+            format!("{:.1}", m.makespan_s),
+        ]);
+    }
+    print!("{}", t.render());
+    for (i, e) in report.continuous.engine.iter().enumerate() {
+        println!(
+            "tier {i}: pages peak/pool {}/{} | preemptions {} | iterations {} | queue peak {} wait {:.2}s",
+            e.peak_pages,
+            e.pool_pages,
+            e.preemptions,
+            e.iterations,
+            report.continuous.queue[i].peak_depth,
+            report.continuous.queue[i].mean_wait_s,
+        );
+    }
+    println!(
+        "p95 speedup: {:.2}x | throughput gain: {:.2}x",
+        report.p95_speedup, report.throughput_gain
+    );
+
+    let out = args.str_or("out", "BENCH_serving.json");
+    std::fs::write(&out, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    if !report.occupancy_ok {
+        bail!("KV page occupancy exceeded the pool budget");
+    }
+    if !report.win {
+        bail!(
+            "continuous engine did not beat the lockstep baseline \
+             (p95 speedup {:.2}, throughput gain {:.2})",
+            report.p95_speedup,
+            report.throughput_gain
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
@@ -331,6 +434,7 @@ fn main() -> Result<()> {
         "baselines" => cmd_baselines(&load_config(&args)?),
         "trace" => cmd_trace(&load_config(&args)?, &args.str_or("out", "results/trace.csv")),
         "replay" => cmd_replay(&args),
+        "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "help" => {
             print_help();
@@ -356,6 +460,8 @@ fn print_help() {
          \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
          Online adaptation (drift replay, §4.4):\n\
          \x20   cascadia replay --config examples/configs/drift_replay.json\n\n\
+         Serving benchmark (continuous engine vs lockstep baseline):\n\
+         \x20   cascadia bench [--smoke] [--seed S] [--out BENCH_serving.json]\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );
 }

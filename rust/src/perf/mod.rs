@@ -24,6 +24,10 @@ use crate::cluster::ClusterSpec;
 use crate::models::ModelSpec;
 use crate::parallel::{ReplicaGroup, ACT_RESERVE};
 
+/// Default KV page size (tokens) used by the paged execution engine
+/// and the paged discrete-event simulator (vLLM's classic block size).
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
 /// Workload statistics for one model type, as the router sees them.
 #[derive(Debug, Clone, Copy)]
 pub struct Workload {
@@ -60,6 +64,11 @@ pub struct ReplicaModel {
     decode_per_req_s: f64,
     /// Max concurrent requests the KV memory supports.
     pub max_batch: usize,
+    /// KV-cache bytes one token of context costs (whole replica group).
+    kv_bytes_per_token: f64,
+    /// GPU memory left for KV after weights + activation reserve
+    /// (whole replica group, bytes).
+    kv_budget_bytes: f64,
     /// Latency multiplier from pipeline depth (a request's token must
     /// traverse pp stages).
     pub pp_latency_factor: f64,
@@ -151,6 +160,8 @@ impl ReplicaModel {
             decode_fixed_s,
             decode_per_req_s,
             max_batch,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            kv_budget_bytes: kv_budget,
             pp_latency_factor: pp as f64,
             // Pipelining recovers most of the stage parallelism;
             // bubbles cost ~10%.
@@ -233,6 +244,33 @@ impl ReplicaModel {
         let pf = self.prefill_latency(w.avg_input).max(1e-12);
         // pf·a·λ² + a·λ − 1 = 0.
         (-a + (a * a + 4.0 * pf * a).sqrt()) / (2.0 * pf * a)
+    }
+
+    /// Total KV pages of `page_tokens` tokens this replica's memory
+    /// budget holds — the pool size of the paged execution engine
+    /// ([`crate::engine::KvPool`]). 0 when the weights leave no KV
+    /// room.
+    pub fn kv_pages_total(&self, page_tokens: usize) -> usize {
+        if self.kv_budget_bytes <= 0.0 || self.kv_bytes_per_token <= 0.0 {
+            return 0;
+        }
+        (self.kv_budget_bytes / (self.kv_bytes_per_token * page_tokens.max(1) as f64)) as usize
+    }
+
+    /// Pages a single sequence of `ctx_tokens` context occupies.
+    pub fn kv_pages_for(&self, ctx_tokens: f64, page_tokens: usize) -> usize {
+        (ctx_tokens.max(1.0) / page_tokens.max(1) as f64).ceil() as usize
+    }
+
+    /// Page-granular feasibility: can one request of `ctx_tokens`
+    /// context fit this replica's KV budget at all? Stricter than
+    /// `max_batch > 0` — the request-count clamp rounds a fractional
+    /// budget up to one slot even when a full-length request does not
+    /// actually fit ([`crate::sched::inner`]'s feasibility screen uses
+    /// this via the analytic simulator).
+    pub fn fits_context(&self, ctx_tokens: f64) -> bool {
+        self.kv_pages_for(ctx_tokens, DEFAULT_PAGE_TOKENS)
+            <= self.kv_pages_total(DEFAULT_PAGE_TOKENS)
     }
 }
 
@@ -327,6 +365,36 @@ mod tests {
         let tight = ReplicaModel::new(&ds[1], &cluster(), 4, 1, 4096.0);
         let roomy = ReplicaModel::new(&ds[1], &cluster(), 8, 1, 4096.0);
         assert!(roomy.max_batch > tight.max_batch);
+    }
+
+    #[test]
+    fn paged_capacity_is_consistent_with_max_batch() {
+        let m = &llama_cascade()[0];
+        let avg_ctx = 768.0;
+        let r = ReplicaModel::new(m, &cluster(), 1, 1, avg_ctx);
+        let pages = r.kv_pages_total(DEFAULT_PAGE_TOKENS);
+        let per_seq = r.kv_pages_for(avg_ctx, DEFAULT_PAGE_TOKENS);
+        assert!(pages > 0 && per_seq > 0);
+        // Requests-by-pages roughly reproduces the request-count bound
+        // (up to the 512 clamp and page rounding).
+        let by_pages = pages / per_seq;
+        assert!(
+            by_pages >= r.max_batch || r.max_batch == 512,
+            "pages {pages} / per_seq {per_seq} = {by_pages} vs max_batch {}",
+            r.max_batch
+        );
+        assert!(r.fits_context(avg_ctx));
+        assert!(!r.fits_context(1e12), "absurd contexts cannot fit");
+    }
+
+    #[test]
+    fn kv_pages_for_rounds_up() {
+        let m = &llama_cascade()[0];
+        let r = ReplicaModel::new(m, &cluster(), 1, 1, 768.0);
+        assert_eq!(r.kv_pages_for(1.0, 16), 1);
+        assert_eq!(r.kv_pages_for(16.0, 16), 1);
+        assert_eq!(r.kv_pages_for(17.0, 16), 2);
+        assert_eq!(r.kv_pages_for(0.0, 16), 1);
     }
 
     #[test]

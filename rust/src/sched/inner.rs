@@ -13,6 +13,14 @@
 //!    `L ≥ Σ_f l_i(f)·x_{i,f}`; infeasible (memory-floor) pairs are
 //!    excluded, matching the paper's explicit `x_{i,f} = 0` fixing.
 //!
+//! Feasibility is page-granular: a candidate design whose KV budget
+//! cannot hold even one full-length request
+//! ([`ReplicaModel::fits_context`], the same page math the execution
+//! engine's [`crate::engine::KvPool`] enforces at runtime) scores
+//! `OVERLOAD_LATENCY` in the analytic simulator and is excluded from
+//! the tables, so the scheduler never deploys a tier the engine could
+//! only serve by force-expanding its pool.
+//!
 //! Tiers with zero routed traffic are not deployed (f = 0) — the
 //! tier-subset behaviour of Table 1's (80,3)/(70,3) rows. An exact
 //! dynamic program over the same `l_i(f)` tables cross-checks the MILP
@@ -566,6 +574,26 @@ mod tests {
         let uni = solve_inner(&cascade, &cluster(), &workloads([6.0, 2.0, 0.5]), 32,
             &InnerOptions { uniform_parallelism: true, ..Default::default() }).unwrap();
         assert!(opt.max_latency <= uni.max_latency + 1e-9);
+    }
+
+    #[test]
+    fn oversized_context_is_infeasible_page_granularly() {
+        // A workload whose mean context can never fit a replica's KV
+        // budget must be rejected outright — the request-count clamp
+        // alone would have rounded the fractional budget up to one
+        // "slot" and deployed it anyway.
+        let huge: Vec<Workload> = [1.0, 0.5, 0.1]
+            .iter()
+            .map(|&r| Workload { rate: r, avg_input: 5e8, avg_output: 5e8 })
+            .collect();
+        let err = solve_inner(
+            &deepseek_cascade(),
+            &cluster(),
+            &huge,
+            32,
+            &InnerOptions::default(),
+        );
+        assert!(err.is_err(), "page-infeasible workloads must not schedule");
     }
 
     #[test]

@@ -42,6 +42,15 @@ pub fn estimate_p95_groups(groups: &[(&ReplicaModel, usize)], w: &Workload) -> f
     if groups.is_empty() {
         return OVERLOAD_LATENCY;
     }
+    // Page-granular memory feasibility (the inner scheduler's screen):
+    // a design whose KV budget cannot hold even ONE full-length
+    // request is infeasible, even though the request-count clamp would
+    // round its fractional budget up to a single slot.
+    for (r, _) in groups {
+        if !r.fits_context(w.avg_input + w.avg_output) {
+            return OVERLOAD_LATENCY;
+        }
+    }
     let capacities: Vec<f64> = groups
         .iter()
         .map(|(r, n)| r.capacity(w) * *n as f64)
@@ -104,6 +113,15 @@ mod tests {
 
     fn w(rate: f64) -> Workload {
         Workload { rate, avg_input: 512.0, avg_output: 256.0 }
+    }
+
+    #[test]
+    fn context_beyond_kv_budget_is_overloaded() {
+        // A request stream whose mean context cannot fit one replica's
+        // KV budget is infeasible regardless of its (tiny) rate.
+        let p = pool(1, 1);
+        let huge = Workload { rate: 0.01, avg_input: 1e9, avg_output: 1.0 };
+        assert_eq!(estimate_p95(&p, &huge), OVERLOAD_LATENCY);
     }
 
     #[test]

@@ -14,13 +14,41 @@
 //!
 //! Time is f64 seconds on a binary-heap event queue. The simulator is
 //! deterministic given the request trace.
+//!
+//! Three execution disciplines are simulated ([`DesMode`]) so
+//! schedule-time estimates can match whichever inner loop the live
+//! server runs: the classic request-count-bounded continuous batching,
+//! **paged** continuous batching driven by the *same*
+//! [`IterationScheduler`] the live engine runs (KV pages, preemption,
+//! FIFO admission — see [`crate::engine`]), and whole-batch
+//! **lockstep** (the pre-engine worker discipline, kept as the
+//! measurable baseline).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
+use crate::engine::{IterationScheduler, KvPool};
 use crate::perf::ReplicaModel;
 use crate::util::stats;
+
+/// Which inner-loop discipline the simulation models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesMode {
+    /// Iteration-level continuous batching bounded by
+    /// `ReplicaModel::max_batch` (request count) — the legacy default.
+    Continuous,
+    /// Continuous batching against a paged KV pool sized from the
+    /// replica's memory budget; admission/preemption run through the
+    /// live engine's [`IterationScheduler`].
+    Paged {
+        /// Tokens per KV page.
+        page_tokens: usize,
+    },
+    /// Whole-batch lockstep: admit a batch, run every request to
+    /// completion serially, then admit again.
+    Lockstep,
+}
 
 /// One request as the simulator sees it.
 #[derive(Debug, Clone, Copy)]
@@ -50,6 +78,12 @@ pub struct SimOutcome {
     /// Absolute completion time per request, aligned with the input
     /// trace order (used to chain cascade tiers).
     pub completions: Vec<f64>,
+    /// Max KV pages any one replica had allocated at once (0 outside
+    /// [`DesMode::Paged`]).
+    pub peak_pages: usize,
+    /// Sequences preempted-and-requeued across the pool (0 outside
+    /// [`DesMode::Paged`]).
+    pub preemptions: usize,
 }
 
 impl SimOutcome {
@@ -75,6 +109,10 @@ impl SimOutcome {
 enum EventKind {
     Arrival(usize),
     IterDone(usize),
+    /// Lockstep: one request of a replica's serial batch finished.
+    ReqDone(usize, usize),
+    /// Lockstep: a replica's whole batch finished; admit the next.
+    BatchEnd(usize),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -113,6 +151,25 @@ struct ActiveReq {
     remaining: u32,
 }
 
+/// Least-outstanding-work dispatch shared by every simulation mode:
+/// pick the replica with the smallest backlog normalized by its decode
+/// speed, so faster replicas attract proportionally more work (matches
+/// the coordinator's real dispatcher). `reps` yields each replica's
+/// (backlog_tokens, model) in pool order.
+fn pick_least_loaded(reps: impl Iterator<Item = (f64, &ReplicaModel)>) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for (i, (backlog, model)) in reps.enumerate() {
+        let speed = model.decode_throughput(model.max_batch).max(1e-9);
+        let score = backlog / speed;
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
+}
+
 struct Replica<'a> {
     model: &'a ReplicaModel,
     queue: VecDeque<usize>,
@@ -126,6 +183,20 @@ struct Replica<'a> {
 impl<'a> Replica<'a> {
     fn idle(&self, now: f64) -> bool {
         self.busy_until <= now
+    }
+}
+
+/// Simulate `replicas` over `trace` under the given execution
+/// discipline.
+pub fn simulate_mode(
+    replicas: &[ReplicaModel],
+    trace: &[SimRequest],
+    mode: DesMode,
+) -> SimOutcome {
+    match mode {
+        DesMode::Continuous => simulate(replicas, trace),
+        DesMode::Paged { page_tokens } => simulate_paged(replicas, trace, page_tokens),
+        DesMode::Lockstep => simulate_lockstep(replicas, trace),
     }
 }
 
@@ -170,20 +241,9 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         now = ev.time;
         match ev.kind {
             EventKind::Arrival(id) => {
-                // Least-outstanding-work dispatch, normalized by a
-                // replica's decode speed so faster replicas attract
-                // proportionally more work.
                 let req = &trace[id];
-                let mut best = 0usize;
-                let mut best_score = f64::INFINITY;
-                for (i, rep) in pool.iter().enumerate() {
-                    let speed = rep.model.decode_throughput(rep.model.max_batch).max(1e-9);
-                    let score = rep.backlog_tokens / speed;
-                    if score < best_score {
-                        best_score = score;
-                        best = i;
-                    }
-                }
+                let best =
+                    pick_least_loaded(pool.iter().map(|r| (r.backlog_tokens, r.model)));
                 let rep = &mut pool[best];
                 rep.queue.push_back(id);
                 rep.backlog_tokens += req.output_tokens as f64
@@ -214,6 +274,9 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
                     start_iteration(rep, ri, now, trace, &mut heap, &mut seq);
                 }
             }
+            EventKind::ReqDone(..) | EventKind::BatchEnd(..) => {
+                unreachable!("lockstep-only event in continuous simulation")
+            }
         }
     }
 
@@ -232,6 +295,8 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         makespan,
         utilization,
         completions,
+        peak_pages: 0,
+        preemptions: 0,
     }
 }
 
@@ -264,6 +329,291 @@ fn start_iteration(
     *seq += 1;
     heap.push(Event { time: rep.busy_until, seq: *seq, kind: EventKind::IterDone(idx) });
     let _ = idx;
+}
+
+/// One request's service time under whole-batch lockstep: the request
+/// runs alone (no batchmates amortize the per-iteration weight read),
+/// exactly like a worker calling `TierBackend::generate` serially.
+fn lockstep_service(m: &ReplicaModel, req: &SimRequest) -> f64 {
+    m.prefill_latency(req.input_tokens as f64)
+        + req.output_tokens.max(1) as f64 * m.decode_iteration(1)
+}
+
+/// Whole-batch lockstep simulation: a replica admits up to `max_batch`
+/// requests, serves them serially to completion, and only then admits
+/// more — the pre-engine server discipline, kept as the measurable
+/// baseline for `cascadia bench`.
+pub fn simulate_lockstep(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
+    assert!(!replicas.is_empty(), "simulate() with no replicas");
+    let usable: Vec<&ReplicaModel> =
+        replicas.iter().filter(|r| r.max_batch > 0).collect();
+    assert!(!usable.is_empty(), "no replica has KV capacity");
+
+    struct Rep<'a> {
+        model: &'a ReplicaModel,
+        queue: VecDeque<usize>,
+        busy: bool,
+        busy_time: f64,
+        backlog_tokens: f64,
+    }
+
+    /// Admit one batch and schedule its serial completions.
+    fn start_batch(
+        rep: &mut Rep<'_>,
+        ri: usize,
+        now: f64,
+        trace: &[SimRequest],
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let mut t = now;
+        let mut n = 0usize;
+        while n < rep.model.max_batch {
+            let Some(id) = rep.queue.pop_front() else { break };
+            t += lockstep_service(rep.model, &trace[id]);
+            *seq += 1;
+            heap.push(Event { time: t, seq: *seq, kind: EventKind::ReqDone(ri, id) });
+            n += 1;
+        }
+        if n == 0 {
+            rep.busy = false;
+            return;
+        }
+        rep.busy = true;
+        rep.busy_time += t - now;
+        *seq += 1;
+        heap.push(Event { time: t, seq: *seq, kind: EventKind::BatchEnd(ri) });
+    }
+
+    let mut pool: Vec<Rep> = usable
+        .iter()
+        .map(|m| Rep {
+            model: m,
+            queue: VecDeque::new(),
+            busy: false,
+            busy_time: 0.0,
+            backlog_tokens: 0.0,
+        })
+        .collect();
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (id, r) in trace.iter().enumerate() {
+        seq += 1;
+        heap.push(Event { time: r.arrival, seq, kind: EventKind::Arrival(id) });
+    }
+
+    let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
+    let mut completed = 0usize;
+    let mut now = 0.0f64;
+    let mut total_tokens = 0u64;
+
+    while let Some(ev) = heap.pop() {
+        now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(id) => {
+                let req = &trace[id];
+                let best =
+                    pick_least_loaded(pool.iter().map(|r| (r.backlog_tokens, r.model)));
+                let rep = &mut pool[best];
+                rep.queue.push_back(id);
+                rep.backlog_tokens +=
+                    req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
+                if !rep.busy {
+                    start_batch(rep, best, now, trace, &mut heap, &mut seq);
+                }
+            }
+            EventKind::ReqDone(ri, id) => {
+                let rep = &mut pool[ri];
+                let out = trace[id].output_tokens.max(1) as u64;
+                total_tokens += out;
+                rep.backlog_tokens = (rep.backlog_tokens - out as f64).max(0.0);
+                latencies_by_id[id] = now - trace[id].arrival;
+                completions[id] = now;
+                completion_order.push(id);
+                completed += 1;
+            }
+            EventKind::BatchEnd(ri) => {
+                let rep = &mut pool[ri];
+                rep.busy = false;
+                if !rep.queue.is_empty() {
+                    start_batch(rep, ri, now, trace, &mut heap, &mut seq);
+                }
+            }
+            EventKind::IterDone(_) => {
+                unreachable!("continuous-only event in lockstep simulation")
+            }
+        }
+    }
+
+    assert_eq!(completed, trace.len(), "simulation lost requests");
+    let makespan = now.max(1e-9);
+    let utilization = stats::mean(
+        &pool.iter().map(|r| r.busy_time / makespan).collect::<Vec<_>>(),
+    );
+    SimOutcome {
+        latencies: completion_order.iter().map(|&id| latencies_by_id[id]).collect(),
+        throughput_rps: completed as f64 / makespan,
+        tokens_per_sec: total_tokens as f64 / makespan,
+        makespan,
+        utilization,
+        completions,
+        peak_pages: 0,
+        preemptions: 0,
+    }
+}
+
+/// Paged continuous-batching simulation: admission, growth, and
+/// preemption run through the live engine's [`IterationScheduler`]
+/// against a [`KvPool`] sized from each replica's memory budget
+/// ([`ReplicaModel::kv_pages_total`]) — schedule-time estimates and
+/// the runtime share one policy by construction.
+pub fn simulate_paged(
+    replicas: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+) -> SimOutcome {
+    assert!(!replicas.is_empty(), "simulate() with no replicas");
+    let page_tokens = page_tokens.max(1);
+    let usable: Vec<&ReplicaModel> = replicas
+        .iter()
+        .filter(|r| r.max_batch > 0 && r.kv_pages_total(page_tokens) > 0)
+        .collect();
+    assert!(!usable.is_empty(), "no replica has KV capacity");
+
+    struct Rep<'a> {
+        model: &'a ReplicaModel,
+        sched: IterationScheduler,
+        /// Sequences advancing in the in-flight iteration.
+        inflight: Vec<u64>,
+        busy: bool,
+        busy_time: f64,
+        backlog_tokens: f64,
+    }
+
+    /// Plan and launch one iteration (prefill of admissions charged in,
+    /// like the continuous simulator).
+    fn start_iter(
+        rep: &mut Rep<'_>,
+        ri: usize,
+        now: f64,
+        trace: &[SimRequest],
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let plan = rep.sched.next_iteration();
+        if plan.batch() == 0 {
+            rep.busy = false;
+            rep.inflight.clear();
+            return;
+        }
+        let mut prefill_cost = 0.0;
+        for &id in &plan.admitted {
+            prefill_cost +=
+                rep.model.prefill_latency(trace[id as usize].input_tokens as f64);
+        }
+        rep.inflight = plan.admitted.iter().chain(&plan.decode).copied().collect();
+        let iter = rep.model.decode_iteration(rep.inflight.len())
+            / rep.model.pp_capacity_factor;
+        let dt = iter + prefill_cost;
+        rep.busy = true;
+        rep.busy_time += dt;
+        *seq += 1;
+        heap.push(Event { time: now + dt, seq: *seq, kind: EventKind::IterDone(ri) });
+    }
+
+    let mut pool: Vec<Rep> = usable
+        .iter()
+        .map(|m| Rep {
+            model: m,
+            sched: IterationScheduler::new(
+                KvPool::new(m.kv_pages_total(page_tokens), page_tokens),
+                m.max_batch.max(1),
+            ),
+            inflight: Vec::new(),
+            busy: false,
+            busy_time: 0.0,
+            backlog_tokens: 0.0,
+        })
+        .collect();
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (id, r) in trace.iter().enumerate() {
+        seq += 1;
+        heap.push(Event { time: r.arrival, seq, kind: EventKind::Arrival(id) });
+    }
+
+    let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
+    let mut completed = 0usize;
+    let mut now = 0.0f64;
+    let mut total_tokens = 0u64;
+
+    while let Some(ev) = heap.pop() {
+        now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(id) => {
+                let req = &trace[id];
+                let best =
+                    pick_least_loaded(pool.iter().map(|r| (r.backlog_tokens, r.model)));
+                let rep = &mut pool[best];
+                rep.sched.enqueue(
+                    id as u64,
+                    req.input_tokens as usize,
+                    req.output_tokens.max(1) as usize,
+                );
+                rep.backlog_tokens +=
+                    req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
+                if !rep.busy {
+                    start_iter(rep, best, now, trace, &mut heap, &mut seq);
+                }
+            }
+            EventKind::IterDone(ri) => {
+                let rep = &mut pool[ri];
+                let ids = std::mem::take(&mut rep.inflight);
+                total_tokens += ids.len() as u64;
+                for id in ids {
+                    rep.backlog_tokens = (rep.backlog_tokens - 1.0).max(0.0);
+                    if rep.sched.advance(id) {
+                        rep.sched.retire(id);
+                        let uid = id as usize;
+                        latencies_by_id[uid] = now - trace[uid].arrival;
+                        completions[uid] = now;
+                        completion_order.push(uid);
+                        completed += 1;
+                    }
+                }
+                if rep.sched.n_seqs() > 0 {
+                    start_iter(rep, ri, now, trace, &mut heap, &mut seq);
+                } else {
+                    rep.busy = false;
+                }
+            }
+            EventKind::ReqDone(..) | EventKind::BatchEnd(..) => {
+                unreachable!("lockstep-only event in paged simulation")
+            }
+        }
+    }
+
+    assert_eq!(completed, trace.len(), "simulation lost requests");
+    let makespan = now.max(1e-9);
+    let utilization = stats::mean(
+        &pool.iter().map(|r| r.busy_time / makespan).collect::<Vec<_>>(),
+    );
+    SimOutcome {
+        latencies: completion_order.iter().map(|&id| latencies_by_id[id]).collect(),
+        throughput_rps: completed as f64 / makespan,
+        tokens_per_sec: total_tokens as f64 / makespan,
+        makespan,
+        utilization,
+        completions,
+        peak_pages: pool.iter().map(|r| r.sched.pool().peak_in_use()).max().unwrap_or(0),
+        preemptions: pool.iter().map(|r| r.sched.preemptions() as usize).sum(),
+    }
 }
 
 #[cfg(test)]
@@ -364,5 +714,71 @@ mod tests {
     #[should_panic(expected = "no replicas")]
     fn empty_pool_panics() {
         simulate(&[], &[]);
+    }
+
+    // ---- Execution-discipline modes ----
+
+    #[test]
+    fn single_request_pins_continuous_and_paged_to_lockstep() {
+        // With one request there is nothing to batch: all three
+        // disciplines must charge exactly prefill + out x iter(1).
+        let pool = vec![replica(2)];
+        let trace =
+            vec![SimRequest { arrival: 0.0, input_tokens: 512, output_tokens: 64 }];
+        let lock = simulate_mode(&pool, &trace, DesMode::Lockstep);
+        let expected = pool[0].prefill_latency(512.0) + 64.0 * pool[0].decode_iteration(1);
+        assert!(
+            (lock.latencies[0] - expected).abs() < 1e-9,
+            "lockstep {} vs closed form {}",
+            lock.latencies[0],
+            expected
+        );
+        for mode in [DesMode::Continuous, DesMode::Paged { page_tokens: 16 }] {
+            let out = simulate_mode(&pool, &trace, mode);
+            assert_eq!(out.latencies.len(), 1);
+            let rel = (out.latencies[0] - lock.latencies[0]).abs()
+                / lock.latencies[0].max(1e-12);
+            assert!(rel < 1e-6, "{mode:?}: {} vs lockstep {}", out.latencies[0], lock.latencies[0]);
+        }
+    }
+
+    #[test]
+    fn paged_mode_tracks_pages_within_budget_and_completes() {
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(2.0, 300, 7);
+        let out = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16 });
+        assert_eq!(out.latencies.len(), 300);
+        assert!(out.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
+        assert!(out.peak_pages > 0, "page accounting must be live");
+        assert!(
+            out.peak_pages <= pool[0].kv_pages_total(16),
+            "occupancy {} exceeds the pool budget {}",
+            out.peak_pages,
+            pool[0].kv_pages_total(16)
+        );
+        assert_eq!(out.preemptions, 0, "an amply sized pool never preempts");
+        // Deterministic like the other modes.
+        let again = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16 });
+        assert_eq!(out.latencies, again.latencies);
+        assert_eq!(out.makespan, again.makespan);
+    }
+
+    #[test]
+    fn lockstep_is_slower_than_continuous_under_load() {
+        // Without batch amortization the lockstep discipline must lose
+        // on the same trace — the gap `cascadia bench` measures live.
+        let pool = vec![replica(2)];
+        let cap = pool[0]
+            .capacity(&Workload { rate: 1.0, avg_input: 512.0, avg_output: 128.0 });
+        let trace = poisson_trace(cap * 0.6, 300, 8);
+        let cont = simulate_mode(&pool, &trace, DesMode::Continuous);
+        let lock = simulate_mode(&pool, &trace, DesMode::Lockstep);
+        assert!(
+            lock.p95() > cont.p95(),
+            "lockstep p95 {} should exceed continuous {}",
+            lock.p95(),
+            cont.p95()
+        );
+        assert!(lock.makespan >= cont.makespan * 0.99);
     }
 }

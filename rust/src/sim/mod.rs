@@ -8,7 +8,10 @@
 //! * [`des`] — discrete-event simulation of continuous batching
 //!   (iteration-level admission, Sarathi-style prefill accounting,
 //!   least-work dispatch across replicas). Used to score final
-//!   candidate plans and to generate every end-to-end figure.
+//!   candidate plans and to generate every end-to-end figure. Also
+//!   simulates the paged-KV discipline (through the live engine's own
+//!   [`crate::engine::IterationScheduler`]) and the whole-batch
+//!   lockstep baseline — see [`des::DesMode`].
 //!
 //! The paper uses the ETH EASL "Scratchpad" simulator for the same
 //! role; this module is the from-scratch substrate replacing it.
@@ -17,4 +20,7 @@ pub mod analytic;
 pub mod des;
 
 pub use analytic::estimate_p95;
-pub use des::{simulate, SimOutcome, SimRequest};
+pub use des::{
+    simulate, simulate_lockstep, simulate_mode, simulate_paged, DesMode, SimOutcome,
+    SimRequest,
+};

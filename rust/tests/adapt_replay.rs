@@ -72,4 +72,17 @@ fn replay_smoke_runs_the_full_loop_without_drops() {
         assert!((0.0..=1.0).contains(&p.slo_attainment));
         assert!(p.latency.p50 <= p.latency.p99);
     }
+
+    // The replay serves through the continuous-batching engine by
+    // default and reports its queue + page telemetry per tier; page
+    // occupancy never exceeds any pool budget.
+    assert_eq!(report.adaptive.queue.len(), 3, "deepseek cascade has 3 tiers");
+    assert_eq!(report.adaptive.engine.len(), 3);
+    assert!(report.adaptive.queue.iter().any(|q| q.admitted > 0));
+    assert!(report.adaptive.engine.iter().any(|e| e.iterations > 0));
+    assert!(report
+        .adaptive
+        .engine
+        .iter()
+        .all(|e| e.peak_pages <= e.peak_pool_pages && e.forced_expansions == 0));
 }

@@ -1,0 +1,119 @@
+//! Integration tests of the continuous-batching execution engine on
+//! the public serving API: the execution discipline must not change
+//! routing outcomes, the paged simulator must agree with the legacy
+//! continuous simulator when pages never bind, and engine telemetry
+//! must hold the page-budget invariant end to end.
+
+use anyhow::Result;
+use cascadia::cluster::ClusterSpec;
+use cascadia::coordinator::server::{
+    CascadeServer, ResponseJudger, ServerConfig, ServerStats, TierBackend,
+};
+use cascadia::engine::EngineConfig;
+use cascadia::models::llama_cascade;
+use cascadia::perf::ReplicaModel;
+use cascadia::sim::{simulate_mode, DesMode, SimRequest};
+
+/// Tier t answers correctly iff the prompt's difficulty (first token)
+/// is <= t; output length runs to max_new so decode actually iterates.
+struct DifficultyBackend {
+    tier: usize,
+}
+
+impl TierBackend for DifficultyBackend {
+    fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let difficulty = prompt.first().copied().unwrap_or(0);
+        let ok = difficulty <= self.tier as i32;
+        Ok(vec![if ok { 1 } else { 0 }; max_new])
+    }
+}
+
+struct BinaryJudger;
+
+impl ResponseJudger for BinaryJudger {
+    fn score(&self, _prompt: &[i32], output: &[i32]) -> f64 {
+        if output.first() == Some(&1) {
+            90.0
+        } else {
+            10.0
+        }
+    }
+}
+
+fn factory(tier: usize) -> Result<Box<dyn TierBackend>> {
+    Ok(Box::new(DifficultyBackend { tier }))
+}
+
+fn accepting_tiers(stats: &ServerStats, n: usize) -> Vec<usize> {
+    let mut v = vec![usize::MAX; n];
+    for c in &stats.completions {
+        v[c.id] = c.accepting_tier;
+    }
+    v
+}
+
+#[test]
+fn continuous_and_lockstep_route_identically() {
+    // Difficulty i%3 deterministically accepts at tier i%3 under the
+    // 50-point bars; the inner-loop discipline must not change that.
+    let trace: Vec<(f64, Vec<i32>)> =
+        (0..30).map(|i| (0.0, vec![(i % 3) as i32, 5, 6])).collect();
+    let base =
+        ServerConfig::with_thresholds(vec![2, 1, 1], vec![6, 4, 2], vec![50.0, 50.0], 4)
+            .unwrap();
+
+    let lock = CascadeServer::new(base.clone())
+        .unwrap()
+        .serve(&trace, &factory, &BinaryJudger)
+        .unwrap();
+    let engines =
+        vec![EngineConfig { pool_pages: 512, page_tokens: 16, max_running: 8 }; 3];
+    let cont = CascadeServer::new(base.continuous(engines))
+        .unwrap()
+        .serve(&trace, &factory, &BinaryJudger)
+        .unwrap();
+
+    assert_eq!(lock.completions.len(), 30);
+    assert_eq!(cont.completions.len(), 30);
+    assert_eq!(
+        accepting_tiers(&lock, 30),
+        accepting_tiers(&cont, 30),
+        "execution mode must not change routing outcomes"
+    );
+    assert_eq!(lock.per_tier_processed, cont.per_tier_processed);
+
+    // Engine telemetry holds the budget invariant; lockstep reports
+    // zeros.
+    assert!(cont.engine.iter().all(|e| e.peak_pages <= e.peak_pool_pages));
+    assert!(cont.engine[0].iterations > 0);
+    assert!(lock.engine.iter().all(|e| e.iterations == 0));
+    // Queue telemetry reports on both paths.
+    assert_eq!(lock.queue.len(), 3);
+    assert_eq!(cont.queue.len(), 3);
+    assert_eq!(lock.queue[0].admitted, 30);
+    assert_eq!(cont.queue[0].admitted, 30);
+}
+
+#[test]
+fn paged_des_matches_continuous_des_when_pages_never_bind() {
+    // Light load on an amply provisioned replica: page-granular
+    // admission must reproduce the legacy request-count simulator's
+    // timeline (same admissions, same iteration costs).
+    let m = &llama_cascade()[0];
+    let rm = ReplicaModel::new(m, &ClusterSpec::paper_testbed(), 2, 1, 768.0);
+    let trace: Vec<SimRequest> = (0..60)
+        .map(|i| SimRequest {
+            arrival: i as f64 * 0.4,
+            input_tokens: 512,
+            output_tokens: 64,
+        })
+        .collect();
+    let cont = simulate_mode(&[rm.clone()], &trace, DesMode::Continuous);
+    let paged = simulate_mode(&[rm.clone()], &trace, DesMode::Paged { page_tokens: 16 });
+    assert_eq!(cont.latencies.len(), paged.latencies.len());
+    let rel = (paged.p95() - cont.p95()).abs() / cont.p95().max(1e-12);
+    assert!(rel < 1e-6, "paged p95 {} vs continuous {}", paged.p95(), cont.p95());
+    assert_eq!(paged.preemptions, 0);
+    assert!(paged.peak_pages > 0);
+    assert!(paged.peak_pages <= rm.kv_pages_total(16));
+}
