@@ -74,7 +74,13 @@ fn main() {
     b.bench("engine submit+step 256 requests (instant backend)", || {
         let mut engine: EngineCore<u32> = EngineCore::new(
             Box::new(InstantBackend),
-            EngineConfig { pool_pages: 4096, page_tokens: 16, max_running: 32 },
+            EngineConfig {
+                pool_pages: 4096,
+                page_tokens: 16,
+                max_running: 32,
+                prefill_chunk: usize::MAX,
+                share_prefixes: false,
+            },
         );
         for i in 0..256u32 {
             engine.submit(i, vec![1, 2, 3], 4);

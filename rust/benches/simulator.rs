@@ -16,7 +16,7 @@ fn poisson_trace(rate: f64, n: usize, seed: u64) -> Vec<SimRequest> {
     (0..n)
         .map(|_| {
             t += rng.exp(rate);
-            SimRequest { arrival: t, input_tokens: 512, output_tokens: 128 }
+            SimRequest::new(t, 512, 128)
         })
         .collect()
 }

@@ -23,7 +23,7 @@ use crate::cluster::ClusterSpec;
 use crate::coordinator::monitor::MonitorConfig;
 use crate::coordinator::server::{
     CascadeServer, ResponseJudger, ServeControl, ServerConfig, ServerStats, TierBackend,
-    TierEngineStats, TierQueueStats,
+    TierEngineStats, TierQueueStats, TraceEntry,
 };
 use crate::judge::Judger;
 use crate::metrics::{AdaptCounters, LatencySummary};
@@ -403,15 +403,21 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
 
     // Live trace: compressed arrivals; the prompt's first token tags
     // the original request, its length carries the prompt length (so
-    // length-predictive policies behave).
-    let trace: Vec<(f64, Vec<i32>)> = phased
+    // length-predictive policies behave). Each entry carries its own
+    // decode budget — the trace's output-length mixture, capped at the
+    // configured ceiling — instead of one global depth.
+    let trace: Vec<TraceEntry> = phased
         .requests
         .iter()
         .map(|r| {
             let len = (r.input_tokens as usize).clamp(2, 4096);
             let mut prompt = vec![0i32; len];
             prompt[0] = r.id as i32;
-            (r.arrival / cfg.time_scale, prompt)
+            TraceEntry {
+                at: r.arrival / cfg.time_scale,
+                prompt,
+                max_new: Some((r.output_tokens.max(1) as usize).min(cfg.max_new_tokens)),
+            }
         })
         .collect();
 
@@ -439,7 +445,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
 
     // --- Frozen run: the startup plan serves the whole drift. ---
     let stats_frozen = server
-        .serve(&trace, &factory, &live_judger)
+        .serve_entries(&trace, &factory, &live_judger)
         .context("frozen replay run")?;
     let frozen = score_run(&stats_frozen, &phased, cfg, AdaptCounters::default());
 
@@ -473,7 +479,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     );
     let observer = TraceObserver::new(Arc::clone(&controller), phased.requests.clone());
     let stats_adaptive = server
-        .serve_adaptive(&trace, &factory, &live_judger, &control, Some(&observer))
+        .serve_adaptive_entries(&trace, &factory, &live_judger, &control, Some(&observer))
         .context("adaptive replay run")?;
     // Let any still-running background re-schedule settle so counters
     // and the final-plan summary are complete.

@@ -159,6 +159,7 @@ impl ExperimentConfig {
                 use_milp: self.use_milp,
                 uniform_parallelism: self.uniform_parallelism,
                 uniform_allocation: self.uniform_allocation,
+                ..Default::default()
             },
             ..Default::default()
         }

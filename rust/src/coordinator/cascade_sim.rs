@@ -137,11 +137,11 @@ pub fn simulate_cascade(
         idx.sort_by(|&a, &b| ready[a].partial_cmp(&ready[b]).unwrap());
         let trace: Vec<SimRequest> = idx
             .iter()
-            .map(|&i| SimRequest {
-                arrival: ready[i],
-                input_tokens: requests[i].input_tokens,
-                output_tokens: requests[i].output_tokens,
-            })
+            .map(|&i| SimRequest::new(
+                ready[i],
+                requests[i].input_tokens,
+                requests[i].output_tokens,
+            ))
             .collect();
         let replicas = replicas_for(plan, tier, cascade, cluster);
         if replicas.is_empty() {

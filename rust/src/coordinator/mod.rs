@@ -31,5 +31,5 @@ pub use monitor::{Monitor, MonitorConfig};
 pub use net::TcpFrontend;
 pub use server::{
     AdmissionObserver, CascadeServer, ExecMode, ServeControl, ServerConfig, ServerStats,
-    TierBackend, TierEngineStats, TierQueueStats,
+    TierBackend, TierEngineStats, TierQueueStats, TraceEntry,
 };

@@ -31,7 +31,7 @@ use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::batcher::Batcher;
-use crate::engine::{EngineConfig, EngineCore, StepBackend};
+use crate::engine::{prompt_page_hashes, EngineConfig, EngineCore, StepBackend};
 use crate::models::ModelSpec;
 use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
@@ -225,6 +225,9 @@ struct EngineTierCounters {
     preemptions: AtomicUsize,
     iterations: AtomicUsize,
     forced_expansions: AtomicUsize,
+    prefix_hit_tokens: AtomicUsize,
+    shared_claims: AtomicUsize,
+    cow_copies: AtomicUsize,
 }
 
 /// The continuous-batching inner loop of one tier worker: admit from
@@ -269,8 +272,21 @@ fn continuous_worker_loop(
                     let room = share.saturating_sub(engine.n_seqs());
                     for p in b.admit_up_to(room, t0.elapsed().as_secs_f64()) {
                         let prompt = p.item.prompt.clone();
-                        let mn = max_new.load(Ordering::SeqCst).max(1);
-                        engine.submit(p.item, prompt, mn);
+                        let mn = p
+                            .item
+                            .max_new
+                            .unwrap_or_else(|| max_new.load(Ordering::SeqCst))
+                            .max(1);
+                        // Escalated requests arrive with their prompt
+                        // hashes already chained (computed once at
+                        // submission) — a deeper-tier re-serve claims
+                        // shared pages without rehashing.
+                        let hashes = if cfg.page_tokens == DEFAULT_PAGE_TOKENS {
+                            p.item.hashes.clone()
+                        } else {
+                            None
+                        };
+                        engine.submit_with_prefix(p.item, prompt, mn, hashes);
                     }
                 }
                 if !engine.is_idle() {
@@ -301,6 +317,11 @@ fn continuous_worker_loop(
                 counters
                     .forced_expansions
                     .fetch_add(out.forced_expansions, Ordering::SeqCst);
+                counters
+                    .prefix_hit_tokens
+                    .fetch_add(out.prefix_hit_tokens, Ordering::SeqCst);
+                counters.shared_claims.fetch_add(out.shared_claims, Ordering::SeqCst);
+                counters.cow_copies.fetch_add(out.cow_copies, Ordering::SeqCst);
                 if !out.completed.is_empty() {
                     let n = out.completed.len();
                     for fin in out.completed {
@@ -309,6 +330,7 @@ fn continuous_worker_loop(
                             req: fin.payload,
                             output: fin.output,
                             exec_seconds: fin.exec_seconds,
+                            first_token_at: fin.first_token_at,
                         });
                     }
                     tier_state.batcher.lock().unwrap().complete(n);
@@ -454,12 +476,38 @@ impl ServerConfig {
     }
 }
 
+/// One entry of a serving trace: arrival offset, prompt, and an
+/// optional per-request decode budget overriding the server-wide
+/// `max_new_tokens` — traces reproduce their length mixtures instead
+/// of decoding every request to one global depth.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival offset from serve start, seconds.
+    pub at: f64,
+    pub prompt: Vec<i32>,
+    /// Per-request decode budget (None = server default).
+    pub max_new: Option<usize>,
+}
+
+impl TraceEntry {
+    pub fn new(at: f64, prompt: Vec<i32>) -> TraceEntry {
+        TraceEntry { at, prompt, max_new: None }
+    }
+}
+
 /// One in-flight request.
 #[derive(Debug, Clone)]
 struct LiveRequest {
     id: usize,
     prompt: Vec<i32>,
     submitted: Instant,
+    /// Per-request decode budget (None = server default).
+    max_new: Option<usize>,
+    /// Chained prompt page hashes at [`DEFAULT_PAGE_TOKENS`], computed
+    /// once at submission and carried through every escalation so
+    /// deeper-tier engines claim shared prefix pages without
+    /// rehashing. None on lockstep servers (nothing would claim them).
+    hashes: Option<Arc<Vec<u64>>>,
 }
 
 /// Completed-request record.
@@ -472,6 +520,10 @@ pub struct Completion {
     pub e2e_latency: Duration,
     /// Time spent queued (all tiers) vs executing.
     pub queue_latency: Duration,
+    /// Submission to first generated token anywhere in the cascade
+    /// (the entry tier's TTFT; whole-request backends report their
+    /// completion instant — they do not stream).
+    pub ttft: Duration,
 }
 
 /// Queue telemetry of one tier's batcher over a run (the counters the
@@ -507,6 +559,13 @@ pub struct TierEngineStats {
     /// Forced pool expansions (pool smaller than one sequence) — 0 in
     /// any sanely sized deployment.
     pub forced_expansions: usize,
+    /// Prompt tokens served from shared prefix pages instead of being
+    /// re-prefilled (system prompts, retries, cascade re-serves).
+    pub prefix_hit_tokens: usize,
+    /// Pages claimed through the prefix trie.
+    pub shared_claims: usize,
+    /// Copy-on-write page copies (divergence after a shared claim).
+    pub cow_copies: usize,
 }
 
 /// Aggregate statistics of a serving run.
@@ -539,6 +598,17 @@ impl ServerStats {
     pub fn latency_summary(&self) -> crate::metrics::LatencySummary {
         let v: Vec<f64> = self.completions.iter().map(|c| c.e2e_latency.as_secs_f64()).collect();
         crate::metrics::LatencySummary::of(&v)
+    }
+
+    /// p95 of submission-to-first-token latency across completions —
+    /// the tail the chunked-prefill budget exists to flatten (0.0 when
+    /// nothing completed).
+    pub fn p95_ttft(&self) -> f64 {
+        let v: Vec<f64> = self.completions.iter().map(|c| c.ttft.as_secs_f64()).collect();
+        if v.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&v, 0.95)
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -592,7 +662,13 @@ pub struct CascadeServer {
 }
 
 enum RouterMsg {
-    Done { tier: usize, req: LiveRequest, output: Vec<i32>, exec_seconds: f64 },
+    Done {
+        tier: usize,
+        req: LiveRequest,
+        output: Vec<i32>,
+        exec_seconds: f64,
+        first_token_at: Option<Instant>,
+    },
     /// A request that was admitted by a worker that then died; the
     /// router re-queues it on the same tier (surviving replicas pick
     /// it up).
@@ -644,6 +720,20 @@ impl CascadeServer {
         factory: &BackendFactory<'_>,
         judger: &dyn ResponseJudger,
     ) -> Result<ServerStats> {
+        let entries: Vec<TraceEntry> =
+            trace.iter().map(|(at, p)| TraceEntry::new(*at, p.clone())).collect();
+        self.run(&entries, factory, judger, None, None)
+    }
+
+    /// Like [`CascadeServer::serve`], with per-request decode budgets
+    /// ([`TraceEntry::max_new`]) so replayed traces reproduce their
+    /// output-length mixture instead of a single global depth.
+    pub fn serve_entries(
+        &self,
+        trace: &[TraceEntry],
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+    ) -> Result<ServerStats> {
         self.run(trace, factory, judger, None, None)
     }
 
@@ -661,6 +751,21 @@ impl CascadeServer {
         control: &ServeControl,
         observer: Option<&dyn AdmissionObserver>,
     ) -> Result<ServerStats> {
+        let entries: Vec<TraceEntry> =
+            trace.iter().map(|(at, p)| TraceEntry::new(*at, p.clone())).collect();
+        self.serve_adaptive_entries(&entries, factory, judger, control, observer)
+    }
+
+    /// [`CascadeServer::serve_adaptive`] over [`TraceEntry`] records
+    /// (per-request decode budgets).
+    pub fn serve_adaptive_entries(
+        &self,
+        trace: &[TraceEntry],
+        factory: &BackendFactory<'_>,
+        judger: &dyn ResponseJudger,
+        control: &ServeControl,
+        observer: Option<&dyn AdmissionObserver>,
+    ) -> Result<ServerStats> {
         if control.n_tiers != self.config.replicas.len() {
             anyhow::bail!(
                 "control is sized for {} tiers but the server runs {}",
@@ -673,7 +778,7 @@ impl CascadeServer {
 
     fn run(
         &self,
-        trace: &[(f64, Vec<i32>)],
+        trace: &[TraceEntry],
         factory: &BackendFactory<'_>,
         judger: &dyn ResponseJudger,
         control: Option<&ServeControl>,
@@ -713,6 +818,9 @@ impl CascadeServer {
             .collect();
         let (tx, rx) = channel::<RouterMsg>();
         let queue_time: Mutex<HashMap<usize, f64>> = Mutex::new(HashMap::new());
+        // First-token instant per request id (the entry tier's — set
+        // once, survives escalations).
+        let first_tokens: Mutex<HashMap<usize, Duration>> = Mutex::new(HashMap::new());
 
         let stats = std::thread::scope(|scope| -> Result<ServerStats> {
             // --- Workers (spawnable mid-run for hot-swap scale-up) ---
@@ -805,12 +913,14 @@ impl CascadeServer {
                         let mut iter = batch.into_iter();
                         while let Some(pending) = iter.next() {
                             let started = Instant::now();
+                            let mn = pending
+                                .item
+                                .max_new
+                                .unwrap_or_else(|| max_new.load(Ordering::SeqCst))
+                                .max(1);
                             let result =
                                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                    backend.generate(
-                                        &pending.item.prompt,
-                                        max_new.load(Ordering::SeqCst),
-                                    )
+                                    backend.generate(&pending.item.prompt, mn)
                                 }))
                                 .unwrap_or_else(|p| {
                                     Err(anyhow::anyhow!(
@@ -825,6 +935,9 @@ impl CascadeServer {
                                         req: pending.item,
                                         output,
                                         exec_seconds: started.elapsed().as_secs_f64(),
+                                        // Lockstep does not stream; the
+                                        // first token lands with the rest.
+                                        first_token_at: Some(Instant::now()),
                                     });
                                 }
                                 Err(e) => {
@@ -869,9 +982,11 @@ impl CascadeServer {
             // runs (length-predictive entry). ---
             let submit_tiers = &tiers;
             let policy_ref = &policy;
+            let hash_prompts =
+                engine_mode.is_some_and(|v| v.iter().any(|e| e.share_prefixes));
             scope.spawn(move || {
-                for (i, (offset, prompt)) in trace.iter().enumerate() {
-                    let due = Duration::from_secs_f64(*offset);
+                for (i, entry) in trace.iter().enumerate() {
+                    let due = Duration::from_secs_f64(entry.at);
                     let elapsed = t0.elapsed();
                     if due > elapsed {
                         std::thread::sleep(due - elapsed);
@@ -882,11 +997,22 @@ impl CascadeServer {
                     if let Some(obs) = observer {
                         obs.on_admit(i);
                     }
-                    let features = RequestFeatures::live(prompt.len());
-                    let entry =
+                    let features = RequestFeatures::live(entry.prompt.len());
+                    let entry_tier =
                         policy_ref.read().unwrap().entry_tier(&features, c).min(c - 1);
-                    submit_tiers[entry].push(
-                        LiveRequest { id: i, prompt: prompt.clone(), submitted: Instant::now() },
+                    // Hash the prompt ONCE; every tier (and every
+                    // escalation) reuses the chain.
+                    let hashes = hash_prompts.then(|| {
+                        Arc::new(prompt_page_hashes(&entry.prompt, DEFAULT_PAGE_TOKENS))
+                    });
+                    submit_tiers[entry_tier].push(
+                        LiveRequest {
+                            id: i,
+                            prompt: entry.prompt.clone(),
+                            submitted: Instant::now(),
+                            max_new: entry.max_new,
+                            hashes,
+                        },
                         t0,
                     );
                 }
@@ -981,8 +1107,14 @@ impl CascadeServer {
                         tiers[tier].push(req, t0);
                         continue;
                     }
-                    RouterMsg::Done { tier, req, output, exec_seconds } => {
+                    RouterMsg::Done { tier, req, output, exec_seconds, first_token_at } => {
                         per_tier[tier] += 1;
+                        if let Some(at) = first_token_at {
+                            let ttft = at
+                                .checked_duration_since(req.submitted)
+                                .unwrap_or_default();
+                            first_tokens.lock().unwrap().entry(req.id).or_insert(ttft);
+                        }
                         let score = judger.score(&req.prompt, &output);
                         let features = RequestFeatures::live(req.prompt.len());
                         let decision = if tier == c - 1 {
@@ -1004,6 +1136,11 @@ impl CascadeServer {
                                 let mut qt = queue_time.lock().unwrap();
                                 qt.remove(&req.id).unwrap_or(0.0) + exec_seconds
                             };
+                            let ttft = first_tokens
+                                .lock()
+                                .unwrap()
+                                .remove(&req.id)
+                                .unwrap_or(e2e);
                             completions.push(Completion {
                                 id: req.id,
                                 output,
@@ -1013,6 +1150,7 @@ impl CascadeServer {
                                 queue_latency: Duration::from_secs_f64(
                                     (e2e.as_secs_f64() - execd).max(0.0),
                                 ),
+                                ttft,
                             });
                             done += 1;
                         } else {
@@ -1059,6 +1197,11 @@ impl CascadeServer {
                     forced_expansions: engine_counters[t]
                         .forced_expansions
                         .load(Ordering::SeqCst),
+                    prefix_hit_tokens: engine_counters[t]
+                        .prefix_hit_tokens
+                        .load(Ordering::SeqCst),
+                    shared_claims: engine_counters[t].shared_claims.load(Ordering::SeqCst),
+                    cow_copies: engine_counters[t].cow_copies.load(Ordering::SeqCst),
                 })
                 .collect();
             Ok(ServerStats {
@@ -1498,7 +1641,16 @@ mod tests {
     // ---- Continuous-batching engine on the live path ----
 
     fn engine_cfgs(n: usize) -> Vec<EngineConfig> {
-        vec![EngineConfig { pool_pages: 256, page_tokens: 16, max_running: 8 }; n]
+        vec![
+            EngineConfig {
+                pool_pages: 256,
+                page_tokens: 16,
+                max_running: 8,
+                prefill_chunk: usize::MAX,
+                share_prefixes: true,
+            };
+            n
+        ]
     }
 
     fn continuous_config() -> ServerConfig {
@@ -1593,7 +1745,13 @@ mod tests {
         let next = ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 4)
             .unwrap()
             .continuous(vec![
-                EngineConfig { pool_pages: 128, page_tokens: 16, max_running: 8 };
+                EngineConfig {
+                    pool_pages: 128,
+                    page_tokens: 16,
+                    max_running: 8,
+                    prefill_chunk: usize::MAX,
+                    share_prefixes: true,
+                };
                 2
             ]);
         let swap = SwapAt {
@@ -1636,7 +1794,13 @@ mod tests {
             ServerConfig::with_thresholds(vec![1, 1], vec![4, 4], vec![50.0], 20)
                 .unwrap()
                 .continuous(vec![
-                    EngineConfig { pool_pages: 4, page_tokens: 16, max_running: 4 };
+                    EngineConfig {
+                        pool_pages: 4,
+                        page_tokens: 16,
+                        max_running: 4,
+                        prefill_chunk: usize::MAX,
+                        share_prefixes: false,
+                    };
                     2
                 ]),
         )

@@ -1,28 +1,43 @@
 //! The calibrated serving benchmark behind `cascadia bench`:
 //! whole-batch lockstep vs the continuous-batching engine on a bursty
-//! phase-shift trace, through the REAL [`CascadeServer`] routing path.
+//! phase-shift trace, through the REAL [`CascadeServer`] routing path —
+//! plus two engine-feature sections: prefix sharing on a prefix-heavy
+//! trace and chunked prefill on a long-prompt mix.
 //!
-//! Both modes serve the identical trace with backends whose costs come
-//! from the same [`ReplicaModel`] the scheduler optimizes against:
+//! Both headline modes serve the identical trace with backends whose
+//! costs come from the same [`ReplicaModel`] the scheduler optimizes
+//! against:
 //!
 //! * **lockstep** — a worker's `generate` sleeps the whole-request
 //!   cost `prefill + tokens × decode_iteration(1)`: serial execution
 //!   cannot amortize the per-iteration weight read across batchmates;
 //! * **continuous** — a native [`StepBackend`] charges
-//!   `prefill(prompt)` at admission and `decode_iteration(b)` per
+//!   `prefill(chunk)` per prefill chunk and `decode_iteration(b)` per
 //!   iteration at the LIVE batch size `b`, so batching amortization is
-//!   exactly what the cost model says it is.
+//!   exactly what the cost model says it is. Prompt tokens served from
+//!   shared prefix pages are never prefilled at all.
+//!
+//! The **prefix** section serves a trace where every request carries a
+//! shared system prompt twice — prefix trie off vs on — and reports
+//! the peak page occupancy and backend-prefilled token reduction
+//! (escalations re-serve their prompt at tier 1, so the deeper tier
+//! shares across escalated requests too). The **chunked** section
+//! serves a short/long prompt mix twice — whole-prompt admission vs a
+//! chunk budget — and reports the p95 TTFT reduction from removing
+//! prefill head-of-line blocking.
 //!
 //! Time is compressed by `time_scale` (arrivals and sleeps divided,
 //! latencies multiplied back for reporting) and decode is represented
 //! at `token_scale` tokens per engine step so a run stays in CI
-//! budgets. Arrival rates are derived from the model's own capacity
-//! terms — the burst phase is provisioned above lockstep capacity but
-//! inside continuous capacity, which is precisely the regime the
-//! engine exists for. The report (`BENCH_serving.json`) records both
-//! modes' tail latency/throughput, per-tier queue telemetry, and the
-//! engine's page occupancy (which must never exceed the pool budget).
+//! budgets. Per-request decode budgets come from the trace's own
+//! output lengths ([`TraceEntry::max_new`]), so both modes reproduce
+//! the trace's length mixture instead of a constant depth. Arrival
+//! rates are derived from the model's own capacity terms. The report
+//! (`BENCH_serving.json`) is the perf-trajectory artifact CI gates on
+//! against `BENCH_baseline.json`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -30,14 +45,15 @@ use anyhow::{Context, Result};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::server::{
     CascadeServer, ExecMode, ResponseJudger, ServerConfig, ServerStats, TierBackend,
-    TierEngineStats, TierQueueStats,
+    TierEngineStats, TierQueueStats, TraceEntry,
 };
 use crate::judge::Judger;
 use crate::metrics::LatencySummary;
 use crate::models::{llama_cascade, ModelSpec};
-use crate::perf::ReplicaModel;
+use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 use crate::router::PolicySpec;
 use crate::util::json::Json;
+use crate::util::stats;
 use crate::workload::{estimate_stats, generate_phased, paper_trace, PhasedTraceSpec, Request};
 
 use super::core::{EngineConfig, StepBackend};
@@ -53,7 +69,8 @@ pub struct BenchConfig {
     pub time_scale: f64,
     /// Tokens represented per engine decode step.
     pub token_scale: usize,
-    /// Engine decode steps per request (`max_new_tokens`).
+    /// MEAN engine decode steps per request (per-request budgets scale
+    /// around this with the trace's output-length mixture).
     pub decode_steps: usize,
     pub calm_requests: usize,
     pub burst_requests: usize,
@@ -62,6 +79,20 @@ pub struct BenchConfig {
     /// Tier-0 acceptance bar.
     pub threshold: f64,
     pub page_tokens: usize,
+    /// Prefill chunk budget of the continuous engine (headline +
+    /// chunked section's "chunked" arm).
+    pub prefill_chunk: usize,
+    /// Prefix section: requests served, shared system-prompt tokens,
+    /// and unique tail tokens per request.
+    pub prefix_requests: usize,
+    pub prefix_tokens: usize,
+    pub prefix_tail_tokens: usize,
+    /// Chunked section: short requests, long requests, and their
+    /// prompt lengths.
+    pub mix_short_requests: usize,
+    pub mix_long_requests: usize,
+    pub mix_short_tokens: usize,
+    pub mix_long_tokens: usize,
 }
 
 impl BenchConfig {
@@ -76,6 +107,14 @@ impl BenchConfig {
             burstiness: 4.0,
             threshold: 60.0,
             page_tokens: 16,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            prefix_requests: 160,
+            prefix_tokens: 192,
+            prefix_tail_tokens: 64,
+            mix_short_requests: 120,
+            mix_long_requests: 4,
+            mix_short_tokens: 96,
+            mix_long_tokens: 2048,
         }
     }
 
@@ -88,8 +127,19 @@ impl BenchConfig {
             time_scale: 240.0,
             token_scale: 48,
             decode_steps: 6,
+            prefix_requests: 60,
+            mix_short_requests: 48,
+            mix_long_requests: 2,
             ..BenchConfig::full()
         }
+    }
+
+    /// Scale the prefix-heavy section up (the nightly `--prefix-heavy`
+    /// trace): more requests, longer shared prefix.
+    pub fn prefix_heavy(mut self) -> BenchConfig {
+        self.prefix_requests *= 2;
+        self.prefix_tokens *= 2;
+        self
     }
 }
 
@@ -99,6 +149,7 @@ pub struct ModeReport {
     pub label: String,
     pub served: usize,
     pub latency: LatencySummary,
+    pub p95_ttft_s: f64,
     pub throughput_rps: f64,
     pub makespan_s: f64,
     pub per_tier_processed: Vec<usize>,
@@ -106,8 +157,42 @@ pub struct ModeReport {
     pub engine: Vec<TierEngineStats>,
 }
 
-/// The lockstep-vs-continuous comparison written to
-/// `BENCH_serving.json`.
+/// Prefix-sharing section: the same prefix-heavy trace with the trie
+/// off vs on.
+#[derive(Debug, Clone)]
+pub struct PrefixReport {
+    pub requests: usize,
+    pub shared_prefix_tokens: usize,
+    /// Sum over tiers of the peak page occupancy, trie off / on.
+    pub baseline_peak_pages: usize,
+    pub shared_peak_pages: usize,
+    /// Prompt tokens the backends actually prefilled, trie off / on
+    /// (escalation re-prefill cost included).
+    pub baseline_prefill_tokens: usize,
+    pub shared_prefill_tokens: usize,
+    /// Tokens served from shared pages in the trie-on run.
+    pub prefix_hit_tokens: usize,
+    pub cow_copies: usize,
+    /// Sharing cut BOTH peak occupancy and prefilled tokens.
+    pub win: bool,
+}
+
+/// Chunked-prefill section: the same short/long mix with whole-prompt
+/// admission vs the chunk budget.
+#[derive(Debug, Clone)]
+pub struct ChunkedReport {
+    pub requests: usize,
+    pub long_prompt_tokens: usize,
+    pub prefill_chunk: usize,
+    /// p95 submission-to-first-token, uncompressed seconds.
+    pub whole_p95_ttft_s: f64,
+    pub chunked_p95_ttft_s: f64,
+    /// whole / chunked (>1 = chunking wins).
+    pub ttft_speedup: f64,
+    pub win: bool,
+}
+
+/// The full benchmark written to `BENCH_serving.json`.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
     pub calm_rate: f64,
@@ -121,13 +206,21 @@ pub struct BenchReport {
     /// continuous throughput / lockstep throughput (>1 = engine wins).
     pub throughput_gain: f64,
     /// Page occupancy stayed within the pool budget in every iteration
-    /// (and no forced expansions fired).
+    /// (and no forced expansions fired) across ALL continuous runs.
     pub occupancy_ok: bool,
     /// Continuous beat lockstep on BOTH p95 and throughput.
     pub win: bool,
+    pub prefix: PrefixReport,
+    pub chunked: ChunkedReport,
 }
 
 impl BenchReport {
+    /// Every gate the bench enforces: headline win, page budgets,
+    /// prefix-sharing win, chunked-TTFT win.
+    pub fn all_green(&self) -> bool {
+        self.win && self.occupancy_ok && self.prefix.win && self.chunked.win
+    }
+
     pub fn to_json(&self) -> Json {
         let mode = |m: &ModeReport| {
             Json::obj(vec![
@@ -136,6 +229,7 @@ impl BenchReport {
                 ("p95_s", Json::num(m.latency.p95)),
                 ("p99_s", Json::num(m.latency.p99)),
                 ("mean_s", Json::num(m.latency.mean)),
+                ("p95_ttft_s", Json::num(m.p95_ttft_s)),
                 ("throughput_rps", Json::num(m.throughput_rps)),
                 ("makespan_s", Json::num(m.makespan_s)),
                 (
@@ -175,6 +269,12 @@ impl BenchReport {
                                         "forced_expansions",
                                         Json::num(e.forced_expansions as f64),
                                     ),
+                                    (
+                                        "prefix_hit_tokens",
+                                        Json::num(e.prefix_hit_tokens as f64),
+                                    ),
+                                    ("shared_claims", Json::num(e.shared_claims as f64)),
+                                    ("cow_copies", Json::num(e.cow_copies as f64)),
                                 ])
                             })
                             .collect(),
@@ -198,6 +298,47 @@ impl BenchReport {
             ("throughput_gain", Json::num(self.throughput_gain)),
             ("occupancy_ok", Json::Bool(self.occupancy_ok)),
             ("win", Json::Bool(self.win)),
+            (
+                "prefix",
+                Json::obj(vec![
+                    ("requests", Json::num(self.prefix.requests as f64)),
+                    (
+                        "shared_prefix_tokens",
+                        Json::num(self.prefix.shared_prefix_tokens as f64),
+                    ),
+                    (
+                        "baseline_peak_pages",
+                        Json::num(self.prefix.baseline_peak_pages as f64),
+                    ),
+                    ("shared_peak_pages", Json::num(self.prefix.shared_peak_pages as f64)),
+                    (
+                        "baseline_prefill_tokens",
+                        Json::num(self.prefix.baseline_prefill_tokens as f64),
+                    ),
+                    (
+                        "shared_prefill_tokens",
+                        Json::num(self.prefix.shared_prefill_tokens as f64),
+                    ),
+                    ("prefix_hit_tokens", Json::num(self.prefix.prefix_hit_tokens as f64)),
+                    ("cow_copies", Json::num(self.prefix.cow_copies as f64)),
+                    ("win", Json::Bool(self.prefix.win)),
+                ]),
+            ),
+            (
+                "chunked",
+                Json::obj(vec![
+                    ("requests", Json::num(self.chunked.requests as f64)),
+                    (
+                        "long_prompt_tokens",
+                        Json::num(self.chunked.long_prompt_tokens as f64),
+                    ),
+                    ("prefill_chunk", Json::num(self.chunked.prefill_chunk as f64)),
+                    ("whole_p95_ttft_s", Json::num(self.chunked.whole_p95_ttft_s)),
+                    ("chunked_p95_ttft_s", Json::num(self.chunked.chunked_p95_ttft_s)),
+                    ("ttft_speedup", Json::num(self.chunked.ttft_speedup)),
+                    ("win", Json::Bool(self.chunked.win)),
+                ]),
+            ),
         ])
     }
 }
@@ -220,38 +361,44 @@ impl PacedSleeper {
 }
 
 /// Whole-request calibrated backend (the lockstep discipline): serial
-/// execution pays the full unamortized decode cost per request.
+/// execution pays the full unamortized decode cost per request, at the
+/// request's OWN decode budget.
 struct LockstepCalibrated {
-    tier: usize,
-    rm: ReplicaModel,
-    decode_tokens: f64,
-    sleeper: PacedSleeper,
-}
-
-impl TierBackend for LockstepCalibrated {
-    fn generate(&mut self, prompt: &[i32], _max_new: usize) -> Result<Vec<i32>> {
-        let secs = self.rm.prefill_latency(prompt.len() as f64)
-            + self.decode_tokens * self.rm.decode_iteration(1);
-        self.sleeper.pay(secs);
-        Ok(vec![self.tier as i32])
-    }
-}
-
-/// Step-calibrated backend (the continuous engine): decode cost is
-/// `decode_iteration(b)` at the LIVE batch size — amortization is
-/// whatever the cost model says.
-struct ContinuousCalibrated {
     tier: usize,
     rm: ReplicaModel,
     token_scale: f64,
     sleeper: PacedSleeper,
 }
 
-impl StepBackend for ContinuousCalibrated {
-    fn prefill(&mut self, _seq: SeqId, prompt: &[i32]) -> Result<i32> {
-        let secs = self.rm.prefill_latency(prompt.len() as f64);
+impl TierBackend for LockstepCalibrated {
+    fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let secs = self.rm.prefill_latency(prompt.len() as f64)
+            + (max_new as f64 * self.token_scale) * self.rm.decode_iteration(1);
         self.sleeper.pay(secs);
-        Ok(self.tier as i32)
+        Ok(vec![self.tier as i32])
+    }
+}
+
+/// Step-calibrated backend (the continuous engine): decode cost is
+/// `decode_iteration(b)` at the LIVE batch size, prefill cost accrues
+/// per chunk — and prefix-claimed tokens never reach this backend at
+/// all, so their prefill cost is genuinely saved. `prefilled_tokens`
+/// counts the prompt tokens actually processed (the re-prefill cost
+/// the prefix section compares).
+struct ContinuousCalibrated {
+    tier: usize,
+    rm: ReplicaModel,
+    token_scale: f64,
+    sleeper: PacedSleeper,
+    prefilled_tokens: Arc<AtomicUsize>,
+}
+
+impl StepBackend for ContinuousCalibrated {
+    fn prefill_chunk(&mut self, _seq: SeqId, chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        self.prefilled_tokens.fetch_add(chunk.len(), Ordering::SeqCst);
+        let secs = self.rm.prefill_latency(chunk.len() as f64);
+        self.sleeper.pay(secs);
+        Ok(last.then_some(self.tier as i32))
     }
 
     fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
@@ -277,9 +424,10 @@ impl TierBackend for ContinuousCalibrated {
     }
 }
 
-/// Scores a benchmark response with the offline judger (the replay
-/// harness's convention: prompt\[0\] carries the request id, output\[0\]
-/// the serving tier).
+/// Scores a benchmark response with the offline judger. The request id
+/// rides in the prompt's LAST token (so shared prompt *prefixes* stay
+/// byte-identical across requests and the prefix trie sees them);
+/// output\[0\] carries the serving tier.
 struct BenchJudger {
     requests: Vec<Request>,
     models: Vec<ModelSpec>,
@@ -288,7 +436,7 @@ struct BenchJudger {
 
 impl ResponseJudger for BenchJudger {
     fn score(&self, prompt: &[i32], output: &[i32]) -> f64 {
-        let id = prompt.first().copied().unwrap_or(0).max(0) as usize;
+        let id = prompt.last().copied().unwrap_or(0).max(0) as usize;
         let tier = (output.first().copied().unwrap_or(0).max(0) as usize)
             .min(self.models.len() - 1);
         match self.requests.get(id) {
@@ -309,6 +457,7 @@ fn mode_report(label: &str, stats: &ServerStats, time_scale: f64) -> ModeReport 
         label: label.to_string(),
         served: stats.completions.len(),
         latency: LatencySummary::of(&lat),
+        p95_ttft_s: stats.p95_ttft() * time_scale,
         throughput_rps: stats.completions.len() as f64 / makespan.max(1e-9),
         makespan_s: makespan,
         per_tier_processed: stats.per_tier_processed.clone(),
@@ -321,7 +470,93 @@ fn mode_report(label: &str, stats: &ServerStats, time_scale: f64) -> ModeReport 
     }
 }
 
-/// Run the calibrated lockstep-vs-continuous serving benchmark.
+fn occupancy_ok(engine: &[TierEngineStats]) -> bool {
+    engine
+        .iter()
+        .all(|e| e.peak_pages <= e.peak_pool_pages && e.forced_expansions == 0)
+}
+
+/// A deterministic filler token unique to (request, position): shared
+/// prefixes are built separately, tails never collide across requests.
+fn tail_token(id: usize, j: usize) -> i32 {
+    ((id.wrapping_mul(1009) + j.wrapping_mul(31)) % 7919) as i32 + 1
+}
+
+/// Build a prompt of `prefix` shared tokens + `tail` unique tokens,
+/// with the request id in the LAST slot (the judger's key).
+fn prompt_with_prefix(id: usize, prefix_tokens: usize, tail_tokens: usize) -> Vec<i32> {
+    let mut p = Vec::with_capacity(prefix_tokens + tail_tokens.max(1));
+    p.extend((0..prefix_tokens).map(|j| (j % 977) as i32 + 13));
+    p.extend((0..tail_tokens.saturating_sub(1)).map(|j| tail_token(id, j)));
+    p.push(id as i32);
+    p
+}
+
+/// The two replica cost models of the benchmark cascade (the 8B tier
+/// on single GPUs, the 70B tier on a TP-8 server — the shapes the
+/// paper's testbed serves them at).
+fn bench_rms(cascade: &[ModelSpec], cluster: &ClusterSpec, avg_ctx: f64) -> Vec<ReplicaModel> {
+    vec![
+        ReplicaModel::new(&cascade[0], cluster, 1, 1, avg_ctx),
+        ReplicaModel::new(&cascade[1], cluster, 8, 1, avg_ctx),
+    ]
+}
+
+struct ContinuousRun {
+    stats: ServerStats,
+    prefilled_tokens: usize,
+}
+
+/// Serve `trace` on a 2-tier continuous server with the given engine
+/// overrides, returning stats plus the backend-prefilled token count.
+#[allow(clippy::too_many_arguments)]
+fn run_continuous(
+    trace: &[TraceEntry],
+    judger: &BenchJudger,
+    rms: &[ReplicaModel],
+    replicas: Vec<usize>,
+    max_batch: Vec<usize>,
+    threshold: f64,
+    max_new_default: usize,
+    page_tokens: usize,
+    prefill_chunk: usize,
+    share_prefixes: bool,
+    time_scale: f64,
+    token_scale: f64,
+) -> Result<ContinuousRun> {
+    let engines: Vec<EngineConfig> = rms
+        .iter()
+        .map(|rm| EngineConfig {
+            prefill_chunk,
+            share_prefixes,
+            ..EngineConfig::for_replica(rm, page_tokens)
+        })
+        .collect();
+    let server = CascadeServer::new(ServerConfig {
+        replicas,
+        max_batch,
+        policy: PolicySpec::threshold(vec![threshold])?,
+        max_new_tokens: max_new_default,
+        exec: ExecMode::Continuous(engines),
+    })?;
+    let prefilled = Arc::new(AtomicUsize::new(0));
+    let rms_owned = rms.to_vec();
+    let prefilled_f = Arc::clone(&prefilled);
+    let factory = move |tier: usize| -> Result<Box<dyn TierBackend>> {
+        Ok(Box::new(ContinuousCalibrated {
+            tier,
+            rm: rms_owned[tier].clone(),
+            token_scale,
+            sleeper: PacedSleeper { time_scale, debt: 0.0 },
+            prefilled_tokens: Arc::clone(&prefilled_f),
+        }))
+    };
+    let stats = server.serve_entries(trace, &factory, judger)?;
+    Ok(ContinuousRun { stats, prefilled_tokens: prefilled.load(Ordering::SeqCst) })
+}
+
+/// Run the calibrated lockstep-vs-continuous serving benchmark plus
+/// the prefix-sharing and chunked-prefill sections.
 pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
     let cascade = llama_cascade();
     let cluster = ClusterSpec::paper_testbed();
@@ -341,13 +576,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
     );
     let avg_in = estimate_stats(&probe.requests).avg_input;
     let avg_ctx = avg_in + decode_tokens;
-
-    // Replica cost models: the 8B tier on single GPUs, the 70B tier on
-    // a TP-8 server — the shapes the paper's testbed serves them at.
-    let rms: Vec<ReplicaModel> = vec![
-        ReplicaModel::new(&cascade[0], &cluster, 1, 1, avg_ctx),
-        ReplicaModel::new(&cascade[1], &cluster, 8, 1, avg_ctx),
-    ];
+    let rms = bench_rms(&cascade, &cluster, avg_ctx);
 
     // Capacity-derived rates: the burst is provisioned ABOVE lockstep
     // capacity but comfortably inside continuous capacity, on the
@@ -382,14 +611,29 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         },
         cfg.seed,
     );
-    let trace: Vec<(f64, Vec<i32>)> = phased
+    // Per-request decode budgets reproduce the trace's output-length
+    // mixture, normalized so the mean stays at `decode_steps` (which
+    // the rate calibration above assumed).
+    let raw: Vec<f64> =
+        phased.requests.iter().map(|r| r.output_tokens.max(1) as f64).collect();
+    let raw_mean = stats::mean(&raw).max(1.0);
+    let steps_of = |out: f64| -> usize {
+        ((out / raw_mean * cfg.decode_steps as f64).round() as usize)
+            .clamp(1, cfg.decode_steps * 4)
+    };
+    let trace: Vec<TraceEntry> = phased
         .requests
         .iter()
         .map(|r| {
             let len = (r.input_tokens as usize).clamp(2, 4096);
-            let mut prompt = vec![0i32; len];
-            prompt[0] = r.id as i32;
-            (r.arrival / cfg.time_scale, prompt)
+            let mut prompt: Vec<i32> =
+                (0..len - 1).map(|j| tail_token(r.id as usize, j)).collect();
+            prompt.push(r.id as i32);
+            TraceEntry {
+                at: r.arrival / cfg.time_scale,
+                prompt,
+                max_new: Some(steps_of(r.output_tokens.max(1) as f64)),
+            }
         })
         .collect();
 
@@ -409,22 +653,27 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         exec: ExecMode::BatchLockstep,
     })?;
     let rms_lock = rms.clone();
-    let (ts, dt) = (cfg.time_scale, decode_tokens);
+    let (ts, tsc) = (cfg.time_scale, cfg.token_scale as f64);
     let lock_factory = move |tier: usize| -> Result<Box<dyn TierBackend>> {
         Ok(Box::new(LockstepCalibrated {
             tier,
             rm: rms_lock[tier].clone(),
-            decode_tokens: dt,
+            token_scale: tsc,
             sleeper: PacedSleeper { time_scale: ts, debt: 0.0 },
         }))
     };
     let lock_stats = lock_server
-        .serve(&trace, &lock_factory, &judger)
+        .serve_entries(&trace, &lock_factory, &judger)
         .context("lockstep benchmark run")?;
 
-    // --- Continuous engine ---
-    let engines: Vec<EngineConfig> =
-        rms.iter().map(|rm| EngineConfig::for_replica(rm, cfg.page_tokens)).collect();
+    // --- Continuous engine (chunked prefill + prefix trie on) ---
+    let engines: Vec<EngineConfig> = rms
+        .iter()
+        .map(|rm| EngineConfig {
+            prefill_chunk: cfg.prefill_chunk,
+            ..EngineConfig::for_replica(rm, cfg.page_tokens)
+        })
+        .collect();
     let cont_server = CascadeServer::new(ServerConfig {
         replicas: replicas.clone(),
         max_batch: max_batch.clone(),
@@ -433,28 +682,207 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         exec: ExecMode::Continuous(engines),
     })?;
     let rms_cont = rms.clone();
-    let tsc = cfg.token_scale as f64;
+    let cont_prefilled = Arc::new(AtomicUsize::new(0));
+    let cont_prefilled_f = Arc::clone(&cont_prefilled);
     let cont_factory = move |tier: usize| -> Result<Box<dyn TierBackend>> {
         Ok(Box::new(ContinuousCalibrated {
             tier,
             rm: rms_cont[tier].clone(),
             token_scale: tsc,
             sleeper: PacedSleeper { time_scale: ts, debt: 0.0 },
+            prefilled_tokens: Arc::clone(&cont_prefilled_f),
         }))
     };
     let cont_stats = cont_server
-        .serve(&trace, &cont_factory, &judger)
+        .serve_entries(&trace, &cont_factory, &judger)
         .context("continuous benchmark run")?;
 
     let lockstep = mode_report("lockstep", &lock_stats, cfg.time_scale);
     let continuous = mode_report("continuous", &cont_stats, cfg.time_scale);
-    let occupancy_ok = continuous
-        .engine
-        .iter()
-        .all(|e| e.peak_pages <= e.peak_pool_pages && e.forced_expansions == 0);
+    let mut all_occupancy_ok = occupancy_ok(&continuous.engine);
     let p95_speedup = lockstep.latency.p95 / continuous.latency.p95.max(1e-9);
     let throughput_gain = continuous.throughput_rps / lockstep.throughput_rps.max(1e-9);
     let win = p95_speedup > 1.0 && throughput_gain > 1.0;
+
+    // --- Prefix section: trie off vs on, same prefix-heavy trace ---
+    let prefix = {
+        let n = cfg.prefix_requests.max(8);
+        let reqs: Vec<Request> = {
+            // Hard-ish synthetic complexities so a stable fraction
+            // escalates and re-serves its prompt at tier 1.
+            let mut spec = paper_trace(1, 1.0);
+            spec.burstiness = 1.0;
+            crate::workload::generate(&spec, n, cfg.seed.wrapping_add(3))
+        };
+        let avg_in_p = (cfg.prefix_tokens + cfg.prefix_tail_tokens) as f64;
+        let rms_p = bench_rms(&cascade, &cluster, avg_in_p + decode_tokens);
+        // Moderate overlap: ~4 co-resident requests per tier-0 worker.
+        let service = rms_p[0].prefill_latency(avg_in_p)
+            + cfg.decode_steps as f64 * cfg.token_scale as f64 * rms_p[0].decode_iteration(4)
+                / 4.0;
+        let rate = 4.0 * replicas[0] as f64 / service.max(1e-6);
+        let ptrace: Vec<TraceEntry> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| TraceEntry {
+                at: i as f64 / rate / cfg.time_scale,
+                prompt: prompt_with_prefix(i, cfg.prefix_tokens, cfg.prefix_tail_tokens),
+                max_new: Some(cfg.decode_steps),
+            })
+            .collect();
+        let pjudger = BenchJudger {
+            requests: reqs,
+            models: cascade.clone(),
+            judger: Judger::new(cfg.seed.wrapping_add(3)),
+        };
+        let base = run_continuous(
+            &ptrace,
+            &pjudger,
+            &rms_p,
+            replicas.clone(),
+            max_batch.clone(),
+            cfg.threshold,
+            cfg.decode_steps,
+            cfg.page_tokens,
+            cfg.prefill_chunk,
+            false,
+            cfg.time_scale,
+            cfg.token_scale as f64,
+        )
+        .context("prefix baseline run")?;
+        let shared = run_continuous(
+            &ptrace,
+            &pjudger,
+            &rms_p,
+            replicas.clone(),
+            max_batch.clone(),
+            cfg.threshold,
+            cfg.decode_steps,
+            cfg.page_tokens,
+            cfg.prefill_chunk,
+            true,
+            cfg.time_scale,
+            cfg.token_scale as f64,
+        )
+        .context("prefix shared run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&base.stats.engine)
+            && occupancy_ok(&shared.stats.engine);
+        let peak = |s: &ServerStats| -> usize {
+            s.engine.iter().map(|e| e.peak_pages).sum()
+        };
+        let hit: usize = shared.stats.engine.iter().map(|e| e.prefix_hit_tokens).sum();
+        let cows: usize = shared.stats.engine.iter().map(|e| e.cow_copies).sum();
+        let (bp, sp) = (peak(&base.stats), peak(&shared.stats));
+        PrefixReport {
+            requests: n,
+            shared_prefix_tokens: cfg.prefix_tokens,
+            baseline_peak_pages: bp,
+            shared_peak_pages: sp,
+            baseline_prefill_tokens: base.prefilled_tokens,
+            shared_prefill_tokens: shared.prefilled_tokens,
+            prefix_hit_tokens: hit,
+            cow_copies: cows,
+            win: sp < bp && shared.prefilled_tokens < base.prefilled_tokens,
+        }
+    };
+
+    // --- Chunked section: whole vs chunked prefill, short/long mix.
+    // Decode runs token-granular here (token_scale 1, more steps):
+    // prefill must be commensurate with iteration time or head-of-line
+    // blocking is invisible under the headline's coarse token_scale. ---
+    let chunked = {
+        let n_short = cfg.mix_short_requests.max(8);
+        let n_long = cfg.mix_long_requests.max(1);
+        let n = n_short + n_long;
+        let steps_c = 24usize; // decode tokens per request, 1:1 scale
+        let chunk = cfg.prefill_chunk.min(cfg.mix_long_tokens / 4).max(1);
+        let reqs: Vec<Request> = {
+            let mut spec = paper_trace(3, 1.0);
+            spec.burstiness = 1.0;
+            crate::workload::generate(&spec, n, cfg.seed.wrapping_add(5))
+        };
+        let rms_c = bench_rms(
+            &cascade,
+            &cluster,
+            cfg.mix_short_tokens as f64 + steps_c as f64,
+        );
+        // ~60% of tier-0 continuous capacity: queues stay bounded, yet
+        // several shorts land inside one long prompt's whole-prefill
+        // window.
+        let b = (max_batch[0] / replicas[0]).clamp(1, rms_c[0].max_batch.max(1));
+        let cap = replicas[0] as f64 * b as f64
+            / (steps_c as f64 * rms_c[0].decode_iteration(b)
+                + b as f64 * rms_c[0].prefill_latency(cfg.mix_short_tokens as f64));
+        let rate = 0.6 * cap;
+        let every = (n_short / n_long).max(2);
+        let ctrace: Vec<TraceEntry> = (0..n)
+            .map(|i| {
+                let long = i % every == 1 && i / every < n_long;
+                let len = if long { cfg.mix_long_tokens } else { cfg.mix_short_tokens };
+                let mut prompt: Vec<i32> =
+                    (0..len - 1).map(|j| tail_token(i + 100_000, j)).collect();
+                prompt.push(i as i32);
+                TraceEntry {
+                    at: i as f64 / rate / cfg.time_scale,
+                    prompt,
+                    max_new: Some(steps_c),
+                }
+            })
+            .collect();
+        let cjudger = BenchJudger {
+            requests: reqs,
+            models: cascade.clone(),
+            judger: Judger::new(cfg.seed.wrapping_add(5)),
+        };
+        // Accept everything at tier 0 (threshold 0): the section
+        // isolates prefill head-of-line blocking from routing.
+        let whole = run_continuous(
+            &ctrace,
+            &cjudger,
+            &rms_c,
+            replicas.clone(),
+            max_batch.clone(),
+            0.0,
+            steps_c,
+            cfg.page_tokens,
+            usize::MAX,
+            false,
+            cfg.time_scale,
+            1.0,
+        )
+        .context("chunked-section whole-prefill run")?;
+        let chunked_run = run_continuous(
+            &ctrace,
+            &cjudger,
+            &rms_c,
+            replicas.clone(),
+            max_batch.clone(),
+            0.0,
+            steps_c,
+            cfg.page_tokens,
+            chunk,
+            false,
+            cfg.time_scale,
+            1.0,
+        )
+        .context("chunked-section chunked run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&whole.stats.engine)
+            && occupancy_ok(&chunked_run.stats.engine);
+        let wttft = whole.stats.p95_ttft() * cfg.time_scale;
+        let cttft = chunked_run.stats.p95_ttft() * cfg.time_scale;
+        ChunkedReport {
+            requests: n,
+            long_prompt_tokens: cfg.mix_long_tokens,
+            prefill_chunk: chunk,
+            whole_p95_ttft_s: wttft,
+            chunked_p95_ttft_s: cttft,
+            ttft_speedup: wttft / cttft.max(1e-9),
+            win: cttft < wttft,
+        }
+    };
+
     Ok(BenchReport {
         calm_rate,
         burst_rate,
@@ -464,8 +892,10 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         continuous,
         p95_speedup,
         throughput_gain,
-        occupancy_ok,
+        occupancy_ok: all_occupancy_ok,
         win,
+        prefix,
+        chunked,
     })
 }
 
@@ -474,14 +904,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn smoke_bench_continuous_wins_within_budget() {
+    fn smoke_bench_sections_all_win_within_budget() {
         // A sub-smoke run (CI test budget): the engine must beat the
-        // lockstep baseline on tail latency and throughput while the
-        // page occupancy stays inside every pool.
+        // lockstep baseline, prefix sharing must cut pages and
+        // re-prefill cost, chunked prefill must cut p95 TTFT, and page
+        // occupancy must stay inside every pool.
         let cfg = BenchConfig {
             calm_requests: 16,
             burst_requests: 36,
             time_scale: 400.0,
+            prefix_requests: 40,
+            mix_short_requests: 32,
+            mix_long_requests: 1,
             ..BenchConfig::smoke()
         };
         let report = run_serving_bench(&cfg).unwrap();
@@ -497,9 +931,26 @@ mod tests {
             "continuous must win: p95 speedup {:.2}, throughput gain {:.2}",
             report.p95_speedup, report.throughput_gain
         );
+        assert!(
+            report.prefix.win,
+            "prefix sharing must cut pages ({} vs {}) and prefill ({} vs {})",
+            report.prefix.shared_peak_pages,
+            report.prefix.baseline_peak_pages,
+            report.prefix.shared_prefill_tokens,
+            report.prefix.baseline_prefill_tokens
+        );
+        assert!(report.prefix.prefix_hit_tokens > 0);
+        assert!(
+            report.chunked.win,
+            "chunked prefill must cut p95 TTFT ({:.3}s vs {:.3}s)",
+            report.chunked.chunked_p95_ttft_s, report.chunked.whole_p95_ttft_s
+        );
+        assert!(report.all_green());
         // The report serializes with the fields CI greps for.
         let json = report.to_json().to_string();
         assert!(json.contains("\"win\":true"));
         assert!(json.contains("\"occupancy_ok\":true"));
+        assert!(json.contains("\"prefix\""));
+        assert!(json.contains("\"chunked\""));
     }
 }

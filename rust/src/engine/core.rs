@@ -9,6 +9,16 @@
 //! no longer wait for long batchmates, and the KV budget is enforced
 //! token-by-token instead of as a static request count.
 //!
+//! Prefill is **chunked**: the scheduler slices a prompt into
+//! `prefill_chunk`-token pieces interleaved with decode iterations, so
+//! a long prompt never stalls the whole batch for its full prefill
+//! (the Sarathi discipline, now real instead of approximated). Prompts
+//! whose prefix pages are already resident — shared system prompts,
+//! same-prompt retries, cascade re-serves at a deeper tier — claim
+//! those pages from the pool's prefix trie and prefill only the
+//! remainder; a full-prompt hit skips the backend's prefill entirely
+//! and decodes its first token immediately (the prefix-hit fast path).
+//!
 //! Backends plug in behind the existing
 //! [`TierBackend`](crate::coordinator::server::TierBackend) trait. A
 //! backend that can step token-by-token exposes a [`StepBackend`]
@@ -16,28 +26,38 @@
 //! backends do — their decode cost is
 //! [`crate::perf::ReplicaModel::decode_iteration`] at the live batch
 //! size). A whole-request backend is adapted transparently: its
-//! `generate` runs at prefill and the engine releases the cached
-//! tokens one iteration at a time, so KV-page accounting, admission
-//! order, and preemption behave identically either way.
+//! `generate` runs when prefill completes and the engine releases the
+//! cached tokens one iteration at a time, so KV-page accounting,
+//! admission order, and preemption behave identically either way
+//! (prefix sharing is disabled for adapted backends — they recompute
+//! whole requests and cannot reuse resident KV).
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::server::TierBackend;
-use crate::perf::ReplicaModel;
+use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 
-use super::kv::{KvPool, SeqId};
+use super::kv::{prompt_page_hashes, KvPool, SeqId};
 use super::scheduler::IterationScheduler;
 
 /// Iteration-granular generation interface. One instance per worker,
 /// obtained through `TierBackend::step_backend`.
 pub trait StepBackend {
-    /// Process `prompt` for a new sequence and return its first
-    /// generated token. A preempted sequence is prefilled again on
-    /// re-admission (recompute semantics).
-    fn prefill(&mut self, seq: SeqId, prompt: &[i32]) -> Result<i32>;
+    /// Process one prefill chunk of a sequence's prompt. Chunks of one
+    /// sequence arrive in order across iterations; `last` marks the
+    /// chunk completing the prompt, which must return the first
+    /// generated token (`Some`). A preempted sequence is prefilled
+    /// again from the start on re-admission (recompute semantics).
+    ///
+    /// A sequence admitted through a full prefix hit (its prompt's KV
+    /// pages are shared-resident) receives NO prefill call at all —
+    /// its first token comes from [`StepBackend::decode`].
+    fn prefill_chunk(&mut self, seq: SeqId, chunk: &[i32], last: bool)
+        -> Result<Option<i32>>;
 
     /// Advance every listed sequence one decode token; returns exactly
     /// one token per sequence, in order. `seqs.len()` is the live
@@ -58,18 +78,26 @@ pub struct EngineConfig {
     /// Request-count bound on the running batch (on top of the page
     /// bound).
     pub max_running: usize,
+    /// Prefill tokens charged into any one iteration (`usize::MAX` =
+    /// whole-prompt admission, the pre-chunking discipline).
+    pub prefill_chunk: usize,
+    /// Publish/claim prompt pages through the pool's prefix trie.
+    pub share_prefixes: bool,
 }
 
 impl EngineConfig {
     /// Pool sizing for one replica of the given design: the page count
     /// its KV memory budget holds
     /// ([`ReplicaModel::kv_pages_total`]) and its request-count batch
-    /// bound ([`ReplicaModel::max_batch`]).
+    /// bound ([`ReplicaModel::max_batch`]). Chunked prefill and prefix
+    /// sharing are on by default.
     pub fn for_replica(rm: &ReplicaModel, page_tokens: usize) -> EngineConfig {
         EngineConfig {
             pool_pages: rm.kv_pages_total(page_tokens).max(1),
             page_tokens: page_tokens.max(1),
             max_running: rm.max_batch.max(1),
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            share_prefixes: true,
         }
     }
 
@@ -83,6 +111,8 @@ impl EngineConfig {
             pool_pages: (16usize * 8192).div_ceil(pt),
             page_tokens: pt,
             max_running: 16,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            share_prefixes: true,
         }
     }
 }
@@ -95,6 +125,13 @@ pub struct Finished<T> {
     /// Seconds from first admission into the running batch to
     /// completion (co-running residence, not exclusive compute).
     pub exec_seconds: f64,
+    /// Seconds from submission into the engine to the first generated
+    /// token (queue wait + chunked prefill — the TTFT the chunk budget
+    /// trades against).
+    pub ttft_seconds: f64,
+    /// Absolute instant of the first generated token, for end-to-end
+    /// TTFT accounting upstream.
+    pub first_token_at: Option<Instant>,
 }
 
 /// What one [`EngineCore::step`] did.
@@ -103,13 +140,23 @@ pub struct StepOutcome<T> {
     pub completed: Vec<Finished<T>>,
     /// KV pages allocated at the iteration's high-water point.
     pub pages_in_use: usize,
-    /// Sequences that advanced one token this iteration.
+    /// Sequences occupying a batch slot this iteration (decoding or
+    /// prefilling).
     pub batch: usize,
     /// Sequences preempted this iteration.
     pub preempted: usize,
     /// Forced pool expansions this iteration (0 unless the pool is
     /// smaller than a single sequence).
     pub forced_expansions: usize,
+    /// Prompt tokens of prefill work processed this iteration.
+    pub prefill_tokens: usize,
+    /// Prompt tokens newly served from shared prefix pages this
+    /// iteration (no prefill owed for them).
+    pub prefix_hit_tokens: usize,
+    /// Pages newly claimed through the prefix trie this iteration.
+    pub shared_claims: usize,
+    /// Copy-on-write page copies performed this iteration.
+    pub cow_copies: usize,
 }
 
 #[derive(Debug)]
@@ -121,7 +168,9 @@ struct SeqData<T> {
     /// Remaining whole-request tokens when the backend is adapted
     /// (None for native step backends).
     cached: Option<VecDeque<i32>>,
+    submitted_at: Instant,
     admitted_at: Option<Instant>,
+    first_token_at: Option<Instant>,
 }
 
 /// The per-worker continuous-batching engine. `T` is the caller's
@@ -132,27 +181,59 @@ pub struct EngineCore<T> {
     data: HashMap<SeqId, SeqData<T>>,
     next_id: SeqId,
     iterations: u64,
+    page_tokens: usize,
+    share_prefixes: bool,
 }
 
 impl<T> EngineCore<T> {
     pub fn new(backend: Box<dyn TierBackend>, cfg: EngineConfig) -> EngineCore<T> {
         let pool = KvPool::new(cfg.pool_pages.max(1), cfg.page_tokens.max(1));
+        let mut sched = IterationScheduler::new(pool, cfg.max_running.max(1));
+        sched.set_prefill_chunk(cfg.prefill_chunk);
         EngineCore {
             backend,
-            sched: IterationScheduler::new(pool, cfg.max_running.max(1)),
+            sched,
             data: HashMap::new(),
             next_id: 0,
             iterations: 0,
+            page_tokens: cfg.page_tokens.max(1),
+            share_prefixes: cfg.share_prefixes,
         }
     }
 
     /// Queue a request; it joins the running batch at a later
     /// iteration boundary, when its prompt's pages fit.
     pub fn submit(&mut self, payload: T, prompt: Vec<i32>, max_new: usize) {
+        self.submit_with_prefix(payload, prompt, max_new, None);
+    }
+
+    /// Like [`EngineCore::submit`], reusing prompt page hashes computed
+    /// upstream (they must be chained at THIS engine's page size —
+    /// escalation carries them tier to tier so deeper-tier re-serves
+    /// claim shared pages without rehashing). `None` hashes are
+    /// computed here when sharing is on.
+    pub fn submit_with_prefix(
+        &mut self,
+        payload: T,
+        prompt: Vec<i32>,
+        max_new: usize,
+        hashes: Option<Arc<Vec<u64>>>,
+    ) {
         let id = self.next_id;
         self.next_id += 1;
         let max_new = max_new.max(1);
-        self.sched.enqueue(id, prompt.len().max(1), max_new);
+        // Prefix sharing needs a backend that can decode from resident
+        // KV; adapted whole-request backends recompute regardless.
+        let share = self.share_prefixes && self.backend.step_backend().is_some();
+        let h: Vec<u64> = if share {
+            match hashes {
+                Some(a) => (*a).clone(),
+                None => prompt_page_hashes(&prompt, self.page_tokens),
+            }
+        } else {
+            Vec::new()
+        };
+        self.sched.enqueue_shared(id, prompt.len().max(1), max_new, h);
         self.data.insert(
             id,
             SeqData {
@@ -161,7 +242,9 @@ impl<T> EngineCore<T> {
                 max_new,
                 output: Vec::new(),
                 cached: None,
+                submitted_at: Instant::now(),
                 admitted_at: None,
+                first_token_at: None,
             },
         );
     }
@@ -195,12 +278,38 @@ impl<T> EngineCore<T> {
         self.sched.pool().peak_in_use()
     }
 
+    /// Physical pages currently allocated (leak accounting).
+    pub fn kv_in_use(&self) -> usize {
+        self.sched.pool().in_use()
+    }
+
+    /// Pages currently on the free list (leak accounting).
+    pub fn kv_free_pages(&self) -> usize {
+        self.sched.pool().free_pages()
+    }
+
+    /// Published prefix pages currently claimable (leak accounting —
+    /// 0 once every holder retires).
+    pub fn kv_trie_len(&self) -> usize {
+        self.sched.pool().trie_len()
+    }
+
     pub fn iterations(&self) -> u64 {
         self.iterations
     }
 
     pub fn preemptions(&self) -> u64 {
         self.sched.preemptions()
+    }
+
+    /// Lifetime prompt tokens served from shared prefix pages.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.sched.prefix_hit_tokens()
+    }
+
+    /// Lifetime (pages claimed via the prefix trie, CoW copies).
+    pub fn sharing_counts(&self) -> (u64, u64) {
+        (self.sched.pool().shared_claims(), self.sched.pool().cow_copies())
     }
 
     /// Record a token (or early end-of-cache) for `id`; true when the
@@ -211,6 +320,9 @@ impl<T> EngineCore<T> {
                 let cache_dry = {
                     let d = self.data.get_mut(&id).expect("token for unknown sequence");
                     d.output.push(t);
+                    if d.first_token_at.is_none() {
+                        d.first_token_at = Some(Instant::now());
+                    }
                     d.cached.as_ref().map(|c| c.is_empty()).unwrap_or(false)
                 };
                 let budget_done = self.sched.advance(id);
@@ -223,14 +335,17 @@ impl<T> EngineCore<T> {
     }
 
     /// Run ONE decode iteration: plan (retire/admit/preempt against the
-    /// pool), prefill the newly admitted, advance the running batch one
-    /// token, and collect finished sequences.
+    /// pool), process the tick's prefill chunks, advance the decoding
+    /// batch one token, and collect finished sequences.
     ///
     /// An `Err` means the backend failed; the engine keeps every
     /// submitted request (none were completed this step) so the caller
     /// can [`EngineCore::drain`] them for re-dispatch — exactly-once
     /// completion is preserved.
     pub fn step(&mut self) -> Result<StepOutcome<T>> {
+        let hits_before = self.sched.prefix_hit_tokens();
+        let (claims_before, cows_before) =
+            (self.sched.pool().shared_claims(), self.sched.pool().cow_copies());
         let plan = self.sched.next_iteration();
         let pages_in_use = self.sched.pool().in_use();
 
@@ -248,38 +363,60 @@ impl<T> EngineCore<T> {
 
         let mut done_ids: Vec<SeqId> = Vec::new();
 
-        // Prefill pass: each admission produces its first token.
-        for &id in &plan.admitted {
-            let (prompt, max_new) = {
-                let d = self.data.get_mut(&id).expect("admitted unknown sequence");
+        // Prefill pass: each chunk advances its sequence's prompt; the
+        // last chunk produces the first token.
+        for chunk in &plan.prefill {
+            let id = chunk.id;
+            let prompt = {
+                let d = self.data.get_mut(&id).expect("prefilling unknown sequence");
                 if d.admitted_at.is_none() {
                     d.admitted_at = Some(Instant::now());
                 }
-                (std::mem::take(&mut d.prompt), d.max_new)
+                std::mem::take(&mut d.prompt)
             };
+            let end = (chunk.start + chunk.len).min(prompt.len().max(1));
+            let piece = &prompt[chunk.start.min(prompt.len())..end.min(prompt.len())];
             // (probe-then-rebind: an `if let Some(s) = ...step_backend()`
             // would hold the borrow through an `else` that needs
             // `generate` on edition 2021)
             let native = self.backend.step_backend().is_some();
             let tok = if native {
                 let s = self.backend.step_backend().expect("probed native above");
-                Some(s.prefill(id, &prompt)?)
-            } else {
+                let t = s.prefill_chunk(id, piece, chunk.last)?;
+                if chunk.last && t.is_none() {
+                    anyhow::bail!("step backend returned no first token on final chunk");
+                }
+                t
+            } else if chunk.last {
+                let max_new =
+                    self.data.get(&id).expect("prefilling unknown sequence").max_new;
                 let full = self.backend.generate(&prompt, max_new)?;
                 let mut dq: VecDeque<i32> = full.into_iter().collect();
                 let first = dq.pop_front();
-                self.data.get_mut(&id).expect("admitted unknown sequence").cached = Some(dq);
+                self.data.get_mut(&id).expect("prefilling unknown sequence").cached =
+                    Some(dq);
+                // An empty generation finishes immediately (None).
                 first
+            } else {
+                None
             };
             // The prompt is reused on preemption-recompute; put it back.
-            self.data.get_mut(&id).expect("admitted unknown sequence").prompt = prompt;
-            if self.note_token(id, tok) {
+            self.data.get_mut(&id).expect("prefilling unknown sequence").prompt = prompt;
+            if chunk.last && self.note_token(id, tok) {
                 done_ids.push(id);
             }
         }
 
-        // Decode pass: every carried-over sequence advances one token.
+        // Decode pass: every fully-prefilled sequence advances one
+        // token. Full-prefix-hit admissions are in here too — their
+        // first engine contact is a decode, never a prefill.
         if !plan.decode.is_empty() {
+            for &id in &plan.decode {
+                let d = self.data.get_mut(&id).expect("decoding unknown sequence");
+                if d.admitted_at.is_none() {
+                    d.admitted_at = Some(Instant::now());
+                }
+            }
             let toks: Vec<Option<i32>> = if let Some(s) = self.backend.step_backend() {
                 let v = s.decode(&plan.decode)?;
                 if v.len() != plan.decode.len() {
@@ -326,16 +463,27 @@ impl<T> EngineCore<T> {
                     .admitted_at
                     .map(|t| t.elapsed().as_secs_f64())
                     .unwrap_or(0.0),
+                ttft_seconds: d
+                    .first_token_at
+                    .map(|t| t.duration_since(d.submitted_at).as_secs_f64())
+                    .unwrap_or(0.0),
+                first_token_at: d.first_token_at,
             });
         }
 
         self.iterations += 1;
+        let (claims_after, cows_after) =
+            (self.sched.pool().shared_claims(), self.sched.pool().cow_copies());
         Ok(StepOutcome {
             completed,
             pages_in_use,
             batch: plan.batch(),
             preempted: plan.preempted.len(),
             forced_expansions: plan.forced_expansions,
+            prefill_tokens: plan.prefill_tokens(),
+            prefix_hit_tokens: (self.sched.prefix_hit_tokens() - hits_before) as usize,
+            shared_claims: (claims_after - claims_before) as usize,
+            cow_copies: (cows_after - cows_before) as usize,
         })
     }
 
@@ -370,19 +518,30 @@ mod tests {
     }
 
     /// Native step backend: records its prefill/release call counts
-    /// through shared handles so tests can assert the call pattern
-    /// after the engine consumes the backend.
+    /// (and prefilled token totals) through shared handles so tests can
+    /// assert the call pattern after the engine consumes the backend.
     #[derive(Default)]
     struct NativeStep {
         prefills: Arc<AtomicUsize>,
+        prefill_tokens: Arc<AtomicUsize>,
         releases: Arc<AtomicUsize>,
         fail_decode: bool,
     }
 
     impl StepBackend for NativeStep {
-        fn prefill(&mut self, seq: SeqId, _prompt: &[i32]) -> Result<i32> {
-            self.prefills.fetch_add(1, Ordering::SeqCst);
-            Ok(100 + seq as i32)
+        fn prefill_chunk(
+            &mut self,
+            seq: SeqId,
+            chunk: &[i32],
+            last: bool,
+        ) -> Result<Option<i32>> {
+            self.prefill_tokens.fetch_add(chunk.len(), Ordering::SeqCst);
+            if last {
+                self.prefills.fetch_add(1, Ordering::SeqCst);
+                Ok(Some(100 + seq as i32))
+            } else {
+                Ok(None)
+            }
         }
         fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
             if self.fail_decode {
@@ -406,7 +565,13 @@ mod tests {
     }
 
     fn cfg(pages: usize) -> EngineConfig {
-        EngineConfig { pool_pages: pages, page_tokens: 16, max_running: 8 }
+        EngineConfig {
+            pool_pages: pages,
+            page_tokens: 16,
+            max_running: 8,
+            prefill_chunk: usize::MAX,
+            share_prefixes: false,
+        }
     }
 
     fn run_all<T>(engine: &mut EngineCore<T>, max_steps: usize) -> Vec<Finished<T>> {
@@ -453,8 +618,75 @@ mod tests {
         assert_eq!(fins.len(), 3);
         for f in &fins {
             assert_eq!(f.output.len(), 4, "native sequences run to max_new");
+            assert!(f.ttft_seconds <= f.exec_seconds + 1e-6 || f.ttft_seconds >= 0.0);
         }
         assert_eq!(e.iterations(), 4, "4 iterations: 1 prefill tick + 3 decode ticks");
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_prompt_across_iterations() {
+        let backend = NativeStep::default();
+        let tokens = Arc::clone(&backend.prefill_tokens);
+        let mut e: EngineCore<usize> = EngineCore::new(
+            Box::new(backend),
+            EngineConfig { prefill_chunk: 32, ..cfg(64) },
+        );
+        e.submit(0, vec![9; 100], 2);
+        // 4 chunk ticks (32+32+32+4) then 1 decode tick.
+        let mut producing_steps = 0;
+        let mut steps = 0;
+        while !e.is_idle() {
+            steps += 1;
+            assert!(steps < 16);
+            let out = e.step().unwrap();
+            if out.prefill_tokens > 0 {
+                assert!(out.prefill_tokens <= 32, "chunk budget must cap the tick");
+            }
+            if !out.completed.is_empty() {
+                producing_steps += 1;
+            }
+        }
+        assert_eq!(steps, 5, "100-token prompt = 4 chunks + 1 decode");
+        assert_eq!(producing_steps, 1);
+        assert_eq!(tokens.load(Ordering::SeqCst), 100, "every prompt token prefilled once");
+    }
+
+    #[test]
+    fn prefix_hit_skips_backend_prefill() {
+        let backend = NativeStep::default();
+        let tokens = Arc::clone(&backend.prefill_tokens);
+        let mut e: EngineCore<usize> = EngineCore::new(
+            Box::new(backend),
+            EngineConfig { share_prefixes: true, ..cfg(64) },
+        );
+        let prompt = vec![3; 64];
+        e.submit(0, prompt.clone(), 6);
+        let _ = e.step().unwrap(); // prefill + first token
+        let _ = e.step().unwrap(); // publish + decode
+        e.submit(1, prompt, 6);
+        let mut hit_tokens = 0;
+        let fins = {
+            let mut out = Vec::new();
+            let mut steps = 0;
+            while !e.is_idle() {
+                steps += 1;
+                assert!(steps < 32);
+                let o = e.step().unwrap();
+                hit_tokens += o.prefix_hit_tokens;
+                out.extend(o.completed);
+            }
+            out
+        };
+        assert_eq!(fins.len(), 2);
+        assert_eq!(hit_tokens, 64, "the re-serve rides the published pages");
+        assert_eq!(
+            tokens.load(Ordering::SeqCst),
+            64,
+            "the identical prompt must not be re-prefilled"
+        );
+        assert_eq!(e.prefix_hit_tokens(), 64);
+        let (claims, _cows) = e.sharing_counts();
+        assert!(claims >= 4, "64 tokens = 4 pages claimed");
     }
 
     #[test]
@@ -503,8 +735,8 @@ mod tests {
         for f in &fins {
             assert_eq!(f.output.len(), 20, "preempted output is recomputed in full");
         }
-        // The backend saw one prefill per (re-)admission and one
-        // release per preemption plus one per completion.
+        // The backend saw one completed prefill per (re-)admission and
+        // one release per preemption plus one per completion.
         assert_eq!(prefills.load(Ordering::SeqCst), 2 + preempted);
         assert_eq!(releases.load(Ordering::SeqCst), 2 + preempted);
     }
@@ -533,6 +765,8 @@ mod tests {
         let c = EngineConfig::for_replica(&rm, 16);
         assert!(c.pool_pages > rm.max_batch, "pages are finer-grained than request slots");
         assert_eq!(c.max_running, rm.max_batch);
+        assert_eq!(c.prefill_chunk, DEFAULT_PREFILL_CHUNK);
+        assert!(c.share_prefixes);
         // The nominal fallback holds full-length sequences.
         let n = EngineConfig::nominal(16);
         assert!(n.pool_pages * n.page_tokens >= 8192);

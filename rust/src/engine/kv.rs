@@ -1,5 +1,5 @@
 //! Paged KV-cache pool: fixed-size token pages with per-sequence page
-//! tables.
+//! tables, refcounted prefix sharing, and copy-on-write divergence.
 //!
 //! The pool is the memory model of the continuous-batching engine: a
 //! replica's KV budget (derived from the [`crate::perf::ReplicaModel`]
@@ -9,6 +9,28 @@
 //! growth go through all-or-nothing [`KvPool::grow_to`] calls, so the
 //! scheduler always sees exact occupancy and can preempt instead of
 //! overcommitting.
+//!
+//! **Prefix sharing.** Pages are refcounted, and prefilled prompt pages
+//! can be *published* into a prefix trie keyed on chained token-page
+//! hashes ([`prompt_page_hashes`]): page `i`'s key commits to every
+//! token in pages `0..=i`, so a trie walk is exactly a prefix-tree
+//! descent flattened into a hash map. A sequence admitted with a
+//! matching prompt prefix ([`KvPool::claim_prefix`]) maps its table
+//! onto the shared pages (refcount bump, zero allocation, zero
+//! prefill) — system prompts, same-tier retries, and cascade re-serves
+//! of one request at deeper tiers all hit this path.
+//!
+//! **Copy-on-write.** Shared pages are read-only to claimers: the
+//! registered hash covers a token range, and every holder reads only
+//! its own context length, so concurrent holders never conflict on
+//! reads. The first *write* into a page another sequence can observe
+//! (appending a token into a partially-filled shared page) triggers a
+//! CoW copy inside [`KvPool::grow_to`] — the writer gets a private
+//! page, the shared one keeps serving its other holders. A page whose
+//! refcount drops to zero leaves the trie and returns to the free
+//! list, so the trie can never outlive the sequences anchoring it
+//! (leak accounting: after a full drain the trie is empty and the free
+//! list is back to capacity).
 //!
 //! Pages are identified by index so the page *tables* are real (the
 //! shape a paged-attention kernel would consume), and shrinking the
@@ -25,20 +47,75 @@ pub type SeqId = u64;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PagesShort(pub usize);
 
-/// A pool of fixed-size KV pages with per-sequence page tables.
+/// Chained FNV-1a page hashes of a prompt: one entry per page the
+/// prompt occupies, where entry `i` commits to the token count and
+/// content of every page up to and including `i`. Two prompts share a
+/// hash prefix exactly when they share the corresponding token-page
+/// prefix, which is what makes the flat trie lookup sound.
+pub fn prompt_page_hashes(prompt: &[i32], page_tokens: usize) -> Vec<u64> {
+    let pt = page_tokens.max(1);
+    let mut out = Vec::with_capacity(prompt.len().div_ceil(pt));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+    for chunk in prompt.chunks(pt) {
+        h = fnv1a(h, &(chunk.len() as u64).to_le_bytes());
+        for &t in chunk {
+            h = fnv1a(h, &t.to_le_bytes());
+        }
+        out.push(h);
+    }
+    out
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-page allocator metadata.
+#[derive(Debug, Clone, Copy, Default)]
+struct PageMeta {
+    /// Sequences holding this page (0 = dead/free).
+    refs: u32,
+    /// Trie key when the page is published as a shareable prefix page.
+    hash: Option<u64>,
+}
+
+/// Per-sequence allocation state.
+#[derive(Debug, Default)]
+struct SeqPages {
+    /// Page table, context order. A prefix of it may be shared.
+    pages: Vec<usize>,
+    /// Pages claimed from the trie at admission (for retraction).
+    claimed_pages: usize,
+    /// Context tokens the table has been grown to (write frontier).
+    tokens: usize,
+}
+
+/// A pool of fixed-size KV pages with refcounted per-sequence page
+/// tables and a prefix trie for shared-prompt serving.
 #[derive(Debug)]
 pub struct KvPool {
     page_tokens: usize,
     capacity: usize,
     /// Unallocated page ids below `capacity` (LIFO free list).
     free: Vec<usize>,
+    /// Metadata for every page id ever minted (index = page id).
+    meta: Vec<PageMeta>,
     /// Per-sequence page tables, in allocation order.
-    tables: HashMap<SeqId, Vec<usize>>,
+    tables: HashMap<SeqId, SeqPages>,
+    /// Flattened prefix trie: chained page hash -> published page id.
+    trie: HashMap<u64, usize>,
+    /// Physical pages live (refcount > 0); shared pages count once.
     in_use: usize,
     peak_in_use: usize,
     allocs: u64,
     frees: u64,
     defrag_moves: u64,
+    shared_claims: u64,
+    cow_copies: u64,
 }
 
 impl KvPool {
@@ -50,12 +127,16 @@ impl KvPool {
             page_tokens: page_tokens.max(1),
             capacity,
             free: (0..capacity).rev().collect(),
+            meta: vec![PageMeta::default(); capacity],
             tables: HashMap::new(),
+            trie: HashMap::new(),
             in_use: 0,
             peak_in_use: 0,
             allocs: 0,
             frees: 0,
             defrag_moves: 0,
+            shared_claims: 0,
+            cow_copies: 0,
         }
     }
 
@@ -70,6 +151,8 @@ impl KvPool {
         self.capacity
     }
 
+    /// Physical pages live. A page shared by many sequences counts
+    /// once — this is what occupancy/budget invariants compare.
     pub fn in_use(&self) -> usize {
         self.in_use
     }
@@ -78,7 +161,7 @@ impl KvPool {
         self.free.len()
     }
 
-    /// High-water mark of pages simultaneously allocated.
+    /// High-water mark of physical pages simultaneously allocated.
     pub fn peak_in_use(&self) -> usize {
         self.peak_in_use
     }
@@ -94,87 +177,229 @@ impl KvPool {
 
     /// The sequence's page table (empty slice when unknown).
     pub fn pages_of(&self, seq: SeqId) -> &[usize] {
-        self.tables.get(&seq).map(|v| v.as_slice()).unwrap_or(&[])
+        self.tables.get(&seq).map(|t| t.pages.as_slice()).unwrap_or(&[])
+    }
+
+    /// Published prefix pages currently claimable (trie size).
+    pub fn trie_len(&self) -> usize {
+        self.trie.len()
+    }
+
+    /// Lifetime count of pages claimed through the prefix trie.
+    pub fn shared_claims(&self) -> u64 {
+        self.shared_claims
+    }
+
+    /// Lifetime count of copy-on-write page copies.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Drop one reference to `pid`; at zero the page leaves the trie
+    /// and (if inside the capacity bound) returns to the free list.
+    fn decref(&mut self, pid: usize) {
+        let m = &mut self.meta[pid];
+        debug_assert!(m.refs > 0, "decref of dead page {pid}");
+        m.refs -= 1;
+        if m.refs == 0 {
+            if let Some(h) = m.hash.take() {
+                self.trie.remove(&h);
+            }
+            self.in_use -= 1;
+            self.frees += 1;
+            // Pages beyond a shrunk capacity leave the pool entirely
+            // (rediscovered if the pool grows back over them).
+            if pid < self.capacity {
+                self.free.push(pid);
+            }
+        }
+    }
+
+    /// Mint one fresh private page off the free list (caller checked).
+    fn alloc_page(&mut self) -> usize {
+        let pid = self.free.pop().expect("free list checked by caller");
+        self.meta[pid] = PageMeta { refs: 1, hash: None };
+        self.in_use += 1;
+        self.allocs += 1;
+        pid
+    }
+
+    /// Walk the prefix trie along `hashes` and map every hit onto
+    /// `seq`'s (empty) page table with a refcount bump — no pages are
+    /// allocated and no prefill is owed for the claimed span. Returns
+    /// the prompt tokens covered (capped at `prompt_tokens`; a
+    /// full-length walk means the tail page was published too and the
+    /// whole prompt's KV is resident).
+    pub fn claim_prefix(&mut self, seq: SeqId, hashes: &[u64], prompt_tokens: usize) -> usize {
+        debug_assert!(
+            self.tables.get(&seq).map(|t| t.pages.is_empty()).unwrap_or(true),
+            "claim_prefix on a sequence that already holds pages"
+        );
+        let mut claimed = Vec::new();
+        for h in hashes {
+            let Some(&pid) = self.trie.get(h) else { break };
+            claimed.push(pid);
+        }
+        if claimed.is_empty() {
+            return 0;
+        }
+        for &pid in &claimed {
+            self.meta[pid].refs += 1;
+        }
+        let tokens = (claimed.len() * self.page_tokens).min(prompt_tokens.max(1));
+        self.shared_claims += claimed.len() as u64;
+        let entry = self.tables.entry(seq).or_default();
+        entry.claimed_pages = claimed.len();
+        entry.pages = claimed;
+        entry.tokens = tokens;
+        tokens
+    }
+
+    /// Undo an admission-time claim that did NOT become an admission:
+    /// releases the sequence's pages like [`KvPool::release`] and
+    /// removes them from the shared-claims accounting — a claim that
+    /// never served anything must not inflate the sharing telemetry
+    /// (a congested head may claim-and-retract for several ticks).
+    pub fn retract_claim(&mut self, seq: SeqId) {
+        if let Some(t) = self.tables.get(&seq) {
+            self.shared_claims -= t.claimed_pages as u64;
+        }
+        self.release(seq);
+    }
+
+    /// Publish `seq`'s prefilled prompt pages into the prefix trie,
+    /// one entry per hash (pages the sequence itself claimed already
+    /// carry their hash and are skipped; first publisher of a hash
+    /// wins). Call only once the pages' KV is actually computed — the
+    /// scheduler does this the iteration *after* prefill completes.
+    pub fn publish_prefix(&mut self, seq: SeqId, hashes: &[u64]) {
+        let Some(entry) = self.tables.get(&seq) else { return };
+        let pages: Vec<usize> =
+            entry.pages.iter().take(hashes.len()).copied().collect();
+        for (pid, &h) in pages.into_iter().zip(hashes) {
+            if self.meta[pid].hash.is_none() && !self.trie.contains_key(&h) {
+                self.meta[pid].hash = Some(h);
+                self.trie.insert(h, pid);
+            }
+        }
     }
 
     /// Ensure `seq` holds enough pages for `tokens` tokens of context,
-    /// allocating the shortfall. All-or-nothing: on `Err` nothing
-    /// changed and the error carries the missing page count.
+    /// allocating the shortfall and copy-on-writing any shared page the
+    /// new tokens would be appended into. All-or-nothing: on `Err`
+    /// nothing changed and the error carries the missing page count.
     pub fn grow_to(&mut self, seq: SeqId, tokens: usize) -> Result<(), PagesShort> {
+        let tokens = tokens.max(1);
         let need = self.pages_for(tokens);
-        let have = self.tables.get(&seq).map(|t| t.len()).unwrap_or(0);
-        if need <= have {
-            return Ok(());
+        let (have, old_tokens) = self
+            .tables
+            .get(&seq)
+            .map(|t| (t.pages.len(), t.tokens))
+            .unwrap_or((0, 0));
+        // Pages the new tokens (old_tokens..tokens) are written into
+        // that already exist and are shared: each needs a CoW copy.
+        let mut cow_slots: Vec<usize> = Vec::new();
+        if tokens > old_tokens && have > 0 {
+            let first = old_tokens / self.page_tokens;
+            let last = ((tokens - 1) / self.page_tokens).min(have.saturating_sub(1));
+            if first <= last {
+                let table = &self.tables[&seq];
+                for idx in first..=last {
+                    if self.meta[table.pages[idx]].refs > 1 {
+                        cow_slots.push(idx);
+                    }
+                }
+            }
         }
-        let shortfall = need - have;
+        let shortfall = need.saturating_sub(have) + cow_slots.len();
         if shortfall > self.free.len() {
             return Err(PagesShort(shortfall - self.free.len()));
         }
-        let table = self.tables.entry(seq).or_default();
-        for _ in 0..shortfall {
-            table.push(self.free.pop().expect("free list checked above"));
+        for idx in cow_slots {
+            let fresh = self.alloc_page();
+            let old = {
+                let table = self.tables.get_mut(&seq).expect("cow on unknown sequence");
+                std::mem::replace(&mut table.pages[idx], fresh)
+            };
+            self.decref(old);
+            self.cow_copies += 1;
         }
-        self.in_use += shortfall;
-        self.allocs += shortfall as u64;
+        for _ in have..need {
+            let pid = self.alloc_page();
+            self.tables.entry(seq).or_default().pages.push(pid);
+        }
+        let entry = self.tables.entry(seq).or_default();
+        entry.tokens = entry.tokens.max(tokens);
         self.peak_in_use = self.peak_in_use.max(self.in_use);
         Ok(())
     }
 
-    /// Release every page `seq` holds; returns the page count freed.
-    /// Unknown sequences are a no-op (0).
+    /// Release every page reference `seq` holds; returns the count of
+    /// pages physically freed (shared pages with surviving holders stay
+    /// live — and stay claimable). Unknown sequences are a no-op (0).
     pub fn release(&mut self, seq: SeqId) -> usize {
         let Some(table) = self.tables.remove(&seq) else {
             return 0;
         };
-        let n = table.len();
-        for page in table {
-            // Pages beyond a shrunk capacity leave the pool entirely.
-            if page < self.capacity {
-                self.free.push(page);
-            }
+        let before = self.frees;
+        for pid in table.pages {
+            self.decref(pid);
         }
-        self.in_use -= n;
-        self.frees += n as u64;
-        n
+        (self.frees - before) as usize
     }
 
     /// Retarget the pool to `capacity` pages.
     ///
     /// Growth adds fresh page ids. Shrinking drops free ids beyond the
-    /// bound and defragments live page tables down into the surviving
-    /// id range where free ids allow (each relocation counts as one
-    /// `defrag_moves` — the copy a real allocator would perform). If
-    /// usage exceeds the new capacity the pool runs over-committed:
-    /// stranded high ids stay valid for their owners, and allocations
-    /// fail until usage drops back under the target.
+    /// bound and defragments live pages down into the surviving id
+    /// range where free ids allow — each relocation is one physical
+    /// move (`defrag_moves`), applied once even when the page is shared
+    /// by many tables, and the trie follows the move. If usage exceeds
+    /// the new capacity the pool runs over-committed: stranded high ids
+    /// stay valid for their holders, and allocations fail until usage
+    /// drops back under the target.
     pub fn resize(&mut self, capacity: usize) {
         let capacity = capacity.max(1);
-        if capacity > self.capacity {
-            // Ids stranded above the old bound by an earlier shrink may
-            // still be held; only genuinely unowned ids become free.
-            let held: std::collections::HashSet<usize> =
-                self.tables.values().flatten().copied().collect();
+        if capacity >= self.capacity {
+            if capacity == self.capacity {
+                return;
+            }
             for id in self.capacity..capacity {
-                if !held.contains(&id) {
+                if id >= self.meta.len() {
+                    self.meta.push(PageMeta::default());
+                    self.free.push(id);
+                } else if self.meta[id].refs == 0 {
+                    // Ids stranded above the old bound by an earlier
+                    // shrink: dead ones become allocatable again; held
+                    // ones stay with their owners.
                     self.free.push(id);
                 }
             }
             self.capacity = capacity;
             return;
         }
-        if capacity == self.capacity {
-            return;
-        }
         self.capacity = capacity;
         self.free.retain(|&id| id < capacity);
-        // Defragment: relocate live pages with ids beyond the bound
-        // onto surviving free ids.
-        for table in self.tables.values_mut() {
-            for slot in table.iter_mut() {
-                if *slot >= capacity {
-                    if let Some(dst) = self.free.pop() {
+        // Relocate each live high page once, shared or not, and remap
+        // every table (and the trie) through one old->new map.
+        let mut remap: HashMap<usize, usize> = HashMap::new();
+        for old in capacity..self.meta.len() {
+            if self.meta[old].refs == 0 {
+                continue;
+            }
+            let Some(dst) = self.free.pop() else { break };
+            self.meta[dst] = std::mem::take(&mut self.meta[old]);
+            if let Some(h) = self.meta[dst].hash {
+                self.trie.insert(h, dst);
+            }
+            remap.insert(old, dst);
+            self.defrag_moves += 1;
+        }
+        if !remap.is_empty() {
+            for table in self.tables.values_mut() {
+                for slot in table.pages.iter_mut() {
+                    if let Some(&dst) = remap.get(slot) {
                         *slot = dst;
-                        self.defrag_moves += 1;
                     }
                 }
             }
@@ -186,7 +411,7 @@ impl KvPool {
         self.defrag_moves
     }
 
-    /// Lifetime (allocated, freed) page counts.
+    /// Lifetime (allocated, freed) physical page counts.
     pub fn alloc_counts(&self) -> (u64, u64) {
         (self.allocs, self.frees)
     }
@@ -238,7 +463,7 @@ mod tests {
     }
 
     #[test]
-    fn page_tables_are_disjoint() {
+    fn page_tables_are_disjoint_without_sharing() {
         let mut p = KvPool::new(6, 8);
         p.grow_to(1, 24).unwrap();
         p.grow_to(2, 24).unwrap();
@@ -247,7 +472,7 @@ mod tests {
         let n = all.len();
         all.sort_unstable();
         all.dedup();
-        assert_eq!(all.len(), n, "no page may be shared");
+        assert_eq!(all.len(), n, "no page may be shared without a claim");
         assert!(all.iter().all(|&id| id < 6));
     }
 
@@ -297,5 +522,133 @@ mod tests {
         let (a, f) = p.alloc_counts();
         assert_eq!((a, f), (2, 2));
         assert_eq!(p.defrag_moves(), 0);
+        assert_eq!(p.shared_claims(), 0);
+        assert_eq!(p.cow_copies(), 0);
+    }
+
+    // ---- Prefix sharing / CoW ----
+
+    fn prompt(seed: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| seed.wrapping_mul(131).wrapping_add(i)).collect()
+    }
+
+    #[test]
+    fn page_hashes_chain_over_prefixes() {
+        let a = prompt(1, 48);
+        let mut b = a.clone();
+        b[40] += 1; // diverge inside page 2
+        let ha = prompt_page_hashes(&a, 16);
+        let hb = prompt_page_hashes(&b, 16);
+        assert_eq!(ha.len(), 3);
+        assert_eq!(ha[0], hb[0]);
+        assert_eq!(ha[1], hb[1]);
+        assert_ne!(ha[2], hb[2], "divergent page must change the chain");
+        // Different lengths in the tail page also differ.
+        let hc = prompt_page_hashes(&a[..40], 16);
+        assert_eq!(hc[0..2], ha[0..2]);
+        assert_ne!(hc[2], ha[2]);
+    }
+
+    #[test]
+    fn claim_maps_shared_pages_without_allocation() {
+        let mut p = KvPool::new(16, 16);
+        let tokens = prompt(3, 64); // 4 full pages
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 64).unwrap();
+        p.publish_prefix(1, &hashes);
+        assert_eq!(p.trie_len(), 4);
+        let claimed = p.claim_prefix(2, &hashes, 64);
+        assert_eq!(claimed, 64, "identical prompt claims every page");
+        assert_eq!(p.in_use(), 4, "sharing allocates nothing");
+        assert_eq!(p.pages_of(2), p.pages_of(1));
+        assert_eq!(p.shared_claims(), 4);
+        // Partial prefix (first 2 pages) claims only the shared span.
+        let mut other = tokens.clone();
+        other[40] = -7;
+        let oh = prompt_page_hashes(&other, 16);
+        assert_eq!(p.claim_prefix(3, &oh, 64), 32);
+        assert_eq!(p.pages_of(3), &p.pages_of(1)[..2]);
+    }
+
+    #[test]
+    fn retracted_claims_do_not_inflate_accounting() {
+        // A congested head may claim and immediately retract for many
+        // ticks; only claims that stick may count.
+        let mut p = KvPool::new(8, 16);
+        let tokens = prompt(6, 32);
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &hashes);
+        for _ in 0..5 {
+            p.claim_prefix(2, &hashes, 32);
+            p.retract_claim(2);
+        }
+        assert_eq!(p.shared_claims(), 0, "retracted claims must not count");
+        assert!(!p.holds(2));
+        assert_eq!(p.in_use(), 2, "only the publisher's pages remain");
+        p.claim_prefix(3, &hashes, 32);
+        assert_eq!(p.shared_claims(), 2, "a claim that sticks counts once");
+    }
+
+    #[test]
+    fn cow_fires_on_first_divergent_write() {
+        let mut p = KvPool::new(16, 16);
+        let tokens = prompt(5, 40); // 2 full pages + 8-token tail
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 40).unwrap();
+        p.publish_prefix(1, &hashes);
+        let claimed = p.claim_prefix(2, &hashes, 40);
+        assert_eq!(claimed, 40);
+        let shared_tail = p.pages_of(2)[2];
+        assert_eq!(shared_tail, p.pages_of(1)[2]);
+        // Seq 2 appends its first divergent token into the partial
+        // shared tail page: CoW must give it a private copy.
+        p.grow_to(2, 41).unwrap();
+        assert_eq!(p.cow_copies(), 1);
+        assert_ne!(p.pages_of(2)[2], shared_tail, "writer must diverge onto a copy");
+        assert_eq!(p.pages_of(1)[2], shared_tail, "the publisher keeps the original");
+        // Full shared pages are never copied: growth past them appends.
+        p.grow_to(2, 60).unwrap();
+        assert_eq!(p.cow_copies(), 1);
+    }
+
+    #[test]
+    fn refcounts_keep_shared_pages_alive_until_last_holder() {
+        let mut p = KvPool::new(8, 16);
+        let tokens = prompt(9, 32);
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &hashes);
+        p.claim_prefix(2, &hashes, 32);
+        assert_eq!(p.release(1), 0, "shared pages outlive the publisher");
+        assert_eq!(p.in_use(), 2);
+        assert_eq!(p.trie_len(), 2, "claimable while any holder lives");
+        // A third claimer can still ride the surviving holder's pages.
+        assert_eq!(p.claim_prefix(3, &hashes, 32), 32);
+        p.release(2);
+        assert_eq!(p.release(3), 2, "last holder frees the pages");
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.trie_len(), 0, "trie never outlives its pages");
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[test]
+    fn defrag_preserves_sharing_and_trie() {
+        let mut p = KvPool::new(8, 16);
+        p.grow_to(9, 48).unwrap(); // occupy low ids 0..3
+        let tokens = prompt(4, 32);
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 32).unwrap(); // high-ish ids
+        p.publish_prefix(1, &hashes);
+        p.claim_prefix(2, &hashes, 32);
+        p.release(9);
+        p.resize(4); // forces the shared pages down into 0..4
+        assert!(p.pages_of(1).iter().all(|&id| id < 4));
+        assert_eq!(p.pages_of(1), p.pages_of(2), "sharing survives relocation");
+        assert_eq!(p.trie_len(), 2);
+        // The trie still resolves to the moved pages.
+        let mut q = KvPool::new(4, 16); // sanity: independent pool unaffected
+        assert_eq!(q.claim_prefix(1, &hashes, 32), 0);
+        assert_eq!(p.claim_prefix(5, &hashes, 32), 32, "claims follow the move");
     }
 }

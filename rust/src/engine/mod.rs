@@ -7,10 +7,16 @@
 //! as a static request count. This subsystem makes the scheduler's
 //! memory model real at runtime:
 //!
-//! * [`KvPool`] (`kv`) — fixed-size token pages with per-sequence page
-//!   tables, alloc/free/defrag accounting, live resize;
+//! * [`KvPool`] (`kv`) — fixed-size token pages with refcounted
+//!   per-sequence page tables, a prefix trie over chained token-page
+//!   hashes for shared-prompt serving (claim at admission, publish
+//!   after prefill, copy-on-write on first divergent write),
+//!   alloc/free/defrag/leak accounting, live resize;
 //! * [`IterationScheduler`] (`scheduler`) — each tick retires finished
-//!   sequences, admits queued requests FIFO while pages remain, and
+//!   sequences, interleaves budgeted prefill chunks with decode
+//!   (Sarathi-style `prefill_chunk` token budget), admits queued
+//!   requests FIFO while pages remain (claiming published prefixes
+//!   first — a full hit skips prefill entirely), and
 //!   preempts-and-requeues (newest-first, recompute) on pool
 //!   exhaustion;
 //! * [`EngineCore`] (`core`) — the per-worker loop behind the existing
@@ -35,5 +41,5 @@ pub mod scheduler;
 
 pub use bench::{run_serving_bench, BenchConfig, BenchReport};
 pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
-pub use kv::{KvPool, PagesShort, SeqId};
-pub use scheduler::{IterationPlan, IterationScheduler};
+pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId};
+pub use scheduler::{ChunkTask, IterationPlan, IterationScheduler};

@@ -4,15 +4,29 @@
 //! Each call to [`IterationScheduler::next_iteration`] is one engine
 //! tick:
 //!
-//! 1. **grow** — every running sequence is about to produce one more
+//! 1. **publish** — sequences whose prefill completed in an earlier
+//!    tick publish their prompt pages into the pool's prefix trie
+//!    ([`KvPool::publish_prefix`]), so later admissions with the same
+//!    prompt prefix can claim them;
+//! 2. **grow** — every decoding sequence is about to produce one more
 //!    token, so its context grows by one; pages for the growth are
 //!    reserved oldest-first. On pool exhaustion the *newest* running
 //!    sequence is preempted (vLLM's recompute policy: its pages are
-//!    freed, its progress resets, and it re-queues at the *front* of
-//!    the wait queue so FIFO order is preserved);
-//! 2. **admit** — waiting sequences are admitted strictly FIFO while
-//!    the pool has pages for their prompt-plus-first-token context and
-//!    the running set is under `max_running`.
+//!    freed, its progress — including partial prefill — resets, and it
+//!    re-queues at the *front* of the wait queue so FIFO order is
+//!    preserved);
+//! 3. **prefill** — sequences still prefilling get the next chunk of
+//!    their prompt, oldest first, under the per-tick token budget
+//!    (`prefill_chunk`, Sarathi-style): long prompts are spread over
+//!    several iterations interleaved with decode instead of charging
+//!    the whole prompt into one admission tick. The chunk that
+//!    completes a prompt also produces the first token;
+//! 4. **admit** — waiting sequences are admitted strictly FIFO while
+//!    the pool has pages and the running set is under `max_running`.
+//!    Admission first walks the prefix trie ([`KvPool::claim_prefix`]):
+//!    claimed tokens need neither pages nor prefill compute, and a
+//!    full-prompt hit (a cascade re-serve, a same-prompt retry) skips
+//!    prefill entirely and decodes its first token this very tick.
 //!
 //! The scheduler never deadlocks: when a sequence cannot fit even with
 //! every other sequence preempted (the pool is smaller than one
@@ -30,27 +44,57 @@ use std::collections::{HashMap, VecDeque};
 use super::kv::{KvPool, SeqId};
 
 /// Token bookkeeping of one tracked sequence.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct Seq {
     prompt_tokens: usize,
     max_new: usize,
     /// Tokens generated since (re-)admission; preemption resets this
     /// (recompute semantics).
     generated: usize,
+    /// Prompt tokens whose KV is resident (claimed prefix + prefill
+    /// chunks done); preemption resets this too.
+    prefilled: usize,
+    /// Prompt pages published into the prefix trie (or inherited via a
+    /// full claim).
+    published: bool,
+    /// Chained page hashes of the prompt (empty = sharing disabled).
+    hashes: Vec<u64>,
+}
+
+impl Seq {
+    fn decoding(&self) -> bool {
+        self.prefilled >= self.prompt_tokens
+    }
+}
+
+/// One prefill chunk scheduled into an iteration: process prompt
+/// tokens `start .. start + len` of sequence `id`. `last` marks the
+/// chunk that completes the prompt — it produces the first token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkTask {
+    pub id: SeqId,
+    pub start: usize,
+    pub len: usize,
+    pub last: bool,
 }
 
 /// One planned engine iteration.
 #[derive(Debug, Clone, Default)]
 pub struct IterationPlan {
-    /// Sequences admitted this tick — they need a prefill pass and
-    /// produce their first token.
+    /// Sequences newly admitted this tick that owe prefill work (their
+    /// first chunk is in `prefill`). Full-prefix-hit admissions appear
+    /// in `decode` instead — their KV is already resident.
     pub admitted: Vec<SeqId>,
-    /// Sequences carried over from earlier ticks — they advance one
-    /// decode token.
+    /// Prefill chunks to process this tick (newly admitted sequences'
+    /// first chunks and carried-over partial prefills). A `last` chunk
+    /// produces the sequence's first token.
+    pub prefill: Vec<ChunkTask>,
+    /// Fully-prefilled sequences advancing one decode token.
     pub decode: Vec<SeqId>,
     /// Sequences preempted this tick. Their KV pages are already freed
-    /// and their progress reset; callers must drop any per-sequence
-    /// backend state (they re-prefill on re-admission).
+    /// and their progress (decode *and* partial prefill) reset; callers
+    /// must drop any per-sequence backend state (they re-prefill on
+    /// re-admission).
     pub preempted: Vec<SeqId>,
     /// Forced pool expansions this tick (0 unless the pool was smaller
     /// than a single sequence).
@@ -58,9 +102,23 @@ pub struct IterationPlan {
 }
 
 impl IterationPlan {
-    /// Total sequences advancing one token this tick.
+    /// Total sequences occupying a batch slot this tick (decoding or
+    /// prefilling).
     pub fn batch(&self) -> usize {
-        self.admitted.len() + self.decode.len()
+        self.prefill.len() + self.decode.len()
+    }
+
+    /// Prompt tokens of prefill work charged into this tick.
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|c| c.len).sum()
+    }
+
+    /// Sequences producing one token this tick: every decoder plus
+    /// every sequence whose *last* prefill chunk lands here.
+    pub fn producers(&self) -> Vec<SeqId> {
+        let mut v: Vec<SeqId> = self.decode.clone();
+        v.extend(self.prefill.iter().filter(|c| c.last).map(|c| c.id));
+        v
     }
 }
 
@@ -73,8 +131,12 @@ pub struct IterationScheduler {
     running: Vec<SeqId>,
     seqs: HashMap<SeqId, Seq>,
     max_running: usize,
+    /// Prefill token budget per iteration (`usize::MAX` = whole-prompt
+    /// admission, the pre-chunking discipline).
+    prefill_chunk: usize,
     preemptions: u64,
     forced_expansions: u64,
+    prefix_hit_tokens: u64,
 }
 
 impl IterationScheduler {
@@ -87,17 +149,50 @@ impl IterationScheduler {
             running: Vec::new(),
             seqs: HashMap::new(),
             max_running: max_running.max(1),
+            prefill_chunk: usize::MAX,
             preemptions: 0,
             forced_expansions: 0,
+            prefix_hit_tokens: 0,
         }
+    }
+
+    /// Cap the prefill tokens charged into any one iteration (clamped
+    /// to at least one page so every prefilling sequence can progress).
+    pub fn set_prefill_chunk(&mut self, tokens: usize) {
+        self.prefill_chunk = tokens.max(self.pool.page_tokens());
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Track a new sequence at the back of the wait queue.
     pub fn enqueue(&mut self, id: SeqId, prompt_tokens: usize, max_new: usize) {
+        self.enqueue_shared(id, prompt_tokens, max_new, Vec::new());
+    }
+
+    /// Like [`IterationScheduler::enqueue`], with the prompt's chained
+    /// page hashes ([`crate::engine::prompt_page_hashes`], computed at
+    /// the pool's page size): admission will claim any published
+    /// prefix and publish the prompt's pages once prefilled.
+    pub fn enqueue_shared(
+        &mut self,
+        id: SeqId,
+        prompt_tokens: usize,
+        max_new: usize,
+        hashes: Vec<u64>,
+    ) {
         debug_assert!(!self.seqs.contains_key(&id), "duplicate sequence id");
         self.seqs.insert(
             id,
-            Seq { prompt_tokens: prompt_tokens.max(1), max_new: max_new.max(1), generated: 0 },
+            Seq {
+                prompt_tokens: prompt_tokens.max(1),
+                max_new: max_new.max(1),
+                generated: 0,
+                prefilled: 0,
+                published: false,
+                hashes,
+            },
         );
         self.waiting.push_back(id);
     }
@@ -147,20 +242,27 @@ impl IterationScheduler {
         self.forced_expansions
     }
 
-    /// Tokens of context `id` currently holds KV for.
-    fn ctx_tokens(&self, id: SeqId) -> usize {
-        let s = &self.seqs[&id];
-        s.prompt_tokens + s.generated
+    /// Prompt tokens served from shared prefix pages instead of being
+    /// re-prefilled, over the scheduler's lifetime.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
     }
 
-    /// Preempt `id`: free its pages, reset its progress, and requeue it
-    /// at the front of the wait queue.
+    /// Preempt `id`: free its pages, reset its progress (decode and
+    /// partial prefill), and requeue it at the front of the wait queue.
+    /// Work already planned for the victim THIS tick is withdrawn — a
+    /// later reservation may evict a sequence that entered the decode
+    /// or chunk lists earlier in the same planning pass.
     fn preempt(&mut self, id: SeqId, plan: &mut IterationPlan) {
         self.pool.release(id);
         if let Some(s) = self.seqs.get_mut(&id) {
             s.generated = 0;
+            s.prefilled = 0;
+            s.published = false;
         }
         self.waiting.push_front(id);
+        plan.decode.retain(|&d| d != id);
+        plan.prefill.retain(|c| c.id != id);
         plan.preempted.push(id);
         self.preemptions += 1;
     }
@@ -175,50 +277,159 @@ impl IterationScheduler {
         plan.forced_expansions += 1;
     }
 
+    /// Reserve pages so `id`'s context covers `tokens`, preempting the
+    /// newest running sequence on exhaustion (or force-expanding when
+    /// `id` runs alone). Returns false iff `id` preempted itself.
+    fn reserve(&mut self, id: SeqId, tokens: usize, plan: &mut IterationPlan) -> bool {
+        while let Err(short) = self.pool.grow_to(id, tokens) {
+            if self.running.len() <= 1 {
+                // Alone and still short: the pool cannot hold even
+                // this one sequence.
+                self.force_expand(short.0, plan);
+            } else {
+                let victim = self.running.pop().expect("len > 1");
+                self.preempt(victim, plan);
+                if victim == id {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Plan the next iteration. See the module docs for the policy.
     pub fn next_iteration(&mut self) -> IterationPlan {
         let mut plan = IterationPlan::default();
 
-        // 1. Reserve one token of growth per running sequence, oldest
+        // 0. Publish prompt pages of sequences whose prefill completed
+        // in an earlier tick (their KV is computed by now).
+        let publishable: Vec<SeqId> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| {
+                let s = &self.seqs[id];
+                s.decoding() && !s.published
+            })
+            .collect();
+        for id in publishable {
+            let hashes = self.seqs[&id].hashes.clone();
+            if !hashes.is_empty() {
+                self.pool.publish_prefix(id, &hashes);
+            }
+            self.seqs.get_mut(&id).expect("running seq").published = true;
+        }
+
+        // 1. Reserve one token of growth per decoding sequence, oldest
         // first; preempt from the newest end on exhaustion.
         let mut i = 0;
         while i < self.running.len() {
             let id = self.running[i];
-            let need = self.ctx_tokens(id) + 1;
-            let mut preempted_self = false;
-            while let Err(short) = self.pool.grow_to(id, need) {
-                if self.running.len() == 1 {
-                    // Alone and still short: the pool cannot hold even
-                    // this one sequence.
-                    self.force_expand(short.0, &mut plan);
-                } else {
-                    let victim = self.running.pop().expect("len > 1");
-                    self.preempt(victim, &mut plan);
-                    if victim == id {
-                        preempted_self = true;
-                        break;
-                    }
-                }
+            let s = &self.seqs[&id];
+            if !s.decoding() {
+                i += 1;
+                continue;
             }
-            if !preempted_self {
+            let need = s.prompt_tokens + s.generated + 1;
+            if self.reserve(id, need, &mut plan) {
                 i += 1;
             }
         }
 
-        // Survivors decode one token this tick.
-        plan.decode = self.running.clone();
+        // Surviving decoders advance one token this tick.
+        plan.decode = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| self.seqs[id].decoding())
+            .collect();
 
-        // 2. Admit strictly FIFO while prompt+first-token contexts fit.
+        // 2. Prefill chunks for carried-over partial prefills, oldest
+        // first, under the tick's token budget.
+        let mut budget = self.prefill_chunk;
+        let mut i = 0;
+        while i < self.running.len() {
+            let id = self.running[i];
+            let s = &self.seqs[&id];
+            if s.decoding() {
+                i += 1;
+                continue;
+            }
+            if budget == 0 {
+                break;
+            }
+            let remaining = s.prompt_tokens - s.prefilled;
+            let len = remaining.min(budget);
+            let last = len == remaining;
+            let start = s.prefilled;
+            let need = start + len + usize::from(last);
+            if self.reserve(id, need, &mut plan) {
+                self.seqs.get_mut(&id).expect("running seq").prefilled = start + len;
+                plan.prefill.push(ChunkTask { id, start, len, last });
+                budget -= len;
+                i += 1;
+            }
+        }
+
+        // 3. Admit strictly FIFO while prefix-claimed-plus-first-chunk
+        // contexts fit and budget remains.
         while self.running.len() < self.max_running {
             let Some(&head) = self.waiting.front() else { break };
-            let need = self.seqs[&head].prompt_tokens + 1;
-            match self.pool.grow_to(head, need) {
+            let prompt_tokens = self.seqs[&head].prompt_tokens;
+            let claimed = if self.seqs[&head].hashes.is_empty() || self.pool.holds(head) {
+                0
+            } else {
+                let s = &self.seqs[&head];
+                self.pool.claim_prefix(head, &s.hashes, s.prompt_tokens)
+            };
+            if claimed >= prompt_tokens {
+                // Full prefix hit (identical prompt re-served): no
+                // prefill owed at all — decode the first token now.
+                match self.pool.grow_to(head, prompt_tokens + 1) {
+                    Ok(()) => {
+                        self.waiting.pop_front();
+                        self.running.push(head);
+                        let s = self.seqs.get_mut(&head).expect("waiting seq");
+                        s.prefilled = prompt_tokens;
+                        s.published = true; // pages are already in the trie
+                        self.prefix_hit_tokens += claimed as u64;
+                        plan.decode.push(head);
+                    }
+                    Err(short) => {
+                        self.pool.retract_claim(head);
+                        if self.running.is_empty() {
+                            self.force_expand(short.0, &mut plan);
+                            continue;
+                        }
+                        break;
+                    }
+                }
+                continue;
+            }
+            let remaining = prompt_tokens - claimed;
+            if budget == 0 {
+                // No prefill budget left this tick; undo the claim so
+                // the head re-claims (possibly more) next tick.
+                if claimed > 0 {
+                    self.pool.retract_claim(head);
+                }
+                break;
+            }
+            let len = remaining.min(budget);
+            let last = len == remaining;
+            match self.pool.grow_to(head, claimed + len + usize::from(last)) {
                 Ok(()) => {
                     self.waiting.pop_front();
                     self.running.push(head);
+                    let s = self.seqs.get_mut(&head).expect("waiting seq");
+                    s.prefilled = claimed + len;
+                    self.prefix_hit_tokens += claimed as u64;
                     plan.admitted.push(head);
+                    plan.prefill.push(ChunkTask { id: head, start: claimed, len, last });
+                    budget -= len;
                 }
                 Err(short) => {
+                    self.pool.retract_claim(head);
                     if self.running.is_empty() {
                         // Nothing running and the head alone does not
                         // fit: expand or the engine deadlocks.
@@ -267,6 +478,7 @@ impl IterationScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::kv::prompt_page_hashes;
 
     fn sched(pages: usize, page_tokens: usize, max_running: usize) -> IterationScheduler {
         IterationScheduler::new(KvPool::new(pages, page_tokens), max_running)
@@ -282,9 +494,7 @@ mod tests {
             assert!(iters <= max_iters, "scheduler failed to make progress");
             let plan = s.next_iteration();
             assert!(plan.batch() > 0, "a tick with sequences must advance something");
-            let advanced: Vec<SeqId> =
-                plan.admitted.iter().chain(&plan.decode).copied().collect();
-            for id in advanced {
+            for id in plan.producers() {
                 if s.advance(id) {
                     s.retire(id);
                     order.push(id);
@@ -303,6 +513,7 @@ mod tests {
         let plan = s.next_iteration();
         assert_eq!(plan.admitted, vec![0, 1, 2, 3], "max_running caps the batch");
         assert!(plan.decode.is_empty());
+        assert!(plan.prefill.iter().all(|c| c.last), "short prompts prefill whole");
         let plan2 = s.next_iteration();
         assert_eq!(plan2.decode, vec![0, 1, 2, 3]);
         assert!(plan2.admitted.is_empty(), "running set is full");
@@ -336,7 +547,7 @@ mod tests {
         let mut done: Vec<SeqId> = Vec::new();
         let mut iters = 0;
         // Consume the first tick's tokens.
-        for id in first.admitted {
+        for id in first.producers() {
             assert!(!s.advance(id));
         }
         while !s.is_idle() {
@@ -345,7 +556,7 @@ mod tests {
             let plan = s.next_iteration();
             preempted_events.extend(&plan.preempted);
             assert!(plan.batch() > 0);
-            for id in plan.admitted.iter().chain(&plan.decode).copied().collect::<Vec<_>>() {
+            for id in plan.producers() {
                 if s.advance(id) {
                     s.retire(id);
                     done.push(id);
@@ -403,7 +614,7 @@ mod tests {
             if plan.preempted.contains(&1) {
                 saw_preempt = true;
             }
-            for id in plan.admitted.iter().chain(&plan.decode).copied().collect::<Vec<_>>() {
+            for id in plan.producers() {
                 if id == 1 {
                     total_advances_for_1 += 1;
                 }
@@ -459,5 +670,188 @@ mod tests {
         assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
         assert_eq!(s.pool().in_use(), 0);
         assert!(s.is_idle());
+    }
+
+    // ---- Chunked prefill ----
+
+    #[test]
+    fn long_prompt_prefills_in_budgeted_chunks() {
+        let mut s = sched(64, 16, 8);
+        s.set_prefill_chunk(32);
+        s.enqueue(0, 100, 3);
+        // Tick 1: admit + first 32-token chunk, no token produced.
+        let p1 = s.next_iteration();
+        assert_eq!(p1.admitted, vec![0]);
+        assert_eq!(p1.prefill, vec![ChunkTask { id: 0, start: 0, len: 32, last: false }]);
+        assert!(p1.decode.is_empty());
+        assert!(p1.producers().is_empty(), "mid-prefill produces nothing");
+        // Ticks 2-3: carried-over chunks.
+        let p2 = s.next_iteration();
+        assert_eq!(p2.prefill, vec![ChunkTask { id: 0, start: 32, len: 32, last: false }]);
+        let p3 = s.next_iteration();
+        assert_eq!(p3.prefill, vec![ChunkTask { id: 0, start: 64, len: 32, last: false }]);
+        // Tick 4: the last 4 tokens complete prefill -> first token.
+        let p4 = s.next_iteration();
+        assert_eq!(p4.prefill, vec![ChunkTask { id: 0, start: 96, len: 4, last: true }]);
+        assert_eq!(p4.producers(), vec![0]);
+        assert!(!s.advance(0));
+        // From here on it decodes.
+        let p5 = s.next_iteration();
+        assert_eq!(p5.decode, vec![0]);
+        assert!(p5.prefill.is_empty());
+    }
+
+    #[test]
+    fn chunk_budget_interleaves_prefill_with_decode() {
+        let mut s = sched(64, 16, 8);
+        s.set_prefill_chunk(16);
+        s.enqueue(0, 8, 8); // short: decodes immediately
+        let p = s.next_iteration();
+        assert!(!s.advance(0));
+        assert_eq!(p.producers(), vec![0]);
+        s.enqueue(1, 64, 4); // long: 4 chunks of 16
+        for tick in 0..4 {
+            let p = s.next_iteration();
+            assert_eq!(p.decode, vec![0], "decode keeps running during prefill (tick {tick})");
+            assert_eq!(p.prefill.len(), 1);
+            assert_eq!(p.prefill[0].len, 16);
+            assert!(!s.advance(0));
+            if p.prefill[0].last {
+                assert!(!s.advance(1));
+            }
+        }
+        // Both now decode together.
+        let p = s.next_iteration();
+        assert_eq!(p.decode, vec![0, 1]);
+    }
+
+    #[test]
+    fn chunk_budget_is_shared_across_admissions() {
+        let mut s = sched(64, 16, 8);
+        s.set_prefill_chunk(48);
+        for id in 0..3u64 {
+            s.enqueue(id, 32, 2);
+        }
+        // 48-token budget covers seq 0 (32) and half of seq 1 (16);
+        // seq 2 must wait for budget even though pages are free.
+        let p1 = s.next_iteration();
+        assert_eq!(p1.admitted, vec![0, 1]);
+        assert_eq!(p1.prefill[0], ChunkTask { id: 0, start: 0, len: 32, last: true });
+        assert_eq!(p1.prefill[1], ChunkTask { id: 1, start: 0, len: 16, last: false });
+        assert!(!s.advance(0));
+        let p2 = s.next_iteration();
+        assert_eq!(p2.admitted, vec![2]);
+        assert_eq!(p2.prefill[0], ChunkTask { id: 1, start: 16, len: 16, last: true });
+        assert_eq!(p2.prefill[1], ChunkTask { id: 2, start: 0, len: 32, last: true });
+    }
+
+    #[test]
+    fn preempted_partial_prefill_restarts_cleanly() {
+        // Tight pool: a long prompt mid-prefill is preempted by the
+        // older decoder's growth and must re-prefill from scratch.
+        let mut s = sched(4, 16, 8);
+        s.set_prefill_chunk(16);
+        s.enqueue(0, 17, 24); // 2 pages, grows to 3
+        s.enqueue(1, 40, 2); // 3 pages over 3 chunks
+        let mut chunks_for_1: Vec<ChunkTask> = Vec::new();
+        let mut done = Vec::new();
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 300, "no deadlock");
+            let plan = s.next_iteration();
+            chunks_for_1.extend(plan.prefill.iter().filter(|c| c.id == 1));
+            for id in plan.producers() {
+                if s.advance(id) {
+                    s.retire(id);
+                    done.push(id);
+                }
+            }
+        }
+        assert_eq!(done, vec![0, 1]);
+        assert!(s.preemptions() > 0, "the tight pool must preempt the prefill");
+        // After each preemption the chunk offsets restart at 0.
+        let restarts = chunks_for_1.iter().filter(|c| c.start == 0).count();
+        assert!(restarts >= 2, "re-admission must re-prefill from scratch");
+        assert_eq!(s.pool().in_use(), 0);
+        assert_eq!(s.pool().trie_len(), 0);
+    }
+
+    // ---- Prefix sharing through the scheduler ----
+
+    fn hashes_of(seed: i32, len: usize, pt: usize) -> Vec<u64> {
+        let prompt: Vec<i32> =
+            (0..len as i32).map(|i| seed.wrapping_mul(977).wrapping_add(i)).collect();
+        prompt_page_hashes(&prompt, pt)
+    }
+
+    #[test]
+    fn full_prefix_hit_skips_prefill_entirely() {
+        let mut s = sched(64, 16, 8);
+        let h = hashes_of(1, 48, 16);
+        s.enqueue_shared(0, 48, 4, h.clone());
+        let p1 = s.next_iteration();
+        assert_eq!(p1.admitted, vec![0]);
+        assert_eq!(p1.prefill_tokens(), 48, "first serve prefills everything");
+        assert!(!s.advance(0));
+        let _ = s.next_iteration(); // publishes seq 0's pages
+        // An identical prompt (a cascade re-serve) claims every page:
+        // no prefill chunk, first token decoded immediately.
+        s.enqueue_shared(1, 48, 4, h);
+        let p = s.next_iteration();
+        assert!(p.admitted.is_empty(), "full hits owe no prefill");
+        assert!(p.decode.contains(&1));
+        assert!(p.prefill.is_empty());
+        assert_eq!(s.prefix_hit_tokens(), 48);
+        assert!(!s.advance(1));
+        // Physical occupancy: 48-token prompt = 3 pages shared + one
+        // private first-token page each.
+        assert!(s.pool().in_use() <= 3 + 2, "shared pages must not be duplicated");
+    }
+
+    #[test]
+    fn partial_prefix_hit_prefills_only_the_tail() {
+        let mut s = sched(64, 16, 8);
+        // Two prompts sharing the first 32 tokens (2 pages), diverging
+        // in the tail page.
+        let shared: Vec<i32> = (0..32).collect();
+        let mut a = shared.clone();
+        a.extend(100..116);
+        let mut b = shared;
+        b.extend(200..216);
+        s.enqueue_shared(0, 48, 4, prompt_page_hashes(&a, 16));
+        let _ = s.next_iteration();
+        assert!(!s.advance(0));
+        let _ = s.next_iteration(); // publish
+        s.enqueue_shared(1, 48, 4, prompt_page_hashes(&b, 16));
+        let p = s.next_iteration();
+        let chunk = p.prefill.iter().find(|c| c.id == 1).expect("tail chunk");
+        assert_eq!(chunk.start, 32, "shared pages skip prefill");
+        assert_eq!(chunk.len, 16);
+        assert!(chunk.last);
+        assert_eq!(s.prefix_hit_tokens(), 32);
+    }
+
+    #[test]
+    fn retire_and_drain_leave_no_shared_residue() {
+        let mut s = sched(32, 16, 8);
+        let h = hashes_of(7, 64, 16);
+        let free0 = s.pool().free_pages();
+        // Seq 0 prefills and publishes; 1 and 2 arrive while it still
+        // runs and ride its pages.
+        s.enqueue_shared(0, 64, 8, h.clone());
+        for id in s.next_iteration().producers() {
+            assert!(!s.advance(id));
+        }
+        let _ = s.next_iteration(); // publish tick
+        assert!(!s.advance(0));
+        s.enqueue_shared(1, 64, 2, h.clone());
+        s.enqueue_shared(2, 64, 2, h);
+        let (order, _) = run_to_completion(&mut s, 64);
+        assert_eq!(order.len(), 3);
+        assert!(s.prefix_hit_tokens() > 0, "later arrivals must hit the trie");
+        assert_eq!(s.pool().in_use(), 0, "refcount leak");
+        assert_eq!(s.pool().trie_len(), 0, "trie leak");
+        assert_eq!(s.pool().free_pages(), free0, "free list must return to initial");
     }
 }

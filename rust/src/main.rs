@@ -362,6 +362,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use cascadia::engine::{run_serving_bench, BenchConfig};
 
     let mut cfg = if args.flag("smoke") { BenchConfig::smoke() } else { BenchConfig::full() };
+    if args.flag("prefix-heavy") {
+        cfg = cfg.prefix_heavy();
+    }
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     eprintln!(
         "serving bench ({} mode): {} requests, time x{:.0}, {} tokens/step",
@@ -405,6 +408,28 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "p95 speedup: {:.2}x | throughput gain: {:.2}x",
         report.p95_speedup, report.throughput_gain
     );
+    println!(
+        "prefix sharing ({} reqs, {}-token prefix): peak pages {} -> {} | prefilled tokens {} -> {} | hits {} | CoW {} | win {}",
+        report.prefix.requests,
+        report.prefix.shared_prefix_tokens,
+        report.prefix.baseline_peak_pages,
+        report.prefix.shared_peak_pages,
+        report.prefix.baseline_prefill_tokens,
+        report.prefix.shared_prefill_tokens,
+        report.prefix.prefix_hit_tokens,
+        report.prefix.cow_copies,
+        report.prefix.win,
+    );
+    println!(
+        "chunked prefill ({} reqs, {}-token longs, chunk {}): p95 TTFT {:.2}s -> {:.2}s ({:.2}x) | win {}",
+        report.chunked.requests,
+        report.chunked.long_prompt_tokens,
+        report.chunked.prefill_chunk,
+        report.chunked.whole_p95_ttft_s,
+        report.chunked.chunked_p95_ttft_s,
+        report.chunked.ttft_speedup,
+        report.chunked.win,
+    );
 
     let out = args.str_or("out", "BENCH_serving.json");
     std::fs::write(&out, format!("{}\n", report.to_json()))
@@ -419,6 +444,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
              (p95 speedup {:.2}, throughput gain {:.2})",
             report.p95_speedup,
             report.throughput_gain
+        );
+    }
+    if !report.prefix.win {
+        bail!(
+            "prefix sharing regressed: peak pages {} vs {} baseline, \
+             prefilled tokens {} vs {} baseline",
+            report.prefix.shared_peak_pages,
+            report.prefix.baseline_peak_pages,
+            report.prefix.shared_prefill_tokens,
+            report.prefix.baseline_prefill_tokens
+        );
+    }
+    if !report.chunked.win {
+        bail!(
+            "chunked prefill did not improve long-prompt-mix p95 TTFT \
+             ({:.3}s chunked vs {:.3}s whole)",
+            report.chunked.chunked_p95_ttft_s,
+            report.chunked.whole_p95_ttft_s
         );
     }
     Ok(())
@@ -460,8 +503,9 @@ fn print_help() {
          \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
          Online adaptation (drift replay, §4.4):\n\
          \x20   cascadia replay --config examples/configs/drift_replay.json\n\n\
-         Serving benchmark (continuous engine vs lockstep baseline):\n\
-         \x20   cascadia bench [--smoke] [--seed S] [--out BENCH_serving.json]\n\n\
+         Serving benchmark (continuous engine vs lockstep baseline, plus\n\
+         prefix-sharing and chunked-prefill sections):\n\
+         \x20   cascadia bench [--smoke] [--prefix-heavy] [--seed S] [--out BENCH_serving.json]\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );
 }

@@ -28,6 +28,13 @@ use crate::parallel::{ReplicaGroup, ACT_RESERVE};
 /// and the paged discrete-event simulator (vLLM's classic block size).
 pub const DEFAULT_PAGE_TOKENS: usize = 16;
 
+/// Default prefill chunk budget (tokens per iteration) of the
+/// execution engine's Sarathi-style interleaved prefill. The analytic
+/// scheduler models TTFT with the same budget
+/// ([`ReplicaModel::ttft_chunked`]), so schedule-time estimates and
+/// the runtime agree on prefill-cost semantics.
+pub const DEFAULT_PREFILL_CHUNK: usize = 512;
+
 /// Workload statistics for one model type, as the router sees them.
 #[derive(Debug, Clone, Copy)]
 pub struct Workload {
@@ -235,10 +242,29 @@ impl ReplicaModel {
     ///   λ · a · (1 + λ·pf) = 1,   a = avg_output · iter(b) / b
     /// — a quadratic in λ.
     pub fn capacity(&self, w: &Workload) -> f64 {
-        if self.max_batch == 0 {
+        self.capacity_at_batch(w, self.max_batch)
+    }
+
+    /// [`ReplicaModel::capacity`] with a shared-prefix credit: when
+    /// every request carries a `shared_prefix_tokens` common prompt
+    /// prefix, the prefix's pages are resident once (the engine's
+    /// prefix trie) and the KV budget holds more concurrent sequences
+    /// — the steady batch, and with it the sustainable rate, grows.
+    pub fn capacity_shared(&self, w: &Workload, shared_prefix_tokens: f64) -> f64 {
+        if shared_prefix_tokens <= 0.0 {
+            return self.capacity(w);
+        }
+        let avg_ctx = w.avg_input + w.avg_output;
+        let b = self
+            .max_batch_shared(avg_ctx, shared_prefix_tokens, DEFAULT_PAGE_TOKENS)
+            .max(self.max_batch);
+        self.capacity_at_batch(w, b)
+    }
+
+    fn capacity_at_batch(&self, w: &Workload, b: usize) -> f64 {
+        if b == 0 {
             return 0.0;
         }
-        let b = self.max_batch;
         let decode_tok_s = self.decode_throughput(b);
         let a = w.avg_output.max(1.0) / decode_tok_s.max(1e-12);
         let pf = self.prefill_latency(w.avg_input).max(1e-12);
@@ -271,6 +297,44 @@ impl ReplicaModel {
     pub fn fits_context(&self, ctx_tokens: f64) -> bool {
         self.kv_pages_for(ctx_tokens, DEFAULT_PAGE_TOKENS)
             <= self.kv_pages_total(DEFAULT_PAGE_TOKENS)
+    }
+
+    /// Max concurrent sequences the KV budget holds when every
+    /// sequence shares a `shared_prefix_tokens` page-aligned prompt
+    /// prefix (held once) and owns only its private remainder — the
+    /// capacity credit prefix sharing buys the feasibility screen.
+    /// Falls back to [`ReplicaModel::max_batch`] semantics at
+    /// `shared_prefix_tokens = 0`.
+    pub fn max_batch_shared(
+        &self,
+        avg_ctx: f64,
+        shared_prefix_tokens: f64,
+        page_tokens: usize,
+    ) -> usize {
+        let total = self.kv_pages_total(page_tokens);
+        if total == 0 {
+            return 0;
+        }
+        let shared = shared_prefix_tokens.clamp(0.0, avg_ctx);
+        let shared_pages =
+            ((shared / page_tokens.max(1) as f64).floor() as usize).min(total);
+        let private_pages = self
+            .kv_pages_for(avg_ctx, page_tokens)
+            .saturating_sub(shared_pages)
+            .max(1);
+        ((total - shared_pages) / private_pages).clamp(1, 512)
+    }
+
+    /// Time to first token under chunked prefill at steady batch `b`:
+    /// the prompt's prefill is split into `ceil(prompt/chunk)` chunks,
+    /// each sharing its iteration with the decode batch, so TTFT pays
+    /// the full prefill plus one decode iteration per chunk. At
+    /// `chunk >= prompt` this is exactly the unchunked
+    /// `prefill + decode_iteration(b)` — the cost the pre-chunking
+    /// model charged.
+    pub fn ttft_chunked(&self, prompt_tokens: f64, chunk_tokens: f64, b: usize) -> f64 {
+        let chunks = (prompt_tokens / chunk_tokens.max(1.0)).ceil().max(1.0);
+        self.prefill_latency(prompt_tokens) + chunks * self.decode_iteration(b)
     }
 }
 
@@ -395,6 +459,32 @@ mod tests {
         assert_eq!(r.kv_pages_for(16.0, 16), 1);
         assert_eq!(r.kv_pages_for(17.0, 16), 2);
         assert_eq!(r.kv_pages_for(0.0, 16), 1);
+    }
+
+    #[test]
+    fn shared_prefix_raises_capacity_and_feasibility() {
+        let m = &llama_cascade()[0];
+        let r = ReplicaModel::new(m, &cluster(), 1, 1, 768.0);
+        let base = r.max_batch_shared(768.0, 0.0, DEFAULT_PAGE_TOKENS);
+        let shared = r.max_batch_shared(768.0, 512.0, DEFAULT_PAGE_TOKENS);
+        assert!(shared > base, "sharing a 512-token prefix must add slots: {shared} vs {base}");
+        // The capacity screen credits the extra concurrency.
+        let wl = Workload { rate: 1.0, avg_input: 512.0, avg_output: 256.0 };
+        assert!(r.capacity_shared(&wl, 448.0) >= r.capacity(&wl));
+        assert_eq!(r.capacity_shared(&wl, 0.0), r.capacity(&wl));
+    }
+
+    #[test]
+    fn chunked_ttft_matches_unchunked_at_full_budget() {
+        let m = &llama_cascade()[0];
+        let r = ReplicaModel::new(m, &cluster(), 2, 1, 768.0);
+        let whole = r.prefill_latency(1024.0) + r.decode_iteration(8);
+        let one_chunk = r.ttft_chunked(1024.0, 4096.0, 8);
+        assert!((whole - one_chunk).abs() < 1e-12);
+        // Finer chunks pay one extra interleaved iteration per chunk.
+        let four = r.ttft_chunked(1024.0, 256.0, 8);
+        assert!((four - (r.prefill_latency(1024.0) + 4.0 * r.decode_iteration(8))).abs() < 1e-12);
+        assert!(four > one_chunk);
     }
 
     #[test]

@@ -40,8 +40,8 @@ use crate::milp::simplex::Sense;
 use crate::milp::{MilpProblem, Rel};
 use crate::models::ModelSpec;
 use crate::parallel::{enumerate_strategies, Strategy};
-use crate::perf::{ReplicaModel, Workload};
-use crate::sim::analytic::OVERLOAD_LATENCY;
+use crate::perf::{ReplicaModel, Workload, DEFAULT_PREFILL_CHUNK};
+use crate::sim::analytic::{EngineSemantics, OVERLOAD_LATENCY};
 
 /// Options for the inner solver.
 #[derive(Debug, Clone)]
@@ -55,6 +55,18 @@ pub struct InnerOptions {
     /// Ablation (Figure 11 ii): force equal GPU split across deployed
     /// tiers instead of optimizing the allocation.
     pub uniform_allocation: bool,
+    /// Prompt tokens requests share as a common prefix (system
+    /// prompts): the feasibility screen credits the shared pages the
+    /// execution engine's prefix trie holds once (0 = no sharing).
+    pub shared_prefix_tokens: f64,
+    /// Prefill chunk budget the runtime engine interleaves at; the
+    /// estimate charges the matching chunk-limited TTFT. The default
+    /// is the engine's `DEFAULT_PREFILL_CHUNK` (the scheduler models
+    /// the runtime it deploys), which adds one interleaved decode
+    /// iteration per extra chunk for prompts longer than the budget —
+    /// set `f64::INFINITY` (or <= 0) to reproduce the pre-chunking
+    /// estimate exactly.
+    pub prefill_chunk: f64,
 }
 
 impl Default for InnerOptions {
@@ -63,6 +75,22 @@ impl Default for InnerOptions {
             use_milp: true,
             uniform_parallelism: false,
             uniform_allocation: false,
+            shared_prefix_tokens: 0.0,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK as f64,
+        }
+    }
+}
+
+impl InnerOptions {
+    /// The engine semantics the analytic estimates should model.
+    pub fn engine_semantics(&self) -> EngineSemantics {
+        EngineSemantics {
+            shared_prefix_tokens: self.shared_prefix_tokens.max(0.0),
+            prefill_chunk: if self.prefill_chunk > 0.0 {
+                self.prefill_chunk
+            } else {
+                f64::INFINITY
+            },
         }
     }
 }
@@ -82,13 +110,28 @@ pub struct InnerSolution {
     pub milp_nodes: usize,
 }
 
-/// Best parallelism strategy and its p95 for (model, budget, workload).
+/// Best parallelism strategy and its p95 for (model, budget, workload)
+/// under default engine semantics (no shared prefix, whole-prompt
+/// prefill) — see [`best_strategy_for_engine`].
 pub fn best_strategy_for(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     budget: usize,
     w: &Workload,
     uniform: bool,
+) -> Option<(Strategy, f64)> {
+    best_strategy_for_engine(model, cluster, budget, w, uniform, &EngineSemantics::default())
+}
+
+/// Best parallelism strategy and its p95 for (model, budget, workload),
+/// scored under the given execution-engine semantics.
+pub fn best_strategy_for_engine(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    budget: usize,
+    w: &Workload,
+    uniform: bool,
+    sem: &EngineSemantics,
 ) -> Option<(Strategy, f64)> {
     if budget == 0 {
         return None;
@@ -109,7 +152,7 @@ pub fn best_strategy_for(
             .iter()
             .map(|g| (&design_cache[&(g.tp, g.pp)], g.count))
             .collect();
-        crate::sim::analytic::estimate_p95_groups(&groups, w)
+        crate::sim::analytic::estimate_p95_groups_engine(&groups, w, sem)
     };
 
     if uniform {
@@ -196,11 +239,12 @@ impl InnerSolver {
         let mut l = vec![OVERLOAD_LATENCY; n_gpus + 1];
         let mut strategies: Vec<Option<Strategy>> = vec![None; n_gpus + 1];
 
+        let sem = self.opts.engine_semantics();
         if self.opts.uniform_parallelism {
             // The ablation's uniform strategy depends on f directly.
             for f in 1..=n_gpus {
                 if let Some((s, p)) =
-                    best_strategy_for(model, &self.cluster, f, w, true)
+                    best_strategy_for_engine(model, &self.cluster, f, w, true, &sem)
                 {
                     l[f] = p;
                     strategies[f] = Some(s);
@@ -220,7 +264,7 @@ impl InnerSolver {
                     .iter()
                     .map(|g| (&design_cache[&(g.tp, g.pp)], g.count))
                     .collect();
-                let p = crate::sim::analytic::estimate_p95_groups(&groups, w);
+                let p = crate::sim::analytic::estimate_p95_groups_engine(&groups, w, &sem);
                 let f = s.gpus();
                 if f <= n_gpus && p < l[f] {
                     l[f] = p;

@@ -17,7 +17,7 @@
 //! are deliberately simple: the scheduler only needs correct *ordering*
 //! of candidate strategies; final plans are re-scored by the DES.
 
-use crate::perf::{ReplicaModel, Workload};
+use crate::perf::{ReplicaModel, Workload, DEFAULT_PAGE_TOKENS};
 
 /// Tail inflation applied on top of the mean under queueing.
 pub const K_QUEUE: f64 = 0.8;
@@ -35,17 +35,54 @@ pub fn estimate_p95(replicas: &[ReplicaModel], w: &Workload) -> f64 {
     estimate_p95_groups(&groups, w)
 }
 
+/// Execution-engine semantics the estimate should model: the prompt
+/// prefix every request shares (pages held once via the engine's
+/// prefix trie — raises the KV-limited steady batch and capacity) and
+/// the prefill chunk budget (bounds TTFT via
+/// [`ReplicaModel::ttft_chunked`]). [`EngineSemantics::default`] —
+/// no sharing, unbounded chunk — reproduces the pre-engine estimate
+/// exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineSemantics {
+    /// Prompt tokens every request shares as a common prefix.
+    pub shared_prefix_tokens: f64,
+    /// Prefill tokens charged per iteration (`INFINITY` = whole-prompt
+    /// admission).
+    pub prefill_chunk: f64,
+}
+
+impl Default for EngineSemantics {
+    fn default() -> Self {
+        EngineSemantics { shared_prefix_tokens: 0.0, prefill_chunk: f64::INFINITY }
+    }
+}
+
 /// Like [`estimate_p95`] but over (design, replica-count) groups, so
 /// identical replicas are modeled once — the strategy-enumeration hot
 /// path (EXPERIMENTS.md §Perf).
 pub fn estimate_p95_groups(groups: &[(&ReplicaModel, usize)], w: &Workload) -> f64 {
+    estimate_p95_groups_engine(groups, w, &EngineSemantics::default())
+}
+
+/// [`estimate_p95_groups`] under explicit [`EngineSemantics`]: the
+/// feasibility screen and steady-batch clamp credit shared-prefix
+/// pages, and the base latency charges chunk-limited TTFT — the same
+/// page-lifetime and prefill-cost model the execution engine enforces
+/// at runtime.
+pub fn estimate_p95_groups_engine(
+    groups: &[(&ReplicaModel, usize)],
+    w: &Workload,
+    sem: &EngineSemantics,
+) -> f64 {
     if groups.is_empty() {
         return OVERLOAD_LATENCY;
     }
     // Page-granular memory feasibility (the inner scheduler's screen):
     // a design whose KV budget cannot hold even ONE full-length
     // request is infeasible, even though the request-count clamp would
-    // round its fractional budget up to a single slot.
+    // round its fractional budget up to a single slot. (A shared
+    // prefix does not help a single request — all its pages must be
+    // resident either way.)
     for (r, _) in groups {
         if !r.fits_context(w.avg_input + w.avg_output) {
             return OVERLOAD_LATENCY;
@@ -53,7 +90,7 @@ pub fn estimate_p95_groups(groups: &[(&ReplicaModel, usize)], w: &Workload) -> f
     }
     let capacities: Vec<f64> = groups
         .iter()
-        .map(|(r, n)| r.capacity(w) * *n as f64)
+        .map(|(r, n)| r.capacity_shared(w, sem.shared_prefix_tokens) * *n as f64)
         .collect();
     let total_capacity: f64 = capacities.iter().sum();
     if total_capacity <= 0.0 {
@@ -80,13 +117,32 @@ pub fn estimate_p95_groups(groups: &[(&ReplicaModel, usize)], w: &Workload) -> f
         // arrival rate x decode residence time (avg_output iterations);
         // the fixed point converges in a few rounds.
         let rate_r = w.rate * share;
+        // The batch clamp credits shared-prefix pages: a fleet sharing
+        // a system prompt fits more concurrent sequences. Without
+        // sharing the clamp is exactly the legacy `max_batch`.
+        let b_max = if sem.shared_prefix_tokens > 0.0 {
+            r.max_batch_shared(
+                w.avg_input + w.avg_output,
+                sem.shared_prefix_tokens,
+                DEFAULT_PAGE_TOKENS,
+            )
+            .max(r.max_batch)
+        } else {
+            r.max_batch
+        }
+        .max(1);
         let mut b = 1usize;
         for _ in 0..8 {
             let iter = r.decode_iteration(b);
             let in_flight = rate_r * w.avg_output * iter;
-            b = (in_flight.ceil() as usize).clamp(1, r.max_batch.max(1));
+            b = (in_flight.ceil() as usize).clamp(1, b_max);
         }
-        let base = r.prefill_latency(w.avg_input) + w.avg_output * r.decode_iteration(b);
+        // Chunk-limited TTFT (the engine interleaves one decode
+        // iteration per prefill chunk) plus the remaining decode; a
+        // shared prefix shrinks the prompt span actually prefilled.
+        let prefilled = (w.avg_input - sem.shared_prefix_tokens).max(0.0);
+        let base = r.ttft_chunked(prefilled, sem.prefill_chunk, b)
+            + (w.avg_output - 1.0).max(0.0) * r.decode_iteration(b);
         // Weight by the whole group's traffic share (share is per replica).
         base_mean += share * *n as f64 * base;
     }
@@ -154,6 +210,50 @@ mod tests {
         let two = estimate_p95(&pool(2, 2), &w(rate));
         let four = estimate_p95(&pool(2, 4), &w(rate));
         assert!(four < two);
+    }
+
+    #[test]
+    fn engine_semantics_default_reproduces_legacy_estimate() {
+        let p = pool(2, 2);
+        let groups: Vec<(&ReplicaModel, usize)> = p.iter().map(|r| (r, 1)).collect();
+        let legacy = estimate_p95_groups(&groups, &w(1.0));
+        let explicit =
+            estimate_p95_groups_engine(&groups, &w(1.0), &EngineSemantics::default());
+        assert_eq!(legacy, explicit);
+    }
+
+    #[test]
+    fn shared_prefix_credit_never_raises_the_estimate() {
+        let p = pool(2, 2);
+        let groups: Vec<(&ReplicaModel, usize)> = p.iter().map(|r| (r, 1)).collect();
+        // Light enough that the steady-batch fixed point sits below
+        // both clamps: the credit can only shrink prefill and rho.
+        let cap = pool_capacity(&p, &w(1.0));
+        let load = w(cap * 0.3);
+        let plain = estimate_p95_groups(&groups, &load);
+        let shared = estimate_p95_groups_engine(
+            &groups,
+            &load,
+            &EngineSemantics { shared_prefix_tokens: 384.0, ..Default::default() },
+        );
+        assert!(shared <= plain, "sharing must not hurt: {shared} vs {plain}");
+    }
+
+    #[test]
+    fn chunk_budget_charges_interleaved_iterations() {
+        let p = pool(2, 1);
+        let groups: Vec<(&ReplicaModel, usize)> = p.iter().map(|r| (r, 1)).collect();
+        let light = w(0.05);
+        let whole = estimate_p95_groups(&groups, &light);
+        let chunked = estimate_p95_groups_engine(
+            &groups,
+            &light,
+            &EngineSemantics { prefill_chunk: 128.0, ..Default::default() },
+        );
+        assert!(
+            chunked > whole,
+            "a 512-token prompt in 128-token chunks pays extra interleave: {chunked} vs {whole}"
+        );
     }
 
     #[test]

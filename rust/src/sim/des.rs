@@ -39,11 +39,15 @@ pub enum DesMode {
     /// `ReplicaModel::max_batch` (request count) — the legacy default.
     Continuous,
     /// Continuous batching against a paged KV pool sized from the
-    /// replica's memory budget; admission/preemption run through the
-    /// live engine's [`IterationScheduler`].
+    /// replica's memory budget; admission/preemption/chunked
+    /// prefill/prefix claims run through the live engine's
+    /// [`IterationScheduler`].
     Paged {
         /// Tokens per KV page.
         page_tokens: usize,
+        /// Prefill token budget per iteration (`usize::MAX` =
+        /// whole-prompt admission, the pre-chunking discipline).
+        prefill_chunk: usize,
     },
     /// Whole-batch lockstep: admit a batch, run every request to
     /// completion serially, then admit again.
@@ -51,7 +55,7 @@ pub enum DesMode {
 }
 
 /// One request as the simulator sees it.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SimRequest {
     /// Arrival time, seconds from simulation start.
     pub arrival: f64,
@@ -59,6 +63,23 @@ pub struct SimRequest {
     pub input_tokens: u32,
     /// Tokens to generate.
     pub output_tokens: u32,
+    /// Prompt-identity group for [`DesMode::Paged`] prefix sharing
+    /// (0 = unique prompt). Requests in one group share a
+    /// `shared_tokens`-token prompt prefix; requests of a group must
+    /// carry the same `input_tokens` when `shared_tokens` covers the
+    /// whole prompt (identical re-serves).
+    pub prefix_group: u64,
+    /// Prompt tokens shared within `prefix_group` (page-aligned
+    /// portions become claimable; a value >= `input_tokens` models an
+    /// identical prompt, tail page included).
+    pub shared_tokens: u32,
+}
+
+impl SimRequest {
+    /// A unique-prompt request (no prefix sharing).
+    pub fn new(arrival: f64, input_tokens: u32, output_tokens: u32) -> SimRequest {
+        SimRequest { arrival, input_tokens, output_tokens, prefix_group: 0, shared_tokens: 0 }
+    }
 }
 
 /// Aggregate outcome of a simulation run.
@@ -84,6 +105,12 @@ pub struct SimOutcome {
     /// Sequences preempted-and-requeued across the pool (0 outside
     /// [`DesMode::Paged`]).
     pub preemptions: usize,
+    /// Prompt tokens served from shared prefix pages instead of being
+    /// prefilled (0 outside [`DesMode::Paged`]).
+    pub prefix_hit_tokens: usize,
+    /// Copy-on-write page copies across the pool (0 outside
+    /// [`DesMode::Paged`]).
+    pub cow_copies: usize,
 }
 
 impl SimOutcome {
@@ -195,7 +222,9 @@ pub fn simulate_mode(
 ) -> SimOutcome {
     match mode {
         DesMode::Continuous => simulate(replicas, trace),
-        DesMode::Paged { page_tokens } => simulate_paged(replicas, trace, page_tokens),
+        DesMode::Paged { page_tokens, prefill_chunk } => {
+            simulate_paged(replicas, trace, page_tokens, prefill_chunk)
+        }
         DesMode::Lockstep => simulate_lockstep(replicas, trace),
     }
 }
@@ -297,6 +326,8 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         completions,
         peak_pages: 0,
         preemptions: 0,
+        prefix_hit_tokens: 0,
+        cow_copies: 0,
     }
 }
 
@@ -462,18 +493,27 @@ pub fn simulate_lockstep(replicas: &[ReplicaModel], trace: &[SimRequest]) -> Sim
         completions,
         peak_pages: 0,
         preemptions: 0,
+        prefix_hit_tokens: 0,
+        cow_copies: 0,
     }
 }
 
-/// Paged continuous-batching simulation: admission, growth, and
-/// preemption run through the live engine's [`IterationScheduler`]
-/// against a [`KvPool`] sized from each replica's memory budget
-/// ([`ReplicaModel::kv_pages_total`]) — schedule-time estimates and
-/// the runtime share one policy by construction.
+/// Paged continuous-batching simulation: admission, growth, chunked
+/// prefill, prefix claims, and preemption run through the live
+/// engine's [`IterationScheduler`] against a [`KvPool`] sized from
+/// each replica's memory budget ([`ReplicaModel::kv_pages_total`]) —
+/// schedule-time estimates and the runtime share one page-lifetime and
+/// prefill-cost policy by construction.
+///
+/// Requests with a [`SimRequest::prefix_group`] share synthetic page
+/// hashes over their `shared_tokens` prompt prefix, so later
+/// group-mates claim published pages exactly like the engine's trie
+/// path (claimed tokens cost no prefill latency and no pages).
 pub fn simulate_paged(
     replicas: &[ReplicaModel],
     trace: &[SimRequest],
     page_tokens: usize,
+    prefill_chunk: usize,
 ) -> SimOutcome {
     assert!(!replicas.is_empty(), "simulate() with no replicas");
     let page_tokens = page_tokens.max(1);
@@ -483,23 +523,55 @@ pub fn simulate_paged(
         .collect();
     assert!(!usable.is_empty(), "no replica has KV capacity");
 
+    // Synthetic chained page hashes mirroring the engine's
+    // content-hash chain: shared-prefix pages hash off the group key,
+    // divergent tails off the request id, so trie hits reproduce
+    // exactly the sharing the trace declares.
+    let mix = |a: u64, b: u64| -> u64 {
+        let mut x = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x ^ (x >> 27)
+    };
+    let hashes_of = |id: usize, req: &SimRequest| -> Vec<u64> {
+        if req.prefix_group == 0 {
+            return Vec::new();
+        }
+        let pages = (req.input_tokens.max(1) as usize).div_ceil(page_tokens);
+        let shared_pages = if req.shared_tokens >= req.input_tokens {
+            pages
+        } else {
+            (req.shared_tokens as usize) / page_tokens
+        };
+        (0..pages)
+            .map(|i| {
+                if i < shared_pages {
+                    mix(req.prefix_group, i as u64)
+                } else {
+                    mix(0x5bd1_e995 ^ ((id as u64 + 1) << 20), i as u64)
+                }
+            })
+            .collect()
+    };
+
     struct Rep<'a> {
         model: &'a ReplicaModel,
         sched: IterationScheduler,
-        /// Sequences advancing in the in-flight iteration.
+        /// Sequences producing one token in the in-flight iteration.
         inflight: Vec<u64>,
         busy: bool,
         busy_time: f64,
         backlog_tokens: f64,
     }
 
-    /// Plan and launch one iteration (prefill of admissions charged in,
-    /// like the continuous simulator).
+    /// Plan and launch one iteration: the tick charges one decode
+    /// iteration at the planned batch plus the prefill latency of the
+    /// tick's chunks (prefix-claimed tokens never appear in a chunk
+    /// and therefore cost nothing — the engine's fast path).
     fn start_iter(
         rep: &mut Rep<'_>,
         ri: usize,
         now: f64,
-        trace: &[SimRequest],
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
@@ -509,13 +581,13 @@ pub fn simulate_paged(
             rep.inflight.clear();
             return;
         }
-        let mut prefill_cost = 0.0;
-        for &id in &plan.admitted {
-            prefill_cost +=
-                rep.model.prefill_latency(trace[id as usize].input_tokens as f64);
-        }
-        rep.inflight = plan.admitted.iter().chain(&plan.decode).copied().collect();
-        let iter = rep.model.decode_iteration(rep.inflight.len())
+        let prefill_cost: f64 = plan
+            .prefill
+            .iter()
+            .map(|c| rep.model.prefill_latency(c.len as f64))
+            .sum();
+        rep.inflight = plan.producers();
+        let iter = rep.model.decode_iteration(plan.batch())
             / rep.model.pp_capacity_factor;
         let dt = iter + prefill_cost;
         rep.busy = true;
@@ -526,16 +598,20 @@ pub fn simulate_paged(
 
     let mut pool: Vec<Rep> = usable
         .iter()
-        .map(|m| Rep {
-            model: m,
-            sched: IterationScheduler::new(
+        .map(|m| {
+            let mut sched = IterationScheduler::new(
                 KvPool::new(m.kv_pages_total(page_tokens), page_tokens),
                 m.max_batch.max(1),
-            ),
-            inflight: Vec::new(),
-            busy: false,
-            busy_time: 0.0,
-            backlog_tokens: 0.0,
+            );
+            sched.set_prefill_chunk(prefill_chunk);
+            Rep {
+                model: m,
+                sched,
+                inflight: Vec::new(),
+                busy: false,
+                busy_time: 0.0,
+                backlog_tokens: 0.0,
+            }
         })
         .collect();
 
@@ -561,15 +637,16 @@ pub fn simulate_paged(
                 let best =
                     pick_least_loaded(pool.iter().map(|r| (r.backlog_tokens, r.model)));
                 let rep = &mut pool[best];
-                rep.sched.enqueue(
+                rep.sched.enqueue_shared(
                     id as u64,
                     req.input_tokens as usize,
                     req.output_tokens.max(1) as usize,
+                    hashes_of(id, req),
                 );
                 rep.backlog_tokens +=
                     req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
                 if !rep.busy {
-                    start_iter(rep, best, now, trace, &mut heap, &mut seq);
+                    start_iter(rep, best, now, &mut heap, &mut seq);
                 }
             }
             EventKind::IterDone(ri) => {
@@ -588,7 +665,7 @@ pub fn simulate_paged(
                     }
                 }
                 if rep.sched.n_seqs() > 0 {
-                    start_iter(rep, ri, now, trace, &mut heap, &mut seq);
+                    start_iter(rep, ri, now, &mut heap, &mut seq);
                 } else {
                     rep.busy = false;
                 }
@@ -613,6 +690,11 @@ pub fn simulate_paged(
         completions,
         peak_pages: pool.iter().map(|r| r.sched.pool().peak_in_use()).max().unwrap_or(0),
         preemptions: pool.iter().map(|r| r.sched.preemptions() as usize).sum(),
+        prefix_hit_tokens: pool
+            .iter()
+            .map(|r| r.sched.prefix_hit_tokens() as usize)
+            .sum(),
+        cow_copies: pool.iter().map(|r| r.sched.pool().cow_copies() as usize).sum(),
     }
 }
 
@@ -636,7 +718,7 @@ mod tests {
         (0..n)
             .map(|_| {
                 t += rng.exp(rate);
-                SimRequest { arrival: t, input_tokens: 512, output_tokens: 128 }
+                SimRequest::new(t, 512, 128)
             })
             .collect()
     }
@@ -723,8 +805,7 @@ mod tests {
         // With one request there is nothing to batch: all three
         // disciplines must charge exactly prefill + out x iter(1).
         let pool = vec![replica(2)];
-        let trace =
-            vec![SimRequest { arrival: 0.0, input_tokens: 512, output_tokens: 64 }];
+        let trace = vec![SimRequest::new(0.0, 512, 64)];
         let lock = simulate_mode(&pool, &trace, DesMode::Lockstep);
         let expected = pool[0].prefill_latency(512.0) + 64.0 * pool[0].decode_iteration(1);
         assert!(
@@ -733,7 +814,7 @@ mod tests {
             lock.latencies[0],
             expected
         );
-        for mode in [DesMode::Continuous, DesMode::Paged { page_tokens: 16 }] {
+        for mode in [DesMode::Continuous, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX }] {
             let out = simulate_mode(&pool, &trace, mode);
             assert_eq!(out.latencies.len(), 1);
             let rel = (out.latencies[0] - lock.latencies[0]).abs()
@@ -746,7 +827,7 @@ mod tests {
     fn paged_mode_tracks_pages_within_budget_and_completes() {
         let pool = vec![replica(2)];
         let trace = poisson_trace(2.0, 300, 7);
-        let out = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16 });
+        let out = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX });
         assert_eq!(out.latencies.len(), 300);
         assert!(out.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
         assert!(out.peak_pages > 0, "page accounting must be live");
@@ -758,7 +839,7 @@ mod tests {
         );
         assert_eq!(out.preemptions, 0, "an amply sized pool never preempts");
         // Deterministic like the other modes.
-        let again = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16 });
+        let again = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX });
         assert_eq!(out.latencies, again.latencies);
         assert_eq!(out.makespan, again.makespan);
     }
@@ -780,5 +861,90 @@ mod tests {
             cont.p95()
         );
         assert!(lock.makespan >= cont.makespan * 0.99);
+    }
+
+    #[test]
+    fn chunked_prefill_pins_to_closed_form_on_one_long_prompt() {
+        // Single request, no batchmates: chunked prefill must cost
+        // exactly the whole-prompt latency plus one interleaved
+        // iteration per extra chunk — the DES-level pin of the chunk
+        // budget's TTFT semantics.
+        let pool = vec![replica(2)];
+        let m = &pool[0];
+        let trace = vec![SimRequest::new(0.0, 2048, 32)];
+        let whole = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+        );
+        let chunked = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: 512 },
+        );
+        let iter1 = m.decode_iteration(1) / m.pp_capacity_factor;
+        let expect_whole = m.prefill_latency(2048.0) + 32.0 * iter1;
+        let n_chunks = 2048f64 / 512.0; // 4 chunks
+        let expect_chunked = expect_whole + (n_chunks - 1.0) * iter1;
+        assert!(
+            (whole.latencies[0] - expect_whole).abs() < 1e-9,
+            "whole {} vs closed form {}",
+            whole.latencies[0],
+            expect_whole
+        );
+        assert!(
+            (chunked.latencies[0] - expect_chunked).abs() < 1e-9,
+            "chunked {} vs closed form {}",
+            chunked.latencies[0],
+            expect_chunked
+        );
+    }
+
+    #[test]
+    fn prefix_groups_hit_shared_pages_and_cut_occupancy() {
+        // A stream of requests sharing a 256-token system prompt,
+        // spaced widely enough that each arrival finds its
+        // predecessor's pages published.
+        let pool = vec![replica(2)];
+        let make = |group: u64| -> Vec<SimRequest> {
+            (0..24)
+                .map(|i| SimRequest {
+                    arrival: i as f64 * 0.1,
+                    input_tokens: 512,
+                    output_tokens: 64,
+                    prefix_group: group,
+                    shared_tokens: if group == 0 { 0 } else { 256 },
+                })
+                .collect()
+        };
+        let mode = DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX };
+        let solo = simulate_mode(&pool, &make(0), mode);
+        let shared = simulate_mode(&pool, &make(7), mode);
+        assert_eq!(solo.prefix_hit_tokens, 0);
+        assert!(shared.prefix_hit_tokens > 0, "group-mates must claim the prefix");
+        assert!(
+            shared.peak_pages < solo.peak_pages,
+            "sharing must cut peak occupancy: {} vs {}",
+            shared.peak_pages,
+            solo.peak_pages
+        );
+        assert!(
+            shared.makespan <= solo.makespan + 1e-9,
+            "skipped prefill cannot slow the run"
+        );
+        // Identical-prompt re-serves (shared == input) ride the tail
+        // page too and may CoW on divergence.
+        let reserve: Vec<SimRequest> = (0..12)
+            .map(|i| SimRequest {
+                arrival: i as f64 * 0.1,
+                input_tokens: 512,
+                output_tokens: 64,
+                prefix_group: 9,
+                shared_tokens: 512,
+            })
+            .collect();
+        let out = simulate_mode(&pool, &reserve, mode);
+        assert!(out.prefix_hit_tokens >= 512 * 8, "full hits skip whole prompts");
+        assert_eq!(out.latencies.len(), 12);
     }
 }

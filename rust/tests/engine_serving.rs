@@ -66,8 +66,16 @@ fn continuous_and_lockstep_route_identically() {
         .unwrap()
         .serve(&trace, &factory, &BinaryJudger)
         .unwrap();
-    let engines =
-        vec![EngineConfig { pool_pages: 512, page_tokens: 16, max_running: 8 }; 3];
+    let engines = vec![
+        EngineConfig {
+            pool_pages: 512,
+            page_tokens: 16,
+            max_running: 8,
+            prefill_chunk: usize::MAX,
+            share_prefixes: true,
+        };
+        3
+    ];
     let cont = CascadeServer::new(base.continuous(engines))
         .unwrap()
         .serve(&trace, &factory, &BinaryJudger)
@@ -102,14 +110,14 @@ fn paged_des_matches_continuous_des_when_pages_never_bind() {
     let m = &llama_cascade()[0];
     let rm = ReplicaModel::new(m, &ClusterSpec::paper_testbed(), 2, 1, 768.0);
     let trace: Vec<SimRequest> = (0..60)
-        .map(|i| SimRequest {
-            arrival: i as f64 * 0.4,
-            input_tokens: 512,
-            output_tokens: 64,
-        })
+        .map(|i| SimRequest::new(i as f64 * 0.4, 512, 64))
         .collect();
     let cont = simulate_mode(&[rm.clone()], &trace, DesMode::Continuous);
-    let paged = simulate_mode(&[rm.clone()], &trace, DesMode::Paged { page_tokens: 16 });
+    let paged = simulate_mode(
+        &[rm.clone()],
+        &trace,
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+    );
     assert_eq!(cont.latencies.len(), paged.latencies.len());
     let rel = (paged.p95() - cont.p95()).abs() / cont.p95().max(1e-12);
     assert!(rel < 1e-6, "paged p95 {} vs continuous {}", paged.p95(), cont.p95());

@@ -1,0 +1,282 @@
+//! Integration tests of prefix-sharing paged KV and chunked prefill:
+//! refcount-leak accounting after full drains, CoW divergence
+//! determinism, the chunked-vs-whole DES pin, and routing invariance
+//! of the prefix fast path on the public serving API.
+
+use anyhow::Result;
+use cascadia::cluster::ClusterSpec;
+use cascadia::coordinator::server::{
+    CascadeServer, ResponseJudger, ServerConfig, TierBackend,
+};
+use cascadia::engine::{
+    prompt_page_hashes, EngineConfig, EngineCore, IterationScheduler, KvPool, SeqId,
+    StepBackend,
+};
+use cascadia::models::llama_cascade;
+use cascadia::perf::ReplicaModel;
+use cascadia::sim::{simulate_mode, DesMode, SimRequest};
+
+/// Minimal native step backend: deterministic tokens, no state.
+struct Stepper;
+
+impl StepBackend for Stepper {
+    fn prefill_chunk(&mut self, seq: SeqId, _chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        Ok(last.then_some(1000 + seq as i32))
+    }
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        Ok(seqs.iter().map(|&s| 1000 + s as i32).collect())
+    }
+    fn release(&mut self, _seq: SeqId) {}
+}
+
+impl TierBackend for Stepper {
+    fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        Ok(vec![0; max_new])
+    }
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+fn shared_prompt(group: i32, tail_seed: i32, len: usize, shared: usize) -> Vec<i32> {
+    let mut p: Vec<i32> = (0..shared as i32).map(|j| group * 1000 + j).collect();
+    p.extend((shared as i32..len as i32).map(|j| tail_seed * 7919 + j));
+    p
+}
+
+#[test]
+fn refcount_leak_free_after_draining_any_trace() {
+    // A tight pool serving overlapping shared-prefix sequences with
+    // preemptions and mid-prefill restarts: after everything retires,
+    // the free-page count returns to the initial value, nothing is in
+    // use, and the prefix trie is empty.
+    let pool = KvPool::new(24, 16);
+    let initial_free = pool.free_pages();
+    let mut s = IterationScheduler::new(pool, 8);
+    s.set_prefill_chunk(32);
+    for i in 0..10u64 {
+        // Half the sequences share one 64-token prefix; tails differ.
+        let prompt = shared_prompt(1, i as i32, 96, if i % 2 == 0 { 64 } else { 0 });
+        s.enqueue_shared(i, prompt.len(), 12, prompt_page_hashes(&prompt, 16));
+    }
+    let mut iters = 0;
+    while !s.is_idle() {
+        iters += 1;
+        assert!(iters < 2_000, "scheduler failed to drain");
+        let plan = s.next_iteration();
+        assert!(plan.batch() > 0);
+        for id in plan.producers() {
+            if s.advance(id) {
+                s.retire(id);
+            }
+        }
+    }
+    assert!(s.preemptions() > 0, "the tight pool must exercise preemption");
+    assert_eq!(s.pool().in_use(), 0, "refcount leak: pages still live");
+    assert_eq!(s.pool().trie_len(), 0, "trie leak: entries outlived their pages");
+    assert_eq!(s.pool().free_pages(), initial_free, "free list must return to initial");
+    let (allocs, frees) = s.pool().alloc_counts();
+    assert_eq!(allocs, frees, "every allocated page must be freed");
+}
+
+#[test]
+fn engine_drain_leaves_no_shared_residue() {
+    // Worker-death path: drain() mid-flight with shared pages claimed
+    // must free everything, trie included.
+    let cfg = EngineConfig {
+        pool_pages: 64,
+        page_tokens: 16,
+        max_running: 8,
+        prefill_chunk: usize::MAX,
+        share_prefixes: true,
+    };
+    let mut e: EngineCore<usize> = EngineCore::new(Box::new(Stepper), cfg);
+    let free0 = e.kv_free_pages();
+    let prompt = shared_prompt(2, 0, 64, 64);
+    e.submit(0, prompt.clone(), 16);
+    let _ = e.step().unwrap();
+    let _ = e.step().unwrap(); // publish tick
+    e.submit(1, prompt.clone(), 16);
+    e.submit(2, prompt, 16);
+    let _ = e.step().unwrap(); // claims land
+    assert!(e.kv_trie_len() > 0, "pages must be published");
+    let drained = e.drain();
+    assert_eq!(drained.len(), 3);
+    assert_eq!(e.kv_in_use(), 0);
+    assert_eq!(e.kv_trie_len(), 0);
+    assert_eq!(e.kv_free_pages(), free0);
+}
+
+#[test]
+fn cow_divergence_is_deterministic() {
+    // Two sequences share an identical 40-token prompt (partial tail
+    // page): the claimer must CoW on its first decode token. Repeating
+    // the run must reproduce identical outputs and identical sharing
+    // counters — divergence is deterministic, not timing-dependent.
+    let run = || {
+        let cfg = EngineConfig {
+            pool_pages: 32,
+            page_tokens: 16,
+            max_running: 8,
+            prefill_chunk: usize::MAX,
+            share_prefixes: true,
+        };
+        let mut e: EngineCore<usize> = EngineCore::new(Box::new(Stepper), cfg);
+        let prompt = shared_prompt(3, 0, 40, 40);
+        e.submit(0, prompt.clone(), 6);
+        let _ = e.step().unwrap();
+        let _ = e.step().unwrap(); // publish
+        e.submit(1, prompt, 6);
+        let mut outputs = Vec::new();
+        let mut steps = 0;
+        while !e.is_idle() {
+            steps += 1;
+            assert!(steps < 64);
+            for f in e.step().unwrap().completed {
+                outputs.push((f.payload, f.output));
+            }
+        }
+        outputs.sort();
+        let (claims, cows) = e.sharing_counts();
+        (outputs, claims, cows, e.prefix_hit_tokens(), e.peak_pages())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "CoW divergence must be bit-deterministic");
+    let (outputs, claims, cows, hits, _) = a;
+    assert_eq!(outputs.len(), 2);
+    assert_eq!(outputs[0].1.len(), 6);
+    assert_eq!(outputs[1].1.len(), 6);
+    assert!(claims >= 3, "the identical prompt claims its 3 pages");
+    assert_eq!(cows, 1, "exactly one divergence copy for the partial tail page");
+    assert_eq!(hits, 40, "the full prompt rides shared pages");
+}
+
+#[test]
+fn des_pins_chunked_prefill_to_whole_plus_interleave() {
+    // Single long-prompt request, public API: chunked latency must be
+    // the whole-prefill latency plus one interleaved decode iteration
+    // per extra chunk — nothing more, nothing less.
+    let m = &llama_cascade()[0];
+    let rm = ReplicaModel::new(m, &ClusterSpec::paper_testbed(), 2, 1, 768.0);
+    let trace = vec![SimRequest::new(0.0, 1536, 16)];
+    let whole = simulate_mode(
+        &[rm.clone()],
+        &trace,
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+    );
+    let chunked = simulate_mode(
+        &[rm.clone()],
+        &trace,
+        DesMode::Paged { page_tokens: 16, prefill_chunk: 256 },
+    );
+    let iter1 = rm.decode_iteration(1) / rm.pp_capacity_factor;
+    let extra_chunks = (1536f64 / 256.0).ceil() - 1.0;
+    let diff = chunked.latencies[0] - whole.latencies[0];
+    assert!(
+        (diff - extra_chunks * iter1).abs() < 1e-9,
+        "chunk interleave cost {diff} != {extra_chunks} x {iter1}"
+    );
+}
+
+/// Native step backend emitting its tier number — routing outcomes are
+/// decided by the judger off the request id in the prompt's last slot
+/// (the shared prefix must stay byte-identical across requests).
+struct TierStepper {
+    tier: i32,
+}
+
+impl StepBackend for TierStepper {
+    fn prefill_chunk(&mut self, _seq: SeqId, _chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        Ok(last.then_some(self.tier))
+    }
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        Ok(vec![self.tier; seqs.len()])
+    }
+    fn release(&mut self, _seq: SeqId) {}
+}
+
+impl TierBackend for TierStepper {
+    fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        Ok(vec![self.tier; max_new])
+    }
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+/// Request `id` (prompt's last token) is answerable from tier `id % 3`
+/// upward; the output's first token carries the serving tier.
+struct ByIdJudger;
+
+impl ResponseJudger for ByIdJudger {
+    fn score(&self, prompt: &[i32], output: &[i32]) -> f64 {
+        let id = prompt.last().copied().unwrap_or(0);
+        let tier = output.first().copied().unwrap_or(0);
+        if tier >= id % 3 {
+            90.0
+        } else {
+            10.0
+        }
+    }
+}
+
+#[test]
+fn prefix_sharing_does_not_change_routing_outcomes() {
+    // Identical trace of shared-prefix prompts served with the trie
+    // off and on: per-request accepting tiers must match exactly, and
+    // the shared run must claim pages. (Escalations carry their prompt
+    // hashes, so deeper-tier re-serves share across escalated
+    // requests.)
+    let factory = |tier: usize| -> Result<Box<dyn TierBackend>> {
+        Ok(Box::new(TierStepper { tier: tier as i32 }))
+    };
+    // One shared 16-token page + a unique id slot in the tail page.
+    let trace: Vec<(f64, Vec<i32>)> = (0..24)
+        .map(|i| {
+            let mut p = shared_prompt(5, 0, 16, 16);
+            p.push(i);
+            (0.0, p)
+        })
+        .collect();
+    let engines = |share: bool| {
+        vec![
+            EngineConfig {
+                pool_pages: 256,
+                page_tokens: 16,
+                max_running: 8,
+                prefill_chunk: usize::MAX,
+                share_prefixes: share,
+            };
+            3
+        ]
+    };
+    let base =
+        ServerConfig::with_thresholds(vec![2, 1, 1], vec![6, 4, 2], vec![50.0, 50.0], 4)
+            .unwrap();
+    let off = CascadeServer::new(base.clone().continuous(engines(false)))
+        .unwrap()
+        .serve(&trace, &factory, &ByIdJudger)
+        .unwrap();
+    let on = CascadeServer::new(base.continuous(engines(true)))
+        .unwrap()
+        .serve(&trace, &factory, &ByIdJudger)
+        .unwrap();
+    assert_eq!(off.completions.len(), 24);
+    assert_eq!(on.completions.len(), 24);
+    let tiers = |s: &cascadia::coordinator::server::ServerStats| {
+        let mut v = vec![usize::MAX; 24];
+        for c in &s.completions {
+            v[c.id] = c.accepting_tier;
+        }
+        v
+    };
+    let expect: Vec<usize> = (0..24).map(|i| (i % 3) as usize).collect();
+    assert_eq!(tiers(&off), expect, "judger must route by id");
+    assert_eq!(tiers(&off), tiers(&on), "sharing must not change routing");
+    assert_eq!(off.per_tier_processed, on.per_tier_processed);
+    let hits: usize = on.engine.iter().map(|e| e.prefix_hit_tokens).sum();
+    assert!(hits > 0, "overlapping shared prompts must hit the trie");
+    let off_hits: usize = off.engine.iter().map(|e| e.prefix_hit_tokens).sum();
+    assert_eq!(off_hits, 0);
+}

@@ -231,11 +231,7 @@ fn prop_simulator_conservation() {
         let trace: Vec<SimRequest> = (0..n)
             .map(|_| {
                 t += g.f64(0.0, 2.0 / rate);
-                SimRequest {
-                    arrival: t,
-                    input_tokens: g.int(8, 2048) as u32,
-                    output_tokens: g.int(4, 512) as u32,
-                }
+                SimRequest::new(t, g.int(8, 2048) as u32, g.int(4, 512) as u32)
             })
             .collect();
         let out = simulate(&replicas, &trace);

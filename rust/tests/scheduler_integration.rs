@@ -81,7 +81,7 @@ fn analytic_matches_des_ordering() {
         let trace: Vec<SimRequest> = (0..1500)
             .map(|_| {
                 t += rng.exp(w.rate);
-                SimRequest { arrival: t, input_tokens: 512, output_tokens: 256 }
+                SimRequest::new(t, 512, 256)
             })
             .collect();
         let sim = simulate(&pool, &trace).p95();

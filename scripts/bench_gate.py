@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: compare a fresh BENCH_serving.json against the
+committed BENCH_baseline.json with a tolerance band.
+
+Two baseline shapes are understood:
+
+* **ratio floors** (the committed seed baseline): top-level
+  `p95_speedup`, `throughput_gain`, `prefix.page_reduction`,
+  `prefix.prefill_reduction`, `chunked.ttft_speedup` — machine-
+  independent relative wins the fresh run must not regress below
+  `floor * (1 - RTOL)`.
+* **full report** (a captured BENCH_serving.json, e.g. from the nightly
+  artifact): additionally gates the absolute continuous-mode
+  `p95_s` (must not exceed `baseline * (1 + ATOL)`) and
+  `throughput_rps` (must not drop below `baseline * (1 - ATOL)`).
+  Absolute numbers are in *simulated* seconds (time compression undone),
+  so they are calibrated-model quantities, not raw runner wall clock —
+  still, ATOL is generous for scheduler jitter on shared runners.
+
+Exit 0 = within band; exit 1 = regression (each violation printed).
+
+Usage: bench_gate.py <fresh.json> <baseline.json> [--rtol 0.25] [--atol 0.40]
+"""
+
+import argparse
+import json
+import sys
+
+
+def ratio_of(report: dict, path: str):
+    node = report
+    for key in path.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def derived_ratios(report: dict) -> dict:
+    """Machine-independent win ratios of a full or floor-style report."""
+    out = {}
+    for path in ("p95_speedup", "throughput_gain"):
+        v = ratio_of(report, path)
+        if v is not None:
+            out[path] = float(v)
+    v = ratio_of(report, "chunked.ttft_speedup")
+    if v is not None:
+        out["chunked.ttft_speedup"] = float(v)
+    prefix = report.get("prefix", {})
+    if "page_reduction" in prefix:
+        out["prefix.page_reduction"] = float(prefix["page_reduction"])
+    elif prefix.get("shared_peak_pages"):
+        out["prefix.page_reduction"] = prefix["baseline_peak_pages"] / max(
+            prefix["shared_peak_pages"], 1
+        )
+    if "prefill_reduction" in prefix:
+        out["prefix.prefill_reduction"] = float(prefix["prefill_reduction"])
+    elif prefix.get("shared_prefill_tokens"):
+        out["prefix.prefill_reduction"] = prefix["baseline_prefill_tokens"] / max(
+            prefix["shared_prefill_tokens"], 1
+        )
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--rtol", type=float, default=0.25, help="ratio-floor tolerance")
+    ap.add_argument("--atol", type=float, default=0.40, help="absolute tolerance")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+
+    # Boolean gates: the fresh run must be green everywhere.
+    for flag in ("win", "occupancy_ok"):
+        if fresh.get(flag) is not True:
+            failures.append(f"fresh report flag '{flag}' is not true")
+    for section in ("prefix", "chunked"):
+        if fresh.get(section, {}).get("win") is not True:
+            failures.append(f"fresh report flag '{section}.win' is not true")
+
+    # Ratio floors.
+    fresh_r = derived_ratios(fresh)
+    base_r = derived_ratios(base)
+    for key, floor in sorted(base_r.items()):
+        got = fresh_r.get(key)
+        if got is None:
+            failures.append(f"fresh report lacks ratio '{key}'")
+            continue
+        bound = floor * (1.0 - args.rtol)
+        if got < bound:
+            failures.append(
+                f"{key}: fresh {got:.3f} < baseline {floor:.3f} * (1-{args.rtol}) = {bound:.3f}"
+            )
+        else:
+            print(f"ok  {key}: fresh {got:.3f} >= floor {bound:.3f}")
+
+    # Absolute p95 / throughput when the baseline carries a full report.
+    base_cont = base.get("continuous", {})
+    fresh_cont = fresh.get("continuous", {})
+    if "p95_s" in base_cont:
+        cap = base_cont["p95_s"] * (1.0 + args.atol)
+        got = fresh_cont.get("p95_s", float("inf"))
+        if got > cap:
+            failures.append(
+                f"continuous.p95_s: fresh {got:.3f}s > baseline {base_cont['p95_s']:.3f}s"
+                f" * (1+{args.atol}) = {cap:.3f}s"
+            )
+        else:
+            print(f"ok  continuous.p95_s: {got:.3f}s <= cap {cap:.3f}s")
+    if "throughput_rps" in base_cont:
+        floor = base_cont["throughput_rps"] * (1.0 - args.atol)
+        got = fresh_cont.get("throughput_rps", 0.0)
+        if got < floor:
+            failures.append(
+                f"continuous.throughput_rps: fresh {got:.3f} < baseline"
+                f" {base_cont['throughput_rps']:.3f} * (1-{args.atol}) = {floor:.3f}"
+            )
+        else:
+            print(f"ok  continuous.throughput_rps: {got:.3f} >= floor {floor:.3f}")
+
+    if failures:
+        print("\nPERF REGRESSION:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nperf trajectory within tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
