@@ -99,6 +99,7 @@ fn main() {
             ],
             predicted_latency: 2.0,
             predicted_quality: 80.0,
+            preemption: cascadia::engine::PreemptionMode::Recompute,
         }
     };
     for s in &stats_set {

@@ -80,6 +80,7 @@ fn main() {
                 max_running: 32,
                 prefill_chunk: usize::MAX,
                 share_prefixes: false,
+                preemption: cascadia::engine::PreemptionConfig::default(),
             },
         );
         for i in 0..256u32 {

@@ -141,6 +141,7 @@ mod tests {
             ],
             predicted_latency: 2.0,
             predicted_quality: q,
+            preemption: crate::engine::PreemptionMode::Recompute,
         }
     }
 

@@ -16,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterSpec;
+use crate::engine::PreemptionMode;
 use crate::judge::Judger;
 use crate::models::ModelSpec;
 use crate::parallel::{design_feasible, Strategy};
@@ -91,6 +92,7 @@ pub fn standalone_plan(
         tiers,
         predicted_latency: p95,
         predicted_quality: quality,
+        preemption: PreemptionMode::Recompute,
     })
 }
 
@@ -248,6 +250,7 @@ pub fn cascade_serve_plan(
             tiers,
             predicted_latency: max_p95,
             predicted_quality: routing.quality,
+            preemption: PreemptionMode::Recompute,
         };
         match &best {
             Some((bp, _)) if *bp <= max_p95 => {}

@@ -64,6 +64,12 @@ pub struct ClusterSpec {
     pub intra: LinkSpec,
     /// Inter-server link (InfiniBand).
     pub inter: LinkSpec,
+    /// Host link (PCIe) each GPU moves KV pages over when the engine
+    /// swaps preempted sequences to host memory.
+    pub pcie: LinkSpec,
+    /// Pinned host memory backing swap-to-host, per GPU (bytes). The
+    /// engine's host swap space is bounded by this budget.
+    pub host_swap_bytes_per_gpu: f64,
 }
 
 impl ClusterSpec {
@@ -75,6 +81,12 @@ impl ClusterSpec {
             gpus_per_server: 8,
             intra: LinkSpec { alpha: 3e-6, beta_bw: 400e9 },
             inter: LinkSpec { alpha: 10e-6, beta_bw: 25e9 }, // 200 Gb/s
+            // PCIe 5.0 x16 at achievable (not peak) bandwidth, and a
+            // conservative per-transfer setup latency.
+            pcie: LinkSpec { alpha: 20e-6, beta_bw: 50e9 },
+            // H100 hosts carry ~1-2 TB of DRAM for 8 GPUs; reserve a
+            // pinned slice per GPU for swapped KV.
+            host_swap_bytes_per_gpu: 128e9,
         }
     }
 
@@ -130,6 +142,16 @@ mod tests {
         let c = ClusterSpec::paper_testbed();
         assert!((c.link_for_group(8).beta_bw - 400e9).abs() < 1.0);
         assert!((c.link_for_group(9).beta_bw - 25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn pcie_is_slower_than_every_device_link() {
+        // Swap-to-host must never look cheaper than staying on-device
+        // interconnects in the cost model.
+        let c = ClusterSpec::paper_testbed();
+        assert!(c.pcie.beta_bw < c.intra.beta_bw);
+        assert!(c.pcie.beta_bw > c.inter.beta_bw, "PCIe 5 outruns the IB fabric");
+        assert!(c.host_swap_bytes_per_gpu > c.gpu.mem_bytes, "host swap outsizes HBM");
     }
 
     #[test]

@@ -228,6 +228,9 @@ struct EngineTierCounters {
     prefix_hit_tokens: AtomicUsize,
     shared_claims: AtomicUsize,
     cow_copies: AtomicUsize,
+    swap_outs: AtomicUsize,
+    swap_ins: AtomicUsize,
+    swap_bytes: AtomicUsize,
 }
 
 /// The continuous-batching inner loop of one tier worker: admit from
@@ -322,6 +325,12 @@ fn continuous_worker_loop(
                     .fetch_add(out.prefix_hit_tokens, Ordering::SeqCst);
                 counters.shared_claims.fetch_add(out.shared_claims, Ordering::SeqCst);
                 counters.cow_copies.fetch_add(out.cow_copies, Ordering::SeqCst);
+                counters.swap_outs.fetch_add(out.swap_outs, Ordering::SeqCst);
+                counters.swap_ins.fetch_add(out.swap_ins, Ordering::SeqCst);
+                counters.swap_bytes.fetch_add(
+                    (out.swap_pages as f64 * cfg.preemption.page_bytes) as usize,
+                    Ordering::SeqCst,
+                );
                 if !out.completed.is_empty() {
                     let n = out.completed.len();
                     for fin in out.completed {
@@ -357,7 +366,7 @@ fn continuous_worker_loop(
 }
 
 /// How a tier worker's inner loop executes its admitted work.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ExecMode {
     /// Whole-batch lockstep: a worker admits a batch, runs every
     /// request to completion, and only then admits more — the
@@ -441,8 +450,11 @@ impl ServerConfig {
     /// continuous-batching engine with per-replica KV pools sized from
     /// the plan's own parallelism under the scheduler's cost model
     /// ([`ReplicaModel::kv_pages_total`]) — the plan's memory terms and
-    /// the runtime's page accounting agree by construction. Undeployed
-    /// tiers get a nominal pool.
+    /// the runtime's page accounting agree by construction. The plan's
+    /// preemption knob ([`CascadePlan::preemption`]) selects the
+    /// eviction discipline, with the swap budget and PCIe cost terms
+    /// derived from the same replica model — schedule→serve round-trips
+    /// the whole policy. Undeployed tiers get a nominal pool.
     pub fn from_plan_with_engine(
         plan: &CascadePlan,
         cascade: &[ModelSpec],
@@ -466,7 +478,11 @@ impl ServerConfig {
                 match t.strategy.as_ref().and_then(|s| s.groups.first()) {
                     Some(g) => {
                         let rm = ReplicaModel::from_group(&cascade[i], cluster, g, avg_ctx);
-                        EngineConfig::for_replica(&rm, DEFAULT_PAGE_TOKENS)
+                        EngineConfig::for_replica_with_preemption(
+                            &rm,
+                            DEFAULT_PAGE_TOKENS,
+                            plan.preemption,
+                        )
                     }
                     None => EngineConfig::nominal(DEFAULT_PAGE_TOKENS),
                 }
@@ -566,6 +582,13 @@ pub struct TierEngineStats {
     pub shared_claims: usize,
     /// Copy-on-write page copies (divergence after a shared claim).
     pub cow_copies: usize,
+    /// Sequences swapped out to host (swap-to-host preemption; their
+    /// checkpointed progress survives, unlike `preemptions`).
+    pub swap_outs: usize,
+    /// Sequences resumed from host swap space.
+    pub swap_ins: usize,
+    /// Bytes moved across PCIe by KV swaps, both directions.
+    pub swap_bytes: usize,
 }
 
 /// Aggregate statistics of a serving run.
@@ -1202,6 +1225,9 @@ impl CascadeServer {
                         .load(Ordering::SeqCst),
                     shared_claims: engine_counters[t].shared_claims.load(Ordering::SeqCst),
                     cow_copies: engine_counters[t].cow_copies.load(Ordering::SeqCst),
+                    swap_outs: engine_counters[t].swap_outs.load(Ordering::SeqCst),
+                    swap_ins: engine_counters[t].swap_ins.load(Ordering::SeqCst),
+                    swap_bytes: engine_counters[t].swap_bytes.load(Ordering::SeqCst),
                 })
                 .collect();
             Ok(ServerStats {
@@ -1220,6 +1246,7 @@ impl CascadeServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{PreemptionConfig, PreemptionMode};
 
     /// Simulated backend: deterministic "generation" with configurable
     /// per-tier delay; output quality encoded in first token.
@@ -1484,6 +1511,7 @@ mod tests {
             ],
             predicted_latency: 1.0,
             predicted_quality: 80.0,
+            preemption: PreemptionMode::Recompute,
         };
         let cfg = ServerConfig::from_plan(&plan, 6).unwrap();
         assert_eq!(cfg.replicas, vec![2, 1]); // undeployed tier keeps 1 worker
@@ -1599,6 +1627,7 @@ mod tests {
                 .collect(),
             predicted_latency: 1.0,
             predicted_quality: 80.0,
+            preemption: PreemptionMode::Recompute,
         };
         let launched = plan_with(["small", "large"]);
         let control = ServeControl::for_plan(&launched);
@@ -1648,6 +1677,7 @@ mod tests {
                 max_running: 8,
                 prefill_chunk: usize::MAX,
                 share_prefixes: true,
+                preemption: PreemptionConfig::default(),
             };
             n
         ]
@@ -1751,6 +1781,7 @@ mod tests {
                     max_running: 8,
                     prefill_chunk: usize::MAX,
                     share_prefixes: true,
+                    preemption: PreemptionConfig::default(),
                 };
                 2
             ]);
@@ -1773,6 +1804,76 @@ mod tests {
         assert!(stats.engine.iter().all(|e| e.pool_pages == 128));
         assert!(stats.engine.iter().all(|e| e.peak_pool_pages == 256));
         assert!(stats.engine.iter().all(|e| e.peak_pages <= e.peak_pool_pages));
+    }
+
+    fn swap_engine_cfgs(n: usize, pool_pages: usize) -> Vec<EngineConfig> {
+        vec![
+            EngineConfig {
+                pool_pages,
+                page_tokens: 16,
+                max_running: 8,
+                prefill_chunk: usize::MAX,
+                share_prefixes: false,
+                preemption: PreemptionConfig {
+                    mode: PreemptionMode::Swap,
+                    swap_pages: 64,
+                    prefill_s_per_token: 0.0,
+                    swap_s_per_page: 0.0,
+                    page_bytes: 1024.0,
+                },
+            };
+            n
+        ]
+    }
+
+    #[test]
+    fn hot_swap_while_sequences_are_parked_orphans_nothing() {
+        // Tight swap-enabled pools guarantee sequences are parked in
+        // host swap space while serving; mid-run the plan hot-swap
+        // shrinks the pools AND scales the workers down. Every
+        // in-flight request must still complete exactly once — a
+        // retiring worker may not abandon parked sequences, and the
+        // pool resize must carry their resident prefixes.
+        struct LongBackend;
+        impl TierBackend for LongBackend {
+            fn generate(&mut self, _p: &[i32], max_new: usize) -> Result<Vec<i32>> {
+                Ok(vec![1; max_new])
+            }
+        }
+        let long_factory =
+            |_t: usize| -> Result<Box<dyn TierBackend>> { Ok(Box::new(LongBackend)) };
+        let server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![2, 1], vec![4, 4], vec![50.0], 24)
+                .unwrap()
+                .continuous(swap_engine_cfgs(2, 4)),
+        )
+        .unwrap();
+        let control = ServeControl::new(2);
+        // Shrink pools and drop to one worker per tier mid-run.
+        let next = ServerConfig::with_thresholds(vec![1, 1], vec![2, 2], vec![50.0], 24)
+            .unwrap()
+            .continuous(swap_engine_cfgs(2, 3));
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 6,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> = (0..12).map(|_| (0.0, vec![1; 17])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &long_factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 12, "no parked sequence may be orphaned");
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<_>>(), "exactly-once across the swap");
+        assert_eq!(control.hot_swaps(), 1);
+        let e = &stats.engine[0];
+        assert!(e.swap_outs > 0, "the tight pool must have parked sequences: {e:?}");
+        assert_eq!(e.swap_outs, e.swap_ins, "every park resumed despite the hot-swap");
+        assert!(e.swap_bytes > 0, "page_bytes telemetry must accumulate");
+        assert_eq!(e.preemptions, 0, "ample host budget: no recompute fallback");
+        assert!(e.peak_pages <= e.peak_pool_pages);
     }
 
     #[test]
@@ -1800,6 +1901,7 @@ mod tests {
                         max_running: 4,
                         prefill_chunk: usize::MAX,
                         share_prefixes: false,
+                        preemption: PreemptionConfig::default(),
                     };
                     2
                 ]),
@@ -1848,6 +1950,7 @@ mod tests {
             ],
             predicted_latency: 1.0,
             predicted_quality: 80.0,
+            preemption: PreemptionMode::Swap,
         };
         let cfg = ServerConfig::from_plan_with_engine(
             &plan,
@@ -1862,6 +1965,18 @@ mod tests {
         assert_eq!(engines.len(), 2);
         assert!(engines[0].pool_pages > 1000, "a deployed 8B tier has a deep pool");
         assert!(engines[1].pool_pages > 0, "undeployed tiers get a nominal pool");
+        // The plan's swap knob round-trips into the deployed tier's
+        // engine: a host budget and real PCIe/prefill cost rates.
+        assert_eq!(engines[0].preemption.mode, PreemptionMode::Swap);
+        assert!(engines[0].preemption.swap_pages > engines[0].pool_pages);
+        assert!(engines[0].preemption.swap_s_per_page > 0.0);
+        assert!(engines[0].preemption.prefill_s_per_token > 0.0);
+        assert!(engines[0].preemption.page_bytes > 0.0);
+        assert_eq!(
+            engines[1].preemption,
+            PreemptionConfig::default(),
+            "undeployed tiers stay on recompute"
+        );
         CascadeServer::new(cfg).unwrap();
         // Arity mismatch is rejected.
         assert!(ServerConfig::from_plan_with_engine(

@@ -58,6 +58,7 @@ use crate::workload::{estimate_stats, generate_phased, paper_trace, PhasedTraceS
 
 use super::core::{EngineConfig, StepBackend};
 use super::kv::SeqId;
+use super::scheduler::{PreemptionConfig, PreemptionMode};
 
 /// Benchmark knobs; [`BenchConfig::full`] is what `cascadia bench`
 /// runs, [`BenchConfig::smoke`] the CI-sized variant.
@@ -93,6 +94,12 @@ pub struct BenchConfig {
     pub mix_long_requests: usize,
     pub mix_short_tokens: usize,
     pub mix_long_tokens: usize,
+    /// Swap section: long-context requests served through a pool sized
+    /// to force eviction waves, and their decode depth (token-granular
+    /// like the chunked section).
+    pub swap_requests: usize,
+    pub swap_prompt_tokens: usize,
+    pub swap_decode_steps: usize,
 }
 
 impl BenchConfig {
@@ -115,6 +122,9 @@ impl BenchConfig {
             mix_long_requests: 4,
             mix_short_tokens: 96,
             mix_long_tokens: 2048,
+            swap_requests: 16,
+            swap_prompt_tokens: 1040,
+            swap_decode_steps: 64,
         }
     }
 
@@ -130,6 +140,7 @@ impl BenchConfig {
             prefix_requests: 60,
             mix_short_requests: 48,
             mix_long_requests: 2,
+            swap_requests: 10,
             ..BenchConfig::full()
         }
     }
@@ -177,6 +188,37 @@ pub struct PrefixReport {
     pub win: bool,
 }
 
+/// Swap-preemption section: a long-context preemption-heavy trace
+/// served recompute-only vs swap-enabled through a pool sized so
+/// eviction waves are structural (co-running contexts outgrow it
+/// before any completes).
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    pub requests: usize,
+    pub prompt_tokens: usize,
+    /// Device pool of the run (pages) — deliberately tight.
+    pub pool_pages: usize,
+    /// p95 end-to-end latency, uncompressed seconds.
+    pub recompute_p95_s: f64,
+    pub swap_p95_s: f64,
+    /// recompute / swap (>1 = swap wins).
+    pub p95_speedup: f64,
+    /// Prompt tokens the backends prefilled in each run: recompute
+    /// re-prefills every victim from token 0, the checkpointed swap
+    /// run prefills each prompt exactly once.
+    pub recompute_prefill_tokens: usize,
+    pub swap_prefill_tokens: usize,
+    /// Recompute-preemptions observed in the recompute-only run.
+    pub preemptions: usize,
+    /// Swap traffic observed in the swap-enabled run.
+    pub swap_outs: usize,
+    pub swap_ins: usize,
+    pub swap_bytes: usize,
+    /// Swap beat recompute on p95 AND checkpointed resume strictly
+    /// reduced re-prefilled tokens.
+    pub win: bool,
+}
+
 /// Chunked-prefill section: the same short/long mix with whole-prompt
 /// admission vs the chunk budget.
 #[derive(Debug, Clone)]
@@ -212,13 +254,18 @@ pub struct BenchReport {
     pub win: bool,
     pub prefix: PrefixReport,
     pub chunked: ChunkedReport,
+    pub swap: SwapReport,
 }
 
 impl BenchReport {
     /// Every gate the bench enforces: headline win, page budgets,
-    /// prefix-sharing win, chunked-TTFT win.
+    /// prefix-sharing win, chunked-TTFT win, swap-preemption win.
     pub fn all_green(&self) -> bool {
-        self.win && self.occupancy_ok && self.prefix.win && self.chunked.win
+        self.win
+            && self.occupancy_ok
+            && self.prefix.win
+            && self.chunked.win
+            && self.swap.win
     }
 
     pub fn to_json(&self) -> Json {
@@ -339,6 +386,30 @@ impl BenchReport {
                     ("win", Json::Bool(self.chunked.win)),
                 ]),
             ),
+            (
+                "swap",
+                Json::obj(vec![
+                    ("requests", Json::num(self.swap.requests as f64)),
+                    ("prompt_tokens", Json::num(self.swap.prompt_tokens as f64)),
+                    ("pool_pages", Json::num(self.swap.pool_pages as f64)),
+                    ("recompute_p95_s", Json::num(self.swap.recompute_p95_s)),
+                    ("swap_p95_s", Json::num(self.swap.swap_p95_s)),
+                    ("p95_speedup", Json::num(self.swap.p95_speedup)),
+                    (
+                        "recompute_prefill_tokens",
+                        Json::num(self.swap.recompute_prefill_tokens as f64),
+                    ),
+                    (
+                        "swap_prefill_tokens",
+                        Json::num(self.swap.swap_prefill_tokens as f64),
+                    ),
+                    ("preemptions", Json::num(self.swap.preemptions as f64)),
+                    ("swap_outs", Json::num(self.swap.swap_outs as f64)),
+                    ("swap_ins", Json::num(self.swap.swap_ins as f64)),
+                    ("swap_bytes", Json::num(self.swap.swap_bytes as f64)),
+                    ("win", Json::Bool(self.swap.win)),
+                ]),
+            ),
         ])
     }
 }
@@ -391,6 +462,8 @@ struct ContinuousCalibrated {
     token_scale: f64,
     sleeper: PacedSleeper,
     prefilled_tokens: Arc<AtomicUsize>,
+    /// Seconds per KV page moved across PCIe (the swap hook's rate).
+    swap_s_per_page: f64,
 }
 
 impl StepBackend for ContinuousCalibrated {
@@ -408,6 +481,13 @@ impl StepBackend for ContinuousCalibrated {
     }
 
     fn release(&mut self, _seq: SeqId) {}
+
+    fn swap(&mut self, _seq: SeqId, pages: usize, _to_host: bool) {
+        // A swap is not free: the PCIe move charges real (compressed)
+        // time, so the recompute-vs-swap comparison the bench reports
+        // is a genuine cost tradeoff, not an accounting trick.
+        self.sleeper.pay(pages as f64 * self.swap_s_per_page);
+    }
 }
 
 impl TierBackend for ContinuousCalibrated {
@@ -509,6 +589,10 @@ struct ContinuousRun {
 
 /// Serve `trace` on a 2-tier continuous server with the given engine
 /// overrides, returning stats plus the backend-prefilled token count.
+/// `pool_pages` overrides every tier's pool size (the swap section's
+/// deliberately tight pools); `preemption` selects the eviction
+/// discipline, with per-tier swap budget/cost terms derived from each
+/// tier's own replica model.
 #[allow(clippy::too_many_arguments)]
 fn run_continuous(
     trace: &[TraceEntry],
@@ -521,15 +605,24 @@ fn run_continuous(
     page_tokens: usize,
     prefill_chunk: usize,
     share_prefixes: bool,
+    pool_pages: Option<usize>,
+    preemption: PreemptionMode,
     time_scale: f64,
     token_scale: f64,
 ) -> Result<ContinuousRun> {
     let engines: Vec<EngineConfig> = rms
         .iter()
-        .map(|rm| EngineConfig {
-            prefill_chunk,
-            share_prefixes,
-            ..EngineConfig::for_replica(rm, page_tokens)
+        .map(|rm| {
+            let mut e = EngineConfig {
+                prefill_chunk,
+                share_prefixes,
+                preemption: PreemptionConfig::from_replica(rm, page_tokens, preemption),
+                ..EngineConfig::for_replica(rm, page_tokens)
+            };
+            if let Some(p) = pool_pages {
+                e.pool_pages = p.max(1);
+            }
+            e
         })
         .collect();
     let server = CascadeServer::new(ServerConfig {
@@ -549,6 +642,7 @@ fn run_continuous(
             token_scale,
             sleeper: PacedSleeper { time_scale, debt: 0.0 },
             prefilled_tokens: Arc::clone(&prefilled_f),
+            swap_s_per_page: rms_owned[tier].page_swap_seconds(page_tokens),
         }))
     };
     let stats = server.serve_entries(trace, &factory, judger)?;
@@ -691,6 +785,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             token_scale: tsc,
             sleeper: PacedSleeper { time_scale: ts, debt: 0.0 },
             prefilled_tokens: Arc::clone(&cont_prefilled_f),
+            swap_s_per_page: 0.0,
         }))
     };
     let cont_stats = cont_server
@@ -746,6 +841,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             cfg.page_tokens,
             cfg.prefill_chunk,
             false,
+            None,
+            PreemptionMode::Recompute,
             cfg.time_scale,
             cfg.token_scale as f64,
         )
@@ -761,6 +858,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             cfg.page_tokens,
             cfg.prefill_chunk,
             true,
+            None,
+            PreemptionMode::Recompute,
             cfg.time_scale,
             cfg.token_scale as f64,
         )
@@ -848,6 +947,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             cfg.page_tokens,
             usize::MAX,
             false,
+            None,
+            PreemptionMode::Recompute,
             cfg.time_scale,
             1.0,
         )
@@ -863,6 +964,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             cfg.page_tokens,
             chunk,
             false,
+            None,
+            PreemptionMode::Recompute,
             cfg.time_scale,
             1.0,
         )
@@ -883,6 +986,111 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         }
     };
 
+    // --- Swap section: recompute-only vs swap-enabled preemption on a
+    // long-context preemption-heavy trace. The pool holds two
+    // admissions but not their decode growth, so eviction waves are
+    // structural: recompute restarts the newest victim from token 0
+    // (its prefill AND generated tokens are repaid through the
+    // calibrated backend), swap parks it over PCIe and resumes from
+    // the checkpoint. Decode runs token-granular like the chunked
+    // section. ---
+    let swap = {
+        let n = cfg.swap_requests.max(6);
+        let prompt_tokens = cfg.swap_prompt_tokens.max(2 * cfg.page_tokens);
+        let steps_s = cfg.swap_decode_steps.max(2 * cfg.page_tokens);
+        // Gentler compression than the headline: the section's win
+        // margin is measured in re-prefill waste, and heavy time
+        // compression amplifies OS scheduling jitter by the same
+        // factor.
+        let ts_s = (cfg.time_scale / 4.0).max(1.0);
+        let rms_s = bench_rms(&cascade, &cluster, prompt_tokens as f64 + steps_s as f64);
+        // Admission takes prompt+1 tokens of pages; two co-runners fit,
+        // their growth does not.
+        let admit_pages = (prompt_tokens + 1).div_ceil(cfg.page_tokens);
+        let pool_pages = 2 * admit_pages + 1;
+        let reqs: Vec<Request> = {
+            let mut spec = paper_trace(3, 1.0);
+            spec.burstiness = 1.0;
+            crate::workload::generate(&spec, n, cfg.seed.wrapping_add(7))
+        };
+        let strace: Vec<TraceEntry> = (0..n)
+            .map(|i| {
+                let mut prompt: Vec<i32> =
+                    (0..prompt_tokens - 1).map(|j| tail_token(i + 300_000, j)).collect();
+                prompt.push(i as i32);
+                // A burst: everything queues immediately, so the pool
+                // pressure (not arrival pacing) drives the dynamics.
+                TraceEntry { at: i as f64 * 1e-6, prompt, max_new: Some(steps_s) }
+            })
+            .collect();
+        let sjudger = BenchJudger {
+            requests: reqs,
+            models: cascade.clone(),
+            judger: Judger::new(cfg.seed.wrapping_add(7)),
+        };
+        // Accept everything at tier 0: the section isolates the
+        // eviction discipline from routing.
+        let recompute = run_continuous(
+            &strace,
+            &sjudger,
+            &rms_s,
+            replicas.clone(),
+            vec![n.max(4), 4],
+            0.0,
+            steps_s,
+            cfg.page_tokens,
+            usize::MAX,
+            false,
+            Some(pool_pages),
+            PreemptionMode::Recompute,
+            ts_s,
+            1.0,
+        )
+        .context("swap-section recompute run")?;
+        let swapped = run_continuous(
+            &strace,
+            &sjudger,
+            &rms_s,
+            replicas.clone(),
+            vec![n.max(4), 4],
+            0.0,
+            steps_s,
+            cfg.page_tokens,
+            usize::MAX,
+            false,
+            Some(pool_pages),
+            PreemptionMode::Swap,
+            ts_s,
+            1.0,
+        )
+        .context("swap-section swap run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&recompute.stats.engine)
+            && occupancy_ok(&swapped.stats.engine);
+        let rec_p95 = recompute.stats.p95_latency() * ts_s;
+        let swp_p95 = swapped.stats.p95_latency() * ts_s;
+        let preemptions: usize = recompute.stats.engine.iter().map(|e| e.preemptions).sum();
+        let swap_outs: usize = swapped.stats.engine.iter().map(|e| e.swap_outs).sum();
+        let swap_ins: usize = swapped.stats.engine.iter().map(|e| e.swap_ins).sum();
+        let swap_bytes: usize = swapped.stats.engine.iter().map(|e| e.swap_bytes).sum();
+        SwapReport {
+            requests: n,
+            prompt_tokens,
+            pool_pages,
+            recompute_p95_s: rec_p95,
+            swap_p95_s: swp_p95,
+            p95_speedup: rec_p95 / swp_p95.max(1e-9),
+            recompute_prefill_tokens: recompute.prefilled_tokens,
+            swap_prefill_tokens: swapped.prefilled_tokens,
+            preemptions,
+            swap_outs,
+            swap_ins,
+            swap_bytes,
+            win: swp_p95 <= rec_p95
+                && swapped.prefilled_tokens < recompute.prefilled_tokens,
+        }
+    };
+
     Ok(BenchReport {
         calm_rate,
         burst_rate,
@@ -896,6 +1104,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         win,
         prefix,
         chunked,
+        swap,
     })
 }
 
@@ -916,6 +1125,7 @@ mod tests {
             prefix_requests: 40,
             mix_short_requests: 32,
             mix_long_requests: 1,
+            swap_requests: 8,
             ..BenchConfig::smoke()
         };
         let report = run_serving_bench(&cfg).unwrap();
@@ -945,6 +1155,24 @@ mod tests {
             "chunked prefill must cut p95 TTFT ({:.3}s vs {:.3}s)",
             report.chunked.chunked_p95_ttft_s, report.chunked.whole_p95_ttft_s
         );
+        assert!(
+            report.swap.preemptions > 0,
+            "the swap-section trace must be preemption-heavy"
+        );
+        assert!(report.swap.swap_outs > 0, "swap mode must park victims");
+        assert!(
+            report.swap.swap_prefill_tokens
+                == report.swap.requests * report.swap.prompt_tokens,
+            "checkpointed resume prefills each prompt exactly once"
+        );
+        assert!(
+            report.swap.win,
+            "swap must beat recompute: p95 {:.3}s vs {:.3}s, prefilled {} vs {}",
+            report.swap.swap_p95_s,
+            report.swap.recompute_p95_s,
+            report.swap.swap_prefill_tokens,
+            report.swap.recompute_prefill_tokens
+        );
         assert!(report.all_green());
         // The report serializes with the fields CI greps for.
         let json = report.to_json().to_string();
@@ -952,5 +1180,6 @@ mod tests {
         assert!(json.contains("\"occupancy_ok\":true"));
         assert!(json.contains("\"prefix\""));
         assert!(json.contains("\"chunked\""));
+        assert!(json.contains("\"swap\""));
     }
 }

@@ -42,7 +42,7 @@ use crate::coordinator::server::TierBackend;
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 
 use super::kv::{prompt_page_hashes, KvPool, SeqId};
-use super::scheduler::IterationScheduler;
+use super::scheduler::{IterationScheduler, PreemptionConfig, PreemptionMode};
 
 /// Iteration-granular generation interface. One instance per worker,
 /// obtained through `TierBackend::step_backend`.
@@ -64,12 +64,21 @@ pub trait StepBackend {
     /// batch size — cost models key off it.
     fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>>;
 
-    /// Drop all state for `seq` (completed or preempted).
+    /// Drop all state for `seq` (completed or recompute-preempted).
     fn release(&mut self, seq: SeqId);
+
+    /// Notification that `pages` KV pages of `seq` moved across PCIe
+    /// (`to_host` = swap-out; otherwise swap-in). The sequence's state
+    /// is NOT dropped — it resumes from its checkpoint. Calibrated
+    /// backends charge `pages ×` the replica's per-page swap time
+    /// here; the default is a no-op.
+    fn swap(&mut self, seq: SeqId, pages: usize, to_host: bool) {
+        let _ = (seq, pages, to_host);
+    }
 }
 
 /// Sizing of one worker's engine.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EngineConfig {
     /// KV pages in this replica's pool.
     pub pool_pages: usize,
@@ -83,6 +92,28 @@ pub struct EngineConfig {
     pub prefill_chunk: usize,
     /// Publish/claim prompt pages through the pool's prefix trie.
     pub share_prefixes: bool,
+    /// Eviction discipline + the cost terms of its per-victim choice
+    /// (default: recompute, no host swap space).
+    pub preemption: PreemptionConfig,
+}
+
+impl PreemptionConfig {
+    /// Swap-aware preemption sized from a replica's cost model: the
+    /// host swap budget in pages, the PCIe per-page move time, and the
+    /// recompute (prefill) rate the per-victim choice compares it to.
+    pub fn from_replica(
+        rm: &ReplicaModel,
+        page_tokens: usize,
+        mode: PreemptionMode,
+    ) -> PreemptionConfig {
+        PreemptionConfig {
+            mode,
+            swap_pages: rm.swap_pages_total(page_tokens),
+            prefill_s_per_token: rm.prefill_seconds_per_token(),
+            swap_s_per_page: rm.page_swap_seconds(page_tokens),
+            page_bytes: rm.kv_page_bytes(page_tokens),
+        }
+    }
 }
 
 impl EngineConfig {
@@ -98,6 +129,22 @@ impl EngineConfig {
             max_running: rm.max_batch.max(1),
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             share_prefixes: true,
+            preemption: PreemptionConfig::default(),
+        }
+    }
+
+    /// [`EngineConfig::for_replica`] with the eviction discipline set
+    /// and its swap budget/cost terms derived from the same replica
+    /// model — what [`crate::coordinator::server::ServerConfig`] builds
+    /// from a plan's preemption knob.
+    pub fn for_replica_with_preemption(
+        rm: &ReplicaModel,
+        page_tokens: usize,
+        mode: PreemptionMode,
+    ) -> EngineConfig {
+        EngineConfig {
+            preemption: PreemptionConfig::from_replica(rm, page_tokens, mode),
+            ..EngineConfig::for_replica(rm, page_tokens)
         }
     }
 
@@ -113,6 +160,7 @@ impl EngineConfig {
             max_running: 16,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             share_prefixes: true,
+            preemption: PreemptionConfig::default(),
         }
     }
 }
@@ -143,8 +191,15 @@ pub struct StepOutcome<T> {
     /// Sequences occupying a batch slot this iteration (decoding or
     /// prefilling).
     pub batch: usize,
-    /// Sequences preempted this iteration.
+    /// Sequences preempted-with-recompute this iteration.
     pub preempted: usize,
+    /// Sequences swapped out to host this iteration (their progress is
+    /// checkpointed, not recomputed).
+    pub swap_outs: usize,
+    /// Sequences resumed from host swap this iteration.
+    pub swap_ins: usize,
+    /// KV pages moved across PCIe this iteration (both directions).
+    pub swap_pages: usize,
     /// Forced pool expansions this iteration (0 unless the pool is
     /// smaller than a single sequence).
     pub forced_expansions: usize,
@@ -190,6 +245,7 @@ impl<T> EngineCore<T> {
         let pool = KvPool::new(cfg.pool_pages.max(1), cfg.page_tokens.max(1));
         let mut sched = IterationScheduler::new(pool, cfg.max_running.max(1));
         sched.set_prefill_chunk(cfg.prefill_chunk);
+        sched.set_preemption(cfg.preemption);
         EngineCore {
             backend,
             sched,
@@ -302,6 +358,17 @@ impl<T> EngineCore<T> {
         self.sched.preemptions()
     }
 
+    /// Lifetime (swap-outs, swap-ins, pages moved across PCIe both
+    /// directions) of the swap-to-host policy.
+    pub fn swap_counts(&self) -> (u64, u64, u64) {
+        self.sched.swap_counts()
+    }
+
+    /// Sequences currently parked in host swap space.
+    pub fn n_swapped(&self) -> usize {
+        self.sched.n_swapped()
+    }
+
     /// Lifetime prompt tokens served from shared prefix pages.
     pub fn prefix_hit_tokens(&self) -> u64 {
         self.sched.prefix_hit_tokens()
@@ -349,8 +416,8 @@ impl<T> EngineCore<T> {
         let plan = self.sched.next_iteration();
         let pages_in_use = self.sched.pool().in_use();
 
-        // Preempted sequences lose engine and backend state; they
-        // recompute from their prompt on re-admission.
+        // Recompute-preempted sequences lose engine and backend state;
+        // they recompute from their prompt on re-admission.
         for &id in &plan.preempted {
             if let Some(d) = self.data.get_mut(&id) {
                 d.output.clear();
@@ -358,6 +425,21 @@ impl<T> EngineCore<T> {
             }
             if let Some(s) = self.backend.step_backend() {
                 s.release(id);
+            }
+        }
+
+        // Swap-evicted sequences keep EVERYTHING — engine output,
+        // whole-request cache, and backend state; the backend only
+        // hears about the PCIe traffic. Resumed sequences likewise just
+        // report the move back.
+        for &(id, pages) in &plan.swapped_out {
+            if let Some(s) = self.backend.step_backend() {
+                s.swap(id, pages, true);
+            }
+        }
+        for &(id, pages) in &plan.swapped_in {
+            if let Some(s) = self.backend.step_backend() {
+                s.swap(id, pages, false);
             }
         }
 
@@ -479,6 +561,9 @@ impl<T> EngineCore<T> {
             pages_in_use,
             batch: plan.batch(),
             preempted: plan.preempted.len(),
+            swap_outs: plan.swapped_out.len(),
+            swap_ins: plan.swapped_in.len(),
+            swap_pages: plan.swap_out_pages() + plan.swap_in_pages(),
             forced_expansions: plan.forced_expansions,
             prefill_tokens: plan.prefill_tokens(),
             prefix_hit_tokens: (self.sched.prefix_hit_tokens() - hits_before) as usize,
@@ -571,6 +656,18 @@ mod tests {
             max_running: 8,
             prefill_chunk: usize::MAX,
             share_prefixes: false,
+            preemption: PreemptionConfig::default(),
+        }
+    }
+
+    fn swap_cfg(pages: usize, swap_pages: usize) -> EngineConfig {
+        EngineConfig {
+            preemption: PreemptionConfig {
+                mode: PreemptionMode::Swap,
+                swap_pages,
+                ..PreemptionConfig::default()
+            },
+            ..cfg(pages)
         }
     }
 
@@ -739,6 +836,73 @@ mod tests {
         // one release per preemption plus one per completion.
         assert_eq!(prefills.load(Ordering::SeqCst), 2 + preempted);
         assert_eq!(releases.load(Ordering::SeqCst), 2 + preempted);
+    }
+
+    #[test]
+    fn swap_preemption_never_replays_backend_work() {
+        // The recompute twin of this scenario re-prefills victims; with
+        // swap-to-host the backend must see exactly one completed
+        // prefill and zero releases before completion, and every
+        // output token is produced exactly once.
+        let backend = NativeStep::default();
+        let prefills = Arc::clone(&backend.prefills);
+        let releases = Arc::clone(&backend.releases);
+        let mut e: EngineCore<u64> = EngineCore::new(Box::new(backend), swap_cfg(4, 64));
+        e.submit(10, vec![0; 17], 20);
+        e.submit(11, vec![0; 17], 20);
+        let mut fins = Vec::new();
+        let mut swap_outs = 0usize;
+        let mut swap_ins = 0usize;
+        let mut steps = 0;
+        while !e.is_idle() {
+            steps += 1;
+            assert!(steps < 300, "must not deadlock");
+            let out = e.step().unwrap();
+            assert_eq!(out.preempted, 0, "swap must replace recompute");
+            swap_outs += out.swap_outs;
+            swap_ins += out.swap_ins;
+            assert!(out.pages_in_use <= e.pool_pages());
+            fins.extend(out.completed);
+        }
+        assert!(swap_outs >= 1, "the tight pool must swap");
+        assert_eq!(swap_outs, swap_ins, "every park resumes");
+        let mut ids: Vec<u64> = fins.iter().map(|f| f.payload).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![10, 11], "exactly-once completion across swap");
+        for f in &fins {
+            assert_eq!(f.output.len(), 20);
+        }
+        // One prefill per sequence (no recompute) and one release per
+        // completion only.
+        assert_eq!(prefills.load(Ordering::SeqCst), 2, "checkpoint: no re-prefill");
+        assert_eq!(releases.load(Ordering::SeqCst), 2, "no mid-flight state drops");
+        let (outs, ins, pages) = e.swap_counts();
+        assert_eq!(outs as usize, swap_outs);
+        assert_eq!(ins as usize, swap_ins);
+        assert!(pages > 0);
+        assert_eq!(e.n_swapped(), 0);
+    }
+
+    #[test]
+    fn swap_preemption_works_through_the_whole_request_adapter() {
+        // Adapted backends cache their full generation at prefill
+        // completion; a swap must carry the cache through the park
+        // (recompute would drop and regenerate it).
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(WholeBackend { mark: 9, len: 20 }), swap_cfg(4, 64));
+        e.submit(0, vec![1; 17], 20);
+        e.submit(1, vec![1; 17], 20);
+        let mut fins = Vec::new();
+        let mut steps = 0;
+        while !e.is_idle() {
+            steps += 1;
+            assert!(steps < 300);
+            fins.extend(e.step().unwrap().completed);
+        }
+        assert_eq!(fins.len(), 2);
+        for f in &fins {
+            assert_eq!(f.output, vec![9; 20], "cached tokens survive the park");
+        }
     }
 
     #[test]

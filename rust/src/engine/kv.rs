@@ -47,6 +47,11 @@ pub type SeqId = u64;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PagesShort(pub usize);
 
+/// Swap-out failure: the host swap space is `short` pages of holding
+/// the victim's private pages. Nothing was moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapShort(pub usize);
+
 /// Chained FNV-1a page hashes of a prompt: one entry per page the
 /// prompt occupies, where entry `i` commits to the token count and
 /// content of every page up to and including `i`. Two prompts share a
@@ -94,6 +99,24 @@ struct SeqPages {
     tokens: usize,
 }
 
+/// A sequence parked in host swap space ([`KvPool::swap_out`]): its
+/// private pages live on the host; shared prefix pages stay
+/// device-resident with the victim's refcount intact, so other holders
+/// (and the trie) are untouched and swap-in never recomputes them.
+#[derive(Debug)]
+struct SwappedSeq {
+    /// Leading table pages that stayed device-resident (shared at
+    /// swap-out time; the parked sequence still holds its reference).
+    resident: Vec<usize>,
+    /// Pages moved to host swap space (the victim's private tail).
+    host_pages: usize,
+    /// Context tokens the table covered at swap-out (restored on
+    /// swap-in — the chunk-checkpoint frontier).
+    tokens: usize,
+    /// Claimed-page accounting carried across the park.
+    claimed_pages: usize,
+}
+
 /// A pool of fixed-size KV pages with refcounted per-sequence page
 /// tables and a prefix trie for shared-prompt serving.
 #[derive(Debug)]
@@ -108,6 +131,18 @@ pub struct KvPool {
     tables: HashMap<SeqId, SeqPages>,
     /// Flattened prefix trie: chained page hash -> published page id.
     trie: HashMap<u64, usize>,
+    /// Sequences parked in host swap space.
+    swapped: HashMap<SeqId, SwappedSeq>,
+    /// Host swap budget in pages (0 = swap disabled).
+    swap_capacity: usize,
+    /// Legal over-budget remainder after a capacity shrink below usage
+    /// (hot-swap): swap-outs stay blocked until the parked pages drain
+    /// back under the target, and `validate` tells this stranded state
+    /// apart from a budget-enforcement bug.
+    swap_overcommit: usize,
+    /// Host pages currently parked.
+    swapped_pages: usize,
+    peak_swapped_pages: usize,
     /// Physical pages live (refcount > 0); shared pages count once.
     in_use: usize,
     peak_in_use: usize,
@@ -116,6 +151,10 @@ pub struct KvPool {
     defrag_moves: u64,
     shared_claims: u64,
     cow_copies: u64,
+    swap_outs: u64,
+    swap_ins: u64,
+    /// Pages moved across PCIe, both directions.
+    swap_page_moves: u64,
 }
 
 impl KvPool {
@@ -130,6 +169,11 @@ impl KvPool {
             meta: vec![PageMeta::default(); capacity],
             tables: HashMap::new(),
             trie: HashMap::new(),
+            swapped: HashMap::new(),
+            swap_capacity: 0,
+            swap_overcommit: 0,
+            swapped_pages: 0,
+            peak_swapped_pages: 0,
             in_use: 0,
             peak_in_use: 0,
             allocs: 0,
@@ -137,6 +181,9 @@ impl KvPool {
             defrag_moves: 0,
             shared_claims: 0,
             cow_copies: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            swap_page_moves: 0,
         }
     }
 
@@ -185,6 +232,12 @@ impl KvPool {
         self.trie.len()
     }
 
+    /// Holder count of page `pid` (0 = free/dead/out-of-range) —
+    /// exposed for invariant checks in tests.
+    pub fn page_refs(&self, pid: usize) -> u32 {
+        self.meta.get(pid).map(|m| m.refs).unwrap_or(0)
+    }
+
     /// Lifetime count of pages claimed through the prefix trie.
     pub fn shared_claims(&self) -> u64 {
         self.shared_claims
@@ -193,6 +246,148 @@ impl KvPool {
     /// Lifetime count of copy-on-write page copies.
     pub fn cow_copies(&self) -> u64 {
         self.cow_copies
+    }
+
+    // ---- Host swap space ----
+
+    /// Bound the host swap space to `pages` (0 disables swap-out). The
+    /// budget is a target like [`KvPool::capacity`]: shrinking below
+    /// current usage blocks further swap-outs until parked sequences
+    /// resume or retire, it never drops parked state (the stranded
+    /// remainder is recorded so [`KvPool::validate`] accepts it).
+    pub fn set_swap_capacity(&mut self, pages: usize) {
+        self.swap_capacity = pages;
+        self.swap_overcommit = self.swapped_pages.saturating_sub(pages);
+    }
+
+    pub fn swap_capacity(&self) -> usize {
+        self.swap_capacity
+    }
+
+    /// Host pages currently parked in swap space.
+    pub fn swapped_pages(&self) -> usize {
+        self.swapped_pages
+    }
+
+    /// High-water mark of host pages simultaneously parked.
+    pub fn peak_swapped_pages(&self) -> usize {
+        self.peak_swapped_pages
+    }
+
+    /// Host pages still free in the swap budget.
+    pub fn swap_free(&self) -> usize {
+        self.swap_capacity.saturating_sub(self.swapped_pages)
+    }
+
+    /// Sequences currently parked in host swap space.
+    pub fn swapped_seqs(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn is_swapped(&self, seq: SeqId) -> bool {
+        self.swapped.contains_key(&seq)
+    }
+
+    /// Lifetime (swap-outs, swap-ins, pages moved across PCIe in both
+    /// directions).
+    pub fn swap_counts(&self) -> (u64, u64, u64) {
+        (self.swap_outs, self.swap_ins, self.swap_page_moves)
+    }
+
+    /// The split [`KvPool::swap_out`] would apply to `seq`'s table:
+    /// (shared prefix pages that stay device-resident, private pages
+    /// that move to host). (0, 0) for unknown sequences.
+    pub fn swap_split(&self, seq: SeqId) -> (usize, usize) {
+        let Some(t) = self.tables.get(&seq) else { return (0, 0) };
+        let shared = t.pages.iter().take_while(|&&pid| self.meta[pid].refs > 1).count();
+        (shared, t.pages.len() - shared)
+    }
+
+    /// Park `seq` in host swap space: its private pages (everything
+    /// past the shared prefix) leave the device pool and free their
+    /// ids; shared prefix pages stay resident with the sequence's
+    /// refcount intact, so concurrent holders and the trie never
+    /// notice. All-or-nothing against the swap budget; returns the
+    /// pages moved to host on success.
+    pub fn swap_out(&mut self, seq: SeqId) -> Result<usize, SwapShort> {
+        let (shared, private) = self.swap_split(seq);
+        debug_assert!(self.tables.contains_key(&seq), "swap_out of unknown sequence");
+        if private > self.swap_free() {
+            return Err(SwapShort(private - self.swap_free()));
+        }
+        let Some(table) = self.tables.remove(&seq) else { return Err(SwapShort(0)) };
+        let mut resident = table.pages;
+        let tail = resident.split_off(shared);
+        for pid in tail {
+            // Private pages return to the free list; any shared page
+            // past the first private one just loses this holder's ref
+            // (its KV still rides to host with the victim's copy).
+            self.decref(pid);
+        }
+        self.swapped.insert(
+            seq,
+            SwappedSeq {
+                resident,
+                host_pages: private,
+                tokens: table.tokens,
+                claimed_pages: table.claimed_pages,
+            },
+        );
+        self.swapped_pages += private;
+        self.peak_swapped_pages = self.peak_swapped_pages.max(self.swapped_pages);
+        self.swap_outs += 1;
+        self.swap_page_moves += private as u64;
+        Ok(private)
+    }
+
+    /// Device pages a parked sequence needs to resume AND immediately
+    /// grow to `need_tokens` of context (pass 0 for no growth): its
+    /// host pages, plus the new pages past its checkpointed frontier,
+    /// plus one page of copy-on-write margin when it grows (the first
+    /// write may land in a shared resident page). The scheduler gates
+    /// resumption on this so a sequence is never swapped in just to be
+    /// re-evicted by its own next reservation — that round trip moves
+    /// every private page across PCIe twice for zero progress.
+    pub fn swap_in_headroom(&self, seq: SeqId, need_tokens: usize) -> usize {
+        let Some(sw) = self.swapped.get(&seq) else { return 0 };
+        let grow = if need_tokens > 0 {
+            self.pages_for(need_tokens).saturating_sub(self.pages_for(sw.tokens)) + 1
+        } else {
+            0
+        };
+        sw.host_pages + grow
+    }
+
+    /// Bring a parked sequence back: re-allocate its private pages from
+    /// the device pool and restore its table (resident prefix + fresh
+    /// pages) at the checkpointed token frontier. All-or-nothing: on
+    /// `Err` the sequence stays parked and the error carries the
+    /// missing page count. Returns the pages moved back on success.
+    pub fn swap_in(&mut self, seq: SeqId) -> Result<usize, PagesShort> {
+        let host_pages = match self.swapped.get(&seq) {
+            Some(sw) => sw.host_pages,
+            None => {
+                debug_assert!(false, "swap_in of a sequence that is not parked");
+                return Err(PagesShort(0));
+            }
+        };
+        if host_pages > self.free.len() {
+            return Err(PagesShort(host_pages - self.free.len()));
+        }
+        let sw = self.swapped.remove(&seq).expect("checked above");
+        let mut pages = sw.resident;
+        for _ in 0..host_pages {
+            pages.push(self.alloc_page());
+        }
+        self.tables.insert(
+            seq,
+            SeqPages { pages, claimed_pages: sw.claimed_pages, tokens: sw.tokens },
+        );
+        self.swapped_pages -= host_pages;
+        self.swap_ins += 1;
+        self.swap_page_moves += host_pages as u64;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Ok(host_pages)
     }
 
     /// Drop one reference to `pid`; at zero the page leaves the trie
@@ -231,6 +426,10 @@ impl KvPool {
     /// full-length walk means the tail page was published too and the
     /// whole prompt's KV is resident).
     pub fn claim_prefix(&mut self, seq: SeqId, hashes: &[u64], prompt_tokens: usize) -> usize {
+        debug_assert!(
+            !self.swapped.contains_key(&seq),
+            "claim_prefix on a swapped sequence"
+        );
         debug_assert!(
             self.tables.get(&seq).map(|t| t.pages.is_empty()).unwrap_or(true),
             "claim_prefix on a sequence that already holds pages"
@@ -289,6 +488,10 @@ impl KvPool {
     /// new tokens would be appended into. All-or-nothing: on `Err`
     /// nothing changed and the error carries the missing page count.
     pub fn grow_to(&mut self, seq: SeqId, tokens: usize) -> Result<(), PagesShort> {
+        debug_assert!(
+            !self.swapped.contains_key(&seq),
+            "grow_to on a swapped sequence — swap_in first"
+        );
         let tokens = tokens.max(1);
         let need = self.pages_for(tokens);
         let (have, old_tokens) = self
@@ -336,8 +539,18 @@ impl KvPool {
 
     /// Release every page reference `seq` holds; returns the count of
     /// pages physically freed (shared pages with surviving holders stay
-    /// live — and stay claimable). Unknown sequences are a no-op (0).
+    /// live — and stay claimable). A sequence parked in host swap space
+    /// drops its host pages and its resident-prefix refs. Unknown
+    /// sequences are a no-op (0).
     pub fn release(&mut self, seq: SeqId) -> usize {
+        if let Some(sw) = self.swapped.remove(&seq) {
+            self.swapped_pages -= sw.host_pages;
+            let before = self.frees;
+            for pid in sw.resident {
+                self.decref(pid);
+            }
+            return (self.frees - before) as usize;
+        }
         let Some(table) = self.tables.remove(&seq) else {
             return 0;
         };
@@ -403,6 +616,16 @@ impl KvPool {
                     }
                 }
             }
+            // Parked sequences' resident prefixes hold refs too — the
+            // defrag must carry them along or swap-in resurrects stale
+            // ids.
+            for sw in self.swapped.values_mut() {
+                for slot in sw.resident.iter_mut() {
+                    if let Some(&dst) = remap.get(slot) {
+                        *slot = dst;
+                    }
+                }
+            }
         }
     }
 
@@ -414,6 +637,113 @@ impl KvPool {
     /// Lifetime (allocated, freed) physical page counts.
     pub fn alloc_counts(&self) -> (u64, u64) {
         (self.allocs, self.frees)
+    }
+
+    /// Full-state invariant check, for soak tests: refcounts equal the
+    /// table references holding each page, device accounting closes
+    /// (every dead in-bound id is on the free list exactly once, the
+    /// live count matches `in_use`), the trie points only at live
+    /// published pages, and the host swap space is within budget and
+    /// consistent with the parked sequences. Returns the first
+    /// violation as text.
+    pub fn validate(&self) -> Result<(), String> {
+        use std::collections::HashSet;
+        // Reference counts: one per table slot (live tables + parked
+        // residents).
+        let mut refs = vec![0u32; self.meta.len()];
+        for (seq, t) in &self.tables {
+            for &pid in &t.pages {
+                if pid >= self.meta.len() {
+                    return Err(format!("seq {seq} references out-of-range page {pid}"));
+                }
+                refs[pid] += 1;
+            }
+        }
+        for (seq, sw) in &self.swapped {
+            for &pid in &sw.resident {
+                if pid >= self.meta.len() {
+                    return Err(format!(
+                        "swapped seq {seq} references out-of-range page {pid}"
+                    ));
+                }
+                refs[pid] += 1;
+            }
+        }
+        let mut live = 0usize;
+        for (pid, m) in self.meta.iter().enumerate() {
+            if m.refs != refs[pid] {
+                return Err(format!(
+                    "page {pid}: refcount {} but {} table references",
+                    m.refs, refs[pid]
+                ));
+            }
+            if m.refs > 0 {
+                live += 1;
+            }
+            // Sharing only ever originates from a published prefix
+            // claim; CoW hands writers fresh private pages. A multiply
+            // held page with no hash means a write landed on (or a
+            // table slot leaked onto) a page another sequence can
+            // observe.
+            if m.refs > 1 && m.hash.is_none() {
+                return Err(format!(
+                    "page {pid} is held by {} sequences but was never published",
+                    m.refs
+                ));
+            }
+        }
+        if live != self.in_use {
+            return Err(format!("in_use {} but {live} pages have holders", self.in_use));
+        }
+        // Free list: exactly the dead ids below the capacity bound.
+        let free: HashSet<usize> = self.free.iter().copied().collect();
+        if free.len() != self.free.len() {
+            return Err("free list contains duplicates".into());
+        }
+        for &pid in &self.free {
+            if pid >= self.capacity {
+                return Err(format!("free id {pid} beyond capacity {}", self.capacity));
+            }
+            if self.meta[pid].refs > 0 {
+                return Err(format!("page {pid} is both free and held"));
+            }
+        }
+        for pid in 0..self.capacity.min(self.meta.len()) {
+            if self.meta[pid].refs == 0 && !free.contains(&pid) {
+                return Err(format!("dead in-bound page {pid} is not on the free list"));
+            }
+        }
+        // Trie: every entry is a live page carrying that hash.
+        for (&h, &pid) in &self.trie {
+            if pid >= self.meta.len() || self.meta[pid].refs == 0 {
+                return Err(format!("trie hash {h:#x} points at dead page {pid}"));
+            }
+            if self.meta[pid].hash != Some(h) {
+                return Err(format!("trie hash {h:#x} disagrees with page {pid} meta"));
+            }
+        }
+        // Host swap space: per-seq host pages sum to the aggregate and
+        // fit the budget.
+        let parked: usize = self.swapped.values().map(|s| s.host_pages).sum();
+        if parked != self.swapped_pages {
+            return Err(format!(
+                "swapped_pages {} but parked sequences hold {parked}",
+                self.swapped_pages
+            ));
+        }
+        if self.swapped_pages > self.swap_capacity + self.swap_overcommit {
+            return Err(format!(
+                "swap space over budget: {} > {} (+{} stranded by a shrink)",
+                self.swapped_pages, self.swap_capacity, self.swap_overcommit
+            ));
+        }
+        // A sequence is either live or parked, never both.
+        for seq in self.swapped.keys() {
+            if self.tables.contains_key(seq) {
+                return Err(format!("seq {seq} is both live and swapped"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -630,6 +960,162 @@ mod tests {
         assert_eq!(p.in_use(), 0);
         assert_eq!(p.trie_len(), 0, "trie never outlives its pages");
         assert_eq!(p.free_pages(), 8);
+    }
+
+    // ---- Host swap space ----
+
+    #[test]
+    fn swap_out_frees_private_pages_and_swap_in_restores_the_table() {
+        let mut p = KvPool::new(8, 16);
+        p.set_swap_capacity(16);
+        p.grow_to(1, 40).unwrap(); // 3 pages, all private
+        assert_eq!(p.swap_split(1), (0, 3));
+        let moved = p.swap_out(1).unwrap();
+        assert_eq!(moved, 3);
+        assert!(p.is_swapped(1));
+        assert!(!p.holds(1));
+        assert_eq!(p.in_use(), 0, "private pages leave the device pool");
+        assert_eq!(p.free_pages(), 8);
+        assert_eq!(p.swapped_pages(), 3);
+        // Another sequence can use the freed pages meanwhile.
+        p.grow_to(2, 80).unwrap(); // 5 pages
+        assert_eq!(p.in_use(), 5);
+        // Swap-in restores the table at the checkpointed frontier.
+        let back = p.swap_in(1).unwrap();
+        assert_eq!(back, 3);
+        assert!(p.holds(1) && !p.is_swapped(1));
+        assert_eq!(p.pages_of(1).len(), 3);
+        assert_eq!(p.swapped_pages(), 0);
+        // Growing from the restored frontier is incremental.
+        p.grow_to(1, 41).unwrap();
+        assert_eq!(p.pages_of(1).len(), 3, "41 tokens still fit 3 pages");
+        assert_eq!(p.swap_counts(), (1, 1, 6));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn swap_budget_is_enforced_all_or_nothing() {
+        let mut p = KvPool::new(8, 16);
+        p.set_swap_capacity(2);
+        p.grow_to(1, 48).unwrap(); // 3 private pages > budget 2
+        assert_eq!(p.swap_out(1), Err(SwapShort(1)));
+        assert!(p.holds(1), "failed swap-out must not touch the table");
+        assert_eq!(p.in_use(), 3);
+        assert_eq!(p.swapped_pages(), 0);
+        p.grow_to(2, 32).unwrap(); // 2 pages: fits the budget
+        assert_eq!(p.swap_out(2), Ok(2));
+        // Budget full: nothing else parks.
+        p.grow_to(3, 16).unwrap();
+        assert_eq!(p.swap_out(3), Err(SwapShort(1)));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_stays_resident_across_swap() {
+        let mut p = KvPool::new(16, 16);
+        p.set_swap_capacity(16);
+        let tokens = prompt(11, 48); // 3 pages
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 48).unwrap();
+        p.publish_prefix(1, &hashes);
+        p.claim_prefix(2, &hashes, 48);
+        p.grow_to(2, 49).unwrap(); // CoW tail: 2 shared + 1 private? no —
+                                   // 48 is 3 full pages; token 49 appends a 4th private page
+        assert_eq!(p.swap_split(2), (3, 1));
+        let moved = p.swap_out(2).unwrap();
+        assert_eq!(moved, 1, "only the private tail rides to host");
+        // The shared pages still serve claims (trie untouched) and the
+        // parked holder's refs keep them alive.
+        assert_eq!(p.trie_len(), 3);
+        assert_eq!(p.claim_prefix(3, &hashes, 48), 48);
+        assert_eq!(p.release(1), 0, "parked seq 2 still anchors the shared pages");
+        p.release(3);
+        assert_eq!(p.in_use(), 3, "resident prefix survives for the parked holder");
+        // Swap-in rides the surviving shared pages and reallocates the
+        // private tail only.
+        assert_eq!(p.swap_in(2), Ok(1));
+        assert_eq!(p.pages_of(2).len(), 4);
+        assert_eq!(p.release(2), 4, "last holder frees shared and private alike");
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.trie_len(), 0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn swap_in_is_all_or_nothing_on_device_pressure() {
+        let mut p = KvPool::new(4, 16);
+        p.set_swap_capacity(8);
+        p.grow_to(1, 48).unwrap(); // 3 pages
+        p.swap_out(1).unwrap();
+        p.grow_to(2, 32).unwrap(); // 2 of 4 pages: only 2 free
+        assert_eq!(p.swap_in(1), Err(PagesShort(1)));
+        assert!(p.is_swapped(1), "failed swap-in leaves the sequence parked");
+        assert_eq!(p.swapped_pages(), 3);
+        p.release(2);
+        p.swap_in(1).unwrap();
+        assert_eq!(p.in_use(), 3);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn shrinking_the_swap_budget_below_usage_is_legal_but_blocks_outs() {
+        let mut p = KvPool::new(8, 16);
+        p.set_swap_capacity(8);
+        p.grow_to(1, 64).unwrap(); // 4 pages
+        p.swap_out(1).unwrap();
+        // A hot-swap shrinks the budget under the parked pages: the
+        // stranded state validates, but nothing else may park.
+        p.set_swap_capacity(2);
+        p.validate().unwrap();
+        assert_eq!(p.swap_free(), 0);
+        p.grow_to(2, 16).unwrap();
+        assert_eq!(p.swap_out(2), Err(SwapShort(1)));
+        // Draining back under the target re-opens the space.
+        p.swap_in(1).unwrap();
+        p.set_swap_capacity(2);
+        assert_eq!(p.swap_free(), 2);
+        p.swap_out(2).unwrap();
+        p.validate().unwrap();
+        p.release(1);
+        p.release(2);
+        assert_eq!(p.swapped_pages(), 0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn releasing_a_parked_sequence_drops_host_pages() {
+        let mut p = KvPool::new(8, 16);
+        p.set_swap_capacity(8);
+        p.grow_to(1, 64).unwrap();
+        p.swap_out(1).unwrap();
+        assert_eq!(p.swapped_pages(), 4);
+        assert_eq!(p.release(1), 0, "host pages are not device frees");
+        assert!(!p.is_swapped(1));
+        assert_eq!(p.swapped_pages(), 0, "retiring a parked seq frees its swap space");
+        assert_eq!(p.free_pages(), 8);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn defrag_remaps_parked_resident_prefixes() {
+        let mut p = KvPool::new(8, 16);
+        p.set_swap_capacity(8);
+        p.grow_to(9, 48).unwrap(); // pin low ids 0..3
+        let tokens = prompt(4, 32);
+        let hashes = prompt_page_hashes(&tokens, 16);
+        p.grow_to(1, 32).unwrap(); // high ids
+        p.publish_prefix(1, &hashes);
+        p.claim_prefix(2, &hashes, 32);
+        p.grow_to(2, 33).unwrap(); // private 3rd page
+        p.swap_out(2).unwrap(); // parks with a 2-page resident prefix
+        p.release(9);
+        p.resize(4); // forces the shared pages down into 0..4
+        assert!(p.pages_of(1).iter().all(|&id| id < 4));
+        p.validate().unwrap();
+        // Swap-in must see the moved ids, not the stale ones.
+        p.swap_in(2).unwrap();
+        assert_eq!(&p.pages_of(2)[..2], p.pages_of(1), "resident prefix follows the move");
+        p.validate().unwrap();
     }
 
     #[test]

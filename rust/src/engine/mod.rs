@@ -16,9 +16,12 @@
 //!   sequences, interleaves budgeted prefill chunks with decode
 //!   (Sarathi-style `prefill_chunk` token budget), admits queued
 //!   requests FIFO while pages remain (claiming published prefixes
-//!   first — a full hit skips prefill entirely), and
-//!   preempts-and-requeues (newest-first, recompute) on pool
-//!   exhaustion;
+//!   first — a full hit skips prefill entirely), and evicts
+//!   newest-first on pool exhaustion, choosing per victim between
+//!   preempt-with-recompute and swap-to-host with chunk-checkpointed
+//!   resume ([`PreemptionConfig`]: recompute cost = resident tokens ×
+//!   prefill rate vs swap cost = private pages × 2 × PCIe page time;
+//!   parked sequences resume ahead of new admissions);
 //! * [`EngineCore`] (`core`) — the per-worker loop behind the existing
 //!   `TierBackend` trait: native [`StepBackend`]s step token-by-token
 //!   (calibrated simulated backends charge
@@ -41,5 +44,7 @@ pub mod scheduler;
 
 pub use bench::{run_serving_bench, BenchConfig, BenchReport};
 pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
-pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId};
-pub use scheduler::{ChunkTask, IterationPlan, IterationScheduler};
+pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId, SwapShort};
+pub use scheduler::{
+    ChunkTask, IterationPlan, IterationScheduler, PreemptionConfig, PreemptionMode,
+};

@@ -11,10 +11,21 @@
 //! 2. **grow** — every decoding sequence is about to produce one more
 //!    token, so its context grows by one; pages for the growth are
 //!    reserved oldest-first. On pool exhaustion the *newest* running
-//!    sequence is preempted (vLLM's recompute policy: its pages are
-//!    freed, its progress — including partial prefill — resets, and it
-//!    re-queues at the *front* of the wait queue so FIFO order is
-//!    preserved);
+//!    sequence is evicted, per victim choosing between two disciplines
+//!    ([`PreemptionConfig`]): *recompute* (vLLM's default: pages
+//!    freed, progress — including partial prefill — resets, requeue at
+//!    the front of the wait queue) and *swap-to-host* (park the
+//!    victim's private pages in the pool's host swap space; generated
+//!    tokens and completed prefill chunks are checkpointed and survive
+//!    — see [`KvPool::swap_out`]). The choice compares the recompute
+//!    cost (resident tokens × prefill rate) against the PCIe round
+//!    trip (2 × private pages × per-page swap time) and falls back to
+//!    recompute when the host budget is full;
+//! 2½. **resume** — sequences parked in swap space re-enter *ahead of
+//!    new admissions* (FIFO among themselves) as device pages free up:
+//!    a resumed decoder decodes this very tick, a resumed partial
+//!    prefill continues from its checkpointed chunk instead of
+//!    restarting at token 0;
 //! 3. **prefill** — sequences still prefilling get the next chunk of
 //!    their prompt, oldest first, under the per-tick token budget
 //!    (`prefill_chunk`, Sarathi-style): long prompts are spread over
@@ -42,6 +53,38 @@
 use std::collections::{HashMap, VecDeque};
 
 use super::kv::{KvPool, SeqId};
+
+/// How the scheduler evicts sequences on pool exhaustion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionMode {
+    /// Free the victim's pages; it re-prefills from token 0 on
+    /// re-admission (vLLM's recompute default).
+    #[default]
+    Recompute,
+    /// Swap-to-host allowed: per victim, park its KV in host swap
+    /// space when the PCIe round trip is cheaper than re-prefilling
+    /// its resident context (falling back to recompute when the swap
+    /// budget is exhausted). Swapped progress — generated tokens AND
+    /// completed prefill chunks — survives the preemption.
+    Swap,
+}
+
+/// Preemption policy plus the cost terms its per-victim choice
+/// compares (derive them from a [`crate::perf::ReplicaModel`] via
+/// [`crate::engine::EngineConfig`]; zeros make Swap mode always prefer
+/// the swap path while budget remains).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PreemptionConfig {
+    pub mode: PreemptionMode,
+    /// Host swap budget in pages (0 disables swap even in Swap mode).
+    pub swap_pages: usize,
+    /// Seconds to re-establish one token of context by recompute.
+    pub prefill_s_per_token: f64,
+    /// Seconds to move one KV page across PCIe, one direction.
+    pub swap_s_per_page: f64,
+    /// Bytes one KV page occupies (telemetry: swap_bytes reporting).
+    pub page_bytes: f64,
+}
 
 /// Token bookkeeping of one tracked sequence.
 #[derive(Debug, Clone)]
@@ -91,11 +134,21 @@ pub struct IterationPlan {
     pub prefill: Vec<ChunkTask>,
     /// Fully-prefilled sequences advancing one decode token.
     pub decode: Vec<SeqId>,
-    /// Sequences preempted this tick. Their KV pages are already freed
-    /// and their progress (decode *and* partial prefill) reset; callers
-    /// must drop any per-sequence backend state (they re-prefill on
-    /// re-admission).
+    /// Sequences preempted-with-recompute this tick. Their KV pages are
+    /// already freed and their progress (decode *and* partial prefill)
+    /// reset; callers must drop any per-sequence backend state (they
+    /// re-prefill on re-admission). Swap-evicted victims appear in
+    /// `swapped_out` instead — their state survives.
     pub preempted: Vec<SeqId>,
+    /// Sequences swapped out to host this tick, with the page count
+    /// each moved across PCIe. Their progress — generated tokens and
+    /// completed prefill chunks — is checkpointed; callers must KEEP
+    /// per-sequence backend state (they resume, not recompute).
+    pub swapped_out: Vec<(SeqId, usize)>,
+    /// Sequences resumed from host swap this tick, with the page count
+    /// each moved back. Resumed decoders decode this very tick;
+    /// resumed partial prefills continue at their checkpoint.
+    pub swapped_in: Vec<(SeqId, usize)>,
     /// Forced pool expansions this tick (0 unless the pool was smaller
     /// than a single sequence).
     pub forced_expansions: usize,
@@ -120,6 +173,16 @@ impl IterationPlan {
         v.extend(self.prefill.iter().filter(|c| c.last).map(|c| c.id));
         v
     }
+
+    /// KV pages moved to host this tick.
+    pub fn swap_out_pages(&self) -> usize {
+        self.swapped_out.iter().map(|&(_, p)| p).sum()
+    }
+
+    /// KV pages moved back from host this tick.
+    pub fn swap_in_pages(&self) -> usize {
+        self.swapped_in.iter().map(|&(_, p)| p).sum()
+    }
 }
 
 /// FIFO iteration scheduler over a paged KV pool.
@@ -129,11 +192,15 @@ pub struct IterationScheduler {
     waiting: VecDeque<SeqId>,
     /// Admission order, oldest first.
     running: Vec<SeqId>,
+    /// Sequences parked in host swap space, oldest eviction first;
+    /// they resume ahead of new admissions.
+    swapped_q: VecDeque<SeqId>,
     seqs: HashMap<SeqId, Seq>,
     max_running: usize,
     /// Prefill token budget per iteration (`usize::MAX` = whole-prompt
     /// admission, the pre-chunking discipline).
     prefill_chunk: usize,
+    preemption: PreemptionConfig,
     preemptions: u64,
     forced_expansions: u64,
     prefix_hit_tokens: u64,
@@ -147,13 +214,29 @@ impl IterationScheduler {
             pool,
             waiting: VecDeque::new(),
             running: Vec::new(),
+            swapped_q: VecDeque::new(),
             seqs: HashMap::new(),
             max_running: max_running.max(1),
             prefill_chunk: usize::MAX,
+            preemption: PreemptionConfig::default(),
             preemptions: 0,
             forced_expansions: 0,
             prefix_hit_tokens: 0,
         }
+    }
+
+    /// Select the eviction policy and its cost terms. Swap mode sizes
+    /// the pool's host swap space from the config's page budget.
+    pub fn set_preemption(&mut self, cfg: PreemptionConfig) {
+        self.preemption = cfg;
+        self.pool.set_swap_capacity(match cfg.mode {
+            PreemptionMode::Swap => cfg.swap_pages,
+            PreemptionMode::Recompute => 0,
+        });
+    }
+
+    pub fn preemption(&self) -> PreemptionConfig {
+        self.preemption
     }
 
     /// Cap the prefill tokens charged into any one iteration (clamped
@@ -197,9 +280,14 @@ impl IterationScheduler {
         self.waiting.push_back(id);
     }
 
-    /// Waiting + running sequences.
+    /// Waiting + running + swapped sequences.
     pub fn n_seqs(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.running.len() + self.swapped_q.len()
+    }
+
+    /// Sequences currently parked in host swap space.
+    pub fn n_swapped(&self) -> usize {
+        self.swapped_q.len()
     }
 
     pub fn n_running(&self) -> usize {
@@ -232,9 +320,17 @@ impl IterationScheduler {
         self.max_running = max_running.max(1);
     }
 
-    /// Sequences preempted over the scheduler's lifetime.
+    /// Sequences preempted-with-recompute over the scheduler's
+    /// lifetime (swap evictions are counted separately — see
+    /// [`IterationScheduler::swap_counts`]).
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Lifetime (swap-outs, swap-ins, pages moved across PCIe both
+    /// directions) of the swap-to-host policy.
+    pub fn swap_counts(&self) -> (u64, u64, u64) {
+        self.pool.swap_counts()
     }
 
     /// Forced pool expansions over the scheduler's lifetime.
@@ -248,11 +344,12 @@ impl IterationScheduler {
         self.prefix_hit_tokens
     }
 
-    /// Preempt `id`: free its pages, reset its progress (decode and
-    /// partial prefill), and requeue it at the front of the wait queue.
-    /// Work already planned for the victim THIS tick is withdrawn — a
-    /// later reservation may evict a sequence that entered the decode
-    /// or chunk lists earlier in the same planning pass.
+    /// Preempt `id` with recompute: free its pages, reset its progress
+    /// (decode and partial prefill), and requeue it at the front of the
+    /// wait queue. Work already planned for the victim THIS tick is
+    /// withdrawn — a later reservation may evict a sequence that
+    /// entered the decode or chunk lists earlier in the same planning
+    /// pass.
     fn preempt(&mut self, id: SeqId, plan: &mut IterationPlan) {
         self.pool.release(id);
         if let Some(s) = self.seqs.get_mut(&id) {
@@ -265,6 +362,55 @@ impl IterationScheduler {
         plan.prefill.retain(|c| c.id != id);
         plan.preempted.push(id);
         self.preemptions += 1;
+    }
+
+    /// Whether the per-victim cost model picks swap over recompute for
+    /// `id`: the policy allows it, the host budget holds the victim's
+    /// private pages, and the PCIe round trip is no dearer than
+    /// re-prefilling its resident context.
+    fn should_swap(&self, id: SeqId) -> bool {
+        if self.preemption.mode != PreemptionMode::Swap {
+            return false;
+        }
+        let Some(s) = self.seqs.get(&id) else { return false };
+        let (_, owned) = self.pool.swap_split(id);
+        if owned > self.pool.swap_free() {
+            return false;
+        }
+        // Recompute replays the whole resident context (prompt prefill
+        // AND regenerated decode tokens) through the prefill path; swap
+        // pays two PCIe moves per private page.
+        let resident_tokens = (s.prefilled + s.generated) as f64;
+        let recompute_cost = resident_tokens * self.preemption.prefill_s_per_token;
+        let swap_cost = 2.0 * owned as f64 * self.preemption.swap_s_per_page;
+        swap_cost <= recompute_cost
+    }
+
+    /// Swap `id` out to host: its progress (decode and completed
+    /// prefill chunks — the chunk checkpoint) survives; it re-enters
+    /// through the swap queue ahead of new admissions. Falls back to
+    /// recompute-preemption if the host budget races out.
+    fn swap_out_victim(&mut self, id: SeqId, plan: &mut IterationPlan) {
+        match self.pool.swap_out(id) {
+            Ok(pages) => {
+                self.swapped_q.push_back(id);
+                plan.decode.retain(|&d| d != id);
+                plan.prefill.retain(|c| c.id != id);
+                plan.swapped_out.push((id, pages));
+            }
+            Err(_) => self.preempt(id, plan),
+        }
+    }
+
+    /// Evict `victim` to relieve pool pressure, choosing per victim
+    /// between swap-to-host and preempt-with-recompute by the
+    /// configured cost terms.
+    fn evict(&mut self, victim: SeqId, plan: &mut IterationPlan) {
+        if self.should_swap(victim) {
+            self.swap_out_victim(victim, plan);
+        } else {
+            self.preempt(victim, plan);
+        }
     }
 
     /// Grow the pool just enough to cover a `short`-page shortfall even
@@ -288,7 +434,7 @@ impl IterationScheduler {
                 self.force_expand(short.0, plan);
             } else {
                 let victim = self.running.pop().expect("len > 1");
-                self.preempt(victim, plan);
+                self.evict(victim, plan);
                 if victim == id {
                     return false;
                 }
@@ -336,6 +482,65 @@ impl IterationScheduler {
             }
         }
 
+        // 1.5. Resume swapped sequences AHEAD of new admissions (FIFO
+        // among themselves): a resumed decoder also reserves this
+        // tick's one-token growth so it decodes immediately, and a
+        // resumed partial prefill continues at its checkpoint. A head
+        // is resumed only when the pool holds its host pages PLUS its
+        // next growth ([`KvPool::swap_in_headroom`]) — swapping a
+        // victim in just to have its own reservation re-evict it would
+        // thrash PCIe with zero progress. A head that cannot fit yet
+        // stays parked and keeps its priority; if nothing is running
+        // the pool force-expands rather than deadlocking against a
+        // parked sequence.
+        while let Some(&head) = self.swapped_q.front() {
+            if self.running.len() >= self.max_running {
+                break;
+            }
+            let s = &self.seqs[&head];
+            let need_tokens = if s.decoding() {
+                s.prompt_tokens + s.generated + 1
+            } else {
+                let remaining = s.prompt_tokens - s.prefilled;
+                let len = remaining.min(self.prefill_chunk);
+                s.prefilled + len + usize::from(len == remaining)
+            };
+            let headroom = self.pool.swap_in_headroom(head, need_tokens);
+            if self.pool.free_pages() < headroom {
+                if self.running.is_empty() {
+                    self.force_expand(headroom - self.pool.free_pages(), &mut plan);
+                    continue;
+                }
+                break;
+            }
+            match self.pool.swap_in(head) {
+                Ok(pages) => {
+                    self.swapped_q.pop_front();
+                    self.running.push(head);
+                    plan.swapped_in.push((head, pages));
+                    let s = &self.seqs[&head];
+                    if s.decoding() {
+                        let need = s.prompt_tokens + s.generated + 1;
+                        if !self.reserve(head, need, &mut plan) {
+                            // The head evicted ITSELF reserving its
+                            // decode growth (CoW pressure beyond the
+                            // headroom margin): it re-parked (or
+                            // reset). Stop resuming — retrying this
+                            // tick would spin on the same shortfall.
+                            break;
+                        }
+                    }
+                }
+                Err(short) => {
+                    if self.running.is_empty() {
+                        self.force_expand(short.0, &mut plan);
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+
         // Surviving decoders advance one token this tick.
         plan.decode = self
             .running
@@ -372,8 +577,10 @@ impl IterationScheduler {
         }
 
         // 3. Admit strictly FIFO while prefix-claimed-plus-first-chunk
-        // contexts fit and budget remains.
-        while self.running.len() < self.max_running {
+        // contexts fit and budget remains. Parked sequences outrank the
+        // wait queue: while any is still waiting to resume, admissions
+        // hold off so fresh arrivals cannot starve checkpointed work.
+        while self.running.len() < self.max_running && self.swapped_q.is_empty() {
             let Some(&head) = self.waiting.front() else { break };
             let prompt_tokens = self.seqs[&head].prompt_tokens;
             let claimed = if self.seqs[&head].hashes.is_empty() || self.pool.holds(head) {
@@ -451,21 +658,29 @@ impl IterationScheduler {
         s.generated >= s.max_new
     }
 
-    /// Drop a finished (or cancelled) sequence and free its pages.
+    /// Drop a finished (or cancelled) sequence and free its pages —
+    /// including a sequence parked in host swap space (its host pages
+    /// and resident refs are released).
     pub fn retire(&mut self, id: SeqId) {
         self.pool.release(id);
         if let Some(pos) = self.running.iter().position(|&r| r == id) {
             self.running.remove(pos);
         } else if let Some(pos) = self.waiting.iter().position(|&r| r == id) {
             let _ = self.waiting.remove(pos);
+        } else if let Some(pos) = self.swapped_q.iter().position(|&r| r == id) {
+            let _ = self.swapped_q.remove(pos);
         }
         self.seqs.remove(&id);
     }
 
     /// Remove and return every tracked sequence (waiting first, then
-    /// running, both FIFO), freeing all pages — the worker-death path.
+    /// swapped, then running, each FIFO), freeing all pages and host
+    /// swap space — the worker-death path. No parked sequence is ever
+    /// orphaned: a drained swapped id is handed back exactly like a
+    /// waiting one.
     pub fn drain_ids(&mut self) -> Vec<SeqId> {
         let mut out: Vec<SeqId> = self.waiting.drain(..).collect();
+        out.extend(self.swapped_q.drain(..));
         out.extend(self.running.drain(..));
         for &id in &out {
             self.pool.release(id);
@@ -775,6 +990,258 @@ mod tests {
         assert!(restarts >= 2, "re-admission must re-prefill from scratch");
         assert_eq!(s.pool().in_use(), 0);
         assert_eq!(s.pool().trie_len(), 0);
+    }
+
+    // ---- Swap-to-host preemption ----
+
+    /// Swap-enabled config with zero cost rates: swap always wins the
+    /// per-victim comparison while the budget holds.
+    fn swap_cfg(swap_pages: usize) -> PreemptionConfig {
+        PreemptionConfig {
+            mode: PreemptionMode::Swap,
+            swap_pages,
+            ..PreemptionConfig::default()
+        }
+    }
+
+    #[test]
+    fn swap_eviction_checkpoints_decode_progress() {
+        // Same tight-pool collision as the recompute test, but with
+        // swap enabled the victim must NOT replay any token: total
+        // advances per sequence equal max_new exactly.
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(64));
+        s.enqueue(0, 17, 20);
+        s.enqueue(1, 17, 20);
+        let mut advances: std::collections::HashMap<SeqId, usize> =
+            std::collections::HashMap::new();
+        let mut swap_out_events = 0usize;
+        let mut swap_in_events = 0usize;
+        let mut done = Vec::new();
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 300, "no deadlock");
+            let plan = s.next_iteration();
+            assert!(plan.preempted.is_empty(), "swap must replace recompute here");
+            swap_out_events += plan.swapped_out.len();
+            swap_in_events += plan.swapped_in.len();
+            for id in plan.producers() {
+                *advances.entry(id).or_insert(0) += 1;
+                if s.advance(id) {
+                    s.retire(id);
+                    done.push(id);
+                }
+            }
+        }
+        assert_eq!(done, vec![0, 1], "oldest finishes first");
+        assert!(swap_out_events > 0, "the tight pool must swap");
+        assert_eq!(swap_out_events, swap_in_events, "every park resumes exactly once");
+        assert_eq!(advances[&0], 20, "never preempted");
+        assert_eq!(advances[&1], 20, "checkpointed: no token is ever recomputed");
+        assert_eq!(s.preemptions(), 0);
+        let (outs, ins, moves) = s.swap_counts();
+        assert_eq!(outs as usize, swap_out_events);
+        assert_eq!(ins as usize, swap_in_events);
+        assert!(moves > 0);
+        assert_eq!(s.pool().in_use(), 0);
+        assert_eq!(s.pool().swapped_pages(), 0);
+        s.pool().validate().unwrap();
+    }
+
+    #[test]
+    fn swap_eviction_checkpoints_partial_prefill() {
+        // A long prompt mid-prefill is evicted by the older decoder's
+        // growth; with swap enabled its completed chunks survive and
+        // prefill resumes mid-prompt — chunk starts never return to 0.
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(64));
+        s.set_prefill_chunk(16);
+        s.enqueue(0, 17, 24); // 2 pages, grows to 3
+        s.enqueue(1, 40, 2); // 3 pages over 3 chunks
+        let mut chunks_for_1: Vec<ChunkTask> = Vec::new();
+        let mut swapped_1 = 0usize;
+        let mut done = Vec::new();
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 300, "no deadlock");
+            let plan = s.next_iteration();
+            swapped_1 += plan.swapped_out.iter().filter(|&&(id, _)| id == 1).count();
+            chunks_for_1.extend(plan.prefill.iter().filter(|c| c.id == 1));
+            for id in plan.producers() {
+                if s.advance(id) {
+                    s.retire(id);
+                    done.push(id);
+                }
+            }
+        }
+        assert_eq!(done, vec![0, 1]);
+        assert!(swapped_1 > 0, "the tight pool must park the prefilling seq");
+        let total: usize = chunks_for_1.iter().map(|c| c.len).sum();
+        assert_eq!(total, 40, "every prompt token is prefilled exactly once");
+        let restarts = chunks_for_1.iter().filter(|c| c.start == 0).count();
+        assert_eq!(restarts, 1, "checkpointed resume never returns to token 0");
+        // Consecutive chunks are contiguous across the park.
+        for w in chunks_for_1.windows(2) {
+            assert_eq!(w[0].start + w[0].len, w[1].start, "chunks stay contiguous");
+        }
+        assert_eq!(s.pool().in_use(), 0);
+        s.pool().validate().unwrap();
+    }
+
+    #[test]
+    fn swap_budget_exhaustion_falls_back_to_recompute() {
+        // Swap allowed but a zero-page host budget: eviction must
+        // degrade to the recompute discipline, not wedge.
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(0));
+        s.enqueue(0, 17, 20);
+        s.enqueue(1, 17, 20);
+        let mut preempted = 0usize;
+        let mut swapped = 0usize;
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 300);
+            let plan = s.next_iteration();
+            preempted += plan.preempted.len();
+            swapped += plan.swapped_out.len();
+            for id in plan.producers() {
+                if s.advance(id) {
+                    s.retire(id);
+                }
+            }
+        }
+        assert!(preempted > 0, "no budget: recompute must fire");
+        assert_eq!(swapped, 0);
+        assert_eq!(s.swap_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn per_victim_cost_choice_prefers_cheaper_discipline() {
+        // Expensive swap, cheap recompute: stay on recompute even in
+        // Swap mode.
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(PreemptionConfig {
+            mode: PreemptionMode::Swap,
+            swap_pages: 64,
+            prefill_s_per_token: 1e-6,
+            swap_s_per_page: 1.0, // absurdly slow PCIe
+            page_bytes: 0.0,
+        });
+        s.enqueue(0, 17, 20);
+        s.enqueue(1, 17, 20);
+        let mut preempted = 0usize;
+        let mut swapped = 0usize;
+        let mut iters = 0;
+        while !s.is_idle() {
+            iters += 1;
+            assert!(iters < 500);
+            let plan = s.next_iteration();
+            preempted += plan.preempted.len();
+            swapped += plan.swapped_out.len();
+            for id in plan.producers() {
+                if s.advance(id) {
+                    s.retire(id);
+                }
+            }
+        }
+        assert!(preempted > 0);
+        assert_eq!(swapped, 0, "a dear PCIe must never be chosen");
+    }
+
+    #[test]
+    fn resumed_sequences_outrank_new_admissions() {
+        // Seq 1 parks under pressure from seq 0; seq 2 arrives while 1
+        // is parked. On drain, 1 must resume BEFORE 2 is admitted.
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(64));
+        s.enqueue(0, 17, 24);
+        s.enqueue(1, 17, 24);
+        // Tick until seq 1 is parked.
+        let mut iters = 0;
+        while s.n_swapped() == 0 {
+            iters += 1;
+            assert!(iters < 100, "pressure must park seq 1");
+            let plan = s.next_iteration();
+            for id in plan.producers() {
+                assert!(!s.advance(id), "budgets are deep enough here");
+            }
+        }
+        s.enqueue(2, 17, 4);
+        // While 1 is parked, 2 must not be admitted.
+        let mut resumed_at: Option<usize> = None;
+        let mut admitted_2_at: Option<usize> = None;
+        let mut tick = 0;
+        while !s.is_idle() {
+            tick += 1;
+            assert!(tick < 500, "no deadlock");
+            let plan = s.next_iteration();
+            if plan.swapped_in.iter().any(|&(id, _)| id == 1) && resumed_at.is_none() {
+                resumed_at = Some(tick);
+            }
+            if plan.admitted.contains(&2) && admitted_2_at.is_none() {
+                admitted_2_at = Some(tick);
+            }
+            for id in plan.producers() {
+                if s.advance(id) {
+                    s.retire(id);
+                }
+            }
+        }
+        let r = resumed_at.expect("seq 1 must resume");
+        let a = admitted_2_at.expect("seq 2 must eventually run");
+        assert!(r <= a, "checkpointed work resumes before new admissions ({r} vs {a})");
+    }
+
+    #[test]
+    fn drain_returns_swapped_sequences_too() {
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(64));
+        s.enqueue(0, 17, 24);
+        s.enqueue(1, 17, 24);
+        let mut iters = 0;
+        while s.n_swapped() == 0 {
+            iters += 1;
+            assert!(iters < 100);
+            let plan = s.next_iteration();
+            for id in plan.producers() {
+                let _ = s.advance(id);
+            }
+        }
+        s.enqueue(2, 16, 4); // still waiting
+        let ids = s.drain_ids();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "waiting + running + swapped all drain");
+        assert!(s.is_idle());
+        assert_eq!(s.pool().in_use(), 0);
+        assert_eq!(s.pool().swapped_pages(), 0, "no parked sequence is orphaned");
+        s.pool().validate().unwrap();
+    }
+
+    #[test]
+    fn retire_of_a_parked_sequence_frees_swap_space() {
+        let mut s = sched(4, 16, 8);
+        s.set_preemption(swap_cfg(64));
+        s.enqueue(0, 17, 24);
+        s.enqueue(1, 17, 24);
+        let mut iters = 0;
+        while s.n_swapped() == 0 {
+            iters += 1;
+            assert!(iters < 100);
+            let plan = s.next_iteration();
+            for id in plan.producers() {
+                let _ = s.advance(id);
+            }
+        }
+        s.retire(1); // cancel the parked sequence
+        assert_eq!(s.n_swapped(), 0);
+        assert_eq!(s.pool().swapped_pages(), 0);
+        let (order, _) = run_to_completion(&mut s, 200);
+        assert_eq!(order, vec![0]);
+        s.pool().validate().unwrap();
     }
 
     // ---- Prefix sharing through the scheduler ----

@@ -430,6 +430,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
         report.chunked.ttft_speedup,
         report.chunked.win,
     );
+    println!(
+        "swap preemption ({} reqs, {}-token prompts, {}-page pool): p95 {:.2}s -> {:.2}s ({:.2}x) | \
+         prefilled tokens {} -> {} | preemptions {} | swaps {}/{} ({} B) | win {}",
+        report.swap.requests,
+        report.swap.prompt_tokens,
+        report.swap.pool_pages,
+        report.swap.recompute_p95_s,
+        report.swap.swap_p95_s,
+        report.swap.p95_speedup,
+        report.swap.recompute_prefill_tokens,
+        report.swap.swap_prefill_tokens,
+        report.swap.preemptions,
+        report.swap.swap_outs,
+        report.swap.swap_ins,
+        report.swap.swap_bytes,
+        report.swap.win,
+    );
 
     let out = args.str_or("out", "BENCH_serving.json");
     std::fs::write(&out, format!("{}\n", report.to_json()))
@@ -462,6 +479,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
              ({:.3}s chunked vs {:.3}s whole)",
             report.chunked.chunked_p95_ttft_s,
             report.chunked.whole_p95_ttft_s
+        );
+    }
+    if !report.swap.win {
+        bail!(
+            "swap-to-host did not beat recompute-only preemption \
+             (p95 {:.3}s vs {:.3}s, prefilled {} vs {})",
+            report.swap.swap_p95_s,
+            report.swap.recompute_p95_s,
+            report.swap.swap_prefill_tokens,
+            report.swap.recompute_prefill_tokens
         );
     }
     Ok(())
@@ -504,7 +531,7 @@ fn print_help() {
          Online adaptation (drift replay, §4.4):\n\
          \x20   cascadia replay --config examples/configs/drift_replay.json\n\n\
          Serving benchmark (continuous engine vs lockstep baseline, plus\n\
-         prefix-sharing and chunked-prefill sections):\n\
+         prefix-sharing, chunked-prefill, and swap-preemption sections):\n\
          \x20   cascadia bench [--smoke] [--prefix-heavy] [--seed S] [--out BENCH_serving.json]\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );

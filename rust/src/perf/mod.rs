@@ -76,6 +76,12 @@ pub struct ReplicaModel {
     /// GPU memory left for KV after weights + activation reserve
     /// (whole replica group, bytes).
     kv_budget_bytes: f64,
+    /// PCIe alpha-beta terms for swap-to-host page moves.
+    pcie_alpha: f64,
+    pcie_beta_bw: f64,
+    /// Pinned host memory backing swapped KV (whole replica group,
+    /// bytes).
+    host_swap_bytes: f64,
     /// Latency multiplier from pipeline depth (a request's token must
     /// traverse pp stages).
     pub pp_latency_factor: f64,
@@ -169,6 +175,9 @@ impl ReplicaModel {
             max_batch,
             kv_bytes_per_token: model.kv_bytes_per_token(),
             kv_budget_bytes: kv_budget,
+            pcie_alpha: cluster.pcie.alpha,
+            pcie_beta_bw: cluster.pcie.beta_bw,
+            host_swap_bytes: cluster.host_swap_bytes_per_gpu * group as f64,
             pp_latency_factor: pp as f64,
             // Pipelining recovers most of the stage parallelism;
             // bubbles cost ~10%.
@@ -325,6 +334,48 @@ impl ReplicaModel {
         ((total - shared_pages) / private_pages).clamp(1, 512)
     }
 
+    /// Bytes one KV page of `page_tokens` tokens occupies on this
+    /// replica (the unit swap-to-host moves over PCIe).
+    pub fn kv_page_bytes(&self, page_tokens: usize) -> f64 {
+        self.kv_bytes_per_token * page_tokens.max(1) as f64
+    }
+
+    /// Pages of `page_tokens` tokens the replica's pinned host swap
+    /// budget holds — the bound of the engine's swap-to-host space
+    /// (0 when the model has no KV or the host reserves nothing).
+    pub fn swap_pages_total(&self, page_tokens: usize) -> usize {
+        if self.host_swap_bytes <= 0.0 || self.kv_bytes_per_token <= 0.0 {
+            return 0;
+        }
+        (self.host_swap_bytes / self.kv_page_bytes(page_tokens)) as usize
+    }
+
+    /// Seconds to move one KV page of `page_tokens` tokens across PCIe,
+    /// one direction (alpha-beta). A swap-preempted victim pays two of
+    /// these per page (out + in); the scheduler compares that against
+    /// [`ReplicaModel::prefill_seconds_per_token`] x resident tokens.
+    pub fn page_swap_seconds(&self, page_tokens: usize) -> f64 {
+        self.pcie_alpha + self.kv_page_bytes(page_tokens) / self.pcie_beta_bw.max(1.0)
+    }
+
+    /// Seconds of prefill work per prompt token — the recompute-cost
+    /// rate of the preemption policy's per-victim choice.
+    pub fn prefill_seconds_per_token(&self) -> f64 {
+        self.prefill_s_per_token
+    }
+
+    /// Full swap cost of evicting-and-resuming a `ctx_tokens` victim:
+    /// two PCIe moves (out + in) of every page its context occupies.
+    /// THE per-victim swap cost — `sched::inner`'s plan-level choice,
+    /// `sim::analytic`'s overhead term, and (through
+    /// `PreemptionConfig::from_replica`'s rates) the runtime
+    /// scheduler's eviction comparison all derive from this one
+    /// formula, so they cannot drift apart.
+    pub fn swap_round_trip_seconds(&self, ctx_tokens: f64, page_tokens: usize) -> f64 {
+        2.0 * self.kv_pages_for(ctx_tokens, page_tokens) as f64
+            * self.page_swap_seconds(page_tokens)
+    }
+
     /// Time to first token under chunked prefill at steady batch `b`:
     /// the prompt's prefill is split into `ceil(prompt/chunk)` chunks,
     /// each sharing its iteration with the decode batch, so TTFT pays
@@ -472,6 +523,26 @@ mod tests {
         let wl = Workload { rate: 1.0, avg_input: 512.0, avg_output: 256.0 };
         assert!(r.capacity_shared(&wl, 448.0) >= r.capacity(&wl));
         assert_eq!(r.capacity_shared(&wl, 0.0), r.capacity(&wl));
+    }
+
+    #[test]
+    fn swap_round_trip_beats_recompute_on_long_contexts() {
+        // The regime the swap policy exists for: a deep-tier victim
+        // with a long resident context is far cheaper to move over
+        // PCIe than to re-prefill from token 0.
+        let m = &llama_cascade()[0];
+        let r = ReplicaModel::new(m, &cluster(), 1, 1, 768.0);
+        let ctx = 2048.0;
+        let swap = r.swap_round_trip_seconds(ctx, DEFAULT_PAGE_TOKENS);
+        let recompute = ctx * r.prefill_seconds_per_token();
+        assert!(
+            swap < recompute,
+            "swap {swap}s should beat recompute {recompute}s at ctx {ctx}"
+        );
+        // And the host budget is deeper than the device pool: swap
+        // space can park everything the pool ever held.
+        assert!(r.swap_pages_total(DEFAULT_PAGE_TOKENS) > r.kv_pages_total(DEFAULT_PAGE_TOKENS));
+        assert!(r.kv_page_bytes(DEFAULT_PAGE_TOKENS) > 0.0);
     }
 
     #[test]

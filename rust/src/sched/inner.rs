@@ -36,11 +36,12 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::cluster::ClusterSpec;
+use crate::engine::PreemptionMode;
 use crate::milp::simplex::Sense;
 use crate::milp::{MilpProblem, Rel};
 use crate::models::ModelSpec;
 use crate::parallel::{enumerate_strategies, Strategy};
-use crate::perf::{ReplicaModel, Workload, DEFAULT_PREFILL_CHUNK};
+use crate::perf::{ReplicaModel, Workload, DEFAULT_PAGE_TOKENS, DEFAULT_PREFILL_CHUNK};
 use crate::sim::analytic::{EngineSemantics, OVERLOAD_LATENCY};
 
 /// Options for the inner solver.
@@ -67,6 +68,14 @@ pub struct InnerOptions {
     /// set `f64::INFINITY` (or <= 0) to reproduce the pre-chunking
     /// estimate exactly.
     pub prefill_chunk: f64,
+    /// Preemption discipline to model in the analytic estimates:
+    /// `None` keeps the legacy estimate (no eviction-overhead term,
+    /// the pre-swap behaviour); `Some(mode)` adds the saturation-gated
+    /// overhead term, with `Swap` charging the cheaper of the PCIe
+    /// round trip and recompute per victim — the same per-victim
+    /// choice the runtime scheduler makes, so the MILP/Pareto layer
+    /// sees the recompute/swap tradeoff per design point.
+    pub preemption: Option<PreemptionMode>,
 }
 
 impl Default for InnerOptions {
@@ -77,6 +86,7 @@ impl Default for InnerOptions {
             uniform_allocation: false,
             shared_prefix_tokens: 0.0,
             prefill_chunk: DEFAULT_PREFILL_CHUNK as f64,
+            preemption: None,
         }
     }
 }
@@ -91,8 +101,23 @@ impl InnerOptions {
             } else {
                 f64::INFINITY
             },
+            preemption: self.preemption,
         }
     }
+}
+
+/// Whether swap-to-host beats recompute for a mean-`ctx_tokens` victim
+/// on this replica design: the PCIe round trip of the victim's pages
+/// is cheaper than re-prefilling the context, and the host actually
+/// has swap space. This is the per-design-point policy choice the
+/// scheduler bakes into the plan ([`InnerSolution::preemption`]); the
+/// runtime makes the same comparison per victim at eviction time.
+pub fn swap_beats_recompute(rm: &ReplicaModel, ctx_tokens: f64) -> bool {
+    if rm.swap_pages_total(DEFAULT_PAGE_TOKENS) == 0 {
+        return false;
+    }
+    rm.swap_round_trip_seconds(ctx_tokens, DEFAULT_PAGE_TOKENS)
+        < rm.prefill_latency(ctx_tokens)
 }
 
 /// Inner-level result.
@@ -108,6 +133,11 @@ pub struct InnerSolution {
     pub max_latency: f64,
     /// Branch-and-bound nodes (0 when the DP answered).
     pub milp_nodes: usize,
+    /// Eviction discipline chosen for this design point: swap-to-host
+    /// when the bottleneck tier's per-victim PCIe round trip undercuts
+    /// its recompute cost ([`swap_beats_recompute`]), recompute
+    /// otherwise. Flows into [`crate::sched::plan::CascadePlan`].
+    pub preemption: PreemptionMode,
 }
 
 /// Best parallelism strategy and its p95 for (model, budget, workload)
@@ -365,12 +395,45 @@ impl InnerSolver {
             max_latency = max_latency.max(tier_p95[i]);
         }
 
+        // Per-design-point preemption choice, judged at the bottleneck
+        // deployed tier (where eviction overhead binds the max-latency
+        // objective): deep-tier re-serves carry the longest contexts,
+        // which is exactly where the PCIe round trip undercuts
+        // re-prefilling.
+        let preemption = {
+            let mut mode = PreemptionMode::Recompute;
+            let bottleneck = active
+                .iter()
+                .copied()
+                .max_by(|&a, &b| tier_p95[a].partial_cmp(&tier_p95[b]).unwrap());
+            if let Some(i) = bottleneck {
+                if let Some(s) = &strategies[i] {
+                    if let Some(g) = s.groups.first() {
+                        let w = &tier_workloads[i];
+                        let ctx = w.avg_input + w.avg_output;
+                        let rm = ReplicaModel::new(
+                            &self.cascade[i],
+                            &self.cluster,
+                            g.tp,
+                            g.pp,
+                            ctx,
+                        );
+                        if swap_beats_recompute(&rm, ctx) {
+                            mode = PreemptionMode::Swap;
+                        }
+                    }
+                }
+            }
+            mode
+        };
+
         Ok(InnerSolution {
             gpus: alloc,
             strategies,
             tier_p95,
             max_latency,
             milp_nodes: 0,
+            preemption,
         })
     }
 
@@ -651,6 +714,61 @@ mod tests {
             &InnerOptions::default(),
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn per_design_point_preemption_tracks_the_cost_terms() {
+        // On the H100 testbed the PCIe round trip undercuts re-prefill
+        // at paper-trace context lengths, so scheduled designs carry
+        // the swap knob...
+        let sol = solve_inner(
+            &deepseek_cascade(),
+            &cluster(),
+            &workloads([6.0, 2.0, 0.5]),
+            32,
+            &InnerOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(sol.preemption, PreemptionMode::Swap);
+        // ...and the choice helper itself flips with the terms: a
+        // replica with swap space prefers swap at long contexts, and a
+        // zero host budget forces recompute.
+        let m = &deepseek_cascade()[0];
+        let rm = ReplicaModel::new(m, &cluster(), 1, 1, 2048.0);
+        assert!(swap_beats_recompute(&rm, 2048.0));
+        let mut no_host = cluster();
+        no_host.host_swap_bytes_per_gpu = 0.0;
+        let rm0 = ReplicaModel::new(m, &no_host, 1, 1, 2048.0);
+        assert!(!swap_beats_recompute(&rm0, 2048.0), "no host space, no swap");
+    }
+
+    #[test]
+    fn preemption_aware_scoring_never_prefers_recompute_to_swap() {
+        // With the overhead term enabled, Swap mode charges the
+        // cheaper per-victim cost, so its estimate is <= Recompute's
+        // on every feasible design.
+        let cascade = deepseek_cascade();
+        let c = cluster();
+        let w = workloads([6.0, 2.0, 0.5]);
+        let swap = solve_inner(&cascade, &c, &w, 32,
+            &InnerOptions { preemption: Some(PreemptionMode::Swap), ..Default::default() })
+            .unwrap();
+        let rec = solve_inner(&cascade, &c, &w, 32,
+            &InnerOptions { preemption: Some(PreemptionMode::Recompute), ..Default::default() })
+            .unwrap();
+        assert!(
+            swap.max_latency <= rec.max_latency + 1e-9,
+            "swap-aware scoring must not lose: {} vs {}",
+            swap.max_latency,
+            rec.max_latency
+        );
+        // And the legacy estimate (no term) is reproduced bit-for-bit
+        // by the default options.
+        let legacy = solve_inner(&cascade, &c, &w, 32, &InnerOptions::default()).unwrap();
+        let explicit_none = solve_inner(&cascade, &c, &w, 32,
+            &InnerOptions { preemption: None, ..Default::default() })
+            .unwrap();
+        assert_eq!(legacy.max_latency, explicit_none.max_latency);
     }
 
     #[test]

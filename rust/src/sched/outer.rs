@@ -152,6 +152,7 @@ fn evaluate_candidate(
         tiers,
         predicted_latency: sol.max_latency,
         predicted_quality: routing.quality,
+        preemption: sol.preemption,
     };
     Some(ParetoPoint { latency: sol.max_latency, quality: routing.quality, plan })
 }

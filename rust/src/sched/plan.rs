@@ -13,6 +13,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::engine::PreemptionMode;
 use crate::parallel::Strategy;
 use crate::perf::Workload;
 use crate::router::{PolicySpec, RoutingPolicy};
@@ -44,6 +45,12 @@ pub struct CascadePlan {
     pub predicted_latency: f64,
     /// Judged quality Q(θ).
     pub predicted_quality: f64,
+    /// Eviction discipline the deployed engine should run (the
+    /// scheduler picks it per design point from the recompute-vs-swap
+    /// cost terms; `ServerConfig::from_plan_with_engine` derives the
+    /// matching swap budget and PCIe rates from the plan's own
+    /// parallelism, so schedule→serve round-trips the whole policy).
+    pub preemption: PreemptionMode,
 }
 
 impl CascadePlan {
@@ -64,6 +71,13 @@ impl CascadePlan {
             ("policy", self.policy.to_json()),
             ("predicted_latency", Json::num(self.predicted_latency)),
             ("predicted_quality", Json::num(self.predicted_quality)),
+            (
+                "preemption",
+                Json::str(match self.preemption {
+                    PreemptionMode::Recompute => "recompute".to_string(),
+                    PreemptionMode::Swap => "swap".to_string(),
+                }),
+            ),
             (
                 "tiers",
                 Json::arr(
@@ -128,11 +142,22 @@ impl CascadePlan {
             anyhow::bail!("plan has no tiers");
         }
         policy.validate(tiers.len())?;
+        // Optional for backward compatibility: plans captured before
+        // the swap policy existed default to recompute.
+        let preemption = match j.get("preemption") {
+            Some(v) => match v.as_str()? {
+                "recompute" => PreemptionMode::Recompute,
+                "swap" => PreemptionMode::Swap,
+                other => anyhow::bail!("unknown preemption mode '{other}'"),
+            },
+            None => PreemptionMode::Recompute,
+        };
         Ok(CascadePlan {
             policy,
             tiers,
             predicted_latency: j.req("predicted_latency")?.as_f64()?,
             predicted_quality: j.req("predicted_quality")?.as_f64()?,
+            preemption,
         })
     }
 
@@ -178,10 +203,14 @@ impl CascadePlan {
             .collect::<Vec<_>>()
             .join(" | ");
         format!(
-            "{} L={:.2}s Q={:.1} :: {tiers}",
+            "{} L={:.2}s Q={:.1}{} :: {tiers}",
             self.policy.label(),
             self.predicted_latency,
-            self.predicted_quality
+            self.predicted_quality,
+            match self.preemption {
+                PreemptionMode::Recompute => "",
+                PreemptionMode::Swap => " P=swap",
+            }
         )
     }
 }
@@ -222,6 +251,7 @@ mod tests {
             ],
             predicted_latency: 3.0,
             predicted_quality: 75.0,
+            preemption: PreemptionMode::Recompute,
         }
     }
 
@@ -274,6 +304,24 @@ mod tests {
         assert!(CascadePlan::from_json_text(&p.to_json().to_string()).is_err());
         assert!(CascadePlan::from_json_text("{}").is_err());
         assert!(CascadePlan::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn preemption_round_trips_and_defaults_to_recompute() {
+        let mut p = sample();
+        p.preemption = PreemptionMode::Swap;
+        let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(back.preemption, PreemptionMode::Swap);
+        assert!(p.summary().contains("P=swap"), "{}", p.summary());
+        // A plan captured before the knob existed still parses.
+        let legacy = sample();
+        let mut text = legacy.to_json().to_string();
+        text = text.replace("\"preemption\":\"recompute\",", "");
+        let parsed = CascadePlan::from_json_text(&text).unwrap();
+        assert_eq!(parsed.preemption, PreemptionMode::Recompute);
+        // Unknown modes are rejected.
+        let bad = legacy.to_json().to_string().replace("recompute", "teleport");
+        assert!(CascadePlan::from_json_text(&bad).is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! are deliberately simple: the scheduler only needs correct *ordering*
 //! of candidate strategies; final plans are re-scored by the DES.
 
+use crate::engine::PreemptionMode;
 use crate::perf::{ReplicaModel, Workload, DEFAULT_PAGE_TOKENS};
 
 /// Tail inflation applied on top of the mean under queueing.
@@ -25,6 +26,13 @@ pub const K_QUEUE: f64 = 0.8;
 pub const P95_OVER_MEAN: f64 = 1.2;
 /// Latency assigned to infeasible/overloaded configurations (seconds).
 pub const OVERLOAD_LATENCY: f64 = 1e6;
+/// Pool utilization at which eviction overhead starts to appear: a
+/// lightly loaded paged pool never preempts, a saturated one evicts
+/// its newest co-runners as contexts grow.
+pub const RHO_EVICT_ONSET: f64 = 0.6;
+/// Eviction probability per request at full saturation (the ramp from
+/// [`RHO_EVICT_ONSET`] is linear up to this).
+pub const K_EVICT: f64 = 0.5;
 
 /// Estimated p95 latency (seconds) of `replicas` serving `w`.
 ///
@@ -49,11 +57,22 @@ pub struct EngineSemantics {
     /// Prefill tokens charged per iteration (`INFINITY` = whole-prompt
     /// admission).
     pub prefill_chunk: f64,
+    /// Eviction discipline to charge overhead for under saturation:
+    /// `None` models no preemption at all (the legacy estimate);
+    /// `Some(Recompute)` charges a full re-prefill of the mean context
+    /// per evicted victim; `Some(Swap)` charges the cheaper of that
+    /// and the PCIe round trip of the victim's pages — the runtime
+    /// scheduler's own per-victim comparison.
+    pub preemption: Option<PreemptionMode>,
 }
 
 impl Default for EngineSemantics {
     fn default() -> Self {
-        EngineSemantics { shared_prefix_tokens: 0.0, prefill_chunk: f64::INFINITY }
+        EngineSemantics {
+            shared_prefix_tokens: 0.0,
+            prefill_chunk: f64::INFINITY,
+            preemption: None,
+        }
     }
 }
 
@@ -141,8 +160,31 @@ pub fn estimate_p95_groups_engine(
         // iteration per prefill chunk) plus the remaining decode; a
         // shared prefix shrinks the prompt span actually prefilled.
         let prefilled = (w.avg_input - sem.shared_prefix_tokens).max(0.0);
-        let base = r.ttft_chunked(prefilled, sem.prefill_chunk, b)
+        let mut base = r.ttft_chunked(prefilled, sem.prefill_chunk, b)
             + (w.avg_output - 1.0).max(0.0) * r.decode_iteration(b);
+        // Preemption-overhead term: as the pool saturates, context
+        // growth evicts newest co-runners; each victim pays either a
+        // full recompute of the mean resident context or a PCIe round
+        // trip of its pages, per the configured discipline. The onset
+        // is rho-gated so lightly loaded pools charge nothing.
+        if let Some(mode) = sem.preemption {
+            let p_evict =
+                ((rho - RHO_EVICT_ONSET) / (1.0 - RHO_EVICT_ONSET)).clamp(0.0, 1.0) * K_EVICT;
+            if p_evict > 0.0 {
+                let ctx = w.avg_input + w.avg_output;
+                let recompute = r.prefill_latency(ctx);
+                let swap = r.swap_round_trip_seconds(ctx, DEFAULT_PAGE_TOKENS);
+                let victim_cost = match mode {
+                    PreemptionMode::Recompute => recompute,
+                    // Per-victim choice: the runtime swaps only when
+                    // it is the cheaper move (and recomputes when the
+                    // host budget is dry — which the budget-less
+                    // min() here optimistically ignores).
+                    PreemptionMode::Swap => swap.min(recompute),
+                };
+                base += p_evict * victim_cost;
+            }
+        }
         // Weight by the whole group's traffic share (share is per replica).
         base_mean += share * *n as f64 * base;
     }
@@ -254,6 +296,43 @@ mod tests {
             chunked > whole,
             "a 512-token prompt in 128-token chunks pays extra interleave: {chunked} vs {whole}"
         );
+    }
+
+    #[test]
+    fn eviction_overhead_is_rho_gated_and_swap_never_loses() {
+        let p = pool(2, 2);
+        let groups: Vec<(&ReplicaModel, usize)> = p.iter().map(|r| (r, 1)).collect();
+        let cap = pool_capacity(&p, &w(1.0));
+        // Light load: below the onset, the term charges nothing.
+        let light = w(cap * 0.3);
+        let plain = estimate_p95_groups(&groups, &light);
+        for mode in [PreemptionMode::Recompute, PreemptionMode::Swap] {
+            let with = estimate_p95_groups_engine(
+                &groups,
+                &light,
+                &EngineSemantics { preemption: Some(mode), ..Default::default() },
+            );
+            assert_eq!(with, plain, "below onset the estimate is untouched");
+        }
+        // Heavy load: overhead appears, and the swap discipline's
+        // per-victim min() can only undercut recompute.
+        let heavy = w(cap * 0.9);
+        let none = estimate_p95_groups(&groups, &heavy);
+        let rec = estimate_p95_groups_engine(
+            &groups,
+            &heavy,
+            &EngineSemantics {
+                preemption: Some(PreemptionMode::Recompute),
+                ..Default::default()
+            },
+        );
+        let swap = estimate_p95_groups_engine(
+            &groups,
+            &heavy,
+            &EngineSemantics { preemption: Some(PreemptionMode::Swap), ..Default::default() },
+        );
+        assert!(rec > none, "saturation must charge eviction overhead");
+        assert!(swap > none && swap <= rec, "swap {swap} vs recompute {rec}");
     }
 
     #[test]

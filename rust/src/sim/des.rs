@@ -28,7 +28,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
-use crate::engine::{IterationScheduler, KvPool};
+use crate::engine::{IterationScheduler, KvPool, PreemptionConfig, PreemptionMode};
 use crate::perf::ReplicaModel;
 use crate::util::stats;
 
@@ -48,6 +48,14 @@ pub enum DesMode {
         /// Prefill token budget per iteration (`usize::MAX` =
         /// whole-prompt admission, the pre-chunking discipline).
         prefill_chunk: usize,
+        /// Swap-to-host preemption: evicted victims park their KV in a
+        /// host swap space sized from the replica's pinned budget
+        /// ([`ReplicaModel::swap_pages_total`]) when the PCIe round
+        /// trip beats recompute, and every page moved charges
+        /// [`ReplicaModel::page_swap_seconds`] into the iteration —
+        /// the same per-victim policy the live engine runs. `false` =
+        /// the recompute-only discipline.
+        swap: bool,
     },
     /// Whole-batch lockstep: admit a batch, run every request to
     /// completion serially, then admit again.
@@ -111,6 +119,18 @@ pub struct SimOutcome {
     /// Copy-on-write page copies across the pool (0 outside
     /// [`DesMode::Paged`]).
     pub cow_copies: usize,
+    /// Per-request engine-iteration index (1-based, per replica) at
+    /// completion, aligned with the input trace — the tick-level pin
+    /// the DES↔live-engine equivalence tests compare. Empty outside
+    /// [`DesMode::Paged`].
+    pub finish_iters: Vec<usize>,
+    /// Sequences swapped out to host across the pool (0 unless
+    /// [`DesMode::Paged`] ran with `swap`).
+    pub swap_outs: usize,
+    /// Sequences resumed from host swap across the pool.
+    pub swap_ins: usize,
+    /// KV pages moved across PCIe, both directions.
+    pub swap_pages: usize,
 }
 
 impl SimOutcome {
@@ -222,8 +242,8 @@ pub fn simulate_mode(
 ) -> SimOutcome {
     match mode {
         DesMode::Continuous => simulate(replicas, trace),
-        DesMode::Paged { page_tokens, prefill_chunk } => {
-            simulate_paged(replicas, trace, page_tokens, prefill_chunk)
+        DesMode::Paged { page_tokens, prefill_chunk, swap } => {
+            simulate_paged(replicas, trace, page_tokens, prefill_chunk, swap)
         }
         DesMode::Lockstep => simulate_lockstep(replicas, trace),
     }
@@ -328,6 +348,10 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         preemptions: 0,
         prefix_hit_tokens: 0,
         cow_copies: 0,
+        finish_iters: Vec::new(),
+        swap_outs: 0,
+        swap_ins: 0,
+        swap_pages: 0,
     }
 }
 
@@ -495,6 +519,10 @@ pub fn simulate_lockstep(replicas: &[ReplicaModel], trace: &[SimRequest]) -> Sim
         preemptions: 0,
         prefix_hit_tokens: 0,
         cow_copies: 0,
+        finish_iters: Vec::new(),
+        swap_outs: 0,
+        swap_ins: 0,
+        swap_pages: 0,
     }
 }
 
@@ -514,6 +542,7 @@ pub fn simulate_paged(
     trace: &[SimRequest],
     page_tokens: usize,
     prefill_chunk: usize,
+    swap: bool,
 ) -> SimOutcome {
     assert!(!replicas.is_empty(), "simulate() with no replicas");
     let page_tokens = page_tokens.max(1);
@@ -562,12 +591,18 @@ pub fn simulate_paged(
         busy: bool,
         busy_time: f64,
         backlog_tokens: f64,
+        /// Seconds per KV page moved across PCIe (swap accounting).
+        swap_s_per_page: f64,
+        /// Iterations started (the tick counter finish_iters records).
+        iters: usize,
     }
 
     /// Plan and launch one iteration: the tick charges one decode
     /// iteration at the planned batch plus the prefill latency of the
     /// tick's chunks (prefix-claimed tokens never appear in a chunk
-    /// and therefore cost nothing — the engine's fast path).
+    /// and therefore cost nothing — the engine's fast path) plus the
+    /// PCIe time of every KV page the plan swapped in either
+    /// direction.
     fn start_iter(
         rep: &mut Rep<'_>,
         ri: usize,
@@ -581,15 +616,18 @@ pub fn simulate_paged(
             rep.inflight.clear();
             return;
         }
+        rep.iters += 1;
         let prefill_cost: f64 = plan
             .prefill
             .iter()
             .map(|c| rep.model.prefill_latency(c.len as f64))
             .sum();
+        let swap_cost = (plan.swap_out_pages() + plan.swap_in_pages()) as f64
+            * rep.swap_s_per_page;
         rep.inflight = plan.producers();
         let iter = rep.model.decode_iteration(plan.batch())
             / rep.model.pp_capacity_factor;
-        let dt = iter + prefill_cost;
+        let dt = iter + prefill_cost + swap_cost;
         rep.busy = true;
         rep.busy_time += dt;
         *seq += 1;
@@ -604,6 +642,15 @@ pub fn simulate_paged(
                 m.max_batch.max(1),
             );
             sched.set_prefill_chunk(prefill_chunk);
+            if swap {
+                sched.set_preemption(PreemptionConfig {
+                    mode: PreemptionMode::Swap,
+                    swap_pages: m.swap_pages_total(page_tokens),
+                    prefill_s_per_token: m.prefill_seconds_per_token(),
+                    swap_s_per_page: m.page_swap_seconds(page_tokens),
+                    page_bytes: m.kv_page_bytes(page_tokens),
+                });
+            }
             Rep {
                 model: m,
                 sched,
@@ -611,6 +658,8 @@ pub fn simulate_paged(
                 busy: false,
                 busy_time: 0.0,
                 backlog_tokens: 0.0,
+                swap_s_per_page: m.page_swap_seconds(page_tokens),
+                iters: 0,
             }
         })
         .collect();
@@ -624,6 +673,7 @@ pub fn simulate_paged(
 
     let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
     let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut finish_iters: Vec<usize> = vec![0; trace.len()];
     let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
     let mut completed = 0usize;
     let mut now = 0.0f64;
@@ -660,6 +710,7 @@ pub fn simulate_paged(
                         let uid = id as usize;
                         latencies_by_id[uid] = now - trace[uid].arrival;
                         completions[uid] = now;
+                        finish_iters[uid] = rep.iters;
                         completion_order.push(uid);
                         completed += 1;
                     }
@@ -695,6 +746,10 @@ pub fn simulate_paged(
             .map(|r| r.sched.prefix_hit_tokens() as usize)
             .sum(),
         cow_copies: pool.iter().map(|r| r.sched.pool().cow_copies() as usize).sum(),
+        finish_iters,
+        swap_outs: pool.iter().map(|r| r.sched.swap_counts().0 as usize).sum(),
+        swap_ins: pool.iter().map(|r| r.sched.swap_counts().1 as usize).sum(),
+        swap_pages: pool.iter().map(|r| r.sched.swap_counts().2 as usize).sum(),
     }
 }
 
@@ -814,7 +869,10 @@ mod tests {
             lock.latencies[0],
             expected
         );
-        for mode in [DesMode::Continuous, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX }] {
+        for mode in [
+            DesMode::Continuous,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        ] {
             let out = simulate_mode(&pool, &trace, mode);
             assert_eq!(out.latencies.len(), 1);
             let rel = (out.latencies[0] - lock.latencies[0]).abs()
@@ -827,7 +885,11 @@ mod tests {
     fn paged_mode_tracks_pages_within_budget_and_completes() {
         let pool = vec![replica(2)];
         let trace = poisson_trace(2.0, 300, 7);
-        let out = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX });
+        let out = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        );
         assert_eq!(out.latencies.len(), 300);
         assert!(out.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
         assert!(out.peak_pages > 0, "page accounting must be live");
@@ -839,7 +901,11 @@ mod tests {
         );
         assert_eq!(out.preemptions, 0, "an amply sized pool never preempts");
         // Deterministic like the other modes.
-        let again = simulate_mode(&pool, &trace, DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX });
+        let again = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        );
         assert_eq!(out.latencies, again.latencies);
         assert_eq!(out.makespan, again.makespan);
     }
@@ -875,12 +941,12 @@ mod tests {
         let whole = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
         );
         let chunked = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: 512 },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: 512, swap: false },
         );
         let iter1 = m.decode_iteration(1) / m.pp_capacity_factor;
         let expect_whole = m.prefill_latency(2048.0) + 32.0 * iter1;
@@ -901,6 +967,76 @@ mod tests {
     }
 
     #[test]
+    fn swap_mode_beats_recompute_on_a_preemption_heavy_long_context_trace() {
+        // Long contexts at a concurrency the pool cannot hold to
+        // completion: growth must evict. Recompute-only burns a full
+        // re-prefill (and re-decode) per victim; swap pays the PCIe
+        // round trip and resumes from the checkpoint — exactly the
+        // regime the deployment level prices (§4.2).
+        let pool = vec![replica(1)];
+        let m = &pool[0];
+        // Saturate the request-count bound so page growth, not
+        // admission, is the binding constraint.
+        let n = (m.max_batch + m.max_batch / 3).max(8);
+        let trace: Vec<SimRequest> = (0..n)
+            .map(|i| SimRequest::new(i as f64 * 1e-4, 3600, 600))
+            .collect();
+        let recompute = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        );
+        let swapped = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true },
+        );
+        assert!(recompute.preemptions > 0, "the trace must be preemption-heavy");
+        assert_eq!(recompute.swap_outs, 0);
+        assert!(swapped.swap_outs > 0, "swap mode must park victims");
+        assert_eq!(swapped.swap_outs, swapped.swap_ins, "every park resumes");
+        assert!(swapped.swap_pages > 0);
+        assert_eq!(swapped.preemptions, 0, "ample host budget: no recompute fallback");
+        assert!(
+            swapped.p95() < recompute.p95(),
+            "swap p95 {} must beat recompute {}",
+            swapped.p95(),
+            recompute.p95()
+        );
+        assert!(swapped.makespan <= recompute.makespan);
+        // Both complete everything and stay within the device budget.
+        assert_eq!(swapped.latencies.len(), n);
+        assert!(swapped.peak_pages <= m.kv_pages_total(16));
+        // Deterministic like every other mode.
+        let again = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true },
+        );
+        assert_eq!(swapped.latencies, again.latencies);
+        assert_eq!(swapped.swap_outs, again.swap_outs);
+        assert_eq!(swapped.finish_iters, again.finish_iters);
+    }
+
+    #[test]
+    fn finish_iters_align_with_completions() {
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(2.0, 60, 11);
+        let out = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        );
+        assert_eq!(out.finish_iters.len(), 60);
+        assert!(out.finish_iters.iter().all(|&t| t > 0), "every request gets a tick");
+        // A request's finish tick is at least its decode length (one
+        // token per iteration).
+        for (i, r) in trace.iter().enumerate() {
+            assert!(out.finish_iters[i] >= r.output_tokens as usize);
+        }
+    }
+
+    #[test]
     fn prefix_groups_hit_shared_pages_and_cut_occupancy() {
         // A stream of requests sharing a 256-token system prompt,
         // spaced widely enough that each arrival finds its
@@ -917,7 +1053,7 @@ mod tests {
                 })
                 .collect()
         };
-        let mode = DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX };
+        let mode = DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false };
         let solo = simulate_mode(&pool, &make(0), mode);
         let shared = simulate_mode(&pool, &make(7), mode);
         assert_eq!(solo.prefix_hit_tokens, 0);

@@ -9,8 +9,11 @@ use cascadia::cluster::ClusterSpec;
 use cascadia::coordinator::server::{
     CascadeServer, ResponseJudger, ServerConfig, ServerStats, TierBackend,
 };
-use cascadia::engine::EngineConfig;
+use cascadia::engine::{
+    EngineConfig, EngineCore, PreemptionConfig, PreemptionMode, SeqId, StepBackend,
+};
 use cascadia::models::llama_cascade;
+use cascadia::parallel::ACT_RESERVE;
 use cascadia::perf::ReplicaModel;
 use cascadia::sim::{simulate_mode, DesMode, SimRequest};
 
@@ -73,6 +76,7 @@ fn continuous_and_lockstep_route_identically() {
             max_running: 8,
             prefill_chunk: usize::MAX,
             share_prefixes: true,
+            preemption: cascadia::engine::PreemptionConfig::default(),
         };
         3
     ];
@@ -102,6 +106,134 @@ fn continuous_and_lockstep_route_identically() {
     assert_eq!(cont.queue[0].admitted, 30);
 }
 
+/// Deterministic token-by-token backend for the equivalence pin.
+struct PinStep;
+
+impl StepBackend for PinStep {
+    fn prefill_chunk(&mut self, seq: SeqId, _chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        Ok(last.then_some(seq as i32))
+    }
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        Ok(seqs.iter().map(|&s| s as i32).collect())
+    }
+    fn release(&mut self, _seq: SeqId) {}
+}
+
+impl TierBackend for PinStep {
+    fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        Ok(vec![0; max_new])
+    }
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+/// A replica whose KV budget is exactly `kv_pages` pages of 16 tokens:
+/// the GPU memory is shrunk until the weights leave only that much KV
+/// room, so a handful of medium requests saturates the pool and the
+/// eviction policy actually fires.
+fn tiny_pool_replica(kv_pages: usize) -> ReplicaModel {
+    let m = &llama_cascade()[0];
+    let mut c = ClusterSpec::paper_testbed();
+    let kv_bytes = kv_pages as f64 * 16.0 * m.kv_bytes_per_token();
+    c.gpu.mem_bytes = (m.weight_bytes() + kv_bytes) / (1.0 - ACT_RESERVE);
+    // Small avg_ctx keeps the request-count clamp above the page bound
+    // so pages, not slots, are what binds.
+    ReplicaModel::new(m, &c, 1, 1, 64.0)
+}
+
+/// Drive a real [`EngineCore`] over the same all-at-once trace the
+/// paged DES serves: request 0 alone in iteration 1 (mirroring the DES
+/// arrival semantics — the first arrival starts an iteration before
+/// the rest enqueue), everything else from iteration 2. Returns
+/// (per-request finish tick, recompute preemptions, swap counts).
+fn drive_engine(
+    trace: &[SimRequest],
+    cfg: EngineConfig,
+) -> (Vec<usize>, u64, (u64, u64, u64)) {
+    let mut eng: EngineCore<usize> = EngineCore::new(Box::new(PinStep), cfg);
+    let mut finish = vec![0usize; trace.len()];
+    let prompt_of = |r: &SimRequest| -> Vec<i32> { vec![7; r.input_tokens.max(1) as usize] };
+    eng.submit(0, prompt_of(&trace[0]), trace[0].output_tokens.max(1) as usize);
+    let mut tick = 0usize;
+    let mut first = true;
+    while !eng.is_idle() {
+        tick += 1;
+        assert!(tick < 10_000, "engine failed to drain the pin trace");
+        let out = eng.step().expect("deterministic backend cannot fail");
+        for f in out.completed {
+            finish[f.payload] = tick;
+        }
+        if first {
+            // The remaining arrivals land during iteration 1, visible
+            // to the scheduler from iteration 2 on — exactly when the
+            // DES's queued arrivals are.
+            for (i, r) in trace.iter().enumerate().skip(1) {
+                eng.submit(i, prompt_of(r), r.output_tokens.max(1) as usize);
+            }
+            first = false;
+        }
+    }
+    (finish, eng.preemptions(), eng.swap_counts())
+}
+
+#[test]
+fn paged_des_and_live_engine_agree_tick_for_tick_under_both_policies() {
+    // The paged DES drives the engine's own IterationScheduler; a real
+    // EngineCore over a deterministic StepBackend must therefore make
+    // IDENTICAL decisions: same per-request finish ticks, same
+    // preemption counts, same swap counts — for the recompute-only
+    // discipline AND the swap-enabled one.
+    let rm = tiny_pool_replica(40);
+    assert!((39..=41).contains(&rm.kv_pages_total(16)));
+    assert!(rm.max_batch >= 8, "slots must not bind before pages");
+    let trace: Vec<SimRequest> = (0..8).map(|_| SimRequest::new(0.0, 193, 40)).collect();
+    for mode in [PreemptionMode::Recompute, PreemptionMode::Swap] {
+        let des = simulate_mode(
+            &[rm.clone()],
+            &trace,
+            DesMode::Paged {
+                page_tokens: 16,
+                prefill_chunk: usize::MAX,
+                swap: mode == PreemptionMode::Swap,
+            },
+        );
+        let cfg = EngineConfig {
+            pool_pages: rm.kv_pages_total(16),
+            page_tokens: 16,
+            max_running: rm.max_batch.max(1),
+            prefill_chunk: usize::MAX,
+            share_prefixes: false,
+            preemption: match mode {
+                PreemptionMode::Recompute => PreemptionConfig::default(),
+                PreemptionMode::Swap => PreemptionConfig::from_replica(&rm, 16, mode),
+            },
+        };
+        let (finish, preemptions, (outs, ins, _pages)) = drive_engine(&trace, cfg);
+        assert_eq!(
+            finish, des.finish_iters,
+            "{mode:?}: engine and DES must finish every request on the same tick"
+        );
+        assert_eq!(
+            preemptions as usize, des.preemptions,
+            "{mode:?}: preemption counts must match exactly"
+        );
+        assert_eq!(outs as usize, des.swap_outs, "{mode:?}: swap-out counts");
+        assert_eq!(ins as usize, des.swap_ins, "{mode:?}: swap-in counts");
+        match mode {
+            PreemptionMode::Recompute => {
+                assert!(des.preemptions > 0, "the tiny pool must preempt");
+                assert_eq!(des.swap_outs, 0);
+            }
+            PreemptionMode::Swap => {
+                assert!(des.swap_outs > 0, "the tiny pool must swap");
+                assert_eq!(des.swap_outs, des.swap_ins);
+                assert_eq!(des.preemptions, 0, "ample host budget: no fallback");
+            }
+        }
+    }
+}
+
 #[test]
 fn paged_des_matches_continuous_des_when_pages_never_bind() {
     // Light load on an amply provisioned replica: page-granular
@@ -116,7 +248,7 @@ fn paged_des_matches_continuous_des_when_pages_never_bind() {
     let paged = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
     );
     assert_eq!(cont.latencies.len(), paged.latencies.len());
     let rel = (paged.p95() - cont.p95()).abs() / cont.p95().max(1e-12);

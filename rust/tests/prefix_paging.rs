@@ -89,6 +89,7 @@ fn engine_drain_leaves_no_shared_residue() {
         max_running: 8,
         prefill_chunk: usize::MAX,
         share_prefixes: true,
+        preemption: cascadia::engine::PreemptionConfig::default(),
     };
     let mut e: EngineCore<usize> = EngineCore::new(Box::new(Stepper), cfg);
     let free0 = e.kv_free_pages();
@@ -120,6 +121,7 @@ fn cow_divergence_is_deterministic() {
             max_running: 8,
             prefill_chunk: usize::MAX,
             share_prefixes: true,
+            preemption: cascadia::engine::PreemptionConfig::default(),
         };
         let mut e: EngineCore<usize> = EngineCore::new(Box::new(Stepper), cfg);
         let prompt = shared_prompt(3, 0, 40, 40);
@@ -163,12 +165,12 @@ fn des_pins_chunked_prefill_to_whole_plus_interleave() {
     let whole = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
     );
     let chunked = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: 256 },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: 256, swap: false },
     );
     let iter1 = rm.decode_iteration(1) / rm.pp_capacity_factor;
     let extra_chunks = (1536f64 / 256.0).ceil() - 1.0;
@@ -247,6 +249,7 @@ fn prefix_sharing_does_not_change_routing_outcomes() {
                 max_running: 8,
                 prefill_chunk: usize::MAX,
                 share_prefixes: share,
+                preemption: cascadia::engine::PreemptionConfig::default(),
             };
             3
         ]

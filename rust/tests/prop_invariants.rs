@@ -2,6 +2,7 @@
 //! (DESIGN.md §Testing), using the in-repo `util::prop` harness.
 
 use cascadia::cluster::ClusterSpec;
+use cascadia::engine::{prompt_page_hashes, KvPool, SeqId};
 use cascadia::judge::Judger;
 use cascadia::models::{deepseek_cascade, llama_cascade};
 use cascadia::perf::Workload;
@@ -246,6 +247,108 @@ fn prop_simulator_conservation() {
         }
         if out.latencies.iter().any(|l| *l <= 0.0) {
             return Err("non-positive latency".into());
+        }
+        Ok(())
+    });
+}
+
+/// Raw KvPool soak under the full op mix — grow / claim / publish /
+/// CoW-growth / swap-out / swap-in / release on random sequences:
+/// after every op the pool's internal invariants hold (refcounts match
+/// table references, free-list closure, trie liveness, shared pages
+/// are published pages, swap space within budget), and a full release
+/// drains to zero. The scheduler-level twin lives in
+/// `rust/tests/swap_preemption.rs`.
+#[test]
+fn prop_kv_pool_swap_invariants() {
+    check_n("kv pool swap invariants", 40, |g| {
+        let page_tokens = 16usize;
+        let capacity = g.sized(8, 40).max(8);
+        let mut p = KvPool::new(capacity, page_tokens);
+        let swap_budget = g.sized(0, 32);
+        p.set_swap_capacity(swap_budget);
+        let shared_prompt: Vec<i32> = (0..64).collect();
+        let hashes = prompt_page_hashes(&shared_prompt, page_tokens);
+        let mut live: Vec<SeqId> = Vec::new();
+        let mut next: SeqId = 0;
+        for _ in 0..g.sized(15, 120).max(15) {
+            match g.int(0, 5) {
+                0 | 1 => {
+                    // New sequence: claim the shared prefix half the
+                    // time, then grow into (or past) it — CoW path.
+                    let id = next;
+                    next += 1;
+                    let claimed = if g.bool() {
+                        p.claim_prefix(id, &hashes, 64)
+                    } else {
+                        0
+                    };
+                    let want = claimed + g.sized(1, 60).max(1);
+                    if p.grow_to(id, want).is_ok() {
+                        if g.bool() {
+                            p.publish_prefix(id, &hashes);
+                        }
+                        live.push(id);
+                    } else if claimed > 0 {
+                        p.retract_claim(id);
+                    } else {
+                        p.release(id);
+                    }
+                }
+                2 => {
+                    // Grow a random live (unswapped) sequence a little.
+                    if let Some(&id) = live.get(g.int(0, 31) as usize % live.len().max(1)) {
+                        if !p.is_swapped(id) {
+                            let _ = p.grow_to(id, g.sized(1, 80).max(1));
+                        }
+                    }
+                }
+                3 => {
+                    // Swap a random live (unswapped) sequence out.
+                    if !live.is_empty() {
+                        let id = live[g.int(0, 31) as usize % live.len()];
+                        if !p.is_swapped(id) {
+                            let _ = p.swap_out(id);
+                        }
+                    }
+                }
+                4 => {
+                    // Swap a random parked sequence back in.
+                    if !live.is_empty() {
+                        let id = live[g.int(0, 31) as usize % live.len()];
+                        if p.is_swapped(id) {
+                            let _ = p.swap_in(id);
+                        }
+                    }
+                }
+                _ => {
+                    // Release a random sequence (parked or live).
+                    if !live.is_empty() {
+                        let idx = g.int(0, 31) as usize % live.len();
+                        let id = live.swap_remove(idx);
+                        p.release(id);
+                    }
+                }
+            }
+            p.validate().map_err(|e| format!("invariant: {e}"))?;
+            if p.swapped_pages() > swap_budget {
+                return Err(format!(
+                    "swap space {} over budget {swap_budget}",
+                    p.swapped_pages()
+                ));
+            }
+        }
+        for id in live.drain(..) {
+            p.release(id);
+        }
+        p.validate().map_err(|e| format!("post-drain: {e}"))?;
+        if p.in_use() != 0 || p.swapped_pages() != 0 || p.trie_len() != 0 {
+            return Err(format!(
+                "leak: in_use {} swapped {} trie {}",
+                p.in_use(),
+                p.swapped_pages(),
+                p.trie_len()
+            ));
         }
         Ok(())
     });

@@ -1,0 +1,237 @@
+//! Property-based soak of the paged KV pool + iteration scheduler
+//! under the full op mix the swap-to-host policy added: seeded random
+//! schedules of admit / grow / chunked prefill / preempt-recompute /
+//! swap-out / swap-in / cancel / retire interleaved with shared-prefix
+//! claims and CoW, with the pool's full-state invariants checked after
+//! every tick ([`KvPool::validate`]: refcount/table consistency, free
+//! list closure, trie liveness, shared⇒published, swap space within
+//! budget) and leak-freedom asserted on drain.
+
+use std::collections::{HashMap, HashSet};
+
+use cascadia::engine::{
+    prompt_page_hashes, IterationScheduler, KvPool, PreemptionConfig, PreemptionMode,
+    SeqId,
+};
+use cascadia::util::prop::{check_n, Gen};
+
+/// One randomized soak trial: build a scheduler with a random pool /
+/// chunk budget / preemption policy, drive a random interleaving of
+/// enqueues, ticks, and cancels, then drain and check for leaks.
+fn soak_trial(g: &mut Gen) -> Result<(), String> {
+    let page_tokens = *g.choose(&[8usize, 16]);
+    let pool_pages = g.sized(6, 48).max(6);
+    let max_running = g.sized(2, 12).max(2);
+    let mut s =
+        IterationScheduler::new(KvPool::new(pool_pages, page_tokens), max_running);
+    if g.bool() {
+        s.set_prefill_chunk(g.sized(1, 4).max(1) * page_tokens);
+    }
+    let swap_mode = g.bool();
+    let swap_budget = if swap_mode { g.sized(0, 64) } else { 0 };
+    s.set_preemption(PreemptionConfig {
+        mode: if swap_mode { PreemptionMode::Swap } else { PreemptionMode::Recompute },
+        swap_pages: swap_budget,
+        // Random cost rates flip the per-victim choice trial to trial
+        // (zero rates = always swap while budget remains).
+        prefill_s_per_token: if g.bool() { 0.0 } else { g.f64(1e-6, 1e-3) },
+        swap_s_per_page: if g.bool() { 0.0 } else { g.f64(1e-6, 1e-2) },
+        page_bytes: 0.0,
+    });
+
+    // A few shared prompt groups so claims/CoW/publishing happen.
+    let groups: Vec<Vec<i32>> = (0..3)
+        .map(|k| (0..96).map(|j| (k * 1000 + j) as i32).collect())
+        .collect();
+
+    let mut next_id: SeqId = 0;
+    let mut live: HashSet<SeqId> = HashSet::new();
+    let mut done: HashSet<SeqId> = HashSet::new();
+
+    let ops = g.sized(20, 160).max(20);
+    for _ in 0..ops {
+        let roll = g.int(0, 9);
+        if roll <= 2 && live.len() < 32 {
+            // Enqueue, sometimes with a shared-prefix hash chain.
+            let id = next_id;
+            next_id += 1;
+            let prompt_tokens = g.sized(4, 90).max(4);
+            let max_new = g.sized(1, 24).max(1);
+            if g.bool() {
+                let grp = g.choose(&groups).clone();
+                let prompt: Vec<i32> =
+                    grp.iter().copied().cycle().take(prompt_tokens).collect();
+                s.enqueue_shared(
+                    id,
+                    prompt_tokens,
+                    max_new,
+                    prompt_page_hashes(&prompt, page_tokens),
+                );
+            } else {
+                s.enqueue(id, prompt_tokens, max_new);
+            }
+            live.insert(id);
+        } else if roll == 3 && !live.is_empty() {
+            // Cancel a random tracked sequence — running, waiting, or
+            // parked in swap space alike must release cleanly.
+            let ids: Vec<SeqId> = live.iter().copied().collect();
+            let id = *g.choose(&ids);
+            s.retire(id);
+            live.remove(&id);
+        } else if roll == 4 {
+            // Live pool retarget (the hot-swap lever), both directions.
+            s.resize_pool(g.sized(4, 64).max(4));
+        } else {
+            // One engine tick.
+            let plan = s.next_iteration();
+            // Plan-level sanity: producers are tracked and unique.
+            let producers = plan.producers();
+            let mut seen = HashSet::new();
+            for &id in &producers {
+                if !live.contains(&id) {
+                    return Err(format!("producer {id} is not a live sequence"));
+                }
+                if !seen.insert(id) {
+                    return Err(format!("sequence {id} produced twice in one tick"));
+                }
+            }
+            for id in producers {
+                if s.advance(id) {
+                    s.retire(id);
+                    live.remove(&id);
+                    done.insert(id);
+                }
+            }
+        }
+        // Full-state invariants after EVERY op.
+        s.pool().validate().map_err(|e| format!("pool invariant: {e}"))?;
+        if s.pool().swapped_pages() > swap_budget {
+            return Err(format!(
+                "swap space over budget: {} > {swap_budget}",
+                s.pool().swapped_pages()
+            ));
+        }
+        if !swap_mode && s.n_swapped() > 0 {
+            return Err("recompute mode must never park sequences".into());
+        }
+        if s.n_seqs() != live.len() {
+            return Err(format!(
+                "scheduler tracks {} sequences but {} are live",
+                s.n_seqs(),
+                live.len()
+            ));
+        }
+    }
+
+    // Drain everything still in flight: exactly-once, no orphans, no
+    // leaked pages or swap space, trie empty, free list restored.
+    let drained = s.drain_ids();
+    let drained_set: HashSet<SeqId> = drained.iter().copied().collect();
+    if drained.len() != drained_set.len() {
+        return Err("drain returned duplicates".into());
+    }
+    if drained_set != live {
+        return Err(format!(
+            "drain returned {} ids but {} were live",
+            drained_set.len(),
+            live.len()
+        ));
+    }
+    for id in &drained_set {
+        if done.contains(id) {
+            return Err(format!("sequence {id} completed AND drained"));
+        }
+    }
+    if !s.is_idle() {
+        return Err("scheduler not idle after drain".into());
+    }
+    s.pool().validate().map_err(|e| format!("post-drain invariant: {e}"))?;
+    if s.pool().in_use() != 0 {
+        return Err(format!("page leak on drain: {} in use", s.pool().in_use()));
+    }
+    if s.pool().swapped_pages() != 0 || s.pool().swapped_seqs() != 0 {
+        return Err("swap-space leak on drain".into());
+    }
+    if s.pool().trie_len() != 0 {
+        return Err("trie leak on drain".into());
+    }
+    // The free list returns to the CURRENT capacity (resizes included):
+    // device pages held + swapped pages + free list close the books.
+    if s.pool().free_pages() != s.pool().capacity() {
+        return Err(format!(
+            "free list {} != capacity {} after drain",
+            s.pool().free_pages(),
+            s.pool().capacity()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn soak_randomized_schedules_hold_every_pool_invariant() {
+    check_n("kv+scheduler swap soak", 60, soak_trial);
+}
+
+/// Deterministic long-run churn: a tight pool, swap enabled, shared
+/// prefixes, cancels mid-flight — every sequence completes or drains
+/// exactly once and the checkpoint audit holds (swapped sequences
+/// never re-produce a token).
+#[test]
+fn tight_pool_swap_churn_is_exactly_once_and_checkpointed() {
+    let mut s = IterationScheduler::new(KvPool::new(10, 16), 8);
+    s.set_prefill_chunk(32);
+    s.set_preemption(PreemptionConfig {
+        mode: PreemptionMode::Swap,
+        swap_pages: 256,
+        prefill_s_per_token: 0.0,
+        swap_s_per_page: 0.0,
+        page_bytes: 0.0,
+    });
+    let shared: Vec<i32> = (0..64).collect();
+    let mut produced: HashMap<SeqId, usize> = HashMap::new();
+    let mut budgets: HashMap<SeqId, usize> = HashMap::new();
+    for id in 0..24u64 {
+        let len = 40 + (id as usize % 3) * 17;
+        let max_new = 6 + (id as usize % 5) * 4;
+        let prompt: Vec<i32> = shared.iter().copied().cycle().take(len).collect();
+        if id % 2 == 0 {
+            s.enqueue_shared(id, len, max_new, prompt_page_hashes(&prompt, 16));
+        } else {
+            s.enqueue(id, len, max_new);
+        }
+        budgets.insert(id, max_new);
+    }
+    let mut completed: Vec<SeqId> = Vec::new();
+    let mut iters = 0;
+    while !s.is_idle() {
+        iters += 1;
+        assert!(iters < 20_000, "churn must terminate");
+        let plan = s.next_iteration();
+        assert!(plan.preempted.is_empty(), "ample host budget: swap only");
+        for id in plan.producers() {
+            *produced.entry(id).or_insert(0) += 1;
+            if s.advance(id) {
+                s.retire(id);
+                completed.push(id);
+            }
+        }
+        s.pool().validate().unwrap();
+    }
+    assert_eq!(completed.len(), 24, "every sequence completes exactly once");
+    let unique: HashSet<SeqId> = completed.iter().copied().collect();
+    assert_eq!(unique.len(), 24);
+    for (id, n) in produced {
+        assert_eq!(
+            n, budgets[&id],
+            "seq {id}: {n} tokens produced for a {} budget — swap must checkpoint",
+            budgets[&id]
+        );
+    }
+    let (outs, ins, _) = s.swap_counts();
+    assert!(outs > 0, "the tight pool must swap");
+    assert_eq!(outs, ins);
+    assert_eq!(s.pool().in_use(), 0);
+    assert_eq!(s.pool().swapped_pages(), 0);
+    assert_eq!(s.pool().trie_len(), 0);
+    s.pool().validate().unwrap();
+}

@@ -6,20 +6,30 @@ Two baseline shapes are understood:
 
 * **ratio floors** (the committed seed baseline): top-level
   `p95_speedup`, `throughput_gain`, `prefix.page_reduction`,
-  `prefix.prefill_reduction`, `chunked.ttft_speedup` — machine-
-  independent relative wins the fresh run must not regress below
+  `prefix.prefill_reduction`, `chunked.ttft_speedup`,
+  `swap.p95_speedup`, `swap.reprefill_reduction` — machine-independent
+  relative wins the fresh run must not regress below
   `floor * (1 - RTOL)`.
-* **full report** (a captured BENCH_serving.json, e.g. from the nightly
-  artifact): additionally gates the absolute continuous-mode
-  `p95_s` (must not exceed `baseline * (1 + ATOL)`) and
-  `throughput_rps` (must not drop below `baseline * (1 - ATOL)`).
-  Absolute numbers are in *simulated* seconds (time compression undone),
-  so they are calibrated-model quantities, not raw runner wall clock —
-  still, ATOL is generous for scheduler jitter on shared runners.
+* **full report** (a captured BENCH_serving.json from the nightly
+  artifact's smoke run, committed as `--full-baseline`): additionally
+  gates the absolute continuous-mode `p95_s` (must not exceed
+  `baseline * (1 + ATOL)`) and `throughput_rps` (must not drop below
+  `baseline * (1 - ATOL)`). Absolute numbers are in *simulated*
+  seconds (time compression undone), so they are calibrated-model
+  quantities, not raw runner wall clock — still, ATOL is generous for
+  scheduler jitter on shared runners.
+
+`--full-baseline PATH` names the committed full report; a missing file
+is not an error (absolute gating simply reports "not yet baselined"),
+so the job can carry the flag before the first nightly capture is
+committed. The nightly bench-full job uploads its smoke-config run as
+the re-baselining candidate.
 
 Exit 0 = within band; exit 1 = regression (each violation printed).
 
-Usage: bench_gate.py <fresh.json> <baseline.json> [--rtol 0.25] [--atol 0.40]
+Usage: bench_gate.py <fresh.json> <baseline.json>
+           [--full-baseline BENCH_baseline_full.json]
+           [--rtol 0.25] [--atol 0.40]
 """
 
 import argparse
@@ -46,6 +56,16 @@ def derived_ratios(report: dict) -> dict:
     v = ratio_of(report, "chunked.ttft_speedup")
     if v is not None:
         out["chunked.ttft_speedup"] = float(v)
+    v = ratio_of(report, "swap.p95_speedup")
+    if v is not None:
+        out["swap.p95_speedup"] = float(v)
+    swap = report.get("swap", {})
+    if "reprefill_reduction" in swap:
+        out["swap.reprefill_reduction"] = float(swap["reprefill_reduction"])
+    elif swap.get("swap_prefill_tokens"):
+        out["swap.reprefill_reduction"] = swap["recompute_prefill_tokens"] / max(
+            swap["swap_prefill_tokens"], 1
+        )
     prefix = report.get("prefix", {})
     if "page_reduction" in prefix:
         out["prefix.page_reduction"] = float(prefix["page_reduction"])
@@ -66,6 +86,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh")
     ap.add_argument("baseline")
+    ap.add_argument(
+        "--full-baseline",
+        default=None,
+        help="committed full BENCH_serving.json for absolute gating"
+        " (missing file = not yet baselined, skipped with a note)",
+    )
     ap.add_argument("--rtol", type=float, default=0.25, help="ratio-floor tolerance")
     ap.add_argument("--atol", type=float, default=0.40, help="absolute tolerance")
     args = ap.parse_args()
@@ -74,6 +100,17 @@ def main() -> int:
         fresh = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
+    full = None
+    if args.full_baseline:
+        try:
+            with open(args.full_baseline) as f:
+                full = json.load(f)
+        except FileNotFoundError:
+            print(
+                f"note: no committed full baseline at {args.full_baseline}"
+                " — absolute p95/throughput gating not yet enabled"
+                " (commit the nightly artifact to turn it on)"
+            )
 
     failures = []
 
@@ -81,7 +118,7 @@ def main() -> int:
     for flag in ("win", "occupancy_ok"):
         if fresh.get(flag) is not True:
             failures.append(f"fresh report flag '{flag}' is not true")
-    for section in ("prefix", "chunked"):
+    for section in ("prefix", "chunked", "swap"):
         if fresh.get(section, {}).get("win") is not True:
             failures.append(f"fresh report flag '{section}.win' is not true")
 
@@ -101,8 +138,10 @@ def main() -> int:
         else:
             print(f"ok  {key}: fresh {got:.3f} >= floor {bound:.3f}")
 
-    # Absolute p95 / throughput when the baseline carries a full report.
-    base_cont = base.get("continuous", {})
+    # Absolute p95 / throughput when a full report is available: the
+    # committed --full-baseline wins, else a full-shaped primary
+    # baseline (backward compatible).
+    base_cont = (full or base).get("continuous", {})
     fresh_cont = fresh.get("continuous", {})
     if "p95_s" in base_cont:
         cap = base_cont["p95_s"] * (1.0 + args.atol)
