@@ -34,6 +34,7 @@ use crate::metrics::AdaptCounters;
 use crate::models::ModelSpec;
 use crate::sched::outer::{self, OuterOptions};
 use crate::sched::plan::CascadePlan;
+use crate::util::sync::LockExt;
 use crate::workload::{Request, TraceStats};
 
 use super::cache::{CacheConfig, PlanCache, RegimeKey};
@@ -163,13 +164,13 @@ impl AdaptController {
     /// Feed one admitted request into the monitor; kicks off the
     /// re-schedule pipeline when a shift is detected.
     pub fn observe(self: &Arc<Self>, req: Request) {
-        let drift = self.monitor.lock().unwrap().observe(req);
+        let drift = self.monitor.plock().observe(req);
         let Some(stats) = drift else { return };
-        self.counters.lock().unwrap().drifts_detected += 1;
+        self.counters.plock().drifts_detected += 1;
 
         // Gear cache first: a known regime swaps in without touching
         // the scheduler.
-        let cached = self.cache.lock().unwrap().get(&stats).cloned();
+        let cached = self.cache.plock().get(&stats).cloned();
         if let Some(plan) = cached {
             self.apply(stats, plan, true);
             return;
@@ -180,19 +181,19 @@ impl AdaptController {
         // serving) before retrying with a fresh window.
         let key = RegimeKey::of(&stats, &self.config.cache);
         {
-            let mut failed = self.failed_regimes.lock().unwrap();
+            let mut failed = self.failed_regimes.plock();
             if let Some(remaining) = failed.get_mut(&key) {
                 *remaining -= 1;
                 if *remaining == 0 {
                     failed.remove(&key);
                 }
                 drop(failed);
-                self.monitor.lock().unwrap().abort_reschedule();
+                self.monitor.plock().abort_reschedule();
                 return;
             }
         }
 
-        let window: Vec<Request> = self.monitor.lock().unwrap().window_requests().to_vec();
+        let window: Vec<Request> = self.monitor.plock().window_requests().to_vec();
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         if self.config.synchronous {
             self.run_reschedule(stats, window);
@@ -205,7 +206,7 @@ impl AdaptController {
     fn run_reschedule(&self, stats: TraceStats, window: Vec<Request>) {
         match self.rescheduler.plan_for(&window) {
             Ok(plan) => {
-                self.cache.lock().unwrap().insert(&stats, plan.clone());
+                self.cache.plock().insert(&stats, plan.clone());
                 self.apply(stats, plan, false);
             }
             Err(_) => {
@@ -213,13 +214,13 @@ impl AdaptController {
                 // cooldown (skip the next few triggers in this bucket)
                 // so the same unschedulable mix doesn't re-run the
                 // sweep every min_samples requests.
-                let mut failed = self.failed_regimes.lock().unwrap();
+                let mut failed = self.failed_regimes.plock();
                 if failed.len() >= 64 {
                     failed.clear();
                 }
                 failed.insert(RegimeKey::of(&stats, &self.config.cache), 3);
                 drop(failed);
-                self.monitor.lock().unwrap().abort_reschedule();
+                self.monitor.plock().abort_reschedule();
             }
         }
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -245,24 +246,24 @@ impl AdaptController {
         match built.and_then(|cfg| self.control.apply_plan_config(&plan, cfg)) {
             Ok(()) => {
                 let reschedules = {
-                    let mut m = self.monitor.lock().unwrap();
+                    let mut m = self.monitor.plock();
                     m.rebased(stats);
                     m.reschedules
                 };
                 {
-                    let mut c = self.counters.lock().unwrap();
+                    let mut c = self.counters.plock();
                     c.reschedules = reschedules;
                     c.hot_swaps += 1;
                     if from_cache {
                         c.plan_cache_hits += 1;
                     }
                 }
-                *self.last_plan.lock().unwrap() = Some(plan.clone());
+                *self.last_plan.plock() = Some(plan.clone());
                 if let Some(hook) = &self.on_swap {
                     hook(&plan);
                 }
             }
-            Err(_) => self.monitor.lock().unwrap().abort_reschedule(),
+            Err(_) => self.monitor.plock().abort_reschedule(),
         }
     }
 
@@ -270,12 +271,12 @@ impl AdaptController {
     /// queued; the server-side count of swaps actually applied is
     /// `ServeControl::hot_swaps`.
     pub fn counters(&self) -> AdaptCounters {
-        *self.counters.lock().unwrap()
+        *self.counters.plock()
     }
 
     /// The most recently swapped-in plan, if any.
     pub fn last_plan(&self) -> Option<CascadePlan> {
-        self.last_plan.lock().unwrap().clone()
+        self.last_plan.plock().clone()
     }
 
     /// Block until no background re-schedule is running (or `timeout`

@@ -33,6 +33,7 @@ use crate::sched::outer::{optimize, select_plan, OuterOptions};
 use crate::sched::plan::CascadePlan;
 use crate::util::json::Json;
 use crate::util::stats;
+use crate::util::sync::LockExt;
 use crate::workload::{
     estimate_stats, generate, generate_phased, paper_trace, PhasedTrace, PhasedTraceSpec,
 };
@@ -282,7 +283,7 @@ struct SimBackend {
 
 impl TierBackend for SimBackend {
     fn generate(&mut self, _prompt: &[i32], _max_new: usize) -> Result<Vec<i32>> {
-        let secs = self.speeds.lock().unwrap()[self.tier] / self.time_scale;
+        let secs = self.speeds.plock()[self.tier] / self.time_scale;
         std::thread::sleep(Duration::from_secs_f64(secs.clamp(1e-5, 5.0)));
         Ok(vec![self.tier as i32])
     }
@@ -473,7 +474,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     let controller = Arc::new(
         AdaptController::new(adapt_cfg, rescheduler, baseline, Arc::clone(&control))
             .with_on_swap(move |new_plan| {
-                *speeds_swap.lock().unwrap() =
+                *speeds_swap.plock() =
                     tier_speeds(new_plan, &cascade_swap, &cluster_swap);
             }),
     );

@@ -1,0 +1,298 @@
+//! A hand-rolled token-level Rust lexer for `cascadia-lint`.
+//!
+//! This is NOT a full Rust lexer — it is exactly the subset the lint
+//! rules need: it must never mis-classify a comment, string, or char
+//! literal as code (so lint patterns inside fixtures and messages stay
+//! invisible), and it must keep idents, punctuation, and literals
+//! apart with correct line numbers. Handled: line comments, nested
+//! block comments, strings with escapes, raw (and byte/raw-byte)
+//! strings with `#` fences, raw identifiers, char-literal vs lifetime
+//! disambiguation, numeric literals with float detection, and
+//! greedy longest-match multi-character operators.
+//!
+//! `scripts/cascadia_lint_mirror.py` re-implements this lexer
+//! one-to-one for toolchain-free environments; keep the two in
+//! lockstep.
+
+/// Token classification — only as fine-grained as the rules require.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    /// Any string literal (contents dropped — never linted).
+    Str,
+    /// Any char or byte-char literal (contents dropped).
+    Char,
+    Int,
+    /// Distinguished from [`Kind::Int`] for the `f64 ==` rule.
+    Float,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A `//` line comment (directives never live in block comments).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Multi-character operators, longest first so greedy matching is a
+/// simple linear scan.
+const MULTI_OPS: [&str; 24] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&",
+    "||", "..", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens plus the line comments (for directive
+/// extraction). Never fails: unrecognized bytes become 1-char puncts.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let text_of = |from: usize, to: usize| -> String { chars[from..to].iter().collect() };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: text_of(i, j) });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw strings / raw byte strings (`r"`, `r#"`, `br#"`) and raw
+        // identifiers (`r#ident`).
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if chars[j] == 'b' && j + 1 < n && chars[j + 1] == 'r' {
+                j += 1;
+            }
+            if chars[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let start_line = line;
+                    k += 1;
+                    while k < n {
+                        if chars[k] == '\n' {
+                            line += 1;
+                            k += 1;
+                        } else if chars[k] == '"' && fence_closes(&chars, k, hashes) {
+                            k += 1 + hashes;
+                            break;
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    toks.push(Token { kind: Kind::Str, text: String::new(), line: start_line });
+                    i = k;
+                    continue;
+                }
+                if hashes == 1 && k < n && is_ident_start(chars[k]) {
+                    let mut m = k;
+                    while m < n && is_ident_char(chars[m]) {
+                        m += 1;
+                    }
+                    toks.push(Token { kind: Kind::Ident, text: text_of(k, m), line });
+                    i = m;
+                    continue;
+                }
+            }
+        }
+        // Byte char literal b'x'.
+        if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+            let mut j = i + 2;
+            if j < n && chars[j] == '\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && chars[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Char, text: String::new(), line });
+            i = j + 1;
+            continue;
+        }
+        // Plain (or byte) string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && chars[i + 1] == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let start_line = line;
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Str, text: String::new(), line: start_line });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let mut j = i + 3; // skip the escaped char
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Token { kind: Kind::Char, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                toks.push(Token { kind: Kind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Lifetime, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Ident, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        // Numeric literal. A `.` is consumed only when a digit follows
+        // (so `0..n` and tuple indexing stay separate tokens); exponents
+        // and a consumed `.` mark floats, except in hex literals.
+        if c.is_ascii_digit() {
+            let is_hex = c == '0' && i + 1 < n && (chars[i + 1] == 'x' || chars[i + 1] == 'X');
+            let mut is_float = false;
+            let mut j = i;
+            while j < n {
+                let d = chars[j];
+                if d.is_alphanumeric() || d == '_' {
+                    if !is_hex
+                        && (d == 'e' || d == 'E')
+                        && j + 1 < n
+                        && (chars[j + 1] == '+' || chars[j + 1] == '-')
+                    {
+                        is_float = true;
+                        j += 2;
+                        continue;
+                    }
+                    j += 1;
+                } else if d == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    is_float = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let text = text_of(i, j);
+            if !is_hex && (text.contains('e') || text.contains('E')) && !text.contains('x') {
+                is_float = true;
+            }
+            let kind = if is_float { Kind::Float } else { Kind::Int };
+            toks.push(Token { kind, text, line });
+            i = j;
+            continue;
+        }
+        // Punctuation: greedy longest-match against the operator table.
+        let mut matched: Option<&str> = None;
+        for op in MULTI_OPS {
+            if starts_with_at(&chars, i, op) {
+                matched = Some(op);
+                break;
+            }
+        }
+        if let Some(op) = matched {
+            toks.push(Token { kind: Kind::Punct, text: op.to_string(), line });
+            i += op.chars().count();
+        } else {
+            toks.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    (toks, comments)
+}
+
+/// Does `"` at `chars[k]` close a raw string fenced by `hashes` hashes?
+fn fence_closes(chars: &[char], k: usize, hashes: usize) -> bool {
+    if k + hashes >= chars.len() {
+        return false;
+    }
+    chars[k + 1..=k + hashes].iter().all(|&h| h == '#')
+}
+
+fn starts_with_at(chars: &[char], i: usize, op: &str) -> bool {
+    let ops: Vec<char> = op.chars().collect();
+    if i + ops.len() > chars.len() {
+        return false;
+    }
+    chars[i..i + ops.len()] == ops[..]
+}

@@ -1,0 +1,514 @@
+//! The `cascadia-lint` rules: a guard-tracking walk over the token
+//! stream plus per-file scopes and the allow-annotation grammar.
+//!
+//! Four rule families (see `DESIGN.md` §"Static analysis & concurrency
+//! discipline" for the full contract):
+//!
+//! * `lock-order` — nested acquisitions must move strictly down
+//!   [`LOCK_HIERARCHY`]; same-lock re-entry and statement-adjacent
+//!   re-acquisition (lock churn) are flagged too.
+//! * `blocking-under-lock` — no `recv`/`recv_timeout`/`join`/`sleep`/
+//!   `generate`/`step`/`prefill_chunk` call while any guard is held
+//!   (`Condvar::wait` is exempt: it atomically releases the mutex).
+//! * `hot-path-unwrap` — no `.unwrap()`/`.expect()` in `engine/` and
+//!   `coordinator/` non-test code.
+//! * `determinism` — no `HashMap`/`HashSet`, `Instant::now`/
+//!   `SystemTime::now`, or float-literal `==`/`!=` in `sim/`, `sched/`,
+//!   `engine/scheduler.rs` non-test code (the DES↔engine equivalence
+//!   pins replay these modules).
+//!
+//! Suppression: a line comment carrying the `cascadia-lint` marker
+//! (tool name, then a colon) followed by `allow(<rule>, reason =
+//! "...")`, placed on the violating line or the line above. The reason
+//! is mandatory and non-empty; a malformed directive is itself
+//! reported (rule `bad-annotation`) and cannot be suppressed.
+//!
+//! The tracker is intentionally lexical: guards are recognized by the
+//! `.lock()`/`.read()`/`.write()` (and poison-panicking `plock`/
+//! `pread`/`pwrite`) call shape with empty parens, bound to a scope,
+//! a `match`/`if let` block, or the enclosing statement (temporaries),
+//! and released by `}` / `;` / `drop(var)`. It does not chase calls
+//! across functions — the hierarchy is the cross-function contract.
+//!
+//! `scripts/cascadia_lint_mirror.py` re-implements these rules
+//! one-to-one for toolchain-free environments; keep the two in
+//! lockstep.
+
+use super::lexer::{lex, Comment, Kind, Token};
+
+/// Public rule IDs, valid in `allow(...)` directives.
+pub const RULES: [&str; 4] =
+    ["lock-order", "blocking-under-lock", "hot-path-unwrap", "determinism"];
+
+/// Reported when an `allow` directive itself is malformed. Not a valid
+/// `allow` target — annotation errors are unsuppressable.
+pub const BAD_ANNOTATION: &str = "bad-annotation";
+
+/// The declared lock hierarchy, outermost tier first: a thread holding
+/// a lock from tier `i` may only take locks from tiers `> i`. Deleting
+/// this declaration makes [`super::lint_tree`] (and the tree-clean
+/// test) fail — the hierarchy is load-bearing, not documentation.
+pub const LOCK_HIERARCHY: &[&[&str]] =
+    &[&["pending"], &["batcher"], &["queue_time", "first_tokens"], &["policy"]];
+
+/// Guard-producing method names (empty-parens call shape). The p-forms
+/// are `util::sync`'s poison-panicking wrappers.
+const ACQUIRE_METHODS: [&str; 6] = ["lock", "read", "write", "plock", "pread", "pwrite"];
+
+/// Calls that block (or can block arbitrarily long) — illegal while any
+/// guard is held. `wait` is deliberately absent: `Condvar::wait(guard)`
+/// atomically releases the mutex and is the blessed blocking pattern.
+const BLOCKING_CALLS: [&str; 7] =
+    ["recv", "recv_timeout", "join", "sleep", "generate", "step", "prefill_chunk"];
+
+const UNWRAP_METHODS: [&str; 2] = ["unwrap", "expect"];
+
+/// One lint finding in one file.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule ID (one of [`RULES`] or [`BAD_ANNOTATION`]).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Is `rel` (src-relative, `/`-separated) under the unwrap ban?
+fn unwrap_scope(rel: &str) -> bool {
+    rel.starts_with("engine/") || rel.starts_with("coordinator/")
+}
+
+/// Is `rel` inside the determinism-pinned modules?
+fn determinism_scope(rel: &str) -> bool {
+    rel.starts_with("sim/") || rel.starts_with("sched/") || rel == "engine/scheduler.rs"
+}
+
+/// Tier index of `name` in [`LOCK_HIERARCHY`], if declared.
+pub fn hierarchy_rank(name: &str) -> Option<usize> {
+    LOCK_HIERARCHY.iter().position(|tier| tier.contains(&name))
+}
+
+/// Map a receiver ident onto its declared lock name: exact match, else
+/// strip an `_ref`/`_arc` suffix (borrowed/shared handles to the same
+/// lock, e.g. `policy_ref`).
+fn normalize_lock_name(name: &str) -> String {
+    if hierarchy_rank(name).is_some() {
+        return name.to_string();
+    }
+    for suffix in ["_ref", "_arc"] {
+        if let Some(stripped) = name.strip_suffix(suffix) {
+            if hierarchy_rank(stripped).is_some() {
+                return stripped.to_string();
+            }
+        }
+    }
+    name.to_string()
+}
+
+/// Extract `allow` grants from the line comments. A grant covers the
+/// directive's own line and the next line. Malformed directives come
+/// back as [`BAD_ANNOTATION`] violations.
+fn parse_directives(comments: &[Comment]) -> (Vec<(usize, &'static str)>, Vec<Violation>) {
+    let mut allows: Vec<(usize, &'static str)> = Vec::new();
+    let mut errors: Vec<Violation> = Vec::new();
+    for c in comments {
+        let Some(pos) = c.text.find("cascadia-lint:") else { continue };
+        let rest = c.text[pos + "cascadia-lint:".len()..].trim();
+        match parse_allow(rest) {
+            Ok((rule, _reason)) => {
+                allows.push((c.line, rule));
+                allows.push((c.line + 1, rule));
+            }
+            Err(msg) => errors.push(Violation {
+                line: c.line,
+                rule: BAD_ANNOTATION,
+                message: msg.to_string(),
+            }),
+        }
+    }
+    (allows, errors)
+}
+
+/// Grammar: `allow(<rule>, reason = "<non-empty>")`. Returns the
+/// canonical rule ID and the reason.
+fn parse_allow(rest: &str) -> Result<(&'static str, &str), &'static str> {
+    let inner = rest
+        .strip_prefix("allow(")
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or("directive must be exactly `allow(<rule>, reason = \"...\")`")?;
+    let comma = inner.find(',').ok_or("missing `, reason = \"...\"`")?;
+    let rule_txt = inner[..comma].trim();
+    let rule = *RULES
+        .iter()
+        .find(|r| **r == rule_txt)
+        .ok_or("unknown rule in allow(...)")?;
+    let tail = inner[comma + 1..].trim();
+    let tail = tail.strip_prefix("reason").ok_or("missing `reason`")?.trim_start();
+    let tail = tail.strip_prefix('=').ok_or("missing `=` after `reason`")?.trim_start();
+    let reason = tail
+        .strip_prefix('"')
+        .and_then(|t| t.strip_suffix('"'))
+        .ok_or("reason must be a double-quoted string")?;
+    if reason.trim().is_empty() {
+        return Err("reason must not be empty");
+    }
+    Ok((rule, reason))
+}
+
+/// A live lock guard as the tracker models it.
+struct Guard {
+    /// Normalized receiver name (None when the receiver is not a plain
+    /// ident, e.g. a call result).
+    name: Option<String>,
+    rank: Option<usize>,
+    /// `let` binding, when known — released by `drop(var)`.
+    var: Option<String>,
+    /// Brace depth the guard lives at; released when that block closes.
+    depth: usize,
+    /// Temporary (un-bound) guard: released at the statement boundary.
+    temp: bool,
+    line: usize,
+}
+
+/// `toks[j]`, treating negative and out-of-range indices as absent.
+fn tok_at(toks: &[Token], j: i64) -> Option<&Token> {
+    if j < 0 {
+        None
+    } else {
+        toks.get(j as usize)
+    }
+}
+
+fn is_punct(t: Option<&Token>, s: &str) -> bool {
+    matches!(t, Some(t) if t.kind == Kind::Punct && t.text == s)
+}
+
+fn ident_text<'a>(t: Option<&'a Token>) -> Option<&'a str> {
+    match t {
+        Some(t) if t.kind == Kind::Ident => Some(&t.text),
+        _ => None,
+    }
+}
+
+/// `j` points just past an acquisition's `()`; skip `.unwrap()` /
+/// `.expect(...)` chain links, returning the next token's index.
+fn skip_unwrap_chain(toks: &[Token], mut j: i64) -> i64 {
+    loop {
+        let is_link = is_punct(tok_at(toks, j), ".")
+            && matches!(ident_text(tok_at(toks, j + 1)), Some(t) if UNWRAP_METHODS.contains(&t))
+            && is_punct(tok_at(toks, j + 2), "(");
+        if !is_link {
+            return j;
+        }
+        let mut pdepth = 1usize;
+        let mut k = (j + 3) as usize;
+        while k < toks.len() && pdepth > 0 {
+            if toks[k].kind == Kind::Punct && toks[k].text == "(" {
+                pdepth += 1;
+            } else if toks[k].kind == Kind::Punct && toks[k].text == ")" {
+                pdepth -= 1;
+            }
+            k += 1;
+        }
+        j = k as i64;
+    }
+}
+
+/// Run every rule over one file's token stream (annotation filtering
+/// happens in [`lint_source`]).
+fn lint_tokens(rel: &str, toks: &[Token]) -> Vec<Violation> {
+    let mut out: Vec<Violation> = Vec::new();
+    let in_unwrap = unwrap_scope(rel);
+    let in_det = determinism_scope(rel);
+
+    let mut depth = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    // Brace depths of `#[test]`/`#[cfg(test)]`-gated blocks we are in.
+    let mut test_stack: Vec<usize> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_let_var: Option<String> = None;
+    // Lock names temp-acquired by the previous statement (churn rule).
+    let mut last_stmt: Option<(Vec<String>, usize)> = None;
+    let mut cur_stmt: Vec<String> = Vec::new();
+
+    let mut i: i64 = 0;
+    while (i as usize) < toks.len() {
+        let t = &toks[i as usize];
+        let in_test = !test_stack.is_empty();
+
+        // Attributes: skip their tokens entirely; an ident `test`
+        // anywhere inside an outer attribute gates the next block.
+        if t.kind == Kind::Punct && t.text == "#" {
+            let inner = is_punct(tok_at(toks, i + 1), "!");
+            let open_at = if inner { i + 2 } else { i + 1 };
+            if is_punct(tok_at(toks, open_at), "[") {
+                let mut bdepth = 1usize;
+                let mut k = (open_at + 1) as usize;
+                let mut saw_test = false;
+                while k < toks.len() && bdepth > 0 {
+                    let tk = &toks[k];
+                    if tk.kind == Kind::Punct && tk.text == "[" {
+                        bdepth += 1;
+                    } else if tk.kind == Kind::Punct && tk.text == "]" {
+                        bdepth -= 1;
+                    } else if tk.kind == Kind::Ident && tk.text == "test" {
+                        saw_test = true;
+                    }
+                    k += 1;
+                }
+                if saw_test && !inner {
+                    pending_test = true;
+                }
+                i = k as i64;
+                continue;
+            }
+        }
+
+        if t.kind == Kind::Punct && t.text == "{" {
+            depth += 1;
+            if pending_test {
+                test_stack.push(depth);
+                pending_test = false;
+            }
+            last_stmt = None;
+            cur_stmt.clear();
+        } else if t.kind == Kind::Punct && t.text == "}" {
+            guards.retain(|g| g.depth < depth);
+            if test_stack.last() == Some(&depth) {
+                test_stack.pop();
+            }
+            depth = depth.saturating_sub(1);
+            last_stmt = None;
+            cur_stmt.clear();
+        } else if t.kind == Kind::Punct && t.text == ";" {
+            guards.retain(|g| !(g.temp && g.depth == depth));
+            last_stmt = Some((std::mem::take(&mut cur_stmt), depth));
+            pending_let_var = None;
+            pending_test = false;
+        } else if t.kind == Kind::Punct && t.text == "=>" {
+            last_stmt = None;
+            cur_stmt.clear();
+        } else if t.kind == Kind::Ident && t.text == "let" {
+            let mut nxt = tok_at(toks, i + 1);
+            if matches!(ident_text(nxt), Some("mut")) {
+                nxt = tok_at(toks, i + 2);
+            }
+            pending_let_var = ident_text(nxt).map(|s| s.to_string());
+        } else if t.kind == Kind::Ident
+            && t.text == "drop"
+            && is_punct(tok_at(toks, i + 1), "(")
+            && ident_text(tok_at(toks, i + 2)).is_some()
+            && is_punct(tok_at(toks, i + 3), ")")
+        {
+            let var = ident_text(tok_at(toks, i + 2)).map(|s| s.to_string());
+            guards.retain(|g| g.var != var);
+        }
+
+        // Lock acquisition: `.lock()` etc with EMPTY parens (the std
+        // Mutex/RwLock methods take no arguments, which is what keeps
+        // io-style `read(buf)`/`write(buf)` calls out).
+        if t.kind == Kind::Punct
+            && t.text == "."
+            && matches!(
+                ident_text(tok_at(toks, i + 1)),
+                Some(m) if ACQUIRE_METHODS.contains(&m)
+            )
+            && is_punct(tok_at(toks, i + 2), "(")
+            && is_punct(tok_at(toks, i + 3), ")")
+            && !in_test
+        {
+            let line = tok_at(toks, i + 1).map_or(t.line, |m| m.line);
+            let name: Option<String> = ident_text(tok_at(toks, i - 1)).map(normalize_lock_name);
+            let rank = name.as_deref().and_then(hierarchy_rank);
+            // (a) same-lock re-entry while a guard is live.
+            if let Some(n) = name.as_deref() {
+                if let Some(g) = guards.iter().find(|g| g.name.as_deref() == Some(n)) {
+                    out.push(Violation {
+                        line,
+                        rule: "lock-order",
+                        message: format!(
+                            "`{n}` re-acquired while already held (guard taken on \
+                             line {}): deadlock",
+                            g.line
+                        ),
+                    });
+                }
+            }
+            // (b) nesting must move strictly down the hierarchy.
+            if let (Some(n), Some(r)) = (name.as_deref(), rank) {
+                if let Some(g) = guards.iter().find(|g| {
+                    g.rank.is_some_and(|gr| r <= gr) && g.name.as_deref() != Some(n)
+                }) {
+                    out.push(Violation {
+                        line,
+                        rule: "lock-order",
+                        message: format!(
+                            "`{n}` (tier {r}) acquired while holding `{}` (tier {}, \
+                             line {}): out of declared hierarchy order",
+                            g.name.as_deref().unwrap_or("<unnamed>"),
+                            g.rank.unwrap_or(0),
+                            g.line
+                        ),
+                    });
+                }
+            }
+            // Binding shape decides the guard's lifetime.
+            let j = skip_unwrap_chain(toks, i + 4);
+            if is_punct(tok_at(toks, j), ";") {
+                guards.push(Guard {
+                    name: name.clone(),
+                    rank,
+                    var: pending_let_var.clone(),
+                    depth,
+                    temp: false,
+                    line,
+                });
+            } else if is_punct(tok_at(toks, j), "{") {
+                guards.push(Guard {
+                    name: name.clone(),
+                    rank,
+                    var: None,
+                    depth: depth + 1,
+                    temp: false,
+                    line,
+                });
+            } else {
+                // (c) statement-adjacent churn: the previous statement
+                // took and dropped this same lock.
+                if let Some(n) = name.as_deref() {
+                    if let Some((locks, d)) = &last_stmt {
+                        if *d == depth && locks.iter().any(|l| l == n) {
+                            out.push(Violation {
+                                line,
+                                rule: "lock-order",
+                                message: format!(
+                                    "`{n}` re-acquired immediately after the previous \
+                                     statement released it: take one guard and reuse it"
+                                ),
+                            });
+                        }
+                    }
+                    cur_stmt.push(n.to_string());
+                }
+                guards.push(Guard {
+                    name: name.clone(),
+                    rank,
+                    var: None,
+                    depth,
+                    temp: true,
+                    line,
+                });
+            }
+        }
+
+        // Blocking call while any guard is held.
+        if t.kind == Kind::Ident
+            && BLOCKING_CALLS.contains(&t.text.as_str())
+            && is_punct(tok_at(toks, i + 1), "(")
+            && !guards.is_empty()
+            && !in_test
+        {
+            let held: Vec<String> = guards
+                .iter()
+                .map(|g| match g.name.as_deref() {
+                    Some(n) => format!("`{n}`"),
+                    None => "<unnamed>".to_string(),
+                })
+                .collect();
+            out.push(Violation {
+                line: t.line,
+                rule: "blocking-under-lock",
+                message: format!(
+                    "`{}()` called while holding {}: a blocked worker starves every \
+                     other thread contending for the guard",
+                    t.text,
+                    held.join(", ")
+                ),
+            });
+        }
+
+        // Hot-path unwrap/expect ban.
+        if in_unwrap
+            && !in_test
+            && t.kind == Kind::Ident
+            && UNWRAP_METHODS.contains(&t.text.as_str())
+            && is_punct(tok_at(toks, i - 1), ".")
+            && is_punct(tok_at(toks, i + 1), "(")
+        {
+            out.push(Violation {
+                line: t.line,
+                rule: "hot-path-unwrap",
+                message: format!(
+                    "`.{}()` on an engine/coordinator hot path: handle the failure \
+                     or annotate the invariant",
+                    t.text
+                ),
+            });
+        }
+
+        // Determinism surface.
+        if in_det && !in_test {
+            if t.kind == Kind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "determinism",
+                    message: format!(
+                        "`{}` in a determinism-pinned module: iteration order is \
+                         unstable; use BTreeMap/BTreeSet or annotate",
+                        t.text
+                    ),
+                });
+            }
+            if t.kind == Kind::Ident
+                && (t.text == "Instant" || t.text == "SystemTime")
+                && is_punct(tok_at(toks, i + 1), "::")
+                && matches!(ident_text(tok_at(toks, i + 2)), Some("now"))
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "determinism",
+                    message: format!(
+                        "`{}::now()` in a determinism-pinned module: wall clock \
+                         reads break DES/engine replay equivalence",
+                        t.text
+                    ),
+                });
+            }
+            if t.kind == Kind::Punct && (t.text == "==" || t.text == "!=") {
+                let float_adj = matches!(
+                    tok_at(toks, i - 1),
+                    Some(p) if p.kind == Kind::Float
+                ) || matches!(
+                    tok_at(toks, i + 1),
+                    Some(q) if q.kind == Kind::Float
+                );
+                if float_adj {
+                    out.push(Violation {
+                        line: t.line,
+                        rule: "determinism",
+                        message: "direct f64 comparison against a literal: use an \
+                                  epsilon or restructure"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Lint one file's source against its src-relative path (which selects
+/// the per-file rule scopes). Returns surviving violations, sorted by
+/// (line, rule).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let (toks, comments) = lex(src);
+    let (allows, bad) = parse_directives(&comments);
+    let mut violations: Vec<Violation> = lint_tokens(rel, &toks)
+        .into_iter()
+        .filter(|v| !allows.contains(&(v.line, v.rule)))
+        .collect();
+    violations.extend(bad);
+    violations.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    violations
+}

@@ -1,0 +1,402 @@
+//! # cascadia-lint — in-repo concurrency & determinism static analysis
+//!
+//! A self-contained static-analysis pass over this crate's own source
+//! tree. The serving engine is a lock-heavy multi-threaded system whose
+//! scheduling layers are pinned by determinism-sensitive equivalence
+//! tests; generic tooling does not know which locks nest, which calls
+//! block, or which modules must replay bit-identically — so the rules
+//! live in-repo, next to the code they police, and run under plain
+//! `cargo test` (the tree-clean test below) as well as through the
+//! `cascadia-lint` binary in CI.
+//!
+//! Layout:
+//!
+//! * [`lexer`] — a token-level Rust lexer (comments, strings, chars,
+//!   lifetimes, numbers, greedy multi-char operators); built by hand
+//!   because the crate is `anyhow`-only and must build offline, so
+//!   `syn`-style parsing is not on the table.
+//! * [`lints`] — the four rule families over the token stream: the
+//!   guard-tracking `lock-order` checks against [`LOCK_HIERARCHY`],
+//!   `blocking-under-lock`, `hot-path-unwrap`, and `determinism`;
+//!   plus the `allow(<rule>, reason = "...")` annotation grammar.
+//! * [`lint_tree`] — walk a source root and lint every `.rs` file.
+//!
+//! `scripts/cascadia_lint_mirror.py` mirrors the whole pass in Python
+//! for toolchain-free environments. The Rust implementation is
+//! authoritative; every rule change lands in both.
+
+pub mod lexer;
+pub mod lints;
+
+pub use lints::{
+    hierarchy_rank, lint_source, Violation, BAD_ANNOTATION, LOCK_HIERARCHY, RULES,
+};
+
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The result of linting a source tree.
+#[derive(Debug)]
+pub struct TreeReport {
+    /// How many `.rs` files were scanned.
+    pub files: usize,
+    /// `(src-relative path, violation)`, in (path, line, rule) order.
+    pub violations: Vec<(String, Violation)>,
+}
+
+impl TreeReport {
+    /// Render violations one per line, `rel:line: [rule] message`.
+    pub fn render(&self) -> Vec<String> {
+        self.violations
+            .iter()
+            .map(|(rel, v)| format!("{rel}:{}: [{}] {}", v.line, v.rule, v.message))
+            .collect()
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted at every level
+/// so reports (and CI logs) are stable across filesystems.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (the crate's `src/` directory).
+/// Fails outright — rather than passing vacuously — if the lock
+/// hierarchy declaration has been emptied out: the hierarchy is the
+/// contract the `lock-order` rule enforces.
+// The emptiness check IS the gate: deleting the declaration must fail.
+#[allow(clippy::const_is_empty)]
+pub fn lint_tree(root: &Path) -> Result<TreeReport> {
+    if LOCK_HIERARCHY.is_empty() {
+        bail!("no lock hierarchy declared: LOCK_HIERARCHY must name the lock tiers");
+    }
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        for v in lint_source(&rel, &src) {
+            violations.push((rel.clone(), v));
+        }
+    }
+    Ok(TreeReport { files: files.len(), violations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    // ---------------------------------------------------- lock-order
+
+    #[test]
+    fn lock_order_reentry_fires() {
+        let src = r#"
+fn f(pending: &std::sync::Mutex<u32>) {
+    let a = pending.lock();
+    let b = pending.lock();
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["lock-order"], "{v:?}");
+        assert_eq!(v[0].line, 4);
+        assert!(v[0].message.contains("re-acquired while already held"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn lock_order_hierarchy_violation_fires() {
+        // batcher (tier 1) is held; taking pending (tier 0) nests
+        // upward — flagged.
+        let src = r#"
+fn f(pending: &M, batcher: &M) {
+    let b = batcher.lock();
+    let p = pending.lock();
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["lock-order"], "{v:?}");
+        assert!(v[0].message.contains("out of declared hierarchy order"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn lock_order_clean_nesting_passes() {
+        // pending (tier 0) then batcher (tier 1): strictly downward.
+        let src = r#"
+fn f(pending: &M, batcher: &M) {
+    let p = pending.lock();
+    let b = batcher.lock();
+}
+"#;
+        assert!(lint_source("util/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_churn_fires() {
+        // The coordinator/server.rs:1181 shape: two adjacent statements
+        // each taking and dropping the same lock.
+        let src = r#"
+fn f(queue_time: &std::sync::Mutex<Map>) {
+    *queue_time.lock().entry(id).or_insert(0) += 1;
+    queue_time.lock().remove(&id);
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["lock-order"], "{v:?}");
+        assert!(v[0].message.contains("re-acquired immediately after"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn lock_order_drop_releases_guard() {
+        let src = r#"
+fn f(pending: &std::sync::Mutex<u32>) {
+    let a = pending.lock();
+    drop(a);
+    let b = pending.lock();
+}
+"#;
+        assert!(lint_source("util/fixture.rs", src).is_empty());
+    }
+
+    // ------------------------------------------- blocking-under-lock
+
+    #[test]
+    fn blocking_under_lock_fires() {
+        let src = r#"
+fn f(pending: &std::sync::Mutex<u32>, rx: &Receiver<u32>) {
+    let g = pending.lock();
+    let msg = rx.recv();
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["blocking-under-lock"], "{v:?}");
+        assert!(v[0].message.contains("`recv()`"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn condvar_wait_is_exempt() {
+        // Condvar::wait atomically releases the mutex — the blessed
+        // blocking pattern must NOT be flagged.
+        let src = r#"
+fn f(m: &std::sync::Mutex<bool>, cv: &std::sync::Condvar) {
+    let mut g = m.lock();
+    g = cv.wait(g);
+}
+"#;
+        assert!(lint_source("util/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blocking_after_release_passes() {
+        let src = r#"
+fn f(pending: &std::sync::Mutex<u32>, rx: &Receiver<u32>) {
+    {
+        let g = pending.lock();
+    }
+    let msg = rx.recv();
+}
+"#;
+        assert!(lint_source("util/fixture.rs", src).is_empty());
+    }
+
+    // ---------------------------------------------- hot-path-unwrap
+
+    #[test]
+    fn hot_path_unwrap_fires_in_engine() {
+        let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+"#;
+        let v = lint_source("engine/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["hot-path-unwrap"], "{v:?}");
+    }
+
+    #[test]
+    fn hot_path_expect_fires_in_coordinator() {
+        let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.expect("always set")
+}
+"#;
+        let v = lint_source("coordinator/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["hot-path-unwrap"], "{v:?}");
+    }
+
+    #[test]
+    fn unwrap_outside_hot_path_passes() {
+        let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+"#;
+        assert!(lint_source("util/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_test_code_passes() {
+        let src = r#"
+#[test]
+fn t() {
+    let x: Option<u32> = Some(3);
+    assert_eq!(x.unwrap(), 3);
+}
+"#;
+        assert!(lint_source("engine/fixture.rs", src).is_empty());
+    }
+
+    // -------------------------------------------------- determinism
+
+    #[test]
+    fn determinism_hashmap_fires_in_sim() {
+        let src = "use std::collections::HashMap;\n";
+        let v = lint_source("sim/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+    }
+
+    #[test]
+    fn determinism_btreemap_passes_in_sim() {
+        let src = "use std::collections::BTreeMap;\n";
+        assert!(lint_source("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn determinism_instant_now_fires_in_sched() {
+        let src = "fn f() -> u64 { tick(std::time::Instant::now()) }\n";
+        let v = lint_source("sched/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+        assert!(v[0].message.contains("Instant::now()"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn determinism_float_eq_fires() {
+        let src = "fn f(x: f64) -> bool { x == 0.5 }\n";
+        let v = lint_source("engine/scheduler.rs", src);
+        // engine/scheduler.rs is determinism-pinned by exact path.
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+    }
+
+    #[test]
+    fn determinism_rules_scoped_to_pinned_modules() {
+        let src = "use std::collections::HashMap;\nfn f(x: f64) -> bool { x == 0.5 }\n";
+        assert!(lint_source("coordinator/fixture.rs", src).is_empty());
+    }
+
+    // ---------------------------------------------------- annotations
+
+    #[test]
+    fn allow_annotation_suppresses_with_reason() {
+        let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    // cascadia-lint: allow(hot-path-unwrap, reason = "fixture: annotation grammar")
+    x.unwrap()
+}
+"#;
+        assert!(lint_source("engine/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_on_same_line_suppresses() {
+        let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap() // cascadia-lint: allow(hot-path-unwrap, reason = "fixture: same line")
+}
+"#;
+        assert!(lint_source("engine/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_bad_annotation() {
+        let src = r#"
+fn f() {
+    // cascadia-lint: allow(hot-path-unwrap)
+    let x = 1;
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), [BAD_ANNOTATION], "{v:?}");
+    }
+
+    #[test]
+    fn allow_unknown_rule_is_bad_annotation() {
+        let src = r#"
+fn f() {
+    // cascadia-lint: allow(made-up-rule, reason = "nope")
+    let x = 1;
+}
+"#;
+        let v = lint_source("util/fixture.rs", src);
+        assert_eq!(rules_of(&v), [BAD_ANNOTATION], "{v:?}");
+    }
+
+    #[test]
+    fn allow_does_not_suppress_other_rules() {
+        // An allow for one rule must not blanket the line.
+        let src = r#"
+fn f(x: Option<u32>, q: f64) -> bool {
+    // cascadia-lint: allow(determinism, reason = "fixture: wrong rule")
+    x.unwrap() == 1
+}
+"#;
+        let v = lint_source("engine/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["hot-path-unwrap"], "{v:?}");
+    }
+
+    // ------------------------------------------------ hierarchy gate
+
+    #[test]
+    #[allow(clippy::const_is_empty)] // asserting the declaration exists is the point
+    fn lock_hierarchy_is_declared_and_ordered() {
+        let pending = hierarchy_rank("pending");
+        let batcher = hierarchy_rank("batcher");
+        let queue_time = hierarchy_rank("queue_time");
+        let first_tokens = hierarchy_rank("first_tokens");
+        let policy = hierarchy_rank("policy");
+        assert!(!LOCK_HIERARCHY.is_empty());
+        assert!(pending.is_some() && batcher.is_some() && policy.is_some());
+        assert!(pending < batcher, "pending is the outermost tier");
+        assert!(batcher < queue_time, "batcher outranks the stats locks");
+        assert_eq!(queue_time, first_tokens, "stats locks share a tier");
+        assert!(queue_time < policy, "policy is the innermost tier");
+        assert_eq!(hierarchy_rank("not_a_lock"), None);
+    }
+
+    // ------------------------------------------------- tree-clean gate
+
+    /// THE enforcement point: plain `cargo test` lints the whole source
+    /// tree. Re-introducing any violation (e.g. reverting the
+    /// `coordinator/server.rs` queue_time double-lock fix) fails here.
+    #[test]
+    fn source_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = lint_tree(&root).expect("linting the source tree");
+        assert!(report.files > 40, "walk found only {} files — wrong root?", report.files);
+        assert!(
+            report.violations.is_empty(),
+            "cascadia-lint found {} violation(s):\n{}",
+            report.violations.len(),
+            report.render().join("\n")
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! `cascadia-lint` — run the in-repo concurrency & determinism
+//! static-analysis pass over a source tree.
+//!
+//! ```text
+//! cascadia-lint [ROOT]
+//! ```
+//!
+//! `ROOT` defaults to `rust/src` when invoked from the repository root,
+//! falling back to this crate's own `src/` directory otherwise. Output
+//! is one `rel/path.rs:line: [rule] message` line per violation plus a
+//! summary; exit code 0 when clean, 1 on violations, 2 on usage or io
+//! errors. The same pass also runs under plain `cargo test` via the
+//! tree-clean test in `cascadia::analysis` — this binary exists for CI
+//! log visibility and ad-hoc local runs.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use cascadia::analysis::lint_tree;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() > 1 || args.iter().any(|a| a == "-h" || a == "--help") {
+        eprintln!("usage: cascadia-lint [ROOT]");
+        eprintln!("  ROOT defaults to rust/src, else this crate's src/ directory");
+        return ExitCode::from(2);
+    }
+    let root: PathBuf = match args.first() {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let from_repo_root = Path::new("rust/src");
+            if from_repo_root.is_dir() {
+                from_repo_root.to_path_buf()
+            } else {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+            }
+        }
+    };
+    if !root.is_dir() {
+        eprintln!("error: {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    match lint_tree(&root) {
+        Ok(report) => {
+            for line in report.render() {
+                println!("{line}");
+            }
+            println!(
+                "cascadia-lint: {} files, {} violation(s)",
+                report.files,
+                report.violations.len()
+            );
+            if report.violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

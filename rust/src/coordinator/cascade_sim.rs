@@ -95,7 +95,8 @@ pub fn simulate_cascade(
         bail!("empty trace");
     }
     let c = cascade.len();
-    let span = (requests.last().unwrap().arrival - requests[0].arrival).max(1e-9);
+    let span =
+        (requests[requests.len() - 1].arrival - requests[0].arrival).max(1e-9);
     let routing = route_with(cascade, judger, requests, &plan.policy, span)?;
 
     // Per-request bookkeeping: the time the request becomes available
@@ -134,7 +135,7 @@ pub fn simulate_cascade(
             continue;
         }
         // DES requires arrival-sorted traces.
-        idx.sort_by(|&a, &b| ready[a].partial_cmp(&ready[b]).unwrap());
+        idx.sort_by(|&a, &b| ready[a].total_cmp(&ready[b]));
         let trace: Vec<SimRequest> = idx
             .iter()
             .map(|&i| SimRequest::new(

@@ -27,6 +27,7 @@ use crate::coordinator::server::{BackendFactory, ResponseJudger, TierBackend};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
 use crate::util::json::Json;
+use crate::util::sync::RwLockExt;
 
 /// A single-connection-at-a-time TCP server over one backend chain.
 ///
@@ -57,12 +58,12 @@ impl TcpFrontend {
 
     /// Snapshot of the current routing policy.
     pub fn policy(&self) -> PolicySpec {
-        self.policy.read().unwrap().clone()
+        self.policy.pread().clone()
     }
 
     /// Label of the current routing policy (for logs).
     pub fn policy_label(&self) -> String {
-        self.policy.read().unwrap().label()
+        self.policy.pread().label()
     }
 
     /// Hot-swap the routing policy; requests already read from the
@@ -70,7 +71,7 @@ impl TcpFrontend {
     /// requests route under the new one.
     pub fn set_policy(&self, policy: PolicySpec) -> Result<()> {
         policy.validate(self.n_tiers)?;
-        *self.policy.write().unwrap() = policy;
+        *self.policy.pwrite() = policy;
         Ok(())
     }
 
@@ -172,7 +173,7 @@ impl TcpFrontend {
         let t0 = Instant::now();
         // One consistent policy snapshot per request: a concurrent
         // hot-swap never changes the rules mid-cascade.
-        let policy = self.policy.read().unwrap().clone();
+        let policy = self.policy.pread().clone();
         let mut tier = policy.entry_tier(&features, c).min(c - 1);
         let (tier, output, score) = loop {
             let output = backends[tier].generate(&prompt, max_new)?;

@@ -37,6 +37,7 @@ use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
 use crate::util::stats;
+use crate::util::sync::{CondvarExt, LockExt, RwLockExt};
 
 /// Generates tokens for one tier. One instance per worker thread.
 pub trait TierBackend {
@@ -174,7 +175,7 @@ impl ServeControl {
             }
         }
         config.policy.validate(self.n_tiers)?;
-        *self.pending.lock().unwrap() = Some(config);
+        *self.pending.plock() = Some(config);
         Ok(())
     }
 
@@ -184,7 +185,7 @@ impl ServeControl {
     }
 
     fn take_pending(&self) -> Option<ServerConfig> {
-        self.pending.lock().unwrap().take()
+        self.pending.plock().take()
     }
 }
 
@@ -266,7 +267,7 @@ fn continuous_worker_loop(
         counters.peak_pool_pages.fetch_max(budget, Ordering::SeqCst);
         // Admission (or, when idle, wait for work / shutdown / retire).
         {
-            let mut b = tier_state.batcher.lock().unwrap();
+            let mut b = tier_state.batcher.plock();
             loop {
                 let surplus = alive.load(Ordering::SeqCst) > target.load(Ordering::SeqCst);
                 if !surplus {
@@ -303,7 +304,7 @@ fn continuous_worker_loop(
                 if try_retire(alive, target) {
                     return;
                 }
-                b = tier_state.wake.wait(b).unwrap();
+                b = tier_state.wake.pwait(b);
             }
         }
         // One decode iteration. Panics in the backend are contained
@@ -342,7 +343,7 @@ fn continuous_worker_loop(
                             first_token_at: fin.first_token_at,
                         });
                     }
-                    tier_state.batcher.lock().unwrap().complete(n);
+                    tier_state.batcher.plock().complete(n);
                     tier_state.wake.notify_all();
                 }
             }
@@ -357,7 +358,7 @@ fn continuous_worker_loop(
                 }
                 alive.fetch_sub(1, Ordering::SeqCst);
                 let _ = tx.send(RouterMsg::WorkerDead { tier, err: e.to_string() });
-                tier_state.batcher.lock().unwrap().complete(n);
+                tier_state.batcher.plock().complete(n);
                 tier_state.wake.notify_all();
                 return;
             }
@@ -667,7 +668,7 @@ impl TierState {
     }
 
     fn push(&self, req: LiveRequest, t0: Instant) {
-        let mut b = self.batcher.lock().unwrap();
+        let mut b = self.batcher.plock();
         b.push(req, t0.elapsed().as_secs_f64());
         drop(b);
         self.wake.notify_one();
@@ -910,7 +911,7 @@ impl CascadeServer {
                         // replica — pool size is the capacity lever
                         // hot-swaps pull.
                         let batch = {
-                            let mut b = tier_state.batcher.lock().unwrap();
+                            let mut b = tier_state.batcher.plock();
                             loop {
                                 // Share by the *live* worker count: after
                                 // replica deaths the survivors must cover
@@ -929,7 +930,7 @@ impl CascadeServer {
                                 if try_retire(&alive[tier], &target[tier]) {
                                     return;
                                 }
-                                b = tier_state.wake.wait(b).unwrap();
+                                b = tier_state.wake.pwait(b);
                             }
                         };
                         let n = batch.len();
@@ -983,13 +984,13 @@ impl CascadeServer {
                                         tier,
                                         err: e.to_string(),
                                     });
-                                    tier_state.batcher.lock().unwrap().complete(n);
+                                    tier_state.batcher.plock().complete(n);
                                     tier_state.wake.notify_all();
                                     return;
                                 }
                             }
                         }
-                        tier_state.batcher.lock().unwrap().complete(n);
+                        tier_state.batcher.plock().complete(n);
                         tier_state.wake.notify_all();
                     }
                 });
@@ -1022,7 +1023,7 @@ impl CascadeServer {
                     }
                     let features = RequestFeatures::live(entry.prompt.len());
                     let entry_tier =
-                        policy_ref.read().unwrap().entry_tier(&features, c).min(c - 1);
+                        policy_ref.pread().entry_tier(&features, c).min(c - 1);
                     // Hash the prompt ONCE; every tier (and every
                     // escalation) reuses the chain.
                     let hashes = hash_prompts.then(|| {
@@ -1054,10 +1055,10 @@ impl CascadeServer {
                 // tier's response is scored.
                 if let Some(ctrl) = control {
                     if let Some(next) = ctrl.take_pending() {
-                        *policy.write().unwrap() = next.policy.clone();
+                        *policy.pwrite() = next.policy.clone();
                         max_new_live.store(next.max_new_tokens, Ordering::SeqCst);
                         for (t, &mb) in next.max_batch.iter().enumerate() {
-                            tiers[t].batcher.lock().unwrap().max_batch = mb.max(1);
+                            tiers[t].batcher.plock().max_batch = mb.max(1);
                             tiers[t].wake.notify_all();
                         }
                         // Rescale the continuous KV pools: workers pick
@@ -1136,14 +1137,14 @@ impl CascadeServer {
                             let ttft = at
                                 .checked_duration_since(req.submitted)
                                 .unwrap_or_default();
-                            first_tokens.lock().unwrap().entry(req.id).or_insert(ttft);
+                            first_tokens.plock().entry(req.id).or_insert(ttft);
                         }
                         let score = judger.score(&req.prompt, &output);
                         let features = RequestFeatures::live(req.prompt.len());
                         let decision = if tier == c - 1 {
                             Decision::Accept
                         } else {
-                            policy.read().unwrap().decide(tier, score, &features, c)
+                            policy.pread().decide(tier, score, &features, c)
                         };
                         // A skip must move strictly forward; clamp a
                         // misbehaving target rather than wedging the
@@ -1156,14 +1157,11 @@ impl CascadeServer {
                         if next_tier.is_none() {
                             let e2e = req.submitted.elapsed();
                             let execd = {
-                                let mut qt = queue_time.lock().unwrap();
+                                let mut qt = queue_time.plock();
                                 qt.remove(&req.id).unwrap_or(0.0) + exec_seconds
                             };
-                            let ttft = first_tokens
-                                .lock()
-                                .unwrap()
-                                .remove(&req.id)
-                                .unwrap_or(e2e);
+                            let ttft =
+                                first_tokens.plock().remove(&req.id).unwrap_or(e2e);
                             completions.push(Completion {
                                 id: req.id,
                                 output,
@@ -1177,10 +1175,19 @@ impl CascadeServer {
                             });
                             done += 1;
                         } else {
-                            let next = next_tier.unwrap();
-                            queue_time.lock().unwrap().entry(req.id).or_insert(0.0);
-                            *queue_time.lock().unwrap().get_mut(&req.id).unwrap() +=
-                                exec_seconds;
+                            let next = next_tier.unwrap_or(c - 1);
+                            // One guard for the whole accumulation —
+                            // re-locking `queue_time` per clause is the
+                            // lock churn the `lock-order` lint flags.
+                            // Scoped so the guard is dropped before
+                            // `push` takes the tier's `batcher` lock:
+                            // `batcher` is an outer tier relative to
+                            // `queue_time` in the declared hierarchy,
+                            // so it must never be taken under `qt`.
+                            {
+                                let mut qt = queue_time.plock();
+                                *qt.entry(req.id).or_insert(0.0) += exec_seconds;
+                            }
                             tiers[next].push(req, t0);
                         }
                     }
@@ -1199,7 +1206,7 @@ impl CascadeServer {
             let queue: Vec<TierQueueStats> = tiers
                 .iter()
                 .map(|t| {
-                    let b = t.batcher.lock().unwrap();
+                    let b = t.batcher.plock();
                     TierQueueStats {
                         peak_depth: b.peak_depth,
                         admitted: b.admitted(),

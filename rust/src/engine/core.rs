@@ -228,6 +228,18 @@ struct SeqData<T> {
     first_token_at: Option<Instant>,
 }
 
+/// Engine invariant: every id the iteration scheduler hands back refers
+/// to a sequence this engine submitted and has not yet retired. A miss
+/// means the scheduler's and the engine's bookkeeping diverged — the
+/// batch state is unrecoverable, so panic with the id and phase instead
+/// of serving wrong tokens.
+fn known<V>(entry: Option<V>, id: SeqId, phase: &str) -> V {
+    match entry {
+        Some(v) => v,
+        None => panic!("engine invariant violated: {phase} for unknown sequence {id}"),
+    }
+}
+
 /// The per-worker continuous-batching engine. `T` is the caller's
 /// per-request payload, returned untouched on completion.
 pub struct EngineCore<T> {
@@ -385,7 +397,7 @@ impl<T> EngineCore<T> {
         match tok {
             Some(t) => {
                 let cache_dry = {
-                    let d = self.data.get_mut(&id).expect("token for unknown sequence");
+                    let d = known(self.data.get_mut(&id), id, "token");
                     d.output.push(t);
                     if d.first_token_at.is_none() {
                         d.first_token_at = Some(Instant::now());
@@ -450,7 +462,7 @@ impl<T> EngineCore<T> {
         for chunk in &plan.prefill {
             let id = chunk.id;
             let prompt = {
-                let d = self.data.get_mut(&id).expect("prefilling unknown sequence");
+                let d = known(self.data.get_mut(&id), id, "prefill");
                 if d.admitted_at.is_none() {
                     d.admitted_at = Some(Instant::now());
                 }
@@ -463,27 +475,27 @@ impl<T> EngineCore<T> {
             // `generate` on edition 2021)
             let native = self.backend.step_backend().is_some();
             let tok = if native {
-                let s = self.backend.step_backend().expect("probed native above");
+                let Some(s) = self.backend.step_backend() else {
+                    unreachable!("probed native above")
+                };
                 let t = s.prefill_chunk(id, piece, chunk.last)?;
                 if chunk.last && t.is_none() {
                     anyhow::bail!("step backend returned no first token on final chunk");
                 }
                 t
             } else if chunk.last {
-                let max_new =
-                    self.data.get(&id).expect("prefilling unknown sequence").max_new;
+                let max_new = known(self.data.get(&id), id, "prefill").max_new;
                 let full = self.backend.generate(&prompt, max_new)?;
                 let mut dq: VecDeque<i32> = full.into_iter().collect();
                 let first = dq.pop_front();
-                self.data.get_mut(&id).expect("prefilling unknown sequence").cached =
-                    Some(dq);
+                known(self.data.get_mut(&id), id, "prefill").cached = Some(dq);
                 // An empty generation finishes immediately (None).
                 first
             } else {
                 None
             };
             // The prompt is reused on preemption-recompute; put it back.
-            self.data.get_mut(&id).expect("prefilling unknown sequence").prompt = prompt;
+            known(self.data.get_mut(&id), id, "prefill").prompt = prompt;
             if chunk.last && self.note_token(id, tok) {
                 done_ids.push(id);
             }
@@ -494,7 +506,7 @@ impl<T> EngineCore<T> {
         // first engine contact is a decode, never a prefill.
         if !plan.decode.is_empty() {
             for &id in &plan.decode {
-                let d = self.data.get_mut(&id).expect("decoding unknown sequence");
+                let d = known(self.data.get_mut(&id), id, "decode");
                 if d.admitted_at.is_none() {
                     d.admitted_at = Some(Instant::now());
                 }
@@ -512,10 +524,8 @@ impl<T> EngineCore<T> {
             } else {
                 plan.decode
                     .iter()
-                    .map(|id| {
-                        self.data
-                            .get_mut(id)
-                            .expect("decoding unknown sequence")
+                    .map(|&id| {
+                        known(self.data.get_mut(&id), id, "decode")
                             .cached
                             .as_mut()
                             .and_then(|c| c.pop_front())
@@ -537,7 +547,7 @@ impl<T> EngineCore<T> {
             if let Some(s) = self.backend.step_backend() {
                 s.release(id);
             }
-            let d = self.data.remove(&id).expect("retiring unknown sequence");
+            let d = known(self.data.remove(&id), id, "retire");
             completed.push(Finished {
                 payload: d.payload,
                 output: d.output,

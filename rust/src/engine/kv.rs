@@ -42,6 +42,44 @@ use std::collections::HashMap;
 /// Engine-wide sequence identifier.
 pub type SeqId = u64;
 
+/// Pool-invariant assertion: a false condition means the allocator's
+/// bookkeeping is broken (dead-page decref, table/free-list desync), so
+/// panic with the failing check *and* a one-line pool-state snapshot —
+/// the context a page-leak post-mortem actually needs. Always on:
+/// unlike `debug_assert!`, release builds serving real traffic keep the
+/// check.
+macro_rules! kv_invariant {
+    // `if c {} else { panic }` rather than `if !c` so arbitrary boolean
+    // conditions never trip clippy's nonminimal_bool at the call site.
+    ($pool:expr, $cond:expr, $($msg:tt)+) => {
+        if $cond {
+        } else {
+            panic!(
+                "kv pool invariant violated: {} [{}]",
+                format_args!($($msg)+),
+                $pool.state_line(),
+            );
+        }
+    };
+}
+
+/// Pool-invariant unwrap: like [`kv_invariant!`] but for lookups whose
+/// `None` means a broken invariant. The operand must be an *owned*
+/// `Option` (e.g. `Vec::pop`, `HashMap::remove`) so the pool is free to
+/// format its state in the failure arm.
+macro_rules! kv_expect {
+    ($pool:expr, $opt:expr, $($msg:tt)+) => {
+        match $opt {
+            Some(v) => v,
+            None => panic!(
+                "kv pool invariant violated: {} [{}]",
+                format_args!($($msg)+),
+                $pool.state_line(),
+            ),
+        }
+    };
+}
+
 /// Allocation failure: the pool is `short` pages of satisfying the
 /// request. Nothing was allocated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -189,6 +227,23 @@ impl KvPool {
 
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
+    }
+
+    /// One-line allocator snapshot embedded in [`kv_invariant!`] /
+    /// [`kv_expect!`] panics.
+    fn state_line(&self) -> String {
+        format!(
+            "capacity={} free={} in_use={} tables={} swapped={} trie={} \
+             swapped_pages={}/{}",
+            self.capacity,
+            self.free.len(),
+            self.in_use,
+            self.tables.len(),
+            self.swapped.len(),
+            self.trie.len(),
+            self.swapped_pages,
+            self.swap_capacity,
+        )
     }
 
     /// Target capacity in pages. After a shrink below current usage the
@@ -374,7 +429,11 @@ impl KvPool {
         if host_pages > self.free.len() {
             return Err(PagesShort(host_pages - self.free.len()));
         }
-        let sw = self.swapped.remove(&seq).expect("checked above");
+        let sw = kv_expect!(
+            self,
+            self.swapped.remove(&seq),
+            "swap-in of a sequence {seq} that is not parked"
+        );
         let mut pages = sw.resident;
         for _ in 0..host_pages {
             pages.push(self.alloc_page());
@@ -393,8 +452,8 @@ impl KvPool {
     /// Drop one reference to `pid`; at zero the page leaves the trie
     /// and (if inside the capacity bound) returns to the free list.
     fn decref(&mut self, pid: usize) {
+        kv_invariant!(self, self.meta[pid].refs > 0, "decref of dead page {pid}");
         let m = &mut self.meta[pid];
-        debug_assert!(m.refs > 0, "decref of dead page {pid}");
         m.refs -= 1;
         if m.refs == 0 {
             if let Some(h) = m.hash.take() {
@@ -412,7 +471,11 @@ impl KvPool {
 
     /// Mint one fresh private page off the free list (caller checked).
     fn alloc_page(&mut self) -> usize {
-        let pid = self.free.pop().expect("free list checked by caller");
+        let pid = kv_expect!(
+            self,
+            self.free.pop(),
+            "allocation from an empty free list (caller skipped the bound check)"
+        );
         self.meta[pid] = PageMeta { refs: 1, hash: None };
         self.in_use += 1;
         self.allocs += 1;
@@ -518,10 +581,17 @@ impl KvPool {
         if shortfall > self.free.len() {
             return Err(PagesShort(shortfall - self.free.len()));
         }
+        kv_invariant!(
+            self,
+            cow_slots.is_empty() || self.tables.contains_key(&seq),
+            "cow on unknown sequence {seq}"
+        );
         for idx in cow_slots {
             let fresh = self.alloc_page();
             let old = {
-                let table = self.tables.get_mut(&seq).expect("cow on unknown sequence");
+                let Some(table) = self.tables.get_mut(&seq) else {
+                    unreachable!("presence checked before the cow loop")
+                };
                 std::mem::replace(&mut table.pages[idx], fresh)
             };
             self.decref(old);

@@ -50,7 +50,10 @@
 //! [`advance`]: IterationScheduler::advance
 //! [`retire`]: IterationScheduler::retire
 
-use std::collections::{HashMap, VecDeque};
+// BTreeMap, not HashMap: this scheduler is replayed by the DES
+// equivalence pins, so every keyed structure must iterate in a
+// deterministic order (the `determinism` lint enforces this).
+use std::collections::{BTreeMap, VecDeque};
 
 use super::kv::{KvPool, SeqId};
 
@@ -185,6 +188,18 @@ impl IterationPlan {
     }
 }
 
+/// Scheduler invariant: every id in `waiting`/`running`/`swapped_q` has
+/// a live `seqs` entry (they are inserted together at submit and removed
+/// together at retire). A miss means the queues and the sequence table
+/// diverged — panic with the id and phase instead of planning a bogus
+/// iteration.
+fn known<V>(entry: Option<V>, id: SeqId, phase: &str) -> V {
+    match entry {
+        Some(v) => v,
+        None => panic!("scheduler invariant violated: {phase} of unknown sequence {id}"),
+    }
+}
+
 /// FIFO iteration scheduler over a paged KV pool.
 #[derive(Debug)]
 pub struct IterationScheduler {
@@ -195,7 +210,7 @@ pub struct IterationScheduler {
     /// Sequences parked in host swap space, oldest eviction first;
     /// they resume ahead of new admissions.
     swapped_q: VecDeque<SeqId>,
-    seqs: HashMap<SeqId, Seq>,
+    seqs: BTreeMap<SeqId, Seq>,
     max_running: usize,
     /// Prefill token budget per iteration (`usize::MAX` = whole-prompt
     /// admission, the pre-chunking discipline).
@@ -215,7 +230,7 @@ impl IterationScheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             swapped_q: VecDeque::new(),
-            seqs: HashMap::new(),
+            seqs: BTreeMap::new(),
             max_running: max_running.max(1),
             prefill_chunk: usize::MAX,
             preemption: PreemptionConfig::default(),
@@ -433,7 +448,9 @@ impl IterationScheduler {
                 // this one sequence.
                 self.force_expand(short.0, plan);
             } else {
-                let victim = self.running.pop().expect("len > 1");
+                let Some(victim) = self.running.pop() else {
+                    unreachable!("running.len() > 1 checked above")
+                };
                 self.evict(victim, plan);
                 if victim == id {
                     return false;
@@ -463,7 +480,7 @@ impl IterationScheduler {
             if !hashes.is_empty() {
                 self.pool.publish_prefix(id, &hashes);
             }
-            self.seqs.get_mut(&id).expect("running seq").published = true;
+            known(self.seqs.get_mut(&id), id, "publish").published = true;
         }
 
         // 1. Reserve one token of growth per decoding sequence, oldest
@@ -569,7 +586,7 @@ impl IterationScheduler {
             let start = s.prefilled;
             let need = start + len + usize::from(last);
             if self.reserve(id, need, &mut plan) {
-                self.seqs.get_mut(&id).expect("running seq").prefilled = start + len;
+                known(self.seqs.get_mut(&id), id, "prefill").prefilled = start + len;
                 plan.prefill.push(ChunkTask { id, start, len, last });
                 budget -= len;
                 i += 1;
@@ -596,7 +613,7 @@ impl IterationScheduler {
                     Ok(()) => {
                         self.waiting.pop_front();
                         self.running.push(head);
-                        let s = self.seqs.get_mut(&head).expect("waiting seq");
+                        let s = known(self.seqs.get_mut(&head), head, "admit");
                         s.prefilled = prompt_tokens;
                         s.published = true; // pages are already in the trie
                         self.prefix_hit_tokens += claimed as u64;
@@ -628,7 +645,7 @@ impl IterationScheduler {
                 Ok(()) => {
                     self.waiting.pop_front();
                     self.running.push(head);
-                    let s = self.seqs.get_mut(&head).expect("waiting seq");
+                    let s = known(self.seqs.get_mut(&head), head, "admit");
                     s.prefilled = claimed + len;
                     self.prefix_hit_tokens += claimed as u64;
                     plan.admitted.push(head);
@@ -653,7 +670,7 @@ impl IterationScheduler {
     /// Record one generated token for `id`; returns true when the
     /// sequence reached its token budget (caller should retire it).
     pub fn advance(&mut self, id: SeqId) -> bool {
-        let s = self.seqs.get_mut(&id).expect("advance of unknown sequence");
+        let s = known(self.seqs.get_mut(&id), id, "advance");
         s.generated += 1;
         s.generated >= s.max_new
     }

@@ -42,6 +42,7 @@
 //! index, and `examples/` for runnable entry points.
 
 pub mod adapt;
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod harness;

@@ -30,7 +30,10 @@
 //! Results are memoized on a quantized workload key so the outer
 //! Tchebycheff sweep (hundreds of routing candidates) stays fast.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the inner solver's memo caches sit on the
+// deterministic scheduling path (same inputs must yield the same plan),
+// so keyed structures iterate in a stable order (`determinism` lint).
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use anyhow::{bail, Result};
@@ -170,7 +173,7 @@ pub fn best_strategy_for_engine(
     // One ReplicaModel per distinct (tp, pp) design — the enumeration
     // visits thousands of strategies built from tens of designs
     // (EXPERIMENTS.md §Perf).
-    let mut design_cache: HashMap<(usize, usize), ReplicaModel> = HashMap::new();
+    let mut design_cache: BTreeMap<(usize, usize), ReplicaModel> = BTreeMap::new();
     let mut score = |s: &Strategy| -> f64 {
         for g in &s.groups {
             design_cache
@@ -234,7 +237,7 @@ pub struct InnerSolver {
     pub opts: InnerOptions,
     /// (tier, quantized workload, n_gpus) -> full l_i(f) curve.
     #[allow(clippy::type_complexity)]
-    curve_cache: Mutex<HashMap<(usize, u64, usize), (Vec<f64>, Vec<Option<Strategy>>)>>,
+    curve_cache: Mutex<BTreeMap<(usize, u64, usize), (Vec<f64>, Vec<Option<Strategy>>)>>,
 }
 
 /// Quantize a workload for memoization: 2% rate buckets, 5% length
@@ -252,7 +255,7 @@ fn quantize(w: &Workload) -> u64 {
 
 impl InnerSolver {
     pub fn new(cascade: Vec<ModelSpec>, cluster: ClusterSpec, opts: InnerOptions) -> InnerSolver {
-        InnerSolver { cascade, cluster, opts, curve_cache: Mutex::new(HashMap::new()) }
+        InnerSolver { cascade, cluster, opts, curve_cache: Mutex::new(BTreeMap::new()) }
     }
 
     /// The full `l_i(f)` curve for one tier: enumerate strategies ONCE
@@ -282,7 +285,7 @@ impl InnerSolver {
             }
         } else {
             let avg_ctx = w.avg_input + w.avg_output / 2.0;
-            let mut design_cache: HashMap<(usize, usize), ReplicaModel> = HashMap::new();
+            let mut design_cache: BTreeMap<(usize, usize), ReplicaModel> = BTreeMap::new();
             for s in enumerate_strategies(model, &self.cluster, n_gpus) {
                 for g in &s.groups {
                     design_cache.entry((g.tp, g.pp)).or_insert_with(|| {

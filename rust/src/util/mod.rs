@@ -9,4 +9,5 @@ pub mod rng;
 pub mod bench;
 pub mod prop;
 pub mod stats;
+pub mod sync;
 pub mod testfs;

@@ -1,0 +1,122 @@
+//! Poison-aware lock acquisition helpers.
+//!
+//! The coordinator and adaptation layers treat a poisoned lock as fatal:
+//! a worker that panicked while holding a guard has already corrupted
+//! the batch bookkeeping it protects, so limping on would serve wrong
+//! answers. `.lock().unwrap()` expresses that policy but trips the
+//! `hot-path-unwrap` lint and loses context; these extension traits
+//! centralize the panic with a message that names the poisoned lock
+//! site. `cascadia-lint` tracks `plock`/`pread`/`pwrite` exactly like
+//! the `std` acquisition methods, so converted call sites stay covered
+//! by the `lock-order` and `blocking-under-lock` rules.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Poison-panicking [`Mutex::lock`].
+pub trait LockExt<T> {
+    /// Acquire the mutex, panicking with context if a previous holder
+    /// panicked (lock poisoning).
+    fn plock(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        match self.lock() {
+            Ok(g) => g,
+            Err(e) => panic!("mutex poisoned: a thread panicked while holding it: {e}"),
+        }
+    }
+}
+
+/// Poison-panicking [`RwLock::read`] / [`RwLock::write`].
+pub trait RwLockExt<T> {
+    /// Acquire a shared read guard, panicking on poison.
+    fn pread(&self) -> RwLockReadGuard<'_, T>;
+    /// Acquire an exclusive write guard, panicking on poison.
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn pread(&self) -> RwLockReadGuard<'_, T> {
+        match self.read() {
+            Ok(g) => g,
+            Err(e) => panic!("rwlock poisoned: a writer panicked while holding it: {e}"),
+        }
+    }
+
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T> {
+        match self.write() {
+            Ok(g) => g,
+            Err(e) => panic!("rwlock poisoned: a holder panicked while holding it: {e}"),
+        }
+    }
+}
+
+/// Poison-panicking [`Condvar::wait`].
+pub trait CondvarExt {
+    /// Block on the condvar, re-acquiring the guard on wake and
+    /// panicking on poison. This is the blessed block-while-holding
+    /// pattern: `wait` atomically releases the mutex, so it is exempt
+    /// from the `blocking-under-lock` rule.
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+}
+
+impl CondvarExt for Condvar {
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        match self.wait(guard) {
+            Ok(g) => g,
+            Err(e) => panic!("condvar wait poisoned: a holder panicked: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+    #[test]
+    fn plock_round_trip() {
+        let m = Mutex::new(3usize);
+        *m.plock() += 1;
+        assert_eq!(*m.plock(), 4);
+    }
+
+    #[test]
+    fn pread_pwrite_round_trip() {
+        let l = RwLock::new(vec![1, 2]);
+        l.pwrite().push(3);
+        assert_eq!(l.pread().len(), 3);
+    }
+
+    #[test]
+    fn pwait_wakes() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *m.plock() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut ready = m.plock();
+        while !*ready {
+            ready = cv.pwait(ready);
+        }
+        h.join().unwrap();
+        assert!(*ready);
+    }
+
+    #[test]
+    #[should_panic(expected = "mutex poisoned")]
+    fn plock_panics_on_poison() {
+        let m = Arc::new(Mutex::new(0usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.plock();
+            panic!("poison it");
+        })
+        .join();
+        let _ = m.plock();
+    }
+}

@@ -1,0 +1,645 @@
+#!/usr/bin/env python3
+"""Development mirror of the in-repo `cascadia-lint` static-analysis pass.
+
+The AUTHORITATIVE implementation is `rust/src/analysis/` (run via the
+`cascadia-lint` binary and enforced by the tree-clean test in
+`rust/src/analysis/mod.rs`); this mirror re-implements the same token-level
+semantics in Python so violation sweeps can run in environments without a
+Rust toolchain. Keep the two in lockstep: every rule change lands in both.
+
+Usage: python3 scripts/cascadia_lint_mirror.py [rust/src]
+Exit codes: 0 clean, 1 violations, 2 usage/io error.
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------- rules
+
+RULES = ("lock-order", "blocking-under-lock", "hot-path-unwrap", "determinism")
+
+# Declared lock hierarchy, outermost tier first. Nested acquisitions must
+# move strictly down this list; same-tier or upward nesting is flagged.
+LOCK_HIERARCHY = (("pending",), ("batcher",), ("queue_time", "first_tokens"), ("policy",))
+
+ACQUIRE_METHODS = ("lock", "read", "write", "plock", "pread", "pwrite")
+BLOCKING_CALLS = ("recv", "recv_timeout", "join", "sleep", "generate", "step", "prefill_chunk")
+UNWRAP_METHODS = ("unwrap", "expect")
+
+MULTI_OPS = (
+    "<<=", ">>=", "..=", "...",
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+)
+
+
+def unwrap_scope(rel):
+    return rel.startswith("engine/") or rel.startswith("coordinator/")
+
+
+def determinism_scope(rel):
+    return rel.startswith("sim/") or rel.startswith("sched/") or rel == "engine/scheduler.rs"
+
+
+def hierarchy_rank(name):
+    for rank, tier in enumerate(LOCK_HIERARCHY):
+        if name in tier:
+            return rank
+    return None
+
+
+def normalize_lock_name(name):
+    if name is None:
+        return None
+    if hierarchy_rank(name) is not None:
+        return name
+    for suffix in ("_ref", "_arc"):
+        if name.endswith(suffix):
+            stripped = name[: -len(suffix)]
+            if hierarchy_rank(stripped) is not None:
+                return stripped
+    return name
+
+
+# ---------------------------------------------------------------- lexer
+
+IDENT = "ident"
+PUNCT = "punct"
+LIT_STR = "str"
+LIT_CHAR = "char"
+LIT_NUM_INT = "int"
+LIT_NUM_FLOAT = "float"
+LIFETIME = "lifetime"
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"{self.kind}({self.text!r}@{self.line})"
+
+
+def is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def is_ident_char(c):
+    return c.isalnum() or c == "_"
+
+
+def lex(src):
+    """Returns (tokens, comments) where comments is [(line, text)] for
+    line comments only (directives never live in block comments)."""
+    toks = []
+    comments = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            comments.append((line, src[i:j]))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "\n":
+                    line += 1
+                    j += 1
+                elif src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            i = j
+            continue
+        # Raw strings / byte strings / raw byte strings: (b?)r#*" ... "#*
+        if c in "rb":
+            j = i
+            if src[j] == "b" and j + 1 < n and src[j + 1] == "r":
+                j += 1
+            if src[j] == "r":
+                k = j + 1
+                hashes = 0
+                while k < n and src[k] == "#":
+                    hashes += 1
+                    k += 1
+                if k < n and src[k] == '"':
+                    # raw string body
+                    close = '"' + "#" * hashes
+                    start_line = line
+                    k += 1
+                    while k < n:
+                        if src[k] == "\n":
+                            line += 1
+                            k += 1
+                        elif src[k] == '"' and src[k : k + 1 + hashes] == close:
+                            k += 1 + hashes
+                            break
+                        else:
+                            k += 1
+                    toks.append(Tok(LIT_STR, "", start_line))
+                    i = k
+                    continue
+                if hashes == 1 and k < n and is_ident_start(src[k]):
+                    # raw identifier r#ident
+                    m = k
+                    while m < n and is_ident_char(src[m]):
+                        m += 1
+                    toks.append(Tok(IDENT, src[k:m], line))
+                    i = m
+                    continue
+        if c == "b" and i + 1 < n and src[i + 1] == "'":
+            # byte char literal b'x'
+            j = i + 2
+            if j < n and src[j] == "\\":
+                j += 2
+            else:
+                j += 1
+            while j < n and src[j] != "'":
+                j += 1
+            toks.append(Tok(LIT_CHAR, "", line))
+            i = j + 1
+            continue
+        if c == "b" and i + 1 < n and src[i + 1] == '"':
+            i += 1
+            c = '"'  # fall through to string below
+        if c == '"':
+            j = i + 1
+            start_line = line
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == "\n":
+                    line += 1
+                    j += 1
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            toks.append(Tok(LIT_STR, "", start_line))
+            i = j
+            continue
+        if c == "'":
+            # char literal vs lifetime
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2 + 1  # skip escaped char
+                while j < n and src[j] != "'":
+                    j += 1
+                toks.append(Tok(LIT_CHAR, "", line))
+                i = j + 1
+                continue
+            if i + 2 < n and src[i + 2] == "'" and src[i + 1] != "'":
+                toks.append(Tok(LIT_CHAR, "", line))
+                i = i + 3
+                continue
+            j = i + 1
+            while j < n and is_ident_char(src[j]):
+                j += 1
+            toks.append(Tok(LIFETIME, src[i:j], line))
+            i = j
+            continue
+        if is_ident_start(c):
+            j = i
+            while j < n and is_ident_char(src[j]):
+                j += 1
+            toks.append(Tok(IDENT, src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i
+            is_float = False
+            is_hex = src[i : i + 2] in ("0x", "0X")
+            while j < n:
+                d = src[j]
+                if d.isalnum() or d == "_":
+                    if not is_hex and d in "eE" and j + 1 < n and src[j + 1] in "+-":
+                        is_float = True
+                        j += 2
+                        continue
+                    j += 1
+                elif d == "." and j + 1 < n and src[j + 1].isdigit():
+                    is_float = True
+                    j += 1
+                else:
+                    break
+            text = src[i:j]
+            if not is_hex and ("e" in text or "E" in text) and "x" not in text:
+                is_float = True
+            toks.append(Tok(LIT_NUM_FLOAT if is_float else LIT_NUM_INT, text, line))
+            i = j
+            continue
+        matched = None
+        for op in MULTI_OPS:
+            if src.startswith(op, i):
+                matched = op
+                break
+        if matched:
+            toks.append(Tok(PUNCT, matched, line))
+            i += len(matched)
+        else:
+            toks.append(Tok(PUNCT, c, line))
+            i += 1
+    return toks, comments
+
+
+# ------------------------------------------------------------ directives
+
+
+def parse_directives(comments):
+    """Returns (allows, errors): allows is {(line, rule)} granted for the
+    comment's own line and the next; errors are bad-annotation violations."""
+    allows = set()
+    errors = []
+    for line, text in comments:
+        marker = "cascadia-lint:"
+        pos = text.find(marker)
+        if pos < 0:
+            continue
+        rest = text[pos + len(marker) :].strip()
+        rule, reason, err = parse_allow(rest)
+        if err is not None:
+            errors.append((line, err))
+            continue
+        _ = reason
+        allows.add((line, rule))
+        allows.add((line + 1, rule))
+    return allows, errors
+
+
+def parse_allow(rest):
+    """Grammar: allow(<rule>, reason = "<non-empty>"). Returns
+    (rule, reason, error)."""
+    if not rest.startswith("allow(") or not rest.endswith(")"):
+        return None, None, "directive must be exactly `allow(<rule>, reason = \"...\")`"
+    inner = rest[len("allow(") : -1]
+    comma = inner.find(",")
+    if comma < 0:
+        return None, None, "missing `, reason = \"...\"`"
+    rule = inner[:comma].strip()
+    if rule not in RULES:
+        return None, None, f"unknown rule `{rule}`"
+    tail = inner[comma + 1 :].strip()
+    if not tail.startswith("reason"):
+        return None, None, "missing `reason`"
+    tail = tail[len("reason") :].strip()
+    if not tail.startswith("="):
+        return None, None, "missing `=` after `reason`"
+    tail = tail[1:].strip()
+    if len(tail) < 2 or tail[0] != '"' or tail[-1] != '"':
+        return None, None, "reason must be a double-quoted string"
+    if not tail[1:-1].strip():
+        return None, None, "reason must not be empty"
+    return rule, tail[1:-1], None
+
+
+# ---------------------------------------------------------------- lints
+
+
+class Guard:
+    __slots__ = ("name", "rank", "var", "depth", "temp", "line")
+
+    def __init__(self, name, rank, var, depth, temp, line):
+        self.name = name
+        self.rank = rank
+        self.var = var
+        self.depth = depth
+        self.temp = temp
+        self.line = line
+
+
+def lint_tokens(rel, toks):
+    """Returns [(line, rule, message)] (pre-annotation)."""
+    out = []
+    in_unwrap = unwrap_scope(rel)
+    in_det = determinism_scope(rel)
+
+    depth = 0
+    guards = []
+    test_stack = []
+    pending_test = False
+    pending_let_var = None
+    last_stmt = None  # (set of lock names, depth)
+    cur_stmt = set()
+
+    def tok(j):
+        return toks[j] if 0 <= j < len(toks) else None
+
+    def skip_unwrap_chain(j):
+        """j points just past an acquisition's `()`; skip `.unwrap()` /
+        `.expect(...)` links, returning the index of the next token."""
+        while True:
+            a, b, c = tok(j), tok(j + 1), tok(j + 2)
+            if (
+                a is not None
+                and a.kind == PUNCT
+                and a.text == "."
+                and b is not None
+                and b.kind == IDENT
+                and b.text in UNWRAP_METHODS
+                and c is not None
+                and c.kind == PUNCT
+                and c.text == "("
+            ):
+                pdepth = 1
+                k = j + 3
+                while k < len(toks) and pdepth > 0:
+                    if toks[k].kind == PUNCT and toks[k].text == "(":
+                        pdepth += 1
+                    elif toks[k].kind == PUNCT and toks[k].text == ")":
+                        pdepth -= 1
+                    k += 1
+                j = k
+            else:
+                return j
+
+    i = 0
+    while i < len(toks):
+        t = toks[i]
+        in_test = bool(test_stack)
+
+        # Attributes: skip their tokens entirely; `test` anywhere inside
+        # marks the next braced item as test-gated.
+        if t.kind == PUNCT and t.text == "#":
+            nxt = tok(i + 1)
+            j = i + 1
+            inner = nxt is not None and nxt.kind == PUNCT and nxt.text == "!"
+            if inner:
+                j += 1
+            open_tok = tok(j)
+            if open_tok is not None and open_tok.kind == PUNCT and open_tok.text == "[":
+                bdepth = 1
+                k = j + 1
+                saw_test = False
+                while k < len(toks) and bdepth > 0:
+                    tk = toks[k]
+                    if tk.kind == PUNCT and tk.text == "[":
+                        bdepth += 1
+                    elif tk.kind == PUNCT and tk.text == "]":
+                        bdepth -= 1
+                    elif tk.kind == IDENT and tk.text == "test":
+                        saw_test = True
+                    k += 1
+                if saw_test and not inner:
+                    pending_test = True
+                i = k
+                continue
+
+        if t.kind == PUNCT and t.text == "{":
+            depth += 1
+            if pending_test:
+                test_stack.append(depth)
+                pending_test = False
+            last_stmt = None
+            cur_stmt = set()
+        elif t.kind == PUNCT and t.text == "}":
+            guards = [g for g in guards if g.depth < depth]
+            if test_stack and test_stack[-1] == depth:
+                test_stack.pop()
+            depth -= 1
+            last_stmt = None
+            cur_stmt = set()
+        elif t.kind == PUNCT and t.text == ";":
+            guards = [g for g in guards if not (g.temp and g.depth == depth)]
+            last_stmt = (cur_stmt, depth)
+            cur_stmt = set()
+            pending_let_var = None
+            pending_test = False
+        elif t.kind == PUNCT and t.text == "=>":
+            last_stmt = None
+            cur_stmt = set()
+        elif t.kind == IDENT and t.text == "let":
+            nxt = tok(i + 1)
+            if nxt is not None and nxt.kind == IDENT and nxt.text == "mut":
+                nxt = tok(i + 2)
+            if nxt is not None and nxt.kind == IDENT:
+                pending_let_var = nxt.text
+            else:
+                pending_let_var = None
+        elif (
+            t.kind == IDENT
+            and t.text == "drop"
+            and tok(i + 1) is not None
+            and tok(i + 1).kind == PUNCT
+            and tok(i + 1).text == "("
+            and tok(i + 2) is not None
+            and tok(i + 2).kind == IDENT
+            and tok(i + 3) is not None
+            and tok(i + 3).kind == PUNCT
+            and tok(i + 3).text == ")"
+        ):
+            var = tok(i + 2).text
+            guards = [g for g in guards if g.var != var]
+
+        # Lock acquisition: `.lock()` / `.read()` / `.write()` (+ p-forms),
+        # empty parens only (RwLock/Mutex take no arguments).
+        if (
+            t.kind == PUNCT
+            and t.text == "."
+            and tok(i + 1) is not None
+            and tok(i + 1).kind == IDENT
+            and tok(i + 1).text in ACQUIRE_METHODS
+            and tok(i + 2) is not None
+            and tok(i + 2).kind == PUNCT
+            and tok(i + 2).text == "("
+            and tok(i + 3) is not None
+            and tok(i + 3).kind == PUNCT
+            and tok(i + 3).text == ")"
+            and not in_test
+        ):
+            line = tok(i + 1).line
+            prev = tok(i - 1)
+            raw = prev.text if prev is not None and prev.kind == IDENT else None
+            name = normalize_lock_name(raw)
+            rank = hierarchy_rank(name) if name is not None else None
+            # (a) same-lock re-entry while a guard is live
+            if name is not None:
+                for g in guards:
+                    if g.name == name:
+                        out.append((
+                            line,
+                            "lock-order",
+                            f"`{name}` re-acquired while already held "
+                            f"(guard taken on line {g.line}): deadlock",
+                        ))
+                        break
+            # (b) hierarchy order: nested acquisitions must move strictly
+            # down the declared hierarchy
+            if rank is not None:
+                for g in guards:
+                    if g.rank is not None and g.name != name and rank <= g.rank:
+                        out.append((
+                            line,
+                            "lock-order",
+                            f"`{name}` (tier {rank}) acquired while holding "
+                            f"`{g.name}` (tier {g.rank}, line {g.line}): "
+                            "out of declared hierarchy order",
+                        ))
+                        break
+            # binding shape decides the guard's lifetime
+            j = skip_unwrap_chain(i + 4)
+            nxt = tok(j)
+            if nxt is not None and nxt.kind == PUNCT and nxt.text == ";":
+                guards.append(Guard(name, rank, pending_let_var, depth, False, line))
+            elif nxt is not None and nxt.kind == PUNCT and nxt.text == "{":
+                guards.append(Guard(name, rank, None, depth + 1, False, line))
+            else:
+                # (c) statement-adjacent churn: the previous statement
+                # took and dropped this same lock
+                if (
+                    name is not None
+                    and last_stmt is not None
+                    and last_stmt[1] == depth
+                    and name in last_stmt[0]
+                ):
+                    out.append((
+                        line,
+                        "lock-order",
+                        f"`{name}` re-acquired immediately after the previous "
+                        "statement released it: take one guard and reuse it",
+                    ))
+                if name is not None:
+                    cur_stmt.add(name)
+                guards.append(Guard(name, rank, None, depth, True, line))
+
+        # Blocking call while any guard is held.
+        if (
+            t.kind == IDENT
+            and t.text in BLOCKING_CALLS
+            and tok(i + 1) is not None
+            and tok(i + 1).kind == PUNCT
+            and tok(i + 1).text == "("
+            and guards
+            and not in_test
+        ):
+            held = ", ".join(
+                f"`{g.name}`" if g.name is not None else "<unnamed>" for g in guards
+            )
+            out.append((
+                t.line,
+                "blocking-under-lock",
+                f"`{t.text}()` called while holding {held}: a blocked worker "
+                "starves every other thread contending for the guard",
+            ))
+
+        # Hot-path unwrap/expect ban.
+        if (
+            in_unwrap
+            and not in_test
+            and t.kind == IDENT
+            and t.text in UNWRAP_METHODS
+            and tok(i - 1) is not None
+            and tok(i - 1).kind == PUNCT
+            and tok(i - 1).text == "."
+            and tok(i + 1) is not None
+            and tok(i + 1).kind == PUNCT
+            and tok(i + 1).text == "("
+        ):
+            out.append((
+                t.line,
+                "hot-path-unwrap",
+                f"`.{t.text}()` on an engine/coordinator hot path: handle the "
+                "failure or annotate the invariant",
+            ))
+
+        # Determinism surface.
+        if in_det and not in_test:
+            if t.kind == IDENT and t.text in ("HashMap", "HashSet"):
+                out.append((
+                    t.line,
+                    "determinism",
+                    f"`{t.text}` in a determinism-pinned module: iteration "
+                    "order is unstable; use BTreeMap/BTreeSet or annotate",
+                ))
+            if (
+                t.kind == IDENT
+                and t.text in ("Instant", "SystemTime")
+                and tok(i + 1) is not None
+                and tok(i + 1).kind == PUNCT
+                and tok(i + 1).text == "::"
+                and tok(i + 2) is not None
+                and tok(i + 2).kind == IDENT
+                and tok(i + 2).text == "now"
+            ):
+                out.append((
+                    t.line,
+                    "determinism",
+                    f"`{t.text}::now()` in a determinism-pinned module: wall "
+                    "clock reads break DES/engine replay equivalence",
+                ))
+            if t.kind == PUNCT and t.text in ("==", "!="):
+                p, q = tok(i - 1), tok(i + 1)
+                if (p is not None and p.kind == LIT_NUM_FLOAT) or (
+                    q is not None and q.kind == LIT_NUM_FLOAT
+                ):
+                    out.append((
+                        t.line,
+                        "determinism",
+                        "direct f64 comparison against a literal: use an "
+                        "epsilon or restructure",
+                    ))
+        i += 1
+    return out
+
+
+def lint_source(rel, src):
+    toks, comments = lex(src)
+    allows, bad = parse_directives(comments)
+    violations = [
+        (line, rule, msg)
+        for (line, rule, msg) in lint_tokens(rel, toks)
+        if (line, rule) not in allows
+    ]
+    for line, err in bad:
+        violations.append((line, "bad-annotation", err))
+    violations.sort(key=lambda v: (v[0], v[1]))
+    return violations
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "rust/src"
+    if not os.path.isdir(root):
+        print(f"error: {root} is not a directory", file=sys.stderr)
+        return 2
+    if not LOCK_HIERARCHY:
+        print("error: no lock hierarchy declared", file=sys.stderr)
+        return 2
+    files = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                files.append(os.path.join(dirpath, f))
+    total = 0
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        for line, rule, msg in lint_source(rel, src):
+            print(f"{rel}:{line}: [{rule}] {msg}")
+            total += 1
+    print(f"cascadia-lint (mirror): {len(files)} files, {total} violation(s)")
+    return 0 if total == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
