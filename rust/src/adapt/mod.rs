@@ -32,4 +32,6 @@ pub mod replay;
 
 pub use cache::{CacheConfig, PlanCache, RegimeKey};
 pub use controller::{AdaptConfig, AdaptController, Rescheduler, TraceObserver};
-pub use replay::{run_replay, PhaseConfig, ReplayConfig, ReplayReport, RunReport};
+pub use replay::{
+    run_replay, run_replay_with_obs, PhaseConfig, ReplayConfig, ReplayReport, RunReport,
+};

@@ -22,8 +22,8 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::monitor::MonitorConfig;
 use crate::coordinator::server::{
-    CascadeServer, ResponseJudger, ServeControl, ServerConfig, ServerStats, TierBackend,
-    TierEngineStats, TierQueueStats, TraceEntry,
+    CascadeServer, ResponseJudger, ServeControl, ServeTelemetry, ServerConfig, ServerStats,
+    TierBackend, TierEngineStats, TierQueueStats, TraceEntry,
 };
 use crate::judge::Judger;
 use crate::metrics::{AdaptCounters, LatencySummary};
@@ -381,6 +381,18 @@ fn score_run(
 
 /// Run the frozen-vs-adaptive drift replay. See the module docs.
 pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
+    run_replay_with_obs(cfg, None)
+}
+
+/// [`run_replay`], with request-lifecycle tracing attached to the
+/// **adaptive** run (the frozen control run serves tracing-off, so the
+/// comparison is not perturbed). The caller keeps its `Arc` clones of
+/// the telemetry to export the span timeline (Chrome trace) and scrape
+/// the metrics registry after the replay returns.
+pub fn run_replay_with_obs(
+    cfg: &ReplayConfig,
+    telemetry: Option<Arc<ServeTelemetry>>,
+) -> Result<ReplayReport> {
     cfg.validate()?;
     let cascade = cascade_by_name(&cfg.cascade_name).expect("validated");
     let cluster = ClusterSpec::with_gpus(cfg.n_gpus);
@@ -433,7 +445,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
         models: cascade.clone(),
         judger: judger.clone(),
     };
-    let server = if cfg.continuous {
+    let mut server = if cfg.continuous {
         CascadeServer::new(ServerConfig::from_plan_with_engine(
             &plan,
             &cascade,
@@ -449,6 +461,9 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
         .serve_entries(&trace, &factory, &live_judger)
         .context("frozen replay run")?;
     let frozen = score_run(&stats_frozen, &phased, cfg, AdaptCounters::default());
+
+    // Tracing covers only the adaptive run, from here on.
+    server.set_telemetry(telemetry);
 
     // --- Adaptive run: monitor → re-schedule → hot-swap live. (The
     // frozen run cannot have touched `speeds` — it has no controller

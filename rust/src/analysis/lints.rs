@@ -14,8 +14,10 @@
 //!   `coordinator/` non-test code.
 //! * `determinism` — no `HashMap`/`HashSet`, `Instant::now`/
 //!   `SystemTime::now`, or float-literal `==`/`!=` in `sim/`, `sched/`,
-//!   `engine/scheduler.rs` non-test code (the DES↔engine equivalence
-//!   pins replay these modules).
+//!   `engine/scheduler.rs`, and `obs/` non-test code (the DES↔engine
+//!   equivalence pins replay these modules, and the DES emits trace
+//!   events through `obs/`). Exception: `obs/clock.rs` is the
+//!   designated wall-clock boundary and may read `Instant::now`.
 //!
 //! Suppression: a line comment carrying the `cascadia-lint` marker
 //! (tool name, then a colon) followed by `allow(<rule>, reason =
@@ -78,9 +80,15 @@ fn unwrap_scope(rel: &str) -> bool {
     rel.starts_with("engine/") || rel.starts_with("coordinator/")
 }
 
-/// Is `rel` inside the determinism-pinned modules?
+/// Is `rel` inside the determinism-pinned modules? `obs/` is pinned
+/// because the DES emits through it (shared tracing path), EXCEPT
+/// `obs/clock.rs` — the designated wall-clock boundary, the one place
+/// allowed to read `Instant::now`.
 fn determinism_scope(rel: &str) -> bool {
-    rel.starts_with("sim/") || rel.starts_with("sched/") || rel == "engine/scheduler.rs"
+    rel.starts_with("sim/")
+        || rel.starts_with("sched/")
+        || rel == "engine/scheduler.rs"
+        || (rel.starts_with("obs/") && rel != "obs/clock.rs")
 }
 
 /// Tier index of `name` in [`LOCK_HIERARCHY`], if declared.

@@ -303,6 +303,38 @@ fn t() {
         assert!(lint_source("coordinator/fixture.rs", src).is_empty());
     }
 
+    #[test]
+    fn determinism_instant_now_fires_in_obs() {
+        // The DES emits trace events through obs/ — wall-clock reads
+        // there would silently de-determinize the shared tracing path.
+        let src = "fn f() -> u64 { tick(std::time::Instant::now()) }\n";
+        let v = lint_source("obs/recorder.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+        assert!(v[0].message.contains("Instant::now()"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn determinism_systemtime_now_fires_in_obs() {
+        let src = "fn f() -> u64 { tick(std::time::SystemTime::now()) }\n";
+        let v = lint_source("obs/registry.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+    }
+
+    #[test]
+    fn determinism_hashmap_fires_in_obs() {
+        let src = "use std::collections::HashMap;\n";
+        let v = lint_source("obs/fixture.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+    }
+
+    #[test]
+    fn obs_clock_is_the_designated_wall_clock_exception() {
+        // obs/clock.rs is the one obs file allowed to read the wall
+        // clock — the Clock abstraction everything else goes through.
+        let src = "fn f() -> u64 { tick(std::time::Instant::now()) }\n";
+        assert!(lint_source("obs/clock.rs", src).is_empty());
+    }
+
     // ---------------------------------------------------- annotations
 
     #[test]

@@ -30,6 +30,6 @@ pub use cascade_sim::{simulate_cascade, CascadeSimResult};
 pub use monitor::{Monitor, MonitorConfig};
 pub use net::TcpFrontend;
 pub use server::{
-    AdmissionObserver, CascadeServer, ExecMode, ServeControl, ServerConfig, ServerStats,
-    TierBackend, TierEngineStats, TierQueueStats, TraceEntry,
+    AdmissionObserver, CascadeServer, ExecMode, ServeControl, ServeTelemetry, ServerConfig,
+    ServerStats, TierBackend, TierEngineStats, TierQueueStats, TraceEntry,
 };

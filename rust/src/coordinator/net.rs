@@ -24,6 +24,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::server::{BackendFactory, ResponseJudger, TierBackend};
+use crate::obs::{MetricsRegistry, LATENCY_BUCKETS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
 use crate::util::json::Json;
@@ -42,12 +43,26 @@ pub struct TcpFrontend {
     policy: RwLock<PolicySpec>,
     pub n_tiers: usize,
     pub max_new_default: usize,
+    /// Unified metrics for the wire path, scraped via `GET /metrics`
+    /// on the same port (Prometheus text exposition 0.0.4).
+    registry: Arc<MetricsRegistry>,
 }
 
 impl TcpFrontend {
     pub fn new(policy: PolicySpec, n_tiers: usize, max_new_default: usize) -> Result<TcpFrontend> {
         policy.validate(n_tiers)?;
-        Ok(TcpFrontend { policy: RwLock::new(policy), n_tiers, max_new_default })
+        Ok(TcpFrontend {
+            policy: RwLock::new(policy),
+            n_tiers,
+            max_new_default,
+            registry: Arc::new(MetricsRegistry::new()),
+        })
+    }
+
+    /// The front-end's metrics registry, shared with the scrape
+    /// endpoint — callers can read counters/histograms directly.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.registry)
     }
 
     /// Wire a scheduler-produced plan into the front-end: the plan's
@@ -137,6 +152,22 @@ impl TcpFrontend {
             if line.trim().is_empty() {
                 continue;
             }
+            // A plain-HTTP scrape on the JSON port: answer the request
+            // line with a full HTTP response and close the connection
+            // (Prometheus opens a fresh connection per scrape).
+            if line.trim_start().starts_with("GET ") {
+                let (status, body) = if line.trim_start().starts_with("GET /metrics") {
+                    ("200 OK", self.registry.render_prometheus())
+                } else {
+                    ("404 Not Found", String::from("only /metrics is served\n"))
+                };
+                write!(
+                    writer,
+                    "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                )?;
+                return Ok(());
+            }
             let reply = match self.one_request(&line, backends, judger) {
                 Ok(r) => r,
                 Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]),
@@ -175,6 +206,7 @@ impl TcpFrontend {
         // hot-swap never changes the rules mid-cascade.
         let policy = self.policy.pread().clone();
         let mut tier = policy.entry_tier(&features, c).min(c - 1);
+        self.registry.inc(&format!("cascadia_requests_admitted_total{{tier=\"{tier}\"}}"));
         let (tier, output, score) = loop {
             let output = backends[tier].generate(&prompt, max_new)?;
             let score = judger.score(&prompt, &output);
@@ -185,10 +217,25 @@ impl TcpFrontend {
             };
             match decision {
                 Decision::Accept => break (tier, output, score),
-                Decision::Escalate => tier += 1,
-                Decision::SkipTo(t) => tier = t.clamp(tier + 1, c - 1),
+                Decision::Escalate | Decision::SkipTo(_) => {
+                    let next = match decision {
+                        Decision::SkipTo(t) => t.clamp(tier + 1, c - 1),
+                        _ => tier + 1,
+                    };
+                    self.registry.inc(&format!(
+                        "cascadia_escalations_total{{from=\"{tier}\",to=\"{next}\"}}"
+                    ));
+                    tier = next;
+                }
             }
         };
+        self.registry
+            .inc(&format!("cascadia_requests_completed_total{{tier=\"{tier}\"}}"));
+        self.registry.observe(
+            &format!("cascadia_e2e_latency_seconds{{tier=\"{tier}\"}}"),
+            LATENCY_BUCKETS,
+            t0.elapsed().as_secs_f64(),
+        );
         Ok(Json::obj(vec![
             ("id", Json::num(id as f64)),
             (
@@ -307,6 +354,57 @@ mod tests {
         assert_eq!(r1.req("tier").unwrap().as_i64().unwrap(), 0);
         let r2 = read_json();
         assert_eq!(r2.req("tier").unwrap().as_i64().unwrap(), 1);
+
+        shutdown.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        use std::io::Read as _;
+        let addr = "127.0.0.1:39477";
+        let shutdown =
+            spawn_server(addr, PolicySpec::threshold(vec![50.0]).unwrap(), 2);
+
+        // Serve one easy and one hard request so both tiers have counts.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, r#"{{"id": 1, "prompt": [0, 7]}}"#).unwrap();
+        writeln!(stream, r#"{{"id": 2, "prompt": [1, 7]}}"#).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap();
+        }
+        drop(reader);
+        drop(stream);
+
+        // A fresh connection scrapes like Prometheus would.
+        let mut scrape = TcpStream::connect(addr).unwrap();
+        write!(scrape, "GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        BufReader::new(scrape).read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 200 OK"), "{response}");
+        assert!(response.contains("text/plain; version=0.0.4"), "{response}");
+        assert!(
+            response.contains("cascadia_requests_completed_total{tier=\"0\"} 1"),
+            "{response}"
+        );
+        assert!(
+            response.contains("cascadia_requests_completed_total{tier=\"1\"} 1"),
+            "{response}"
+        );
+        assert!(
+            response.contains("cascadia_escalations_total{from=\"0\",to=\"1\"} 1"),
+            "{response}"
+        );
+        assert!(response.contains("cascadia_e2e_latency_seconds_bucket"), "{response}");
+
+        // Unknown paths get a 404, not a JSON error.
+        let mut other = TcpStream::connect(addr).unwrap();
+        write!(other, "GET /health HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        BufReader::new(other).read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 404"), "{response}");
 
         shutdown.store(true, Ordering::SeqCst);
     }

@@ -33,6 +33,10 @@ use crate::cluster::ClusterSpec;
 use crate::coordinator::batcher::Batcher;
 use crate::engine::{prompt_page_hashes, EngineConfig, EngineCore, StepBackend};
 use crate::models::ModelSpec;
+use crate::obs::{
+    Clock, EngineTracer, Event as ObsEvent, EventKind as ObsEventKind, MetricsRegistry,
+    TraceRecorder, ACTION_ACCEPT, ACTION_ESCALATE, ACTION_SKIP, LATENCY_BUCKETS, REQ_NONE,
+};
 use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
@@ -258,8 +262,10 @@ fn continuous_worker_loop(
     tx: Sender<RouterMsg>,
     max_new: &AtomicUsize,
     t0: Instant,
+    tracer: Option<EngineTracer>,
 ) {
     let mut engine: EngineCore<LiveRequest> = EngineCore::new(backend, cfg);
+    engine.set_tracer(tracer.clone());
     loop {
         // Pick up a hot-swapped pool size at the iteration boundary.
         let budget = pool_pages.load(Ordering::SeqCst).max(1);
@@ -276,6 +282,7 @@ fn continuous_worker_loop(
                     let room = share.saturating_sub(engine.n_seqs());
                     for p in b.admit_up_to(room, t0.elapsed().as_secs_f64()) {
                         let prompt = p.item.prompt.clone();
+                        let rid = p.item.id as u64;
                         let mn = p
                             .item
                             .max_new
@@ -290,7 +297,13 @@ fn continuous_worker_loop(
                         } else {
                             None
                         };
-                        engine.submit_with_prefix(p.item, prompt, mn, hashes);
+                        if let Some(tr) = &tracer {
+                            tr.emit(rid, ObsEventKind::QueueExit, 0, 0, 0);
+                        }
+                        // The GLOBAL request id keys this sequence's
+                        // trace events, so escalation chains stay
+                        // linked across per-tier engines.
+                        engine.submit_traced(p.item, prompt, mn, hashes, rid);
                     }
                 }
                 if !engine.is_idle() {
@@ -680,9 +693,34 @@ impl TierState {
     }
 }
 
+/// Tracing + metrics sinks for one serving run (see [`crate::obs`]).
+///
+/// The caller keeps its own `Arc` clones: after the run, read the
+/// event timeline off `recorder` (Chrome export, timeline diff) and
+/// scrape `registry` ([`MetricsRegistry::render_prometheus`]). One
+/// recorder shard per tier keeps worker emission contention-free; the
+/// router and submitter emit on the shard of the tier they touch.
+pub struct ServeTelemetry {
+    pub recorder: Arc<TraceRecorder>,
+    pub registry: Arc<MetricsRegistry>,
+}
+
+impl ServeTelemetry {
+    /// Sinks sized for an `n_tiers` cascade.
+    pub fn for_tiers(n_tiers: usize) -> Arc<ServeTelemetry> {
+        Arc::new(ServeTelemetry {
+            recorder: Arc::new(TraceRecorder::for_tiers(n_tiers)),
+            registry: Arc::new(MetricsRegistry::new()),
+        })
+    }
+}
+
 /// The cascade serving engine.
 pub struct CascadeServer {
     pub config: ServerConfig,
+    /// Optional tracing/metrics sinks; `None` (the default) keeps the
+    /// request path free of any observability work.
+    telemetry: Option<Arc<ServeTelemetry>>,
 }
 
 enum RouterMsg {
@@ -724,12 +762,19 @@ impl CascadeServer {
             }
         }
         config.policy.validate(config.replicas.len())?;
-        Ok(CascadeServer { config })
+        Ok(CascadeServer { config, telemetry: None })
     }
 
     /// Build the server straight from a scheduler plan.
     pub fn from_plan(plan: &CascadePlan, max_new_tokens: usize) -> Result<CascadeServer> {
         CascadeServer::new(ServerConfig::from_plan(plan, max_new_tokens)?)
+    }
+
+    /// Attach (or detach) tracing + metrics sinks for subsequent serve
+    /// calls. The caller keeps its own `Arc` to read results after the
+    /// run.
+    pub fn set_telemetry(&mut self, telemetry: Option<Arc<ServeTelemetry>>) {
+        self.telemetry = telemetry;
     }
 
     /// Serve a trace of (arrival_offset_seconds, prompt) pairs; blocks
@@ -810,6 +855,12 @@ impl CascadeServer {
     ) -> Result<ServerStats> {
         let c = self.config.replicas.len();
         let t0 = Instant::now();
+        // Observability sinks for this run: one wall clock anchored at
+        // t0 stamps every event, so timestamps are seconds-from-serve-
+        // start (directly comparable with DES timelines). `None` keeps
+        // every emission branch dead.
+        let telem: Option<Arc<ServeTelemetry>> = self.telemetry.clone();
+        let clock = Clock::wall_from(t0);
         let tiers: Vec<TierState> = self
             .config
             .max_batch
@@ -854,9 +905,21 @@ impl CascadeServer {
             let max_new = &max_new_live;
             let pool_live_ref = &pool_pages_live;
             let engine_ctr_ref = &engine_counters;
+            let telem_ref = &telem;
+            let clock_ref = &clock;
             let spawn_worker = |tier: usize| {
                 let tier_state = &tiers_ref[tier];
                 let tx = tx.clone();
+                // Workers emit on their tier's recorder shard; the
+                // router is the terminal authority for `finished`
+                // (a request may traverse several engines).
+                let tracer = telem_ref.as_ref().map(|tm| EngineTracer {
+                    recorder: Arc::clone(&tm.recorder),
+                    shard: tier,
+                    tier: tier as u32,
+                    clock: clock_ref.clone(),
+                    terminal: false,
+                });
                 alive[tier].fetch_add(1, Ordering::SeqCst);
                 scope.spawn(move || {
                     // Panics in the backend are contained and converted
@@ -895,6 +958,7 @@ impl CascadeServer {
                             tx,
                             max_new,
                             t0,
+                            tracer,
                         );
                         return;
                     }
@@ -933,6 +997,11 @@ impl CascadeServer {
                                 b = tier_state.wake.pwait(b);
                             }
                         };
+                        if let Some(tr) = &tracer {
+                            for p in &batch {
+                                tr.emit(p.item.id as u64, ObsEventKind::QueueExit, 0, 0, 0);
+                            }
+                        }
                         let n = batch.len();
                         let mut iter = batch.into_iter();
                         while let Some(pending) = iter.next() {
@@ -1006,6 +1075,8 @@ impl CascadeServer {
             // runs (length-predictive entry). ---
             let submit_tiers = &tiers;
             let policy_ref = &policy;
+            let telem_sub = telem_ref;
+            let clock_sub = clock_ref;
             let hash_prompts =
                 engine_mode.is_some_and(|v| v.iter().any(|e| e.share_prefixes));
             scope.spawn(move || {
@@ -1024,6 +1095,33 @@ impl CascadeServer {
                     let features = RequestFeatures::live(entry.prompt.len());
                     let entry_tier =
                         policy_ref.pread().entry_tier(&features, c).min(c - 1);
+                    if let Some(tm) = telem_sub {
+                        let t = clock_sub.now();
+                        tm.recorder.emit(
+                            entry_tier,
+                            ObsEvent {
+                                a: entry_tier as u64,
+                                ..ObsEvent::at(
+                                    t,
+                                    i as u64,
+                                    entry_tier as u32,
+                                    ObsEventKind::Admitted,
+                                )
+                            },
+                        );
+                        tm.recorder.emit(
+                            entry_tier,
+                            ObsEvent::at(
+                                t,
+                                i as u64,
+                                entry_tier as u32,
+                                ObsEventKind::QueueEnter,
+                            ),
+                        );
+                        tm.registry.inc(&format!(
+                            "cascadia_requests_admitted_total{{tier=\"{entry_tier}\"}}"
+                        ));
+                    }
                     // Hash the prompt ONCE; every tier (and every
                     // escalation) reuses the chain.
                     let hashes = hash_prompts.then(|| {
@@ -1086,7 +1184,22 @@ impl CascadeServer {
                             // Surplus workers wake up and retire.
                             tiers[t].wake.notify_all();
                         }
-                        ctrl.hot_swaps.fetch_add(1, Ordering::SeqCst);
+                        let ordinal = ctrl.hot_swaps.fetch_add(1, Ordering::SeqCst) + 1;
+                        if let Some(tm) = &telem {
+                            tm.recorder.emit(
+                                0,
+                                ObsEvent {
+                                    a: ordinal as u64,
+                                    ..ObsEvent::at(
+                                        clock.now(),
+                                        REQ_NONE,
+                                        0,
+                                        ObsEventKind::HotSwapApplied,
+                                    )
+                                },
+                            );
+                            tm.registry.inc("cascadia_hot_swaps_total");
+                        }
                     }
                 }
                 // Adaptive runs poll with a short timeout so a queued
@@ -1154,6 +1267,26 @@ impl CascadeServer {
                             Decision::Escalate => Some(tier + 1),
                             Decision::SkipTo(t) => Some(t.clamp(tier + 1, c - 1)),
                         };
+                        if let Some(tm) = &telem {
+                            let action = match decision {
+                                Decision::Accept => ACTION_ACCEPT,
+                                Decision::Escalate => ACTION_ESCALATE,
+                                Decision::SkipTo(_) => ACTION_SKIP,
+                            };
+                            tm.recorder.emit(
+                                tier,
+                                ObsEvent {
+                                    a: action,
+                                    b: next_tier.unwrap_or(tier) as u64,
+                                    ..ObsEvent::at(
+                                        clock.now(),
+                                        req.id as u64,
+                                        tier as u32,
+                                        ObsEventKind::RouteDecision,
+                                    )
+                                },
+                            );
+                        }
                         if next_tier.is_none() {
                             let e2e = req.submitted.elapsed();
                             let execd = {
@@ -1162,6 +1295,38 @@ impl CascadeServer {
                             };
                             let ttft =
                                 first_tokens.plock().remove(&req.id).unwrap_or(e2e);
+                            if let Some(tm) = &telem {
+                                // The router is the terminal authority:
+                                // exactly one `finished` per request.
+                                tm.recorder.emit(
+                                    tier,
+                                    ObsEvent {
+                                        fa: ttft.as_secs_f64(),
+                                        fb: e2e.as_secs_f64(),
+                                        ..ObsEvent::at(
+                                            clock.now(),
+                                            req.id as u64,
+                                            tier as u32,
+                                            ObsEventKind::Finished,
+                                        )
+                                    },
+                                );
+                                tm.registry.observe(
+                                    &format!("cascadia_ttft_seconds{{tier=\"{tier}\"}}"),
+                                    LATENCY_BUCKETS,
+                                    ttft.as_secs_f64(),
+                                );
+                                tm.registry.observe(
+                                    &format!(
+                                        "cascadia_e2e_latency_seconds{{tier=\"{tier}\"}}"
+                                    ),
+                                    LATENCY_BUCKETS,
+                                    e2e.as_secs_f64(),
+                                );
+                                tm.registry.inc(&format!(
+                                    "cascadia_requests_completed_total{{tier=\"{tier}\"}}"
+                                ));
+                            }
                             completions.push(Completion {
                                 id: req.id,
                                 output,
@@ -1176,6 +1341,34 @@ impl CascadeServer {
                             done += 1;
                         } else {
                             let next = next_tier.unwrap_or(c - 1);
+                            if let Some(tm) = &telem {
+                                let t = clock.now();
+                                tm.recorder.emit(
+                                    tier,
+                                    ObsEvent {
+                                        a: tier as u64,
+                                        b: next as u64,
+                                        ..ObsEvent::at(
+                                            t,
+                                            req.id as u64,
+                                            tier as u32,
+                                            ObsEventKind::Escalate,
+                                        )
+                                    },
+                                );
+                                tm.recorder.emit(
+                                    next,
+                                    ObsEvent::at(
+                                        t,
+                                        req.id as u64,
+                                        next as u32,
+                                        ObsEventKind::QueueEnter,
+                                    ),
+                                );
+                                tm.registry.inc(&format!(
+                                    "cascadia_escalations_total{{from=\"{tier}\",to=\"{next}\"}}"
+                                ));
+                            }
                             // One guard for the whole accumulation —
                             // re-locking `queue_time` per clause is the
                             // lock churn the `lock-order` lint flags.
@@ -1237,6 +1430,14 @@ impl CascadeServer {
                     swap_bytes: engine_counters[t].swap_bytes.load(Ordering::SeqCst),
                 })
                 .collect();
+            if let Some(tm) = &telem {
+                tm.registry
+                    .gauge_set("cascadia_trace_events", tm.recorder.n_events() as f64);
+                tm.registry.gauge_set(
+                    "cascadia_trace_dropped_events",
+                    tm.recorder.dropped_events() as f64,
+                );
+            }
             Ok(ServerStats {
                 completions,
                 wall_clock: t0.elapsed(),
@@ -1993,5 +2194,135 @@ mod tests {
             6
         )
         .is_err());
+    }
+
+    // ---- Request-lifecycle tracing (obs) on the live path ----
+
+    #[test]
+    fn telemetry_one_terminal_event_per_request_and_linked_escalations() {
+        use crate::obs::EventKind as K;
+        let mut server = CascadeServer::new(config()).unwrap();
+        let telem = ServeTelemetry::for_tiers(2);
+        server.set_telemetry(Some(Arc::clone(&telem)));
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..20).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 20);
+
+        let by_req = telem.recorder.per_request();
+        assert_eq!(by_req.len(), 20, "every admitted request must leave a span");
+        for (req, evs) in &by_req {
+            let fin: Vec<_> = evs.iter().filter(|e| e.kind == K::Finished).collect();
+            assert_eq!(fin.len(), 1, "req {req}: exactly one terminal event");
+            assert!(
+                evs.last().map(|e| e.kind.is_terminal()).unwrap_or(false),
+                "req {req}: terminal event must close the span"
+            );
+            assert_eq!(
+                evs.iter().filter(|e| e.kind == K::Admitted).count(),
+                1,
+                "req {req}: exactly one admission"
+            );
+            assert!(fin[0].fb >= fin[0].fa, "req {req}: e2e >= ttft");
+            let escalated = *req % 2 == 1; // difficulty 1 fails tier 0
+            let esc: Vec<_> = evs.iter().filter(|e| e.kind == K::Escalate).collect();
+            if escalated {
+                assert_eq!(esc.len(), 1, "req {req}: one escalation hop");
+                assert_eq!((esc[0].a, esc[0].b), (0, 1), "req {req}: tier 0 -> 1");
+                // The chain spans both tiers under a single request id,
+                // finishing on the tier that accepted.
+                assert!(evs.iter().any(|e| e.tier == 0) && evs.iter().any(|e| e.tier == 1));
+                assert_eq!(fin[0].tier, 1, "req {req}: accepted at tier 1");
+                assert!(evs.iter().any(|e| {
+                    e.kind == K::RouteDecision && e.tier == 0 && e.a == ACTION_ESCALATE
+                }));
+            } else {
+                assert!(esc.is_empty(), "req {req}: easy requests never escalate");
+                assert_eq!(fin[0].tier, 0, "req {req}: accepted at tier 0");
+            }
+            assert!(evs.iter().any(|e| {
+                e.kind == K::RouteDecision && e.a == ACTION_ACCEPT && e.tier == fin[0].tier
+            }));
+        }
+        assert_eq!(telem.recorder.dropped_events(), 0);
+
+        // The registry derives the same counts the stats report, and the
+        // scrape carries per-tier latency histograms.
+        assert_eq!(telem.registry.counter("cascadia_requests_admitted_total{tier=\"0\"}"), 20);
+        assert_eq!(telem.registry.counter("cascadia_requests_completed_total{tier=\"0\"}"), 10);
+        assert_eq!(telem.registry.counter("cascadia_requests_completed_total{tier=\"1\"}"), 10);
+        assert_eq!(telem.registry.counter("cascadia_escalations_total{from=\"0\",to=\"1\"}"), 10);
+        let scrape = telem.registry.render_prometheus();
+        assert!(scrape.contains("cascadia_ttft_seconds_bucket{tier=\"0\""), "{scrape}");
+        assert!(scrape.contains("cascadia_e2e_latency_seconds_sum"), "{scrape}");
+        assert!(scrape.contains("cascadia_trace_events"), "{scrape}");
+    }
+
+    #[test]
+    fn telemetry_continuous_engines_trace_without_double_terminals() {
+        use crate::obs::EventKind as K;
+        let mut server = CascadeServer::new(continuous_config()).unwrap();
+        let telem = ServeTelemetry::for_tiers(2);
+        server.set_telemetry(Some(Arc::clone(&telem)));
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..12).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 12);
+        let by_req = telem.recorder.per_request();
+        assert_eq!(by_req.len(), 12);
+        for (req, evs) in &by_req {
+            assert_eq!(
+                evs.iter().filter(|e| e.kind == K::Finished).count(),
+                1,
+                "req {req}: engine tracers must not add a second terminal"
+            );
+            assert!(
+                evs.iter().any(|e| e.kind == K::PrefillChunk),
+                "req {req}: engine prefill must be traced on the live path"
+            );
+            assert!(
+                evs.iter().any(|e| e.kind == K::QueueExit),
+                "req {req}: queue exit must be traced"
+            );
+        }
+        assert_eq!(telem.recorder.dropped_events(), 0);
+    }
+
+    #[test]
+    fn telemetry_hot_swap_emits_marker_event() {
+        use crate::obs::EventKind as K;
+        let mut server = CascadeServer::new(
+            ServerConfig::with_thresholds(vec![1, 1], vec![1, 1], vec![50.0], 4).unwrap(),
+        )
+        .unwrap();
+        let telem = ServeTelemetry::for_tiers(2);
+        server.set_telemetry(Some(Arc::clone(&telem)));
+        let control = ServeControl::new(2);
+        let next =
+            ServerConfig::with_thresholds(vec![3, 2], vec![4, 4], vec![0.0], 4).unwrap();
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 10,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..40).map(|i| (0.0, vec![(i % 2) as i32, 5])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 40);
+        let snap = telem.recorder.snapshot();
+        let swaps: Vec<_> = snap.iter().filter(|e| e.kind == K::HotSwapApplied).collect();
+        assert_eq!(swaps.len(), 1, "one hot-swap, one marker");
+        assert_eq!(swaps[0].a, 1, "marker carries the swap ordinal");
+        assert_eq!(swaps[0].req, REQ_NONE, "markers are not request-scoped");
+        assert_eq!(telem.registry.counter("cascadia_hot_swaps_total"), 1);
+        // Markers never leak into per-request spans.
+        assert!(telem
+            .recorder
+            .per_request()
+            .values()
+            .all(|evs| evs.iter().all(|e| e.kind != K::HotSwapApplied)));
     }
 }

@@ -44,8 +44,8 @@ use anyhow::{Context, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::server::{
-    CascadeServer, ExecMode, ResponseJudger, ServerConfig, ServerStats, TierBackend,
-    TierEngineStats, TierQueueStats, TraceEntry,
+    CascadeServer, ExecMode, ResponseJudger, ServeTelemetry, ServerConfig, ServerStats,
+    TierBackend, TierEngineStats, TierQueueStats, TraceEntry,
 };
 use crate::judge::Judger;
 use crate::metrics::LatencySummary;
@@ -234,6 +234,29 @@ pub struct ChunkedReport {
     pub win: bool,
 }
 
+/// Tracing-overhead section: the headline trace re-served with the
+/// span recorder + metrics registry detached vs attached. Recording
+/// must be effectively free: the gate allows a 3% relative p95
+/// regression plus 10 ms of *compressed* wall-clock slack
+/// (multiplied back to uncompressed seconds by the run's time scale,
+/// because time compression amplifies OS scheduling jitter by the
+/// same factor).
+#[derive(Debug, Clone)]
+pub struct TracingReport {
+    pub requests: usize,
+    /// p95 end-to-end latency, uncompressed seconds.
+    pub p95_off_s: f64,
+    pub p95_on_s: f64,
+    /// (on - off) / off.
+    pub overhead_frac: f64,
+    pub events_recorded: usize,
+    pub dropped_events: usize,
+    /// Tracing-on stayed inside the overhead budget, recorded at
+    /// least one event per request, and the ring buffers dropped
+    /// nothing.
+    pub win: bool,
+}
+
 /// The full benchmark written to `BENCH_serving.json`.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -255,17 +278,20 @@ pub struct BenchReport {
     pub prefix: PrefixReport,
     pub chunked: ChunkedReport,
     pub swap: SwapReport,
+    pub tracing: TracingReport,
 }
 
 impl BenchReport {
     /// Every gate the bench enforces: headline win, page budgets,
-    /// prefix-sharing win, chunked-TTFT win, swap-preemption win.
+    /// prefix-sharing win, chunked-TTFT win, swap-preemption win,
+    /// tracing-overhead win.
     pub fn all_green(&self) -> bool {
         self.win
             && self.occupancy_ok
             && self.prefix.win
             && self.chunked.win
             && self.swap.win
+            && self.tracing.win
     }
 
     pub fn to_json(&self) -> Json {
@@ -408,6 +434,25 @@ impl BenchReport {
                     ("swap_ins", Json::num(self.swap.swap_ins as f64)),
                     ("swap_bytes", Json::num(self.swap.swap_bytes as f64)),
                     ("win", Json::Bool(self.swap.win)),
+                ]),
+            ),
+            (
+                "tracing",
+                Json::obj(vec![
+                    ("requests", Json::num(self.tracing.requests as f64)),
+                    ("p95_off_s", Json::num(self.tracing.p95_off_s)),
+                    ("p95_on_s", Json::num(self.tracing.p95_on_s)),
+                    ("overhead_frac", Json::num(self.tracing.overhead_frac)),
+                    (
+                        "events_recorded",
+                        Json::num(self.tracing.events_recorded as f64),
+                    ),
+                    (
+                        "dropped_events",
+                        Json::num(self.tracing.dropped_events as f64),
+                    ),
+                    ("overhead_ok", Json::Bool(self.tracing.win)),
+                    ("win", Json::Bool(self.tracing.win)),
                 ]),
             ),
         ])
@@ -609,6 +654,7 @@ fn run_continuous(
     preemption: PreemptionMode,
     time_scale: f64,
     token_scale: f64,
+    telemetry: Option<Arc<ServeTelemetry>>,
 ) -> Result<ContinuousRun> {
     let engines: Vec<EngineConfig> = rms
         .iter()
@@ -625,13 +671,14 @@ fn run_continuous(
             e
         })
         .collect();
-    let server = CascadeServer::new(ServerConfig {
+    let mut server = CascadeServer::new(ServerConfig {
         replicas,
         max_batch,
         policy: PolicySpec::threshold(vec![threshold])?,
         max_new_tokens: max_new_default,
         exec: ExecMode::Continuous(engines),
     })?;
+    server.set_telemetry(telemetry);
     let prefilled = Arc::new(AtomicUsize::new(0));
     let rms_owned = rms.to_vec();
     let prefilled_f = Arc::clone(&prefilled);
@@ -845,6 +892,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Recompute,
             cfg.time_scale,
             cfg.token_scale as f64,
+            None,
         )
         .context("prefix baseline run")?;
         let shared = run_continuous(
@@ -862,6 +910,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Recompute,
             cfg.time_scale,
             cfg.token_scale as f64,
+            None,
         )
         .context("prefix shared run")?;
         all_occupancy_ok = all_occupancy_ok
@@ -951,6 +1000,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Recompute,
             cfg.time_scale,
             1.0,
+            None,
         )
         .context("chunked-section whole-prefill run")?;
         let chunked_run = run_continuous(
@@ -968,6 +1018,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Recompute,
             cfg.time_scale,
             1.0,
+            None,
         )
         .context("chunked-section chunked run")?;
         all_occupancy_ok = all_occupancy_ok
@@ -1045,6 +1096,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Recompute,
             ts_s,
             1.0,
+            None,
         )
         .context("swap-section recompute run")?;
         let swapped = run_continuous(
@@ -1062,6 +1114,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             PreemptionMode::Swap,
             ts_s,
             1.0,
+            None,
         )
         .context("swap-section swap run")?;
         all_occupancy_ok = all_occupancy_ok
@@ -1091,6 +1144,72 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         }
     };
 
+    // --- Tracing section: the headline trace re-served on the
+    // continuous engine with the span recorder + metrics registry
+    // detached vs attached. Both runs use identical configs; only the
+    // telemetry handle differs, so the delta is pure recording cost. ---
+    let tracing = {
+        let off = run_continuous(
+            &trace,
+            &judger,
+            &rms,
+            replicas.clone(),
+            max_batch.clone(),
+            cfg.threshold,
+            cfg.decode_steps,
+            cfg.page_tokens,
+            cfg.prefill_chunk,
+            false,
+            None,
+            PreemptionMode::Recompute,
+            cfg.time_scale,
+            cfg.token_scale as f64,
+            None,
+        )
+        .context("tracing-off run")?;
+        let telem = ServeTelemetry::for_tiers(replicas.len());
+        let on = run_continuous(
+            &trace,
+            &judger,
+            &rms,
+            replicas.clone(),
+            max_batch.clone(),
+            cfg.threshold,
+            cfg.decode_steps,
+            cfg.page_tokens,
+            cfg.prefill_chunk,
+            false,
+            None,
+            PreemptionMode::Recompute,
+            cfg.time_scale,
+            cfg.token_scale as f64,
+            Some(Arc::clone(&telem)),
+        )
+        .context("tracing-on run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&off.stats.engine)
+            && occupancy_ok(&on.stats.engine);
+        let p95_off = off.stats.p95_latency() * cfg.time_scale;
+        let p95_on = on.stats.p95_latency() * cfg.time_scale;
+        let events = telem.recorder.n_events();
+        let dropped = telem.recorder.dropped_events() as usize;
+        // 10 ms of compressed wall-clock jitter, expressed in
+        // uncompressed seconds: time compression multiplies OS
+        // scheduling noise by the same factor it divides latencies.
+        let slack = 0.010 * cfg.time_scale;
+        TracingReport {
+            requests: trace.len(),
+            p95_off_s: p95_off,
+            p95_on_s: p95_on,
+            overhead_frac: (p95_on - p95_off) / p95_off.max(1e-9),
+            events_recorded: events,
+            dropped_events: dropped,
+            win: p95_on <= p95_off * 1.03 + slack
+                && events >= trace.len()
+                && dropped == 0,
+        }
+    };
+
     Ok(BenchReport {
         calm_rate,
         burst_rate,
@@ -1105,6 +1224,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         prefix,
         chunked,
         swap,
+        tracing,
     })
 }
 
@@ -1173,6 +1293,16 @@ mod tests {
             report.swap.swap_prefill_tokens,
             report.swap.recompute_prefill_tokens
         );
+        assert!(
+            report.tracing.events_recorded >= report.tracing.requests,
+            "tracing-on run must record at least one event per request"
+        );
+        assert_eq!(report.tracing.dropped_events, 0);
+        assert!(
+            report.tracing.win,
+            "tracing must be within the overhead budget: p95 on {:.3}s vs off {:.3}s",
+            report.tracing.p95_on_s, report.tracing.p95_off_s
+        );
         assert!(report.all_green());
         // The report serializes with the fields CI greps for.
         let json = report.to_json().to_string();
@@ -1181,5 +1311,7 @@ mod tests {
         assert!(json.contains("\"prefix\""));
         assert!(json.contains("\"chunked\""));
         assert!(json.contains("\"swap\""));
+        assert!(json.contains("\"tracing\""));
+        assert!(json.contains("\"overhead_ok\":true"));
     }
 }

@@ -39,6 +39,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::server::TierBackend;
+use crate::obs::{emit_plan_events, EngineTracer};
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 
 use super::kv::{prompt_page_hashes, KvPool, SeqId};
@@ -226,6 +227,9 @@ struct SeqData<T> {
     submitted_at: Instant,
     admitted_at: Option<Instant>,
     first_token_at: Option<Instant>,
+    /// Global request id stamped on trace events (defaults to the
+    /// engine-local sequence id when the caller supplies none).
+    trace_key: u64,
 }
 
 /// Engine invariant: every id the iteration scheduler hands back refers
@@ -250,6 +254,10 @@ pub struct EngineCore<T> {
     iterations: u64,
     page_tokens: usize,
     share_prefixes: bool,
+    /// Optional trace emitter: every step's plan becomes events, and
+    /// (when this tracer is the terminal authority) every retirement
+    /// emits `finished`. None = tracing off, zero overhead.
+    tracer: Option<EngineTracer>,
 }
 
 impl<T> EngineCore<T> {
@@ -266,7 +274,14 @@ impl<T> EngineCore<T> {
             iterations: 0,
             page_tokens: cfg.page_tokens.max(1),
             share_prefixes: cfg.share_prefixes,
+            tracer: None,
         }
+    }
+
+    /// Attach (or detach) a trace emitter. Safe to call between steps;
+    /// events start/stop at the next iteration boundary.
+    pub fn set_tracer(&mut self, tracer: Option<EngineTracer>) {
+        self.tracer = tracer;
     }
 
     /// Queue a request; it joins the running batch at a later
@@ -286,6 +301,22 @@ impl<T> EngineCore<T> {
         prompt: Vec<i32>,
         max_new: usize,
         hashes: Option<Arc<Vec<u64>>>,
+    ) {
+        let key = self.next_id as u64;
+        self.submit_traced(payload, prompt, max_new, hashes, key);
+    }
+
+    /// Like [`EngineCore::submit_with_prefix`], stamping `trace_key`
+    /// (the GLOBAL request id) on this sequence's trace events — the
+    /// cascade passes the request index here so escalation chains stay
+    /// id-linked across per-tier engines.
+    pub fn submit_traced(
+        &mut self,
+        payload: T,
+        prompt: Vec<i32>,
+        max_new: usize,
+        hashes: Option<Arc<Vec<u64>>>,
+        trace_key: u64,
     ) {
         let id = self.next_id;
         self.next_id += 1;
@@ -313,6 +344,7 @@ impl<T> EngineCore<T> {
                 submitted_at: Instant::now(),
                 admitted_at: None,
                 first_token_at: None,
+                trace_key,
             },
         );
     }
@@ -427,6 +459,18 @@ impl<T> EngineCore<T> {
             (self.sched.pool().shared_claims(), self.sched.pool().cow_copies());
         let plan = self.sched.next_iteration();
         let pages_in_use = self.sched.pool().in_use();
+
+        // Trace the iteration plan before executing it: the emitted
+        // sequence is a pure function of the plan, so a DES run over
+        // the same scheduler produces the identical per-request event
+        // stream (the DES↔live equivalence pin rides on this).
+        if let Some(tr) = &self.tracer {
+            let t = tr.clock.now();
+            let data = &self.data;
+            emit_plan_events(&tr.recorder, tr.shard, t, tr.tier, &plan, |id| {
+                data.get(&id).map(|d| d.trace_key).unwrap_or(id as u64)
+            });
+        }
 
         // Recompute-preempted sequences lose engine and backend state;
         // they recompute from their prompt on re-admission.
@@ -548,6 +592,20 @@ impl<T> EngineCore<T> {
                 s.release(id);
             }
             let d = known(self.data.remove(&id), id, "retire");
+            let ttft_seconds = d
+                .first_token_at
+                .map(|t| t.duration_since(d.submitted_at).as_secs_f64())
+                .unwrap_or(0.0);
+            if let Some(tr) = &self.tracer {
+                // No-op unless this tracer is the terminal authority
+                // (standalone engines; the cascade router owns
+                // `finished` in full-server mode).
+                tr.emit_finished(
+                    d.trace_key,
+                    ttft_seconds,
+                    d.submitted_at.elapsed().as_secs_f64(),
+                );
+            }
             completed.push(Finished {
                 payload: d.payload,
                 output: d.output,
@@ -555,10 +613,7 @@ impl<T> EngineCore<T> {
                     .admitted_at
                     .map(|t| t.elapsed().as_secs_f64())
                     .unwrap_or(0.0),
-                ttft_seconds: d
-                    .first_token_at
-                    .map(|t| t.duration_since(d.submitted_at).as_secs_f64())
-                    .unwrap_or(0.0),
+                ttft_seconds,
                 first_token_at: d.first_token_at,
             });
         }
@@ -928,6 +983,54 @@ mod tests {
         assert_eq!(e.pool_pages(), 128);
         let fins = run_all(&mut e, 8);
         assert_eq!(fins.len(), 1);
+    }
+
+    #[test]
+    fn standalone_tracer_emits_plan_events_and_one_finished_per_request() {
+        use crate::obs::{EngineTracer, EventKind, TraceRecorder};
+        let rec = Arc::new(TraceRecorder::new(1, 4096));
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(NativeStep::default()), cfg(64));
+        e.set_tracer(Some(EngineTracer::standalone(Arc::clone(&rec))));
+        e.submit(0, vec![1, 2], 4);
+        e.submit(1, vec![3, 4], 4);
+        e.submit_traced(2, vec![5, 6], 4, None, 777);
+        let fins = run_all(&mut e, 32);
+        assert_eq!(fins.len(), 3);
+        let by_req = rec.per_request();
+        // Default trace keys are the engine-local ids; the explicit key
+        // overrides (how the cascade links escalation chains).
+        let mut keys: Vec<u64> = by_req.keys().copied().collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![0, 1, 777]);
+        for (req, evs) in &by_req {
+            let fin: Vec<_> =
+                evs.iter().filter(|ev| ev.kind == EventKind::Finished).collect();
+            assert_eq!(fin.len(), 1, "exactly one terminal event for req {req}");
+            assert!(
+                evs.iter().any(|ev| ev.kind == EventKind::PrefillChunk),
+                "req {req} saw its prefill traced"
+            );
+            assert!(
+                evs.iter().any(|ev| ev.kind == EventKind::DecodeIter),
+                "req {req} saw decode ticks traced"
+            );
+            assert!(fin[0].fb >= fin[0].fa, "e2e latency >= TTFT");
+        }
+        assert_eq!(rec.dropped_events(), 0);
+    }
+
+    #[test]
+    fn detached_tracer_means_no_events() {
+        use crate::obs::{EngineTracer, TraceRecorder};
+        let rec = Arc::new(TraceRecorder::new(1, 64));
+        let mut e: EngineCore<usize> =
+            EngineCore::new(Box::new(NativeStep::default()), cfg(64));
+        e.set_tracer(Some(EngineTracer::standalone(Arc::clone(&rec))));
+        e.set_tracer(None);
+        e.submit(0, vec![1], 2);
+        let _ = run_all(&mut e, 8);
+        assert_eq!(rec.n_events(), 0, "detached tracer must be zero-cost");
     }
 
     #[test]

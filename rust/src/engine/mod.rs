@@ -42,7 +42,7 @@ pub mod core;
 pub mod kv;
 pub mod scheduler;
 
-pub use bench::{run_serving_bench, BenchConfig, BenchReport};
+pub use bench::{run_serving_bench, BenchConfig, BenchReport, TracingReport};
 pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
 pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId, SwapShort};
 pub use scheduler::{

@@ -53,6 +53,7 @@ pub mod judge;
 pub mod metrics;
 pub mod milp;
 pub mod models;
+pub mod obs;
 pub mod parallel;
 pub mod perf;
 pub mod report;

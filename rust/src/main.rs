@@ -138,7 +138,29 @@ fn cmd_simulate(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace(cfg: &ExperimentConfig, out: &str) -> Result<()> {
+/// `cascadia trace`: workload CSV by default. `--export chrome` serves
+/// the workload through the traced paged DES and writes Chrome
+/// trace-event JSON (loadable in Perfetto / chrome://tracing);
+/// `--diff` replays one trace through both the paged DES and a real
+/// `EngineCore` and reports the first per-request timeline divergence
+/// (non-zero exit on any).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    if args.flag("diff") {
+        return cmd_trace_diff(&cfg);
+    }
+    match args.get("export") {
+        None => cmd_trace_csv(&cfg, &args.str_or("out", "results/trace.csv")),
+        Some(fmt) if fmt == "chrome" => cmd_trace_chrome(
+            &cfg,
+            args.usize_or("replicas", 2)?,
+            &args.str_or("out", "results/trace_chrome.json"),
+        ),
+        Some(other) => bail!("unknown --export format '{other}' (expected: chrome)"),
+    }
+}
+
+fn cmd_trace_csv(cfg: &ExperimentConfig, out: &str) -> Result<()> {
     let reqs = generate(&cfg.trace_spec(), cfg.n_requests, cfg.seed);
     let mut t = Table::new("", &["id", "arrival", "input_tokens", "output_tokens", "complexity"]);
     for r in &reqs {
@@ -155,6 +177,146 @@ fn cmd_trace(cfg: &ExperimentConfig, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// The configured workload as a paged-DES trace plus a replica sized
+/// for it under the scheduler's own cost model. `zero_arrivals` folds
+/// every arrival to t=0 — the all-at-once regime where DES ticks and
+/// live engine steps align by construction (what `--diff` compares).
+fn des_trace_inputs(
+    cfg: &ExperimentConfig,
+    zero_arrivals: bool,
+) -> (cascadia::perf::ReplicaModel, Vec<cascadia::sim::SimRequest>) {
+    use cascadia::sim::SimRequest;
+    let reqs = generate(&cfg.trace_spec(), cfg.n_requests, cfg.seed);
+    let trace: Vec<SimRequest> = reqs
+        .iter()
+        .map(|r| {
+            SimRequest::new(
+                if zero_arrivals { 0.0 } else { r.arrival },
+                r.input_tokens.clamp(2, 4096),
+                r.output_tokens.clamp(1, 256),
+            )
+        })
+        .collect();
+    let avg_ctx = trace
+        .iter()
+        .map(|r| (r.input_tokens + r.output_tokens) as f64)
+        .sum::<f64>()
+        / trace.len().max(1) as f64;
+    let cascade = cfg.cascade();
+    let cluster = cascadia::cluster::ClusterSpec::with_gpus(cfg.n_gpus);
+    let rm =
+        cascadia::perf::ReplicaModel::new(&cascade[0], &cluster, 1, 1, avg_ctx.max(64.0));
+    (rm, trace)
+}
+
+fn cmd_trace_chrome(cfg: &ExperimentConfig, replicas: usize, out: &str) -> Result<()> {
+    use cascadia::obs::{chrome_trace, TraceRecorder};
+    use cascadia::sim::simulate_paged_traced;
+
+    let (rm, trace) = des_trace_inputs(cfg, false);
+    let pool = vec![rm; replicas.max(1)];
+    let rec = TraceRecorder::new(pool.len(), 1 << 18);
+    let outcome = simulate_paged_traced(&pool, &trace, 16, usize::MAX, false, &rec);
+    let events = rec.snapshot();
+    let json = chrome_trace(&events);
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+    println!(
+        "wrote {} trace events ({} dropped) for {} requests (DES p95 {:.2}s) to {out}",
+        events.len(),
+        rec.dropped_events(),
+        trace.len(),
+        outcome.p95(),
+    );
+    Ok(())
+}
+
+/// Deterministic token-by-token backend for the `--diff` engine drive.
+struct DiffStep;
+
+impl cascadia::engine::StepBackend for DiffStep {
+    fn prefill_chunk(
+        &mut self,
+        seq: cascadia::engine::SeqId,
+        _chunk: &[i32],
+        last: bool,
+    ) -> Result<Option<i32>> {
+        Ok(last.then_some(seq as i32))
+    }
+    fn decode(&mut self, seqs: &[cascadia::engine::SeqId]) -> Result<Vec<i32>> {
+        Ok(seqs.iter().map(|&s| s as i32).collect())
+    }
+    fn release(&mut self, _seq: cascadia::engine::SeqId) {}
+}
+
+fn cmd_trace_diff(cfg: &ExperimentConfig) -> Result<()> {
+    use std::sync::Arc;
+
+    use cascadia::engine::{EngineConfig, EngineCore, PreemptionConfig};
+    use cascadia::obs::{diff_timelines, EngineTracer, TraceRecorder};
+    use cascadia::sim::simulate_paged_traced;
+
+    let (rm, mut trace) = des_trace_inputs(cfg, true);
+    trace.truncate(64); // the diff is per-request; 64 spans suffice
+    let des_rec = TraceRecorder::new(1, 1 << 18);
+    let _ = simulate_paged_traced(&[rm.clone()], &trace, 16, usize::MAX, false, &des_rec);
+
+    let engine_cfg = EngineConfig {
+        pool_pages: rm.kv_pages_total(16),
+        page_tokens: 16,
+        max_running: rm.max_batch.max(1),
+        prefill_chunk: usize::MAX,
+        share_prefixes: false,
+        preemption: PreemptionConfig::default(),
+    };
+    let live_rec = Arc::new(TraceRecorder::new(1, 1 << 18));
+    let mut eng: EngineCore<usize> = EngineCore::new(Box::new(DiffStep), engine_cfg);
+    eng.set_tracer(Some(EngineTracer::standalone(Arc::clone(&live_rec))));
+    let prompt_of = |r: &cascadia::sim::SimRequest| vec![7i32; r.input_tokens.max(1) as usize];
+    // Mirror the DES arrival semantics: request 0 alone in iteration 1,
+    // the rest visible from iteration 2.
+    eng.submit(0, prompt_of(&trace[0]), trace[0].output_tokens.max(1) as usize);
+    let mut first = true;
+    let mut ticks = 0u64;
+    while !eng.is_idle() {
+        ticks += 1;
+        if ticks > 1_000_000 {
+            bail!("engine failed to drain the diff trace within 1M iterations");
+        }
+        eng.step()?;
+        if first {
+            for (i, r) in trace.iter().enumerate().skip(1) {
+                eng.submit(i, prompt_of(r), r.output_tokens.max(1) as usize);
+            }
+            first = false;
+        }
+    }
+
+    let left = des_rec.snapshot();
+    let right = live_rec.snapshot();
+    let report = diff_timelines(&left, &right);
+    println!(
+        "DES events: {} | live events: {} | requests compared: {}",
+        report.events_left, report.events_right, report.requests_compared
+    );
+    if report.is_equivalent() {
+        println!("timelines are equivalent: zero divergence");
+        return Ok(());
+    }
+    match report.first_divergence() {
+        Some(d) => eprintln!("first divergence: {d}"),
+        None => eprintln!(
+            "request sets differ: only in DES {:?}, only live {:?}",
+            report.only_left, report.only_right
+        ),
+    }
+    bail!("DES and live timelines diverge ({} divergences)", report.divergences.len())
+}
+
 /// Drift replay (§4.4): serve a phase-shift trace twice — frozen at
 /// the startup plan and with the full adaptation loop — and report
 /// per-phase SLO attainment/quality plus the loop counters.
@@ -163,7 +325,37 @@ fn cmd_replay(args: &Args) -> Result<()> {
         "replay requires --config (see examples/configs/drift_replay.json)",
     )?;
     let cfg = cascadia::adapt::ReplayConfig::load(path)?;
-    let report = cascadia::adapt::run_replay(&cfg)?;
+
+    // Optional observability artifacts of the ADAPTIVE run: a Chrome
+    // trace-event timeline and a Prometheus scrape snapshot.
+    let trace_out = args.get("trace-out");
+    let metrics_out = args.get("metrics-out");
+    let telemetry = if trace_out.is_some() || metrics_out.is_some() {
+        let n_tiers = cascadia::models::cascade_by_name(&cfg.cascade_name)
+            .map(|c| c.len())
+            .unwrap_or(2);
+        Some(cascadia::coordinator::ServeTelemetry::for_tiers(n_tiers))
+    } else {
+        None
+    };
+    let report = cascadia::adapt::run_replay_with_obs(&cfg, telemetry.clone())?;
+    if let Some(tm) = &telemetry {
+        if let Some(out) = trace_out {
+            let json = cascadia::obs::chrome_trace(&tm.recorder.snapshot());
+            std::fs::write(out, format!("{json}\n"))
+                .with_context(|| format!("writing {out}"))?;
+            println!(
+                "wrote Chrome trace ({} events, {} dropped) to {out}",
+                tm.recorder.n_events(),
+                tm.recorder.dropped_events()
+            );
+        }
+        if let Some(out) = metrics_out {
+            std::fs::write(out, tm.registry.render_prometheus())
+                .with_context(|| format!("writing {out}"))?;
+            println!("wrote Prometheus metrics snapshot to {out}");
+        }
+    }
 
     println!("initial plan : {}", report.initial_plan);
     match &report.final_plan {
@@ -447,6 +639,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         report.swap.swap_bytes,
         report.swap.win,
     );
+    println!(
+        "tracing overhead ({} reqs): p95 off {:.2}s -> on {:.2}s ({:+.1}%) | \
+         events {} | dropped {} | win {}",
+        report.tracing.requests,
+        report.tracing.p95_off_s,
+        report.tracing.p95_on_s,
+        report.tracing.overhead_frac * 100.0,
+        report.tracing.events_recorded,
+        report.tracing.dropped_events,
+        report.tracing.win,
+    );
 
     let out = args.str_or("out", "BENCH_serving.json");
     std::fs::write(&out, format!("{}\n", report.to_json()))
@@ -491,6 +694,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
             report.swap.recompute_prefill_tokens
         );
     }
+    if !report.tracing.win {
+        bail!(
+            "request-lifecycle tracing exceeded its overhead budget \
+             (p95 {:.3}s on vs {:.3}s off, {} events, {} dropped)",
+            report.tracing.p95_on_s,
+            report.tracing.p95_off_s,
+            report.tracing.events_recorded,
+            report.tracing.dropped_events
+        );
+    }
     Ok(())
 }
 
@@ -502,7 +715,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&load_config(&args)?),
         "simulate" => cmd_simulate(&load_config(&args)?),
         "baselines" => cmd_baselines(&load_config(&args)?),
-        "trace" => cmd_trace(&load_config(&args)?, &args.str_or("out", "results/trace.csv")),
+        "trace" => cmd_trace(&args),
         "replay" => cmd_replay(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
@@ -529,7 +742,11 @@ fn print_help() {
          serve flags (without --plan): --h 80,70 --policy threshold \\\n\
          \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
          Online adaptation (drift replay, §4.4):\n\
-         \x20   cascadia replay --config examples/configs/drift_replay.json\n\n\
+         \x20   cascadia replay --config examples/configs/drift_replay.json \\\n\
+         \x20       [--trace-out replay_chrome.json] [--metrics-out replay.prom]\n\n\
+         Observability (request-lifecycle tracing):\n\
+         \x20   cascadia trace --export chrome [--replicas N] [--out trace_chrome.json]\n\
+         \x20   cascadia trace --diff    # paged DES vs live engine timeline diff\n\n\
          Serving benchmark (continuous engine vs lockstep baseline, plus\n\
          prefix-sharing, chunked-prefill, and swap-preemption sections):\n\
          \x20   cascadia bench [--smoke] [--prefix-heavy] [--seed S] [--out BENCH_serving.json]\n\n\

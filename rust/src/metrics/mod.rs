@@ -22,7 +22,7 @@ impl LatencySummary {
             return LatencySummary::default();
         }
         let mut v = latencies.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         LatencySummary {
             mean: stats::mean(&v),
             p50: stats::percentile_sorted(&v, 0.50),

@@ -1,0 +1,149 @@
+//! Chrome trace-event JSON export (the "JSON Array Format" with a
+//! `traceEvents` wrapper), loadable in `chrome://tracing` and
+//! Perfetto.
+//!
+//! Mapping: one **process per tier** (`pid` = tier, named
+//! `tier-N`), one **track per request** (`tid` = request id), so an
+//! engine tick's admit/preempt/swap interleaving is visually
+//! inspectable per tier while escalation chains stay aligned on the
+//! request's track. Every trace event becomes an instant (`ph: "i"`)
+//! with its payloads under `args`; requests that have both an
+//! `admitted` and a `finished` event additionally get a complete span
+//! (`ph: "X"`) stretching across their lifetime. Timestamps are the
+//! recorder's seconds scaled to microseconds (the format's unit).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{Event, EventKind, REQ_NONE};
+
+/// Convert a snapshot of trace events into a Chrome trace-event JSON
+/// document.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut items: Vec<Json> = Vec::with_capacity(events.len() + 16);
+
+    // Process name metadata: one per tier seen.
+    let mut tiers: Vec<u32> = events.iter().map(|e| e.tier).collect();
+    tiers.sort_unstable();
+    tiers.dedup();
+    for t in &tiers {
+        items.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(*t as f64)),
+            ("tid", Json::num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(format!("tier-{t}")))]),
+            ),
+        ]));
+    }
+
+    // Per-request lifetime spans: admitted .. finished.
+    let mut admitted: BTreeMap<u64, &Event> = BTreeMap::new();
+    for e in events {
+        if e.kind == EventKind::Admitted && e.req != REQ_NONE {
+            admitted.entry(e.req).or_insert(e);
+        }
+    }
+    for e in events {
+        if e.kind == EventKind::Finished && e.req != REQ_NONE {
+            if let Some(adm) = admitted.get(&e.req) {
+                let dur_us = ((e.t - adm.t).max(0.0)) * 1e6;
+                items.push(Json::obj(vec![
+                    ("name", Json::str(format!("request-{}", e.req))),
+                    ("cat", Json::str("request")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(adm.t * 1e6)),
+                    ("dur", Json::num(dur_us)),
+                    ("pid", Json::num(adm.tier as f64)),
+                    ("tid", Json::num(e.req as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("ttft_s", Json::num(e.fa)),
+                            ("latency_s", Json::num(e.fb)),
+                            ("accepting_tier", Json::num(e.tier as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+
+    // Every event as an instant on its request's track.
+    for e in events {
+        let tid = if e.req == REQ_NONE { 0.0 } else { e.req as f64 };
+        items.push(Json::obj(vec![
+            ("name", Json::str(e.kind.name())),
+            ("cat", Json::str("cascadia")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(e.t * 1e6)),
+            ("pid", Json::num(e.tier as f64)),
+            ("tid", Json::num(tid)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("a", Json::num(e.a as f64)),
+                    ("b", Json::num(e.b as f64)),
+                    ("c", Json::num(e.c as f64)),
+                    ("fa", Json::num(e.fa)),
+                    ("fb", Json::num(e.fb)),
+                    ("seq", Json::num(e.seq as f64)),
+                ]),
+            ),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(items)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Event;
+    use super::*;
+
+    #[test]
+    fn export_wraps_events_and_round_trips_as_json() {
+        let events = vec![
+            Event::at(0.001, 7, 0, EventKind::Admitted),
+            Event { a: 16, c: 1, ..Event::at(0.002, 7, 0, EventKind::PrefillChunk) },
+            Event { fa: 0.003, fb: 0.01, ..Event::at(0.011, 7, 1, EventKind::Finished) },
+        ];
+        let doc = chrome_trace(&events);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process meta per tier (2 tiers) + 1 request span + 3 instants.
+        assert_eq!(arr.len(), 6);
+        let span = arr
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.as_str().ok().map(|s| s.to_string()))
+                    == Some("X".to_string())
+            })
+            .expect("request span present");
+        assert_eq!(span.req("tid").unwrap().as_i64().unwrap(), 7);
+        // 10 ms lifetime in microseconds.
+        assert!((span.req("dur").unwrap().as_f64().unwrap() - 10_000.0).abs() < 1.0);
+        let names: Vec<String> = arr
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str().ok().map(String::from)))
+            .collect();
+        assert!(names.iter().any(|n| n == "prefill_chunk"));
+        assert!(names.iter().any(|n| n == "tier-1"));
+    }
+
+    #[test]
+    fn unfinished_requests_export_without_a_span() {
+        let events = vec![Event::at(0.0, 3, 0, EventKind::Admitted)];
+        let doc = chrome_trace(&events);
+        let arr_len = doc.req("traceEvents").unwrap().as_arr().unwrap().len();
+        assert_eq!(arr_len, 2, "one process meta + one instant, no span");
+    }
+}

@@ -1,0 +1,100 @@
+//! The clock boundary: wall vs simulated time behind one `now()`.
+//!
+//! This is the ONLY file under `obs/` permitted to read
+//! `Instant::now` — the `determinism` lint bans raw wall-clock reads
+//! everywhere else in the module, so the tracing path shared with the
+//! DES stays deterministic by construction. Everything downstream of a
+//! [`Clock`] sees only `f64` seconds since an epoch:
+//!
+//! * [`Clock::wall`] — seconds since construction (or an explicit
+//!   [`Instant`] epoch, so a server can stamp events on the same
+//!   timeline as its existing `t0.elapsed()` accounting);
+//! * [`Clock::manual`] — a settable simulated time, advanced by the
+//!   DES event loop (and by tests).
+//!
+//! Contract: `now()` is monotone non-decreasing for wall clocks; for
+//! manual clocks it returns exactly what [`Clock::set`] last stored
+//! (the DES sets it to the simulation's `now` before emitting).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::sync::LockExt;
+
+/// A source of event timestamps: wall time or simulated time.
+#[derive(Debug, Clone)]
+pub enum Clock {
+    /// Wall clock: `now()` = seconds since the stored epoch.
+    Wall(Instant),
+    /// Simulated clock: `now()` = the last value stored by `set`.
+    /// Shared, so the DES loop and its emitters see one timeline.
+    Manual(Arc<Mutex<f64>>),
+}
+
+impl Clock {
+    /// A wall clock whose epoch is "now".
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    /// A wall clock with an explicit epoch (share a server's `t0` so
+    /// trace timestamps align with its latency accounting).
+    pub fn wall_from(epoch: Instant) -> Clock {
+        Clock::Wall(epoch)
+    }
+
+    /// A simulated clock starting at 0.
+    pub fn manual() -> Clock {
+        Clock::Manual(Arc::new(Mutex::new(0.0)))
+    }
+
+    /// Seconds since the epoch.
+    pub fn now(&self) -> f64 {
+        match self {
+            Clock::Wall(epoch) => epoch.elapsed().as_secs_f64(),
+            Clock::Manual(t) => *t.plock(),
+        }
+    }
+
+    /// Advance a simulated clock. Panics on a wall clock — simulated
+    /// time cannot be injected into a wall timeline; that would forge
+    /// timestamps.
+    pub fn set(&self, t: f64) {
+        match self {
+            Clock::Wall(_) => panic!("cannot set a wall clock"),
+            Clock::Manual(cell) => *cell.plock() = t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = Clock::wall();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn manual_clock_returns_what_was_set() {
+        let c = Clock::manual();
+        assert_eq!(c.now(), 0.0);
+        c.set(12.5);
+        assert_eq!(c.now(), 12.5);
+        // Clones share the timeline (DES loop + emitters).
+        let c2 = c.clone();
+        c2.set(99.0);
+        assert_eq!(c.now(), 99.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot set a wall clock")]
+    fn wall_clock_rejects_set() {
+        Clock::wall().set(1.0);
+    }
+}

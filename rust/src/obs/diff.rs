@@ -1,0 +1,189 @@
+//! Timeline diff: align two traces per request and report the first
+//! divergence.
+//!
+//! This is the DES↔live equivalence surface: the paged DES and the
+//! live engine drive the same `IterationScheduler` and emit the same
+//! plan-derived event schema, so for a deterministic workload their
+//! per-request event sequences must be **identical up to timestamps**.
+//! The diff compares [`Event::signature`]s (kind + integer payloads;
+//! never `t`/`fa`/`fb`/`seq` — wall and simulated clocks legitimately
+//! disagree) request by request and reports the first mismatch per
+//! request plus requests present on only one side.
+
+use std::collections::BTreeMap;
+
+use super::{Event, REQ_NONE};
+
+/// One per-request mismatch between the two timelines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Divergence {
+    pub req: u64,
+    /// Index into the request's event sequence where the sides first
+    /// disagree.
+    pub index: usize,
+    /// Human-readable event signature on each side (`-` = side has no
+    /// event at this index).
+    pub left: String,
+    pub right: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req {} event #{}: left {} vs right {}",
+            self.req, self.index, self.left, self.right
+        )
+    }
+}
+
+/// Outcome of a timeline diff.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    /// Requests present on both sides.
+    pub requests_compared: usize,
+    /// Requests appearing on exactly one side.
+    pub only_left: Vec<u64>,
+    pub only_right: Vec<u64>,
+    /// First mismatch per diverging request, request order.
+    pub divergences: Vec<Divergence>,
+    pub events_left: usize,
+    pub events_right: usize,
+}
+
+impl DiffReport {
+    /// True when the timelines agree: same request set, same
+    /// per-request event signature sequences.
+    pub fn is_equivalent(&self) -> bool {
+        self.divergences.is_empty() && self.only_left.is_empty() && self.only_right.is_empty()
+    }
+
+    /// The first divergence in request order, if any.
+    pub fn first_divergence(&self) -> Option<&Divergence> {
+        self.divergences.first()
+    }
+}
+
+fn describe(ev: Option<&Event>) -> String {
+    match ev {
+        Some(e) => format!("{}(a={},b={},c={})", e.kind.name(), e.a, e.b, e.c),
+        None => "-".to_string(),
+    }
+}
+
+fn by_request(events: &[Event]) -> BTreeMap<u64, Vec<&Event>> {
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by_key(|e| e.seq);
+    let mut map: BTreeMap<u64, Vec<&Event>> = BTreeMap::new();
+    for e in sorted {
+        if e.req != REQ_NONE {
+            map.entry(e.req).or_default().push(e);
+        }
+    }
+    map
+}
+
+/// Diff two event timelines per request. See the module docs.
+pub fn diff_timelines(left: &[Event], right: &[Event]) -> DiffReport {
+    let l = by_request(left);
+    let r = by_request(right);
+    let mut report = DiffReport {
+        events_left: left.len(),
+        events_right: right.len(),
+        ..DiffReport::default()
+    };
+    for req in l.keys() {
+        if !r.contains_key(req) {
+            report.only_left.push(*req);
+        }
+    }
+    for req in r.keys() {
+        if !l.contains_key(req) {
+            report.only_right.push(*req);
+        }
+    }
+    for (req, lev) in &l {
+        let Some(rev) = r.get(req) else { continue };
+        report.requests_compared += 1;
+        let n = lev.len().max(rev.len());
+        for i in 0..n {
+            let a = lev.get(i).copied();
+            let b = rev.get(i).copied();
+            let same = match (a, b) {
+                (Some(x), Some(y)) => x.signature() == y.signature(),
+                _ => false,
+            };
+            if !same {
+                report.divergences.push(Divergence {
+                    req: *req,
+                    index: i,
+                    left: describe(a),
+                    right: describe(b),
+                });
+                break;
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EventKind;
+    use super::*;
+
+    fn ev(seq: u64, req: u64, kind: EventKind, a: u64) -> Event {
+        Event { seq, a, ..Event::at(seq as f64, req, 0, kind) }
+    }
+
+    #[test]
+    fn identical_sequences_with_different_timestamps_are_equivalent() {
+        let left = vec![
+            ev(0, 1, EventKind::PrefillChunk, 8),
+            ev(1, 1, EventKind::DecodeIter, 1),
+            ev(2, 1, EventKind::Finished, 0),
+        ];
+        let mut right = left.clone();
+        for (i, e) in right.iter_mut().enumerate() {
+            e.t = 100.0 + i as f64; // timestamps differ wildly
+            e.fa = 42.0;
+        }
+        let rep = diff_timelines(&left, &right);
+        assert!(rep.is_equivalent(), "{:?}", rep.divergences);
+        assert_eq!(rep.requests_compared, 1);
+    }
+
+    #[test]
+    fn payload_mismatch_reports_first_divergence() {
+        let left = vec![
+            ev(0, 5, EventKind::PrefillChunk, 8),
+            ev(1, 5, EventKind::DecodeIter, 2),
+        ];
+        let right = vec![
+            ev(0, 5, EventKind::PrefillChunk, 8),
+            ev(1, 5, EventKind::DecodeIter, 3),
+        ];
+        let rep = diff_timelines(&left, &right);
+        assert!(!rep.is_equivalent());
+        let d = rep.first_divergence().unwrap();
+        assert_eq!((d.req, d.index), (5, 1));
+        assert!(d.to_string().contains("decode_iter(a=2"), "{d}");
+        assert!(d.to_string().contains("decode_iter(a=3"), "{d}");
+    }
+
+    #[test]
+    fn length_mismatch_and_missing_requests_are_flagged() {
+        let left = vec![ev(0, 1, EventKind::DecodeIter, 1), ev(1, 2, EventKind::DecodeIter, 1)];
+        let right = vec![
+            ev(0, 1, EventKind::DecodeIter, 1),
+            ev(1, 1, EventKind::Finished, 0),
+            ev(2, 3, EventKind::DecodeIter, 1),
+        ];
+        let rep = diff_timelines(&left, &right);
+        assert_eq!(rep.only_left, vec![2]);
+        assert_eq!(rep.only_right, vec![3]);
+        let d = rep.first_divergence().unwrap();
+        assert_eq!((d.req, d.index), (1, 1));
+        assert_eq!(d.left, "-");
+    }
+}

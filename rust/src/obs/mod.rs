@@ -1,0 +1,325 @@
+//! Request-lifecycle observability: structured tracing + unified
+//! metrics for the serving stack.
+//!
+//! Cascadia's adaptation loop (monitor → re-schedule → hot-swap) is
+//! driven by workload telemetry, and the DES↔live-engine equivalence
+//! pins compare execution timelines — both need one shared event
+//! schema instead of ad-hoc counters. This module provides it:
+//!
+//! * [`recorder::TraceRecorder`] — a bounded, sharded ring buffer of
+//!   fixed-size [`Event`]s (drop-oldest on overflow, counted; zero
+//!   allocation on the emit path);
+//! * [`clock::Clock`] — wall vs simulated time behind one `now() ->
+//!   f64` surface, so the DES emits the *same schema* at simulated
+//!   timestamps. `clock.rs` is the only obs file permitted to read
+//!   `Instant::now` (the `determinism` lint enforces this);
+//! * [`registry::MetricsRegistry`] — counters/gauges/fixed-bucket
+//!   histograms with Prometheus text exposition, from which the serve
+//!   loop's latency reporting is derived;
+//! * [`chrome`] — Chrome trace-event JSON export (Perfetto-loadable);
+//! * [`diff`] — per-request timeline alignment between two traces,
+//!   reporting the first divergence (the DES↔live pin surface).
+//!
+//! ## Event vocabulary
+//!
+//! Every event is a fixed-size record keyed by a **global request id**
+//! (`req`), so escalation chains link across tiers. Integer payloads
+//! live in `a`/`b`/`c`, float payloads in `fa`/`fb`:
+//!
+//! | kind            | emitted by        | payload |
+//! |-----------------|-------------------|---------|
+//! | `admitted`      | server submitter  | `a` = entry tier |
+//! | `queue_enter`   | server submitter  | `tier` = queue joined |
+//! | `queue_exit`    | tier worker       | `tier` = queue left |
+//! | `route_decision`| server router     | `a` = action (0 accept / 1 escalate / 2 skip), `b` = target tier |
+//! | `prefill_chunk` | engine / DES plan | `a` = tokens, `b` = start offset, `c` = last flag. A request whose *first* chunk has `b > 0` had `b` prompt tokens served from shared prefix pages |
+//! | `decode_iter`   | engine / DES plan | `a` = live batch size that tick |
+//! | `preempt`       | engine / DES plan | recompute eviction (`a` = 0); swap evictions appear as `swap_out` instead |
+//! | `swap_out`      | engine / DES plan | `a` = KV pages moved to host |
+//! | `swap_in`       | engine / DES plan | `a` = KV pages moved back |
+//! | `escalate`      | server router     | `a` = from tier, `b` = to tier |
+//! | `hot_swap_applied` | serve loop     | `a` = swap ordinal; `req` = [`REQ_NONE`] |
+//! | `finished`      | terminal authority| `fa` = TTFT s, `fb` = e2e latency s |
+//!
+//! Exactly one `finished` per admitted request: the emitter is the
+//! *terminal authority* — the cascade router when a full server runs
+//! (a request may traverse several engines), the engine itself when it
+//! is driven standalone ([`EngineTracer::terminal`]), the DES at
+//! retire.
+//!
+//! Engine-tick events (`prefill_chunk`, `decode_iter`, `preempt`,
+//! `swap_out/in`) are a **pure function of the
+//! [`IterationPlan`](crate::engine::scheduler::IterationPlan)**
+//! ([`emit_plan_events`]), and the DES drives the same
+//! `IterationScheduler` as the live engine — so the per-request event
+//! sequence is identical on both sides by construction, and
+//! equivalence becomes a timeline diff ([`diff::diff_timelines`]).
+
+pub mod chrome;
+pub mod clock;
+pub mod diff;
+pub mod recorder;
+pub mod registry;
+
+use std::sync::Arc;
+
+use crate::engine::kv::SeqId;
+use crate::engine::scheduler::IterationPlan;
+
+pub use chrome::chrome_trace;
+pub use clock::Clock;
+pub use diff::{diff_timelines, DiffReport};
+pub use recorder::TraceRecorder;
+pub use registry::{MetricsRegistry, LATENCY_BUCKETS};
+
+/// `req` value for events not tied to any request (e.g.
+/// `hot_swap_applied`).
+pub const REQ_NONE: u64 = u64::MAX;
+
+/// The fixed event vocabulary. See the module docs for emitters and
+/// payload conventions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    Admitted,
+    QueueEnter,
+    QueueExit,
+    RouteDecision,
+    PrefillChunk,
+    DecodeIter,
+    Preempt,
+    SwapOut,
+    SwapIn,
+    Escalate,
+    HotSwapApplied,
+    Finished,
+}
+
+impl EventKind {
+    /// Stable wire/export name of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::QueueEnter => "queue_enter",
+            EventKind::QueueExit => "queue_exit",
+            EventKind::RouteDecision => "route_decision",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::DecodeIter => "decode_iter",
+            EventKind::Preempt => "preempt",
+            EventKind::SwapOut => "swap_out",
+            EventKind::SwapIn => "swap_in",
+            EventKind::Escalate => "escalate",
+            EventKind::HotSwapApplied => "hot_swap_applied",
+            EventKind::Finished => "finished",
+        }
+    }
+
+    /// Terminal events end a request's span — exactly one per admitted
+    /// request.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Finished)
+    }
+}
+
+/// `route_decision` action codes (payload `a`).
+pub const ACTION_ACCEPT: u64 = 0;
+pub const ACTION_ESCALATE: u64 = 1;
+pub const ACTION_SKIP: u64 = 2;
+
+/// One fixed-size trace record. `Copy`, no heap payload — the ring
+/// buffer never allocates after construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Global emission order (assigned by the recorder).
+    pub seq: u64,
+    /// Seconds since the recorder's epoch — wall or simulated,
+    /// depending on the emitting [`Clock`].
+    pub t: f64,
+    /// Global request id ([`REQ_NONE`] for system events).
+    pub req: u64,
+    /// Tier the event happened on.
+    pub tier: u32,
+    pub kind: EventKind,
+    /// Integer payloads (see the vocabulary table).
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    /// Float payloads (see the vocabulary table).
+    pub fa: f64,
+    pub fb: f64,
+}
+
+impl Event {
+    /// A zero-payload event at time `t`; set `a`/`b`/`c`/`fa`/`fb` via
+    /// struct update. `seq` is assigned at emit.
+    pub fn at(t: f64, req: u64, tier: u32, kind: EventKind) -> Event {
+        Event { seq: 0, t, req, tier, kind, a: 0, b: 0, c: 0, fa: 0.0, fb: 0.0 }
+    }
+
+    /// The structural signature compared by the timeline diff: kind +
+    /// integer payloads, but NOT timestamps, float payloads, or `seq`
+    /// (wall and simulated clocks legitimately differ).
+    pub fn signature(&self) -> (EventKind, u64, u64, u64) {
+        (self.kind, self.a, self.b, self.c)
+    }
+}
+
+/// Everything an engine (or the DES) needs to emit into a shared
+/// recorder: the shard it owns, the tier it serves, the clock that
+/// stamps its events, and whether it is the terminal authority for
+/// `finished` events (true standalone, false under a cascade router —
+/// the router then owns the single terminal event per request).
+#[derive(Clone)]
+pub struct EngineTracer {
+    pub recorder: Arc<TraceRecorder>,
+    pub shard: usize,
+    pub tier: u32,
+    pub clock: Clock,
+    pub terminal: bool,
+}
+
+impl EngineTracer {
+    /// Standalone tracer on shard 0 / tier 0 with a wall clock —
+    /// what a directly-driven engine uses.
+    pub fn standalone(recorder: Arc<TraceRecorder>) -> EngineTracer {
+        EngineTracer {
+            recorder,
+            shard: 0,
+            tier: 0,
+            clock: Clock::wall(),
+            terminal: true,
+        }
+    }
+
+    /// Emit one event on this tracer's shard at clock-now.
+    pub fn emit(&self, req: u64, kind: EventKind, a: u64, b: u64, c: u64) {
+        let t = self.clock.now();
+        self.recorder.emit(
+            self.shard,
+            Event { a, b, c, ..Event::at(t, req, self.tier, kind) },
+        );
+    }
+
+    /// Emit the terminal `finished` event (only when this tracer is
+    /// the terminal authority).
+    pub fn emit_finished(&self, req: u64, ttft_s: f64, latency_s: f64) {
+        if !self.terminal {
+            return;
+        }
+        let t = self.clock.now();
+        self.recorder.emit(
+            self.shard,
+            Event { fa: ttft_s, fb: latency_s, ..Event::at(t, req, self.tier, EventKind::Finished) },
+        );
+    }
+}
+
+/// Emit the engine-tick events of one [`IterationPlan`] at time `t`.
+///
+/// This is deliberately a pure function of the plan (plus a
+/// `SeqId → global request id` mapping): the live engine calls it from
+/// [`EngineCore::step`](crate::engine::EngineCore::step) and the paged
+/// DES calls it when it starts the same iteration, so both sides emit
+/// identical per-request event sequences for identical plans — the
+/// invariant `cascadia trace --diff` checks.
+pub fn emit_plan_events(
+    recorder: &TraceRecorder,
+    shard: usize,
+    t: f64,
+    tier: u32,
+    plan: &IterationPlan,
+    key_of: impl Fn(SeqId) -> u64,
+) {
+    for &id in &plan.preempted {
+        recorder.emit(shard, Event::at(t, key_of(id), tier, EventKind::Preempt));
+    }
+    for &(id, pages) in &plan.swapped_out {
+        recorder.emit(
+            shard,
+            Event { a: pages as u64, ..Event::at(t, key_of(id), tier, EventKind::SwapOut) },
+        );
+    }
+    for &(id, pages) in &plan.swapped_in {
+        recorder.emit(
+            shard,
+            Event { a: pages as u64, ..Event::at(t, key_of(id), tier, EventKind::SwapIn) },
+        );
+    }
+    for chunk in &plan.prefill {
+        recorder.emit(
+            shard,
+            Event {
+                a: chunk.len as u64,
+                b: chunk.start as u64,
+                c: chunk.last as u64,
+                ..Event::at(t, key_of(chunk.id), tier, EventKind::PrefillChunk)
+            },
+        );
+    }
+    let batch = plan.batch() as u64;
+    for &id in &plan.decode {
+        recorder.emit(
+            shard,
+            Event { a: batch, ..Event::at(t, key_of(id), tier, EventKind::DecodeIter) },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::ChunkTask;
+
+    #[test]
+    fn kind_names_are_stable_and_unique() {
+        let kinds = [
+            EventKind::Admitted,
+            EventKind::QueueEnter,
+            EventKind::QueueExit,
+            EventKind::RouteDecision,
+            EventKind::PrefillChunk,
+            EventKind::DecodeIter,
+            EventKind::Preempt,
+            EventKind::SwapOut,
+            EventKind::SwapIn,
+            EventKind::Escalate,
+            EventKind::HotSwapApplied,
+            EventKind::Finished,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len(), "kind names must be unique");
+        assert!(EventKind::Finished.is_terminal());
+        assert!(!EventKind::Admitted.is_terminal());
+    }
+
+    #[test]
+    fn plan_events_are_a_pure_function_of_the_plan() {
+        let plan = IterationPlan {
+            admitted: vec![1],
+            prefill: vec![ChunkTask { id: 1, start: 32, len: 16, last: true }],
+            decode: vec![0],
+            preempted: vec![2],
+            swapped_out: vec![(3, 4)],
+            swapped_in: vec![(4, 2)],
+            forced_expansions: 0,
+        };
+        let rec_a = TraceRecorder::new(1, 64);
+        let rec_b = TraceRecorder::new(1, 64);
+        emit_plan_events(&rec_a, 0, 1.0, 0, &plan, |id| id as u64 + 100);
+        emit_plan_events(&rec_b, 0, 99.0, 0, &plan, |id| id as u64 + 100);
+        let a = rec_a.snapshot();
+        let b = rec_b.snapshot();
+        assert_eq!(a.len(), 5, "one event per plan entry (admitted itself is not an event)");
+        let sig_a: Vec<_> = a.iter().map(|e| (e.req, e.signature())).collect();
+        let sig_b: Vec<_> = b.iter().map(|e| (e.req, e.signature())).collect();
+        assert_eq!(sig_a, sig_b, "signatures ignore timestamps");
+        // The full-prompt chunk records tokens, start, and last.
+        let chunk = a.iter().find(|e| e.kind == EventKind::PrefillChunk).unwrap();
+        assert_eq!((chunk.a, chunk.b, chunk.c), (16, 32, 1));
+        assert_eq!(chunk.req, 101);
+        // Decode records the tick's batch size (prefill + decode).
+        let dec = a.iter().find(|e| e.kind == EventKind::DecodeIter).unwrap();
+        assert_eq!(dec.a, 2);
+    }
+}

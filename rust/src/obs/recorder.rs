@@ -1,0 +1,196 @@
+//! The span recorder: a bounded, sharded ring buffer of trace events.
+//!
+//! One shard per worker thread (the emitting worker indexes its own
+//! shard, so shard mutexes are effectively uncontended); each shard is
+//! a fixed-capacity ring that **drops oldest** on overflow and counts
+//! what it dropped — a trace can always tell you it is incomplete, and
+//! an overflowing shard never corrupts the events still in the ring.
+//! `Event` is `Copy` and the ring is pre-allocated, so the emit path
+//! performs no heap allocation.
+//!
+//! Global ordering: every emit draws a sequence number from one
+//! atomic counter, so a merged [`TraceRecorder::snapshot`] has a total
+//! order even across shards, and a single-threaded emitter (the DES,
+//! a directly-driven engine) gets a deterministic sequence.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::sync::LockExt;
+
+use super::Event;
+
+/// Default per-shard capacity (events). At ~80 bytes per event this is
+/// ~5 MiB per shard — enough for the bench and replay workloads
+/// without trimming, small enough to pin resident.
+pub const DEFAULT_SHARD_CAP: usize = 65_536;
+
+struct Shard {
+    /// Pre-allocated ring storage (never grows past `cap`).
+    buf: Vec<Event>,
+    /// Index of the oldest retained event.
+    head: usize,
+    /// Retained events.
+    len: usize,
+    /// Events overwritten by drop-oldest overflow.
+    dropped: u64,
+}
+
+impl Shard {
+    fn push(&mut self, ev: Event, cap: usize) {
+        if self.len < cap {
+            let slot = (self.head + self.len) % cap;
+            if slot == self.buf.len() {
+                // Still filling the pre-allocated capacity: a push
+                // within `Vec::with_capacity` never reallocates.
+                self.buf.push(ev);
+            } else {
+                self.buf[slot] = ev;
+            }
+            self.len += 1;
+        } else {
+            // Full: overwrite the oldest event and count the drop.
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn iter_in_order(&self, cap: usize) -> impl Iterator<Item = Event> + '_ {
+        (0..self.len).map(move |i| self.buf[(self.head + i) % cap])
+    }
+}
+
+/// Bounded multi-shard trace recorder. See the module docs.
+pub struct TraceRecorder {
+    shards: Vec<Mutex<Shard>>,
+    cap_per_shard: usize,
+    next_seq: AtomicU64,
+}
+
+impl TraceRecorder {
+    /// `n_shards` worker shards of `cap_per_shard` events each (both
+    /// floored at 1).
+    pub fn new(n_shards: usize, cap_per_shard: usize) -> TraceRecorder {
+        let cap = cap_per_shard.max(1);
+        let shards = (0..n_shards.max(1))
+            .map(|_| {
+                Mutex::new(Shard {
+                    buf: Vec::with_capacity(cap),
+                    head: 0,
+                    len: 0,
+                    dropped: 0,
+                })
+            })
+            .collect();
+        TraceRecorder { shards, cap_per_shard: cap, next_seq: AtomicU64::new(0) }
+    }
+
+    /// One shard per tier with the default capacity.
+    pub fn for_tiers(n_tiers: usize) -> TraceRecorder {
+        TraceRecorder::new(n_tiers, DEFAULT_SHARD_CAP)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Record one event on `shard` (wrapped into range). Assigns the
+    /// global sequence number; drop-oldest on a full shard.
+    pub fn emit(&self, shard: usize, mut ev: Event) {
+        ev.seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let s = &self.shards[shard % self.shards.len()];
+        s.plock().push(ev, self.cap_per_shard);
+    }
+
+    /// Events currently retained across all shards.
+    pub fn n_events(&self) -> usize {
+        self.shards.iter().map(|s| s.plock().len).sum()
+    }
+
+    /// Events lost to ring overflow across all shards.
+    pub fn dropped_events(&self) -> u64 {
+        self.shards.iter().map(|s| s.plock().dropped).sum()
+    }
+
+    /// Merged copy of every retained event, in global emission order.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let mut out: Vec<Event> = Vec::with_capacity(self.n_events());
+        for s in &self.shards {
+            let g = s.plock();
+            out.extend(g.iter_in_order(self.cap_per_shard));
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Retained events grouped by request id, each group in emission
+    /// order ([`super::REQ_NONE`] system events excluded).
+    pub fn per_request(&self) -> BTreeMap<u64, Vec<Event>> {
+        let mut map: BTreeMap<u64, Vec<Event>> = BTreeMap::new();
+        for ev in self.snapshot() {
+            if ev.req != super::REQ_NONE {
+                map.entry(ev.req).or_default().push(ev);
+            }
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Event, EventKind, REQ_NONE};
+    use super::*;
+
+    fn ev(t: f64, req: u64) -> Event {
+        Event::at(t, req, 0, EventKind::DecodeIter)
+    }
+
+    #[test]
+    fn snapshot_preserves_emission_order_across_shards() {
+        let rec = TraceRecorder::new(3, 16);
+        for i in 0..9u64 {
+            rec.emit((i % 3) as usize, ev(i as f64, i));
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 9);
+        let reqs: Vec<u64> = snap.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, (0..9).collect::<Vec<_>>(), "global order survives sharding");
+        assert_eq!(rec.dropped_events(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts_without_corruption() {
+        let rec = TraceRecorder::new(1, 4);
+        for i in 0..10u64 {
+            rec.emit(0, ev(i as f64, i));
+        }
+        assert_eq!(rec.n_events(), 4, "ring keeps exactly its capacity");
+        assert_eq!(rec.dropped_events(), 6, "every overwritten event is counted");
+        let snap = rec.snapshot();
+        let reqs: Vec<u64> = snap.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "the newest events survive, in order");
+    }
+
+    #[test]
+    fn per_request_groups_and_skips_system_events() {
+        let rec = TraceRecorder::new(2, 16);
+        rec.emit(0, ev(0.0, 7));
+        rec.emit(1, ev(1.0, 8));
+        rec.emit(0, ev(2.0, 7));
+        rec.emit(0, ev(3.0, REQ_NONE));
+        let by_req = rec.per_request();
+        assert_eq!(by_req.len(), 2);
+        assert_eq!(by_req[&7].len(), 2);
+        assert!(by_req[&7][0].seq < by_req[&7][1].seq);
+        assert_eq!(by_req[&8].len(), 1);
+    }
+
+    #[test]
+    fn shard_index_wraps_instead_of_panicking() {
+        let rec = TraceRecorder::new(2, 4);
+        rec.emit(17, ev(0.0, 1));
+        assert_eq!(rec.n_events(), 1);
+    }
+}

@@ -1,0 +1,294 @@
+//! The unified metrics registry: counters, gauges, and fixed-bucket
+//! histograms with Prometheus text exposition.
+//!
+//! The serve loop records every completion here (per-tier TTFT and
+//! end-to-end latency histograms, request/escalation/hot-swap
+//! counters) and derives its latency reporting from the retained
+//! samples via [`LatencySummary`] — one collection point instead of
+//! parallel `Vec<f64>`s. [`MetricsRegistry::render_prometheus`] emits
+//! the text exposition format served by the `GET /metrics` frame on
+//! [`TcpFrontend`](crate::coordinator::net::TcpFrontend).
+//!
+//! Metric keys are full series names including their label set, e.g.
+//! `cascadia_ttft_seconds{tier="0"}` — the renderer splits the family
+//! name back out for `# TYPE` lines and merges `le` into existing
+//! labels for histogram buckets. Keys iterate in `BTreeMap` order, so
+//! the exposition (and every derived report) is deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::metrics::LatencySummary;
+use crate::util::sync::LockExt;
+
+/// Default latency histogram upper bounds, seconds (a `+Inf` bucket is
+/// implicit). Spans sub-millisecond engine ticks to the replay's
+/// tens-of-seconds uncompressed tails.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
+    50.0, 100.0,
+];
+
+/// One fixed-bucket histogram (plus retained raw samples so percentile
+/// summaries stay exact rather than bucket-interpolated).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds, ascending; the overflow bucket is
+    /// `counts[bounds.len()]`.
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+            samples: Vec::new(),
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&ub| v <= ub)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+        self.samples.push(v);
+    }
+
+    /// Exact percentile summary of the retained samples — the
+    /// registry's histogram path reuses [`LatencySummary::of`] (and
+    /// its `total_cmp` ordering) instead of reimplementing it.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary::of(&self.samples)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Counters, gauges, and histograms behind one lock each. Recording
+/// happens at request granularity (admission/completion), not token
+/// granularity — the per-token hot path goes through the trace
+/// recorder's ring buffer instead.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `v` to counter `key` (created at 0).
+    pub fn counter_add(&self, key: &str, v: u64) {
+        *self.counters.plock().entry(key.to_string()).or_insert(0) += v;
+    }
+
+    /// Increment counter `key` by 1.
+    pub fn inc(&self, key: &str) {
+        self.counter_add(key, 1);
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.plock().get(key).copied().unwrap_or(0)
+    }
+
+    /// Set gauge `key` to `v`.
+    pub fn gauge_set(&self, key: &str, v: f64) {
+        self.gauges.plock().insert(key.to_string(), v);
+    }
+
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        self.gauges.plock().get(key).copied()
+    }
+
+    /// Record `v` into histogram `key`, creating it with `bounds` on
+    /// first touch (later calls keep the original bounds).
+    pub fn observe(&self, key: &str, bounds: &[f64], v: f64) {
+        self.hists
+            .plock()
+            .entry(key.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    /// Exact percentile summary of histogram `key` (None if the series
+    /// does not exist).
+    pub fn summary(&self, key: &str) -> Option<LatencySummary> {
+        self.hists.plock().get(key).map(|h| h.summary())
+    }
+
+    /// Retained raw samples of histogram `key`.
+    pub fn samples(&self, key: &str) -> Vec<f64> {
+        self.hists
+            .plock()
+            .get(key)
+            .map(|h| h.samples().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Total observations across every histogram series of `family`
+    /// (series whose name before `{` equals `family`).
+    pub fn family_count(&self, family: &str) -> u64 {
+        self.hists
+            .plock()
+            .iter()
+            .filter(|(k, _)| family_of(k) == family)
+            .map(|(_, h)| h.count)
+            .sum()
+    }
+
+    /// Render the Prometheus text exposition format (version 0.0.4):
+    /// one `# TYPE` line per family, then its series in key order.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.plock();
+        let mut last_family = "";
+        for (key, v) in counters.iter() {
+            let fam = family_of(key);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {fam} counter\n"));
+                last_family = fam;
+            }
+            out.push_str(&format!("{key} {v}\n"));
+        }
+        drop(counters);
+        let gauges = self.gauges.plock();
+        let mut last_family = "";
+        for (key, v) in gauges.iter() {
+            let fam = family_of(key);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {fam} gauge\n"));
+                last_family = fam;
+            }
+            out.push_str(&format!("{key} {v}\n"));
+        }
+        drop(gauges);
+        let hists = self.hists.plock();
+        let mut last_family = "";
+        for (key, h) in hists.iter() {
+            let fam = family_of(key);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {fam} histogram\n"));
+                last_family = fam;
+            }
+            let mut cumulative = 0u64;
+            for (i, &ub) in h.bounds.iter().enumerate() {
+                cumulative += h.counts[i];
+                out.push_str(&format!(
+                    "{} {}\n",
+                    series_with_le(key, &format!("{ub}")),
+                    cumulative
+                ));
+            }
+            cumulative += h.counts[h.bounds.len()];
+            out.push_str(&format!("{} {}\n", series_with_le(key, "+Inf"), cumulative));
+            out.push_str(&format!("{} {}\n", suffixed(key, "_sum"), h.sum));
+            out.push_str(&format!("{} {}\n", suffixed(key, "_count"), h.count));
+        }
+        out
+    }
+}
+
+/// Family name of a series key: everything before the label block.
+fn family_of(key: &str) -> &str {
+    key.split('{').next().unwrap_or(key)
+}
+
+/// `name{labels}` + `le` → `name_bucket{labels,le="..."}`.
+fn series_with_le(key: &str, le: &str) -> String {
+    match key.split_once('{') {
+        Some((name, rest)) => {
+            let labels = rest.trim_end_matches('}');
+            if labels.is_empty() {
+                format!("{name}_bucket{{le=\"{le}\"}}")
+            } else {
+                format!("{name}_bucket{{{labels},le=\"{le}\"}}")
+            }
+        }
+        None => format!("{key}_bucket{{le=\"{le}\"}}"),
+    }
+}
+
+/// `name{labels}` + suffix → `name_sum{labels}` etc.
+fn suffixed(key: &str, suffix: &str) -> String {
+    match key.split_once('{') {
+        Some((name, rest)) => format!("{name}{suffix}{{{rest}"),
+        None => format!("{key}{suffix}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = MetricsRegistry::new();
+        r.inc("cascadia_requests_total");
+        r.counter_add("cascadia_requests_total", 2);
+        r.gauge_set("cascadia_tiers", 3.0);
+        assert_eq!(r.counter("cascadia_requests_total"), 3);
+        assert_eq!(r.gauge("cascadia_tiers"), Some(3.0));
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_summary_agree_with_latency_summary() {
+        let r = MetricsRegistry::new();
+        let vals: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        for &v in &vals {
+            r.observe("lat{tier=\"0\"}", LATENCY_BUCKETS, v);
+        }
+        let s = r.summary("lat{tier=\"0\"}").unwrap();
+        assert_eq!(s, LatencySummary::of(&vals), "histogram summary reuses LatencySummary");
+        assert_eq!(r.family_count("lat"), 100);
+        assert_eq!(r.samples("lat{tier=\"0\"}").len(), 100);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_types_buckets_and_cumulative_counts() {
+        let r = MetricsRegistry::new();
+        r.inc("reqs_total");
+        r.gauge_set("pool_pages{tier=\"1\"}", 64.0);
+        r.observe("ttft{tier=\"0\"}", &[0.1, 1.0], 0.05);
+        r.observe("ttft{tier=\"0\"}", &[0.1, 1.0], 0.5);
+        r.observe("ttft{tier=\"0\"}", &[0.1, 1.0], 5.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE reqs_total counter"));
+        assert!(text.contains("reqs_total 1"));
+        assert!(text.contains("# TYPE pool_pages gauge"));
+        assert!(text.contains("pool_pages{tier=\"1\"} 64"));
+        assert!(text.contains("# TYPE ttft histogram"));
+        assert!(text.contains("ttft_bucket{tier=\"0\",le=\"0.1\"} 1"));
+        assert!(text.contains("ttft_bucket{tier=\"0\",le=\"1\"} 2"));
+        assert!(text.contains("ttft_bucket{tier=\"0\",le=\"+Inf\"} 3"));
+        assert!(text.contains("ttft_count{tier=\"0\"} 3"));
+        assert!(text.contains("ttft_sum{tier=\"0\"}"));
+    }
+
+    #[test]
+    fn bare_series_render_without_label_block() {
+        let r = MetricsRegistry::new();
+        r.observe("e2e", &[1.0], 0.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("e2e_bucket{le=\"1\"} 1"));
+        assert!(text.contains("e2e_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("e2e_sum 0.5"));
+        assert!(text.contains("e2e_count 1"));
+    }
+}

@@ -29,6 +29,9 @@ use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
 use crate::engine::{IterationScheduler, KvPool, PreemptionConfig, PreemptionMode};
+use crate::obs::{
+    emit_plan_events, Event as ObsEvent, EventKind as ObsEventKind, TraceRecorder,
+};
 use crate::perf::ReplicaModel;
 use crate::util::stats;
 
@@ -544,6 +547,35 @@ pub fn simulate_paged(
     prefill_chunk: usize,
     swap: bool,
 ) -> SimOutcome {
+    simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, None)
+}
+
+/// [`simulate_paged`] with trace emission: every iteration's plan
+/// events ([`emit_plan_events`] — the same pure function the live
+/// engine calls from `EngineCore::step`) and every retirement's
+/// `finished` are recorded at **simulated** timestamps, shard =
+/// replica index, `req` = trace index. This is the DES side of
+/// `cascadia trace --diff`: identical plans produce identical
+/// per-request event sequences on both sides by construction.
+pub fn simulate_paged_traced(
+    replicas: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+    recorder: &TraceRecorder,
+) -> SimOutcome {
+    simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, Some(recorder))
+}
+
+fn simulate_paged_inner(
+    replicas: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+    recorder: Option<&TraceRecorder>,
+) -> SimOutcome {
     assert!(!replicas.is_empty(), "simulate() with no replicas");
     let page_tokens = page_tokens.max(1);
     let usable: Vec<&ReplicaModel> = replicas
@@ -609,8 +641,14 @@ pub fn simulate_paged(
         now: f64,
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
+        recorder: Option<&TraceRecorder>,
     ) {
         let plan = rep.sched.next_iteration();
+        if let Some(rec) = recorder {
+            // DES sequence ids ARE the global request ids (trace
+            // index), so the key map is the identity.
+            emit_plan_events(rec, ri, now, 0, &plan, |id| id);
+        }
         if plan.batch() == 0 {
             rep.busy = false;
             rep.inflight.clear();
@@ -674,6 +712,8 @@ pub fn simulate_paged(
     let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
     let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
     let mut finish_iters: Vec<usize> = vec![0; trace.len()];
+    // First-token time per request, for the traced `finished` TTFT.
+    let mut first_tok: Vec<f64> = vec![f64::NAN; trace.len()];
     let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
     let mut completed = 0usize;
     let mut now = 0.0f64;
@@ -696,7 +736,7 @@ pub fn simulate_paged(
                 rep.backlog_tokens +=
                     req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
                 if !rep.busy {
-                    start_iter(rep, best, now, &mut heap, &mut seq);
+                    start_iter(rep, best, now, &mut heap, &mut seq, recorder);
                 }
             }
             EventKind::IterDone(ri) => {
@@ -705,18 +745,31 @@ pub fn simulate_paged(
                 total_tokens += ids.len() as u64;
                 for id in ids {
                     rep.backlog_tokens = (rep.backlog_tokens - 1.0).max(0.0);
+                    let uid = id as usize;
+                    if first_tok[uid].is_nan() {
+                        first_tok[uid] = now;
+                    }
                     if rep.sched.advance(id) {
                         rep.sched.retire(id);
-                        let uid = id as usize;
                         latencies_by_id[uid] = now - trace[uid].arrival;
                         completions[uid] = now;
                         finish_iters[uid] = rep.iters;
                         completion_order.push(uid);
                         completed += 1;
+                        if let Some(rec) = recorder {
+                            rec.emit(
+                                ri,
+                                ObsEvent {
+                                    fa: first_tok[uid] - trace[uid].arrival,
+                                    fb: now - trace[uid].arrival,
+                                    ..ObsEvent::at(now, id, 0, ObsEventKind::Finished)
+                                },
+                            );
+                        }
                     }
                 }
                 if rep.sched.n_seqs() > 0 {
-                    start_iter(rep, ri, now, &mut heap, &mut seq);
+                    start_iter(rep, ri, now, &mut heap, &mut seq, recorder);
                 } else {
                     rep.busy = false;
                 }
@@ -1034,6 +1087,33 @@ mod tests {
         for (i, r) in trace.iter().enumerate() {
             assert!(out.finish_iters[i] >= r.output_tokens as usize);
         }
+    }
+
+    #[test]
+    fn traced_paged_run_is_byte_identical_and_emits_one_finished_per_request() {
+        use crate::obs::EventKind as K;
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(2.0, 40, 12);
+        let rec = TraceRecorder::new(pool.len(), 65_536);
+        let traced = simulate_paged_traced(&pool, &trace, 16, usize::MAX, false, &rec);
+        let plain = simulate_paged(&pool, &trace, 16, usize::MAX, false);
+        assert_eq!(traced.latencies, plain.latencies, "tracing must not perturb the sim");
+        assert_eq!(traced.makespan, plain.makespan);
+        let by_req = rec.per_request();
+        assert_eq!(by_req.len(), 40, "every request leaves a timeline");
+        for (req, evs) in &by_req {
+            let fins = evs.iter().filter(|e| e.kind == K::Finished).count();
+            assert_eq!(fins, 1, "exactly one terminal event for req {req}");
+            assert!(
+                evs.last().map(|e| e.kind.is_terminal()).unwrap_or(false),
+                "req {req}: finished must close the timeline"
+            );
+            assert!(evs.iter().any(|e| e.kind == K::PrefillChunk));
+            assert!(evs.iter().any(|e| e.kind == K::DecodeIter));
+            let fin = evs.last().unwrap();
+            assert!(fin.fa > 0.0 && fin.fb >= fin.fa, "TTFT and e2e are simulated seconds");
+        }
+        assert_eq!(rec.dropped_events(), 0);
     }
 
     #[test]

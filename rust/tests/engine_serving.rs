@@ -150,8 +150,10 @@ fn tiny_pool_replica(kv_pages: usize) -> ReplicaModel {
 fn drive_engine(
     trace: &[SimRequest],
     cfg: EngineConfig,
+    tracer: Option<cascadia::obs::EngineTracer>,
 ) -> (Vec<usize>, u64, (u64, u64, u64)) {
     let mut eng: EngineCore<usize> = EngineCore::new(Box::new(PinStep), cfg);
+    eng.set_tracer(tracer);
     let mut finish = vec![0usize; trace.len()];
     let prompt_of = |r: &SimRequest| -> Vec<i32> { vec![7; r.input_tokens.max(1) as usize] };
     eng.submit(0, prompt_of(&trace[0]), trace[0].output_tokens.max(1) as usize);
@@ -209,7 +211,7 @@ fn paged_des_and_live_engine_agree_tick_for_tick_under_both_policies() {
                 PreemptionMode::Swap => PreemptionConfig::from_replica(&rm, 16, mode),
             },
         };
-        let (finish, preemptions, (outs, ins, _pages)) = drive_engine(&trace, cfg);
+        let (finish, preemptions, (outs, ins, _pages)) = drive_engine(&trace, cfg, None);
         assert_eq!(
             finish, des.finish_iters,
             "{mode:?}: engine and DES must finish every request on the same tick"
@@ -229,6 +231,75 @@ fn paged_des_and_live_engine_agree_tick_for_tick_under_both_policies() {
                 assert!(des.swap_outs > 0, "the tiny pool must swap");
                 assert_eq!(des.swap_outs, des.swap_ins);
                 assert_eq!(des.preemptions, 0, "ample host budget: no fallback");
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_des_and_live_engine_emit_identical_event_timelines() {
+    // The schema pin behind `cascadia trace --diff`: the paged DES and
+    // a real EngineCore over the same trace must emit IDENTICAL
+    // per-request event sequences (signatures — kind + integer
+    // payloads; timestamps legitimately differ between the simulated
+    // and wall clocks). Runs under both eviction disciplines so
+    // preempt/swap events are pinned too.
+    use std::sync::Arc;
+
+    use cascadia::obs::{diff_timelines, EngineTracer, EventKind, TraceRecorder};
+    use cascadia::sim::simulate_paged_traced;
+
+    let rm = tiny_pool_replica(40);
+    let trace: Vec<SimRequest> = (0..8).map(|_| SimRequest::new(0.0, 193, 40)).collect();
+    for mode in [PreemptionMode::Recompute, PreemptionMode::Swap] {
+        let des_rec = TraceRecorder::new(1, 1 << 16);
+        let des = simulate_paged_traced(
+            &[rm.clone()],
+            &trace,
+            16,
+            usize::MAX,
+            mode == PreemptionMode::Swap,
+            &des_rec,
+        );
+        let cfg = EngineConfig {
+            pool_pages: rm.kv_pages_total(16),
+            page_tokens: 16,
+            max_running: rm.max_batch.max(1),
+            prefill_chunk: usize::MAX,
+            share_prefixes: false,
+            preemption: match mode {
+                PreemptionMode::Recompute => PreemptionConfig::default(),
+                PreemptionMode::Swap => PreemptionConfig::from_replica(&rm, 16, mode),
+            },
+        };
+        let live_rec = Arc::new(TraceRecorder::new(1, 1 << 16));
+        let _ = drive_engine(
+            &trace,
+            cfg,
+            Some(EngineTracer::standalone(Arc::clone(&live_rec))),
+        );
+        let left = des_rec.snapshot();
+        let right = live_rec.snapshot();
+        assert!(!left.is_empty() && !right.is_empty());
+        let report = diff_timelines(&left, &right);
+        assert!(
+            report.is_equivalent(),
+            "{mode:?}: DES and live timelines diverge: {:?} (only_left {:?}, only_right {:?})",
+            report.first_divergence().map(|d| d.to_string()),
+            report.only_left,
+            report.only_right,
+        );
+        assert_eq!(report.requests_compared, trace.len());
+        // Both sides saw real eviction traffic, not just the happy path.
+        let has = |evs: &[cascadia::obs::Event], k: EventKind| evs.iter().any(|e| e.kind == k);
+        match mode {
+            PreemptionMode::Recompute => {
+                assert!(des.preemptions > 0 && has(&left, EventKind::Preempt));
+                assert!(has(&right, EventKind::Preempt));
+            }
+            PreemptionMode::Swap => {
+                assert!(des.swap_outs > 0 && has(&left, EventKind::SwapOut));
+                assert!(has(&right, EventKind::SwapOut) && has(&right, EventKind::SwapIn));
             }
         }
     }

@@ -121,6 +121,30 @@ def main() -> int:
     for section in ("prefix", "chunked", "swap"):
         if fresh.get(section, {}).get("win") is not True:
             failures.append(f"fresh report flag '{section}.win' is not true")
+    # Tracing-overhead gate: tolerated as absent (reports predating the
+    # obs subsystem), but when the section exists it must be green and
+    # must have actually recorded events.
+    tracing = fresh.get("tracing")
+    if tracing is not None:
+        tracing_failures = []
+        if tracing.get("overhead_ok") is not True:
+            tracing_failures.append("fresh report flag 'tracing.overhead_ok' is not true")
+        if not tracing.get("events_recorded"):
+            tracing_failures.append("tracing section recorded zero events")
+        if tracing.get("dropped_events"):
+            tracing_failures.append(
+                f"tracing ring buffers dropped {tracing['dropped_events']} events"
+            )
+        if tracing_failures:
+            failures.extend(tracing_failures)
+        else:
+            print(
+                "ok  tracing.overhead_ok:"
+                f" p95 {tracing.get('p95_off_s', 0.0):.3f}s ->"
+                f" {tracing.get('p95_on_s', 0.0):.3f}s"
+                f" ({100.0 * tracing.get('overhead_frac', 0.0):+.1f}%),"
+                f" {tracing.get('events_recorded', 0):.0f} events"
+            )
 
     # Ratio floors.
     fresh_r = derived_ratios(fresh)
