@@ -32,6 +32,8 @@ use crate::coordinator::server::{AdmissionObserver, ServeControl};
 use crate::judge::Judger;
 use crate::metrics::AdaptCounters;
 use crate::models::ModelSpec;
+use crate::obs::alert::{SloBurnConfig, SloBurnMonitor};
+use crate::obs::Clock;
 use crate::sched::outer::{self, OuterOptions};
 use crate::sched::plan::CascadePlan;
 use crate::util::sync::LockExt;
@@ -86,6 +88,14 @@ pub struct AdaptConfig {
     /// continuous server leaves the KV pools at their last sizing
     /// instead of retuning them to the new plan.
     pub continuous_engine: bool,
+    /// SLO burn-rate drift trigger (`None` = workload monitor only).
+    /// When set, completion latencies feed a [`SloBurnMonitor`]; a
+    /// multi-window burn breach triggers the same re-schedule /
+    /// plan-cache path as a detected workload shift — a deployment can
+    /// miss its latency SLO while the arrival *mix* looks unchanged
+    /// (queue buildup, swap storms, escalation cascades), and the
+    /// workload monitor alone never sees that.
+    pub slo: Option<SloBurnConfig>,
 }
 
 impl Default for AdaptConfig {
@@ -96,6 +106,7 @@ impl Default for AdaptConfig {
             max_new_tokens: 8,
             synchronous: false,
             continuous_engine: false,
+            slo: None,
         }
     }
 }
@@ -120,6 +131,13 @@ pub struct AdaptController {
     /// that first failed on a mixed phase-boundary window could never
     /// schedule again even once the regime settles.
     failed_regimes: Mutex<std::collections::HashMap<RegimeKey, u32>>,
+    /// The SLO-drift trigger (None when `config.slo` is None).
+    slo: Option<Mutex<SloBurnMonitor>>,
+    /// Burn-rate breaches observed (each is one alert episode; a
+    /// breach while a trigger is already pending or the window is
+    /// underfilled still counts here even though no new re-schedule
+    /// starts).
+    slo_breaches: AtomicUsize,
     /// Background re-schedules currently running.
     in_flight: AtomicUsize,
     /// Hook run after every successful swap (e.g. the replay harness
@@ -138,6 +156,7 @@ impl AdaptController {
     ) -> AdaptController {
         let monitor = Monitor::new(config.monitor.clone(), baseline);
         let cache = PlanCache::new(config.cache.clone());
+        let slo = config.slo.clone().map(|c| Mutex::new(SloBurnMonitor::new(c)));
         AdaptController {
             config,
             rescheduler,
@@ -147,6 +166,8 @@ impl AdaptController {
             counters: Mutex::new(AdaptCounters::default()),
             last_plan: Mutex::new(None),
             failed_regimes: Mutex::new(std::collections::HashMap::new()),
+            slo,
+            slo_breaches: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
             on_swap: None,
         }
@@ -167,7 +188,34 @@ impl AdaptController {
         let drift = self.monitor.plock().observe(req);
         let Some(stats) = drift else { return };
         self.counters.plock().drifts_detected += 1;
+        self.resolve(stats);
+    }
 
+    /// Feed one completion latency into the SLO burn-rate trigger.
+    /// A multi-window burn breach resolves through the same pipeline
+    /// as a workload shift — and through the same pending-trigger
+    /// suppression ([`Monitor::trigger_external`]), so the two trigger
+    /// sources cannot storm each other: while either one's re-schedule
+    /// is in flight, both stay quiet. The burn monitor itself is
+    /// edge-triggered (one breach per episode, re-arming only on
+    /// recovery), so a suppressed breach does not re-fire on the next
+    /// completion either.
+    pub fn observe_completion(self: &Arc<Self>, now_s: f64, e2e_s: f64) {
+        let Some(slo) = &self.slo else { return };
+        let breach = slo.plock().observe(now_s, e2e_s);
+        if breach.is_none() {
+            return;
+        }
+        self.slo_breaches.fetch_add(1, Ordering::SeqCst);
+        let triggered = self.monitor.plock().trigger_external();
+        let Some(stats) = triggered else { return };
+        self.counters.plock().drifts_detected += 1;
+        self.resolve(stats);
+    }
+
+    /// Shared post-detection pipeline: plan-cache hit, failed-regime
+    /// cooldown, else a (possibly background) re-schedule.
+    fn resolve(self: &Arc<Self>, stats: TraceStats) {
         // Gear cache first: a known regime swaps in without touching
         // the scheduler.
         let cached = self.cache.plock().get(&stats).cloned();
@@ -259,6 +307,12 @@ impl AdaptController {
                     }
                 }
                 *self.last_plan.plock() = Some(plan.clone());
+                // Stale pre-swap latencies must not bias post-swap
+                // burn; the breach latch is kept (one corrective
+                // action per episode) until attainment recovers.
+                if let Some(slo) = &self.slo {
+                    slo.plock().reset_after_swap();
+                }
                 if let Some(hook) = &self.on_swap {
                     hook(&plan);
                 }
@@ -272,6 +326,11 @@ impl AdaptController {
     /// `ServeControl::hot_swaps`.
     pub fn counters(&self) -> AdaptCounters {
         *self.counters.plock()
+    }
+
+    /// Burn-rate breach episodes observed by the SLO trigger.
+    pub fn slo_breaches(&self) -> usize {
+        self.slo_breaches.load(Ordering::SeqCst)
     }
 
     /// The most recently swapped-in plan, if any.
@@ -299,11 +358,15 @@ impl AdaptController {
 pub struct TraceObserver {
     controller: Arc<AdaptController>,
     requests: Vec<Request>,
+    /// Stamps completion times for the SLO burn windows (wall seconds
+    /// since observer construction — the same time base the observed
+    /// e2e latencies are measured on).
+    clock: Clock,
 }
 
 impl TraceObserver {
     pub fn new(controller: Arc<AdaptController>, requests: Vec<Request>) -> TraceObserver {
-        TraceObserver { controller, requests }
+        TraceObserver { controller, requests, clock: Clock::wall() }
     }
 }
 
@@ -312,6 +375,10 @@ impl AdmissionObserver for TraceObserver {
         if let Some(r) = self.requests.get(req_index) {
             self.controller.observe(*r);
         }
+    }
+
+    fn on_complete(&self, _tier: usize, e2e_s: f64) {
+        self.controller.observe_completion(self.clock.now(), e2e_s);
     }
 }
 
@@ -411,6 +478,68 @@ mod tests {
         assert_eq!(counters.hot_swaps, 0);
         assert!(c.last_plan().is_none());
         assert_eq!(control.hot_swaps(), 0);
+    }
+
+    #[test]
+    fn slo_burn_breach_triggers_hot_swap_without_storming() {
+        // The arrival MIX stays at the baseline (the workload monitor
+        // sees no shift); only completion latencies breach the SLO.
+        let control = ServeControl::new(3);
+        let baseline_reqs = generate(&paper_trace(3, 10.0), 400, 1);
+        let baseline = estimate_stats(&baseline_reqs);
+        let cfg = AdaptConfig {
+            synchronous: true,
+            // A deliberately deaf workload monitor: only the SLO
+            // trigger can fire in this test (sampling noise on a
+            // 100-request window must not drift-trigger).
+            monitor: MonitorConfig { shift_threshold: 10.0, ..Default::default() },
+            slo: Some(crate::obs::alert::SloBurnConfig {
+                slo_s: 1.0,
+                target: 0.9,
+                short_window_s: 30.0,
+                long_window_s: 120.0,
+                burn_threshold: 1.5,
+                min_samples: 10,
+                clear_ratio: 0.5,
+            }),
+            ..Default::default()
+        };
+        let c = Arc::new(AdaptController::new(cfg, rescheduler(), baseline, control));
+        // Stable mix fills the monitor window; no workload drift fires.
+        for req in generate(&paper_trace(3, 10.0), 100, 20) {
+            c.observe(req);
+        }
+        assert_eq!(c.counters().hot_swaps, 0, "stable mix must not drift-trigger");
+        // Load breaches the burn threshold: every completion misses the
+        // 1s SLO on both windows. Exactly one corrective hot-swap.
+        for i in 0..20 {
+            c.observe_completion(10.0 + i as f64 * 0.5, 5.0);
+        }
+        let counters = c.counters();
+        assert_eq!(c.slo_breaches(), 1, "burn breach is edge-triggered");
+        assert_eq!(counters.hot_swaps, 1, "breach must hot-swap once: {counters}");
+        assert_eq!(counters.drifts_detected, 1);
+        // Continued breaches while latched: no re-fire storm.
+        for i in 0..40 {
+            c.observe_completion(25.0 + i as f64 * 0.5, 5.0);
+        }
+        assert_eq!(c.slo_breaches(), 1, "latched episode must not re-fire");
+        assert_eq!(c.counters().hot_swaps, 1);
+        // Recovery clears the latch; the monitor window refills.
+        for req in generate(&paper_trace(3, 10.0), 100, 21) {
+            c.observe(req);
+        }
+        for i in 0..40 {
+            c.observe_completion(100.0 + i as f64 * 0.5, 0.2);
+        }
+        assert_eq!(c.slo_breaches(), 1, "recovery must not breach");
+        // A fresh breach episode re-fires and swaps again.
+        for i in 0..40 {
+            c.observe_completion(300.0 + i as f64 * 0.5, 5.0);
+        }
+        let counters = c.counters();
+        assert_eq!(c.slo_breaches(), 2, "re-armed trigger fires again");
+        assert_eq!(counters.hot_swaps, 2, "{counters}");
     }
 
     #[test]

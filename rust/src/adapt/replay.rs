@@ -71,6 +71,19 @@ pub struct ReplayConfig {
     /// the legacy whole-batch lockstep loop.
     pub continuous: bool,
     pub monitor: MonitorConfig,
+    /// Arm the SLO burn-rate drift trigger on the adaptive run (see
+    /// [`AdaptConfig::slo`]): completions breaching `slo_seconds` at a
+    /// multi-window burn above `slo_burn_threshold` hot-swap even when
+    /// the arrival mix looks stable to the workload monitor.
+    pub slo_trigger: bool,
+    /// Attainment target for the burn computation.
+    pub slo_target: f64,
+    /// Burn level both windows must exceed.
+    pub slo_burn_threshold: f64,
+    /// Burn windows, uncompressed seconds (scaled by `time_scale` for
+    /// the compressed run, like every other duration here).
+    pub slo_short_window_s: f64,
+    pub slo_long_window_s: f64,
     pub phases: Vec<PhaseConfig>,
 }
 
@@ -87,6 +100,11 @@ impl Default for ReplayConfig {
             max_new_tokens: 8,
             continuous: true,
             monitor: MonitorConfig::default(),
+            slo_trigger: false,
+            slo_target: 0.9,
+            slo_burn_threshold: 1.5,
+            slo_short_window_s: 60.0,
+            slo_long_window_s: 480.0,
             phases: vec![
                 PhaseConfig { trace_index: 3, rate: 60.0, n_requests: 500 },
                 PhaseConfig { trace_index: 1, rate: 10.0, n_requests: 600 },
@@ -131,6 +149,21 @@ impl ReplayConfig {
         }
         if let Some(v) = j.get("continuous") {
             c.continuous = v.as_bool()?;
+        }
+        if let Some(v) = j.get("slo_trigger") {
+            c.slo_trigger = v.as_bool()?;
+        }
+        if let Some(v) = j.get("slo_target") {
+            c.slo_target = v.as_f64()?;
+        }
+        if let Some(v) = j.get("slo_burn_threshold") {
+            c.slo_burn_threshold = v.as_f64()?;
+        }
+        if let Some(v) = j.get("slo_short_window_s") {
+            c.slo_short_window_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get("slo_long_window_s") {
+            c.slo_long_window_s = v.as_f64()?;
         }
         if let Some(m) = j.get("monitor") {
             if let Some(v) = m.get("window") {
@@ -193,6 +226,17 @@ impl ReplayConfig {
         if self.monitor.window == 0 || self.monitor.min_samples == 0 {
             bail!("monitor window/min_samples must be positive");
         }
+        if self.slo_trigger {
+            if !(0.0..1.0).contains(&self.slo_target) {
+                bail!("slo_target must be in [0, 1)");
+            }
+            if self.slo_burn_threshold <= 0.0
+                || self.slo_short_window_s <= 0.0
+                || self.slo_long_window_s < self.slo_short_window_s
+            {
+                bail!("slo burn threshold/windows must be positive, long >= short");
+            }
+        }
         Ok(())
     }
 
@@ -243,6 +287,9 @@ pub struct RunReport {
     /// hot-swap contract, not a counter that can silently go nonzero.
     pub dropped: usize,
     pub counters: AdaptCounters,
+    /// SLO burn-rate breach episodes observed by the adaptive run's
+    /// controller (0 for the frozen run, and when the trigger is off).
+    pub slo_breaches: usize,
     /// Per-tier queue telemetry (peak depth, mean admission wait —
     /// uncompressed seconds).
     pub queue: Vec<TierQueueStats>,
@@ -370,6 +417,7 @@ fn score_run(
         served: stats.completions.len(),
         dropped: phased.requests.len() - stats.completions.len(),
         counters,
+        slo_breaches: 0,
         queue: stats
             .queue
             .iter()
@@ -381,17 +429,22 @@ fn score_run(
 
 /// Run the frozen-vs-adaptive drift replay. See the module docs.
 pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
-    run_replay_with_obs(cfg, None)
+    run_replay_with_obs(cfg, None, None)
 }
 
-/// [`run_replay`], with request-lifecycle tracing attached to the
-/// **adaptive** run (the frozen control run serves tracing-off, so the
-/// comparison is not perturbed). The caller keeps its `Arc` clones of
-/// the telemetry to export the span timeline (Chrome trace) and scrape
-/// the metrics registry after the replay returns.
+/// [`run_replay`], with request-lifecycle tracing attached per run:
+/// `telemetry` covers the **adaptive** run, `frozen_telemetry` (when
+/// given) the frozen control run — two separate recorders, so the
+/// frozen-vs-adaptive timelines can be diffed with the `cascadia
+/// trace --diff` tooling. Leave `frozen_telemetry` at `None` to keep
+/// the control run tracing-off (the unperturbed-comparison default).
+/// The caller keeps its `Arc` clones of the telemetry to export span
+/// timelines (Chrome trace) and scrape the metrics registries after
+/// the replay returns.
 pub fn run_replay_with_obs(
     cfg: &ReplayConfig,
     telemetry: Option<Arc<ServeTelemetry>>,
+    frozen_telemetry: Option<Arc<ServeTelemetry>>,
 ) -> Result<ReplayReport> {
     cfg.validate()?;
     let cascade = cascade_by_name(&cfg.cascade_name).expect("validated");
@@ -457,12 +510,14 @@ pub fn run_replay_with_obs(
     };
 
     // --- Frozen run: the startup plan serves the whole drift. ---
+    server.set_telemetry(frozen_telemetry);
     let stats_frozen = server
         .serve_entries(&trace, &factory, &live_judger)
         .context("frozen replay run")?;
     let frozen = score_run(&stats_frozen, &phased, cfg, AdaptCounters::default());
 
-    // Tracing covers only the adaptive run, from here on.
+    // The adaptive run records into its own recorder (or none), so the
+    // two timelines stay separately diffable.
     server.set_telemetry(telemetry);
 
     // --- Adaptive run: monitor → re-schedule → hot-swap live. (The
@@ -477,10 +532,23 @@ pub fn run_replay_with_obs(
         n_gpus: cfg.n_gpus,
         quality_requirement: cfg.quality_requirement,
     };
+    // The SLO trigger runs on the compressed clock: the bound and the
+    // burn windows shrink by `time_scale`, matching the compressed
+    // latencies the completion tap observes.
+    let slo = cfg.slo_trigger.then(|| crate::obs::alert::SloBurnConfig {
+        slo_s: cfg.slo_seconds / cfg.time_scale,
+        target: cfg.slo_target,
+        short_window_s: cfg.slo_short_window_s / cfg.time_scale,
+        long_window_s: cfg.slo_long_window_s / cfg.time_scale,
+        burn_threshold: cfg.slo_burn_threshold,
+        min_samples: 20,
+        clear_ratio: 0.5,
+    });
     let adapt_cfg = AdaptConfig {
         monitor: cfg.monitor.clone(),
         max_new_tokens: cfg.max_new_tokens,
         continuous_engine: cfg.continuous,
+        slo,
         ..Default::default()
     };
     let speeds_swap = Arc::clone(&speeds);
@@ -502,7 +570,8 @@ pub fn run_replay_with_obs(
     controller.wait_idle(Duration::from_secs(60));
     let mut counters = controller.counters();
     counters.hot_swaps = control.hot_swaps();
-    let adaptive = score_run(&stats_adaptive, &phased, cfg, counters);
+    let mut adaptive = score_run(&stats_adaptive, &phased, cfg, counters);
+    adaptive.slo_breaches = controller.slo_breaches();
 
     Ok(ReplayReport {
         initial_plan: plan.summary(),

@@ -91,6 +91,21 @@ impl Monitor {
         self.pending = false;
     }
 
+    /// Trigger a re-schedule from an external signal (the SLO burn-rate
+    /// alerter) instead of a detected workload shift. Shares the
+    /// pending-trigger suppression with [`Monitor::observe`]: while a
+    /// re-schedule is outstanding — whichever trigger fired it — this
+    /// returns `None`, so the two trigger sources never storm. Also
+    /// `None` below `min_samples`: a re-schedule needs a representative
+    /// window to plan on.
+    pub fn trigger_external(&mut self) -> Option<TraceStats> {
+        if self.pending || self.window.len() < self.config.min_samples {
+            return None;
+        }
+        self.pending = true;
+        Some(estimate_stats(&self.window))
+    }
+
     /// Whether a trigger is outstanding (re-schedule in flight).
     pub fn is_pending(&self) -> bool {
         self.pending
@@ -276,6 +291,25 @@ mod tests {
         }
         m.rebased(stats.expect("shift detected"));
         assert!(m.window_requests().is_empty(), "window must reset on rebase");
+    }
+
+    #[test]
+    fn external_trigger_respects_pending_and_min_samples() {
+        let base = baseline();
+        let mut m = Monitor::new(MonitorConfig::default(), base);
+        for req in generate(&paper_trace(2, 4.0), 30, 14) {
+            let _ = m.observe(req);
+        }
+        assert!(m.trigger_external().is_none(), "underfilled window must not trigger");
+        for req in generate(&paper_trace(2, 4.0), 100, 15) {
+            let _ = m.observe(req);
+        }
+        let stats = m.trigger_external().expect("filled window triggers");
+        assert!(m.is_pending());
+        assert!(m.trigger_external().is_none(), "pending suppresses re-fire");
+        m.rebased(stats);
+        assert!(!m.is_pending());
+        assert_eq!(m.reschedules, 1);
     }
 
     #[test]

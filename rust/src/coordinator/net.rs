@@ -17,14 +17,17 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::server::{BackendFactory, ResponseJudger, TierBackend};
-use crate::obs::{MetricsRegistry, LATENCY_BUCKETS};
+use crate::obs::{
+    export_recorder_health, Clock, Event, EventKind, MetricsRegistry, ProfileAggregator,
+    ProfileConfig, TraceRecorder, ACTION_ACCEPT, ACTION_ESCALATE, ACTION_SKIP, LATENCY_BUCKETS,
+};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
 use crate::sched::plan::CascadePlan;
 use crate::util::json::Json;
@@ -46,6 +49,12 @@ pub struct TcpFrontend {
     /// Unified metrics for the wire path, scraped via `GET /metrics`
     /// on the same port (Prometheus text exposition 0.0.4).
     registry: Arc<MetricsRegistry>,
+    /// Request-lifecycle events for the wire path, in the same 12-kind
+    /// vocabulary the engine and DES emit (one shard per tier). Folded
+    /// on demand into a latency-attribution report by `GET /profile`.
+    recorder: Arc<TraceRecorder>,
+    clock: Clock,
+    next_req: AtomicU64,
 }
 
 impl TcpFrontend {
@@ -56,6 +65,9 @@ impl TcpFrontend {
             n_tiers,
             max_new_default,
             registry: Arc::new(MetricsRegistry::new()),
+            recorder: Arc::new(TraceRecorder::for_tiers(n_tiers.max(1))),
+            clock: Clock::wall(),
+            next_req: AtomicU64::new(0),
         })
     }
 
@@ -63,6 +75,11 @@ impl TcpFrontend {
     /// endpoint — callers can read counters/histograms directly.
     pub fn metrics(&self) -> Arc<MetricsRegistry> {
         Arc::clone(&self.registry)
+    }
+
+    /// The wire path's lifecycle trace, shared with `GET /profile`.
+    pub fn recorder(&self) -> Arc<TraceRecorder> {
+        Arc::clone(&self.recorder)
     }
 
     /// Wire a scheduler-produced plan into the front-end: the plan's
@@ -156,14 +173,33 @@ impl TcpFrontend {
             // line with a full HTTP response and close the connection
             // (Prometheus opens a fresh connection per scrape).
             if line.trim_start().starts_with("GET ") {
-                let (status, body) = if line.trim_start().starts_with("GET /metrics") {
-                    ("200 OK", self.registry.render_prometheus())
+                let path = line.trim_start();
+                let (status, ctype, body) = if path.starts_with("GET /metrics") {
+                    export_recorder_health(&self.recorder, &self.registry);
+                    (
+                        "200 OK",
+                        "text/plain; version=0.0.4; charset=utf-8",
+                        self.registry.render_prometheus(),
+                    )
+                } else if path.starts_with("GET /profile") {
+                    let events = self.recorder.snapshot();
+                    let mut agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+                    let report = agg.report(self.recorder.dropped_events());
+                    (
+                        "200 OK",
+                        "application/json; charset=utf-8",
+                        format!("{}\n", report.to_json()),
+                    )
                 } else {
-                    ("404 Not Found", String::from("only /metrics is served\n"))
+                    (
+                        "404 Not Found",
+                        "text/plain; charset=utf-8",
+                        String::from("only /metrics and /profile are served\n"),
+                    )
                 };
                 write!(
                     writer,
-                    "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
                     body.len()
                 )?;
                 return Ok(());
@@ -202,26 +238,58 @@ impl TcpFrontend {
         let c = self.n_tiers;
         let features = RequestFeatures::live(prompt.len());
         let t0 = Instant::now();
+        let rid = self.next_req.fetch_add(1, Ordering::Relaxed);
         // One consistent policy snapshot per request: a concurrent
         // hot-swap never changes the rules mid-cascade.
         let policy = self.policy.pread().clone();
         let mut tier = policy.entry_tier(&features, c).min(c - 1);
         self.registry.inc(&format!("cascadia_requests_admitted_total{{tier=\"{tier}\"}}"));
+        let mut adm = Event::at(self.clock.now(), rid, tier as u32, EventKind::Admitted);
+        adm.a = tier as u64;
+        self.recorder.emit(tier, adm);
+        let mut ttft = None;
         let (tier, output, score) = loop {
+            // The wire path serves synchronously per connection, so the
+            // queue span collapses to a point — emitted anyway so the
+            // profile aggregator sees the same event shape as the
+            // engine and DES paths.
+            let t_q = self.clock.now();
+            self.recorder.emit(tier, Event::at(t_q, rid, tier as u32, EventKind::QueueEnter));
+            self.recorder.emit(tier, Event::at(t_q, rid, tier as u32, EventKind::QueueExit));
             let output = backends[tier].generate(&prompt, max_new)?;
             let score = judger.score(&prompt, &output);
+            let t_dec = self.clock.now();
+            ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64());
             let decision = if tier == c - 1 {
                 Decision::Accept
             } else {
                 policy.decide(tier, score, &features, c)
             };
             match decision {
-                Decision::Accept => break (tier, output, score),
+                Decision::Accept => {
+                    let mut route = Event::at(t_dec, rid, tier as u32, EventKind::RouteDecision);
+                    route.a = ACTION_ACCEPT;
+                    route.b = tier as u64;
+                    self.recorder.emit(tier, route);
+                    break (tier, output, score);
+                }
                 Decision::Escalate | Decision::SkipTo(_) => {
                     let next = match decision {
                         Decision::SkipTo(t) => t.clamp(tier + 1, c - 1),
                         _ => tier + 1,
                     };
+                    let mut route = Event::at(t_dec, rid, tier as u32, EventKind::RouteDecision);
+                    route.a = if matches!(decision, Decision::SkipTo(_)) {
+                        ACTION_SKIP
+                    } else {
+                        ACTION_ESCALATE
+                    };
+                    route.b = next as u64;
+                    self.recorder.emit(tier, route);
+                    let mut esc = Event::at(t_dec, rid, tier as u32, EventKind::Escalate);
+                    esc.a = tier as u64;
+                    esc.b = next as u64;
+                    self.recorder.emit(tier, esc);
                     self.registry.inc(&format!(
                         "cascadia_escalations_total{{from=\"{tier}\",to=\"{next}\"}}"
                     ));
@@ -229,13 +297,18 @@ impl TcpFrontend {
                 }
             }
         };
+        let e2e_s = t0.elapsed().as_secs_f64();
         self.registry
             .inc(&format!("cascadia_requests_completed_total{{tier=\"{tier}\"}}"));
         self.registry.observe(
             &format!("cascadia_e2e_latency_seconds{{tier=\"{tier}\"}}"),
             LATENCY_BUCKETS,
-            t0.elapsed().as_secs_f64(),
+            e2e_s,
         );
+        let mut fin = Event::at(self.clock.now(), rid, tier as u32, EventKind::Finished);
+        fin.fa = ttft.unwrap_or(e2e_s);
+        fin.fb = e2e_s;
+        self.recorder.emit(tier, fin);
         Ok(Json::obj(vec![
             ("id", Json::num(id as f64)),
             (
@@ -405,6 +478,64 @@ mod tests {
         let mut response = String::new();
         BufReader::new(other).read_to_string(&mut response).unwrap();
         assert!(response.starts_with("HTTP/1.0 404"), "{response}");
+
+        shutdown.store(true, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn profile_endpoint_serves_phase_attribution_json() {
+        use std::io::Read as _;
+        let addr = "127.0.0.1:39479";
+        let shutdown =
+            spawn_server(addr, PolicySpec::threshold(vec![50.0]).unwrap(), 2);
+
+        // One accept-at-entry and one escalated request.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, r#"{{"id": 1, "prompt": [0, 7]}}"#).unwrap();
+        writeln!(stream, r#"{{"id": 2, "prompt": [1, 7]}}"#).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap();
+        }
+        drop(reader);
+        drop(stream);
+
+        let mut scrape = TcpStream::connect(addr).unwrap();
+        write!(scrape, "GET /profile HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        BufReader::new(scrape).read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 200 OK"), "{response}");
+        assert!(response.contains("application/json"), "{response}");
+        let body = response.split("\r\n\r\n").nth(1).unwrap();
+        let json = Json::parse(body).unwrap();
+        assert_eq!(
+            json.req("schema").unwrap().as_str().unwrap(),
+            "cascadia.profile.v1"
+        );
+        assert_eq!(json.req("requests").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(json.req("dropped_events").unwrap().as_i64().unwrap(), 0);
+        // Both requests fold through the full attribution path.
+        let attribution = json.req("attribution").unwrap();
+        assert_eq!(attribution.req("matched").unwrap().as_i64().unwrap(), 2);
+        // The escalated request shows up as tier-0 outflow.
+        let tiers = json.req("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers[0].req("escalated_out").unwrap().as_i64().unwrap(), 1);
+
+        // The same scrape port exports trace-ring health on /metrics.
+        let mut metrics = TcpStream::connect(addr).unwrap();
+        write!(metrics, "GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        BufReader::new(metrics).read_to_string(&mut response).unwrap();
+        assert!(
+            response.contains("cascadia_trace_ring_occupancy{shard=\"0\"}"),
+            "{response}"
+        );
+        assert!(
+            response.contains("cascadia_trace_dropped_events_total{shard=\"0\"} 0"),
+            "{response}"
+        );
 
         shutdown.store(true, Ordering::SeqCst);
     }

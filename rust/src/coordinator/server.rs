@@ -76,6 +76,13 @@ pub trait AdmissionObserver: Send + Sync {
     /// applied by the router between routing steps — promptly, but
     /// not necessarily before this request itself routes.
     fn on_admit(&self, req_index: usize);
+
+    /// Called by the router as a request completes, with its accepting
+    /// tier and end-to-end latency — the SLO burn-rate trigger's feed
+    /// ([`crate::adapt`]). Default: ignore.
+    fn on_complete(&self, tier: usize, e2e_s: f64) {
+        let _ = (tier, e2e_s);
+    }
 }
 
 /// Handle through which a running [`CascadeServer::serve_adaptive`]
@@ -1327,6 +1334,12 @@ impl CascadeServer {
                                     "cascadia_requests_completed_total{{tier=\"{tier}\"}}"
                                 ));
                             }
+                            // Completion tap: the SLO burn-rate
+                            // trigger's feed (admission already went
+                            // through `on_admit` in the submitter).
+                            if let Some(obs) = observer {
+                                obs.on_complete(tier, e2e.as_secs_f64());
+                            }
                             completions.push(Completion {
                                 id: req.id,
                                 output,
@@ -1431,12 +1444,7 @@ impl CascadeServer {
                 })
                 .collect();
             if let Some(tm) = &telem {
-                tm.registry
-                    .gauge_set("cascadia_trace_events", tm.recorder.n_events() as f64);
-                tm.registry.gauge_set(
-                    "cascadia_trace_dropped_events",
-                    tm.recorder.dropped_events() as f64,
-                );
+                crate::obs::export_recorder_health(&tm.recorder, &tm.registry);
             }
             Ok(ServerStats {
                 completions,

@@ -257,6 +257,33 @@ pub struct TracingReport {
     pub win: bool,
 }
 
+/// Profile-aggregation section: the tracing-on run's event stream
+/// folded through [`crate::obs::ProfileAggregator`]. Gates that the
+/// fold stays inside the tracing overhead budget (fold wall-clock
+/// ≤ 3% of the traced run's wall-clock, with a 10 ms absolute floor
+/// against OS jitter) and that the per-request waterfalls reconstruct
+/// measured e2e latency (p95 attribution error ≤ 5%).
+#[derive(Debug, Clone)]
+pub struct ProfileSectionReport {
+    /// Requests folded to a completed waterfall.
+    pub requests: usize,
+    /// Waterfalls whose span was opened by an `admitted` event (the
+    /// attribution-error population).
+    pub matched: usize,
+    pub events_folded: u64,
+    /// Wall-clock seconds spent folding (the fold runs at wall speed;
+    /// no time scale applies).
+    pub fold_wall_s: f64,
+    /// Wall-clock seconds of the traced serving run it folds.
+    pub run_wall_s: f64,
+    /// fold_wall_s / run_wall_s.
+    pub fold_frac: f64,
+    /// p95 over requests of |waterfall phase sum − measured e2e|.
+    pub p95_err_s: f64,
+    pub p95_err_frac: f64,
+    pub win: bool,
+}
+
 /// The full benchmark written to `BENCH_serving.json`.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -279,12 +306,13 @@ pub struct BenchReport {
     pub chunked: ChunkedReport,
     pub swap: SwapReport,
     pub tracing: TracingReport,
+    pub profile: ProfileSectionReport,
 }
 
 impl BenchReport {
     /// Every gate the bench enforces: headline win, page budgets,
     /// prefix-sharing win, chunked-TTFT win, swap-preemption win,
-    /// tracing-overhead win.
+    /// tracing-overhead win, profile-aggregation win.
     pub fn all_green(&self) -> bool {
         self.win
             && self.occupancy_ok
@@ -292,6 +320,7 @@ impl BenchReport {
             && self.chunked.win
             && self.swap.win
             && self.tracing.win
+            && self.profile.win
     }
 
     pub fn to_json(&self) -> Json {
@@ -453,6 +482,21 @@ impl BenchReport {
                     ),
                     ("overhead_ok", Json::Bool(self.tracing.win)),
                     ("win", Json::Bool(self.tracing.win)),
+                ]),
+            ),
+            (
+                "profile",
+                Json::obj(vec![
+                    ("requests", Json::num(self.profile.requests as f64)),
+                    ("matched", Json::num(self.profile.matched as f64)),
+                    ("events_folded", Json::num(self.profile.events_folded as f64)),
+                    ("fold_wall_s", Json::num(self.profile.fold_wall_s)),
+                    ("run_wall_s", Json::num(self.profile.run_wall_s)),
+                    ("fold_frac", Json::num(self.profile.fold_frac)),
+                    ("p95_err_s", Json::num(self.profile.p95_err_s)),
+                    ("p95_err_frac", Json::num(self.profile.p95_err_frac)),
+                    ("fold_ok", Json::Bool(self.profile.win)),
+                    ("win", Json::Bool(self.profile.win)),
                 ]),
             ),
         ])
@@ -1148,7 +1192,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
     // continuous engine with the span recorder + metrics registry
     // detached vs attached. Both runs use identical configs; only the
     // telemetry handle differs, so the delta is pure recording cost. ---
-    let tracing = {
+    let (tracing, profile) = {
         let off = run_continuous(
             &trace,
             &judger,
@@ -1197,7 +1241,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         // uncompressed seconds: time compression multiplies OS
         // scheduling noise by the same factor it divides latencies.
         let slack = 0.010 * cfg.time_scale;
-        TracingReport {
+        let tracing = TracingReport {
             requests: trace.len(),
             p95_off_s: p95_off,
             p95_on_s: p95_on,
@@ -1207,7 +1251,36 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             win: p95_on <= p95_off * 1.03 + slack
                 && events >= trace.len()
                 && dropped == 0,
-        }
+        };
+
+        // --- Profile section: fold the tracing-on run's event stream
+        // into phase waterfalls and gate (a) the fold's wall-clock
+        // against the traced run's wall-clock, (b) how exactly the
+        // waterfalls reconstruct measured e2e latency. ---
+        let evs = telem.recorder.snapshot();
+        let fold_t0 = std::time::Instant::now();
+        let mut agg = crate::obs::ProfileAggregator::fold(
+            crate::obs::ProfileConfig::default(),
+            &evs,
+        );
+        let preport = agg.report(telem.recorder.dropped_events());
+        let fold_wall_s = fold_t0.elapsed().as_secs_f64();
+        let run_wall_s = on.stats.wall_clock.as_secs_f64();
+        let fold_frac = fold_wall_s / run_wall_s.max(1e-9);
+        let profile = ProfileSectionReport {
+            requests: preport.requests,
+            matched: preport.attribution_matched,
+            events_folded: preport.events,
+            fold_wall_s,
+            run_wall_s,
+            fold_frac,
+            p95_err_s: preport.attribution_p95_err_s,
+            p95_err_frac: preport.attribution_p95_err_frac,
+            win: preport.attribution_matched > 0
+                && (fold_frac <= 0.03 || fold_wall_s <= 0.010)
+                && preport.attribution_p95_err_frac <= 0.05,
+        };
+        (tracing, profile)
     };
 
     Ok(BenchReport {
@@ -1225,6 +1298,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         chunked,
         swap,
         tracing,
+        profile,
     })
 }
 
@@ -1303,6 +1377,21 @@ mod tests {
             "tracing must be within the overhead budget: p95 on {:.3}s vs off {:.3}s",
             report.tracing.p95_on_s, report.tracing.p95_off_s
         );
+        assert_eq!(
+            report.profile.requests, 52,
+            "every served request must fold to a waterfall"
+        );
+        assert_eq!(
+            report.profile.matched, 52,
+            "every waterfall must open with an admitted event"
+        );
+        assert!(
+            report.profile.win,
+            "profile fold must stay in budget: fold {:.4}s of a {:.4}s run, p95 err frac {:.4}",
+            report.profile.fold_wall_s,
+            report.profile.run_wall_s,
+            report.profile.p95_err_frac
+        );
         assert!(report.all_green());
         // The report serializes with the fields CI greps for.
         let json = report.to_json().to_string();
@@ -1313,5 +1402,7 @@ mod tests {
         assert!(json.contains("\"swap\""));
         assert!(json.contains("\"tracing\""));
         assert!(json.contains("\"overhead_ok\":true"));
+        assert!(json.contains("\"profile\""));
+        assert!(json.contains("\"fold_ok\":true"));
     }
 }

@@ -253,11 +253,17 @@ impl cascadia::engine::StepBackend for DiffStep {
     fn release(&mut self, _seq: cascadia::engine::SeqId) {}
 }
 
-fn cmd_trace_diff(cfg: &ExperimentConfig) -> Result<()> {
+/// The `--diff` harness: the same all-at-once workload served by the
+/// traced paged DES and by a real `EngineCore` twin, returning both
+/// event timelines. Shared by `cascadia trace --diff` and the
+/// DES-vs-live attribution-identity test.
+fn diff_harness_traces(
+    cfg: &ExperimentConfig,
+) -> Result<(Vec<cascadia::obs::Event>, Vec<cascadia::obs::Event>)> {
     use std::sync::Arc;
 
     use cascadia::engine::{EngineConfig, EngineCore, PreemptionConfig};
-    use cascadia::obs::{diff_timelines, EngineTracer, TraceRecorder};
+    use cascadia::obs::{EngineTracer, TraceRecorder};
     use cascadia::sim::simulate_paged_traced;
 
     let (rm, mut trace) = des_trace_inputs(cfg, true);
@@ -295,26 +301,41 @@ fn cmd_trace_diff(cfg: &ExperimentConfig) -> Result<()> {
             first = false;
         }
     }
+    Ok((des_rec.snapshot(), live_rec.snapshot()))
+}
 
-    let left = des_rec.snapshot();
-    let right = live_rec.snapshot();
+/// The exit verdict `cascadia trace --diff` applies to a diff report:
+/// `Ok` (with the printed line) on equivalence, `Err` carrying the
+/// first divergence otherwise — so the shell exit code is the contract.
+fn trace_diff_verdict(report: &cascadia::obs::DiffReport) -> Result<String> {
+    if report.is_equivalent() {
+        return Ok("timelines are equivalent: zero divergence".to_string());
+    }
+    let first = match report.first_divergence() {
+        Some(d) => format!("first divergence: {d}"),
+        None => format!(
+            "request sets differ: only in DES {:?}, only live {:?}",
+            report.only_left, report.only_right
+        ),
+    };
+    bail!(
+        "{first} — DES and live timelines diverge ({} divergences)",
+        report.divergences.len()
+    )
+}
+
+fn cmd_trace_diff(cfg: &ExperimentConfig) -> Result<()> {
+    use cascadia::obs::diff_timelines;
+
+    let (left, right) = diff_harness_traces(cfg)?;
     let report = diff_timelines(&left, &right);
     println!(
         "DES events: {} | live events: {} | requests compared: {}",
         report.events_left, report.events_right, report.requests_compared
     );
-    if report.is_equivalent() {
-        println!("timelines are equivalent: zero divergence");
-        return Ok(());
-    }
-    match report.first_divergence() {
-        Some(d) => eprintln!("first divergence: {d}"),
-        None => eprintln!(
-            "request sets differ: only in DES {:?}, only live {:?}",
-            report.only_left, report.only_right
-        ),
-    }
-    bail!("DES and live timelines diverge ({} divergences)", report.divergences.len())
+    let msg = trace_diff_verdict(&report)?;
+    println!("{msg}");
+    Ok(())
 }
 
 /// Drift replay (§4.4): serve a phase-shift trace twice — frozen at
@@ -326,19 +347,22 @@ fn cmd_replay(args: &Args) -> Result<()> {
     )?;
     let cfg = cascadia::adapt::ReplayConfig::load(path)?;
 
-    // Optional observability artifacts of the ADAPTIVE run: a Chrome
-    // trace-event timeline and a Prometheus scrape snapshot.
+    // Optional observability artifacts: a Chrome trace-event timeline
+    // and a Prometheus scrape snapshot of the ADAPTIVE run, plus (via
+    // --trace-frozen-out) the FROZEN control run's timeline so the two
+    // can be diffed with the `cascadia trace` tooling.
     let trace_out = args.get("trace-out");
     let metrics_out = args.get("metrics-out");
-    let telemetry = if trace_out.is_some() || metrics_out.is_some() {
-        let n_tiers = cascadia::models::cascade_by_name(&cfg.cascade_name)
-            .map(|c| c.len())
-            .unwrap_or(2);
-        Some(cascadia::coordinator::ServeTelemetry::for_tiers(n_tiers))
-    } else {
-        None
-    };
-    let report = cascadia::adapt::run_replay_with_obs(&cfg, telemetry.clone())?;
+    let frozen_out = args.get("trace-frozen-out");
+    let n_tiers = cascadia::models::cascade_by_name(&cfg.cascade_name)
+        .map(|c| c.len())
+        .unwrap_or(2);
+    let telemetry = (trace_out.is_some() || metrics_out.is_some())
+        .then(|| cascadia::coordinator::ServeTelemetry::for_tiers(n_tiers));
+    let frozen_telemetry =
+        frozen_out.map(|_| cascadia::coordinator::ServeTelemetry::for_tiers(n_tiers));
+    let report =
+        cascadia::adapt::run_replay_with_obs(&cfg, telemetry.clone(), frozen_telemetry.clone())?;
     if let Some(tm) = &telemetry {
         if let Some(out) = trace_out {
             let json = cascadia::obs::chrome_trace(&tm.recorder.snapshot());
@@ -355,6 +379,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
                 .with_context(|| format!("writing {out}"))?;
             println!("wrote Prometheus metrics snapshot to {out}");
         }
+    }
+    if let (Some(tm), Some(out)) = (&frozen_telemetry, frozen_out) {
+        let json = cascadia::obs::chrome_trace(&tm.recorder.snapshot());
+        std::fs::write(out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+        println!(
+            "wrote frozen-run Chrome trace ({} events, {} dropped) to {out}",
+            tm.recorder.n_events(),
+            tm.recorder.dropped_events()
+        );
     }
 
     println!("initial plan : {}", report.initial_plan);
@@ -428,8 +461,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "adaptation: {} | dropped: frozen {} adaptive {}",
-        report.adaptive.counters, report.frozen.dropped, report.adaptive.dropped
+        "adaptation: {} slo_breaches={} | dropped: frozen {} adaptive {}",
+        report.adaptive.counters,
+        report.adaptive.slo_breaches,
+        report.frozen.dropped,
+        report.adaptive.dropped
     );
     if report.adaptive.dropped > 0 || report.frozen.dropped > 0 {
         bail!("requests were dropped — the hot-swap contract is broken");
@@ -448,6 +484,192 @@ fn cmd_replay(args: &Args) -> Result<()> {
         if report.adaptation_win() { "yes (adaptive beats frozen on SLO attainment)" } else { "no" }
     );
     Ok(())
+}
+
+/// `cascadia profile`: fold a request-lifecycle event stream into the
+/// per-request phase-attribution waterfall and per-tier health report.
+/// Source is either the traced paged DES on the configured workload
+/// (default) or an adaptive drift replay with live telemetry
+/// (`--replay cfg.json`) — same `cascadia.profile.v1` schema either
+/// way. `--out` writes the JSON document, `--metrics-out` (replay
+/// source only) a Prometheus snapshot, `--slo SECS` enables SLO
+/// attainment / burn-rate evaluation and alerts.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use cascadia::obs::{ProfileAggregator, ProfileConfig, TraceRecorder};
+
+    let slo_s = match args.get("slo") {
+        Some(v) => Some(v.parse::<f64>().context("--slo")?),
+        None => None,
+    };
+    let (events, dropped, registry) = if let Some(path) = args.get("replay") {
+        let cfg = cascadia::adapt::ReplayConfig::load(path)?;
+        let n_tiers = cascadia::models::cascade_by_name(&cfg.cascade_name)
+            .map(|c| c.len())
+            .unwrap_or(2);
+        let telemetry = cascadia::coordinator::ServeTelemetry::for_tiers(n_tiers);
+        let _ = cascadia::adapt::run_replay_with_obs(&cfg, Some(telemetry.clone()), None)?;
+        cascadia::obs::export_recorder_health(&telemetry.recorder, &telemetry.registry);
+        (
+            telemetry.recorder.snapshot(),
+            telemetry.recorder.dropped_events(),
+            Some(telemetry.registry.clone()),
+        )
+    } else {
+        let cfg = load_config(args)?;
+        let (rm, trace) = des_trace_inputs(&cfg, false);
+        let pool = vec![rm; args.usize_or("replicas", 2)?.max(1)];
+        let rec = TraceRecorder::new(pool.len(), 1 << 18);
+        let _ = cascadia::sim::simulate_paged_traced(&pool, &trace, 16, usize::MAX, false, &rec);
+        (rec.snapshot(), rec.dropped_events(), None)
+    };
+    let cfg = ProfileConfig { slo_s, ..Default::default() };
+    let mut agg = ProfileAggregator::fold(cfg, &events);
+    let report = agg.report(dropped);
+    print!("{}", report.render());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote profile JSON to {out}");
+    }
+    if let Some(out) = args.get("metrics-out") {
+        let reg = registry
+            .context("--metrics-out requires --replay (the DES source has no registry)")?;
+        std::fs::write(out, reg.render_prometheus())
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote Prometheus metrics snapshot to {out}");
+    }
+    Ok(())
+}
+
+/// One blocking HTTP/1.0 GET against the serving front-end's scrape
+/// port (std-only — the same trick Prometheus plays on it).
+fn http_get(addr: &str, path: &str) -> Result<String> {
+    use std::io::{Read as _, Write as _};
+
+    let mut s = std::net::TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    write!(s, "GET {path} HTTP/1.0\r\n\r\n")?;
+    let mut response = String::new();
+    s.read_to_string(&mut response)?;
+    if !response.starts_with("HTTP/1.0 200") {
+        bail!(
+            "GET {path} on {addr}: {}",
+            response.lines().next().unwrap_or("(no response)")
+        );
+    }
+    Ok(response.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}
+
+/// One `cascadia top` frame from a `/profile` JSON document and a
+/// `/metrics` Prometheus snapshot (either may be absent).
+fn render_top_frame(profile: Option<&cascadia::util::json::Json>, metrics: &str) -> String {
+    let mut out = String::new();
+    if let Some(p) = profile {
+        let n = |key: &str| p.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        let e2e = p.get("e2e");
+        let pct = |k: &str| {
+            e2e.and_then(|o| o.get(k)).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+        };
+        out.push_str(&format!(
+            "requests {:.0} ({:.0} open) | e2e p50 {:.2}s p95 {:.2}s | span {:.1}s | \
+             hot-swaps {:.0} | events {:.0} ({:.0} dropped)\n",
+            n("requests"),
+            n("open_requests"),
+            pct("p50_s"),
+            pct("p95_s"),
+            n("trace_span_s"),
+            n("hot_swaps"),
+            n("events"),
+            n("dropped_events"),
+        ));
+        let mut t = Table::new(
+            "tier health",
+            &["tier", "done", "esc out", "queue", "slope/s", "busy", "att 5m/1h", "burn", "p95(s)"],
+        );
+        if let Some(tiers) = p.get("tiers").and_then(|v| v.as_arr().ok()) {
+            for tier in tiers {
+                let g = |k: &str| tier.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                t.row(vec![
+                    format!("{:.0}", g("tier")),
+                    format!("{:.0}", g("completed")),
+                    format!("{:.0}", g("escalated_out")),
+                    format!("{:.0}", g("queue_depth")),
+                    format!("{:+.2}", g("queue_slope_per_s")),
+                    format!("{:.0}%", g("busy_frac") * 100.0),
+                    format!("{:.0}%/{:.0}%", g("attainment_short") * 100.0, g("attainment_long") * 100.0),
+                    format!("{:.2}", g("burn_short")),
+                    format!("{:.2}", g("window_p95_s")),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+        if let Some(alerts) = p.get("alerts").and_then(|v| v.as_arr().ok()) {
+            for a in alerts {
+                let s = |k: &str| {
+                    a.get(k).and_then(|v| v.as_str().ok()).unwrap_or_default().to_string()
+                };
+                out.push_str(&format!(
+                    "ALERT [{}] {}: {}\n",
+                    s("severity"),
+                    s("kind"),
+                    s("evidence")
+                ));
+            }
+        }
+    }
+    // The scrape series worth eyeballing live; histograms stay out.
+    for line in metrics.lines() {
+        if line.starts_with("cascadia_requests_")
+            || line.starts_with("cascadia_escalations_total")
+            || line.starts_with("cascadia_trace_")
+        {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// `cascadia top`: terminal dashboard over a live front-end — polls
+/// `GET /profile` + `GET /metrics` on `--addr` every `--interval`
+/// seconds; `--once` renders a single frame and exits. Offline mode
+/// (`--profile-file` / `--metrics-file`) renders captured snapshots
+/// instead, no server needed.
+fn cmd_top(args: &Args) -> Result<()> {
+    use cascadia::util::json::Json;
+
+    let profile_file = args.get("profile-file");
+    let metrics_file = args.get("metrics-file");
+    if profile_file.is_some() || metrics_file.is_some() {
+        let metrics = match metrics_file {
+            Some(p) => std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+            None => String::new(),
+        };
+        let profile = match profile_file {
+            Some(p) => {
+                let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+                Some(Json::parse(&text)?)
+            }
+            None => None,
+        };
+        print!("{}", render_top_frame(profile.as_ref(), &metrics));
+        return Ok(());
+    }
+    let addr = args.str_or("addr", "127.0.0.1:8741");
+    let once = args.flag("once");
+    let interval = args.f64_or("interval", 2.0)?;
+    loop {
+        let profile = Json::parse(&http_get(&addr, "/profile")?)?;
+        let metrics = http_get(&addr, "/metrics")?;
+        if !once {
+            // ANSI clear + home between frames.
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", render_top_frame(Some(&profile), &metrics));
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.2)));
+    }
 }
 
 fn cmd_baselines(cfg: &ExperimentConfig) -> Result<()> {
@@ -650,6 +872,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
         report.tracing.dropped_events,
         report.tracing.win,
     );
+    println!(
+        "profile fold ({} reqs, {} matched): {} events in {:.3}s ({:.2}% of the {:.2}s run) | \
+         p95 attribution err {:.4}s ({:.2}%) | win {}",
+        report.profile.requests,
+        report.profile.matched,
+        report.profile.events_folded,
+        report.profile.fold_wall_s,
+        report.profile.fold_frac * 100.0,
+        report.profile.run_wall_s,
+        report.profile.p95_err_s,
+        report.profile.p95_err_frac * 100.0,
+        report.profile.win,
+    );
 
     let out = args.str_or("out", "BENCH_serving.json");
     std::fs::write(&out, format!("{}\n", report.to_json()))
@@ -704,6 +939,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
             report.tracing.dropped_events
         );
     }
+    if !report.profile.win {
+        bail!(
+            "profile aggregation broke its budget: fold {:.4}s of a {:.4}s run \
+             ({:.2}%), p95 attribution err {:.4}s ({:.2}%), {} of {} matched",
+            report.profile.fold_wall_s,
+            report.profile.run_wall_s,
+            report.profile.fold_frac * 100.0,
+            report.profile.p95_err_s,
+            report.profile.p95_err_frac * 100.0,
+            report.profile.matched,
+            report.profile.requests
+        );
+    }
     Ok(())
 }
 
@@ -717,6 +965,8 @@ fn main() -> Result<()> {
         "baselines" => cmd_baselines(&load_config(&args)?),
         "trace" => cmd_trace(&args),
         "replay" => cmd_replay(&args),
+        "profile" => cmd_profile(&args),
+        "top" => cmd_top(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "help" => {
@@ -732,7 +982,7 @@ fn main() -> Result<()> {
 
 fn print_help() {
     println!(
-        "cascadia <schedule|sweep|simulate|baselines|trace|replay|serve> \\\n\
+        "cascadia <schedule|sweep|simulate|baselines|trace|replay|profile|top|bench|serve> \\\n\
          \x20   [--config cfg.json] [--cascade deepseek|llama] [--gpus N] \\\n\
          \x20   [--trace 1..3] [--rate R] [--quality Q] [--n N] [--seed S] \\\n\
          \x20   [--policy threshold|length|margin]\n\n\
@@ -743,13 +993,99 @@ fn print_help() {
          \x20   [--cutoff 900 --entry 1] [--margin 15] [--addr host:port]\n\n\
          Online adaptation (drift replay, §4.4):\n\
          \x20   cascadia replay --config examples/configs/drift_replay.json \\\n\
-         \x20       [--trace-out replay_chrome.json] [--metrics-out replay.prom]\n\n\
-         Observability (request-lifecycle tracing):\n\
+         \x20       [--trace-out replay_chrome.json] [--metrics-out replay.prom] \\\n\
+         \x20       [--trace-frozen-out frozen_chrome.json]\n\n\
+         Observability (request-lifecycle tracing + latency attribution):\n\
          \x20   cascadia trace --export chrome [--replicas N] [--out trace_chrome.json]\n\
-         \x20   cascadia trace --diff    # paged DES vs live engine timeline diff\n\n\
+         \x20   cascadia trace --diff    # paged DES vs live engine timeline diff\n\
+         \x20   cascadia profile [--replay cfg.json] [--slo SECS] \\\n\
+         \x20       [--out profile.json] [--metrics-out replay.prom]\n\
+         \x20   cascadia top [--addr host:port] [--interval S] [--once] \\\n\
+         \x20       [--profile-file profile.json] [--metrics-file replay.prom]\n\n\
          Serving benchmark (continuous engine vs lockstep baseline, plus\n\
          prefix-sharing, chunked-prefill, and swap-preemption sections):\n\
          \x20   cascadia bench [--smoke] [--prefix-heavy] [--seed S] [--out BENCH_serving.json]\n\n\
          Paper figures: cargo run --release --bin fig7_slo (etc.) — see DESIGN.md."
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use cascadia::obs::{
+        diff_timelines, Event, EventKind, Phase, ProfileAggregator, ProfileConfig,
+    };
+    use cascadia::util::json::Json;
+
+    use super::*;
+
+    /// The acceptance contract: the DES run and its live-engine twin
+    /// produce *identical* per-request phase attribution — compared
+    /// structurally (timestamp-free RLE signatures), since wall times
+    /// differ by construction.
+    #[test]
+    fn des_and_live_attribution_identical_on_diff_harness() {
+        let cfg = ExperimentConfig { n_requests: 32, ..ExperimentConfig::default() };
+        let (des, live) = diff_harness_traces(&cfg).unwrap();
+        let fold = |events: &[Event]| -> BTreeMap<u64, Vec<(Phase, u32)>> {
+            let agg = ProfileAggregator::fold(ProfileConfig::default(), events);
+            agg.waterfalls().iter().map(|w| (w.req, w.signature.clone())).collect()
+        };
+        let l = fold(&des);
+        let r = fold(&live);
+        assert_eq!(l.len(), 32, "every DES request folds to a waterfall");
+        assert_eq!(l, r, "DES and live phase attribution diverge");
+    }
+
+    #[test]
+    fn forced_divergence_fails_with_first_divergence() {
+        let mk = |tok: u64| {
+            let mut evs = Vec::new();
+            let mut e = Event::at(0.0, 0, 0, EventKind::PrefillChunk);
+            e.a = tok;
+            e.c = 1;
+            evs.push(e);
+            evs.push(Event::at(0.1, 0, 0, EventKind::DecodeIter));
+            let mut f = Event::at(0.2, 0, 0, EventKind::Finished);
+            f.fa = 0.1;
+            f.fb = 0.2;
+            evs.push(f);
+            for (i, e) in evs.iter_mut().enumerate() {
+                e.seq = i as u64;
+            }
+            evs
+        };
+        let same = diff_timelines(&mk(4), &mk(4));
+        assert!(trace_diff_verdict(&same).is_ok(), "identical timelines must pass");
+        let report = diff_timelines(&mk(4), &mk(8));
+        let err = trace_diff_verdict(&report).unwrap_err().to_string();
+        assert!(err.contains("first divergence"), "{err}");
+        assert!(err.contains("diverge"), "{err}");
+    }
+
+    #[test]
+    fn top_frame_renders_health_table_and_alerts() {
+        let profile = Json::parse(
+            r#"{"requests":2,"open_requests":0,"events":10,"dropped_events":0,
+                "hot_swaps":1,"trace_span_s":4.5,
+                "e2e":{"p50_s":1.0,"p95_s":2.0,"mean_s":1.2},
+                "tiers":[{"tier":0,"completed":2,"escalated_out":1,"queue_depth":3,
+                          "queue_slope_per_s":0.25,"busy_frac":0.5,"window_p95_s":2.0,
+                          "attainment_short":0.9,"attainment_long":0.95,
+                          "burn_short":2.0,"burn_long":1.0}],
+                "alerts":[{"kind":"slo_burn_rate","tier":0,"severity":"critical",
+                           "evidence":"burn 2.0"}]}"#,
+        )
+        .unwrap();
+        let metrics = "cascadia_requests_completed_total{tier=\"0\"} 2\n\
+                       cascadia_e2e_latency_seconds_bucket{le=\"1\"} 2\n\
+                       cascadia_trace_ring_occupancy{shard=\"0\"} 0.1\n";
+        let frame = render_top_frame(Some(&profile), metrics);
+        assert!(frame.contains("tier health"), "{frame}");
+        assert!(frame.contains("ALERT [critical] slo_burn_rate"), "{frame}");
+        assert!(frame.contains("cascadia_requests_completed_total"), "{frame}");
+        assert!(frame.contains("cascadia_trace_ring_occupancy"), "{frame}");
+        assert!(!frame.contains("latency_seconds_bucket"), "histograms stay out: {frame}");
+    }
 }

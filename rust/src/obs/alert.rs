@@ -1,0 +1,527 @@
+//! SLO alerting: structured alerts with fire/clear/re-arm hysteresis.
+//!
+//! The profile aggregator ([`super::profile`]) reduces the event
+//! stream to per-tier health signals (SLO attainment, multi-window
+//! burn rate, queue-depth slope); this module turns those signals into
+//! **edge-triggered** [`Alert`]s. Every alert condition is evaluated
+//! with hysteresis: it fires once when the condition first holds,
+//! stays latched (no re-fire storm) while it keeps holding, clears
+//! when the signal drops below `clear_ratio` of its threshold, and
+//! only then re-arms.
+//!
+//! Burn rate follows the SRE multi-window convention: with an
+//! attainment target `T`, `burn = (1 - attainment) / (1 - T)` — burn 1
+//! consumes the error budget exactly at the sustainable rate; the
+//! alert requires **both** a short and a long window above threshold,
+//! so a brief spike (short only) or stale history (long only) cannot
+//! fire on its own.
+//!
+//! [`SloBurnMonitor`] is the standalone completion-fed variant the
+//! adapt controller uses as its SLO-drift trigger: it owns its own
+//! rolling windows and returns an [`Alert`] only on the rising edge.
+//! After a corrective action (hot-swap) the controller resets the
+//! windows but keeps the latch — one corrective action per burn
+//! episode, re-arming only once attainment actually recovers.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// `tier` value for alerts not tied to a tier (e.g. recorder drops).
+pub const TIER_NONE: u32 = u32::MAX;
+
+/// The alert vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AlertKind {
+    /// Multi-window SLO burn rate above threshold on a tier.
+    SloBurnRate,
+    /// Sustained queue-depth growth on a tier.
+    QueueGrowth,
+    /// The trace recorder dropped events (rings overflowed): spans are
+    /// silently incomplete.
+    TraceDrops,
+}
+
+impl AlertKind {
+    /// Stable wire/export name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertKind::SloBurnRate => "slo_burn_rate",
+            AlertKind::QueueGrowth => "queue_growth",
+            AlertKind::TraceDrops => "trace_drops",
+        }
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            AlertKind::SloBurnRate => 0,
+            AlertKind::QueueGrowth => 1,
+            AlertKind::TraceDrops => 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Critical,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Critical => "critical",
+        }
+    }
+}
+
+/// One structured alert event (edge-triggered: emitted once per
+/// episode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    pub kind: AlertKind,
+    /// Tier the alert is about ([`TIER_NONE`] for system-wide alerts).
+    pub tier: u32,
+    pub severity: Severity,
+    /// Human-readable signal values at fire time.
+    pub evidence: String,
+}
+
+impl std::fmt::Display for Alert {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.tier == TIER_NONE {
+            write!(f, "[{}] {}: {}", self.severity.name(), self.kind.name(), self.evidence)
+        } else {
+            write!(
+                f,
+                "[{}] {} tier {}: {}",
+                self.severity.name(),
+                self.kind.name(),
+                self.tier,
+                self.evidence
+            )
+        }
+    }
+}
+
+/// Thresholds for the evaluator.
+#[derive(Debug, Clone)]
+pub struct AlertPolicy {
+    /// Attainment target the burn rate is computed against (e.g. 0.95
+    /// = 95% of requests inside the SLO).
+    pub target: f64,
+    /// Burn-rate level (both windows) that fires `SloBurnRate`; 1.0 =
+    /// consuming the error budget exactly at the sustainable rate.
+    pub burn_threshold: f64,
+    /// A condition clears (re-arms) once its signal drops below
+    /// `clear_ratio * threshold`.
+    pub clear_ratio: f64,
+    /// Queue-depth slope (requests/s, short window) firing
+    /// `QueueGrowth` ...
+    pub queue_slope_threshold: f64,
+    /// ... but only above this standing depth (an empty queue growing
+    /// by one is not an incident).
+    pub queue_min_depth: f64,
+    /// Minimum short-window completions before burn is trusted.
+    pub min_samples: usize,
+}
+
+impl Default for AlertPolicy {
+    fn default() -> Self {
+        AlertPolicy {
+            target: 0.95,
+            burn_threshold: 1.0,
+            clear_ratio: 0.5,
+            queue_slope_threshold: 0.5,
+            queue_min_depth: 4.0,
+            min_samples: 10,
+        }
+    }
+}
+
+/// Per-tier health signals the evaluator consumes (produced by the
+/// profile aggregator's rolling windows).
+#[derive(Debug, Clone, Copy)]
+pub struct TierSignals {
+    pub tier: u32,
+    pub attainment_short: f64,
+    pub attainment_long: f64,
+    pub burn_short: f64,
+    pub burn_long: f64,
+    /// Completions inside the short window (sample-size guard).
+    pub samples_short: usize,
+    pub queue_depth: f64,
+    pub queue_slope_per_s: f64,
+}
+
+/// Edge-triggered alert evaluator with per-(kind, tier) hysteresis
+/// state. Call sites re-evaluate the same evaluator on every refresh;
+/// alerts come out only on rising edges.
+#[derive(Debug)]
+pub struct AlertEvaluator {
+    pub policy: AlertPolicy,
+    firing: BTreeMap<(u8, u32), bool>,
+}
+
+impl AlertEvaluator {
+    pub fn new(policy: AlertPolicy) -> AlertEvaluator {
+        AlertEvaluator { policy, firing: BTreeMap::new() }
+    }
+
+    /// Whether a given condition is currently latched.
+    pub fn is_firing(&self, kind: AlertKind, tier: u32) -> bool {
+        *self.firing.get(&(kind.code(), tier)).unwrap_or(&false)
+    }
+
+    /// Hysteresis step: returns true exactly on the rising edge.
+    fn edge(&mut self, kind: AlertKind, tier: u32, on: bool, clear: bool) -> bool {
+        let state = self.firing.entry((kind.code(), tier)).or_insert(false);
+        if *state {
+            if clear {
+                *state = false;
+            }
+            false
+        } else if on {
+            *state = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evaluate one tier's signals; returns newly-fired alerts.
+    pub fn evaluate_tier(&mut self, s: &TierSignals) -> Vec<Alert> {
+        let mut out = Vec::new();
+        let p = &self.policy;
+        let burn_on = s.samples_short >= p.min_samples
+            && s.burn_short > p.burn_threshold
+            && s.burn_long > p.burn_threshold;
+        let burn_clear = s.burn_short < p.burn_threshold * p.clear_ratio;
+        let (thr, clr) = (p.burn_threshold, p.clear_ratio);
+        if self.edge(AlertKind::SloBurnRate, s.tier, burn_on, burn_clear) {
+            let severity = if s.burn_short > 2.0 * thr {
+                Severity::Critical
+            } else {
+                Severity::Warning
+            };
+            out.push(Alert {
+                kind: AlertKind::SloBurnRate,
+                tier: s.tier,
+                severity,
+                evidence: format!(
+                    "burn short {:.2} / long {:.2} > {:.2} (attainment short {:.1}% long {:.1}%, {} samples)",
+                    s.burn_short,
+                    s.burn_long,
+                    thr,
+                    s.attainment_short * 100.0,
+                    s.attainment_long * 100.0,
+                    s.samples_short
+                ),
+            });
+        }
+        let q_on = s.queue_slope_per_s > self.policy.queue_slope_threshold
+            && s.queue_depth >= self.policy.queue_min_depth;
+        let q_clear = s.queue_slope_per_s < self.policy.queue_slope_threshold * clr;
+        if self.edge(AlertKind::QueueGrowth, s.tier, q_on, q_clear) {
+            out.push(Alert {
+                kind: AlertKind::QueueGrowth,
+                tier: s.tier,
+                severity: Severity::Warning,
+                evidence: format!(
+                    "queue depth {:.0} growing {:+.2} req/s over the short window",
+                    s.queue_depth, s.queue_slope_per_s
+                ),
+            });
+        }
+        out
+    }
+
+    /// Evaluate recorder health: any dropped event fires once per
+    /// monotone increase episode (clears only if the count stops
+    /// growing is not knowable from a total — so this latches until
+    /// the evaluator is rebuilt; dropped spans never become complete).
+    pub fn evaluate_drops(&mut self, dropped_events: u64) -> Option<Alert> {
+        let on = dropped_events > 0;
+        if self.edge(AlertKind::TraceDrops, TIER_NONE, on, false) {
+            return Some(Alert {
+                kind: AlertKind::TraceDrops,
+                tier: TIER_NONE,
+                severity: Severity::Warning,
+                evidence: format!(
+                    "{dropped_events} events lost to ring overflow — spans are incomplete"
+                ),
+            });
+        }
+        None
+    }
+}
+
+/// Completion-fed SLO burn-rate monitor: the adapt controller's
+/// SLO-drift trigger. Windows are time-based over the caller's clock
+/// (wall seconds for a live server, simulated seconds in tests).
+#[derive(Debug, Clone)]
+pub struct SloBurnConfig {
+    /// End-to-end latency SLO (same time base as observed latencies).
+    pub slo_s: f64,
+    /// Attainment target (fraction of requests inside the SLO).
+    pub target: f64,
+    /// Short ("fast burn") window, seconds.
+    pub short_window_s: f64,
+    /// Long ("sustained burn") window, seconds.
+    pub long_window_s: f64,
+    /// Burn level both windows must exceed to fire.
+    pub burn_threshold: f64,
+    /// Minimum completions in the short window before burn is trusted.
+    pub min_samples: usize,
+    /// Re-arm once short-window burn drops below `clear_ratio *
+    /// burn_threshold`.
+    pub clear_ratio: f64,
+}
+
+impl Default for SloBurnConfig {
+    fn default() -> Self {
+        SloBurnConfig {
+            slo_s: 20.0,
+            target: 0.9,
+            short_window_s: 30.0,
+            long_window_s: 240.0,
+            burn_threshold: 1.5,
+            min_samples: 20,
+            clear_ratio: 0.5,
+        }
+    }
+}
+
+/// Rolling completion window + hysteresis latch. See module docs.
+#[derive(Debug)]
+pub struct SloBurnMonitor {
+    pub config: SloBurnConfig,
+    /// (completion time, within-SLO) samples inside the long window.
+    window: VecDeque<(f64, bool)>,
+    firing: bool,
+}
+
+/// `(1 - attainment) / (1 - target)`, clamped to a finite value for
+/// targets at/above 1.
+fn burn_rate(ok: usize, total: usize, target: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let attainment = ok as f64 / total as f64;
+    let budget = (1.0 - target).max(1e-6);
+    (1.0 - attainment) / budget
+}
+
+impl SloBurnMonitor {
+    pub fn new(config: SloBurnConfig) -> SloBurnMonitor {
+        SloBurnMonitor { config, window: VecDeque::new(), firing: false }
+    }
+
+    fn counts_since(&self, cutoff: f64) -> (usize, usize) {
+        let mut ok = 0;
+        let mut total = 0;
+        for &(t, within) in self.window.iter().rev() {
+            if t < cutoff {
+                break;
+            }
+            total += 1;
+            if within {
+                ok += 1;
+            }
+        }
+        (ok, total)
+    }
+
+    /// Short-window burn rate as of the latest observation.
+    pub fn burn_short(&self) -> f64 {
+        let now = self.window.back().map(|&(t, _)| t).unwrap_or(0.0);
+        let (ok, total) = self.counts_since(now - self.config.short_window_s);
+        burn_rate(ok, total, self.config.target)
+    }
+
+    /// Whether the latch is set (an episode is in progress).
+    pub fn is_firing(&self) -> bool {
+        self.firing
+    }
+
+    /// Record one completion. Returns an [`Alert`] exactly on the
+    /// rising edge of the multi-window burn condition.
+    pub fn observe(&mut self, now_s: f64, e2e_s: f64) -> Option<Alert> {
+        let within = e2e_s <= self.config.slo_s;
+        self.window.push_back((now_s, within));
+        while let Some(&(t, _)) = self.window.front() {
+            if t < now_s - self.config.long_window_s {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+        let (ok_s, n_s) = self.counts_since(now_s - self.config.short_window_s);
+        let (ok_l, n_l) = self.counts_since(now_s - self.config.long_window_s);
+        let burn_s = burn_rate(ok_s, n_s, self.config.target);
+        let burn_l = burn_rate(ok_l, n_l, self.config.target);
+        if self.firing {
+            if n_s >= self.config.min_samples
+                && burn_s < self.config.burn_threshold * self.config.clear_ratio
+            {
+                self.firing = false;
+            }
+            return None;
+        }
+        let on = n_s >= self.config.min_samples
+            && burn_s > self.config.burn_threshold
+            && burn_l > self.config.burn_threshold;
+        if !on {
+            return None;
+        }
+        self.firing = true;
+        let severity = if burn_s > 2.0 * self.config.burn_threshold {
+            Severity::Critical
+        } else {
+            Severity::Warning
+        };
+        Some(Alert {
+            kind: AlertKind::SloBurnRate,
+            tier: TIER_NONE,
+            severity,
+            evidence: format!(
+                "e2e > {:.2}s SLO: burn short {:.2} / long {:.2} > {:.2} ({} samples)",
+                self.config.slo_s, burn_s, burn_l, self.config.burn_threshold, n_s
+            ),
+        })
+    }
+
+    /// Drop the window after a corrective action (hot-swap) so stale
+    /// pre-swap latencies cannot bias post-swap burn. The latch is
+    /// kept: one corrective action per episode — re-arming requires
+    /// attainment to actually recover ([`SloBurnMonitor::observe`]
+    /// clears the latch once short-window burn falls below the clear
+    /// level).
+    pub fn reset_after_swap(&mut self) {
+        self.window.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloBurnConfig {
+        SloBurnConfig {
+            slo_s: 1.0,
+            target: 0.9,
+            short_window_s: 10.0,
+            long_window_s: 40.0,
+            burn_threshold: 1.5,
+            min_samples: 5,
+            clear_ratio: 0.5,
+        }
+    }
+
+    #[test]
+    fn burn_breach_fires_once_clears_and_rearms() {
+        let mut m = SloBurnMonitor::new(cfg());
+        // Breaching completions: every request misses the 1s SLO.
+        let mut fired = 0;
+        for i in 0..20 {
+            if m.observe(i as f64 * 0.1, 5.0).is_some() {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1, "breach must fire exactly once, not storm");
+        assert!(m.is_firing());
+        // Recovery: a run of within-SLO completions clears the latch...
+        for i in 0..60 {
+            assert!(m.observe(2.0 + i as f64 * 0.2, 0.2).is_none());
+        }
+        assert!(!m.is_firing(), "sustained recovery must re-arm");
+        // ...and a fresh breach (re-filling both windows) re-fires.
+        let mut refired = 0;
+        for i in 0..40 {
+            if m.observe(20.0 + i as f64 * 0.2, 5.0).is_some() {
+                refired += 1;
+            }
+        }
+        assert_eq!(refired, 1, "re-armed monitor fires again exactly once");
+    }
+
+    #[test]
+    fn short_spike_alone_does_not_fire() {
+        // min_samples guards the short window; a couple of slow
+        // requests inside an otherwise-healthy long window stay quiet.
+        let mut m = SloBurnMonitor::new(cfg());
+        for i in 0..50 {
+            assert!(m.observe(i as f64 * 0.5, 0.2).is_none());
+        }
+        assert!(m.observe(25.1, 5.0).is_none());
+        assert!(m.observe(25.2, 5.0).is_none());
+        assert!(!m.is_firing());
+    }
+
+    #[test]
+    fn reset_after_swap_keeps_latch_until_recovery() {
+        let mut m = SloBurnMonitor::new(cfg());
+        for i in 0..20 {
+            let _ = m.observe(i as f64 * 0.1, 5.0);
+        }
+        assert!(m.is_firing());
+        m.reset_after_swap();
+        // Still breaching after the swap: the latch holds, no re-fire.
+        for i in 0..20 {
+            assert!(m.observe(3.0 + i as f64 * 0.1, 5.0).is_none());
+        }
+        assert!(m.is_firing(), "latch must survive a window reset");
+    }
+
+    #[test]
+    fn evaluator_hysteresis_per_kind_and_tier() {
+        let mut ev = AlertEvaluator::new(AlertPolicy::default());
+        let breach = TierSignals {
+            tier: 1,
+            attainment_short: 0.5,
+            attainment_long: 0.6,
+            burn_short: 10.0,
+            burn_long: 8.0,
+            samples_short: 50,
+            queue_depth: 0.0,
+            queue_slope_per_s: 0.0,
+        };
+        let first = ev.evaluate_tier(&breach);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].kind, AlertKind::SloBurnRate);
+        assert_eq!(first[0].severity, Severity::Critical);
+        assert_eq!(first[0].tier, 1);
+        // Latched: same signals emit nothing.
+        assert!(ev.evaluate_tier(&breach).is_empty());
+        assert!(ev.is_firing(AlertKind::SloBurnRate, 1));
+        // Clear below clear_ratio * threshold, then re-fire.
+        let healthy = TierSignals { burn_short: 0.1, burn_long: 0.1, ..breach };
+        assert!(ev.evaluate_tier(&healthy).is_empty());
+        assert!(!ev.is_firing(AlertKind::SloBurnRate, 1));
+        assert_eq!(ev.evaluate_tier(&breach).len(), 1, "cleared condition re-arms");
+        // Drops alert fires once and latches.
+        assert!(ev.evaluate_drops(0).is_none());
+        assert!(ev.evaluate_drops(3).is_some());
+        assert!(ev.evaluate_drops(5).is_none());
+    }
+
+    #[test]
+    fn queue_growth_requires_depth_and_slope() {
+        let mut ev = AlertEvaluator::new(AlertPolicy::default());
+        let sig = TierSignals {
+            tier: 0,
+            attainment_short: 1.0,
+            attainment_long: 1.0,
+            burn_short: 0.0,
+            burn_long: 0.0,
+            samples_short: 50,
+            queue_depth: 2.0, // below min_depth
+            queue_slope_per_s: 3.0,
+        };
+        assert!(ev.evaluate_tier(&sig).is_empty(), "shallow queue must not fire");
+        let deep = TierSignals { queue_depth: 30.0, ..sig };
+        let alerts = ev.evaluate_tier(&deep);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind, AlertKind::QueueGrowth);
+    }
+}

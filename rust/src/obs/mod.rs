@@ -55,9 +55,11 @@
 //! sequence is identical on both sides by construction, and
 //! equivalence becomes a timeline diff ([`diff::diff_timelines`]).
 
+pub mod alert;
 pub mod chrome;
 pub mod clock;
 pub mod diff;
+pub mod profile;
 pub mod recorder;
 pub mod registry;
 
@@ -66,11 +68,30 @@ use std::sync::Arc;
 use crate::engine::kv::SeqId;
 use crate::engine::scheduler::IterationPlan;
 
+pub use alert::{Alert, AlertEvaluator, AlertKind, AlertPolicy, Severity, SloBurnConfig, SloBurnMonitor};
 pub use chrome::chrome_trace;
 pub use clock::Clock;
 pub use diff::{diff_timelines, DiffReport};
+pub use profile::{Phase, ProfileAggregator, ProfileConfig, ProfileReport, Waterfall};
 pub use recorder::TraceRecorder;
 pub use registry::{MetricsRegistry, LATENCY_BUCKETS};
+
+/// Export recorder health into the registry: aggregate event/drop
+/// gauges plus per-shard drop counters and ring-occupancy gauges, so
+/// silent span loss is visible on `/metrics` instead of only in
+/// [`TraceRecorder::snapshot`].
+pub fn export_recorder_health(recorder: &TraceRecorder, registry: &MetricsRegistry) {
+    registry.gauge_set("cascadia_trace_events", recorder.n_events() as f64);
+    registry.gauge_set("cascadia_trace_dropped_events", recorder.dropped_events() as f64);
+    for (shard, st) in recorder.shard_stats().iter().enumerate() {
+        registry.counter_set(
+            &format!("cascadia_trace_dropped_events_total{{shard=\"{shard}\"}}"),
+            st.dropped,
+        );
+        let occ = if st.cap == 0 { 0.0 } else { st.retained as f64 / st.cap as f64 };
+        registry.gauge_set(&format!("cascadia_trace_ring_occupancy{{shard=\"{shard}\"}}"), occ);
+    }
+}
 
 /// `req` value for events not tied to any request (e.g.
 /// `hot_swap_applied`).

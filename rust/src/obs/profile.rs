@@ -1,0 +1,1096 @@
+//! Latency attribution: fold the event stream into per-request phase
+//! waterfalls and per-tier rolling health windows.
+//!
+//! ## Phase-attribution model
+//!
+//! A request's trace is its seq-ordered event sequence; the time
+//! between consecutive events (a *gap*) is attributed to exactly one
+//! [`Phase`] from the pair of event kinds bounding it, so the phases
+//! form a complete partition of the span `[first event, finished]` —
+//! waterfall sums are exact by construction, across escalation chains
+//! included. The rules (first match wins):
+//!
+//! | gap bounded by | phase |
+//! |----------------|-------|
+//! | `* → queue_enter/queue_exit` | queue (escalation-transit after an `escalate` until compute restarts) |
+//! | `prefill_chunk → *` | prefill (plan events are stamped at iteration start; the chunk executes *after* its event) |
+//! | `decode_iter → *` | decode |
+//! | `preempt → *` | preempt-stall |
+//! | `swap_out/swap_in → *` | swap-stall |
+//! | `admitted/queue_enter/queue_exit → prefill_chunk/decode_iter/swap_in` | queue (engine admission wait) |
+//! | `admitted/queue_enter/queue_exit → route_decision/finished` | decode (lockstep/wire path: one opaque generate per tier) |
+//! | `escalate → *` | escalation-transit |
+//! | `route_decision → escalate` | escalation-transit |
+//! | anything else | other |
+//!
+//! Traces without admission events (the DES, a standalone engine)
+//! start at the first engine event; the pre-trace wait `fb - span`
+//! (the `finished` event's measured e2e minus the event span) is
+//! attributed to queue as the **lead residual**, reported separately —
+//! so DES what-if attribution and live attribution share one schema.
+//!
+//! The **structural signature** (run-length-encoded phase visit
+//! sequence) depends only on event kinds, never timestamps — a DES run
+//! and its live-engine twin produce identical signatures for identical
+//! plans, which is what `cascadia profile` pins on the diff-harness
+//! workload.
+//!
+//! ## Rolling windows and alerts
+//!
+//! Per tier, the aggregator keeps rolling windows of completed-request
+//! phase vectors (short/long, for SLO attainment and SRE-style
+//! multi-window burn rate), live queue depth with a short-window
+//! slope, and a busy-time integral (occupancy). [`AlertEvaluator`]
+//! turns those signals into edge-triggered [`Alert`]s; the evaluator
+//! lives inside the aggregator so hysteresis survives repeated
+//! [`ProfileAggregator::report`] calls (the `cascadia top` refresh
+//! loop).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::alert::{Alert, AlertEvaluator, AlertPolicy, TierSignals};
+use super::{Event, EventKind, ACTION_ESCALATE};
+
+/// Number of attribution phases.
+pub const N_PHASES: usize = 7;
+
+/// The waterfall phases. Order is the rendering order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Queue,
+    Prefill,
+    Decode,
+    PreemptStall,
+    SwapStall,
+    EscalationTransit,
+    Other,
+}
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Queue,
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::PreemptStall,
+        Phase::SwapStall,
+        Phase::EscalationTransit,
+        Phase::Other,
+    ];
+
+    /// Stable wire/export name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::PreemptStall => "preempt_stall",
+            Phase::SwapStall => "swap_stall",
+            Phase::EscalationTransit => "escalation_transit",
+            Phase::Other => "other",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Attribute the gap between two consecutive events of one request.
+/// `in_transit` is true between an `escalate` and the next compute
+/// event on the target tier (re-queue + re-admission delay after an
+/// escalation counts as escalation-transit, not plain queueing).
+fn gap_phase(prev: EventKind, next: EventKind, in_transit: bool) -> Phase {
+    use EventKind as K;
+    let queueish = if in_transit { Phase::EscalationTransit } else { Phase::Queue };
+    if matches!(next, K::QueueEnter | K::QueueExit) {
+        return queueish;
+    }
+    match prev {
+        K::PrefillChunk => Phase::Prefill,
+        K::DecodeIter => Phase::Decode,
+        K::Preempt => Phase::PreemptStall,
+        K::SwapOut | K::SwapIn => Phase::SwapStall,
+        K::Escalate => Phase::EscalationTransit,
+        K::Admitted | K::QueueEnter | K::QueueExit => match next {
+            K::RouteDecision | K::Finished => Phase::Decode,
+            _ => queueish,
+        },
+        K::RouteDecision => {
+            if next == K::Escalate {
+                Phase::EscalationTransit
+            } else {
+                Phase::Other
+            }
+        }
+        _ => Phase::Other,
+    }
+}
+
+/// One completed request's attribution.
+#[derive(Debug, Clone)]
+pub struct Waterfall {
+    pub req: u64,
+    /// Seconds per phase (indexed by `Phase as usize`); includes the
+    /// lead residual in the queue bucket, so the phases sum to
+    /// `max(span_s, e2e_s)` up to clock skew.
+    pub phases: [f64; N_PHASES],
+    /// Event span: `t(finished) - t(first event)`.
+    pub span_s: f64,
+    /// Measured e2e latency (the `finished` event's `fb`).
+    pub e2e_s: f64,
+    /// Measured TTFT (the `finished` event's `fa`).
+    pub ttft_s: f64,
+    /// `max(0, e2e_s - span_s)`: pre-trace wait, attributed to queue
+    /// (nonzero for DES/standalone traces that lack admission events).
+    pub lead_residual_s: f64,
+    /// Whether an `admitted` event opened the span (live server trace).
+    pub admitted: bool,
+    pub entry_tier: u32,
+    /// Tier that emitted `finished`.
+    pub final_tier: u32,
+    pub escalations: u32,
+    /// Run-length-encoded phase visit sequence — structural, depends
+    /// only on event kinds (the DES↔live identity surface).
+    pub signature: Vec<(Phase, u32)>,
+}
+
+impl Waterfall {
+    /// Sum of all attributed phase time (== span + lead residual).
+    pub fn total_s(&self) -> f64 {
+        self.phases.iter().sum()
+    }
+}
+
+/// Aggregator knobs.
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    /// E2e SLO for attainment/burn (None disables SLO evaluation).
+    pub slo_s: Option<f64>,
+    /// Attainment target for burn rates.
+    pub target: f64,
+    /// Short rolling window, seconds of trace time.
+    pub short_window_s: f64,
+    /// Long rolling window, seconds of trace time.
+    pub long_window_s: f64,
+    pub alert_policy: AlertPolicy,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            slo_s: None,
+            target: 0.95,
+            short_window_s: 60.0,
+            long_window_s: 600.0,
+            alert_policy: AlertPolicy::default(),
+        }
+    }
+}
+
+/// In-flight per-request fold state.
+struct ReqState {
+    first_t: f64,
+    /// False until the opening event has been recorded (the first
+    /// event opens the span; only the second onward closes a gap).
+    primed: bool,
+    prev_t: f64,
+    prev_kind: EventKind,
+    in_transit: bool,
+    admitted: bool,
+    entry_tier: u32,
+    escalations: u32,
+    /// Tier currently holding the request in its engine (between
+    /// queue-exit/first compute and its route decision) — for the
+    /// occupancy integral.
+    resident_tier: Option<u32>,
+    phases: [f64; N_PHASES],
+    /// Phase time spent per tier (gap attributed to the tier of the
+    /// event that closes it).
+    tier_phases: BTreeMap<u32, [f64; N_PHASES]>,
+    sig: Vec<(Phase, u32)>,
+}
+
+/// One completed request's contribution to a tier window.
+struct TierSample {
+    t: f64,
+    phases: [f64; N_PHASES],
+    e2e_s: f64,
+    within_slo: bool,
+    finished_here: bool,
+}
+
+/// Rolling per-tier state.
+#[derive(Default)]
+struct TierState {
+    depth: i64,
+    depth_samples: VecDeque<(f64, f64)>,
+    active: i64,
+    busy_s: f64,
+    last_active_t: f64,
+    recent: VecDeque<TierSample>,
+    completed: u64,
+    escalated_out: u64,
+}
+
+impl TierState {
+    fn set_active(&mut self, t: f64, delta: i64) {
+        if self.active > 0 && t > self.last_active_t {
+            self.busy_s += t - self.last_active_t;
+        }
+        self.last_active_t = self.last_active_t.max(t);
+        self.active = (self.active + delta).max(0);
+    }
+}
+
+/// Streaming fold of the event stream. Feed [`Event`]s in seq order
+/// (a [`TraceRecorder::snapshot`](super::TraceRecorder::snapshot) is
+/// already sorted); read back waterfalls and a [`ProfileReport`].
+pub struct ProfileAggregator {
+    cfg: ProfileConfig,
+    pending: BTreeMap<u64, ReqState>,
+    done: Vec<Waterfall>,
+    tiers: BTreeMap<u32, TierState>,
+    evaluator: AlertEvaluator,
+    alerts: Vec<Alert>,
+    first_t: Option<f64>,
+    now: f64,
+    events: u64,
+    hot_swaps: u64,
+}
+
+fn push_sig(sig: &mut Vec<(Phase, u32)>, ph: Phase) {
+    match sig.last_mut() {
+        Some((last, n)) if *last == ph => *n += 1,
+        _ => sig.push((ph, 1)),
+    }
+}
+
+/// p-quantile of an unsorted sample (nearest-rank); 0 for empty.
+fn percentile(values: &mut [f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p * values.len() as f64).ceil() as usize).clamp(1, values.len());
+    values[rank - 1]
+}
+
+impl ProfileAggregator {
+    pub fn new(cfg: ProfileConfig) -> ProfileAggregator {
+        let evaluator = AlertEvaluator::new(cfg.alert_policy.clone());
+        ProfileAggregator {
+            cfg,
+            pending: BTreeMap::new(),
+            done: Vec::new(),
+            tiers: BTreeMap::new(),
+            evaluator,
+            alerts: Vec::new(),
+            first_t: None,
+            now: 0.0,
+            events: 0,
+            hot_swaps: 0,
+        }
+    }
+
+    /// Fold a full trace (events must be in seq order, as
+    /// `snapshot()` returns them).
+    pub fn fold(cfg: ProfileConfig, events: &[Event]) -> ProfileAggregator {
+        let mut agg = ProfileAggregator::new(cfg);
+        for ev in events {
+            agg.observe(ev);
+        }
+        agg
+    }
+
+    /// Completed-request waterfalls so far, completion order.
+    pub fn waterfalls(&self) -> &[Waterfall] {
+        &self.done
+    }
+
+    /// Requests with an open span (no `finished` seen yet).
+    pub fn open_requests(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Alerts fired so far (edge-triggered, in fire order).
+    pub fn alerts(&self) -> &[Alert] {
+        &self.alerts
+    }
+
+    fn tier(&mut self, tier: u32) -> &mut TierState {
+        self.tiers.entry(tier).or_default()
+    }
+
+    /// Feed one event. Events of one request must arrive in seq order;
+    /// interleaving across requests is fine.
+    pub fn observe(&mut self, ev: &Event) {
+        self.events += 1;
+        self.now = self.now.max(ev.t);
+        if self.first_t.is_none() {
+            self.first_t = Some(ev.t);
+        }
+        if ev.req == super::REQ_NONE {
+            if ev.kind == EventKind::HotSwapApplied {
+                self.hot_swaps += 1;
+            }
+            return;
+        }
+
+        // Tier-level bookkeeping: queue depth and engine residency.
+        match ev.kind {
+            EventKind::QueueEnter => {
+                let t = self.tier(ev.tier);
+                t.depth += 1;
+                let d = t.depth as f64;
+                t.depth_samples.push_back((ev.t, d));
+            }
+            EventKind::QueueExit => {
+                let t = self.tier(ev.tier);
+                t.depth = (t.depth - 1).max(0);
+                let d = t.depth as f64;
+                t.depth_samples.push_back((ev.t, d));
+            }
+            EventKind::Escalate => {
+                self.tier(ev.tier).escalated_out += 1;
+            }
+            _ => {}
+        }
+        let short_w = self.cfg.short_window_s;
+        if let Some(ts) = self.tiers.get_mut(&ev.tier) {
+            while let Some(&(t, _)) = ts.depth_samples.front() {
+                if t < ev.t - 2.0 * short_w {
+                    ts.depth_samples.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // Residency (occupancy integral): a request occupies a tier's
+        // engine from queue-exit (or first compute event, for traces
+        // without queue events) until its route decision / finish.
+        let takes_residence = matches!(
+            ev.kind,
+            EventKind::QueueExit | EventKind::PrefillChunk | EventKind::DecodeIter
+        );
+        let leaves_residence = matches!(ev.kind, EventKind::RouteDecision | EventKind::Finished);
+        let prev_residence = self.pending.get(&ev.req).and_then(|s| s.resident_tier);
+        if takes_residence && prev_residence != Some(ev.tier) {
+            if let Some(old) = prev_residence {
+                self.tier(old).set_active(ev.t, -1);
+            }
+            self.tier(ev.tier).set_active(ev.t, 1);
+        } else if leaves_residence && prev_residence.is_some() {
+            let old = prev_residence.unwrap_or(ev.tier);
+            self.tier(old).set_active(ev.t, -1);
+        }
+
+        // Per-request fold.
+        let state = self.pending.entry(ev.req).or_insert_with(|| ReqState {
+            first_t: ev.t,
+            primed: false,
+            prev_t: ev.t,
+            prev_kind: ev.kind,
+            in_transit: false,
+            admitted: false,
+            entry_tier: ev.tier,
+            escalations: 0,
+            resident_tier: None,
+            phases: [0.0; N_PHASES],
+            tier_phases: BTreeMap::new(),
+            sig: Vec::new(),
+        });
+        if state.primed {
+            let gap = (ev.t - state.prev_t).max(0.0);
+            let ph = gap_phase(state.prev_kind, ev.kind, state.in_transit);
+            state.phases[ph.idx()] += gap;
+            let tp = state.tier_phases.entry(ev.tier).or_insert([0.0; N_PHASES]);
+            tp[ph.idx()] += gap;
+            push_sig(&mut state.sig, ph);
+        }
+        state.primed = true;
+        state.prev_t = ev.t;
+        state.prev_kind = ev.kind;
+        match ev.kind {
+            EventKind::Admitted => {
+                state.admitted = true;
+                state.entry_tier = ev.a as u32;
+            }
+            EventKind::Escalate => {
+                state.escalations += 1;
+                state.in_transit = true;
+            }
+            EventKind::PrefillChunk | EventKind::DecodeIter | EventKind::RouteDecision => {
+                state.in_transit = false;
+            }
+            _ => {}
+        }
+        if takes_residence {
+            state.resident_tier = Some(ev.tier);
+        } else if leaves_residence {
+            state.resident_tier = None;
+        }
+
+        if ev.kind == EventKind::Finished {
+            self.finish(ev);
+        }
+    }
+
+    fn finish(&mut self, ev: &Event) {
+        let Some(mut state) = self.pending.remove(&ev.req) else { return };
+        let span = (ev.t - state.first_t).max(0.0);
+        let lead = (ev.fb - span).max(0.0);
+        state.phases[Phase::Queue.idx()] += lead;
+        let within_slo = match self.cfg.slo_s {
+            Some(slo) => ev.fb <= slo,
+            None => true,
+        };
+        let long_w = self.cfg.long_window_s;
+        for (tier, phases) in &state.tier_phases {
+            let ts = self.tier(*tier);
+            ts.recent.push_back(TierSample {
+                t: ev.t,
+                phases: *phases,
+                e2e_s: ev.fb,
+                within_slo,
+                finished_here: *tier == ev.tier,
+            });
+            while let Some(front) = ts.recent.front() {
+                if front.t < ev.t - long_w {
+                    ts.recent.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        // A request served entirely pre-trace queue (no tier events) or
+        // a wire trace without engine events still lands on the
+        // finishing tier's window.
+        if !state.tier_phases.contains_key(&ev.tier) {
+            self.tier(ev.tier).recent.push_back(TierSample {
+                t: ev.t,
+                phases: [0.0; N_PHASES],
+                e2e_s: ev.fb,
+                within_slo,
+                finished_here: true,
+            });
+        }
+        self.tier(ev.tier).completed += 1;
+        self.done.push(Waterfall {
+            req: ev.req,
+            phases: state.phases,
+            span_s: span,
+            e2e_s: ev.fb,
+            ttft_s: ev.fa,
+            lead_residual_s: lead,
+            admitted: state.admitted,
+            entry_tier: state.entry_tier,
+            final_tier: ev.tier,
+            escalations: state.escalations,
+            signature: state.sig,
+        });
+    }
+
+    fn tier_signals(&self, tier: u32, ts: &TierState) -> TierSignals {
+        let now = self.now;
+        let (mut ok_s, mut n_s, mut ok_l, mut n_l) = (0usize, 0usize, 0usize, 0usize);
+        for s in ts.recent.iter().rev() {
+            if !s.finished_here {
+                continue;
+            }
+            if s.t >= now - self.cfg.long_window_s {
+                n_l += 1;
+                if s.within_slo {
+                    ok_l += 1;
+                }
+            }
+            if s.t >= now - self.cfg.short_window_s {
+                n_s += 1;
+                if s.within_slo {
+                    ok_s += 1;
+                }
+            }
+        }
+        let budget = (1.0 - self.cfg.target).max(1e-6);
+        let att = |ok: usize, n: usize| if n == 0 { 1.0 } else { ok as f64 / n as f64 };
+        let (a_s, a_l) = (att(ok_s, n_s), att(ok_l, n_l));
+        // Queue-depth slope: least squares over the short window.
+        let cutoff = now - self.cfg.short_window_s;
+        let pts: Vec<(f64, f64)> =
+            ts.depth_samples.iter().filter(|(t, _)| *t >= cutoff).copied().collect();
+        let slope = if pts.len() >= 2 {
+            let n = pts.len() as f64;
+            let mx = pts.iter().map(|(t, _)| t).sum::<f64>() / n;
+            let my = pts.iter().map(|(_, d)| d).sum::<f64>() / n;
+            let sxx: f64 = pts.iter().map(|(t, _)| (t - mx) * (t - mx)).sum();
+            let sxy: f64 = pts.iter().map(|(t, d)| (t - mx) * (d - my)).sum();
+            if sxx > 1e-12 {
+                sxy / sxx
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+        TierSignals {
+            tier,
+            attainment_short: a_s,
+            attainment_long: a_l,
+            burn_short: (1.0 - a_s) / budget,
+            burn_long: (1.0 - a_l) / budget,
+            samples_short: n_s,
+            queue_depth: ts.depth as f64,
+            queue_slope_per_s: slope,
+        }
+    }
+
+    /// Build the report as of the latest observed event, evaluating
+    /// alerts with persistent hysteresis. `dropped_events` is the
+    /// recorder's overflow count (0 when unknown).
+    pub fn report(&mut self, dropped_events: u64) -> ProfileReport {
+        let mut new_alerts: Vec<Alert> = Vec::new();
+        if self.cfg.slo_s.is_some() {
+            let tiers: Vec<u32> = self.tiers.keys().copied().collect();
+            for tier in tiers {
+                let sig = {
+                    let ts = &self.tiers[&tier];
+                    self.tier_signals(tier, ts)
+                };
+                new_alerts.extend(self.evaluator.evaluate_tier(&sig));
+            }
+        }
+        if let Some(a) = self.evaluator.evaluate_drops(dropped_events) {
+            new_alerts.push(a);
+        }
+        self.alerts.extend(new_alerts);
+
+        let first_t = self.first_t.unwrap_or(0.0);
+        let trace_span = (self.now - first_t).max(0.0);
+        let mut e2e: Vec<f64> = self.done.iter().map(|w| w.e2e_s).collect();
+        let mut ttft: Vec<f64> = self.done.iter().map(|w| w.ttft_s).collect();
+        let e2e_mean = if e2e.is_empty() { 0.0 } else { e2e.iter().sum::<f64>() / e2e.len() as f64 };
+        let mut phases = Vec::with_capacity(N_PHASES);
+        for p in Phase::ALL {
+            let mut v: Vec<f64> = self.done.iter().map(|w| w.phases[p.idx()]).collect();
+            let total: f64 = v.iter().sum();
+            let mean = if v.is_empty() { 0.0 } else { total / v.len() as f64 };
+            phases.push(PhaseStat {
+                phase: p,
+                p50_s: percentile(&mut v, 0.50),
+                p95_s: percentile(&mut v, 0.95),
+                mean_s: mean,
+                total_s: total,
+            });
+        }
+        // Attribution error: phases must sum to the measured e2e. Only
+        // spans opened by an `admitted` event are checked (for
+        // DES/standalone traces the lead residual makes the sum exact
+        // by construction, which would be a vacuous check).
+        let mut errs: Vec<f64> = Vec::new();
+        let mut err_fracs: Vec<f64> = Vec::new();
+        for w in self.done.iter().filter(|w| w.admitted) {
+            let err = (w.total_s() - w.e2e_s).abs();
+            errs.push(err);
+            err_fracs.push(err / w.e2e_s.max(1e-3));
+        }
+        let matched = errs.len();
+        let tiers: Vec<TierReport> = self
+            .tiers
+            .iter()
+            .map(|(tier, ts)| {
+                let sig = self.tier_signals(*tier, ts);
+                let busy = ts.busy_s
+                    + if ts.active > 0 { (self.now - ts.last_active_t).max(0.0) } else { 0.0 };
+                let mut tier_phases = Vec::with_capacity(N_PHASES);
+                for p in Phase::ALL {
+                    let mut v: Vec<f64> = ts.recent.iter().map(|s| s.phases[p.idx()]).collect();
+                    let total: f64 = v.iter().sum();
+                    let mean = if v.is_empty() { 0.0 } else { total / v.len() as f64 };
+                    tier_phases.push(PhaseStat {
+                        phase: p,
+                        p50_s: percentile(&mut v, 0.50),
+                        p95_s: percentile(&mut v, 0.95),
+                        mean_s: mean,
+                        total_s: total,
+                    });
+                }
+                let mut w_e2e: Vec<f64> = ts
+                    .recent
+                    .iter()
+                    .filter(|s| s.finished_here)
+                    .map(|s| s.e2e_s)
+                    .collect();
+                TierReport {
+                    tier: *tier,
+                    completed: ts.completed,
+                    escalated_out: ts.escalated_out,
+                    queue_depth: ts.depth.max(0) as u64,
+                    queue_slope_per_s: sig.queue_slope_per_s,
+                    busy_frac: if trace_span > 0.0 { (busy / trace_span).min(1.0) } else { 0.0 },
+                    window_p95_s: percentile(&mut w_e2e, 0.95),
+                    attainment_short: sig.attainment_short,
+                    attainment_long: sig.attainment_long,
+                    burn_short: sig.burn_short,
+                    burn_long: sig.burn_long,
+                    phases: tier_phases,
+                }
+            })
+            .collect();
+        ProfileReport {
+            requests: self.done.len(),
+            open_requests: self.pending.len(),
+            events: self.events,
+            dropped_events,
+            hot_swaps: self.hot_swaps,
+            trace_span_s: trace_span,
+            slo_s: self.cfg.slo_s,
+            target: self.cfg.target,
+            e2e_p50_s: percentile(&mut e2e, 0.50),
+            e2e_p95_s: percentile(&mut e2e, 0.95),
+            e2e_mean_s: e2e_mean,
+            ttft_p50_s: percentile(&mut ttft, 0.50),
+            ttft_p95_s: percentile(&mut ttft, 0.95),
+            phases,
+            attribution_matched: matched,
+            attribution_p95_err_s: percentile(&mut errs, 0.95),
+            attribution_p95_err_frac: percentile(&mut err_fracs, 0.95),
+            tiers,
+            alerts: self.alerts.clone(),
+        }
+    }
+}
+
+/// Quantiles of one phase across requests.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+    pub total_s: f64,
+}
+
+/// Rolled-up per-tier health.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    pub tier: u32,
+    pub completed: u64,
+    pub escalated_out: u64,
+    pub queue_depth: u64,
+    pub queue_slope_per_s: f64,
+    /// Fraction of the trace span this tier had ≥1 resident request.
+    pub busy_frac: f64,
+    /// p95 e2e of requests finishing here inside the long window.
+    pub window_p95_s: f64,
+    pub attainment_short: f64,
+    pub attainment_long: f64,
+    pub burn_short: f64,
+    pub burn_long: f64,
+    pub phases: Vec<PhaseStat>,
+}
+
+/// The rendered aggregation — one schema for DES runs, live traces,
+/// and the `/profile` endpoint.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub requests: usize,
+    pub open_requests: usize,
+    pub events: u64,
+    pub dropped_events: u64,
+    pub hot_swaps: u64,
+    pub trace_span_s: f64,
+    pub slo_s: Option<f64>,
+    pub target: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p95_s: f64,
+    pub e2e_mean_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub phases: Vec<PhaseStat>,
+    /// Requests whose waterfall was checked against measured e2e
+    /// (spans opened by an `admitted` event).
+    pub attribution_matched: usize,
+    pub attribution_p95_err_s: f64,
+    pub attribution_p95_err_frac: f64,
+    pub tiers: Vec<TierReport>,
+    pub alerts: Vec<Alert>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn phases_json(phases: &[PhaseStat]) -> String {
+    let items: Vec<String> = phases
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"phase\":\"{}\",\"p50_s\":{:.6},\"p95_s\":{:.6},\"mean_s\":{:.6},\"total_s\":{:.6}}}",
+                p.phase.name(),
+                p.p50_s,
+                p.p95_s,
+                p.mean_s,
+                p.total_s
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+impl ProfileReport {
+    /// The `/profile` endpoint schema (`cascadia.profile.v1`),
+    /// documented in DESIGN.md.
+    pub fn to_json(&self) -> String {
+        let tiers: Vec<String> = self
+            .tiers
+            .iter()
+            .map(|t| {
+                format!(
+                    "{{\"tier\":{},\"completed\":{},\"escalated_out\":{},\"queue_depth\":{},\
+                     \"queue_slope_per_s\":{:.6},\"busy_frac\":{:.6},\"window_p95_s\":{:.6},\
+                     \"attainment_short\":{:.6},\"attainment_long\":{:.6},\
+                     \"burn_short\":{:.6},\"burn_long\":{:.6},\"phases\":{}}}",
+                    t.tier,
+                    t.completed,
+                    t.escalated_out,
+                    t.queue_depth,
+                    t.queue_slope_per_s,
+                    t.busy_frac,
+                    t.window_p95_s,
+                    t.attainment_short,
+                    t.attainment_long,
+                    t.burn_short,
+                    t.burn_long,
+                    phases_json(&t.phases)
+                )
+            })
+            .collect();
+        let alerts: Vec<String> = self
+            .alerts
+            .iter()
+            .map(|a| {
+                format!(
+                    "{{\"kind\":\"{}\",\"tier\":{},\"severity\":\"{}\",\"evidence\":\"{}\"}}",
+                    a.kind.name(),
+                    if a.tier == super::alert::TIER_NONE { -1 } else { a.tier as i64 },
+                    a.severity.name(),
+                    json_escape(&a.evidence)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"schema\":\"cascadia.profile.v1\",\"requests\":{},\"open_requests\":{},\
+             \"events\":{},\"dropped_events\":{},\"hot_swaps\":{},\"trace_span_s\":{:.6},\
+             \"slo_s\":{},\"target\":{:.4},\
+             \"e2e\":{{\"p50_s\":{:.6},\"p95_s\":{:.6},\"mean_s\":{:.6}}},\
+             \"ttft\":{{\"p50_s\":{:.6},\"p95_s\":{:.6}}},\
+             \"attribution\":{{\"matched\":{},\"p95_err_s\":{:.6},\"p95_err_frac\":{:.6}}},\
+             \"phases\":{},\"tiers\":[{}],\"alerts\":[{}]}}",
+            self.requests,
+            self.open_requests,
+            self.events,
+            self.dropped_events,
+            self.hot_swaps,
+            self.trace_span_s,
+            match self.slo_s {
+                Some(s) => format!("{s:.4}"),
+                None => "null".to_string(),
+            },
+            self.target,
+            self.e2e_p50_s,
+            self.e2e_p95_s,
+            self.e2e_mean_s,
+            self.ttft_p50_s,
+            self.ttft_p95_s,
+            self.attribution_matched,
+            self.attribution_p95_err_s,
+            self.attribution_p95_err_frac,
+            phases_json(&self.phases),
+            tiers.join(","),
+            alerts.join(",")
+        )
+    }
+
+    /// Terminal waterfall rendering (`cascadia profile`).
+    pub fn render(&self) -> String {
+        use crate::report::Table;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} requests ({} open), {} events ({} dropped), span {:.2}s, {} hot-swaps\n\
+             e2e p50 {:.3}s p95 {:.3}s | ttft p50 {:.3}s p95 {:.3}s | attribution p95 err {:.2}% ({} matched)\n",
+            self.requests,
+            self.open_requests,
+            self.events,
+            self.dropped_events,
+            self.trace_span_s,
+            self.hot_swaps,
+            self.e2e_p50_s,
+            self.e2e_p95_s,
+            self.ttft_p50_s,
+            self.ttft_p95_s,
+            self.attribution_p95_err_frac * 100.0,
+            self.attribution_matched
+        ));
+        let mut t = Table::new(
+            "latency attribution (per-request phase waterfall)",
+            &["phase", "p50(s)", "p95(s)", "mean(s)", "share", "bar"],
+        );
+        let grand: f64 = self.phases.iter().map(|p| p.total_s).sum();
+        for p in &self.phases {
+            let share = if grand > 0.0 { p.total_s / grand } else { 0.0 };
+            let bar = "#".repeat((share * 40.0).round() as usize);
+            t.row(vec![
+                p.phase.name().to_string(),
+                format!("{:.4}", p.p50_s),
+                format!("{:.4}", p.p95_s),
+                format!("{:.4}", p.mean_s),
+                format!("{:.1}%", share * 100.0),
+                bar,
+            ]);
+        }
+        out.push_str(&t.render());
+        let mut tt = Table::new(
+            "tier health (rolling windows)",
+            &[
+                "tier", "done", "esc", "depth", "slope/s", "busy", "p95(s)", "att(s/l)",
+                "burn(s/l)",
+            ],
+        );
+        for tr in &self.tiers {
+            tt.row(vec![
+                tr.tier.to_string(),
+                tr.completed.to_string(),
+                tr.escalated_out.to_string(),
+                tr.queue_depth.to_string(),
+                format!("{:+.2}", tr.queue_slope_per_s),
+                format!("{:.0}%", tr.busy_frac * 100.0),
+                format!("{:.3}", tr.window_p95_s),
+                format!("{:.0}/{:.0}%", tr.attainment_short * 100.0, tr.attainment_long * 100.0),
+                format!("{:.1}/{:.1}", tr.burn_short, tr.burn_long),
+            ]);
+        }
+        out.push_str(&tt.render());
+        if self.alerts.is_empty() {
+            out.push_str("alerts: none\n");
+        } else {
+            for a in &self.alerts {
+                out.push_str(&format!("alert: {a}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::alert::AlertKind;
+    use super::super::REQ_NONE;
+    use super::*;
+
+    fn ev(seq: u64, t: f64, req: u64, tier: u32, kind: EventKind) -> Event {
+        Event { seq, ..Event::at(t, req, tier, kind) }
+    }
+
+    /// The satellite-mandated chain: served on tier 0, escalated to
+    /// tier 1, preempted once there — phases must sum exactly to the
+    /// measured end-to-end latency.
+    #[test]
+    fn escalation_chain_waterfall_sums_to_e2e() {
+        let mut seq = 0u64;
+        let mut s = |t: f64, tier: u32, kind: EventKind| {
+            seq += 1;
+            ev(seq, t, 7, tier, kind)
+        };
+        let mut events = vec![
+            Event { a: 0, ..s(0.0, 0, EventKind::Admitted) },
+            s(0.0, 0, EventKind::QueueEnter),
+            s(0.1, 0, EventKind::QueueExit),
+            s(0.2, 0, EventKind::PrefillChunk),
+            s(0.3, 0, EventKind::DecodeIter),
+            s(0.4, 0, EventKind::DecodeIter),
+            Event { a: ACTION_ESCALATE, b: 1, ..s(0.5, 0, EventKind::RouteDecision) },
+            Event { a: 0, b: 1, ..s(0.5, 0, EventKind::Escalate) },
+            s(0.5, 1, EventKind::QueueEnter),
+            s(0.8, 1, EventKind::QueueExit),
+            s(0.9, 1, EventKind::PrefillChunk),
+            s(1.0, 1, EventKind::Preempt),
+            s(1.3, 1, EventKind::PrefillChunk),
+            s(1.4, 1, EventKind::DecodeIter),
+            Event { a: 0, b: 1, ..s(1.5, 1, EventKind::RouteDecision) },
+        ];
+        events.push(Event { fa: 0.3, fb: 1.5, ..s(1.5, 1, EventKind::Finished) });
+        let mut agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+        assert_eq!(agg.waterfalls().len(), 1);
+        let w = &agg.waterfalls()[0];
+        assert!(w.admitted);
+        assert_eq!(w.escalations, 1);
+        assert_eq!((w.entry_tier, w.final_tier), (0, 1));
+        let sum = w.total_s();
+        assert!((sum - 1.5).abs() < 1e-9, "phases {:?} sum {} != e2e 1.5", w.phases, sum);
+        // Exact per-phase expectations from the attribution table.
+        let p = |ph: Phase| w.phases[ph.idx()];
+        assert!((p(Phase::Queue) - 0.2).abs() < 1e-9, "queue {}", p(Phase::Queue));
+        // prefill: 0.2→0.3 on tier 0, 0.9→1.0 and 1.3→1.4 on tier 1.
+        assert!((p(Phase::Prefill) - 0.3).abs() < 1e-9, "prefill {}", p(Phase::Prefill));
+        // decode: 0.3→0.4→0.5 on tier 0, 1.4→1.5 on tier 1.
+        assert!((p(Phase::Decode) - 0.3).abs() < 1e-9, "decode {}", p(Phase::Decode));
+        assert!((p(Phase::PreemptStall) - 0.3).abs() < 1e-9);
+        // transit: route→escalate 0, escalate→queue_enter 0, re-queue
+        // 0.5→0.8, queue_exit→prefill 0.8→0.9.
+        assert!((p(Phase::EscalationTransit) - 0.4).abs() < 1e-9);
+        assert!(p(Phase::SwapStall).abs() < 1e-12);
+        // route_decision(accept)→finished lands in `other` with zero
+        // width here.
+        assert!(p(Phase::Other).abs() < 1e-12);
+        let report = agg.report(0);
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.attribution_matched, 1);
+        assert!(report.attribution_p95_err_s < 1e-9);
+    }
+
+    #[test]
+    fn des_style_trace_books_pre_span_wait_as_queue_residual() {
+        // DES/standalone traces have no admission events: the span
+        // opens at the first engine event, and `fb` (measured from
+        // arrival) exceeds the span by the queue wait.
+        let events = vec![
+            ev(1, 10.0, 3, 0, EventKind::PrefillChunk),
+            ev(2, 10.5, 3, 0, EventKind::DecodeIter),
+            ev(3, 11.0, 3, 0, EventKind::DecodeIter),
+            Event { fa: 2.5, fb: 3.0, ..ev(4, 11.0, 3, 0, EventKind::Finished) },
+        ];
+        let mut agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+        let w = &agg.waterfalls()[0];
+        assert!(!w.admitted);
+        assert!((w.span_s - 1.0).abs() < 1e-9);
+        assert!((w.lead_residual_s - 2.0).abs() < 1e-9, "fb 3.0 - span 1.0");
+        assert!((w.phases[Phase::Queue.idx()] - 2.0).abs() < 1e-9);
+        assert!((w.total_s() - 3.0).abs() < 1e-9, "waterfall sums to fb");
+        // Unmatched traces are excluded from the attribution check.
+        let report = agg.report(0);
+        assert_eq!(report.attribution_matched, 0);
+    }
+
+    #[test]
+    fn signature_is_structural_and_timestamp_free() {
+        let mk = |scale: f64| {
+            vec![
+                ev(1, 0.0 * scale, 9, 0, EventKind::PrefillChunk),
+                ev(2, 1.0 * scale, 9, 0, EventKind::PrefillChunk),
+                ev(3, 2.0 * scale, 9, 0, EventKind::DecodeIter),
+                Event { fa: 0.1, fb: 3.0 * scale, ..ev(4, 3.0 * scale, 9, 0, EventKind::Finished) },
+            ]
+        };
+        let a = ProfileAggregator::fold(ProfileConfig::default(), &mk(1.0));
+        let b = ProfileAggregator::fold(ProfileConfig::default(), &mk(250.0));
+        assert_eq!(
+            a.waterfalls()[0].signature,
+            b.waterfalls()[0].signature,
+            "signatures must ignore the clock"
+        );
+        assert_eq!(
+            a.waterfalls()[0].signature,
+            vec![(Phase::Prefill, 2), (Phase::Decode, 1)]
+        );
+    }
+
+    #[test]
+    fn swap_gaps_are_swap_stall() {
+        let events = vec![
+            ev(1, 0.0, 2, 0, EventKind::PrefillChunk),
+            ev(2, 1.0, 2, 0, EventKind::DecodeIter),
+            Event { a: 4, ..ev(3, 2.0, 2, 0, EventKind::SwapOut) },
+            Event { a: 4, ..ev(4, 5.0, 2, 0, EventKind::SwapIn) },
+            ev(5, 6.0, 2, 0, EventKind::DecodeIter),
+            Event { fa: 1.0, fb: 7.0, ..ev(6, 7.0, 2, 0, EventKind::Finished) },
+        ];
+        let agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+        let w = &agg.waterfalls()[0];
+        // swap_out→swap_in (3s) + swap_in→decode (1s) are stall.
+        assert!((w.phases[Phase::SwapStall.idx()] - 4.0).abs() < 1e-9);
+        assert!((w.total_s() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rolling_windows_burn_and_alerts_fire_on_breach() {
+        let slo = 1.0;
+        let cfg = ProfileConfig {
+            slo_s: Some(slo),
+            target: 0.9,
+            short_window_s: 30.0,
+            long_window_s: 120.0,
+            alert_policy: AlertPolicy { min_samples: 5, ..AlertPolicy::default() },
+        };
+        let mut agg = ProfileAggregator::new(cfg);
+        // 40 requests finishing on tier 0, all breaching the SLO.
+        let mut seq = 0;
+        for i in 0..40u64 {
+            let t = i as f64 * 0.5;
+            seq += 1;
+            agg.observe(&ev(seq, t, i, 0, EventKind::DecodeIter));
+            seq += 1;
+            agg.observe(&Event {
+                fa: 0.2,
+                fb: 5.0,
+                ..ev(seq, t + 0.2, i, 0, EventKind::Finished)
+            });
+        }
+        let report = agg.report(0);
+        assert_eq!(report.requests, 40);
+        let t0 = &report.tiers[0];
+        assert!(t0.attainment_short < 0.01, "all breached: {}", t0.attainment_short);
+        assert!(t0.burn_short > 9.0, "burn {}", t0.burn_short);
+        let slo_alerts: Vec<_> =
+            report.alerts.iter().filter(|a| a.kind == AlertKind::SloBurnRate).collect();
+        assert_eq!(slo_alerts.len(), 1, "edge-triggered: exactly one alert");
+        assert_eq!(slo_alerts[0].tier, 0);
+        // A second report with no new data must not re-fire.
+        let report2 = agg.report(0);
+        assert_eq!(
+            report2.alerts.iter().filter(|a| a.kind == AlertKind::SloBurnRate).count(),
+            1
+        );
+        // Drops surface as a trace-drops alert.
+        let report3 = agg.report(17);
+        assert!(report3.alerts.iter().any(|a| a.kind == AlertKind::TraceDrops));
+    }
+
+    #[test]
+    fn hot_swap_system_events_are_counted_not_attributed() {
+        let events = vec![
+            ev(1, 0.0, 1, 0, EventKind::DecodeIter),
+            ev(2, 0.5, REQ_NONE, 0, EventKind::HotSwapApplied),
+            Event { fa: 0.1, fb: 1.0, ..ev(3, 1.0, 1, 0, EventKind::Finished) },
+        ];
+        let mut agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+        let report = agg.report(0);
+        assert_eq!(report.hot_swaps, 1);
+        assert_eq!(report.requests, 1);
+    }
+
+    #[test]
+    fn json_schema_has_the_documented_top_level_keys() {
+        let events = vec![
+            ev(1, 0.0, 1, 0, EventKind::DecodeIter),
+            Event { fa: 0.1, fb: 1.0, ..ev(2, 1.0, 1, 0, EventKind::Finished) },
+        ];
+        let mut agg = ProfileAggregator::fold(
+            ProfileConfig { slo_s: Some(10.0), ..ProfileConfig::default() },
+            &events,
+        );
+        let json = agg.report(0).to_json();
+        let parsed = crate::util::json::Json::parse(&json).expect("profile JSON must parse");
+        for key in
+            ["schema", "requests", "events", "e2e", "ttft", "attribution", "phases", "tiers", "alerts"]
+        {
+            assert!(parsed.get(key).is_some(), "missing key {key} in {json}");
+        }
+        assert_eq!(
+            parsed.get("schema").and_then(|j| j.as_str()),
+            Some("cascadia.profile.v1")
+        );
+        let render = agg.report(0).render();
+        assert!(render.contains("latency attribution"));
+        assert!(render.contains("queue"));
+    }
+}

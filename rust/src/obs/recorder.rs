@@ -62,6 +62,17 @@ impl Shard {
     }
 }
 
+/// One shard's health snapshot (see [`TraceRecorder::shard_stats`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStats {
+    /// Events currently retained in the ring.
+    pub retained: usize,
+    /// Events lost to drop-oldest overflow (monotonic).
+    pub dropped: u64,
+    /// Ring capacity.
+    pub cap: usize,
+}
+
 /// Bounded multi-shard trace recorder. See the module docs.
 pub struct TraceRecorder {
     shards: Vec<Mutex<Shard>>,
@@ -112,6 +123,18 @@ impl TraceRecorder {
     /// Events lost to ring overflow across all shards.
     pub fn dropped_events(&self) -> u64 {
         self.shards.iter().map(|s| s.plock().dropped).sum()
+    }
+
+    /// Per-shard health: retained events, drop total, and capacity —
+    /// the `/metrics` export surface ([`super::export_recorder_health`]).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let g = s.plock();
+                ShardStats { retained: g.len, dropped: g.dropped, cap: self.cap_per_shard }
+            })
+            .collect()
     }
 
     /// Merged copy of every retained event, in global emission order.

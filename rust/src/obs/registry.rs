@@ -107,6 +107,13 @@ impl MetricsRegistry {
         self.counters.plock().get(key).copied().unwrap_or(0)
     }
 
+    /// Set counter `key` to `v` — for sampled exports of sources that
+    /// are already monotonic (e.g. the trace recorder's per-shard drop
+    /// totals), where re-adding would double-count.
+    pub fn counter_set(&self, key: &str, v: u64) {
+        self.counters.plock().insert(key.to_string(), v);
+    }
+
     /// Set gauge `key` to `v`.
     pub fn gauge_set(&self, key: &str, v: f64) {
         self.gauges.plock().insert(key.to_string(), v);

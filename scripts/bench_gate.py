@@ -145,6 +145,29 @@ def main() -> int:
                 f" ({100.0 * tracing.get('overhead_frac', 0.0):+.1f}%),"
                 f" {tracing.get('events_recorded', 0):.0f} events"
             )
+    # Profile-aggregation gate: same tolerance for absence (reports
+    # predating the latency-attribution fold), but a present section
+    # must be green, have matched every waterfall it attributed, and
+    # have folded a non-empty event stream.
+    profile = fresh.get("profile")
+    if profile is not None:
+        profile_failures = []
+        if profile.get("fold_ok") is not True:
+            profile_failures.append("fresh report flag 'profile.fold_ok' is not true")
+        if not profile.get("matched"):
+            profile_failures.append("profile section attributed zero requests")
+        if not profile.get("events_folded"):
+            profile_failures.append("profile section folded zero events")
+        if profile_failures:
+            failures.extend(profile_failures)
+        else:
+            print(
+                "ok  profile.fold_ok:"
+                f" {profile.get('events_folded', 0):.0f} events folded in"
+                f" {profile.get('fold_wall_s', 0.0):.4f}s"
+                f" ({100.0 * profile.get('fold_frac', 0.0):.2f}% of the run),"
+                f" p95 attribution err {100.0 * profile.get('p95_err_frac', 0.0):.2f}%"
+            )
 
     # Ratio floors.
     fresh_r = derived_ratios(fresh)
