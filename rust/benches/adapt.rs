@@ -87,6 +87,7 @@ fn main() {
                     workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -95,11 +96,12 @@ fn main() {
                     workload: Workload { rate: 1.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 0.2,
                     predicted_p95: 2.0,
+                    disagg: None,
                 },
             ],
             predicted_latency: 2.0,
             predicted_quality: 80.0,
-            preemption: cascadia::engine::PreemptionMode::Recompute,
+            preemption: Vec::new(),
         }
     };
     for s in &stats_set {

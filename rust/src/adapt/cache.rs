@@ -129,6 +129,7 @@ mod tests {
                     workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -137,11 +138,12 @@ mod tests {
                     workload: Workload { rate: 1.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 0.25,
                     predicted_p95: 2.0,
+                    disagg: None,
                 },
             ],
             predicted_latency: 2.0,
             predicted_quality: q,
-            preemption: crate::engine::PreemptionMode::Recompute,
+            preemption: Vec::new(),
         }
     }
 

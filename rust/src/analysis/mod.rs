@@ -304,6 +304,19 @@ fn t() {
     }
 
     #[test]
+    fn determinism_fires_in_engine_migrate() {
+        // The disagg DES models the MigrationHub's exact routing, so
+        // engine/migrate.rs is determinism-pinned by exact path — but
+        // its test module may stamp wall-clock carried state.
+        let src = "fn f() -> u64 { tick(std::time::Instant::now()) }\n";
+        let v = lint_source("engine/migrate.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn f() -> u64 { tick(std::time::Instant::now()) }\n}\n";
+        assert!(lint_source("engine/migrate.rs", test_src).is_empty());
+        assert!(lint_source("engine/core.rs", src).is_empty(), "scope is by exact path");
+    }
+
+    #[test]
     fn determinism_instant_now_fires_in_obs() {
         // The DES emits trace events through obs/ — wall-clock reads
         // there would silently de-determinize the shared tracing path.

@@ -67,6 +67,7 @@ pub fn standalone_plan(
                     workload: w,
                     processing_ratio: 1.0,
                     predicted_p95: p95,
+                    disagg: None,
                 }
             } else {
                 TierPlan {
@@ -76,6 +77,7 @@ pub fn standalone_plan(
                     workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
+                    disagg: None,
                 }
             }
         })
@@ -92,7 +94,7 @@ pub fn standalone_plan(
         tiers,
         predicted_latency: p95,
         predicted_quality: quality,
-        preemption: PreemptionMode::Recompute,
+        preemption: vec![PreemptionMode::Recompute; cascade.len()],
     })
 }
 
@@ -209,6 +211,7 @@ pub fn cascade_serve_plan(
                     workload: w_real,
                     processing_ratio: routing.processing_ratios[i],
                     predicted_p95: 0.0,
+                    disagg: None,
                 });
                 continue;
             }
@@ -240,6 +243,7 @@ pub fn cascade_serve_plan(
                 workload: w_real,
                 processing_ratio: routing.processing_ratios[i],
                 predicted_p95: p95,
+                disagg: None,
             });
         }
         if !feasible {
@@ -250,7 +254,7 @@ pub fn cascade_serve_plan(
             tiers,
             predicted_latency: max_p95,
             predicted_quality: routing.quality,
-            preemption: PreemptionMode::Recompute,
+            preemption: vec![PreemptionMode::Recompute; c],
         };
         match &best {
             Some((bp, _)) if *bp <= max_p95 => {}

@@ -31,7 +31,9 @@ use anyhow::Result;
 
 use crate::cluster::ClusterSpec;
 use crate::coordinator::batcher::Batcher;
-use crate::engine::{prompt_page_hashes, EngineConfig, EngineCore, StepBackend};
+use crate::engine::{
+    prompt_page_hashes, EngineConfig, EngineCore, EngineRole, MigrationHub, StepBackend,
+};
 use crate::models::ModelSpec;
 use crate::obs::{
     Clock, EngineTracer, Event as ObsEvent, EventKind as ObsEventKind, MetricsRegistry,
@@ -39,7 +41,7 @@ use crate::obs::{
 };
 use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
-use crate::sched::plan::CascadePlan;
+use crate::sched::plan::{CascadePlan, DisaggSpec};
 use crate::util::stats;
 use crate::util::sync::{CondvarExt, LockExt, RwLockExt};
 
@@ -185,6 +187,13 @@ impl ServeControl {
                 );
             }
         }
+        if !config.disagg.is_empty() && config.disagg.len() != self.n_tiers {
+            anyhow::bail!(
+                "hot-swap disagg covers {} tiers but the server runs {}",
+                config.disagg.len(),
+                self.n_tiers
+            );
+        }
         config.policy.validate(self.n_tiers)?;
         *self.pending.plock() = Some(config);
         Ok(())
@@ -243,6 +252,8 @@ struct EngineTierCounters {
     swap_outs: AtomicUsize,
     swap_ins: AtomicUsize,
     swap_bytes: AtomicUsize,
+    migrations: AtomicUsize,
+    migrate_pages: AtomicUsize,
 }
 
 /// The continuous-batching inner loop of one tier worker: admit from
@@ -256,15 +267,26 @@ struct EngineTierCounters {
 /// (after a replica scale-down) stops admitting and retires at the
 /// first iteration boundary where its running set has drained — not at
 /// a whole-batch boundary, and never abandoning admitted work.
+///
+/// Disaggregated tiers run this same loop under a role tag: a
+/// prefill-role worker admits from the batcher, mirrors the tier hub's
+/// backpressure into its scheduler, and routes handed-off sequences
+/// through the hub (re-owning any the hub bounces); a decode-role
+/// worker never touches the batcher — the hub feeds it, it reports its
+/// pool occupancy back for the least-loaded pick, and it exits when
+/// the hub closes with nothing pending.
 #[allow(clippy::too_many_arguments)]
 fn continuous_worker_loop(
     tier: usize,
     backend: Box<dyn TierBackend>,
     cfg: EngineConfig,
+    role: EngineRole,
+    hub: Option<&MigrationHub<LiveRequest>>,
     pool_pages: &AtomicUsize,
     counters: &EngineTierCounters,
     tier_state: &TierState,
     alive: &AtomicUsize,
+    feeders: &AtomicUsize,
     target: &AtomicUsize,
     tx: Sender<RouterMsg>,
     max_new: &AtomicUsize,
@@ -273,18 +295,59 @@ fn continuous_worker_loop(
 ) {
     let mut engine: EngineCore<LiveRequest> = EngineCore::new(backend, cfg);
     engine.set_tracer(tracer.clone());
+    engine.set_role(role);
+    // A decode-role worker registers the hub slot handoffs route to.
+    let slot = match (role, hub) {
+        (EngineRole::Decode, Some(h)) => Some(h.register_decoder()),
+        _ => None,
+    };
     loop {
         // Pick up a hot-swapped pool size at the iteration boundary.
         let budget = pool_pages.load(Ordering::SeqCst).max(1);
         engine.set_pool_pages(budget);
         counters.peak_pool_pages.fetch_max(budget, Ordering::SeqCst);
-        // Admission (or, when idle, wait for work / shutdown / retire).
-        {
+        if role == EngineRole::Prefill {
+            // Mirror the hub's backpressure into the scheduler each
+            // iteration: a closed hub (no live decoder, or transit
+            // backlog over budget) makes newly prefilled sequences
+            // decode locally instead of queueing behind the handoff.
+            engine.set_migration_open(hub.map(|h| h.open()).unwrap_or(false));
+        }
+        if let (Some(s), Some(h)) = (slot, hub) {
+            // Decode-role admission: drain the hub, blocking on it only
+            // when the engine is idle. An empty wait result means the
+            // hub closed with nothing pending — the exit signal.
+            loop {
+                let incoming = h.try_drain(s);
+                if !incoming.is_empty() {
+                    for m in incoming {
+                        engine.submit_migrated(m);
+                    }
+                    break;
+                }
+                if !engine.is_idle() {
+                    break;
+                }
+                let waited = h.pop_wait(s);
+                if waited.is_empty() {
+                    return;
+                }
+                for m in waited {
+                    engine.submit_migrated(m);
+                }
+                break;
+            }
+        } else {
+            // Batcher admission (or, when idle, wait for work /
+            // shutdown / retire) — unified and prefill-role workers.
             let mut b = tier_state.batcher.plock();
             loop {
                 let surplus = alive.load(Ordering::SeqCst) > target.load(Ordering::SeqCst);
                 if !surplus {
-                    let pool = alive.load(Ordering::SeqCst).max(1);
+                    // Share by the live batcher-admitting worker count:
+                    // a disagg tier's decode workers never admit, so
+                    // they must not dilute the prefill pool's share.
+                    let pool = feeders.load(Ordering::SeqCst).max(1);
                     let share = (b.max_batch / pool).max(1);
                     let room = share.saturating_sub(engine.n_seqs());
                     for p in b.admit_up_to(room, t0.elapsed().as_secs_f64()) {
@@ -320,8 +383,11 @@ fn continuous_worker_loop(
                     return;
                 }
                 // Idle = an iteration boundary with nothing running:
-                // the continuous engine's retirement point.
+                // the continuous engine's retirement point. Only
+                // batcher-admitting roles reach here, so the feeder
+                // count retires with the worker.
                 if try_retire(alive, target) {
+                    feeders.fetch_sub(1, Ordering::SeqCst);
                     return;
                 }
                 b = tier_state.wake.pwait(b);
@@ -352,6 +418,31 @@ fn continuous_worker_loop(
                     (out.swap_pages as f64 * cfg.preemption.page_bytes) as usize,
                     Ordering::SeqCst,
                 );
+                if role == EngineRole::Decode {
+                    // Migration telemetry counts at the receiving side:
+                    // one handoff, one migration, its private pages.
+                    counters.migrations.fetch_add(out.migrated_in, Ordering::SeqCst);
+                    counters.migrate_pages.fetch_add(out.migrate_pages, Ordering::SeqCst);
+                    if let (Some(s), Some(h)) = (slot, hub) {
+                        h.report_pages(s, engine.kv_in_use());
+                    }
+                }
+                if !out.migrated_out.is_empty() {
+                    // Route handed-off sequences to a decode worker. A
+                    // bounce (decoder died or hub closed since the
+                    // open() check) re-owns the sequence: it decodes
+                    // locally, exactly-once preserved.
+                    for m in out.migrated_out {
+                        match hub {
+                            Some(h) => {
+                                if let Err(back) = h.push(m) {
+                                    engine.submit_migrated(back);
+                                }
+                            }
+                            None => engine.submit_migrated(m),
+                        }
+                    }
+                }
                 if !out.completed.is_empty() {
                     let n = out.completed.len();
                     for fin in out.completed {
@@ -370,13 +461,23 @@ fn continuous_worker_loop(
             Err(e) => {
                 // Replica death: hand every in-engine request back to
                 // the router (none completed this step — exactly-once
-                // is preserved), release batch capacity, and exit.
-                let leftovers = engine.drain();
-                let n = leftovers.len();
-                for req in leftovers {
+                // is preserved), release batch capacity, and exit. A
+                // dying decode worker also retires its hub slot: queued
+                // handoffs re-route to surviving decoders, and any the
+                // hub cannot place come back here to fail upstream —
+                // nothing is lost mid-migration.
+                let mut failed: Vec<LiveRequest> = engine.drain();
+                if let (Some(s), Some(h)) = (slot, hub) {
+                    failed.extend(h.retire(s).into_iter().map(|m| m.payload));
+                }
+                let n = failed.len();
+                for req in failed {
                     let _ = tx.send(RouterMsg::Failed { tier, req });
                 }
                 alive.fetch_sub(1, Ordering::SeqCst);
+                if role != EngineRole::Decode {
+                    feeders.fetch_sub(1, Ordering::SeqCst);
+                }
                 let _ = tx.send(RouterMsg::WorkerDead { tier, err: e.to_string() });
                 tier_state.batcher.plock().complete(n);
                 tier_state.wake.notify_all();
@@ -415,6 +516,15 @@ pub struct ServerConfig {
     /// Worker inner-loop discipline. The mode is fixed for a run; a
     /// hot-swapped config only retunes the continuous pools.
     pub exec: ExecMode,
+    /// Per-tier prefill/decode split (empty vec or `None` entries =
+    /// unified). A split tier partitions its worker pool into
+    /// prefill-role and decode-role workers wired through a tier-local
+    /// [`MigrationHub`]; the split's total must equal `replicas[t]`.
+    /// Splits take effect only under [`ExecMode::Continuous`] — a
+    /// lockstep server has no iteration boundary to hand off at and
+    /// serves the tier unified. The split is fixed for a run: hot-swaps
+    /// leave a disaggregated tier's worker counts untouched.
+    pub disagg: Vec<Option<DisaggSpec>>,
 }
 
 impl ServerConfig {
@@ -431,7 +541,13 @@ impl ServerConfig {
             policy: PolicySpec::threshold(thresholds)?,
             max_new_tokens,
             exec: ExecMode::BatchLockstep,
+            disagg: Vec::new(),
         })
+    }
+
+    /// The prefill/decode split configured for `tier`, if any.
+    pub fn disagg_for(&self, tier: usize) -> Option<DisaggSpec> {
+        self.disagg.get(tier).copied().flatten()
     }
 
     /// Switch this configuration to the continuous-batching engine
@@ -464,6 +580,7 @@ impl ServerConfig {
             policy: plan.policy.clone(),
             max_new_tokens,
             exec: ExecMode::BatchLockstep,
+            disagg: plan.tiers.iter().map(|t| t.disagg).collect(),
         })
     }
 
@@ -472,10 +589,12 @@ impl ServerConfig {
     /// the plan's own parallelism under the scheduler's cost model
     /// ([`ReplicaModel::kv_pages_total`]) — the plan's memory terms and
     /// the runtime's page accounting agree by construction. The plan's
-    /// preemption knob ([`CascadePlan::preemption`]) selects the
-    /// eviction discipline, with the swap budget and PCIe cost terms
-    /// derived from the same replica model — schedule→serve round-trips
-    /// the whole policy. Undeployed tiers get a nominal pool.
+    /// per-tier preemption knob ([`CascadePlan::preemption_for`])
+    /// selects each tier's eviction discipline, with the swap budget
+    /// and PCIe cost terms derived from the same replica model —
+    /// schedule→serve round-trips the whole policy. Tiers the plan
+    /// splits ([`crate::sched::plan::TierPlan::disagg`]) come out as
+    /// disaggregated worker pools. Undeployed tiers get a nominal pool.
     pub fn from_plan_with_engine(
         plan: &CascadePlan,
         cascade: &[ModelSpec],
@@ -502,7 +621,7 @@ impl ServerConfig {
                         EngineConfig::for_replica_with_preemption(
                             &rm,
                             DEFAULT_PAGE_TOKENS,
-                            plan.preemption,
+                            plan.preemption_for(i),
                         )
                     }
                     None => EngineConfig::nominal(DEFAULT_PAGE_TOKENS),
@@ -610,6 +729,13 @@ pub struct TierEngineStats {
     pub swap_ins: usize,
     /// Bytes moved across PCIe by KV swaps, both directions.
     pub swap_bytes: usize,
+    /// Prefill→decode handoffs admitted on this tier's decode-role
+    /// engines (0 on unified tiers). Counted at the decode side so a
+    /// handoff is one migration, not two.
+    pub migrations: usize,
+    /// Private KV pages that crossed the interconnect with those
+    /// handoffs (shared prefix pages re-claim locally and don't count).
+    pub migrate_pages: usize,
 }
 
 /// Aggregate statistics of a serving run.
@@ -768,6 +894,28 @@ impl CascadeServer {
                 }
             }
         }
+        if !config.disagg.is_empty() && config.disagg.len() != config.replicas.len() {
+            anyhow::bail!(
+                "disagg covers {} tiers but the server runs {}",
+                config.disagg.len(),
+                config.replicas.len()
+            );
+        }
+        for (t, d) in config.disagg.iter().enumerate() {
+            if let Some(d) = d {
+                if d.prefill_replicas == 0 || d.decode_replicas == 0 {
+                    anyhow::bail!("tier {t}: a disagg split needs both roles staffed");
+                }
+                if d.total() != config.replicas[t] {
+                    anyhow::bail!(
+                        "tier {t}: disagg split {}p+{}d != {} replicas",
+                        d.prefill_replicas,
+                        d.decode_replicas,
+                        config.replicas[t]
+                    );
+                }
+            }
+        }
         config.policy.validate(config.replicas.len())?;
         Ok(CascadeServer { config, telemetry: None })
     }
@@ -886,6 +1034,21 @@ impl CascadeServer {
             .collect();
         let engine_counters: Vec<EngineTierCounters> =
             (0..c).map(|_| EngineTierCounters::default()).collect();
+        // Per-tier migration hubs for disaggregated tiers (continuous
+        // mode only): the tier-local router between its prefill- and
+        // decode-role worker pools. The in-transit page budget mirrors
+        // the tier's per-replica pool, so a stalled decode pool closes
+        // the hub long before handoffs could queue unboundedly.
+        let hubs: Vec<Option<MigrationHub<LiveRequest>>> = (0..c)
+            .map(|t| match (engine_mode, self.config.disagg_for(t)) {
+                (Some(engines), Some(_)) => Some(MigrationHub::new(engines[t].pool_pages)),
+                _ => None,
+            })
+            .collect();
+        // Live batcher-admitting workers per tier (unified + prefill
+        // roles): sizes each feeder's admission share, and detects the
+        // unservable state where a disagg tier's prefill pool is gone.
+        let feeders: Vec<AtomicUsize> = (0..c).map(|_| AtomicUsize::new(0)).collect();
         // Swappable routing/pool state: the policy the submitter and
         // router consult, and the per-tier live/target worker counts
         // the pools converge to after a hot-swap.
@@ -907,14 +1070,16 @@ impl CascadeServer {
         let stats = std::thread::scope(|scope| -> Result<ServerStats> {
             // --- Workers (spawnable mid-run for hot-swap scale-up) ---
             let alive = &alive;
+            let feeders = &feeders;
             let target = &target;
             let tiers_ref = &tiers;
+            let hubs_ref = &hubs;
             let max_new = &max_new_live;
             let pool_live_ref = &pool_pages_live;
             let engine_ctr_ref = &engine_counters;
             let telem_ref = &telem;
             let clock_ref = &clock;
-            let spawn_worker = |tier: usize| {
+            let spawn_worker = |tier: usize, role: EngineRole| {
                 let tier_state = &tiers_ref[tier];
                 let tx = tx.clone();
                 // Workers emit on their tier's recorder shard; the
@@ -928,6 +1093,9 @@ impl CascadeServer {
                     terminal: false,
                 });
                 alive[tier].fetch_add(1, Ordering::SeqCst);
+                if role != EngineRole::Decode {
+                    feeders[tier].fetch_add(1, Ordering::SeqCst);
+                }
                 scope.spawn(move || {
                     // Panics in the backend are contained and converted
                     // to the replica-death path: an unwinding worker
@@ -943,6 +1111,9 @@ impl CascadeServer {
                         Ok(b) => b,
                         Err(e) => {
                             alive[tier].fetch_sub(1, Ordering::SeqCst);
+                            if role != EngineRole::Decode {
+                                feeders[tier].fetch_sub(1, Ordering::SeqCst);
+                            }
                             let _ = tx.send(RouterMsg::WorkerDead {
                                 tier,
                                 err: e.to_string(),
@@ -957,10 +1128,13 @@ impl CascadeServer {
                             tier,
                             backend,
                             engines[tier],
+                            role,
+                            hubs_ref[tier].as_ref(),
                             &pool_live_ref[tier],
                             &engine_ctr_ref[tier],
                             tier_state,
                             &alive[tier],
+                            &feeders[tier],
                             &target[tier],
                             tx,
                             max_new,
@@ -1072,8 +1246,20 @@ impl CascadeServer {
                 });
             };
             for tier in 0..c {
-                for _replica in 0..self.config.replicas[tier].max(1) {
-                    spawn_worker(tier);
+                match (engine_mode.is_some(), self.config.disagg_for(tier)) {
+                    (true, Some(d)) => {
+                        for _ in 0..d.prefill_replicas {
+                            spawn_worker(tier, EngineRole::Prefill);
+                        }
+                        for _ in 0..d.decode_replicas {
+                            spawn_worker(tier, EngineRole::Decode);
+                        }
+                    }
+                    _ => {
+                        for _replica in 0..self.config.replicas[tier].max(1) {
+                            spawn_worker(tier, EngineRole::Unified);
+                        }
+                    }
                 }
             }
 
@@ -1183,10 +1369,20 @@ impl CascadeServer {
                             }
                         }
                         for t in 0..c {
+                            // A disaggregated tier's role split is
+                            // fixed for the run: resizing its pool
+                            // mid-flight would unbalance the
+                            // prefill/decode roles (and orphan hub
+                            // slots), so hot-swaps leave its worker
+                            // counts alone.
+                            if hubs[t].is_some() {
+                                tiers[t].wake.notify_all();
+                                continue;
+                            }
                             let want = next.replicas[t].max(1);
                             target[t].store(want, Ordering::SeqCst);
                             while alive[t].load(Ordering::SeqCst) < want {
-                                spawn_worker(t);
+                                spawn_worker(t, EngineRole::Unified);
                             }
                             // Surplus workers wake up and retire.
                             tiers[t].wake.notify_all();
@@ -1233,11 +1429,26 @@ impl CascadeServer {
                         // remaining replicas of that tier (failure
                         // injection tests exercise this path).
                         worker_errors.push(format!("tier {tier}: {err}"));
-                        if alive[tier].load(Ordering::SeqCst) == 0 {
+                        // A disagg tier whose last prefill worker died
+                        // can never admit queued work again, even with
+                        // decoders alive — that's as dead as an empty
+                        // tier.
+                        let starved = hubs[tier].is_some()
+                            && feeders[tier].load(Ordering::SeqCst) == 0;
+                        if alive[tier].load(Ordering::SeqCst) == 0 || starved {
                             // Unblock every surviving worker before
                             // returning, or thread::scope never joins.
                             for t in &tiers {
                                 t.close();
+                            }
+                            for h in hubs.iter().flatten() {
+                                h.close();
+                            }
+                            if starved {
+                                anyhow::bail!(
+                                    "all prefill replicas of disaggregated tier {tier} \
+                                     died: {worker_errors:?}"
+                                );
                             }
                             anyhow::bail!(
                                 "all replicas of tier {tier} died: {worker_errors:?}"
@@ -1402,6 +1613,9 @@ impl CascadeServer {
             for t in &tiers {
                 t.close();
             }
+            for h in hubs.iter().flatten() {
+                h.close();
+            }
             if done < trace.len() {
                 anyhow::bail!(
                     "served {done}/{} requests; worker errors: {:?}",
@@ -1441,6 +1655,8 @@ impl CascadeServer {
                     swap_outs: engine_counters[t].swap_outs.load(Ordering::SeqCst),
                     swap_ins: engine_counters[t].swap_ins.load(Ordering::SeqCst),
                     swap_bytes: engine_counters[t].swap_bytes.load(Ordering::SeqCst),
+                    migrations: engine_counters[t].migrations.load(Ordering::SeqCst),
+                    migrate_pages: engine_counters[t].migrate_pages.load(Ordering::SeqCst),
                 })
                 .collect();
             if let Some(tm) = &telem {
@@ -1659,6 +1875,7 @@ mod tests {
             policy: PolicySpec::length(vec![0.0], 5.0, 1).unwrap(),
             max_new_tokens: 4,
             exec: ExecMode::BatchLockstep,
+            disagg: Vec::new(),
         })
         .unwrap();
         let mut trace: Vec<(f64, Vec<i32>)> = Vec::new();
@@ -1688,6 +1905,7 @@ mod tests {
             policy: PolicySpec::margin(vec![80.0, 80.0], 5.0).unwrap(),
             max_new_tokens: 4,
             exec: ExecMode::BatchLockstep,
+            disagg: Vec::new(),
         })
         .unwrap();
         let trace: Vec<(f64, Vec<i32>)> = (0..8).map(|_| (0.0, vec![2, 9])).collect();
@@ -1715,6 +1933,7 @@ mod tests {
                     workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -1723,11 +1942,12 @@ mod tests {
                     workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
+                    disagg: None,
                 },
             ],
             predicted_latency: 1.0,
             predicted_quality: 80.0,
-            preemption: PreemptionMode::Recompute,
+            preemption: vec![PreemptionMode::Recompute; 2],
         };
         let cfg = ServerConfig::from_plan(&plan, 6).unwrap();
         assert_eq!(cfg.replicas, vec![2, 1]); // undeployed tier keeps 1 worker
@@ -1839,11 +2059,12 @@ mod tests {
                     workload: Workload { rate: 2.0, avg_input: 100.0, avg_output: 50.0 },
                     processing_ratio: 0.5,
                     predicted_p95: 1.0,
+                    disagg: None,
                 })
                 .collect(),
             predicted_latency: 1.0,
             predicted_quality: 80.0,
-            preemption: PreemptionMode::Recompute,
+            preemption: vec![PreemptionMode::Recompute; 2],
         };
         let launched = plan_with(["small", "large"]);
         let control = ServeControl::for_plan(&launched);
@@ -1879,6 +2100,7 @@ mod tests {
             policy: PolicySpec::threshold(vec![50.0]).unwrap(),
             max_new_tokens: 2,
             exec: ExecMode::BatchLockstep,
+            disagg: Vec::new(),
         });
         assert!(err.is_err());
     }
@@ -2154,6 +2376,7 @@ mod tests {
                     workload: Workload { rate: 4.0, avg_input: 300.0, avg_output: 100.0 },
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: cascade[1].name.to_string(),
@@ -2162,11 +2385,12 @@ mod tests {
                     workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
+                    disagg: None,
                 },
             ],
             predicted_latency: 1.0,
             predicted_quality: 80.0,
-            preemption: PreemptionMode::Swap,
+            preemption: vec![PreemptionMode::Swap; 2],
         };
         let cfg = ServerConfig::from_plan_with_engine(
             &plan,
@@ -2202,6 +2426,123 @@ mod tests {
             6
         )
         .is_err());
+    }
+
+    // ---- Disaggregated (prefill/decode split) tiers ----
+
+    fn disagg_config() -> ServerConfig {
+        let mut cfg = ServerConfig::with_thresholds(vec![3, 1], vec![4, 2], vec![50.0], 4)
+            .unwrap()
+            .continuous(engine_cfgs(2));
+        cfg.disagg =
+            vec![Some(DisaggSpec { prefill_replicas: 2, decode_replicas: 1 }), None];
+        cfg
+    }
+
+    #[test]
+    fn disagg_tier_serves_exactly_once_and_migrates() {
+        let server = CascadeServer::new(disagg_config()).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..20).map(|i| (0.0, vec![(i % 2) as i32, 7, 8])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 20);
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>(), "no drops, no duplicates");
+        // Routing semantics are unchanged by the split.
+        assert_eq!(stats.per_tier_processed[0], 20);
+        assert_eq!(stats.per_tier_processed[1], 10);
+        for c in &stats.completions {
+            assert_eq!(c.accepting_tier, trace[c.id].1[0] as usize, "req {}", c.id);
+        }
+        let e = &stats.engine[0];
+        assert!(e.migrations > 0, "the split tier must hand sequences off: {e:?}");
+        assert!(
+            e.migrate_pages > 0,
+            "private pages must cross the interconnect: {e:?}"
+        );
+        assert_eq!(stats.engine[1].migrations, 0, "unified tiers never migrate");
+    }
+
+    #[test]
+    fn disagg_split_must_be_staffed_and_match_replicas() {
+        // Split total != tier replica count.
+        let mut cfg = disagg_config();
+        cfg.disagg[0] = Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 });
+        assert!(CascadeServer::new(cfg).is_err());
+        // A role with zero workers.
+        let mut cfg = disagg_config();
+        cfg.replicas[0] = 3;
+        cfg.disagg[0] = Some(DisaggSpec { prefill_replicas: 3, decode_replicas: 0 });
+        assert!(CascadeServer::new(cfg).is_err());
+        // Arity mismatch with the cascade.
+        let mut cfg = disagg_config();
+        cfg.disagg.push(None);
+        assert!(CascadeServer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn disagg_under_lockstep_serves_unified() {
+        // A lockstep server has no iteration boundary to hand off at:
+        // the split is carried in the config (from_plan keeps it) but
+        // serving degrades to unified, losing nothing.
+        let mut cfg = ServerConfig::with_thresholds(vec![2, 1], vec![4, 2], vec![50.0], 4)
+            .unwrap();
+        cfg.disagg =
+            vec![Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 }), None];
+        let server = CascadeServer::new(cfg).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..10).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 10);
+        assert_eq!(stats.engine[0].migrations, 0);
+    }
+
+    #[test]
+    fn disagg_mid_migration_hot_swap_loses_no_requests() {
+        // A hot-swap lands while sequences are in flight across the
+        // prefill→decode handoff. The swap retunes the policy and the
+        // unified tier's pool but must leave the split tier's role
+        // counts alone — and every request completes exactly once.
+        let server = CascadeServer::new(disagg_config()).unwrap();
+        let control = ServeControl::new(2);
+        let next = ServerConfig::with_thresholds(vec![3, 2], vec![4, 4], vec![0.0], 4)
+            .unwrap()
+            .continuous(engine_cfgs(2));
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 10,
+            next,
+            fired: AtomicBool::new(false),
+        };
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..40).map(|i| (0.0, vec![(i % 2) as i32, 5])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 40, "every request must survive the swap");
+        assert_eq!(control.hot_swaps(), 1);
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>(), "exactly-once across the swap");
+        assert!(stats.engine[0].migrations > 0, "handoffs ran across the swap");
+    }
+
+    #[test]
+    fn disagg_prefill_keeps_ownership_when_hub_is_shut() {
+        // When no decode worker is accepting (hub closed or not yet
+        // registered at the moment the prefill engine checks), handoff
+        // stays closed and the prefill worker decodes locally — the
+        // split degrades to unified serving instead of stranding work.
+        // The hub-level retire/bounce invariants are pinned in
+        // `engine::migrate`; this covers the serving-level fallback:
+        // even a tiny burst that races worker startup completes fully.
+        let server = CascadeServer::new(disagg_config()).unwrap();
+        let trace: Vec<(f64, Vec<i32>)> = (0..8).map(|_| (0.0, vec![0])).collect();
+        let stats = server.serve(&trace, &factory, &FakeJudger).unwrap();
+        assert_eq!(stats.completions.len(), 8);
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
     }
 
     // ---- Request-lifecycle tracing (obs) on the live path ----

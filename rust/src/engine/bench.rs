@@ -52,6 +52,7 @@ use crate::metrics::LatencySummary;
 use crate::models::{llama_cascade, ModelSpec};
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 use crate::router::PolicySpec;
+use crate::sched::plan::DisaggSpec;
 use crate::util::json::Json;
 use crate::util::stats;
 use crate::workload::{estimate_stats, generate_phased, paper_trace, PhasedTraceSpec, Request};
@@ -100,6 +101,12 @@ pub struct BenchConfig {
     pub swap_requests: usize,
     pub swap_prompt_tokens: usize,
     pub swap_decode_steps: usize,
+    /// Disagg section: long-prompt requests served unified vs through
+    /// a prefill/decode split of the same replica count, and their
+    /// decode depth (token-granular like the chunked section).
+    pub disagg_requests: usize,
+    pub disagg_prompt_tokens: usize,
+    pub disagg_decode_steps: usize,
 }
 
 impl BenchConfig {
@@ -125,6 +132,9 @@ impl BenchConfig {
             swap_requests: 16,
             swap_prompt_tokens: 1040,
             swap_decode_steps: 64,
+            disagg_requests: 40,
+            disagg_prompt_tokens: 1024,
+            disagg_decode_steps: 32,
         }
     }
 
@@ -141,6 +151,7 @@ impl BenchConfig {
             mix_short_requests: 48,
             mix_long_requests: 2,
             swap_requests: 10,
+            disagg_requests: 24,
             ..BenchConfig::full()
         }
     }
@@ -234,6 +245,36 @@ pub struct ChunkedReport {
     pub win: bool,
 }
 
+/// Disaggregation section: the same long-prompt decode-heavy trace
+/// served by 2 unified tier-0 replicas vs a 1-prefill + 1-decode
+/// split of the SAME replica count. Unified workers interleave new
+/// prompts' prefill chunks with their residents' decode iterations,
+/// so every chunk of a fresh prompt waits behind a full decode batch;
+/// the split's prefill worker hands each sequence to the decode
+/// worker right after its first token (charging the interconnect via
+/// [`crate::perf::ReplicaModel::page_migrate_seconds`]), keeping its
+/// own iterations prefill-pure. The section gates that the split cuts
+/// p95 TTFT at equal request completion — the paper's case for
+/// treating the split as a deployment dimension the scheduler owns.
+#[derive(Debug, Clone)]
+pub struct DisaggReport {
+    pub requests: usize,
+    pub prompt_tokens: usize,
+    pub decode_steps: usize,
+    /// p95 submission-to-first-token, uncompressed seconds.
+    pub unified_p95_ttft_s: f64,
+    pub disagg_p95_ttft_s: f64,
+    /// unified / disagg (>1 = the split wins).
+    pub ttft_p95_speedup: f64,
+    /// Handoffs observed decode-side in the split run (one per
+    /// migrated sequence) and the private KV pages they moved.
+    pub migrations: usize,
+    pub migrate_pages: usize,
+    /// Both arms served every request, the split actually migrated,
+    /// and it beat unified on p95 TTFT.
+    pub win: bool,
+}
+
 /// Tracing-overhead section: the headline trace re-served with the
 /// span recorder + metrics registry detached vs attached. Recording
 /// must be effectively free: the gate allows a 3% relative p95
@@ -305,6 +346,7 @@ pub struct BenchReport {
     pub prefix: PrefixReport,
     pub chunked: ChunkedReport,
     pub swap: SwapReport,
+    pub disagg: DisaggReport,
     pub tracing: TracingReport,
     pub profile: ProfileSectionReport,
 }
@@ -312,13 +354,15 @@ pub struct BenchReport {
 impl BenchReport {
     /// Every gate the bench enforces: headline win, page budgets,
     /// prefix-sharing win, chunked-TTFT win, swap-preemption win,
-    /// tracing-overhead win, profile-aggregation win.
+    /// disaggregation win, tracing-overhead win, profile-aggregation
+    /// win.
     pub fn all_green(&self) -> bool {
         self.win
             && self.occupancy_ok
             && self.prefix.win
             && self.chunked.win
             && self.swap.win
+            && self.disagg.win
             && self.tracing.win
             && self.profile.win
     }
@@ -377,6 +421,8 @@ impl BenchReport {
                                     ),
                                     ("shared_claims", Json::num(e.shared_claims as f64)),
                                     ("cow_copies", Json::num(e.cow_copies as f64)),
+                                    ("migrations", Json::num(e.migrations as f64)),
+                                    ("migrate_pages", Json::num(e.migrate_pages as f64)),
                                 ])
                             })
                             .collect(),
@@ -463,6 +509,20 @@ impl BenchReport {
                     ("swap_ins", Json::num(self.swap.swap_ins as f64)),
                     ("swap_bytes", Json::num(self.swap.swap_bytes as f64)),
                     ("win", Json::Bool(self.swap.win)),
+                ]),
+            ),
+            (
+                "disagg",
+                Json::obj(vec![
+                    ("requests", Json::num(self.disagg.requests as f64)),
+                    ("prompt_tokens", Json::num(self.disagg.prompt_tokens as f64)),
+                    ("decode_steps", Json::num(self.disagg.decode_steps as f64)),
+                    ("unified_p95_ttft_s", Json::num(self.disagg.unified_p95_ttft_s)),
+                    ("disagg_p95_ttft_s", Json::num(self.disagg.disagg_p95_ttft_s)),
+                    ("ttft_p95_speedup", Json::num(self.disagg.ttft_p95_speedup)),
+                    ("migrations", Json::num(self.disagg.migrations as f64)),
+                    ("migrate_pages", Json::num(self.disagg.migrate_pages as f64)),
+                    ("win", Json::Bool(self.disagg.win)),
                 ]),
             ),
             (
@@ -553,6 +613,9 @@ struct ContinuousCalibrated {
     prefilled_tokens: Arc<AtomicUsize>,
     /// Seconds per KV page moved across PCIe (the swap hook's rate).
     swap_s_per_page: f64,
+    /// Seconds per KV page moved across the prefill→decode
+    /// interconnect (the migrate hook's rate).
+    migrate_s_per_page: f64,
 }
 
 impl StepBackend for ContinuousCalibrated {
@@ -576,6 +639,14 @@ impl StepBackend for ContinuousCalibrated {
         // time, so the recompute-vs-swap comparison the bench reports
         // is a genuine cost tradeoff, not an accounting trick.
         self.sleeper.pay(pages as f64 * self.swap_s_per_page);
+    }
+
+    fn migrate(&mut self, _seq: SeqId, pages: usize) {
+        // A prefill→decode handoff pays the one-way interconnect move
+        // of its private pages (the decode engine fires this hook on
+        // arrival), so the unified-vs-split comparison prices the
+        // transfer the same way the scheduler's estimator does.
+        self.sleeper.pay(pages as f64 * self.migrate_s_per_page);
     }
 }
 
@@ -681,7 +752,8 @@ struct ContinuousRun {
 /// `pool_pages` overrides every tier's pool size (the swap section's
 /// deliberately tight pools); `preemption` selects the eviction
 /// discipline, with per-tier swap budget/cost terms derived from each
-/// tier's own replica model.
+/// tier's own replica model; `disagg` optionally splits tiers into
+/// prefill/decode role pools (empty = unified).
 #[allow(clippy::too_many_arguments)]
 fn run_continuous(
     trace: &[TraceEntry],
@@ -696,6 +768,7 @@ fn run_continuous(
     share_prefixes: bool,
     pool_pages: Option<usize>,
     preemption: PreemptionMode,
+    disagg: Vec<Option<DisaggSpec>>,
     time_scale: f64,
     token_scale: f64,
     telemetry: Option<Arc<ServeTelemetry>>,
@@ -721,6 +794,7 @@ fn run_continuous(
         policy: PolicySpec::threshold(vec![threshold])?,
         max_new_tokens: max_new_default,
         exec: ExecMode::Continuous(engines),
+        disagg,
     })?;
     server.set_telemetry(telemetry);
     let prefilled = Arc::new(AtomicUsize::new(0));
@@ -734,6 +808,7 @@ fn run_continuous(
             sleeper: PacedSleeper { time_scale, debt: 0.0 },
             prefilled_tokens: Arc::clone(&prefilled_f),
             swap_s_per_page: rms_owned[tier].page_swap_seconds(page_tokens),
+            migrate_s_per_page: rms_owned[tier].page_migrate_seconds(page_tokens),
         }))
     };
     let stats = server.serve_entries(trace, &factory, judger)?;
@@ -836,6 +911,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         policy: policy.clone(),
         max_new_tokens: cfg.decode_steps,
         exec: ExecMode::BatchLockstep,
+        disagg: Vec::new(),
     })?;
     let rms_lock = rms.clone();
     let (ts, tsc) = (cfg.time_scale, cfg.token_scale as f64);
@@ -865,6 +941,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         policy,
         max_new_tokens: cfg.decode_steps,
         exec: ExecMode::Continuous(engines),
+        disagg: Vec::new(),
     })?;
     let rms_cont = rms.clone();
     let cont_prefilled = Arc::new(AtomicUsize::new(0));
@@ -877,6 +954,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             sleeper: PacedSleeper { time_scale: ts, debt: 0.0 },
             prefilled_tokens: Arc::clone(&cont_prefilled_f),
             swap_s_per_page: 0.0,
+            migrate_s_per_page: 0.0,
         }))
     };
     let cont_stats = cont_server
@@ -934,6 +1012,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -952,6 +1031,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             true,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -1042,6 +1122,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             1.0,
             None,
@@ -1060,6 +1141,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             1.0,
             None,
@@ -1138,6 +1220,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             Some(pool_pages),
             PreemptionMode::Recompute,
+            Vec::new(),
             ts_s,
             1.0,
             None,
@@ -1156,6 +1239,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             Some(pool_pages),
             PreemptionMode::Swap,
+            Vec::new(),
             ts_s,
             1.0,
             None,
@@ -1188,6 +1272,121 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         }
     };
 
+    // --- Disagg section: 2 unified tier-0 replicas vs a 1-prefill +
+    // 1-decode split of the SAME replica count, on a long-prompt
+    // decode-heavy trace. Decode runs token-granular (token_scale 1)
+    // like the chunked section: every prefill chunk of a fresh prompt
+    // on a unified worker rides an iteration that also pays
+    // decode_iteration(b) for the worker's residents, so unified TTFT
+    // carries a chunks × decode-batch interference term the split's
+    // prefill-pure worker never pays (its sequences hand off to the
+    // decode worker right after their first token). ---
+    let disagg = {
+        let n = cfg.disagg_requests.max(8);
+        let prompt_tokens = cfg.disagg_prompt_tokens.max(4 * cfg.page_tokens);
+        let steps_d = cfg.disagg_decode_steps.max(8);
+        let chunk = (prompt_tokens / 8).max(cfg.page_tokens);
+        // Gentler compression than the headline (same reasoning as the
+        // swap section): the win margin is per-chunk interference.
+        let ts_d = (cfg.time_scale / 4.0).max(1.0);
+        let rms_d = bench_rms(&cascade, &cluster, prompt_tokens as f64 + steps_d as f64);
+        // Pace arrivals at ~55% of the binding arm: the split's lone
+        // prefill worker, its lone decode worker, and the unified pair
+        // must ALL be stable, so the p95 TTFT delta measures
+        // interference rather than saturation of either arm.
+        let bd = max_batch[0].clamp(1, rms_d[0].max_batch.max(1));
+        let prefill_cap = 1.0 / rms_d[0].prefill_latency(prompt_tokens as f64).max(1e-9);
+        let decode_cap =
+            bd as f64 / (steps_d as f64 * rms_d[0].decode_iteration(bd)).max(1e-9);
+        let unified_cap = {
+            let bu = (max_batch[0] / replicas[0]).clamp(1, rms_d[0].max_batch.max(1));
+            replicas[0] as f64 * bu as f64
+                / (steps_d as f64 * rms_d[0].decode_iteration(bu)
+                    + bu as f64 * rms_d[0].prefill_latency(prompt_tokens as f64))
+        };
+        let rate = 0.55 * prefill_cap.min(decode_cap).min(unified_cap);
+        let reqs: Vec<Request> = {
+            let mut spec = paper_trace(3, 1.0);
+            spec.burstiness = 1.0;
+            crate::workload::generate(&spec, n, cfg.seed.wrapping_add(11))
+        };
+        let dtrace: Vec<TraceEntry> = (0..n)
+            .map(|i| {
+                let mut prompt: Vec<i32> =
+                    (0..prompt_tokens - 1).map(|j| tail_token(i + 500_000, j)).collect();
+                prompt.push(i as i32);
+                TraceEntry { at: i as f64 / rate / ts_d, prompt, max_new: Some(steps_d) }
+            })
+            .collect();
+        let djudger = BenchJudger {
+            requests: reqs,
+            models: cascade.clone(),
+            judger: Judger::new(cfg.seed.wrapping_add(11)),
+        };
+        // Accept everything at tier 0: the section isolates the
+        // prefill/decode split from routing.
+        let unified = run_continuous(
+            &dtrace,
+            &djudger,
+            &rms_d,
+            replicas.clone(),
+            max_batch.clone(),
+            0.0,
+            steps_d,
+            cfg.page_tokens,
+            chunk,
+            false,
+            None,
+            PreemptionMode::Recompute,
+            Vec::new(),
+            ts_d,
+            1.0,
+            None,
+        )
+        .context("disagg-section unified run")?;
+        let split = run_continuous(
+            &dtrace,
+            &djudger,
+            &rms_d,
+            replicas.clone(),
+            max_batch.clone(),
+            0.0,
+            steps_d,
+            cfg.page_tokens,
+            chunk,
+            false,
+            None,
+            PreemptionMode::Recompute,
+            vec![Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 }), None],
+            ts_d,
+            1.0,
+            None,
+        )
+        .context("disagg-section split run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&unified.stats.engine)
+            && occupancy_ok(&split.stats.engine);
+        let uttft = unified.stats.p95_ttft() * ts_d;
+        let dttft = split.stats.p95_ttft() * ts_d;
+        let migrations: usize = split.stats.engine.iter().map(|e| e.migrations).sum();
+        let migrate_pages: usize =
+            split.stats.engine.iter().map(|e| e.migrate_pages).sum();
+        DisaggReport {
+            requests: n,
+            prompt_tokens,
+            decode_steps: steps_d,
+            unified_p95_ttft_s: uttft,
+            disagg_p95_ttft_s: dttft,
+            ttft_p95_speedup: uttft / dttft.max(1e-9),
+            migrations,
+            migrate_pages,
+            win: unified.stats.completions.len() == n
+                && split.stats.completions.len() == n
+                && migrations > 0
+                && dttft < uttft,
+        }
+    };
+
     // --- Tracing section: the headline trace re-served on the
     // continuous engine with the span recorder + metrics registry
     // detached vs attached. Both runs use identical configs; only the
@@ -1206,6 +1405,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -1225,6 +1425,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             false,
             None,
             PreemptionMode::Recompute,
+            Vec::new(),
             cfg.time_scale,
             cfg.token_scale as f64,
             Some(Arc::clone(&telem)),
@@ -1297,6 +1498,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         prefix,
         chunked,
         swap,
+        disagg,
         tracing,
         profile,
     })
@@ -1320,6 +1522,7 @@ mod tests {
             mix_short_requests: 32,
             mix_long_requests: 1,
             swap_requests: 8,
+            disagg_requests: 16,
             ..BenchConfig::smoke()
         };
         let report = run_serving_bench(&cfg).unwrap();
@@ -1368,6 +1571,18 @@ mod tests {
             report.swap.recompute_prefill_tokens
         );
         assert!(
+            report.disagg.migrations > 0,
+            "the split run must hand sequences off prefill→decode"
+        );
+        assert!(report.disagg.migrate_pages > 0);
+        assert!(
+            report.disagg.win,
+            "the split must beat unified on p95 TTFT ({:.3}s vs {:.3}s, {} migrations)",
+            report.disagg.disagg_p95_ttft_s,
+            report.disagg.unified_p95_ttft_s,
+            report.disagg.migrations
+        );
+        assert!(
             report.tracing.events_recorded >= report.tracing.requests,
             "tracing-on run must record at least one event per request"
         );
@@ -1400,6 +1615,8 @@ mod tests {
         assert!(json.contains("\"prefix\""));
         assert!(json.contains("\"chunked\""));
         assert!(json.contains("\"swap\""));
+        assert!(json.contains("\"disagg\""));
+        assert!(json.contains("\"ttft_p95_speedup\""));
         assert!(json.contains("\"tracing\""));
         assert!(json.contains("\"overhead_ok\":true"));
         assert!(json.contains("\"profile\""));

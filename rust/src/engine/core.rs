@@ -43,7 +43,8 @@ use crate::obs::{emit_plan_events, EngineTracer};
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 
 use super::kv::{prompt_page_hashes, KvPool, SeqId};
-use super::scheduler::{IterationScheduler, PreemptionConfig, PreemptionMode};
+use super::migrate::MigratedSeq;
+use super::scheduler::{EngineRole, IterationScheduler, PreemptionConfig, PreemptionMode};
 
 /// Iteration-granular generation interface. One instance per worker,
 /// obtained through `TierBackend::step_backend`.
@@ -75,6 +76,18 @@ pub trait StepBackend {
     /// here; the default is a no-op.
     fn swap(&mut self, seq: SeqId, pages: usize, to_host: bool) {
         let _ = (seq, pages, to_host);
+    }
+
+    /// Notification that `seq` arrived by prefill→decode migration with
+    /// `pages` private KV pages moved over the replica-pair
+    /// interconnect (shared prefix pages re-claimed locally and are not
+    /// counted). Fired once, on the DECODE side, at admission — the
+    /// one-way transit cost lands on the engine that waits for it.
+    /// Calibrated backends charge
+    /// [`crate::perf::ReplicaModel::migrate_seconds`] here; the default
+    /// is a no-op.
+    fn migrate(&mut self, seq: SeqId, pages: usize) {
+        let _ = (seq, pages);
     }
 }
 
@@ -213,6 +226,17 @@ pub struct StepOutcome<T> {
     pub shared_claims: usize,
     /// Copy-on-write page copies performed this iteration.
     pub cow_copies: usize,
+    /// Sequences handed off to a decode-role engine this iteration
+    /// (prefill-role engines only). The caller routes them through the
+    /// tier's [`crate::engine::MigrationHub`]; each carries its private
+    /// page count for transit accounting.
+    pub migrated_out: Vec<MigratedSeq<T>>,
+    /// Migrated sequences admitted into the running batch this
+    /// iteration (decode-role engines only).
+    pub migrated_in: usize,
+    /// Private KV pages moved by migration this iteration, both
+    /// directions (out on prefill-role engines, in on decode-role).
+    pub migrate_pages: usize,
 }
 
 #[derive(Debug)]
@@ -224,6 +248,9 @@ struct SeqData<T> {
     /// Remaining whole-request tokens when the backend is adapted
     /// (None for native step backends).
     cached: Option<VecDeque<i32>>,
+    /// Prompt page hashes (kept when prefix sharing is on) so a
+    /// prefill→decode handoff ships them instead of rehashing.
+    hashes: Option<Arc<Vec<u64>>>,
     submitted_at: Instant,
     admitted_at: Option<Instant>,
     first_token_at: Option<Instant>,
@@ -324,14 +351,15 @@ impl<T> EngineCore<T> {
         // Prefix sharing needs a backend that can decode from resident
         // KV; adapted whole-request backends recompute regardless.
         let share = self.share_prefixes && self.backend.step_backend().is_some();
-        let h: Vec<u64> = if share {
-            match hashes {
-                Some(a) => (*a).clone(),
-                None => prompt_page_hashes(&prompt, self.page_tokens),
-            }
+        let h_arc: Option<Arc<Vec<u64>>> = if share {
+            Some(match hashes {
+                Some(a) => a,
+                None => Arc::new(prompt_page_hashes(&prompt, self.page_tokens)),
+            })
         } else {
-            Vec::new()
+            None
         };
+        let h: Vec<u64> = h_arc.as_ref().map(|a| (**a).clone()).unwrap_or_default();
         self.sched.enqueue_shared(id, prompt.len().max(1), max_new, h);
         self.data.insert(
             id,
@@ -341,10 +369,49 @@ impl<T> EngineCore<T> {
                 max_new,
                 output: Vec::new(),
                 cached: None,
+                hashes: h_arc,
                 submitted_at: Instant::now(),
                 admitted_at: None,
                 first_token_at: None,
                 trace_key,
+            },
+        );
+    }
+
+    /// Accept a sequence handed off from a prefill-role engine: its
+    /// prompt is already prefilled THERE (this engine owes no prefill
+    /// work for it), its private pages arrive by modeled transit (the
+    /// [`StepBackend::migrate`] hook fires at admission), and shared
+    /// prefix pages re-claim through this pool's own trie from the
+    /// carried hashes. It joins the running batch at the next iteration
+    /// boundary with pages to hold prompt + generated + 1 tokens.
+    pub fn submit_migrated(&mut self, m: MigratedSeq<T>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let max_new = m.max_new.max(1);
+        let share = self.share_prefixes && self.backend.step_backend().is_some();
+        let h: Vec<u64> = if share {
+            match &m.hashes {
+                Some(a) => (**a).clone(),
+                None => prompt_page_hashes(&m.prompt, self.page_tokens),
+            }
+        } else {
+            Vec::new()
+        };
+        self.sched.enqueue_prefilled(id, m.prompt.len().max(1), m.output.len(), max_new, h);
+        self.data.insert(
+            id,
+            SeqData {
+                payload: m.payload,
+                prompt: m.prompt,
+                max_new,
+                output: m.output,
+                cached: m.cached,
+                hashes: m.hashes,
+                submitted_at: m.submitted_at,
+                admitted_at: m.admitted_at,
+                first_token_at: m.first_token_at,
+                trace_key: m.trace_key,
             },
         );
     }
@@ -406,6 +473,37 @@ impl<T> EngineCore<T> {
     /// directions) of the swap-to-host policy.
     pub fn swap_counts(&self) -> (u64, u64, u64) {
         self.sched.swap_counts()
+    }
+
+    /// Tag this engine's disaggregation role. Prefill-role engines hand
+    /// sequences off after their first token (while the tier's
+    /// migration hub is open); decode-role engines admit them through
+    /// [`EngineCore::submit_migrated`]. Unified (the default) does
+    /// neither.
+    pub fn set_role(&mut self, role: EngineRole) {
+        self.sched.set_role(role);
+    }
+
+    pub fn role(&self) -> EngineRole {
+        self.sched.role()
+    }
+
+    /// Gate the next step's handoffs (prefill role only): the worker
+    /// loop mirrors the tier hub's backpressure here, so a closed hub
+    /// degrades to local (unified) decode instead of queueing.
+    pub fn set_migration_open(&mut self, open: bool) {
+        self.sched.set_migration_open(open);
+    }
+
+    /// Migrated-in sequences waiting for pages (decode role).
+    pub fn n_migrate_queued(&self) -> usize {
+        self.sched.n_migrate_queued()
+    }
+
+    /// Lifetime (handoffs out, handoffs in, private pages out, private
+    /// pages in) of prefill→decode migration on this engine.
+    pub fn migrate_counts(&self) -> (u64, u64, u64, u64) {
+        self.sched.migrate_counts()
     }
 
     /// Sequences currently parked in host swap space.
@@ -470,6 +568,41 @@ impl<T> EngineCore<T> {
             emit_plan_events(&tr.recorder, tr.shard, t, tr.tier, &plan, |id| {
                 data.get(&id).map(|d| d.trace_key).unwrap_or(id as u64)
             });
+        }
+
+        // Migrated-out sequences have already left the scheduler (pages
+        // released, running slot freed); package their state for the
+        // decode-role destination and drop them here. The backend's
+        // release mirrors retirement — on a prefill-role engine there
+        // is no post-handoff work for the sequence.
+        let mut migrated_out: Vec<MigratedSeq<T>> = Vec::with_capacity(plan.migrated_out.len());
+        for &(id, pages) in &plan.migrated_out {
+            if let Some(s) = self.backend.step_backend() {
+                s.release(id);
+            }
+            let d = known(self.data.remove(&id), id, "migrate-out");
+            migrated_out.push(MigratedSeq {
+                payload: d.payload,
+                prompt: d.prompt,
+                output: d.output,
+                max_new: d.max_new,
+                hashes: d.hashes,
+                pages,
+                cached: d.cached,
+                trace_key: d.trace_key,
+                submitted_at: d.submitted_at,
+                admitted_at: d.admitted_at,
+                first_token_at: d.first_token_at,
+            });
+        }
+
+        // Migrated-in admissions charge their one-way transit here (the
+        // decode engine waits out the interconnect move before its
+        // first local decode of the sequence).
+        for &(id, pages) in &plan.migrated_in {
+            if let Some(s) = self.backend.step_backend() {
+                s.migrate(id, pages);
+            }
         }
 
         // Recompute-preempted sequences lose engine and backend state;
@@ -634,6 +767,9 @@ impl<T> EngineCore<T> {
             prefix_hit_tokens: (self.sched.prefix_hit_tokens() - hits_before) as usize,
             shared_claims: (claims_after - claims_before) as usize,
             cow_copies: (cows_after - cows_before) as usize,
+            migrated_in: plan.migrated_in.len(),
+            migrate_pages: plan.migrate_out_pages() + plan.migrate_in_pages(),
+            migrated_out,
         })
     }
 

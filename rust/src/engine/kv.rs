@@ -862,6 +862,101 @@ mod tests {
         assert_eq!(p.peak_in_use(), 4);
     }
 
+    // ---- Prefill→decode migration at the pool level ----
+    //
+    // A handoff is two pool operations: the source releases the
+    // departing sequence (private pages recycle, shared pages stay
+    // resident for surviving claimants), and the destination re-claims
+    // any locally published prefix before allocating only the private
+    // remainder — the page count the interconnect transfer is charged
+    // for.
+
+    #[test]
+    fn migration_source_release_recycles_private_pages_in_one_call() {
+        let mut p = KvPool::new(32, 16);
+        p.grow_to(1, 193).unwrap(); // whole-prompt admission: 13 pages
+        p.grow_to(1, 194).unwrap(); // the first token fits the tail page
+        assert_eq!(p.pages_of(1).len(), 13);
+        assert_eq!(p.release(1), 13, "the handoff frees the full table at once");
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.free_pages(), 32);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn migration_source_release_keeps_shared_pages_for_groupmates() {
+        let pt = 16;
+        let hashes = prompt_page_hashes(&vec![7; 64], pt); // 4 full pages
+        let mut p = KvPool::new(16, pt);
+        p.grow_to(1, 64).unwrap();
+        p.publish_prefix(1, &hashes);
+        assert_eq!(
+            p.claim_prefix(2, &hashes, 64),
+            64,
+            "a groupmate claims the whole published prompt"
+        );
+        // Seq 1 hands off: its pages decref but must stay resident —
+        // the migrating sequence does not strand its groupmate.
+        assert_eq!(p.release(1), 0, "shared pages with a live claimant must not free");
+        assert_eq!(p.in_use(), 4);
+        assert!(p.holds(2));
+        for &pid in p.pages_of(2) {
+            assert_eq!(p.page_refs(pid), 1);
+        }
+        // The last holder leaving frees them physically.
+        assert_eq!(p.release(2), 4);
+        assert_eq!(p.in_use(), 0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn migration_destination_claims_prefix_and_allocates_only_the_remainder() {
+        // The decode pool already serves a groupmate with the same
+        // 3-page published prefix; a migrated-in sequence (64 prompt
+        // tokens + 1 generated) claims those pages locally and
+        // allocates only the private remainder — exactly the pages the
+        // interconnect transfer is billed for.
+        let pt = 16;
+        let hashes = prompt_page_hashes(&vec![7; 64], pt);
+        let mut p = KvPool::new(16, pt);
+        p.grow_to(10, 48).unwrap();
+        p.publish_prefix(10, &hashes[..3]);
+        let before = p.in_use();
+        assert_eq!(p.claim_prefix(11, &hashes, 64), 48, "3 shared pages re-claimed");
+        p.grow_to(11, 65).unwrap();
+        assert_eq!(p.pages_of(11).len(), 5);
+        assert_eq!(
+            p.in_use() - before,
+            2,
+            "only the private remainder allocates (= pages pulled over the link)"
+        );
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn migration_churn_conserves_the_pool() {
+        // Admission/handoff churn across rounds: every release returns
+        // what the growth took, the free list and tables stay
+        // consistent, and nothing leaks.
+        let mut p = KvPool::new(64, 16);
+        for round in 0u64..8 {
+            for s in 0u64..4 {
+                p.grow_to(round * 4 + s, 100 + (s as usize) * 17).unwrap();
+            }
+            // Two sequences hand off mid-round, two more admit behind
+            // them, then the round drains.
+            p.release(round * 4);
+            p.release(round * 4 + 1);
+            p.grow_to(1000 + round, 200).unwrap();
+            p.release(round * 4 + 2);
+            p.release(round * 4 + 3);
+            p.release(1000 + round);
+            assert_eq!(p.in_use(), 0, "round {round} leaked pages");
+            assert_eq!(p.free_pages(), 64);
+            p.validate().unwrap();
+        }
+    }
+
     #[test]
     fn page_tables_are_disjoint_without_sharing() {
         let mut p = KvPool::new(6, 8);

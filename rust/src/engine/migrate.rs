@@ -1,0 +1,385 @@
+//! Prefill→decode KV-page handoff for disaggregated tiers.
+//!
+//! A tier running a `disagg` split (see [`crate::sched::plan::DisaggSpec`])
+//! serves every request on two engines: a prefill-role engine runs the
+//! chunked prefill and the first decode token, then hands the sequence —
+//! its payload, output-so-far, and private KV page count — to a
+//! decode-role engine chosen by least-loaded-pages. The pages
+//! themselves are modeled, not copied: private pages are "moved" over
+//! the replica-pair interconnect (the decode backend charges
+//! [`crate::perf::ReplicaModel::migrate_seconds`] through the
+//! [`crate::engine::StepBackend::migrate`] hook) while shared prefix
+//! pages re-claim through the decode pool's own trie and never travel.
+//!
+//! [`MigrationHub`] is the tier-local router between the two pools. It
+//! is deliberately dumb: a per-decoder FIFO plus a pages-based
+//! least-loaded pick at push time, a soft in-transit page budget that
+//! closes the hub under backlog (prefill engines then keep sequences
+//! local — disaggregation degrades to unified serving instead of
+//! queueing unboundedly), and a retire path that re-routes a dead
+//! decoder's queue to survivors so the exactly-once guarantee holds
+//! across mid-migration worker death and hot-swap scale-downs.
+//!
+//! This module is inside `cascadia-lint`'s determinism scope (the DES
+//! models the identical handoff): no wall-clock reads, no hash-order
+//! iteration. `Instant`s only ride through as carried request state.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::util::sync::{CondvarExt, LockExt};
+
+/// A sequence in transit from a prefill-role engine to a decode-role
+/// engine. Everything the destination needs to resume decoding travels
+/// with it; the source engine has already released its pages and
+/// forgotten the sequence by the time this value exists.
+#[derive(Debug)]
+pub struct MigratedSeq<T> {
+    /// Caller payload, returned untouched on completion.
+    pub payload: T,
+    pub prompt: Vec<i32>,
+    /// Tokens generated on the prefill side (the first decode token —
+    /// handoff happens at `generated <= 1`).
+    pub output: Vec<i32>,
+    pub max_new: usize,
+    /// Prompt page hashes at the tier's page size; the decode engine
+    /// re-claims shared prefix pages through its OWN trie from these
+    /// (shared pages never migrate).
+    pub hashes: Option<Arc<Vec<u64>>>,
+    /// Private (unshared) KV pages the handoff moves across the
+    /// interconnect — what the decode backend charges transit for.
+    pub pages: usize,
+    /// Remaining whole-request tokens when the source backend was
+    /// adapted (None for native step backends).
+    pub cached: Option<VecDeque<i32>>,
+    /// Global request id stamped on trace events.
+    pub trace_key: u64,
+    /// Carried timing state (set on the prefill side; the decode side
+    /// finishes the TTFT/e2e accounting against them).
+    pub submitted_at: Instant,
+    pub admitted_at: Option<Instant>,
+    pub first_token_at: Option<Instant>,
+}
+
+impl<T> MigratedSeq<T> {
+    /// Tokens already produced (prefill-side decode progress).
+    pub fn generated(&self) -> usize {
+        self.output.len()
+    }
+}
+
+#[derive(Debug)]
+struct DecoderSlot<T> {
+    queue: VecDeque<MigratedSeq<T>>,
+    /// Pages of the sequences queued here, not yet admitted.
+    queued_pages: usize,
+    /// Pool occupancy the decode worker last reported (its engine's
+    /// `kv_in_use()` after each step).
+    reported_pages: usize,
+    live: bool,
+}
+
+impl<T> DecoderSlot<T> {
+    fn load(&self) -> usize {
+        self.reported_pages + self.queued_pages
+    }
+}
+
+#[derive(Debug)]
+struct HubState<T> {
+    slots: Vec<DecoderSlot<T>>,
+    closed: bool,
+    /// Lifetime handoffs accepted / pages routed through the hub.
+    routed: u64,
+    routed_pages: u64,
+    /// Handoffs rejected (no live decoder, or pushed after close).
+    rejected: u64,
+}
+
+/// Tier-local router between a prefill worker pool and a decode worker
+/// pool. Shared by `Arc` across the tier's workers.
+pub struct MigrationHub<T> {
+    state: Mutex<HubState<T>>,
+    wake: Condvar,
+    /// Soft bound on total in-transit (queued, unadmitted) pages; at or
+    /// above it [`MigrationHub::open`] reports false and prefill
+    /// engines keep sequences local until the backlog drains.
+    budget_pages: usize,
+}
+
+impl<T> MigrationHub<T> {
+    /// `budget_pages` caps the pages queued across all decoders before
+    /// the hub closes to new handoffs (0 = unbounded).
+    pub fn new(budget_pages: usize) -> MigrationHub<T> {
+        MigrationHub {
+            state: Mutex::new(HubState {
+                slots: Vec::new(),
+                closed: false,
+                routed: 0,
+                routed_pages: 0,
+                rejected: 0,
+            }),
+            wake: Condvar::new(),
+            budget_pages: if budget_pages == 0 { usize::MAX } else { budget_pages },
+        }
+    }
+
+    /// Register one decode worker; returns its slot index (the handle
+    /// for [`MigrationHub::pop_wait`] / [`MigrationHub::report_pages`] /
+    /// [`MigrationHub::retire`]).
+    pub fn register_decoder(&self) -> usize {
+        let mut s = self.state.plock();
+        s.slots.push(DecoderSlot {
+            queue: VecDeque::new(),
+            queued_pages: 0,
+            reported_pages: 0,
+            live: true,
+        });
+        s.slots.len() - 1
+    }
+
+    /// Update a decoder's reported pool occupancy (feeds the
+    /// least-loaded pick).
+    pub fn report_pages(&self, idx: usize, pages: usize) {
+        let mut s = self.state.plock();
+        if let Some(slot) = s.slots.get_mut(idx) {
+            slot.reported_pages = pages;
+        }
+    }
+
+    /// Whether prefill engines should hand off right now: some decoder
+    /// is live and the in-transit backlog is under budget. A closed
+    /// hub makes prefill engines decode locally (unified degradation),
+    /// never drop or stall.
+    pub fn open(&self) -> bool {
+        let s = self.state.plock();
+        !s.closed
+            && s.slots.iter().any(|slot| slot.live)
+            && s.slots.iter().map(|slot| slot.queued_pages).sum::<usize>() < self.budget_pages
+    }
+
+    /// Route one migrated sequence to the least-loaded live decoder
+    /// (reported pool pages + queued pages; ties go to the lowest
+    /// index, so routing is deterministic for a given load picture).
+    /// `Err` hands the sequence back when no live decoder exists or the
+    /// hub is closed — the caller re-queues it for unified serving.
+    pub fn push(&self, m: MigratedSeq<T>) -> Result<(), MigratedSeq<T>> {
+        let mut s = self.state.plock();
+        if s.closed {
+            s.rejected += 1;
+            return Err(m);
+        }
+        let pick = s
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.live)
+            .min_by_key(|(i, slot)| (slot.load(), *i))
+            .map(|(i, _)| i);
+        match pick {
+            Some(i) => {
+                s.routed += 1;
+                s.routed_pages += m.pages as u64;
+                let slot = &mut s.slots[i];
+                slot.queued_pages += m.pages;
+                slot.queue.push_back(m);
+                drop(s);
+                self.wake.notify_all();
+                Ok(())
+            }
+            None => {
+                s.rejected += 1;
+                Err(m)
+            }
+        }
+    }
+
+    /// Drain decoder `idx`'s queue without blocking.
+    pub fn try_drain(&self, idx: usize) -> Vec<MigratedSeq<T>> {
+        let mut s = self.state.plock();
+        Self::drain_slot(&mut s, idx)
+    }
+
+    /// Block until decoder `idx` has queued work or the hub closes;
+    /// returns the drained queue (empty ⇒ closed and nothing pending —
+    /// the worker should exit).
+    pub fn pop_wait(&self, idx: usize) -> Vec<MigratedSeq<T>> {
+        let mut s = self.state.plock();
+        loop {
+            let drained = Self::drain_slot(&mut s, idx);
+            if !drained.is_empty() || s.closed {
+                return drained;
+            }
+            s = self.wake.pwait(s);
+        }
+    }
+
+    fn drain_slot(s: &mut HubState<T>, idx: usize) -> Vec<MigratedSeq<T>> {
+        match s.slots.get_mut(idx) {
+            Some(slot) => {
+                slot.queued_pages = 0;
+                slot.queue.drain(..).collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Take decoder `idx` out of rotation (worker death or hot-swap
+    /// scale-down) and re-route its queued sequences to surviving
+    /// decoders. Sequences that cannot be placed (no survivor) come
+    /// back for the caller to re-queue upstream — nothing is dropped.
+    pub fn retire(&self, idx: usize) -> Vec<MigratedSeq<T>> {
+        let orphans = {
+            let mut s = self.state.plock();
+            match s.slots.get_mut(idx) {
+                Some(slot) => {
+                    slot.live = false;
+                    slot.reported_pages = 0;
+                    slot.queued_pages = 0;
+                    slot.queue.drain(..).collect::<Vec<_>>()
+                }
+                None => Vec::new(),
+            }
+        };
+        let mut leftovers = Vec::new();
+        for m in orphans {
+            if let Err(back) = self.push(m) {
+                leftovers.push(back);
+            }
+        }
+        self.wake.notify_all();
+        leftovers
+    }
+
+    /// Close the hub: [`MigrationHub::open`] turns false, pushes are
+    /// rejected, and blocked decoders wake with their final drains.
+    pub fn close(&self) {
+        self.state.plock().closed = true;
+        self.wake.notify_all();
+    }
+
+    /// Live decoders currently registered.
+    pub fn n_live(&self) -> usize {
+        self.state.plock().slots.iter().filter(|s| s.live).count()
+    }
+
+    /// Total queued (in-transit, unadmitted) sequences.
+    pub fn n_queued(&self) -> usize {
+        self.state.plock().slots.iter().map(|s| s.queue.len()).sum()
+    }
+
+    /// Lifetime (handoffs routed, pages routed, handoffs rejected).
+    pub fn counts(&self) -> (u64, u64, u64) {
+        let s = self.state.plock();
+        (s.routed, s.routed_pages, s.rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mig(pages: usize) -> MigratedSeq<u32> {
+        MigratedSeq {
+            payload: 0,
+            prompt: vec![1; 8],
+            output: vec![7],
+            max_new: 4,
+            hashes: None,
+            pages,
+            cached: None,
+            trace_key: 0,
+            submitted_at: Instant::now(),
+            admitted_at: None,
+            first_token_at: None,
+        }
+    }
+
+    #[test]
+    fn push_routes_to_least_loaded_decoder() {
+        let hub: MigrationHub<u32> = MigrationHub::new(0);
+        let a = hub.register_decoder();
+        let b = hub.register_decoder();
+        hub.report_pages(a, 40);
+        hub.report_pages(b, 10);
+        hub.push(mig(4)).unwrap();
+        assert_eq!(hub.try_drain(a).len(), 0);
+        // Queued pages count as load: after 8 queued pages on b, a
+        // (40) still loses to b (10 + 8), so b keeps winning until its
+        // queue catches up.
+        hub.push(mig(8)).unwrap();
+        hub.report_pages(b, 40);
+        hub.push(mig(2)).unwrap();
+        let to_b = hub.try_drain(b);
+        let to_a = hub.try_drain(a);
+        assert_eq!(to_b.len(), 2);
+        assert_eq!(to_a.len(), 1, "load ties/reversals spill to the other decoder");
+        let (routed, pages, rejected) = hub.counts();
+        assert_eq!(routed, 3);
+        assert_eq!(pages, 14);
+        assert_eq!(rejected, 0);
+    }
+
+    #[test]
+    fn budget_closes_and_drain_reopens_the_hub() {
+        let hub: MigrationHub<u32> = MigrationHub::new(10);
+        let d = hub.register_decoder();
+        assert!(hub.open());
+        hub.push(mig(6)).unwrap();
+        assert!(hub.open(), "under budget stays open");
+        hub.push(mig(6)).unwrap();
+        assert!(!hub.open(), "12 queued pages ≥ budget 10 closes the hub");
+        // open() is advisory — push still lands (the prefill engine
+        // checks open() BEFORE starting a handoff).
+        assert_eq!(hub.try_drain(d).len(), 2);
+        assert!(hub.open(), "draining the backlog reopens the hub");
+    }
+
+    #[test]
+    fn no_live_decoder_bounces_the_sequence_back() {
+        let hub: MigrationHub<u32> = MigrationHub::new(0);
+        assert!(!hub.open(), "no decoders registered");
+        let back = hub.push(mig(3)).unwrap_err();
+        assert_eq!(back.pages, 3);
+        let d = hub.register_decoder();
+        assert!(hub.open());
+        let leftovers = hub.retire(d);
+        assert!(leftovers.is_empty(), "empty queue retires clean");
+        assert!(!hub.open(), "retiring the only decoder closes the hub");
+        assert!(hub.push(mig(3)).is_err());
+        assert_eq!(hub.counts().2, 2, "both bounces counted as rejected");
+    }
+
+    #[test]
+    fn retire_reroutes_queued_work_to_survivors() {
+        let hub: MigrationHub<u32> = MigrationHub::new(0);
+        let a = hub.register_decoder();
+        let b = hub.register_decoder();
+        hub.report_pages(b, 1_000); // everything routes to a first
+        hub.push(mig(1)).unwrap();
+        hub.push(mig(1)).unwrap();
+        assert_eq!(hub.n_queued(), 2);
+        let leftovers = hub.retire(a);
+        assert!(leftovers.is_empty(), "survivor b absorbs a's queue");
+        assert_eq!(hub.try_drain(b).len(), 2, "nothing lost mid-migration");
+        // Retiring the last decoder returns the orphans instead.
+        hub.push(mig(1)).unwrap();
+        let orphans = hub.retire(b);
+        assert_eq!(orphans.len(), 1, "unplaceable sequences come back to the caller");
+        assert_eq!(hub.n_live(), 0);
+    }
+
+    #[test]
+    fn close_wakes_blocked_decoders_and_rejects_pushes() {
+        let hub: Arc<MigrationHub<u32>> = Arc::new(MigrationHub::new(0));
+        let d = hub.register_decoder();
+        let h2 = Arc::clone(&hub);
+        let waiter = std::thread::spawn(move || h2.pop_wait(d));
+        hub.close();
+        let drained = waiter.join().unwrap();
+        assert!(drained.is_empty(), "closed + empty queue = clean exit signal");
+        assert!(hub.push(mig(1)).is_err(), "closed hub accepts nothing");
+        assert!(!hub.open());
+    }
+}

@@ -40,11 +40,13 @@
 pub mod bench;
 pub mod core;
 pub mod kv;
+pub mod migrate;
 pub mod scheduler;
 
 pub use bench::{run_serving_bench, BenchConfig, BenchReport, TracingReport};
 pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
 pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId, SwapShort};
+pub use migrate::{MigratedSeq, MigrationHub};
 pub use scheduler::{
-    ChunkTask, IterationPlan, IterationScheduler, PreemptionConfig, PreemptionMode,
+    ChunkTask, EngineRole, IterationPlan, IterationScheduler, PreemptionConfig, PreemptionMode,
 };

@@ -72,6 +72,30 @@ pub enum PreemptionMode {
     Swap,
 }
 
+/// Role of an engine (and its scheduler) inside a tier's worker pool.
+/// Unified is the only mode that existed before the prefill/decode
+/// split; the two split roles are what a `disagg`-annotated tier's
+/// plan deploys ([`crate::sched::DisaggSpec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineRole {
+    /// Serve both phases from one pool.
+    #[default]
+    Unified,
+    /// Chunked prefill only: a sequence that completes its prompt
+    /// (and produces its first token) hands off to a decode worker at
+    /// the next tick — its private KV pages migrate over the
+    /// interconnect ([`IterationPlan::migrated_out`]). When migration
+    /// is closed (no live decode worker, transfer budget exhausted)
+    /// the sequence simply keeps decoding locally: the pool degrades
+    /// to unified serving instead of wedging.
+    Prefill,
+    /// Decode only: admits prefilled sequences migrated from peer
+    /// prefill workers ([`IterationScheduler::enqueue_prefilled`]);
+    /// shared prefix pages are re-claimed from the local trie rather
+    /// than moved.
+    Decode,
+}
+
 /// Preemption policy plus the cost terms its per-victim choice
 /// compares (derive them from a [`crate::perf::ReplicaModel`] via
 /// [`crate::engine::EngineConfig`]; zeros make Swap mode always prefer
@@ -103,6 +127,10 @@ struct Seq {
     /// Prompt pages published into the prefix trie (or inherited via a
     /// full claim).
     published: bool,
+    /// Pinned to this worker: set on migrated-in sequences (they
+    /// already crossed the interconnect once) so a Prefill-role
+    /// scheduler that had to keep a handoff local never re-offers it.
+    decode_local: bool,
     /// Chained page hashes of the prompt (empty = sharing disabled).
     hashes: Vec<u64>,
 }
@@ -152,6 +180,17 @@ pub struct IterationPlan {
     /// each moved back. Resumed decoders decode this very tick;
     /// resumed partial prefills continue at their checkpoint.
     pub swapped_in: Vec<(SeqId, usize)>,
+    /// Sequences handed off to a decode worker this tick (Prefill role
+    /// only), with the count of private pages each sends over the
+    /// interconnect. Their pages and bookkeeping are already gone from
+    /// this scheduler; the caller owns routing them to a peer
+    /// ([`IterationScheduler::enqueue_prefilled`] on the destination).
+    pub migrated_out: Vec<(SeqId, usize)>,
+    /// Migrated sequences admitted this tick, with the private pages
+    /// each actually pulled over the interconnect (shared prefix pages
+    /// were re-claimed from the local trie instead of moving). They
+    /// decode this very tick.
+    pub migrated_in: Vec<(SeqId, usize)>,
     /// Forced pool expansions this tick (0 unless the pool was smaller
     /// than a single sequence).
     pub forced_expansions: usize,
@@ -186,6 +225,16 @@ impl IterationPlan {
     pub fn swap_in_pages(&self) -> usize {
         self.swapped_in.iter().map(|&(_, p)| p).sum()
     }
+
+    /// KV pages sent to peer decode workers this tick.
+    pub fn migrate_out_pages(&self) -> usize {
+        self.migrated_out.iter().map(|&(_, p)| p).sum()
+    }
+
+    /// KV pages received from peer prefill workers this tick.
+    pub fn migrate_in_pages(&self) -> usize {
+        self.migrated_in.iter().map(|&(_, p)| p).sum()
+    }
 }
 
 /// Scheduler invariant: every id in `waiting`/`running`/`swapped_q` has
@@ -210,15 +259,28 @@ pub struct IterationScheduler {
     /// Sequences parked in host swap space, oldest eviction first;
     /// they resume ahead of new admissions.
     swapped_q: VecDeque<SeqId>,
+    /// Prefilled sequences migrated from a peer prefill worker, FIFO;
+    /// they admit ahead of fresh arrivals (their prefill compute is
+    /// already spent) and behind swap resumes.
+    migrate_q: VecDeque<SeqId>,
     seqs: BTreeMap<SeqId, Seq>,
     max_running: usize,
     /// Prefill token budget per iteration (`usize::MAX` = whole-prompt
     /// admission, the pre-chunking discipline).
     prefill_chunk: usize,
     preemption: PreemptionConfig,
+    role: EngineRole,
+    /// Whether a Prefill-role scheduler may hand sequences off this
+    /// tick (the caller gates it on live decode capacity); closed,
+    /// finished prefills keep decoding locally — unified degradation.
+    migration_open: bool,
     preemptions: u64,
     forced_expansions: u64,
     prefix_hit_tokens: u64,
+    migrations_out: u64,
+    migrations_in: u64,
+    migrate_pages_out: u64,
+    migrate_pages_in: u64,
 }
 
 impl IterationScheduler {
@@ -230,14 +292,40 @@ impl IterationScheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             swapped_q: VecDeque::new(),
+            migrate_q: VecDeque::new(),
             seqs: BTreeMap::new(),
             max_running: max_running.max(1),
             prefill_chunk: usize::MAX,
             preemption: PreemptionConfig::default(),
+            role: EngineRole::Unified,
+            migration_open: false,
             preemptions: 0,
             forced_expansions: 0,
             prefix_hit_tokens: 0,
+            migrations_out: 0,
+            migrations_in: 0,
+            migrate_pages_out: 0,
+            migrate_pages_in: 0,
         }
+    }
+
+    /// Assign this scheduler's role in a disaggregated tier. A Prefill
+    /// scheduler starts with migration open (the caller may close it
+    /// per tick via [`IterationScheduler::set_migration_open`]).
+    pub fn set_role(&mut self, role: EngineRole) {
+        self.role = role;
+        self.migration_open = role == EngineRole::Prefill;
+    }
+
+    pub fn role(&self) -> EngineRole {
+        self.role
+    }
+
+    /// Gate this tick's prefill→decode handoffs: closed, sequences that
+    /// finished prefill decode locally instead (unified degradation).
+    /// No effect outside the Prefill role.
+    pub fn set_migration_open(&mut self, open: bool) {
+        self.migration_open = self.role == EngineRole::Prefill && open;
     }
 
     /// Select the eviction policy and its cost terms. Swap mode sizes
@@ -289,15 +377,54 @@ impl IterationScheduler {
                 generated: 0,
                 prefilled: 0,
                 published: false,
+                decode_local: false,
                 hashes,
             },
         );
         self.waiting.push_back(id);
     }
 
-    /// Waiting + running + swapped sequences.
+    /// Track a sequence whose prefill already ran on a peer prefill
+    /// worker (the migration path): its whole prompt counts as
+    /// prefilled, `generated` carries the tokens produced so far (the
+    /// prefill side's first token at least), and it queues for
+    /// admission ahead of fresh arrivals. At admission the pool claims
+    /// any locally published prefix first — only the unclaimed private
+    /// remainder is accounted as pages pulled over the interconnect
+    /// ([`IterationPlan::migrated_in`]).
+    pub fn enqueue_prefilled(
+        &mut self,
+        id: SeqId,
+        prompt_tokens: usize,
+        generated: usize,
+        max_new: usize,
+        hashes: Vec<u64>,
+    ) {
+        debug_assert!(!self.seqs.contains_key(&id), "duplicate sequence id");
+        let prompt_tokens = prompt_tokens.max(1);
+        self.seqs.insert(
+            id,
+            Seq {
+                prompt_tokens,
+                max_new: max_new.max(1),
+                generated,
+                prefilled: prompt_tokens,
+                published: false,
+                decode_local: true,
+                hashes,
+            },
+        );
+        self.migrate_q.push_back(id);
+    }
+
+    /// Waiting + running + swapped + migration-queued sequences.
     pub fn n_seqs(&self) -> usize {
-        self.waiting.len() + self.running.len() + self.swapped_q.len()
+        self.waiting.len() + self.running.len() + self.swapped_q.len() + self.migrate_q.len()
+    }
+
+    /// Migrated-in sequences still waiting for admission.
+    pub fn n_migrate_queued(&self) -> usize {
+        self.migrate_q.len()
     }
 
     /// Sequences currently parked in host swap space.
@@ -357,6 +484,12 @@ impl IterationScheduler {
     /// re-prefilled, over the scheduler's lifetime.
     pub fn prefix_hit_tokens(&self) -> u64 {
         self.prefix_hit_tokens
+    }
+
+    /// Lifetime (handed off, admitted, pages sent, pages received) of
+    /// the prefill→decode migration path.
+    pub fn migrate_counts(&self) -> (u64, u64, u64, u64) {
+        (self.migrations_out, self.migrations_in, self.migrate_pages_out, self.migrate_pages_in)
     }
 
     /// Preempt `id` with recompute: free its pages, reset its progress
@@ -464,6 +597,35 @@ impl IterationScheduler {
     pub fn next_iteration(&mut self) -> IterationPlan {
         let mut plan = IterationPlan::default();
 
+        // -1. Prefill-role handoff: sequences whose prefill completed
+        // last tick (they produced their first token there) leave for a
+        // decode worker instead of decoding here. Their pages are
+        // released now — only the private (unshared) count crosses the
+        // interconnect; the decode side re-claims shared prefix pages
+        // from its own trie. With migration closed, or for sequences
+        // pinned local (`decode_local`), this stage is a no-op and the
+        // sequence decodes below exactly as a unified pool would.
+        if self.role == EngineRole::Prefill && self.migration_open {
+            let ready: Vec<SeqId> = self
+                .running
+                .iter()
+                .copied()
+                .filter(|id| {
+                    let s = &self.seqs[id];
+                    s.decoding() && s.generated <= 1 && !s.decode_local
+                })
+                .collect();
+            for id in ready {
+                let (_, owned) = self.pool.swap_split(id);
+                self.pool.release(id);
+                self.running.retain(|&r| r != id);
+                self.seqs.remove(&id);
+                plan.migrated_out.push((id, owned));
+                self.migrations_out += 1;
+                self.migrate_pages_out += owned as u64;
+            }
+        }
+
         // 0. Publish prompt pages of sequences whose prefill completed
         // in an earlier tick (their KV is computed by now).
         let publishable: Vec<SeqId> = self
@@ -558,6 +720,46 @@ impl IterationScheduler {
             }
         }
 
+        // 1.75. Admit migrated-in sequences (prefill already done on a
+        // peer worker), FIFO, after swap resumes and ahead of fresh
+        // arrivals. Admission claims any locally published prefix
+        // first, so only the private remainder is charged as
+        // interconnect transfer; the sequence decodes this very tick.
+        // Like swap resumes, a head that cannot fit stays queued
+        // (never evicts a runner) unless nothing runs at all.
+        while let Some(&head) = self.migrate_q.front() {
+            if self.running.len() >= self.max_running {
+                break;
+            }
+            let s = &self.seqs[&head];
+            let prompt_tokens = s.prompt_tokens;
+            let need = s.prompt_tokens + s.generated + 1;
+            let hashes = s.hashes.clone();
+            if !hashes.is_empty() && !self.pool.holds(head) {
+                // Shared-prefix re-claim: pages the local trie already
+                // holds never cross the interconnect.
+                self.pool.claim_prefix(head, &hashes, prompt_tokens);
+            }
+            match self.pool.grow_to(head, need) {
+                Ok(()) => {
+                    self.migrate_q.pop_front();
+                    self.running.push(head);
+                    let (_, owned) = self.pool.swap_split(head);
+                    plan.migrated_in.push((head, owned));
+                    self.migrations_in += 1;
+                    self.migrate_pages_in += owned as u64;
+                }
+                Err(short) => {
+                    self.pool.retract_claim(head);
+                    if self.running.is_empty() {
+                        self.force_expand(short.0, &mut plan);
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+
         // Surviving decoders advance one token this tick.
         plan.decode = self
             .running
@@ -595,9 +797,13 @@ impl IterationScheduler {
 
         // 3. Admit strictly FIFO while prefix-claimed-plus-first-chunk
         // contexts fit and budget remains. Parked sequences outrank the
-        // wait queue: while any is still waiting to resume, admissions
-        // hold off so fresh arrivals cannot starve checkpointed work.
-        while self.running.len() < self.max_running && self.swapped_q.is_empty() {
+        // wait queue: while any is still waiting to resume (from host
+        // swap or a pending migration), admissions hold off so fresh
+        // arrivals cannot starve checkpointed work.
+        while self.running.len() < self.max_running
+            && self.swapped_q.is_empty()
+            && self.migrate_q.is_empty()
+        {
             let Some(&head) = self.waiting.front() else { break };
             let prompt_tokens = self.seqs[&head].prompt_tokens;
             let claimed = if self.seqs[&head].hashes.is_empty() || self.pool.holds(head) {
@@ -686,18 +892,21 @@ impl IterationScheduler {
             let _ = self.waiting.remove(pos);
         } else if let Some(pos) = self.swapped_q.iter().position(|&r| r == id) {
             let _ = self.swapped_q.remove(pos);
+        } else if let Some(pos) = self.migrate_q.iter().position(|&r| r == id) {
+            let _ = self.migrate_q.remove(pos);
         }
         self.seqs.remove(&id);
     }
 
     /// Remove and return every tracked sequence (waiting first, then
-    /// swapped, then running, each FIFO), freeing all pages and host
-    /// swap space — the worker-death path. No parked sequence is ever
-    /// orphaned: a drained swapped id is handed back exactly like a
-    /// waiting one.
+    /// swapped, then migration-queued, then running, each FIFO),
+    /// freeing all pages and host swap space — the worker-death path.
+    /// No parked sequence is ever orphaned: a drained swapped or
+    /// migration-queued id is handed back exactly like a waiting one.
     pub fn drain_ids(&mut self) -> Vec<SeqId> {
         let mut out: Vec<SeqId> = self.waiting.drain(..).collect();
         out.extend(self.swapped_q.drain(..));
+        out.extend(self.migrate_q.drain(..));
         out.extend(self.running.drain(..));
         for &id in &out {
             self.pool.release(id);
@@ -1337,5 +1546,137 @@ mod tests {
         assert_eq!(s.pool().in_use(), 0, "refcount leak");
         assert_eq!(s.pool().trie_len(), 0, "trie leak");
         assert_eq!(s.pool().free_pages(), free0, "free list must return to initial");
+    }
+
+    // ---- Prefill/decode migration ----
+
+    #[test]
+    fn prefill_role_hands_off_after_first_token() {
+        let mut p = sched(64, 16, 8);
+        p.set_role(EngineRole::Prefill);
+        let mut d = sched(64, 16, 8);
+        d.set_role(EngineRole::Decode);
+        p.enqueue(0, 48, 4);
+        let t1 = p.next_iteration();
+        assert_eq!(t1.admitted, vec![0]);
+        assert!(t1.prefill.iter().any(|c| c.id == 0 && c.last));
+        assert!(!p.advance(0)); // first token produced on the prefill side
+        // Next tick: the finished prefill leaves instead of decoding.
+        let t2 = p.next_iteration();
+        assert_eq!(t2.migrated_out.len(), 1);
+        let (id, pages) = t2.migrated_out[0];
+        assert_eq!(id, 0);
+        assert!(pages > 0);
+        assert!(t2.decode.is_empty());
+        assert!(p.is_idle(), "the prefill side forgets the sequence");
+        assert_eq!(p.pool().in_use(), 0, "handoff releases every page");
+        p.pool().validate().unwrap();
+        // Decode side: admits ahead of fresh work and decodes this tick.
+        d.enqueue_prefilled(0, 48, 1, 4, Vec::new());
+        let t3 = d.next_iteration();
+        assert_eq!(t3.migrated_in.len(), 1);
+        assert!(t3.migrated_in[0].1 > 0, "private pages crossed the link");
+        assert_eq!(t3.decode, vec![0]);
+        let (order, _) = run_to_completion(&mut d, 16);
+        assert_eq!(order, vec![0]);
+        d.pool().validate().unwrap();
+        assert_eq!(d.pool().in_use(), 0);
+        let (outs, _, pages_out, _) = p.migrate_counts();
+        let (_, ins, _, pages_in) = d.migrate_counts();
+        assert_eq!((outs, ins), (1, 1));
+        assert_eq!(pages_out, pages_in, "both sides account the same transfer");
+    }
+
+    #[test]
+    fn migrated_sequences_reclaim_shared_prefix_from_decode_trie() {
+        let pt = 16;
+        let h = hashes_of(3, 48, pt);
+        let mut d = sched(64, pt, 8);
+        d.set_role(EngineRole::Decode);
+        // First migrant carries everything; once resident it publishes
+        // its prompt pages into the decode-side trie.
+        d.enqueue_prefilled(10, 48, 1, 8, h.clone());
+        let t1 = d.next_iteration();
+        assert_eq!(t1.migrated_in.len(), 1);
+        let first_pages = t1.migrated_in[0].1;
+        assert!(first_pages >= 3);
+        assert!(!d.advance(10));
+        let _ = d.next_iteration(); // publish tick
+        // Second migrant with the same prompt: the prefix re-claims
+        // from the local trie, only the private remainder crosses the
+        // link.
+        d.enqueue_prefilled(11, 48, 1, 8, h);
+        let t3 = d.next_iteration();
+        let (_, pages) = t3.migrated_in.iter().copied().find(|&(id, _)| id == 11).unwrap();
+        assert!(
+            pages < first_pages,
+            "shared prefix pages must not move: {pages} vs {first_pages}"
+        );
+        assert!(d.pool().shared_claims() > 0);
+        d.retire(10);
+        d.retire(11);
+        d.pool().validate().unwrap();
+        assert_eq!(d.pool().in_use(), 0);
+        assert_eq!(d.pool().trie_len(), 0);
+    }
+
+    #[test]
+    fn closed_migration_degrades_to_unified_decode() {
+        let mut p = sched(64, 16, 8);
+        p.set_role(EngineRole::Prefill);
+        p.set_migration_open(false); // no live decode worker
+        p.enqueue(0, 32, 3);
+        let (order, _) = run_to_completion(&mut p, 32);
+        assert_eq!(order, vec![0], "the sequence completes locally");
+        let (outs, ins, _, _) = p.migrate_counts();
+        assert_eq!((outs, ins), (0, 0));
+        // Re-opening later must not re-offer a sequence that already
+        // decoded past its first token.
+        let mut q = sched(64, 16, 8);
+        q.set_role(EngineRole::Prefill);
+        q.set_migration_open(false);
+        q.enqueue(1, 32, 8);
+        let _ = q.next_iteration(); // prefill (+ first token)
+        assert!(!q.advance(1));
+        let _ = q.next_iteration(); // decodes locally, generated -> 2
+        assert!(!q.advance(1));
+        q.set_migration_open(true);
+        let t = q.next_iteration();
+        assert!(t.migrated_out.is_empty(), "mid-decode sequences stay local");
+        assert_eq!(t.decode, vec![1]);
+    }
+
+    #[test]
+    fn returned_handoffs_stay_local_on_the_prefill_worker() {
+        // A handoff the hub could not place comes back via
+        // enqueue_prefilled: it is pinned local and never re-offered,
+        // even with migration open.
+        let mut p = sched(64, 16, 8);
+        p.set_role(EngineRole::Prefill);
+        p.enqueue_prefilled(5, 32, 1, 3, Vec::new());
+        let t = p.next_iteration();
+        assert_eq!(t.migrated_in.len(), 1);
+        assert!(t.migrated_out.is_empty());
+        let (order, _) = run_to_completion(&mut p, 16);
+        assert_eq!(order, vec![5]);
+        let (outs, _, _, _) = p.migrate_counts();
+        assert_eq!(outs, 0);
+    }
+
+    #[test]
+    fn drain_returns_migration_queued_sequences() {
+        let mut d = sched(8, 16, 4);
+        d.set_role(EngineRole::Decode);
+        d.enqueue_prefilled(1, 64, 1, 4, Vec::new());
+        d.enqueue_prefilled(2, 64, 1, 4, Vec::new());
+        let t = d.next_iteration();
+        // 64+2 tokens = 5 pages each: the second migrant cannot fit
+        // while the first runs — it stays queued, never evicting.
+        assert_eq!(t.migrated_in.len(), 1);
+        assert_eq!(d.n_migrate_queued(), 1);
+        let drained = d.drain_ids();
+        assert_eq!(drained, vec![2, 1], "queued migrants drain like waiting work");
+        assert_eq!(d.pool().in_use(), 0);
+        d.pool().validate().unwrap();
     }
 }

@@ -862,6 +862,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         report.swap.win,
     );
     println!(
+        "disaggregation ({} reqs, {}-token prompts, {} decode steps): \
+         p95 TTFT unified {:.2}s -> split {:.2}s ({:.2}x) | \
+         migrations {} ({} pages) | win {}",
+        report.disagg.requests,
+        report.disagg.prompt_tokens,
+        report.disagg.decode_steps,
+        report.disagg.unified_p95_ttft_s,
+        report.disagg.disagg_p95_ttft_s,
+        report.disagg.ttft_p95_speedup,
+        report.disagg.migrations,
+        report.disagg.migrate_pages,
+        report.disagg.win,
+    );
+    println!(
         "tracing overhead ({} reqs): p95 off {:.2}s -> on {:.2}s ({:+.1}%) | \
          events {} | dropped {} | win {}",
         report.tracing.requests,
@@ -927,6 +941,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             report.swap.recompute_p95_s,
             report.swap.swap_prefill_tokens,
             report.swap.recompute_prefill_tokens
+        );
+    }
+    if !report.disagg.win {
+        bail!(
+            "the prefill/decode split did not beat unified serving \
+             (p95 TTFT {:.3}s split vs {:.3}s unified, {} migrations)",
+            report.disagg.disagg_p95_ttft_s,
+            report.disagg.unified_p95_ttft_s,
+            report.disagg.migrations
         );
     }
     if !report.tracing.win {

@@ -37,6 +37,8 @@
 //! | `preempt`       | engine / DES plan | recompute eviction (`a` = 0); swap evictions appear as `swap_out` instead |
 //! | `swap_out`      | engine / DES plan | `a` = KV pages moved to host |
 //! | `swap_in`       | engine / DES plan | `a` = KV pages moved back |
+//! | `migrate_out`   | engine / DES plan | prefill→decode handoff left this engine; `a` = private KV pages sent over the interconnect |
+//! | `migrate_in`    | engine / DES plan | migrated sequence admitted on the decode side; `a` = private KV pages received (shared prefix pages re-claim locally and are not counted) |
 //! | `escalate`      | server router     | `a` = from tier, `b` = to tier |
 //! | `hot_swap_applied` | serve loop     | `a` = swap ordinal; `req` = [`REQ_NONE`] |
 //! | `finished`      | terminal authority| `fa` = TTFT s, `fb` = e2e latency s |
@@ -110,6 +112,8 @@ pub enum EventKind {
     Preempt,
     SwapOut,
     SwapIn,
+    MigrateOut,
+    MigrateIn,
     Escalate,
     HotSwapApplied,
     Finished,
@@ -128,6 +132,8 @@ impl EventKind {
             EventKind::Preempt => "preempt",
             EventKind::SwapOut => "swap_out",
             EventKind::SwapIn => "swap_in",
+            EventKind::MigrateOut => "migrate_out",
+            EventKind::MigrateIn => "migrate_in",
             EventKind::Escalate => "escalate",
             EventKind::HotSwapApplied => "hot_swap_applied",
             EventKind::Finished => "finished",
@@ -250,6 +256,14 @@ pub fn emit_plan_events(
     plan: &IterationPlan,
     key_of: impl Fn(SeqId) -> u64,
 ) {
+    // Handoffs leave before anything else happens in a tick (scheduler
+    // stage -1), so they lead the emission order.
+    for &(id, pages) in &plan.migrated_out {
+        recorder.emit(
+            shard,
+            Event { a: pages as u64, ..Event::at(t, key_of(id), tier, EventKind::MigrateOut) },
+        );
+    }
     for &id in &plan.preempted {
         recorder.emit(shard, Event::at(t, key_of(id), tier, EventKind::Preempt));
     }
@@ -263,6 +277,14 @@ pub fn emit_plan_events(
         recorder.emit(
             shard,
             Event { a: pages as u64, ..Event::at(t, key_of(id), tier, EventKind::SwapIn) },
+        );
+    }
+    // Migrated-in admissions land after swap resumes (scheduler stage
+    // 1.75) and decode this very tick — their decode_iter follows below.
+    for &(id, pages) in &plan.migrated_in {
+        recorder.emit(
+            shard,
+            Event { a: pages as u64, ..Event::at(t, key_of(id), tier, EventKind::MigrateIn) },
         );
     }
     for chunk in &plan.prefill {
@@ -302,6 +324,8 @@ mod tests {
             EventKind::Preempt,
             EventKind::SwapOut,
             EventKind::SwapIn,
+            EventKind::MigrateOut,
+            EventKind::MigrateIn,
             EventKind::Escalate,
             EventKind::HotSwapApplied,
             EventKind::Finished,
@@ -323,6 +347,8 @@ mod tests {
             preempted: vec![2],
             swapped_out: vec![(3, 4)],
             swapped_in: vec![(4, 2)],
+            migrated_out: vec![(5, 3)],
+            migrated_in: vec![(6, 2)],
             forced_expansions: 0,
         };
         let rec_a = TraceRecorder::new(1, 64);
@@ -331,7 +357,7 @@ mod tests {
         emit_plan_events(&rec_b, 0, 99.0, 0, &plan, |id| id as u64 + 100);
         let a = rec_a.snapshot();
         let b = rec_b.snapshot();
-        assert_eq!(a.len(), 5, "one event per plan entry (admitted itself is not an event)");
+        assert_eq!(a.len(), 7, "one event per plan entry (admitted itself is not an event)");
         let sig_a: Vec<_> = a.iter().map(|e| (e.req, e.signature())).collect();
         let sig_b: Vec<_> = b.iter().map(|e| (e.req, e.signature())).collect();
         assert_eq!(sig_a, sig_b, "signatures ignore timestamps");
@@ -342,5 +368,11 @@ mod tests {
         // Decode records the tick's batch size (prefill + decode).
         let dec = a.iter().find(|e| e.kind == EventKind::DecodeIter).unwrap();
         assert_eq!(dec.a, 2);
+        // Migration events lead (out) and trail the swap block (in),
+        // each carrying its private page count.
+        assert_eq!(a[0].kind, EventKind::MigrateOut);
+        assert_eq!((a[0].req, a[0].a), (105, 3));
+        let min = a.iter().find(|e| e.kind == EventKind::MigrateIn).unwrap();
+        assert_eq!((min.req, min.a), (106, 2));
     }
 }

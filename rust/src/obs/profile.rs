@@ -17,6 +17,7 @@
 //! | `decode_iter → *` | decode |
 //! | `preempt → *` | preempt-stall |
 //! | `swap_out/swap_in → *` | swap-stall |
+//! | `migrate_out/migrate_in → *` | migration-transit (prefill→decode handoff: interconnect transfer + decode-side admission wait) |
 //! | `admitted/queue_enter/queue_exit → prefill_chunk/decode_iter/swap_in` | queue (engine admission wait) |
 //! | `admitted/queue_enter/queue_exit → route_decision/finished` | decode (lockstep/wire path: one opaque generate per tier) |
 //! | `escalate → *` | escalation-transit |
@@ -52,7 +53,7 @@ use super::alert::{Alert, AlertEvaluator, AlertPolicy, TierSignals};
 use super::{Event, EventKind, ACTION_ESCALATE};
 
 /// Number of attribution phases.
-pub const N_PHASES: usize = 7;
+pub const N_PHASES: usize = 8;
 
 /// The waterfall phases. Order is the rendering order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -62,6 +63,7 @@ pub enum Phase {
     Decode,
     PreemptStall,
     SwapStall,
+    MigrationTransit,
     EscalationTransit,
     Other,
 }
@@ -73,6 +75,7 @@ impl Phase {
         Phase::Decode,
         Phase::PreemptStall,
         Phase::SwapStall,
+        Phase::MigrationTransit,
         Phase::EscalationTransit,
         Phase::Other,
     ];
@@ -85,6 +88,7 @@ impl Phase {
             Phase::Decode => "decode",
             Phase::PreemptStall => "preempt_stall",
             Phase::SwapStall => "swap_stall",
+            Phase::MigrationTransit => "migration_transit",
             Phase::EscalationTransit => "escalation_transit",
             Phase::Other => "other",
         }
@@ -110,6 +114,11 @@ fn gap_phase(prev: EventKind, next: EventKind, in_transit: bool) -> Phase {
         K::DecodeIter => Phase::Decode,
         K::Preempt => Phase::PreemptStall,
         K::SwapOut | K::SwapIn => Phase::SwapStall,
+        // A handoff leaves the prefill engine at `migrate_out` and is
+        // resident again at `migrate_in` (which decodes the same tick)
+        // — everything between is interconnect transit plus
+        // decode-side admission wait.
+        K::MigrateOut | K::MigrateIn => Phase::MigrationTransit,
         K::Escalate => Phase::EscalationTransit,
         K::Admitted | K::QueueEnter | K::QueueExit => match next {
             K::RouteDecision | K::Finished => Phase::Decode,
@@ -1009,6 +1018,36 @@ mod tests {
         // swap_out→swap_in (3s) + swap_in→decode (1s) are stall.
         assert!((w.phases[Phase::SwapStall.idx()] - 4.0).abs() < 1e-9);
         assert!((w.total_s() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migration_gaps_are_migration_transit() {
+        // A disaggregated handoff: prefill + first token on the
+        // prefill engine, migrate_out → migrate_in over the
+        // interconnect, then decode on the decode engine.
+        let events = vec![
+            ev(1, 0.0, 5, 1, EventKind::PrefillChunk),
+            Event { a: 3, ..ev(2, 1.0, 5, 1, EventKind::MigrateOut) },
+            Event { a: 3, ..ev(3, 1.5, 5, 1, EventKind::MigrateIn) },
+            ev(4, 2.0, 5, 1, EventKind::DecodeIter),
+            ev(5, 3.0, 5, 1, EventKind::DecodeIter),
+            Event { fa: 0.5, fb: 4.0, ..ev(6, 4.0, 5, 1, EventKind::Finished) },
+        ];
+        let agg = ProfileAggregator::fold(ProfileConfig::default(), &events);
+        let w = &agg.waterfalls()[0];
+        // migrate_out→migrate_in (0.5s) + migrate_in→decode (0.5s).
+        assert!((w.phases[Phase::MigrationTransit.idx()] - 1.0).abs() < 1e-9);
+        assert!((w.phases[Phase::Prefill.idx()] - 1.0).abs() < 1e-9);
+        assert!((w.phases[Phase::Decode.idx()] - 2.0).abs() < 1e-9);
+        assert!((w.total_s() - 4.0).abs() < 1e-9, "partition stays exact");
+        assert_eq!(
+            w.signature,
+            vec![
+                (Phase::Prefill, 1),
+                (Phase::MigrationTransit, 2),
+                (Phase::Decode, 2)
+            ]
+        );
     }
 
     #[test]

@@ -79,6 +79,13 @@ pub struct ReplicaModel {
     /// PCIe alpha-beta terms for swap-to-host page moves.
     pcie_alpha: f64,
     pcie_beta_bw: f64,
+    /// Alpha-beta terms of the link between two replicas of this
+    /// design — the path a prefill→decode KV-page migration crosses.
+    /// Derived from the interconnect a *pair* of replica groups spans:
+    /// NVLink when both fit one server, the inter-server fabric
+    /// otherwise.
+    migrate_alpha: f64,
+    migrate_beta_bw: f64,
     /// Pinned host memory backing swapped KV (whole replica group,
     /// bytes).
     host_swap_bytes: f64,
@@ -177,6 +184,8 @@ impl ReplicaModel {
             kv_budget_bytes: kv_budget,
             pcie_alpha: cluster.pcie.alpha,
             pcie_beta_bw: cluster.pcie.beta_bw,
+            migrate_alpha: cluster.link_for_group(2 * group).alpha,
+            migrate_beta_bw: cluster.link_for_group(2 * group).beta_bw,
             host_swap_bytes: cluster.host_swap_bytes_per_gpu * group as f64,
             pp_latency_factor: pp as f64,
             // Pipelining recovers most of the stage parallelism;
@@ -364,6 +373,26 @@ impl ReplicaModel {
         self.prefill_s_per_token
     }
 
+    /// Seconds to move one KV page of `page_tokens` tokens to a peer
+    /// replica over the modeled interconnect — the per-page cost of a
+    /// prefill→decode migration. Same alpha-beta shape as
+    /// [`ReplicaModel::page_swap_seconds`] but over the replica-pair
+    /// link instead of PCIe (migration *is* swap with a peer-device
+    /// destination), so the inner solver, the DES, and the serve-time
+    /// transfer charge all price the handoff from this one formula.
+    pub fn page_migrate_seconds(&self, page_tokens: usize) -> f64 {
+        self.migrate_alpha + self.kv_page_bytes(page_tokens) / self.migrate_beta_bw.max(1.0)
+    }
+
+    /// One-way migration cost of a sequence holding `private_tokens`
+    /// of unshared context: pages move once (no round trip — the
+    /// decode side re-claims shared prefix pages from its own trie
+    /// rather than pulling them over the link).
+    pub fn migrate_seconds(&self, private_tokens: f64, page_tokens: usize) -> f64 {
+        self.kv_pages_for(private_tokens, page_tokens) as f64
+            * self.page_migrate_seconds(page_tokens)
+    }
+
     /// Full swap cost of evicting-and-resuming a `ctx_tokens` victim:
     /// two PCIe moves (out + in) of every page its context occupies.
     /// THE per-victim swap cost — `sched::inner`'s plan-level choice,
@@ -543,6 +572,30 @@ mod tests {
         // space can park everything the pool ever held.
         assert!(r.swap_pages_total(DEFAULT_PAGE_TOKENS) > r.kv_pages_total(DEFAULT_PAGE_TOKENS));
         assert!(r.kv_page_bytes(DEFAULT_PAGE_TOKENS) > 0.0);
+    }
+
+    #[test]
+    fn migration_prices_the_replica_pair_link() {
+        let m = &llama_cascade()[0];
+        // TP1: a prefill/decode replica pair fits one server, so
+        // migration rides NVLink and beats the PCIe swap path.
+        let r = ReplicaModel::new(m, &cluster(), 1, 1, 768.0);
+        let mig = r.page_migrate_seconds(DEFAULT_PAGE_TOKENS);
+        assert!(mig > 0.0);
+        assert!(
+            mig < r.page_swap_seconds(DEFAULT_PAGE_TOKENS),
+            "intra-server migration should beat PCIe swap"
+        );
+        // TP8 on an 8-GPU server: the peer replica lives on another
+        // server, so migration crosses the slower inter-server fabric.
+        let wide = ReplicaModel::new(m, &cluster(), 8, 1, 768.0);
+        assert!(
+            wide.page_migrate_seconds(DEFAULT_PAGE_TOKENS)
+                > r.page_migrate_seconds(DEFAULT_PAGE_TOKENS)
+        );
+        // One-way cost: pages move once, shared prefix never moves.
+        let one_way = r.migrate_seconds(256.0, DEFAULT_PAGE_TOKENS);
+        assert!((one_way - 16.0 * mig).abs() < 1e-12);
     }
 
     #[test]

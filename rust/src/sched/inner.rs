@@ -45,7 +45,8 @@ use crate::milp::{MilpProblem, Rel};
 use crate::models::ModelSpec;
 use crate::parallel::{enumerate_strategies, Strategy};
 use crate::perf::{ReplicaModel, Workload, DEFAULT_PAGE_TOKENS, DEFAULT_PREFILL_CHUNK};
-use crate::sim::analytic::{EngineSemantics, OVERLOAD_LATENCY};
+use crate::sched::plan::DisaggSpec;
+use crate::sim::analytic::{estimate_p95_disagg, EngineSemantics, OVERLOAD_LATENCY};
 
 /// Options for the inner solver.
 #[derive(Debug, Clone)]
@@ -136,11 +137,21 @@ pub struct InnerSolution {
     pub max_latency: f64,
     /// Branch-and-bound nodes (0 when the DP answered).
     pub milp_nodes: usize,
-    /// Eviction discipline chosen for this design point: swap-to-host
-    /// when the bottleneck tier's per-victim PCIe round trip undercuts
-    /// its recompute cost ([`swap_beats_recompute`]), recompute
-    /// otherwise. Flows into [`crate::sched::plan::CascadePlan`].
-    pub preemption: PreemptionMode,
+    /// Per-tier eviction discipline: swap-to-host where that tier's
+    /// per-victim PCIe round trip undercuts its recompute cost
+    /// ([`swap_beats_recompute`], judged with the tier's own replica
+    /// design), recompute otherwise (and for undeployed tiers).
+    /// Indexed like `gpus`; flows into
+    /// [`crate::sched::plan::CascadePlan::preemption`].
+    pub preemption: Vec<PreemptionMode>,
+    /// Per-tier prefill/decode split (`None` = unified pool). A tier
+    /// whose chosen strategy is a single homogeneous replica group of
+    /// two or more replicas is re-scored at every split point with
+    /// [`estimate_p95_disagg`] — which charges the one-way KV-page
+    /// migration of each handoff over the modeled interconnect — and
+    /// the split is adopted only where it beats the unified estimate;
+    /// `tier_p95` and `max_latency` reflect the refined values.
+    pub disagg: Vec<Option<DisaggSpec>>,
 }
 
 /// Best parallelism strategy and its p95 for (model, budget, workload)
@@ -382,7 +393,6 @@ impl InnerSolver {
 
         let mut strategies = vec![None; c];
         let mut tier_p95 = vec![0.0; c];
-        let mut max_latency: f64 = 0.0;
         for &i in &active {
             let f = alloc[i];
             if f == 0 || table.l[i][f] >= OVERLOAD_LATENCY {
@@ -395,40 +405,62 @@ impl InnerSolver {
             }
             strategies[i] = table.strategies[i][f].clone();
             tier_p95[i] = table.l[i][f];
-            max_latency = max_latency.max(tier_p95[i]);
         }
 
-        // Per-design-point preemption choice, judged at the bottleneck
-        // deployed tier (where eviction overhead binds the max-latency
-        // objective): deep-tier re-serves carry the longest contexts,
+        // Per-tier preemption choice: each deployed tier judges swap
+        // vs recompute with its own replica design at its own mean
+        // context (deep-tier re-serves carry the longest contexts,
         // which is exactly where the PCIe round trip undercuts
-        // re-prefilling.
-        let preemption = {
-            let mut mode = PreemptionMode::Recompute;
-            let bottleneck = active
-                .iter()
-                .copied()
-                .max_by(|&a, &b| tier_p95[a].partial_cmp(&tier_p95[b]).unwrap());
-            if let Some(i) = bottleneck {
-                if let Some(s) = &strategies[i] {
-                    if let Some(g) = s.groups.first() {
-                        let w = &tier_workloads[i];
-                        let ctx = w.avg_input + w.avg_output;
-                        let rm = ReplicaModel::new(
-                            &self.cascade[i],
-                            &self.cluster,
-                            g.tp,
-                            g.pp,
-                            ctx,
-                        );
-                        if swap_beats_recompute(&rm, ctx) {
-                            mode = PreemptionMode::Swap;
-                        }
-                    }
+        // re-prefilling); undeployed tiers default to recompute.
+        let preemption: Vec<PreemptionMode> = (0..c)
+            .map(|i| {
+                let Some(s) = &strategies[i] else { return PreemptionMode::Recompute };
+                let Some(g) = s.groups.first() else { return PreemptionMode::Recompute };
+                let w = &tier_workloads[i];
+                let ctx = w.avg_input + w.avg_output;
+                let rm = ReplicaModel::new(&self.cascade[i], &self.cluster, g.tp, g.pp, ctx);
+                if swap_beats_recompute(&rm, ctx) {
+                    PreemptionMode::Swap
+                } else {
+                    PreemptionMode::Recompute
+                }
+            })
+            .collect();
+
+        // Prefill/decode split refinement: for each deployed tier whose
+        // strategy is one homogeneous group of >= 2 replicas, enumerate
+        // every split of the group into dedicated prefill and decode
+        // pools and re-score it with the disaggregated estimate, which
+        // charges each handoff's one-way KV-page migration over the
+        // modeled interconnect. Adopt the best split only where it
+        // beats the unified pool — long-prompt tiers shed prefill
+        // head-of-line blocking, short-prompt tiers stay unified.
+        let mut disagg: Vec<Option<DisaggSpec>> = vec![None; c];
+        let sem = self.opts.engine_semantics();
+        for &i in &active {
+            let Some(s) = &strategies[i] else { continue };
+            if s.groups.len() != 1 {
+                continue;
+            }
+            let g = &s.groups[0];
+            if g.count < 2 {
+                continue;
+            }
+            let w = &tier_workloads[i];
+            let avg_ctx = w.avg_input + w.avg_output / 2.0;
+            let rm = ReplicaModel::new(&self.cascade[i], &self.cluster, g.tp, g.pp, avg_ctx);
+            let mut best = tier_p95[i];
+            for p in 1..g.count {
+                let est = estimate_p95_disagg(&rm, p, g.count - p, w, &sem);
+                if est < best {
+                    best = est;
+                    disagg[i] =
+                        Some(DisaggSpec { prefill_replicas: p, decode_replicas: g.count - p });
                 }
             }
-            mode
-        };
+            tier_p95[i] = best;
+        }
+        let max_latency = active.iter().map(|&i| tier_p95[i]).fold(0.0f64, f64::max);
 
         Ok(InnerSolution {
             gpus: alloc,
@@ -437,6 +469,7 @@ impl InnerSolver {
             max_latency,
             milp_nodes: 0,
             preemption,
+            disagg,
         })
     }
 
@@ -722,8 +755,8 @@ mod tests {
     #[test]
     fn per_design_point_preemption_tracks_the_cost_terms() {
         // On the H100 testbed the PCIe round trip undercuts re-prefill
-        // at paper-trace context lengths, so scheduled designs carry
-        // the swap knob...
+        // at paper-trace context lengths, so every deployed tier's
+        // entry carries the swap knob...
         let sol = solve_inner(
             &deepseek_cascade(),
             &cluster(),
@@ -732,7 +765,14 @@ mod tests {
             &InnerOptions::default(),
         )
         .unwrap();
-        assert_eq!(sol.preemption, PreemptionMode::Swap);
+        assert_eq!(sol.preemption.len(), sol.gpus.len());
+        for (i, &f) in sol.gpus.iter().enumerate() {
+            if f > 0 {
+                assert_eq!(sol.preemption[i], PreemptionMode::Swap, "tier {i}");
+            } else {
+                assert_eq!(sol.preemption[i], PreemptionMode::Recompute, "tier {i}");
+            }
+        }
         // ...and the choice helper itself flips with the terms: a
         // replica with swap space prefers swap at long contexts, and a
         // zero host budget forces recompute.
@@ -782,5 +822,65 @@ mod tests {
         let b = solver.solve(&w, 32).unwrap();
         assert_eq!(a.gpus, b.gpus);
         assert_eq!(a.max_latency, b.max_latency);
+        assert_eq!(a.preemption, b.preemption);
+        assert_eq!(a.disagg, b.disagg);
+    }
+
+    #[test]
+    fn disagg_refinement_adopts_splits_only_where_they_win() {
+        // Cross-check the solution against the raw latency tables: a
+        // tier carrying a split must (a) cover its whole replica group,
+        // (b) score exactly what the disaggregated estimate says, and
+        // (c) beat the unified table value it replaced; a unified tier
+        // must keep its table value untouched.
+        let solver = InnerSolver::new(deepseek_cascade(), cluster(), InnerOptions::default());
+        let w = workloads([6.0, 2.0, 0.5]);
+        let sol = solver.solve(&w, 32).unwrap();
+        assert_eq!(sol.disagg.len(), sol.gpus.len());
+        let table = solver.tables(&w, 32);
+        let sem = solver.opts.engine_semantics();
+        for i in 0..sol.gpus.len() {
+            if sol.gpus[i] == 0 {
+                assert!(sol.disagg[i].is_none(), "undeployed tier {i} split");
+                continue;
+            }
+            let unified = table.l[i][sol.gpus[i]];
+            match &sol.disagg[i] {
+                Some(d) => {
+                    let s = sol.strategies[i].as_ref().unwrap();
+                    assert_eq!(s.groups.len(), 1, "splits need a homogeneous pool");
+                    let g = &s.groups[0];
+                    assert_eq!(d.total(), g.count, "split must cover the pool");
+                    assert!(d.prefill_replicas >= 1 && d.decode_replicas >= 1);
+                    let avg_ctx = w[i].avg_input + w[i].avg_output / 2.0;
+                    let rm = ReplicaModel::new(
+                        &solver.cascade[i],
+                        &solver.cluster,
+                        g.tp,
+                        g.pp,
+                        avg_ctx,
+                    );
+                    let est = estimate_p95_disagg(
+                        &rm,
+                        d.prefill_replicas,
+                        d.decode_replicas,
+                        &w[i],
+                        &sem,
+                    );
+                    assert!(
+                        (est - sol.tier_p95[i]).abs() < 1e-9,
+                        "tier {i}: refined p95 {} != estimate {est}",
+                        sol.tier_p95[i]
+                    );
+                    assert!(est < unified, "tier {i}: split {est} must beat unified {unified}");
+                }
+                None => assert_eq!(sol.tier_p95[i], unified, "tier {i} altered without a split"),
+            }
+        }
+        let refined_max = sol.tier_p95.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            (sol.max_latency - refined_max).abs() < 1e-12,
+            "objective must track refined tier p95s"
+        );
     }
 }

@@ -145,6 +145,7 @@ fn evaluate_candidate(
             workload: routing.tier_workloads[i],
             processing_ratio: routing.processing_ratios[i],
             predicted_p95: sol.tier_p95[i],
+            disagg: sol.disagg[i],
         })
         .collect();
     let plan = CascadePlan {

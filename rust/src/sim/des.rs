@@ -28,7 +28,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
-use crate::engine::{IterationScheduler, KvPool, PreemptionConfig, PreemptionMode};
+use crate::engine::{EngineRole, IterationScheduler, KvPool, PreemptionConfig, PreemptionMode};
 use crate::obs::{
     emit_plan_events, Event as ObsEvent, EventKind as ObsEventKind, TraceRecorder,
 };
@@ -134,6 +134,15 @@ pub struct SimOutcome {
     pub swap_ins: usize,
     /// KV pages moved across PCIe, both directions.
     pub swap_pages: usize,
+    /// Per-request time-to-first-token (first token - arrival),
+    /// aligned with the input trace order. Empty outside
+    /// [`DesMode::Paged`] and [`simulate_disagg`].
+    pub ttfts: Vec<f64>,
+    /// Prefill→decode handoffs across the pool
+    /// ([`simulate_disagg`] only).
+    pub migrations: usize,
+    /// Private KV pages that crossed the prefill→decode interconnect.
+    pub migrate_pages: usize,
 }
 
 impl SimOutcome {
@@ -152,6 +161,14 @@ impl SimOutcome {
     /// Fraction of requests within `slo` seconds.
     pub fn slo_attainment(&self, slo: f64) -> f64 {
         stats::fraction_within(&self.latencies, slo)
+    }
+
+    /// p95 time-to-first-token (NaN when the run did not track TTFT).
+    pub fn p95_ttft(&self) -> f64 {
+        if self.ttfts.is_empty() {
+            return f64::NAN;
+        }
+        stats::percentile(&self.ttfts, 0.95)
     }
 }
 
@@ -355,6 +372,9 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         swap_outs: 0,
         swap_ins: 0,
         swap_pages: 0,
+        ttfts: Vec::new(),
+        migrations: 0,
+        migrate_pages: 0,
     }
 }
 
@@ -526,7 +546,44 @@ pub fn simulate_lockstep(replicas: &[ReplicaModel], trace: &[SimRequest]) -> Sim
         swap_outs: 0,
         swap_ins: 0,
         swap_pages: 0,
+        ttfts: Vec::new(),
+        migrations: 0,
+        migrate_pages: 0,
     }
+}
+
+/// Synthetic chained page hashes mirroring the engine's content-hash
+/// chain: shared-prefix pages hash off the group key, divergent tails
+/// off the request id, so trie hits reproduce exactly the sharing the
+/// trace declares.
+fn hash_mix(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^ (x >> 27)
+}
+
+/// Page-hash chain for one trace request (empty when it shares
+/// nothing — see [`SimRequest::prefix_group`]).
+fn synthetic_hashes(id: usize, req: &SimRequest, page_tokens: usize) -> Vec<u64> {
+    if req.prefix_group == 0 {
+        return Vec::new();
+    }
+    let pages = (req.input_tokens.max(1) as usize).div_ceil(page_tokens);
+    let shared_pages = if req.shared_tokens >= req.input_tokens {
+        pages
+    } else {
+        (req.shared_tokens as usize) / page_tokens
+    };
+    (0..pages)
+        .map(|i| {
+            if i < shared_pages {
+                hash_mix(req.prefix_group, i as u64)
+            } else {
+                hash_mix(0x5bd1_e995 ^ ((id as u64 + 1) << 20), i as u64)
+            }
+        })
+        .collect()
 }
 
 /// Paged continuous-batching simulation: admission, growth, chunked
@@ -583,37 +640,6 @@ fn simulate_paged_inner(
         .filter(|r| r.max_batch > 0 && r.kv_pages_total(page_tokens) > 0)
         .collect();
     assert!(!usable.is_empty(), "no replica has KV capacity");
-
-    // Synthetic chained page hashes mirroring the engine's
-    // content-hash chain: shared-prefix pages hash off the group key,
-    // divergent tails off the request id, so trie hits reproduce
-    // exactly the sharing the trace declares.
-    let mix = |a: u64, b: u64| -> u64 {
-        let mut x = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
-        x ^= x >> 30;
-        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
-        x ^ (x >> 27)
-    };
-    let hashes_of = |id: usize, req: &SimRequest| -> Vec<u64> {
-        if req.prefix_group == 0 {
-            return Vec::new();
-        }
-        let pages = (req.input_tokens.max(1) as usize).div_ceil(page_tokens);
-        let shared_pages = if req.shared_tokens >= req.input_tokens {
-            pages
-        } else {
-            (req.shared_tokens as usize) / page_tokens
-        };
-        (0..pages)
-            .map(|i| {
-                if i < shared_pages {
-                    mix(req.prefix_group, i as u64)
-                } else {
-                    mix(0x5bd1_e995 ^ ((id as u64 + 1) << 20), i as u64)
-                }
-            })
-            .collect()
-    };
 
     struct Rep<'a> {
         model: &'a ReplicaModel,
@@ -731,7 +757,7 @@ fn simulate_paged_inner(
                     id as u64,
                     req.input_tokens as usize,
                     req.output_tokens.max(1) as usize,
-                    hashes_of(id, req),
+                    synthetic_hashes(id, req, page_tokens),
                 );
                 rep.backlog_tokens +=
                     req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
@@ -803,6 +829,353 @@ fn simulate_paged_inner(
         swap_outs: pool.iter().map(|r| r.sched.swap_counts().0 as usize).sum(),
         swap_ins: pool.iter().map(|r| r.sched.swap_counts().1 as usize).sum(),
         swap_pages: pool.iter().map(|r| r.sched.swap_counts().2 as usize).sum(),
+        ttfts: first_tok
+            .iter()
+            .zip(trace.iter())
+            .map(|(t, r)| t - r.arrival)
+            .collect(),
+        migrations: 0,
+        migrate_pages: 0,
+    }
+}
+
+/// Disaggregated prefill/decode simulation: `prefill` replicas run the
+/// engine scheduler in [`EngineRole::Prefill`] (chunked prefill, first
+/// token, then the stage -1 handoff), `decode` replicas run
+/// [`EngineRole::Decode`] and admit handoffs through the scheduler's
+/// migrate queue (stage 1.75), re-claiming shared prefix pages from
+/// their own trie so only private pages cross the interconnect. Every
+/// page received charges [`ReplicaModel::page_migrate_seconds`] into
+/// the receiving iteration — one-way, on the decode side, exactly
+/// where the live engine's `StepBackend::migrate` hook bills it — so
+/// the DES↔live pin extends to migration counts and finish ticks.
+///
+/// Handoffs route to the decode replica with the fewest resident plus
+/// in-flight KV pages (ties to the lowest index), mirroring the live
+/// [`crate::engine::MigrationHub`] policy. Arrivals dispatch
+/// least-outstanding-work across the prefill replicas only.
+pub fn simulate_disagg(
+    prefill: &[ReplicaModel],
+    decode: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+) -> SimOutcome {
+    simulate_disagg_inner(prefill, decode, trace, page_tokens, prefill_chunk, swap, None)
+}
+
+/// [`simulate_disagg`] with trace emission: plan events from both
+/// sides of the handoff (including `migrate_out`/`migrate_in`) and
+/// every retirement's `finished` are recorded at simulated timestamps.
+/// Shards number prefill replicas first, then decode replicas.
+pub fn simulate_disagg_traced(
+    prefill: &[ReplicaModel],
+    decode: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+    recorder: &TraceRecorder,
+) -> SimOutcome {
+    simulate_disagg_inner(
+        prefill,
+        decode,
+        trace,
+        page_tokens,
+        prefill_chunk,
+        swap,
+        Some(recorder),
+    )
+}
+
+fn simulate_disagg_inner(
+    prefill: &[ReplicaModel],
+    decode: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+    recorder: Option<&TraceRecorder>,
+) -> SimOutcome {
+    assert!(!prefill.is_empty(), "disagg simulation with no prefill replicas");
+    assert!(!decode.is_empty(), "disagg simulation with no decode replicas");
+    let page_tokens = page_tokens.max(1);
+    for r in prefill.iter().chain(decode.iter()) {
+        assert!(
+            r.max_batch > 0 && r.kv_pages_total(page_tokens) > 0,
+            "disagg replica has no KV capacity"
+        );
+    }
+
+    struct Rep<'a> {
+        model: &'a ReplicaModel,
+        sched: IterationScheduler,
+        /// Sequences producing one token in the in-flight iteration.
+        inflight: Vec<u64>,
+        busy: bool,
+        busy_time: f64,
+        backlog_tokens: f64,
+        swap_s_per_page: f64,
+        /// Seconds per KV page pulled over the replica-pair link.
+        migrate_s_per_page: f64,
+        /// Iterations started (the tick counter finish_iters records).
+        iters: usize,
+        /// Handoffs delivered but not yet admitted (decode side):
+        /// their page counts stay in the load metric until stage 1.75
+        /// lands them.
+        pending: Vec<(u64, usize)>,
+    }
+
+    /// Plan and launch one iteration; returns the plan's handoffs for
+    /// the caller to deliver (decode replicas never hand off). The
+    /// tick charges one decode iteration at the planned batch plus
+    /// chunk prefill, PCIe swap traffic, and the one-way transit of
+    /// every migrated-in page.
+    fn plan_one(
+        rep: &mut Rep<'_>,
+        ri: usize,
+        now: f64,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+        recorder: Option<&TraceRecorder>,
+    ) -> Vec<(u64, usize)> {
+        let plan = rep.sched.next_iteration();
+        if let Some(rec) = recorder {
+            // DES sequence ids ARE the global request ids (trace
+            // index), so the key map is the identity.
+            emit_plan_events(rec, ri, now, 0, &plan, |id| id);
+        }
+        let handoffs = plan.migrated_out.clone();
+        for (id, _) in &plan.migrated_in {
+            if let Some(at) = rep.pending.iter().position(|(q, _)| q == id) {
+                rep.pending.remove(at);
+            }
+        }
+        if plan.batch() == 0 {
+            rep.busy = false;
+            rep.inflight.clear();
+            return handoffs;
+        }
+        rep.iters += 1;
+        let prefill_cost: f64 = plan
+            .prefill
+            .iter()
+            .map(|c| rep.model.prefill_latency(c.len as f64))
+            .sum();
+        let swap_cost = (plan.swap_out_pages() + plan.swap_in_pages()) as f64
+            * rep.swap_s_per_page;
+        let migrate_cost = plan.migrate_in_pages() as f64 * rep.migrate_s_per_page;
+        rep.inflight = plan.producers();
+        let iter = rep.model.decode_iteration(plan.batch())
+            / rep.model.pp_capacity_factor;
+        let dt = iter + prefill_cost + swap_cost + migrate_cost;
+        rep.busy = true;
+        rep.busy_time += dt;
+        *seq += 1;
+        heap.push(Event { time: now + dt, seq: *seq, kind: EventKind::IterDone(ri) });
+        handoffs
+    }
+
+    let n_prefill = prefill.len();
+    let mut pool: Vec<Rep> = prefill
+        .iter()
+        .map(|m| (m, EngineRole::Prefill))
+        .chain(decode.iter().map(|m| (m, EngineRole::Decode)))
+        .map(|(m, role)| {
+            let mut sched = IterationScheduler::new(
+                KvPool::new(m.kv_pages_total(page_tokens), page_tokens),
+                m.max_batch.max(1),
+            );
+            sched.set_prefill_chunk(prefill_chunk);
+            sched.set_role(role);
+            if swap {
+                sched.set_preemption(PreemptionConfig {
+                    mode: PreemptionMode::Swap,
+                    swap_pages: m.swap_pages_total(page_tokens),
+                    prefill_s_per_token: m.prefill_seconds_per_token(),
+                    swap_s_per_page: m.page_swap_seconds(page_tokens),
+                    page_bytes: m.kv_page_bytes(page_tokens),
+                });
+            }
+            Rep {
+                model: m,
+                sched,
+                inflight: Vec::new(),
+                busy: false,
+                busy_time: 0.0,
+                backlog_tokens: 0.0,
+                swap_s_per_page: m.page_swap_seconds(page_tokens),
+                migrate_s_per_page: m.page_migrate_seconds(page_tokens),
+                iters: 0,
+                pending: Vec::new(),
+            }
+        })
+        .collect();
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (id, r) in trace.iter().enumerate() {
+        seq += 1;
+        heap.push(Event { time: r.arrival, seq, kind: EventKind::Arrival(id) });
+    }
+
+    let mut latencies_by_id: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut completions: Vec<f64> = vec![f64::NAN; trace.len()];
+    let mut finish_iters: Vec<usize> = vec![0; trace.len()];
+    let mut first_tok: Vec<f64> = vec![f64::NAN; trace.len()];
+    // Tokens generated so far per request — the `generated` the decode
+    // side resumes from at handoff.
+    let mut gen_count: Vec<usize> = vec![0; trace.len()];
+    let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
+    let mut completed = 0usize;
+    let mut now = 0.0f64;
+    let mut total_tokens = 0u64;
+
+    // Route each handoff to the least-loaded live decode replica and
+    // wake it if idle — the MigrationHub policy, instantaneous here;
+    // the transit time itself is charged into the receiving iteration.
+    let deliver = |pool: &mut Vec<Rep>,
+                   handoffs: Vec<(u64, usize)>,
+                   now: f64,
+                   heap: &mut BinaryHeap<Event>,
+                   seq: &mut u64,
+                   gen_count: &[usize]| {
+        for (id, pages) in handoffs {
+            let uid = id as usize;
+            let req = &trace[uid];
+            let mut best = n_prefill;
+            let mut best_load = usize::MAX;
+            for di in n_prefill..pool.len() {
+                let load = pool[di].sched.pool().in_use()
+                    + pool[di].pending.iter().map(|&(_, p)| p).sum::<usize>();
+                if load < best_load {
+                    best_load = load;
+                    best = di;
+                }
+            }
+            let d = &mut pool[best];
+            d.sched.enqueue_prefilled(
+                id,
+                req.input_tokens.max(1) as usize,
+                gen_count[uid],
+                req.output_tokens.max(1) as usize,
+                synthetic_hashes(uid, req, page_tokens),
+            );
+            d.pending.push((id, pages));
+            d.backlog_tokens += (req.output_tokens.max(1) as usize)
+                .saturating_sub(gen_count[uid]) as f64;
+            if !d.busy {
+                let h = plan_one(d, best, now, heap, seq, recorder);
+                debug_assert!(h.is_empty(), "decode replicas never hand off");
+                let _ = h;
+            }
+        }
+    };
+
+    while let Some(ev) = heap.pop() {
+        now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(id) => {
+                let req = &trace[id];
+                let best = pick_least_loaded(
+                    pool[..n_prefill].iter().map(|r| (r.backlog_tokens, r.model)),
+                );
+                let rep = &mut pool[best];
+                rep.sched.enqueue_shared(
+                    id as u64,
+                    req.input_tokens as usize,
+                    req.output_tokens.max(1) as usize,
+                    synthetic_hashes(id, req, page_tokens),
+                );
+                rep.backlog_tokens +=
+                    req.output_tokens as f64 + req.input_tokens as f64 * 0.2;
+                if !rep.busy {
+                    let h = plan_one(rep, best, now, &mut heap, &mut seq, recorder);
+                    deliver(&mut pool, h, now, &mut heap, &mut seq, &gen_count);
+                }
+            }
+            EventKind::IterDone(ri) => {
+                let rep = &mut pool[ri];
+                let ids = std::mem::take(&mut rep.inflight);
+                total_tokens += ids.len() as u64;
+                for id in ids {
+                    let rep = &mut pool[ri];
+                    rep.backlog_tokens = (rep.backlog_tokens - 1.0).max(0.0);
+                    let uid = id as usize;
+                    gen_count[uid] += 1;
+                    if first_tok[uid].is_nan() {
+                        first_tok[uid] = now;
+                    }
+                    if rep.sched.advance(id) {
+                        rep.sched.retire(id);
+                        latencies_by_id[uid] = now - trace[uid].arrival;
+                        completions[uid] = now;
+                        finish_iters[uid] = rep.iters;
+                        completion_order.push(uid);
+                        completed += 1;
+                        if let Some(rec) = recorder {
+                            rec.emit(
+                                ri,
+                                ObsEvent {
+                                    fa: first_tok[uid] - trace[uid].arrival,
+                                    fb: now - trace[uid].arrival,
+                                    ..ObsEvent::at(now, id, 0, ObsEventKind::Finished)
+                                },
+                            );
+                        }
+                    }
+                }
+                if pool[ri].sched.n_seqs() > 0 {
+                    let h = plan_one(&mut pool[ri], ri, now, &mut heap, &mut seq, recorder);
+                    deliver(&mut pool, h, now, &mut heap, &mut seq, &gen_count);
+                } else {
+                    pool[ri].busy = false;
+                }
+            }
+            EventKind::ReqDone(..) | EventKind::BatchEnd(..) => {
+                unreachable!("lockstep-only event in disaggregated simulation")
+            }
+        }
+    }
+
+    assert_eq!(completed, trace.len(), "disaggregated simulation lost requests");
+    let handed_off: usize =
+        pool[..n_prefill].iter().map(|r| r.sched.migrate_counts().0 as usize).sum();
+    let migrations: usize =
+        pool[n_prefill..].iter().map(|r| r.sched.migrate_counts().1 as usize).sum();
+    assert_eq!(migrations, handed_off, "every handoff lands exactly once");
+    let migrate_pages: usize =
+        pool[n_prefill..].iter().map(|r| r.sched.migrate_counts().3 as usize).sum();
+    let makespan = now.max(1e-9);
+    let utilization = stats::mean(
+        &pool.iter().map(|r| r.busy_time / makespan).collect::<Vec<_>>(),
+    );
+    SimOutcome {
+        latencies: completion_order.iter().map(|&id| latencies_by_id[id]).collect(),
+        throughput_rps: completed as f64 / makespan,
+        tokens_per_sec: total_tokens as f64 / makespan,
+        makespan,
+        utilization,
+        completions,
+        peak_pages: pool.iter().map(|r| r.sched.pool().peak_in_use()).max().unwrap_or(0),
+        preemptions: pool.iter().map(|r| r.sched.preemptions() as usize).sum(),
+        prefix_hit_tokens: pool
+            .iter()
+            .map(|r| r.sched.prefix_hit_tokens() as usize)
+            .sum(),
+        cow_copies: pool.iter().map(|r| r.sched.pool().cow_copies() as usize).sum(),
+        finish_iters,
+        swap_outs: pool.iter().map(|r| r.sched.swap_counts().0 as usize).sum(),
+        swap_ins: pool.iter().map(|r| r.sched.swap_counts().1 as usize).sum(),
+        swap_pages: pool.iter().map(|r| r.sched.swap_counts().2 as usize).sum(),
+        ttfts: first_tok
+            .iter()
+            .zip(trace.iter())
+            .map(|(t, r)| t - r.arrival)
+            .collect(),
+        migrations,
+        migrate_pages,
     }
 }
 
@@ -1162,5 +1535,148 @@ mod tests {
         let out = simulate_mode(&pool, &reserve, mode);
         assert!(out.prefix_hit_tokens >= 512 * 8, "full hits skip whole prompts");
         assert_eq!(out.latencies.len(), 12);
+    }
+
+    // ---- Disaggregated prefill/decode ----
+
+    const HOGS: usize = 8;
+
+    /// Decode hogs saturate the pool from t≈0; long prompts then probe
+    /// TTFT while the hogs are still decoding. Probe spacing is derived
+    /// from the model so the prefill side keeps up with margin, and the
+    /// probe window stays inside the hogs' decode lifetime.
+    fn hog_probe_trace(m: &ReplicaModel) -> Vec<SimRequest> {
+        let ppf = m.pp_capacity_factor;
+        let iter1 = m.decode_iteration(1) / ppf;
+        let hog_out = 768u32;
+        // Conservative end of the window in which the hogs are
+        // certainly still decoding (their per-token time only grows
+        // with batch).
+        let covered = hog_out as f64 * iter1 * 0.6;
+        let start = (HOGS as f64 * m.prefill_latency(64.0) + 4.0 * iter1).max(0.02);
+        let gap = (m.prefill_latency(704.0) * 1.5 + m.decode_iteration(8) / ppf)
+            .max(covered / 24.0);
+        let n_probes = (((covered - start) / gap) as usize).clamp(4, 24);
+        let mut t: Vec<SimRequest> = (0..HOGS)
+            .map(|i| SimRequest::new(i as f64 * 1e-3, 64, hog_out))
+            .collect();
+        t.extend((0..n_probes).map(|i| SimRequest::new(start + i as f64 * gap, 704, 32)));
+        t
+    }
+
+    #[test]
+    fn disagg_completes_everything_exactly_once_and_deterministically() {
+        let pf = vec![replica(2)];
+        let dc = vec![replica(2)];
+        let trace = hog_probe_trace(&pf[0]);
+        let out = simulate_disagg(&pf, &dc, &trace, 16, usize::MAX, false);
+        assert_eq!(out.latencies.len(), trace.len(), "exactly-once across the handoff");
+        assert_eq!(
+            out.migrations,
+            trace.len(),
+            "every request (output >= 2) hands off exactly once"
+        );
+        assert!(out.migrate_pages > 0, "private pages must cross the interconnect");
+        assert_eq!(out.ttfts.len(), trace.len());
+        assert!(out.ttfts.iter().all(|t| *t > 0.0 && t.is_finite()));
+        assert!(out.finish_iters.iter().all(|&t| t > 0), "every request gets a tick");
+        let again = simulate_disagg(&pf, &dc, &trace, 16, usize::MAX, false);
+        assert_eq!(out.latencies, again.latencies);
+        assert_eq!(out.ttfts, again.ttfts);
+        assert_eq!(out.migrations, again.migrations);
+        assert_eq!(out.migrate_pages, again.migrate_pages);
+        assert_eq!(out.finish_iters, again.finish_iters);
+    }
+
+    #[test]
+    fn disagg_beats_unified_p95_ttft_under_decode_pressure() {
+        // Same total hardware: two unified replicas vs one prefill +
+        // one decode. With the pool full of decoding hogs, a unified
+        // replica charges the hog batch (and any page-pressure
+        // eviction) into every probe's first-token tick; the dedicated
+        // prefill replica hands its hogs off and serves probes from an
+        // empty pool.
+        let m = replica(2);
+        let trace = hog_probe_trace(&m);
+        let unified =
+            simulate_paged(&[replica(2), replica(2)], &trace, 16, usize::MAX, false);
+        let split = simulate_disagg(
+            &[replica(2)],
+            &[replica(2)],
+            &trace,
+            16,
+            usize::MAX,
+            false,
+        );
+        assert_eq!(unified.latencies.len(), trace.len());
+        assert_eq!(split.latencies.len(), trace.len());
+        let probe_p95 = |o: &SimOutcome| stats::percentile(&o.ttfts[HOGS..], 0.95);
+        assert!(
+            probe_p95(&split) < probe_p95(&unified),
+            "split probe p95 TTFT {} must beat unified {}",
+            probe_p95(&split),
+            probe_p95(&unified)
+        );
+    }
+
+    #[test]
+    fn migrated_group_mates_reclaim_prefix_on_the_decode_side() {
+        let pf = vec![replica(2)];
+        let dc = vec![replica(2)];
+        let make = |group: u64| -> Vec<SimRequest> {
+            (0..16)
+                .map(|i| SimRequest {
+                    arrival: i as f64 * 0.2,
+                    input_tokens: 512,
+                    output_tokens: 48,
+                    prefix_group: group,
+                    shared_tokens: if group == 0 { 0 } else { 256 },
+                })
+                .collect()
+        };
+        let solo = simulate_disagg(&pf, &dc, &make(0), 16, usize::MAX, false);
+        let shared = simulate_disagg(&pf, &dc, &make(7), 16, usize::MAX, false);
+        assert_eq!(solo.prefix_hit_tokens, 0);
+        assert!(
+            shared.prefix_hit_tokens > 0,
+            "later migrants must claim the decode-side trie"
+        );
+        assert!(
+            shared.migrate_pages < solo.migrate_pages,
+            "claimed prefix pages must not cross the interconnect: {} vs {}",
+            shared.migrate_pages,
+            solo.migrate_pages
+        );
+        assert_eq!(shared.latencies.len(), 16);
+        assert_eq!(solo.latencies.len(), 16);
+    }
+
+    #[test]
+    fn traced_disagg_emits_one_migrate_pair_and_one_finished_per_request() {
+        use crate::obs::EventKind as K;
+        let pf = vec![replica(2)];
+        let dc = vec![replica(2)];
+        let trace = hog_probe_trace(&pf[0]);
+        let rec = TraceRecorder::new(2, 262_144);
+        let traced = simulate_disagg_traced(&pf, &dc, &trace, 16, usize::MAX, false, &rec);
+        let plain = simulate_disagg(&pf, &dc, &trace, 16, usize::MAX, false);
+        assert_eq!(traced.latencies, plain.latencies, "tracing must not perturb the sim");
+        assert_eq!(traced.migrations, plain.migrations);
+        let by_req = rec.per_request();
+        assert_eq!(by_req.len(), trace.len(), "every request leaves a timeline");
+        for (req, evs) in &by_req {
+            let outs = evs.iter().filter(|e| e.kind == K::MigrateOut).count();
+            let ins = evs.iter().filter(|e| e.kind == K::MigrateIn).count();
+            assert_eq!(outs, 1, "req {req}: exactly one handoff");
+            assert_eq!(ins, 1, "req {req}: exactly one landing");
+            let fins = evs.iter().filter(|e| e.kind == K::Finished).count();
+            assert_eq!(fins, 1, "req {req}: exactly one terminal event");
+            // The handoff leaves before it lands, and both precede the
+            // terminal event.
+            let t_out = evs.iter().find(|e| e.kind == K::MigrateOut).unwrap().t;
+            let t_in = evs.iter().find(|e| e.kind == K::MigrateIn).unwrap().t;
+            assert!(t_out <= t_in, "req {req}: out {t_out} after in {t_in}");
+        }
+        assert_eq!(rec.dropped_events(), 0);
     }
 }

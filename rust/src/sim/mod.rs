@@ -21,6 +21,6 @@ pub mod des;
 
 pub use analytic::estimate_p95;
 pub use des::{
-    simulate, simulate_lockstep, simulate_mode, simulate_paged, simulate_paged_traced,
-    DesMode, SimOutcome, SimRequest,
+    simulate, simulate_disagg, simulate_disagg_traced, simulate_lockstep, simulate_mode,
+    simulate_paged, simulate_paged_traced, DesMode, SimOutcome, SimRequest,
 };

@@ -10,12 +10,12 @@ use cascadia::coordinator::server::{
     CascadeServer, ResponseJudger, ServerConfig, ServerStats, TierBackend,
 };
 use cascadia::engine::{
-    EngineConfig, EngineCore, PreemptionConfig, PreemptionMode, SeqId, StepBackend,
+    EngineConfig, EngineCore, EngineRole, PreemptionConfig, PreemptionMode, SeqId, StepBackend,
 };
 use cascadia::models::llama_cascade;
 use cascadia::parallel::ACT_RESERVE;
 use cascadia::perf::ReplicaModel;
-use cascadia::sim::{simulate_mode, DesMode, SimRequest};
+use cascadia::sim::{simulate_disagg, simulate_mode, DesMode, SimRequest};
 
 /// Tier t answers correctly iff the prompt's difficulty (first token)
 /// is <= t; output length runs to max_new so decode actually iterates.
@@ -303,6 +303,106 @@ fn paged_des_and_live_engine_emit_identical_event_timelines() {
             }
         }
     }
+}
+
+#[test]
+fn disagg_des_and_live_engines_agree_on_migrations_and_finish_ticks() {
+    // The disaggregated DES and a live prefill/decode engine pair over
+    // the same all-at-once trace must agree exactly: same handoff
+    // count, same private pages over the interconnect, same per-request
+    // decode-side finish ticks, exactly-once completion. The regime is
+    // clock-free: whole-prompt prefills dwarf a decode iteration, so
+    // the decoder is always drained when a handoff batch arrives — the
+    // live loop asserts that instead of simulating time, and mirrors
+    // the DES delivery rule (the first handoff of a batch wakes an idle
+    // decoder immediately; the rest admit at its next iteration
+    // boundary).
+    let m = &llama_cascade()[0];
+    let rm = ReplicaModel::new(m, &ClusterSpec::paper_testbed(), 1, 1, 256.0);
+    assert!(rm.max_batch >= 8, "slots must not bind in this regime");
+    assert!(rm.kv_pages_total(16) >= 8 * 14, "pages must not bind in this regime");
+    let trace: Vec<SimRequest> = (0..8).map(|_| SimRequest::new(0.0, 193, 2)).collect();
+
+    let des = simulate_disagg(&[rm.clone()], &[rm.clone()], &trace, 16, usize::MAX, false);
+    assert_eq!(des.migrations, trace.len(), "every request must hand off once");
+    assert!(des.migrate_pages > 0);
+    assert_eq!(des.ttfts.len(), trace.len());
+    assert!(des.ttfts.iter().all(|t| t.is_finite()));
+
+    let cfg = EngineConfig {
+        pool_pages: rm.kv_pages_total(16),
+        page_tokens: 16,
+        max_running: rm.max_batch.max(1),
+        prefill_chunk: usize::MAX,
+        share_prefixes: false,
+        preemption: PreemptionConfig::default(),
+    };
+    let mut pf: EngineCore<usize> = EngineCore::new(Box::new(PinStep), cfg.clone());
+    pf.set_role(EngineRole::Prefill); // opens migration
+    let mut dc: EngineCore<usize> = EngineCore::new(Box::new(PinStep), cfg);
+    dc.set_role(EngineRole::Decode);
+
+    let prompt_of = |r: &SimRequest| -> Vec<i32> { vec![7; r.input_tokens.max(1) as usize] };
+    let mut finish = vec![0usize; trace.len()];
+    let mut decode_iters = 0usize;
+    let record = |finish: &mut Vec<usize>, f: cascadia::engine::Finished<usize>, it: usize| {
+        assert_eq!(finish[f.payload], 0, "request {} completed twice", f.payload);
+        finish[f.payload] = it;
+    };
+    pf.submit(0, prompt_of(&trace[0]), trace[0].output_tokens.max(1) as usize);
+    let mut first = true;
+    let mut tick = 0usize;
+    while !pf.is_idle() {
+        tick += 1;
+        assert!(tick < 1000, "prefill engine failed to drain the disagg trace");
+        let out = pf.step().expect("deterministic backend cannot fail");
+        assert!(out.completed.is_empty(), "prefill side must not retire requests");
+        let mut handoffs = out.migrated_out.into_iter();
+        if let Some(head) = handoffs.next() {
+            assert!(dc.is_idle(), "regime: the decoder drains between deliveries");
+            dc.submit_migrated(head);
+            decode_iters += 1;
+            let o = dc.step().expect("deterministic backend cannot fail");
+            for f in o.completed {
+                record(&mut finish, f, decode_iters);
+            }
+            for mseq in handoffs {
+                dc.submit_migrated(mseq);
+            }
+            while !dc.is_idle() {
+                decode_iters += 1;
+                let o = dc.step().expect("deterministic backend cannot fail");
+                assert!(o.migrated_out.is_empty(), "decode side must not re-migrate");
+                for f in o.completed {
+                    record(&mut finish, f, decode_iters);
+                }
+            }
+        }
+        if first {
+            for (i, r) in trace.iter().enumerate().skip(1) {
+                pf.submit(i, prompt_of(r), r.output_tokens.max(1) as usize);
+            }
+            first = false;
+        }
+    }
+    assert!(dc.is_idle());
+    assert!(finish.iter().all(|&t| t > 0), "a request never completed: {finish:?}");
+    assert_eq!(
+        finish, des.finish_iters,
+        "live decode ticks must match the DES tick-for-tick"
+    );
+
+    let (pf_out, pf_in, pf_pages_out, pf_pages_in) = pf.migrate_counts();
+    let (dc_out, dc_in, dc_pages_out, dc_pages_in) = dc.migrate_counts();
+    assert_eq!(pf_out as usize, trace.len());
+    assert_eq!((pf_in, pf_pages_in), (0, 0));
+    assert_eq!((dc_out, dc_pages_out), (0, 0));
+    assert_eq!(dc_in as usize, des.migrations, "handoff counts must match the DES");
+    assert_eq!(
+        dc_pages_in as usize, des.migrate_pages,
+        "interconnect page traffic must match the DES"
+    );
+    assert_eq!(pf_pages_out, dc_pages_in, "every page sent must land exactly once");
 }
 
 #[test]

@@ -7,33 +7,44 @@ Two baseline shapes are understood:
 * **ratio floors** (the committed seed baseline): top-level
   `p95_speedup`, `throughput_gain`, `prefix.page_reduction`,
   `prefix.prefill_reduction`, `chunked.ttft_speedup`,
-  `swap.p95_speedup`, `swap.reprefill_reduction` — machine-independent
-  relative wins the fresh run must not regress below
-  `floor * (1 - RTOL)`.
+  `swap.p95_speedup`, `swap.reprefill_reduction`,
+  `disagg.ttft_p95_speedup` — machine-independent relative wins the
+  fresh run must not regress below `floor * (1 - RTOL)`.
 * **full report** (a captured BENCH_serving.json from the nightly
-  artifact's smoke run, committed as `--full-baseline`): additionally
-  gates the absolute continuous-mode `p95_s` (must not exceed
-  `baseline * (1 + ATOL)`) and `throughput_rps` (must not drop below
-  `baseline * (1 - ATOL)`). Absolute numbers are in *simulated*
-  seconds (time compression undone), so they are calibrated-model
-  quantities, not raw runner wall clock — still, ATOL is generous for
-  scheduler jitter on shared runners.
+  artifact's smoke run, promoted by `scripts/promote_baseline.py` and
+  committed as `--full-baseline`): additionally gates the absolute
+  continuous-mode `p95_s` (must not exceed `baseline * (1 + SLACK)`)
+  and `throughput_rps` (must not drop below `baseline * (1 - SLACK)`).
+  SLACK is `--atol` for a hand-authored envelope; a promoted baseline
+  (`"source": "nightly-capture"`) carries its own tighter `slack`
+  field — measured floors need less headroom than guessed ones.
+  Absolute numbers are in *simulated* seconds (time compression
+  undone), so they are calibrated-model quantities, not raw runner
+  wall clock — still, slack covers scheduler jitter on shared runners.
 
 `--full-baseline PATH` names the committed full report; a missing file
 is not an error (absolute gating simply reports "not yet baselined"),
 so the job can carry the flag before the first nightly capture is
-committed. The nightly bench-full job uploads its smoke-config run as
+committed. The nightly bench-full job promotes its smoke-config run as
 the re-baselining candidate.
+
+`--check-baselines [DIR]` is a standalone mode: schema-validate every
+committed `BENCH_*.json` in DIR (default `.`) — the lint job runs it
+so a malformed or floor-less baseline fails CI *before* a bench run
+silently gates against garbage.
 
 Exit 0 = within band; exit 1 = regression (each violation printed).
 
 Usage: bench_gate.py <fresh.json> <baseline.json>
            [--full-baseline BENCH_baseline_full.json]
            [--rtol 0.25] [--atol 0.40]
+       bench_gate.py --check-baselines [DIR]
 """
 
 import argparse
+import glob
 import json
+import os
 import sys
 
 
@@ -79,13 +90,97 @@ def derived_ratios(report: dict) -> dict:
         out["prefix.prefill_reduction"] = prefix["baseline_prefill_tokens"] / max(
             prefix["shared_prefill_tokens"], 1
         )
+    disagg = report.get("disagg", {})
+    if "ttft_p95_speedup" in disagg:
+        out["disagg.ttft_p95_speedup"] = float(disagg["ttft_p95_speedup"])
+    elif disagg.get("disagg_p95_ttft_s"):
+        out["disagg.ttft_p95_speedup"] = disagg["unified_p95_ttft_s"] / max(
+            disagg["disagg_p95_ttft_s"], 1e-12
+        )
     return out
+
+
+# Required floors of the primary (ratio-floor) baseline: a committed
+# baseline missing one would silently stop gating that win.
+REQUIRED_FLOORS = (
+    "p95_speedup",
+    "throughput_gain",
+    "prefix.page_reduction",
+    "prefix.prefill_reduction",
+    "chunked.ttft_speedup",
+    "swap.p95_speedup",
+    "swap.reprefill_reduction",
+    "disagg.ttft_p95_speedup",
+)
+
+
+def check_baseline_file(path: str) -> list:
+    """Schema-validate one committed BENCH_*.json; returns violations."""
+    problems = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable or invalid JSON ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be a JSON object"]
+
+    name = os.path.basename(path)
+    is_full = "continuous" in doc or doc.get("source") == "nightly-capture"
+    if name == "BENCH_baseline.json" or (not is_full and "p95_speedup" in doc):
+        ratios = derived_ratios(doc)
+        for key in REQUIRED_FLOORS:
+            v = ratios.get(key)
+            if v is None:
+                problems.append(f"{path}: missing ratio floor '{key}'")
+            elif not (isinstance(v, (int, float)) and v > 0 and v == v and v != float("inf")):
+                problems.append(f"{path}: ratio floor '{key}' must be a positive finite number, got {v!r}")
+    if is_full:
+        cont = doc.get("continuous")
+        if not isinstance(cont, dict):
+            problems.append(f"{path}: full baseline lacks a 'continuous' section")
+        else:
+            for key in ("p95_s", "throughput_rps"):
+                v = cont.get(key)
+                if not (isinstance(v, (int, float)) and v > 0):
+                    problems.append(f"{path}: continuous.{key} must be a positive number, got {v!r}")
+        slack = doc.get("slack")
+        if slack is not None and not (isinstance(slack, (int, float)) and 0 < slack <= 1):
+            problems.append(f"{path}: slack must be in (0, 1], got {slack!r}")
+        src = doc.get("source")
+        if src is not None and not isinstance(src, str):
+            problems.append(f"{path}: source must be a string label, got {src!r}")
+        if doc.get("source") == "nightly-capture" and slack is None:
+            problems.append(f"{path}: a nightly-capture baseline must carry its measured 'slack'")
+    return problems
+
+
+def check_baselines(root: str) -> int:
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    # Fresh bench output sitting in a workspace is not a baseline.
+    paths = [p for p in paths if "baseline" in os.path.basename(p)]
+    if not paths:
+        print(f"no BENCH_*baseline*.json under {root}", file=sys.stderr)
+        return 1
+    problems = []
+    for p in paths:
+        got = check_baseline_file(p)
+        problems.extend(got)
+        if not got:
+            print(f"ok  {p}")
+    if problems:
+        print("\nBASELINE SCHEMA ERRORS:", file=sys.stderr)
+        for msg in problems:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\n{len(paths)} baseline file(s) schema-valid")
+    return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh")
-    ap.add_argument("baseline")
+    ap.add_argument("fresh", nargs="?")
+    ap.add_argument("baseline", nargs="?")
     ap.add_argument(
         "--full-baseline",
         default=None,
@@ -94,7 +189,20 @@ def main() -> int:
     )
     ap.add_argument("--rtol", type=float, default=0.25, help="ratio-floor tolerance")
     ap.add_argument("--atol", type=float, default=0.40, help="absolute tolerance")
+    ap.add_argument(
+        "--check-baselines",
+        nargs="?",
+        const=".",
+        default=None,
+        metavar="DIR",
+        help="schema-validate committed BENCH_*baseline*.json under DIR and exit",
+    )
     args = ap.parse_args()
+
+    if args.check_baselines is not None:
+        return check_baselines(args.check_baselines)
+    if not args.fresh or not args.baseline:
+        ap.error("fresh and baseline reports are required (or use --check-baselines)")
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -118,9 +226,12 @@ def main() -> int:
     for flag in ("win", "occupancy_ok"):
         if fresh.get(flag) is not True:
             failures.append(f"fresh report flag '{flag}' is not true")
-    for section in ("prefix", "chunked", "swap"):
+    for section in ("prefix", "chunked", "swap", "disagg"):
         if fresh.get(section, {}).get("win") is not True:
             failures.append(f"fresh report flag '{section}.win' is not true")
+    disagg = fresh.get("disagg", {})
+    if disagg and not disagg.get("migrations"):
+        failures.append("disagg section reports zero prefill->decode migrations")
     # Tracing-overhead gate: tolerated as absent (reports predating the
     # obs subsystem), but when the section exists it must be green and
     # must have actually recorded events.
@@ -187,26 +298,33 @@ def main() -> int:
 
     # Absolute p95 / throughput when a full report is available: the
     # committed --full-baseline wins, else a full-shaped primary
-    # baseline (backward compatible).
-    base_cont = (full or base).get("continuous", {})
+    # baseline (backward compatible). A measured (nightly-capture)
+    # baseline carries its own slack — tighter than the hand-authored
+    # envelope's --atol, because its floors were observed, not guessed.
+    abs_src = full or base
+    base_cont = abs_src.get("continuous", {})
     fresh_cont = fresh.get("continuous", {})
+    slack = args.atol
+    if abs_src.get("source") == "nightly-capture" and "slack" in abs_src:
+        slack = float(abs_src["slack"])
+        print(f"measured baseline ({abs_src.get('captured_at', 'nightly-capture')}): slack {slack}")
     if "p95_s" in base_cont:
-        cap = base_cont["p95_s"] * (1.0 + args.atol)
+        cap = base_cont["p95_s"] * (1.0 + slack)
         got = fresh_cont.get("p95_s", float("inf"))
         if got > cap:
             failures.append(
                 f"continuous.p95_s: fresh {got:.3f}s > baseline {base_cont['p95_s']:.3f}s"
-                f" * (1+{args.atol}) = {cap:.3f}s"
+                f" * (1+{slack}) = {cap:.3f}s"
             )
         else:
             print(f"ok  continuous.p95_s: {got:.3f}s <= cap {cap:.3f}s")
     if "throughput_rps" in base_cont:
-        floor = base_cont["throughput_rps"] * (1.0 - args.atol)
+        floor = base_cont["throughput_rps"] * (1.0 - slack)
         got = fresh_cont.get("throughput_rps", 0.0)
         if got < floor:
             failures.append(
                 f"continuous.throughput_rps: fresh {got:.3f} < baseline"
-                f" {base_cont['throughput_rps']:.3f} * (1-{args.atol}) = {floor:.3f}"
+                f" {base_cont['throughput_rps']:.3f} * (1-{slack}) = {floor:.3f}"
             )
         else:
             print(f"ok  continuous.throughput_rps: {got:.3f} >= floor {floor:.3f}")

@@ -40,10 +40,13 @@ def unwrap_scope(rel):
 def determinism_scope(rel):
     # `obs/` is pinned (the DES emits trace events through it) except
     # `obs/clock.rs`, the designated wall-clock boundary.
+    # `engine/migrate.rs` is pinned because the disagg DES models the
+    # MigrationHub's exact routing.
     return (
         rel.startswith("sim/")
         or rel.startswith("sched/")
         or rel == "engine/scheduler.rs"
+        or rel == "engine/migrate.rs"
         or (rel.startswith("obs/") and rel != "obs/clock.rs")
     )
 

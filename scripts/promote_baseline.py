@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Promote a captured smoke-config bench run to the measured absolute
+baseline (`BENCH_baseline_full.json`).
+
+The nightly `bench-full` job runs the smoke bench config (the same
+config the push/PR gate runs), captures its report, and feeds it here.
+Promotion validates that the capture is *green* — every win flag true,
+occupancy held, migrations actually happened — and then rewrites it as
+a baseline document:
+
+* `"source": "nightly-capture"` labels it as measured, which makes
+  `scripts/bench_gate.py` apply the file's own `slack` to the absolute
+  p95/throughput floors instead of the looser hand-authored `--atol`
+  envelope (measured floors need less headroom than guessed ones);
+* `continuous.p95_s` / `continuous.throughput_rps` are copied verbatim
+  — the gate's absolute anchors;
+* the machine-independent win ratios ride along under `ratios` for
+  review (the primary `BENCH_baseline.json` floors stay hand-curated).
+
+A red capture refuses to promote (exit 1): regressing the *baseline*
+to match a regression is exactly what this pipeline exists to prevent.
+Committing the artifact this script writes is still a human act — CI
+only uploads it.
+
+Usage: promote_baseline.py <captured_smoke.json>
+           [--out BENCH_baseline_full.json] [--slack 0.25]
+           [--captured-at LABEL]
+"""
+
+import argparse
+import json
+import sys
+
+from bench_gate import derived_ratios, REQUIRED_FLOORS
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("capture", help="smoke-config BENCH_serving.json to promote")
+    ap.add_argument("--out", default="BENCH_baseline_full.json")
+    ap.add_argument(
+        "--slack",
+        type=float,
+        default=0.25,
+        help="absolute tolerance the promoted baseline carries (tighter than"
+        " the hand-authored envelope's 0.40)",
+    )
+    ap.add_argument(
+        "--captured-at",
+        default=None,
+        help="provenance label (e.g. the capturing commit SHA or run id)",
+    )
+    args = ap.parse_args()
+    if not 0 < args.slack <= 1:
+        ap.error(f"--slack must be in (0, 1], got {args.slack}")
+
+    with open(args.capture) as f:
+        cap = json.load(f)
+
+    problems = []
+    for flag in ("win", "occupancy_ok"):
+        if cap.get(flag) is not True:
+            problems.append(f"capture flag '{flag}' is not true")
+    for section in ("prefix", "chunked", "swap", "disagg"):
+        if cap.get(section, {}).get("win") is not True:
+            problems.append(f"capture flag '{section}.win' is not true")
+    if not cap.get("disagg", {}).get("migrations"):
+        problems.append("capture saw zero prefill->decode migrations")
+    cont = cap.get("continuous", {})
+    for key in ("p95_s", "throughput_rps"):
+        v = cont.get(key)
+        if not (isinstance(v, (int, float)) and v > 0):
+            problems.append(f"capture continuous.{key} must be a positive number, got {v!r}")
+    ratios = derived_ratios(cap)
+    for key in REQUIRED_FLOORS:
+        if key not in ratios:
+            problems.append(f"capture lacks ratio '{key}'")
+    if problems:
+        print("REFUSING TO PROMOTE (capture is not green):", file=sys.stderr)
+        for msg in problems:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+
+    doc = {
+        "_comment": (
+            "Measured absolute-envelope baseline for scripts/bench_gate.py"
+            " --full-baseline, promoted from a nightly smoke-config capture"
+            " by scripts/promote_baseline.py. The gate applies this file's"
+            " 'slack' to the continuous p95/throughput floors."
+        ),
+        "source": "nightly-capture",
+        "slack": args.slack,
+        "continuous": {
+            "p95_s": cont["p95_s"],
+            "throughput_rps": cont["throughput_rps"],
+        },
+        "ratios": {k: ratios[k] for k in REQUIRED_FLOORS},
+    }
+    if args.captured_at:
+        doc["captured_at"] = args.captured_at
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(
+        f"promoted {args.capture} -> {args.out}:"
+        f" p95 {cont['p95_s']:.3f}s, {cont['throughput_rps']:.3f} rps,"
+        f" slack {args.slack}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
