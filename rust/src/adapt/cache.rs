@@ -130,6 +130,7 @@ mod tests {
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
                     disagg: None,
+                    speculation: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -139,6 +140,7 @@ mod tests {
                     processing_ratio: 0.25,
                     predicted_p95: 2.0,
                     disagg: None,
+                    speculation: None,
                 },
             ],
             predicted_latency: 2.0,

@@ -84,12 +84,17 @@ fn unwrap_scope(rel: &str) -> bool {
 /// Is `rel` inside the determinism-pinned modules? `obs/` is pinned
 /// because the DES emits through it (shared tracing path), EXCEPT
 /// `obs/clock.rs` — the designated wall-clock boundary, the one place
-/// allowed to read `Instant::now`.
+/// allowed to read `Instant::now`. `engine/spec.rs` is pinned because
+/// the DES models draft agreement with the same pure function the
+/// live [`crate::engine::SpecPair`] replays through — ambient
+/// randomness or wall-clock there would break the DES↔live
+/// accepted/rejected-count pin.
 fn determinism_scope(rel: &str) -> bool {
     rel.starts_with("sim/")
         || rel.starts_with("sched/")
         || rel == "engine/scheduler.rs"
         || rel == "engine/migrate.rs"
+        || rel == "engine/spec.rs"
         || (rel.starts_with("obs/") && rel != "obs/clock.rs")
 }
 

@@ -317,6 +317,22 @@ fn t() {
     }
 
     #[test]
+    fn determinism_fires_in_engine_spec() {
+        // The DES models draft agreement with the same pure function
+        // the live SpecPair replays through, so engine/spec.rs is
+        // determinism-pinned by exact path: ambient randomness or a
+        // wall-clock read there would break the DES↔live
+        // accepted/rejected-count pin.
+        let src = "fn f() -> u64 { tick(std::time::Instant::now()) }\n";
+        let v = lint_source("engine/spec.rs", src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+        let hash_src = "use std::collections::HashMap;\n";
+        let v = lint_source("engine/spec.rs", hash_src);
+        assert_eq!(rules_of(&v), ["determinism"], "{v:?}");
+        assert!(lint_source("engine/kv.rs", src).is_empty(), "scope is by exact path");
+    }
+
+    #[test]
     fn determinism_instant_now_fires_in_obs() {
         // The DES emits trace events through obs/ — wall-clock reads
         // there would silently de-determinize the shared tracing path.

@@ -68,6 +68,7 @@ pub fn standalone_plan(
                     processing_ratio: 1.0,
                     predicted_p95: p95,
                     disagg: None,
+                    speculation: None,
                 }
             } else {
                 TierPlan {
@@ -78,6 +79,7 @@ pub fn standalone_plan(
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
                     disagg: None,
+                    speculation: None,
                 }
             }
         })
@@ -212,6 +214,7 @@ pub fn cascade_serve_plan(
                     processing_ratio: routing.processing_ratios[i],
                     predicted_p95: 0.0,
                     disagg: None,
+                    speculation: None,
                 });
                 continue;
             }
@@ -244,6 +247,7 @@ pub fn cascade_serve_plan(
                 processing_ratio: routing.processing_ratios[i],
                 predicted_p95: p95,
                 disagg: None,
+                speculation: None,
             });
         }
         if !feasible {

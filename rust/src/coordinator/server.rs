@@ -32,7 +32,7 @@ use anyhow::Result;
 use crate::cluster::ClusterSpec;
 use crate::coordinator::batcher::Batcher;
 use crate::engine::{
-    prompt_page_hashes, EngineConfig, EngineCore, EngineRole, MigrationHub, StepBackend,
+    prompt_page_hashes, EngineConfig, EngineCore, EngineRole, MigrationHub, SpecPair, StepBackend,
 };
 use crate::models::ModelSpec;
 use crate::obs::{
@@ -41,7 +41,7 @@ use crate::obs::{
 };
 use crate::perf::{ReplicaModel, DEFAULT_PAGE_TOKENS};
 use crate::router::{Decision, PolicySpec, RequestFeatures, RoutingPolicy};
-use crate::sched::plan::{CascadePlan, DisaggSpec};
+use crate::sched::plan::{CascadePlan, DisaggSpec, SpecSpec};
 use crate::util::stats;
 use crate::util::sync::{CondvarExt, LockExt, RwLockExt};
 
@@ -194,6 +194,7 @@ impl ServeControl {
                 self.n_tiers
             );
         }
+        validate_speculation(&config.speculation, &config.disagg, self.n_tiers)?;
         config.policy.validate(self.n_tiers)?;
         *self.pending.plock() = Some(config);
         Ok(())
@@ -207,6 +208,46 @@ impl ServeControl {
     fn take_pending(&self) -> Option<ServerConfig> {
         self.pending.plock().take()
     }
+}
+
+/// Validate a config's per-tier speculation against the cascade shape
+/// (shared by server construction and hot-swap admission): the vector
+/// covers all tiers or none, tier 0 never speculates (there is no
+/// shallower tier to draft with), depths and acceptance rates are
+/// sane, and speculation never rides a disaggregated tier — a
+/// [`SpecPair`]'s draft state does not survive the prefill→decode KV
+/// handoff.
+fn validate_speculation(
+    speculation: &[Option<SpecSpec>],
+    disagg: &[Option<DisaggSpec>],
+    n_tiers: usize,
+) -> Result<()> {
+    if !speculation.is_empty() && speculation.len() != n_tiers {
+        anyhow::bail!(
+            "speculation covers {} tiers but the server runs {}",
+            speculation.len(),
+            n_tiers
+        );
+    }
+    for (t, s) in speculation.iter().enumerate() {
+        let Some(s) = s else { continue };
+        if t == 0 {
+            anyhow::bail!("tier 0 cannot speculate: there is no shallower tier to draft with");
+        }
+        if s.draft_k == 0 {
+            anyhow::bail!("tier {t}: speculation needs draft_k >= 1");
+        }
+        if !(0.0..=1.0).contains(&s.acceptance) {
+            anyhow::bail!("tier {t}: speculation acceptance {} outside [0, 1]", s.acceptance);
+        }
+        if disagg.get(t).copied().flatten().is_some() {
+            anyhow::bail!(
+                "tier {t}: speculation cannot ride a prefill/decode split \
+                 (draft state does not survive the KV handoff)"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Render a caught worker panic payload for the error path.
@@ -254,6 +295,8 @@ struct EngineTierCounters {
     swap_bytes: AtomicUsize,
     migrations: AtomicUsize,
     migrate_pages: AtomicUsize,
+    spec_accepted_tokens: AtomicUsize,
+    spec_rejected_tokens: AtomicUsize,
 }
 
 /// The continuous-batching inner loop of one tier worker: admit from
@@ -283,6 +326,7 @@ fn continuous_worker_loop(
     role: EngineRole,
     hub: Option<&MigrationHub<LiveRequest>>,
     pool_pages: &AtomicUsize,
+    spec_k: &AtomicUsize,
     counters: &EngineTierCounters,
     tier_state: &TierState,
     alive: &AtomicUsize,
@@ -306,6 +350,13 @@ fn continuous_worker_loop(
         let budget = pool_pages.load(Ordering::SeqCst).max(1);
         engine.set_pool_pages(budget);
         counters.peak_pool_pages.fetch_max(budget, Ordering::SeqCst);
+        // Pick up a hot-swapped draft depth (0 disables drafting).
+        // Safe between steps: a draft never spans an iteration, so no
+        // draft state is stranded by flipping the knob here.
+        let k = spec_k.load(Ordering::SeqCst);
+        if engine.speculation() != k {
+            engine.set_speculation(k);
+        }
         if role == EngineRole::Prefill {
             // Mirror the hub's backpressure into the scheduler each
             // iteration: a closed hub (no live decoder, or transit
@@ -414,6 +465,12 @@ fn continuous_worker_loop(
                 counters.cow_copies.fetch_add(out.cow_copies, Ordering::SeqCst);
                 counters.swap_outs.fetch_add(out.swap_outs, Ordering::SeqCst);
                 counters.swap_ins.fetch_add(out.swap_ins, Ordering::SeqCst);
+                counters
+                    .spec_accepted_tokens
+                    .fetch_add(out.spec_accepted, Ordering::SeqCst);
+                counters
+                    .spec_rejected_tokens
+                    .fetch_add(out.spec_rejected, Ordering::SeqCst);
                 counters.swap_bytes.fetch_add(
                     (out.swap_pages as f64 * cfg.preemption.page_bytes) as usize,
                     Ordering::SeqCst,
@@ -525,6 +582,16 @@ pub struct ServerConfig {
     /// serves the tier unified. The split is fixed for a run: hot-swaps
     /// leave a disaggregated tier's worker counts untouched.
     pub disagg: Vec<Option<DisaggSpec>>,
+    /// Per-tier cross-tier speculative decoding (empty vec or `None`
+    /// entries = plain decode). A speculating tier's workers draft
+    /// `draft_k` tokens per steady decoder with a tier-below backend
+    /// and verify them in one step — lossless: every emitted token is
+    /// the tier's own model's choice. Never valid on tier 0 (no
+    /// shallower tier to draft with) or on a tier that also runs a
+    /// prefill/decode split (draft state does not survive the KV
+    /// handoff). Takes effect only under [`ExecMode::Continuous`];
+    /// hot-swaps retune or disable the depth at iteration boundaries.
+    pub speculation: Vec<Option<SpecSpec>>,
 }
 
 impl ServerConfig {
@@ -542,12 +609,18 @@ impl ServerConfig {
             max_new_tokens,
             exec: ExecMode::BatchLockstep,
             disagg: Vec::new(),
+            speculation: Vec::new(),
         })
     }
 
     /// The prefill/decode split configured for `tier`, if any.
     pub fn disagg_for(&self, tier: usize) -> Option<DisaggSpec> {
         self.disagg.get(tier).copied().flatten()
+    }
+
+    /// The speculative-decoding config of `tier`, if any.
+    pub fn speculation_for(&self, tier: usize) -> Option<SpecSpec> {
+        self.speculation.get(tier).copied().flatten()
     }
 
     /// Switch this configuration to the continuous-batching engine
@@ -581,6 +654,7 @@ impl ServerConfig {
             max_new_tokens,
             exec: ExecMode::BatchLockstep,
             disagg: plan.tiers.iter().map(|t| t.disagg).collect(),
+            speculation: plan.tiers.iter().map(|t| t.speculation).collect(),
         })
     }
 
@@ -736,6 +810,13 @@ pub struct TierEngineStats {
     /// Private KV pages that crossed the interconnect with those
     /// handoffs (shared prefix pages re-claim locally and don't count).
     pub migrate_pages: usize,
+    /// Draft tokens the tier's verify steps accepted (0 on tiers
+    /// without speculation). Each accepted token is one decode
+    /// iteration the deep tier did not have to run.
+    pub spec_accepted_tokens: usize,
+    /// Draft tokens rejected at verification (the losslessness price:
+    /// rejected positions are re-emitted by the verify model itself).
+    pub spec_rejected_tokens: usize,
 }
 
 /// Aggregate statistics of a serving run.
@@ -916,6 +997,7 @@ impl CascadeServer {
                 }
             }
         }
+        validate_speculation(&config.speculation, &config.disagg, config.replicas.len())?;
         config.policy.validate(config.replicas.len())?;
         Ok(CascadeServer { config, telemetry: None })
     }
@@ -1032,6 +1114,15 @@ impl CascadeServer {
         let pool_pages_live: Vec<AtomicUsize> = (0..c)
             .map(|t| AtomicUsize::new(engine_mode.map(|v| v[t].pool_pages).unwrap_or(0)))
             .collect();
+        // Per-tier live draft depth (the speculation hot-swap lever —
+        // workers re-read it at every iteration boundary; 0 = off).
+        let spec_k_live: Vec<AtomicUsize> = (0..c)
+            .map(|t| {
+                AtomicUsize::new(
+                    self.config.speculation_for(t).map(|s| s.draft_k).unwrap_or(0),
+                )
+            })
+            .collect();
         let engine_counters: Vec<EngineTierCounters> =
             (0..c).map(|_| EngineTierCounters::default()).collect();
         // Per-tier migration hubs for disaggregated tiers (continuous
@@ -1076,6 +1167,8 @@ impl CascadeServer {
             let hubs_ref = &hubs;
             let max_new = &max_new_live;
             let pool_live_ref = &pool_pages_live;
+            let spec_live_ref = &spec_k_live;
+            let spec_cfg = &self.config.speculation;
             let engine_ctr_ref = &engine_counters;
             let telem_ref = &telem;
             let clock_ref = &clock;
@@ -1101,8 +1194,23 @@ impl CascadeServer {
                     // to the replica-death path: an unwinding worker
                     // would bypass the alive/WorkerDead accounting and
                     // leave the router waiting forever.
+                    // A speculating tier pairs its verify backend with
+                    // a tier-below draft backend behind a [`SpecPair`],
+                    // giving generate-based backends the draft/verify
+                    // stepping interface. Backends with native stepping
+                    // keep it — the engine probes their own
+                    // draft/verify and falls back to plain decode where
+                    // unsupported.
+                    let wants_spec = engine_mode.is_some()
+                        && tier > 0
+                        && spec_cfg.get(tier).copied().flatten().is_some();
                     let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        factory(tier)
+                        let mut b = factory(tier)?;
+                        if wants_spec && b.step_backend().is_none() {
+                            return Ok(Box::new(SpecPair::new(factory(tier - 1)?, b))
+                                as Box<dyn TierBackend>);
+                        }
+                        Ok(b)
                     }))
                     .unwrap_or_else(|p| {
                         Err(anyhow::anyhow!("backend factory panicked: {}", panic_msg(&*p)))
@@ -1131,6 +1239,7 @@ impl CascadeServer {
                             role,
                             hubs_ref[tier].as_ref(),
                             &pool_live_ref[tier],
+                            &spec_live_ref[tier],
                             &engine_ctr_ref[tier],
                             tier_state,
                             &alive[tier],
@@ -1366,6 +1475,24 @@ impl CascadeServer {
                                     pool_pages_live[t]
                                         .store(e.pool_pages.max(1), Ordering::SeqCst);
                                 }
+                            }
+                            // Retune (or disable) draft depths: workers
+                            // pick the new value up at their next
+                            // iteration boundary. A config without the
+                            // dimension turns speculation off — drafts
+                            // never span an iteration, so nothing is
+                            // stranded. A tier whose launch config had
+                            // no speculation stays plain (its workers
+                            // were never paired with a draft backend).
+                            for t in 0..c {
+                                let k = next
+                                    .speculation
+                                    .get(t)
+                                    .copied()
+                                    .flatten()
+                                    .map(|s| s.draft_k)
+                                    .unwrap_or(0);
+                                spec_k_live[t].store(k, Ordering::SeqCst);
                             }
                         }
                         for t in 0..c {
@@ -1657,6 +1784,12 @@ impl CascadeServer {
                     swap_bytes: engine_counters[t].swap_bytes.load(Ordering::SeqCst),
                     migrations: engine_counters[t].migrations.load(Ordering::SeqCst),
                     migrate_pages: engine_counters[t].migrate_pages.load(Ordering::SeqCst),
+                    spec_accepted_tokens: engine_counters[t]
+                        .spec_accepted_tokens
+                        .load(Ordering::SeqCst),
+                    spec_rejected_tokens: engine_counters[t]
+                        .spec_rejected_tokens
+                        .load(Ordering::SeqCst),
                 })
                 .collect();
             if let Some(tm) = &telem {
@@ -1876,6 +2009,7 @@ mod tests {
             max_new_tokens: 4,
             exec: ExecMode::BatchLockstep,
             disagg: Vec::new(),
+            speculation: Vec::new(),
         })
         .unwrap();
         let mut trace: Vec<(f64, Vec<i32>)> = Vec::new();
@@ -1906,6 +2040,7 @@ mod tests {
             max_new_tokens: 4,
             exec: ExecMode::BatchLockstep,
             disagg: Vec::new(),
+            speculation: Vec::new(),
         })
         .unwrap();
         let trace: Vec<(f64, Vec<i32>)> = (0..8).map(|_| (0.0, vec![2, 9])).collect();
@@ -1934,6 +2069,7 @@ mod tests {
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
                     disagg: None,
+                    speculation: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -1943,6 +2079,7 @@ mod tests {
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
                     disagg: None,
+                    speculation: None,
                 },
             ],
             predicted_latency: 1.0,
@@ -2060,6 +2197,7 @@ mod tests {
                     processing_ratio: 0.5,
                     predicted_p95: 1.0,
                     disagg: None,
+                    speculation: None,
                 })
                 .collect(),
             predicted_latency: 1.0,
@@ -2101,6 +2239,7 @@ mod tests {
             max_new_tokens: 2,
             exec: ExecMode::BatchLockstep,
             disagg: Vec::new(),
+            speculation: Vec::new(),
         });
         assert!(err.is_err());
     }
@@ -2377,6 +2516,7 @@ mod tests {
                     processing_ratio: 1.0,
                     predicted_p95: 1.0,
                     disagg: None,
+                    speculation: None,
                 },
                 TierPlan {
                     model_name: cascade[1].name.to_string(),
@@ -2386,6 +2526,7 @@ mod tests {
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
                     disagg: None,
+                    speculation: None,
                 },
             ],
             predicted_latency: 1.0,
@@ -2673,5 +2814,135 @@ mod tests {
             .per_request()
             .values()
             .all(|evs| evs.iter().all(|e| e.kind != K::HotSwapApplied)));
+    }
+
+    // ---- Cross-tier speculative decoding ----
+
+    #[test]
+    fn speculation_config_is_validated_at_construction_and_hot_swap() {
+        let spec = Some(SpecSpec { draft_k: 3, acceptance: 0.5 });
+        // Tier 0 has no shallower tier to draft with.
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![spec, None];
+        assert!(CascadeServer::new(cfg).is_err());
+        // Arity must match the cascade.
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![spec];
+        assert!(CascadeServer::new(cfg).is_err());
+        // draft_k 0 and out-of-range acceptance are rejected.
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![None, Some(SpecSpec { draft_k: 0, acceptance: 0.5 })];
+        assert!(CascadeServer::new(cfg).is_err());
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![None, Some(SpecSpec { draft_k: 2, acceptance: 1.5 })];
+        assert!(CascadeServer::new(cfg).is_err());
+        // Speculation never rides a disaggregated tier: a SpecPair's
+        // draft state does not survive the prefill->decode handoff.
+        let mut cfg = disagg_config();
+        cfg.disagg = vec![None, Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 })];
+        cfg.replicas = vec![3, 2];
+        cfg.speculation = vec![None, spec];
+        assert!(CascadeServer::new(cfg).is_err());
+        // The hot-swap gate applies the same rules.
+        let control = ServeControl::new(2);
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![spec, None];
+        assert!(control.apply_config(cfg).is_err());
+        // A well-formed speculating config passes both gates.
+        let mut cfg = continuous_config();
+        cfg.speculation = vec![None, spec];
+        assert!(CascadeServer::new(cfg.clone()).is_ok());
+        assert!(control.apply_config(cfg).is_ok());
+    }
+
+    #[test]
+    fn speculative_tier_is_lossless_and_counts_draft_tokens() {
+        // Difficulty-2 prompts fail BOTH tiers, so tier 0's draft
+        // stream agrees with tier 1's verify stream (both emit 0s) and
+        // drafts are accepted. Difficulty-1 prompts disagree at every
+        // position (tier 0 emits 0s, tier 1 emits 1s), so every draft
+        // is rejected — the losslessness price, paid without changing
+        // a single output token.
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..16).map(|i| (0.0, vec![1 + (i % 2) as i32, 7, 8])).collect();
+        let run = |speculation: Vec<Option<SpecSpec>>| {
+            let mut cfg = continuous_config();
+            cfg.speculation = speculation;
+            let server = CascadeServer::new(cfg).unwrap();
+            server.serve(&trace, &factory, &FakeJudger).unwrap()
+        };
+        let plain = run(Vec::new());
+        let spec = run(vec![None, Some(SpecSpec { draft_k: 3, acceptance: 0.5 })]);
+        assert_eq!(spec.completions.len(), 16);
+        let outputs = |s: &ServerStats| {
+            let mut v: Vec<(usize, usize, Vec<i32>)> = s
+                .completions
+                .iter()
+                .map(|c| (c.id, c.accepting_tier, c.output.clone()))
+                .collect();
+            v.sort();
+            v
+        };
+        // Identical routing and bit-identical outputs: speculation is
+        // an execution detail, never a quality change.
+        assert_eq!(outputs(&plain), outputs(&spec));
+        let e = &spec.engine[1];
+        assert!(e.spec_accepted_tokens > 0, "agreeing drafts must be accepted: {e:?}");
+        assert!(e.spec_rejected_tokens > 0, "disagreeing drafts must be rejected: {e:?}");
+        assert_eq!(spec.engine[0].spec_accepted_tokens, 0, "tier 0 never drafts");
+        assert_eq!(spec.engine[0].spec_rejected_tokens, 0);
+        assert_eq!(plain.engine[1].spec_accepted_tokens, 0);
+        assert_eq!(plain.engine[1].spec_rejected_tokens, 0);
+    }
+
+    #[test]
+    fn hot_swap_disables_speculation_without_orphaning_drafts() {
+        // Speculation is live on tier 1 with drafts in flight when a
+        // mid-run hot-swap disables it and shrinks the KV pools. Every
+        // request must complete exactly once with bit-identical
+        // outputs — no draft state may be orphaned by the flip, and
+        // the tail of the run must decode plainly.
+        let spec_cfg = |speculation: Vec<Option<SpecSpec>>, pool: usize| {
+            let mut cfg =
+                ServerConfig::with_thresholds(vec![2, 1], vec![4, 4], vec![50.0], 8)
+                    .unwrap()
+                    .continuous(swap_engine_cfgs(2, pool));
+            cfg.speculation = speculation;
+            cfg
+        };
+        let server = CascadeServer::new(spec_cfg(
+            vec![None, Some(SpecSpec { draft_k: 3, acceptance: 0.5 })],
+            8,
+        ))
+        .unwrap();
+        let control = ServeControl::new(2);
+        let swap = SwapAt {
+            control: Arc::clone(&control),
+            at: 12,
+            next: spec_cfg(Vec::new(), 6),
+            fired: AtomicBool::new(false),
+        };
+        // All difficulty-2: every request escalates and speculates on
+        // tier 1 (full agreement: both tiers emit 0s). Arrivals are
+        // staggered so early requests are drafting on tier 1 well
+        // before the swap request (#12) is even admitted.
+        let trace: Vec<(f64, Vec<i32>)> =
+            (0..24).map(|i| (i as f64 * 0.005, vec![2, 7, 8])).collect();
+        let stats = server
+            .serve_adaptive(&trace, &factory, &FakeJudger, &control, Some(&swap))
+            .unwrap();
+        assert_eq!(stats.completions.len(), 24, "no draft state may be orphaned");
+        let mut ids: Vec<usize> = stats.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>(), "exactly-once across the swap");
+        assert_eq!(control.hot_swaps(), 1);
+        for c in &stats.completions {
+            assert_eq!(c.output, vec![0; 8], "req {}: speculation altered tokens", c.id);
+        }
+        let e = &stats.engine[1];
+        assert!(
+            e.spec_accepted_tokens > 0,
+            "drafts must have been in flight before the swap: {e:?}"
+        );
     }
 }

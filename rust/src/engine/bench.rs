@@ -24,7 +24,11 @@
 //! shares across escalated requests too). The **chunked** section
 //! serves a short/long prompt mix twice — whole-prompt admission vs a
 //! chunk budget — and reports the p95 TTFT reduction from removing
-//! prefill head-of-line blocking.
+//! prefill head-of-line blocking. The **spec** section serves an
+//! escalate-everything trace twice — tier-1 cross-tier speculation off
+//! vs on — and gates that agreement-heavy drafts cut deep-tier
+//! iterations and p95 while both arms emit byte-identical outputs
+//! (the losslessness contract, measured end to end).
 //!
 //! Time is compressed by `time_scale` (arrivals and sleeps divided,
 //! latencies multiplied back for reporting) and decode is represented
@@ -36,6 +40,7 @@
 //! (`BENCH_serving.json`) is the perf-trajectory artifact CI gates on
 //! against `BENCH_baseline.json`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -52,14 +57,15 @@ use crate::metrics::LatencySummary;
 use crate::models::{llama_cascade, ModelSpec};
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 use crate::router::PolicySpec;
-use crate::sched::plan::DisaggSpec;
+use crate::sched::plan::{DisaggSpec, SpecSpec};
 use crate::util::json::Json;
 use crate::util::stats;
 use crate::workload::{estimate_stats, generate_phased, paper_trace, PhasedTraceSpec, Request};
 
-use super::core::{EngineConfig, StepBackend};
+use super::core::{EngineConfig, StepBackend, VerifyOutcome};
 use super::kv::SeqId;
 use super::scheduler::{PreemptionConfig, PreemptionMode};
+use super::spec::draft_agrees;
 
 /// Benchmark knobs; [`BenchConfig::full`] is what `cascadia bench`
 /// runs, [`BenchConfig::smoke`] the CI-sized variant.
@@ -107,6 +113,13 @@ pub struct BenchConfig {
     pub disagg_requests: usize,
     pub disagg_prompt_tokens: usize,
     pub disagg_decode_steps: usize,
+    /// Speculation section: escalation-heavy requests served with
+    /// tier-1 cross-tier speculation off vs on, their decode depth
+    /// (token-granular like the chunked section), and the draft depth
+    /// of the on arm.
+    pub spec_requests: usize,
+    pub spec_decode_steps: usize,
+    pub spec_draft_k: usize,
 }
 
 impl BenchConfig {
@@ -135,6 +148,9 @@ impl BenchConfig {
             disagg_requests: 40,
             disagg_prompt_tokens: 1024,
             disagg_decode_steps: 32,
+            spec_requests: 24,
+            spec_decode_steps: 48,
+            spec_draft_k: 4,
         }
     }
 
@@ -152,6 +168,8 @@ impl BenchConfig {
             mix_long_requests: 2,
             swap_requests: 10,
             disagg_requests: 24,
+            spec_requests: 10,
+            spec_decode_steps: 32,
             ..BenchConfig::full()
         }
     }
@@ -275,6 +293,41 @@ pub struct DisaggReport {
     pub win: bool,
 }
 
+/// Speculation section: the same escalation-heavy trace served with
+/// tier-1 cross-tier speculation off vs on. The on arm drafts
+/// `draft_k` tokens per speculative step with a colocated cheap model
+/// (its per-token cost is the shallow model at the deep tier's
+/// parallelism) and verifies them in ONE deep-model iteration, on an
+/// agreement-heavy stream — the regime the paper's cascade creates,
+/// where the shallow tier already answered and mostly agrees. The
+/// section gates the losslessness contract end to end: both arms must
+/// emit byte-identical token streams per request while the on arm
+/// strictly cuts deep-tier iterations and p95.
+#[derive(Debug, Clone)]
+pub struct SpecReport {
+    pub requests: usize,
+    /// Draft depth of the on arm's tier-1 pair.
+    pub draft_k: usize,
+    /// p95 end-to-end latency, uncompressed seconds, off / on.
+    pub off_p95_s: f64,
+    pub spec_p95_s: f64,
+    /// off / spec (>1 = speculation wins).
+    pub p95_speedup: f64,
+    /// Deep-tier (tier 1) engine iterations, off / on — every accepted
+    /// draft token is a deep iteration the verify model never ran.
+    pub off_deep_iterations: usize,
+    pub spec_deep_iterations: usize,
+    /// Draft tokens the verifier accepted / rejected in the on arm.
+    pub accepted_tokens: usize,
+    pub rejected_tokens: usize,
+    /// Per-request (id, accepting tier, output) triples are identical
+    /// across the arms — the losslessness contract, measured.
+    pub outputs_match: bool,
+    /// Both arms served every request, outputs matched, drafts were
+    /// accepted, and speculation strictly cut deep iterations AND p95.
+    pub win: bool,
+}
+
 /// Tracing-overhead section: the headline trace re-served with the
 /// span recorder + metrics registry detached vs attached. Recording
 /// must be effectively free: the gate allows a 3% relative p95
@@ -347,6 +400,7 @@ pub struct BenchReport {
     pub chunked: ChunkedReport,
     pub swap: SwapReport,
     pub disagg: DisaggReport,
+    pub spec: SpecReport,
     pub tracing: TracingReport,
     pub profile: ProfileSectionReport,
 }
@@ -354,8 +408,8 @@ pub struct BenchReport {
 impl BenchReport {
     /// Every gate the bench enforces: headline win, page budgets,
     /// prefix-sharing win, chunked-TTFT win, swap-preemption win,
-    /// disaggregation win, tracing-overhead win, profile-aggregation
-    /// win.
+    /// disaggregation win, speculation win, tracing-overhead win,
+    /// profile-aggregation win.
     pub fn all_green(&self) -> bool {
         self.win
             && self.occupancy_ok
@@ -363,6 +417,7 @@ impl BenchReport {
             && self.chunked.win
             && self.swap.win
             && self.disagg.win
+            && self.spec.win
             && self.tracing.win
             && self.profile.win
     }
@@ -526,6 +581,28 @@ impl BenchReport {
                 ]),
             ),
             (
+                "spec",
+                Json::obj(vec![
+                    ("requests", Json::num(self.spec.requests as f64)),
+                    ("draft_k", Json::num(self.spec.draft_k as f64)),
+                    ("off_p95_s", Json::num(self.spec.off_p95_s)),
+                    ("spec_p95_s", Json::num(self.spec.spec_p95_s)),
+                    ("p95_speedup", Json::num(self.spec.p95_speedup)),
+                    (
+                        "off_deep_iterations",
+                        Json::num(self.spec.off_deep_iterations as f64),
+                    ),
+                    (
+                        "spec_deep_iterations",
+                        Json::num(self.spec.spec_deep_iterations as f64),
+                    ),
+                    ("accepted_tokens", Json::num(self.spec.accepted_tokens as f64)),
+                    ("rejected_tokens", Json::num(self.spec.rejected_tokens as f64)),
+                    ("outputs_match", Json::Bool(self.spec.outputs_match)),
+                    ("win", Json::Bool(self.spec.win)),
+                ]),
+            ),
+            (
                 "tracing",
                 Json::obj(vec![
                     ("requests", Json::num(self.tracing.requests as f64)),
@@ -605,6 +682,18 @@ impl TierBackend for LockstepCalibrated {
 /// all, so their prefill cost is genuinely saved. `prefilled_tokens`
 /// counts the prompt tokens actually processed (the re-prefill cost
 /// the prefix section compares).
+/// Speculation terms of a spec-enabled [`ContinuousCalibrated`]: the
+/// colocated draft model's per-token decode cost and the agreement
+/// modulus fed to [`draft_agrees`] (0 = every draft token agrees).
+struct CalibratedSpec {
+    draft_s_per_token: f64,
+    agree_mod: u64,
+    /// Verified tokens emitted so far per live sequence — the position
+    /// key that keeps the draft agreement stream deterministic across
+    /// decode/spec interleavings (cleared on release).
+    emitted: BTreeMap<SeqId, usize>,
+}
+
 struct ContinuousCalibrated {
     tier: usize,
     rm: ReplicaModel,
@@ -616,23 +705,69 @@ struct ContinuousCalibrated {
     /// Seconds per KV page moved across the prefill→decode
     /// interconnect (the migrate hook's rate).
     migrate_s_per_page: f64,
+    /// `Some` enables the native draft/verify hooks (the spec
+    /// section's on arm); `None` keeps every other section on the
+    /// plain decode path.
+    spec: Option<CalibratedSpec>,
 }
 
 impl StepBackend for ContinuousCalibrated {
-    fn prefill_chunk(&mut self, _seq: SeqId, chunk: &[i32], last: bool) -> Result<Option<i32>> {
+    fn prefill_chunk(&mut self, seq: SeqId, chunk: &[i32], last: bool) -> Result<Option<i32>> {
         self.prefilled_tokens.fetch_add(chunk.len(), Ordering::SeqCst);
         let secs = self.rm.prefill_latency(chunk.len() as f64);
         self.sleeper.pay(secs);
+        if last {
+            if let Some(sp) = &mut self.spec {
+                sp.emitted.insert(seq, 1);
+            }
+        }
         Ok(last.then_some(self.tier as i32))
     }
 
     fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
         let secs = self.rm.decode_iteration(seqs.len()) * self.token_scale;
         self.sleeper.pay(secs);
+        if let Some(sp) = &mut self.spec {
+            for &s in seqs {
+                *sp.emitted.entry(s).or_insert(0) += 1;
+            }
+        }
         Ok(vec![self.tier as i32; seqs.len()])
     }
 
-    fn release(&mut self, _seq: SeqId) {}
+    fn release(&mut self, seq: SeqId) {
+        if let Some(sp) = &mut self.spec {
+            sp.emitted.remove(&seq);
+        }
+    }
+
+    fn draft(&mut self, seq: SeqId, k: usize) -> Result<Option<Vec<i32>>> {
+        let Some(sp) = &mut self.spec else { return Ok(None) };
+        let base = sp.emitted.get(&seq).copied().unwrap_or(0);
+        let me = self.tier as i32;
+        // A disagreeing draft token is anything the verify model would
+        // not emit; it is never part of the output stream (the engine
+        // emits only the accepted prefix plus the verifier's token).
+        let toks: Vec<i32> = (0..k)
+            .map(|i| if draft_agrees(seq, base + i, sp.agree_mod) { me } else { me + 101 })
+            .collect();
+        let secs = k as f64 * sp.draft_s_per_token * self.token_scale;
+        self.sleeper.pay(secs);
+        Ok(Some(toks))
+    }
+
+    fn verify(&mut self, seq: SeqId, draft: &[i32]) -> Result<Option<VerifyOutcome>> {
+        let Some(sp) = &mut self.spec else { return Ok(None) };
+        // ONE deep-model iteration scores the whole draft — the step
+        // speculation's economics buy (conservatively priced at batch
+        // 1: the section paces the deep tier to serial occupancy).
+        let secs = self.rm.decode_iteration(1) * self.token_scale;
+        self.sleeper.pay(secs);
+        let me = self.tier as i32;
+        let accepted = draft.iter().take_while(|&&t| t == me).count();
+        *sp.emitted.entry(seq).or_insert(0) += accepted + 1;
+        Ok(Some(VerifyOutcome { accepted, next: me }))
+    }
 
     fn swap(&mut self, _seq: SeqId, pages: usize, _to_host: bool) {
         // A swap is not free: the PCIe move charges real (compressed)
@@ -753,7 +888,11 @@ struct ContinuousRun {
 /// deliberately tight pools); `preemption` selects the eviction
 /// discipline, with per-tier swap budget/cost terms derived from each
 /// tier's own replica model; `disagg` optionally splits tiers into
-/// prefill/decode role pools (empty = unified).
+/// prefill/decode role pools (empty = unified); `speculation` is the
+/// server's per-tier draft configuration and `spec_backend` the
+/// `(draft seconds per token, agreement modulus)` terms handed to
+/// every backend's native draft/verify hooks (both empty/`None`
+/// everywhere but the speculation section's on arm).
 #[allow(clippy::too_many_arguments)]
 fn run_continuous(
     trace: &[TraceEntry],
@@ -769,6 +908,8 @@ fn run_continuous(
     pool_pages: Option<usize>,
     preemption: PreemptionMode,
     disagg: Vec<Option<DisaggSpec>>,
+    speculation: Vec<Option<SpecSpec>>,
+    spec_backend: Option<(f64, u64)>,
     time_scale: f64,
     token_scale: f64,
     telemetry: Option<Arc<ServeTelemetry>>,
@@ -795,6 +936,7 @@ fn run_continuous(
         max_new_tokens: max_new_default,
         exec: ExecMode::Continuous(engines),
         disagg,
+        speculation,
     })?;
     server.set_telemetry(telemetry);
     let prefilled = Arc::new(AtomicUsize::new(0));
@@ -809,6 +951,11 @@ fn run_continuous(
             prefilled_tokens: Arc::clone(&prefilled_f),
             swap_s_per_page: rms_owned[tier].page_swap_seconds(page_tokens),
             migrate_s_per_page: rms_owned[tier].page_migrate_seconds(page_tokens),
+            spec: spec_backend.map(|(draft_s_per_token, agree_mod)| CalibratedSpec {
+                draft_s_per_token,
+                agree_mod,
+                emitted: BTreeMap::new(),
+            }),
         }))
     };
     let stats = server.serve_entries(trace, &factory, judger)?;
@@ -912,6 +1059,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         max_new_tokens: cfg.decode_steps,
         exec: ExecMode::BatchLockstep,
         disagg: Vec::new(),
+        speculation: Vec::new(),
     })?;
     let rms_lock = rms.clone();
     let (ts, tsc) = (cfg.time_scale, cfg.token_scale as f64);
@@ -942,6 +1090,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         max_new_tokens: cfg.decode_steps,
         exec: ExecMode::Continuous(engines),
         disagg: Vec::new(),
+        speculation: Vec::new(),
     })?;
     let rms_cont = rms.clone();
     let cont_prefilled = Arc::new(AtomicUsize::new(0));
@@ -1013,6 +1162,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -1032,6 +1183,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -1123,6 +1276,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             1.0,
             None,
@@ -1142,6 +1297,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             1.0,
             None,
@@ -1221,6 +1378,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             Some(pool_pages),
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             ts_s,
             1.0,
             None,
@@ -1240,6 +1399,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             Some(pool_pages),
             PreemptionMode::Swap,
             Vec::new(),
+            Vec::new(),
+            None,
             ts_s,
             1.0,
             None,
@@ -1339,6 +1500,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             ts_d,
             1.0,
             None,
@@ -1358,6 +1521,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             vec![Some(DisaggSpec { prefill_replicas: 1, decode_replicas: 1 }), None],
+            Vec::new(),
+            None,
             ts_d,
             1.0,
             None,
@@ -1387,6 +1552,130 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         }
     };
 
+    // --- Speculation section: an escalate-everything trace (threshold
+    // above the judger's score ceiling, so every request reaches the
+    // deep tier) served twice, tier-1 cross-tier speculation off vs on. Decode runs
+    // token-granular (token_scale 1) and arrivals pace the deep tier
+    // to serial occupancy, so the on/off delta is the draft/verify
+    // economics — k cheap draft tokens plus ONE deep iteration vs k+1
+    // deep iterations — not batch amortization. The draft stream is
+    // agreement-heavy (agree_mod 0: every draft token agrees), the
+    // regime the cascade creates where the shallow tier already
+    // answered. Outputs must stay byte-identical: every emitted token
+    // is a verify-model token. ---
+    let spec = {
+        let n = cfg.spec_requests.max(6);
+        let steps_p = cfg.spec_decode_steps.max(8);
+        let k = cfg.spec_draft_k.max(1);
+        let prompt_tokens = 64usize;
+        // Gentler compression than the headline (same reasoning as the
+        // swap section): the win margin is per-iteration service time.
+        let ts_p = (cfg.time_scale / 4.0).max(1.0);
+        let rms_p = bench_rms(&cascade, &cluster, prompt_tokens as f64 + steps_p as f64);
+        // The draft model rides the verify tier's replica group (a
+        // cross-tier pair colocates its draft), so its per-token cost
+        // is the SHALLOW model at the DEEP tier's parallelism.
+        let draft_s = ReplicaModel::new(
+            &cascade[0],
+            &cluster,
+            8,
+            1,
+            prompt_tokens as f64 + steps_p as f64,
+        )
+        .decode_iteration(1);
+        // ~60% of the off arm's serial (tier 0 + tier 1) capacity.
+        let service = rms_p[0].prefill_latency(prompt_tokens as f64)
+            + steps_p as f64 * rms_p[0].decode_iteration(1)
+            + rms_p[1].prefill_latency(prompt_tokens as f64)
+            + steps_p as f64 * rms_p[1].decode_iteration(1);
+        let rate = 0.6 / service.max(1e-9);
+        let reqs: Vec<Request> = {
+            let mut spec_t = paper_trace(1, 1.0);
+            spec_t.burstiness = 1.0;
+            crate::workload::generate(&spec_t, n, cfg.seed.wrapping_add(13))
+        };
+        let strace: Vec<TraceEntry> = (0..n)
+            .map(|i| {
+                let mut prompt: Vec<i32> =
+                    (0..prompt_tokens - 1).map(|j| tail_token(i + 700_000, j)).collect();
+                prompt.push(i as i32);
+                TraceEntry { at: i as f64 / rate / ts_p, prompt, max_new: Some(steps_p) }
+            })
+            .collect();
+        let pjudger = BenchJudger {
+            requests: reqs,
+            models: cascade.clone(),
+            judger: Judger::new(cfg.seed.wrapping_add(13)),
+        };
+        let arm = |speculation: Vec<Option<SpecSpec>>,
+                   spec_backend: Option<(f64, u64)>|
+         -> Result<ContinuousRun> {
+            run_continuous(
+                &strace,
+                &pjudger,
+                &rms_p,
+                vec![1, 1],
+                vec![4, 4],
+                crate::router::THRESHOLD_MAX,
+                steps_p,
+                cfg.page_tokens,
+                cfg.prefill_chunk,
+                false,
+                None,
+                PreemptionMode::Recompute,
+                Vec::new(),
+                speculation,
+                spec_backend,
+                ts_p,
+                1.0,
+                None,
+            )
+        };
+        let off = arm(Vec::new(), None).context("spec-section off run")?;
+        let on = arm(
+            vec![None, Some(SpecSpec { draft_k: k, acceptance: 1.0 })],
+            Some((draft_s, 0)),
+        )
+        .context("spec-section on run")?;
+        all_occupancy_ok = all_occupancy_ok
+            && occupancy_ok(&off.stats.engine)
+            && occupancy_ok(&on.stats.engine);
+        let triples = |s: &ServerStats| -> Vec<(usize, usize, Vec<i32>)> {
+            let mut v: Vec<_> = s
+                .completions
+                .iter()
+                .map(|c| (c.id, c.accepting_tier, c.output.clone()))
+                .collect();
+            v.sort();
+            v
+        };
+        let outputs_match = triples(&off.stats) == triples(&on.stats);
+        let off_p95 = off.stats.p95_latency() * ts_p;
+        let on_p95 = on.stats.p95_latency() * ts_p;
+        let off_deep = off.stats.engine[1].iterations;
+        let on_deep = on.stats.engine[1].iterations;
+        let accepted = on.stats.engine[1].spec_accepted_tokens;
+        let rejected = on.stats.engine[1].spec_rejected_tokens;
+        SpecReport {
+            requests: n,
+            draft_k: k,
+            off_p95_s: off_p95,
+            spec_p95_s: on_p95,
+            p95_speedup: off_p95 / on_p95.max(1e-9),
+            off_deep_iterations: off_deep,
+            spec_deep_iterations: on_deep,
+            accepted_tokens: accepted,
+            rejected_tokens: rejected,
+            outputs_match,
+            win: off.stats.completions.len() == n
+                && on.stats.completions.len() == n
+                && outputs_match
+                && accepted > 0
+                && on_deep < off_deep
+                && on_p95 < off_p95,
+        }
+    };
+
     // --- Tracing section: the headline trace re-served on the
     // continuous engine with the span recorder + metrics registry
     // detached vs attached. Both runs use identical configs; only the
@@ -1406,6 +1695,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             cfg.token_scale as f64,
             None,
@@ -1426,6 +1717,8 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             None,
             PreemptionMode::Recompute,
             Vec::new(),
+            Vec::new(),
+            None,
             cfg.time_scale,
             cfg.token_scale as f64,
             Some(Arc::clone(&telem)),
@@ -1499,6 +1792,7 @@ pub fn run_serving_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         chunked,
         swap,
         disagg,
+        spec,
         tracing,
         profile,
     })
@@ -1583,6 +1877,29 @@ mod tests {
             report.disagg.migrations
         );
         assert!(
+            report.spec.accepted_tokens > 0,
+            "agreement-heavy drafts must be accepted: {:?}",
+            report.spec
+        );
+        assert!(
+            report.spec.outputs_match,
+            "speculation must be lossless: on/off outputs diverged"
+        );
+        assert!(
+            report.spec.spec_deep_iterations < report.spec.off_deep_iterations,
+            "accepted drafts must cut deep-tier iterations ({} vs {})",
+            report.spec.spec_deep_iterations,
+            report.spec.off_deep_iterations
+        );
+        assert!(
+            report.spec.win,
+            "speculation must win: p95 {:.3}s vs {:.3}s, deep iters {} vs {}",
+            report.spec.spec_p95_s,
+            report.spec.off_p95_s,
+            report.spec.spec_deep_iterations,
+            report.spec.off_deep_iterations
+        );
+        assert!(
             report.tracing.events_recorded >= report.tracing.requests,
             "tracing-on run must record at least one event per request"
         );
@@ -1617,6 +1934,9 @@ mod tests {
         assert!(json.contains("\"swap\""));
         assert!(json.contains("\"disagg\""));
         assert!(json.contains("\"ttft_p95_speedup\""));
+        assert!(json.contains("\"spec\""));
+        assert!(json.contains("\"outputs_match\":true"));
+        assert!(json.contains("\"accepted_tokens\""));
         assert!(json.contains("\"tracing\""));
         assert!(json.contains("\"overhead_ok\":true"));
         assert!(json.contains("\"profile\""));

@@ -39,7 +39,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::server::TierBackend;
-use crate::obs::{emit_plan_events, EngineTracer};
+use crate::obs::{emit_plan_events, emit_spec_events, EngineTracer, SpecResult};
 use crate::perf::{ReplicaModel, DEFAULT_PREFILL_CHUNK};
 
 use super::kv::{prompt_page_hashes, KvPool, SeqId};
@@ -89,6 +89,39 @@ pub trait StepBackend {
     fn migrate(&mut self, seq: SeqId, pages: usize) {
         let _ = (seq, pages);
     }
+
+    /// Draft up to `k` speculative tokens for `seq` past its verified
+    /// context using the cheap draft model of a cross-tier pair. `None`
+    /// (the default) means the backend cannot draft — the engine falls
+    /// back to a plain decode step for the sequence, so speculation
+    /// degrades, never breaks.
+    fn draft(&mut self, seq: SeqId, k: usize) -> Result<Option<Vec<i32>>> {
+        let _ = (seq, k);
+        Ok(None)
+    }
+
+    /// Verify a draft for `seq` in ONE deep-model step. Returns how
+    /// many leading draft tokens the verify model agrees with and the
+    /// verify model's own next token after the accepted prefix; the
+    /// emitted stream is `draft[..accepted]` + `next` — every token the
+    /// verify model would have produced decoding alone, which is the
+    /// losslessness contract. `None` (the default) declines to verify
+    /// and the engine falls back to a plain decode step.
+    fn verify(&mut self, seq: SeqId, draft: &[i32]) -> Result<Option<VerifyOutcome>> {
+        let _ = (seq, draft);
+        Ok(None)
+    }
+}
+
+/// Result of one speculative verify step ([`StepBackend::verify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Leading draft tokens the verify model reproduced exactly.
+    pub accepted: usize,
+    /// The verify model's own token following the accepted prefix
+    /// (the "bonus" token — emitted even when `accepted == 0`, so a
+    /// verify step always produces at least one token).
+    pub next: i32,
 }
 
 /// Sizing of one worker's engine.
@@ -237,6 +270,12 @@ pub struct StepOutcome<T> {
     /// Private KV pages moved by migration this iteration, both
     /// directions (out on prefill-role engines, in on decode-role).
     pub migrate_pages: usize,
+    /// Draft tokens the verify model accepted this iteration (each one
+    /// a decode iteration the deep model did not run).
+    pub spec_accepted: usize,
+    /// Draft tokens rejected this iteration (their slack pages already
+    /// rolled back).
+    pub spec_rejected: usize,
 }
 
 #[derive(Debug)]
@@ -473,6 +512,27 @@ impl<T> EngineCore<T> {
     /// directions) of the swap-to-host policy.
     pub fn swap_counts(&self) -> (u64, u64, u64) {
         self.sched.swap_counts()
+    }
+
+    /// Enable speculative decoding with `k` draft tokens per task
+    /// (0 disables it — the hot-swap lever). Only takes hold on native
+    /// step backends; adapted whole-request backends replay cached
+    /// tokens and gain nothing from drafting, so the knob is a no-op
+    /// there. Safe to flip between steps: drafts never span an
+    /// iteration, so no draft state is ever stranded.
+    pub fn set_speculation(&mut self, k: usize) {
+        let k = if self.backend.step_backend().is_some() { k } else { 0 };
+        self.sched.set_spec_k(k);
+    }
+
+    /// Current draft tokens per speculative task (0 = off).
+    pub fn speculation(&self) -> usize {
+        self.sched.spec_k()
+    }
+
+    /// Lifetime (accepted, rejected) draft-token counts.
+    pub fn spec_counts(&self) -> (u64, u64) {
+        self.sched.spec_counts()
     }
 
     /// Tag this engine's disaggregation role. Prefill-role engines hand
@@ -716,6 +776,84 @@ impl<T> EngineCore<T> {
             }
         }
 
+        // Speculative pass: draft k tokens on the cheap model, verify
+        // them in ONE deep-model step; the sequence emits the accepted
+        // prefix plus the verifier's own next token — every emitted
+        // token is a verify-model token, so the stream is bit-identical
+        // to plain decoding (the losslessness contract). A backend that
+        // declines to draft or verify degrades the task to one plain
+        // decode token. Settled results are traced through the same
+        // pure emitter the DES uses.
+        let mut spec_accepted = 0usize;
+        let mut spec_rejected = 0usize;
+        let mut spec_results: Vec<SpecResult> = Vec::with_capacity(plan.spec.len());
+        for task in &plan.spec {
+            let id = task.id;
+            {
+                let d = known(self.data.get_mut(&id), id, "spec");
+                if d.admitted_at.is_none() {
+                    d.admitted_at = Some(Instant::now());
+                }
+            }
+            let s = known(self.backend.step_backend(), id, "spec (adapted backend)");
+            let drafted = s.draft(id, task.k)?.filter(|d| !d.is_empty());
+            let verdict = match &drafted {
+                Some(d) => s.verify(id, d)?,
+                None => None,
+            };
+            let (tokens, accepted): (Vec<i32>, Option<usize>) = match (drafted, verdict) {
+                (Some(d), Some(v)) => {
+                    let a = v.accepted.min(d.len());
+                    let mut out = d[..a].to_vec();
+                    out.push(v.next);
+                    (out, Some(a))
+                }
+                // Draft or verify unavailable: one plain decode token.
+                (_, _) => {
+                    let s = known(self.backend.step_backend(), id, "spec fallback");
+                    let v = s.decode(&[id])?;
+                    let Some(&tok) = v.first() else {
+                        anyhow::bail!("step backend returned no token for a batch of 1");
+                    };
+                    (vec![tok], None)
+                }
+            };
+            {
+                let d = known(self.data.get_mut(&id), id, "spec token");
+                d.output.extend_from_slice(&tokens);
+                if d.first_token_at.is_none() {
+                    d.first_token_at = Some(Instant::now());
+                }
+            }
+            let drafted = if accepted.is_some() { task.k } else { 0 };
+            spec_accepted += accepted.unwrap_or(0);
+            spec_rejected += accepted.map(|a| task.k - a).unwrap_or(0);
+            spec_results.push(SpecResult {
+                id,
+                drafted,
+                accepted: accepted.unwrap_or(0),
+                emitted: tokens.len(),
+            });
+            if self.sched.advance_spec(id, drafted, tokens.len()) {
+                done_ids.push(id);
+            }
+        }
+        if !spec_results.is_empty() {
+            if let Some(tr) = &self.tracer {
+                let t = tr.clock.now();
+                let data = &self.data;
+                emit_spec_events(
+                    &tr.recorder,
+                    tr.shard,
+                    t,
+                    tr.tier,
+                    plan.batch(),
+                    &spec_results,
+                    |id| data.get(&id).map(|d| d.trace_key).unwrap_or(id as u64),
+                );
+            }
+        }
+
         // Retire finished sequences: free their pages, drop backend
         // state, hand back payload + full output.
         let mut completed = Vec::with_capacity(done_ids.len());
@@ -770,6 +908,8 @@ impl<T> EngineCore<T> {
             migrated_in: plan.migrated_in.len(),
             migrate_pages: plan.migrate_out_pages() + plan.migrate_in_pages(),
             migrated_out,
+            spec_accepted,
+            spec_rejected,
         })
     }
 

@@ -607,6 +607,52 @@ impl KvPool {
         Ok(())
     }
 
+    /// Extend `seq`'s context by `n` tokens past its current write
+    /// frontier (speculative draft slack). Same all-or-nothing contract
+    /// as [`grow_to`](Self::grow_to).
+    pub fn grow_by(&mut self, seq: SeqId, n: usize) -> Result<(), PagesShort> {
+        let cur = self.tables.get(&seq).map(|t| t.tokens).unwrap_or(0);
+        self.grow_to(seq, cur + n.max(1))
+    }
+
+    /// Shrink `seq`'s write frontier back to `tokens`, freeing the tail
+    /// pages past it — the rejected-draft rollback. The dropped pages
+    /// are the generated region past the verified context: fresh or
+    /// CoW-private by construction, never published and never shared, so
+    /// the trie and any shared prefix are untouched. Growing targets and
+    /// unknown sequences are a no-op.
+    pub fn rollback_to(&mut self, seq: SeqId, tokens: usize) {
+        let tokens = tokens.max(1);
+        let keep = self.pages_for(tokens);
+        let dropped = {
+            let Some(t) = self.tables.get_mut(&seq) else {
+                return;
+            };
+            if t.tokens <= tokens {
+                return;
+            }
+            t.tokens = tokens;
+            if t.pages.len() > keep {
+                t.pages.split_off(keep)
+            } else {
+                Vec::new()
+            }
+        };
+        kv_invariant!(
+            self,
+            keep >= self.tables[&seq].claimed_pages,
+            "rollback into the claimed prefix of sequence {seq}"
+        );
+        for pid in dropped {
+            kv_invariant!(
+                self,
+                self.meta[pid].refs == 1 && self.meta[pid].hash.is_none(),
+                "rollback freed a shared or published page {pid}"
+            );
+            self.decref(pid);
+        }
+    }
+
     /// Release every page reference `seq` holds; returns the count of
     /// pages physically freed (shared pages with surviving holders stay
     /// live — and stay claimable). A sequence parked in host swap space
@@ -846,6 +892,55 @@ mod tests {
         assert_eq!(p.grow_to(1, 33), Err(PagesShort(1)));
         assert_eq!(p.pages_of(1).len(), 2, "failed grow must not allocate");
         assert_eq!(p.in_use(), 4);
+    }
+
+    #[test]
+    fn grow_by_and_rollback_round_trip_draft_slack() {
+        let mut p = KvPool::new(8, 16);
+        p.grow_to(1, 20).unwrap(); // 2 pages, frontier 20
+        p.grow_by(1, 12).unwrap(); // frontier 32, still 2 pages
+        assert_eq!(p.pages_of(1).len(), 2);
+        p.grow_by(1, 8).unwrap(); // frontier 40, 3 pages
+        assert_eq!(p.pages_of(1).len(), 3);
+        // Reject the whole draft: back to the verified frontier.
+        p.rollback_to(1, 20);
+        assert_eq!(p.pages_of(1).len(), 2);
+        assert_eq!(p.in_use(), 2);
+        // Growing target / unknown seq are no-ops.
+        p.rollback_to(1, 64);
+        p.rollback_to(99, 1);
+        assert_eq!(p.pages_of(1).len(), 2);
+        p.grow_to(1, 33).unwrap(); // frontier was rolled back to 20
+        assert_eq!(p.pages_of(1).len(), 3);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn rollback_preserves_shared_prefix_and_trie() {
+        let pt = 16;
+        let hashes = prompt_page_hashes(&vec![7; 24], pt); // full page + half page
+        let mut p = KvPool::new(8, pt);
+        p.grow_to(1, 24).unwrap();
+        p.publish_prefix(1, &hashes);
+        assert_eq!(p.claim_prefix(2, &hashes, 24), 24);
+        // Seq 2 speculates 10 tokens past its prompt: the shared tail
+        // page it appends into is CoW'd, plus one fresh page.
+        p.grow_by(2, 10).unwrap();
+        assert_eq!(p.pages_of(2).len(), 3);
+        assert_eq!(p.cow_copies(), 1);
+        // Everything rejected: rollback frees only the private tail;
+        // the CoW'd page holds verified prompt context and stays.
+        p.rollback_to(2, 24);
+        assert_eq!(p.pages_of(2).len(), 2);
+        // The publisher's pages and the trie are untouched: a third
+        // sequence still claims the full prompt.
+        assert_eq!(p.claim_prefix(3, &hashes, 24), 24);
+        p.validate().unwrap();
+        p.release(1);
+        p.release(2);
+        p.release(3);
+        assert_eq!(p.in_use(), 0);
+        p.validate().unwrap();
     }
 
     #[test]

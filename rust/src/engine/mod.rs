@@ -27,6 +27,11 @@
 //!   (calibrated simulated backends charge
 //!   [`crate::perf::ReplicaModel::decode_iteration`] at the live batch
 //!   size), whole-request backends are adapted transparently;
+//! * [`SpecPair`] (`spec`) — cross-tier speculative decoding: a
+//!   shallow-tier draft backend paired with the deep tier's verify
+//!   backend behind one [`StepBackend`], lossless by construction
+//!   (every emitted token comes from the verify model), scheduled as
+//!   per-tick draft→verify tasks with rejected-page rollback;
 //! * `bench` — the calibrated lockstep-vs-continuous serving benchmark
 //!   behind `cascadia bench` (writes `BENCH_serving.json`).
 //!
@@ -42,11 +47,14 @@ pub mod core;
 pub mod kv;
 pub mod migrate;
 pub mod scheduler;
+pub mod spec;
 
 pub use bench::{run_serving_bench, BenchConfig, BenchReport, TracingReport};
-pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome};
+pub use core::{EngineConfig, EngineCore, Finished, StepBackend, StepOutcome, VerifyOutcome};
 pub use kv::{prompt_page_hashes, KvPool, PagesShort, SeqId, SwapShort};
 pub use migrate::{MigratedSeq, MigrationHub};
 pub use scheduler::{
     ChunkTask, EngineRole, IterationPlan, IterationScheduler, PreemptionConfig, PreemptionMode,
+    SpecTask,
 };
+pub use spec::{draft_agrees, SpecPair};

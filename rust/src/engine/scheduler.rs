@@ -152,6 +152,18 @@ pub struct ChunkTask {
     pub last: bool,
 }
 
+/// One speculative draft→verify pair scheduled into an iteration:
+/// draft `k` tokens for `id` past its verified context, then verify
+/// them in one deep-model step. The sequence emits between 1 and
+/// `k + 1` tokens this tick (accepted prefix + the verifier's own next
+/// token); rejected slack pages roll back at
+/// [`IterationScheduler::advance_spec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecTask {
+    pub id: SeqId,
+    pub k: usize,
+}
+
 /// One planned engine iteration.
 #[derive(Debug, Clone, Default)]
 pub struct IterationPlan {
@@ -164,7 +176,14 @@ pub struct IterationPlan {
     /// produces the sequence's first token.
     pub prefill: Vec<ChunkTask>,
     /// Fully-prefilled sequences advancing one decode token.
+    /// Sequences with a speculative task this tick appear in `spec`
+    /// instead, never here.
     pub decode: Vec<SeqId>,
+    /// Speculative draft→verify pairs this tick (empty unless
+    /// [`IterationScheduler::set_spec_k`] enabled speculation). Each
+    /// sequence already holds pages for its verified context plus one
+    /// growth token plus `k` draft slack tokens.
+    pub spec: Vec<SpecTask>,
     /// Sequences preempted-with-recompute this tick. Their KV pages are
     /// already freed and their progress (decode *and* partial prefill)
     /// reset; callers must drop any per-sequence backend state (they
@@ -197,10 +216,10 @@ pub struct IterationPlan {
 }
 
 impl IterationPlan {
-    /// Total sequences occupying a batch slot this tick (decoding or
-    /// prefilling).
+    /// Total sequences occupying a batch slot this tick (decoding,
+    /// prefilling, or speculating).
     pub fn batch(&self) -> usize {
-        self.prefill.len() + self.decode.len()
+        self.prefill.len() + self.decode.len() + self.spec.len()
     }
 
     /// Prompt tokens of prefill work charged into this tick.
@@ -208,8 +227,10 @@ impl IterationPlan {
         self.prefill.iter().map(|c| c.len).sum()
     }
 
-    /// Sequences producing one token this tick: every decoder plus
-    /// every sequence whose *last* prefill chunk lands here.
+    /// Sequences producing exactly one token this tick: every decoder
+    /// plus every sequence whose *last* prefill chunk lands here.
+    /// Speculative tasks are NOT listed — they produce a variable
+    /// token count settled at [`IterationScheduler::advance_spec`].
     pub fn producers(&self) -> Vec<SeqId> {
         let mut v: Vec<SeqId> = self.decode.clone();
         v.extend(self.prefill.iter().filter(|c| c.last).map(|c| c.id));
@@ -274,6 +295,8 @@ pub struct IterationScheduler {
     /// tick (the caller gates it on live decode capacity); closed,
     /// finished prefills keep decoding locally — unified degradation.
     migration_open: bool,
+    /// Draft tokens per speculative task (0 = speculation off).
+    spec_k: usize,
     preemptions: u64,
     forced_expansions: u64,
     prefix_hit_tokens: u64,
@@ -281,6 +304,8 @@ pub struct IterationScheduler {
     migrations_in: u64,
     migrate_pages_out: u64,
     migrate_pages_in: u64,
+    spec_accepted: u64,
+    spec_rejected: u64,
 }
 
 impl IterationScheduler {
@@ -299,6 +324,7 @@ impl IterationScheduler {
             preemption: PreemptionConfig::default(),
             role: EngineRole::Unified,
             migration_open: false,
+            spec_k: 0,
             preemptions: 0,
             forced_expansions: 0,
             prefix_hit_tokens: 0,
@@ -306,6 +332,8 @@ impl IterationScheduler {
             migrations_in: 0,
             migrate_pages_out: 0,
             migrate_pages_in: 0,
+            spec_accepted: 0,
+            spec_rejected: 0,
         }
     }
 
@@ -350,6 +378,24 @@ impl IterationScheduler {
 
     pub fn prefill_chunk(&self) -> usize {
         self.prefill_chunk
+    }
+
+    /// Enable speculative draft→verify planning with `k` draft tokens
+    /// per task (0 disables it). Takes effect at the next
+    /// [`IterationScheduler::next_iteration`]; drafts never span ticks,
+    /// so flipping this mid-run strands no draft state.
+    pub fn set_spec_k(&mut self, k: usize) {
+        self.spec_k = k;
+    }
+
+    pub fn spec_k(&self) -> usize {
+        self.spec_k
+    }
+
+    /// Lifetime (accepted, rejected) draft-token counts settled through
+    /// [`IterationScheduler::advance_spec`].
+    pub fn spec_counts(&self) -> (u64, u64) {
+        (self.spec_accepted, self.spec_rejected)
     }
 
     /// Track a new sequence at the back of the wait queue.
@@ -508,6 +554,7 @@ impl IterationScheduler {
         self.waiting.push_front(id);
         plan.decode.retain(|&d| d != id);
         plan.prefill.retain(|c| c.id != id);
+        plan.spec.retain(|t| t.id != id);
         plan.preempted.push(id);
         self.preemptions += 1;
     }
@@ -544,6 +591,7 @@ impl IterationScheduler {
                 self.swapped_q.push_back(id);
                 plan.decode.retain(|&d| d != id);
                 plan.prefill.retain(|c| c.id != id);
+                plan.spec.retain(|t| t.id != id);
                 plan.swapped_out.push((id, pages));
             }
             Err(_) => self.preempt(id, plan),
@@ -552,8 +600,17 @@ impl IterationScheduler {
 
     /// Evict `victim` to relieve pool pressure, choosing per victim
     /// between swap-to-host and preempt-with-recompute by the
-    /// configured cost terms.
+    /// configured cost terms. A victim holding a speculative task this
+    /// tick first withdraws its draft: the unverified slack pages roll
+    /// back so it parks (or resets) at its last *verified* token — the
+    /// swap cost model and the parked checkpoint never see draft state.
     fn evict(&mut self, victim: SeqId, plan: &mut IterationPlan) {
+        if plan.spec.iter().any(|t| t.id == victim) {
+            if let Some(s) = self.seqs.get(&victim) {
+                self.pool.rollback_to(victim, s.prompt_tokens + s.generated + 1);
+            }
+            plan.spec.retain(|t| t.id != victim);
+        }
         if self.should_swap(victim) {
             self.swap_out_victim(victim, plan);
         } else {
@@ -646,7 +703,13 @@ impl IterationScheduler {
         }
 
         // 1. Reserve one token of growth per decoding sequence, oldest
-        // first; preempt from the newest end on exhaustion.
+        // first; preempt from the newest end on exhaustion. With
+        // speculation on, a steady decoder additionally tries to
+        // reserve `k` draft-slack tokens — opportunistically, never by
+        // evicting a peer, so pool pressure degrades speculation to
+        // plain decode deterministically. The draft budget is capped so
+        // even a fully accepted verify step (k + 1 tokens) cannot
+        // overshoot `max_new`.
         let mut i = 0;
         while i < self.running.len() {
             let id = self.running[i];
@@ -656,7 +719,11 @@ impl IterationScheduler {
                 continue;
             }
             let need = s.prompt_tokens + s.generated + 1;
+            let k_eff = self.spec_k.min(s.max_new.saturating_sub(s.generated + 1));
             if self.reserve(id, need, &mut plan) {
+                if k_eff > 0 && self.pool.grow_by(id, k_eff).is_ok() {
+                    plan.spec.push(SpecTask { id, k: k_eff });
+                }
                 i += 1;
             }
         }
@@ -760,12 +827,18 @@ impl IterationScheduler {
             }
         }
 
-        // Surviving decoders advance one token this tick.
+        // Surviving decoders advance one token this tick. Sequences
+        // with a surviving speculative task advance through `spec`
+        // instead; sequences that (re-)entered after stage 1 (swap
+        // resume, migration admit, full prefix hit) decode plainly this
+        // tick and become speculation candidates next tick.
         plan.decode = self
             .running
             .iter()
             .copied()
-            .filter(|id| self.seqs[id].decoding())
+            .filter(|id| {
+                self.seqs[id].decoding() && !plan.spec.iter().any(|t| t.id == *id)
+            })
             .collect();
 
         // 2. Prefill chunks for carried-over partial prefills, oldest
@@ -879,6 +952,27 @@ impl IterationScheduler {
         let s = known(self.seqs.get_mut(&id), id, "advance");
         s.generated += 1;
         s.generated >= s.max_new
+    }
+
+    /// Settle a speculative task for `id`: `emitted` verified tokens
+    /// landed this tick (accepted draft prefix + the verifier's next
+    /// token, so `1 ..= k + 1`). Rejected draft slack pages roll back
+    /// to the new verified frontier — after this call the sequence's
+    /// page state is exactly what a plain-decode run at the same
+    /// `generated` count would hold. Returns true when the sequence
+    /// reached its token budget. Pass `drafted` = the task's planned
+    /// `k` so the acceptance counters attribute the split.
+    pub fn advance_spec(&mut self, id: SeqId, drafted: usize, emitted: usize) -> bool {
+        debug_assert!(emitted >= 1, "a verify step emits at least one token");
+        let s = known(self.seqs.get_mut(&id), id, "advance_spec");
+        s.generated += emitted.max(1);
+        let done = s.generated >= s.max_new;
+        let keep = s.prompt_tokens + s.generated;
+        let accepted = emitted.max(1) - 1;
+        self.spec_accepted += accepted as u64;
+        self.spec_rejected += drafted.saturating_sub(accepted) as u64;
+        self.pool.rollback_to(id, keep);
+        done
     }
 
     /// Drop a finished (or cancelled) sequence and free its pages —

@@ -1,0 +1,262 @@
+//! Cross-tier speculative decoding support.
+//!
+//! The cascade co-locates a cheap and an expensive model per the
+//! deployment plan; speculation lets the shallow tier *accelerate* the
+//! deep tier instead of only filtering for it: draft `k` tokens on the
+//! small model, verify them in ONE deep-model step, emit the accepted
+//! prefix plus the verifier's own next token. Every emitted token is a
+//! verify-model token, so the output stream is bit-identical to the
+//! deep model decoding alone — the **losslessness contract** the test
+//! harness pins.
+//!
+//! Two pieces live here:
+//!
+//! * [`draft_agrees`] — the deterministic acceptance function shared by
+//!   the paged DES ([`crate::sim::DesMode::Paged`]) and deterministic
+//!   test backends, so accepted/rejected draft-token counts match
+//!   bit-for-bit across the DES↔live equivalence pin;
+//! * [`SpecPair`] — a draft+verify [`TierBackend`] pair adapted into a
+//!   [`StepBackend`]: the bridge that gives whole-request backends
+//!   (which have no native draft/verify) a speculative execution path.
+//!   [`crate::coordinator::server::CascadeServer`] builds one per
+//!   speculation-enabled worker from the tier's own factory and the
+//!   factory of the tier below it.
+//!
+//! This module is inside the determinism lint scope: no wall clocks, no
+//! ambient randomness — acceptance is a pure function of (sequence,
+//! position), which is what makes the DES pin possible at all.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::server::TierBackend;
+
+use super::core::{StepBackend, VerifyOutcome};
+use super::kv::SeqId;
+
+/// Deterministic draft/verify agreement: does the draft model's token
+/// at global position `pos` of sequence `key` match the verify model's?
+/// `agree_mod == 0` means perfect agreement; otherwise every
+/// `agree_mod`-th position (keyed by a multiplicative hash so the
+/// pattern varies per sequence) disagrees. Pure — the DES and
+/// deterministic test backends share it so accepted-token counts line
+/// up tick-for-tick.
+pub fn draft_agrees(key: u64, pos: usize, agree_mod: u64) -> bool {
+    if agree_mod == 0 {
+        return true;
+    }
+    if agree_mod == 1 {
+        return false;
+    }
+    key.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(pos as u64)
+        % agree_mod
+        != 0
+}
+
+/// Per-sequence context a [`SpecPair`] tracks: the prompt as prefilled
+/// so far and every *verified* token emitted.
+#[derive(Debug, Default)]
+struct PairSeq {
+    prompt: Vec<i32>,
+    out: Vec<i32>,
+}
+
+/// A tier-pair backend for cross-tier speculative decoding: `draft` is
+/// the shallow tier's backend, `verify` the deep tier's. Both are
+/// driven through their whole-request `generate` over the tracked
+/// context, so any [`TierBackend`] works unchanged; losslessness holds
+/// whenever the verify backend is *prefix-consistent* (greedy:
+/// `generate(ctx, n)` extended one token equals
+/// `generate(ctx ++ generate(ctx, n), 1)` prepended with it), which
+/// deterministic backends are by construction.
+///
+/// Emitted tokens are always taken from the VERIFY model's stream —
+/// the draft model only proposes; a rejected proposal costs nothing
+/// but the draft compute.
+pub struct SpecPair {
+    draft: Box<dyn TierBackend>,
+    verify: Box<dyn TierBackend>,
+    seqs: BTreeMap<SeqId, PairSeq>,
+}
+
+impl SpecPair {
+    pub fn new(draft: Box<dyn TierBackend>, verify: Box<dyn TierBackend>) -> SpecPair {
+        SpecPair { draft, verify, seqs: BTreeMap::new() }
+    }
+
+    /// Verify-model continuation of `seq`'s tracked context.
+    fn continue_verify(&mut self, seq: SeqId, n: usize) -> Result<Vec<i32>> {
+        let st = self.seqs.entry(seq).or_default();
+        let mut ctx = st.prompt.clone();
+        ctx.extend_from_slice(&st.out);
+        self.verify.generate(&ctx, n)
+    }
+}
+
+impl StepBackend for SpecPair {
+    fn prefill_chunk(&mut self, seq: SeqId, chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        // A recompute-preempted sequence was `release`d by the engine
+        // before re-prefilling, so the tracked context always restarts
+        // empty here; chunks accumulate in order.
+        self.seqs.entry(seq).or_default().prompt.extend_from_slice(chunk);
+        if !last {
+            return Ok(None);
+        }
+        let first = self.continue_verify(seq, 1)?.into_iter().next();
+        if let Some(t) = first {
+            self.seqs.entry(seq).or_default().out.push(t);
+        }
+        Ok(first)
+    }
+
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        let mut toks = Vec::with_capacity(seqs.len());
+        for &seq in seqs {
+            let t = self
+                .continue_verify(seq, 1)?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("verify backend produced no token for {seq}"))?;
+            self.seqs.entry(seq).or_default().out.push(t);
+            toks.push(t);
+        }
+        Ok(toks)
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq);
+    }
+
+    fn draft(&mut self, seq: SeqId, k: usize) -> Result<Option<Vec<i32>>> {
+        let st = self.seqs.entry(seq).or_default();
+        let mut ctx = st.prompt.clone();
+        ctx.extend_from_slice(&st.out);
+        let proposal = self.draft.generate(&ctx, k)?;
+        Ok((!proposal.is_empty()).then_some(proposal))
+    }
+
+    fn verify(&mut self, seq: SeqId, draft: &[i32]) -> Result<Option<VerifyOutcome>> {
+        let full = self.continue_verify(seq, draft.len() + 1)?;
+        if full.is_empty() {
+            return Ok(None);
+        }
+        // Longest common prefix, capped so the bonus token exists even
+        // when the verify backend returned fewer tokens than asked.
+        let mut accepted = 0usize;
+        while accepted < draft.len()
+            && accepted < full.len().saturating_sub(1)
+            && full[accepted] == draft[accepted]
+        {
+            accepted += 1;
+        }
+        let next = full[accepted];
+        let st = self.seqs.entry(seq).or_default();
+        st.out.extend_from_slice(&full[..accepted]);
+        st.out.push(next);
+        Ok(Some(VerifyOutcome { accepted, next }))
+    }
+}
+
+impl TierBackend for SpecPair {
+    fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        // The pair is always stepped; a direct generate just proxies
+        // the verify model (lossless by definition).
+        self.verify.generate(prompt, max_new)
+    }
+
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Emits a deterministic per-(prompt, position) stream; a nonzero
+    /// `disagree_mod` makes a "draft" variant disagree at positions
+    /// picked by [`draft_agrees`].
+    struct StreamBackend {
+        mark: i32,
+        disagree_mod: u64,
+    }
+
+    impl StreamBackend {
+        fn token(&self, prompt: &[i32], pos: usize) -> i32 {
+            let base = prompt.first().copied().unwrap_or(0);
+            base + self.mark + pos as i32
+        }
+    }
+
+    impl TierBackend for StreamBackend {
+        fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+            // `prompt` here is the full context; position indexes from
+            // its length so the stream is prefix-consistent.
+            Ok((0..max_new)
+                .map(|i| {
+                    let pos = prompt.len() + i;
+                    let t = self.token(&prompt[..1.min(prompt.len())], pos);
+                    if draft_agrees(prompt.first().copied().unwrap_or(0) as u64, pos, self.disagree_mod)
+                    {
+                        t
+                    } else {
+                        t + 1000 // a wrong draft token
+                    }
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn agreement_function_is_deterministic_and_respects_mod() {
+        assert!(draft_agrees(7, 3, 0), "mod 0 = perfect agreement");
+        assert!(!draft_agrees(7, 3, 1), "mod 1 = never agrees");
+        for key in 0..8u64 {
+            for pos in 0..64usize {
+                assert_eq!(
+                    draft_agrees(key, pos, 4),
+                    draft_agrees(key, pos, 4),
+                    "pure function"
+                );
+            }
+        }
+        // Roughly one in `m` positions disagrees.
+        let misses = (0..400).filter(|&p| !draft_agrees(3, p, 4)).count();
+        assert!((80..=120).contains(&misses), "~100 expected, got {misses}");
+    }
+
+    #[test]
+    fn spec_pair_emits_exactly_the_verify_stream() {
+        let mk = || {
+            SpecPair::new(
+                Box::new(StreamBackend { mark: 0, disagree_mod: 3 }),
+                Box::new(StreamBackend { mark: 0, disagree_mod: 0 }),
+            )
+        };
+        // Reference: plain decode, token by token.
+        let mut plain = mk();
+        let prompt = vec![5, 6, 7];
+        let first = plain.prefill_chunk(1, &prompt, true).unwrap().unwrap();
+        let mut reference = vec![first];
+        for _ in 0..7 {
+            reference.push(plain.decode(&[1]).unwrap()[0]);
+        }
+        // Speculative: draft 3, verify, repeat.
+        let mut spec = mk();
+        let first = spec.prefill_chunk(1, &prompt, true).unwrap().unwrap();
+        let mut out = vec![first];
+        let mut accepted_total = 0usize;
+        while out.len() < 8 {
+            let drafts = spec.draft(1, 3).unwrap().unwrap();
+            let v = spec.verify(1, &drafts).unwrap().unwrap();
+            out.extend_from_slice(&drafts[..v.accepted]);
+            out.push(v.next);
+            accepted_total += v.accepted;
+        }
+        out.truncate(8);
+        assert_eq!(out, reference, "lossless: speculative == plain verify stream");
+        assert!(accepted_total > 0, "the imperfect draft still lands accepts");
+    }
+}

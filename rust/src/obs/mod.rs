@@ -33,7 +33,9 @@
 //! | `queue_exit`    | tier worker       | `tier` = queue left |
 //! | `route_decision`| server router     | `a` = action (0 accept / 1 escalate / 2 skip), `b` = target tier |
 //! | `prefill_chunk` | engine / DES plan | `a` = tokens, `b` = start offset, `c` = last flag. A request whose *first* chunk has `b > 0` had `b` prompt tokens served from shared prefix pages |
-//! | `decode_iter`   | engine / DES plan | `a` = live batch size that tick |
+//! | `decode_iter`   | engine / DES plan | `a` = live batch size that tick, `b` = tokens produced (0 for legacy single-token decode; a speculative verify step re-emits this kind with `b` = accepted + 1) |
+//! | `draft_iter`    | engine / DES plan | speculative draft scheduled: `a` = draft tokens `k`, `b` = live batch size that tick |
+//! | `verify_accept` | engine / DES exec | speculative verify settled: `a` = draft tokens accepted, `b` = rejected |
 //! | `preempt`       | engine / DES plan | recompute eviction (`a` = 0); swap evictions appear as `swap_out` instead |
 //! | `swap_out`      | engine / DES plan | `a` = KV pages moved to host |
 //! | `swap_in`       | engine / DES plan | `a` = KV pages moved back |
@@ -109,6 +111,8 @@ pub enum EventKind {
     RouteDecision,
     PrefillChunk,
     DecodeIter,
+    DraftIter,
+    VerifyAccept,
     Preempt,
     SwapOut,
     SwapIn,
@@ -129,6 +133,8 @@ impl EventKind {
             EventKind::RouteDecision => "route_decision",
             EventKind::PrefillChunk => "prefill_chunk",
             EventKind::DecodeIter => "decode_iter",
+            EventKind::DraftIter => "draft_iter",
+            EventKind::VerifyAccept => "verify_accept",
             EventKind::Preempt => "preempt",
             EventKind::SwapOut => "swap_out",
             EventKind::SwapIn => "swap_in",
@@ -305,6 +311,79 @@ pub fn emit_plan_events(
             Event { a: batch, ..Event::at(t, key_of(id), tier, EventKind::DecodeIter) },
         );
     }
+    // Speculative tasks trail the plain decoders; a legacy plan has an
+    // empty `spec` list, so legacy emission stays byte-identical. The
+    // settled accept/reject split is emitted post-execution through
+    // [`emit_spec_events`] — acceptance is not a function of the plan.
+    for task in &plan.spec {
+        recorder.emit(
+            shard,
+            Event {
+                a: task.k as u64,
+                b: batch,
+                ..Event::at(t, key_of(task.id), tier, EventKind::DraftIter)
+            },
+        );
+    }
+}
+
+/// One settled speculative task, as the engine (or the DES) resolved
+/// it: `drafted` tokens were proposed (0 when the backend declined and
+/// the task degraded to a plain decode step), `accepted` of them were
+/// kept, and `emitted` verified tokens landed on the sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecResult {
+    pub id: SeqId,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub emitted: usize,
+}
+
+/// Emit the post-execution events of a tick's settled speculative
+/// tasks at time `t`: per task a `verify_accept` (`a` = accepted, `b` =
+/// rejected) followed by a `decode_iter` whose `b` carries the tokens
+/// the verify step produced (legacy single-token decodes keep `b` = 0,
+/// so their signatures are untouched). Like [`emit_plan_events`] this
+/// is a pure function of its inputs and is called identically by the
+/// live engine and the paged DES — acceptance counts join the
+/// tick-for-tick equivalence pin through it. Tasks that degraded to a
+/// plain decode (`drafted == 0`) emit only the legacy-shaped
+/// `decode_iter`.
+pub fn emit_spec_events(
+    recorder: &TraceRecorder,
+    shard: usize,
+    t: f64,
+    tier: u32,
+    batch: usize,
+    results: &[SpecResult],
+    key_of: impl Fn(SeqId) -> u64,
+) {
+    for r in results {
+        let req = key_of(r.id);
+        if r.drafted > 0 {
+            recorder.emit(
+                shard,
+                Event {
+                    a: r.accepted as u64,
+                    b: (r.drafted - r.accepted.min(r.drafted)) as u64,
+                    ..Event::at(t, req, tier, EventKind::VerifyAccept)
+                },
+            );
+            recorder.emit(
+                shard,
+                Event {
+                    a: batch as u64,
+                    b: r.emitted as u64,
+                    ..Event::at(t, req, tier, EventKind::DecodeIter)
+                },
+            );
+        } else {
+            recorder.emit(
+                shard,
+                Event { a: batch as u64, ..Event::at(t, req, tier, EventKind::DecodeIter) },
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +400,8 @@ mod tests {
             EventKind::RouteDecision,
             EventKind::PrefillChunk,
             EventKind::DecodeIter,
+            EventKind::DraftIter,
+            EventKind::VerifyAccept,
             EventKind::Preempt,
             EventKind::SwapOut,
             EventKind::SwapIn,
@@ -350,6 +431,7 @@ mod tests {
             migrated_out: vec![(5, 3)],
             migrated_in: vec![(6, 2)],
             forced_expansions: 0,
+            spec: vec![],
         };
         let rec_a = TraceRecorder::new(1, 64);
         let rec_b = TraceRecorder::new(1, 64);
@@ -374,5 +456,42 @@ mod tests {
         assert_eq!((a[0].req, a[0].a), (105, 3));
         let min = a.iter().find(|e| e.kind == EventKind::MigrateIn).unwrap();
         assert_eq!((min.req, min.a), (106, 2));
+    }
+
+    #[test]
+    fn spec_events_extend_the_vocabulary_without_touching_legacy_signatures() {
+        use crate::engine::scheduler::SpecTask;
+        // A plan with a speculative task emits draft_iter after the
+        // plain decoders; the batch counts the speculating sequence.
+        let plan = IterationPlan {
+            decode: vec![0],
+            spec: vec![SpecTask { id: 1, k: 4 }],
+            ..IterationPlan::default()
+        };
+        let rec = TraceRecorder::new(1, 64);
+        emit_plan_events(&rec, 0, 1.0, 0, &plan, |id| id as u64);
+        let evs = rec.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].signature(), (EventKind::DecodeIter, 2, 0, 0));
+        assert_eq!(evs[1].signature(), (EventKind::DraftIter, 4, 2, 0));
+
+        // Settled results: verify_accept + a decode_iter carrying the
+        // produced-token count; a degraded task (drafted == 0) emits
+        // the legacy single-token decode_iter shape (b = 0).
+        let rec = TraceRecorder::new(1, 64);
+        let results = [
+            SpecResult { id: 1, drafted: 4, accepted: 3, emitted: 4 },
+            SpecResult { id: 2, drafted: 0, accepted: 0, emitted: 1 },
+        ];
+        emit_spec_events(&rec, 0, 2.0, 0, 2, &results, |id| id as u64);
+        let evs = rec.snapshot();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].signature(), (EventKind::VerifyAccept, 3, 1, 0));
+        assert_eq!(evs[1].signature(), (EventKind::DecodeIter, 2, 4, 0));
+        assert_eq!(
+            evs[2].signature(),
+            (EventKind::DecodeIter, 2, 0, 0),
+            "a degraded task is indistinguishable from a legacy decode"
+        );
     }
 }

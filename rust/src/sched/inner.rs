@@ -45,8 +45,10 @@ use crate::milp::{MilpProblem, Rel};
 use crate::models::ModelSpec;
 use crate::parallel::{enumerate_strategies, Strategy};
 use crate::perf::{ReplicaModel, Workload, DEFAULT_PAGE_TOKENS, DEFAULT_PREFILL_CHUNK};
-use crate::sched::plan::DisaggSpec;
-use crate::sim::analytic::{estimate_p95_disagg, EngineSemantics, OVERLOAD_LATENCY};
+use crate::sched::plan::{DisaggSpec, SpecSpec};
+use crate::sim::analytic::{
+    estimate_p95_disagg, estimate_p95_groups_engine, EngineSemantics, SpecSem, OVERLOAD_LATENCY,
+};
 
 /// Options for the inner solver.
 #[derive(Debug, Clone)]
@@ -80,6 +82,15 @@ pub struct InnerOptions {
     /// choice the runtime scheduler makes, so the MILP/Pareto layer
     /// sees the recompute/swap tradeoff per design point.
     pub preemption: Option<PreemptionMode>,
+    /// Assumed per-position draft/verify acceptance rate for
+    /// cross-tier speculative decoding. `None` keeps the legacy
+    /// estimates bit-identical (no speculation considered);
+    /// `Some(alpha)` lets the post-allocation refinement try draft
+    /// depths on each deep tier, drafting with the nearest deployed
+    /// shallower tier, and adopt a depth only where the speculative
+    /// estimate ([`crate::sim::analytic::spec_decode_cost`]) beats the
+    /// plain one.
+    pub speculation: Option<f64>,
 }
 
 impl Default for InnerOptions {
@@ -91,6 +102,7 @@ impl Default for InnerOptions {
             shared_prefix_tokens: 0.0,
             prefill_chunk: DEFAULT_PREFILL_CHUNK as f64,
             preemption: None,
+            speculation: None,
         }
     }
 }
@@ -152,6 +164,17 @@ pub struct InnerSolution {
     /// the split is adopted only where it beats the unified estimate;
     /// `tier_p95` and `max_latency` reflect the refined values.
     pub disagg: Vec<Option<DisaggSpec>>,
+    /// Per-tier cross-tier speculation (`None` = plain decode). Only
+    /// populated when [`InnerOptions::speculation`] supplies an
+    /// assumed acceptance rate: each deployed tier `i >= 1` with a
+    /// deployed shallower tier re-scores its chosen design at draft
+    /// depths k in {2, 4, 8} — charging the shallow tier's per-token
+    /// draft cost — and adopts the best depth only where it beats the
+    /// plain estimate. Never set on tier 0 or on a tier running a
+    /// prefill/decode split (draft state does not survive the KV
+    /// handoff; the server rejects the combination). `tier_p95` and
+    /// `max_latency` reflect the refined values.
+    pub speculation: Vec<Option<SpecSpec>>,
 }
 
 /// Best parallelism strategy and its p95 for (model, budget, workload)
@@ -460,6 +483,56 @@ impl InnerSolver {
             }
             tier_p95[i] = best;
         }
+
+        // Cross-tier speculation refinement: with an assumed
+        // acceptance rate, each deployed tier i >= 1 re-scores its
+        // chosen design with the speculative decode term
+        // ([`crate::sim::analytic::spec_decode_cost`]) at draft depths
+        // k in {2, 4, 8}, drafting with the nearest deployed shallower
+        // tier's replica design, and adopts the best depth only where
+        // it beats the tier's current estimate. Split tiers stay
+        // plain: draft state does not survive the prefill->decode KV
+        // handoff, and the server rejects the combination.
+        let mut speculation: Vec<Option<SpecSpec>> = vec![None; c];
+        if let Some(alpha) = self.opts.speculation {
+            let alpha = alpha.clamp(0.0, 1.0);
+            for &i in &active {
+                if i == 0 || disagg[i].is_some() {
+                    continue;
+                }
+                let Some(s) = &strategies[i] else { continue };
+                let Some(j) = (0..i).rev().find(|&j| strategies[j].is_some()) else {
+                    continue;
+                };
+                let w = &tier_workloads[i];
+                let avg_ctx = w.avg_input + w.avg_output / 2.0;
+                let Some(dg) = strategies[j].as_ref().and_then(|ds| ds.groups.first()) else {
+                    continue;
+                };
+                let draft_rm =
+                    ReplicaModel::new(&self.cascade[j], &self.cluster, dg.tp, dg.pp, avg_ctx);
+                let draft_s = draft_rm.decode_iteration(1);
+                let rms: Vec<ReplicaModel> = s
+                    .groups
+                    .iter()
+                    .map(|g| ReplicaModel::new(&self.cascade[i], &self.cluster, g.tp, g.pp, avg_ctx))
+                    .collect();
+                let groups: Vec<(&ReplicaModel, usize)> =
+                    rms.iter().zip(&s.groups).map(|(rm, g)| (rm, g.count)).collect();
+                let mut best = tier_p95[i];
+                for k in [2usize, 4, 8] {
+                    let mut sem_s = sem;
+                    sem_s.speculation =
+                        Some(SpecSem { draft_k: k, acceptance: alpha, draft_s_per_token: draft_s });
+                    let est = estimate_p95_groups_engine(&groups, w, &sem_s);
+                    if est < best {
+                        best = est;
+                        speculation[i] = Some(SpecSpec { draft_k: k, acceptance: alpha });
+                    }
+                }
+                tier_p95[i] = best;
+            }
+        }
         let max_latency = active.iter().map(|&i| tier_p95[i]).fold(0.0f64, f64::max);
 
         Ok(InnerSolution {
@@ -470,6 +543,7 @@ impl InnerSolver {
             milp_nodes: 0,
             preemption,
             disagg,
+            speculation,
         })
     }
 
@@ -824,6 +898,7 @@ mod tests {
         assert_eq!(a.max_latency, b.max_latency);
         assert_eq!(a.preemption, b.preemption);
         assert_eq!(a.disagg, b.disagg);
+        assert_eq!(a.speculation, b.speculation);
     }
 
     #[test]
@@ -881,6 +956,87 @@ mod tests {
         assert!(
             (sol.max_latency - refined_max).abs() < 1e-12,
             "objective must track refined tier p95s"
+        );
+    }
+
+    #[test]
+    fn speculation_refinement_adopts_depth_only_where_it_wins() {
+        // Default options never speculate — legacy estimates stay
+        // bit-identical.
+        let w = workloads([6.0, 2.0, 0.5]);
+        let plain = InnerSolver::new(deepseek_cascade(), cluster(), InnerOptions::default())
+            .solve(&w, 32)
+            .unwrap();
+        assert!(plain.speculation.iter().all(|s| s.is_none()));
+
+        // With an assumed acceptance rate, cross-check every tier
+        // against a re-derived estimate: a speculating tier must score
+        // exactly what the speculative estimate says at its adopted
+        // depth and beat its plain p95; a plain tier must have had no
+        // winning depth.
+        let opts = InnerOptions { speculation: Some(0.9), ..Default::default() };
+        let solver = InnerSolver::new(deepseek_cascade(), cluster(), opts);
+        let sol = solver.solve(&w, 32).unwrap();
+        assert_eq!(sol.speculation.len(), sol.gpus.len());
+        assert!(sol.speculation[0].is_none(), "tier 0 has no shallower tier to draft with");
+        let sem = solver.opts.engine_semantics();
+        for i in 1..sol.gpus.len() {
+            if sol.gpus[i] == 0 || sol.disagg[i].is_some() {
+                assert!(sol.speculation[i].is_none(), "tier {i} speculates where it must not");
+                continue;
+            }
+            let Some(j) = (0..i).rev().find(|&j| sol.strategies[j].is_some()) else {
+                assert!(sol.speculation[i].is_none());
+                continue;
+            };
+            let avg_ctx = w[i].avg_input + w[i].avg_output / 2.0;
+            let dg = sol.strategies[j].as_ref().unwrap().groups.first().unwrap();
+            let draft_rm =
+                ReplicaModel::new(&solver.cascade[j], &solver.cluster, dg.tp, dg.pp, avg_ctx);
+            let draft_s = draft_rm.decode_iteration(1);
+            let s = sol.strategies[i].as_ref().unwrap();
+            let rms: Vec<ReplicaModel> = s
+                .groups
+                .iter()
+                .map(|g| ReplicaModel::new(&solver.cascade[i], &solver.cluster, g.tp, g.pp, avg_ctx))
+                .collect();
+            let groups: Vec<(&ReplicaModel, usize)> =
+                rms.iter().zip(&s.groups).map(|(rm, g)| (rm, g.count)).collect();
+            let plain_p95 = plain.tier_p95[i];
+            let mut best = plain_p95;
+            let mut best_k = None;
+            for k in [2usize, 4, 8] {
+                let mut sem_s = sem;
+                sem_s.speculation =
+                    Some(SpecSem { draft_k: k, acceptance: 0.9, draft_s_per_token: draft_s });
+                let est = estimate_p95_groups_engine(&groups, &w[i], &sem_s);
+                if est < best {
+                    best = est;
+                    best_k = Some(k);
+                }
+            }
+            match (best_k, sol.speculation[i]) {
+                (Some(k), Some(sp)) => {
+                    assert_eq!(sp.draft_k, k, "tier {i} adopted the wrong depth");
+                    assert!((sp.acceptance - 0.9).abs() < 1e-12);
+                    assert!(
+                        (sol.tier_p95[i] - best).abs() < 1e-9,
+                        "tier {i}: refined p95 {} != estimate {best}",
+                        sol.tier_p95[i]
+                    );
+                    assert!(best < plain_p95, "tier {i}: adoption must win");
+                }
+                (None, None) => {
+                    assert_eq!(sol.tier_p95[i], plain_p95, "tier {i} altered without a win");
+                }
+                (a, b) => panic!("tier {i}: expected depth {a:?}, plan has {b:?}"),
+            }
+        }
+        let refined_max = sol.tier_p95.iter().cloned().fold(0.0f64, f64::max);
+        assert!((sol.max_latency - refined_max).abs() < 1e-12);
+        assert!(
+            sol.max_latency <= plain.max_latency + 1e-12,
+            "speculation can only help the objective"
         );
     }
 }

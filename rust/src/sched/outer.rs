@@ -146,6 +146,7 @@ fn evaluate_candidate(
             processing_ratio: routing.processing_ratios[i],
             predicted_p95: sol.tier_p95[i],
             disagg: sol.disagg[i],
+            speculation: sol.speculation[i],
         })
         .collect();
     let plan = CascadePlan {

@@ -37,6 +37,22 @@ impl DisaggSpec {
     }
 }
 
+/// Cross-tier speculative decoding for one tier: its engines draft
+/// `draft_k` tokens per steady decoder on the tier *below* and verify
+/// them in one step (lossless — every emitted token is the tier's own
+/// model's choice). `acceptance` is the per-position agreement rate
+/// the scheduler assumed when it scored the design; the runtime only
+/// needs `draft_k`. Absent on a `TierPlan` means plain decode — legacy
+/// plans parse unchanged. Never present on tier 0 (there is no
+/// shallower tier to draft with).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecSpec {
+    /// Tokens drafted per verify step.
+    pub draft_k: usize,
+    /// Modeled per-position draft/verify agreement rate in [0, 1].
+    pub acceptance: f64,
+}
+
 /// Deployment decision for one model tier.
 #[derive(Debug, Clone)]
 pub struct TierPlan {
@@ -55,6 +71,9 @@ pub struct TierPlan {
     /// (`None` = unified, the only mode plans knew before the split
     /// dimension existed — legacy plans parse unchanged).
     pub disagg: Option<DisaggSpec>,
+    /// Optional cross-tier speculative decoding (`None` = plain
+    /// decode; legacy plans parse unchanged).
+    pub speculation: Option<SpecSpec>,
 }
 
 /// The full cascade plan (§3.1's "cascade plan").
@@ -117,6 +136,17 @@ impl CascadePlan {
         self.tiers.iter().any(|t| t.gpus > 0 && t.disagg.is_some())
     }
 
+    /// Speculation config of tier `i` (`None` = plain decode; always
+    /// `None` for tier 0 and out-of-range indexes).
+    pub fn speculation_for(&self, i: usize) -> Option<SpecSpec> {
+        self.tiers.get(i).and_then(|t| t.speculation)
+    }
+
+    /// Whether any deployed tier runs speculative decoding.
+    pub fn has_speculation(&self) -> bool {
+        self.tiers.iter().any(|t| t.gpus > 0 && t.speculation.is_some())
+    }
+
     /// Render as JSON for configs/results; parse back with
     /// [`CascadePlan::from_json`].
     pub fn to_json(&self) -> Json {
@@ -169,6 +199,16 @@ impl CascadePlan {
                                         ]),
                                     },
                                 ),
+                                (
+                                    "speculation",
+                                    match &t.speculation {
+                                        None => Json::Null,
+                                        Some(s) => Json::obj(vec![
+                                            ("draft_k", Json::num(s.draft_k as f64)),
+                                            ("acceptance", Json::num(s.acceptance)),
+                                        ]),
+                                    },
+                                ),
                             ])
                         })
                         .collect(),
@@ -213,6 +253,32 @@ impl CascadePlan {
                 if disagg.is_some() && gpus == 0 {
                     anyhow::bail!("tier {i}: disagg split on an undeployed tier");
                 }
+                // Optional for backward compatibility: plans captured
+                // before speculation existed decode plainly.
+                let speculation = match t.get("speculation") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => {
+                        let draft_k = s.req("draft_k")?.as_usize()?;
+                        let acceptance = s.req("acceptance")?.as_f64()?;
+                        if draft_k == 0 {
+                            anyhow::bail!("tier {i}: speculation needs draft_k >= 1");
+                        }
+                        if !(0.0..=1.0).contains(&acceptance) {
+                            anyhow::bail!(
+                                "tier {i}: speculation acceptance {acceptance} outside [0, 1]"
+                            );
+                        }
+                        Some(SpecSpec { draft_k, acceptance })
+                    }
+                };
+                if speculation.is_some() && gpus == 0 {
+                    anyhow::bail!("tier {i}: speculation on an undeployed tier");
+                }
+                if speculation.is_some() && i == 0 {
+                    anyhow::bail!(
+                        "tier 0 cannot speculate: there is no shallower tier to draft with"
+                    );
+                }
                 Ok(TierPlan {
                     model_name: t.req("model")?.as_str()?.to_string(),
                     gpus,
@@ -225,6 +291,7 @@ impl CascadePlan {
                     processing_ratio: t.req("processing_ratio")?.as_f64()?,
                     predicted_p95: t.req("predicted_p95")?.as_f64()?,
                     disagg,
+                    speculation,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -305,6 +372,12 @@ impl CascadePlan {
                     .disagg
                     .map(|d| format!(" D={}p+{}d", d.prefill_replicas, d.decode_replicas))
                     .unwrap_or_default();
+                let d = format!(
+                    "{d}{}",
+                    t.speculation
+                        .map(|s| format!(" S=k{}@{:.2}", s.draft_k, s.acceptance))
+                        .unwrap_or_default()
+                );
                 format!(
                     "{}: f={} {} p={:.0}%{d}",
                     t.model_name,
@@ -355,6 +428,7 @@ mod tests {
                     processing_ratio: 1.0,
                     predicted_p95: 2.0,
                     disagg: None,
+                    speculation: None,
                 },
                 TierPlan {
                     model_name: "mid".into(),
@@ -364,6 +438,7 @@ mod tests {
                     processing_ratio: 0.0,
                     predicted_p95: 0.0,
                     disagg: None,
+                    speculation: None,
                 },
                 TierPlan {
                     model_name: "large".into(),
@@ -373,6 +448,7 @@ mod tests {
                     processing_ratio: 0.2,
                     predicted_p95: 3.0,
                     disagg: None,
+                    speculation: None,
                 },
             ],
             predicted_latency: 3.0,
@@ -501,6 +577,36 @@ mod tests {
         assert!(CascadePlan::from_json_text(&q.to_json().to_string()).is_err());
         // Legacy plans without the key parse as unified.
         assert!(!sample().has_disagg());
+    }
+
+    #[test]
+    fn speculation_round_trips_and_validates() {
+        let mut p = sample();
+        p.tiers[2].speculation = Some(SpecSpec { draft_k: 4, acceptance: 0.8 });
+        let back = CascadePlan::from_json_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(back.speculation_for(2), Some(SpecSpec { draft_k: 4, acceptance: 0.8 }));
+        assert_eq!(back.speculation_for(0), None);
+        assert!(back.has_speculation());
+        assert!(p.summary().contains("S=k4@0.80"), "{}", p.summary());
+        // Tier 0 has no shallower tier to draft with.
+        let mut q = sample();
+        q.tiers[0].speculation = Some(SpecSpec { draft_k: 2, acceptance: 0.5 });
+        assert!(CascadePlan::from_json_text(&q.to_json().to_string()).is_err());
+        // An undeployed tier cannot speculate.
+        let mut u = sample();
+        u.tiers[1].speculation = Some(SpecSpec { draft_k: 2, acceptance: 0.5 });
+        assert!(CascadePlan::from_json_text(&u.to_json().to_string()).is_err());
+        // draft_k 0 and out-of-range acceptance are rejected.
+        let text = p.to_json().to_string();
+        let bad_k = text.replace("\"draft_k\":4", "\"draft_k\":0");
+        assert!(bad_k != text, "replace must hit");
+        assert!(CascadePlan::from_json_text(&bad_k).is_err());
+        let bad_a = text.replace("\"acceptance\":0.8", "\"acceptance\":1.5");
+        assert!(bad_a != text, "replace must hit");
+        assert!(CascadePlan::from_json_text(&bad_a).is_err());
+        // Legacy plans without the key parse as plain decode.
+        assert!(!sample().has_speculation());
+        assert_eq!(sample().speculation_for(2), None);
     }
 
     #[test]

@@ -64,6 +64,13 @@ pub struct EngineSemantics {
     /// and the PCIe round trip of the victim's pages — the runtime
     /// scheduler's own per-victim comparison.
     pub preemption: Option<PreemptionMode>,
+    /// Cross-tier speculative decoding on this pool: the decode leg
+    /// collapses to `tokens / E` verify steps of expected progress
+    /// `E = (1 - α^(k+1)) / (1 - α)` tokens each, every step also
+    /// paying `k` draft tokens on the shallow tier — see
+    /// [`spec_decode_cost`]. `None` reproduces the plain decode term
+    /// bit-for-bit.
+    pub speculation: Option<SpecSem>,
 }
 
 impl Default for EngineSemantics {
@@ -72,6 +79,46 @@ impl Default for EngineSemantics {
             shared_prefix_tokens: 0.0,
             prefill_chunk: f64::INFINITY,
             preemption: None,
+            speculation: None,
+        }
+    }
+}
+
+/// Speculative-decoding semantics for the closed-form estimate: the
+/// scheduler's draft depth, the modeled per-position acceptance rate
+/// α ∈ [0, 1], and the shallow tier's per-token draft cost (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct SpecSem {
+    /// Tokens drafted per verify step.
+    pub draft_k: usize,
+    /// Probability a drafted token matches the verify model's choice.
+    pub acceptance: f64,
+    /// Seconds per drafted token on the draft tier's replica.
+    pub draft_s_per_token: f64,
+}
+
+/// Cost of emitting `tokens` decode tokens at `iter_s` seconds per
+/// verify/decode iteration. Without speculation this is exactly the
+/// legacy `tokens * iter_s`. With speculation, each verify step emits
+/// `E = (1 - α^(k+1)) / (1 - α)` tokens in expectation (the standard
+/// speculative-decoding progress formula; `k + 1` at α = 1) and costs
+/// one verify iteration plus `k` draft tokens. Speculation is charged
+/// into service time only — the rho/capacity screen stays at the plain
+/// decode rate, a deliberately conservative credit (the DES re-scores
+/// final plans with the real discipline).
+pub fn spec_decode_cost(tokens: f64, iter_s: f64, sp: Option<SpecSem>) -> f64 {
+    match sp {
+        None => tokens * iter_s,
+        Some(s) => {
+            let k = s.draft_k.max(1) as f64;
+            let a = s.acceptance.clamp(0.0, 1.0);
+            let e = if a >= 1.0 - 1e-12 {
+                k + 1.0
+            } else {
+                (1.0 - a.powf(k + 1.0)) / (1.0 - a)
+            };
+            let steps = tokens / e.max(1.0);
+            steps * (iter_s + k * s.draft_s_per_token)
         }
     }
 }
@@ -161,7 +208,11 @@ pub fn estimate_p95_groups_engine(
         // shared prefix shrinks the prompt span actually prefilled.
         let prefilled = (w.avg_input - sem.shared_prefix_tokens).max(0.0);
         let mut base = r.ttft_chunked(prefilled, sem.prefill_chunk, b)
-            + (w.avg_output - 1.0).max(0.0) * r.decode_iteration(b);
+            + spec_decode_cost(
+                (w.avg_output - 1.0).max(0.0),
+                r.decode_iteration(b),
+                sem.speculation,
+            );
         // Preemption-overhead term: as the pool saturates, context
         // growth evicts newest co-runners; each victim pays either a
         // full recompute of the mean resident context or a PCIe round
@@ -243,7 +294,7 @@ pub fn estimate_p95_disagg(
         let resident = rate_d * (dec_tokens * rm.decode_iteration(b) + migrate);
         b = (resident.ceil() as usize).clamp(1, b_max);
     }
-    let svc_d = dec_tokens * rm.decode_iteration(b) + migrate;
+    let svc_d = spec_decode_cost(dec_tokens, rm.decode_iteration(b), sem.speculation) + migrate;
     let cap_d =
         n_decode as f64 * b_max as f64 / (dec_tokens * rm.decode_iteration(b_max) + migrate).max(1e-9);
     let rho_d = w.rate / cap_d;
@@ -413,6 +464,70 @@ mod tests {
         );
         assert!(rec > none, "saturation must charge eviction overhead");
         assert!(swap > none && swap <= rec, "swap {swap} vs recompute {rec}");
+    }
+
+    #[test]
+    fn speculation_term_is_acceptance_monotone_and_none_is_exact_legacy() {
+        let p = pool(2, 2);
+        let groups: Vec<(&ReplicaModel, usize)> = p.iter().map(|r| (r, 1)).collect();
+        let cap = pool_capacity(&p, &w(1.0));
+        let load = w(cap * 0.4);
+        let plain = estimate_p95_groups(&groups, &load);
+        // Draft cost well under a verify iteration — the cross-tier
+        // regime the outer sweep considers.
+        let draft_s = p[0].decode_iteration(1) * 0.1;
+        let spec = |acceptance| {
+            estimate_p95_groups_engine(
+                &groups,
+                &load,
+                &EngineSemantics {
+                    speculation: Some(SpecSem { draft_k: 4, acceptance, draft_s_per_token: draft_s }),
+                    ..Default::default()
+                },
+            )
+        };
+        let perfect = spec(1.0);
+        let half = spec(0.5);
+        let never = spec(0.0);
+        assert!(
+            perfect < half && half < never,
+            "estimate must fall as acceptance rises: {perfect} vs {half} vs {never}"
+        );
+        assert!(perfect < plain, "k+1 tokens per verify step must beat plain decode");
+        // α = 0: every step still emits the verify token but pays the
+        // wasted drafts — strictly worse than not speculating.
+        assert!(never > plain, "always-rejected drafts are pure overhead");
+        // The closed-form progress at α = 1 is exactly k + 1.
+        let cost1 = spec_decode_cost(100.0, 0.01, Some(SpecSem {
+            draft_k: 4,
+            acceptance: 1.0,
+            draft_s_per_token: 0.0,
+        }));
+        assert!((cost1 - 100.0 / 5.0 * 0.01).abs() < 1e-12, "{cost1}");
+        // And `None` is the legacy product, bit for bit.
+        assert_eq!(spec_decode_cost(127.0, 0.013, None), 127.0 * 0.013);
+    }
+
+    #[test]
+    fn disagg_estimate_honors_speculation_on_the_decode_leg() {
+        let rm = &pool(2, 1)[0];
+        let load = w(0.2);
+        let plain = estimate_p95_disagg(rm, 1, 1, &load, &EngineSemantics::default());
+        let spec = estimate_p95_disagg(
+            rm,
+            1,
+            1,
+            &load,
+            &EngineSemantics {
+                speculation: Some(SpecSem {
+                    draft_k: 4,
+                    acceptance: 0.9,
+                    draft_s_per_token: rm.decode_iteration(1) * 0.1,
+                }),
+                ..Default::default()
+            },
+        );
+        assert!(spec < plain, "speculation must cut the decode leg: {spec} vs {plain}");
     }
 
     #[test]

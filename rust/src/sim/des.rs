@@ -28,9 +28,13 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
-use crate::engine::{EngineRole, IterationScheduler, KvPool, PreemptionConfig, PreemptionMode};
+use crate::engine::{
+    draft_agrees, EngineRole, IterationScheduler, KvPool, PreemptionConfig, PreemptionMode,
+    SpecTask,
+};
 use crate::obs::{
-    emit_plan_events, Event as ObsEvent, EventKind as ObsEventKind, TraceRecorder,
+    emit_plan_events, emit_spec_events, Event as ObsEvent, EventKind as ObsEventKind,
+    SpecResult, TraceRecorder,
 };
 use crate::perf::ReplicaModel;
 use crate::util::stats;
@@ -59,10 +63,36 @@ pub enum DesMode {
         /// the same per-victim policy the live engine runs. `false` =
         /// the recompute-only discipline.
         swap: bool,
+        /// Cross-tier speculative decoding: `Some` plans per-tick
+        /// draft→verify tasks through the same [`IterationScheduler`]
+        /// spec path the live engine runs (opportunistic draft-slack
+        /// growth, verify at the planned batch, rejected-page
+        /// rollback). Acceptance is the deterministic
+        /// [`draft_agrees`] function of (sequence, position), which
+        /// the deterministic live test backends share — the DES↔live
+        /// pin extends to accepted/rejected draft-token counts.
+        spec: Option<SpecSim>,
     },
     /// Whole-batch lockstep: admit a batch, run every request to
     /// completion serially, then admit again.
     Lockstep,
+}
+
+/// Speculative-decoding parameters for [`DesMode::Paged`]. All-integer
+/// so [`DesMode`] stays `Copy + Eq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecSim {
+    /// Draft depth the scheduler plans per steady decoder (the live
+    /// `IterationScheduler::set_spec_k` knob; per-task `k` still caps
+    /// at the sequence's remaining budget).
+    pub draft_k: usize,
+    /// Disagreement modulus fed to [`draft_agrees`]: 0 = the draft
+    /// model always agrees, m > 1 = roughly one position in m
+    /// disagrees (per-sequence phase).
+    pub agree_mod: u64,
+    /// Draft-model cost charged into the tick, microseconds per
+    /// drafted token.
+    pub draft_us_per_token: u64,
 }
 
 /// One request as the simulator sees it.
@@ -143,6 +173,12 @@ pub struct SimOutcome {
     pub migrations: usize,
     /// Private KV pages that crossed the prefill→decode interconnect.
     pub migrate_pages: usize,
+    /// Draft tokens accepted by verify steps across the pool (0 unless
+    /// [`DesMode::Paged`] ran with `spec`).
+    pub spec_accepted: usize,
+    /// Draft tokens rejected (and their pages rolled back) across the
+    /// pool.
+    pub spec_rejected: usize,
 }
 
 impl SimOutcome {
@@ -262,8 +298,8 @@ pub fn simulate_mode(
 ) -> SimOutcome {
     match mode {
         DesMode::Continuous => simulate(replicas, trace),
-        DesMode::Paged { page_tokens, prefill_chunk, swap } => {
-            simulate_paged(replicas, trace, page_tokens, prefill_chunk, swap)
+        DesMode::Paged { page_tokens, prefill_chunk, swap, spec } => {
+            simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, spec, None)
         }
         DesMode::Lockstep => simulate_lockstep(replicas, trace),
     }
@@ -375,6 +411,8 @@ pub fn simulate(replicas: &[ReplicaModel], trace: &[SimRequest]) -> SimOutcome {
         ttfts: Vec::new(),
         migrations: 0,
         migrate_pages: 0,
+        spec_accepted: 0,
+        spec_rejected: 0,
     }
 }
 
@@ -549,6 +587,8 @@ pub fn simulate_lockstep(replicas: &[ReplicaModel], trace: &[SimRequest]) -> Sim
         ttfts: Vec::new(),
         migrations: 0,
         migrate_pages: 0,
+        spec_accepted: 0,
+        spec_rejected: 0,
     }
 }
 
@@ -604,7 +644,7 @@ pub fn simulate_paged(
     prefill_chunk: usize,
     swap: bool,
 ) -> SimOutcome {
-    simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, None)
+    simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, None, None)
 }
 
 /// [`simulate_paged`] with trace emission: every iteration's plan
@@ -622,7 +662,40 @@ pub fn simulate_paged_traced(
     swap: bool,
     recorder: &TraceRecorder,
 ) -> SimOutcome {
-    simulate_paged_inner(replicas, trace, page_tokens, prefill_chunk, swap, Some(recorder))
+    simulate_paged_inner(
+        replicas,
+        trace,
+        page_tokens,
+        prefill_chunk,
+        swap,
+        None,
+        Some(recorder),
+    )
+}
+
+/// [`simulate_paged_traced`] with speculative decoding enabled —
+/// `DesMode::Paged { spec: Some(..) }` plus trace emission (the spec
+/// tasks emit the same `draft_iter`/`verify_accept`/`decode_iter`
+/// vocabulary the live engine does, via the shared
+/// [`emit_spec_events`]).
+pub fn simulate_paged_spec_traced(
+    replicas: &[ReplicaModel],
+    trace: &[SimRequest],
+    page_tokens: usize,
+    prefill_chunk: usize,
+    swap: bool,
+    spec: Option<SpecSim>,
+    recorder: &TraceRecorder,
+) -> SimOutcome {
+    simulate_paged_inner(
+        replicas,
+        trace,
+        page_tokens,
+        prefill_chunk,
+        swap,
+        spec,
+        Some(recorder),
+    )
 }
 
 fn simulate_paged_inner(
@@ -631,6 +704,7 @@ fn simulate_paged_inner(
     page_tokens: usize,
     prefill_chunk: usize,
     swap: bool,
+    spec: Option<SpecSim>,
     recorder: Option<&TraceRecorder>,
 ) -> SimOutcome {
     assert!(!replicas.is_empty(), "simulate() with no replicas");
@@ -646,11 +720,20 @@ fn simulate_paged_inner(
         sched: IterationScheduler,
         /// Sequences producing one token in the in-flight iteration.
         inflight: Vec<u64>,
+        /// Draft→verify tasks of the in-flight iteration (disjoint
+        /// from `inflight` — a sequence never decodes and speculates
+        /// in one tick).
+        inflight_spec: Vec<SpecTask>,
+        /// Planned batch of the in-flight iteration (spec tasks
+        /// included), for the exec-side event emission.
+        inflight_batch: usize,
         busy: bool,
         busy_time: f64,
         backlog_tokens: f64,
         /// Seconds per KV page moved across PCIe (swap accounting).
         swap_s_per_page: f64,
+        /// Speculation parameters (`None` = plain decode).
+        spec: Option<SpecSim>,
         /// Iterations started (the tick counter finish_iters records).
         iters: usize,
     }
@@ -678,6 +761,7 @@ fn simulate_paged_inner(
         if plan.batch() == 0 {
             rep.busy = false;
             rep.inflight.clear();
+            rep.inflight_spec.clear();
             return;
         }
         rep.iters += 1;
@@ -688,10 +772,24 @@ fn simulate_paged_inner(
             .sum();
         let swap_cost = (plan.swap_out_pages() + plan.swap_in_pages()) as f64
             * rep.swap_s_per_page;
+        // Drafting happens on the shallow tier before the verify step;
+        // the verify itself rides the decode iteration at the planned
+        // batch (one fused multi-token step — the same charge the
+        // live calibrated backend makes).
+        let draft_cost = match rep.spec {
+            Some(sp) => {
+                plan.spec.iter().map(|t| t.k).sum::<usize>() as f64
+                    * sp.draft_us_per_token as f64
+                    * 1e-6
+            }
+            None => 0.0,
+        };
         rep.inflight = plan.producers();
+        rep.inflight_spec = plan.spec.clone();
+        rep.inflight_batch = plan.batch();
         let iter = rep.model.decode_iteration(plan.batch())
             / rep.model.pp_capacity_factor;
-        let dt = iter + prefill_cost + swap_cost;
+        let dt = iter + prefill_cost + swap_cost + draft_cost;
         rep.busy = true;
         rep.busy_time += dt;
         *seq += 1;
@@ -706,6 +804,9 @@ fn simulate_paged_inner(
                 m.max_batch.max(1),
             );
             sched.set_prefill_chunk(prefill_chunk);
+            if let Some(sp) = spec {
+                sched.set_spec_k(sp.draft_k);
+            }
             if swap {
                 sched.set_preemption(PreemptionConfig {
                     mode: PreemptionMode::Swap,
@@ -719,10 +820,13 @@ fn simulate_paged_inner(
                 model: m,
                 sched,
                 inflight: Vec::new(),
+                inflight_spec: Vec::new(),
+                inflight_batch: 0,
                 busy: false,
                 busy_time: 0.0,
                 backlog_tokens: 0.0,
                 swap_s_per_page: m.page_swap_seconds(page_tokens),
+                spec,
                 iters: 0,
             }
         })
@@ -740,6 +844,9 @@ fn simulate_paged_inner(
     let mut finish_iters: Vec<usize> = vec![0; trace.len()];
     // First-token time per request, for the traced `finished` TTFT.
     let mut first_tok: Vec<f64> = vec![f64::NAN; trace.len()];
+    // Tokens emitted so far per request — mirrors the scheduler's
+    // `generated` and feeds `draft_agrees` position-keyed acceptance.
+    let mut gen_count: Vec<usize> = vec![0; trace.len()];
     let mut completion_order: Vec<usize> = Vec::with_capacity(trace.len());
     let mut completed = 0usize;
     let mut now = 0.0f64;
@@ -768,10 +875,12 @@ fn simulate_paged_inner(
             EventKind::IterDone(ri) => {
                 let rep = &mut pool[ri];
                 let ids = std::mem::take(&mut rep.inflight);
+                let spec_tasks = std::mem::take(&mut rep.inflight_spec);
                 total_tokens += ids.len() as u64;
                 for id in ids {
                     rep.backlog_tokens = (rep.backlog_tokens - 1.0).max(0.0);
                     let uid = id as usize;
+                    gen_count[uid] += 1;
                     if first_tok[uid].is_nan() {
                         first_tok[uid] = now;
                     }
@@ -789,6 +898,68 @@ fn simulate_paged_inner(
                                     fa: first_tok[uid] - trace[uid].arrival,
                                     fb: now - trace[uid].arrival,
                                     ..ObsEvent::at(now, id, 0, ObsEventKind::Finished)
+                                },
+                            );
+                        }
+                    }
+                }
+                // Draft→verify tasks: acceptance is the shared pure
+                // function of (sequence, position) — position j of the
+                // draft probes output index `generated + j` — and the
+                // scheduler rolls rejected draft slack back exactly
+                // like the live engine's `advance_spec`.
+                let mut spec_results: Vec<SpecResult> =
+                    Vec::with_capacity(spec_tasks.len());
+                let agree_mod = rep.spec.map(|s| s.agree_mod).unwrap_or(0);
+                for task in &spec_tasks {
+                    let uid = task.id as usize;
+                    let mut accepted = 0usize;
+                    while accepted < task.k
+                        && draft_agrees(task.id, gen_count[uid] + accepted, agree_mod)
+                    {
+                        accepted += 1;
+                    }
+                    spec_results.push(SpecResult {
+                        id: task.id,
+                        drafted: task.k,
+                        accepted,
+                        emitted: accepted + 1,
+                    });
+                }
+                // Exec-side events precede any `finished` of the same
+                // tick, matching the live `EngineCore::step` order.
+                if let Some(rec) = recorder {
+                    if !spec_results.is_empty() {
+                        emit_spec_events(
+                            rec,
+                            ri,
+                            now,
+                            0,
+                            rep.inflight_batch,
+                            &spec_results,
+                            |id| id,
+                        );
+                    }
+                }
+                for r in spec_results {
+                    let uid = r.id as usize;
+                    total_tokens += r.emitted as u64;
+                    gen_count[uid] += r.emitted;
+                    rep.backlog_tokens = (rep.backlog_tokens - r.emitted as f64).max(0.0);
+                    if rep.sched.advance_spec(r.id, r.drafted, r.emitted) {
+                        rep.sched.retire(r.id);
+                        latencies_by_id[uid] = now - trace[uid].arrival;
+                        completions[uid] = now;
+                        finish_iters[uid] = rep.iters;
+                        completion_order.push(uid);
+                        completed += 1;
+                        if let Some(rec) = recorder {
+                            rec.emit(
+                                ri,
+                                ObsEvent {
+                                    fa: first_tok[uid] - trace[uid].arrival,
+                                    fb: now - trace[uid].arrival,
+                                    ..ObsEvent::at(now, r.id, 0, ObsEventKind::Finished)
                                 },
                             );
                         }
@@ -836,6 +1007,8 @@ fn simulate_paged_inner(
             .collect(),
         migrations: 0,
         migrate_pages: 0,
+        spec_accepted: pool.iter().map(|r| r.sched.spec_counts().0 as usize).sum(),
+        spec_rejected: pool.iter().map(|r| r.sched.spec_counts().1 as usize).sum(),
     }
 }
 
@@ -1176,6 +1349,8 @@ fn simulate_disagg_inner(
             .collect(),
         migrations,
         migrate_pages,
+        spec_accepted: 0,
+        spec_rejected: 0,
     }
 }
 
@@ -1297,7 +1472,7 @@ mod tests {
         );
         for mode in [
             DesMode::Continuous,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         ] {
             let out = simulate_mode(&pool, &trace, mode);
             assert_eq!(out.latencies.len(), 1);
@@ -1314,7 +1489,7 @@ mod tests {
         let out = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         );
         assert_eq!(out.latencies.len(), 300);
         assert!(out.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
@@ -1330,7 +1505,7 @@ mod tests {
         let again = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         );
         assert_eq!(out.latencies, again.latencies);
         assert_eq!(out.makespan, again.makespan);
@@ -1367,12 +1542,12 @@ mod tests {
         let whole = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         );
         let chunked = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: 512, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: 512, swap: false, spec: None },
         );
         let iter1 = m.decode_iteration(1) / m.pp_capacity_factor;
         let expect_whole = m.prefill_latency(2048.0) + 32.0 * iter1;
@@ -1410,12 +1585,12 @@ mod tests {
         let recompute = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         );
         let swapped = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true, spec: None },
         );
         assert!(recompute.preemptions > 0, "the trace must be preemption-heavy");
         assert_eq!(recompute.swap_outs, 0);
@@ -1437,7 +1612,7 @@ mod tests {
         let again = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: true, spec: None },
         );
         assert_eq!(swapped.latencies, again.latencies);
         assert_eq!(swapped.swap_outs, again.swap_outs);
@@ -1451,7 +1626,7 @@ mod tests {
         let out = simulate_mode(
             &pool,
             &trace,
-            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
         );
         assert_eq!(out.finish_iters.len(), 60);
         assert!(out.finish_iters.iter().all(|&t| t > 0), "every request gets a tick");
@@ -1460,6 +1635,95 @@ mod tests {
         for (i, r) in trace.iter().enumerate() {
             assert!(out.finish_iters[i] >= r.output_tokens as usize);
         }
+    }
+
+    #[test]
+    fn speculative_paged_mode_cuts_ticks_and_stays_lossless_on_counts() {
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(2.0, 80, 13);
+        let plain = simulate_mode(
+            &pool,
+            &trace,
+            DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
+        );
+        let mode = |agree_mod| DesMode::Paged {
+            page_tokens: 16,
+            prefill_chunk: usize::MAX,
+            swap: false,
+            spec: Some(SpecSim { draft_k: 4, agree_mod, draft_us_per_token: 5 }),
+        };
+        let perfect = simulate_mode(&pool, &trace, mode(0));
+        assert_eq!(perfect.latencies.len(), 80, "spec mode completes everything");
+        assert!(perfect.spec_accepted > 0, "perfect drafts must be accepted");
+        assert_eq!(perfect.spec_rejected, 0, "agree_mod 0 never rejects");
+        assert_eq!(plain.spec_accepted + plain.spec_rejected, 0);
+        // Multi-token verify steps finish each request in strictly
+        // fewer engine ticks than one-token-per-tick decode.
+        for (i, (s, p)) in
+            perfect.finish_iters.iter().zip(plain.finish_iters.iter()).enumerate()
+        {
+            assert!(s < p, "req {i}: spec tick {s} must beat plain {p}");
+        }
+        assert!(
+            perfect.makespan < plain.makespan,
+            "spec makespan {} must beat plain {}",
+            perfect.makespan,
+            plain.makespan
+        );
+        // Imperfect agreement: rejections happen, everything still
+        // completes, and rollback keeps occupancy inside the budget.
+        let lossy = simulate_mode(&pool, &trace, mode(3));
+        assert_eq!(lossy.latencies.len(), 80);
+        assert!(lossy.spec_accepted > 0);
+        assert!(lossy.spec_rejected > 0, "agree_mod 3 must reject some drafts");
+        assert!(lossy.peak_pages <= pool[0].kv_pages_total(16));
+        // Deterministic like every other mode.
+        let again = simulate_mode(&pool, &trace, mode(3));
+        assert_eq!(lossy.latencies, again.latencies);
+        assert_eq!(lossy.finish_iters, again.finish_iters);
+        assert_eq!(lossy.spec_accepted, again.spec_accepted);
+        assert_eq!(lossy.spec_rejected, again.spec_rejected);
+    }
+
+    #[test]
+    fn traced_spec_run_emits_draft_and_verify_events_per_tick() {
+        use crate::obs::EventKind as K;
+        let pool = vec![replica(2)];
+        let trace = poisson_trace(2.0, 24, 14);
+        let rec = TraceRecorder::new(pool.len(), 65_536);
+        let spec = Some(SpecSim { draft_k: 3, agree_mod: 3, draft_us_per_token: 5 });
+        let traced =
+            simulate_paged_spec_traced(&pool, &trace, 16, usize::MAX, false, spec, &rec);
+        assert_eq!(traced.latencies.len(), 24);
+        assert!(traced.spec_accepted > 0);
+        let by_req = rec.per_request();
+        assert_eq!(by_req.len(), 24);
+        let mut drafts = 0usize;
+        let mut verifies = 0usize;
+        for (req, evs) in &by_req {
+            let d = evs.iter().filter(|e| e.kind == K::DraftIter).count();
+            let v = evs.iter().filter(|e| e.kind == K::VerifyAccept).count();
+            assert_eq!(d, v, "req {req}: every draft batch gets verified");
+            // A verify's decode_iter reports accepted + 1 tokens.
+            for e in evs.iter().filter(|e| e.kind == K::VerifyAccept) {
+                assert!(e.a as usize <= 3, "req {req}: accepted beyond draft depth");
+            }
+            drafts += d;
+            verifies += v;
+        }
+        assert!(drafts > 0, "steady decoders must speculate");
+        assert_eq!(
+            traced.spec_accepted + traced.spec_rejected,
+            by_req
+                .values()
+                .flatten()
+                .filter(|e| e.kind == K::VerifyAccept)
+                .map(|e| (e.a + e.b) as usize)
+                .sum::<usize>(),
+            "event stream and scheduler counters agree"
+        );
+        let _ = verifies;
+        assert_eq!(rec.dropped_events(), 0);
     }
 
     #[test]
@@ -1506,7 +1770,7 @@ mod tests {
                 })
                 .collect()
         };
-        let mode = DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false };
+        let mode = DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None };
         let solo = simulate_mode(&pool, &make(0), mode);
         let shared = simulate_mode(&pool, &make(7), mode);
         assert_eq!(solo.prefix_hit_tokens, 0);

@@ -22,5 +22,6 @@ pub mod des;
 pub use analytic::estimate_p95;
 pub use des::{
     simulate, simulate_disagg, simulate_disagg_traced, simulate_lockstep, simulate_mode,
-    simulate_paged, simulate_paged_traced, DesMode, SimOutcome, SimRequest,
+    simulate_paged, simulate_paged_spec_traced, simulate_paged_traced, DesMode, SimOutcome,
+    SimRequest, SpecSim,
 };

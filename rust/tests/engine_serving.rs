@@ -4,18 +4,21 @@
 //! continuous simulator when pages never bind, and engine telemetry
 //! must hold the page-budget invariant end to end.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 use cascadia::cluster::ClusterSpec;
 use cascadia::coordinator::server::{
     CascadeServer, ResponseJudger, ServerConfig, ServerStats, TierBackend,
 };
 use cascadia::engine::{
-    EngineConfig, EngineCore, EngineRole, PreemptionConfig, PreemptionMode, SeqId, StepBackend,
+    draft_agrees, EngineConfig, EngineCore, EngineRole, PreemptionConfig, PreemptionMode, SeqId,
+    StepBackend, VerifyOutcome,
 };
 use cascadia::models::llama_cascade;
 use cascadia::parallel::ACT_RESERVE;
 use cascadia::perf::ReplicaModel;
-use cascadia::sim::{simulate_disagg, simulate_mode, DesMode, SimRequest};
+use cascadia::sim::{simulate_disagg, simulate_mode, DesMode, SimRequest, SpecSim};
 
 /// Tier t answers correctly iff the prompt's difficulty (first token)
 /// is <= t; output length runs to max_new so decode actually iterates.
@@ -198,6 +201,7 @@ fn paged_des_and_live_engine_agree_tick_for_tick_under_both_policies() {
                 page_tokens: 16,
                 prefill_chunk: usize::MAX,
                 swap: mode == PreemptionMode::Swap,
+                spec: None,
             },
         );
         let cfg = EngineConfig {
@@ -300,6 +304,185 @@ fn paged_des_and_live_engine_emit_identical_event_timelines() {
             PreemptionMode::Swap => {
                 assert!(des.swap_outs > 0 && has(&left, EventKind::SwapOut));
                 assert!(has(&right, EventKind::SwapOut) && has(&right, EventKind::SwapIn));
+            }
+        }
+    }
+}
+
+/// Draft/verify extension of [`PinStep`] for the speculative
+/// equivalence pin. Tokens stay the constant `seq` stream; draft
+/// agreement is the shared pure function [`draft_agrees`] probed at
+/// the CUMULATIVE emitted-token position — deliberately NOT reset on
+/// `release`, because the paged DES's position counter (`gen_count`)
+/// keeps counting across recompute preemption, and the
+/// accepted/rejected pin requires both sides to probe identical
+/// positions.
+struct SpecPinStep {
+    agree_mod: u64,
+    emitted: BTreeMap<SeqId, usize>,
+}
+
+impl StepBackend for SpecPinStep {
+    fn prefill_chunk(&mut self, seq: SeqId, _chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        if last {
+            *self.emitted.entry(seq).or_insert(0) += 1;
+            return Ok(Some(seq as i32));
+        }
+        Ok(None)
+    }
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        for &s in seqs {
+            *self.emitted.entry(s).or_insert(0) += 1;
+        }
+        Ok(seqs.iter().map(|&s| s as i32).collect())
+    }
+    fn release(&mut self, _seq: SeqId) {
+        // Keep the cumulative position counter (see struct doc).
+    }
+    fn draft(&mut self, seq: SeqId, k: usize) -> Result<Option<Vec<i32>>> {
+        let base = self.emitted.get(&seq).copied().unwrap_or(0);
+        let me = seq as i32;
+        Ok(Some(
+            (0..k)
+                .map(|i| {
+                    if draft_agrees(seq, base + i, self.agree_mod) {
+                        me
+                    } else {
+                        -1 - me
+                    }
+                })
+                .collect(),
+        ))
+    }
+    fn verify(&mut self, seq: SeqId, draft: &[i32]) -> Result<Option<VerifyOutcome>> {
+        let me = seq as i32;
+        let accepted = draft.iter().take_while(|&&t| t == me).count();
+        *self.emitted.entry(seq).or_insert(0) += accepted + 1;
+        Ok(Some(VerifyOutcome { accepted, next: me }))
+    }
+}
+
+impl TierBackend for SpecPinStep {
+    fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        Ok(vec![0; max_new])
+    }
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+/// [`drive_engine`] with cross-tier speculation on: a [`SpecPinStep`]
+/// at draft depth `k`, returning additionally the engine's
+/// accepted/rejected draft-token counters.
+fn drive_engine_spec(
+    trace: &[SimRequest],
+    cfg: EngineConfig,
+    k: usize,
+    agree_mod: u64,
+) -> (Vec<usize>, u64, (u64, u64, u64), (u64, u64)) {
+    let backend = SpecPinStep {
+        agree_mod,
+        emitted: BTreeMap::new(),
+    };
+    let mut eng: EngineCore<usize> = EngineCore::new(Box::new(backend), cfg);
+    eng.set_speculation(k);
+    let mut finish = vec![0usize; trace.len()];
+    let prompt_of = |r: &SimRequest| -> Vec<i32> { vec![7; r.input_tokens.max(1) as usize] };
+    eng.submit(0, prompt_of(&trace[0]), trace[0].output_tokens.max(1) as usize);
+    let mut tick = 0usize;
+    let mut first = true;
+    while !eng.is_idle() {
+        tick += 1;
+        assert!(tick < 10_000, "engine failed to drain the spec pin trace");
+        let out = eng.step().expect("deterministic backend cannot fail");
+        for f in out.completed {
+            finish[f.payload] = tick;
+        }
+        if first {
+            for (i, r) in trace.iter().enumerate().skip(1) {
+                eng.submit(i, prompt_of(r), r.output_tokens.max(1) as usize);
+            }
+            first = false;
+        }
+    }
+    (finish, eng.preemptions(), eng.swap_counts(), eng.spec_counts())
+}
+
+#[test]
+fn paged_des_and_live_engine_agree_under_speculation() {
+    // The speculative extension of the tick-for-tick pin: with
+    // draft→verify speculation on, the paged DES and a real EngineCore
+    // must still make IDENTICAL decisions — same per-request finish
+    // ticks, same preemption and swap counts, and EXACTLY the same
+    // accepted/rejected draft-token split, because both sides probe the
+    // shared draft_agrees(sequence, position) function over identical
+    // cumulative position streams. Runs under both eviction
+    // disciplines and across always-/never-/mixed-agreement drafts so
+    // rollback interacts with real eviction traffic.
+    let rm = tiny_pool_replica(40);
+    let trace: Vec<SimRequest> = (0..8).map(|_| SimRequest::new(0.0, 193, 40)).collect();
+    for mode in [PreemptionMode::Recompute, PreemptionMode::Swap] {
+        for agree_mod in [0u64, 1, 3] {
+            let des = simulate_mode(
+                &[rm.clone()],
+                &trace,
+                DesMode::Paged {
+                    page_tokens: 16,
+                    prefill_chunk: usize::MAX,
+                    swap: mode == PreemptionMode::Swap,
+                    spec: Some(SpecSim {
+                        draft_k: 3,
+                        agree_mod,
+                        draft_us_per_token: 40,
+                    }),
+                },
+            );
+            let cfg = EngineConfig {
+                pool_pages: rm.kv_pages_total(16),
+                page_tokens: 16,
+                max_running: rm.max_batch.max(1),
+                prefill_chunk: usize::MAX,
+                share_prefixes: false,
+                preemption: match mode {
+                    PreemptionMode::Recompute => PreemptionConfig::default(),
+                    PreemptionMode::Swap => PreemptionConfig::from_replica(&rm, 16, mode),
+                },
+            };
+            let (finish, preemptions, (outs, ins, _pages), (acc, rej)) =
+                drive_engine_spec(&trace, cfg, 3, agree_mod);
+            assert_eq!(
+                finish, des.finish_iters,
+                "{mode:?}/mod {agree_mod}: engine and DES must finish every request on the same tick"
+            );
+            assert_eq!(
+                preemptions as usize, des.preemptions,
+                "{mode:?}/mod {agree_mod}: preemption counts must match exactly"
+            );
+            assert_eq!(
+                outs as usize, des.swap_outs,
+                "{mode:?}/mod {agree_mod}: swap-out counts"
+            );
+            assert_eq!(
+                ins as usize, des.swap_ins,
+                "{mode:?}/mod {agree_mod}: swap-in counts"
+            );
+            assert_eq!(
+                (acc as usize, rej as usize),
+                (des.spec_accepted, des.spec_rejected),
+                "{mode:?}/mod {agree_mod}: accepted/rejected draft-token counts must match exactly"
+            );
+            match agree_mod {
+                0 => {
+                    assert!(acc > 0, "always-agreeing drafts must accept");
+                    assert_eq!(rej, 0, "always-agreeing drafts never reject");
+                }
+                1 => {
+                    assert_eq!(acc, 0, "never-agreeing drafts accept nothing");
+                    assert!(rej > 0, "never-agreeing drafts must reject");
+                }
+                _ => {
+                    assert!(acc > 0 && rej > 0, "mixed drafts split both ways");
+                }
             }
         }
     }
@@ -419,7 +602,7 @@ fn paged_des_matches_continuous_des_when_pages_never_bind() {
     let paged = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
     );
     assert_eq!(cont.latencies.len(), paged.latencies.len());
     let rel = (paged.p95() - cont.p95()).abs() / cont.p95().max(1e-12);

@@ -165,12 +165,12 @@ fn des_pins_chunked_prefill_to_whole_plus_interleave() {
     let whole = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: usize::MAX, swap: false, spec: None },
     );
     let chunked = simulate_mode(
         &[rm.clone()],
         &trace,
-        DesMode::Paged { page_tokens: 16, prefill_chunk: 256, swap: false },
+        DesMode::Paged { page_tokens: 16, prefill_chunk: 256, swap: false, spec: None },
     );
     let iter1 = rm.decode_iteration(1) / rm.pp_capacity_factor;
     let extra_chunks = (1536f64 / 256.0).ceil() - 1.0;

@@ -1,8 +1,15 @@
 //! Property-based tests over the scheduler/router/simulator invariants
 //! (DESIGN.md §Testing), using the in-repo `util::prop` harness.
 
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::Result;
 use cascadia::cluster::ClusterSpec;
-use cascadia::engine::{prompt_page_hashes, KvPool, SeqId};
+use cascadia::coordinator::server::TierBackend;
+use cascadia::engine::{
+    draft_agrees, prompt_page_hashes, EngineConfig, EngineCore, IterationScheduler, KvPool,
+    PreemptionConfig, PreemptionMode, SeqId, StepBackend, VerifyOutcome,
+};
 use cascadia::judge::Judger;
 use cascadia::models::{deepseek_cascade, llama_cascade};
 use cascadia::perf::Workload;
@@ -349,6 +356,358 @@ fn prop_kv_pool_swap_invariants() {
                 p.swapped_pages(),
                 p.trie_len()
             ));
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler-level speculation chaos soak: random enqueues, draft-k
+/// changes, pool resizes and cancels interleave with plan-driven
+/// execution under both eviction disciplines, with a random accepted
+/// prefix settled per speculative task. After EVERY tick the pool's
+/// internal invariants hold; every surviving sequence finishes exactly
+/// once with exactly its token budget (speculation never over- or
+/// under-emits); the acceptance counters match an externally-kept
+/// mirror token for token; and the drained scheduler leaks nothing.
+#[test]
+fn prop_scheduler_speculation_lossless_accounting() {
+    check_n("scheduler speculation soak", 30, |g| {
+        let page_tokens = 16usize;
+        let mut sched =
+            IterationScheduler::new(KvPool::new(g.sized(24, 72), page_tokens), g.sized(2, 4));
+        let mode = if g.bool() {
+            PreemptionMode::Swap
+        } else {
+            PreemptionMode::Recompute
+        };
+        sched.set_preemption(PreemptionConfig {
+            mode,
+            swap_pages: g.sized(16, 64),
+            prefill_s_per_token: 1e-4,
+            swap_s_per_page: g.f64(1e-6, 1e-3),
+            page_bytes: 1.0,
+        });
+        sched.set_spec_k(g.sized(0, 4));
+
+        let total = g.sized(6, 12);
+        let mut next_id: SeqId = 0;
+        let mut budget: BTreeMap<SeqId, usize> = BTreeMap::new();
+        let mut gen: BTreeMap<SeqId, usize> = BTreeMap::new();
+        let mut finished: BTreeSet<SeqId> = BTreeSet::new();
+        let mut cancelled: BTreeSet<SeqId> = BTreeSet::new();
+        let (mut acc_mirror, mut rej_mirror) = (0u64, 0u64);
+        let mut tick = 0usize;
+        loop {
+            tick += 1;
+            if tick > 4000 {
+                return Err("soak failed to drain within 4000 ticks".into());
+            }
+            // Random mutations ahead of the plan: arrivals, a live
+            // draft-depth change, a pool resize, a cancellation.
+            if next_id < total as u64 && (g.bool() || sched.is_idle()) {
+                let id = next_id;
+                next_id += 1;
+                let max_new = g.sized(1, 30);
+                sched.enqueue(id, g.sized(20, 120), max_new);
+                budget.insert(id, max_new);
+                gen.insert(id, 0);
+            }
+            if g.int(0, 9) == 0 {
+                sched.set_spec_k(g.sized(0, 4));
+            }
+            if g.int(0, 9) == 0 {
+                sched.resize_pool(g.sized(24, 96));
+            }
+            if g.int(0, 14) == 0 {
+                let live: Vec<SeqId> = gen
+                    .keys()
+                    .copied()
+                    .filter(|id| !finished.contains(id) && !cancelled.contains(id))
+                    .collect();
+                if !live.is_empty() {
+                    let id = live[g.int(0, 31) as usize % live.len()];
+                    sched.retire(id);
+                    cancelled.insert(id);
+                }
+            }
+
+            let plan = sched.next_iteration();
+            for &id in &plan.preempted {
+                if finished.contains(&id) || cancelled.contains(&id) {
+                    return Err(format!("preempted retired sequence {id}"));
+                }
+                // Recompute semantics: progress resets to zero.
+                gen.insert(id, 0);
+            }
+            let mut done: Vec<SeqId> = Vec::new();
+            for c in &plan.prefill {
+                if c.last {
+                    *gen.get_mut(&c.id).unwrap() += 1;
+                    if sched.advance(c.id) {
+                        done.push(c.id);
+                    }
+                }
+            }
+            for &id in &plan.decode {
+                *gen.get_mut(&id).unwrap() += 1;
+                if sched.advance(id) {
+                    done.push(id);
+                }
+            }
+            for t in &plan.spec {
+                if t.k == 0 {
+                    return Err(format!("zero-depth speculative task for {}", t.id));
+                }
+                let g_now = gen[&t.id];
+                let cap = budget[&t.id];
+                if g_now + t.k + 1 > cap {
+                    return Err(format!(
+                        "spec task for {} can overshoot: gen {g_now} + k {} + 1 > max_new {cap}",
+                        t.id, t.k
+                    ));
+                }
+                let accepted = g.sized(0, t.k);
+                acc_mirror += accepted as u64;
+                rej_mirror += (t.k - accepted) as u64;
+                *gen.get_mut(&t.id).unwrap() += accepted + 1;
+                if sched.advance_spec(t.id, t.k, accepted + 1) {
+                    done.push(t.id);
+                }
+            }
+            for id in done {
+                if !finished.insert(id) {
+                    return Err(format!("sequence {id} finished twice"));
+                }
+                if gen[&id] != budget[&id] {
+                    return Err(format!(
+                        "sequence {id} finished with {} of {} tokens",
+                        gen[&id], budget[&id]
+                    ));
+                }
+                sched.retire(id);
+            }
+            sched
+                .pool()
+                .validate()
+                .map_err(|e| format!("tick {tick}: {e}"))?;
+            if next_id >= total as u64 && sched.is_idle() {
+                break;
+            }
+        }
+
+        if finished.len() + cancelled.len() != total {
+            return Err(format!(
+                "{} finished + {} cancelled != {total} submitted",
+                finished.len(),
+                cancelled.len()
+            ));
+        }
+        let (acc, rej) = sched.spec_counts();
+        if (acc, rej) != (acc_mirror, rej_mirror) {
+            return Err(format!(
+                "acceptance counters ({acc}, {rej}) != mirror ({acc_mirror}, {rej_mirror})"
+            ));
+        }
+        let p = sched.pool();
+        if p.in_use() != 0 || p.swapped_pages() != 0 || p.trie_len() != 0 {
+            return Err(format!(
+                "leak: in_use {} swapped {} trie {}",
+                p.in_use(),
+                p.swapped_pages(),
+                p.trie_len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic verify-model backend for the end-to-end losslessness
+/// property: token `p` of sequence `s` is a pure function of `(s, p)`,
+/// the draft stream agrees with it per [`draft_agrees`], and verify
+/// accepts exactly the leading prefix the verify model would have
+/// produced alone. Per-sequence position state drops on `release` so a
+/// recompute-preempted sequence replays the identical stream.
+struct LossStep {
+    agree_mod: u64,
+    pos: BTreeMap<SeqId, usize>,
+}
+
+fn model_tok(seq: SeqId, pos: usize) -> i32 {
+    (seq.wrapping_mul(31).wrapping_add(pos as u64 * 7) % 997) as i32 + 1
+}
+
+impl StepBackend for LossStep {
+    fn prefill_chunk(&mut self, seq: SeqId, _chunk: &[i32], last: bool) -> Result<Option<i32>> {
+        if last {
+            self.pos.insert(seq, 1);
+            return Ok(Some(model_tok(seq, 0)));
+        }
+        Ok(None)
+    }
+    fn decode(&mut self, seqs: &[SeqId]) -> Result<Vec<i32>> {
+        Ok(seqs
+            .iter()
+            .map(|&s| {
+                let p = self.pos.entry(s).or_insert(0);
+                let t = model_tok(s, *p);
+                *p += 1;
+                t
+            })
+            .collect())
+    }
+    fn release(&mut self, seq: SeqId) {
+        self.pos.remove(&seq);
+    }
+    fn draft(&mut self, seq: SeqId, k: usize) -> Result<Option<Vec<i32>>> {
+        let base = self.pos.get(&seq).copied().unwrap_or(0);
+        Ok(Some(
+            (0..k)
+                .map(|i| {
+                    let t = model_tok(seq, base + i);
+                    if draft_agrees(seq, base + i, self.agree_mod) {
+                        t
+                    } else {
+                        t.wrapping_add(1)
+                    }
+                })
+                .collect(),
+        ))
+    }
+    fn verify(&mut self, seq: SeqId, draft: &[i32]) -> Result<Option<VerifyOutcome>> {
+        let base = self.pos.get(&seq).copied().unwrap_or(0);
+        let accepted = draft
+            .iter()
+            .enumerate()
+            .take_while(|&(i, &t)| t == model_tok(seq, base + i))
+            .count();
+        let next = model_tok(seq, base + accepted);
+        *self.pos.entry(seq).or_insert(0) += accepted + 1;
+        Ok(Some(VerifyOutcome { accepted, next }))
+    }
+}
+
+impl TierBackend for LossStep {
+    fn generate(&mut self, _prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        Ok(vec![0; max_new])
+    }
+    fn step_backend(&mut self) -> Option<&mut dyn StepBackend> {
+        Some(self)
+    }
+}
+
+/// Run one arm of the losslessness property: an [`EngineCore`] over a
+/// [`LossStep`] at the given draft depth (`0` = plain decode), with a
+/// pool resize landing mid-run. Returns per-request outputs in submit
+/// order plus the acceptance counters.
+fn run_loss_arm(
+    trace: &[(usize, usize)],
+    cfg: EngineConfig,
+    spec_k: usize,
+    agree_mod: u64,
+    resize: (usize, usize),
+) -> Result<(Vec<Vec<i32>>, (u64, u64)), String> {
+    let backend = LossStep {
+        agree_mod,
+        pos: BTreeMap::new(),
+    };
+    let mut eng: EngineCore<usize> = EngineCore::new(Box::new(backend), cfg);
+    eng.set_speculation(spec_k);
+    for (i, &(prompt_tokens, max_new)) in trace.iter().enumerate() {
+        eng.submit(i, vec![7; prompt_tokens], max_new);
+    }
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); trace.len()];
+    let mut tick = 0usize;
+    while !eng.is_idle() {
+        tick += 1;
+        if tick > 10_000 {
+            return Err("engine failed to drain".into());
+        }
+        if tick == resize.0 {
+            eng.set_pool_pages(resize.1);
+        }
+        let out = eng.step().expect("deterministic backend cannot fail");
+        for f in out.completed {
+            outputs[f.payload] = f.output;
+        }
+    }
+    if eng.kv_in_use() != 0 {
+        return Err(format!("pool leak: {} pages in use", eng.kv_in_use()));
+    }
+    Ok((outputs, eng.spec_counts()))
+}
+
+/// End-to-end losslessness pin for cross-tier speculation: an
+/// [`EngineCore`] running draft→verify speculation emits BIT-IDENTICAL
+/// per-request outputs to a plain-decode run of the same deterministic
+/// backend — across random draft depths, draft-disagreement patterns,
+/// both eviction disciplines, pool contention and a mid-run pool
+/// resize — while the acceptance counters prove speculation actually
+/// engaged (full acceptance when the draft always agrees, zero when it
+/// never does).
+#[test]
+fn prop_engine_speculation_is_lossless() {
+    check_n("engine speculation lossless", 20, |g| {
+        let n = g.sized(4, 8);
+        let trace: Vec<(usize, usize)> = (0..n)
+            .map(|_| (g.sized(24, 140), g.sized(4, 28)))
+            .collect();
+        let agree_mod = *g.choose(&[0u64, 1, 2, 3, 5]);
+        let k = g.sized(1, 4);
+        let mode = if g.bool() {
+            PreemptionMode::Swap
+        } else {
+            PreemptionMode::Recompute
+        };
+        let cfg = EngineConfig {
+            pool_pages: g.sized(24, 64),
+            page_tokens: 16,
+            max_running: g.sized(2, 4),
+            prefill_chunk: if g.bool() { usize::MAX } else { 32 },
+            share_prefixes: false,
+            preemption: PreemptionConfig {
+                mode,
+                swap_pages: 64,
+                prefill_s_per_token: 1e-4,
+                swap_s_per_page: 1e-5,
+                page_bytes: 1.0,
+            },
+        };
+        let resize = (g.sized(2, 20), g.sized(24, 72));
+        let (plain, plain_counts) = run_loss_arm(&trace, cfg, 0, agree_mod, resize)?;
+        let (spec, spec_counts) = run_loss_arm(&trace, cfg, k, agree_mod, resize)?;
+        if plain_counts != (0, 0) {
+            return Err(format!("plain arm speculated: {plain_counts:?}"));
+        }
+        for (i, &(_, max_new)) in trace.iter().enumerate() {
+            if plain[i].len() != max_new {
+                return Err(format!(
+                    "plain request {i}: {} of {max_new} tokens",
+                    plain[i].len()
+                ));
+            }
+            if spec[i] != plain[i] {
+                return Err(format!(
+                    "request {i} diverged under speculation:\n  plain {:?}\n  spec  {:?}",
+                    plain[i], spec[i]
+                ));
+            }
+        }
+        let (acc, rej) = spec_counts;
+        match agree_mod {
+            0 if acc == 0 || rej != 0 => {
+                return Err(format!(
+                    "always-agreeing draft should fully accept: ({acc}, {rej})"
+                ));
+            }
+            1 if acc != 0 => {
+                return Err(format!(
+                    "never-agreeing draft should accept nothing: ({acc}, {rej})"
+                ));
+            }
+            _ => {}
+        }
+        if acc + rej == 0 {
+            return Err("speculation never engaged".into());
         }
         Ok(())
     });

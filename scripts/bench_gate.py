@@ -8,8 +8,9 @@ Two baseline shapes are understood:
   `p95_speedup`, `throughput_gain`, `prefix.page_reduction`,
   `prefix.prefill_reduction`, `chunked.ttft_speedup`,
   `swap.p95_speedup`, `swap.reprefill_reduction`,
-  `disagg.ttft_p95_speedup` — machine-independent relative wins the
-  fresh run must not regress below `floor * (1 - RTOL)`.
+  `disagg.ttft_p95_speedup`, `spec.p95_speedup` — machine-independent
+  relative wins the fresh run must not regress below
+  `floor * (1 - RTOL)`.
 * **full report** (a captured BENCH_serving.json from the nightly
   artifact's smoke run, promoted by `scripts/promote_baseline.py` and
   committed as `--full-baseline`): additionally gates the absolute
@@ -97,6 +98,11 @@ def derived_ratios(report: dict) -> dict:
         out["disagg.ttft_p95_speedup"] = disagg["unified_p95_ttft_s"] / max(
             disagg["disagg_p95_ttft_s"], 1e-12
         )
+    spec = report.get("spec", {})
+    if "p95_speedup" in spec:
+        out["spec.p95_speedup"] = float(spec["p95_speedup"])
+    elif spec.get("spec_p95_s"):
+        out["spec.p95_speedup"] = spec["off_p95_s"] / max(spec["spec_p95_s"], 1e-12)
     return out
 
 
@@ -111,6 +117,7 @@ REQUIRED_FLOORS = (
     "swap.p95_speedup",
     "swap.reprefill_reduction",
     "disagg.ttft_p95_speedup",
+    "spec.p95_speedup",
 )
 
 
@@ -232,6 +239,33 @@ def main() -> int:
     disagg = fresh.get("disagg", {})
     if disagg and not disagg.get("migrations"):
         failures.append("disagg section reports zero prefill->decode migrations")
+    # Speculation gate: tolerated as absent (reports predating
+    # cross-tier speculation), but a present section must be green,
+    # byte-identical across the arms (the losslessness contract), and
+    # must have actually accepted draft tokens.
+    spec = fresh.get("spec")
+    if spec is not None:
+        spec_failures = []
+        if spec.get("win") is not True:
+            spec_failures.append("fresh report flag 'spec.win' is not true")
+        if spec.get("outputs_match") is not True:
+            spec_failures.append(
+                "speculation is not lossless: on/off outputs diverged"
+            )
+        if not spec.get("accepted_tokens"):
+            spec_failures.append("spec section accepted zero draft tokens")
+        if spec_failures:
+            failures.extend(spec_failures)
+        else:
+            print(
+                "ok  spec.win:"
+                f" p95 {spec.get('off_p95_s', 0.0):.3f}s ->"
+                f" {spec.get('spec_p95_s', 0.0):.3f}s"
+                f" (x{spec.get('p95_speedup', 0.0):.2f}),"
+                f" deep iters {spec.get('off_deep_iterations', 0):.0f} ->"
+                f" {spec.get('spec_deep_iterations', 0):.0f},"
+                f" {spec.get('accepted_tokens', 0):.0f} tokens accepted"
+            )
     # Tracing-overhead gate: tolerated as absent (reports predating the
     # obs subsystem), but when the section exists it must be green and
     # must have actually recorded events.

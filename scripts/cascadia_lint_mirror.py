@@ -41,12 +41,15 @@ def determinism_scope(rel):
     # `obs/` is pinned (the DES emits trace events through it) except
     # `obs/clock.rs`, the designated wall-clock boundary.
     # `engine/migrate.rs` is pinned because the disagg DES models the
-    # MigrationHub's exact routing.
+    # MigrationHub's exact routing. `engine/spec.rs` is pinned because
+    # the DES models draft agreement with the same pure function the
+    # live SpecPair replays through.
     return (
         rel.startswith("sim/")
         or rel.startswith("sched/")
         or rel == "engine/scheduler.rs"
         or rel == "engine/migrate.rs"
+        or rel == "engine/spec.rs"
         or (rel.startswith("obs/") and rel != "obs/clock.rs")
     )
 
